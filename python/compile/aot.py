@@ -1,0 +1,75 @@
+"""AOT lowering: JAX model -> HLO text artifacts for the Rust runtime.
+
+HLO *text* is the interchange format (NOT ``lowered.compile()`` or a
+serialized ``HloModuleProto``): jax >= 0.5 emits protos with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts [--sizes 256,4096]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Particle counts to specialize artifacts for. The Rust side picks the
+# artifact matching its TreePiece size.
+DEFAULT_SIZES = (256, 4096)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_all(sizes=DEFAULT_SIZES):
+    """Yield (name, hlo_text) for every artifact."""
+    for n in sizes:
+        ingest = jax.jit(model.ingest_step).lower(*model.ingest_spec(n))
+        yield f"ingest_n{n}", to_hlo_text(ingest)
+        grav = jax.jit(model.gravity_step).lower(*model.gravity_spec(n))
+        yield f"gravity_n{n}", to_hlo_text(grav)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--sizes", default=",".join(str(s) for s in DEFAULT_SIZES))
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(","))
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {}
+    for name, text in lower_all(sizes):
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest[name] = {"bytes": len(text)}
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(
+            {
+                "jax": jax.__version__,
+                "sizes": list(sizes),
+                "artifacts": manifest,
+                "format": "hlo-text (return_tuple=True)",
+            },
+            f,
+            indent=2,
+        )
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

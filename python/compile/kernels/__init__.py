@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracles."""
+
+from . import decode, gravity, permute, ref  # noqa: F401

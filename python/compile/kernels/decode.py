@@ -1,0 +1,41 @@
+"""Fixed-point particle decode as a Pallas kernel (Layer 1).
+
+Tipsy-style records arrive as quantized fields; decoding is a pure
+elementwise dequantize (VPU work, tiled rows through VMEM):
+
+    out[n, f] = raw[n, f] * scale[f] + offset[f]
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 512
+
+
+def _decode_kernel(raw_ref, scale_ref, offset_ref, out_ref):
+    raw = raw_ref[...]
+    out_ref[...] = raw * scale_ref[...][None, :] + offset_ref[...][None, :]
+
+
+def decode(raw, scale, offset, *, tile_rows: int = TILE_ROWS):
+    """raw (N, F) f32 (integer-valued), scale/offset (F,) f32."""
+    n, f = raw.shape
+    tr = min(tile_rows, max(8, n))
+    pad = (-n) % tr
+    raw_p = jnp.concatenate([raw, jnp.zeros((pad, f), raw.dtype)], axis=0) if pad else raw
+    npadded = raw_p.shape[0]
+
+    out = pl.pallas_call(
+        _decode_kernel,
+        grid=(npadded // tr,),
+        in_specs=[
+            pl.BlockSpec((tr, f), lambda i: (i, 0)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+            pl.BlockSpec((f,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tr, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npadded, f), jnp.float32),
+        interpret=True,
+    )(raw_p, scale, offset)
+    return out[:n]

@@ -1,0 +1,119 @@
+"""Tiled all-pairs gravity as a Pallas kernel (Layer 1).
+
+TPU-style adaptation (DESIGN.md §3): the pairwise r^2 matrix for a
+(TI × TJ) tile is built with the matmul expansion
+
+    r2[i, j] = |x_i|^2 + |x_j|^2 - 2 * (x_i . x_j)
+
+so the dominant term is a (TI,3)x(3,TJ) matmul that maps onto the MXU,
+with the target tile resident in VMEM while source tiles stream through
+(BlockSpec grid: targets x sources, accumulating into the output tile).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU perf is estimated from the BlockSpec (see
+EXPERIMENTS.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS2
+
+# Default tile sizes: 256x256 pairwise tile = 256 KiB of f32 r2 scratch,
+# comfortably inside a TPU core's ~16 MiB VMEM together with the pos/mass
+# blocks and the accumulator.
+TILE_I = 256
+TILE_J = 256
+
+
+def _gravity_kernel(pos_i_ref, pos_j_ref, mass_j_ref, acc_ref):
+    """One (target-tile, source-tile) grid step."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xi = pos_i_ref[...]  # (TI, 3)
+    xj = pos_j_ref[...]  # (TJ, 3)
+    mj = mass_j_ref[...]  # (TJ,)
+
+    # Difference formulation: numerically robust for close pairs (the
+    # |x|^2 - 2 x.y matmul expansion cancels catastrophically when
+    # r^2 ~ EPS2, which dominates the force). The (TI, TJ, 3) tile stays
+    # in VMEM; the j-contraction below is the MXU-mapped hot op.
+    dx = xj[None, :, :] - xi[:, None, :]  # (TI, TJ, 3)
+    r2 = jnp.sum(dx * dx, axis=-1) + EPS2  # (TI, TJ)
+
+    inv_r3 = jax.lax.rsqrt(r2) / r2  # r^-3 = rsqrt(r2) / r2
+    w = mj[None, :] * inv_r3  # (TI, TJ)
+
+    # acc_i += sum_j w[i,j] * dx[i,j,:] — a batched (1,TJ)x(TJ,3)
+    # contraction per target row (MXU-mappable).
+    acc_ref[...] += jnp.einsum(
+        "ij,ijk->ik", w, dx, preferred_element_type=jnp.float32
+    )
+
+
+def gravity(pos, mass, *, tile_i: int = TILE_I, tile_j: int = TILE_J):
+    """Softened all-pairs acceleration; pos (N,3) f32, mass (N,) f32.
+
+    N is padded to tile multiples internally (padded sources get zero
+    mass, so they contribute nothing; padded targets are sliced off).
+    """
+    n = pos.shape[0]
+    ti = min(tile_i, max(8, n))
+    tj = min(tile_j, max(8, n))
+    npad_i = (-n) % ti
+    npad_j = (-n) % tj
+    npad = max(npad_i, npad_j)
+    # Pad far away with zero mass: zero contribution either way.
+    if npad:
+        pos_p = jnp.concatenate([pos, jnp.full((npad, 3), 1e6, pos.dtype)], axis=0)
+        mass_p = jnp.concatenate([mass, jnp.zeros((npad,), mass.dtype)], axis=0)
+    else:
+        pos_p, mass_p = pos, mass
+    npadded = pos_p.shape[0]
+    grid = (npadded // ti, npadded // tj)
+
+    acc = pl.pallas_call(
+        _gravity_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ti, 3), lambda i, j: (i, 0)),  # target positions
+            pl.BlockSpec((tj, 3), lambda i, j: (j, 0)),  # source positions
+            pl.BlockSpec((tj,), lambda i, j: (j,)),  # source masses
+        ],
+        out_specs=pl.BlockSpec((ti, 3), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npadded, 3), jnp.float32),
+        interpret=True,
+    )(pos_p, pos_p, mass_p)
+    return acc[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_i", "tile_j"))
+def gravity_jit(pos, mass, tile_i: int = TILE_I, tile_j: int = TILE_J):
+    return gravity(pos, mass, tile_i=tile_i, tile_j=tile_j)
+
+
+def vmem_bytes(tile_i: int = TILE_I, tile_j: int = TILE_J) -> int:
+    """Estimated VMEM working set of one grid step (f32)."""
+    pos_i = tile_i * 3 * 4
+    pos_j = tile_j * 3 * 4
+    mass_j = tile_j * 4
+    acc = tile_i * 3 * 4
+    dx = tile_i * tile_j * 3 * 4  # (TI, TJ, 3) difference tensor
+    r2_scratch = tile_i * tile_j * 4 * 2  # r2 and w live simultaneously
+    return pos_i + pos_j + mass_j + acc + dx + r2_scratch
+
+
+def mxu_flops_fraction(tile_i: int = TILE_I, tile_j: int = TILE_J) -> float:
+    """Fraction of the tile's FLOPs that map onto the MXU (the final
+    j-contraction) vs. the VPU (dx/r2/rsqrt elementwise). Used for the
+    §Perf estimate."""
+    mxu = tile_i * tile_j * 3 * 2  # einsum ij,ijk->ik
+    vpu = tile_i * tile_j * 12  # dx, r2, rsqrt, w (approx flop count)
+    return mxu / (mxu + vpu)

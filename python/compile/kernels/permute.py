@@ -1,0 +1,75 @@
+"""Blocked particle permutation (gather) as a Pallas kernel (Layer 1).
+
+This is the compute-side mirror of CkIO's data-permutation phase: after
+buffer chares deliver raw particle blocks, rows must be reordered into
+TreePiece order. A row gather with dynamic indices does not vectorize
+naturally on a systolic array, so we express each (out-tile, src-tile)
+step as a one-hot matmul:
+
+    out[i, :] += onehot(idx[i] - src_base, TS) @ src      (MXU matmul)
+
+streaming source tiles through VMEM while the output tile accumulates.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_OUT = 256
+TILE_SRC = 256
+
+
+def _permute_kernel(idx_ref, src_ref, out_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    idx = idx_ref[...]  # (TO,) global row ids wanted by this out tile
+    src = src_ref[...]  # (TS, F) source rows [j*TS, (j+1)*TS)
+    ts = src.shape[0]
+    base = j * ts
+    local = idx - base  # position within this source tile, if any
+    hot = (local[:, None] == jnp.arange(ts)[None, :]).astype(src.dtype)  # (TO, TS)
+    out_ref[...] += jnp.dot(hot, src, preferred_element_type=jnp.float32)
+
+
+def permute(x, idx, *, tile_out: int = TILE_OUT, tile_src: int = TILE_SRC):
+    """out[i] = x[idx[i]]; x (N, F) f32, idx (N,) i32."""
+    n, f = x.shape
+    to = min(tile_out, max(8, n))
+    ts = min(tile_src, max(8, n))
+    pad_out = (-n) % to
+    pad_src = (-n) % ts
+    pad = max(pad_out, pad_src)
+    if pad:
+        x_p = jnp.concatenate([x, jnp.zeros((pad, f), x.dtype)], axis=0)
+        # Padded output rows gather row n-1 (sliced off afterwards).
+        idx_p = jnp.concatenate([idx, jnp.full((pad,), n - 1, idx.dtype)], axis=0)
+    else:
+        x_p, idx_p = x, idx
+    npadded = x_p.shape[0]
+    grid = (npadded // to, npadded // ts)
+
+    out = pl.pallas_call(
+        _permute_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((to,), lambda i, j: (i,)),
+            pl.BlockSpec((ts, f), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((to, f), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npadded, f), jnp.float32),
+        interpret=True,
+    )(idx_p, x_p)
+    return out[:n]
+
+
+def vmem_bytes(tile_out: int = TILE_OUT, tile_src: int = TILE_SRC, fields: int = 8) -> int:
+    """Estimated VMEM working set of one grid step (f32 data, i32 idx)."""
+    idx = tile_out * 4
+    src = tile_src * fields * 4
+    out = tile_out * fields * 4
+    hot = tile_out * tile_src * 4
+    return idx + src + out + hot

@@ -1,0 +1,57 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package is
+tested against these via ``pytest`` (including hypothesis sweeps over
+shapes) before the model is AOT-lowered. Keep them dead simple.
+"""
+
+import jax.numpy as jnp
+
+# Softening length^2 used by the gravity kernels (Plummer softening).
+EPS2 = 1e-4
+
+
+def gravity_ref(pos, mass):
+    """All-pairs softened gravitational acceleration.
+
+    pos: (N, 3) f32, mass: (N,) f32 -> acc (N, 3) f32.
+    a_i = sum_j m_j * (x_j - x_i) / (|x_j - x_i|^2 + eps^2)^{3/2}
+    (includes j == i, whose contribution is exactly zero).
+    """
+    dx = pos[None, :, :] - pos[:, None, :]  # (N, N, 3), dx[i,j] = x_j - x_i
+    r2 = jnp.sum(dx * dx, axis=-1) + EPS2  # (N, N)
+    inv_r3 = r2 ** -1.5
+    return jnp.einsum("j,ij,ijk->ik", mass, inv_r3, dx)
+
+
+def decode_ref(raw, scale, offset):
+    """Dequantize fixed-point particle records.
+
+    raw: (N, F) f32 holding integer-valued fixed-point data,
+    scale/offset: (F,) f32 per-field -> (N, F) f32 physical values.
+    """
+    return raw * scale[None, :] + offset[None, :]
+
+
+def permute_ref(x, idx):
+    """Gather rows: out[i] = x[idx[i]].
+
+    x: (N, F) f32, idx: (N,) i32 -> (N, F) f32.
+    """
+    return jnp.take(x, idx, axis=0)
+
+
+def moments_ref(pos, mass):
+    """Total mass and center of mass. pos: (N,3), mass: (N,) ->
+    (total (1,), com (3,))."""
+    total = jnp.sum(mass)[None]
+    com = jnp.sum(pos * mass[:, None], axis=0) / jnp.maximum(total, 1e-30)
+    return total, com
+
+
+def leapfrog_ref(pos, vel, mass, dt):
+    """One kick-drift step using gravity_ref."""
+    acc = gravity_ref(pos, mass)
+    vel2 = vel + dt * acc
+    pos2 = pos + dt * vel2
+    return pos2, vel2, acc

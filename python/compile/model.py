@@ -1,0 +1,79 @@
+"""Layer 2: the mini-ChaNGa compute graph in JAX, calling the Pallas
+kernels.
+
+Two entry points are AOT-lowered (see ``aot.py``):
+
+* ``ingest_step(raw, idx, scale, offset)`` — what a TreePiece does with
+  the bytes CkIO delivers: dequantize the fixed-point records
+  (kernels.decode), permute rows into TreePiece order (kernels.permute),
+  and compute mass moments for the tree build.
+* ``gravity_step(pos, vel, mass, dt)`` — one kick-drift leapfrog step
+  with all-pairs softened gravity (kernels.gravity), returning the new
+  state plus diagnostics (|acc| sum) so the Rust driver can log a
+  convergence curve.
+
+Python never runs at request time: these are lowered once to HLO text and
+executed from Rust via PJRT.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import decode as kdecode
+from .kernels import gravity as kgravity
+from .kernels import permute as kpermute
+
+
+def moments(pos, mass):
+    """Total mass (1,) and center of mass (3,)."""
+    total = jnp.sum(mass)[None]
+    com = jnp.sum(pos * mass[:, None], axis=0) / jnp.maximum(total, 1e-30)
+    return total, com
+
+
+def ingest_step(raw, idx, scale, offset):
+    """raw (N,8) f32 fixed-point, idx (N,) f32 (row ids as floats so the
+    whole artifact is f32-typed at the PJRT boundary), scale/offset (8,).
+
+    Returns (particles (N,8), total_mass (1,), com (3,)).
+    Field layout: [mass, x, y, z, vx, vy, vz, softening].
+    """
+    fields = kdecode.decode(raw, scale, offset)
+    fields = kpermute.permute(fields, idx.astype(jnp.int32))
+    mass = fields[:, 0]
+    pos = fields[:, 1:4]
+    total, com = moments(pos, mass)
+    return fields, total, com
+
+
+def gravity_step(pos, vel, mass, dt):
+    """One leapfrog step. pos/vel (N,3), mass (N,), dt () scalar.
+
+    Returns (pos', vel', acc, acc_norm (1,)).
+    """
+    acc = kgravity.gravity(pos, mass)
+    vel2 = vel + dt * acc
+    pos2 = pos + dt * vel2
+    acc_norm = jnp.sum(jnp.sqrt(jnp.sum(acc * acc, axis=-1)))[None]
+    return pos2, vel2, acc, acc_norm
+
+
+def ingest_spec(n: int):
+    """Example-arg specs for ``jax.jit(ingest_step).lower``."""
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, 8), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((8,), f32),
+        jax.ShapeDtypeStruct((8,), f32),
+    )
+
+
+def gravity_spec(n: int):
+    f32 = jnp.float32
+    return (
+        jax.ShapeDtypeStruct((n, 3), f32),
+        jax.ShapeDtypeStruct((n, 3), f32),
+        jax.ShapeDtypeStruct((n,), f32),
+        jax.ShapeDtypeStruct((), f32),
+    )

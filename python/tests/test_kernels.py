@@ -1,0 +1,148 @@
+"""Layer-1 correctness: every Pallas kernel against its pure-jnp oracle,
+including hypothesis sweeps over shapes and tile sizes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import decode as kdecode
+from compile.kernels import gravity as kgravity
+from compile.kernels import permute as kpermute
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def particles(n, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = rng.normal(size=(n, 3)).astype(np.float32)
+    mass = rng.uniform(0.1, 2.0, size=(n,)).astype(np.float32)
+    return jnp.asarray(pos), jnp.asarray(mass)
+
+
+# ----------------------------------------------------------------------
+# gravity
+# ----------------------------------------------------------------------
+
+class TestGravity:
+    def test_matches_ref_basic(self):
+        pos, mass = particles(256)
+        got = kgravity.gravity(pos, mass)
+        want = ref.gravity_ref(pos, mass)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_non_tile_multiple(self):
+        pos, mass = particles(300)  # not a multiple of 256
+        got = kgravity.gravity(pos, mass)
+        want = ref.gravity_ref(pos, mass)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+    def test_two_bodies_attract(self):
+        pos = jnp.array([[0.0, 0.0, 0.0], [1.0, 0.0, 0.0]], dtype=jnp.float32)
+        mass = jnp.array([1.0, 1.0], dtype=jnp.float32)
+        acc = kgravity.gravity(pos, mass)
+        assert acc[0, 0] > 0  # body 0 pulled toward +x
+        assert acc[1, 0] < 0
+        np.testing.assert_allclose(acc[0], -acc[1], rtol=1e-5, atol=1e-6)
+
+    def test_momentum_conserved(self):
+        pos, mass = particles(128, seed=3)
+        acc = kgravity.gravity(pos, mass)
+        # sum_i m_i a_i = 0 for pairwise forces.
+        net = jnp.sum(mass[:, None] * acc, axis=0)
+        np.testing.assert_allclose(net, jnp.zeros(3), atol=1e-2)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        n=st.integers(min_value=2, max_value=700),
+        ti=st.sampled_from([8, 64, 256]),
+        tj=st.sampled_from([8, 64, 256]),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_hypothesis_shapes_and_tiles(self, n, ti, tj, seed):
+        pos, mass = particles(n, seed=seed)
+        got = kgravity.gravity(pos, mass, tile_i=ti, tile_j=tj)
+        want = ref.gravity_ref(pos, mass)
+        np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+    def test_vmem_estimate_within_budget(self):
+        # Default BlockSpec must fit a TPU core's VMEM comfortably.
+        assert kgravity.vmem_bytes() < 4 << 20
+        assert 0.2 < kgravity.mxu_flops_fraction() < 1.0
+
+
+# ----------------------------------------------------------------------
+# permute
+# ----------------------------------------------------------------------
+
+class TestPermute:
+    def test_identity(self):
+        x = jnp.arange(64 * 8, dtype=jnp.float32).reshape(64, 8)
+        idx = jnp.arange(64, dtype=jnp.int32)
+        np.testing.assert_array_equal(kpermute.permute(x, idx), x)
+
+    def test_reverse(self):
+        x = jnp.arange(100 * 4, dtype=jnp.float32).reshape(100, 4)
+        idx = jnp.arange(99, -1, -1, dtype=jnp.int32)
+        np.testing.assert_array_equal(kpermute.permute(x, idx), x[::-1])
+
+    def test_matches_ref_random_permutation(self):
+        rng = np.random.default_rng(7)
+        x = jnp.asarray(rng.normal(size=(513, 8)).astype(np.float32))
+        idx = jnp.asarray(rng.permutation(513).astype(np.int32))
+        got = kpermute.permute(x, idx)
+        want = ref.permute_ref(x, idx)
+        np.testing.assert_array_equal(got, want)
+
+    def test_gather_with_repeats(self):
+        x = jnp.arange(32 * 2, dtype=jnp.float32).reshape(32, 2)
+        idx = jnp.zeros(32, dtype=jnp.int32)
+        got = kpermute.permute(x, idx)
+        np.testing.assert_array_equal(got, jnp.tile(x[0], (32, 1)))
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=600),
+        f=st.sampled_from([1, 3, 8]),
+        to=st.sampled_from([8, 128, 256]),
+        ts=st.sampled_from([8, 128, 256]),
+        seed=st.integers(min_value=0, max_value=2**16),
+    )
+    def test_hypothesis_shapes(self, n, f, to, ts, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(n, f)).astype(np.float32))
+        idx = jnp.asarray(rng.integers(0, n, size=(n,)).astype(np.int32))
+        got = kpermute.permute(x, idx, tile_out=to, tile_src=ts)
+        want = ref.permute_ref(x, idx)
+        np.testing.assert_array_equal(got, want)
+
+
+# ----------------------------------------------------------------------
+# decode
+# ----------------------------------------------------------------------
+
+class TestDecode:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(1)
+        raw = jnp.asarray(rng.integers(-1000, 1000, size=(777, 8)).astype(np.float32))
+        scale = jnp.asarray(rng.uniform(1e-4, 1e-2, size=(8,)).astype(np.float32))
+        offset = jnp.asarray(rng.normal(size=(8,)).astype(np.float32))
+        got = kdecode.decode(raw, scale, offset)
+        want = ref.decode_ref(raw, scale, offset)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=1500),
+        f=st.sampled_from([2, 8]),
+        tr=st.sampled_from([8, 512]),
+    )
+    def test_hypothesis_shapes(self, n, f, tr):
+        rng = np.random.default_rng(n * 31 + f)
+        raw = jnp.asarray(rng.integers(-64, 64, size=(n, f)).astype(np.float32))
+        scale = jnp.asarray(np.full((f,), 0.5, np.float32))
+        offset = jnp.asarray(np.zeros((f,), np.float32))
+        got = kdecode.decode(raw, scale, offset, tile_rows=tr)
+        np.testing.assert_allclose(got, raw * 0.5, rtol=1e-6)

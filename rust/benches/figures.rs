@@ -1,0 +1,47 @@
+//! `cargo bench` — regenerate every table/figure of the paper's
+//! evaluation (DESIGN.md §5) and write CSVs to `bench_out/`.
+//!
+//! The offline crate set has no criterion, so this is a plain
+//! harness=false binary built on `ckio::harness`. Repetitions default to
+//! 3 (the error bars in Figs. 1/4 come from the PFS model's log-normal
+//! service noise, seeded per rep). Set `CKIO_BENCH_REPS` / and
+//! `CKIO_BENCH_TP` to override, or pass figure ids as argv to run a
+//! subset: `cargo bench -- 1 4 13`.
+
+use ckio::harness::experiments as exp;
+
+fn main() {
+    let reps: u32 = std::env::var("CKIO_BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+    let n_tp: u32 =
+        std::env::var("CKIO_BENCH_TP").ok().and_then(|s| s.parse().ok()).unwrap_or(1 << 16);
+    let wanted: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+
+    let all: Vec<(&str, Box<dyn Fn() -> ckio::harness::Table>)> = vec![
+        ("fig1", Box::new(move || exp::fig1_naive_clients(reps))),
+        ("fig2", Box::new(move || exp::fig2_disk_vs_net(reps))),
+        ("fig4", Box::new(move || exp::fig4_ckio_vs_naive(reps))),
+        ("fig7", Box::new(move || exp::fig7_mpiio_vs_ckio(reps))),
+        ("fig8", Box::new(move || exp::fig8_overlap_runtime(reps))),
+        ("fig9", Box::new(move || exp::fig9_overlap_fraction(reps))),
+        ("fig12", Box::new(move || exp::fig12_migration(reps))),
+        ("fig13", Box::new(move || exp::fig13_changa(reps, n_tp))),
+        ("sec5_breakdown", Box::new(move || exp::sec5_breakdown(reps))),
+        ("ablation_splinter", Box::new(move || exp::ablation_splinter(reps))),
+        ("ablation_autoreaders", Box::new(move || exp::ablation_autoreaders(reps))),
+    ];
+
+    let total = std::time::Instant::now();
+    for (slug, f) in all {
+        if !wanted.is_empty() && !wanted.iter().any(|w| slug.contains(w.as_str())) {
+            continue;
+        }
+        let started = std::time::Instant::now();
+        let table = f();
+        table.print();
+        match table.write_csv("bench_out", slug) {
+            Ok(p) => println!("[csv] {} ({:.1}s wall)\n", p.display(), started.elapsed().as_secs_f64()),
+            Err(e) => eprintln!("csv write failed for {slug}: {e}"),
+        }
+    }
+    println!("total bench wall time: {:.1}s", total.elapsed().as_secs_f64());
+}

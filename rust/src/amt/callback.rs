@@ -1,0 +1,54 @@
+//! `CkCallback`-style continuations.
+//!
+//! A callback names *where a result should go*, not how to get there:
+//! a chare entry point, a group member on a PE, a broadcast, or a
+//! driver-level future. Split-phase APIs (all of CkIO) take callbacks so
+//! no PE ever blocks waiting for completion — when the data is ready the
+//! continuation is enqueued as an ordinary task.
+
+use super::chare::{ChareRef, CollectionId};
+use super::msg::{Ep, Payload};
+use super::topology::Pe;
+
+/// Driver-level completion slot, fulfilled during `Engine::run`.
+#[derive(Copy, Clone, Eq, PartialEq, Hash, Debug)]
+pub struct FutureId(pub u32);
+
+/// A continuation for a split-phase operation.
+#[derive(Clone, Debug)]
+pub enum Callback {
+    /// Invoke `ep` on one chare (array element / singleton). Delivery is
+    /// location-managed: it follows the chare across migrations.
+    Chare { to: ChareRef, ep: Ep },
+    /// Invoke `ep` on the group member of `collection` residing on `pe`.
+    Group { collection: CollectionId, pe: Pe, ep: Ep },
+    /// Invoke `ep` on every element of an array collection.
+    Broadcast { collection: CollectionId, ep: Ep },
+    /// Fulfill a driver-level future (ends/records an experiment phase).
+    Future(FutureId),
+    /// Drop the result.
+    Ignore,
+}
+
+impl Callback {
+    pub fn to_chare(to: ChareRef, ep: Ep) -> Callback {
+        Callback::Chare { to, ep }
+    }
+
+    pub fn to_group(collection: CollectionId, pe: Pe, ep: Ep) -> Callback {
+        Callback::Group { collection, pe, ep }
+    }
+
+    /// True if sending to this callback does nothing.
+    pub fn is_ignore(&self) -> bool {
+        matches!(self, Callback::Ignore)
+    }
+}
+
+/// A payload paired with the callback it should be delivered to —
+/// the unit the I/O subsystem hands back on completion.
+#[derive(Debug)]
+pub struct Completion {
+    pub callback: Callback,
+    pub payload: Payload,
+}

@@ -1,0 +1,89 @@
+//! Chares: migratable message-driven objects, arrays, and groups.
+
+use std::any::Any;
+
+use super::engine::Ctx;
+use super::msg::Msg;
+
+/// Identifies a chare collection (array, group, or singleton).
+#[derive(Copy, Clone, Eq, PartialEq, Ord, PartialOrd, Hash, Debug)]
+pub struct CollectionId(pub u32);
+
+/// A reference to one chare: collection + index.
+///
+/// For groups the index is the PE number; for singletons it is 0.
+#[derive(Copy, Clone, Eq, PartialEq, Ord, PartialOrd, Hash, Debug)]
+pub struct ChareRef {
+    pub collection: CollectionId,
+    pub index: u32,
+}
+
+impl ChareRef {
+    pub fn new(collection: CollectionId, index: u32) -> ChareRef {
+        ChareRef { collection, index }
+    }
+}
+
+/// Kind of a collection — governs addressing and migratability.
+#[derive(Copy, Clone, Eq, PartialEq, Debug)]
+pub enum CollectionKind {
+    /// Indexed, migratable, location-managed (Charm++ chare array).
+    Array,
+    /// Exactly one element per PE, never migrates (Charm++ group).
+    Group,
+    /// One element, fixed placement.
+    Singleton,
+}
+
+/// A message-driven object.
+///
+/// A chare owns its data; the runtime delivers at most one message at a
+/// time (tasks are atomic / non-preemptible). Handlers must never block:
+/// long operations are split-phase via [`super::callback::Callback`]s.
+pub trait Chare: Any {
+    /// Handle one asynchronous method invocation.
+    fn receive(&mut self, ctx: &mut Ctx<'_>, msg: Msg);
+
+    /// Modeled serialization size for migration cost (PUP size).
+    fn pack_size(&self) -> u64 {
+        1024
+    }
+
+    /// Hook invoked on the destination PE right after a migration.
+    fn on_migrated(&mut self, _ctx: &mut Ctx<'_>) {}
+
+    /// Downcasts for driver-side inspection in tests/experiments.
+    fn as_any(&self) -> &dyn Any;
+    fn as_any_mut(&mut self) -> &mut dyn Any;
+}
+
+/// Implements the `as_any` boilerplate for a chare type.
+#[macro_export]
+macro_rules! impl_chare_any {
+    () => {
+        fn as_any(&self) -> &dyn std::any::Any {
+            self
+        }
+        fn as_any_mut(&mut self) -> &mut dyn std::any::Any {
+            self
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refs_compare_and_hash() {
+        let a = ChareRef::new(CollectionId(1), 4);
+        let b = ChareRef::new(CollectionId(1), 4);
+        let c = ChareRef::new(CollectionId(2), 4);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let mut set = std::collections::HashSet::new();
+        set.insert(a);
+        assert!(set.contains(&b));
+        assert!(!set.contains(&c));
+    }
+}

@@ -1,0 +1,292 @@
+//! Location management for migratable chare arrays.
+//!
+//! Charm++ semantics: every array element has a *home* PE that always
+//! knows its authoritative location. Senders keep per-PE location caches;
+//! a message sent with a stale cache entry is forwarded (cached-PE → home
+//! → actual), each hop paying interconnect cost. While an element is in
+//! flight between PEs its home buffers messages and flushes them on
+//! arrival. CkIO relies on this to let clients migrate between reads
+//! (paper §IV-A.3, Figs. 10–12).
+
+use std::collections::HashMap;
+
+use super::chare::{ChareRef, CollectionId};
+use super::msg::Envelope;
+use super::topology::Pe;
+
+/// Where an array element currently is.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Residence {
+    On(Pe),
+    /// Packed and in transit; home buffers messages until arrival.
+    InFlight { dest: Pe },
+}
+
+/// Authoritative location state for one array collection.
+#[derive(Debug)]
+struct ArrayLoc {
+    residence: Vec<Residence>,
+    /// Initial placement (the Charm++ array map): every PE can compute
+    /// it, so messages to never-migrated elements need no forwarding.
+    initial: Vec<Pe>,
+    /// Elements that have ever migrated (only these can have stale
+    /// caches).
+    ever_migrated: std::collections::HashSet<u32>,
+    /// Messages buffered at the home PE while the element is in flight.
+    buffered: HashMap<u32, Vec<Envelope>>,
+}
+
+/// The runtime-wide location manager.
+#[derive(Debug, Default)]
+pub struct LocationManager {
+    /// Indexed by `CollectionId.0` (collection ids are sequential);
+    /// `None` for non-array collections (groups).
+    arrays: Vec<Option<ArrayLoc>>,
+    /// Per-PE location caches: what each PE believes about element homes.
+    caches: Vec<HashMap<ChareRef, Pe>>,
+    npes: u32,
+    /// Total forwarding hops taken by mis-delivered messages (metric).
+    pub forward_hops: u64,
+}
+
+/// Outcome of presenting a message at a PE.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Route {
+    /// The element lives here: deliver.
+    Deliver,
+    /// Not here: forward to this PE (hop charged by caller).
+    Forward(Pe),
+    /// Element is in flight and this is its home: the manager buffered
+    /// the message; it will be flushed when migration completes.
+    Buffered,
+}
+
+impl LocationManager {
+    pub fn new(npes: u32) -> LocationManager {
+        LocationManager {
+            arrays: Vec::new(),
+            caches: (0..npes).map(|_| HashMap::new()).collect(),
+            npes,
+            forward_hops: 0,
+        }
+    }
+
+    /// Register a migratable array with its initial element placement.
+    pub fn register_array(&mut self, cid: CollectionId, placement: &[Pe]) {
+        let residence = placement.iter().map(|&p| Residence::On(p)).collect();
+        let idx = cid.0 as usize;
+        if idx >= self.arrays.len() {
+            self.arrays.resize_with(idx + 1, || None);
+        }
+        self.arrays[idx] = Some(ArrayLoc {
+            residence,
+            initial: placement.to_vec(),
+            ever_migrated: Default::default(),
+            buffered: HashMap::new(),
+        });
+    }
+
+    /// Whether a collection is location-managed (registered as an array).
+    #[inline]
+    pub fn is_array(&self, cid: CollectionId) -> bool {
+        self.arrays.get(cid.0 as usize).is_some_and(|a| a.is_some())
+    }
+
+    #[inline]
+    fn arr(&self, cid: CollectionId) -> &ArrayLoc {
+        self.arrays[cid.0 as usize].as_ref().expect("unregistered array")
+    }
+
+    #[inline]
+    fn arr_mut(&mut self, cid: CollectionId) -> &mut ArrayLoc {
+        self.arrays[cid.0 as usize].as_mut().expect("unregistered array")
+    }
+
+    /// The home PE of an element (fixed hash placement, as in Charm++).
+    pub fn home(&self, chare: ChareRef) -> Pe {
+        Pe(chare.index % self.npes)
+    }
+
+    /// Authoritative residence.
+    pub fn residence(&self, chare: ChareRef) -> &Residence {
+        &self.arr(chare.collection).residence[chare.index as usize]
+    }
+
+    /// Where PE `from` should first send a message for `chare`.
+    ///
+    /// Charm++ semantics: the initial placement comes from the array map,
+    /// which every PE can evaluate — so elements that never migrated are
+    /// addressed exactly. Only migrated elements fall back to the
+    /// sender's cache, then the home PE.
+    pub fn lookup_from(&self, from: Pe, chare: ChareRef) -> Pe {
+        let arr = self.arr(chare.collection);
+        if !arr.ever_migrated.contains(&chare.index) {
+            return arr.initial[chare.index as usize];
+        }
+        if let Some(&pe) = self.caches[from.0 as usize].get(&chare) {
+            return pe;
+        }
+        self.home(chare)
+    }
+
+    /// Decide what a PE holding a message for `chare` should do with it.
+    /// `Forward` results must be re-presented at the returned PE; a
+    /// `Buffered` result means the caller must hand the envelope to
+    /// [`LocationManager::buffer_at_home`].
+    pub fn route(&mut self, here: Pe, chare: ChareRef) -> Route {
+        let home = self.home(chare);
+        let arr = self.arr(chare.collection);
+        match arr.residence[chare.index as usize] {
+            Residence::On(pe) if pe == here => Route::Deliver,
+            Residence::On(pe) => {
+                self.forward_hops += 1;
+                // Anyone who is not the element's host forwards: the home
+                // knows the truth; others redirect to home first unless
+                // they *are* the home (then straight to the actual PE).
+                Route::Forward(if here == home { pe } else { home })
+            }
+            Residence::InFlight { .. } => {
+                if here == home {
+                    Route::Buffered
+                } else {
+                    self.forward_hops += 1;
+                    Route::Forward(home)
+                }
+            }
+        }
+    }
+
+    /// Buffer a message at the element's home while it is in flight.
+    pub fn buffer_at_home(&mut self, chare: ChareRef, env: Envelope) {
+        let arr = self.arr_mut(chare.collection);
+        debug_assert!(matches!(arr.residence[chare.index as usize], Residence::InFlight { .. }));
+        arr.buffered.entry(chare.index).or_default().push(env);
+    }
+
+    /// Record that a sender's cache should now point at the true location.
+    pub fn refresh_cache(&mut self, pe: Pe, chare: ChareRef) {
+        if let Residence::On(actual) = self.residence(chare).clone() {
+            self.caches[pe.0 as usize].insert(chare, actual);
+        }
+    }
+
+    /// Begin migrating an element toward `dest`.
+    pub fn begin_migration(&mut self, chare: ChareRef, dest: Pe) {
+        let arr = self.arr_mut(chare.collection);
+        arr.ever_migrated.insert(chare.index);
+        arr.residence[chare.index as usize] = Residence::InFlight { dest };
+    }
+
+    /// Complete a migration; returns messages buffered at home to flush.
+    pub fn finish_migration(&mut self, chare: ChareRef) -> Vec<Envelope> {
+        let arr = self.arr_mut(chare.collection);
+        let dest = match arr.residence[chare.index as usize] {
+            Residence::InFlight { dest } => dest,
+            ref r => panic!("finish_migration on non-inflight element: {r:?}"),
+        };
+        arr.residence[chare.index as usize] = Residence::On(dest);
+        arr.buffered.remove(&chare.index).unwrap_or_default()
+    }
+
+    /// Whether an element has ever migrated (cache maintenance filter).
+    #[inline]
+    pub fn has_migrated(&self, chare: ChareRef) -> bool {
+        self.arr(chare.collection).ever_migrated.contains(&chare.index)
+    }
+
+    /// Current PE of an element, panicking if in flight.
+    pub fn pe_of(&self, chare: ChareRef) -> Pe {
+        match self.residence(chare) {
+            Residence::On(pe) => *pe,
+            Residence::InFlight { .. } => panic!("pe_of: element in flight"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amt::msg::Msg;
+
+    const CID: CollectionId = CollectionId(9);
+
+    fn env(to: ChareRef) -> Envelope {
+        Envelope { to, msg: Msg::signal(0), wire_bytes: 64, from_pe: Pe(0) }
+    }
+
+    fn setup() -> (LocationManager, ChareRef) {
+        let mut lm = LocationManager::new(4);
+        lm.register_array(CID, &[Pe(0), Pe(1), Pe(2), Pe(3)]);
+        (lm, ChareRef::new(CID, 2))
+    }
+
+    #[test]
+    fn home_is_index_mod_npes() {
+        let (lm, c) = setup();
+        assert_eq!(lm.home(c), Pe(2));
+        assert_eq!(lm.home(ChareRef::new(CID, 5)), Pe(1));
+    }
+
+    #[test]
+    fn direct_delivery_when_resident() {
+        let (mut lm, c) = setup();
+        assert_eq!(lm.route(Pe(2), c), Route::Deliver);
+        assert_eq!(lm.forward_hops, 0);
+    }
+
+    #[test]
+    fn stale_cache_forwards_via_home() {
+        let (mut lm, c) = setup();
+        // Move element 2 from PE2 to PE0.
+        lm.begin_migration(c, Pe(0));
+        let flushed = lm.finish_migration(c);
+        assert!(flushed.is_empty());
+        // A message presented at the old PE forwards to home (PE2 IS home
+        // here so it goes straight to actual); present at a random PE:
+        match lm.route(Pe(3), c) {
+            Route::Forward(pe) => assert_eq!(pe, Pe(2)), // to home first
+            r => panic!("unexpected {r:?}"),
+        }
+        // Home knows the truth:
+        match lm.route(Pe(2), c) {
+            Route::Forward(pe) => assert_eq!(pe, Pe(0)),
+            r => panic!("unexpected {r:?}"),
+        }
+        assert_eq!(lm.route(Pe(0), c), Route::Deliver);
+        assert_eq!(lm.forward_hops, 2);
+    }
+
+    #[test]
+    fn inflight_buffers_at_home_and_flushes() {
+        let (mut lm, c) = setup();
+        lm.begin_migration(c, Pe(1));
+        // at home → buffered (caller hands the envelope over)
+        assert_eq!(lm.route(Pe(2), c), Route::Buffered);
+        lm.buffer_at_home(c, env(c));
+        // elsewhere → forwarded to home
+        match lm.route(Pe(0), c) {
+            Route::Forward(pe) => assert_eq!(pe, Pe(2)),
+            r => panic!("unexpected {r:?}"),
+        }
+        let flushed = lm.finish_migration(c);
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(lm.pe_of(c), Pe(1));
+    }
+
+    #[test]
+    fn cache_refresh_updates_lookup() {
+        let (mut lm, c) = setup();
+        lm.begin_migration(c, Pe(0));
+        lm.finish_migration(c);
+        assert_eq!(lm.lookup_from(Pe(3), c), Pe(2)); // home guess
+        lm.refresh_cache(Pe(3), c);
+        assert_eq!(lm.lookup_from(Pe(3), c), Pe(0)); // cached truth
+    }
+
+    #[test]
+    #[should_panic]
+    fn finish_without_begin_panics() {
+        let (mut lm, c) = setup();
+        lm.finish_migration(c);
+    }
+}

@@ -1,0 +1,34 @@
+//! Over-decomposed, message-driven task runtime (Charm++-like substrate).
+//!
+//! The paper's system (CkIO) is a library *on top of* Charm++; since no
+//! such runtime exists in Rust we build the substrate from scratch:
+//!
+//! * [`chare`] — migratable message-driven objects, arrays and groups,
+//! * [`engine`] — the event-driven executor with a **virtual** clock
+//!   (deterministic discrete-event simulation of an N-node × P-PE cluster,
+//!   used for every paper-scale figure) or a **wall** clock (real file
+//!   reads on helper threads + real PJRT compute, used by the end-to-end
+//!   example),
+//! * [`scheduler`] — per-PE run queues: one non-preemptible task at a
+//!   time, no PE ever blocks (split-phase I/O only),
+//! * [`location`] — home-based location management so messages chase
+//!   migrating chares (extra forwarding hops are charged to the network
+//!   model, as in Charm++),
+//! * [`callback`] — `CkCallback`-style continuations,
+//! * [`topology`] — node/PE shapes and placement policies.
+
+pub mod callback;
+pub mod chare;
+pub mod engine;
+pub mod location;
+pub mod msg;
+pub mod scheduler;
+pub mod time;
+pub mod topology;
+
+pub use callback::Callback;
+pub use chare::{Chare, ChareRef, CollectionId};
+pub use engine::{Ctx, Engine, EngineConfig};
+pub use msg::{Ep, Msg, Payload};
+pub use time::{Time, MICROS, MILLIS, NANOS, SECS};
+pub use topology::{NodeId, Pe, Placement, Topology};

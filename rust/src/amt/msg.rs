@@ -1,0 +1,127 @@
+//! Messages: asynchronous method invocations between chares.
+
+use std::any::Any;
+
+use super::chare::ChareRef;
+use super::topology::Pe;
+
+/// Entry-point id: which method of the target chare a message invokes.
+/// Each chare type defines its own `Ep` constants.
+pub type Ep = u32;
+
+/// Type-erased message payload.
+///
+/// Everything runs in one address space, so payloads move as boxed values
+/// (the cost of serialization/wire transfer is *modeled* by the network
+/// layer using the envelope's `wire_bytes`, matching how Charm++ charges
+/// for marshalling without us actually re-encoding).
+pub struct Payload(Option<Box<dyn Any + Send>>);
+
+impl Payload {
+    /// Wrap a value.
+    pub fn new<T: Any + Send>(v: T) -> Payload {
+        Payload(Some(Box::new(v)))
+    }
+
+    /// An empty payload (pure signal).
+    pub fn empty() -> Payload {
+        Payload(None)
+    }
+
+    /// Whether a value is present.
+    pub fn is_empty(&self) -> bool {
+        self.0.is_none()
+    }
+
+    /// Take the value out, panicking on type mismatch — a message sent to
+    /// the wrong entry point is a programming error, as in Charm++.
+    pub fn take<T: Any>(&mut self) -> T {
+        let boxed = self.0.take().expect("payload already taken / empty");
+        *boxed
+            .downcast::<T>()
+            .unwrap_or_else(|b| panic!("payload type mismatch: wanted {}, got {:?}", std::any::type_name::<T>(), (*b).type_id()))
+    }
+
+    /// Borrow the value without consuming it.
+    pub fn peek<T: Any>(&self) -> Option<&T> {
+        self.0.as_ref()?.downcast_ref::<T>()
+    }
+}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Payload({})", if self.0.is_some() { "some" } else { "empty" })
+    }
+}
+
+/// A message: entry point + payload.
+#[derive(Debug)]
+pub struct Msg {
+    pub ep: Ep,
+    pub payload: Payload,
+}
+
+impl Msg {
+    pub fn new<T: Any + Send>(ep: Ep, v: T) -> Msg {
+        Msg { ep, payload: Payload::new(v) }
+    }
+
+    pub fn signal(ep: Ep) -> Msg {
+        Msg { ep, payload: Payload::empty() }
+    }
+
+    /// Shorthand for `self.payload.take()`.
+    pub fn take<T: Any>(&mut self) -> T {
+        self.payload.take()
+    }
+}
+
+/// Default modeled size of a control message (headers + small args).
+pub const CONTROL_MSG_BYTES: u64 = 256;
+
+/// A routed message: destination + wire-size for the network model.
+#[derive(Debug)]
+pub struct Envelope {
+    pub to: ChareRef,
+    pub msg: Msg,
+    /// Bytes charged to the interconnect model (payload + headers).
+    pub wire_bytes: u64,
+    /// Sender PE (for delay computation and location-cache updates).
+    pub from_pe: Pe,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_round_trip() {
+        let mut p = Payload::new(vec![1u32, 2, 3]);
+        assert!(!p.is_empty());
+        assert_eq!(p.peek::<Vec<u32>>().unwrap().len(), 3);
+        let v: Vec<u32> = p.take();
+        assert_eq!(v, vec![1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "type mismatch")]
+    fn payload_type_mismatch_panics() {
+        let mut p = Payload::new(1u32);
+        let _: String = p.take();
+    }
+
+    #[test]
+    #[should_panic(expected = "already taken")]
+    fn payload_double_take_panics() {
+        let mut p = Payload::new(1u32);
+        let _: u32 = p.take();
+        let _: u32 = p.take();
+    }
+
+    #[test]
+    fn signal_is_empty() {
+        let m = Msg::signal(7);
+        assert_eq!(m.ep, 7);
+        assert!(m.payload.is_empty());
+    }
+}

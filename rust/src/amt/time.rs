@@ -1,0 +1,70 @@
+//! Time base for the runtime: nanoseconds since engine start.
+//!
+//! The same `Time` type is used by the virtual (discrete-event) clock and
+//! the wall clock, so model code is identical in both modes.
+
+/// Nanoseconds since engine start (virtual or wall).
+pub type Time = u64;
+
+/// One nanosecond.
+pub const NANOS: Time = 1;
+/// One microsecond.
+pub const MICROS: Time = 1_000;
+/// One millisecond.
+pub const MILLIS: Time = 1_000_000;
+/// One second.
+pub const SECS: Time = 1_000_000_000;
+
+/// Convert to (fractional) seconds.
+pub fn to_secs(t: Time) -> f64 {
+    t as f64 / SECS as f64
+}
+
+/// Convert fractional seconds to `Time` (saturating at 0 for negatives).
+pub fn from_secs(s: f64) -> Time {
+    if s <= 0.0 {
+        0
+    } else {
+        (s * SECS as f64).round() as Time
+    }
+}
+
+/// Convert fractional microseconds to `Time`.
+pub fn from_micros(us: f64) -> Time {
+    from_secs(us * 1e-6)
+}
+
+/// Human-readable duration (`"3.25 ms"`).
+pub fn human(t: Time) -> String {
+    let t = t as f64;
+    if t < 1e3 {
+        format!("{t:.0} ns")
+    } else if t < 1e6 {
+        format!("{:.2} us", t / 1e3)
+    } else if t < 1e9 {
+        format!("{:.2} ms", t / 1e6)
+    } else {
+        format!("{:.3} s", t / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_round_trip() {
+        assert_eq!(from_secs(1.5), 1_500_000_000);
+        assert!((to_secs(250 * MILLIS) - 0.25).abs() < 1e-12);
+        assert_eq!(from_micros(250.0), 250 * MICROS);
+        assert_eq!(from_secs(-1.0), 0);
+    }
+
+    #[test]
+    fn human_formats() {
+        assert_eq!(human(500), "500 ns");
+        assert_eq!(human(1500), "1.50 us");
+        assert_eq!(human(3_250_000), "3.25 ms");
+        assert_eq!(human(2 * SECS), "2.000 s");
+    }
+}

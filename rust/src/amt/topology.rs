@@ -1,0 +1,153 @@
+//! Cluster shape (nodes × PEs) and chare placement policies.
+
+/// A processing element (one scheduler instance; Charm++ "PE").
+#[derive(Copy, Clone, Eq, PartialEq, Ord, PartialOrd, Hash, Debug)]
+pub struct Pe(pub u32);
+
+/// A physical node (shares a NIC and, in the model, intra-node memory bw).
+#[derive(Copy, Clone, Eq, PartialEq, Ord, PartialOrd, Hash, Debug)]
+pub struct NodeId(pub u32);
+
+/// Cluster shape: `nodes` × `pes_per_node`, PEs numbered node-major.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    pub nodes: u32,
+    pub pes_per_node: u32,
+}
+
+impl Topology {
+    pub fn new(nodes: u32, pes_per_node: u32) -> Topology {
+        assert!(nodes > 0 && pes_per_node > 0);
+        Topology { nodes, pes_per_node }
+    }
+
+    /// Total PE count.
+    pub fn npes(&self) -> u32 {
+        self.nodes * self.pes_per_node
+    }
+
+    /// Node that hosts a PE.
+    pub fn node_of(&self, pe: Pe) -> NodeId {
+        debug_assert!(pe.0 < self.npes());
+        NodeId(pe.0 / self.pes_per_node)
+    }
+
+    /// Whether two PEs share a node.
+    pub fn same_node(&self, a: Pe, b: Pe) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// The PEs hosted by a node.
+    pub fn pes_on(&self, node: NodeId) -> impl Iterator<Item = Pe> {
+        let lo = node.0 * self.pes_per_node;
+        (lo..lo + self.pes_per_node).map(Pe)
+    }
+
+    /// All PEs.
+    pub fn all_pes(&self) -> impl Iterator<Item = Pe> {
+        (0..self.npes()).map(Pe)
+    }
+}
+
+/// Placement policy for chare-array elements.
+///
+/// The paper's evaluation depends on placement: buffer chares are spread
+/// to maximize file-system parallelism while clients follow the
+/// application's decomposition.
+#[derive(Clone, Debug)]
+pub enum Placement {
+    /// Element `i` on PE `i % npes` (Charm++ default round-robin).
+    RoundRobinPes,
+    /// Element `i` on node `i % nodes`, cycling that node's PEs
+    /// (spreads few elements across as many NICs/FS paths as possible).
+    RoundRobinNodes,
+    /// Contiguous blocks of elements per PE.
+    BlockPes,
+    /// Explicit per-element placement.
+    Explicit(Vec<Pe>),
+}
+
+impl Placement {
+    /// Compute the PE for each of `n` elements.
+    pub fn place(&self, topo: &Topology, n: usize) -> Vec<Pe> {
+        let npes = topo.npes() as usize;
+        match self {
+            Placement::RoundRobinPes => (0..n).map(|i| Pe((i % npes) as u32)).collect(),
+            Placement::RoundRobinNodes => (0..n)
+                .map(|i| {
+                    let node = (i % topo.nodes as usize) as u32;
+                    let slot = (i / topo.nodes as usize) % topo.pes_per_node as usize;
+                    Pe(node * topo.pes_per_node + slot as u32)
+                })
+                .collect(),
+            Placement::BlockPes => {
+                let per = n.div_ceil(npes).max(1);
+                (0..n).map(|i| Pe(((i / per) % npes) as u32)).collect()
+            }
+            Placement::Explicit(pes) => {
+                assert_eq!(pes.len(), n, "explicit placement length mismatch");
+                pes.clone()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_math() {
+        let t = Topology::new(4, 8);
+        assert_eq!(t.npes(), 32);
+        assert_eq!(t.node_of(Pe(0)), NodeId(0));
+        assert_eq!(t.node_of(Pe(7)), NodeId(0));
+        assert_eq!(t.node_of(Pe(8)), NodeId(1));
+        assert_eq!(t.node_of(Pe(31)), NodeId(3));
+        assert!(t.same_node(Pe(8), Pe(15)));
+        assert!(!t.same_node(Pe(7), Pe(8)));
+        assert_eq!(t.pes_on(NodeId(2)).collect::<Vec<_>>(), (16..24).map(Pe).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn round_robin_pes() {
+        let t = Topology::new(2, 2);
+        let p = Placement::RoundRobinPes.place(&t, 6);
+        assert_eq!(p, vec![Pe(0), Pe(1), Pe(2), Pe(3), Pe(0), Pe(1)]);
+    }
+
+    #[test]
+    fn round_robin_nodes_spreads_across_nics() {
+        let t = Topology::new(2, 4);
+        let p = Placement::RoundRobinNodes.place(&t, 4);
+        // elements alternate node0/node1 before reusing a node
+        assert_eq!(t.node_of(p[0]), NodeId(0));
+        assert_eq!(t.node_of(p[1]), NodeId(1));
+        assert_eq!(t.node_of(p[2]), NodeId(0));
+        assert_eq!(t.node_of(p[3]), NodeId(1));
+        // and within a node, distinct PEs
+        assert_ne!(p[0], p[2]);
+    }
+
+    #[test]
+    fn block_placement_contiguous() {
+        let t = Topology::new(1, 4);
+        let p = Placement::BlockPes.place(&t, 8);
+        assert_eq!(p, vec![Pe(0), Pe(0), Pe(1), Pe(1), Pe(2), Pe(2), Pe(3), Pe(3)]);
+    }
+
+    #[test]
+    fn block_placement_fewer_elements_than_pes() {
+        let t = Topology::new(1, 8);
+        let p = Placement::BlockPes.place(&t, 3);
+        assert_eq!(p.len(), 3);
+        assert_eq!(p, vec![Pe(0), Pe(1), Pe(2)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn explicit_length_mismatch_panics() {
+        let t = Topology::new(1, 2);
+        Placement::Explicit(vec![Pe(0)]).place(&t, 2);
+    }
+}

@@ -1,0 +1,213 @@
+//! Drivers that assemble a mini-ChaNGa run (used by the Fig. 13 bench,
+//! the end-to-end example, and tests).
+
+use crate::amt::callback::Callback;
+use crate::amt::chare::ChareRef;
+use crate::amt::engine::{Engine, EngineConfig};
+use crate::amt::time::Time;
+use crate::amt::topology::Placement;
+use crate::ckio::CkIo;
+use crate::pfs::PfsConfig;
+
+use super::gravity::GravityCompute;
+use super::tipsy;
+use super::treepiece::{ChangaConfig, InputScheme, TreePiece, EP_TP_GO};
+
+/// Which input scheme to benchmark.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum Scheme {
+    Unopt,
+    HandOpt,
+    CkIo,
+}
+
+impl Scheme {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scheme::Unopt => "unopt",
+            Scheme::HandOpt => "hand-opt",
+            Scheme::CkIo => "ckio",
+        }
+    }
+}
+
+/// Result of one input-phase run.
+pub struct ChangaRun {
+    /// Virtual time at which the last TreePiece finished input.
+    pub input_time: Time,
+    pub total_bytes: u64,
+    pub engine: Engine,
+}
+
+/// Run the mini-ChaNGa *input phase* on the simulated cluster.
+///
+/// Mirrors Fig. 13's setup: `n_tp` TreePieces collectively reading an
+/// `nbodies`-record Tipsy file under the given scheme.
+pub fn run_changa_input(
+    nodes: u32,
+    pes_per_node: u32,
+    n_tp: u32,
+    nbodies: u64,
+    scheme: Scheme,
+    seed: u64,
+) -> ChangaRun {
+    let mut eng = Engine::new(EngineConfig::sim(nodes, pes_per_node).with_seed(seed))
+        .with_sim_pfs(PfsConfig::default());
+    let header = tipsy::default_header(nbodies);
+    let file = eng.core.sim_pfs_mut().create_file(header.file_bytes());
+    let io = CkIo::boot(&mut eng);
+    let fut = eng.future(n_tp);
+
+    let cfg = ChangaConfig {
+        file,
+        header,
+        n_tp,
+        scheme: match scheme {
+            Scheme::Unopt => InputScheme::Unopt,
+            Scheme::HandOpt => InputScheme::HandOpt,
+            Scheme::CkIo => InputScheme::CkIo { io },
+        },
+        decode_ns_per_byte: 0.15,
+        compute: None,
+        input_done: Callback::Future(fut),
+    };
+    let pieces = eng.create_array(n_tp, &Placement::RoundRobinPes, |i| TreePiece::new(cfg.clone(), i));
+    for i in 0..n_tp {
+        eng.chare_mut::<TreePiece>(ChareRef::new(pieces, i)).pieces = pieces;
+    }
+    // Kick the input phase everywhere.
+    for i in 0..n_tp {
+        eng.inject_signal(ChareRef::new(pieces, i), EP_TP_GO);
+    }
+    eng.run();
+    assert!(eng.future_done(fut), "{:?}: input phase incomplete", scheme);
+    let arrivals = eng.take_future(fut);
+    let input_time = arrivals.iter().map(|(t, _)| *t).max().unwrap();
+    let total_bytes = arrivals
+        .into_iter()
+        .map(|(_, mut p)| p.take::<u64>())
+        .sum();
+    ChangaRun { input_time, total_bytes, engine: eng }
+}
+
+/// Wall-clock end-to-end run against a real Tipsy file (used by
+/// `examples/changa_e2e.rs` and integration tests): input via the chosen
+/// scheme + `steps` gravity steps through the PJRT artifacts.
+pub struct E2eReport {
+    pub input_secs: f64,
+    pub nbodies: u64,
+    pub n_tp: u32,
+    pub acc_norms: Vec<f32>,
+    pub step_secs: Vec<f64>,
+}
+
+pub fn run_changa_e2e(
+    path: &std::path::Path,
+    n_tp: u32,
+    scheme: Scheme,
+    steps: u32,
+    reader_threads: usize,
+    artifact_dir: &std::path::Path,
+) -> anyhow::Result<E2eReport> {
+    use crate::runtime::ArtifactRuntime;
+    use std::rc::Rc;
+
+    // Parse the real header first.
+    let mut head = vec![0u8; tipsy::HEADER_BYTES as usize];
+    {
+        use std::io::Read;
+        let mut f = std::fs::File::open(path)?;
+        f.read_exact(&mut head)?;
+    }
+    let header = tipsy::Header::from_bytes(&head).map_err(|e| anyhow::anyhow!(e))?;
+
+    let mut rt = ArtifactRuntime::cpu()?;
+    rt.load_dir(artifact_dir)?;
+    let compute = GravityCompute::new(Rc::new(rt))?;
+
+    let mut eng = Engine::new(EngineConfig::real(1, 4)).with_local_disk(reader_threads);
+    let file = eng.core.local_disk_mut().register_file(path);
+    let io = CkIo::boot(&mut eng);
+    let fut = eng.future(n_tp);
+
+    let cfg = ChangaConfig {
+        file,
+        header: header.clone(),
+        n_tp,
+        scheme: match scheme {
+            Scheme::Unopt => InputScheme::Unopt,
+            Scheme::HandOpt => InputScheme::HandOpt,
+            Scheme::CkIo => InputScheme::CkIo { io },
+        },
+        decode_ns_per_byte: 0.0,
+        compute: Some(compute),
+        input_done: Callback::Future(fut),
+    };
+    let pieces = eng.create_array(n_tp, &Placement::RoundRobinPes, |i| TreePiece::new(cfg.clone(), i));
+    for i in 0..n_tp {
+        eng.chare_mut::<TreePiece>(ChareRef::new(pieces, i)).pieces = pieces;
+    }
+    let t0 = std::time::Instant::now();
+    for i in 0..n_tp {
+        eng.inject_signal(ChareRef::new(pieces, i), EP_TP_GO);
+    }
+    eng.run();
+    anyhow::ensure!(eng.future_done(fut), "input phase incomplete");
+    let input_secs = t0.elapsed().as_secs_f64();
+    eng.take_future(fut);
+
+    // Compute phase: `steps` synchronized gravity steps.
+    let mut acc_norms = Vec::new();
+    let mut step_secs = Vec::new();
+    for _ in 0..steps {
+        let sfut = eng.future(n_tp);
+        let t = std::time::Instant::now();
+        for i in 0..n_tp {
+            eng.inject(ChareRef::new(pieces, i), super::treepiece::EP_TP_STEP, Callback::Future(sfut));
+        }
+        eng.run();
+        anyhow::ensure!(eng.future_done(sfut), "step incomplete");
+        step_secs.push(t.elapsed().as_secs_f64());
+        let total: f32 = eng
+            .take_future(sfut)
+            .into_iter()
+            .map(|(_, mut p)| p.take::<f32>())
+            .sum();
+        acc_norms.push(total);
+    }
+    Ok(E2eReport { input_secs, nbodies: header.nbodies, n_tp, acc_norms, step_secs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_three_schemes_complete_and_agree_on_bytes() {
+        let nbodies = 64 << 10; // 2 MiB of records
+        for scheme in [Scheme::Unopt, Scheme::HandOpt, Scheme::CkIo] {
+            let run = run_changa_input(2, 4, 64, nbodies, scheme, 1);
+            assert_eq!(
+                run.total_bytes,
+                nbodies * tipsy::RECORD_BYTES,
+                "{scheme:?} delivered wrong byte count"
+            );
+            assert!(run.input_time > 0);
+        }
+    }
+
+    #[test]
+    fn overdecomposed_unopt_slower_than_ckio() {
+        // The headline: with heavy over-decomposition, per-TreePiece
+        // direct input collapses while CkIO stays near optimal.
+        let nbodies = 2 << 20; // 64 MiB of records
+        let unopt = run_changa_input(4, 8, 2048, nbodies, Scheme::Unopt, 1);
+        let ckio = run_changa_input(4, 8, 2048, nbodies, Scheme::CkIo, 1);
+        assert!(
+            unopt.input_time > ckio.input_time,
+            "unopt {} should exceed ckio {}",
+            unopt.input_time,
+            ckio.input_time
+        );
+    }
+}

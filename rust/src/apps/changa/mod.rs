@@ -1,0 +1,16 @@
+//! Mini-ChaNGa: the paper's real-application evaluation (§IV-B).
+//!
+//! A collision-less N-body code skeleton matching ChaNGa's input
+//! structure: a single Tipsy-format file read collectively by a large
+//! array of TreePieces (2^16 in the paper), under three interchangeable
+//! input schemes (unoptimized / hand-optimized one-reader-per-PE / CkIO),
+//! followed by a compute phase that runs the AOT JAX/Pallas gravity
+//! artifacts via PJRT.
+
+pub mod driver;
+pub mod gravity;
+pub mod tipsy;
+pub mod treepiece;
+
+pub use driver::{run_changa_input, ChangaRun};
+pub use treepiece::{ChangaConfig, InputScheme, TreePiece};

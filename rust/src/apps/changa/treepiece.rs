@@ -1,0 +1,410 @@
+//! TreePieces: mini-ChaNGa's over-decomposed particle owners and the
+//! three input schemes the paper's Fig. 13 compares:
+//!
+//! 1. **Unopt** — every TreePiece reads its own records directly from
+//!    the file system (per-TP open + read),
+//! 2. **HandOpt** — the original ChaNGa optimization: one designated
+//!    reader TreePiece per PE reads a large contiguous block and
+//!    redistributes particles to their owners over the interconnect,
+//! 3. **CkIo** — the paper's contribution: TreePieces read through a
+//!    CkIO session; reader decomposition is independent and tunable.
+//!
+//! After input, in wall-clock runs each piece ingests its raw records
+//! through the `ingest` artifact and advances with the `gravity`
+//! artifact (see [`super::gravity`]); pieces exchange monopole moments
+//! (one-level Barnes-Hut) between steps.
+
+use crate::amt::callback::Callback;
+use crate::amt::chare::{Chare, ChareRef, CollectionId};
+use crate::amt::engine::Ctx;
+use crate::amt::msg::{Ep, Msg, Payload};
+use crate::amt::time::Time;
+use crate::ckio::{CkIo, ReadResult, Session};
+use crate::impl_chare_any;
+use crate::net::Transfer;
+use crate::pfs::backend::{IoResult, ReadRequest};
+use crate::pfs::layout::FileId;
+use crate::util::bytes::Chunk;
+
+use super::gravity::{GravityCompute, PieceState};
+use super::tipsy::{Header, HEADER_BYTES, RECORD_BYTES};
+
+/// Start the input phase.
+pub const EP_TP_GO: Ep = 1;
+/// MDS open completed (unopt path).
+pub const EP_TP_OPENED: Ep = 2;
+/// Raw read completed (unopt / handopt reader).
+pub const EP_TP_RAW: Ep = 3;
+/// Redistributed particles arriving (handopt path).
+pub const EP_TP_PARTICLES: Ep = 4;
+/// CkIO session handle broadcast (ckio path).
+pub const EP_TP_SESSION: Ep = 5;
+/// CkIO read completed.
+pub const EP_TP_CKDATA: Ep = 6;
+/// CkIO open completed (leader only).
+pub const EP_TP_CKOPENED: Ep = 7;
+/// Run one gravity step (wall-mode compute phase).
+pub const EP_TP_STEP: Ep = 8;
+/// Other pieces' moments (monopole exchange).
+pub const EP_TP_MOMENTS: Ep = 9;
+
+/// Which input scheme a TreePiece array uses.
+#[derive(Clone)]
+pub enum InputScheme {
+    Unopt,
+    HandOpt,
+    CkIo { io: CkIo },
+}
+
+/// Immutable description shared by all pieces of one run.
+#[derive(Clone)]
+pub struct ChangaConfig {
+    pub file: FileId,
+    pub header: Header,
+    pub n_tp: u32,
+    pub scheme: InputScheme,
+    /// Modeled decode cost per byte (virtual runs), ns/B.
+    pub decode_ns_per_byte: f64,
+    /// Compute engine for wall-mode runs.
+    pub compute: Option<GravityCompute>,
+    /// Fired once per piece when its particles are resident (payload:
+    /// bytes received).
+    pub input_done: Callback,
+}
+
+pub struct MomentsMsg {
+    pub from: u32,
+    pub mass: f32,
+    pub com: [f32; 3],
+}
+
+/// One TreePiece.
+pub struct TreePiece {
+    pub cfg: ChangaConfig,
+    pub index: u32,
+    /// Record range [lo, hi) owned by this piece.
+    pub rec_lo: u64,
+    pub rec_hi: u64,
+    /// Collection (set post-creation by the driver).
+    pub pieces: CollectionId,
+    /// Input progress.
+    received: u64,
+    raw: Vec<Chunk>,
+    session: Option<Session>,
+    input_complete: bool,
+    /// Compute state (wall mode).
+    pub state: Option<PieceState>,
+    far: Vec<(f32, [f32; 3])>,
+    moments_seen: u32,
+    /// Diagnostic per-step |acc| sums.
+    pub acc_log: Vec<f32>,
+    pub step_done: Option<Callback>,
+}
+
+impl TreePiece {
+    pub fn new(cfg: ChangaConfig, index: u32) -> TreePiece {
+        let n = cfg.header.nbodies;
+        let per = n.div_ceil(cfg.n_tp as u64);
+        let lo = (index as u64 * per).min(n);
+        let hi = ((index as u64 + 1) * per).min(n);
+        TreePiece {
+            cfg,
+            index,
+            rec_lo: lo,
+            rec_hi: hi,
+            pieces: CollectionId(u32::MAX),
+            received: 0,
+            raw: Vec::new(),
+            session: None,
+            input_complete: false,
+            state: None,
+            far: Vec::new(),
+            moments_seen: 0,
+            acc_log: Vec::new(),
+            step_done: None,
+        }
+    }
+
+    fn my_bytes(&self) -> u64 {
+        (self.rec_hi - self.rec_lo) * RECORD_BYTES
+    }
+
+    fn my_extent(&self) -> (u64, u64) {
+        self.cfg.header.record_extent(self.rec_lo, self.rec_hi)
+    }
+
+    /// Am I the designated reader of my PE (handopt scheme)?
+    /// Convention: the lowest TP index on each PE reads. With round-robin
+    /// placement that's indices 0..npes.
+    fn is_reader(&self, ctx: &Ctx<'_>) -> bool {
+        self.index < ctx.topo().npes()
+    }
+
+    /// The contiguous record block a handopt reader covers.
+    fn reader_block(&self, ctx: &Ctx<'_>) -> (u64, u64) {
+        let npes = ctx.topo().npes() as u64;
+        let n = self.cfg.header.nbodies;
+        let per = n.div_ceil(npes);
+        let lo = (self.index as u64 * per).min(n);
+        let hi = ((self.index as u64 + 1) * per).min(n);
+        (lo, hi)
+    }
+
+    /// Record range → owning TP index range (inclusive).
+    fn owners_of(&self, rec_lo: u64, rec_hi: u64) -> std::ops::RangeInclusive<u32> {
+        let n = self.cfg.header.nbodies;
+        let per = n.div_ceil(self.cfg.n_tp as u64);
+        let lo = (rec_lo / per) as u32;
+        let hi = ((rec_hi - 1) / per) as u32;
+        lo..=hi.min(self.cfg.n_tp - 1)
+    }
+
+    fn particles_arrived(&mut self, ctx: &mut Ctx<'_>, chunk: Chunk) {
+        self.received += chunk.len;
+        self.raw.push(chunk);
+        debug_assert!(self.received <= self.my_bytes());
+        if self.received == self.my_bytes() && !self.input_complete {
+            self.input_complete = true;
+            // Ingest: decode + permute + moments.
+            if let Some(gc) = self.cfg.compute.clone() {
+                let bytes = self.assemble_raw();
+                let ing = gc
+                    .ingest(&self.cfg.header, &bytes, None)
+                    .expect("ingest artifact");
+                let mass = ing.total_mass;
+                let com = ing.com;
+                self.state = Some(ing.into_state());
+                // Publish my moments to the other pieces.
+                for j in 0..self.cfg.n_tp {
+                    if j != self.index {
+                        ctx.send(
+                            ChareRef::new(self.pieces, j),
+                            EP_TP_MOMENTS,
+                            MomentsMsg { from: self.index, mass, com },
+                        );
+                    }
+                }
+            } else {
+                // Virtual runs: charge a modeled decode.
+                let cost = (self.my_bytes() as f64 * self.cfg.decode_ns_per_byte) as Time;
+                ctx.charge("changa.decode", cost);
+            }
+            let bytes = self.received;
+            ctx.metrics().count("changa.pieces_done", 1);
+            ctx.fire(self.cfg.input_done.clone(), Payload::new(bytes));
+        }
+    }
+
+    /// Concatenate received chunks in offset order (materialized runs).
+    fn assemble_raw(&self) -> Vec<u8> {
+        let mut chunks: Vec<&Chunk> = self.raw.iter().collect();
+        chunks.sort_by_key(|c| c.offset);
+        let mut out = Vec::with_capacity(self.my_bytes() as usize);
+        for c in chunks {
+            out.extend_from_slice(c.bytes.as_ref().expect("materialized input"));
+        }
+        out
+    }
+}
+
+impl Chare for TreePiece {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_TP_GO => match self.cfg.scheme.clone() {
+                InputScheme::Unopt => {
+                    if self.my_bytes() == 0 {
+                        let done = self.cfg.input_done.clone();
+                        ctx.fire(done, Payload::new(0u64));
+                        return;
+                    }
+                    let me = ctx.me();
+                    ctx.open_file(Callback::to_chare(me, EP_TP_OPENED));
+                }
+                InputScheme::HandOpt => {
+                    if self.is_reader(ctx) {
+                        let (lo, hi) = self.reader_block(ctx);
+                        if lo >= hi {
+                            return;
+                        }
+                        let me = ctx.me();
+                        let (off, len) = self.cfg.header.record_extent(lo, hi);
+                        ctx.open_file(Callback::Ignore); // reader's own open
+                        ctx.submit_read(
+                            ReadRequest { file: self.cfg.file, offset: off, len, user: lo },
+                            Callback::to_chare(me, EP_TP_RAW),
+                        );
+                    }
+                    if self.my_bytes() == 0 {
+                        let done = self.cfg.input_done.clone();
+                        ctx.fire(done, Payload::new(0u64));
+                    }
+                }
+                InputScheme::CkIo { io } => {
+                    if self.index == 0 {
+                        let me = ctx.me();
+                        let opts = crate::ckio::Options::default();
+                        io.open(
+                            ctx,
+                            self.cfg.file,
+                            self.cfg.header.file_bytes(),
+                            opts,
+                            Callback::to_chare(me, EP_TP_CKOPENED),
+                        );
+                    }
+                }
+            },
+            EP_TP_OPENED => {
+                let me = ctx.me();
+                let (off, len) = self.my_extent();
+                ctx.submit_read(
+                    ReadRequest { file: self.cfg.file, offset: off, len, user: 0 },
+                    Callback::to_chare(me, EP_TP_RAW),
+                );
+            }
+            EP_TP_RAW => {
+                let r: IoResult = msg.take();
+                match self.cfg.scheme {
+                    InputScheme::Unopt => self.particles_arrived(ctx, r.chunk),
+                    InputScheme::HandOpt => {
+                        // Reader: redistribute records to their owners.
+                        let blk_lo = r.user;
+                        let blk_hi = blk_lo + r.len / RECORD_BYTES;
+                        ctx.metrics().count("changa.reader_blocks", 1);
+                        for owner in self.owners_of(blk_lo, blk_hi) {
+                            let n = self.cfg.header.nbodies;
+                            let per = n.div_ceil(self.cfg.n_tp as u64);
+                            let o_lo = (owner as u64 * per).max(blk_lo);
+                            let o_hi = ((owner as u64 + 1) * per).min(n).min(blk_hi);
+                            if o_lo >= o_hi {
+                                continue;
+                            }
+                            let (off, len) = self.cfg.header.record_extent(o_lo, o_hi);
+                            let piece = r.chunk.slice(off, len);
+                            let wire = piece.len;
+                            ctx.send_sized(
+                                ChareRef::new(self.pieces, owner),
+                                EP_TP_PARTICLES,
+                                Payload::new(piece),
+                                wire,
+                                Transfer::Eager,
+                            );
+                        }
+                    }
+                    InputScheme::CkIo { .. } => unreachable!("raw read in ckio scheme"),
+                }
+            }
+            EP_TP_PARTICLES => {
+                let chunk: Chunk = msg.take();
+                self.particles_arrived(ctx, chunk);
+            }
+            EP_TP_CKOPENED => {
+                let io = match &self.cfg.scheme {
+                    InputScheme::CkIo { io } => *io,
+                    _ => unreachable!(),
+                };
+                let me = ctx.me();
+                let h = &self.cfg.header;
+                io.start_read_session(
+                    ctx,
+                    self.cfg.file,
+                    HEADER_BYTES,
+                    h.nbodies * RECORD_BYTES,
+                    Callback::to_chare(me, EP_TP_SESSION),
+                );
+            }
+            EP_TP_SESSION => {
+                let s: Session = msg.take();
+                if self.index == 0 && self.session.is_none() {
+                    // Leader: forward the handle to every piece.
+                    for j in 1..self.cfg.n_tp {
+                        ctx.send(ChareRef::new(self.pieces, j), EP_TP_SESSION, s);
+                    }
+                }
+                self.session = Some(s);
+                if self.my_bytes() == 0 {
+                    let done = self.cfg.input_done.clone();
+                    ctx.fire(done, Payload::new(0u64));
+                    return;
+                }
+                let io = match &self.cfg.scheme {
+                    InputScheme::CkIo { io } => *io,
+                    _ => unreachable!(),
+                };
+                let me = ctx.me();
+                let (off, len) = self.my_extent();
+                io.read(ctx, &s, off, len, Callback::to_chare(me, EP_TP_CKDATA));
+            }
+            EP_TP_CKDATA => {
+                let r: ReadResult = msg.take();
+                self.particles_arrived(ctx, r.chunk);
+            }
+            EP_TP_MOMENTS => {
+                let m: MomentsMsg = msg.take();
+                self.far.push((m.mass, m.com));
+                self.moments_seen += 1;
+            }
+            EP_TP_STEP => {
+                let done: Callback = msg.take();
+                let gc = self.cfg.compute.clone().expect("compute phase needs artifacts");
+                let st = self.state.as_mut().expect("step before input");
+                let an = gc.step(st, &self.far, 1e-3).expect("gravity artifact");
+                self.acc_log.push(an);
+                ctx.fire(done, Payload::new(an));
+            }
+            other => panic!("TreePiece: unknown ep {other}"),
+        }
+    }
+
+    fn pack_size(&self) -> u64 {
+        // Migrating a piece carries its particles.
+        256 + self.state.as_ref().map_or(self.my_bytes(), |s| s.n as u64 * 28)
+    }
+
+    impl_chare_any!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(n_tp: u32, nbodies: u64) -> ChangaConfig {
+        ChangaConfig {
+            file: FileId(0),
+            header: super::super::tipsy::default_header(nbodies),
+            n_tp,
+            scheme: InputScheme::Unopt,
+            decode_ns_per_byte: 0.1,
+            compute: None,
+            input_done: Callback::Ignore,
+        }
+    }
+
+    #[test]
+    fn record_ranges_partition() {
+        let c = cfg(7, 1000);
+        let mut pos = 0;
+        for i in 0..7 {
+            let tp = TreePiece::new(c.clone(), i);
+            assert_eq!(tp.rec_lo, pos);
+            pos = tp.rec_hi;
+        }
+        assert_eq!(pos, 1000);
+    }
+
+    #[test]
+    fn owners_math() {
+        let c = cfg(10, 1000); // 100 records each
+        let tp = TreePiece::new(c, 0);
+        assert_eq!(tp.owners_of(0, 100), 0..=0);
+        assert_eq!(tp.owners_of(50, 150), 0..=1);
+        assert_eq!(tp.owners_of(950, 1000), 9..=9);
+    }
+
+    #[test]
+    fn uneven_split_last_piece_short() {
+        let c = cfg(3, 10); // per = 4: 4,4,2
+        let t2 = TreePiece::new(c, 2);
+        assert_eq!((t2.rec_lo, t2.rec_hi), (8, 10));
+        assert_eq!(t2.my_bytes(), 2 * RECORD_BYTES);
+    }
+}

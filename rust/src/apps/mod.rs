@@ -1,0 +1,3 @@
+//! Applications built on the runtime.
+
+pub mod changa;

@@ -1,0 +1,9 @@
+//! Baseline input schemes the paper compares CkIO against.
+//!
+//! * [`naive`] — every client chare makes its own file-system call
+//!   (the paper's "naive parallel input", Figs. 1, 4, 8),
+//! * [`collective`] — an MPI-IO-style bulk-synchronous two-phase
+//!   collective read with ROMIO-like aggregators (Fig. 7's comparator).
+
+pub mod collective;
+pub mod naive;

@@ -1,0 +1,143 @@
+//! Naive over-decomposed input: every client chare opens the file and
+//! reads its slice with its own file-system call (paper Figs. 1, 4).
+//!
+//! Two blocking disciplines are modeled:
+//!
+//! * `block_pe: false` — the read is split-phase (the chare waits on a
+//!   callback, the PE keeps scheduling). This is the *best case* for
+//!   naive input and what Figs. 1/4 measure (pure input throughput).
+//! * `block_pe: true` — the chare *blocks its PE* for the duration of the
+//!   read, as a synchronous `read()` from task code does in practice.
+//!   This is what makes naive input poisonous to overlap (Fig. 8: naive
+//!   runtime more than doubles when background work is added).
+
+use crate::amt::callback::Callback;
+use crate::amt::chare::Chare;
+use crate::amt::engine::Ctx;
+use crate::amt::msg::{Ep, Msg, Payload};
+use crate::impl_chare_any;
+use crate::pfs::backend::{IoResult, ReadRequest};
+use crate::pfs::layout::FileId;
+use crate::pfs::pattern;
+
+/// Start: open the file (own MDS transaction), then read.
+pub const EP_N_GO: Ep = 1;
+/// MDS open done.
+pub const EP_N_OPENED: Ep = 2;
+/// Read completion.
+pub const EP_N_DATA: Ep = 3;
+
+/// One naive client.
+pub struct NaiveClient {
+    pub file: FileId,
+    pub offset: u64,
+    pub len: u64,
+    /// Model a blocking read: the PE is held for the read's duration.
+    pub block_pe: bool,
+    /// Verify the delivered bytes against the file pattern.
+    pub verify: bool,
+    pub done: Callback,
+    io_issued_at: u64,
+}
+
+impl NaiveClient {
+    pub fn new(file: FileId, offset: u64, len: u64, done: Callback) -> NaiveClient {
+        NaiveClient { file, offset, len, block_pe: false, verify: false, done, io_issued_at: 0 }
+    }
+}
+
+impl Chare for NaiveClient {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_N_GO => {
+                // Every client performs its own open — with thousands of
+                // over-decomposed clients the MDS serialization alone is
+                // measurable (part of the Fig. 1 collapse).
+                let me = ctx.me();
+                ctx.open_file(Callback::to_chare(me, EP_N_OPENED));
+            }
+            EP_N_OPENED => {
+                let me = ctx.me();
+                self.io_issued_at = ctx.now();
+                ctx.submit_read(
+                    ReadRequest { file: self.file, offset: self.offset, len: self.len, user: 0 },
+                    Callback::to_chare(me, EP_N_DATA),
+                );
+            }
+            EP_N_DATA => {
+                let r: IoResult = msg.take();
+                debug_assert_eq!(r.len, self.len);
+                if self.verify {
+                    let bytes = r.chunk.bytes.as_ref().expect("materialized run");
+                    assert_eq!(pattern::verify(self.file, r.offset, bytes), None);
+                }
+                if self.block_pe {
+                    // A synchronous read would have pinned the PE from
+                    // issue to completion; charge that hold so queued
+                    // tasks (e.g. background work) are delayed behind it.
+                    let held = ctx.now().saturating_sub(self.io_issued_at);
+                    ctx.charge("naive.pe_blocked", held);
+                }
+                ctx.fire(self.done.clone(), Payload::new(self.len));
+            }
+            other => panic!("NaiveClient: unknown ep {other}"),
+        }
+    }
+    impl_chare_any!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amt::chare::ChareRef;
+    use crate::amt::engine::{Engine, EngineConfig};
+    use crate::amt::topology::Placement;
+    use crate::pfs::PfsConfig;
+
+    #[test]
+    fn naive_clients_read_everything() {
+        let mut eng = Engine::new(EngineConfig::sim(2, 4)).with_sim_pfs(PfsConfig {
+            materialize: true,
+            noise_sigma: 0.0,
+            ..PfsConfig::default()
+        });
+        let size: u64 = 8 << 20;
+        let file = eng.core.sim_pfs_mut().create_file(size);
+        let n = 16u32;
+        let per = size / n as u64;
+        let fut = eng.future(n);
+        let cid = eng.create_array(n, &Placement::RoundRobinPes, |i| {
+            let mut c = NaiveClient::new(file, i as u64 * per, per, Callback::Future(fut));
+            c.verify = true;
+            c
+        });
+        for i in 0..n {
+            eng.inject_signal(ChareRef::new(cid, i), EP_N_GO);
+        }
+        let end = eng.run();
+        assert!(eng.future_done(fut));
+        assert!(end > 0);
+        assert_eq!(eng.core.metrics.counter("pfs.bytes_read"), size);
+    }
+
+    #[test]
+    fn blocking_discipline_charges_pe() {
+        let mut eng = Engine::new(EngineConfig::sim(1, 1)).with_sim_pfs(PfsConfig {
+            noise_sigma: 0.0,
+            ..PfsConfig::default()
+        });
+        let file = eng.core.sim_pfs_mut().create_file(4 << 20);
+        let fut = eng.future(1);
+        let cid = eng.create_array(1, &Placement::RoundRobinPes, |_| {
+            let mut c = NaiveClient::new(file, 0, 4 << 20, Callback::Future(fut));
+            c.block_pe = true;
+            c
+        });
+        eng.inject_signal(ChareRef::new(cid, 0), EP_N_GO);
+        eng.run();
+        let blocked = eng.core.metrics.duration("naive.pe_blocked");
+        assert!(blocked > 0, "PE hold time should be charged");
+        // The PE was busy at least as long as the read took.
+        assert!(eng.pe_state(crate::amt::topology::Pe(0)).busy_ns >= blocked);
+    }
+}

@@ -1,0 +1,130 @@
+//! The user-facing CkIO API (paper §III-D).
+//!
+//! All calls are split-phase: they return immediately and deliver their
+//! result through a [`Callback`]. Mapping to the paper:
+//!
+//! | paper                        | here                          |
+//! |------------------------------|-------------------------------|
+//! | `Ck::IO::open`               | [`CkIo::open`]                |
+//! | `Ck::IO::startReadSession`   | [`CkIo::start_read_session`]  |
+//! | `Ck::IO::read`               | [`CkIo::read`]                |
+//! | `Ck::IO::closeReadSession`   | [`CkIo::close_read_session`]  |
+//! | `Ck::IO::close`              | [`CkIo::close`]               |
+//!
+//! Client-side calls take the chare's `Ctx`; the driver-side `*_driver`
+//! variants inject from outside the chare world (experiment setup).
+
+use crate::amt::callback::Callback;
+use crate::amt::chare::{ChareRef, CollectionId};
+use crate::amt::engine::{Ctx, Engine};
+use crate::amt::topology::Pe;
+use crate::pfs::layout::FileId;
+
+use super::assembler::ReadAssembler;
+use super::director::{
+    CloseFileMsg, CloseSessionMsg, Director, OpenMsg, StartSessionMsg, EP_DIR_CLOSE_FILE,
+    EP_DIR_CLOSE_SESSION, EP_DIR_OPEN, EP_DIR_START_SESSION,
+};
+use super::manager::{Manager, ReadMsg, EP_M_READ};
+use super::options::Options;
+use super::session::{Session, SessionId};
+
+/// Handle bundle for the CkIO service instance; cheap to copy into every
+/// client chare.
+#[derive(Copy, Clone, Debug)]
+pub struct CkIo {
+    pub director: ChareRef,
+    pub managers: CollectionId,
+    pub assemblers: CollectionId,
+}
+
+impl CkIo {
+    /// Install the CkIO service into an engine: the ReadAssembler group,
+    /// the Manager group, and the Director singleton (on PE 0).
+    pub fn boot(engine: &mut Engine) -> CkIo {
+        let assemblers = engine.create_group(|_| ReadAssembler::default());
+        // The director's ChareRef isn't known until created; managers are
+        // patched right after (pre-run, so no message can observe it).
+        let placeholder = ChareRef::new(assemblers, 0);
+        let managers = engine.create_group(|pe| Manager::new(placeholder, assemblers, pe.0));
+        let npes = engine.core.topo.npes();
+        let director = engine.create_singleton(Pe(0), Director::new(managers, assemblers, npes));
+        for pe in 0..npes {
+            engine.chare_mut::<Manager>(ChareRef::new(managers, pe)).director = director;
+        }
+        CkIo { director, managers, assemblers }
+    }
+
+    // ------------------------------------------------------------------
+    // client-side (inside chare handlers)
+    // ------------------------------------------------------------------
+
+    /// Open `file`; `opened` receives a [`super::session::FileHandle`].
+    pub fn open(&self, ctx: &mut Ctx<'_>, file: FileId, size: u64, opts: Options, opened: Callback) {
+        ctx.send(self.director, EP_DIR_OPEN, OpenMsg { file, size, opts, opened });
+    }
+
+    /// Start a read session over `[offset, offset+bytes)` of `file`;
+    /// `ready` receives a [`Session`]. Buffer chares begin their greedy
+    /// reads immediately — computation continues meanwhile.
+    pub fn start_read_session(
+        &self,
+        ctx: &mut Ctx<'_>,
+        file: FileId,
+        offset: u64,
+        bytes: u64,
+        ready: Callback,
+    ) {
+        ctx.send(self.director, EP_DIR_START_SESSION, StartSessionMsg { file, offset, bytes, ready });
+    }
+
+    /// Read `[offset, offset+len)` within a session; `after` receives a
+    /// [`super::session::ReadResult`]. Never blocks: the continuation is
+    /// enqueued when the data is ready. The call goes through the
+    /// *local* manager (same-PE group access).
+    pub fn read(&self, ctx: &mut Ctx<'_>, session: &Session, offset: u64, len: u64, after: Callback) {
+        let pe = ctx.pe();
+        ctx.send_group(self.managers, pe, EP_M_READ, ReadMsg {
+            session: session.id,
+            offset,
+            len,
+            after,
+        });
+    }
+
+    /// Tear down a session (buffer memory, manager tables).
+    pub fn close_read_session(&self, ctx: &mut Ctx<'_>, session: SessionId, after: Callback) {
+        ctx.send(self.director, EP_DIR_CLOSE_SESSION, CloseSessionMsg { session, after });
+    }
+
+    /// Close a file on all PEs.
+    pub fn close(&self, ctx: &mut Ctx<'_>, file: FileId, after: Callback) {
+        ctx.send(self.director, EP_DIR_CLOSE_FILE, CloseFileMsg { file, after });
+    }
+
+    // ------------------------------------------------------------------
+    // driver-side (experiment setup, outside any chare)
+    // ------------------------------------------------------------------
+
+    /// Driver-side open.
+    pub fn open_driver(&self, engine: &mut Engine, file: FileId, size: u64, opts: Options, opened: Callback) {
+        engine.inject(self.director, EP_DIR_OPEN, OpenMsg { file, size, opts, opened });
+    }
+
+    /// Driver-side session start.
+    pub fn start_session_driver(
+        &self,
+        engine: &mut Engine,
+        file: FileId,
+        offset: u64,
+        bytes: u64,
+        ready: Callback,
+    ) {
+        engine.inject(self.director, EP_DIR_START_SESSION, StartSessionMsg { file, offset, bytes, ready });
+    }
+
+    /// Driver-side session close.
+    pub fn close_session_driver(&self, engine: &mut Engine, session: SessionId, after: Callback) {
+        engine.inject(self.director, EP_DIR_CLOSE_SESSION, CloseSessionMsg { session, after });
+    }
+}

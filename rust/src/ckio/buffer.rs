@@ -1,0 +1,365 @@
+//! Buffer chares: the designated file-reading agents (paper §III-C.4).
+//!
+//! Each buffer chare owns a disjoint span of the session and reads it
+//! *greedily* as soon as the session starts — before any client asks —
+//! via split-phase reads (helper pthreads in the paper; the engine's I/O
+//! backends here). Client fetches that arrive before the data is resident
+//! are queued and served on I/O completion; fetches for resident data are
+//! answered immediately with a zero-copy send to the requesting PE's
+//! ReadAssembler.
+//!
+//! Splintered I/O (paper §VI.C) is supported: with
+//! `Options::splinter_bytes` set, the span is read in sub-chunks and a
+//! fetch is served as soon as the splinters covering it have arrived.
+
+use crate::amt::callback::Callback;
+use crate::amt::chare::{Chare, ChareRef, CollectionId};
+use crate::amt::engine::Ctx;
+use crate::amt::msg::{Ep, Msg};
+use crate::amt::time::MICROS;
+use crate::amt::topology::Pe;
+use crate::impl_chare_any;
+use crate::metrics::keys;
+use crate::net::Transfer;
+use crate::pfs::backend::{IoResult, ReadRequest};
+use crate::pfs::layout::FileId;
+use crate::util::bytes::{ceil_div, Chunk};
+
+use super::session::SessionId;
+
+/// Kick a freshly created buffer chare: issue its greedy reads.
+pub const EP_BUF_INIT: Ep = 1;
+/// Split-phase read completion (engine callback).
+pub const EP_BUF_DATA: Ep = 2;
+/// A ReadAssembler requests a sub-extent.
+pub const EP_BUF_FETCH: Ep = 3;
+/// Session teardown: release memory, ack the director.
+pub const EP_BUF_DROP: Ep = 4;
+
+/// Fetch request from an assembler.
+#[derive(Debug)]
+pub struct FetchMsg {
+    pub tag: u64,
+    /// File-coordinate extent (already clipped to this buffer's span).
+    pub offset: u64,
+    pub len: u64,
+    /// PE whose assembler should receive the piece.
+    pub reply_pe: Pe,
+}
+
+/// Piece sent to an assembler (zero-copy payload).
+#[derive(Debug)]
+pub struct PieceMsg {
+    pub tag: u64,
+    pub chunk: Chunk,
+}
+
+/// Notification to the director that this buffer initiated its reads.
+#[derive(Debug)]
+pub struct BufStartedMsg {
+    pub session: SessionId,
+}
+
+/// Ack to the director after dropping session state.
+#[derive(Debug)]
+pub struct BufDroppedMsg {
+    pub session: SessionId,
+}
+
+/// One buffer chare.
+pub struct BufferChare {
+    session: SessionId,
+    file: FileId,
+    /// Span owned by this chare, file coordinates.
+    my_offset: u64,
+    my_len: u64,
+    /// Splinter size (0 = read the whole span in one request).
+    splinter: u64,
+    /// Max splinters in flight.
+    window: u32,
+    /// Per-splinter data; index = splinter slot.
+    chunks: Vec<Option<Chunk>>,
+    next_issue: u32,
+    completed: u32,
+    pending: Vec<FetchMsg>,
+    director: ChareRef,
+    assemblers: CollectionId,
+    dropped: bool,
+}
+
+impl BufferChare {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        session: SessionId,
+        file: FileId,
+        my_offset: u64,
+        my_len: u64,
+        splinter: Option<u64>,
+        window: u32,
+        director: ChareRef,
+        assemblers: CollectionId,
+    ) -> BufferChare {
+        let splinter = splinter.unwrap_or(0).min(my_len);
+        let nslots = if splinter == 0 || my_len == 0 {
+            1
+        } else {
+            ceil_div(my_len, splinter) as usize
+        };
+        BufferChare {
+            session,
+            file,
+            my_offset,
+            my_len,
+            splinter,
+            window: window.max(1),
+            chunks: vec![None; nslots],
+            next_issue: 0,
+            completed: 0,
+            pending: Vec::new(),
+            director,
+            assemblers,
+            dropped: false,
+        }
+    }
+
+    /// The file-coordinate extent of splinter slot `i`.
+    fn slot_extent(&self, i: u32) -> (u64, u64) {
+        if self.splinter == 0 {
+            return (self.my_offset, self.my_len);
+        }
+        let lo = self.my_offset + i as u64 * self.splinter;
+        let hi = (lo + self.splinter).min(self.my_offset + self.my_len);
+        (lo, hi - lo)
+    }
+
+    /// Slots overlapping `[offset, offset+len)`.
+    fn slots_for(&self, offset: u64, len: u64) -> std::ops::RangeInclusive<u32> {
+        debug_assert!(offset >= self.my_offset && offset + len <= self.my_offset + self.my_len);
+        if self.splinter == 0 {
+            return 0..=0;
+        }
+        let lo = ((offset - self.my_offset) / self.splinter) as u32;
+        let hi = ((offset + len - 1 - self.my_offset) / self.splinter) as u32;
+        lo..=hi
+    }
+
+    fn have(&self, offset: u64, len: u64) -> bool {
+        self.slots_for(offset, len).all(|s| self.chunks[s as usize].is_some())
+    }
+
+    /// Issue the next splinter read, if any remain.
+    fn issue_next(&mut self, ctx: &mut Ctx<'_>) {
+        if self.my_len == 0 || self.next_issue as usize >= self.chunks.len() {
+            return;
+        }
+        let slot = self.next_issue;
+        self.next_issue += 1;
+        let (offset, len) = self.slot_extent(slot);
+        let me = ctx.me();
+        ctx.submit_read(
+            ReadRequest { file: self.file, offset, len, user: slot as u64 },
+            Callback::to_chare(me, EP_BUF_DATA),
+        );
+    }
+
+    /// Answer a fetch from resident data: zero-copy send to the
+    /// requesting PE's assembler.
+    fn serve(&self, ctx: &mut Ctx<'_>, f: &FetchMsg) {
+        let chunk = self.extract(f.offset, f.len);
+        let to = ChareRef::new(self.assemblers, f.reply_pe.0);
+        let wire = chunk.len;
+        ctx.metrics().count("ckio.pieces_served", 1);
+        // Zero-copy: the runtime RDMA-gets the resident buffer; the chare
+        // itself only touches descriptors.
+        ctx.advance(MICROS / 2);
+        ctx.send_sized(
+            to,
+            super::assembler::EP_A_PIECE,
+            crate::amt::msg::Payload::new(PieceMsg { tag: f.tag, chunk }),
+            wire,
+            Transfer::ZeroCopy,
+        );
+    }
+
+    /// Build the chunk for `[offset, offset+len)` from resident splinters.
+    fn extract(&self, offset: u64, len: u64) -> Chunk {
+        let slots = self.slots_for(offset, len);
+        let (lo, hi) = (*slots.start(), *slots.end());
+        if lo == hi {
+            return self.chunks[lo as usize].as_ref().unwrap().slice(offset, len);
+        }
+        // Multi-splinter extract: concatenate the relevant pieces.
+        let mut bytes: Option<Vec<u8>> = None;
+        let mut modeled_only = false;
+        for s in slots {
+            let c = self.chunks[s as usize].as_ref().unwrap();
+            let (slo, slen) = self.slot_extent(s);
+            let take_lo = offset.max(slo);
+            let take_hi = (offset + len).min(slo + slen);
+            let piece = c.slice(take_lo, take_hi - take_lo);
+            match piece.bytes {
+                Some(b) => bytes.get_or_insert_with(Vec::new).extend_from_slice(&b),
+                None => modeled_only = true,
+            }
+        }
+        if modeled_only || bytes.is_none() {
+            Chunk::modeled(offset, len)
+        } else {
+            Chunk::materialized(offset, bytes.unwrap().into())
+        }
+    }
+}
+
+impl Chare for BufferChare {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_BUF_INIT => {
+                // Greedy read: start immediately, before any client asks.
+                let n = if self.splinter == 0 { 1 } else { self.window };
+                for _ in 0..n {
+                    self.issue_next(ctx);
+                }
+                ctx.advance(MICROS);
+                ctx.send(self.director, super::director::EP_DIR_BUF_STARTED, BufStartedMsg {
+                    session: self.session,
+                });
+            }
+            EP_BUF_DATA => {
+                let r: IoResult = msg.take();
+                if self.dropped {
+                    return; // late completion after teardown
+                }
+                let slot = r.user as usize;
+                debug_assert!(self.chunks[slot].is_none(), "duplicate splinter completion");
+                self.chunks[slot] = Some(r.chunk);
+                self.completed += 1;
+                self.issue_next(ctx);
+                if self.completed as usize == self.chunks.len() {
+                    let t = ctx.now() as f64;
+                    ctx.metrics().set_max("ckio.last_io_ns", t);
+                }
+                // Serve whatever became satisfiable.
+                let mut still = Vec::new();
+                for f in std::mem::take(&mut self.pending) {
+                    if self.have(f.offset, f.len) {
+                        self.serve(ctx, &f);
+                    } else {
+                        still.push(f);
+                    }
+                }
+                self.pending = still;
+            }
+            EP_BUF_FETCH => {
+                let f: FetchMsg = msg.take();
+                debug_assert!(
+                    f.offset >= self.my_offset && f.offset + f.len <= self.my_offset + self.my_len,
+                    "fetch [{}, {}) outside buffer span [{}, {})",
+                    f.offset,
+                    f.offset + f.len,
+                    self.my_offset,
+                    self.my_offset + self.my_len
+                );
+                ctx.metrics().count("ckio.fetches", 1);
+                if self.have(f.offset, f.len) {
+                    self.serve(ctx, &f);
+                } else {
+                    self.pending.push(f);
+                }
+            }
+            EP_BUF_DROP => {
+                self.chunks.iter_mut().for_each(|c| *c = None);
+                self.pending.clear();
+                self.dropped = true;
+                ctx.advance(MICROS / 2);
+                ctx.send(self.director, super::director::EP_DIR_DROP_ACK, BufDroppedMsg {
+                    session: self.session,
+                });
+            }
+            other => panic!("BufferChare: unknown ep {other}"),
+        }
+        let _ = keys::CKIO_BYTES; // (metrics charged by the assembler side)
+    }
+
+    fn pack_size(&self) -> u64 {
+        // Buffer chares are not migrated while holding data in this
+        // implementation; descriptor-only size.
+        256
+    }
+
+    impl_chare_any!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(splinter: Option<u64>) -> BufferChare {
+        BufferChare::new(
+            SessionId(0),
+            FileId(0),
+            1000,
+            100,
+            splinter,
+            2,
+            ChareRef::new(CollectionId(0), 0),
+            CollectionId(1),
+        )
+    }
+
+    #[test]
+    fn slot_extents_whole_span() {
+        let b = mk(None);
+        assert_eq!(b.chunks.len(), 1);
+        assert_eq!(b.slot_extent(0), (1000, 100));
+        assert_eq!(b.slots_for(1000, 100), 0..=0);
+    }
+
+    #[test]
+    fn slot_extents_splintered() {
+        let b = mk(Some(30));
+        assert_eq!(b.chunks.len(), 4); // 30+30+30+10
+        assert_eq!(b.slot_extent(0), (1000, 30));
+        assert_eq!(b.slot_extent(3), (1090, 10));
+        assert_eq!(b.slots_for(1000, 30), 0..=0);
+        assert_eq!(b.slots_for(1029, 2), 0..=1);
+        assert_eq!(b.slots_for(1000, 100), 0..=3);
+    }
+
+    #[test]
+    fn have_tracks_partial_arrival() {
+        let mut b = mk(Some(30));
+        assert!(!b.have(1000, 10));
+        b.chunks[0] = Some(Chunk::modeled(1000, 30));
+        assert!(b.have(1000, 30));
+        assert!(!b.have(1020, 20)); // needs slot 1
+        b.chunks[1] = Some(Chunk::modeled(1030, 30));
+        assert!(b.have(1020, 20));
+    }
+
+    #[test]
+    fn extract_concatenates_materialized_splinters() {
+        use crate::pfs::pattern;
+        let mut b = mk(Some(30));
+        for s in 0..4u32 {
+            let (o, l) = b.slot_extent(s);
+            b.chunks[s as usize] = Some(Chunk::materialized(o, pattern::make(FileId(0), o, l)));
+        }
+        let c = b.extract(1025, 40); // spans slots 0..=2
+        assert_eq!(c.offset, 1025);
+        assert_eq!(c.len, 40);
+        let bytes = c.bytes.unwrap();
+        assert_eq!(pattern::verify(FileId(0), 1025, &bytes), None);
+    }
+
+    #[test]
+    fn extract_modeled_stays_modeled() {
+        let mut b = mk(Some(30));
+        for s in 0..4u32 {
+            let (o, l) = b.slot_extent(s);
+            b.chunks[s as usize] = Some(Chunk::modeled(o, l));
+        }
+        let c = b.extract(1025, 40);
+        assert!(c.bytes.is_none());
+        assert_eq!(c.len, 40);
+    }
+}

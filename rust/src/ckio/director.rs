@@ -1,0 +1,325 @@
+//! Director chare (paper §III-C.1).
+//!
+//! The singleton coordinator: drives file opens through the MDS, creates
+//! the per-session buffer-chare array, announces sessions to the manager
+//! group, fires the user's `opened`/`ready`/`closed` callbacks once every
+//! participant has acknowledged, and sequences session teardown. Global
+//! coordination (e.g. sequencing sessions of distinct files) would also
+//! live here.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::amt::callback::Callback;
+use crate::amt::chare::{Chare, ChareRef, CollectionId};
+use crate::amt::engine::Ctx;
+use crate::amt::msg::{Ep, Msg, Payload};
+use crate::amt::time::MICROS;
+use crate::impl_chare_any;
+use crate::pfs::layout::FileId;
+
+use super::buffer::{BufDroppedMsg, BufStartedMsg, BufferChare, EP_BUF_DROP, EP_BUF_INIT};
+use super::manager::{FileOpenedMsg, SessionAnnounceMsg, EP_M_FILE_CLOSE, EP_M_FILE_OPENED, EP_M_SESSION_ANNOUNCE, EP_M_SESSION_DROP};
+use super::options::Options;
+use super::session::{FileHandle, Session, SessionId};
+
+/// User: open a file.
+pub const EP_DIR_OPEN: Ep = 1;
+/// MDS open transaction completed.
+pub const EP_DIR_MDS_DONE: Ep = 2;
+/// Manager ack: file table updated.
+pub const EP_DIR_OPEN_ACK: Ep = 3;
+/// User: start a read session.
+pub const EP_DIR_START_SESSION: Ep = 4;
+/// Buffer chare: greedy reads initiated.
+pub const EP_DIR_BUF_STARTED: Ep = 5;
+/// Manager ack: session table updated.
+pub const EP_DIR_ANNOUNCE_ACK: Ep = 6;
+/// User: close a read session.
+pub const EP_DIR_CLOSE_SESSION: Ep = 7;
+/// Buffer chare ack: state dropped.
+pub const EP_DIR_DROP_ACK: Ep = 8;
+/// Manager ack: session entry dropped.
+pub const EP_DIR_DROP_ACK_MGR: Ep = 9;
+/// User: close a file.
+pub const EP_DIR_CLOSE_FILE: Ep = 10;
+/// Manager ack: file entry dropped.
+pub const EP_DIR_CLOSE_ACK: Ep = 11;
+
+#[derive(Debug)]
+pub struct OpenMsg {
+    pub file: FileId,
+    pub size: u64,
+    pub opts: Options,
+    pub opened: Callback,
+}
+
+#[derive(Debug)]
+pub struct StartSessionMsg {
+    pub file: FileId,
+    pub offset: u64,
+    pub bytes: u64,
+    pub ready: Callback,
+}
+
+#[derive(Debug)]
+pub struct CloseSessionMsg {
+    pub session: SessionId,
+    pub after: Callback,
+}
+
+#[derive(Debug)]
+pub struct CloseFileMsg {
+    pub file: FileId,
+    pub after: Callback,
+}
+
+struct OpenState {
+    size: u64,
+    opts: Options,
+    opened: Callback,
+    acks: u32,
+}
+
+struct SessionState {
+    session: Session,
+    ready: Callback,
+    buf_started: u32,
+    mgr_acks: u32,
+    fired: bool,
+}
+
+struct CloseState {
+    after: Callback,
+    acks: u32,
+    need: u32,
+}
+
+/// The Director singleton.
+pub struct Director {
+    managers: CollectionId,
+    assemblers: CollectionId,
+    npes: u32,
+    /// Opens awaiting MDS completion, FIFO (the MDS completes in order).
+    mds_queue: VecDeque<FileId>,
+    opens: HashMap<FileId, OpenState>,
+    files: HashMap<FileId, (u64, Options)>,
+    /// startReadSession calls that raced ahead of their file's open.
+    early_sessions: HashMap<FileId, Vec<StartSessionMsg>>,
+    sessions: HashMap<SessionId, SessionState>,
+    closes: HashMap<SessionId, CloseState>,
+    file_closes: HashMap<FileId, CloseState>,
+    next_session: u32,
+}
+
+impl Director {
+    pub fn new(managers: CollectionId, assemblers: CollectionId, npes: u32) -> Director {
+        Director {
+            managers,
+            assemblers,
+            npes,
+            mds_queue: VecDeque::new(),
+            opens: HashMap::new(),
+            files: HashMap::new(),
+            early_sessions: HashMap::new(),
+            sessions: HashMap::new(),
+            closes: HashMap::new(),
+            file_closes: HashMap::new(),
+            next_session: 0,
+        }
+    }
+
+    fn maybe_ready(&mut self, ctx: &mut Ctx<'_>, sid: SessionId) {
+        let st = self.sessions.get_mut(&sid).expect("unknown session");
+        if !st.fired && st.buf_started == st.session.num_buffers && st.mgr_acks == self.npes {
+            st.fired = true;
+            ctx.fire(st.ready.clone(), Payload::new(st.session));
+        }
+    }
+}
+
+impl Chare for Director {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_DIR_OPEN => {
+                let m: OpenMsg = msg.take();
+                self.opens.insert(m.file, OpenState {
+                    size: m.size,
+                    opts: m.opts,
+                    opened: m.opened,
+                    acks: 0,
+                });
+                self.mds_queue.push_back(m.file);
+                let me = ctx.me();
+                ctx.advance(MICROS);
+                ctx.open_file(Callback::to_chare(me, EP_DIR_MDS_DONE));
+            }
+            EP_DIR_MDS_DONE => {
+                // MDS transactions complete FIFO; match to the oldest open.
+                let file = self.mds_queue.pop_front().expect("MDS done without open");
+                let opts = self.opens[&file].opts.clone();
+                // Tell every manager about the file.
+                for pe in 0..self.npes {
+                    ctx.send_group(self.managers, crate::amt::topology::Pe(pe), EP_M_FILE_OPENED,
+                        FileOpenedMsg { file, opts: opts.clone() });
+                }
+                ctx.advance(MICROS);
+            }
+            EP_DIR_OPEN_ACK => {
+                let file: FileId = msg.take();
+                let st = self.opens.get_mut(&file).expect("ack for unknown open");
+                st.acks += 1;
+                if st.acks == self.npes {
+                    let st = self.opens.remove(&file).unwrap();
+                    self.files.insert(file, (st.size, st.opts.clone()));
+                    ctx.fire(st.opened, Payload::new(FileHandle {
+                        file,
+                        size: st.size,
+                        opts: st.opts,
+                    }));
+                    // Replay session starts that raced ahead of the open.
+                    let me = ctx.me();
+                    for m in self.early_sessions.remove(&file).unwrap_or_default() {
+                        ctx.send(me, EP_DIR_START_SESSION, m);
+                    }
+                }
+            }
+            EP_DIR_START_SESSION => {
+                let m: StartSessionMsg = msg.take();
+                // Robustness: a session start racing ahead of the file's
+                // open completion is held and replayed (split-phase APIs
+                // make this easy to hit from driver code).
+                let Some(entry) = self.files.get(&m.file) else {
+                    assert!(
+                        self.opens.contains_key(&m.file),
+                        "startReadSession for a file that was never opened"
+                    );
+                    self.early_sessions.entry(m.file).or_default().push(m);
+                    return;
+                };
+                let (size, opts) = entry.clone();
+                assert!(m.offset + m.bytes <= size, "session beyond EOF");
+                let sid = SessionId(self.next_session);
+                self.next_session += 1;
+                let topo = ctx.topo();
+                let nreaders = opts.resolve_readers(m.bytes, &topo);
+                // Create the per-session buffer chare array (dynamic
+                // creation, as CkIO does on session start).
+                let me = ctx.me();
+                let assemblers = self.assemblers;
+                let placement = opts.placement.to_placement(nreaders);
+                // Session math first (needs the collection id).
+                let splinter = opts.splinter_bytes;
+                let window = opts.read_window;
+                let file = m.file;
+                let (offset, bytes) = (m.offset, m.bytes);
+                // Two-phase: compute spans via a prototype Session once we
+                // know the collection id from create_array_now.
+                let mut spans: Vec<(u64, u64)> = Vec::with_capacity(nreaders as usize);
+                {
+                    // span math identical to Session::buffer_span
+                    let span = crate::util::bytes::ceil_div(bytes, nreaders as u64);
+                    for b in 0..nreaders as u64 {
+                        let lo = (offset + b * span).min(offset + bytes);
+                        let hi = (lo + span).min(offset + bytes);
+                        spans.push((lo, hi - lo));
+                    }
+                }
+                let buffers = ctx.create_array_now(nreaders, &placement, |i| {
+                    let (o, l) = spans[i as usize];
+                    BufferChare::new(sid, file, o, l, splinter, window, me, assemblers)
+                });
+                let session = Session::new(sid, file, offset, bytes, buffers, nreaders);
+                self.sessions.insert(sid, SessionState {
+                    session,
+                    ready: m.ready,
+                    buf_started: 0,
+                    mgr_acks: 0,
+                    fired: false,
+                });
+                // Kick the greedy reads and announce to managers.
+                for b in 0..nreaders {
+                    ctx.signal(ChareRef::new(buffers, b), EP_BUF_INIT);
+                }
+                for pe in 0..self.npes {
+                    ctx.send_group(self.managers, crate::amt::topology::Pe(pe), EP_M_SESSION_ANNOUNCE,
+                        SessionAnnounceMsg { session });
+                }
+                ctx.advance(2 * MICROS);
+                ctx.metrics().count("ckio.sessions", 1);
+            }
+            EP_DIR_BUF_STARTED => {
+                let m: BufStartedMsg = msg.take();
+                if let Some(st) = self.sessions.get_mut(&m.session) {
+                    st.buf_started += 1;
+                }
+                self.maybe_ready(ctx, m.session);
+            }
+            EP_DIR_ANNOUNCE_ACK => {
+                let sid: SessionId = msg.take();
+                if let Some(st) = self.sessions.get_mut(&sid) {
+                    st.mgr_acks += 1;
+                }
+                self.maybe_ready(ctx, sid);
+            }
+            EP_DIR_CLOSE_SESSION => {
+                let m: CloseSessionMsg = msg.take();
+                let st = self.sessions.get(&m.session).expect("closing unknown session");
+                let nbuf = st.session.num_buffers;
+                let buffers = st.session.buffers;
+                for b in 0..nbuf {
+                    ctx.signal(ChareRef::new(buffers, b), EP_BUF_DROP);
+                }
+                for pe in 0..self.npes {
+                    ctx.send_group(self.managers, crate::amt::topology::Pe(pe), EP_M_SESSION_DROP, m.session);
+                }
+                self.closes.insert(m.session, CloseState {
+                    after: m.after,
+                    acks: 0,
+                    need: nbuf + self.npes,
+                });
+                ctx.advance(MICROS);
+            }
+            EP_DIR_DROP_ACK => {
+                let m: BufDroppedMsg = msg.take();
+                self.ack_close(ctx, m.session);
+            }
+            EP_DIR_DROP_ACK_MGR => {
+                let sid: SessionId = msg.take();
+                self.ack_close(ctx, sid);
+            }
+            EP_DIR_CLOSE_FILE => {
+                let m: CloseFileMsg = msg.take();
+                assert!(self.files.remove(&m.file).is_some(), "closing unopened file");
+                for pe in 0..self.npes {
+                    ctx.send_group(self.managers, crate::amt::topology::Pe(pe), EP_M_FILE_CLOSE, m.file);
+                }
+                self.file_closes.insert(m.file, CloseState { after: m.after, acks: 0, need: self.npes });
+                ctx.advance(MICROS);
+            }
+            EP_DIR_CLOSE_ACK => {
+                let file: FileId = msg.take();
+                let st = self.file_closes.get_mut(&file).expect("ack for unknown close");
+                st.acks += 1;
+                if st.acks == st.need {
+                    let st = self.file_closes.remove(&file).unwrap();
+                    ctx.fire(st.after, Payload::empty());
+                }
+            }
+            other => panic!("Director: unknown ep {other}"),
+        }
+    }
+
+    impl_chare_any!();
+}
+
+impl Director {
+    fn ack_close(&mut self, ctx: &mut Ctx<'_>, sid: SessionId) {
+        let st = self.closes.get_mut(&sid).expect("drop ack for unknown close");
+        st.acks += 1;
+        if st.acks == st.need {
+            let st = self.closes.remove(&sid).unwrap();
+            self.sessions.remove(&sid);
+            ctx.fire(st.after, Payload::empty());
+        }
+    }
+}

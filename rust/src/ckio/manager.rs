@@ -1,0 +1,173 @@
+//! Manager group (paper §III-C.2).
+//!
+//! One manager per PE — the local API entry point (clients reach their
+//! PE's manager without crossing the wire, like a Charm++ group pointer
+//! access). Managers keep the session table, assign the zero-copy tags
+//! used for buffer→assembler transfers, and forward each read to the
+//! local ReadAssembler. Reads that race ahead of the session announcement
+//! are held until it arrives.
+
+use std::collections::HashMap;
+
+use crate::amt::callback::Callback;
+use crate::amt::chare::{Chare, ChareRef, CollectionId};
+use crate::amt::engine::Ctx;
+use crate::amt::msg::{Ep, Msg};
+use crate::impl_chare_any;
+use crate::pfs::layout::FileId;
+
+use super::assembler::{AssembleReq, EP_A_REQ};
+use super::options::Options;
+use super::session::{Session, SessionId};
+
+/// Client read (local API call).
+pub const EP_M_READ: Ep = 1;
+/// Director: a file is now open everywhere.
+pub const EP_M_FILE_OPENED: Ep = 2;
+/// Director: a session has started.
+pub const EP_M_SESSION_ANNOUNCE: Ep = 3;
+/// Director: tear down a session.
+pub const EP_M_SESSION_DROP: Ep = 4;
+/// Director: close a file.
+pub const EP_M_FILE_CLOSE: Ep = 5;
+
+/// A client read request.
+#[derive(Debug)]
+pub struct ReadMsg {
+    pub session: SessionId,
+    pub offset: u64,
+    pub len: u64,
+    pub after: Callback,
+}
+
+#[derive(Debug)]
+pub struct FileOpenedMsg {
+    pub file: FileId,
+    pub opts: Options,
+}
+
+#[derive(Debug)]
+pub struct SessionAnnounceMsg {
+    pub session: Session,
+}
+
+/// One manager (group element).
+pub struct Manager {
+    pub director: ChareRef,
+    pub assemblers: CollectionId,
+    files: HashMap<FileId, Options>,
+    sessions: HashMap<SessionId, Session>,
+    /// Reads received before the session announcement.
+    early: HashMap<SessionId, Vec<ReadMsg>>,
+    next_tag: u64,
+    my_pe_salt: u64,
+}
+
+impl Manager {
+    pub fn new(director: ChareRef, assemblers: CollectionId, pe: u32) -> Manager {
+        Manager {
+            director,
+            assemblers,
+            files: HashMap::new(),
+            sessions: HashMap::new(),
+            early: HashMap::new(),
+            next_tag: 0,
+            my_pe_salt: (pe as u64) << 40,
+        }
+    }
+
+    /// Assign a cluster-unique zero-copy tag (PE-salted counter).
+    fn make_tag(&mut self) -> u64 {
+        self.next_tag += 1;
+        self.my_pe_salt | self.next_tag
+    }
+
+    fn forward(&mut self, ctx: &mut Ctx<'_>, session: Session, r: ReadMsg) {
+        let tag = self.make_tag();
+        let pe = ctx.pe();
+        ctx.advance(300);
+        ctx.send(
+            ChareRef::new(self.assemblers, pe.0),
+            EP_A_REQ,
+            AssembleReq { tag, session, offset: r.offset, len: r.len, after: r.after },
+        );
+    }
+
+    /// Test/driver inspection.
+    pub fn knows_session(&self, id: SessionId) -> bool {
+        self.sessions.contains_key(&id)
+    }
+
+    pub fn knows_file(&self, id: FileId) -> bool {
+        self.files.contains_key(&id)
+    }
+}
+
+impl Chare for Manager {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_M_READ => {
+                let r: ReadMsg = msg.take();
+                match self.sessions.get(&r.session) {
+                    Some(s) => {
+                        let s = *s;
+                        self.forward(ctx, s, r);
+                    }
+                    // Read raced ahead of the announcement: hold it.
+                    None => self.early.entry(r.session).or_default().push(r),
+                }
+            }
+            EP_M_FILE_OPENED => {
+                let m: FileOpenedMsg = msg.take();
+                self.files.insert(m.file, m.opts);
+                ctx.advance(200);
+                ctx.send(self.director, super::director::EP_DIR_OPEN_ACK, m.file);
+            }
+            EP_M_SESSION_ANNOUNCE => {
+                let m: SessionAnnounceMsg = msg.take();
+                let s = m.session;
+                self.sessions.insert(s.id, s);
+                // Flush reads that arrived early.
+                for r in self.early.remove(&s.id).unwrap_or_default() {
+                    self.forward(ctx, s, r);
+                }
+                ctx.advance(200);
+                ctx.send(self.director, super::director::EP_DIR_ANNOUNCE_ACK, s.id);
+            }
+            EP_M_SESSION_DROP => {
+                let sid: SessionId = msg.take();
+                self.sessions.remove(&sid);
+                self.early.remove(&sid);
+                ctx.advance(200);
+                ctx.send(self.director, super::director::EP_DIR_DROP_ACK_MGR, sid);
+            }
+            EP_M_FILE_CLOSE => {
+                let file: FileId = msg.take();
+                self.files.remove(&file);
+                ctx.advance(200);
+                ctx.send(self.director, super::director::EP_DIR_CLOSE_ACK, file);
+            }
+            other => panic!("Manager: unknown ep {other}"),
+        }
+    }
+
+    impl_chare_any!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_are_pe_unique() {
+        let d = ChareRef::new(CollectionId(0), 0);
+        let mut m0 = Manager::new(d, CollectionId(1), 0);
+        let mut m1 = Manager::new(d, CollectionId(1), 1);
+        let t0a = m0.make_tag();
+        let t0b = m0.make_tag();
+        let t1a = m1.make_tag();
+        assert_ne!(t0a, t0b);
+        assert_ne!(t0a, t1a);
+        assert_ne!(t0b, t1a);
+    }
+}

@@ -1,0 +1,39 @@
+//! CkIO: the paper's parallel-input library.
+//!
+//! A two-phase, split-phase input scheme for over-decomposed task-based
+//! systems (paper §III). The decomposition of *file readers* is separated
+//! from the decomposition of *consumers*: a per-session array of **buffer
+//! chares** greedily prefetches the session's byte range from the file
+//! system, and client reads are served out of those buffers over the
+//! (much faster) interconnect.
+//!
+//! Components, mirroring the paper's architecture (§III-C, Fig. 5):
+//!
+//! * [`director`] — singleton coordinating opens, session lifecycle and
+//!   global sequencing,
+//! * [`manager`] — a chare group (one per PE): the local API entry point;
+//!   keeps the session table and assigns zero-copy tags,
+//! * [`assembler`] — the ReadAssembler group: gathers the pieces of each
+//!   client read from the responsible buffer chares and triggers the
+//!   client's continuation,
+//! * [`buffer`] — the buffer-chare array: interacts with the file system,
+//!   one disjoint span each, reading asynchronously (helper threads in
+//!   real mode; split-phase model reads in virtual mode),
+//! * [`api`] — the user-facing `open / startReadSession / read /
+//!   closeReadSession / close` calls (asynchronous-callback-centric,
+//!   §III-D),
+//! * [`options`] — reader count/placement/splintering knobs (§III-C.4,
+//!   §VI.A–C),
+//! * [`session`] — session and read-descriptor types.
+
+pub mod api;
+pub mod assembler;
+pub mod buffer;
+pub mod director;
+pub mod manager;
+pub mod options;
+pub mod session;
+
+pub use api::CkIo;
+pub use options::{Options, ReaderPlacement};
+pub use session::{FileHandle, ReadResult, Session, SessionId};

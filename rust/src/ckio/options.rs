@@ -1,0 +1,133 @@
+//! CkIO configuration (`Ck::IO::Options` in the paper).
+
+use crate::amt::topology::{Placement, Topology};
+use crate::util::bytes::ceil_div;
+
+/// Where buffer chares are placed (paper §VI.B).
+#[derive(Clone, Debug, Default)]
+pub enum ReaderPlacement {
+    /// Spread across nodes first (maximize NIC / FS-path parallelism) —
+    /// the default, and what the paper's experiments use.
+    #[default]
+    SpreadNodes,
+    /// Pack onto consecutive PEs.
+    PackPes,
+    /// Explicit PE list (length must equal the reader count).
+    Explicit(Vec<u32>),
+}
+
+impl ReaderPlacement {
+    pub fn to_placement(&self, n: u32) -> Placement {
+        match self {
+            ReaderPlacement::SpreadNodes => Placement::RoundRobinNodes,
+            ReaderPlacement::PackPes => Placement::RoundRobinPes,
+            ReaderPlacement::Explicit(pes) => {
+                assert_eq!(pes.len() as u32, n, "explicit reader placement length");
+                Placement::Explicit(pes.iter().map(|&p| crate::amt::topology::Pe(p)).collect())
+            }
+        }
+    }
+}
+
+/// Options passed to `Ck::IO::open` (paper §III-D).
+#[derive(Clone, Debug)]
+pub struct Options {
+    /// Number of buffer chares per session (`Options::numReaders`).
+    /// `None` selects automatically from file size and cluster shape
+    /// (paper §VI.A).
+    pub num_readers: Option<u32>,
+    /// Buffer chare placement policy.
+    pub placement: ReaderPlacement,
+    /// Splintered I/O (paper §VI.C): buffer chares read their span in
+    /// sub-chunks of this size, so early reads can be served before the
+    /// whole span arrives. `None` = one read per span (base design).
+    pub splinter_bytes: Option<u64>,
+    /// Splinters kept in flight per buffer chare when splintering.
+    pub read_window: u32,
+}
+
+impl Default for Options {
+    fn default() -> Self {
+        Options {
+            num_readers: None,
+            placement: ReaderPlacement::default(),
+            splinter_bytes: None,
+            read_window: 2,
+        }
+    }
+}
+
+impl Options {
+    pub fn with_readers(n: u32) -> Options {
+        Options { num_readers: Some(n), ..Default::default() }
+    }
+
+    /// Resolve the reader count for a session of `bytes` on `topo`
+    /// (§VI.A's automatic policy when `num_readers` is `None`).
+    pub fn resolve_readers(&self, bytes: u64, topo: &Topology) -> u32 {
+        let n = self.num_readers.unwrap_or_else(|| auto_readers(bytes, topo));
+        // Never more readers than bytes.
+        n.clamp(1, bytes.max(1).min(u32::MAX as u64) as u32)
+    }
+}
+
+/// Automatic reader-count policy (paper §VI.A, future work — implemented
+/// here as a tunable heuristic and evaluated in `ablation_autoreaders`):
+///
+/// * target span per reader ≈ 8 MiB (a few RPCs per stream: enough to
+///   amortize per-stream overheads while maximizing concurrent OST
+///   streams — the sweep in `ablation_autoreaders` sits there),
+/// * at least 2 readers per node (a single stream can't fill a NIC),
+/// * at most one reader per PE (past that, streams interleave at the
+///   OSTs and per-RPC overheads dominate — the Fig. 1 collapse).
+pub fn auto_readers(bytes: u64, topo: &Topology) -> u32 {
+    const TARGET_SPAN: u64 = 8 << 20;
+    let by_span = ceil_div(bytes, TARGET_SPAN);
+    let lo = (2 * topo.nodes) as u64;
+    let hi = topo.npes() as u64;
+    by_span.clamp(lo.min(hi), hi).max(1) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auto_policy_scales_with_file_and_nodes() {
+        let t16 = Topology::new(16, 32);
+        // Tiny file: floor of 2 readers/node.
+        assert_eq!(auto_readers(1 << 20, &t16), 32);
+        // Huge file: ceiling of one reader per PE.
+        assert_eq!(auto_readers(64 << 30, &t16), 512);
+        // Mid-size: span-driven (1 GiB / 8 MiB = 128 readers).
+        assert_eq!(auto_readers(1 << 30, &t16), 128);
+    }
+
+    #[test]
+    fn resolve_respects_explicit_count() {
+        let topo = Topology::new(2, 4);
+        let o = Options::with_readers(6);
+        assert_eq!(o.resolve_readers(1 << 30, &topo), 6);
+    }
+
+    #[test]
+    fn resolve_clamps_to_bytes() {
+        let topo = Topology::new(2, 4);
+        let o = Options::with_readers(64);
+        assert_eq!(o.resolve_readers(10, &topo), 10);
+    }
+
+    #[test]
+    fn placement_mapping() {
+        let p = ReaderPlacement::SpreadNodes.to_placement(8);
+        assert!(matches!(p, Placement::RoundRobinNodes));
+        let p = ReaderPlacement::Explicit(vec![0, 3]).to_placement(2);
+        assert!(matches!(p, Placement::Explicit(_)));
+    }
+
+    #[test]
+    #[should_panic]
+    fn explicit_placement_wrong_length() {
+        ReaderPlacement::Explicit(vec![0]).to_placement(2);
+    }
+}

@@ -1,0 +1,151 @@
+//! Session and read-descriptor types.
+
+use crate::amt::chare::CollectionId;
+use crate::pfs::layout::FileId;
+use crate::util::bytes::{ceil_div, Chunk};
+
+use super::options::Options;
+
+/// Identifies a read session.
+#[derive(Copy, Clone, Eq, PartialEq, Ord, PartialOrd, Hash, Debug)]
+pub struct SessionId(pub u32);
+
+/// Returned by `Ck::IO::open`'s callback.
+#[derive(Clone, Debug)]
+pub struct FileHandle {
+    pub file: FileId,
+    pub size: u64,
+    pub opts: Options,
+}
+
+/// Returned by `Ck::IO::startReadSession`'s callback; everything a client
+/// (or assembler) needs to route reads. Cheap to copy into messages.
+#[derive(Copy, Clone, Debug)]
+pub struct Session {
+    pub id: SessionId,
+    pub file: FileId,
+    /// First byte of the session within the file.
+    pub offset: u64,
+    /// Session length in bytes.
+    pub bytes: u64,
+    /// The buffer-chare array serving this session.
+    pub buffers: CollectionId,
+    pub num_buffers: u32,
+    /// Bytes per buffer chare (last one may be shorter).
+    pub span: u64,
+}
+
+impl Session {
+    pub fn new(
+        id: SessionId,
+        file: FileId,
+        offset: u64,
+        bytes: u64,
+        buffers: CollectionId,
+        num_buffers: u32,
+    ) -> Session {
+        assert!(bytes > 0 && num_buffers > 0);
+        let span = ceil_div(bytes, num_buffers as u64);
+        Session { id, file, offset, bytes, buffers, num_buffers, span }
+    }
+
+    /// End byte (exclusive) of the session.
+    pub fn end(&self) -> u64 {
+        self.offset + self.bytes
+    }
+
+    /// File-coordinate span `[offset, len)` owned by buffer `b`.
+    /// Trailing buffers of a session whose byte count is not divisible by
+    /// the buffer count may own zero bytes; their span is clamped to the
+    /// session end so spans always partition `[offset, end)` exactly.
+    pub fn buffer_span(&self, b: u32) -> (u64, u64) {
+        assert!(b < self.num_buffers);
+        let lo = (self.offset + b as u64 * self.span).min(self.end());
+        let hi = (lo + self.span).min(self.end());
+        (lo, hi - lo)
+    }
+
+    /// Which buffer owns the byte at file offset `o`.
+    pub fn buffer_of(&self, o: u64) -> u32 {
+        assert!(o >= self.offset && o < self.end(), "offset {o} outside session");
+        ((o - self.offset) / self.span) as u32
+    }
+
+    /// The (inclusive) range of buffers overlapping `[offset, offset+len)`.
+    pub fn buffers_for(&self, offset: u64, len: u64) -> std::ops::RangeInclusive<u32> {
+        assert!(len > 0);
+        assert!(
+            offset >= self.offset && offset + len <= self.end(),
+            "read [{offset}, {}) outside session [{}, {})",
+            offset + len,
+            self.offset,
+            self.end()
+        );
+        self.buffer_of(offset)..=self.buffer_of(offset + len - 1)
+    }
+}
+
+/// Delivered to the client's `after_read` callback.
+#[derive(Debug)]
+pub struct ReadResult {
+    pub session: SessionId,
+    pub offset: u64,
+    pub len: u64,
+    /// The assembled data (materialized in verified runs).
+    pub chunk: Chunk,
+    /// The zero-copy tag that carried this read (diagnostics).
+    pub tag: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sess() -> Session {
+        // 100 bytes at offset 1000, 4 buffers → span 25.
+        Session::new(SessionId(0), FileId(0), 1000, 100, CollectionId(5), 4)
+    }
+
+    #[test]
+    fn spans_partition_session() {
+        let s = sess();
+        let mut pos = 1000;
+        for b in 0..4 {
+            let (o, l) = s.buffer_span(b);
+            assert_eq!(o, pos);
+            pos = o + l;
+        }
+        assert_eq!(pos, 1100);
+    }
+
+    #[test]
+    fn uneven_last_span() {
+        let s = Session::new(SessionId(0), FileId(0), 0, 10, CollectionId(0), 4);
+        assert_eq!(s.span, 3);
+        assert_eq!(s.buffer_span(0), (0, 3));
+        assert_eq!(s.buffer_span(3), (9, 1));
+    }
+
+    #[test]
+    fn buffer_of_boundaries() {
+        let s = sess();
+        assert_eq!(s.buffer_of(1000), 0);
+        assert_eq!(s.buffer_of(1024), 0);
+        assert_eq!(s.buffer_of(1025), 1);
+        assert_eq!(s.buffer_of(1099), 3);
+    }
+
+    #[test]
+    fn buffers_for_spanning_read() {
+        let s = sess();
+        assert_eq!(s.buffers_for(1000, 25), 0..=0);
+        assert_eq!(s.buffers_for(1020, 10), 0..=1);
+        assert_eq!(s.buffers_for(1000, 100), 0..=3);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside session")]
+    fn read_outside_session_panics() {
+        sess().buffers_for(900, 10);
+    }
+}

@@ -1,0 +1,155 @@
+//! Criterion-lite: repeated sampling, summaries, aligned tables, CSV.
+//!
+//! (The offline crate set has no criterion; `cargo bench` runs our
+//! harness=false binary built on this module.)
+
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::path::Path;
+
+use crate::util::stats::Summary;
+
+/// One benchmark datapoint: a named configuration and its samples.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<f64>,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn new(name: impl Into<String>, samples: Vec<f64>) -> BenchResult {
+        let summary = Summary::of(&samples);
+        BenchResult { name: name.into(), samples, summary }
+    }
+}
+
+/// Run `f` for `reps` seeded repetitions, collecting one f64 sample each.
+pub fn sample(reps: u32, mut f: impl FnMut(u64) -> f64) -> Vec<f64> {
+    (0..reps).map(|r| f(0xBE5C + r as u64)).collect()
+}
+
+/// A printable/serializable results table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Table {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let hdr: Vec<String> = self
+            .headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| format!("{:>w$}", h, w = widths[i]))
+            .collect();
+        let _ = writeln!(out, "{}", hdr.join("  "));
+        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        for row in &self.rows {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            let _ = writeln!(out, "{}", cells.join("  "));
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Write as CSV under `dir` (created if needed), named `<slug>.csv`.
+    pub fn write_csv(&self, dir: impl AsRef<Path>, slug: &str) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        let path = dir.as_ref().join(format!("{slug}.csv"));
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "{}", self.headers.join(","))?;
+        for row in &self.rows {
+            writeln!(f, "{}", row.join(","))?;
+        }
+        Ok(path)
+    }
+}
+
+/// Format seconds with 3 significant figures.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}")
+    } else if s >= 1e-3 {
+        format!("{:.3}m", s * 1e3).replace('m', "e-3")
+    } else {
+        format!("{:.3}e-6", s * 1e6)
+    }
+}
+
+/// Format a throughput in GiB/s.
+pub fn fmt_gibs(bytes: u64, secs: f64) -> String {
+    format!("{:.2}", bytes as f64 / (1u64 << 30) as f64 / secs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("demo", &["clients", "time_s"]);
+        t.row(vec!["16".into(), "1.25".into()]);
+        t.row(vec!["4096".into(), "10.5".into()]);
+        let r = t.render();
+        assert!(r.contains("demo"));
+        assert!(r.contains("clients"));
+        assert!(r.lines().count() >= 5);
+    }
+
+    #[test]
+    fn csv_round_trips() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let dir = std::env::temp_dir().join("ckio_bench_test");
+        let p = t.write_csv(&dir, "x").unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn sampling_is_seeded() {
+        let s = sample(3, |seed| seed as f64);
+        assert_eq!(s.len(), 3);
+        assert_ne!(s[0], s[1]);
+    }
+}

@@ -1,0 +1,1013 @@
+//! Per-figure experiment drivers: one function per table/figure in the
+//! paper's evaluation (see DESIGN.md §5 for the index). Each returns a
+//! [`Table`] whose rows mirror the paper's series; `cargo bench` runs all
+//! of them and writes CSVs under `bench_out/`.
+
+use crate::amt::callback::Callback;
+use crate::amt::chare::{Chare, ChareRef, CollectionId};
+use crate::amt::engine::{Ctx, Engine, EngineConfig};
+use crate::amt::msg::{Ep, Msg, Payload};
+use crate::amt::time::{self, Time, MICROS};
+use crate::amt::topology::{Pe, Placement};
+use crate::apps::changa::driver::{run_changa_input, Scheme};
+use crate::baselines::naive::{NaiveClient, EP_N_GO};
+use crate::ckio::{CkIo, Options, ReadResult, ReaderPlacement, Session};
+use crate::harness::bench::Table;
+use crate::harness::bgwork::{BgWorker, EP_BG_START, EP_BG_STOP};
+use crate::impl_chare_any;
+use crate::metrics::keys;
+use crate::pfs::PfsConfig;
+use crate::util::stats::Summary;
+
+/// Standard paper cluster: 16 nodes × 32 PEs (Bridges2 RM).
+pub const PAPER_NODES: u32 = 16;
+pub const PAPER_PES: u32 = 32;
+
+fn gib(x: u64) -> u64 {
+    x << 30
+}
+fn mib(x: u64) -> u64 {
+    x << 20
+}
+fn gibs(bytes: u64, t: Time) -> f64 {
+    bytes as f64 / (1u64 << 30) as f64 / time::to_secs(t)
+}
+
+// =====================================================================
+// shared chares
+// =====================================================================
+
+const EP_GO: Ep = 1;
+const EP_OPENED: Ep = 2;
+const EP_READY: Ep = 3;
+const EP_DATA: Ep = 4;
+const EP_SESSION_FWD: Ep = 5;
+
+/// A CkIO client that reads one slice of a shared session; element 0
+/// opens the file and starts the session for everyone.
+pub struct SliceReader {
+    pub io: CkIo,
+    pub file: crate::pfs::FileId,
+    pub file_size: u64,
+    pub session_offset: u64,
+    pub session_bytes: u64,
+    pub my_offset: u64,
+    pub my_len: u64,
+    pub opts: Options,
+    pub n_peers: u32,
+    pub peers: CollectionId,
+    pub done: Callback,
+    session: Option<Session>,
+    received: u64,
+    issue_time: Time,
+}
+
+impl SliceReader {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        io: CkIo,
+        file: crate::pfs::FileId,
+        file_size: u64,
+        session: (u64, u64),
+        slice: (u64, u64),
+        opts: Options,
+        n_peers: u32,
+        done: Callback,
+    ) -> SliceReader {
+        SliceReader {
+            io,
+            file,
+            file_size,
+            session_offset: session.0,
+            session_bytes: session.1,
+            my_offset: slice.0,
+            my_len: slice.1,
+            opts,
+            n_peers,
+            peers: CollectionId(u32::MAX),
+            done,
+            session: None,
+            received: 0,
+            issue_time: 0,
+        }
+    }
+}
+
+impl Chare for SliceReader {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_GO => {
+                let me = ctx.me();
+                let (io, file, size, opts) = (self.io, self.file, self.file_size, self.opts.clone());
+                io.open(ctx, file, size, opts, Callback::to_chare(me, EP_OPENED));
+            }
+            EP_OPENED => {
+                let me = ctx.me();
+                let (io, file, so, sb) = (self.io, self.file, self.session_offset, self.session_bytes);
+                io.start_read_session(ctx, file, so, sb, Callback::to_chare(me, EP_READY));
+            }
+            EP_READY | EP_SESSION_FWD => {
+                let s: Session = msg.take();
+                if msg.ep == EP_READY {
+                    for j in 0..self.n_peers {
+                        if ChareRef::new(self.peers, j) != ctx.me() {
+                            ctx.send(ChareRef::new(self.peers, j), EP_SESSION_FWD, s);
+                        }
+                    }
+                }
+                self.session = Some(s);
+                self.issue_time = ctx.now();
+                if self.my_len == 0 {
+                    let done = self.done.clone();
+                    ctx.fire(done, Payload::new(0u64));
+                    return;
+                }
+                let me = ctx.me();
+                let (io, off, len) = (self.io, self.my_offset, self.my_len);
+                io.read(ctx, &s, off, len, Callback::to_chare(me, EP_DATA));
+            }
+            EP_DATA => {
+                let r: ReadResult = msg.take();
+                self.received += r.len;
+                if self.received == self.my_len {
+                    let done = self.done.clone();
+                    ctx.fire(done, Payload::new(self.received));
+                }
+            }
+            other => panic!("SliceReader: unknown ep {other}"),
+        }
+    }
+    impl_chare_any!();
+}
+
+/// Drive `nclients` CkIO clients reading a whole file; returns
+/// (completion time, engine).
+pub fn run_ckio_read(
+    nodes: u32,
+    pes: u32,
+    file_size: u64,
+    nclients: u32,
+    opts: Options,
+    seed: u64,
+) -> (Time, Engine) {
+    let mut eng =
+        Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed)).with_sim_pfs(PfsConfig::default());
+    let file = eng.core.sim_pfs_mut().create_file(file_size);
+    let io = CkIo::boot(&mut eng);
+    let fut = eng.future(nclients);
+    let per = file_size / nclients as u64;
+    let cid = eng.create_array(nclients, &Placement::RoundRobinPes, |i| {
+        let lo = i as u64 * per;
+        let hi = if i == nclients - 1 { file_size } else { lo + per };
+        SliceReader::new(
+            io,
+            file,
+            file_size,
+            (0, file_size),
+            (lo, hi - lo),
+            opts.clone(),
+            nclients,
+            Callback::Future(fut),
+        )
+    });
+    for i in 0..nclients {
+        eng.chare_mut::<SliceReader>(ChareRef::new(cid, i)).peers = cid;
+    }
+    eng.inject_signal(ChareRef::new(cid, 0), EP_GO);
+    eng.run();
+    assert!(eng.future_done(fut), "ckio read incomplete");
+    let t = eng.take_future(fut).iter().map(|(t, _)| *t).max().unwrap();
+    (t, eng)
+}
+
+/// Drive `nclients` naive clients reading a whole file; returns
+/// (completion time, engine).
+pub fn run_naive_read(
+    nodes: u32,
+    pes: u32,
+    file_size: u64,
+    nclients: u32,
+    block_pe: bool,
+    seed: u64,
+) -> (Time, Engine) {
+    let mut eng =
+        Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed)).with_sim_pfs(PfsConfig::default());
+    let file = eng.core.sim_pfs_mut().create_file(file_size);
+    let fut = eng.future(nclients);
+    let per = file_size / nclients as u64;
+    let cid = eng.create_array(nclients, &Placement::RoundRobinPes, |i| {
+        let lo = i as u64 * per;
+        let hi = if i == nclients - 1 { file_size } else { lo + per };
+        let mut c = NaiveClient::new(file, lo, hi - lo, Callback::Future(fut));
+        c.block_pe = block_pe;
+        c
+    });
+    for i in 0..nclients {
+        eng.inject_signal(ChareRef::new(cid, i), EP_N_GO);
+    }
+    eng.run();
+    assert!(eng.future_done(fut), "naive read incomplete");
+    let t = eng.take_future(fut).iter().map(|(t, _)| *t).max().unwrap();
+    (t, eng)
+}
+
+// =====================================================================
+// Fig. 1 — naive over-decomposed input throughput vs #clients
+// =====================================================================
+
+pub fn fig1_naive_clients(reps: u32) -> Table {
+    let mut t = Table::new(
+        "Fig.1: naive overdecomposed input (16 nodes x 32 PEs; GiB/s, mean/std over reps)",
+        &["file", "clients", "gibs_mean", "gibs_std", "time_s"],
+    );
+    for &size in &[gib(1), gib(4), gib(16)] {
+        for exp in [4u32, 6, 8, 9, 10, 11, 12, 13] {
+            let clients = 1u32 << exp;
+            let samples: Vec<f64> = (0..reps)
+                .map(|r| {
+                    let (tt, _) =
+                        run_naive_read(PAPER_NODES, PAPER_PES, size, clients, false, 100 + r as u64);
+                    gibs(size, tt)
+                })
+                .collect();
+            let s = Summary::of(&samples);
+            t.row(vec![
+                crate::util::human_bytes(size),
+                clients.to_string(),
+                format!("{:.2}", s.mean),
+                format!("{:.2}", s.stddev),
+                format!("{:.3}", size as f64 / (1u64 << 30) as f64 / s.mean),
+            ]);
+        }
+    }
+    t
+}
+
+// =====================================================================
+// Fig. 2 — disk read vs network transfer of the same bytes
+// =====================================================================
+
+pub fn fig2_disk_vs_net(reps: u32) -> Table {
+    struct Sender {
+        peer: Option<ChareRef>,
+        bytes: u64,
+        done: Callback,
+    }
+    impl Chare for Sender {
+        fn receive(&mut self, ctx: &mut Ctx<'_>, msg: Msg) {
+            match msg.ep {
+                EP_GO => {
+                    let peer = self.peer.unwrap();
+                    let bytes = self.bytes;
+                    ctx.send_sized(peer, EP_DATA, Payload::empty(), bytes, crate::net::Transfer::Eager);
+                }
+                EP_DATA => {
+                    let done = self.done.clone();
+                    ctx.fire(done, Payload::empty());
+                }
+                other => panic!("unknown ep {other}"),
+            }
+        }
+        impl_chare_any!();
+    }
+
+    let mut t = Table::new(
+        "Fig.2: time to read from PFS vs send same bytes over the network (2 nodes, 1 task each)",
+        &["size", "read_s", "net_s", "ratio"],
+    );
+    for exp in [6u64, 7, 8, 9, 10, 11, 12] {
+        let size = mib(1 << exp);
+        // Read time: one client reads the whole file.
+        let read_s: f64 = (0..reps)
+            .map(|r| {
+                let (tt, _) = run_naive_read(2, 1, size, 1, false, 7 + r as u64);
+                time::to_secs(tt)
+            })
+            .sum::<f64>()
+            / reps as f64;
+        // Network time: send the same bytes node 0 → node 1.
+        let mut eng = Engine::new(EngineConfig::sim(2, 1));
+        let fut = eng.future(1);
+        let b = eng.create_singleton(Pe(1), Sender { peer: None, bytes: 0, done: Callback::Future(fut) });
+        let a = eng.create_singleton(Pe(0), Sender { peer: Some(b), bytes: size, done: Callback::Ignore });
+        eng.inject_signal(a, EP_GO);
+        eng.run();
+        let net_s = time::to_secs(eng.take_future(fut)[0].0);
+        t.row(vec![
+            crate::util::human_bytes(size),
+            format!("{read_s:.4}"),
+            format!("{net_s:.4}"),
+            format!("{:.1}x", read_s / net_s),
+        ]);
+    }
+    t
+}
+
+// =====================================================================
+// Fig. 4 — naive vs CkIO as the client count scales
+// =====================================================================
+
+pub fn fig4_ckio_vs_naive(reps: u32) -> Table {
+    let size = gib(4);
+    let mut t = Table::new(
+        "Fig.4: naive vs CkIO, 4 GiB file, 16 nodes x 32 PEs (time_s mean/std)",
+        &["clients", "naive_s", "naive_std", "ckio_s", "ckio_std", "ckio_readers"],
+    );
+    let readers = crate::ckio::options::auto_readers(
+        size,
+        &crate::amt::topology::Topology::new(PAPER_NODES, PAPER_PES),
+    );
+    for exp in [4u32, 6, 8, 9, 10, 11, 12, 13] {
+        let clients = 1u32 << exp;
+        let naive: Vec<f64> = (0..reps)
+            .map(|r| {
+                time::to_secs(run_naive_read(PAPER_NODES, PAPER_PES, size, clients, false, 31 + r as u64).0)
+            })
+            .collect();
+        let ckio: Vec<f64> = (0..reps)
+            .map(|r| {
+                time::to_secs(
+                    run_ckio_read(
+                        PAPER_NODES,
+                        PAPER_PES,
+                        size,
+                        clients,
+                        Options::with_readers(readers),
+                        91 + r as u64,
+                    )
+                    .0,
+                )
+            })
+            .collect();
+        let (ns, cs) = (Summary::of(&naive), Summary::of(&ckio));
+        t.row(vec![
+            clients.to_string(),
+            format!("{:.3}", ns.mean),
+            format!("{:.3}", ns.stddev),
+            format!("{:.3}", cs.mean),
+            format!("{:.3}", cs.stddev),
+            readers.to_string(),
+        ]);
+    }
+    t
+}
+
+// =====================================================================
+// Fig. 7 — MPI-IO collective vs CkIO across node counts
+// =====================================================================
+
+pub fn fig7_mpiio_vs_ckio(reps: u32) -> Table {
+    use crate::baselines::collective::{equal_slices, CollectiveConfig, MpiRank, EP_C_GO};
+    let size = gib(1);
+    let mut t = Table::new(
+        "Fig.7: MPI-IO collective vs CkIO, 1 GiB, 32 ranks/node (time_s)",
+        &["nodes", "mpiio_s", "ckio32_s", "ckio64_s"],
+    );
+    for nodes in [1u32, 2, 4, 8] {
+        let pes = 32;
+        // MPI-IO collective (1 aggregator per node, ROMIO default).
+        let mpiio: f64 = (0..reps)
+            .map(|rep| {
+                let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(17 + rep as u64))
+                    .with_sim_pfs(PfsConfig::default());
+                let file = eng.core.sim_pfs_mut().create_file(size);
+                let nranks = nodes * pes;
+                let slices = equal_slices(0, size, nranks);
+                let aggregators: Vec<u32> = (0..nodes).map(|n| n * pes).collect();
+                let cfg = CollectiveConfig { file, range: (0, size), aggregators, nranks };
+                let fut = eng.future(nranks);
+                let slices2 = slices.clone();
+                let cid = eng.create_array(nranks, &Placement::RoundRobinPes, |r| {
+                    MpiRank::new(cfg.clone(), r, &slices2, CollectionId(u32::MAX), Callback::Future(fut))
+                });
+                for r in 0..nranks {
+                    eng.chare_mut::<MpiRank>(ChareRef::new(cid, r)).ranks = cid;
+                }
+                for r in 0..nranks {
+                    eng.inject_signal(ChareRef::new(cid, r), EP_C_GO);
+                }
+                eng.run();
+                assert!(eng.future_done(fut));
+                time::to_secs(eng.take_future(fut).iter().map(|(t, _)| *t).max().unwrap())
+            })
+            .sum::<f64>()
+            / reps as f64;
+        // CkIO with 32 and 64 buffer chares per node (1 client per PE).
+        let ckio_for = |per_node: u32, seed: u64| -> f64 {
+            (0..reps)
+                .map(|rep| {
+                    time::to_secs(
+                        run_ckio_read(
+                            nodes,
+                            pes,
+                            size,
+                            nodes * pes,
+                            Options::with_readers(per_node * nodes),
+                            seed + rep as u64,
+                        )
+                        .0,
+                    )
+                })
+                .sum::<f64>()
+                / reps as f64
+        };
+        t.row(vec![
+            nodes.to_string(),
+            format!("{mpiio:.3}"),
+            format!("{:.3}", ckio_for(32, 55)),
+            format!("{:.3}", ckio_for(64, 77)),
+        ]);
+    }
+    t
+}
+
+// =====================================================================
+// Fig. 8 — runtime with/without background work: naive vs CkIO
+// =====================================================================
+
+pub fn fig8_overlap_runtime(reps: u32) -> Table {
+    let size = gib(1);
+    let (nodes, pes) = (4u32, 2u32);
+    let npes = nodes * pes;
+    let nclients = 8u32;
+    // Fixed background work per PE: 40k iterations x 10 µs = 0.4 s.
+    let quota = 40_000u64;
+    let slice = 10 * MICROS;
+
+    // One run: returns (total_s, bg_s).
+    let run_one = |ckio_mode: bool, with_bg: bool, seed: u64| -> (f64, f64) {
+        let mut eng =
+            Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed)).with_sim_pfs(PfsConfig::default());
+        let file = eng.core.sim_pfs_mut().create_file(size);
+        let per = size / nclients as u64;
+        let read_fut = eng.future(nclients);
+        if ckio_mode {
+            let io = CkIo::boot(&mut eng);
+            let cid = eng.create_array(nclients, &Placement::RoundRobinPes, |i| {
+                SliceReader::new(
+                    io,
+                    file,
+                    size,
+                    (0, size),
+                    (i as u64 * per, per),
+                    Options::with_readers(8),
+                    nclients,
+                    Callback::Future(read_fut),
+                )
+            });
+            for i in 0..nclients {
+                eng.chare_mut::<SliceReader>(ChareRef::new(cid, i)).peers = cid;
+            }
+            eng.inject_signal(ChareRef::new(cid, 0), EP_GO);
+        } else {
+            let cid = eng.create_array(nclients, &Placement::RoundRobinPes, |i| {
+                let mut c = NaiveClient::new(file, i as u64 * per, per, Callback::Future(read_fut));
+                c.block_pe = true; // synchronous read from task code
+                c
+            });
+            for i in 0..nclients {
+                eng.inject_signal(ChareRef::new(cid, i), EP_N_GO);
+            }
+        }
+        if with_bg {
+            let bg_fut = eng.future(npes);
+            let grp = eng.create_group(|_| BgWorker::new(slice, Some(quota), Callback::Future(bg_fut)));
+            for pe in 0..npes {
+                eng.inject_signal(ChareRef::new(grp, pe), EP_BG_START);
+            }
+        }
+        let end = eng.run();
+        assert!(eng.future_done(read_fut));
+        let bg_s = time::to_secs(eng.core.metrics.duration(keys::BG_WORK));
+        (time::to_secs(end), bg_s)
+    };
+
+    let mut t = Table::new(
+        "Fig.8: total runtime +/- fixed background work (4 nodes x 2 PEs, 8 clients, 8 buffers, 1 GiB)",
+        &["scheme", "bg", "total_s", "bg_work_s", "io_only_s"],
+    );
+    for (label, ckio_mode) in [("naive", false), ("ckio", true)] {
+        for with_bg in [false, true] {
+            let mut tot = 0.0;
+            let mut bg = 0.0;
+            for rep in 0..reps {
+                let (ts, bs) = run_one(ckio_mode, with_bg, 400 + rep as u64);
+                tot += ts;
+                bg += bs;
+            }
+            let (tot, bg) = (tot / reps as f64, bg / reps as f64);
+            t.row(vec![
+                label.into(),
+                if with_bg { "yes" } else { "no" }.into(),
+                format!("{tot:.3}"),
+                format!("{bg:.3}"),
+                format!("{:.3}", tot - bg / npes as f64),
+            ]);
+        }
+    }
+    t
+}
+
+// =====================================================================
+// Fig. 9 — fraction of input time usable for background work
+// =====================================================================
+
+/// Collector: stops the bg group when all reads are done.
+struct Collector {
+    expected: u32,
+    got: u32,
+    bg_group: CollectionId,
+    npes: u32,
+    done: Callback,
+}
+pub const EP_COLLECT: Ep = 21;
+impl Chare for Collector {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, _msg: Msg) {
+        self.got += 1;
+        if self.got == self.expected {
+            for pe in 0..self.npes {
+                ctx.send_group(self.bg_group, Pe(pe), EP_BG_STOP, ());
+            }
+            let now = ctx.now();
+            let done = self.done.clone();
+            ctx.fire(done, Payload::new(now));
+        }
+    }
+    impl_chare_any!();
+}
+
+pub fn fig9_overlap_fraction(reps: u32) -> Table {
+    let size = gib(1);
+    let (nodes, pes) = (4u32, 2u32);
+    let npes = nodes * pes;
+    let mut t = Table::new(
+        "Fig.9: input time vs background-work fraction (4 nodes x 2 PEs, 8 buffers)",
+        &["clients", "clients_per_pe", "read_s", "bg_fraction"],
+    );
+    for exp in [3u32, 5, 7, 9, 10, 11, 12, 13] {
+        let clients = 1u32 << exp;
+        let mut read_s = 0.0;
+        let mut frac = 0.0;
+        for rep in 0..reps {
+            let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(900 + rep as u64))
+                .with_sim_pfs(PfsConfig::default());
+            let file = eng.core.sim_pfs_mut().create_file(size);
+            let io = CkIo::boot(&mut eng);
+            let per = size / clients as u64;
+            let bg_fut = eng.future(npes);
+            let done_fut = eng.future(1);
+            let grp = eng.create_group(|_| BgWorker::new(10 * MICROS, None, Callback::Future(bg_fut)));
+            let collector = eng.create_singleton(
+                Pe(0),
+                Collector {
+                    expected: clients,
+                    got: 0,
+                    bg_group: grp,
+                    npes,
+                    done: Callback::Future(done_fut),
+                },
+            );
+            let cid = eng.create_array(clients, &Placement::RoundRobinPes, |i| {
+                SliceReader::new(
+                    io,
+                    file,
+                    size,
+                    (0, size),
+                    (i as u64 * per, per),
+                    Options::with_readers(8),
+                    clients,
+                    Callback::to_chare(collector, EP_COLLECT),
+                )
+            });
+            for i in 0..clients {
+                eng.chare_mut::<SliceReader>(ChareRef::new(cid, i)).peers = cid;
+            }
+            eng.inject_signal(ChareRef::new(cid, 0), EP_GO);
+            for pe in 0..npes {
+                eng.inject_signal(ChareRef::new(grp, pe), EP_BG_START);
+            }
+            eng.run();
+            assert!(eng.future_done(done_fut));
+            let read_end = {
+                let mut v = eng.take_future(done_fut);
+                v.pop().unwrap().1.take::<Time>()
+            };
+            let bg = eng.core.metrics.duration(keys::BG_WORK);
+            read_s += time::to_secs(read_end);
+            // Fraction of the PE-seconds during input that ran bg work.
+            frac += time::to_secs(bg) / (npes as f64 * time::to_secs(read_end));
+        }
+        t.row(vec![
+            clients.to_string(),
+            (clients / npes).to_string(),
+            format!("{:.3}", read_s / reps as f64),
+            format!("{:.3}", frac / reps as f64),
+        ]);
+    }
+    t
+}
+
+// =====================================================================
+// Fig. 12 — migration for locality: pre vs post read times
+// =====================================================================
+
+pub fn fig12_migration(reps: u32) -> Table {
+    let mut t = Table::new(
+        "Fig.12: cross-node read pre-migration vs local read post-migration (2 nodes, 1 PE each)",
+        &["file", "pre_s", "post_s", "speedup"],
+    );
+    for exp in [6u32, 7, 8, 9, 10, 11, 12] {
+        let size = mib(1 << exp);
+        let mut pre = 0.0;
+        let mut post = 0.0;
+        for rep in 0..reps {
+            let (p1, p2) = migration_run(size, 1200 + rep as u64);
+            pre += p1;
+            post += p2;
+        }
+        t.row(vec![
+            crate::util::human_bytes(size),
+            format!("{:.4}", pre / reps as f64),
+            format!("{:.4}", post / reps as f64),
+            format!("{:.2}x", pre / post),
+        ]);
+    }
+    t
+}
+
+/// Public single-size entry for the migration experiment (used by
+/// `examples/migration_locality.rs`).
+pub fn fig12_migration_single(size: u64, seed: u64) -> (f64, f64) {
+    migration_run(size, seed)
+}
+
+/// The paper's migration experiment: clients read remote buffers' data,
+/// migrate to the data, read again. Returns (pre_s, post_s) — the max of
+/// the two clients' read times per phase.
+fn migration_run(size: u64, seed: u64) -> (f64, f64) {
+    struct MigClient {
+        io: CkIo,
+        file: crate::pfs::FileId,
+        size: u64,
+        index: u32,
+        peers: CollectionId,
+        session: Option<Session>,
+        /// (offset, len) this client wants — the *other* node's buffer.
+        want: (u64, u64),
+        /// 0 = warmup (absorbs the prefetch wait; untimed),
+        /// 1 = pre-migration timed read, 2 = post-migration timed read.
+        phase: u8,
+        read_started: Time,
+        report: Callback,
+    }
+    const EP_MIG_READ2: Ep = 30;
+    impl MigClient {
+        fn issue(&mut self, ctx: &mut Ctx<'_>) {
+            let s = *self.session.as_ref().unwrap();
+            self.read_started = ctx.now();
+            let me = ctx.me();
+            let (io, want) = (self.io, self.want);
+            io.read(ctx, &s, want.0, want.1, Callback::to_chare(me, EP_DATA));
+        }
+    }
+    impl Chare for MigClient {
+        fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+            match msg.ep {
+                EP_GO => {
+                    if self.index == 0 {
+                        let me = ctx.me();
+                        let (io, file, size) = (self.io, self.file, self.size);
+                        io.open(
+                            ctx,
+                            file,
+                            size,
+                            Options {
+                                num_readers: Some(2),
+                                placement: ReaderPlacement::Explicit(vec![0, 1]),
+                                ..Default::default()
+                            },
+                            Callback::to_chare(me, EP_OPENED),
+                        );
+                    }
+                }
+                EP_OPENED => {
+                    let me = ctx.me();
+                    let (io, file, size) = (self.io, self.file, self.size);
+                    io.start_read_session(ctx, file, 0, size, Callback::to_chare(me, EP_READY));
+                }
+                EP_READY | EP_SESSION_FWD => {
+                    let s: Session = msg.take();
+                    if msg.ep == EP_READY {
+                        ctx.send(ChareRef::new(self.peers, 1), EP_SESSION_FWD, s);
+                    }
+                    self.session = Some(s);
+                    self.issue(ctx);
+                }
+                EP_DATA => {
+                    let _r: ReadResult = msg.take();
+                    let took = ctx.now() - self.read_started;
+                    let phase = self.phase;
+                    match phase {
+                        0 => {
+                            // Warmup done: the buffers' prefetch is
+                            // resident. Time the real cross-node read.
+                            self.phase = 1;
+                            self.issue(ctx);
+                        }
+                        1 => {
+                            let report = self.report.clone();
+                            ctx.fire(report, Payload::new((self.index, 1u8, took)));
+                            self.phase = 2;
+                            // Migrate to the other PE — where our data lives.
+                            let dest = Pe(1 - self.index);
+                            ctx.migrate_me(dest);
+                            let me = ctx.me();
+                            ctx.signal(me, EP_MIG_READ2);
+                        }
+                        _ => {
+                            let report = self.report.clone();
+                            ctx.fire(report, Payload::new((self.index, 2u8, took)));
+                        }
+                    }
+                }
+                EP_MIG_READ2 => self.issue(ctx),
+                other => panic!("unknown ep {other}"),
+            }
+        }
+        impl_chare_any!();
+    }
+
+    let mut eng =
+        Engine::new(EngineConfig::sim(2, 1).with_seed(seed)).with_sim_pfs(PfsConfig::default());
+    let file = eng.core.sim_pfs_mut().create_file(size);
+    let io = CkIo::boot(&mut eng);
+    let fut = eng.future(4); // 2 clients × 2 phases
+    let half = size / 2;
+    let cid = eng.create_array(2, &Placement::Explicit(vec![Pe(0), Pe(1)]), |i| MigClient {
+        io,
+        file,
+        size,
+        index: i,
+        peers: CollectionId(u32::MAX),
+        session: None,
+        // c0 (on node 0) wants the second half — owned by b1 on node 1;
+        // c1 wants the first half — owned by b0 on node 0.
+        want: if i == 0 { (half, size - half) } else { (0, half) },
+        phase: 0,
+        read_started: 0,
+        report: Callback::Future(fut),
+    });
+    for i in 0..2 {
+        eng.chare_mut::<MigClient>(ChareRef::new(cid, i)).peers = cid;
+    }
+    eng.inject_signal(ChareRef::new(cid, 0), EP_GO);
+    eng.run();
+    assert!(eng.future_done(fut));
+    let mut pre: Time = 0;
+    let mut post: Time = 0;
+    for (_, mut p) in eng.take_future(fut) {
+        let (_, phase, took) = p.take::<(u32, u8, Time)>();
+        if phase == 1 {
+            pre = pre.max(took);
+        } else {
+            post = post.max(took);
+        }
+    }
+    (time::to_secs(pre), time::to_secs(post))
+}
+
+// =====================================================================
+// Fig. 13 — mini-ChaNGa input under the three schemes
+// =====================================================================
+
+pub fn fig13_changa(reps: u32, n_tp: u32) -> Table {
+    // 1 GiB of particle records.
+    let nbodies = gib(1) / crate::apps::changa::tipsy::RECORD_BYTES;
+    let mut t = Table::new(
+        format!(
+            "Fig.13: ChaNGa input, 1 GiB Tipsy, {n_tp} TreePieces, 32 PEs/node (time_s; speedup = best hand-opt / best ckio)"
+        ),
+        &["nodes", "unopt_s", "handopt_s", "ckio_s", "speedup"],
+    );
+    for nodes in [1u32, 2, 4, 8, 16] {
+        let mut means = Vec::new();
+        let mut bests = Vec::new();
+        for scheme in [Scheme::Unopt, Scheme::HandOpt, Scheme::CkIo] {
+            let samples: Vec<f64> = (0..reps)
+                .map(|r| {
+                    time::to_secs(
+                        run_changa_input(nodes, 32, n_tp, nbodies, scheme, 2000 + r as u64).input_time,
+                    )
+                })
+                .collect();
+            means.push(Summary::of(&samples).mean);
+            bests.push(samples.iter().cloned().fold(f64::MAX, f64::min));
+        }
+        t.row(vec![
+            nodes.to_string(),
+            format!("{:.3}", means[0]),
+            format!("{:.3}", means[1]),
+            format!("{:.3}", means[2]),
+            format!("{:.2}x", bests[1] / bests[2]),
+        ]);
+    }
+    t
+}
+
+// =====================================================================
+// §V — execution-time breakdown
+// =====================================================================
+
+pub fn sec5_breakdown(reps: u32) -> Table {
+    // Paper §V methodology: the run is I/O bound (io_s ≈ prefetch
+    // completion); *data permutation* is what CkIO adds over the naive
+    // run at the same decomposition (§V.B compares 2^9 buffers + 2^9
+    // clients against naive 2^9 clients); *over-decomposition overhead*
+    // is the per-task dispatch cost (per PE).
+    let size = gib(4);
+    let mut t = Table::new(
+        "SecV: CkIO execution-time breakdown (4 GiB, 16x32 PEs, 2^9 buffers)",
+        &["clients", "ckio_s", "naive_s", "io_s", "permute_s", "overdecomp_s", "ckio_vs_naive"],
+    );
+    for exp in [9u32, 11, 13] {
+        let clients = 1u32 << exp;
+        let mut total = 0.0;
+        let mut naive = 0.0;
+        let mut io = 0.0;
+        let mut od = 0.0;
+        for rep in 0..reps {
+            let (tt, eng) = run_ckio_read(
+                PAPER_NODES,
+                PAPER_PES,
+                size,
+                clients,
+                Options::with_readers(512),
+                3000 + rep as u64,
+            );
+            total += time::to_secs(tt);
+            io += eng.core.metrics.value("ckio.last_io_ns") / 1e9;
+            naive += time::to_secs(
+                run_naive_read(PAPER_NODES, PAPER_PES, size, clients, false, 3000 + rep as u64).0,
+            );
+            // Over-decomposition overhead: per-task dispatch cost summed
+            // across the run, averaged over PEs.
+            let tasks = eng.core.metrics.counter(keys::TASKS);
+            od += time::to_secs(tasks * eng.core.cost.dispatch_overhead)
+                / (PAPER_NODES * PAPER_PES) as f64;
+        }
+        let (total, naive, io, od) =
+            (total / reps as f64, naive / reps as f64, io / reps as f64, od / reps as f64);
+        let permute = (total - naive).max(0.0);
+        t.row(vec![
+            clients.to_string(),
+            format!("{total:.3}"),
+            format!("{naive:.3}"),
+            format!("{io:.3}"),
+            format!("{permute:.3}"),
+            format!("{od:.4}"),
+            format!("{:+.0}%", 100.0 * (total - naive) / naive),
+        ]);
+    }
+    t
+}
+
+// =====================================================================
+// §VI.C ablation — splintered I/O
+// =====================================================================
+
+pub fn ablation_splinter(reps: u32) -> Table {
+    let size = gib(1);
+    let mut t = Table::new(
+        "Ablation (SecVI.C): splintered I/O — latency of an early 4 MiB read (1 buffer, 1 GiB span)",
+        &["splinter", "first_read_s", "full_prefetch_s"],
+    );
+    for splinter in [None, Some(mib(256)), Some(mib(64)), Some(mib(16)), Some(mib(4))] {
+        let mut first = 0.0;
+        let mut full = 0.0;
+        for rep in 0..reps {
+            let mut eng = Engine::new(EngineConfig::sim(2, 2).with_seed(4000 + rep as u64))
+                .with_sim_pfs(PfsConfig::default());
+            let file = eng.core.sim_pfs_mut().create_file(size);
+            let io = CkIo::boot(&mut eng);
+            let fut = eng.future(1);
+            let opts = Options { num_readers: Some(1), splinter_bytes: splinter, ..Default::default() };
+            let cid = eng.create_array(1, &Placement::RoundRobinPes, |_| {
+                SliceReader::new(
+                    io,
+                    file,
+                    size,
+                    (0, size),
+                    (0, mib(4)),
+                    opts.clone(),
+                    1,
+                    Callback::Future(fut),
+                )
+            });
+            eng.chare_mut::<SliceReader>(ChareRef::new(cid, 0)).peers = cid;
+            eng.inject_signal(ChareRef::new(cid, 0), EP_GO);
+            let end = eng.run();
+            assert!(eng.future_done(fut));
+            first += time::to_secs(eng.take_future(fut)[0].0);
+            full += time::to_secs(end);
+        }
+        t.row(vec![
+            splinter.map_or("none".into(), crate::util::human_bytes),
+            format!("{:.4}", first / reps as f64),
+            format!("{:.4}", full / reps as f64),
+        ]);
+    }
+    t
+}
+
+// =====================================================================
+// §VI.A ablation — automatic reader-count policy vs manual sweep
+// =====================================================================
+
+pub fn ablation_autoreaders(reps: u32) -> Table {
+    let mut t = Table::new(
+        "Ablation (SecVI.A): auto reader policy vs manual sweep (16x32 PEs, 512 clients)",
+        &["file", "best_readers", "best_s", "auto_readers", "auto_s", "auto_penalty"],
+    );
+    for &size in &[mib(256), gib(1), gib(4)] {
+        let mut best = (0u32, f64::MAX);
+        for readers in [16u32, 32, 64, 128, 256, 512] {
+            let mean: f64 = (0..reps)
+                .map(|r| {
+                    time::to_secs(
+                        run_ckio_read(
+                            PAPER_NODES,
+                            PAPER_PES,
+                            size,
+                            512,
+                            Options::with_readers(readers),
+                            5000 + r as u64,
+                        )
+                        .0,
+                    )
+                })
+                .sum::<f64>()
+                / reps as f64;
+            if mean < best.1 {
+                best = (readers, mean);
+            }
+        }
+        let auto = crate::ckio::options::auto_readers(
+            size,
+            &crate::amt::topology::Topology::new(PAPER_NODES, PAPER_PES),
+        );
+        let auto_s: f64 = (0..reps)
+            .map(|r| {
+                time::to_secs(
+                    run_ckio_read(PAPER_NODES, PAPER_PES, size, 512, Options::with_readers(auto), 6000 + r as u64)
+                        .0,
+                )
+            })
+            .sum::<f64>()
+            / reps as f64;
+        t.row(vec![
+            crate::util::human_bytes(size),
+            best.0.to_string(),
+            format!("{:.3}", best.1),
+            auto.to_string(),
+            format!("{auto_s:.3}"),
+            format!("{:.2}x", auto_s / best.1),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ckio_and_naive_drivers_read_everything() {
+        let (tn, eng_n) = run_naive_read(2, 4, 16 << 20, 16, false, 1);
+        assert_eq!(eng_n.core.metrics.counter("pfs.bytes_read"), 16 << 20);
+        let (tc, eng_c) = run_ckio_read(2, 4, 16 << 20, 16, Options::with_readers(8), 1);
+        assert_eq!(eng_c.core.metrics.counter(keys::CKIO_BYTES), 16 << 20);
+        assert!(tn > 0 && tc > 0);
+    }
+
+    #[test]
+    fn fig2_gap_is_large() {
+        let t = fig2_disk_vs_net(1);
+        // Every size: reading beats... loses to the network by > 4x.
+        for row in &t.rows {
+            let ratio: f64 = row[3].trim_end_matches('x').parse().unwrap();
+            assert!(ratio > 4.0, "disk/net ratio too small: {ratio}");
+        }
+    }
+
+    #[test]
+    fn fig12_locality_pays_off_at_large_sizes() {
+        let (pre, post) = migration_run(1 << 30, 42);
+        assert!(pre > post, "pre={pre} post={post}");
+    }
+
+    #[test]
+    fn migration_run_small() {
+        let (pre, post) = migration_run(64 << 20, 7);
+        assert!(pre > 0.0 && post > 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Benchmark harness: a small criterion-replacement (`bench`), the
+//! background-work chares used by the overlap experiments (`bgwork`), and
+//! the per-figure experiment drivers (`experiments`) that regenerate
+//! every table/figure of the paper's evaluation.
+
+pub mod bench;
+pub mod bgwork;
+pub mod experiments;
+
+pub use bench::{BenchResult, Table};

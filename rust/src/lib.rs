@@ -1,0 +1,34 @@
+//! # CkIO — Parallel File Input for Over-Decomposed Task-Based Systems
+//!
+//! A from-scratch reproduction of *"CkIO: Parallel File Input for
+//! Over-Decomposed Task-Based Systems"* (Jacob, Taylor, Kale; 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution: an
+//!   over-decomposed, message-driven task runtime ([`amt`]), the CkIO input
+//!   library built on it ([`ckio`]), the baselines it is evaluated against
+//!   ([`baselines`]), and the parallel-file-system + interconnect substrate
+//!   ([`pfs`], [`net`]) the evaluation needs.
+//! * **Layer 2/1 (build-time Python)** — the data *consumer*: a mini-ChaNGa
+//!   ingest + gravity step written in JAX with Pallas kernels, AOT-lowered
+//!   to HLO text and executed from Rust via PJRT ([`runtime`]). Python is
+//!   never on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and the per-figure experiment
+//! index, and `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod amt;
+pub mod apps;
+pub mod baselines;
+pub mod ckio;
+pub mod harness;
+pub mod metrics;
+pub mod net;
+pub mod pfs;
+pub mod runtime;
+pub mod util;
+
+pub use amt::{
+    engine::{Engine, EngineConfig},
+    topology::Topology,
+};

@@ -1,0 +1,217 @@
+//! CkIO launcher: run any paper experiment (or all of them), inspect the
+//! cluster/PFS configuration, or exercise the runtime end-to-end.
+//!
+//! ```text
+//! ckio fig <1|2|4|7|8|9|12|13|sec5|splinter|autoreaders|all>
+//!      [--reps N] [--out bench_out] [--tp 65536]
+//! ckio read   --file-size 4GiB --clients 512 [--scheme naive|ckio] [--readers N]
+//! ckio changa --nodes 4 --tp 4096 --scheme ckio [--nbodies 2097152]
+//! ckio artifacts [--dir artifacts]           # list + smoke-run PJRT artifacts
+//! ```
+
+use ckio::amt::time;
+use ckio::apps::changa::driver::{run_changa_input, Scheme};
+use ckio::ckio::Options;
+use ckio::harness::bench::Table;
+use ckio::harness::experiments as exp;
+use ckio::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "fig" => cmd_fig(&args),
+        "read" => cmd_read(&args),
+        "changa" => cmd_changa(&args),
+        "artifacts" => cmd_artifacts(&args),
+        "perf" => cmd_perf(&args),
+        _ => {
+            eprintln!(
+                "usage: ckio fig <id|all> [--reps N] [--out DIR] | read | changa | artifacts\n\
+                 see `rust/src/main.rs` header for full flags"
+            );
+        }
+    }
+}
+
+/// Run one named figure; shared with the bench harness.
+pub fn run_figure(id: &str, reps: u32, n_tp: u32) -> Option<(String, Table)> {
+    let t = match id {
+        "1" => exp::fig1_naive_clients(reps),
+        "2" => exp::fig2_disk_vs_net(reps),
+        "4" => exp::fig4_ckio_vs_naive(reps),
+        "7" => exp::fig7_mpiio_vs_ckio(reps),
+        "8" => exp::fig8_overlap_runtime(reps),
+        "9" => exp::fig9_overlap_fraction(reps),
+        "12" => exp::fig12_migration(reps),
+        "13" => exp::fig13_changa(reps, n_tp),
+        "sec5" => exp::sec5_breakdown(reps),
+        "splinter" => exp::ablation_splinter(reps),
+        "autoreaders" => exp::ablation_autoreaders(reps),
+        _ => return None,
+    };
+    let slug = match id {
+        "sec5" => "sec5_breakdown".to_string(),
+        "splinter" => "ablation_splinter".to_string(),
+        "autoreaders" => "ablation_autoreaders".to_string(),
+        n => format!("fig{n}"),
+    };
+    Some((slug, t))
+}
+
+fn cmd_fig(args: &Args) {
+    let id = args.positional.get(1).map(|s| s.as_str()).unwrap_or("all");
+    let reps = args.get_or("reps", 3u32);
+    let out = args.get("out").unwrap_or("bench_out").to_string();
+    let n_tp = args.get_or("tp", 1u32 << 16);
+    let ids: Vec<&str> = if id == "all" {
+        vec!["1", "2", "4", "7", "8", "9", "12", "13", "sec5", "splinter", "autoreaders"]
+    } else {
+        vec![id]
+    };
+    for id in ids {
+        let started = std::time::Instant::now();
+        let Some((slug, table)) = run_figure(id, reps, n_tp) else {
+            eprintln!("unknown figure {id:?}");
+            std::process::exit(2);
+        };
+        table.print();
+        match table.write_csv(&out, &slug) {
+            Ok(p) => println!("[csv] {} ({:.1}s wall)\n", p.display(), started.elapsed().as_secs_f64()),
+            Err(e) => eprintln!("csv write failed: {e}"),
+        }
+    }
+}
+
+fn cmd_read(args: &Args) {
+    let size = args.get_bytes_or("file-size", 4 << 30);
+    let clients = args.get_or("clients", 512u32);
+    let nodes = args.get_or("nodes", exp::PAPER_NODES);
+    let pes = args.get_or("pes-per-node", exp::PAPER_PES);
+    let scheme = args.get("scheme").unwrap_or("ckio").to_string();
+    let seed = args.get_or("seed", 1u64);
+    let (t, eng) = match scheme.as_str() {
+        "naive" => exp::run_naive_read(nodes, pes, size, clients, args.flag("block-pe"), seed),
+        "ckio" => {
+            let opts = match args.get("readers") {
+                Some(r) => Options::with_readers(r.parse().expect("--readers")),
+                None => Options::default(),
+            };
+            exp::run_ckio_read(nodes, pes, size, clients, opts, seed)
+        }
+        other => {
+            eprintln!("unknown scheme {other:?} (naive|ckio)");
+            std::process::exit(2);
+        }
+    };
+    println!(
+        "{scheme}: {} read by {clients} clients on {nodes}x{pes} PEs in {} ({:.2} GiB/s)",
+        ckio::util::human_bytes(size),
+        time::human(t),
+        size as f64 / (1u64 << 30) as f64 / time::to_secs(t),
+    );
+    if args.flag("metrics") {
+        print!("{}", eng.core.metrics.report());
+    }
+}
+
+fn cmd_changa(args: &Args) {
+    let nodes = args.get_or("nodes", 4u32);
+    let pes = args.get_or("pes-per-node", 32u32);
+    let n_tp = args.get_or("tp", 4096u32);
+    let nbodies = args.get_or("nbodies", 2u64 << 20);
+    let scheme = match args.get("scheme").unwrap_or("ckio") {
+        "unopt" => Scheme::Unopt,
+        "handopt" => Scheme::HandOpt,
+        "ckio" => Scheme::CkIo,
+        other => {
+            eprintln!("unknown scheme {other:?}");
+            std::process::exit(2);
+        }
+    };
+    let run = run_changa_input(nodes, pes, n_tp, nbodies, scheme, args.get_or("seed", 1u64));
+    println!(
+        "changa[{}]: {} particles, {} TreePieces, {}x{} PEs -> input {}",
+        scheme.label(),
+        nbodies,
+        n_tp,
+        nodes,
+        pes,
+        time::human(run.input_time),
+    );
+    if args.flag("metrics") {
+        print!("{}", run.engine.core.metrics.report());
+    }
+}
+
+/// In-process perf driver: repeat the heavy CkIO stress scenario and
+/// report engine throughput (events/s), excluding process startup.
+fn cmd_perf(args: &Args) {
+    let iters = args.get_or("iters", 5u32);
+    let size = args.get_bytes_or("file-size", 4 << 30);
+    let clients = args.get_or("clients", 8192u32);
+    let readers = args.get_or("readers", 512u32);
+    // Warmup.
+    exp::run_ckio_read(16, 32, size, clients, Options::with_readers(readers), 1);
+    let mut total_tasks = 0u64;
+    let mut total_msgs = 0u64;
+    let t0 = std::time::Instant::now();
+    for i in 0..iters {
+        let (_, eng) = exp::run_ckio_read(16, 32, size, clients, Options::with_readers(readers), i as u64);
+        total_tasks += eng.core.metrics.counter("amt.tasks");
+        total_msgs += eng.core.metrics.counter("amt.msgs_sent");
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    // Every task + message involves at least one heap event; PFS adds
+    // its own. Report the conservative proxy (tasks + msgs).
+    let events = total_tasks + total_msgs;
+    println!(
+        "perf: {iters} runs x ({clients} clients, {readers} readers, {}) in {wall:.3}s",
+        ckio::util::human_bytes(size)
+    );
+    println!(
+        "  tasks={total_tasks} msgs={total_msgs}  ->  {:.2} M(task+msg)/s, {:.1} ms/run",
+        events as f64 / wall / 1e6,
+        wall * 1e3 / iters as f64
+    );
+}
+
+fn cmd_artifacts(args: &Args) {
+    let dir = args.get("dir").unwrap_or("artifacts").to_string();
+    let mut rt = match ckio::runtime::ArtifactRuntime::cpu() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("PJRT client failed: {e:#}");
+            std::process::exit(1);
+        }
+    };
+    match rt.load_dir(&dir) {
+        Ok(names) => {
+            println!("platform: {}", rt.platform());
+            for n in &names {
+                println!("  artifact {n}");
+            }
+            // Smoke-run the smallest gravity artifact.
+            if rt.has("gravity_n256") {
+                let n = 256usize;
+                let pos: Vec<f32> = (0..n * 3).map(|i| (i as f32 * 0.37).sin()).collect();
+                let outs = rt
+                    .execute(
+                        "gravity_n256",
+                        &[
+                            ckio::runtime::TensorF32::new(vec![n as i64, 3], pos),
+                            ckio::runtime::TensorF32::new(vec![n as i64, 3], vec![0.0; n * 3]),
+                            ckio::runtime::TensorF32::new(vec![n as i64], vec![1.0; n]),
+                            ckio::runtime::TensorF32::scalar(1e-3),
+                        ],
+                    )
+                    .expect("execute gravity_n256");
+                println!("gravity_n256 smoke: |acc| sum = {:.4}", outs[3].data[0]);
+            }
+        }
+        Err(e) => {
+            eprintln!("artifact load failed: {e:#} (run `make artifacts`)");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Instrumentation: counters, accumulated durations, and report tables.
+//!
+//! Every subsystem (engine, PFS, network, CkIO, apps) charges into one
+//! [`Metrics`] sink; experiment drivers read it back to produce the
+//! paper's breakdowns (e.g. §V: I/O vs. data-permutation vs.
+//! over-decomposition overhead, and the background-work fractions of
+//! Figs. 8–9).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::amt::time::{self, Time};
+
+/// A metrics sink: named counters and named duration accumulators.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    counters: BTreeMap<&'static str, u64>,
+    durations: BTreeMap<&'static str, Time>,
+    values: BTreeMap<&'static str, f64>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    /// Increment a counter.
+    pub fn count(&mut self, name: &'static str, by: u64) {
+        *self.counters.entry(name).or_insert(0) += by;
+    }
+
+    /// Accumulate a duration.
+    pub fn charge(&mut self, name: &'static str, d: Time) {
+        *self.durations.entry(name).or_insert(0) += d;
+    }
+
+    /// Record/overwrite a raw value (gauges, final ratios).
+    pub fn set(&mut self, name: &'static str, v: f64) {
+        self.values.insert(name, v);
+    }
+
+    /// Add to a raw value.
+    pub fn add(&mut self, name: &'static str, v: f64) {
+        *self.values.entry(name).or_insert(0.0) += v;
+    }
+
+    /// Keep the maximum of a raw value (e.g. "last I/O completion time").
+    pub fn set_max(&mut self, name: &'static str, v: f64) {
+        let e = self.values.entry(name).or_insert(f64::MIN);
+        if v > *e {
+            *e = v;
+        }
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn duration(&self, name: &str) -> Time {
+        self.durations.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn duration_secs(&self, name: &str) -> f64 {
+        time::to_secs(self.duration(name))
+    }
+
+    pub fn value(&self, name: &str) -> f64 {
+        self.values.get(name).copied().unwrap_or(0.0)
+    }
+
+    /// Merge another sink into this one (e.g. per-run → aggregate).
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in &other.durations {
+            *self.durations.entry(k).or_insert(0) += v;
+        }
+        for (k, v) in &other.values {
+            *self.values.entry(k).or_insert(0.0) += v;
+        }
+    }
+
+    /// Reset everything.
+    pub fn clear(&mut self) {
+        self.counters.clear();
+        self.durations.clear();
+        self.values.clear();
+    }
+
+    /// Render a human-readable report.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        if !self.counters.is_empty() {
+            let _ = writeln!(out, "counters:");
+            for (k, v) in &self.counters {
+                let _ = writeln!(out, "  {k:40} {v}");
+            }
+        }
+        if !self.durations.is_empty() {
+            let _ = writeln!(out, "durations:");
+            for (k, v) in &self.durations {
+                let _ = writeln!(out, "  {k:40} {}", time::human(*v));
+            }
+        }
+        if !self.values.is_empty() {
+            let _ = writeln!(out, "values:");
+            for (k, v) in &self.values {
+                let _ = writeln!(out, "  {k:40} {v:.6}");
+            }
+        }
+        out
+    }
+}
+
+/// Well-known metric names, so subsystems and reports agree.
+pub mod keys {
+    /// Tasks executed by all PE schedulers.
+    pub const TASKS: &str = "amt.tasks";
+    /// Messages sent (all kinds).
+    pub const MSGS: &str = "amt.msgs_sent";
+    /// Location-manager forwarding hops (stale caches / in-flight chares).
+    pub const FWD_HOPS: &str = "amt.forward_hops";
+    /// Chare migrations completed.
+    pub const MIGRATIONS: &str = "amt.migrations";
+    /// Bytes moved over the interconnect (modeled).
+    pub const NET_BYTES: &str = "net.bytes";
+    /// Time the interconnect spent serializing data (modeled, summed).
+    pub const NET_BUSY: &str = "net.busy";
+    /// PFS read RPCs issued.
+    pub const PFS_RPCS: &str = "pfs.rpcs";
+    /// Bytes read from the PFS.
+    pub const PFS_BYTES: &str = "pfs.bytes_read";
+    /// Aggregate time OSTs spent servicing requests.
+    pub const OST_BUSY: &str = "pfs.ost_busy";
+    /// CkIO: read requests served to clients.
+    pub const CKIO_READS: &str = "ckio.reads_served";
+    /// CkIO: bytes delivered to clients.
+    pub const CKIO_BYTES: &str = "ckio.bytes_delivered";
+    /// Background-work time accumulated by compute chares (Figs. 8–9).
+    pub const BG_WORK: &str = "app.bg_work";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_charge_value() {
+        let mut m = Metrics::new();
+        m.count("a", 2);
+        m.count("a", 3);
+        m.charge("t", 500);
+        m.set("v", 1.5);
+        m.add("v", 0.5);
+        assert_eq!(m.counter("a"), 5);
+        assert_eq!(m.duration("t"), 500);
+        assert!((m.value("v") - 2.0).abs() < 1e-12);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = Metrics::new();
+        a.count("x", 1);
+        a.charge("t", 10);
+        let mut b = Metrics::new();
+        b.count("x", 2);
+        b.charge("t", 5);
+        a.merge(&b);
+        assert_eq!(a.counter("x"), 3);
+        assert_eq!(a.duration("t"), 15);
+    }
+
+    #[test]
+    fn report_contains_entries() {
+        let mut m = Metrics::new();
+        m.count(keys::TASKS, 7);
+        m.charge(keys::NET_BUSY, 1_500_000);
+        let r = m.report();
+        assert!(r.contains("amt.tasks"));
+        assert!(r.contains("7"));
+        assert!(r.contains("1.50 ms"));
+    }
+}

@@ -1,0 +1,226 @@
+//! The I/O interface the runtime submits reads through, plus the
+//! real-disk backend (helper reader threads doing `pread`, mirroring
+//! CkIO's pthread readers) used by wall-clock runs.
+
+use std::collections::HashMap;
+use std::fs::File;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::amt::callback::Callback;
+use crate::amt::topology::Pe;
+use crate::util::bytes::Chunk;
+
+use super::layout::FileId;
+
+/// A read submitted by a chare (via `Ctx::submit_read`).
+#[derive(Copy, Clone, Debug)]
+pub struct ReadRequest {
+    pub file: FileId,
+    pub offset: u64,
+    pub len: u64,
+    /// Opaque tag echoed back in the result so the submitter can match
+    /// completions to requests.
+    pub user: u64,
+}
+
+/// A completed read, delivered as the payload of the completion callback.
+#[derive(Debug)]
+pub struct IoResult {
+    pub file: FileId,
+    pub offset: u64,
+    pub len: u64,
+    pub user: u64,
+    pub chunk: Chunk,
+}
+
+/// Completion record posted by real reader threads.
+#[derive(Debug)]
+pub struct RealCompletion {
+    pub callback: Callback,
+    pub pe: Pe,
+    pub result: IoResult,
+}
+
+struct Job {
+    path: PathBuf,
+    req: ReadRequest,
+    callback: Callback,
+    pe: Pe,
+}
+
+enum WorkerMsg {
+    Read(Job),
+    Stop,
+}
+
+/// Real-disk backend: a pool of helper reader threads servicing `pread`s
+/// against local files. Completions flow back over a channel the engine
+/// drains — the scheduler threads never block on I/O, exactly the
+/// split-phase structure CkIO's buffer chares use.
+pub struct LocalDisk {
+    tx: Sender<WorkerMsg>,
+    pub completions: Receiver<RealCompletion>,
+    workers: Vec<JoinHandle<()>>,
+    files: Vec<PathBuf>,
+    in_flight: usize,
+}
+
+impl LocalDisk {
+    /// Spawn a pool of `threads` reader threads.
+    pub fn new(threads: usize) -> LocalDisk {
+        assert!(threads > 0);
+        let (tx, work_rx) = channel::<WorkerMsg>();
+        let work_rx = Arc::new(std::sync::Mutex::new(work_rx));
+        let (done_tx, completions) = channel();
+        let workers = (0..threads)
+            .map(|_| {
+                let work_rx = Arc::clone(&work_rx);
+                let done_tx = done_tx.clone();
+                std::thread::spawn(move || {
+                    // Per-worker open-file cache: a migrated client keeps
+                    // reading through its session; the worker re-opens
+                    // lazily on whatever node (thread) serves it.
+                    let mut handles: HashMap<PathBuf, File> = HashMap::new();
+                    loop {
+                        let msg = { work_rx.lock().unwrap().recv() };
+                        match msg {
+                            Ok(WorkerMsg::Read(job)) => {
+                                let file = handles
+                                    .entry(job.path.clone())
+                                    .or_insert_with(|| File::open(&job.path).expect("open data file"));
+                                let mut buf = vec![0u8; job.req.len as usize];
+                                file.seek(SeekFrom::Start(job.req.offset)).expect("seek");
+                                file.read_exact(&mut buf).expect("pread");
+                                let result = IoResult {
+                                    file: job.req.file,
+                                    offset: job.req.offset,
+                                    len: job.req.len,
+                                    user: job.req.user,
+                                    chunk: Chunk::materialized(job.req.offset, buf.into()),
+                                };
+                                let _ = done_tx.send(RealCompletion {
+                                    callback: job.callback,
+                                    pe: job.pe,
+                                    result,
+                                });
+                            }
+                            Ok(WorkerMsg::Stop) | Err(_) => break,
+                        }
+                    }
+                })
+            })
+            .collect();
+        LocalDisk { tx, completions, workers, files: Vec::new(), in_flight: 0 }
+    }
+
+    /// Register a real file; returns its handle.
+    pub fn register_file(&mut self, path: impl Into<PathBuf>) -> FileId {
+        let id = FileId(self.files.len() as u32);
+        self.files.push(path.into());
+        id
+    }
+
+    pub fn file_size(&self, id: FileId) -> u64 {
+        std::fs::metadata(&self.files[id.0 as usize]).expect("stat").len()
+    }
+
+    /// Submit a read to the pool.
+    pub fn submit(&mut self, pe: Pe, req: ReadRequest, callback: Callback) {
+        let path = self.files[req.file.0 as usize].clone();
+        self.in_flight += 1;
+        self.tx
+            .send(WorkerMsg::Read(Job { path, req, callback, pe }))
+            .expect("reader pool alive");
+    }
+
+    /// Number of submitted-but-undelivered reads (the engine decrements
+    /// by draining `completions`).
+    pub fn note_completion(&mut self) {
+        self.in_flight -= 1;
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+}
+
+impl Drop for LocalDisk {
+    fn drop(&mut self) {
+        for _ in &self.workers {
+            let _ = self.tx.send(WorkerMsg::Stop);
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pfs::pattern;
+
+    fn temp_file(name: &str, len: u64) -> (PathBuf, FileId) {
+        let dir = std::env::temp_dir().join("ckio_test_backend");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        // Write the deterministic pattern so reads are verifiable.
+        let data = pattern::make(FileId(0), 0, len);
+        std::fs::write(&path, &data).unwrap();
+        (path, FileId(0))
+    }
+
+    #[test]
+    fn reads_round_trip() {
+        let (path, fid) = temp_file("roundtrip.bin", 1 << 20);
+        let mut disk = LocalDisk::new(2);
+        let id = disk.register_file(&path);
+        assert_eq!(id, fid);
+        assert_eq!(disk.file_size(id), 1 << 20);
+        for i in 0..8u64 {
+            disk.submit(
+                Pe(0),
+                ReadRequest { file: id, offset: i * 128 << 10, len: 128 << 10, user: i },
+                Callback::Ignore,
+            );
+        }
+        let mut seen = vec![false; 8];
+        for _ in 0..8 {
+            let c = disk.completions.recv().unwrap();
+            disk.note_completion();
+            let r = &c.result;
+            assert_eq!(r.len, 128 << 10);
+            let bytes = r.chunk.bytes.as_ref().unwrap();
+            assert_eq!(pattern::verify(FileId(0), r.offset, bytes), None, "corrupt read at {}", r.offset);
+            seen[r.user as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(disk.in_flight(), 0);
+    }
+
+    #[test]
+    fn concurrent_readers_dont_interfere() {
+        let (path, _) = temp_file("concurrent.bin", 4 << 20);
+        let mut disk = LocalDisk::new(4);
+        let id = disk.register_file(&path);
+        let n = 64u64;
+        let chunk = (4 << 20) / n;
+        for i in 0..n {
+            disk.submit(
+                Pe((i % 4) as u32),
+                ReadRequest { file: id, offset: i * chunk, len: chunk, user: i },
+                Callback::Ignore,
+            );
+        }
+        for _ in 0..n {
+            let c = disk.completions.recv().unwrap();
+            disk.note_completion();
+            let bytes = c.result.chunk.bytes.as_ref().unwrap();
+            assert_eq!(pattern::verify(FileId(0), c.result.offset, bytes), None);
+        }
+    }
+}

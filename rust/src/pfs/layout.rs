@@ -1,0 +1,129 @@
+//! File metadata and striping layout (Lustre-style).
+
+/// Handle to a file known to the (simulated or real) file system.
+#[derive(Copy, Clone, Eq, PartialEq, Ord, PartialOrd, Hash, Debug)]
+pub struct FileId(pub u32);
+
+/// Metadata for one file: size and striping.
+///
+/// A file is striped round-robin over `stripe_count` OSTs starting at
+/// `first_ost`: byte `b` lives on OST
+/// `first_ost + (b / stripe_size) % stripe_count` (mod the OST pool).
+#[derive(Clone, Debug)]
+pub struct FileMeta {
+    pub id: FileId,
+    pub size: u64,
+    pub stripe_size: u64,
+    pub stripe_count: u32,
+    pub first_ost: u32,
+    /// Backing path for the real-disk backend (None in modeled runs).
+    pub path: Option<std::path::PathBuf>,
+}
+
+impl FileMeta {
+    /// OST index (within the global pool of `ost_pool` OSTs) holding the
+    /// stripe that contains `offset`.
+    pub fn ost_of(&self, offset: u64, ost_pool: u32) -> u32 {
+        debug_assert!(offset < self.size, "offset {offset} beyond EOF {}", self.size);
+        let stripe = offset / self.stripe_size;
+        (self.first_ost + (stripe % self.stripe_count as u64) as u32) % ost_pool
+    }
+
+    /// End of the stripe containing `offset` (exclusive, clamped to EOF).
+    pub fn stripe_end(&self, offset: u64) -> u64 {
+        ((offset / self.stripe_size + 1) * self.stripe_size).min(self.size)
+    }
+
+    /// Split `[offset, offset+len)` into per-RPC extents: each extent lies
+    /// within a single stripe and is at most `rpc_max` long. This is what
+    /// a Lustre client does when it turns a read into OST RPCs.
+    pub fn rpc_extents(&self, offset: u64, len: u64, rpc_max: u64) -> Vec<(u64, u64)> {
+        assert!(rpc_max > 0);
+        assert!(
+            offset + len <= self.size,
+            "read [{offset}, {}) beyond EOF {}",
+            offset + len,
+            self.size
+        );
+        let mut out = Vec::new();
+        let mut pos = offset;
+        let end = offset + len;
+        while pos < end {
+            let stripe_end = self.stripe_end(pos);
+            let ext_end = end.min(stripe_end).min(pos + rpc_max);
+            out.push((pos, ext_end - pos));
+            pos = ext_end;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> FileMeta {
+        FileMeta {
+            id: FileId(0),
+            size: 100 << 20,
+            stripe_size: 4 << 20,
+            stripe_count: 4,
+            first_ost: 2,
+            path: None,
+        }
+    }
+
+    #[test]
+    fn ost_round_robin() {
+        let m = meta();
+        assert_eq!(m.ost_of(0, 16), 2);
+        assert_eq!(m.ost_of(4 << 20, 16), 3);
+        assert_eq!(m.ost_of(8 << 20, 16), 4);
+        assert_eq!(m.ost_of(12 << 20, 16), 5);
+        assert_eq!(m.ost_of(16 << 20, 16), 2); // wraps at stripe_count
+    }
+
+    #[test]
+    fn ost_wraps_pool() {
+        let m = FileMeta { first_ost: 15, stripe_count: 4, ..meta() };
+        assert_eq!(m.ost_of(4 << 20, 16), 0);
+    }
+
+    #[test]
+    fn extents_respect_stripes_and_rpc_max() {
+        let m = meta();
+        // 10 MiB starting 1 MiB into the file, rpc_max 2 MiB.
+        let exts = m.rpc_extents(1 << 20, 10 << 20, 2 << 20);
+        // Total length preserved and contiguous:
+        let total: u64 = exts.iter().map(|&(_, l)| l).sum();
+        assert_eq!(total, 10 << 20);
+        let mut pos = 1 << 20;
+        for &(o, l) in &exts {
+            assert_eq!(o, pos);
+            assert!(l <= 2 << 20);
+            // never spans a stripe boundary
+            assert_eq!(m.ost_of(o, 16), m.ost_of(o + l - 1, 16));
+            pos = o + l;
+        }
+    }
+
+    #[test]
+    fn extent_at_eof() {
+        let m = meta();
+        let exts = m.rpc_extents((100 << 20) - 1000, 1000, 1 << 20);
+        assert_eq!(exts, vec![((100 << 20) - 1000, 1000)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond EOF")]
+    fn read_past_eof_panics() {
+        meta().rpc_extents(100 << 20, 1, 1 << 20);
+    }
+
+    #[test]
+    fn single_byte_extent() {
+        let m = meta();
+        let exts = m.rpc_extents(0, 1, 1 << 20);
+        assert_eq!(exts, vec![(0, 1)]);
+    }
+}

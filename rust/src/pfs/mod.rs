@@ -1,0 +1,26 @@
+//! Parallel file system substrate (Lustre-like).
+//!
+//! The paper's evaluation runs on Bridges2's Lustre file system ("Ocean").
+//! We cannot reproduce that hardware, so this module provides:
+//!
+//! * [`layout`] — files striped over object storage targets (OSTs),
+//! * [`model`] — a discrete-event queueing model of the storage path:
+//!   per-RPC overhead, per-OST FIFO service with stream-interleaving
+//!   (seek) penalties, a bounded per-client RPC window, per-node LNET
+//!   bandwidth, and a metadata server serializing opens. These are the
+//!   mechanisms that produce the paper's contention shapes (Fig. 1's
+//!   peaked throughput curve, Fig. 2's disk≪network gap),
+//! * [`backend`] — the I/O interface used by the runtime: the simulated
+//!   backend above (virtual clock) or a real local-disk backend with
+//!   helper reader threads (wall clock, used by the end-to-end example),
+//! * [`pattern`] — deterministic file contents so any experiment can
+//!   verify end-to-end data integrity without storing gigabytes.
+
+pub mod backend;
+pub mod layout;
+pub mod model;
+pub mod pattern;
+
+pub use backend::{IoResult, ReadRequest};
+pub use layout::{FileId, FileMeta};
+pub use model::{PfsConfig, SimPfs};

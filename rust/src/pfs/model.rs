@@ -1,0 +1,523 @@
+//! Discrete-event queueing model of a Lustre-like storage path.
+//!
+//! A read becomes a sequence of OST RPCs (≤ `rpc_max_bytes`, stripe
+//! aligned). The client keeps at most `client_window` RPCs in flight
+//! (Lustre `max_rpcs_in_flight`). Each OST serves its queue FIFO; service
+//! time is `rpc_overhead + len / ost_bw`, multiplied by log-normal noise,
+//! plus a `seek_penalty` whenever the OST switches between request
+//! streams — *this* term is what makes thousands of interleaved small
+//! readers collapse (paper Fig. 1's right side), while the bounded client
+//! window is what starves the disks when there are too few readers (the
+//! left side). Completed RPCs flow back through a per-node LNET ingest
+//! horizon, and opens serialize at a metadata server.
+
+use std::collections::VecDeque;
+
+use crate::amt::callback::Callback;
+use crate::amt::time::{from_micros, from_secs, Time};
+use crate::amt::topology::Pe;
+use crate::metrics::{keys, Metrics};
+use crate::util::bytes::Chunk;
+use crate::util::rng::Pcg32;
+
+use super::backend::{IoResult, ReadRequest};
+use super::layout::{FileId, FileMeta};
+use super::pattern;
+
+/// Model parameters. Defaults are calibrated in DESIGN.md §8 to match the
+/// paper's *ratios* (single-stream disk ≈ 6–9× slower than the wire;
+/// aggregate peak at moderate parallelism; collapse under many small
+/// interleaved readers).
+#[derive(Clone, Debug)]
+pub struct PfsConfig {
+    /// Number of OSTs in the pool.
+    pub ost_count: u32,
+    /// Default stripe size for new files.
+    pub stripe_size: u64,
+    /// Default stripe count for new files (≤ ost_count).
+    pub stripe_count: u32,
+    /// Max bytes per OST RPC.
+    pub rpc_max_bytes: u64,
+    /// Fixed service overhead per RPC (request handling, network setup).
+    pub rpc_overhead: Time,
+    /// Per-OST streaming bandwidth, bytes/sec.
+    pub ost_bw: f64,
+    /// Penalty when an OST switches streams (disk seek / readahead loss).
+    pub seek_penalty: Time,
+    /// Max RPCs a single client (PE) keeps in flight per request.
+    pub client_window: u32,
+    /// Per-node LNET ingest bandwidth, bytes/sec.
+    pub lnet_bw: f64,
+    /// Metadata-server service time per open.
+    pub mds_open: Time,
+    /// Log-normal service noise sigma (run-to-run variability).
+    pub noise_sigma: f64,
+    /// Materialize pattern bytes in completions (verified runs).
+    pub materialize: bool,
+}
+
+impl Default for PfsConfig {
+    fn default() -> Self {
+        PfsConfig {
+            ost_count: 16,
+            stripe_size: 4 << 20,
+            stripe_count: 16,
+            rpc_max_bytes: 4 << 20,
+            rpc_overhead: from_micros(300.0),
+            ost_bw: 1.5e9,
+            seek_penalty: from_micros(1200.0),
+            client_window: 2,
+            lnet_bw: 3.0e9,
+            mds_open: from_micros(40.0),
+            noise_sigma: 0.05,
+            materialize: false,
+        }
+    }
+}
+
+/// Internal PFS events, scheduled on the engine's event heap.
+#[derive(Copy, Clone, Debug)]
+pub enum PfsEvent {
+    /// An OST finished servicing an RPC.
+    OstDone { ost: u32 },
+    /// An RPC's payload finished arriving at the client node.
+    RpcArrive { rpc: u32 },
+}
+
+/// An event the model wants scheduled at `at`.
+#[derive(Copy, Clone, Debug)]
+pub struct Scheduled {
+    pub at: Time,
+    pub ev: PfsEvent,
+}
+
+/// A finished read: deliver `result` to `callback` (on `pe`).
+#[derive(Debug)]
+pub struct Done {
+    pub callback: Callback,
+    pub pe: Pe,
+    pub result: IoResult,
+}
+
+#[derive(Debug)]
+struct Req {
+    callback: Callback,
+    pe: Pe,
+    node: u32,
+    file: FileId,
+    offset: u64,
+    len: u64,
+    user: u64,
+    /// Stripe-aligned extents not yet issued.
+    pending: VecDeque<(u64, u64)>,
+    /// RPCs issued but not yet arrived.
+    in_flight: u32,
+    done: bool,
+}
+
+#[derive(Debug)]
+struct Rpc {
+    req: u32,
+    len: u64,
+}
+
+#[derive(Debug, Default)]
+struct Ost {
+    queue: VecDeque<u32>,
+    /// RPC currently in service (None = idle).
+    current: Option<u32>,
+    /// Stream key of the last serviced RPC (request id): consecutive RPCs
+    /// from the same request stream avoid the seek penalty.
+    last_stream: Option<u32>,
+    busy_ns: u64,
+}
+
+/// The simulated PFS.
+#[derive(Debug)]
+pub struct SimPfs {
+    pub cfg: PfsConfig,
+    files: Vec<FileMeta>,
+    osts: Vec<Ost>,
+    node_rx_free: Vec<Time>,
+    mds_free: Time,
+    reqs: Vec<Req>,
+    rpcs: Vec<Rpc>,
+    rng: Pcg32,
+    next_first_ost: u32,
+}
+
+impl SimPfs {
+    pub fn new(cfg: PfsConfig, nodes: u32, seed: u64) -> SimPfs {
+        let osts = (0..cfg.ost_count).map(|_| Ost::default()).collect();
+        SimPfs {
+            cfg,
+            files: Vec::new(),
+            osts,
+            node_rx_free: vec![0; nodes as usize],
+            mds_free: 0,
+            reqs: Vec::new(),
+            rpcs: Vec::new(),
+            rng: Pcg32::seeded(seed ^ 0x9df5),
+            next_first_ost: 0,
+        }
+    }
+
+    /// Register a file with the default striping.
+    pub fn create_file(&mut self, size: u64) -> FileId {
+        self.create_file_striped(size, self.cfg.stripe_count, self.cfg.stripe_size)
+    }
+
+    /// Register a file with explicit striping.
+    pub fn create_file_striped(&mut self, size: u64, stripe_count: u32, stripe_size: u64) -> FileId {
+        assert!(size > 0);
+        let id = FileId(self.files.len() as u32);
+        let first_ost = self.next_first_ost;
+        self.next_first_ost = (self.next_first_ost + 1) % self.cfg.ost_count;
+        self.files.push(FileMeta {
+            id,
+            size,
+            stripe_size,
+            stripe_count: stripe_count.min(self.cfg.ost_count),
+            first_ost,
+            path: None,
+        });
+        id
+    }
+
+    pub fn file(&self, id: FileId) -> &FileMeta {
+        &self.files[id.0 as usize]
+    }
+
+    /// Serialize an open at the MDS; returns when it completes.
+    pub fn open(&mut self, now: Time) -> Time {
+        let start = self.mds_free.max(now);
+        self.mds_free = start + self.cfg.mds_open;
+        self.mds_free
+    }
+
+    /// Submit a read. Events to schedule are appended to `out`.
+    pub fn submit(
+        &mut self,
+        now: Time,
+        pe: Pe,
+        node: u32,
+        req: ReadRequest,
+        callback: Callback,
+        metrics: &mut Metrics,
+        out: &mut Vec<Scheduled>,
+    ) {
+        let meta = self.file(req.file);
+        let extents = meta.rpc_extents(req.offset, req.len, self.cfg.rpc_max_bytes);
+        metrics.count(keys::PFS_RPCS, extents.len() as u64);
+        metrics.count(keys::PFS_BYTES, req.len);
+        let rid = self.reqs.len() as u32;
+        self.reqs.push(Req {
+            callback,
+            pe,
+            node,
+            file: req.file,
+            offset: req.offset,
+            len: req.len,
+            user: req.user,
+            pending: extents.into_iter().collect(),
+            in_flight: 0,
+            done: false,
+        });
+        // Open the client window.
+        for _ in 0..self.cfg.client_window {
+            if !self.issue_next(rid, now, out) {
+                break;
+            }
+        }
+    }
+
+    /// Issue the next pending extent of a request to its OST.
+    /// Returns false if nothing was pending.
+    fn issue_next(&mut self, rid: u32, now: Time, out: &mut Vec<Scheduled>) -> bool {
+        let (offset, len, file) = {
+            let r = &mut self.reqs[rid as usize];
+            match r.pending.pop_front() {
+                Some((o, l)) => {
+                    r.in_flight += 1;
+                    (o, l, r.file)
+                }
+                None => return false,
+            }
+        };
+        let ost = self.file(file).ost_of(offset, self.cfg.ost_count) as usize;
+        let rpc_id = self.rpcs.len() as u32;
+        self.rpcs.push(Rpc { req: rid, len });
+        self.osts[ost].queue.push_back(rpc_id);
+        if self.osts[ost].current.is_none() {
+            self.start_service(ost, now, out);
+        }
+        true
+    }
+
+    /// Begin servicing the head of an idle OST's queue.
+    fn start_service(&mut self, ost: usize, now: Time, out: &mut Vec<Scheduled>) {
+        let Some(&rpc_id) = self.osts[ost].queue.front() else { return };
+        self.osts[ost].queue.pop_front();
+        let rpc = &self.rpcs[rpc_id as usize];
+        let stream = rpc.req;
+        let mut service = self.cfg.rpc_overhead
+            + from_secs(rpc.len as f64 / self.cfg.ost_bw);
+        if self.osts[ost].last_stream != Some(stream) {
+            service += self.cfg.seek_penalty;
+        }
+        if self.cfg.noise_sigma > 0.0 {
+            service = (service as f64 * self.rng.noise(self.cfg.noise_sigma)) as Time;
+        }
+        let o = &mut self.osts[ost];
+        o.current = Some(rpc_id);
+        o.last_stream = Some(stream);
+        o.busy_ns += service;
+        out.push(Scheduled { at: now + service, ev: PfsEvent::OstDone { ost: ost as u32 } });
+    }
+
+    /// Advance the model on one of its events. Completed reads are
+    /// returned for the engine to deliver.
+    pub fn on_event(
+        &mut self,
+        now: Time,
+        ev: PfsEvent,
+        metrics: &mut Metrics,
+        out: &mut Vec<Scheduled>,
+    ) -> Option<Done> {
+        match ev {
+            PfsEvent::OstDone { ost } => {
+                let ost = ost as usize;
+                let rpc_id = self.osts[ost].current.take().expect("OstDone on idle OST");
+                metrics.charge(keys::OST_BUSY, 0); // busy accounted at start
+                // Next queued RPC starts immediately.
+                if !self.osts[ost].queue.is_empty() {
+                    self.start_service(ost, now, out);
+                }
+                // Payload flows to the client node through LNET.
+                let rpc = &self.rpcs[rpc_id as usize];
+                let node = self.reqs[rpc.req as usize].node as usize;
+                let rx = from_secs(rpc.len as f64 / self.cfg.lnet_bw);
+                let start = self.node_rx_free[node].max(now);
+                let arrive = start + rx;
+                self.node_rx_free[node] = arrive;
+                out.push(Scheduled { at: arrive, ev: PfsEvent::RpcArrive { rpc: rpc_id } });
+                None
+            }
+            PfsEvent::RpcArrive { rpc } => {
+                let rid = self.rpcs[rpc as usize].req;
+                // Window slides: issue the next pending extent.
+                self.issue_next(rid, now, out);
+                let r = &mut self.reqs[rid as usize];
+                r.in_flight -= 1;
+                if r.in_flight == 0 && r.pending.is_empty() && !r.done {
+                    r.done = true;
+                    let chunk = if self.cfg.materialize {
+                        Chunk::materialized(r.offset, pattern::make(r.file, r.offset, r.len))
+                    } else {
+                        Chunk::modeled(r.offset, r.len)
+                    };
+                    let done = Done {
+                        callback: r.callback.clone(),
+                        pe: r.pe,
+                        result: IoResult {
+                            file: r.file,
+                            offset: r.offset,
+                            len: r.len,
+                            user: r.user,
+                            chunk,
+                        },
+                    };
+                    metrics.count("pfs.reads_done", 1);
+                    return Some(done);
+                }
+                None
+            }
+        }
+    }
+
+    /// Aggregate OST busy time (utilization numerator).
+    pub fn total_ost_busy(&self) -> u64 {
+        self.osts.iter().map(|o| o.busy_ns).sum()
+    }
+
+    /// Reset all queueing state but keep files (between repetitions).
+    pub fn reset(&mut self, seed: u64) {
+        for o in &mut self.osts {
+            *o = Ost::default();
+        }
+        self.node_rx_free.iter_mut().for_each(|t| *t = 0);
+        self.mds_free = 0;
+        self.reqs.clear();
+        self.rpcs.clear();
+        self.rng = Pcg32::seeded(seed ^ 0x9df5);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_to_completion(pfs: &mut SimPfs, submits: Vec<(Time, Pe, u32, ReadRequest)>) -> Vec<(Time, Done)> {
+        // Tiny standalone event loop driving just the PFS model.
+        let mut metrics = Metrics::new();
+        let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(Time, u64, usize)>> =
+            Default::default();
+        let mut evs: Vec<PfsEvent> = Vec::new();
+        let mut seq = 0u64;
+        let mut out = Vec::new();
+        let mut dones = Vec::new();
+        for (t, pe, node, req) in submits {
+            pfs.submit(t, pe, node, req, Callback::Ignore, &mut metrics, &mut out);
+            for s in out.drain(..) {
+                evs.push(s.ev);
+                heap.push(std::cmp::Reverse((s.at, seq, evs.len() - 1)));
+                seq += 1;
+            }
+        }
+        while let Some(std::cmp::Reverse((t, _, idx))) = heap.pop() {
+            if let Some(d) = pfs.on_event(t, evs[idx], &mut metrics, &mut out) {
+                dones.push((t, d));
+            }
+            for s in out.drain(..) {
+                evs.push(s.ev);
+                heap.push(std::cmp::Reverse((s.at, seq, evs.len() - 1)));
+                seq += 1;
+            }
+        }
+        dones
+    }
+
+    fn quiet(cfg: &mut PfsConfig) {
+        cfg.noise_sigma = 0.0;
+    }
+
+    #[test]
+    fn single_read_completes_with_correct_extent() {
+        let mut cfg = PfsConfig::default();
+        quiet(&mut cfg);
+        cfg.materialize = true;
+        let mut pfs = SimPfs::new(cfg, 2, 1);
+        let f = pfs.create_file(64 << 20);
+        let dones = run_to_completion(
+            &mut pfs,
+            vec![(0, Pe(0), 0, ReadRequest { file: f, offset: 1 << 20, len: 8 << 20, user: 7 })],
+        );
+        assert_eq!(dones.len(), 1);
+        let (t, d) = &dones[0];
+        assert!(*t > 0);
+        assert_eq!(d.result.offset, 1 << 20);
+        assert_eq!(d.result.len, 8 << 20);
+        assert_eq!(d.result.user, 7);
+        let bytes = d.result.chunk.bytes.as_ref().unwrap();
+        assert_eq!(pattern::verify(f, 1 << 20, bytes), None);
+    }
+
+    #[test]
+    fn throughput_peaks_at_moderate_parallelism() {
+        // The Fig.1 shape: 1 client < 32 clients; 4096 clients < 32 clients.
+        let total: u64 = 1 << 30; // 1 GiB
+        let time_for = |nclients: u64| -> f64 {
+            let mut cfg = PfsConfig::default();
+            quiet(&mut cfg);
+            let mut pfs = SimPfs::new(cfg, 16, 1);
+            let f = pfs.create_file(total);
+            let per = total / nclients;
+            let submits = (0..nclients)
+                .map(|i| {
+                    (0, Pe((i % 512) as u32), (i % 16) as u32,
+                     ReadRequest { file: f, offset: i * per, len: per, user: i })
+                })
+                .collect();
+            let dones = run_to_completion(&mut pfs, submits);
+            assert_eq!(dones.len(), nclients as usize);
+            dones.iter().map(|(t, _)| *t).max().unwrap() as f64 / 1e9
+        };
+        let t1 = time_for(1);
+        let t32 = time_for(32);
+        let t4096 = time_for(4096);
+        assert!(t32 < t1, "32 clients ({t32}s) should beat 1 client ({t1}s)");
+        assert!(t32 < t4096, "32 clients ({t32}s) should beat 4096 clients ({t4096}s)");
+    }
+
+    #[test]
+    fn mds_serializes_opens() {
+        let mut cfg = PfsConfig::default();
+        quiet(&mut cfg);
+        let mds_open = cfg.mds_open;
+        let mut pfs = SimPfs::new(cfg, 1, 1);
+        let a = pfs.open(0);
+        let b = pfs.open(0);
+        let c = pfs.open(b);
+        assert_eq!(a, mds_open);
+        assert_eq!(b, 2 * mds_open);
+        assert_eq!(c, 3 * mds_open);
+    }
+
+    #[test]
+    fn window_limits_in_flight() {
+        let mut cfg = PfsConfig::default();
+        quiet(&mut cfg);
+        cfg.client_window = 2;
+        let mut pfs = SimPfs::new(cfg, 1, 1);
+        let f = pfs.create_file(64 << 20);
+        let mut out = Vec::new();
+        let mut metrics = Metrics::new();
+        pfs.submit(0, Pe(0), 0,
+            ReadRequest { file: f, offset: 0, len: 32 << 20, user: 0 },
+            Callback::Ignore, &mut metrics, &mut out);
+        // 8 extents of 4 MiB, but only `client_window` service starts.
+        assert_eq!(out.len(), 2);
+        assert_eq!(pfs.reqs[0].in_flight, 2);
+        assert_eq!(pfs.reqs[0].pending.len(), 6);
+    }
+
+    #[test]
+    fn sequential_stream_avoids_seeks() {
+        // One client reading 64 MiB should pay ~zero seek penalties after
+        // the first RPC per OST; 64 interleaved clients on the same data
+        // pay one per RPC. Compare total OST busy time.
+        let total: u64 = 64 << 20;
+        let busy_for = |nclients: u64| -> u64 {
+            let mut cfg = PfsConfig::default();
+            quiet(&mut cfg);
+            cfg.stripe_count = 1; // single OST: pure interleaving test
+            let mut pfs = SimPfs::new(cfg, 1, 1);
+            let f = pfs.create_file_striped(total, 1, 4 << 20);
+            let per = total / nclients;
+            let submits = (0..nclients)
+                .map(|i| (0, Pe(0), 0, ReadRequest { file: f, offset: i * per, len: per, user: i }))
+                .collect();
+            run_to_completion(&mut pfs, submits);
+            pfs.total_ost_busy()
+        };
+        let seq = busy_for(1);
+        let inter = busy_for(16);
+        assert!(inter as f64 > seq as f64 * 1.2, "seq={seq} inter={inter}");
+    }
+
+    #[test]
+    fn lnet_caps_node_ingest() {
+        // All data landing on one node serializes at LNET; spread across
+        // 16 nodes it doesn't.
+        let total: u64 = 256 << 20;
+        let time_for = |nodes: u32| -> f64 {
+            let mut cfg = PfsConfig::default();
+            quiet(&mut cfg);
+            let mut pfs = SimPfs::new(cfg, 16, 1);
+            let f = pfs.create_file(total);
+            let nclients = 16u64;
+            let per = total / nclients;
+            let submits = (0..nclients)
+                .map(|i| {
+                    (0, Pe(i as u32), (i % nodes as u64) as u32,
+                     ReadRequest { file: f, offset: i * per, len: per, user: i })
+                })
+                .collect();
+            let dones = run_to_completion(&mut pfs, submits);
+            dones.iter().map(|(t, _)| *t).max().unwrap() as f64 / 1e9
+        };
+        let one_node = time_for(1);
+        let many_nodes = time_for(16);
+        assert!(one_node > many_nodes * 1.5, "one={one_node} many={many_nodes}");
+    }
+}

@@ -1,0 +1,202 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! the coordinator's hot path.
+//!
+//! The JAX/Pallas model (Layer 2/1, `python/compile/`) is lowered **once**
+//! at build time to HLO *text* (`artifacts/*.hlo.txt`; text rather than a
+//! serialized `HloModuleProto` because jax ≥ 0.5 emits 64-bit instruction
+//! ids the bundled xla_extension 0.5.1 rejects — the text parser
+//! reassigns ids). This module loads those artifacts, compiles them on
+//! the PJRT CPU client, and exposes typed `f32` execution. Python is
+//! never on the request path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// Where `make artifacts` puts the lowered models.
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// A loaded, compiled artifact registry keyed by artifact name
+/// (`gravity_4096` → `artifacts/gravity_4096.hlo.txt`).
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// A typed f32 tensor for artifact I/O.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorF32 {
+    pub dims: Vec<i64>,
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    pub fn new(dims: Vec<i64>, data: Vec<f32>) -> TensorF32 {
+        let n: i64 = dims.iter().product();
+        assert_eq!(n as usize, data.len(), "dims/data mismatch");
+        TensorF32 { dims, data }
+    }
+
+    pub fn scalar(v: f32) -> TensorF32 {
+        TensorF32 { dims: vec![], data: vec![v] }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.dims.is_empty() {
+            Ok(xla::Literal::scalar(self.data[0]))
+        } else {
+            Ok(lit.reshape(&self.dims)?)
+        }
+    }
+}
+
+impl ArtifactRuntime {
+    /// Create a PJRT CPU client.
+    pub fn cpu() -> Result<ArtifactRuntime> {
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(ArtifactRuntime { client, exes: HashMap::new() })
+    }
+
+    /// Platform string (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile one HLO-text artifact under `name`.
+    pub fn load(&mut self, name: &str, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in a directory; returns the loaded names.
+    pub fn load_dir(&mut self, dir: impl AsRef<Path>) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        let rd = std::fs::read_dir(dir.as_ref())
+            .with_context(|| format!("artifact dir {}", dir.as_ref().display()))?;
+        let mut paths: Vec<PathBuf> = rd
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.ends_with(".hlo.txt")))
+            .collect();
+        paths.sort();
+        for p in paths {
+            let name = p
+                .file_name()
+                .unwrap()
+                .to_str()
+                .unwrap()
+                .trim_end_matches(".hlo.txt")
+                .to_string();
+            self.load(&name, &p)?;
+            names.push(name);
+        }
+        Ok(names)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.exes.keys().map(|s| s.as_str()).collect();
+        v.sort();
+        v
+    }
+
+    /// Execute an artifact on f32 inputs; returns the tuple of f32
+    /// outputs (artifacts are lowered with `return_tuple=True`).
+    pub fn execute(&self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not loaded (have: {:?})", self.names()))?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        outs.into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape()?;
+                let dims: Vec<i64> = shape.dims().to_vec();
+                let data = lit.to_vec::<f32>()?;
+                Ok(TensorF32 { dims, data })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A tiny hand-written HLO module: f(x, y) = (x + y,), f32[4].
+    const ADD_HLO: &str = r#"
+HloModule add4, entry_computation_layout={(f32[4]{0}, f32[4]{0})->(f32[4]{0})}
+
+ENTRY main {
+  x = f32[4]{0} parameter(0)
+  y = f32[4]{0} parameter(1)
+  s = f32[4]{0} add(x, y)
+  ROOT t = (f32[4]{0}) tuple(s)
+}
+"#;
+
+    fn write_artifact(name: &str, text: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("ckio_runtime_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, text).unwrap();
+        p
+    }
+
+    #[test]
+    fn load_and_execute_handwritten_hlo() {
+        let p = write_artifact("add4.hlo.txt", ADD_HLO);
+        let mut rt = ArtifactRuntime::cpu().unwrap();
+        rt.load("add4", &p).unwrap();
+        assert!(rt.has("add4"));
+        let x = TensorF32::new(vec![4], vec![1.0, 2.0, 3.0, 4.0]);
+        let y = TensorF32::new(vec![4], vec![10.0, 20.0, 30.0, 40.0]);
+        let out = rt.execute("add4", &[x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].data, vec![11.0, 22.0, 33.0, 44.0]);
+        assert_eq!(out[0].dims, vec![4]);
+    }
+
+    #[test]
+    fn missing_artifact_is_an_error() {
+        let rt = ArtifactRuntime::cpu().unwrap();
+        let err = rt.execute("nope", &[]).unwrap_err();
+        assert!(err.to_string().contains("not loaded"));
+    }
+
+    #[test]
+    fn load_dir_scans_artifacts() {
+        let dir = std::env::temp_dir().join("ckio_runtime_dir_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("a.hlo.txt"), ADD_HLO).unwrap();
+        std::fs::write(dir.join("ignored.txt"), "not hlo").unwrap();
+        let mut rt = ArtifactRuntime::cpu().unwrap();
+        let names = rt.load_dir(&dir).unwrap();
+        assert_eq!(names, vec!["a"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "dims/data mismatch")]
+    fn tensor_shape_checked() {
+        TensorF32::new(vec![2, 2], vec![1.0]);
+    }
+}

@@ -1,0 +1,188 @@
+//! Byte-quantity formatting/parsing and the data-plane `Chunk` type.
+
+use std::fmt;
+use std::sync::Arc;
+
+/// A contiguous span of file data moving through the system.
+///
+/// In *verified* runs the payload is materialized (`bytes: Some`) so tests
+/// can check end-to-end content integrity against the deterministic
+/// pattern in [`crate::pfs::pattern`]. In *modeled* runs at paper scale
+/// (multi-GiB files on the virtual cluster) the payload is elided and only
+/// the logical extent moves; every queueing/latency computation uses `len`.
+#[derive(Clone)]
+pub struct Chunk {
+    /// Absolute offset of this chunk within the file.
+    pub offset: u64,
+    /// Logical length in bytes.
+    pub len: u64,
+    /// Materialized payload (verified mode) or `None` (modeled mode).
+    pub bytes: Option<Arc<[u8]>>,
+}
+
+impl Chunk {
+    /// A modeled (payload-free) chunk.
+    pub fn modeled(offset: u64, len: u64) -> Chunk {
+        Chunk { offset, len, bytes: None }
+    }
+
+    /// A materialized chunk; `bytes.len()` must equal `len`.
+    pub fn materialized(offset: u64, bytes: Arc<[u8]>) -> Chunk {
+        Chunk { offset, len: bytes.len() as u64, bytes: Some(bytes) }
+    }
+
+    /// End offset (exclusive).
+    pub fn end(&self) -> u64 {
+        self.offset + self.len
+    }
+
+    /// Sub-chunk covering `[offset, offset+len)` in *file* coordinates.
+    ///
+    /// Panics if the requested range is not fully inside this chunk.
+    pub fn slice(&self, offset: u64, len: u64) -> Chunk {
+        assert!(
+            offset >= self.offset && offset + len <= self.end(),
+            "slice [{offset}, {}) outside chunk [{}, {})",
+            offset + len,
+            self.offset,
+            self.end()
+        );
+        let bytes = self.bytes.as_ref().map(|b| {
+            let lo = (offset - self.offset) as usize;
+            let hi = lo + len as usize;
+            Arc::from(&b[lo..hi])
+        });
+        Chunk { offset, len, bytes }
+    }
+
+    /// Whether this chunk intersects `[offset, offset+len)`.
+    pub fn overlaps(&self, offset: u64, len: u64) -> bool {
+        self.offset < offset + len && offset < self.end()
+    }
+}
+
+impl fmt::Debug for Chunk {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "Chunk[{}..{}) ({}, {})",
+            self.offset,
+            self.end(),
+            human_bytes(self.len),
+            if self.bytes.is_some() { "materialized" } else { "modeled" }
+        )
+    }
+}
+
+/// `1536 → "1.5 KiB"`.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 7] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB", "EiB"];
+    if n < 1024 {
+        return format!("{n} B");
+    }
+    let mut v = n as f64;
+    let mut unit = 0;
+    while v >= 1024.0 && unit < UNITS.len() - 1 {
+        v /= 1024.0;
+        unit += 1;
+    }
+    if (v - v.round()).abs() < 0.05 {
+        format!("{:.0} {}", v.round(), UNITS[unit])
+    } else {
+        format!("{:.1} {}", v, UNITS[unit])
+    }
+}
+
+/// Parse `"4GiB"`, `"512m"`, `"1048576"` and friends into bytes.
+pub fn parse_bytes(s: &str) -> Result<u64, String> {
+    let s = s.trim();
+    let split = s
+        .find(|c: char| !c.is_ascii_digit() && c != '.')
+        .unwrap_or(s.len());
+    let (num, suffix) = s.split_at(split);
+    let num: f64 = num
+        .parse()
+        .map_err(|_| format!("bad byte quantity: {s:?}"))?;
+    let mult: u64 = match suffix.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1,
+        "k" | "kb" | "kib" => 1 << 10,
+        "m" | "mb" | "mib" => 1 << 20,
+        "g" | "gb" | "gib" => 1 << 30,
+        "t" | "tb" | "tib" => 1 << 40,
+        other => return Err(format!("unknown byte suffix {other:?} in {s:?}")),
+    };
+    Ok((num * mult as f64).round() as u64)
+}
+
+/// Integer ceiling division.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_round_trip() {
+        assert_eq!(human_bytes(0), "0 B");
+        assert_eq!(human_bytes(1023), "1023 B");
+        assert_eq!(human_bytes(1024), "1 KiB");
+        assert_eq!(human_bytes(1536), "1.5 KiB");
+        assert_eq!(human_bytes(4 << 30), "4 GiB");
+    }
+
+    #[test]
+    fn parse_variants() {
+        assert_eq!(parse_bytes("1048576").unwrap(), 1 << 20);
+        assert_eq!(parse_bytes("4GiB").unwrap(), 4 << 30);
+        assert_eq!(parse_bytes("512m").unwrap(), 512 << 20);
+        assert_eq!(parse_bytes("1.5k").unwrap(), 1536);
+        assert_eq!(parse_bytes(" 2 GB ").unwrap(), 2 << 30);
+        assert!(parse_bytes("12xyz").is_err());
+        assert!(parse_bytes("").is_err());
+    }
+
+    #[test]
+    fn chunk_slice_materialized() {
+        let data: Arc<[u8]> = (0u8..100).collect::<Vec<_>>().into();
+        let c = Chunk::materialized(1000, data);
+        let s = c.slice(1010, 5);
+        assert_eq!(s.offset, 1010);
+        assert_eq!(s.len, 5);
+        assert_eq!(&s.bytes.unwrap()[..], &[10, 11, 12, 13, 14]);
+    }
+
+    #[test]
+    fn chunk_slice_modeled() {
+        let c = Chunk::modeled(0, 100);
+        let s = c.slice(50, 25);
+        assert_eq!(s.len, 25);
+        assert!(s.bytes.is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn chunk_slice_out_of_range() {
+        Chunk::modeled(0, 100).slice(90, 20);
+    }
+
+    #[test]
+    fn chunk_overlap() {
+        let c = Chunk::modeled(100, 50);
+        assert!(c.overlaps(100, 1));
+        assert!(c.overlaps(149, 10));
+        assert!(!c.overlaps(150, 10));
+        assert!(!c.overlaps(0, 100));
+        assert!(c.overlaps(0, 101));
+    }
+
+    #[test]
+    fn ceil_div_cases() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+}

@@ -1,0 +1,129 @@
+//! Minimal CLI argument parser (no clap in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed getters and a usage dump.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (first element must NOT be argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = items.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminates option parsing.
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().is_some_and(|n| !n.starts_with("--")) {
+                    out.options.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1)).expect("argv parse")
+    }
+
+    /// Whether `--name` was passed as a bare flag.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.get(name).is_some_and(|v| v == "true")
+    }
+
+    /// Raw string option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with a default.
+    pub fn get_or<T: std::str::FromStr>(&self, name: &str, default: T) -> T {
+        match self.options.get(name) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{name}: cannot parse {v:?}")),
+            None => default,
+        }
+    }
+
+    /// Required typed option.
+    pub fn require<T: std::str::FromStr>(&self, name: &str) -> T {
+        let v = self
+            .options
+            .get(name)
+            .unwrap_or_else(|| panic!("missing required option --{name}"));
+        v.parse()
+            .unwrap_or_else(|_| panic!("--{name}: cannot parse {v:?}"))
+    }
+
+    /// Byte-quantity option (`--file-size 4GiB`).
+    pub fn get_bytes_or(&self, name: &str, default: u64) -> u64 {
+        match self.options.get(name) {
+            Some(v) => super::parse_bytes(v).unwrap_or_else(|e| panic!("--{name}: {e}")),
+            None => default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("fig1 --nodes 16 --pes-per-node=32 --verify --file-size 4GiB pos2");
+        assert_eq!(a.positional, vec!["fig1", "pos2"]);
+        assert_eq!(a.get_or("nodes", 0u32), 16);
+        assert_eq!(a.get_or("pes-per-node", 0u32), 32);
+        assert!(a.flag("verify"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get_bytes_or("file-size", 0), 4 << 30);
+    }
+
+    #[test]
+    fn double_dash_terminates() {
+        let a = parse("--x 1 -- --not-an-option");
+        assert_eq!(a.get_or("x", 0u32), 1);
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+
+    #[test]
+    fn flag_at_end() {
+        let a = parse("--verbose");
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--a --b");
+        assert!(a.flag("a") && a.flag("b"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn require_missing_panics() {
+        parse("").require::<u32>("nodes");
+    }
+}

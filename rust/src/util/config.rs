@@ -1,0 +1,181 @@
+//! Tiny configuration-file parser (TOML subset; no serde in the offline
+//! crate set).
+//!
+//! Supports `[section]` headers, `key = value` pairs, `#` comments,
+//! strings (quoted or bare), integers, floats, booleans and byte
+//! quantities. All experiment drivers and the launcher read their cluster
+//! / PFS / CkIO parameters through this.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// A parsed config: `section.key -> raw string value`.
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut out = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section header", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected `key = value`", lineno + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut val = v.trim().to_string();
+            if val.len() >= 2 && val.starts_with('"') && val.ends_with('"') {
+                val = val[1..val.len() - 1].to_string();
+            }
+            out.values.insert(key, val);
+        }
+        Ok(out)
+    }
+
+    /// Load from a file path.
+    pub fn load(path: impl AsRef<Path>) -> Result<Config, String> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("{}: {e}", path.as_ref().display()))?;
+        Config::parse(&text)
+    }
+
+    /// Raw value lookup (`"pfs.ost_count"`).
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.values.get(key) {
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("config {key}: cannot parse {v:?}")),
+            None => default,
+        }
+    }
+
+    /// Boolean lookup (`true/false/1/0/yes/no`).
+    pub fn get_bool_or(&self, key: &str, default: bool) -> bool {
+        match self.values.get(key).map(|s| s.as_str()) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(v) => panic!("config {key}: not a boolean: {v:?}"),
+            None => default,
+        }
+    }
+
+    /// Byte-quantity lookup (`"4GiB"`).
+    pub fn get_bytes_or(&self, key: &str, default: u64) -> u64 {
+        match self.values.get(key) {
+            Some(v) => super::parse_bytes(v).unwrap_or_else(|e| panic!("config {key}: {e}")),
+            None => default,
+        }
+    }
+
+    /// Set a value programmatically (CLI overrides).
+    pub fn set(&mut self, key: &str, value: impl Into<String>) {
+        self.values.insert(key.to_string(), value.into());
+    }
+
+    /// All keys under a section prefix.
+    pub fn section_keys(&self, section: &str) -> Vec<&str> {
+        let prefix = format!("{section}.");
+        self.values
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect `#` inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# cluster shape
+[cluster]
+nodes = 16
+pes_per_node = 32
+
+[pfs]
+ost_count = 16         # Lustre "Ocean"-ish
+stripe_size = "4MiB"
+rpc_overhead_us = 250.5
+name = "ocean #1"
+
+[ckio]
+readers_per_node = 32
+verify = true
+"#;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.get_or("cluster.nodes", 0u32), 16);
+        assert_eq!(c.get_or("cluster.pes_per_node", 0u32), 32);
+        assert_eq!(c.get_or("pfs.ost_count", 0u32), 16);
+        assert_eq!(c.get_bytes_or("pfs.stripe_size", 0), 4 << 20);
+        assert!((c.get_or("pfs.rpc_overhead_us", 0.0f64) - 250.5).abs() < 1e-12);
+        assert!(c.get_bool_or("ckio.verify", false));
+        assert_eq!(c.get("pfs.name"), Some("ocean #1"));
+        assert_eq!(c.get("missing.key"), None);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.get_or("a.b", 7u32), 7);
+        assert!(!c.get_bool_or("a.c", false));
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set("cluster.nodes", "64");
+        assert_eq!(c.get_or("cluster.nodes", 0u32), 64);
+    }
+
+    #[test]
+    fn section_key_listing() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let keys = c.section_keys("pfs");
+        assert_eq!(keys.len(), 4);
+    }
+
+    #[test]
+    fn bad_lines_error() {
+        assert!(Config::parse("[unterminated").is_err());
+        assert!(Config::parse("no_equals_here").is_err());
+    }
+}

@@ -1,0 +1,17 @@
+//! Small self-contained utilities.
+//!
+//! The build environment is fully offline with a limited vendored crate
+//! set, so the conveniences a project would normally pull from crates.io
+//! (CLI parsing, config files, RNGs, stats, a bench harness, property
+//! testing) are implemented here from scratch.
+
+pub mod bytes;
+pub mod cli;
+pub mod config;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use bytes::{human_bytes, parse_bytes, Chunk};
+pub use rng::Pcg32;
+pub use stats::Summary;

@@ -1,0 +1,155 @@
+//! Mini property-based testing framework (no proptest in the offline
+//! crate set).
+//!
+//! `forall` runs a property over many seeded random cases; on failure it
+//! re-runs with progressively simpler size hints to report the smallest
+//! failing size (a lightweight stand-in for shrinking). Generators are
+//! plain closures over [`Pcg32`]; combinators cover the shapes the CkIO
+//! invariants need (ranges, vectors, partitions of a byte range).
+
+use super::rng::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    pub cases: u32,
+    pub seed: u64,
+    /// Maximum "size" hint passed to generators (scaled up over cases).
+    pub max_size: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 256, seed: 0xc1c0 ^ 0x5eed, max_size: 1 << 20 }
+    }
+}
+
+/// Per-case generation context: RNG + size hint.
+pub struct Gen<'a> {
+    pub rng: &'a mut Pcg32,
+    pub size: u64,
+}
+
+impl<'a> Gen<'a> {
+    /// Uniform in `[lo, hi)`.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        self.rng.gen_in(lo, hi)
+    }
+
+    /// Uniform in `[1, size]` — a "scale with case index" quantity.
+    pub fn sized(&mut self) -> u64 {
+        1 + self.rng.gen_range(self.size.max(1))
+    }
+
+    /// A vector of `n` items from `f`.
+    pub fn vec<T>(&mut self, n: usize, mut f: impl FnMut(&mut Self) -> T) -> Vec<T> {
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Random partition of `[0, total)` into `parts` contiguous spans
+    /// (some possibly empty). Returns (offset, len) pairs covering the
+    /// range exactly — the shape of client read decompositions.
+    pub fn partition(&mut self, total: u64, parts: usize) -> Vec<(u64, u64)> {
+        assert!(parts > 0);
+        let mut cuts: Vec<u64> = (0..parts - 1).map(|_| self.rng.gen_range(total + 1)).collect();
+        cuts.sort_unstable();
+        let mut out = Vec::with_capacity(parts);
+        let mut prev = 0;
+        for c in cuts {
+            out.push((prev, c - prev));
+            prev = c;
+        }
+        out.push((prev, total - prev));
+        out
+    }
+
+    /// True with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.rng.gen_f64() < p
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. Panics with the failing
+/// seed/case/size on the first failure (after probing smaller sizes).
+pub fn forall(cfg: PropConfig, name: &str, mut prop: impl FnMut(&mut Gen) -> Result<(), String>) {
+    for case in 0..cfg.cases {
+        // Size ramps up so early cases are small.
+        let size = (cfg.max_size * (case as u64 + 1) / cfg.cases as u64).max(1);
+        let mut rng = Pcg32::new(cfg.seed, case as u64);
+        let mut g = Gen { rng: &mut rng, size };
+        if let Err(msg) = prop(&mut g) {
+            // Probe smaller sizes with the same stream for a simpler report.
+            let mut simplest = (size, msg.clone());
+            let mut probe = size;
+            while probe > 1 {
+                probe /= 2;
+                let mut rng = Pcg32::new(cfg.seed, case as u64);
+                let mut g = Gen { rng: &mut rng, size: probe };
+                if let Err(m) = prop(&mut g) {
+                    simplest = (probe, m);
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property `{name}` failed: case={case} seed={:#x} size={} (simplest size {} -> {})",
+                cfg.seed, size, simplest.0, simplest.1
+            );
+        }
+    }
+}
+
+/// Assertion helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_exactly() {
+        forall(PropConfig { cases: 200, ..Default::default() }, "partition", |g| {
+            let total = g.sized();
+            let parts = g.range(1, 20) as usize;
+            let p = g.partition(total, parts);
+            prop_assert!(p.len() == parts, "wrong part count");
+            let mut pos = 0;
+            for &(o, l) in &p {
+                prop_assert!(o == pos, "gap at {o} expected {pos}");
+                pos = o + l;
+            }
+            prop_assert!(pos == total, "covered {pos} of {total}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always_fails` failed")]
+    fn failures_reported() {
+        forall(PropConfig { cases: 4, ..Default::default() }, "always_fails", |g| {
+            let v = g.sized();
+            prop_assert!(v == 0, "v={v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sized_scales_with_case() {
+        let mut max_seen = 0;
+        forall(PropConfig { cases: 64, max_size: 1000, ..Default::default() }, "scales", |g| {
+            let v = g.sized();
+            if v > max_seen {
+                max_seen = v;
+            }
+            Ok(())
+        });
+        assert!(max_seen > 100, "sizes never grew: {max_seen}");
+    }
+}

@@ -1,0 +1,155 @@
+//! AOT round-trip: load the JAX/Pallas-lowered HLO artifacts and check
+//! their numerics against an independent Rust-side reference. This is
+//! the full Layer-1/2 ⇄ Layer-3 bridge test; it requires
+//! `make artifacts` to have run (skips cleanly otherwise).
+
+use ckio::runtime::{ArtifactRuntime, TensorF32};
+
+const EPS2: f32 = 1e-4;
+
+/// Rust-side all-pairs gravity oracle (mirrors kernels/ref.py).
+fn gravity_ref(pos: &[f32], mass: &[f32], n: usize) -> Vec<f32> {
+    let mut acc = vec![0f32; n * 3];
+    for i in 0..n {
+        for j in 0..n {
+            let dx = [
+                pos[3 * j] - pos[3 * i],
+                pos[3 * j + 1] - pos[3 * i + 1],
+                pos[3 * j + 2] - pos[3 * i + 2],
+            ];
+            let r2 = dx[0] * dx[0] + dx[1] * dx[1] + dx[2] * dx[2] + EPS2;
+            let w = mass[j] / (r2 * r2.sqrt());
+            for k in 0..3 {
+                acc[3 * i + k] += w * dx[k];
+            }
+        }
+    }
+    acc
+}
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("gravity_n256.hlo.txt").exists().then_some(dir)
+}
+
+fn lcg(state: &mut u64) -> f32 {
+    *state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+    ((*state >> 40) as f32 / (1u64 << 24) as f32) - 0.5
+}
+
+#[test]
+fn gravity_artifact_matches_rust_reference() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut rt = ArtifactRuntime::cpu().unwrap();
+    rt.load("gravity_n256", dir.join("gravity_n256.hlo.txt")).unwrap();
+
+    let n = 256usize;
+    let mut st = 42u64;
+    let pos: Vec<f32> = (0..n * 3).map(|_| lcg(&mut st) * 2.0).collect();
+    let vel = vec![0f32; n * 3];
+    let mass: Vec<f32> = (0..n).map(|_| lcg(&mut st).abs() + 0.5).collect();
+    let dt = 1e-3f32;
+
+    let outs = rt
+        .execute(
+            "gravity_n256",
+            &[
+                TensorF32::new(vec![n as i64, 3], pos.clone()),
+                TensorF32::new(vec![n as i64, 3], vel.clone()),
+                TensorF32::new(vec![n as i64], mass.clone()),
+                TensorF32::scalar(dt),
+            ],
+        )
+        .unwrap();
+    // (pos', vel', acc, acc_norm)
+    assert_eq!(outs.len(), 4);
+    let acc = &outs[2];
+    assert_eq!(acc.dims, vec![n as i64, 3]);
+
+    let want = gravity_ref(&pos, &mass, n);
+    let mut max_abs: f32 = 0.0;
+    for (g, w) in acc.data.iter().zip(want.iter()) {
+        max_abs = max_abs.max((g - w).abs());
+    }
+    // f32 all-pairs with different summation orders: small tolerance.
+    assert!(max_abs < 2e-2, "max_abs={max_abs}");
+
+    // vel' = vel + dt*acc, pos' = pos + dt*vel'
+    for i in 0..n * 3 {
+        let v2 = vel[i] + dt * acc.data[i];
+        assert!((outs[1].data[i] - v2).abs() < 1e-4);
+        let p2 = pos[i] + dt * v2;
+        assert!((outs[0].data[i] - p2).abs() < 1e-4);
+    }
+    // acc_norm positive scalar
+    assert_eq!(outs[3].dims, vec![1]);
+    assert!(outs[3].data[0] > 0.0);
+}
+
+#[test]
+fn ingest_artifact_decodes_and_permutes() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut rt = ArtifactRuntime::cpu().unwrap();
+    rt.load("ingest_n256", dir.join("ingest_n256.hlo.txt")).unwrap();
+
+    let n = 256usize;
+    // raw[i][f] = i for all fields; idx reverses; scale=2, offset=f.
+    let mut raw = vec![0f32; n * 8];
+    for i in 0..n {
+        for f in 0..8 {
+            raw[i * 8 + f] = i as f32;
+        }
+    }
+    let idx: Vec<f32> = (0..n).rev().map(|i| i as f32).collect();
+    let scale = vec![2f32; 8];
+    let offset: Vec<f32> = (0..8).map(|f| f as f32).collect();
+
+    let outs = rt
+        .execute(
+            "ingest_n256",
+            &[
+                TensorF32::new(vec![n as i64, 8], raw),
+                TensorF32::new(vec![n as i64], idx),
+                TensorF32::new(vec![8], scale),
+                TensorF32::new(vec![8], offset),
+            ],
+        )
+        .unwrap();
+    // (fields, total_mass, com)
+    assert_eq!(outs.len(), 3);
+    let fields = &outs[0];
+    assert_eq!(fields.dims, vec![n as i64, 8]);
+    // Row i of output = decoded row idx[i] = (n-1-i): value*2 + f.
+    for i in 0..n {
+        let src = (n - 1 - i) as f32;
+        for f in 0..8 {
+            let want = src * 2.0 + f as f32;
+            let got = fields.data[i * 8 + f];
+            assert!((got - want).abs() < 1e-4, "row {i} field {f}: {got} vs {want}");
+        }
+    }
+    // total mass = sum over decoded field 0 = sum(2i) = n(n-1)
+    let total = outs[1].data[0];
+    let want_total = (n * (n - 1)) as f32;
+    assert!((total - want_total).abs() / want_total < 1e-5, "total={total}");
+}
+
+#[test]
+fn load_dir_finds_all_artifacts() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let mut rt = ArtifactRuntime::cpu().unwrap();
+    let names = rt.load_dir(&dir).unwrap();
+    assert!(names.iter().any(|n| n == "gravity_n256"));
+    assert!(names.iter().any(|n| n == "gravity_n4096"));
+    assert!(names.iter().any(|n| n == "ingest_n256"));
+    assert!(names.iter().any(|n| n == "ingest_n4096"));
+}

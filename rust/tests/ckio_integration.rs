@@ -1,0 +1,436 @@
+//! Integration tests: the full CkIO protocol over the AMT runtime and the
+//! simulated PFS, with end-to-end data verification, overlap behaviour,
+//! splintered I/O, migration, and the real-disk wall-clock path.
+
+use ckio::amt::callback::Callback;
+use ckio::amt::chare::{Chare, ChareRef};
+use ckio::amt::engine::{Ctx, Engine, EngineConfig};
+use ckio::amt::msg::{Ep, Msg, Payload};
+use ckio::amt::time::{Time, MILLIS};
+use ckio::amt::topology::{Pe, Placement};
+use ckio::ckio::{CkIo, Options, ReadResult, Session};
+use ckio::impl_chare_any;
+use ckio::pfs::{pattern, FileId, PfsConfig};
+
+// ---------------------------------------------------------------------
+// A test client chare: opens, starts a session, reads its slice (possibly
+// in several pieces), verifies the bytes, reports completion.
+// ---------------------------------------------------------------------
+
+const EP_GO: Ep = 1;
+const EP_OPENED: Ep = 2;
+const EP_READY: Ep = 3;
+const EP_DATA: Ep = 4;
+
+struct Client {
+    io: CkIo,
+    file: FileId,
+    file_size: u64,
+    /// My slice of the session.
+    my_offset: u64,
+    my_len: u64,
+    /// Read granularity (0 = single read).
+    piece: u64,
+    /// Set on the one client that drives open+session for everyone.
+    leader_for: Option<u32>, // number of clients
+    session: Option<Session>,
+    received: u64,
+    verify: bool,
+    done: Callback,
+    migrate_between_reads: Option<Pe>,
+}
+
+impl Client {
+    fn issue_reads(&mut self, ctx: &mut Ctx<'_>) {
+        let s = self.session.as_ref().unwrap();
+        let me = ctx.me();
+        let step = if self.piece == 0 { self.my_len } else { self.piece };
+        let mut o = self.my_offset;
+        while o < self.my_offset + self.my_len {
+            let l = step.min(self.my_offset + self.my_len - o);
+            self.io.read(ctx, s, o, l, Callback::to_chare(me, EP_DATA));
+            o += l;
+        }
+    }
+}
+
+impl Chare for Client {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_GO => {
+                // Only the leader opens the file + starts the session.
+                if self.leader_for.is_some() {
+                    let me = ctx.me();
+                    self.io.open(
+                        ctx,
+                        self.file,
+                        self.file_size,
+                        Options::with_readers(4),
+                        Callback::to_chare(me, EP_OPENED),
+                    );
+                }
+            }
+            EP_OPENED => {
+                let me = ctx.me();
+                self.io
+                    .start_read_session(ctx, self.file, 0, self.file_size, Callback::to_chare(me, EP_READY));
+            }
+            EP_READY => {
+                let s: Session = msg.take();
+                // Leader forwards the session handle to every client.
+                let n = self.leader_for.unwrap();
+                for i in 0..n {
+                    ctx.send(ChareRef::new(ctx.me().collection, i), EP_READY_FWD, s);
+                }
+            }
+            EP_READY_FWD => {
+                let s: Session = msg.take();
+                self.session = Some(s);
+                self.issue_reads(ctx);
+            }
+            EP_DATA => {
+                let r: ReadResult = msg.take();
+                if self.verify {
+                    let bytes = r.chunk.bytes.as_ref().expect("materialized run");
+                    assert_eq!(bytes.len() as u64, r.len);
+                    assert_eq!(
+                        pattern::verify(self.file, r.offset, bytes),
+                        None,
+                        "data corruption at offset {}",
+                        r.offset
+                    );
+                }
+                self.received += r.len;
+                assert!(self.received <= self.my_len, "over-delivery");
+                if let Some(dest) = self.migrate_between_reads.take() {
+                    ctx.migrate_me(dest);
+                }
+                if self.received == self.my_len {
+                    ctx.fire(self.done.clone(), Payload::new(self.received));
+                }
+            }
+            other => panic!("Client: unknown ep {other}"),
+        }
+    }
+    impl_chare_any!();
+}
+
+const EP_READY_FWD: Ep = 9;
+
+#[allow(clippy::too_many_arguments)]
+fn run_clients(
+    nodes: u32,
+    pes: u32,
+    nclients: u32,
+    file_size: u64,
+    piece: u64,
+    verify: bool,
+    migrate: bool,
+) -> (Time, Engine) {
+    let mut eng = Engine::new(EngineConfig::sim(nodes, pes)).with_sim_pfs(PfsConfig {
+        materialize: verify,
+        noise_sigma: 0.0,
+        ..PfsConfig::default()
+    });
+    let file = eng.core.sim_pfs_mut().create_file(file_size);
+    let io = CkIo::boot(&mut eng);
+    let fut = eng.future(nclients);
+    let per = file_size / nclients as u64;
+    assert_eq!(per * nclients as u64, file_size, "test wants an even split");
+    let npes = nodes * pes;
+    let cid = eng.create_array(nclients, &Placement::RoundRobinPes, |i| Client {
+        io,
+        file,
+        file_size,
+        my_offset: i as u64 * per,
+        my_len: per,
+        piece,
+        leader_for: if i == 0 { Some(nclients) } else { None },
+        session: None,
+        received: 0,
+        verify,
+        done: Callback::Future(fut),
+        migrate_between_reads: if migrate {
+            Some(Pe((i + npes / 2) % npes))
+        } else {
+            None
+        },
+    });
+    eng.inject_signal(ChareRef::new(cid, 0), EP_GO);
+    let end = eng.run();
+    assert!(eng.future_done(fut), "not all clients finished");
+    let total: u64 = eng
+        .take_future(fut)
+        .into_iter()
+        .map(|(_, mut p)| p.take::<u64>())
+        .sum();
+    assert_eq!(total, file_size, "every byte delivered exactly once");
+    (end, eng)
+}
+
+#[test]
+fn full_protocol_delivers_verified_data() {
+    let (end, eng) = run_clients(2, 2, 8, 4 << 20, 0, true, false);
+    assert!(end > 0);
+    let m = &eng.core.metrics;
+    assert_eq!(m.counter("ckio.reads_served"), 8);
+    assert_eq!(m.counter("ckio.bytes_delivered"), 4 << 20);
+    assert!(m.counter("ckio.sessions") == 1);
+}
+
+#[test]
+fn many_overdecomposed_clients() {
+    // 64 clients on 4 PEs (16× over-decomposition), multi-piece reads.
+    let (_, eng) = run_clients(2, 2, 64, 8 << 20, 32 << 10, true, false);
+    let m = &eng.core.metrics;
+    assert_eq!(m.counter("ckio.bytes_delivered"), 8 << 20);
+    // 8 MiB / 32 KiB = 256 reads.
+    assert_eq!(m.counter("ckio.reads_served"), 256);
+}
+
+#[test]
+fn reads_spanning_buffer_boundaries() {
+    // 3 clients over 4 buffers: client slices don't align with buffer
+    // spans, so some reads need pieces from 2 buffers.
+    let mut eng = Engine::new(EngineConfig::sim(1, 3)).with_sim_pfs(PfsConfig {
+        materialize: true,
+        noise_sigma: 0.0,
+        ..PfsConfig::default()
+    });
+    let size: u64 = 3 << 20;
+    let file = eng.core.sim_pfs_mut().create_file(size);
+    let io = CkIo::boot(&mut eng);
+    let fut = eng.future(3);
+    let per = size / 3;
+    let cid = eng.create_array(3, &Placement::RoundRobinPes, |i| Client {
+        io,
+        file,
+        file_size: size,
+        my_offset: i as u64 * per,
+        my_len: per,
+        piece: 0,
+        leader_for: if i == 0 { Some(3) } else { None },
+        session: None,
+        received: 0,
+        verify: true,
+        done: Callback::Future(fut),
+        migrate_between_reads: None,
+    });
+    eng.inject_signal(ChareRef::new(cid, 0), EP_GO);
+    eng.run();
+    assert!(eng.future_done(fut));
+}
+
+#[test]
+fn clients_migrate_between_reads() {
+    // Every client migrates to a different PE mid-stream; reads keep
+    // arriving correctly (location-managed callbacks).
+    let (_, eng) = run_clients(2, 2, 8, 4 << 20, 128 << 10, true, true);
+    let m = &eng.core.metrics;
+    assert_eq!(m.counter("ckio.bytes_delivered"), 4 << 20);
+    assert!(m.counter("amt.migrations") >= 8, "migrations happened");
+}
+
+#[test]
+fn splintered_session_serves_early() {
+    // With splintering, a read of the first bytes completes well before
+    // the whole buffer span has been read.
+    let run = |splinter: Option<u64>| -> Time {
+        let mut eng = Engine::new(EngineConfig::sim(1, 2)).with_sim_pfs(PfsConfig {
+            noise_sigma: 0.0,
+            ..PfsConfig::default()
+        });
+        let size: u64 = 256 << 20;
+        let file = eng.core.sim_pfs_mut().create_file(size);
+        let io = CkIo::boot(&mut eng);
+
+        struct FirstByte {
+            io: CkIo,
+            file: FileId,
+            size: u64,
+            splinter: Option<u64>,
+            done: Callback,
+        }
+        impl Chare for FirstByte {
+            fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+                match msg.ep {
+                    EP_GO => {
+                        let me = ctx.me();
+                        self.io.open(
+                            ctx,
+                            self.file,
+                            self.size,
+                            Options {
+                                num_readers: Some(1),
+                                splinter_bytes: self.splinter,
+                                ..Default::default()
+                            },
+                            Callback::to_chare(me, EP_OPENED),
+                        );
+                    }
+                    EP_OPENED => {
+                        let me = ctx.me();
+                        self.io.start_read_session(ctx, self.file, 0, self.size, Callback::to_chare(me, EP_READY));
+                    }
+                    EP_READY => {
+                        let s: Session = msg.take();
+                        let me = ctx.me();
+                        // Ask for only the first 1 MiB.
+                        self.io.read(ctx, &s, 0, 1 << 20, Callback::to_chare(me, EP_DATA));
+                    }
+                    EP_DATA => {
+                        let _r: ReadResult = msg.take();
+                        ctx.fire(self.done.clone(), Payload::empty());
+                    }
+                    other => panic!("unknown ep {other}"),
+                }
+            }
+            impl_chare_any!();
+        }
+
+        let fut = eng.future(1);
+        let c = eng.create_singleton(Pe(1), FirstByte {
+            io,
+            file,
+            size,
+            splinter,
+            done: Callback::Future(fut),
+        });
+        eng.inject_signal(c, EP_GO);
+        eng.run();
+        assert!(eng.future_done(fut));
+        eng.take_future(fut)[0].0
+    };
+    let whole = run(None);
+    let splintered = run(Some(8 << 20));
+    assert!(
+        splintered * 4 < whole,
+        "splintered first-read latency {splintered} should be ≪ whole-span {whole}"
+    );
+}
+
+#[test]
+fn session_close_releases_and_acks() {
+    struct Closer {
+        io: CkIo,
+        file: FileId,
+        size: u64,
+        done: Callback,
+    }
+    impl Chare for Closer {
+        fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+            match msg.ep {
+                EP_GO => {
+                    let me = ctx.me();
+                    self.io
+                        .open(ctx, self.file, self.size, Options::with_readers(2), Callback::to_chare(me, EP_OPENED));
+                }
+                EP_OPENED => {
+                    let me = ctx.me();
+                    self.io
+                        .start_read_session(ctx, self.file, 0, self.size, Callback::to_chare(me, EP_READY));
+                }
+                EP_READY => {
+                    let s: Session = msg.take();
+                    let me = ctx.me();
+                    self.io.close_read_session(ctx, s.id, Callback::to_chare(me, EP_CLOSED));
+                }
+                EP_CLOSED => {
+                    let me = ctx.me();
+                    self.io.close(ctx, self.file, Callback::to_chare(me, EP_FCLOSED));
+                }
+                EP_FCLOSED => ctx.fire(self.done.clone(), Payload::empty()),
+                other => panic!("unknown ep {other}"),
+            }
+        }
+        impl_chare_any!();
+    }
+    const EP_CLOSED: Ep = 7;
+    const EP_FCLOSED: Ep = 8;
+
+    let mut eng = Engine::new(EngineConfig::sim(2, 2)).with_sim_pfs(PfsConfig {
+        noise_sigma: 0.0,
+        ..PfsConfig::default()
+    });
+    let file = eng.core.sim_pfs_mut().create_file(16 << 20);
+    let io = CkIo::boot(&mut eng);
+    let fut = eng.future(1);
+    let c = eng.create_singleton(Pe(2), Closer { io, file, size: 16 << 20, done: Callback::Future(fut) });
+    eng.inject_signal(c, EP_GO);
+    eng.run();
+    assert!(eng.future_done(fut));
+}
+
+#[test]
+fn wall_clock_real_disk_ckio_round_trip() {
+    // Full CkIO stack over real files and real reader threads.
+    let dir = std::env::temp_dir().join("ckio_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("real_ckio.bin");
+    let size: u64 = 2 << 20;
+    std::fs::write(&path, pattern::make(FileId(0), 0, size)).unwrap();
+
+    let mut eng = Engine::new(EngineConfig::real(1, 2)).with_local_disk(2);
+    let file = eng.core.local_disk_mut().register_file(&path);
+    let io = CkIo::boot(&mut eng);
+    let fut = eng.future(4);
+    let per = size / 4;
+    let cid = eng.create_array(4, &Placement::RoundRobinPes, |i| Client {
+        io,
+        file,
+        file_size: size,
+        my_offset: i as u64 * per,
+        my_len: per,
+        piece: 256 << 10,
+        leader_for: if i == 0 { Some(4) } else { None },
+        session: None,
+        received: 0,
+        verify: true,
+        done: Callback::Future(fut),
+        migrate_between_reads: None,
+    });
+    eng.inject_signal(ChareRef::new(cid, 0), EP_GO);
+    eng.run();
+    assert!(eng.future_done(fut));
+}
+
+#[test]
+fn buffer_read_starts_before_clients_ask() {
+    // Greedy prefetch: with a session started but no reads issued, the
+    // PFS still sees the session bytes being read.
+    struct OnlyStart {
+        io: CkIo,
+        file: FileId,
+        size: u64,
+    }
+    impl Chare for OnlyStart {
+        fn receive(&mut self, ctx: &mut Ctx<'_>, msg: Msg) {
+            match msg.ep {
+                EP_GO => {
+                    let me = ctx.me();
+                    self.io
+                        .open(ctx, self.file, self.size, Options::with_readers(4), Callback::to_chare(me, EP_OPENED));
+                }
+                EP_OPENED => {
+                    self.io.start_read_session(ctx, self.file, 0, self.size, Callback::Ignore);
+                }
+                other => panic!("unknown ep {other}"),
+            }
+            drop(msg);
+        }
+        impl_chare_any!();
+    }
+    let mut eng = Engine::new(EngineConfig::sim(1, 2)).with_sim_pfs(PfsConfig {
+        noise_sigma: 0.0,
+        ..PfsConfig::default()
+    });
+    let file = eng.core.sim_pfs_mut().create_file(64 << 20);
+    let io = CkIo::boot(&mut eng);
+    let c = eng.create_singleton(Pe(0), OnlyStart { io, file, size: 64 << 20 });
+    eng.inject_signal(c, EP_GO);
+    let end = eng.run();
+    // All 64 MiB were prefetched with zero client reads.
+    assert_eq!(eng.core.metrics.counter("pfs.bytes_read"), 64 << 20);
+    assert_eq!(eng.core.metrics.counter("ckio.reads_served"), 0);
+    assert!(end > 10 * MILLIS);
+}

@@ -1,0 +1,427 @@
+//! Property-based tests over the coordinator's core invariants
+//! (routing, batching/assembly, session state), using the seeded
+//! mini-prop framework in `ckio::util::prop`.
+
+use ckio::amt::callback::Callback;
+use ckio::amt::chare::{Chare, ChareRef, CollectionId};
+use ckio::amt::engine::{Ctx, Engine, EngineConfig};
+use ckio::amt::msg::{Ep, Msg, Payload};
+use ckio::amt::topology::{Pe, Placement};
+use ckio::ckio::{CkIo, Options, ReadResult, Session, SessionId};
+use ckio::impl_chare_any;
+use ckio::pfs::{pattern, FileId, PfsConfig};
+use ckio::prop_assert;
+use ckio::util::prop::{forall, PropConfig};
+
+// ---------------------------------------------------------------------
+// Pure invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_session_spans_partition_exactly() {
+    forall(PropConfig { cases: 400, ..Default::default() }, "session_spans", |g| {
+        let offset = g.range(0, 1 << 30);
+        let bytes = 1 + g.sized();
+        let nbuf = g.range(1, 128) as u32;
+        let s = Session::new(SessionId(0), FileId(0), offset, bytes, CollectionId(0), nbuf);
+        let mut pos = offset;
+        for b in 0..nbuf {
+            let (o, l) = s.buffer_span(b);
+            prop_assert!(o == pos, "gap at buffer {b}: {o} != {pos}");
+            pos = o + l;
+        }
+        prop_assert!(pos == offset + bytes, "spans cover {pos}, want {}", offset + bytes);
+        // buffer_of agrees with buffer_span for random probes.
+        for _ in 0..8 {
+            let probe = g.range(offset, offset + bytes);
+            let b = s.buffer_of(probe);
+            let (o, l) = s.buffer_span(b);
+            prop_assert!(probe >= o && probe < o + l, "buffer_of({probe})={b} span [{o},{})", o + l);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rpc_extents_partition_and_stay_on_one_ost() {
+    use ckio::pfs::FileMeta;
+    forall(PropConfig { cases: 300, ..Default::default() }, "rpc_extents", |g| {
+        let stripe = 1 << g.range(12, 24); // 4 KiB .. 16 MiB
+        let size = stripe * g.range(1, 64) + g.range(1, stripe);
+        let meta = FileMeta {
+            id: FileId(0),
+            size,
+            stripe_size: stripe,
+            stripe_count: g.range(1, 16) as u32,
+            first_ost: g.range(0, 16) as u32,
+            path: None,
+        };
+        let offset = g.range(0, size);
+        let len = 1 + g.range(0, size - offset);
+        let rpc_max = 1 << g.range(12, 23);
+        let exts = meta.rpc_extents(offset, len, rpc_max);
+        let mut pos = offset;
+        for &(o, l) in &exts {
+            prop_assert!(o == pos, "extent gap: {o} != {pos}");
+            prop_assert!(l > 0 && l <= rpc_max, "bad extent len {l}");
+            prop_assert!(
+                meta.ost_of(o, 16) == meta.ost_of(o + l - 1, 16),
+                "extent [{o},{}) spans OSTs",
+                o + l
+            );
+            pos = o + l;
+        }
+        prop_assert!(pos == offset + len, "extents cover {pos}, want {}", offset + len);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pattern_slices_are_consistent() {
+    forall(PropConfig { cases: 200, max_size: 1 << 16, ..Default::default() }, "pattern", |g| {
+        let file = FileId(g.range(0, 8) as u32);
+        let off = g.range(0, 1 << 20);
+        let len = 1 + g.range(0, 4096);
+        let whole = pattern::make(file, off, len + 64);
+        let part = pattern::make(file, off + 13, (len + 13).min(len + 64) - 13);
+        prop_assert!(
+            whole[13..13 + part.len()] == part[..],
+            "slice mismatch at off={off} len={len}"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// End-to-end engine properties
+// ---------------------------------------------------------------------
+
+const EP_GO: Ep = 1;
+const EP_OPENED: Ep = 2;
+const EP_READY: Ep = 3;
+const EP_DATA: Ep = 4;
+const EP_FWD: Ep = 5;
+
+/// A client that reads an arbitrary list of (offset, len) extents,
+/// optionally migrating between reads, verifying every byte.
+struct FuzzClient {
+    io: CkIo,
+    file: FileId,
+    file_size: u64,
+    index: u32,
+    peers: CollectionId,
+    n_peers: u32,
+    extents: Vec<(u64, u64)>,
+    next: usize,
+    migrate_every: Option<u32>,
+    reads_done: u32,
+    session: Option<Session>,
+    done: Callback,
+    opts: Options,
+}
+
+impl FuzzClient {
+    fn issue_or_finish(&mut self, ctx: &mut Ctx<'_>) {
+        // Skip empty extents.
+        while self.next < self.extents.len() && self.extents[self.next].1 == 0 {
+            self.next += 1;
+        }
+        if self.next >= self.extents.len() {
+            let done = self.done.clone();
+            ctx.fire(done, Payload::new(self.reads_done));
+            return;
+        }
+        let (o, l) = self.extents[self.next];
+        self.next += 1;
+        let s = *self.session.as_ref().unwrap();
+        let me = ctx.me();
+        let io = self.io;
+        io.read(ctx, &s, o, l, Callback::to_chare(me, EP_DATA));
+    }
+}
+
+impl Chare for FuzzClient {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_GO => {
+                let me = ctx.me();
+                let (io, file, size, opts) = (self.io, self.file, self.file_size, self.opts.clone());
+                io.open(ctx, file, size, opts, Callback::to_chare(me, EP_OPENED));
+            }
+            EP_OPENED => {
+                let me = ctx.me();
+                let (io, file, size) = (self.io, self.file, self.file_size);
+                io.start_read_session(ctx, file, 0, size, Callback::to_chare(me, EP_READY));
+            }
+            EP_READY | EP_FWD => {
+                let s: Session = msg.take();
+                if msg.ep == EP_READY {
+                    for j in 0..self.n_peers {
+                        if j != self.index {
+                            ctx.send(ChareRef::new(self.peers, j), EP_FWD, s);
+                        }
+                    }
+                }
+                self.session = Some(s);
+                self.issue_or_finish(ctx);
+            }
+            EP_DATA => {
+                let r: ReadResult = msg.take();
+                let bytes = r.chunk.bytes.as_ref().expect("materialized");
+                assert_eq!(bytes.len() as u64, r.len);
+                assert_eq!(
+                    pattern::verify(self.file, r.offset, bytes),
+                    None,
+                    "corrupt read at {} len {}",
+                    r.offset,
+                    r.len
+                );
+                self.reads_done += 1;
+                if let Some(k) = self.migrate_every {
+                    if self.reads_done % k == 0 {
+                        let npes = ctx.topo().npes();
+                        let dest = Pe((ctx.pe().0 + 1 + self.reads_done % 3) % npes);
+                        ctx.migrate_me(dest);
+                    }
+                }
+                self.issue_or_finish(ctx);
+            }
+            other => panic!("FuzzClient: unknown ep {other}"),
+        }
+    }
+    impl_chare_any!();
+}
+
+/// THE core property: for random cluster shapes, file sizes, reader
+/// counts, splinter settings, random per-client extent lists (a random
+/// partition of the file so global coverage is exact), and random
+/// migration cadences — every byte is delivered exactly once, with
+/// correct contents, and the run quiesces.
+#[test]
+fn prop_ckio_delivers_every_byte_exactly_once() {
+    forall(PropConfig { cases: 40, max_size: 4 << 20, seed: 0xF00D, ..Default::default() }, "ckio_e2e", |g| {
+        let nodes = g.range(1, 4) as u32;
+        let pes = g.range(1, 4) as u32;
+        let file_size = 4096 + g.sized(); // up to ~4 MiB
+        let nclients = g.range(1, 16) as u32;
+        let readers = g.range(1, 8) as u32;
+        let splinter = if g.chance(0.4) { Some(1 + g.range(0, file_size)) } else { None };
+        let migrate = if g.chance(0.4) { Some(1 + g.range(0, 3) as u32) } else { None };
+
+        let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(g.range(0, 1 << 20)))
+            .with_sim_pfs(PfsConfig {
+                materialize: true,
+                noise_sigma: 0.02,
+                ..PfsConfig::default()
+            });
+        let file = eng.core.sim_pfs_mut().create_file(file_size);
+        let io = CkIo::boot(&mut eng);
+        let fut = eng.future(nclients);
+
+        // Random partition of the file across clients; each client then
+        // splits its slice into 1..4 random sub-reads.
+        let slices = g.partition(file_size, nclients as usize);
+        let mut extents_per_client: Vec<Vec<(u64, u64)>> = Vec::new();
+        for &(o, l) in &slices {
+            if l == 0 {
+                extents_per_client.push(vec![]);
+                continue;
+            }
+            let pieces = g.range(1, 4) as usize;
+            let sub = g.partition(l, pieces);
+            extents_per_client.push(sub.into_iter().map(|(so, sl)| (o + so, sl)).collect());
+        }
+
+        let opts = Options {
+            num_readers: Some(readers),
+            splinter_bytes: splinter,
+            ..Default::default()
+        };
+        let cid = eng.create_array(nclients, &Placement::RoundRobinPes, |i| FuzzClient {
+            io,
+            file,
+            file_size,
+            index: i,
+            peers: CollectionId(u32::MAX),
+            n_peers: nclients,
+            extents: extents_per_client[i as usize].clone(),
+            next: 0,
+            migrate_every: migrate,
+            reads_done: 0,
+            session: None,
+            done: Callback::Future(fut),
+            opts: opts.clone(),
+        });
+        for i in 0..nclients {
+            eng.chare_mut::<FuzzClient>(ChareRef::new(cid, i)).peers = cid;
+        }
+        eng.inject_signal(ChareRef::new(cid, 0), EP_GO);
+        eng.run();
+        prop_assert!(eng.future_done(fut), "run did not complete (deadlock?)");
+        let delivered = eng.core.metrics.counter("ckio.bytes_delivered");
+        prop_assert!(
+            delivered == file_size,
+            "delivered {delivered} of {file_size} bytes (readers={readers} splinter={splinter:?} migrate={migrate:?})"
+        );
+        Ok(())
+    });
+}
+
+/// Location management under randomized migration storms: messages for
+/// a chare that keeps moving are always delivered, exactly once each.
+#[test]
+fn prop_messages_chase_migrating_chares() {
+    struct Hopper {
+        seen: u32,
+        hops: Vec<Pe>,
+        next_hop: usize,
+        done: Callback,
+        expect: u32,
+    }
+    const EP_POKE: Ep = 1;
+    impl Chare for Hopper {
+        fn receive(&mut self, ctx: &mut Ctx<'_>, msg: Msg) {
+            assert_eq!(msg.ep, EP_POKE);
+            self.seen += 1;
+            if self.next_hop < self.hops.len() {
+                let d = self.hops[self.next_hop];
+                self.next_hop += 1;
+                if d != ctx.pe() {
+                    ctx.migrate_me(d);
+                }
+            }
+            if self.seen == self.expect {
+                let done = self.done.clone();
+                ctx.fire(done, Payload::new(self.seen));
+            }
+        }
+        impl_chare_any!();
+    }
+
+    forall(PropConfig { cases: 60, ..Default::default() }, "migration_storm", |g| {
+        let nodes = g.range(1, 4) as u32;
+        let pes = g.range(1, 4) as u32;
+        let npes = nodes * pes;
+        let n_msgs = g.range(1, 40) as u32;
+        let hops: Vec<Pe> = (0..g.range(0, 20)).map(|_| Pe(g.range(0, npes as u64) as u32)).collect();
+
+        let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(g.range(0, 1 << 20)));
+        let fut = eng.future(1);
+        let cid = eng.create_array(1, &Placement::RoundRobinPes, |_| Hopper {
+            seen: 0,
+            hops: hops.clone(),
+            next_hop: 0,
+            done: Callback::Future(fut),
+            expect: n_msgs,
+        });
+        let target = ChareRef::new(cid, 0);
+        for _ in 0..n_msgs {
+            eng.inject_signal(target, EP_POKE);
+        }
+        eng.run();
+        prop_assert!(eng.future_done(fut), "messages lost under migration");
+        let seen = eng.chare::<Hopper>(target).seen;
+        prop_assert!(seen == n_msgs, "delivered {seen} of {n_msgs}");
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Failure / race injection
+// ---------------------------------------------------------------------
+
+/// Closing a session while buffer prefetch reads are still in flight
+/// must not crash or leak: late completions are dropped.
+#[test]
+fn close_session_races_inflight_prefetch() {
+    struct Closer {
+        io: CkIo,
+        file: FileId,
+        size: u64,
+        done: Callback,
+    }
+    const EP_CLOSED: Ep = 7;
+    impl Chare for Closer {
+        fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+            match msg.ep {
+                EP_GO => {
+                    let me = ctx.me();
+                    let (io, file, size) = (self.io, self.file, self.size);
+                    io.open(ctx, file, size, Options::with_readers(4), Callback::to_chare(me, EP_OPENED));
+                }
+                EP_OPENED => {
+                    let me = ctx.me();
+                    let (io, file, size) = (self.io, self.file, self.size);
+                    io.start_read_session(ctx, file, 0, size, Callback::to_chare(me, EP_READY));
+                }
+                EP_READY => {
+                    // Close immediately: the buffers' greedy reads (256 MiB
+                    // span each) are certainly still in the PFS queues.
+                    let s: Session = msg.take();
+                    let me = ctx.me();
+                    let io = self.io;
+                    io.close_read_session(ctx, s.id, Callback::to_chare(me, EP_CLOSED));
+                }
+                EP_CLOSED => {
+                    let done = self.done.clone();
+                    ctx.fire(done, Payload::empty());
+                }
+                other => panic!("unknown ep {other}"),
+            }
+        }
+        impl_chare_any!();
+    }
+
+    let mut eng = Engine::new(EngineConfig::sim(2, 2)).with_sim_pfs(PfsConfig::default());
+    let file = eng.core.sim_pfs_mut().create_file(1 << 30);
+    let io = CkIo::boot(&mut eng);
+    let fut = eng.future(1);
+    let c = eng.create_singleton(Pe(1), Closer { io, file, size: 1 << 30, done: Callback::Future(fut) });
+    eng.inject_signal(c, EP_GO);
+    eng.run(); // must quiesce without panicking on late completions
+    assert!(eng.future_done(fut));
+}
+
+/// Reads that race ahead of the session announcement on a PE are held by
+/// the manager and served once the announcement lands.
+#[test]
+fn early_reads_are_buffered_by_manager() {
+    use ckio::ckio::manager::{Manager, ReadMsg, EP_M_READ};
+
+    let mut eng = Engine::new(EngineConfig::sim(1, 2)).with_sim_pfs(PfsConfig {
+        materialize: true,
+        ..PfsConfig::default()
+    });
+    let file = eng.core.sim_pfs_mut().create_file(1 << 20);
+    let io = CkIo::boot(&mut eng);
+    let fut = eng.future(1);
+
+    // Inject a read for a session id that will be announced by a
+    // concurrent open+start driven from the driver.
+    io.open_driver(&mut eng, file, 1 << 20, Options::with_readers(2), Callback::Ignore);
+    // The director assigns session ids sequentially from 0.
+    eng.inject(
+        ChareRef::new(io.managers, 0),
+        EP_M_READ,
+        ReadMsg { session: SessionId(0), offset: 0, len: 4096, after: Callback::Future(fut) },
+    );
+    // Start the session (driver-side) after the early read is in flight.
+    io.start_session_driver(&mut eng, file, 0, 1 << 20, Callback::Ignore);
+    eng.run();
+    assert!(eng.future_done(fut), "early read was never served");
+    // Manager state is clean (no stuck early queue).
+    let mgr: &Manager = eng.chare(ChareRef::new(io.managers, 0));
+    assert!(mgr.knows_session(SessionId(0)));
+}
+
+/// Zero-length client slices and 1-byte files: degenerate shapes hold.
+#[test]
+fn degenerate_shapes() {
+    // 1-byte file, 1 client, 1 reader.
+    let (t, eng) = ckio::harness::experiments::run_ckio_read(1, 1, 1, 1, Options::with_readers(1), 3);
+    assert!(t > 0);
+    assert_eq!(eng.core.metrics.counter("ckio.bytes_delivered"), 1);
+    // More readers than bytes: clamped, still correct.
+    let (_, eng) = ckio::harness::experiments::run_ckio_read(1, 2, 7, 3, Options::with_readers(64), 4);
+    assert_eq!(eng.core.metrics.counter("ckio.bytes_delivered"), 7);
+}
