@@ -28,6 +28,7 @@ fn main() {
         ("sec5_breakdown", Box::new(move || exp::sec5_breakdown(reps))),
         ("ablation_splinter", Box::new(move || exp::ablation_splinter(reps))),
         ("ablation_autoreaders", Box::new(move || exp::ablation_autoreaders(reps))),
+        ("svc_concurrent", Box::new(move || exp::svc_concurrent(reps))),
     ];
 
     let total = std::time::Instant::now();
@@ -41,6 +42,13 @@ fn main() {
         match table.write_csv("bench_out", slug) {
             Ok(p) => println!("[csv] {} ({:.1}s wall)\n", p.display(), started.elapsed().as_secs_f64()),
             Err(e) => eprintln!("csv write failed for {slug}: {e}"),
+        }
+    }
+    // Machine-readable perf anchor for the concurrency work (PR 1).
+    if wanted.is_empty() || wanted.iter().any(|w| "svc_concurrent".contains(w.as_str())) {
+        match std::fs::write("BENCH_pr1.json", exp::bench_pr1_json(reps)) {
+            Ok(()) => println!("[json] BENCH_pr1.json"),
+            Err(e) => eprintln!("BENCH_pr1.json write failed: {e}"),
         }
     }
     println!("total bench wall time: {:.1}s", total.elapsed().as_secs_f64());

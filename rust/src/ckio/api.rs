@@ -60,6 +60,13 @@ impl CkIo {
     // ------------------------------------------------------------------
 
     /// Open `file`; `opened` receives a [`super::session::FileHandle`].
+    ///
+    /// Opens are refcounted per file: concurrent or repeated opens share
+    /// one metadata transaction, and **the first opener's `opts` govern
+    /// the file** (like flags on a shared POSIX descriptor) — a later
+    /// open's `opts` are not applied while the file is already open. The
+    /// handle delivered to `opened` carries the options actually in
+    /// effect.
     pub fn open(&self, ctx: &mut Ctx<'_>, file: FileId, size: u64, opts: Options, opened: Callback) {
         ctx.send(self.director, EP_DIR_OPEN, OpenMsg { file, size, opts, opened });
     }
@@ -126,5 +133,12 @@ impl CkIo {
     /// Driver-side session close.
     pub fn close_session_driver(&self, engine: &mut Engine, session: SessionId, after: Callback) {
         engine.inject(self.director, EP_DIR_CLOSE_SESSION, CloseSessionMsg { session, after });
+    }
+
+    /// Driver-side file close (drops one refcount, like [`CkIo::close`];
+    /// pairs with [`CkIo::open_driver`] for drivers that hold a file open
+    /// across several sessions).
+    pub fn close_file_driver(&self, engine: &mut Engine, file: FileId, after: Callback) {
+        engine.inject(self.director, EP_DIR_CLOSE_FILE, CloseFileMsg { file, after });
     }
 }

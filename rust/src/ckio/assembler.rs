@@ -6,6 +6,13 @@
 //! over-decomposition), issues fetches, assembles the arriving pieces,
 //! and fires the client's `after_read` continuation — which, being a
 //! location-managed callback, follows the client across migrations.
+//!
+//! Concurrency (PR 1): assemblies are keyed by session-namespaced
+//! [`Tag`]s, so concurrent sessions cannot collide. The director notifies
+//! assemblers when a session is torn down; a piece arriving for an
+//! unknown tag of a *closed* session (the drop drained it concurrently)
+//! is counted and discarded, while an unknown tag of a live session still
+//! panics — that would be a real protocol bug.
 
 use std::collections::HashMap;
 
@@ -19,17 +26,19 @@ use crate::metrics::keys;
 use crate::util::bytes::Chunk;
 
 use super::buffer::{FetchMsg, PieceMsg, EP_BUF_FETCH};
-use super::session::{ReadResult, Session};
+use super::session::{ClosedSessions, ReadResult, Session, SessionId, Tag};
 
 /// A read request forwarded from the local manager.
 pub const EP_A_REQ: Ep = 1;
 /// A piece arriving from a buffer chare.
 pub const EP_A_PIECE: Ep = 2;
+/// Director: a session is being torn down (tolerate its late pieces).
+pub const EP_A_SESSION_DROP: Ep = 3;
 
 /// Manager → assembler: perform this read.
 #[derive(Debug)]
 pub struct AssembleReq {
-    pub tag: u64,
+    pub tag: Tag,
     pub session: Session,
     pub offset: u64,
     pub len: u64,
@@ -38,7 +47,7 @@ pub struct AssembleReq {
 
 #[derive(Debug)]
 struct Assembly {
-    session: super::session::SessionId,
+    session: SessionId,
     offset: u64,
     len: u64,
     remaining: u32,
@@ -50,13 +59,16 @@ struct Assembly {
 /// Per-PE read assembler.
 #[derive(Default)]
 pub struct ReadAssembler {
-    assemblies: HashMap<u64, Assembly>,
+    assemblies: HashMap<Tag, Assembly>,
+    /// Sessions known to be torn down (late-piece tolerance; bounded —
+    /// see [`ClosedSessions`]).
+    closed: ClosedSessions,
     /// Total reads assembled (inspection).
     pub completed: u64,
 }
 
 impl ReadAssembler {
-    fn finish(&mut self, ctx: &mut Ctx<'_>, tag: u64) {
+    fn finish(&mut self, ctx: &mut Ctx<'_>, tag: Tag) {
         let a = self.assemblies.remove(&tag).expect("finishing unknown assembly");
         let chunk = merge(a.pieces, a.offset, a.len);
         self.completed += 1;
@@ -70,6 +82,12 @@ impl ReadAssembler {
             a.after,
             Payload::new(ReadResult { session: a.session, offset: a.offset, len: a.len, chunk, tag }),
         );
+    }
+
+    /// In-flight assembly count (leak checks in tests: must be 0 after
+    /// all sessions close).
+    pub fn outstanding(&self) -> usize {
+        self.assemblies.len()
     }
 }
 
@@ -124,15 +142,29 @@ impl Chare for ReadAssembler {
             }
             EP_A_PIECE => {
                 let piece: PieceMsg = msg.take();
-                let a = self
-                    .assemblies
-                    .get_mut(&piece.tag)
-                    .expect("piece for unknown assembly (tag reuse or drop race)");
+                let Some(a) = self.assemblies.get_mut(&piece.tag) else {
+                    if self.closed.contains(&piece.tag.session) {
+                        // Teardown race: this read already completed via
+                        // the drain path and a duplicate/late piece
+                        // arrived afterwards. Tolerated, never delivered.
+                        ctx.metrics().count("ckio.pieces_after_close", 1);
+                        return;
+                    }
+                    panic!("piece for unknown assembly (tag reuse or drop race): {:?}", piece.tag);
+                };
                 a.pieces.push(piece.chunk);
                 a.remaining -= 1;
                 if a.remaining == 0 {
                     self.finish(ctx, piece.tag);
                 }
+            }
+            EP_A_SESSION_DROP => {
+                let sid: SessionId = msg.take();
+                self.closed.insert(sid);
+                // Note: assemblies of `sid` still in flight are NOT
+                // purged — the teardown drain guarantees each of their
+                // pending fetches is answered (resident data or a modeled
+                // NACK), so every one completes exactly once.
             }
             other => panic!("ReadAssembler: unknown ep {other}"),
         }
@@ -144,8 +176,8 @@ impl Chare for ReadAssembler {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::pfs::pattern;
     use crate::pfs::layout::FileId;
+    use crate::pfs::pattern;
 
     #[test]
     fn merge_single_piece_passthrough() {

@@ -11,6 +11,16 @@
 //! Splintered I/O (paper §VI.C) is supported: with
 //! `Options::splinter_bytes` set, the span is read in sub-chunks and a
 //! fetch is served as soon as the splinters covering it have arrived.
+//!
+//! Lifecycle (PR 1): a buffer chare is `Active` while its session runs.
+//! Teardown *drains* — every queued fetch is answered before the director
+//! is acked (resident extents with real data, the rest with modeled NACK
+//! chunks), so a `closeReadSession` racing outstanding reads can never
+//! strand an assembly. A fetch that arrives *after* the drop (it was in
+//! flight when the drop landed) is flush-served the same way. With
+//! `Options::reuse_buffers`, teardown *parks* instead: resident data is
+//! kept and a later identical session rebinds the array without touching
+//! the file system again.
 
 use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
@@ -25,7 +35,7 @@ use crate::pfs::backend::{IoResult, ReadRequest};
 use crate::pfs::layout::FileId;
 use crate::util::bytes::{ceil_div, Chunk};
 
-use super::session::SessionId;
+use super::session::{SessionId, Tag};
 
 /// Kick a freshly created buffer chare: issue its greedy reads.
 pub const EP_BUF_INIT: Ep = 1;
@@ -33,13 +43,17 @@ pub const EP_BUF_INIT: Ep = 1;
 pub const EP_BUF_DATA: Ep = 2;
 /// A ReadAssembler requests a sub-extent.
 pub const EP_BUF_FETCH: Ep = 3;
-/// Session teardown: release memory, ack the director.
+/// Session teardown: drain pending fetches, release memory, ack.
 pub const EP_BUF_DROP: Ep = 4;
+/// Session teardown with reuse: drain, keep resident data, ack.
+pub const EP_BUF_PARK: Ep = 5;
+/// Revive a parked buffer under a new session id (payload: `SessionId`).
+pub const EP_BUF_REBIND: Ep = 6;
 
 /// Fetch request from an assembler.
 #[derive(Debug)]
 pub struct FetchMsg {
-    pub tag: u64,
+    pub tag: Tag,
     /// File-coordinate extent (already clipped to this buffer's span).
     pub offset: u64,
     pub len: u64,
@@ -50,20 +64,33 @@ pub struct FetchMsg {
 /// Piece sent to an assembler (zero-copy payload).
 #[derive(Debug)]
 pub struct PieceMsg {
-    pub tag: u64,
+    pub tag: Tag,
     pub chunk: Chunk,
 }
 
-/// Notification to the director that this buffer initiated its reads.
+/// Notification to the director that this buffer initiated its reads
+/// (or, on rebind, that it is serving again).
 #[derive(Debug)]
 pub struct BufStartedMsg {
     pub session: SessionId,
 }
 
-/// Ack to the director after dropping session state.
+/// Ack to the director after dropping/parking session state.
 #[derive(Debug)]
 pub struct BufDroppedMsg {
     pub session: SessionId,
+}
+
+/// Lifecycle state of a buffer chare.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+enum BufState {
+    /// Serving a live session.
+    Active,
+    /// Session closed with `reuse_buffers`: data retained for rebind.
+    Parked,
+    /// Session closed: data released; late fetches are flush-served
+    /// with modeled NACK chunks, late I/O completions discarded.
+    Dropped,
 }
 
 /// One buffer chare.
@@ -84,7 +111,7 @@ pub struct BufferChare {
     pending: Vec<FetchMsg>,
     director: ChareRef,
     assemblers: CollectionId,
-    dropped: bool,
+    state: BufState,
 }
 
 impl BufferChare {
@@ -118,7 +145,7 @@ impl BufferChare {
             pending: Vec::new(),
             director,
             assemblers,
-            dropped: false,
+            state: BufState::Active,
         }
     }
 
@@ -181,6 +208,30 @@ impl BufferChare {
         );
     }
 
+    /// Answer a fetch that can no longer be served with data (teardown):
+    /// a modeled NACK chunk so the assembly still completes exactly once.
+    fn serve_nack(&self, ctx: &mut Ctx<'_>, f: &FetchMsg) {
+        ctx.metrics().count("ckio.pieces_nacked", 1);
+        let to = ChareRef::new(self.assemblers, f.reply_pe.0);
+        ctx.send(
+            to,
+            super::assembler::EP_A_PIECE,
+            PieceMsg { tag: f.tag, chunk: Chunk::modeled(f.offset, f.len) },
+        );
+    }
+
+    /// Teardown drain: answer every queued fetch exactly once — resident
+    /// extents with data, the rest as NACKs — before acking the director.
+    fn drain_pending(&mut self, ctx: &mut Ctx<'_>) {
+        for f in std::mem::take(&mut self.pending) {
+            if self.have(f.offset, f.len) {
+                self.serve(ctx, &f);
+            } else {
+                self.serve_nack(ctx, &f);
+            }
+        }
+    }
+
     /// Build the chunk for `[offset, offset+len)` from resident splinters.
     fn extract(&self, offset: u64, len: u64) -> Chunk {
         let slots = self.slots_for(offset, len);
@@ -208,6 +259,21 @@ impl BufferChare {
             Chunk::materialized(offset, bytes.unwrap().into())
         }
     }
+
+    /// Queued fetch count (leak checks in tests).
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Whether teardown released this chare's data.
+    pub fn is_dropped(&self) -> bool {
+        self.state == BufState::Dropped
+    }
+
+    /// Bytes currently resident (parked-cache inspection).
+    pub fn resident_bytes(&self) -> u64 {
+        self.chunks.iter().flatten().map(|c| c.len).sum()
+    }
 }
 
 impl Chare for BufferChare {
@@ -226,9 +292,11 @@ impl Chare for BufferChare {
             }
             EP_BUF_DATA => {
                 let r: IoResult = msg.take();
-                if self.dropped {
+                if self.state == BufState::Dropped {
                     return; // late completion after teardown
                 }
+                // Active or Parked: keep filling (a parked buffer keeps
+                // warming its cache for the next rebind).
                 let slot = r.user as usize;
                 debug_assert!(self.chunks[slot].is_none(), "duplicate splinter completion");
                 self.chunks[slot] = Some(r.chunk);
@@ -260,19 +328,53 @@ impl Chare for BufferChare {
                     self.my_offset + self.my_len
                 );
                 ctx.metrics().count("ckio.fetches", 1);
-                if self.have(f.offset, f.len) {
+                if self.state == BufState::Dropped {
+                    // The fetch was in flight when the drop landed:
+                    // flush-serve so its assembly still completes.
+                    ctx.metrics().count("ckio.fetch_after_drop", 1);
+                    if self.have(f.offset, f.len) {
+                        self.serve(ctx, &f);
+                    } else {
+                        self.serve_nack(ctx, &f);
+                    }
+                } else if self.have(f.offset, f.len) {
                     self.serve(ctx, &f);
                 } else {
                     self.pending.push(f);
                 }
             }
             EP_BUF_DROP => {
+                self.drain_pending(ctx);
                 self.chunks.iter_mut().for_each(|c| *c = None);
-                self.pending.clear();
-                self.dropped = true;
+                self.state = BufState::Dropped;
                 ctx.advance(MICROS / 2);
                 ctx.send(self.director, super::director::EP_DIR_DROP_ACK, BufDroppedMsg {
                     session: self.session,
+                });
+            }
+            EP_BUF_PARK => {
+                self.drain_pending(ctx);
+                self.state = BufState::Parked;
+                ctx.advance(MICROS / 2);
+                ctx.send(self.director, super::director::EP_DIR_DROP_ACK, BufDroppedMsg {
+                    session: self.session,
+                });
+            }
+            EP_BUF_REBIND => {
+                let sid: SessionId = msg.take();
+                debug_assert!(
+                    self.state == BufState::Parked,
+                    "rebind of a non-parked buffer ({:?})",
+                    self.state
+                );
+                self.session = sid;
+                self.state = BufState::Active;
+                ctx.metrics().count("ckio.buffers_rebound", 1);
+                ctx.advance(MICROS / 2);
+                // Resident data makes this chare immediately serviceable;
+                // any still-outstanding prefetch completions keep landing.
+                ctx.send(self.director, super::director::EP_DIR_BUF_STARTED, BufStartedMsg {
+                    session: sid,
                 });
             }
             other => panic!("BufferChare: unknown ep {other}"),
@@ -361,5 +463,13 @@ mod tests {
         let c = b.extract(1025, 40);
         assert!(c.bytes.is_none());
         assert_eq!(c.len, 40);
+    }
+
+    #[test]
+    fn fresh_buffer_is_active_and_empty(){
+        let b = mk(Some(30));
+        assert!(!b.is_dropped());
+        assert_eq!(b.pending_len(), 0);
+        assert_eq!(b.resident_bytes(), 0);
     }
 }

@@ -4,8 +4,26 @@
 //! the per-session buffer-chare array, announces sessions to the manager
 //! group, fires the user's `opened`/`ready`/`closed` callbacks once every
 //! participant has acknowledged, and sequences session teardown. Global
-//! coordination (e.g. sequencing sessions of distinct files) would also
-//! live here.
+//! coordination (e.g. sequencing sessions of distinct files) also lives
+//! here.
+//!
+//! Concurrency (PR 1): the director is genuinely multi-session —
+//!
+//! * **opens are refcounted**: concurrent or repeated opens of the same
+//!   file share one MDS transaction / manager broadcast (later opens are
+//!   answered from the file table); each `close` decrements, and only the
+//!   last one tears the file down everywhere,
+//! * any number of sessions — same file or distinct files — may be open,
+//!   reading, and closing at once; all coordination state is keyed by
+//!   `SessionId`,
+//! * **teardown drains**: buffers answer every queued fetch (data or
+//!   modeled NACK) before acking, managers NACK reads that arrive after
+//!   the drop, assemblers are told so late pieces are tolerated — no
+//!   read callback is ever stranded or fired twice,
+//! * **buffer reuse** (`Options::reuse_buffers`): closing parks the
+//!   session's buffer array in a small FIFO cache keyed by
+//!   `(file, range, shape)`; a later identical session rebinds it and is
+//!   served from resident data with no file-system traffic.
 
 use std::collections::{HashMap, VecDeque};
 
@@ -17,8 +35,14 @@ use crate::amt::time::MICROS;
 use crate::impl_chare_any;
 use crate::pfs::layout::FileId;
 
-use super::buffer::{BufDroppedMsg, BufStartedMsg, BufferChare, EP_BUF_DROP, EP_BUF_INIT};
-use super::manager::{FileOpenedMsg, SessionAnnounceMsg, EP_M_FILE_CLOSE, EP_M_FILE_OPENED, EP_M_SESSION_ANNOUNCE, EP_M_SESSION_DROP};
+use super::assembler::EP_A_SESSION_DROP;
+use super::buffer::{
+    BufDroppedMsg, BufStartedMsg, BufferChare, EP_BUF_DROP, EP_BUF_INIT, EP_BUF_PARK, EP_BUF_REBIND,
+};
+use super::manager::{
+    FileOpenedMsg, SessionAnnounceMsg, EP_M_FILE_CLOSE, EP_M_FILE_OPENED, EP_M_SESSION_ANNOUNCE,
+    EP_M_SESSION_DROP,
+};
 use super::options::Options;
 use super::session::{FileHandle, Session, SessionId};
 
@@ -30,13 +54,13 @@ pub const EP_DIR_MDS_DONE: Ep = 2;
 pub const EP_DIR_OPEN_ACK: Ep = 3;
 /// User: start a read session.
 pub const EP_DIR_START_SESSION: Ep = 4;
-/// Buffer chare: greedy reads initiated.
+/// Buffer chare: greedy reads initiated (or parked array rebound).
 pub const EP_DIR_BUF_STARTED: Ep = 5;
 /// Manager ack: session table updated.
 pub const EP_DIR_ANNOUNCE_ACK: Ep = 6;
 /// User: close a read session.
 pub const EP_DIR_CLOSE_SESSION: Ep = 7;
-/// Buffer chare ack: state dropped.
+/// Buffer chare ack: state dropped/parked.
 pub const EP_DIR_DROP_ACK: Ep = 8;
 /// Manager ack: session entry dropped.
 pub const EP_DIR_DROP_ACK_MGR: Ep = 9;
@@ -44,6 +68,10 @@ pub const EP_DIR_DROP_ACK_MGR: Ep = 9;
 pub const EP_DIR_CLOSE_FILE: Ep = 10;
 /// Manager ack: file entry dropped.
 pub const EP_DIR_CLOSE_ACK: Ep = 11;
+
+/// Parked buffer arrays kept for reuse before the oldest is evicted
+/// (real eviction policy is an open item — see ROADMAP).
+const MAX_CACHED_ARRAYS: usize = 8;
 
 #[derive(Debug)]
 pub struct OpenMsg {
@@ -73,11 +101,32 @@ pub struct CloseFileMsg {
     pub after: Callback,
 }
 
+/// An open in flight through the MDS; later opens of the same file pile
+/// their callbacks onto `waiters`.
 struct OpenState {
     size: u64,
     opts: Options,
-    opened: Callback,
+    waiters: Vec<Callback>,
     acks: u32,
+}
+
+/// An open file: refcounted so concurrent sessions can share it.
+struct FileEntry {
+    size: u64,
+    opts: Options,
+    open_count: u32,
+}
+
+/// Shape key for the parked-buffer reuse cache: a new session matches a
+/// parked array only if every property that shaped the array agrees.
+#[derive(Clone, PartialEq, Eq, Debug)]
+struct BufKey {
+    file: FileId,
+    offset: u64,
+    bytes: u64,
+    readers: u32,
+    splinter: u64,
+    window: u32,
 }
 
 struct SessionState {
@@ -86,12 +135,22 @@ struct SessionState {
     buf_started: u32,
     mgr_acks: u32,
     fired: bool,
+    /// `Some` iff the session opted into buffer reuse: the cache key its
+    /// array is parked under on close.
+    reuse_key: Option<BufKey>,
 }
 
+/// A teardown in progress (session or file); extra close calls for the
+/// same id pile onto `afters`.
 struct CloseState {
-    after: Callback,
+    afters: Vec<Callback>,
     acks: u32,
     need: u32,
+    /// For a parking (reuse) session close: the array to publish into
+    /// the cache once every ack is in. Publishing only *after* the close
+    /// completes guarantees a cached array is fully parked — no later
+    /// eviction or purge can race this close's own acks.
+    park: Option<(BufKey, CollectionId, u32)>,
 }
 
 /// The Director singleton.
@@ -102,12 +161,14 @@ pub struct Director {
     /// Opens awaiting MDS completion, FIFO (the MDS completes in order).
     mds_queue: VecDeque<FileId>,
     opens: HashMap<FileId, OpenState>,
-    files: HashMap<FileId, (u64, Options)>,
+    files: HashMap<FileId, FileEntry>,
     /// startReadSession calls that raced ahead of their file's open.
     early_sessions: HashMap<FileId, Vec<StartSessionMsg>>,
     sessions: HashMap<SessionId, SessionState>,
     closes: HashMap<SessionId, CloseState>,
     file_closes: HashMap<FileId, CloseState>,
+    /// Parked buffer arrays, FIFO by park time.
+    buffer_cache: Vec<(BufKey, CollectionId, u32)>,
     next_session: u32,
 }
 
@@ -124,16 +185,91 @@ impl Director {
             sessions: HashMap::new(),
             closes: HashMap::new(),
             file_closes: HashMap::new(),
+            buffer_cache: Vec::new(),
             next_session: 0,
         }
     }
 
     fn maybe_ready(&mut self, ctx: &mut Ctx<'_>, sid: SessionId) {
-        let st = self.sessions.get_mut(&sid).expect("unknown session");
+        // Tolerate late start-acks for sessions already torn down (a
+        // close can race the tail of session startup).
+        let Some(st) = self.sessions.get_mut(&sid) else { return };
         if !st.fired && st.buf_started == st.session.num_buffers && st.mgr_acks == self.npes {
             st.fired = true;
             ctx.fire(st.ready.clone(), Payload::new(st.session));
         }
+    }
+
+    fn ack_close(&mut self, ctx: &mut Ctx<'_>, sid: SessionId) {
+        // Acks may also come from cache-evicted parked buffers whose
+        // original close completed long ago: ignore those.
+        let Some(st) = self.closes.get_mut(&sid) else { return };
+        st.acks += 1;
+        if st.acks == st.need {
+            let st = self.closes.remove(&sid).unwrap();
+            self.sessions.remove(&sid);
+            // Publish the fully parked array for reuse — unless its file
+            // was closed in the meantime (nothing can rebind it then).
+            if let Some((key, buffers, nbuf)) = st.park {
+                if self.files.contains_key(&key.file) {
+                    self.buffer_cache.push((key, buffers, nbuf));
+                    if self.buffer_cache.len() > MAX_CACHED_ARRAYS {
+                        let (_, old, oldn) = self.buffer_cache.remove(0);
+                        self.drop_array(ctx, old, oldn);
+                        ctx.metrics().count("ckio.buffer_cache_evictions", 1);
+                    }
+                } else {
+                    self.drop_array(ctx, buffers, nbuf);
+                }
+            }
+            for after in st.afters {
+                ctx.fire(after, Payload::empty());
+            }
+        }
+    }
+
+    /// Release every element of a buffer-chare array (teardown, cache
+    /// eviction, or file-close purge).
+    fn drop_array(&self, ctx: &mut Ctx<'_>, buffers: CollectionId, n: u32) {
+        for b in 0..n {
+            ctx.signal(ChareRef::new(buffers, b), EP_BUF_DROP);
+        }
+    }
+
+    /// Announce a freshly inserted session to every manager.
+    fn announce(&mut self, ctx: &mut Ctx<'_>, session: Session) {
+        for pe in 0..self.npes {
+            ctx.send_group(
+                self.managers,
+                crate::amt::topology::Pe(pe),
+                EP_M_SESSION_ANNOUNCE,
+                SessionAnnounceMsg { session },
+            );
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // test / driver inspection
+    // ------------------------------------------------------------------
+
+    /// Sessions currently live (leak checks: must be 0 after all closes).
+    pub fn active_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Session teardowns still collecting acks.
+    pub fn pending_closes(&self) -> usize {
+        self.closes.len()
+    }
+
+    /// Files currently open (refcounted).
+    pub fn open_files(&self) -> usize {
+        self.files.len()
+    }
+
+    /// Parked buffer arrays available for reuse.
+    pub fn cached_buffer_arrays(&self) -> usize {
+        self.buffer_cache.len()
     }
 }
 
@@ -142,10 +278,27 @@ impl Chare for Director {
         match msg.ep {
             EP_DIR_OPEN => {
                 let m: OpenMsg = msg.take();
+                // Refcounted re-open: the file is already open everywhere,
+                // answer immediately from the file table.
+                if let Some(entry) = self.files.get_mut(&m.file) {
+                    entry.open_count += 1;
+                    ctx.metrics().count("ckio.reopens", 1);
+                    let handle =
+                        FileHandle { file: m.file, size: entry.size, opts: entry.opts.clone() };
+                    ctx.fire(m.opened, Payload::new(handle));
+                    return;
+                }
+                // An open of the same file is already in flight: share its
+                // MDS transaction and manager broadcast.
+                if let Some(st) = self.opens.get_mut(&m.file) {
+                    st.waiters.push(m.opened);
+                    ctx.metrics().count("ckio.reopens", 1);
+                    return;
+                }
                 self.opens.insert(m.file, OpenState {
                     size: m.size,
                     opts: m.opts,
-                    opened: m.opened,
+                    waiters: vec![m.opened],
                     acks: 0,
                 });
                 self.mds_queue.push_back(m.file);
@@ -170,12 +323,18 @@ impl Chare for Director {
                 st.acks += 1;
                 if st.acks == self.npes {
                     let st = self.opens.remove(&file).unwrap();
-                    self.files.insert(file, (st.size, st.opts.clone()));
-                    ctx.fire(st.opened, Payload::new(FileHandle {
-                        file,
+                    self.files.insert(file, FileEntry {
                         size: st.size,
-                        opts: st.opts,
-                    }));
+                        opts: st.opts.clone(),
+                        open_count: st.waiters.len() as u32,
+                    });
+                    for opened in st.waiters {
+                        ctx.fire(opened, Payload::new(FileHandle {
+                            file,
+                            size: st.size,
+                            opts: st.opts.clone(),
+                        }));
+                    }
                     // Replay session starts that raced ahead of the open.
                     let me = ctx.me();
                     for m in self.early_sessions.remove(&file).unwrap_or_default() {
@@ -196,24 +355,56 @@ impl Chare for Director {
                     self.early_sessions.entry(m.file).or_default().push(m);
                     return;
                 };
-                let (size, opts) = entry.clone();
+                let (size, opts) = (entry.size, entry.opts.clone());
                 assert!(m.offset + m.bytes <= size, "session beyond EOF");
                 let sid = SessionId(self.next_session);
                 self.next_session += 1;
                 let topo = ctx.topo();
                 let nreaders = opts.resolve_readers(m.bytes, &topo);
-                // Create the per-session buffer chare array (dynamic
-                // creation, as CkIO does on session start).
-                let me = ctx.me();
-                let assemblers = self.assemblers;
-                let placement = opts.placement.to_placement(nreaders);
-                // Session math first (needs the collection id).
                 let splinter = opts.splinter_bytes;
                 let window = opts.read_window;
                 let file = m.file;
                 let (offset, bytes) = (m.offset, m.bytes);
-                // Two-phase: compute spans via a prototype Session once we
-                // know the collection id from create_array_now.
+                let key = BufKey {
+                    file,
+                    offset,
+                    bytes,
+                    readers: nreaders,
+                    splinter: splinter.unwrap_or(0),
+                    window,
+                };
+                ctx.metrics().count("ckio.sessions", 1);
+
+                // Reuse path: an identically shaped parked array serves
+                // the new session from resident data — no greedy re-read.
+                if opts.reuse_buffers {
+                    if let Some(pos) = self.buffer_cache.iter().position(|(k, _, _)| *k == key) {
+                        let (_, buffers, nbuf) = self.buffer_cache.remove(pos);
+                        debug_assert_eq!(nbuf, nreaders);
+                        let session = Session::new(sid, file, offset, bytes, buffers, nreaders);
+                        self.sessions.insert(sid, SessionState {
+                            session,
+                            ready: m.ready,
+                            buf_started: 0,
+                            mgr_acks: 0,
+                            fired: false,
+                            reuse_key: Some(key),
+                        });
+                        for b in 0..nreaders {
+                            ctx.send(ChareRef::new(buffers, b), EP_BUF_REBIND, sid);
+                        }
+                        self.announce(ctx, session);
+                        ctx.metrics().count("ckio.buffer_reuse", 1);
+                        ctx.advance(MICROS);
+                        return;
+                    }
+                }
+
+                // Fresh path: create the per-session buffer chare array
+                // (dynamic creation, as CkIO does on session start).
+                let me = ctx.me();
+                let assemblers = self.assemblers;
+                let placement = opts.placement.to_placement(nreaders);
                 let mut spans: Vec<(u64, u64)> = Vec::with_capacity(nreaders as usize);
                 {
                     // span math identical to Session::buffer_span
@@ -235,17 +426,14 @@ impl Chare for Director {
                     buf_started: 0,
                     mgr_acks: 0,
                     fired: false,
+                    reuse_key: opts.reuse_buffers.then_some(key),
                 });
                 // Kick the greedy reads and announce to managers.
                 for b in 0..nreaders {
                     ctx.signal(ChareRef::new(buffers, b), EP_BUF_INIT);
                 }
-                for pe in 0..self.npes {
-                    ctx.send_group(self.managers, crate::amt::topology::Pe(pe), EP_M_SESSION_ANNOUNCE,
-                        SessionAnnounceMsg { session });
-                }
+                self.announce(ctx, session);
                 ctx.advance(2 * MICROS);
-                ctx.metrics().count("ckio.sessions", 1);
             }
             EP_DIR_BUF_STARTED => {
                 let m: BufStartedMsg = msg.take();
@@ -263,19 +451,47 @@ impl Chare for Director {
             }
             EP_DIR_CLOSE_SESSION => {
                 let m: CloseSessionMsg = msg.take();
-                let st = self.sessions.get(&m.session).expect("closing unknown session");
+                // A close already in flight for this session: attach.
+                if let Some(cs) = self.closes.get_mut(&m.session) {
+                    cs.afters.push(m.after);
+                    ctx.metrics().count("ckio.double_close", 1);
+                    return;
+                }
+                let Some(st) = self.sessions.get(&m.session) else {
+                    // Already fully closed (idempotent close): ack now.
+                    ctx.metrics().count("ckio.double_close", 1);
+                    ctx.fire(m.after, Payload::empty());
+                    return;
+                };
                 let nbuf = st.session.num_buffers;
                 let buffers = st.session.buffers;
-                for b in 0..nbuf {
-                    ctx.signal(ChareRef::new(buffers, b), EP_BUF_DROP);
-                }
+                let park = match st.reuse_key.clone() {
+                    Some(key) => {
+                        // Park: drain pending fetches but keep resident
+                        // data for a future identically shaped session.
+                        // The array is published into the reuse cache
+                        // only once this close fully acks (ack_close).
+                        for b in 0..nbuf {
+                            ctx.signal(ChareRef::new(buffers, b), EP_BUF_PARK);
+                        }
+                        Some((key, buffers, nbuf))
+                    }
+                    None => {
+                        self.drop_array(ctx, buffers, nbuf);
+                        None
+                    }
+                };
                 for pe in 0..self.npes {
                     ctx.send_group(self.managers, crate::amt::topology::Pe(pe), EP_M_SESSION_DROP, m.session);
+                    // Fire-and-forget: assemblers only need to know the
+                    // session is gone so late pieces are tolerated.
+                    ctx.send_group(self.assemblers, crate::amt::topology::Pe(pe), EP_A_SESSION_DROP, m.session);
                 }
                 self.closes.insert(m.session, CloseState {
-                    after: m.after,
+                    afters: vec![m.after],
                     acks: 0,
                     need: nbuf + self.npes,
+                    park,
                 });
                 ctx.advance(MICROS);
             }
@@ -289,11 +505,35 @@ impl Chare for Director {
             }
             EP_DIR_CLOSE_FILE => {
                 let m: CloseFileMsg = msg.take();
-                assert!(self.files.remove(&m.file).is_some(), "closing unopened file");
+                let entry = self.files.get_mut(&m.file).expect("closing unopened file");
+                entry.open_count -= 1;
+                if entry.open_count > 0 {
+                    // Other owners (concurrent sessions) still hold the
+                    // file open: this close is complete immediately.
+                    ctx.fire(m.after, Payload::empty());
+                    return;
+                }
+                self.files.remove(&m.file);
+                // Parked buffer arrays of a closed file can never be
+                // rebound again: release them.
+                let mut kept = Vec::new();
+                for (k, cid, n) in std::mem::take(&mut self.buffer_cache) {
+                    if k.file == m.file {
+                        self.drop_array(ctx, cid, n);
+                    } else {
+                        kept.push((k, cid, n));
+                    }
+                }
+                self.buffer_cache = kept;
                 for pe in 0..self.npes {
                     ctx.send_group(self.managers, crate::amt::topology::Pe(pe), EP_M_FILE_CLOSE, m.file);
                 }
-                self.file_closes.insert(m.file, CloseState { after: m.after, acks: 0, need: self.npes });
+                self.file_closes.insert(m.file, CloseState {
+                    afters: vec![m.after],
+                    acks: 0,
+                    need: self.npes,
+                    park: None,
+                });
                 ctx.advance(MICROS);
             }
             EP_DIR_CLOSE_ACK => {
@@ -302,7 +542,9 @@ impl Chare for Director {
                 st.acks += 1;
                 if st.acks == st.need {
                     let st = self.file_closes.remove(&file).unwrap();
-                    ctx.fire(st.after, Payload::empty());
+                    for after in st.afters {
+                        ctx.fire(after, Payload::empty());
+                    }
                 }
             }
             other => panic!("Director: unknown ep {other}"),
@@ -310,16 +552,4 @@ impl Chare for Director {
     }
 
     impl_chare_any!();
-}
-
-impl Director {
-    fn ack_close(&mut self, ctx: &mut Ctx<'_>, sid: SessionId) {
-        let st = self.closes.get_mut(&sid).expect("drop ack for unknown close");
-        st.acks += 1;
-        if st.acks == st.need {
-            let st = self.closes.remove(&sid).unwrap();
-            self.sessions.remove(&sid);
-            ctx.fire(st.after, Payload::empty());
-        }
-    }
 }

@@ -6,19 +6,27 @@
 //! used for buffer→assembler transfers, and forward each read to the
 //! local ReadAssembler. Reads that race ahead of the session announcement
 //! are held until it arrives.
+//!
+//! Concurrency (PR 1): tags are namespaced per session ([`Tag`]), so any
+//! number of sessions can be in flight on a PE without colliding in the
+//! assembler's tables. The manager also remembers *closed* sessions:
+//! a read that races a `closeReadSession` (arriving after the session
+//! entry was dropped) is answered immediately with a modeled NACK chunk
+//! instead of being stranded in the early-read queue forever.
 
 use std::collections::HashMap;
 
 use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::Ctx;
-use crate::amt::msg::{Ep, Msg};
+use crate::amt::msg::{Ep, Msg, Payload};
 use crate::impl_chare_any;
 use crate::pfs::layout::FileId;
+use crate::util::bytes::Chunk;
 
 use super::assembler::{AssembleReq, EP_A_REQ};
 use super::options::Options;
-use super::session::{Session, SessionId};
+use super::session::{ClosedSessions, ReadResult, Session, SessionId, Tag};
 
 /// Client read (local API call).
 pub const EP_M_READ: Ep = 1;
@@ -59,7 +67,11 @@ pub struct Manager {
     sessions: HashMap<SessionId, Session>,
     /// Reads received before the session announcement.
     early: HashMap<SessionId, Vec<ReadMsg>>,
-    next_tag: u64,
+    /// Sessions this PE has seen torn down (read-after-close detection;
+    /// bounded — see [`ClosedSessions`]).
+    closed: ClosedSessions,
+    /// Per-session tag counters (session-namespaced zero-copy tags).
+    next_tag: HashMap<SessionId, u64>,
     my_pe_salt: u64,
 }
 
@@ -71,25 +83,46 @@ impl Manager {
             files: HashMap::new(),
             sessions: HashMap::new(),
             early: HashMap::new(),
-            next_tag: 0,
+            closed: ClosedSessions::default(),
+            next_tag: HashMap::new(),
             my_pe_salt: (pe as u64) << 40,
         }
     }
 
-    /// Assign a cluster-unique zero-copy tag (PE-salted counter).
-    fn make_tag(&mut self) -> u64 {
-        self.next_tag += 1;
-        self.my_pe_salt | self.next_tag
+    /// Assign a cluster-unique zero-copy tag within `sid`'s namespace
+    /// (PE-salted counter, so managers on distinct PEs never collide).
+    fn make_tag(&mut self, sid: SessionId) -> Tag {
+        let seq = self.next_tag.entry(sid).or_insert(0);
+        *seq += 1;
+        Tag { session: sid, local: self.my_pe_salt | *seq }
     }
 
     fn forward(&mut self, ctx: &mut Ctx<'_>, session: Session, r: ReadMsg) {
-        let tag = self.make_tag();
+        let tag = self.make_tag(session.id);
         let pe = ctx.pe();
         ctx.advance(300);
         ctx.send(
             ChareRef::new(self.assemblers, pe.0),
             EP_A_REQ,
             AssembleReq { tag, session, offset: r.offset, len: r.len, after: r.after },
+        );
+    }
+
+    /// Answer a read whose session is already gone: the data plane can no
+    /// longer serve it, so complete the callback exactly once with a
+    /// modeled (payload-free) chunk rather than stranding the client.
+    fn nack(&mut self, ctx: &mut Ctx<'_>, r: ReadMsg) {
+        ctx.metrics().count("ckio.reads_after_close", 1);
+        let tag = Tag { session: r.session, local: self.my_pe_salt };
+        ctx.fire(
+            r.after,
+            Payload::new(ReadResult {
+                session: r.session,
+                offset: r.offset,
+                len: r.len,
+                chunk: Chunk::modeled(r.offset, r.len),
+                tag,
+            }),
         );
     }
 
@@ -100,6 +133,16 @@ impl Manager {
 
     pub fn knows_file(&self, id: FileId) -> bool {
         self.files.contains_key(&id)
+    }
+
+    /// Live session-table size (leak checks in tests).
+    pub fn session_count(&self) -> usize {
+        self.sessions.len()
+    }
+
+    /// Held early reads across all sessions (leak checks in tests).
+    pub fn early_count(&self) -> usize {
+        self.early.values().map(|v| v.len()).sum()
     }
 }
 
@@ -113,6 +156,7 @@ impl Chare for Manager {
                         let s = *s;
                         self.forward(ctx, s, r);
                     }
+                    None if self.closed.contains(&r.session) => self.nack(ctx, r),
                     // Read raced ahead of the announcement: hold it.
                     None => self.early.entry(r.session).or_default().push(r),
                 }
@@ -137,7 +181,14 @@ impl Chare for Manager {
             EP_M_SESSION_DROP => {
                 let sid: SessionId = msg.take();
                 self.sessions.remove(&sid);
-                self.early.remove(&sid);
+                self.next_tag.remove(&sid);
+                self.closed.insert(sid);
+                // Announcements always precede drops (the director
+                // sequences them), so held early reads for this session
+                // can never be served any more — complete them as NACKs.
+                for r in self.early.remove(&sid).unwrap_or_default() {
+                    self.nack(ctx, r);
+                }
                 ctx.advance(200);
                 ctx.send(self.director, super::director::EP_DIR_DROP_ACK_MGR, sid);
             }
@@ -159,15 +210,21 @@ mod tests {
     use super::*;
 
     #[test]
-    fn tags_are_pe_unique() {
+    fn tags_are_session_and_pe_unique() {
         let d = ChareRef::new(CollectionId(0), 0);
         let mut m0 = Manager::new(d, CollectionId(1), 0);
         let mut m1 = Manager::new(d, CollectionId(1), 1);
-        let t0a = m0.make_tag();
-        let t0b = m0.make_tag();
-        let t1a = m1.make_tag();
+        let (s0, s1) = (SessionId(0), SessionId(1));
+        let t0a = m0.make_tag(s0);
+        let t0b = m0.make_tag(s0);
+        let t1a = m1.make_tag(s0);
         assert_ne!(t0a, t0b);
         assert_ne!(t0a, t1a);
         assert_ne!(t0b, t1a);
+        // A different session restarts the local counter, but the tag as
+        // a whole still never collides: the namespace is the session.
+        let tx = m0.make_tag(s1);
+        assert_eq!(tx.local, t0a.local);
+        assert_ne!(tx, t0a);
     }
 }

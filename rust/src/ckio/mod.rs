@@ -22,9 +22,42 @@
 //! * [`api`] — the user-facing `open / startReadSession / read /
 //!   closeReadSession / close` calls (asynchronous-callback-centric,
 //!   §III-D),
-//! * [`options`] — reader count/placement/splintering knobs (§III-C.4,
-//!   §VI.A–C),
-//! * [`session`] — session and read-descriptor types.
+//! * [`options`] — reader count/placement/splintering/reuse knobs
+//!   (§III-C.4, §VI.A–C),
+//! * [`session`] — session, tag and read-descriptor types.
+//!
+//! # Concurrency semantics (PR 1)
+//!
+//! Any number of read sessions — over the same file or distinct files —
+//! may be open, reading, and closing concurrently:
+//!
+//! * **Tag namespacing.** Every client read travels under a
+//!   [`session::Tag`] = `(SessionId, PE-salted counter)`. The session id
+//!   is part of the assemblers' table key, so concurrent sessions can
+//!   never collide on a tag, and a late piece is always attributable to
+//!   its (possibly closed) session.
+//! * **Refcounted opens.** Concurrent `open`s of one file share a single
+//!   MDS transaction and manager broadcast; later opens are answered from
+//!   the director's file table. The *first* opener's [`Options`] govern
+//!   the file while it stays open (later opens' options are ignored; the
+//!   delivered `FileHandle` carries the options in effect). Each `close`
+//!   decrements; only the last tears the file down everywhere.
+//! * **Teardown protocol.** `closeReadSession` *drains*: buffer chares
+//!   answer every queued fetch exactly once (resident extents with data,
+//!   the rest with modeled NACK chunks) before acking; a fetch that was
+//!   in flight when the drop landed is flush-served the same way;
+//!   managers NACK reads that arrive after the session entry dropped;
+//!   assemblers are told the session closed so duplicate late pieces are
+//!   tolerated. Net effect: every outstanding `read` callback fires
+//!   exactly once, and no `assemblies`/`pending` entry outlives its
+//!   session. Closing an already-closed session acks immediately
+//!   (idempotent).
+//! * **Reuse policy.** With [`Options::reuse_buffers`], closing *parks*
+//!   the session's buffer array (resident data kept) in a small FIFO
+//!   cache keyed by `(file, range, reader shape)`; a later identical
+//!   session rebinds the array and is served with no file-system
+//!   traffic. Parked arrays are released when evicted (FIFO, small cap)
+//!   or when their file is finally closed.
 
 pub mod api;
 pub mod assembler;
@@ -36,4 +69,4 @@ pub mod session;
 
 pub use api::CkIo;
 pub use options::{Options, ReaderPlacement};
-pub use session::{FileHandle, ReadResult, Session, SessionId};
+pub use session::{FileHandle, ReadResult, Session, SessionId, Tag};

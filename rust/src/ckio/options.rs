@@ -12,18 +12,32 @@ pub enum ReaderPlacement {
     SpreadNodes,
     /// Pack onto consecutive PEs.
     PackPes,
-    /// Explicit PE list (length must equal the reader count).
+    /// Explicit PE list (length must cover the reader count; when the
+    /// resolved count is *smaller* — e.g. a tiny file clamps the reader
+    /// count below the list length — the list is truncated).
     Explicit(Vec<u32>),
 }
 
 impl ReaderPlacement {
+    /// Materialize a [`Placement`] for `n` *resolved* readers.
+    ///
+    /// `n` comes out of [`Options::resolve_readers`], which may clamp the
+    /// requested count down (never more readers than bytes) — so an
+    /// explicit list only needs to be *at least* `n` long; extra entries
+    /// are ignored. A list shorter than `n` is a configuration error.
     pub fn to_placement(&self, n: u32) -> Placement {
         match self {
             ReaderPlacement::SpreadNodes => Placement::RoundRobinNodes,
             ReaderPlacement::PackPes => Placement::RoundRobinPes,
             ReaderPlacement::Explicit(pes) => {
-                assert_eq!(pes.len() as u32, n, "explicit reader placement length");
-                Placement::Explicit(pes.iter().map(|&p| crate::amt::topology::Pe(p)).collect())
+                assert!(
+                    pes.len() as u32 >= n,
+                    "explicit reader placement needs >= {n} PEs, got {}",
+                    pes.len()
+                );
+                Placement::Explicit(
+                    pes.iter().take(n as usize).map(|&p| crate::amt::topology::Pe(p)).collect(),
+                )
             }
         }
     }
@@ -44,6 +58,12 @@ pub struct Options {
     pub splinter_bytes: Option<u64>,
     /// Splinters kept in flight per buffer chare when splintering.
     pub read_window: u32,
+    /// Buffer-chare reuse across sessions (PR 1): when set, closing a
+    /// session *parks* its buffer-chare array (keeping resident data)
+    /// instead of dropping it, and a later `startReadSession` over the
+    /// same `(file, range, shape)` revives it — repeated sessions on the
+    /// same file skip the greedy re-read entirely.
+    pub reuse_buffers: bool,
 }
 
 impl Default for Options {
@@ -53,6 +73,7 @@ impl Default for Options {
             placement: ReaderPlacement::default(),
             splinter_bytes: None,
             read_window: 2,
+            reuse_buffers: false,
         }
     }
 }
@@ -129,5 +150,26 @@ mod tests {
     #[should_panic]
     fn explicit_placement_wrong_length() {
         ReaderPlacement::Explicit(vec![0]).to_placement(2);
+    }
+
+    /// Regression (PR 1): a tiny file clamps the resolved reader count
+    /// below the explicit PE-list length; placement must truncate the
+    /// list to the clamped count instead of panicking.
+    #[test]
+    fn explicit_placement_truncates_to_clamped_readers() {
+        use crate::amt::topology::Pe;
+        let topo = Topology::new(2, 4);
+        let o = Options {
+            num_readers: Some(4),
+            placement: ReaderPlacement::Explicit(vec![0, 1, 2, 3]),
+            ..Default::default()
+        };
+        // 2-byte file: never more readers than bytes.
+        let n = o.resolve_readers(2, &topo);
+        assert_eq!(n, 2);
+        match o.placement.to_placement(n) {
+            Placement::Explicit(pes) => assert_eq!(pes, vec![Pe(0), Pe(1)]),
+            other => panic!("unexpected placement {other:?}"),
+        }
     }
 }

@@ -10,6 +10,52 @@ use super::options::Options;
 #[derive(Copy, Clone, Eq, PartialEq, Ord, PartialOrd, Hash, Debug)]
 pub struct SessionId(pub u32);
 
+/// Zero-copy transfer tag: the wire identity of one client read.
+///
+/// Tags are *namespaced by session* so concurrent sessions can never
+/// collide in the assemblers' tables, and a late piece can be attributed
+/// to its (possibly already closed) session. Within a session, `local`
+/// is a PE-salted counter (the assigning manager's PE in the high bits),
+/// so managers on different PEs never collide either.
+#[derive(Copy, Clone, Eq, PartialEq, Ord, PartialOrd, Hash, Debug)]
+pub struct Tag {
+    pub session: SessionId,
+    pub local: u64,
+}
+
+/// Bounded record of torn-down sessions. Managers and assemblers keep
+/// one per PE to recognize reads/pieces that race a session's teardown;
+/// in a long-running service the naive "insert every closed id forever"
+/// set would grow without bound. Session ids are assigned monotonically
+/// by the director, so when the set exceeds its cap it is compacted to
+/// the most recent half and everything below the resulting watermark is
+/// treated as closed — sound, because a *live* session is always found
+/// in the session table first (the closed-set is only consulted on a
+/// table miss), and new ids are always above any compaction watermark.
+#[derive(Debug, Default)]
+pub struct ClosedSessions {
+    ids: std::collections::HashSet<SessionId>,
+    watermark: u32,
+}
+
+impl ClosedSessions {
+    const CAP: usize = 4096;
+
+    pub fn insert(&mut self, sid: SessionId) {
+        self.ids.insert(sid);
+        if self.ids.len() > Self::CAP {
+            let max = self.ids.iter().map(|s| s.0).max().unwrap_or(0);
+            let watermark = max.saturating_sub((Self::CAP / 2) as u32);
+            self.ids.retain(|s| s.0 >= watermark);
+            self.watermark = self.watermark.max(watermark);
+        }
+    }
+
+    pub fn contains(&self, sid: &SessionId) -> bool {
+        sid.0 < self.watermark || self.ids.contains(sid)
+    }
+}
+
 /// Returned by `Ck::IO::open`'s callback.
 #[derive(Clone, Debug)]
 pub struct FileHandle {
@@ -94,7 +140,7 @@ pub struct ReadResult {
     /// The assembled data (materialized in verified runs).
     pub chunk: Chunk,
     /// The zero-copy tag that carried this read (diagnostics).
-    pub tag: u64,
+    pub tag: Tag,
 }
 
 #[cfg(test)]
@@ -147,5 +193,22 @@ mod tests {
     #[should_panic(expected = "outside session")]
     fn read_outside_session_panics() {
         sess().buffers_for(900, 10);
+    }
+
+    #[test]
+    fn closed_sessions_stay_bounded_and_sound() {
+        let mut c = ClosedSessions::default();
+        for i in 0..20_000u32 {
+            c.insert(SessionId(i));
+        }
+        // Bounded: compaction kept the set at or below its cap.
+        assert!(c.ids.len() <= 4096, "set grew to {}", c.ids.len());
+        // Sound: every id ever closed still reads as closed (recent ones
+        // from the set, ancient ones from the watermark).
+        assert!(c.contains(&SessionId(0)));
+        assert!(c.contains(&SessionId(10_000)));
+        assert!(c.contains(&SessionId(19_999)));
+        // Ids never closed and above the watermark are not closed.
+        assert!(!c.contains(&SessionId(25_000)));
     }
 }

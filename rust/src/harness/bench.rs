@@ -98,6 +98,94 @@ impl Table {
     }
 }
 
+/// Minimal JSON value builder (no serde in the offline crate set) —
+/// used to emit machine-readable perf anchors like `BENCH_pr1.json`.
+#[derive(Clone, Debug)]
+pub enum Json {
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn num(v: f64) -> Json {
+        Json::Num(v)
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    pub fn arr(items: Vec<Json>) -> Json {
+        Json::Arr(items)
+    }
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Serialize to compact JSON text.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Num(v) => {
+                if !v.is_finite() {
+                    out.push_str("null");
+                } else if *v == v.trunc() && v.abs() < 1e15 {
+                    let _ = write!(out, "{}", *v as i64);
+                } else {
+                    let _ = write!(out, "{v}");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
 /// Format seconds with 3 significant figures.
 pub fn fmt_secs(s: f64) -> String {
     if s >= 1.0 {
@@ -151,5 +239,25 @@ mod tests {
         let s = sample(3, |seed| seed as f64);
         assert_eq!(s.len(), 3);
         assert_ne!(s[0], s[1]);
+    }
+
+    #[test]
+    fn json_renders_compact_and_escaped() {
+        let j = Json::obj(vec![
+            ("bench", Json::str("svc_concurrent")),
+            ("k", Json::num(8.0)),
+            ("gibs", Json::num(3.25)),
+            ("tags", Json::arr(vec![Json::str("a\"b"), Json::num(1.0)])),
+        ]);
+        assert_eq!(
+            j.render(),
+            r#"{"bench":"svc_concurrent","k":8,"gibs":3.25,"tags":["a\"b",1]}"#
+        );
+    }
+
+    #[test]
+    fn json_non_finite_becomes_null() {
+        assert_eq!(Json::num(f64::NAN).render(), "null");
+        assert_eq!(Json::num(f64::INFINITY).render(), "null");
     }
 }

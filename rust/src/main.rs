@@ -2,11 +2,12 @@
 //! cluster/PFS configuration, or exercise the runtime end-to-end.
 //!
 //! ```text
-//! ckio fig <1|2|4|7|8|9|12|13|sec5|splinter|autoreaders|all>
+//! ckio fig <1|2|4|7|8|9|12|13|sec5|splinter|autoreaders|svc_concurrent|all>
 //!      [--reps N] [--out bench_out] [--tp 65536]
 //! ckio read   --file-size 4GiB --clients 512 [--scheme naive|ckio] [--readers N]
 //! ckio changa --nodes 4 --tp 4096 --scheme ckio [--nbodies 2097152]
-//! ckio artifacts [--dir artifacts]           # list + smoke-run PJRT artifacts
+//! ckio bench-json [--out BENCH_pr1.json] [--reps 3]   # svc_concurrent perf anchor
+//! ckio artifacts [--dir artifacts]           # list + smoke-run lowered artifacts
 //! ```
 
 use ckio::amt::time;
@@ -25,9 +26,11 @@ fn main() {
         "changa" => cmd_changa(&args),
         "artifacts" => cmd_artifacts(&args),
         "perf" => cmd_perf(&args),
+        "bench-json" => cmd_bench_json(&args),
         _ => {
             eprintln!(
-                "usage: ckio fig <id|all> [--reps N] [--out DIR] | read | changa | artifacts\n\
+                "usage: ckio fig <id|all> [--reps N] [--out DIR] | read | changa | artifacts | \
+                 bench-json [--out BENCH_pr1.json]\n\
                  see `rust/src/main.rs` header for full flags"
             );
         }
@@ -48,12 +51,14 @@ pub fn run_figure(id: &str, reps: u32, n_tp: u32) -> Option<(String, Table)> {
         "sec5" => exp::sec5_breakdown(reps),
         "splinter" => exp::ablation_splinter(reps),
         "autoreaders" => exp::ablation_autoreaders(reps),
+        "svc_concurrent" => exp::svc_concurrent(reps),
         _ => return None,
     };
     let slug = match id {
         "sec5" => "sec5_breakdown".to_string(),
         "splinter" => "ablation_splinter".to_string(),
         "autoreaders" => "ablation_autoreaders".to_string(),
+        "svc_concurrent" => "svc_concurrent".to_string(),
         n => format!("fig{n}"),
     };
     Some((slug, t))
@@ -65,7 +70,10 @@ fn cmd_fig(args: &Args) {
     let out = args.get("out").unwrap_or("bench_out").to_string();
     let n_tp = args.get_or("tp", 1u32 << 16);
     let ids: Vec<&str> = if id == "all" {
-        vec!["1", "2", "4", "7", "8", "9", "12", "13", "sec5", "splinter", "autoreaders"]
+        vec![
+            "1", "2", "4", "7", "8", "9", "12", "13", "sec5", "splinter", "autoreaders",
+            "svc_concurrent",
+        ]
     } else {
         vec![id]
     };
@@ -176,6 +184,17 @@ fn cmd_perf(args: &Args) {
     );
 }
 
+/// Emit the PR's machine-readable perf anchor: aggregate GiB/s for
+/// `svc_concurrent` at K ∈ {1, 4, 8} (plus tails) as JSON.
+fn cmd_bench_json(args: &Args) {
+    let out = args.get("out").unwrap_or("BENCH_pr1.json").to_string();
+    let reps = args.get_or("reps", 3u32);
+    let json = exp::bench_pr1_json(reps);
+    std::fs::write(&out, &json).unwrap_or_else(|e| panic!("writing {out}: {e}"));
+    println!("[json] {out}");
+    println!("{json}");
+}
+
 fn cmd_artifacts(args: &Args) {
     let dir = args.get("dir").unwrap_or("artifacts").to_string();
     let mut rt = match ckio::runtime::ArtifactRuntime::cpu() {
@@ -191,22 +210,28 @@ fn cmd_artifacts(args: &Args) {
             for n in &names {
                 println!("  artifact {n}");
             }
-            // Smoke-run the smallest gravity artifact.
+            // Smoke-run the smallest gravity artifact. Real jax-lowered
+            // modules exceed the built-in interpreter's elementwise
+            // subset — report that instead of panicking mid-listing.
             if rt.has("gravity_n256") {
                 let n = 256usize;
                 let pos: Vec<f32> = (0..n * 3).map(|i| (i as f32 * 0.37).sin()).collect();
-                let outs = rt
-                    .execute(
-                        "gravity_n256",
-                        &[
-                            ckio::runtime::TensorF32::new(vec![n as i64, 3], pos),
-                            ckio::runtime::TensorF32::new(vec![n as i64, 3], vec![0.0; n * 3]),
-                            ckio::runtime::TensorF32::new(vec![n as i64], vec![1.0; n]),
-                            ckio::runtime::TensorF32::scalar(1e-3),
-                        ],
-                    )
-                    .expect("execute gravity_n256");
-                println!("gravity_n256 smoke: |acc| sum = {:.4}", outs[3].data[0]);
+                let res = rt.execute(
+                    "gravity_n256",
+                    &[
+                        ckio::runtime::TensorF32::new(vec![n as i64, 3], pos),
+                        ckio::runtime::TensorF32::new(vec![n as i64, 3], vec![0.0; n * 3]),
+                        ckio::runtime::TensorF32::new(vec![n as i64], vec![1.0; n]),
+                        ckio::runtime::TensorF32::scalar(1e-3),
+                    ],
+                );
+                match res {
+                    Ok(outs) if outs.len() >= 4 => {
+                        println!("gravity_n256 smoke: |acc| sum = {:.4}", outs[3].data[0]);
+                    }
+                    Ok(outs) => println!("gravity_n256 smoke: unexpected arity {}", outs.len()),
+                    Err(e) => println!("gravity_n256 smoke skipped: {e}"),
+                }
             }
         }
         Err(e) => {

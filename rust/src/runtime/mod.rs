@@ -1,13 +1,17 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
-//! the coordinator's hot path.
+//! Artifact runtime: load AOT-lowered HLO *text* artifacts and execute
+//! them from the coordinator's hot path.
 //!
 //! The JAX/Pallas model (Layer 2/1, `python/compile/`) is lowered **once**
-//! at build time to HLO *text* (`artifacts/*.hlo.txt`; text rather than a
-//! serialized `HloModuleProto` because jax ≥ 0.5 emits 64-bit instruction
-//! ids the bundled xla_extension 0.5.1 rejects — the text parser
-//! reassigns ids). This module loads those artifacts, compiles them on
-//! the PJRT CPU client, and exposes typed `f32` execution. Python is
-//! never on the request path.
+//! at build time to HLO text (`artifacts/*.hlo.txt`). The offline build
+//! environment has no PJRT / `xla_extension` shared library, so this
+//! module executes artifacts with a small built-in HLO-text interpreter:
+//! it supports the structural subset needed by the bundled hand-written
+//! artifacts and the tests (parameters, elementwise arithmetic, tuples)
+//! and returns a clear error for anything richer. The public surface
+//! (`ArtifactRuntime::{cpu, load, load_dir, execute}`, [`TensorF32`]) is
+//! the PJRT-shaped API, so a real PJRT client can be swapped back in
+//! behind the same calls when the toolchain provides one — Python is
+//! never on the request path either way.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -16,13 +20,6 @@ use anyhow::{anyhow, Context, Result};
 
 /// Where `make artifacts` puts the lowered models.
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
-
-/// A loaded, compiled artifact registry keyed by artifact name
-/// (`gravity_4096` → `artifacts/gravity_4096.hlo.txt`).
-pub struct ArtifactRuntime {
-    client: xla::PjRtClient,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
-}
 
 /// A typed f32 tensor for artifact I/O.
 #[derive(Clone, Debug, PartialEq)]
@@ -41,42 +38,50 @@ impl TensorF32 {
     pub fn scalar(v: f32) -> TensorF32 {
         TensorF32 { dims: vec![], data: vec![v] }
     }
+}
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = xla::Literal::vec1(&self.data);
-        if self.dims.is_empty() {
-            Ok(xla::Literal::scalar(self.data[0]))
-        } else {
-            Ok(lit.reshape(&self.dims)?)
-        }
-    }
+/// One parsed HLO instruction (the interpreter's IR).
+#[derive(Debug)]
+struct Instr {
+    name: String,
+    op: String,
+    args: Vec<String>,
+    /// Result dims (empty = scalar); unused for `tuple`.
+    dims: Vec<i64>,
+    root: bool,
+}
+
+/// A parsed ENTRY computation.
+#[derive(Debug)]
+struct HloProgram {
+    instrs: Vec<Instr>,
+}
+
+/// A loaded artifact registry keyed by artifact name
+/// (`gravity_n256` → `artifacts/gravity_n256.hlo.txt`).
+pub struct ArtifactRuntime {
+    exes: HashMap<String, HloProgram>,
 }
 
 impl ArtifactRuntime {
-    /// Create a PJRT CPU client.
+    /// Create the (interpreter-backed) CPU runtime.
     pub fn cpu() -> Result<ArtifactRuntime> {
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        Ok(ArtifactRuntime { client, exes: HashMap::new() })
+        Ok(ArtifactRuntime { exes: HashMap::new() })
     }
 
     /// Platform string (diagnostics).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        "cpu (built-in HLO interpreter)".to_string()
     }
 
-    /// Load and compile one HLO-text artifact under `name`.
+    /// Load and parse one HLO-text artifact under `name`.
     pub fn load(&mut self, name: &str, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        self.exes.insert(name.to_string(), exe);
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading HLO text {}", path.display()))?;
+        let prog = parse_hlo(&text)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        self.exes.insert(name.to_string(), prog);
         Ok(())
     }
 
@@ -117,25 +122,207 @@ impl ArtifactRuntime {
     /// Execute an artifact on f32 inputs; returns the tuple of f32
     /// outputs (artifacts are lowered with `return_tuple=True`).
     pub fn execute(&self, name: &str, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
-        let exe = self
+        let prog = self
             .exes
             .get(name)
             .ok_or_else(|| anyhow!("artifact {name:?} not loaded (have: {:?})", self.names()))?;
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let result = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        outs.into_iter()
-            .map(|lit| {
-                let shape = lit.array_shape()?;
-                let dims: Vec<i64> = shape.dims().to_vec();
-                let data = lit.to_vec::<f32>()?;
-                Ok(TensorF32 { dims, data })
-            })
-            .collect()
+        let mut env: HashMap<&str, TensorF32> = HashMap::new();
+        let mut outputs: Option<Vec<TensorF32>> = None;
+        for instr in &prog.instrs {
+            match instr.op.as_str() {
+                "parameter" => {
+                    let idx: usize = instr
+                        .args
+                        .first()
+                        .and_then(|a| a.parse().ok())
+                        .ok_or_else(|| anyhow!("bad parameter index in {name:?}"))?;
+                    let t = inputs
+                        .get(idx)
+                        .cloned()
+                        .ok_or_else(|| anyhow!("artifact {name:?} wants parameter {idx}, got {} inputs", inputs.len()))?;
+                    env.insert(&instr.name, t);
+                }
+                "tuple" => {
+                    let mut outs = Vec::with_capacity(instr.args.len());
+                    for a in &instr.args {
+                        outs.push(lookup(&env, a, name)?.clone());
+                    }
+                    if instr.root {
+                        outputs = Some(outs);
+                    }
+                }
+                "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" => {
+                    let a = lookup(&env, instr.args.first().map(|s| s.as_str()).unwrap_or(""), name)?;
+                    let b = lookup(&env, instr.args.get(1).map(|s| s.as_str()).unwrap_or(""), name)?;
+                    if a.data.len() != b.data.len() {
+                        return Err(anyhow!(
+                            "shape mismatch in {name:?}: {} vs {} elements for {}",
+                            a.data.len(),
+                            b.data.len(),
+                            instr.name
+                        ));
+                    }
+                    let f: fn(f32, f32) -> f32 = match instr.op.as_str() {
+                        "add" => |x, y| x + y,
+                        "subtract" => |x, y| x - y,
+                        "multiply" => |x, y| x * y,
+                        "divide" => |x, y| x / y,
+                        "maximum" => f32::max,
+                        _ => f32::min,
+                    };
+                    let data: Vec<f32> = a.data.iter().zip(b.data.iter()).map(|(&x, &y)| f(x, y)).collect();
+                    let t = TensorF32 { dims: instr.dims.clone(), data };
+                    if instr.root {
+                        outputs = Some(vec![t.clone()]);
+                    }
+                    env.insert(&instr.name, t);
+                }
+                "negate" | "exponential" | "copy" => {
+                    let a = lookup(&env, instr.args.first().map(|s| s.as_str()).unwrap_or(""), name)?;
+                    let f: fn(f32) -> f32 = match instr.op.as_str() {
+                        "negate" => |x| -x,
+                        "exponential" => f32::exp,
+                        _ => |x| x,
+                    };
+                    let data: Vec<f32> = a.data.iter().map(|&x| f(x)).collect();
+                    let t = TensorF32 { dims: instr.dims.clone(), data };
+                    if instr.root {
+                        outputs = Some(vec![t.clone()]);
+                    }
+                    env.insert(&instr.name, t);
+                }
+                other => {
+                    return Err(anyhow!(
+                        "unsupported HLO op {other:?} in artifact {name:?} — the offline \
+                         interpreter covers the elementwise subset only; run under a real \
+                         PJRT client for full artifacts"
+                    ));
+                }
+            }
+        }
+        outputs.ok_or_else(|| anyhow!("artifact {name:?} has no ROOT instruction"))
     }
+}
+
+fn lookup<'e>(env: &'e HashMap<&str, TensorF32>, name: &str, artifact: &str) -> Result<&'e TensorF32> {
+    env.get(name)
+        .ok_or_else(|| anyhow!("artifact {artifact:?}: operand {name:?} not defined yet"))
+}
+
+/// Parse the ENTRY computation of an HLO-text module.
+fn parse_hlo(text: &str) -> Result<HloProgram> {
+    let mut instrs = Vec::new();
+    let mut in_entry = false;
+    for raw in text.lines() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with("//") {
+            continue;
+        }
+        if !in_entry {
+            if line.starts_with("ENTRY") {
+                in_entry = true;
+            }
+            continue;
+        }
+        if line.starts_with('}') {
+            break;
+        }
+        instrs.push(parse_instr(line)?);
+    }
+    if instrs.is_empty() {
+        return Err(anyhow!("no ENTRY computation found"));
+    }
+    if !instrs.iter().any(|i| i.root) {
+        return Err(anyhow!("ENTRY computation has no ROOT instruction"));
+    }
+    Ok(HloProgram { instrs })
+}
+
+/// Parse one instruction line:
+/// `[ROOT] name = shape op(arg, arg, ...)[, attr=...]`.
+fn parse_instr(line: &str) -> Result<Instr> {
+    let (root, line) = match line.strip_prefix("ROOT ") {
+        Some(rest) => (true, rest),
+        None => (false, line),
+    };
+    let (name, rhs) = line
+        .split_once('=')
+        .ok_or_else(|| anyhow!("instruction without `=`: {line:?}"))?;
+    let name = name.trim().trim_start_matches('%').to_string();
+    let rhs = rhs.trim();
+    // Shape comes first: either a single token (`f32[4]{0}`) or a
+    // parenthesized tuple shape, which may contain spaces
+    // (`(f32[4]{0}, f32[4]{0})` — the return_tuple=True form every
+    // lowered artifact uses). The op call follows.
+    let (shape_tok, rest) = if rhs.starts_with('(') {
+        let close = rhs
+            .find(')')
+            .ok_or_else(|| anyhow!("unterminated tuple shape: {line:?}"))?;
+        (&rhs[..=close], rhs[close + 1..].trim_start())
+    } else {
+        rhs.split_once(char::is_whitespace)
+            .ok_or_else(|| anyhow!("instruction without op: {line:?}"))?
+    };
+    let rest = rest.trim();
+    let open = rest
+        .find('(')
+        .ok_or_else(|| anyhow!("op without argument list: {line:?}"))?;
+    let op = rest[..open].trim().to_string();
+    let close = rest[open..]
+        .find(')')
+        .map(|i| open + i)
+        .ok_or_else(|| anyhow!("unterminated argument list: {line:?}"))?;
+    let args = split_operands(&rest[open + 1..close]);
+    let dims = parse_dims(shape_tok);
+    Ok(Instr { name, op, args, dims, root })
+}
+
+/// Split an operand list on commas at bracket depth 0 only — typed
+/// operands like `f32[128,3]{1,0} %x` (the standard XLA dump form)
+/// carry commas inside their shape annotations. Each operand keeps its
+/// last whitespace-separated token, minus any `%` sigil.
+fn split_operands(body: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    for c in body.chars() {
+        match c {
+            '[' | '{' => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' | '}' => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if depth == 0 => parts.push(std::mem::take(&mut cur)),
+            c => cur.push(c),
+        }
+    }
+    parts.push(cur);
+    parts
+        .into_iter()
+        .map(|a| {
+            a.trim()
+                .rsplit(char::is_whitespace)
+                .next()
+                .unwrap_or("")
+                .trim_start_matches('%')
+                .to_string()
+        })
+        .filter(|a| !a.is_empty())
+        .collect()
+}
+
+/// `f32[4]{0}` → `[4]`; `f32[]` / `f32[]{}`→ `[]` (scalar); tuple shapes
+/// (parenthesized) → `[]` (dims are taken from the operands).
+fn parse_dims(shape: &str) -> Vec<i64> {
+    let Some(lo) = shape.find('[') else { return Vec::new() };
+    let Some(hi) = shape[lo..].find(']').map(|i| lo + i) else { return Vec::new() };
+    shape[lo + 1..hi]
+        .split(',')
+        .filter_map(|d| d.trim().parse().ok())
+        .collect()
 }
 
 #[cfg(test)]
@@ -198,5 +385,63 @@ ENTRY main {
     #[should_panic(expected = "dims/data mismatch")]
     fn tensor_shape_checked() {
         TensorF32::new(vec![2, 2], vec![1.0]);
+    }
+
+    /// Multi-output modules — `(shape, shape) tuple(a, b)` with a space
+    /// inside the tuple shape — are the `return_tuple=True` form every
+    /// real lowered artifact uses (regression: the shape token used to
+    /// be split at the first whitespace).
+    #[test]
+    fn multi_output_tuple_shapes_parse_and_execute() {
+        const MULTI_HLO: &str = "ENTRY main {\n  x = f32[2]{0} parameter(0)\n  y = f32[2]{0} parameter(1)\n  s = f32[2]{0} add(x, y)\n  d = f32[2]{0} subtract(x, y)\n  ROOT t = (f32[2]{0}, f32[2]{0}) tuple(s, d)\n}\n";
+        let p = write_artifact("multi.hlo.txt", MULTI_HLO);
+        let mut rt = ArtifactRuntime::cpu().unwrap();
+        rt.load("multi", &p).unwrap();
+        let x = TensorF32::new(vec![2], vec![5.0, 7.0]);
+        let y = TensorF32::new(vec![2], vec![1.0, 2.0]);
+        let out = rt.execute("multi", &[x, y]).unwrap();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].data, vec![6.0, 9.0]);
+        assert_eq!(out[1].data, vec![4.0, 5.0]);
+    }
+
+    #[test]
+    fn unsupported_ops_are_reported_not_miscomputed() {
+        const DOT_HLO: &str = "ENTRY main {\n  x = f32[2]{0} parameter(0)\n  ROOT d = f32[] dot(x, x)\n}\n";
+        let p = write_artifact("dot.hlo.txt", DOT_HLO);
+        let mut rt = ArtifactRuntime::cpu().unwrap();
+        rt.load("dot", &p).unwrap();
+        let err = rt.execute("dot", &[TensorF32::new(vec![2], vec![1.0, 2.0])]).unwrap_err();
+        assert!(err.to_string().contains("unsupported HLO op"));
+    }
+
+    /// Typed operands with multi-dimensional shapes (`f32[4,3]{1,0} %x`)
+    /// carry commas inside the annotation; the operand splitter must not
+    /// break on those (regression: a naive split(',') produced garbage
+    /// operand names for exactly the [N,3] shapes the gravity artifacts
+    /// use).
+    #[test]
+    fn typed_multidim_operands_parse() {
+        const TYPED_HLO: &str = "ENTRY main {\n  x = f32[4,3]{1,0} parameter(0)\n  y = f32[4,3]{1,0} parameter(1)\n  ROOT s = f32[4,3]{1,0} add(f32[4,3]{1,0} %x, f32[4,3]{1,0} %y)\n}\n";
+        let p = write_artifact("typed.hlo.txt", TYPED_HLO);
+        let mut rt = ArtifactRuntime::cpu().unwrap();
+        rt.load("typed", &p).unwrap();
+        let x = TensorF32::new(vec![4, 3], (0..12).map(|i| i as f32).collect());
+        let y = TensorF32::new(vec![4, 3], vec![1.0; 12]);
+        let out = rt.execute("typed", &[x, y]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].dims, vec![4, 3]);
+        assert_eq!(out[0].data[5], 6.0);
+    }
+
+    #[test]
+    fn scalar_and_unary_ops() {
+        const NEG_HLO: &str = "ENTRY main {\n  x = f32[] parameter(0)\n  ROOT n = f32[] negate(x)\n}\n";
+        let p = write_artifact("neg.hlo.txt", NEG_HLO);
+        let mut rt = ArtifactRuntime::cpu().unwrap();
+        rt.load("neg", &p).unwrap();
+        let out = rt.execute("neg", &[TensorF32::scalar(2.5)]).unwrap();
+        assert_eq!(out[0].data, vec![-2.5]);
+        assert!(out[0].dims.is_empty());
     }
 }

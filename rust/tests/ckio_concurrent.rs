@@ -1,0 +1,394 @@
+//! Concurrent multi-session lifecycle tests (PR 1):
+//!
+//! * teardown race — closing a session with reads in flight completes
+//!   every outstanding `read` callback exactly once (regression for the
+//!   old `EP_BUF_DROP` silently clearing `pending`),
+//! * verified-mode end-to-end run with splintered reads crossing buffer
+//!   boundaries under concurrent sessions, with leak checks on the
+//!   assembler/manager/director tables after every close,
+//! * parked-buffer reuse: a repeated session over the same file is
+//!   served from resident data with zero new file-system traffic,
+//! * concurrent opens of the same file are refcounted.
+
+use ckio::amt::callback::Callback;
+use ckio::amt::chare::{Chare, ChareRef, CollectionId};
+use ckio::amt::engine::{Ctx, Engine, EngineConfig};
+use ckio::amt::msg::{Ep, Msg, Payload};
+use ckio::amt::topology::{Pe, Placement};
+use ckio::ckio::director::Director;
+use ckio::ckio::{CkIo, Options, ReadResult, Session};
+use ckio::harness::experiments::assert_service_clean;
+use ckio::impl_chare_any;
+use ckio::pfs::{pattern, FileId, PfsConfig};
+
+const EP_GO: Ep = 1;
+const EP_OPENED: Ep = 2;
+const EP_READY: Ep = 3;
+const EP_DATA: Ep = 4;
+const EP_CLOSED: Ep = 5;
+const EP_FCLOSED: Ep = 6;
+const EP_SESSION_FWD: Ep = 7;
+const EP_SLICE_DONE: Ep = 8;
+
+// ---------------------------------------------------------------------
+// 1. Teardown race: close with reads in flight
+// ---------------------------------------------------------------------
+
+/// Issues `n_reads` split-phase reads and a `closeReadSession` in the
+/// same handler, so the close races every read through the manager →
+/// assembler → buffer pipeline. Every read callback must fire exactly
+/// once (data or NACK), and the close must complete.
+struct RacyCloser {
+    io: CkIo,
+    file: FileId,
+    size: u64,
+    n_reads: u32,
+    reads_seen: u32,
+    closed: bool,
+    done: Callback,
+}
+
+impl RacyCloser {
+    fn maybe_done(&mut self, ctx: &mut Ctx<'_>) {
+        if self.closed && self.reads_seen == self.n_reads {
+            let done = self.done.clone();
+            ctx.fire(done, Payload::empty());
+        }
+    }
+}
+
+impl Chare for RacyCloser {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_GO => {
+                let me = ctx.me();
+                let (io, file, size) = (self.io, self.file, self.size);
+                io.open(ctx, file, size, Options::with_readers(4), Callback::to_chare(me, EP_OPENED));
+            }
+            EP_OPENED => {
+                let me = ctx.me();
+                let (io, file, size) = (self.io, self.file, self.size);
+                io.start_read_session(ctx, file, 0, size, Callback::to_chare(me, EP_READY));
+            }
+            EP_READY => {
+                let s: Session = msg.take();
+                let me = ctx.me();
+                let io = self.io;
+                // Reads and close depart together: the buffers' greedy
+                // prefetch (256 MiB spans) is certainly still in flight,
+                // and so are these fetches when the drop lands.
+                let per = self.size / self.n_reads as u64;
+                for i in 0..self.n_reads as u64 {
+                    io.read(ctx, &s, i * per, per, Callback::to_chare(me, EP_DATA));
+                }
+                io.close_read_session(ctx, s.id, Callback::to_chare(me, EP_CLOSED));
+            }
+            EP_DATA => {
+                let r: ReadResult = msg.take();
+                assert!(r.len > 0);
+                self.reads_seen += 1;
+                assert!(
+                    self.reads_seen <= self.n_reads,
+                    "a read callback fired more than once"
+                );
+                self.maybe_done(ctx);
+            }
+            EP_CLOSED => {
+                assert!(!self.closed, "close callback fired twice");
+                self.closed = true;
+                self.maybe_done(ctx);
+            }
+            other => panic!("RacyCloser: unknown ep {other}"),
+        }
+    }
+    impl_chare_any!();
+}
+
+#[test]
+fn close_with_reads_in_flight_completes_every_callback_exactly_once() {
+    let mut eng = Engine::new(EngineConfig::sim(2, 2)).with_sim_pfs(PfsConfig::default());
+    let file = eng.core.sim_pfs_mut().create_file(1 << 30);
+    let io = CkIo::boot(&mut eng);
+    let fut = eng.future(1);
+    let c = eng.create_singleton(Pe(1), RacyCloser {
+        io,
+        file,
+        size: 1 << 30,
+        n_reads: 8,
+        reads_seen: 0,
+        closed: false,
+        done: Callback::Future(fut),
+    });
+    eng.inject_signal(c, EP_GO);
+    eng.run(); // must quiesce: no stranded assemblies, no panics
+    assert!(eng.future_done(fut), "reads or close never completed");
+    let closer: &RacyCloser = eng.chare(c);
+    assert_eq!(closer.reads_seen, 8, "every outstanding read completes exactly once");
+    assert!(closer.closed);
+    assert_service_clean(&eng, &io);
+}
+
+// ---------------------------------------------------------------------
+// 2. Verified concurrent sessions, splintered reads across buffer spans
+// ---------------------------------------------------------------------
+
+/// One client of a verified session: reads its slice, checks every byte
+/// against the deterministic file pattern, reports to the leader; the
+/// leader closes the session, then the file.
+struct VerifyClient {
+    io: CkIo,
+    file: FileId,
+    size: u64,
+    n_peers: u32,
+    peers: CollectionId,
+    opts: Options,
+    my_offset: u64,
+    my_len: u64,
+    session: Option<Session>,
+    slices_done: u32,
+    /// Whether the leader also drops its file refcount after the session
+    /// closes (off when a driver keeps the file open across sessions).
+    close_file: bool,
+    done: Callback,
+}
+
+impl Chare for VerifyClient {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_GO => {
+                let me = ctx.me();
+                let (io, file, size, opts) = (self.io, self.file, self.size, self.opts.clone());
+                io.open(ctx, file, size, opts, Callback::to_chare(me, EP_OPENED));
+            }
+            EP_OPENED => {
+                let me = ctx.me();
+                let (io, file, size) = (self.io, self.file, self.size);
+                io.start_read_session(ctx, file, 0, size, Callback::to_chare(me, EP_READY));
+            }
+            EP_READY | EP_SESSION_FWD => {
+                let s: Session = msg.take();
+                if msg.ep == EP_READY {
+                    for j in 1..self.n_peers {
+                        ctx.send(ChareRef::new(self.peers, j), EP_SESSION_FWD, s);
+                    }
+                }
+                self.session = Some(s);
+                let me = ctx.me();
+                let (io, off, len) = (self.io, self.my_offset, self.my_len);
+                io.read(ctx, &s, off, len, Callback::to_chare(me, EP_DATA));
+            }
+            EP_DATA => {
+                let r: ReadResult = msg.take();
+                assert_eq!(r.len, self.my_len);
+                let bytes = r.chunk.bytes.as_ref().expect("materialized run");
+                assert_eq!(bytes.len() as u64, r.len);
+                assert_eq!(
+                    pattern::verify(self.file, r.offset, bytes),
+                    None,
+                    "corrupt read at {} in session {:?}",
+                    r.offset,
+                    r.session
+                );
+                ctx.send(ChareRef::new(self.peers, 0), EP_SLICE_DONE, ());
+            }
+            EP_SLICE_DONE => {
+                self.slices_done += 1;
+                if self.slices_done == self.n_peers {
+                    let sid = self.session.as_ref().unwrap().id;
+                    let me = ctx.me();
+                    let io = self.io;
+                    io.close_read_session(ctx, sid, Callback::to_chare(me, EP_CLOSED));
+                }
+            }
+            EP_CLOSED => {
+                if self.close_file {
+                    let me = ctx.me();
+                    let (io, file) = (self.io, self.file);
+                    io.close(ctx, file, Callback::to_chare(me, EP_FCLOSED));
+                } else {
+                    let done = self.done.clone();
+                    ctx.fire(done, Payload::empty());
+                }
+            }
+            EP_FCLOSED => {
+                let done = self.done.clone();
+                ctx.fire(done, Payload::empty());
+            }
+            other => panic!("VerifyClient: unknown ep {other}"),
+        }
+    }
+    impl_chare_any!();
+}
+
+#[allow(clippy::too_many_arguments)]
+fn spawn_verified_session(
+    eng: &mut Engine,
+    io: CkIo,
+    file: FileId,
+    size: u64,
+    nclients: u32,
+    opts: Options,
+    close_file: bool,
+    done: Callback,
+) -> ChareRef {
+    let per = size / nclients as u64;
+    let cid = eng.create_array(nclients, &Placement::RoundRobinPes, |i| {
+        let lo = i as u64 * per;
+        let hi = if i == nclients - 1 { size } else { lo + per };
+        VerifyClient {
+            io,
+            file,
+            size,
+            n_peers: nclients,
+            peers: CollectionId(u32::MAX),
+            opts: opts.clone(),
+            my_offset: lo,
+            my_len: hi - lo,
+            session: None,
+            slices_done: 0,
+            close_file,
+            done: done.clone(),
+        }
+    });
+    for i in 0..nclients {
+        eng.chare_mut::<VerifyClient>(ChareRef::new(cid, i)).peers = cid;
+    }
+    ChareRef::new(cid, 0)
+}
+
+#[test]
+fn concurrent_verified_sessions_with_boundary_crossing_splinters() {
+    let mut eng = Engine::new(EngineConfig::sim(2, 2)).with_sim_pfs(PfsConfig {
+        materialize: true,
+        noise_sigma: 0.0,
+        ..PfsConfig::default()
+    });
+    let size: u64 = 3 << 20;
+    // Two concurrent sessions over two distinct files, plus a third over
+    // the first file (same-file concurrency): 4 buffers each => 768 KiB
+    // spans; 3 clients each => 1 MiB slices, so every middle read crosses
+    // a buffer-chare boundary; 64 KiB splinters keep pieces partial.
+    let file_a = eng.core.sim_pfs_mut().create_file(size);
+    let file_b = eng.core.sim_pfs_mut().create_file(size);
+    let io = CkIo::boot(&mut eng);
+    let opts = Options {
+        num_readers: Some(4),
+        splinter_bytes: Some(64 << 10),
+        ..Default::default()
+    };
+    let fut = eng.future(3 * 3); // 3 sessions x 3 clients
+    let leaders = [
+        spawn_verified_session(&mut eng, io, file_a, size, 3, opts.clone(), true, Callback::Future(fut)),
+        spawn_verified_session(&mut eng, io, file_b, size, 3, opts.clone(), true, Callback::Future(fut)),
+        spawn_verified_session(&mut eng, io, file_a, size, 3, opts, true, Callback::Future(fut)),
+    ];
+    for l in leaders {
+        eng.inject_signal(l, EP_GO);
+    }
+    eng.run();
+    assert!(eng.future_done(fut), "not every client finished");
+    // All 3 sessions' bytes were delivered, with verified contents.
+    assert_eq!(eng.core.metrics.counter("ckio.bytes_delivered"), 3 * size);
+    assert_eq!(eng.core.metrics.counter("ckio.sessions"), 3);
+    // No session/assembly/pending residue and no leaked file refs.
+    assert_service_clean(&eng, &io);
+    let director: &Director = eng.chare(io.director);
+    assert_eq!(director.open_files(), 0, "refcounted closes should empty the file table");
+}
+
+// ---------------------------------------------------------------------
+// 3. Parked-buffer reuse across back-to-back sessions
+// ---------------------------------------------------------------------
+
+/// Runs two sequential verified sessions over the same file with
+/// `reuse_buffers` on; the second must be served entirely from the
+/// parked array (zero new PFS traffic).
+#[test]
+fn repeated_session_with_reuse_reads_the_file_once() {
+    let mut eng = Engine::new(EngineConfig::sim(2, 2)).with_sim_pfs(PfsConfig {
+        materialize: true,
+        noise_sigma: 0.0,
+        ..PfsConfig::default()
+    });
+    let size: u64 = 2 << 20;
+    let file = eng.core.sim_pfs_mut().create_file(size);
+    let io = CkIo::boot(&mut eng);
+    let opts = Options { num_readers: Some(4), reuse_buffers: true, ..Default::default() };
+
+    // The driver holds the file open across both sessions (a refcount of
+    // its own), so the parked array survives the gap between them.
+    io.open_driver(&mut eng, file, size, opts.clone(), Callback::Ignore);
+
+    // Session 1 (does not drop the file ref).
+    let fut1 = eng.future(2);
+    let l1 = spawn_verified_session(&mut eng, io, file, size, 2, opts.clone(), false, Callback::Future(fut1));
+    eng.inject_signal(l1, EP_GO);
+    eng.run();
+    assert!(eng.future_done(fut1));
+    let bytes_after_first = eng.core.metrics.counter("pfs.bytes_read");
+    assert!(bytes_after_first >= size, "first session must actually read the file");
+    {
+        let director: &Director = eng.chare(io.director);
+        assert_eq!(director.cached_buffer_arrays(), 1, "close must park the array");
+    }
+
+    // Session 2, identical shape: the parked array is rebound.
+    let fut2 = eng.future(2);
+    let l2 = spawn_verified_session(&mut eng, io, file, size, 2, opts, false, Callback::Future(fut2));
+    eng.inject_signal(l2, EP_GO);
+    eng.run();
+    assert!(eng.future_done(fut2));
+    assert_eq!(
+        eng.core.metrics.counter("pfs.bytes_read"),
+        bytes_after_first,
+        "second session must be served from the parked buffers"
+    );
+    assert_eq!(eng.core.metrics.counter("ckio.buffer_reuse"), 1);
+    assert_eq!(eng.core.metrics.counter("ckio.bytes_delivered"), 2 * size);
+    assert_service_clean(&eng, &io);
+
+    // Dropping every file ref (sessions dropped theirs via `open` only;
+    // the two session opens and the driver's add up to 3 refs, of which
+    // the sessions never closed — so three driver-side closes) finally
+    // purges the parked array and empties the file table.
+    let cfut = eng.future(3);
+    for _ in 0..3 {
+        io.close_file_driver(&mut eng, file, Callback::Future(cfut));
+    }
+    eng.run();
+    assert!(eng.future_done(cfut));
+    let director: &Director = eng.chare(io.director);
+    assert_eq!(director.cached_buffer_arrays(), 0, "final file close must purge the cache");
+    assert_eq!(director.open_files(), 0);
+}
+
+// ---------------------------------------------------------------------
+// 4. Concurrent opens of one file are refcounted
+// ---------------------------------------------------------------------
+
+#[test]
+fn concurrent_same_file_opens_share_one_open_and_refcount_closes() {
+    let mut eng = Engine::new(EngineConfig::sim(1, 2)).with_sim_pfs(PfsConfig {
+        materialize: true,
+        noise_sigma: 0.0,
+        ..PfsConfig::default()
+    });
+    let size: u64 = 1 << 20;
+    let file = eng.core.sim_pfs_mut().create_file(size);
+    let io = CkIo::boot(&mut eng);
+    // Two independent single-client sessions over the same file, started
+    // simultaneously: their opens race, their closes race.
+    let fut = eng.future(2);
+    let l1 = spawn_verified_session(&mut eng, io, file, size, 1, Options::with_readers(2), true, Callback::Future(fut));
+    let l2 = spawn_verified_session(&mut eng, io, file, size, 1, Options::with_readers(2), true, Callback::Future(fut));
+    eng.inject_signal(l1, EP_GO);
+    eng.inject_signal(l2, EP_GO);
+    eng.run();
+    assert!(eng.future_done(fut), "both sessions must complete");
+    assert_eq!(eng.core.metrics.counter("ckio.bytes_delivered"), 2 * size);
+    // One of the two opens was answered from the shared open/file table.
+    assert_eq!(eng.core.metrics.counter("ckio.reopens"), 1);
+    let director: &Director = eng.chare(io.director);
+    assert_eq!(director.open_files(), 0, "both closes must finally release the file");
+    assert_service_clean(&eng, &io);
+}
