@@ -1,0 +1,89 @@
+//! The shared resident-data plane (PR 2): K concurrent sessions over ONE
+//! file read it from the parallel file system approximately once.
+//!
+//! Before the span store, every session prefetched its full range
+//! independently — K same-file sessions meant K× the PFS traffic. Now
+//! the director registers every buffer chare's span as a *claim*; later
+//! sessions peer-fetch claimed slots from the owning buffers (waiting on
+//! their in-flight greedy reads instead of duplicating them), so the
+//! bytes cross the PFS wire once and fan out over the much faster
+//! interconnect.
+//!
+//! The run also demonstrates the admission governor: capping aggregate
+//! in-flight PFS reads sequences K sessions' prefetch instead of letting
+//! them interleave at the OSTs.
+//!
+//! ```sh
+//! cargo run --release --example shared_store -- [--file-size 256MiB] [--clients 32]
+//! ```
+
+use ckio::ckio::director::Director;
+use ckio::ckio::Options;
+use ckio::harness::experiments::{assert_service_clean, run_svc_shared};
+use ckio::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let size = args.get_bytes_or("file-size", 256 << 20);
+    let clients = args.get_or("clients", 32u32);
+    let readers = args.get_or("readers", 8u32);
+    let (nodes, pes) = (args.get_or("nodes", 4u32), args.get_or("pes-per-node", 8u32));
+
+    println!(
+        "{nodes} nodes x {pes} PEs; K sessions, ALL over one {} file, {clients} clients \
+         and {readers} buffer chares each.\n",
+        ckio::util::human_bytes(size),
+    );
+    println!(
+        "{:>3}  {:>10}  {:>10}  {:>10}  {:>10}",
+        "K", "PFS read", "pfs ratio", "store hit", "agg GiB/s"
+    );
+
+    let mut base = 0.0f64;
+    for k in [1u32, 2, 4, 8] {
+        let (st, io, eng) =
+            run_svc_shared(nodes, pes, size, k, clients, Options::with_readers(readers), 42);
+        if k == 1 {
+            base = st.pfs_bytes_read as f64;
+        }
+        let ratio = st.pfs_bytes_read as f64 / base;
+        println!(
+            "{k:>3}  {:>10}  {:>9.2}x  {:>10}  {:>10.2}",
+            ckio::util::human_bytes(st.pfs_bytes_read),
+            ratio,
+            ckio::util::human_bytes(st.store_hit_bytes),
+            st.aggregate_gibs,
+        );
+        // The dedup claim, enforced: K same-file sessions must stay near
+        // one file's worth of PFS traffic, not K of them.
+        assert!(
+            ratio <= 1.25,
+            "K={k} same-file sessions read {ratio:.2}x the PFS bytes of one session: \
+             the resident-data plane is broken"
+        );
+        assert_service_clean(&eng, &io);
+        let director = eng.chare::<Director>(io.director);
+        assert_eq!(director.open_files(), 0, "leaked file refs");
+    }
+
+    // Admission control: cap aggregate in-flight PFS reads and watch the
+    // governor sequence K = 4 sessions' prefetch.
+    let mut gov = Options::with_readers(readers);
+    gov.max_inflight_reads = Some(readers);
+    gov.splinter_bytes = Some(4 << 20);
+    let (st, io, eng) = run_svc_shared(nodes, pes, size, 4, clients, gov, 42);
+    assert_service_clean(&eng, &io);
+    let peak = eng.core.metrics.value(ckio::metrics::keys::PFS_MAX_CONCURRENT);
+    assert!(
+        peak <= readers as f64,
+        "governor cap {readers} violated: PFS saw {peak:.0} concurrent reads"
+    );
+    println!(
+        "\ngoverned (cap {readers} reads in flight): K=4 makespan {:.3}s, \
+         {} reads throttled, PFS peak concurrency {peak:.0}",
+        st.makespan_s,
+        st.governor_throttled,
+    );
+
+    println!("=> same-file sessions share one prefetch; the PFS sees the file once.");
+}

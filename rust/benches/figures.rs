@@ -29,6 +29,7 @@ fn main() {
         ("ablation_splinter", Box::new(move || exp::ablation_splinter(reps))),
         ("ablation_autoreaders", Box::new(move || exp::ablation_autoreaders(reps))),
         ("svc_concurrent", Box::new(move || exp::svc_concurrent(reps))),
+        ("svc_shared", Box::new(move || exp::svc_shared(reps))),
     ];
 
     let total = std::time::Instant::now();
@@ -44,11 +45,17 @@ fn main() {
             Err(e) => eprintln!("csv write failed for {slug}: {e}"),
         }
     }
-    // Machine-readable perf anchor for the concurrency work (PR 1).
-    if wanted.is_empty() || wanted.iter().any(|w| "svc_concurrent".contains(w.as_str())) {
-        match std::fs::write("BENCH_pr1.json", exp::bench_pr1_json(reps)) {
-            Ok(()) => println!("[json] BENCH_pr1.json"),
-            Err(e) => eprintln!("BENCH_pr1.json write failed: {e}"),
+    // Machine-readable perf anchor for the resident-data-plane work
+    // (PR 2: svc_concurrent continuity + svc_shared dedup + store keys).
+    // Either svc filter triggers it — the JSON contains both sections.
+    if wanted.is_empty()
+        || wanted
+            .iter()
+            .any(|w| "svc_shared".contains(w.as_str()) || "svc_concurrent".contains(w.as_str()))
+    {
+        match std::fs::write("BENCH_pr2.json", exp::bench_pr2_json(reps)) {
+            Ok(()) => println!("[json] BENCH_pr2.json"),
+            Err(e) => eprintln!("BENCH_pr2.json write failed: {e}"),
         }
     }
     println!("total bench wall time: {:.1}s", total.elapsed().as_secs_f64());

@@ -12,6 +12,21 @@
 //! `Options::splinter_bytes` set, the span is read in sub-chunks and a
 //! fetch is served as soon as the splinters covering it have arrived.
 //!
+//! Resident-data plane (PR 2): a buffer chare is a *source* as well as a
+//! reader. The director's span store may assign some of its splinter
+//! slots to peer buffer chares (of an earlier session over the same file,
+//! live or parked) instead of the PFS: those slots are obtained with
+//! `EP_BUF_PEER_FETCH` and never touch the file system. Symmetrically,
+//! this chare answers peer fetches for its own resident slots — a fetch
+//! for a slot whose greedy read is still in flight queues and is served
+//! on arrival, which is what dedups concurrent same-file prefetch. A
+//! peer that was dropped meanwhile answers with a *miss* and the
+//! requester falls back to its own PFS read, so correctness never
+//! depends on the cache. When the file was opened with
+//! `Options::max_inflight_reads`, PFS reads are additionally *governed*:
+//! the chare requests tickets from the director's admission governor and
+//! issues exactly what is granted.
+//!
 //! Lifecycle (PR 1): a buffer chare is `Active` while its session runs.
 //! Teardown *drains* — every queued fetch is answered before the director
 //! is acked (resident extents with real data, the rest with modeled NACK
@@ -22,10 +37,12 @@
 //! kept and a later identical session rebinds the array without touching
 //! the file system again.
 
+use std::collections::VecDeque;
+
 use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::Ctx;
-use crate::amt::msg::{Ep, Msg};
+use crate::amt::msg::{Ep, Msg, Payload};
 use crate::amt::time::MICROS;
 use crate::amt::topology::Pe;
 use crate::impl_chare_any;
@@ -49,6 +66,12 @@ pub const EP_BUF_DROP: Ep = 4;
 pub const EP_BUF_PARK: Ep = 5;
 /// Revive a parked buffer under a new session id (payload: `SessionId`).
 pub const EP_BUF_REBIND: Ep = 6;
+/// A peer buffer chare requests one of its slots from our resident data.
+pub const EP_BUF_PEER_FETCH: Ep = 7;
+/// A peer's reply: the slot's chunk, or `None` (miss — read it yourself).
+pub const EP_BUF_PEER_DATA: Ep = 8;
+/// Admission governor grant: issue this many PFS reads now.
+pub const EP_BUF_GRANT: Ep = 9;
 
 /// Fetch request from an assembler.
 #[derive(Debug)]
@@ -68,6 +91,48 @@ pub struct PieceMsg {
     pub chunk: Chunk,
 }
 
+/// Buffer → buffer: serve `[offset, offset+len)` (the requester's slot
+/// `slot`) from your resident data.
+#[derive(Debug)]
+pub struct PeerFetchMsg {
+    pub offset: u64,
+    pub len: u64,
+    /// The *requester's* splinter slot this extent fills.
+    pub slot: u32,
+    pub reply: ChareRef,
+}
+
+/// Buffer → buffer: the answer to a [`PeerFetchMsg`]. `chunk: None` is a
+/// miss (the source was dropped): fall back to a PFS read.
+#[derive(Debug)]
+pub struct PeerDataMsg {
+    pub slot: u32,
+    pub len: u64,
+    pub chunk: Option<Chunk>,
+}
+
+/// Buffer → director: request PFS read tickets from the governor.
+#[derive(Debug)]
+pub struct IoReqMsg {
+    pub buffer: ChareRef,
+    pub want: u32,
+    /// Total bytes of the owning session (admission priority key).
+    pub sess_bytes: u64,
+}
+
+/// Buffer → director: return `n` tickets (reads completed, or a grant
+/// arrived after this buffer was dropped).
+#[derive(Debug)]
+pub struct IoDoneMsg {
+    pub n: u32,
+}
+
+/// Grant from the governor (via the director).
+#[derive(Debug)]
+pub struct GrantMsg {
+    pub n: u32,
+}
+
 /// Notification to the director that this buffer initiated its reads
 /// (or, on rebind, that it is serving again).
 #[derive(Debug)]
@@ -79,6 +144,9 @@ pub struct BufStartedMsg {
 #[derive(Debug)]
 pub struct BufDroppedMsg {
     pub session: SessionId,
+    /// Bytes this chare keeps resident (its span length when parking,
+    /// 0 when dropping) — the span store's budget accounting.
+    pub resident: u64,
 }
 
 /// Lifecycle state of a buffer chare.
@@ -86,10 +154,12 @@ pub struct BufDroppedMsg {
 enum BufState {
     /// Serving a live session.
     Active,
-    /// Session closed with `reuse_buffers`: data retained for rebind.
+    /// Session closed with `reuse_buffers`: data retained for rebind and
+    /// peer fetches.
     Parked,
     /// Session closed: data released; late fetches are flush-served
-    /// with modeled NACK chunks, late I/O completions discarded.
+    /// with modeled NACK chunks, late I/O completions discarded, late
+    /// peer fetches answered with a miss.
     Dropped,
 }
 
@@ -106,9 +176,23 @@ pub struct BufferChare {
     window: u32,
     /// Per-splinter data; index = splinter slot.
     chunks: Vec<Option<Chunk>>,
-    next_issue: u32,
+    /// Slots to read from the PFS, in issue order (slots assigned to
+    /// peers are absent; a peer miss re-queues its slot here).
+    pfs_queue: VecDeque<u32>,
+    /// Slots served by peer buffer chares: `(slot, owner)`.
+    peer_slots: Vec<(u32, ChareRef)>,
+    /// PFS reads issued and not yet completed.
+    pfs_inflight: u32,
     completed: u32,
     pending: Vec<FetchMsg>,
+    /// Peer fetches for slots whose data has not arrived yet.
+    peer_pending: Vec<PeerFetchMsg>,
+    /// Governed issuance (admission governor active for this file).
+    governed: bool,
+    /// Total session bytes (governor admission priority key).
+    sess_bytes: u64,
+    /// Tickets requested from the governor and not yet granted.
+    asked: u32,
     director: ChareRef,
     assemblers: CollectionId,
     state: BufState,
@@ -132,6 +216,7 @@ impl BufferChare {
         } else {
             ceil_div(my_len, splinter) as usize
         };
+        let pfs_queue = if my_len == 0 { VecDeque::new() } else { (0..nslots as u32).collect() };
         BufferChare {
             session,
             file,
@@ -140,13 +225,36 @@ impl BufferChare {
             splinter,
             window: window.max(1),
             chunks: vec![None; nslots],
-            next_issue: 0,
+            pfs_queue,
+            peer_slots: Vec::new(),
+            pfs_inflight: 0,
             completed: 0,
             pending: Vec::new(),
+            peer_pending: Vec::new(),
+            governed: false,
+            sess_bytes: 0,
+            asked: 0,
             director,
             assemblers,
             state: BufState::Active,
         }
+    }
+
+    /// Assign slots to peer sources (span-store claim matches): those
+    /// slots are peer-fetched instead of read from the PFS.
+    pub fn with_peers(mut self, peers: Vec<(u32, ChareRef)>) -> BufferChare {
+        for &(slot, _) in &peers {
+            self.pfs_queue.retain(|&s| s != slot);
+        }
+        self.peer_slots = peers;
+        self
+    }
+
+    /// Route PFS reads through the admission governor (the director).
+    pub fn governed(mut self, sess_bytes: u64) -> BufferChare {
+        self.governed = true;
+        self.sess_bytes = sess_bytes;
+        self
     }
 
     /// The file-coordinate extent of splinter slot `i`.
@@ -174,19 +282,58 @@ impl BufferChare {
         self.slots_for(offset, len).all(|s| self.chunks[s as usize].is_some())
     }
 
-    /// Issue the next splinter read, if any remain.
-    fn issue_next(&mut self, ctx: &mut Ctx<'_>) {
-        if self.my_len == 0 || self.next_issue as usize >= self.chunks.len() {
-            return;
+    /// The in-flight target: splinterless spans are one read.
+    fn window_cap(&self) -> u32 {
+        if self.splinter == 0 {
+            1
+        } else {
+            self.window
         }
-        let slot = self.next_issue;
-        self.next_issue += 1;
+    }
+
+    /// Issue the next queued PFS slot read, if any.
+    fn issue_next(&mut self, ctx: &mut Ctx<'_>) {
+        let Some(slot) = self.pfs_queue.pop_front() else { return };
         let (offset, len) = self.slot_extent(slot);
+        self.pfs_inflight += 1;
+        ctx.metrics().count(keys::STORE_MISS, len);
         let me = ctx.me();
         ctx.submit_read(
             ReadRequest { file: self.file, offset, len, user: slot as u64 },
             Callback::to_chare(me, EP_BUF_DATA),
         );
+    }
+
+    /// Governed issuance: ask the governor for tickets covering the
+    /// queued slots, up to the window.
+    fn maybe_request(&mut self, ctx: &mut Ctx<'_>) {
+        if !self.governed {
+            return;
+        }
+        let queued = self.pfs_queue.len() as u32;
+        let room = self.window_cap().saturating_sub(self.pfs_inflight + self.asked);
+        let want = queued.saturating_sub(self.asked).min(room);
+        if want > 0 {
+            self.asked += want;
+            let me = ctx.me();
+            ctx.send(
+                self.director,
+                super::director::EP_DIR_IO_REQ,
+                IoReqMsg { buffer: me, want, sess_bytes: self.sess_bytes },
+            );
+        }
+    }
+
+    /// Kick issuance: governed chares ask the governor, ungoverned ones
+    /// read directly.
+    fn pump(&mut self, ctx: &mut Ctx<'_>) {
+        if self.governed {
+            self.maybe_request(ctx);
+        } else {
+            while self.pfs_inflight < self.window_cap() && !self.pfs_queue.is_empty() {
+                self.issue_next(ctx);
+            }
+        }
     }
 
     /// Answer a fetch from resident data: zero-copy send to the
@@ -202,7 +349,7 @@ impl BufferChare {
         ctx.send_sized(
             to,
             super::assembler::EP_A_PIECE,
-            crate::amt::msg::Payload::new(PieceMsg { tag: f.tag, chunk }),
+            Payload::new(PieceMsg { tag: f.tag, chunk }),
             wire,
             Transfer::ZeroCopy,
         );
@@ -220,14 +367,87 @@ impl BufferChare {
         );
     }
 
-    /// Teardown drain: answer every queued fetch exactly once — resident
-    /// extents with data, the rest as NACKs — before acking the director.
-    fn drain_pending(&mut self, ctx: &mut Ctx<'_>) {
+    /// Answer a peer fetch from resident data (zero-copy, like a piece).
+    fn serve_peer(&self, ctx: &mut Ctx<'_>, f: &PeerFetchMsg) {
+        let chunk = self.extract(f.offset, f.len);
+        let wire = chunk.len;
+        ctx.metrics().count("ckio.store.peer_served", 1);
+        ctx.advance(MICROS / 2);
+        ctx.send_sized(
+            f.reply,
+            EP_BUF_PEER_DATA,
+            Payload::new(PeerDataMsg { slot: f.slot, len: f.len, chunk: Some(chunk) }),
+            wire,
+            Transfer::ZeroCopy,
+        );
+    }
+
+    /// Answer a peer fetch this chare can never serve (dropped / out of
+    /// span): the requester falls back to its own PFS read.
+    fn peer_miss(&self, ctx: &mut Ctx<'_>, f: &PeerFetchMsg) {
+        ctx.metrics().count("ckio.store.peer_miss", 1);
+        ctx.send(f.reply, EP_BUF_PEER_DATA, PeerDataMsg { slot: f.slot, len: f.len, chunk: None });
+    }
+
+    /// Serve every queued assembler/peer fetch that became satisfiable.
+    fn serve_ready(&mut self, ctx: &mut Ctx<'_>) {
+        let mut still = Vec::new();
+        for f in std::mem::take(&mut self.pending) {
+            if self.have(f.offset, f.len) {
+                self.serve(ctx, &f);
+            } else {
+                still.push(f);
+            }
+        }
+        self.pending = still;
+        let mut still = Vec::new();
+        for f in std::mem::take(&mut self.peer_pending) {
+            if self.have(f.offset, f.len) {
+                self.serve_peer(ctx, &f);
+            } else {
+                still.push(f);
+            }
+        }
+        self.peer_pending = still;
+    }
+
+    /// A slot's data arrived (PFS completion or peer chunk): store it and
+    /// serve whatever became satisfiable.
+    fn slot_arrived(&mut self, ctx: &mut Ctx<'_>, slot: usize, chunk: Chunk) {
+        debug_assert!(self.chunks[slot].is_none(), "duplicate splinter completion");
+        self.chunks[slot] = Some(chunk);
+        self.completed += 1;
+        if self.completed as usize == self.chunks.len() {
+            let t = ctx.now() as f64;
+            ctx.metrics().set_max("ckio.last_io_ns", t);
+        }
+        self.serve_ready(ctx);
+    }
+
+    /// Teardown drain of *client* fetches: answer every queued assembler
+    /// fetch exactly once — resident extents with data, the rest as
+    /// NACKs. Shared by both teardown flavors (drop and park).
+    fn drain_client_fetches(&mut self, ctx: &mut Ctx<'_>) {
         for f in std::mem::take(&mut self.pending) {
             if self.have(f.offset, f.len) {
                 self.serve(ctx, &f);
             } else {
                 self.serve_nack(ctx, &f);
+            }
+        }
+    }
+
+    /// Full teardown drain (drop only): client fetches as above, and
+    /// queued peer fetches get data or a miss (their owner re-reads from
+    /// the PFS). Parking skips the peer half — a parked chare keeps its
+    /// data and serves peers on arrival.
+    fn drain_pending(&mut self, ctx: &mut Ctx<'_>) {
+        self.drain_client_fetches(ctx);
+        for f in std::mem::take(&mut self.peer_pending) {
+            if self.have(f.offset, f.len) {
+                self.serve_peer(ctx, &f);
+            } else {
+                self.peer_miss(ctx, &f);
             }
         }
     }
@@ -262,7 +482,7 @@ impl BufferChare {
 
     /// Queued fetch count (leak checks in tests).
     pub fn pending_len(&self) -> usize {
-        self.pending.len()
+        self.pending.len() + self.peer_pending.len()
     }
 
     /// Whether teardown released this chare's data.
@@ -274,17 +494,29 @@ impl BufferChare {
     pub fn resident_bytes(&self) -> u64 {
         self.chunks.iter().flatten().map(|c| c.len).sum()
     }
+
+    /// Slots assigned to peer sources (tests).
+    pub fn peer_slot_count(&self) -> usize {
+        self.peer_slots.len()
+    }
 }
 
 impl Chare for BufferChare {
     fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
         match msg.ep {
             EP_BUF_INIT => {
-                // Greedy read: start immediately, before any client asks.
-                let n = if self.splinter == 0 { 1 } else { self.window };
-                for _ in 0..n {
-                    self.issue_next(ctx);
+                // Peer-assigned slots: fetch from the owning buffer chare
+                // (its greedy read is resident or in flight) — these
+                // bytes never touch the PFS again.
+                let me = ctx.me();
+                let peers = self.peer_slots.clone();
+                for (slot, owner) in peers {
+                    let (offset, len) = self.slot_extent(slot);
+                    ctx.send(owner, EP_BUF_PEER_FETCH, PeerFetchMsg { offset, len, slot, reply: me });
                 }
+                // Greedy PFS reads: start immediately, before any client
+                // asks (through the governor when admission-controlled).
+                self.pump(ctx);
                 ctx.advance(MICROS);
                 ctx.send(self.director, super::director::EP_DIR_BUF_STARTED, BufStartedMsg {
                     session: self.session,
@@ -292,30 +524,63 @@ impl Chare for BufferChare {
             }
             EP_BUF_DATA => {
                 let r: IoResult = msg.take();
+                // Governor bookkeeping happens even for late completions
+                // of dropped chares — tickets must always return.
+                self.pfs_inflight = self.pfs_inflight.saturating_sub(1);
+                if self.governed {
+                    ctx.send(self.director, super::director::EP_DIR_IO_DONE, IoDoneMsg { n: 1 });
+                }
                 if self.state == BufState::Dropped {
                     return; // late completion after teardown
                 }
                 // Active or Parked: keep filling (a parked buffer keeps
-                // warming its cache for the next rebind).
-                let slot = r.user as usize;
-                debug_assert!(self.chunks[slot].is_none(), "duplicate splinter completion");
-                self.chunks[slot] = Some(r.chunk);
-                self.completed += 1;
-                self.issue_next(ctx);
-                if self.completed as usize == self.chunks.len() {
-                    let t = ctx.now() as f64;
-                    ctx.metrics().set_max("ckio.last_io_ns", t);
-                }
-                // Serve whatever became satisfiable.
-                let mut still = Vec::new();
-                for f in std::mem::take(&mut self.pending) {
-                    if self.have(f.offset, f.len) {
-                        self.serve(ctx, &f);
-                    } else {
-                        still.push(f);
+                // warming its cache for the next rebind or peer fetch).
+                self.slot_arrived(ctx, r.user as usize, r.chunk);
+                self.pump(ctx);
+            }
+            EP_BUF_PEER_DATA => {
+                let m: PeerDataMsg = msg.take();
+                match m.chunk {
+                    Some(chunk) => {
+                        if self.state == BufState::Dropped {
+                            return; // late peer data after teardown
+                        }
+                        ctx.metrics().count(keys::STORE_HIT, m.len);
+                        self.slot_arrived(ctx, m.slot as usize, chunk);
+                    }
+                    None => {
+                        // Peer dropped before serving: this slot is ours
+                        // to read after all.
+                        if self.state == BufState::Dropped {
+                            return;
+                        }
+                        self.pfs_queue.push_back(m.slot);
+                        self.pump(ctx);
                     }
                 }
-                self.pending = still;
+            }
+            EP_BUF_GRANT => {
+                let g: GrantMsg = msg.take();
+                self.asked = self.asked.saturating_sub(g.n);
+                if self.state == BufState::Dropped {
+                    // Too late to read: return the tickets untouched.
+                    ctx.send(self.director, super::director::EP_DIR_IO_DONE, IoDoneMsg { n: g.n });
+                    return;
+                }
+                let mut issued = 0;
+                for _ in 0..g.n {
+                    if self.pfs_queue.is_empty() {
+                        break;
+                    }
+                    self.issue_next(ctx);
+                    issued += 1;
+                }
+                if issued < g.n {
+                    // Excess tickets (peer data landed meanwhile): return.
+                    ctx.send(self.director, super::director::EP_DIR_IO_DONE, IoDoneMsg {
+                        n: g.n - issued,
+                    });
+                }
             }
             EP_BUF_FETCH => {
                 let f: FetchMsg = msg.take();
@@ -343,6 +608,22 @@ impl Chare for BufferChare {
                     self.pending.push(f);
                 }
             }
+            EP_BUF_PEER_FETCH => {
+                let f: PeerFetchMsg = msg.take();
+                let in_span =
+                    f.offset >= self.my_offset && f.offset + f.len <= self.my_offset + self.my_len;
+                if self.state == BufState::Dropped || !in_span || f.len == 0 {
+                    // Dropped (or a stale claim): the requester falls
+                    // back to its own PFS read.
+                    self.peer_miss(ctx, &f);
+                } else if self.have(f.offset, f.len) {
+                    self.serve_peer(ctx, &f);
+                } else {
+                    // The covering greedy read is queued or in flight:
+                    // serve on arrival — this wait *is* the dedup.
+                    self.peer_pending.push(f);
+                }
+            }
             EP_BUF_DROP => {
                 self.drain_pending(ctx);
                 self.chunks.iter_mut().for_each(|c| *c = None);
@@ -350,14 +631,20 @@ impl Chare for BufferChare {
                 ctx.advance(MICROS / 2);
                 ctx.send(self.director, super::director::EP_DIR_DROP_ACK, BufDroppedMsg {
                     session: self.session,
+                    resident: 0,
                 });
             }
             EP_BUF_PARK => {
-                self.drain_pending(ctx);
+                // Assembler fetches are drained; peer fetches stay — the
+                // parked chare keeps warming and serves them on arrival.
+                self.drain_client_fetches(ctx);
                 self.state = BufState::Parked;
                 ctx.advance(MICROS / 2);
                 ctx.send(self.director, super::director::EP_DIR_DROP_ACK, BufDroppedMsg {
                     session: self.session,
+                    // The span store accounts the *eventual* residency:
+                    // in-flight greedy reads keep landing while parked.
+                    resident: self.my_len,
                 });
             }
             EP_BUF_REBIND => {
@@ -428,6 +715,15 @@ mod tests {
     }
 
     #[test]
+    fn slot_extents_agree_with_store_helper() {
+        let b = mk(Some(30));
+        let from_store = super::super::store::slot_extents(1000, 100, 30);
+        for (i, &(o, l)) in from_store.iter().enumerate() {
+            assert_eq!(b.slot_extent(i as u32), (o, l));
+        }
+    }
+
+    #[test]
     fn have_tracks_partial_arrival() {
         let mut b = mk(Some(30));
         assert!(!b.have(1000, 10));
@@ -466,10 +762,34 @@ mod tests {
     }
 
     #[test]
-    fn fresh_buffer_is_active_and_empty(){
+    fn fresh_buffer_is_active_and_empty() {
         let b = mk(Some(30));
         assert!(!b.is_dropped());
         assert_eq!(b.pending_len(), 0);
         assert_eq!(b.resident_bytes(), 0);
+        assert_eq!(b.pfs_queue.len(), 4, "every slot starts PFS-bound");
+    }
+
+    #[test]
+    fn peer_assignment_removes_slots_from_the_pfs_queue() {
+        let src = ChareRef::new(CollectionId(9), 0);
+        let b = mk(Some(30)).with_peers(vec![(0, src), (2, src)]);
+        assert_eq!(b.peer_slot_count(), 2);
+        assert_eq!(b.pfs_queue, VecDeque::from(vec![1, 3]));
+    }
+
+    #[test]
+    fn zero_length_span_has_no_pfs_work() {
+        let b = BufferChare::new(
+            SessionId(0),
+            FileId(0),
+            1000,
+            0,
+            Some(30),
+            2,
+            ChareRef::new(CollectionId(0), 0),
+            CollectionId(1),
+        );
+        assert!(b.pfs_queue.is_empty());
     }
 }

@@ -4,8 +4,21 @@
 //! the per-session buffer-chare array, announces sessions to the manager
 //! group, fires the user's `opened`/`ready`/`closed` callbacks once every
 //! participant has acknowledged, and sequences session teardown. Global
-//! coordination (e.g. sequencing sessions of distinct files) also lives
-//! here.
+//! coordination lives here — concretely, the director owns the two
+//! PR 2 subsystems that need the cluster-wide view:
+//!
+//! * the **span store** ([`super::store`]): which bytes of which file are
+//!   resident in which buffer-chare array (live or parked). At session
+//!   start the director matches the new session's splinter slots against
+//!   the store's claims and points the new buffers at *peer* sources
+//!   instead of the PFS — same-file concurrent sessions dedup their
+//!   prefetch, and parked arrays serve partial overlaps. Parked arrays
+//!   are kept under a byte budget with LRU eviction
+//!   ([`super::Options::store_budget_bytes`]).
+//! * the **admission governor** ([`super::governor`]): the global cap on
+//!   PFS reads in flight ([`super::Options::max_inflight_reads`]). Buffer
+//!   chares of governed files request tickets here and the governor
+//!   sequences or throttles session prefetch across *all* sessions.
 //!
 //! Concurrency (PR 1): the director is genuinely multi-session —
 //!
@@ -21,7 +34,7 @@
 //!   the drop, assemblers are told so late pieces are tolerated — no
 //!   read callback is ever stranded or fired twice,
 //! * **buffer reuse** (`Options::reuse_buffers`): closing parks the
-//!   session's buffer array in a small FIFO cache keyed by
+//!   session's buffer array in the span store keyed by
 //!   `(file, range, shape)`; a later identical session rebinds it and is
 //!   served from resident data with no file-system traffic.
 
@@ -33,18 +46,22 @@ use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg, Payload};
 use crate::amt::time::MICROS;
 use crate::impl_chare_any;
+use crate::metrics::keys;
 use crate::pfs::layout::FileId;
 
 use super::assembler::EP_A_SESSION_DROP;
 use super::buffer::{
-    BufDroppedMsg, BufStartedMsg, BufferChare, EP_BUF_DROP, EP_BUF_INIT, EP_BUF_PARK, EP_BUF_REBIND,
+    BufDroppedMsg, BufStartedMsg, BufferChare, GrantMsg, IoDoneMsg, IoReqMsg, EP_BUF_DROP,
+    EP_BUF_GRANT, EP_BUF_INIT, EP_BUF_PARK, EP_BUF_REBIND,
 };
+use super::governor::Governor;
 use super::manager::{
     FileOpenedMsg, SessionAnnounceMsg, EP_M_FILE_CLOSE, EP_M_FILE_OPENED, EP_M_SESSION_ANNOUNCE,
     EP_M_SESSION_DROP,
 };
 use super::options::Options;
-use super::session::{FileHandle, Session, SessionId};
+use super::session::{buffer_span_of, FileHandle, Session, SessionId};
+use super::store::{slot_extents, BufKey, Evicted, SpanStore};
 
 /// User: open a file.
 pub const EP_DIR_OPEN: Ep = 1;
@@ -68,10 +85,10 @@ pub const EP_DIR_DROP_ACK_MGR: Ep = 9;
 pub const EP_DIR_CLOSE_FILE: Ep = 10;
 /// Manager ack: file entry dropped.
 pub const EP_DIR_CLOSE_ACK: Ep = 11;
-
-/// Parked buffer arrays kept for reuse before the oldest is evicted
-/// (real eviction policy is an open item — see ROADMAP).
-const MAX_CACHED_ARRAYS: usize = 8;
+/// Buffer chare: request PFS read tickets from the admission governor.
+pub const EP_DIR_IO_REQ: Ep = 12;
+/// Buffer chare: return PFS read tickets to the admission governor.
+pub const EP_DIR_IO_DONE: Ep = 13;
 
 #[derive(Debug)]
 pub struct OpenMsg {
@@ -117,26 +134,14 @@ struct FileEntry {
     open_count: u32,
 }
 
-/// Shape key for the parked-buffer reuse cache: a new session matches a
-/// parked array only if every property that shaped the array agrees.
-#[derive(Clone, PartialEq, Eq, Debug)]
-struct BufKey {
-    file: FileId,
-    offset: u64,
-    bytes: u64,
-    readers: u32,
-    splinter: u64,
-    window: u32,
-}
-
 struct SessionState {
     session: Session,
     ready: Callback,
     buf_started: u32,
     mgr_acks: u32,
     fired: bool,
-    /// `Some` iff the session opted into buffer reuse: the cache key its
-    /// array is parked under on close.
+    /// `Some` iff the session opted into buffer reuse: the span-store key
+    /// its array is parked under on close.
     reuse_key: Option<BufKey>,
 }
 
@@ -147,10 +152,13 @@ struct CloseState {
     acks: u32,
     need: u32,
     /// For a parking (reuse) session close: the array to publish into
-    /// the cache once every ack is in. Publishing only *after* the close
-    /// completes guarantees a cached array is fully parked — no later
-    /// eviction or purge can race this close's own acks.
+    /// the span store once every ack is in. Publishing only *after* the
+    /// close completes guarantees a cached array is fully parked — no
+    /// later eviction or purge can race this close's own acks.
     park: Option<(BufKey, CollectionId, u32)>,
+    /// Resident bytes reported by the parking buffers' acks (the span
+    /// store's budget accounting for the published array).
+    parked_bytes: u64,
 }
 
 /// The Director singleton.
@@ -167,8 +175,10 @@ pub struct Director {
     sessions: HashMap<SessionId, SessionState>,
     closes: HashMap<SessionId, CloseState>,
     file_closes: HashMap<FileId, CloseState>,
-    /// Parked buffer arrays, FIFO by park time.
-    buffer_cache: Vec<(BufKey, CollectionId, u32)>,
+    /// The resident-data plane: claims + parked arrays (PR 2).
+    store: SpanStore,
+    /// Global PFS read-admission control (PR 2).
+    governor: Governor,
     next_session: u32,
 }
 
@@ -185,7 +195,8 @@ impl Director {
             sessions: HashMap::new(),
             closes: HashMap::new(),
             file_closes: HashMap::new(),
-            buffer_cache: Vec::new(),
+            store: SpanStore::new(),
+            governor: Governor::new(),
             next_session: 0,
         }
     }
@@ -200,11 +211,12 @@ impl Director {
         }
     }
 
-    fn ack_close(&mut self, ctx: &mut Ctx<'_>, sid: SessionId) {
+    fn ack_close(&mut self, ctx: &mut Ctx<'_>, sid: SessionId, resident: u64) {
         // Acks may also come from cache-evicted parked buffers whose
         // original close completed long ago: ignore those.
         let Some(st) = self.closes.get_mut(&sid) else { return };
         st.acks += 1;
+        st.parked_bytes += resident;
         if st.acks == st.need {
             let st = self.closes.remove(&sid).unwrap();
             self.sessions.remove(&sid);
@@ -212,15 +224,13 @@ impl Director {
             // was closed in the meantime (nothing can rebind it then).
             if let Some((key, buffers, nbuf)) = st.park {
                 if self.files.contains_key(&key.file) {
-                    self.buffer_cache.push((key, buffers, nbuf));
-                    if self.buffer_cache.len() > MAX_CACHED_ARRAYS {
-                        let (_, old, oldn) = self.buffer_cache.remove(0);
-                        self.drop_array(ctx, old, oldn);
-                        ctx.metrics().count("ckio.buffer_cache_evictions", 1);
-                    }
+                    let evicted = self.store.park(key, buffers, nbuf, st.parked_bytes);
+                    self.release_evicted(ctx, evicted);
                 } else {
+                    self.store.drop_claims(key.file, buffers);
                     self.drop_array(ctx, buffers, nbuf);
                 }
+                ctx.metrics().set(keys::STORE_RESIDENT, self.store.resident_bytes() as f64);
             }
             for after in st.afters {
                 ctx.fire(after, Payload::empty());
@@ -233,6 +243,16 @@ impl Director {
     fn drop_array(&self, ctx: &mut Ctx<'_>, buffers: CollectionId, n: u32) {
         for b in 0..n {
             ctx.signal(ChareRef::new(buffers, b), EP_BUF_DROP);
+        }
+    }
+
+    /// Release arrays the span store evicted (budget) or purged (file
+    /// close), charging the eviction metrics.
+    fn release_evicted(&mut self, ctx: &mut Ctx<'_>, evicted: Vec<Evicted>) {
+        for e in evicted {
+            self.drop_array(ctx, e.buffers, e.nbuf);
+            ctx.metrics().count("ckio.buffer_cache_evictions", 1);
+            ctx.metrics().count(keys::STORE_EVICTED, e.resident_bytes);
         }
     }
 
@@ -269,7 +289,17 @@ impl Director {
 
     /// Parked buffer arrays available for reuse.
     pub fn cached_buffer_arrays(&self) -> usize {
-        self.buffer_cache.len()
+        self.store.parked_count()
+    }
+
+    /// The resident-data plane (inspection).
+    pub fn span_store(&self) -> &SpanStore {
+        &self.store
+    }
+
+    /// The admission governor (inspection).
+    pub fn admission(&self) -> &Governor {
+        &self.governor
     }
 }
 
@@ -295,6 +325,12 @@ impl Chare for Director {
                     ctx.metrics().count("ckio.reopens", 1);
                     return;
                 }
+                // First open: the file's Options configure the global
+                // store budget and governor (last writer wins).
+                if let Some(budget) = m.opts.store_budget_bytes {
+                    self.store.set_budget(budget);
+                }
+                self.governor.configure(m.opts.max_inflight_reads, m.opts.admission);
                 self.opens.insert(m.file, OpenState {
                     size: m.size,
                     opts: m.opts,
@@ -378,9 +414,10 @@ impl Chare for Director {
                 // Reuse path: an identically shaped parked array serves
                 // the new session from resident data — no greedy re-read.
                 if opts.reuse_buffers {
-                    if let Some(pos) = self.buffer_cache.iter().position(|(k, _, _)| *k == key) {
-                        let (_, buffers, nbuf) = self.buffer_cache.remove(pos);
+                    if let Some((buffers, nbuf)) = self.store.take_exact(&key) {
                         debug_assert_eq!(nbuf, nreaders);
+                        ctx.metrics().count(keys::STORE_HIT, bytes);
+                        ctx.metrics().set(keys::STORE_RESIDENT, self.store.resident_bytes() as f64);
                         let session = Session::new(sid, file, offset, bytes, buffers, nreaders);
                         self.sessions.insert(sid, SessionState {
                             session,
@@ -405,20 +442,56 @@ impl Chare for Director {
                 let me = ctx.me();
                 let assemblers = self.assemblers;
                 let placement = opts.placement.to_placement(nreaders);
-                let mut spans: Vec<(u64, u64)> = Vec::with_capacity(nreaders as usize);
-                {
-                    // span math identical to Session::buffer_span
-                    let span = crate::util::bytes::ceil_div(bytes, nreaders as u64);
-                    for b in 0..nreaders as u64 {
-                        let lo = (offset + b * span).min(offset + bytes);
-                        let hi = (lo + span).min(offset + bytes);
-                        spans.push((lo, hi - lo));
-                    }
+                // The same span partition Session::buffer_span serves to
+                // assemblers — one definition, so chare spans, claims,
+                // and routing can never drift.
+                let spans: Vec<(u64, u64)> =
+                    (0..nreaders).map(|b| buffer_span_of(offset, bytes, nreaders, b)).collect();
+                // Span-store matching: point each splinter slot that an
+                // existing array (live or parked) fully covers at that
+                // peer instead of the PFS — prefetch dedup for same-file
+                // concurrent sessions, partial-overlap serving from
+                // parked arrays. The new session's own claims are not
+                // registered yet, so it can never match itself.
+                let splinter_v = splinter.unwrap_or(0);
+                let peer_lists: Vec<Vec<(u32, ChareRef)>> = spans
+                    .iter()
+                    .map(|&(o, l)| {
+                        slot_extents(o, l, splinter_v)
+                            .into_iter()
+                            .enumerate()
+                            .filter(|&(_, (_, slen))| slen > 0)
+                            .filter_map(|(i, (slo, slen))| {
+                                self.store
+                                    .find_cover(file, slo, slen)
+                                    .map(|owner| (i as u32, owner))
+                            })
+                            .collect()
+                    })
+                    .collect();
+                // Serving peers keeps a parked array hot: refresh its
+                // LRU standing (once per distinct array, not per slot)
+                // so the budget evicts cold arrays first.
+                let owners: std::collections::HashSet<CollectionId> =
+                    peer_lists.iter().flatten().map(|&(_, o)| o.collection).collect();
+                for owner in owners {
+                    self.store.touch(owner);
                 }
+                let governed = opts.max_inflight_reads.is_some();
                 let buffers = ctx.create_array_now(nreaders, &placement, |i| {
                     let (o, l) = spans[i as usize];
-                    BufferChare::new(sid, file, o, l, splinter, window, me, assemblers)
+                    let mut b = BufferChare::new(sid, file, o, l, splinter, window, me, assemblers)
+                        .with_peers(peer_lists[i as usize].clone());
+                    if governed {
+                        b = b.governed(bytes);
+                    }
+                    b
                 });
+                // Register the new array's spans so later sessions (and
+                // the parked-array bookkeeping) can find them.
+                for (b, &(o, l)) in spans.iter().enumerate() {
+                    self.store.add_claim(file, o, l, ChareRef::new(buffers, b as u32));
+                }
                 let session = Session::new(sid, file, offset, bytes, buffers, nreaders);
                 self.sessions.insert(sid, SessionState {
                     session,
@@ -465,18 +538,23 @@ impl Chare for Director {
                 };
                 let nbuf = st.session.num_buffers;
                 let buffers = st.session.buffers;
+                let file = st.session.file;
                 let park = match st.reuse_key.clone() {
                     Some(key) => {
                         // Park: drain pending fetches but keep resident
-                        // data for a future identically shaped session.
-                        // The array is published into the reuse cache
-                        // only once this close fully acks (ack_close).
+                        // data (and span-store claims) for reuse. The
+                        // array is published into the store only once
+                        // this close fully acks (ack_close).
                         for b in 0..nbuf {
                             ctx.signal(ChareRef::new(buffers, b), EP_BUF_PARK);
                         }
                         Some((key, buffers, nbuf))
                     }
                     None => {
+                        // Dropping: the array can no longer serve peers —
+                        // unregister its claims before the drop lands so
+                        // no new session is pointed at a dying source.
+                        self.store.drop_claims(file, buffers);
                         self.drop_array(ctx, buffers, nbuf);
                         None
                     }
@@ -492,16 +570,33 @@ impl Chare for Director {
                     acks: 0,
                     need: nbuf + self.npes,
                     park,
+                    parked_bytes: 0,
                 });
                 ctx.advance(MICROS);
             }
             EP_DIR_DROP_ACK => {
                 let m: BufDroppedMsg = msg.take();
-                self.ack_close(ctx, m.session);
+                self.ack_close(ctx, m.session, m.resident);
             }
             EP_DIR_DROP_ACK_MGR => {
                 let sid: SessionId = msg.take();
-                self.ack_close(ctx, sid);
+                self.ack_close(ctx, sid, 0);
+            }
+            EP_DIR_IO_REQ => {
+                let m: IoReqMsg = msg.take();
+                let granted = self.governor.request(m.buffer, m.want, m.sess_bytes);
+                if granted < m.want {
+                    ctx.metrics().count(keys::GOV_THROTTLED, (m.want - granted) as u64);
+                }
+                if granted > 0 {
+                    ctx.send(m.buffer, EP_BUF_GRANT, GrantMsg { n: granted });
+                }
+            }
+            EP_DIR_IO_DONE => {
+                let m: IoDoneMsg = msg.take();
+                for (buffer, n) in self.governor.complete(m.n) {
+                    ctx.send(buffer, EP_BUF_GRANT, GrantMsg { n });
+                }
             }
             EP_DIR_CLOSE_FILE => {
                 let m: CloseFileMsg = msg.take();
@@ -515,16 +610,11 @@ impl Chare for Director {
                 }
                 self.files.remove(&m.file);
                 // Parked buffer arrays of a closed file can never be
-                // rebound again: release them.
-                let mut kept = Vec::new();
-                for (k, cid, n) in std::mem::take(&mut self.buffer_cache) {
-                    if k.file == m.file {
-                        self.drop_array(ctx, cid, n);
-                    } else {
-                        kept.push((k, cid, n));
-                    }
-                }
-                self.buffer_cache = kept;
+                // rebound or peer-fetched again: release them (with
+                // their claims).
+                let purged = self.store.purge_file(m.file);
+                self.release_evicted(ctx, purged);
+                ctx.metrics().set(keys::STORE_RESIDENT, self.store.resident_bytes() as f64);
                 for pe in 0..self.npes {
                     ctx.send_group(self.managers, crate::amt::topology::Pe(pe), EP_M_FILE_CLOSE, m.file);
                 }
@@ -533,6 +623,7 @@ impl Chare for Director {
                     acks: 0,
                     need: self.npes,
                     park: None,
+                    parked_bytes: 0,
                 });
                 ctx.advance(MICROS);
             }

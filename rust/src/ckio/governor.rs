@@ -1,0 +1,216 @@
+//! Admission governor: global PFS read-admission control (PR 2).
+//!
+//! The director owns one [`Governor`] — the only component with the
+//! global view of every session's prefetch pressure. When a file is
+//! opened with [`crate::ckio::Options::max_inflight_reads`] set, its
+//! sessions' buffer chares stop issuing PFS reads directly: they request
+//! *tickets* from the governor (`EP_DIR_IO_REQ`), issue exactly the
+//! granted count, and return each ticket on read completion
+//! (`EP_DIR_IO_DONE`). The governor caps the aggregate number of PFS
+//! reads in flight across all sessions *of governed files*, so K
+//! concurrent sessions can no longer oversubscribe the OSTs — excess
+//! demand queues here, in one place, instead of interleaving at the
+//! disks (the Fig. 1 collapse).
+//!
+//! Scope: admission control is opt-in per file at *first* open. Sessions
+//! of files opened without `max_inflight_reads` bypass the governor and
+//! issue reads directly (the PR 1 path) — a deployment that wants a true
+//! cluster-wide cap sets the cap on every file it opens. Like shared
+//! POSIX descriptor flags, a refcounted re-open of an already-open file
+//! does not reconfigure the governor; the first opener's options hold
+//! until the file is fully closed.
+//!
+//! Queued demand is released according to an [`AdmissionPolicy`]:
+//!
+//! * [`AdmissionPolicy::Fifo`] — arrival order (fair, no starvation),
+//! * [`AdmissionPolicy::SmallestFirst`] — sessions with fewer total
+//!   bytes drain first (minimizes mean session latency, the classic
+//!   shortest-job-first trade).
+//!
+//! Like the span store, the governor is a pure data structure: the
+//! director translates grants into `EP_BUF_GRANT` sends and charges
+//! `ckio.governor.throttled` for every deferred read.
+
+use std::collections::VecDeque;
+
+use crate::amt::chare::ChareRef;
+
+/// Order in which queued prefetch demand is admitted to the PFS.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Grant in arrival order.
+    #[default]
+    Fifo,
+    /// Grant sessions with the fewest total bytes first.
+    SmallestFirst,
+}
+
+/// A buffer chare's queued ticket demand.
+#[derive(Clone, Debug)]
+struct Pending {
+    owner: ChareRef,
+    want: u32,
+    /// Total bytes of the owning session (the SmallestFirst sort key).
+    sess_bytes: u64,
+    seq: u64,
+}
+
+/// Global PFS read-admission state (owned by the director).
+#[derive(Debug, Default)]
+pub struct Governor {
+    /// Aggregate in-flight cap; `None` = ungoverned (buffers never ask).
+    cap: Option<u32>,
+    policy: AdmissionPolicy,
+    inflight: u32,
+    queue: VecDeque<Pending>,
+    seq: u64,
+    /// Reads deferred because the cap was reached (monotonic).
+    pub throttled: u64,
+}
+
+impl Governor {
+    pub fn new() -> Governor {
+        Governor::default()
+    }
+
+    /// (Re)configure from a file's opening `Options` (global knob, last
+    /// writer wins — a cap of 0 is clamped to 1 so demand always
+    /// drains). Opens that do not ask for admission control
+    /// (`cap: None`) leave the governor untouched.
+    pub fn configure(&mut self, cap: Option<u32>, policy: AdmissionPolicy) {
+        if let Some(c) = cap {
+            self.cap = Some(c.max(1));
+            self.policy = policy;
+        }
+    }
+
+    /// Whether admission control is active at all.
+    pub fn governed(&self) -> bool {
+        self.cap.is_some()
+    }
+
+    /// Reads currently admitted and not yet completed.
+    pub fn inflight(&self) -> u32 {
+        self.inflight
+    }
+
+    /// Buffer chares with queued (deferred) demand.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Request `want` read tickets for `owner` (a buffer chare of a
+    /// session totalling `sess_bytes`). Returns the count granted now;
+    /// the remainder queues and is granted by later [`Governor::complete`]
+    /// calls. Without a cap the full request is granted trivially.
+    pub fn request(&mut self, owner: ChareRef, want: u32, sess_bytes: u64) -> u32 {
+        let Some(cap) = self.cap else { return want };
+        let grant = want.min(cap.saturating_sub(self.inflight));
+        self.inflight += grant;
+        let deferred = want - grant;
+        if deferred > 0 {
+            self.throttled += deferred as u64;
+            self.seq += 1;
+            let p = Pending { owner, want: deferred, sess_bytes, seq: self.seq };
+            match self.policy {
+                AdmissionPolicy::Fifo => self.queue.push_back(p),
+                AdmissionPolicy::SmallestFirst => {
+                    let at = self
+                        .queue
+                        .iter()
+                        .position(|q| (q.sess_bytes, q.seq) > (p.sess_bytes, p.seq))
+                        .unwrap_or(self.queue.len());
+                    self.queue.insert(at, p);
+                }
+            }
+        }
+        grant
+    }
+
+    /// Return `n` tickets (reads completed, or granted to an
+    /// already-dropped buffer). Returns the grants this frees up:
+    /// `(buffer, count)` pairs the director must deliver.
+    pub fn complete(&mut self, n: u32) -> Vec<(ChareRef, u32)> {
+        let Some(cap) = self.cap else { return Vec::new() };
+        self.inflight = self.inflight.saturating_sub(n);
+        let mut grants = Vec::new();
+        while self.inflight < cap {
+            let Some(front) = self.queue.front_mut() else { break };
+            let g = front.want.min(cap - self.inflight);
+            self.inflight += g;
+            front.want -= g;
+            let owner = front.owner;
+            if front.want == 0 {
+                self.queue.pop_front();
+            }
+            grants.push((owner, g));
+        }
+        grants
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amt::chare::CollectionId;
+
+    fn buf(i: u32) -> ChareRef {
+        ChareRef::new(CollectionId(7), i)
+    }
+
+    #[test]
+    fn ungoverned_grants_everything() {
+        let mut g = Governor::new();
+        assert!(!g.governed());
+        assert_eq!(g.request(buf(0), 5, 100), 5);
+        assert_eq!(g.inflight(), 0, "no accounting without a cap");
+        assert!(g.complete(5).is_empty());
+    }
+
+    #[test]
+    fn cap_defers_and_completion_drains_fifo() {
+        let mut g = Governor::new();
+        g.configure(Some(2), AdmissionPolicy::Fifo);
+        assert_eq!(g.request(buf(0), 2, 100), 2);
+        assert_eq!(g.request(buf(1), 2, 100), 0); // full: all deferred
+        assert_eq!(g.throttled, 2);
+        assert_eq!(g.inflight(), 2);
+        // One completion frees one ticket for the queue head.
+        assert_eq!(g.complete(1), vec![(buf(1), 1)]);
+        assert_eq!(g.inflight(), 2);
+        // The head still wants 1 more; next completion serves it.
+        assert_eq!(g.complete(1), vec![(buf(1), 1)]);
+        assert!(g.complete(2).is_empty());
+        assert_eq!(g.inflight(), 0);
+        assert_eq!(g.queued(), 0);
+    }
+
+    #[test]
+    fn partial_grant_queues_the_remainder() {
+        let mut g = Governor::new();
+        g.configure(Some(3), AdmissionPolicy::Fifo);
+        assert_eq!(g.request(buf(0), 5, 100), 3);
+        assert_eq!(g.throttled, 2);
+        assert_eq!(g.complete(3), vec![(buf(0), 2)]);
+    }
+
+    #[test]
+    fn smallest_first_reorders_by_session_bytes() {
+        let mut g = Governor::new();
+        g.configure(Some(1), AdmissionPolicy::SmallestFirst);
+        assert_eq!(g.request(buf(0), 1, 1000), 1);
+        assert_eq!(g.request(buf(1), 1, 500), 0); // big-ish
+        assert_eq!(g.request(buf(2), 1, 10), 0); // small: jumps the queue
+        assert_eq!(g.request(buf(3), 1, 10), 0); // ties keep arrival order
+        assert_eq!(g.complete(1), vec![(buf(2), 1)]);
+        assert_eq!(g.complete(1), vec![(buf(3), 1)]);
+        assert_eq!(g.complete(1), vec![(buf(1), 1)]);
+    }
+
+    #[test]
+    fn zero_cap_is_clamped_so_demand_drains() {
+        let mut g = Governor::new();
+        g.configure(Some(0), AdmissionPolicy::Fifo);
+        assert_eq!(g.request(buf(0), 1, 10), 1);
+    }
+}

@@ -10,7 +10,7 @@
 //! Components, mirroring the paper's architecture (§III-C, Fig. 5):
 //!
 //! * [`director`] — singleton coordinating opens, session lifecycle and
-//!   global sequencing,
+//!   global sequencing; owns the span store and the admission governor,
 //! * [`manager`] — a chare group (one per PE): the local API entry point;
 //!   keeps the session table and assigns zero-copy tags,
 //! * [`assembler`] — the ReadAssembler group: gathers the pieces of each
@@ -18,13 +18,55 @@
 //!   client's continuation,
 //! * [`buffer`] — the buffer-chare array: interacts with the file system,
 //!   one disjoint span each, reading asynchronously (helper threads in
-//!   real mode; split-phase model reads in virtual mode),
+//!   real mode; split-phase model reads in virtual mode) — and, since
+//!   PR 2, serving *peer* buffer chares from its resident data,
+//! * [`store`] — the span store (PR 2): the shared resident-data plane —
+//!   which bytes of which file live in which array, byte-budgeted LRU
+//!   over parked arrays, claim matching for partial-overlap serving and
+//!   same-file prefetch dedup,
+//! * [`governor`] — the admission governor (PR 2): the global cap on PFS
+//!   reads in flight, sequencing K sessions' prefetch so they stop
+//!   oversubscribing the OSTs,
 //! * [`api`] — the user-facing `open / startReadSession / read /
 //!   closeReadSession / close` calls (asynchronous-callback-centric,
 //!   §III-D),
 //! * [`options`] — reader count/placement/splintering/reuse knobs
-//!   (§III-C.4, §VI.A–C),
+//!   (§III-C.4, §VI.A–C) plus the store budget and governor cap (PR 2),
 //! * [`session`] — session, tag and read-descriptor types.
+//!
+//! # The resident-data plane (PR 2)
+//!
+//! The paper's core claim — separating consumers from readers lets the
+//! I/O layer be tuned globally — is realized here beyond a single
+//! session. The director tracks every buffer chare's byte-span as a
+//! *claim* in the [`store::SpanStore`], across live sessions and parked
+//! (reused) arrays alike:
+//!
+//! * **Same-file prefetch dedup.** When a session starts over bytes an
+//!   existing array already claims, its buffer chares *peer-fetch* the
+//!   covered splinter slots (`EP_BUF_PEER_FETCH`) instead of issuing PFS
+//!   reads. If the owner's greedy read is still in flight, the peer
+//!   fetch queues and is served on arrival — K concurrent sessions over
+//!   one file pull its bytes across the PFS wire approximately once
+//!   (the `svc_shared` experiment measures this).
+//! * **Partial overlap.** Matching is per splinter slot, so a parked
+//!   array covering only part of a new session splits the serve:
+//!   resident slots come from the store, the rest from the PFS. A
+//!   dropped peer answers with a *miss* and the requester falls back to
+//!   its own PFS read — correctness never depends on the cache.
+//! * **Byte-budgeted LRU.** Parked arrays are kept under
+//!   [`Options::store_budget_bytes`] with LRU eviction (default: the
+//!   PR 1 count cap of 8 arrays).
+//! * **Admission control.** With [`Options::max_inflight_reads`], buffer
+//!   chares route PFS issuance through the director's
+//!   [`governor::Governor`]: the *aggregate* number of reads in flight
+//!   is capped across all sessions of governed files (files opened
+//!   without a cap bypass the governor), and queued demand drains by
+//!   [`governor::AdmissionPolicy`] (FIFO or smallest-session-first).
+//!
+//! Store traffic is observable via `ckio.store.hit_bytes` /
+//! `miss_bytes` / `evicted_bytes`, the `ckio.store.resident_bytes`
+//! gauge, and `ckio.governor.throttled` (all in `ckio bench-json`).
 //!
 //! # Concurrency semantics (PR 1)
 //!
@@ -48,25 +90,31 @@
 //!   in flight when the drop landed is flush-served the same way;
 //!   managers NACK reads that arrive after the session entry dropped;
 //!   assemblers are told the session closed so duplicate late pieces are
-//!   tolerated. Net effect: every outstanding `read` callback fires
-//!   exactly once, and no `assemblies`/`pending` entry outlives its
-//!   session. Closing an already-closed session acks immediately
-//!   (idempotent).
+//!   tolerated; queued *peer* fetches are answered with data or a miss
+//!   (the peer re-reads from the PFS). Net effect: every outstanding
+//!   `read` callback fires exactly once, no assembly outlives its
+//!   session, and no buffer chare waits forever on a dead peer. Closing
+//!   an already-closed session acks immediately (idempotent).
 //! * **Reuse policy.** With [`Options::reuse_buffers`], closing *parks*
-//!   the session's buffer array (resident data kept) in a small FIFO
-//!   cache keyed by `(file, range, reader shape)`; a later identical
-//!   session rebinds the array and is served with no file-system
-//!   traffic. Parked arrays are released when evicted (FIFO, small cap)
-//!   or when their file is finally closed.
+//!   the session's buffer array (resident data kept) in the span store
+//!   keyed by `(file, range, reader shape)`; a later identical session
+//!   rebinds the array and is served with no file-system traffic, and
+//!   *overlapping* sessions of any shape peer-fetch from it. Parked
+//!   arrays are released when evicted (budget/LRU) or when their file is
+//!   finally closed.
 
 pub mod api;
 pub mod assembler;
 pub mod buffer;
 pub mod director;
+pub mod governor;
 pub mod manager;
 pub mod options;
 pub mod session;
+pub mod store;
 
 pub use api::CkIo;
+pub use governor::AdmissionPolicy;
 pub use options::{Options, ReaderPlacement};
 pub use session::{FileHandle, ReadResult, Session, SessionId, Tag};
+pub use store::SpanStore;

@@ -3,6 +3,8 @@
 use crate::amt::topology::{Placement, Topology};
 use crate::util::bytes::ceil_div;
 
+pub use super::governor::AdmissionPolicy;
+
 /// Where buffer chares are placed (paper §VI.B).
 #[derive(Clone, Debug, Default)]
 pub enum ReaderPlacement {
@@ -64,6 +66,23 @@ pub struct Options {
     /// same `(file, range, shape)` revives it — repeated sessions on the
     /// same file skip the greedy re-read entirely.
     pub reuse_buffers: bool,
+    /// Byte budget of the director's span store for *parked* arrays
+    /// (PR 2). `None` keeps the PR 1 default of at most
+    /// [`super::store::SpanStore::DEFAULT_MAX_ARRAYS`] parked arrays;
+    /// `Some(bytes)` switches to byte-budgeted LRU eviction. The store is
+    /// global: the opening `Options` of each file (re)configure it, last
+    /// writer wins.
+    pub store_budget_bytes: Option<u64>,
+    /// Admission governor (PR 2): cap on the *aggregate* number of PFS
+    /// reads in flight across all sessions of governed files. `None` =
+    /// this file's sessions are ungoverned (buffer chares issue reads
+    /// directly, the PR 1 behavior) — for a true cluster-wide cap, set
+    /// this on every file you open. The cap value itself is a global
+    /// knob configured at *first* open of a file (last writer wins;
+    /// refcounted re-opens do not reconfigure).
+    pub max_inflight_reads: Option<u32>,
+    /// Order in which the governor admits queued prefetch demand.
+    pub admission: AdmissionPolicy,
 }
 
 impl Default for Options {
@@ -74,6 +93,9 @@ impl Default for Options {
             splinter_bytes: None,
             read_window: 2,
             reuse_buffers: false,
+            store_budget_bytes: None,
+            max_inflight_reads: None,
+            admission: AdmissionPolicy::default(),
         }
     }
 }

@@ -104,11 +104,11 @@ impl Session {
     /// Trailing buffers of a session whose byte count is not divisible by
     /// the buffer count may own zero bytes; their span is clamped to the
     /// session end so spans always partition `[offset, end)` exactly.
+    /// The director registers exactly these spans as span-store claims
+    /// (PR 2), so assembler routing and peer-fetch sourcing agree.
     pub fn buffer_span(&self, b: u32) -> (u64, u64) {
         assert!(b < self.num_buffers);
-        let lo = (self.offset + b as u64 * self.span).min(self.end());
-        let hi = (lo + self.span).min(self.end());
-        (lo, hi - lo)
+        buffer_span_of(self.offset, self.bytes, self.num_buffers, b)
     }
 
     /// Which buffer owns the byte at file offset `o`.
@@ -129,6 +129,19 @@ impl Session {
         );
         self.buffer_of(offset)..=self.buffer_of(offset + len - 1)
     }
+}
+
+/// File-coordinate span of buffer `b` for a session of `bytes` at
+/// `offset` split across `num_buffers` buffer chares — the single
+/// definition of the span partition. [`Session::buffer_span`] (assembler
+/// routing) and the director's chare creation + span-store claim
+/// registration all call this, so the three can never drift.
+pub fn buffer_span_of(offset: u64, bytes: u64, num_buffers: u32, b: u32) -> (u64, u64) {
+    let span = ceil_div(bytes, num_buffers as u64);
+    let end = offset + bytes;
+    let lo = (offset + b as u64 * span).min(end);
+    let hi = (lo + span).min(end);
+    (lo, hi - lo)
 }
 
 /// Delivered to the client's `after_read` callback.

@@ -1,0 +1,427 @@
+//! Span store: the shared resident-data plane (PR 2).
+//!
+//! The director owns one [`SpanStore`] with the global view of *which
+//! bytes of which file are resident in which buffer-chare array* — live
+//! arrays serving open sessions and parked arrays kept after a
+//! `reuse_buffers` close alike. It replaces the PR 1 ad-hoc parked-buffer
+//! FIFO and is what turns K independent sessions into one cooperating
+//! data plane:
+//!
+//! * **Claims.** Every buffer chare's span is registered as a [`Claim`]
+//!   when its session starts (and survives a park). A later session over
+//!   overlapping bytes is pointed at the claim owner instead of the PFS:
+//!   its buffer chares *peer-fetch* the overlapping splinter slots
+//!   (`EP_BUF_PEER_FETCH`), which also dedups in-flight prefetch — if the
+//!   owner's greedy read has not landed yet, the peer fetch queues and is
+//!   served on arrival, so the bytes cross the PFS wire once.
+//! * **Partial overlap.** Matching is per splinter slot, so a claim that
+//!   only covers a prefix of a new session splits the serve: covered
+//!   slots come from the resident array, the remainder goes to the PFS.
+//! * **Byte budget + LRU.** Parked arrays are kept under a configurable
+//!   byte budget ([`crate::ckio::Options::store_budget_bytes`]); eviction
+//!   is least-recently-used. When no budget is set the store falls back
+//!   to the PR 1 behavior of keeping at most
+//!   [`SpanStore::DEFAULT_MAX_ARRAYS`] parked arrays.
+//!
+//! The store is a pure data structure (no `Ctx`): the director translates
+//! its eviction decisions into `EP_BUF_DROP` sends and its match results
+//! into per-buffer peer lists, and charges the `ckio.store.*` metrics.
+
+use std::collections::HashMap;
+
+use crate::amt::chare::{ChareRef, CollectionId};
+use crate::pfs::layout::FileId;
+use crate::util::bytes::ceil_div;
+
+/// Shape key for exact-match parked-array rebind: a new session rebinds a
+/// parked array only if every property that shaped the array agrees.
+/// (Partial-overlap serving does *not* need this — it goes through
+/// claims, which only care about byte ranges.)
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct BufKey {
+    pub file: FileId,
+    pub offset: u64,
+    pub bytes: u64,
+    pub readers: u32,
+    pub splinter: u64,
+    pub window: u32,
+}
+
+/// One buffer chare's registered span: `[lo, hi)` of `file` is (or will
+/// shortly be) resident in `owner`.
+#[derive(Clone, Debug)]
+pub struct Claim {
+    pub lo: u64,
+    pub hi: u64,
+    pub owner: ChareRef,
+}
+
+/// A parked buffer-chare array available for exact rebind, counted
+/// against the byte budget.
+#[derive(Clone, Debug)]
+struct ParkedEntry {
+    key: BufKey,
+    buffers: CollectionId,
+    nbuf: u32,
+    resident_bytes: u64,
+    last_use: u64,
+}
+
+/// An array the store decided to release (budget eviction or file purge);
+/// the director must `EP_BUF_DROP` every element.
+#[derive(Clone, Debug)]
+pub struct Evicted {
+    pub buffers: CollectionId,
+    pub nbuf: u32,
+    pub resident_bytes: u64,
+    pub file: FileId,
+}
+
+/// The resident-data plane bookkeeping (owned by the director).
+#[derive(Debug, Default)]
+pub struct SpanStore {
+    claims: HashMap<FileId, Vec<Claim>>,
+    parked: Vec<ParkedEntry>,
+    /// Byte budget for parked arrays; `None` = PR 1 count-cap behavior.
+    budget: Option<u64>,
+    lru_clock: u64,
+}
+
+impl SpanStore {
+    /// Parked arrays kept when no byte budget is configured (the PR 1
+    /// default behavior).
+    pub const DEFAULT_MAX_ARRAYS: usize = 8;
+
+    pub fn new() -> SpanStore {
+        SpanStore::default()
+    }
+
+    /// Configure the parked-array byte budget (global; the director
+    /// applies the opening `Options` of each file, last writer wins).
+    pub fn set_budget(&mut self, budget: u64) {
+        self.budget = Some(budget);
+    }
+
+    // ------------------------------------------------------------------
+    // claims
+    // ------------------------------------------------------------------
+
+    /// Register one buffer chare's span. Zero-length spans (clamped
+    /// trailing buffers) are not registered.
+    pub fn add_claim(&mut self, file: FileId, lo: u64, len: u64, owner: ChareRef) {
+        if len == 0 {
+            return;
+        }
+        self.claims.entry(file).or_default().push(Claim { lo, hi: lo + len, owner });
+    }
+
+    /// Drop every claim owned by elements of `buffers` (the array is
+    /// being released and can no longer serve anyone).
+    pub fn drop_claims(&mut self, file: FileId, buffers: CollectionId) {
+        if let Some(v) = self.claims.get_mut(&file) {
+            v.retain(|c| c.owner.collection != buffers);
+            if v.is_empty() {
+                self.claims.remove(&file);
+            }
+        }
+    }
+
+    /// Find a claim fully covering `[lo, lo+len)` of `file`. The oldest
+    /// covering claim wins, which keeps the peer-fetch graph acyclic:
+    /// edges always point at earlier-registered arrays. A session can
+    /// never match itself because the director matches *before*
+    /// registering the new session's own claims.
+    pub fn find_cover(&self, file: FileId, lo: u64, len: u64) -> Option<ChareRef> {
+        let hi = lo + len;
+        self.claims
+            .get(&file)?
+            .iter()
+            .find(|c| c.lo <= lo && c.hi >= hi)
+            .map(|c| c.owner)
+    }
+
+    /// Total claims registered for `file` (inspection).
+    pub fn claims_for(&self, file: FileId) -> usize {
+        self.claims.get(&file).map_or(0, |v| v.len())
+    }
+
+    // ------------------------------------------------------------------
+    // parked arrays
+    // ------------------------------------------------------------------
+
+    /// Publish a fully parked array. Returns the arrays evicted to stay
+    /// within budget (LRU order, freshly parked array last). An array
+    /// that *alone* exceeds the byte budget is rejected outright — it is
+    /// the sole eviction, and the already-parked (and possibly hot)
+    /// arrays are left untouched rather than flushed to make room for
+    /// something that can never fit.
+    pub fn park(
+        &mut self,
+        key: BufKey,
+        buffers: CollectionId,
+        nbuf: u32,
+        resident_bytes: u64,
+    ) -> Vec<Evicted> {
+        if let Some(b) = self.budget {
+            if resident_bytes > b {
+                self.drop_claims(key.file, buffers);
+                return vec![Evicted { buffers, nbuf, resident_bytes, file: key.file }];
+            }
+        }
+        self.lru_clock += 1;
+        self.parked.push(ParkedEntry { key, buffers, nbuf, resident_bytes, last_use: self.lru_clock });
+        let mut evicted = Vec::new();
+        loop {
+            let over = match self.budget {
+                Some(b) => self.resident_bytes() > b,
+                None => self.parked.len() > Self::DEFAULT_MAX_ARRAYS,
+            };
+            if !over || self.parked.is_empty() {
+                break;
+            }
+            let lru = self
+                .parked
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_use)
+                .map(|(i, _)| i)
+                .unwrap();
+            let e = self.parked.remove(lru);
+            self.drop_claims(e.key.file, e.buffers);
+            evicted.push(Evicted {
+                buffers: e.buffers,
+                nbuf: e.nbuf,
+                resident_bytes: e.resident_bytes,
+                file: e.key.file,
+            });
+        }
+        evicted
+    }
+
+    /// Take an exactly matching parked array for rebind (claims stay: the
+    /// array is live again under a new session; it re-enters the LRU
+    /// order when it is parked again).
+    pub fn take_exact(&mut self, key: &BufKey) -> Option<(CollectionId, u32)> {
+        let pos = self.parked.iter().position(|e| e.key == *key)?;
+        let e = self.parked.remove(pos);
+        Some((e.buffers, e.nbuf))
+    }
+
+    /// Refresh a parked array's LRU recency: called by the director when
+    /// claim matching points a new session at `buffers` — an array that
+    /// keeps serving peer fetches is hot and must not be the eviction
+    /// victim. No-op for live (non-parked) arrays.
+    pub fn touch(&mut self, buffers: CollectionId) {
+        if let Some(e) = self.parked.iter_mut().find(|e| e.buffers == buffers) {
+            self.lru_clock += 1;
+            e.last_use = self.lru_clock;
+        }
+    }
+
+    /// Release every parked array of a closed file (they can never be
+    /// rebound or peer-fetched again) along with the file's claims.
+    pub fn purge_file(&mut self, file: FileId) -> Vec<Evicted> {
+        self.claims.remove(&file);
+        let (gone, kept): (Vec<_>, Vec<_>) =
+            std::mem::take(&mut self.parked).into_iter().partition(|e| e.key.file == file);
+        self.parked = kept;
+        gone.into_iter()
+            .map(|e| Evicted {
+                buffers: e.buffers,
+                nbuf: e.nbuf,
+                resident_bytes: e.resident_bytes,
+                file,
+            })
+            .collect()
+    }
+
+    /// Bytes resident across parked arrays (the budget numerator and the
+    /// `ckio.store.resident_bytes` gauge).
+    pub fn resident_bytes(&self) -> u64 {
+        self.parked.iter().map(|e| e.resident_bytes).sum()
+    }
+
+    /// Parked array count (inspection / tests).
+    pub fn parked_count(&self) -> usize {
+        self.parked.len()
+    }
+}
+
+/// The splinter-slot extents of a buffer span `[offset, offset+len)`:
+/// exactly the slots [`crate::ckio::buffer::BufferChare`] reads, so the
+/// director's claim matching and the buffer's storage agree bit-for-bit.
+/// `splinter == 0` means one slot covering the whole span.
+pub fn slot_extents(offset: u64, len: u64, splinter: u64) -> Vec<(u64, u64)> {
+    if splinter == 0 || len == 0 {
+        return vec![(offset, len)];
+    }
+    let n = ceil_div(len, splinter);
+    (0..n)
+        .map(|i| {
+            let lo = offset + i * splinter;
+            let hi = (lo + splinter).min(offset + len);
+            (lo, hi - lo)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(file: u32, offset: u64, bytes: u64) -> BufKey {
+        BufKey { file: FileId(file), offset, bytes, readers: 2, splinter: 0, window: 2 }
+    }
+
+    fn owner(cid: u32, i: u32) -> ChareRef {
+        ChareRef::new(CollectionId(cid), i)
+    }
+
+    #[test]
+    fn cover_matching_prefers_oldest_covering_claim() {
+        let mut s = SpanStore::new();
+        s.add_claim(FileId(0), 0, 100, owner(1, 0));
+        s.add_claim(FileId(0), 50, 100, owner(2, 0));
+        // Fully inside the first claim: oldest wins.
+        assert_eq!(s.find_cover(FileId(0), 10, 20), Some(owner(1, 0)));
+        // Only the second claim covers [120, 140).
+        assert_eq!(s.find_cover(FileId(0), 120, 20), Some(owner(2, 0)));
+        // Straddling both claims but covered by neither alone: no match
+        // (slot-level matching keeps serving simple and single-source).
+        assert_eq!(s.find_cover(FileId(0), 40, 80), None);
+        // Different file: no match.
+        assert_eq!(s.find_cover(FileId(1), 10, 20), None);
+    }
+
+    #[test]
+    fn zero_length_claims_are_not_registered() {
+        let mut s = SpanStore::new();
+        s.add_claim(FileId(0), 10, 0, owner(1, 3));
+        assert_eq!(s.claims_for(FileId(0)), 0);
+    }
+
+    #[test]
+    fn drop_claims_only_touches_the_named_array() {
+        let mut s = SpanStore::new();
+        s.add_claim(FileId(0), 0, 10, owner(1, 0));
+        s.add_claim(FileId(0), 10, 10, owner(2, 0));
+        s.drop_claims(FileId(0), CollectionId(1));
+        assert_eq!(s.claims_for(FileId(0)), 1);
+        assert_eq!(s.find_cover(FileId(0), 12, 2), Some(owner(2, 0)));
+    }
+
+    #[test]
+    fn count_cap_without_budget_matches_pr1_default() {
+        let mut s = SpanStore::new();
+        let mut evicted = Vec::new();
+        for i in 0..(SpanStore::DEFAULT_MAX_ARRAYS as u32 + 2) {
+            evicted.extend(s.park(key(0, i as u64 * 100, 100), CollectionId(10 + i), 2, 100));
+        }
+        assert_eq!(s.parked_count(), SpanStore::DEFAULT_MAX_ARRAYS);
+        assert_eq!(evicted.len(), 2);
+        // FIFO == LRU when nothing is ever re-used.
+        assert_eq!(evicted[0].buffers, CollectionId(10));
+        assert_eq!(evicted[1].buffers, CollectionId(11));
+    }
+
+    #[test]
+    fn byte_budget_evicts_lru_first() {
+        let mut s = SpanStore::new();
+        s.set_budget(250);
+        assert!(s.park(key(0, 0, 100), CollectionId(1), 2, 100).is_empty());
+        assert!(s.park(key(0, 100, 100), CollectionId(2), 2, 100).is_empty());
+        // Rebind entry 1: bumps its recency out of LRU position...
+        assert_eq!(s.take_exact(&key(0, 0, 100)), Some((CollectionId(1), 2)));
+        assert!(s.park(key(0, 0, 100), CollectionId(1), 2, 100).is_empty());
+        assert_eq!(s.resident_bytes(), 200);
+        // ...so the third park evicts entry 2, the least recently used.
+        let ev = s.park(key(0, 200, 100), CollectionId(3), 2, 100);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].buffers, CollectionId(2));
+        assert_eq!(s.resident_bytes(), 200);
+    }
+
+    #[test]
+    fn touch_refreshes_parked_recency() {
+        let mut s = SpanStore::new();
+        s.set_budget(250);
+        assert!(s.park(key(0, 0, 100), CollectionId(1), 2, 100).is_empty());
+        assert!(s.park(key(0, 100, 100), CollectionId(2), 2, 100).is_empty());
+        // Array 1 serves a peer match: it is hot now.
+        s.touch(CollectionId(1));
+        s.touch(CollectionId(99)); // unknown collection: no-op
+        // The next park evicts the cold array 2, not the hot array 1.
+        let ev = s.park(key(0, 200, 100), CollectionId(3), 2, 100);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].buffers, CollectionId(2));
+    }
+
+    #[test]
+    fn oversized_single_array_is_evicted_immediately() {
+        let mut s = SpanStore::new();
+        s.set_budget(50);
+        let ev = s.park(key(0, 0, 100), CollectionId(1), 2, 100);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(s.parked_count(), 0);
+        assert_eq!(s.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn oversized_newcomer_does_not_flush_resident_arrays() {
+        let mut s = SpanStore::new();
+        s.set_budget(300);
+        // Three warm arrays, comfortably within budget.
+        assert!(s.park(key(0, 0, 100), CollectionId(1), 1, 100).is_empty());
+        assert!(s.park(key(0, 100, 100), CollectionId(2), 1, 100).is_empty());
+        assert!(s.park(key(0, 200, 100), CollectionId(3), 1, 100).is_empty());
+        s.add_claim(FileId(0), 400, 100, owner(4, 0));
+        // An array that can never fit is rejected alone — the resident
+        // arrays survive, and the reject drops the newcomer's claims.
+        let ev = s.park(key(0, 400, 500), CollectionId(4), 1, 500);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].buffers, CollectionId(4));
+        assert_eq!(s.parked_count(), 3);
+        assert_eq!(s.resident_bytes(), 300);
+        assert_eq!(s.find_cover(FileId(0), 420, 10), None);
+    }
+
+    #[test]
+    fn eviction_and_purge_drop_the_arrays_claims() {
+        let mut s = SpanStore::new();
+        s.set_budget(100);
+        s.add_claim(FileId(0), 0, 100, owner(1, 0));
+        s.add_claim(FileId(0), 100, 100, owner(2, 0));
+        assert!(s.park(key(0, 0, 100), CollectionId(1), 1, 100).is_empty());
+        // Parking array 2 evicts array 1 (LRU) and its claims with it.
+        let ev = s.park(key(0, 100, 100), CollectionId(2), 1, 100);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(s.find_cover(FileId(0), 10, 10), None);
+        assert_eq!(s.find_cover(FileId(0), 110, 10), Some(owner(2, 0)));
+        // Purging the file releases the survivor and every claim.
+        let purged = s.purge_file(FileId(0));
+        assert_eq!(purged.len(), 1);
+        assert_eq!(s.claims_for(FileId(0)), 0);
+        assert_eq!(s.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn take_exact_requires_full_shape_agreement() {
+        let mut s = SpanStore::new();
+        s.park(key(0, 0, 100), CollectionId(1), 2, 100);
+        let mut other = key(0, 0, 100);
+        other.readers = 4;
+        assert_eq!(s.take_exact(&other), None);
+        assert_eq!(s.take_exact(&key(0, 0, 100)), Some((CollectionId(1), 2)));
+        assert_eq!(s.take_exact(&key(0, 0, 100)), None, "taken arrays leave the store");
+    }
+
+    #[test]
+    fn slot_extents_match_buffer_layout() {
+        assert_eq!(slot_extents(1000, 100, 0), vec![(1000, 100)]);
+        assert_eq!(
+            slot_extents(1000, 100, 30),
+            vec![(1000, 30), (1030, 30), (1060, 30), (1090, 10)]
+        );
+        assert_eq!(slot_extents(5, 0, 30), vec![(5, 0)]);
+    }
+}

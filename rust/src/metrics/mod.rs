@@ -133,10 +133,26 @@ pub mod keys {
     pub const PFS_BYTES: &str = "pfs.bytes_read";
     /// Aggregate time OSTs spent servicing requests.
     pub const OST_BUSY: &str = "pfs.ost_busy";
+    /// High-water mark of reads simultaneously in flight at the PFS
+    /// (gauge; the admission governor's cap is asserted against this).
+    pub const PFS_MAX_CONCURRENT: &str = "pfs.max_concurrent_reads";
     /// CkIO: read requests served to clients.
     pub const CKIO_READS: &str = "ckio.reads_served";
     /// CkIO: bytes delivered to clients.
     pub const CKIO_BYTES: &str = "ckio.bytes_delivered";
+    /// Span store: bytes served from resident data (peer-fetched slots
+    /// and exact-match rebinds) instead of new PFS reads.
+    pub const STORE_HIT: &str = "ckio.store.hit_bytes";
+    /// Span store: bytes for which a PFS read was actually issued.
+    pub const STORE_MISS: &str = "ckio.store.miss_bytes";
+    /// Span store: resident bytes released by budget eviction or
+    /// file-close purge.
+    pub const STORE_EVICTED: &str = "ckio.store.evicted_bytes";
+    /// Span store: bytes currently resident in parked arrays (gauge).
+    pub const STORE_RESIDENT: &str = "ckio.store.resident_bytes";
+    /// Admission governor: PFS reads deferred because the aggregate
+    /// in-flight cap was reached.
+    pub const GOV_THROTTLED: &str = "ckio.governor.throttled";
     /// Background-work time accumulated by compute chares (Figs. 8–9).
     pub const BG_WORK: &str = "app.bg_work";
 }

@@ -144,6 +144,9 @@ pub struct SimPfs {
     rpcs: Vec<Rpc>,
     rng: Pcg32,
     next_first_ost: u32,
+    /// Reads submitted and not yet completed (the admission governor's
+    /// cap is asserted against the high-water mark of this).
+    active_reads: u32,
 }
 
 impl SimPfs {
@@ -159,6 +162,7 @@ impl SimPfs {
             rpcs: Vec::new(),
             rng: Pcg32::seeded(seed ^ 0x9df5),
             next_first_ost: 0,
+            active_reads: 0,
         }
     }
 
@@ -210,6 +214,8 @@ impl SimPfs {
         let extents = meta.rpc_extents(req.offset, req.len, self.cfg.rpc_max_bytes);
         metrics.count(keys::PFS_RPCS, extents.len() as u64);
         metrics.count(keys::PFS_BYTES, req.len);
+        self.active_reads += 1;
+        metrics.set_max(keys::PFS_MAX_CONCURRENT, self.active_reads as f64);
         let rid = self.reqs.len() as u32;
         self.reqs.push(Req {
             callback,
@@ -311,6 +317,7 @@ impl SimPfs {
                 r.in_flight -= 1;
                 if r.in_flight == 0 && r.pending.is_empty() && !r.done {
                     r.done = true;
+                    self.active_reads = self.active_reads.saturating_sub(1);
                     let chunk = if self.cfg.materialize {
                         Chunk::materialized(r.offset, pattern::make(r.file, r.offset, r.len))
                     } else {
@@ -350,6 +357,7 @@ impl SimPfs {
         self.reqs.clear();
         self.rpcs.clear();
         self.rng = Pcg32::seeded(seed ^ 0x9df5);
+        self.active_reads = 0;
     }
 }
 

@@ -363,7 +363,103 @@ fn repeated_session_with_reuse_reads_the_file_once() {
 }
 
 // ---------------------------------------------------------------------
-// 4. Concurrent opens of one file are refcounted
+// 4. Admission governor: cap = 1 fully sequences two sessions' PFS reads
+// ---------------------------------------------------------------------
+
+/// With the aggregate in-flight cap set to 1, two concurrent verified
+/// sessions over *distinct* files (so the span store cannot dedup any
+/// read away) are fully sequenced at the PFS — the model never observes
+/// more than one read in flight — while every read callback still fires
+/// exactly once with verified contents.
+#[test]
+fn governor_cap_one_sequences_two_sessions_and_loses_no_callback() {
+    let mut eng = Engine::new(EngineConfig::sim(2, 2)).with_sim_pfs(PfsConfig {
+        materialize: true,
+        noise_sigma: 0.0,
+        ..PfsConfig::default()
+    });
+    let size: u64 = 2 << 20;
+    let file_a = eng.core.sim_pfs_mut().create_file(size);
+    let file_b = eng.core.sim_pfs_mut().create_file(size);
+    let io = CkIo::boot(&mut eng);
+    let opts = Options {
+        num_readers: Some(2),
+        splinter_bytes: Some(256 << 10),
+        max_inflight_reads: Some(1),
+        ..Default::default()
+    };
+    let fut = eng.future(2 * 2); // 2 sessions x 2 clients
+    let leaders = [
+        spawn_verified_session(&mut eng, io, file_a, size, 2, opts.clone(), true, Callback::Future(fut)),
+        spawn_verified_session(&mut eng, io, file_b, size, 2, opts, true, Callback::Future(fut)),
+    ];
+    for l in leaders {
+        eng.inject_signal(l, EP_GO);
+    }
+    eng.run();
+    assert!(eng.future_done(fut), "not every client read completed");
+    // Fully sequenced: the PFS never had two reads in flight.
+    let peak = eng.core.metrics.value(ckio::metrics::keys::PFS_MAX_CONCURRENT);
+    assert!(peak <= 1.0, "governor cap 1 violated: peak concurrent reads = {peak}");
+    // Demand definitely exceeded the cap (2 sessions x 2 buffers x 8
+    // splinters), so the governor must have deferred some of it.
+    assert!(eng.core.metrics.counter("ckio.governor.throttled") > 0);
+    // Both sessions' every byte was delivered exactly once, verified.
+    assert_eq!(eng.core.metrics.counter("ckio.bytes_delivered"), 2 * size);
+    assert_service_clean(&eng, &io);
+    let director: &Director = eng.chare(io.director);
+    assert_eq!(director.open_files(), 0);
+    assert_eq!(director.admission().inflight(), 0, "tickets leaked in the governor");
+    assert_eq!(director.admission().queued(), 0, "demand stranded in the governor");
+}
+
+// ---------------------------------------------------------------------
+// 5. Same-file concurrent sessions dedup their prefetch via the store
+// ---------------------------------------------------------------------
+
+/// Two concurrent sessions over one file: the second session's buffers
+/// peer-fetch from the first's (waiting on its in-flight greedy reads),
+/// so the PFS reads the file's bytes once — and contents still verify.
+#[test]
+fn concurrent_same_file_sessions_read_the_file_once() {
+    let mut eng = Engine::new(EngineConfig::sim(2, 2)).with_sim_pfs(PfsConfig {
+        materialize: true,
+        noise_sigma: 0.0,
+        ..PfsConfig::default()
+    });
+    let size: u64 = 3 << 20;
+    let file = eng.core.sim_pfs_mut().create_file(size);
+    let io = CkIo::boot(&mut eng);
+    let opts = Options { num_readers: Some(4), splinter_bytes: Some(128 << 10), ..Default::default() };
+    let fut = eng.future(2 * 3); // 2 sessions x 3 clients
+    let leaders = [
+        spawn_verified_session(&mut eng, io, file, size, 3, opts.clone(), true, Callback::Future(fut)),
+        spawn_verified_session(&mut eng, io, file, size, 3, opts, true, Callback::Future(fut)),
+    ];
+    for l in leaders {
+        eng.inject_signal(l, EP_GO);
+    }
+    eng.run();
+    assert!(eng.future_done(fut));
+    // The PFS was read once (both sessions' greedy prefetch overlapped
+    // in time, so this is in-flight dedup, not parked reuse).
+    assert_eq!(
+        eng.core.metrics.counter("pfs.bytes_read"),
+        size,
+        "same-file concurrent sessions must not duplicate PFS traffic"
+    );
+    // The second session's bytes were store hits.
+    assert_eq!(eng.core.metrics.counter("ckio.store.hit_bytes"), size);
+    assert_eq!(eng.core.metrics.counter("ckio.store.miss_bytes"), size);
+    // Both sessions delivered and verified everything.
+    assert_eq!(eng.core.metrics.counter("ckio.bytes_delivered"), 2 * size);
+    assert_service_clean(&eng, &io);
+    let director: &Director = eng.chare(io.director);
+    assert_eq!(director.open_files(), 0);
+}
+
+// ---------------------------------------------------------------------
+// 6. Concurrent opens of one file are refcounted
 // ---------------------------------------------------------------------
 
 #[test]

@@ -1,0 +1,226 @@
+//! Span-store integration tests (PR 2): partial-overlap serving edge
+//! cases, driven from the driver-side API for precise sequencing.
+//!
+//! * **Split serve** — a parked array that only covers a *prefix* of a
+//!   new session: the resident prefix comes from the store (peer
+//!   fetches), the remainder from the PFS, and contents stay verified.
+//! * **Stripe boundary** — the split point lands exactly on a PFS stripe
+//!   boundary (the case where off-by-one extent math would corrupt or
+//!   double-read).
+//! * **Eviction racing a pending close** — a tight byte budget forces
+//!   LRU eviction of a parked array while a new overlapping session is
+//!   starting; whichever interleaving the director sees, reads verify
+//!   (stale claims degrade to peer misses and PFS fallback, never to
+//!   corruption or a stranded callback).
+
+use ckio::amt::callback::Callback;
+use ckio::amt::chare::ChareRef;
+use ckio::amt::engine::{Engine, EngineConfig};
+use ckio::ckio::director::Director;
+use ckio::ckio::manager::{ReadMsg, EP_M_READ};
+use ckio::ckio::{CkIo, Options, ReadResult, Session, SessionId};
+use ckio::harness::experiments::assert_service_clean;
+use ckio::pfs::{pattern, FileId, PfsConfig};
+
+const MIB: u64 = 1 << 20;
+
+fn verified_engine(file_size: u64) -> (Engine, FileId, CkIo) {
+    let mut eng = Engine::new(EngineConfig::sim(2, 2)).with_sim_pfs(PfsConfig {
+        materialize: true,
+        noise_sigma: 0.0,
+        ..PfsConfig::default()
+    });
+    let file = eng.core.sim_pfs_mut().create_file(file_size);
+    let io = CkIo::boot(&mut eng);
+    (eng, file, io)
+}
+
+/// Start a session over `[offset, offset+bytes)` and run to quiescence
+/// (the greedy prefetch completes), returning the session handle.
+fn start_session(eng: &mut Engine, io: &CkIo, file: FileId, offset: u64, bytes: u64) -> Session {
+    let fut = eng.future(1);
+    io.start_session_driver(eng, file, offset, bytes, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "session never became ready");
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    p.take::<Session>()
+}
+
+/// Close a session and run to quiescence.
+fn close_session(eng: &mut Engine, io: &CkIo, sid: SessionId) {
+    let fut = eng.future(1);
+    io.close_session_driver(eng, sid, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "session close never completed");
+}
+
+/// Read `[offset, offset+len)` through PE 0's manager and verify every
+/// byte against the deterministic file pattern.
+fn read_verified(eng: &mut Engine, io: &CkIo, s: &Session, file: FileId, offset: u64, len: u64) {
+    let fut = eng.future(1);
+    eng.inject(
+        ChareRef::new(io.managers, 0),
+        EP_M_READ,
+        ReadMsg { session: s.id, offset, len, after: Callback::Future(fut) },
+    );
+    eng.run();
+    assert!(eng.future_done(fut), "read callback never fired");
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    let r = p.take::<ReadResult>();
+    assert_eq!(r.len, len);
+    let bytes = r.chunk.bytes.as_ref().expect("materialized run must deliver bytes");
+    assert_eq!(
+        pattern::verify(file, offset, bytes),
+        None,
+        "corrupt read at offset {offset} (len {len})"
+    );
+}
+
+/// A parked array covering only the first half of a new session splits
+/// the serve: the resident half is peer-fetched from the store (zero new
+/// PFS traffic), the other half is read from the PFS — exactly once.
+#[test]
+fn parked_array_split_serves_partial_overlap() {
+    let size = 2 * MIB;
+    let (mut eng, file, io) = verified_engine(size);
+    let opts = Options {
+        num_readers: Some(2),
+        splinter_bytes: Some(64 << 10),
+        reuse_buffers: true,
+        ..Default::default()
+    };
+    // The driver holds the file open across sessions.
+    io.open_driver(&mut eng, file, size, opts, Callback::Ignore);
+
+    // Session A prefetches the first half, then parks.
+    let sa = start_session(&mut eng, &io, file, 0, size / 2);
+    read_verified(&mut eng, &io, &sa, file, 0, size / 2);
+    close_session(&mut eng, &io, sa.id);
+    let pfs_after_a = eng.core.metrics.counter("pfs.bytes_read");
+    assert_eq!(pfs_after_a, size / 2, "session A reads exactly its half");
+    assert_eq!(eng.chare::<Director>(io.director).cached_buffer_arrays(), 1);
+
+    // Session B spans the whole file: its first half is served from A's
+    // parked array (split serve), only the second half hits the PFS.
+    let sb = start_session(&mut eng, &io, file, 0, size);
+    read_verified(&mut eng, &io, &sb, file, 0, size);
+    let pfs_after_b = eng.core.metrics.counter("pfs.bytes_read");
+    assert_eq!(
+        pfs_after_b - pfs_after_a,
+        size / 2,
+        "session B must only read the non-resident half from the PFS"
+    );
+    assert_eq!(
+        eng.core.metrics.counter("ckio.store.hit_bytes"),
+        size / 2,
+        "the resident half must be served out of the span store"
+    );
+
+    close_session(&mut eng, &io, sb.id);
+    assert_service_clean(&eng, &io);
+    let cfut = eng.future(1);
+    io.close_file_driver(&mut eng, file, Callback::Future(cfut));
+    eng.run();
+    assert!(eng.future_done(cfut));
+    let director: &Director = eng.chare(io.director);
+    assert_eq!(director.cached_buffer_arrays(), 0, "file close purges parked arrays");
+    assert_eq!(director.open_files(), 0);
+}
+
+/// The resident/PFS split lands exactly on a stripe boundary: a parked
+/// array over stripe 0 serves the first buffer of a session that crosses
+/// into stripe 1, with no double-read and no corruption at the seam.
+#[test]
+fn split_serve_at_stripe_boundary_is_exact() {
+    let size = 8 * MIB; // default stripe size is 4 MiB
+    let (mut eng, file, io) = verified_engine(size);
+    let stripe = eng.core.sim_pfs().cfg.stripe_size;
+    assert_eq!(stripe, 4 * MIB, "test assumes the default stripe size");
+    let opts = Options { num_readers: Some(2), reuse_buffers: true, ..Default::default() };
+    io.open_driver(&mut eng, file, size, opts, Callback::Ignore);
+
+    // Session A covers exactly stripe 0 ([0, 4 MiB)), then parks.
+    let sa = start_session(&mut eng, &io, file, 0, stripe);
+    close_session(&mut eng, &io, sa.id);
+    let pfs_after_a = eng.core.metrics.counter("pfs.bytes_read");
+    assert_eq!(pfs_after_a, stripe);
+
+    // Session B straddles the boundary: [2 MiB, 6 MiB). Its first buffer
+    // ([2 MiB, 4 MiB)) is fully inside A's claim; its second
+    // ([4 MiB, 6 MiB)) starts exactly at the stripe boundary and must be
+    // read from the PFS, once.
+    let sb = start_session(&mut eng, &io, file, stripe / 2, stripe);
+    // The read crosses the resident/PFS seam at the stripe boundary.
+    read_verified(&mut eng, &io, &sb, file, stripe / 2, stripe);
+    let pfs_after_b = eng.core.metrics.counter("pfs.bytes_read");
+    assert_eq!(
+        pfs_after_b - pfs_after_a,
+        stripe / 2,
+        "only the beyond-boundary half may touch the PFS"
+    );
+    assert_eq!(eng.core.metrics.counter("ckio.store.hit_bytes"), stripe / 2);
+
+    close_session(&mut eng, &io, sb.id);
+    assert_service_clean(&eng, &io);
+}
+
+/// A tight byte budget evicts a parked array while a new overlapping
+/// session races it through the director. Whichever side wins, every
+/// read completes verified (a stale claim degrades to a peer miss and a
+/// PFS fallback), eviction is charged, and nothing leaks.
+#[test]
+fn eviction_racing_a_pending_close_stays_correct() {
+    let size = 2 * MIB;
+    let (mut eng, file, io) = verified_engine(size);
+    let opts = Options {
+        num_readers: Some(2),
+        splinter_bytes: Some(128 << 10),
+        reuse_buffers: true,
+        store_budget_bytes: Some(MIB), // exactly one parked half-file array
+        ..Default::default()
+    };
+    io.open_driver(&mut eng, file, size, opts, Callback::Ignore);
+
+    // A parks [0, 1 MiB); it fits the budget.
+    let sa = start_session(&mut eng, &io, file, 0, MIB);
+    close_session(&mut eng, &io, sa.id);
+
+    // B covers [1 MiB, 2 MiB). Its close parks a second 1 MiB array,
+    // which must evict A. Session C ([512 KiB, 1.5 MiB)) starts in the
+    // same scheduling window, overlapping both A (maybe mid-eviction)
+    // and B (mid-park) — inject both without quiescing in between.
+    let sb = start_session(&mut eng, &io, file, MIB, MIB);
+    let close_fut = eng.future(1);
+    io.close_session_driver(&mut eng, sb.id, Callback::Future(close_fut));
+    let ready_fut = eng.future(1);
+    io.start_session_driver(&mut eng, file, MIB / 2, MIB, Callback::Future(ready_fut));
+    eng.run();
+    assert!(eng.future_done(close_fut), "B's close must complete");
+    assert!(eng.future_done(ready_fut), "C must become ready");
+    let sc = {
+        let (_, mut p) = eng.take_future(ready_fut).pop().unwrap();
+        p.take::<Session>()
+    };
+
+    // C reads across its whole range — through whatever mix of parked
+    // arrays, peer misses, and PFS fallbacks the race produced.
+    read_verified(&mut eng, &io, &sc, file, MIB / 2, MIB);
+    // The budget held: parking B evicted A's resident megabyte.
+    assert!(
+        eng.core.metrics.counter("ckio.store.evicted_bytes") >= MIB,
+        "parking B over a 1 MiB budget must evict A"
+    );
+    let director: &Director = eng.chare(io.director);
+    assert!(
+        director.span_store().resident_bytes() <= MIB,
+        "resident bytes exceed the configured budget"
+    );
+
+    close_session(&mut eng, &io, sc.id);
+    assert_service_clean(&eng, &io);
+    let cfut = eng.future(1);
+    io.close_file_driver(&mut eng, file, Callback::Future(cfut));
+    eng.run();
+    assert!(eng.future_done(cfut));
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
+}
