@@ -1,0 +1,84 @@
+//! The sharded data plane (PR 3): session churn over distinct files
+//! scales with the shard count instead of queueing on one coordinator.
+//!
+//! PR 2 put the span store and the admission governor on the director
+//! singleton: every claim registration and every admission ticket of
+//! every session serialized through one chare on one PE. This run
+//! reproduces that bottleneck (shards = 1) and then sweeps the
+//! data-plane shard count: K sessions over K *distinct* files, on a
+//! deliberately control-plane-heavy PFS shape (tiny cheap reads), so
+//! coordination — not the disks — bounds the run. The I/O work is
+//! bit-for-bit identical across rows; only where the coordination
+//! executes changes.
+//!
+//! Expect the makespan to drop monotonically until every file has its
+//! own shard, and the max-vs-mean per-shard message counts to show the
+//! load spreading.
+//!
+//! ```sh
+//! cargo run --release --example sharded_churn -- [--file-size 512KiB] [--k 8]
+//! ```
+
+use ckio::harness::experiments::run_svc_churn;
+
+fn main() {
+    let args = ckio::util::cli::Args::from_env();
+    let size = args.get_bytes_or("file-size", 512 << 10);
+    let k = args.get_or("k", 8u32);
+    let clients = args.get_or("clients", 4u32);
+    let (nodes, pes) = (args.get_or("nodes", 4u32), args.get_or("pes-per-node", 8u32));
+
+    println!(
+        "{nodes} nodes x {pes} PEs; K = {k} sessions over {k} DISTINCT {} files, \
+         {clients} clients each, governed, 4 KiB splinters.\n",
+        ckio::util::human_bytes(size),
+    );
+    println!(
+        "{:>6}  {:>12}  {:>15}  {:>16}  {:>9}",
+        "shards", "makespan_ms", "shard_msgs_max", "shard_msgs_mean", "imbalance"
+    );
+
+    let mut first = None;
+    let mut last = None;
+    let mut last_shards = 1u32;
+    for shards in [1u32, 2, 4, 8, 16] {
+        let (st, io, eng) = run_svc_churn(nodes, pes, size, k, clients, shards, 42);
+        ckio::harness::experiments::assert_service_clean(&eng, &io);
+        println!(
+            "{:>6}  {:>12.3}  {:>15}  {:>16.1}  {:>8.2}x",
+            st.shards,
+            st.makespan_s * 1e3,
+            st.shard_msgs_max,
+            st.shard_msgs_mean,
+            st.shard_msgs_max as f64 / st.shard_msgs_mean.max(1.0),
+        );
+        if st.shards == 1 {
+            first = Some(st.makespan_s);
+        } else {
+            // The widest spread run so far (rows sweep upward, so the
+            // final value is the most-sharded configuration).
+            last = Some(st.makespan_s);
+            last_shards = st.shards;
+        }
+    }
+
+    // The sharding claim, enforced: spreading the data plane must
+    // clearly beat the single-shard (PR 2) plane. Only meaningful when
+    // there is something to spread (k > 1) and the topology let the
+    // sweep actually spread it (≥ 4 active shards; on a tiny engine
+    // every row clamps toward one shard and both configurations sit on
+    // the same I/O floor).
+    let t1 = first.expect("shards=1 row");
+    let tk = last.unwrap_or(t1);
+    if k > 1 && last_shards >= 4.min(k) {
+        assert!(
+            tk < 0.8 * t1,
+            "sharded data plane ({tk:.4}s) must clearly beat the singleton ({t1:.4}s)"
+        );
+    }
+    println!(
+        "\n=> the director is a lifecycle coordinator; the data plane scales with its shards \
+         ({:.2}x faster fully sharded).",
+        t1 / tk
+    );
+}

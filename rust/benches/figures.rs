@@ -30,6 +30,7 @@ fn main() {
         ("ablation_autoreaders", Box::new(move || exp::ablation_autoreaders(reps))),
         ("svc_concurrent", Box::new(move || exp::svc_concurrent(reps))),
         ("svc_shared", Box::new(move || exp::svc_shared(reps))),
+        ("svc_churn", Box::new(move || exp::svc_churn(reps))),
     ];
 
     let total = std::time::Instant::now();
@@ -45,17 +46,20 @@ fn main() {
             Err(e) => eprintln!("csv write failed for {slug}: {e}"),
         }
     }
-    // Machine-readable perf anchor for the resident-data-plane work
-    // (PR 2: svc_concurrent continuity + svc_shared dedup + store keys).
-    // Either svc filter triggers it — the JSON contains both sections.
+    // Machine-readable perf anchor for the sharded data-plane work
+    // (PR 3: svc_concurrent continuity + svc_shared dedup + svc_churn
+    // shard sweep + adaptive-governor feedback + store/governor/shard
+    // keys). Any svc filter triggers it — the JSON has every section.
     if wanted.is_empty()
-        || wanted
-            .iter()
-            .any(|w| "svc_shared".contains(w.as_str()) || "svc_concurrent".contains(w.as_str()))
+        || wanted.iter().any(|w| {
+            "svc_shared".contains(w.as_str())
+                || "svc_concurrent".contains(w.as_str())
+                || "svc_churn".contains(w.as_str())
+        })
     {
-        match std::fs::write("BENCH_pr2.json", exp::bench_pr2_json(reps)) {
-            Ok(()) => println!("[json] BENCH_pr2.json"),
-            Err(e) => eprintln!("BENCH_pr2.json write failed: {e}"),
+        match std::fs::write("BENCH_pr3.json", exp::bench_pr3_json(reps)) {
+            Ok(()) => println!("[json] BENCH_pr3.json"),
+            Err(e) => eprintln!("BENCH_pr3.json write failed: {e}"),
         }
     }
     println!("total bench wall time: {:.1}s", total.elapsed().as_secs_f64());

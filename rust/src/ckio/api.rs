@@ -17,7 +17,7 @@
 use crate::amt::callback::Callback;
 use crate::amt::chare::{ChareRef, CollectionId};
 use crate::amt::engine::{Ctx, Engine};
-use crate::amt::topology::Pe;
+use crate::amt::topology::{Pe, Placement};
 use crate::pfs::layout::FileId;
 
 use super::assembler::ReadAssembler;
@@ -28,6 +28,7 @@ use super::director::{
 use super::manager::{Manager, ReadMsg, EP_M_READ};
 use super::options::Options;
 use super::session::{Session, SessionId};
+use super::shard::DataShard;
 
 /// Handle bundle for the CkIO service instance; cheap to copy into every
 /// client chare.
@@ -36,23 +37,79 @@ pub struct CkIo {
     pub director: ChareRef,
     pub managers: CollectionId,
     pub assemblers: CollectionId,
+    /// The data-plane shard array (PR 3): span-store + governor state,
+    /// partitioned by `FileId` hash.
+    pub shards: CollectionId,
+    /// Elements in `shards` (one per PE; how many the hash actually
+    /// routes over is `Options::data_plane_shards`, inspected via
+    /// [`Director::active_shards`]).
+    pub nshards: u32,
 }
 
 impl CkIo {
     /// Install the CkIO service into an engine: the ReadAssembler group,
-    /// the Manager group, and the Director singleton (on PE 0).
+    /// the Manager group, the data-plane shard array (one element per
+    /// PE), and the Director singleton (on PE 0).
     pub fn boot(engine: &mut Engine) -> CkIo {
         let assemblers = engine.create_group(|_| ReadAssembler::default());
-        // The director's ChareRef isn't known until created; managers are
-        // patched right after (pre-run, so no message can observe it).
+        // The director's ChareRef isn't known until created; managers and
+        // shards are patched right after (pre-run, so no message can
+        // observe the placeholder).
         let placeholder = ChareRef::new(assemblers, 0);
         let managers = engine.create_group(|pe| Manager::new(placeholder, assemblers, pe.0));
         let npes = engine.core.topo.npes();
-        let director = engine.create_singleton(Pe(0), Director::new(managers, assemblers, npes));
+        let nshards = npes;
+        let shards = engine
+            .create_array(nshards, &Placement::RoundRobinPes, |i| DataShard::new(i, placeholder));
+        let director = engine
+            .create_singleton(Pe(0), Director::new(managers, assemblers, shards, nshards, npes));
         for pe in 0..npes {
             engine.chare_mut::<Manager>(ChareRef::new(managers, pe)).director = director;
         }
-        CkIo { director, managers, assemblers }
+        for s in 0..nshards {
+            engine.chare_mut::<DataShard>(ChareRef::new(shards, s)).director = director;
+        }
+        CkIo { director, managers, assemblers, shards, nshards }
+    }
+
+    // ------------------------------------------------------------------
+    // data-plane inspection (tests / drivers) — the PR 2 director
+    // accessors, now summed over the shard array
+    // ------------------------------------------------------------------
+
+    /// Borrow one data-plane shard.
+    pub fn shard<'e>(&self, engine: &'e Engine, i: u32) -> &'e DataShard {
+        engine.chare(ChareRef::new(self.shards, i))
+    }
+
+    /// Parked buffer arrays available for reuse, across all shards.
+    pub fn cached_buffer_arrays(&self, engine: &Engine) -> usize {
+        (0..self.nshards).map(|s| self.shard(engine, s).span_store().parked_count()).sum()
+    }
+
+    /// Bytes resident in parked arrays, across all shards (the value the
+    /// `ckio.store.resident_bytes` gauge sums to).
+    pub fn store_resident_bytes(&self, engine: &Engine) -> u64 {
+        (0..self.nshards).map(|s| self.shard(engine, s).span_store().resident_bytes()).sum()
+    }
+
+    /// Admitted-and-uncompleted governor tickets, across all shards
+    /// (leak checks: must be 0 at quiescence).
+    pub fn governor_inflight(&self, engine: &Engine) -> u32 {
+        (0..self.nshards).map(|s| self.shard(engine, s).admission().inflight()).sum()
+    }
+
+    /// Buffer chares with queued (deferred) governor demand, across all
+    /// shards (leak checks: must be 0 at quiescence).
+    pub fn governor_queued(&self, engine: &Engine) -> usize {
+        (0..self.nshards).map(|s| self.shard(engine, s).admission().queued()).sum()
+    }
+
+    /// Data-plane messages processed per shard (the imbalance pair
+    /// `ckio.shard.msgs_max` / `ckio.shard.msgs_mean` is computed from
+    /// this).
+    pub fn shard_msgs(&self, engine: &Engine) -> Vec<u64> {
+        (0..self.nshards).map(|s| self.shard(engine, s).msgs_processed()).collect()
     }
 
     // ------------------------------------------------------------------

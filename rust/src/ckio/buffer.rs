@@ -12,20 +12,28 @@
 //! `Options::splinter_bytes` set, the span is read in sub-chunks and a
 //! fetch is served as soon as the splinters covering it have arrived.
 //!
-//! Resident-data plane (PR 2): a buffer chare is a *source* as well as a
-//! reader. The director's span store may assign some of its splinter
-//! slots to peer buffer chares (of an earlier session over the same file,
-//! live or parked) instead of the PFS: those slots are obtained with
-//! `EP_BUF_PEER_FETCH` and never touch the file system. Symmetrically,
-//! this chare answers peer fetches for its own resident slots — a fetch
-//! for a slot whose greedy read is still in flight queues and is served
-//! on arrival, which is what dedups concurrent same-file prefetch. A
-//! peer that was dropped meanwhile answers with a *miss* and the
-//! requester falls back to its own PFS read, so correctness never
-//! depends on the cache. When the file was opened with
-//! `Options::max_inflight_reads`, PFS reads are additionally *governed*:
-//! the chare requests tickets from the director's admission governor and
-//! issues exactly what is granted.
+//! Resident-data plane (PR 2, sharded in PR 3): a buffer chare is a
+//! *source* as well as a reader. On `EP_BUF_INIT` the chare registers
+//! its span with its file's data-plane shard
+//! ([`super::shard::DataShard`], `EP_SHARD_REGISTER`); the shard
+//! resolves the chare's splinter slots against existing claims and
+//! answers `EP_BUF_PEERS` with the slots an earlier array (live or
+//! parked, same file) already covers. Those slots are obtained with
+//! `EP_BUF_PEER_FETCH` from the owning buffers and never touch the file
+//! system; greedy PFS reads for the rest start only once the peer list
+//! is in (so a racing resolve can never lose a dedup opportunity).
+//! Symmetrically, this chare answers peer fetches for its own resident
+//! slots — a fetch for a slot whose greedy read is still in flight
+//! queues and is served on arrival, which is what dedups concurrent
+//! same-file prefetch. A peer that was dropped meanwhile answers with a
+//! *miss* and the requester falls back to its own PFS read, so
+//! correctness never depends on the cache. When the file was opened
+//! with `Options::max_inflight_reads` (or `adaptive_admission`), PFS
+//! reads are additionally *governed*: the chare requests tickets from
+//! its shard's admission governor (`EP_SHARD_IO_REQ`), issues exactly
+//! what is granted, and reports each read's observed service time with
+//! the returned ticket (`EP_SHARD_IO_DONE`) — the signal the adaptive
+//! cap's AIMD loop feeds on.
 //!
 //! Lifecycle (PR 1): a buffer chare is `Active` while its session runs.
 //! Teardown *drains* — every queued fetch is answered before the director
@@ -37,13 +45,13 @@
 //! kept and a later identical session rebinds the array without touching
 //! the file system again.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 
 use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg, Payload};
-use crate::amt::time::MICROS;
+use crate::amt::time::{Time, MICROS};
 use crate::amt::topology::Pe;
 use crate::impl_chare_any;
 use crate::metrics::keys;
@@ -53,6 +61,10 @@ use crate::pfs::layout::FileId;
 use crate::util::bytes::{ceil_div, Chunk};
 
 use super::session::{SessionId, Tag};
+use super::shard::{
+    RegisterMsg, UnclaimMsg, EP_SHARD_IO_DONE, EP_SHARD_IO_REQ, EP_SHARD_REGISTER,
+    EP_SHARD_UNCLAIM,
+};
 
 /// Kick a freshly created buffer chare: issue its greedy reads.
 pub const EP_BUF_INIT: Ep = 1;
@@ -72,6 +84,9 @@ pub const EP_BUF_PEER_FETCH: Ep = 7;
 pub const EP_BUF_PEER_DATA: Ep = 8;
 /// Admission governor grant: issue this many PFS reads now.
 pub const EP_BUF_GRANT: Ep = 9;
+/// The shard's answer to `EP_SHARD_REGISTER`: which of this chare's
+/// splinter slots are served by peer buffers instead of the PFS.
+pub const EP_BUF_PEERS: Ep = 10;
 
 /// Fetch request from an assembler.
 #[derive(Debug)]
@@ -111,7 +126,7 @@ pub struct PeerDataMsg {
     pub chunk: Option<Chunk>,
 }
 
-/// Buffer → director: request PFS read tickets from the governor.
+/// Buffer → shard: request PFS read tickets from the governor.
 #[derive(Debug)]
 pub struct IoReqMsg {
     pub buffer: ChareRef,
@@ -120,17 +135,28 @@ pub struct IoReqMsg {
     pub sess_bytes: u64,
 }
 
-/// Buffer → director: return `n` tickets (reads completed, or a grant
+/// Buffer → shard: return `n` tickets (reads completed, or a grant
 /// arrived after this buffer was dropped).
 #[derive(Debug)]
 pub struct IoDoneMsg {
     pub n: u32,
+    /// Observed issue→completion time of the read this ticket covered
+    /// (0 when the ticket completed no read — a return without signal).
+    /// Feeds the adaptive governor's AIMD window.
+    pub service_ns: u64,
 }
 
-/// Grant from the governor (via the director).
+/// Grant from the governor (via the shard).
 #[derive(Debug)]
 pub struct GrantMsg {
     pub n: u32,
+}
+
+/// Shard → buffer: the resolved peer list — `(slot, owning buffer)` for
+/// every splinter slot an existing claim fully covers.
+#[derive(Debug)]
+pub struct PeersMsg {
+    pub peers: Vec<(u32, ChareRef)>,
 }
 
 /// Notification to the director that this buffer initiated its reads
@@ -193,7 +219,15 @@ pub struct BufferChare {
     sess_bytes: u64,
     /// Tickets requested from the governor and not yet granted.
     asked: u32,
+    /// Issue times of in-flight governed PFS reads, keyed by slot — the
+    /// observed service time reported with each returned ticket.
+    issued_at: HashMap<u32, Time>,
+    /// Whether the shard has answered our registration (PFS issuance
+    /// holds until then, so a racing resolve never loses a dedup).
+    peers_resolved: bool,
     director: ChareRef,
+    /// The data-plane shard owning this chare's file.
+    shard: ChareRef,
     assemblers: CollectionId,
     state: BufState,
 }
@@ -208,6 +242,7 @@ impl BufferChare {
         splinter: Option<u64>,
         window: u32,
         director: ChareRef,
+        shard: ChareRef,
         assemblers: CollectionId,
     ) -> BufferChare {
         let splinter = splinter.unwrap_or(0).min(my_len);
@@ -234,23 +269,36 @@ impl BufferChare {
             governed: false,
             sess_bytes: 0,
             asked: 0,
+            issued_at: HashMap::new(),
+            peers_resolved: false,
             director,
+            shard,
             assemblers,
             state: BufState::Active,
         }
     }
 
-    /// Assign slots to peer sources (span-store claim matches): those
-    /// slots are peer-fetched instead of read from the PFS.
-    pub fn with_peers(mut self, peers: Vec<(u32, ChareRef)>) -> BufferChare {
-        for &(slot, _) in &peers {
-            self.pfs_queue.retain(|&s| s != slot);
-        }
+    /// Assign slots to peer sources, as the shard's `EP_BUF_PEERS` reply
+    /// does at runtime: those slots are peer-fetched instead of read
+    /// from the PFS. Test-only: it bypasses shard registration entirely
+    /// (no claim exists for a chare built this way), so live chares must
+    /// always get their peers from the shard after registering.
+    #[cfg(test)]
+    fn with_peers(mut self, peers: Vec<(u32, ChareRef)>) -> BufferChare {
+        self.apply_peers(&peers);
         self.peer_slots = peers;
+        self.peers_resolved = true;
         self
     }
 
-    /// Route PFS reads through the admission governor (the director).
+    /// Remove peer-assigned slots from the PFS queue.
+    fn apply_peers(&mut self, peers: &[(u32, ChareRef)]) {
+        for &(slot, _) in peers {
+            self.pfs_queue.retain(|&s| s != slot);
+        }
+    }
+
+    /// Route PFS reads through the shard's admission governor.
     pub fn governed(mut self, sess_bytes: u64) -> BufferChare {
         self.governed = true;
         self.sess_bytes = sess_bytes;
@@ -296,6 +344,11 @@ impl BufferChare {
         let Some(slot) = self.pfs_queue.pop_front() else { return };
         let (offset, len) = self.slot_extent(slot);
         self.pfs_inflight += 1;
+        if self.governed {
+            // Remember the issue time: the ticket return reports the
+            // observed service time to the adaptive governor.
+            self.issued_at.insert(slot, ctx.now());
+        }
         ctx.metrics().count(keys::STORE_MISS, len);
         let me = ctx.me();
         ctx.submit_read(
@@ -304,8 +357,8 @@ impl BufferChare {
         );
     }
 
-    /// Governed issuance: ask the governor for tickets covering the
-    /// queued slots, up to the window.
+    /// Governed issuance: ask the shard's governor for tickets covering
+    /// the queued slots, up to the window.
     fn maybe_request(&mut self, ctx: &mut Ctx<'_>) {
         if !self.governed {
             return;
@@ -317,16 +370,21 @@ impl BufferChare {
             self.asked += want;
             let me = ctx.me();
             ctx.send(
-                self.director,
-                super::director::EP_DIR_IO_REQ,
+                self.shard,
+                EP_SHARD_IO_REQ,
                 IoReqMsg { buffer: me, want, sess_bytes: self.sess_bytes },
             );
         }
     }
 
     /// Kick issuance: governed chares ask the governor, ungoverned ones
-    /// read directly.
+    /// read directly. Holds entirely until the shard has resolved our
+    /// peer list — issuing earlier could duplicate a read a peer already
+    /// has in flight.
     fn pump(&mut self, ctx: &mut Ctx<'_>) {
+        if !self.peers_resolved {
+            return;
+        }
         if self.governed {
             self.maybe_request(ctx);
         } else {
@@ -505,30 +563,64 @@ impl Chare for BufferChare {
     fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
         match msg.ep {
             EP_BUF_INIT => {
-                // Peer-assigned slots: fetch from the owning buffer chare
-                // (its greedy read is resident or in flight) — these
-                // bytes never touch the PFS again.
+                // Register this chare's span with its file's data-plane
+                // shard: the shard resolves which splinter slots an
+                // existing array already covers (same-file prefetch
+                // dedup, partial-overlap serving) and claims the span
+                // for later sessions. PFS issuance waits for the
+                // EP_BUF_PEERS reply so a racing resolve never loses a
+                // dedup opportunity.
                 let me = ctx.me();
-                let peers = self.peer_slots.clone();
-                for (slot, owner) in peers {
-                    let (offset, len) = self.slot_extent(slot);
-                    ctx.send(owner, EP_BUF_PEER_FETCH, PeerFetchMsg { offset, len, slot, reply: me });
+                if self.my_len == 0 {
+                    // Nothing to read or claim.
+                    self.peers_resolved = true;
+                } else {
+                    ctx.send(self.shard, EP_SHARD_REGISTER, RegisterMsg {
+                        file: self.file,
+                        offset: self.my_offset,
+                        len: self.my_len,
+                        splinter: self.splinter,
+                        buffer: me,
+                    });
                 }
-                // Greedy PFS reads: start immediately, before any client
-                // asks (through the governor when admission-controlled).
-                self.pump(ctx);
                 ctx.advance(MICROS);
                 ctx.send(self.director, super::director::EP_DIR_BUF_STARTED, BufStartedMsg {
                     session: self.session,
                 });
             }
+            EP_BUF_PEERS => {
+                let m: PeersMsg = msg.take();
+                if self.state == BufState::Dropped {
+                    return; // resolved after teardown: nothing to start
+                }
+                // Peer-assigned slots: fetch from the owning buffer chare
+                // (its greedy read is resident or in flight) — these
+                // bytes never touch the PFS again.
+                self.peers_resolved = true;
+                self.apply_peers(&m.peers);
+                let me = ctx.me();
+                for &(slot, owner) in &m.peers {
+                    let (offset, len) = self.slot_extent(slot);
+                    ctx.send(owner, EP_BUF_PEER_FETCH, PeerFetchMsg { offset, len, slot, reply: me });
+                }
+                self.peer_slots = m.peers;
+                // Greedy PFS reads for the unclaimed slots: start now,
+                // before any client asks (through the governor when
+                // admission-controlled).
+                self.pump(ctx);
+            }
             EP_BUF_DATA => {
                 let r: IoResult = msg.take();
                 // Governor bookkeeping happens even for late completions
-                // of dropped chares — tickets must always return.
+                // of dropped chares — tickets must always return (with
+                // the observed service time: the AIMD signal).
                 self.pfs_inflight = self.pfs_inflight.saturating_sub(1);
                 if self.governed {
-                    ctx.send(self.director, super::director::EP_DIR_IO_DONE, IoDoneMsg { n: 1 });
+                    let service_ns = self
+                        .issued_at
+                        .remove(&(r.user as u32))
+                        .map_or(0, |t| ctx.now().saturating_sub(t));
+                    ctx.send(self.shard, EP_SHARD_IO_DONE, IoDoneMsg { n: 1, service_ns });
                 }
                 if self.state == BufState::Dropped {
                     return; // late completion after teardown
@@ -564,7 +656,7 @@ impl Chare for BufferChare {
                 self.asked = self.asked.saturating_sub(g.n);
                 if self.state == BufState::Dropped {
                     // Too late to read: return the tickets untouched.
-                    ctx.send(self.director, super::director::EP_DIR_IO_DONE, IoDoneMsg { n: g.n });
+                    ctx.send(self.shard, EP_SHARD_IO_DONE, IoDoneMsg { n: g.n, service_ns: 0 });
                     return;
                 }
                 let mut issued = 0;
@@ -577,8 +669,9 @@ impl Chare for BufferChare {
                 }
                 if issued < g.n {
                     // Excess tickets (peer data landed meanwhile): return.
-                    ctx.send(self.director, super::director::EP_DIR_IO_DONE, IoDoneMsg {
+                    ctx.send(self.shard, EP_SHARD_IO_DONE, IoDoneMsg {
                         n: g.n - issued,
+                        service_ns: 0,
                     });
                 }
             }
@@ -627,8 +720,18 @@ impl Chare for BufferChare {
             EP_BUF_DROP => {
                 self.drain_pending(ctx);
                 self.chunks.iter_mut().for_each(|c| *c = None);
+                let was_active = self.state != BufState::Dropped;
                 self.state = BufState::Dropped;
                 ctx.advance(MICROS / 2);
+                // Retract our span claim at the shard. Sent by *this*
+                // chare so it is FIFO-ordered after our own registration
+                // (same source → same destination); idempotent on the
+                // store side, and redundant after a shard-driven
+                // eviction/purge (which already dropped the claims).
+                if was_active && self.my_len > 0 {
+                    let me = ctx.me();
+                    ctx.send(self.shard, EP_SHARD_UNCLAIM, UnclaimMsg { file: self.file, owner: me });
+                }
                 ctx.send(self.director, super::director::EP_DIR_DROP_ACK, BufDroppedMsg {
                     session: self.session,
                     resident: 0,
@@ -691,6 +794,7 @@ mod tests {
             splinter,
             2,
             ChareRef::new(CollectionId(0), 0),
+            ChareRef::new(CollectionId(2), 0),
             CollectionId(1),
         )
     }
@@ -768,6 +872,10 @@ mod tests {
         assert_eq!(b.pending_len(), 0);
         assert_eq!(b.resident_bytes(), 0);
         assert_eq!(b.pfs_queue.len(), 4, "every slot starts PFS-bound");
+        assert!(
+            !b.peers_resolved,
+            "a fresh chare must hold PFS issuance until the shard answers"
+        );
     }
 
     #[test]
@@ -776,6 +884,7 @@ mod tests {
         let b = mk(Some(30)).with_peers(vec![(0, src), (2, src)]);
         assert_eq!(b.peer_slot_count(), 2);
         assert_eq!(b.pfs_queue, VecDeque::from(vec![1, 3]));
+        assert!(b.peers_resolved);
     }
 
     #[test]
@@ -788,6 +897,7 @@ mod tests {
             Some(30),
             2,
             ChareRef::new(CollectionId(0), 0),
+            ChareRef::new(CollectionId(2), 0),
             CollectionId(1),
         );
         assert!(b.pfs_queue.is_empty());

@@ -1,24 +1,44 @@
-//! Director chare (paper §III-C.1).
+//! Director chare (paper §III-C.1) — since PR 3, a *thin lifecycle
+//! coordinator*.
 //!
-//! The singleton coordinator: drives file opens through the MDS, creates
-//! the per-session buffer-chare array, announces sessions to the manager
+//! The singleton drives file opens through the MDS, creates the
+//! per-session buffer-chare array, announces sessions to the manager
 //! group, fires the user's `opened`/`ready`/`closed` callbacks once every
-//! participant has acknowledged, and sequences session teardown. Global
-//! coordination lives here — concretely, the director owns the two
-//! PR 2 subsystems that need the cluster-wide view:
+//! participant has acknowledged, and sequences session/file teardown.
+//! That — and only that — is what still runs here.
 //!
-//! * the **span store** ([`super::store`]): which bytes of which file are
-//!   resident in which buffer-chare array (live or parked). At session
-//!   start the director matches the new session's splinter slots against
-//!   the store's claims and points the new buffers at *peer* sources
-//!   instead of the PFS — same-file concurrent sessions dedup their
-//!   prefetch, and parked arrays serve partial overlaps. Parked arrays
-//!   are kept under a byte budget with LRU eviction
-//!   ([`super::Options::store_budget_bytes`]).
-//! * the **admission governor** ([`super::governor`]): the global cap on
-//!   PFS reads in flight ([`super::Options::max_inflight_reads`]). Buffer
-//!   chares of governed files request tickets here and the governor
-//!   sequences or throttles session prefetch across *all* sessions.
+//! # Coordinator vs. data-plane shards (PR 3)
+//!
+//! PR 2 also parked the span store and the admission governor on this
+//! singleton, which made every hot-path event — claim registration,
+//! peer-fetch resolution, LRU touch, admission ticket — serialize
+//! through one mailbox on one PE. PR 3 moves all of that into the
+//! [`super::shard::DataShard`] chare array: each shard owns the store
+//! and governor state for the `FileId`s that hash to it
+//! ([`super::shard::shard_of`]; the active shard count comes from
+//! [`super::Options::data_plane_shards`], default one per PE). The
+//! director's remaining involvement with the data plane is strictly
+//! lifecycle-shaped, one message per event, always to the single shard
+//! owning the file:
+//!
+//! * **session start** — buffers register/resolve *themselves* with
+//!   their shard (`EP_SHARD_REGISTER` → `EP_BUF_PEERS`); the director
+//!   only passes them the shard's address. For a `reuse_buffers` start
+//!   it first probes the shard for an exactly matching parked array
+//!   (`EP_SHARD_TAKE` → [`EP_DIR_TAKE_REPLY`]) and then either rebinds
+//!   the returned array or creates a fresh one,
+//! * **session close** — a parking close publishes the fully parked
+//!   array to the shard (`EP_SHARD_PARK`) once every ack is in; a
+//!   dropping close just drops the array (each buffer retracts its own
+//!   claim at the shard),
+//! * **file close** — the owning shard purges the file's claims and
+//!   parked arrays (`EP_SHARD_PURGE`).
+//!
+//! The governor ticket protocol (`EP_DIR_IO_REQ`/`EP_DIR_IO_DONE` in
+//! PR 2) no longer exists here at all: buffers talk straight to their
+//! shard (`EP_SHARD_IO_REQ`/`EP_SHARD_IO_DONE`). Net effect: same-file
+//! cooperation never crosses shards, and session churn over distinct
+//! files scales with the shard count instead of queueing on one chare.
 //!
 //! Concurrency (PR 1): the director is genuinely multi-session —
 //!
@@ -34,7 +54,7 @@
 //!   the drop, assemblers are told so late pieces are tolerated — no
 //!   read callback is ever stranded or fired twice,
 //! * **buffer reuse** (`Options::reuse_buffers`): closing parks the
-//!   session's buffer array in the span store keyed by
+//!   session's buffer array in its shard's span store keyed by
 //!   `(file, range, shape)`; a later identical session rebinds it and is
 //!   served from resident data with no file-system traffic.
 
@@ -46,22 +66,25 @@ use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg, Payload};
 use crate::amt::time::MICROS;
 use crate::impl_chare_any;
-use crate::metrics::keys;
 use crate::pfs::layout::FileId;
+use crate::util::bytes::ceil_div;
 
 use super::assembler::EP_A_SESSION_DROP;
 use super::buffer::{
-    BufDroppedMsg, BufStartedMsg, BufferChare, GrantMsg, IoDoneMsg, IoReqMsg, EP_BUF_DROP,
-    EP_BUF_GRANT, EP_BUF_INIT, EP_BUF_PARK, EP_BUF_REBIND,
+    BufDroppedMsg, BufStartedMsg, BufferChare, EP_BUF_DROP, EP_BUF_INIT, EP_BUF_PARK,
+    EP_BUF_REBIND,
 };
-use super::governor::Governor;
 use super::manager::{
     FileOpenedMsg, SessionAnnounceMsg, EP_M_FILE_CLOSE, EP_M_FILE_OPENED, EP_M_SESSION_ANNOUNCE,
     EP_M_SESSION_DROP,
 };
 use super::options::Options;
 use super::session::{buffer_span_of, FileHandle, Session, SessionId};
-use super::store::{slot_extents, BufKey, Evicted, SpanStore};
+use super::shard::{
+    shard_of, ParkMsg, ShardConfigMsg, TakeMsg, EP_SHARD_CONFIG, EP_SHARD_PARK, EP_SHARD_PURGE,
+    EP_SHARD_TAKE,
+};
+use super::store::BufKey;
 
 /// User: open a file.
 pub const EP_DIR_OPEN: Ep = 1;
@@ -85,10 +108,8 @@ pub const EP_DIR_DROP_ACK_MGR: Ep = 9;
 pub const EP_DIR_CLOSE_FILE: Ep = 10;
 /// Manager ack: file entry dropped.
 pub const EP_DIR_CLOSE_ACK: Ep = 11;
-/// Buffer chare: request PFS read tickets from the admission governor.
-pub const EP_DIR_IO_REQ: Ep = 12;
-/// Buffer chare: return PFS read tickets to the admission governor.
-pub const EP_DIR_IO_DONE: Ep = 13;
+/// Shard: answer to a parked-array rebind probe (`EP_SHARD_TAKE`).
+pub const EP_DIR_TAKE_REPLY: Ep = 12;
 
 #[derive(Debug)]
 pub struct OpenMsg {
@@ -116,6 +137,14 @@ pub struct CloseSessionMsg {
 pub struct CloseFileMsg {
     pub file: FileId,
     pub after: Callback,
+}
+
+/// Shard → director: the result of an `EP_SHARD_TAKE` rebind probe.
+#[derive(Debug)]
+pub struct TakeReplyMsg {
+    pub token: u64,
+    /// The exactly matching parked array, if one was available.
+    pub found: Option<(CollectionId, u32)>,
 }
 
 /// An open in flight through the MDS; later opens of the same file pile
@@ -152,19 +181,47 @@ struct CloseState {
     acks: u32,
     need: u32,
     /// For a parking (reuse) session close: the array to publish into
-    /// the span store once every ack is in. Publishing only *after* the
-    /// close completes guarantees a cached array is fully parked — no
-    /// later eviction or purge can race this close's own acks.
+    /// the owning shard's span store once every ack is in. Publishing
+    /// only *after* the close completes guarantees a cached array is
+    /// fully parked — no later eviction or purge can race this close's
+    /// own acks.
     park: Option<(BufKey, CollectionId, u32)>,
     /// Resident bytes reported by the parking buffers' acks (the span
     /// store's budget accounting for the published array).
     parked_bytes: u64,
 }
 
+/// A `reuse_buffers` session start awaiting its shard's rebind probe.
+/// Carries everything needed to resume: the start logically happened
+/// when the probe was issued (the file was open in the table then), so
+/// the resume must not depend on the file still being open — a final
+/// close racing the probe is tolerated exactly as PR 2's synchronous
+/// path tolerated start-then-close.
+struct PendingTake {
+    msg: StartSessionMsg,
+    key: BufKey,
+    opts: Options,
+}
+
 /// The Director singleton.
 pub struct Director {
     managers: CollectionId,
     assemblers: CollectionId,
+    /// The data-plane shard array (structurally one chare per PE).
+    shards: CollectionId,
+    /// Elements in `shards`.
+    nshards: u32,
+    /// How many shards the `FileId` hash routes over. Reconfigured only
+    /// while the data plane is fully quiescent (no files, opens,
+    /// sessions, teardowns, or rebind probes in flight), so FileId→shard
+    /// routing is stable for the lifetime of every piece of data-plane
+    /// state.
+    active_shards: u32,
+    /// The last-configured global store budget (PR 2 semantics: set at
+    /// open, last writer wins, persists across opens). Remembered here
+    /// so a later `active_shards` change re-shares it over the new
+    /// shard count instead of leaving stale per-shard shares behind.
+    store_budget: Option<u64>,
     npes: u32,
     /// Opens awaiting MDS completion, FIFO (the MDS completes in order).
     mds_queue: VecDeque<FileId>,
@@ -175,19 +232,28 @@ pub struct Director {
     sessions: HashMap<SessionId, SessionState>,
     closes: HashMap<SessionId, CloseState>,
     file_closes: HashMap<FileId, CloseState>,
-    /// The resident-data plane: claims + parked arrays (PR 2).
-    store: SpanStore,
-    /// Global PFS read-admission control (PR 2).
-    governor: Governor,
+    /// Reuse session starts whose rebind probe is at the shard.
+    pending_takes: HashMap<u64, PendingTake>,
+    next_take: u64,
     next_session: u32,
 }
 
 impl Director {
-    pub fn new(managers: CollectionId, assemblers: CollectionId, npes: u32) -> Director {
+    pub fn new(
+        managers: CollectionId,
+        assemblers: CollectionId,
+        shards: CollectionId,
+        nshards: u32,
+        npes: u32,
+    ) -> Director {
         Director {
             managers,
             assemblers,
+            shards,
+            nshards,
+            active_shards: nshards.max(1),
             npes,
+            store_budget: None,
             mds_queue: VecDeque::new(),
             opens: HashMap::new(),
             files: HashMap::new(),
@@ -195,9 +261,32 @@ impl Director {
             sessions: HashMap::new(),
             closes: HashMap::new(),
             file_closes: HashMap::new(),
-            store: SpanStore::new(),
-            governor: Governor::new(),
+            pending_takes: HashMap::new(),
+            next_take: 0,
             next_session: 0,
+        }
+    }
+
+    /// The shard owning `file`'s data-plane state.
+    fn shard_ref(&self, file: FileId) -> ChareRef {
+        ChareRef::new(self.shards, shard_of(file, self.active_shards))
+    }
+
+    /// Broadcast the remembered global store budget, split over the
+    /// current active shard count, to **every** shard — so a share from
+    /// a previous active-count epoch can never linger (neither on a
+    /// shard that just went inactive nor on one that just gained a
+    /// bigger slice of the pie).
+    fn share_budget(&self, ctx: &mut Ctx<'_>, policy: super::governor::AdmissionPolicy) {
+        let Some(b) = self.store_budget else { return };
+        let share = ceil_div(b, self.active_shards as u64);
+        for s in 0..self.nshards {
+            ctx.send(ChareRef::new(self.shards, s), EP_SHARD_CONFIG, ShardConfigMsg {
+                cap: None,
+                policy,
+                adaptive: false,
+                budget: Some(share),
+            });
         }
     }
 
@@ -221,16 +310,20 @@ impl Director {
             let st = self.closes.remove(&sid).unwrap();
             self.sessions.remove(&sid);
             // Publish the fully parked array for reuse — unless its file
-            // was closed in the meantime (nothing can rebind it then).
+            // was closed in the meantime (nothing can rebind it then;
+            // the shard's purge already dropped its claims).
             if let Some((key, buffers, nbuf)) = st.park {
                 if self.files.contains_key(&key.file) {
-                    let evicted = self.store.park(key, buffers, nbuf, st.parked_bytes);
-                    self.release_evicted(ctx, evicted);
+                    let shard = self.shard_ref(key.file);
+                    ctx.send(shard, EP_SHARD_PARK, ParkMsg {
+                        key,
+                        buffers,
+                        nbuf,
+                        resident_bytes: st.parked_bytes,
+                    });
                 } else {
-                    self.store.drop_claims(key.file, buffers);
                     self.drop_array(ctx, buffers, nbuf);
                 }
-                ctx.metrics().set(keys::STORE_RESIDENT, self.store.resident_bytes() as f64);
             }
             for after in st.afters {
                 ctx.fire(after, Payload::empty());
@@ -238,21 +331,11 @@ impl Director {
         }
     }
 
-    /// Release every element of a buffer-chare array (teardown, cache
-    /// eviction, or file-close purge).
+    /// Release every element of a buffer-chare array (teardown, or a
+    /// park whose file closed underneath it).
     fn drop_array(&self, ctx: &mut Ctx<'_>, buffers: CollectionId, n: u32) {
         for b in 0..n {
             ctx.signal(ChareRef::new(buffers, b), EP_BUF_DROP);
-        }
-    }
-
-    /// Release arrays the span store evicted (budget) or purged (file
-    /// close), charging the eviction metrics.
-    fn release_evicted(&mut self, ctx: &mut Ctx<'_>, evicted: Vec<Evicted>) {
-        for e in evicted {
-            self.drop_array(ctx, e.buffers, e.nbuf);
-            ctx.metrics().count("ckio.buffer_cache_evictions", 1);
-            ctx.metrics().count(keys::STORE_EVICTED, e.resident_bytes);
         }
     }
 
@@ -266,6 +349,100 @@ impl Director {
                 SessionAnnounceMsg { session },
             );
         }
+    }
+
+    /// The session-shape key used for parked-array rebind matching.
+    fn buf_key(&self, ctx: &Ctx<'_>, opts: &Options, m: &StartSessionMsg) -> BufKey {
+        let topo = ctx.topo();
+        BufKey {
+            file: m.file,
+            offset: m.offset,
+            bytes: m.bytes,
+            readers: opts.resolve_readers(m.bytes, &topo),
+            splinter: opts.splinter_bytes.unwrap_or(0),
+            window: opts.read_window,
+        }
+    }
+
+    /// Start a session over a rebound parked array (the shard's take
+    /// probe found an exact shape match; claims stayed registered).
+    fn start_rebind(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        m: StartSessionMsg,
+        key: BufKey,
+        buffers: CollectionId,
+        nbuf: u32,
+    ) {
+        debug_assert_eq!(nbuf, key.readers);
+        let sid = SessionId(self.next_session);
+        self.next_session += 1;
+        let session = Session::new(sid, m.file, m.offset, m.bytes, buffers, nbuf);
+        self.sessions.insert(sid, SessionState {
+            session,
+            ready: m.ready,
+            buf_started: 0,
+            mgr_acks: 0,
+            fired: false,
+            reuse_key: Some(key),
+        });
+        for b in 0..nbuf {
+            ctx.send(ChareRef::new(buffers, b), EP_BUF_REBIND, sid);
+        }
+        self.announce(ctx, session);
+        ctx.metrics().count("ckio.buffer_reuse", 1);
+        ctx.advance(MICROS);
+    }
+
+    /// Start a session over a freshly created buffer-chare array. The
+    /// buffers register their claims and resolve peer sources with their
+    /// file's shard themselves (`EP_SHARD_REGISTER`) — the director only
+    /// hands them the shard's address. `opts` are the file's opening
+    /// options, resolved by the caller when the start was admitted (the
+    /// file may legitimately have fully closed since, if a rebind probe
+    /// was in flight — the session proceeds regardless, as it would have
+    /// under PR 2's synchronous start).
+    fn start_fresh(&mut self, ctx: &mut Ctx<'_>, m: StartSessionMsg, key: BufKey, opts: Options) {
+        let sid = SessionId(self.next_session);
+        self.next_session += 1;
+        let nreaders = key.readers;
+        let splinter = opts.splinter_bytes;
+        let window = opts.read_window;
+        let file = m.file;
+        let (offset, bytes) = (m.offset, m.bytes);
+        let me = ctx.me();
+        let assemblers = self.assemblers;
+        let shard = self.shard_ref(file);
+        let placement = opts.placement.to_placement(nreaders);
+        // The same span partition Session::buffer_span serves to
+        // assemblers — one definition, so chare spans, claims, and
+        // routing can never drift.
+        let spans: Vec<(u64, u64)> =
+            (0..nreaders).map(|b| buffer_span_of(offset, bytes, nreaders, b)).collect();
+        let governed = opts.max_inflight_reads.is_some() || opts.adaptive_admission;
+        let buffers = ctx.create_array_now(nreaders, &placement, |i| {
+            let (o, l) = spans[i as usize];
+            let mut b = BufferChare::new(sid, file, o, l, splinter, window, me, shard, assemblers);
+            if governed {
+                b = b.governed(bytes);
+            }
+            b
+        });
+        let session = Session::new(sid, file, offset, bytes, buffers, nreaders);
+        self.sessions.insert(sid, SessionState {
+            session,
+            ready: m.ready,
+            buf_started: 0,
+            mgr_acks: 0,
+            fired: false,
+            reuse_key: opts.reuse_buffers.then_some(key),
+        });
+        // Kick the greedy reads (via shard registration) and announce.
+        for b in 0..nreaders {
+            ctx.signal(ChareRef::new(buffers, b), EP_BUF_INIT);
+        }
+        self.announce(ctx, session);
+        ctx.advance(2 * MICROS);
     }
 
     // ------------------------------------------------------------------
@@ -282,24 +459,25 @@ impl Director {
         self.closes.len()
     }
 
+    /// Rebind probes still at their shard.
+    pub fn pending_takes(&self) -> usize {
+        self.pending_takes.len()
+    }
+
     /// Files currently open (refcounted).
     pub fn open_files(&self) -> usize {
         self.files.len()
     }
 
-    /// Parked buffer arrays available for reuse.
-    pub fn cached_buffer_arrays(&self) -> usize {
-        self.store.parked_count()
+    /// Shards the `FileId` hash currently routes over.
+    pub fn active_shards(&self) -> u32 {
+        self.active_shards
     }
 
-    /// The resident-data plane (inspection).
-    pub fn span_store(&self) -> &SpanStore {
-        &self.store
-    }
-
-    /// The admission governor (inspection).
-    pub fn admission(&self) -> &Governor {
-        &self.governor
+    /// The shard index owning `file`'s data-plane state (routing
+    /// stability tests).
+    pub fn shard_of_file(&self, file: FileId) -> u32 {
+        shard_of(file, self.active_shards)
     }
 }
 
@@ -325,12 +503,48 @@ impl Chare for Director {
                     ctx.metrics().count("ckio.reopens", 1);
                     return;
                 }
-                // First open: the file's Options configure the global
-                // store budget and governor (last writer wins).
-                if let Some(budget) = m.opts.store_budget_bytes {
-                    self.store.set_budget(budget);
+                // First open: the file's Options configure the data
+                // plane. The shard count is structural — it changes
+                // FileId→shard routing — so it is only applied while the
+                // data plane is fully quiescent (no open files, opens,
+                // sessions, teardowns, or rebind probes anywhere in
+                // flight; sessions can outlive their file's close, so
+                // the file table alone is not enough). The store budget
+                // is a global knob (any file can park on its shard), so
+                // its per-shard share is broadcast to every shard;
+                // governor knobs only matter where this file's traffic
+                // admits, so they go to the owning shard alone (last
+                // writer wins per shard, as PR 2's were globally).
+                if self.files.is_empty()
+                    && self.opens.is_empty()
+                    && self.sessions.is_empty()
+                    && self.closes.is_empty()
+                    && self.file_closes.is_empty()
+                    && self.pending_takes.is_empty()
+                {
+                    let want =
+                        m.opts.data_plane_shards.unwrap_or(self.nshards).clamp(1, self.nshards);
+                    if want != self.active_shards {
+                        self.active_shards = want;
+                        // Re-share the remembered budget over the new
+                        // shard count (stale epoch shares must not
+                        // survive a routing change).
+                        self.share_budget(ctx, m.opts.admission);
+                    }
                 }
-                self.governor.configure(m.opts.max_inflight_reads, m.opts.admission);
+                if let Some(b) = m.opts.store_budget_bytes {
+                    self.store_budget = Some(b);
+                    self.share_budget(ctx, m.opts.admission);
+                }
+                if m.opts.max_inflight_reads.is_some() || m.opts.adaptive_admission {
+                    let shard = self.shard_ref(m.file);
+                    ctx.send(shard, EP_SHARD_CONFIG, ShardConfigMsg {
+                        cap: m.opts.max_inflight_reads,
+                        policy: m.opts.admission,
+                        adaptive: m.opts.adaptive_admission,
+                        budget: None,
+                    });
+                }
                 self.opens.insert(m.file, OpenState {
                     size: m.size,
                     opts: m.opts,
@@ -393,120 +607,37 @@ impl Chare for Director {
                 };
                 let (size, opts) = (entry.size, entry.opts.clone());
                 assert!(m.offset + m.bytes <= size, "session beyond EOF");
-                let sid = SessionId(self.next_session);
-                self.next_session += 1;
-                let topo = ctx.topo();
-                let nreaders = opts.resolve_readers(m.bytes, &topo);
-                let splinter = opts.splinter_bytes;
-                let window = opts.read_window;
-                let file = m.file;
-                let (offset, bytes) = (m.offset, m.bytes);
-                let key = BufKey {
-                    file,
-                    offset,
-                    bytes,
-                    readers: nreaders,
-                    splinter: splinter.unwrap_or(0),
-                    window,
-                };
+                let key = self.buf_key(ctx, &opts, &m);
                 ctx.metrics().count("ckio.sessions", 1);
 
-                // Reuse path: an identically shaped parked array serves
-                // the new session from resident data — no greedy re-read.
+                // Reuse path: probe the file's shard for an identically
+                // shaped parked array (it owns the parked inventory);
+                // the start resumes at EP_DIR_TAKE_REPLY. The options
+                // travel with the probe so the resume never depends on
+                // the file table (a final close may race the reply).
                 if opts.reuse_buffers {
-                    if let Some((buffers, nbuf)) = self.store.take_exact(&key) {
-                        debug_assert_eq!(nbuf, nreaders);
-                        ctx.metrics().count(keys::STORE_HIT, bytes);
-                        ctx.metrics().set(keys::STORE_RESIDENT, self.store.resident_bytes() as f64);
-                        let session = Session::new(sid, file, offset, bytes, buffers, nreaders);
-                        self.sessions.insert(sid, SessionState {
-                            session,
-                            ready: m.ready,
-                            buf_started: 0,
-                            mgr_acks: 0,
-                            fired: false,
-                            reuse_key: Some(key),
-                        });
-                        for b in 0..nreaders {
-                            ctx.send(ChareRef::new(buffers, b), EP_BUF_REBIND, sid);
-                        }
-                        self.announce(ctx, session);
-                        ctx.metrics().count("ckio.buffer_reuse", 1);
-                        ctx.advance(MICROS);
-                        return;
-                    }
+                    let token = self.next_take;
+                    self.next_take += 1;
+                    let shard = self.shard_ref(m.file);
+                    ctx.send(shard, EP_SHARD_TAKE, TakeMsg { key: key.clone(), token });
+                    self.pending_takes.insert(token, PendingTake { msg: m, key, opts });
+                    ctx.advance(MICROS);
+                    return;
                 }
 
                 // Fresh path: create the per-session buffer chare array
                 // (dynamic creation, as CkIO does on session start).
-                let me = ctx.me();
-                let assemblers = self.assemblers;
-                let placement = opts.placement.to_placement(nreaders);
-                // The same span partition Session::buffer_span serves to
-                // assemblers — one definition, so chare spans, claims,
-                // and routing can never drift.
-                let spans: Vec<(u64, u64)> =
-                    (0..nreaders).map(|b| buffer_span_of(offset, bytes, nreaders, b)).collect();
-                // Span-store matching: point each splinter slot that an
-                // existing array (live or parked) fully covers at that
-                // peer instead of the PFS — prefetch dedup for same-file
-                // concurrent sessions, partial-overlap serving from
-                // parked arrays. The new session's own claims are not
-                // registered yet, so it can never match itself.
-                let splinter_v = splinter.unwrap_or(0);
-                let peer_lists: Vec<Vec<(u32, ChareRef)>> = spans
-                    .iter()
-                    .map(|&(o, l)| {
-                        slot_extents(o, l, splinter_v)
-                            .into_iter()
-                            .enumerate()
-                            .filter(|&(_, (_, slen))| slen > 0)
-                            .filter_map(|(i, (slo, slen))| {
-                                self.store
-                                    .find_cover(file, slo, slen)
-                                    .map(|owner| (i as u32, owner))
-                            })
-                            .collect()
-                    })
-                    .collect();
-                // Serving peers keeps a parked array hot: refresh its
-                // LRU standing (once per distinct array, not per slot)
-                // so the budget evicts cold arrays first.
-                let owners: std::collections::HashSet<CollectionId> =
-                    peer_lists.iter().flatten().map(|&(_, o)| o.collection).collect();
-                for owner in owners {
-                    self.store.touch(owner);
-                }
-                let governed = opts.max_inflight_reads.is_some();
-                let buffers = ctx.create_array_now(nreaders, &placement, |i| {
-                    let (o, l) = spans[i as usize];
-                    let mut b = BufferChare::new(sid, file, o, l, splinter, window, me, assemblers)
-                        .with_peers(peer_lists[i as usize].clone());
-                    if governed {
-                        b = b.governed(bytes);
+                self.start_fresh(ctx, m, key, opts);
+            }
+            EP_DIR_TAKE_REPLY => {
+                let r: TakeReplyMsg = msg.take();
+                let pt = self.pending_takes.remove(&r.token).expect("reply for unknown take");
+                match r.found {
+                    Some((buffers, nbuf)) => {
+                        self.start_rebind(ctx, pt.msg, pt.key, buffers, nbuf)
                     }
-                    b
-                });
-                // Register the new array's spans so later sessions (and
-                // the parked-array bookkeeping) can find them.
-                for (b, &(o, l)) in spans.iter().enumerate() {
-                    self.store.add_claim(file, o, l, ChareRef::new(buffers, b as u32));
+                    None => self.start_fresh(ctx, pt.msg, pt.key, pt.opts),
                 }
-                let session = Session::new(sid, file, offset, bytes, buffers, nreaders);
-                self.sessions.insert(sid, SessionState {
-                    session,
-                    ready: m.ready,
-                    buf_started: 0,
-                    mgr_acks: 0,
-                    fired: false,
-                    reuse_key: opts.reuse_buffers.then_some(key),
-                });
-                // Kick the greedy reads and announce to managers.
-                for b in 0..nreaders {
-                    ctx.signal(ChareRef::new(buffers, b), EP_BUF_INIT);
-                }
-                self.announce(ctx, session);
-                ctx.advance(2 * MICROS);
             }
             EP_DIR_BUF_STARTED => {
                 let m: BufStartedMsg = msg.take();
@@ -538,23 +669,23 @@ impl Chare for Director {
                 };
                 let nbuf = st.session.num_buffers;
                 let buffers = st.session.buffers;
-                let file = st.session.file;
                 let park = match st.reuse_key.clone() {
                     Some(key) => {
                         // Park: drain pending fetches but keep resident
                         // data (and span-store claims) for reuse. The
-                        // array is published into the store only once
-                        // this close fully acks (ack_close).
+                        // array is published into the shard's store only
+                        // once this close fully acks (ack_close).
                         for b in 0..nbuf {
                             ctx.signal(ChareRef::new(buffers, b), EP_BUF_PARK);
                         }
                         Some((key, buffers, nbuf))
                     }
                     None => {
-                        // Dropping: the array can no longer serve peers —
-                        // unregister its claims before the drop lands so
-                        // no new session is pointed at a dying source.
-                        self.store.drop_claims(file, buffers);
+                        // Dropping: each buffer retracts its own claim at
+                        // the shard as part of its drop (FIFO-ordered
+                        // after its registration), so a dying array stops
+                        // serving as a peer source without the director
+                        // racing the shard.
                         self.drop_array(ctx, buffers, nbuf);
                         None
                     }
@@ -582,22 +713,6 @@ impl Chare for Director {
                 let sid: SessionId = msg.take();
                 self.ack_close(ctx, sid, 0);
             }
-            EP_DIR_IO_REQ => {
-                let m: IoReqMsg = msg.take();
-                let granted = self.governor.request(m.buffer, m.want, m.sess_bytes);
-                if granted < m.want {
-                    ctx.metrics().count(keys::GOV_THROTTLED, (m.want - granted) as u64);
-                }
-                if granted > 0 {
-                    ctx.send(m.buffer, EP_BUF_GRANT, GrantMsg { n: granted });
-                }
-            }
-            EP_DIR_IO_DONE => {
-                let m: IoDoneMsg = msg.take();
-                for (buffer, n) in self.governor.complete(m.n) {
-                    ctx.send(buffer, EP_BUF_GRANT, GrantMsg { n });
-                }
-            }
             EP_DIR_CLOSE_FILE => {
                 let m: CloseFileMsg = msg.take();
                 let entry = self.files.get_mut(&m.file).expect("closing unopened file");
@@ -610,11 +725,10 @@ impl Chare for Director {
                 }
                 self.files.remove(&m.file);
                 // Parked buffer arrays of a closed file can never be
-                // rebound or peer-fetched again: release them (with
-                // their claims).
-                let purged = self.store.purge_file(m.file);
-                self.release_evicted(ctx, purged);
-                ctx.metrics().set(keys::STORE_RESIDENT, self.store.resident_bytes() as f64);
+                // rebound or peer-fetched again: the owning shard
+                // releases them (with their claims).
+                let shard = self.shard_ref(m.file);
+                ctx.send(shard, EP_SHARD_PURGE, m.file);
                 for pe in 0..self.npes {
                     ctx.send_group(self.managers, crate::amt::topology::Pe(pe), EP_M_FILE_CLOSE, m.file);
                 }

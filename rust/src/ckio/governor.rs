@@ -1,24 +1,27 @@
-//! Admission governor: global PFS read-admission control (PR 2).
+//! Admission governor: PFS read-admission control (PR 2, sharded and
+//! made adaptive in PR 3).
 //!
-//! The director owns one [`Governor`] — the only component with the
-//! global view of every session's prefetch pressure. When a file is
-//! opened with [`crate::ckio::Options::max_inflight_reads`] set, its
-//! sessions' buffer chares stop issuing PFS reads directly: they request
-//! *tickets* from the governor (`EP_DIR_IO_REQ`), issue exactly the
-//! granted count, and return each ticket on read completion
-//! (`EP_DIR_IO_DONE`). The governor caps the aggregate number of PFS
-//! reads in flight across all sessions *of governed files*, so K
-//! concurrent sessions can no longer oversubscribe the OSTs — excess
-//! demand queues here, in one place, instead of interleaving at the
-//! disks (the Fig. 1 collapse).
+//! Since PR 3 each data-plane shard ([`super::shard::DataShard`]) owns
+//! one [`Governor`] covering the files that hash to it. When a file is
+//! opened with [`crate::ckio::Options::max_inflight_reads`] set (or with
+//! [`crate::ckio::Options::adaptive_admission`]), its sessions' buffer
+//! chares stop issuing PFS reads directly: they request *tickets* from
+//! their file's shard (`EP_SHARD_IO_REQ`), issue exactly the granted
+//! count, and return each ticket on read completion
+//! (`EP_SHARD_IO_DONE`, carrying the observed service time). The
+//! governor caps the number of PFS reads in flight across all sessions
+//! *of its shard's governed files*, so K concurrent sessions can no
+//! longer oversubscribe the OSTs — excess demand queues here instead of
+//! interleaving at the disks (the Fig. 1 collapse). Same-file sessions
+//! always share one shard, hence one cap; files on different shards
+//! admit independently (aggregate worst case `cap × active shards`).
 //!
 //! Scope: admission control is opt-in per file at *first* open. Sessions
-//! of files opened without `max_inflight_reads` bypass the governor and
-//! issue reads directly (the PR 1 path) — a deployment that wants a true
-//! cluster-wide cap sets the cap on every file it opens. Like shared
-//! POSIX descriptor flags, a refcounted re-open of an already-open file
-//! does not reconfigure the governor; the first opener's options hold
-//! until the file is fully closed.
+//! of files opened without a cap (and without `adaptive_admission`)
+//! bypass the governor and issue reads directly (the PR 1 path). Like
+//! shared POSIX descriptor flags, a refcounted re-open of an already-open
+//! file does not reconfigure the governor; the first opener's options
+//! hold until the file is fully closed.
 //!
 //! Queued demand is released according to an [`AdmissionPolicy`]:
 //!
@@ -27,9 +30,26 @@
 //!   bytes drain first (minimizes mean session latency, the classic
 //!   shortest-job-first trade).
 //!
-//! Like the span store, the governor is a pure data structure: the
-//! director translates grants into `EP_BUF_GRANT` sends and charges
-//! `ckio.governor.throttled` for every deferred read.
+//! # Feedback control (PR 3)
+//!
+//! With `adaptive_admission` and no static cap, the cap is *derived*
+//! from the service times buffers observe on their completed reads
+//! (issue → completion, which tracks the PFS model's OST busy time plus
+//! queueing). Classic AIMD over windows of [`Governor::ADAPT_WINDOW`]
+//! completions:
+//!
+//! * while the window's p50 stays within [`Governor::INFLATE_TOLERANCE`]
+//!   of the best p50 seen, the OSTs are keeping up — **additive
+//!   increase** (`cap += 1`),
+//! * when the p50 inflates past it, admitted reads are queueing at the
+//!   disks — **multiplicative decrease** (`cap /= 2`, floor 1). The
+//!   remembered best is relaxed slightly on each decrease so a
+//!   permanently slower PFS (or a stale floor) cannot pin the cap at 1.
+//!
+//! Like the span store, the governor is a pure data structure: the shard
+//! translates grants into `EP_BUF_GRANT` sends, charges
+//! `ckio.governor.throttled` for every deferred read, and publishes the
+//! adapted cap on the `ckio.governor.cap` gauge.
 
 use std::collections::VecDeque;
 
@@ -55,31 +75,78 @@ struct Pending {
     seq: u64,
 }
 
-/// Global PFS read-admission state (owned by the director).
-#[derive(Debug, Default)]
+/// Per-shard PFS read-admission state (owned by a data-plane shard).
+#[derive(Debug)]
 pub struct Governor {
-    /// Aggregate in-flight cap; `None` = ungoverned (buffers never ask).
+    /// In-flight cap; `None` = ungoverned (buffers never ask).
     cap: Option<u32>,
     policy: AdmissionPolicy,
+    /// Whether the cap is AIMD-derived rather than configured.
+    adaptive: bool,
     inflight: u32,
     queue: VecDeque<Pending>,
     seq: u64,
     /// Reads deferred because the cap was reached (monotonic).
     pub throttled: u64,
+    /// Service times (ns) of the current adaptation window.
+    window: Vec<u64>,
+    /// Best (lowest) window p50 observed so far; the AIMD baseline.
+    best_p50: f64,
+}
+
+impl Default for Governor {
+    fn default() -> Governor {
+        Governor {
+            cap: None,
+            policy: AdmissionPolicy::default(),
+            adaptive: false,
+            inflight: 0,
+            queue: VecDeque::new(),
+            seq: 0,
+            throttled: 0,
+            window: Vec::new(),
+            best_p50: f64::MAX,
+        }
+    }
 }
 
 impl Governor {
+    /// Starting cap when the governor derives it adaptively.
+    pub const ADAPTIVE_INITIAL_CAP: u32 = 2;
+    /// Adaptive caps never grow past this (one per plausible OST queue
+    /// slot; far above the modeled saturation point).
+    pub const ADAPTIVE_MAX_CAP: u32 = 256;
+    /// Completions per adaptation decision.
+    pub const ADAPT_WINDOW: usize = 8;
+    /// p50 inflation (vs the best observed) tolerated before the cap is
+    /// cut: 1.25 = "service got a quarter slower, the OSTs are queueing".
+    pub const INFLATE_TOLERANCE: f64 = 1.25;
+
     pub fn new() -> Governor {
         Governor::default()
     }
 
-    /// (Re)configure from a file's opening `Options` (global knob, last
-    /// writer wins — a cap of 0 is clamped to 1 so demand always
-    /// drains). Opens that do not ask for admission control
-    /// (`cap: None`) leave the governor untouched.
-    pub fn configure(&mut self, cap: Option<u32>, policy: AdmissionPolicy) {
+    /// (Re)configure from a file's opening `Options` (per-shard knob,
+    /// last writer wins — a static cap of 0 is clamped to 1 so demand
+    /// always drains). A static cap wins over adaptive mode; opens that
+    /// ask for neither leave the governor untouched. Re-asking for
+    /// adaptive mode while it is already running keeps the learned cap
+    /// (re-opens must not reset the feedback loop), but *entering*
+    /// adaptive mode — fresh or after a static interlude — starts a
+    /// clean epoch: a stale sample window or a previous epoch's best-p50
+    /// baseline must not drive the first decision of the new one.
+    pub fn configure(&mut self, cap: Option<u32>, policy: AdmissionPolicy, adaptive: bool) {
         if let Some(c) = cap {
             self.cap = Some(c.max(1));
+            self.policy = policy;
+            self.adaptive = false;
+        } else if adaptive {
+            if !self.adaptive {
+                self.cap = Some(Self::ADAPTIVE_INITIAL_CAP);
+                self.adaptive = true;
+                self.window.clear();
+                self.best_p50 = f64::MAX;
+            }
             self.policy = policy;
         }
     }
@@ -87,6 +154,16 @@ impl Governor {
     /// Whether admission control is active at all.
     pub fn governed(&self) -> bool {
         self.cap.is_some()
+    }
+
+    /// The current cap (static or adapted); `None` = ungoverned.
+    pub fn cap(&self) -> Option<u32> {
+        self.cap
+    }
+
+    /// Whether the cap is AIMD-derived.
+    pub fn is_adaptive(&self) -> bool {
+        self.adaptive
     }
 
     /// Reads currently admitted and not yet completed.
@@ -128,11 +205,24 @@ impl Governor {
     }
 
     /// Return `n` tickets (reads completed, or granted to an
-    /// already-dropped buffer). Returns the grants this frees up:
-    /// `(buffer, count)` pairs the director must deliver.
-    pub fn complete(&mut self, n: u32) -> Vec<(ChareRef, u32)> {
-        let Some(cap) = self.cap else { return Vec::new() };
+    /// already-dropped buffer), reporting the observed service time of
+    /// the completed read (`service_ns == 0` for returns that completed
+    /// no read — those carry no signal and never adapt the cap). Returns
+    /// the grants this frees up: `(buffer, count)` pairs the shard must
+    /// deliver. The caller can watch [`Governor::cap`] across calls to
+    /// observe adaptation.
+    pub fn complete(&mut self, n: u32, service_ns: u64) -> Vec<(ChareRef, u32)> {
+        if self.cap.is_none() {
+            return Vec::new();
+        }
         self.inflight = self.inflight.saturating_sub(n);
+        if self.adaptive && service_ns > 0 {
+            self.window.push(service_ns);
+            if self.window.len() >= Self::ADAPT_WINDOW {
+                self.adapt();
+            }
+        }
+        let cap = self.cap.unwrap();
         let mut grants = Vec::new();
         while self.inflight < cap {
             let Some(front) = self.queue.front_mut() else { break };
@@ -146,6 +236,23 @@ impl Governor {
             grants.push((owner, g));
         }
         grants
+    }
+
+    /// One AIMD decision over the filled window.
+    fn adapt(&mut self) {
+        self.window.sort_unstable();
+        let p50 = self.window[self.window.len() / 2] as f64;
+        self.window.clear();
+        let cap = self.cap.unwrap_or(Self::ADAPTIVE_INITIAL_CAP);
+        if p50 <= self.best_p50 * Self::INFLATE_TOLERANCE {
+            self.cap = Some((cap + 1).min(Self::ADAPTIVE_MAX_CAP));
+            self.best_p50 = self.best_p50.min(p50);
+        } else {
+            self.cap = Some((cap / 2).max(1));
+            // Relax the remembered floor so a PFS that is now genuinely
+            // slower (not just momentarily congested) can grow again.
+            self.best_p50 *= Self::INFLATE_TOLERANCE;
+        }
     }
 }
 
@@ -164,23 +271,23 @@ mod tests {
         assert!(!g.governed());
         assert_eq!(g.request(buf(0), 5, 100), 5);
         assert_eq!(g.inflight(), 0, "no accounting without a cap");
-        assert!(g.complete(5).is_empty());
+        assert!(g.complete(5, 0).is_empty());
     }
 
     #[test]
     fn cap_defers_and_completion_drains_fifo() {
         let mut g = Governor::new();
-        g.configure(Some(2), AdmissionPolicy::Fifo);
+        g.configure(Some(2), AdmissionPolicy::Fifo, false);
         assert_eq!(g.request(buf(0), 2, 100), 2);
         assert_eq!(g.request(buf(1), 2, 100), 0); // full: all deferred
         assert_eq!(g.throttled, 2);
         assert_eq!(g.inflight(), 2);
         // One completion frees one ticket for the queue head.
-        assert_eq!(g.complete(1), vec![(buf(1), 1)]);
+        assert_eq!(g.complete(1, 0), vec![(buf(1), 1)]);
         assert_eq!(g.inflight(), 2);
         // The head still wants 1 more; next completion serves it.
-        assert_eq!(g.complete(1), vec![(buf(1), 1)]);
-        assert!(g.complete(2).is_empty());
+        assert_eq!(g.complete(1, 0), vec![(buf(1), 1)]);
+        assert!(g.complete(2, 0).is_empty());
         assert_eq!(g.inflight(), 0);
         assert_eq!(g.queued(), 0);
     }
@@ -188,29 +295,115 @@ mod tests {
     #[test]
     fn partial_grant_queues_the_remainder() {
         let mut g = Governor::new();
-        g.configure(Some(3), AdmissionPolicy::Fifo);
+        g.configure(Some(3), AdmissionPolicy::Fifo, false);
         assert_eq!(g.request(buf(0), 5, 100), 3);
         assert_eq!(g.throttled, 2);
-        assert_eq!(g.complete(3), vec![(buf(0), 2)]);
+        assert_eq!(g.complete(3, 0), vec![(buf(0), 2)]);
     }
 
     #[test]
     fn smallest_first_reorders_by_session_bytes() {
         let mut g = Governor::new();
-        g.configure(Some(1), AdmissionPolicy::SmallestFirst);
+        g.configure(Some(1), AdmissionPolicy::SmallestFirst, false);
         assert_eq!(g.request(buf(0), 1, 1000), 1);
         assert_eq!(g.request(buf(1), 1, 500), 0); // big-ish
         assert_eq!(g.request(buf(2), 1, 10), 0); // small: jumps the queue
         assert_eq!(g.request(buf(3), 1, 10), 0); // ties keep arrival order
-        assert_eq!(g.complete(1), vec![(buf(2), 1)]);
-        assert_eq!(g.complete(1), vec![(buf(3), 1)]);
-        assert_eq!(g.complete(1), vec![(buf(1), 1)]);
+        assert_eq!(g.complete(1, 0), vec![(buf(2), 1)]);
+        assert_eq!(g.complete(1, 0), vec![(buf(3), 1)]);
+        assert_eq!(g.complete(1, 0), vec![(buf(1), 1)]);
     }
 
     #[test]
     fn zero_cap_is_clamped_so_demand_drains() {
         let mut g = Governor::new();
-        g.configure(Some(0), AdmissionPolicy::Fifo);
+        g.configure(Some(0), AdmissionPolicy::Fifo, false);
         assert_eq!(g.request(buf(0), 1, 10), 1);
+    }
+
+    #[test]
+    fn static_cap_wins_over_adaptive_and_adaptive_keeps_learning() {
+        let mut g = Governor::new();
+        g.configure(None, AdmissionPolicy::Fifo, true);
+        assert!(g.is_adaptive());
+        assert_eq!(g.cap(), Some(Governor::ADAPTIVE_INITIAL_CAP));
+        // Grow the cap one window, then re-open adaptively: learned cap
+        // survives (re-opens must not reset the loop).
+        for _ in 0..Governor::ADAPT_WINDOW {
+            g.complete(0, 1000);
+        }
+        let learned = g.cap().unwrap();
+        assert_eq!(learned, Governor::ADAPTIVE_INITIAL_CAP + 1);
+        g.configure(None, AdmissionPolicy::Fifo, true);
+        assert_eq!(g.cap(), Some(learned));
+        // A static cap overrides adaptation entirely.
+        g.configure(Some(4), AdmissionPolicy::Fifo, true);
+        assert!(!g.is_adaptive());
+        assert_eq!(g.cap(), Some(4));
+        // Re-entering adaptive after the static interlude is a fresh
+        // epoch: initial cap, no inherited window or best-p50 baseline —
+        // a much slower service must not be judged against the old one.
+        for _ in 0..Governor::ADAPT_WINDOW - 1 {
+            g.complete(0, 1_000); // partial window under the static cap: ignored
+        }
+        g.configure(None, AdmissionPolicy::Fifo, true);
+        assert!(g.is_adaptive());
+        assert_eq!(g.cap(), Some(Governor::ADAPTIVE_INITIAL_CAP));
+        for _ in 0..Governor::ADAPT_WINDOW {
+            g.complete(0, 50_000_000); // 50ms service, flat within the new epoch
+        }
+        assert_eq!(
+            g.cap(),
+            Some(Governor::ADAPTIVE_INITIAL_CAP + 1),
+            "a clean epoch grows on its own flat baseline instead of halving \
+             against the previous epoch's"
+        );
+    }
+
+    #[test]
+    fn aimd_grows_while_flat_and_halves_on_inflation() {
+        let mut g = Governor::new();
+        g.configure(None, AdmissionPolicy::Fifo, true);
+        // Three flat windows: additive increase each time.
+        for _ in 0..3 * Governor::ADAPT_WINDOW {
+            g.complete(0, 1_000_000);
+        }
+        assert_eq!(g.cap(), Some(Governor::ADAPTIVE_INITIAL_CAP + 3));
+        // An inflated window (4x the baseline p50): multiplicative cut.
+        for _ in 0..Governor::ADAPT_WINDOW {
+            g.complete(0, 4_000_000);
+        }
+        assert_eq!(g.cap(), Some((Governor::ADAPTIVE_INITIAL_CAP + 3) / 2));
+        // Zero service times (ticket returns without a read) carry no
+        // signal: the window must not fill from them.
+        for _ in 0..10 * Governor::ADAPT_WINDOW {
+            g.complete(0, 0);
+        }
+        assert_eq!(g.cap(), Some((Governor::ADAPTIVE_INITIAL_CAP + 3) / 2));
+    }
+
+    #[test]
+    fn adaptive_cap_never_drops_below_one() {
+        let mut g = Governor::new();
+        g.configure(None, AdmissionPolicy::Fifo, true);
+        // Establish a fast baseline, then inflate forever.
+        for _ in 0..Governor::ADAPT_WINDOW {
+            g.complete(0, 1_000);
+        }
+        for _ in 0..20 * Governor::ADAPT_WINDOW {
+            g.complete(0, 1_000_000_000);
+        }
+        assert_eq!(g.cap(), Some(1), "floor must hold so demand drains");
+        // The relaxed baseline eventually accepts the new normal and the
+        // cap can grow again.
+        let mut grew = false;
+        for _ in 0..64 * Governor::ADAPT_WINDOW {
+            g.complete(0, 1_000_000_000);
+            if g.cap().unwrap() > 1 {
+                grew = true;
+                break;
+            }
+        }
+        assert!(grew, "a permanently slower PFS must not pin the cap at 1");
     }
 }

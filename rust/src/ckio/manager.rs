@@ -14,11 +14,13 @@
 //! entry was dropped) is answered immediately with a modeled NACK chunk
 //! instead of being stranded in the early-read queue forever.
 //!
-//! Managers are deliberately unaware of the PR 2 resident-data plane:
-//! where a buffer chare got its bytes (PFS read, peer fetch, or a parked
-//! array) is invisible to the read path — a read routes to the session's
-//! buffer chares exactly as before, which is what lets the span store
-//! and admission governor evolve without touching the client ABI.
+//! Managers are deliberately unaware of the PR 2 resident-data plane
+//! *and* of its PR 3 sharding: where a buffer chare got its bytes (PFS
+//! read, peer fetch, or a parked array) and which data-plane shard
+//! coordinated that is invisible to the read path — a read routes to the
+//! session's buffer chares exactly as before, which is what lets the
+//! span store, the admission governor, and now the shard map evolve
+//! without touching the client ABI.
 
 use std::collections::HashMap;
 

@@ -10,7 +10,12 @@
 //! Components, mirroring the paper's architecture (§III-C, Fig. 5):
 //!
 //! * [`director`] — singleton coordinating opens, session lifecycle and
-//!   global sequencing; owns the span store and the admission governor,
+//!   teardown sequencing (since PR 3 a *thin* coordinator: the data
+//!   plane lives on the shards),
+//! * [`shard`] — the data-plane shard array (PR 3): each element owns
+//!   the span store and admission governor for the `FileId`s that hash
+//!   to it, so hot-path coordination scales with the shard count
+//!   instead of serializing on the director,
 //! * [`manager`] — a chare group (one per PE): the local API entry point;
 //!   keeps the session table and assigns zero-copy tags,
 //! * [`assembler`] — the ReadAssembler group: gathers the pieces of each
@@ -24,49 +29,63 @@
 //!   which bytes of which file live in which array, byte-budgeted LRU
 //!   over parked arrays, claim matching for partial-overlap serving and
 //!   same-file prefetch dedup,
-//! * [`governor`] — the admission governor (PR 2): the global cap on PFS
-//!   reads in flight, sequencing K sessions' prefetch so they stop
-//!   oversubscribing the OSTs,
+//! * [`governor`] — the admission governor (PR 2): the per-shard cap on
+//!   PFS reads in flight, sequencing sessions' prefetch so they stop
+//!   oversubscribing the OSTs; since PR 3 the cap can also be *derived*
+//!   adaptively from observed service times (AIMD),
 //! * [`api`] — the user-facing `open / startReadSession / read /
 //!   closeReadSession / close` calls (asynchronous-callback-centric,
 //!   §III-D),
 //! * [`options`] — reader count/placement/splintering/reuse knobs
-//!   (§III-C.4, §VI.A–C) plus the store budget and governor cap (PR 2),
+//!   (§III-C.4, §VI.A–C) plus the store budget, governor cap/feedback,
+//!   and data-plane shard count,
 //! * [`session`] — session, tag and read-descriptor types.
 //!
-//! # The resident-data plane (PR 2)
+//! # The resident-data plane (PR 2, sharded by `FileId` in PR 3)
 //!
 //! The paper's core claim — separating consumers from readers lets the
 //! I/O layer be tuned globally — is realized here beyond a single
-//! session. The director tracks every buffer chare's byte-span as a
-//! *claim* in the [`store::SpanStore`], across live sessions and parked
-//! (reused) arrays alike:
+//! session. Every buffer chare's byte-span is tracked as a *claim* in a
+//! [`store::SpanStore`], across live sessions and parked (reused) arrays
+//! alike. Since PR 3 that store (and the admission governor) is
+//! partitioned over the [`shard::DataShard`] array by `FileId` hash —
+//! a file's whole data-plane state lives on exactly one shard, so
+//! same-file cooperation never crosses shards while distinct files
+//! scale out:
 //!
-//! * **Same-file prefetch dedup.** When a session starts over bytes an
-//!   existing array already claims, its buffer chares *peer-fetch* the
-//!   covered splinter slots (`EP_BUF_PEER_FETCH`) instead of issuing PFS
-//!   reads. If the owner's greedy read is still in flight, the peer
-//!   fetch queues and is served on arrival — K concurrent sessions over
-//!   one file pull its bytes across the PFS wire approximately once
-//!   (the `svc_shared` experiment measures this).
+//! * **Same-file prefetch dedup.** A starting buffer chare registers its
+//!   span with its file's shard; when an existing array already claims
+//!   some of its splinter slots, the shard's reply points those slots at
+//!   the claim owners and the chare *peer-fetches* them
+//!   (`EP_BUF_PEER_FETCH`) instead of issuing PFS reads. If the owner's
+//!   greedy read is still in flight, the peer fetch queues and is served
+//!   on arrival — K concurrent sessions over one file pull its bytes
+//!   across the PFS wire approximately once (the `svc_shared` experiment
+//!   measures this).
 //! * **Partial overlap.** Matching is per splinter slot, so a parked
 //!   array covering only part of a new session splits the serve:
 //!   resident slots come from the store, the rest from the PFS. A
 //!   dropped peer answers with a *miss* and the requester falls back to
 //!   its own PFS read — correctness never depends on the cache.
 //! * **Byte-budgeted LRU.** Parked arrays are kept under
-//!   [`Options::store_budget_bytes`] with LRU eviction (default: the
-//!   PR 1 count cap of 8 arrays).
-//! * **Admission control.** With [`Options::max_inflight_reads`], buffer
-//!   chares route PFS issuance through the director's
-//!   [`governor::Governor`]: the *aggregate* number of reads in flight
-//!   is capped across all sessions of governed files (files opened
-//!   without a cap bypass the governor), and queued demand drains by
-//!   [`governor::AdmissionPolicy`] (FIFO or smallest-session-first).
+//!   [`Options::store_budget_bytes`] — split evenly across the active
+//!   shards — with LRU eviction (default: the PR 1 count cap of 8
+//!   arrays per shard).
+//! * **Admission control.** With [`Options::max_inflight_reads`] (or the
+//!   PR 3 [`Options::adaptive_admission`] feedback mode, which derives
+//!   the cap from observed service times by AIMD), buffer chares route
+//!   PFS issuance through their shard's [`governor::Governor`]: reads in
+//!   flight are capped per shard across all sessions of governed files
+//!   (files opened without either knob bypass the governor), and queued
+//!   demand drains by [`governor::AdmissionPolicy`] (FIFO or
+//!   smallest-session-first).
 //!
 //! Store traffic is observable via `ckio.store.hit_bytes` /
 //! `miss_bytes` / `evicted_bytes`, the `ckio.store.resident_bytes`
-//! gauge, and `ckio.governor.throttled` (all in `ckio bench-json`).
+//! gauge (summed across shards), `ckio.governor.throttled`, the
+//! `ckio.governor.cap` gauge, and the per-shard message-count imbalance
+//! pair `ckio.shard.msgs_max` / `ckio.shard.msgs_mean` (all in
+//! `ckio bench-json`).
 //!
 //! # Concurrency semantics (PR 1)
 //!
@@ -111,10 +130,12 @@ pub mod governor;
 pub mod manager;
 pub mod options;
 pub mod session;
+pub mod shard;
 pub mod store;
 
 pub use api::CkIo;
 pub use governor::AdmissionPolicy;
 pub use options::{Options, ReaderPlacement};
 pub use session::{FileHandle, ReadResult, Session, SessionId, Tag};
+pub use shard::DataShard;
 pub use store::SpanStore;

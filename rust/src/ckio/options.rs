@@ -73,16 +73,41 @@ pub struct Options {
     /// global: the opening `Options` of each file (re)configure it, last
     /// writer wins.
     pub store_budget_bytes: Option<u64>,
-    /// Admission governor (PR 2): cap on the *aggregate* number of PFS
-    /// reads in flight across all sessions of governed files. `None` =
-    /// this file's sessions are ungoverned (buffer chares issue reads
-    /// directly, the PR 1 behavior) — for a true cluster-wide cap, set
-    /// this on every file you open. The cap value itself is a global
-    /// knob configured at *first* open of a file (last writer wins;
+    /// Admission governor (PR 2): cap on the number of PFS reads in
+    /// flight across all sessions of governed files. `None` = this
+    /// file's sessions are ungoverned (buffer chares issue reads
+    /// directly, the PR 1 behavior) — unless [`Options::adaptive_admission`]
+    /// turns on the derived cap. The cap value itself is a global knob
+    /// configured at *first* open of a file (last writer wins;
     /// refcounted re-opens do not reconfigure).
+    ///
+    /// Since PR 3 the cap is enforced **per data-plane shard**: sessions
+    /// of files that hash to the same shard share one cap (so same-file
+    /// sessions are sequenced exactly as before), while files on
+    /// different shards admit independently — the aggregate worst case
+    /// is `cap × active shards`. For the PR 2 cluster-wide semantics,
+    /// set [`Options::data_plane_shards`] to `Some(1)`.
     pub max_inflight_reads: Option<u32>,
     /// Order in which the governor admits queued prefetch demand.
     pub admission: AdmissionPolicy,
+    /// Governor feedback control (PR 3): when `max_inflight_reads` is
+    /// `None`, govern this file's sessions anyway and *derive* the
+    /// per-shard cap from observed read service times (AIMD: the cap
+    /// grows by one while the p50 service time of a completion window
+    /// stays flat, and halves when it inflates — i.e. when the OSTs
+    /// start queueing). Ignored when a static cap is set. The
+    /// `ckio.governor.cap` gauge tracks the adapted value.
+    pub adaptive_admission: bool,
+    /// Number of data-plane shards the director's `FileId` hash routes
+    /// over (PR 3). `None` = one shard per PE (the full array booted by
+    /// [`super::CkIo::boot`]); `Some(n)` clamps the hash to the first
+    /// `n` shards. Structural knob: applied only when the data plane is
+    /// fully quiescent (no open files, opens, sessions, teardowns, or
+    /// rebind probes in flight), so FileId→shard routing is stable for
+    /// the whole life of every piece of data-plane state. `Some(1)`
+    /// funnels everything through one shard — bit-for-bit the PR 2
+    /// single-plane semantics (global store budget, global cap).
+    pub data_plane_shards: Option<u32>,
 }
 
 impl Default for Options {
@@ -96,6 +121,8 @@ impl Default for Options {
             store_budget_bytes: None,
             max_inflight_reads: None,
             admission: AdmissionPolicy::default(),
+            adaptive_admission: false,
+            data_plane_shards: None,
         }
     }
 }

@@ -104,8 +104,10 @@ impl Session {
     /// Trailing buffers of a session whose byte count is not divisible by
     /// the buffer count may own zero bytes; their span is clamped to the
     /// session end so spans always partition `[offset, end)` exactly.
-    /// The director registers exactly these spans as span-store claims
-    /// (PR 2), so assembler routing and peer-fetch sourcing agree.
+    /// Exactly these spans are registered as span-store claims at the
+    /// file's data-plane shard (PR 2, sharded in PR 3 — each buffer
+    /// registers its own), so assembler routing and peer-fetch sourcing
+    /// agree.
     pub fn buffer_span(&self, b: u32) -> (u64, u64) {
         assert!(b < self.num_buffers);
         buffer_span_of(self.offset, self.bytes, self.num_buffers, b)

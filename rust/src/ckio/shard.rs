@@ -1,0 +1,380 @@
+//! Data-plane shards (PR 3): the director's span store and admission
+//! governor, sharded by `FileId`.
+//!
+//! PR 2 gave CkIO a shared resident-data plane, but parked *all* of it
+//! on the director singleton: every claim registration, peer-fetch
+//! lookup, LRU touch, and admission ticket funneled through one mailbox
+//! on one PE — the exact serialization bottleneck the over-decomposition
+//! model exists to avoid. PR 3 splits that state across a chare array of
+//! [`DataShard`]s, one per PE (of which the first
+//! [`crate::ckio::Options::data_plane_shards`] are *active*), each owning
+//! the [`SpanStore`] claims/parked arrays and the [`Governor`] for the
+//! files that hash to it ([`shard_of`]).
+//!
+//! Routing invariant: **a file's entire data-plane state lives on
+//! exactly one shard**. Same-file cooperation (prefetch dedup, admission
+//! sequencing, parked-array rebind) therefore never crosses shards,
+//! while sessions over distinct files talk to distinct shards and scale
+//! with the shard count instead of queueing on one coordinator. `FileId`s
+//! are dense indices assigned sequentially by the PFS, so the hash is a
+//! plain modulo: perfectly balanced for the common sequential id
+//! pattern, and trivially stable across close/re-open (the active-shard
+//! count only changes while the data plane is idle — see
+//! [`crate::ckio::Options::data_plane_shards`]).
+//!
+//! Message flow (all *hot-path* traffic is buffer↔shard; the director
+//! keeps only session/file lifecycle):
+//!
+//! * `EP_SHARD_REGISTER` — a freshly initialized buffer chare announces
+//!   its span. The shard resolves the buffer's splinter slots against
+//!   existing claims (*before* registering the newcomer's own claim, so
+//!   a buffer can never match itself and peer edges always point at
+//!   earlier-registered arrays — the acyclicity argument of PR 2,
+//!   enforced by the shard's atomic task), refreshes the LRU standing of
+//!   matched parked arrays, registers the claim, and answers
+//!   `EP_BUF_PEERS`.
+//! * `EP_SHARD_UNCLAIM` — a dropping buffer retracts its claim. Sent by
+//!   the buffer itself so it is FIFO-ordered after that buffer's own
+//!   registration; a racing claim match at worst points a new session at
+//!   a dying buffer, which answers with a peer *miss* and the requester
+//!   falls back to the PFS (correctness never depends on the cache).
+//! * `EP_SHARD_IO_REQ` / `EP_SHARD_IO_DONE` — the admission-governor
+//!   ticket protocol (PR 2's `EP_DIR_IO_REQ`/`EP_DIR_IO_DONE`, re-homed).
+//!   Completions carry the observed service time, which feeds the AIMD
+//!   feedback loop when the cap is adaptive; grants go straight back to
+//!   the requesting buffer (`EP_BUF_GRANT`).
+//! * `EP_SHARD_TAKE` / `EP_SHARD_PARK` / `EP_SHARD_PURGE` — the parked
+//!   array lifecycle, driven by the director (rebind probe at session
+//!   start, publish after a parking close fully acks, purge at final
+//!   file close). Evictions are translated into `EP_BUF_DROP` sends
+//!   here, shard-locally.
+//!
+//! Observability: the shard maintains the `ckio.store.resident_bytes`
+//! gauge as an *add-delta* (each shard contributes the change in its own
+//! residency, so the gauge is the sum over shards — with one shard this
+//! is exactly the PR 2 value; with many, PR 2's `set()` would have
+//! silently reported only the last-writing shard). `ckio.store.*` and
+//! `ckio.governor.throttled` counters land in the engine-global sink and
+//! sum across shards by construction. Each shard also counts the
+//! data-plane messages it processed ([`DataShard::msgs_processed`]);
+//! the harness turns those into the `ckio.shard.msgs_max`/`_mean`
+//! imbalance pair.
+
+use std::collections::HashSet;
+
+use crate::amt::chare::{Chare, ChareRef, CollectionId};
+use crate::amt::engine::Ctx;
+use crate::amt::msg::{Ep, Msg};
+use crate::amt::time::MICROS;
+use crate::impl_chare_any;
+use crate::metrics::keys;
+use crate::pfs::layout::FileId;
+
+use super::buffer::{
+    GrantMsg, IoDoneMsg, IoReqMsg, PeersMsg, EP_BUF_DROP, EP_BUF_GRANT, EP_BUF_PEERS,
+};
+use super::director::{TakeReplyMsg, EP_DIR_TAKE_REPLY};
+use super::governor::{AdmissionPolicy, Governor};
+use super::store::{slot_extents, BufKey, Evicted, SpanStore};
+
+/// Buffer chare: register a span claim and resolve peer sources.
+pub const EP_SHARD_REGISTER: Ep = 1;
+/// Buffer chare: retract a claim (the buffer dropped its data).
+pub const EP_SHARD_UNCLAIM: Ep = 2;
+/// Director: probe for an exactly matching parked array (reuse rebind).
+pub const EP_SHARD_TAKE: Ep = 3;
+/// Director: publish a fully parked array into the store.
+pub const EP_SHARD_PARK: Ep = 4;
+/// Director: a file finally closed — release its claims/parked arrays.
+pub const EP_SHARD_PURGE: Ep = 5;
+/// Director: apply a file's opening store/governor configuration.
+pub const EP_SHARD_CONFIG: Ep = 6;
+/// Buffer chare: request PFS read tickets from the admission governor.
+pub const EP_SHARD_IO_REQ: Ep = 7;
+/// Buffer chare: return PFS read tickets (with observed service time).
+pub const EP_SHARD_IO_DONE: Ep = 8;
+
+/// The shard a file's data-plane state lives on. `FileId`s are dense
+/// sequential indices, so plain modulo is balanced *and* stable — the
+/// routing invariant every test of claim locality relies on.
+pub fn shard_of(file: FileId, active_shards: u32) -> u32 {
+    file.0 % active_shards.max(1)
+}
+
+/// Buffer → shard: register `[offset, offset+len)` of `file` (held by
+/// `buffer`, splintered at `splinter`) and resolve its slots against
+/// existing claims.
+#[derive(Debug)]
+pub struct RegisterMsg {
+    pub file: FileId,
+    pub offset: u64,
+    pub len: u64,
+    /// The buffer's *clamped* splinter size (0 = whole-span slot), so
+    /// shard-side slot extents agree bit-for-bit with the buffer's.
+    pub splinter: u64,
+    pub buffer: ChareRef,
+}
+
+/// Buffer → shard: this buffer dropped its data; retract its claim.
+#[derive(Debug)]
+pub struct UnclaimMsg {
+    pub file: FileId,
+    pub owner: ChareRef,
+}
+
+/// Director → shard: is an identically shaped parked array available?
+#[derive(Debug)]
+pub struct TakeMsg {
+    pub key: BufKey,
+    /// Correlates the reply with the director's stashed session start.
+    pub token: u64,
+}
+
+/// Director → shard: publish a fully parked array for reuse.
+#[derive(Debug)]
+pub struct ParkMsg {
+    pub key: BufKey,
+    pub buffers: CollectionId,
+    pub nbuf: u32,
+    pub resident_bytes: u64,
+}
+
+/// Director → shard: store/governor knobs from a file's first open
+/// (the budget arrives pre-divided by the active shard count).
+#[derive(Debug)]
+pub struct ShardConfigMsg {
+    pub cap: Option<u32>,
+    pub policy: AdmissionPolicy,
+    pub adaptive: bool,
+    pub budget: Option<u64>,
+}
+
+/// One data-plane shard.
+pub struct DataShard {
+    index: u32,
+    /// Patched right after boot (pre-run, like the managers' director).
+    pub director: ChareRef,
+    store: SpanStore,
+    governor: Governor,
+    /// Data-plane messages processed — claims, tickets, parked-array
+    /// lifecycle; configuration excluded (the imbalance metric's
+    /// numerator).
+    msgs: u64,
+    /// Last residency this shard contributed to the global gauge.
+    resident_reported: f64,
+    /// Last cap published on the `ckio.governor.cap` gauge.
+    cap_reported: Option<u32>,
+}
+
+impl DataShard {
+    pub fn new(index: u32, director: ChareRef) -> DataShard {
+        DataShard {
+            index,
+            director,
+            store: SpanStore::new(),
+            governor: Governor::new(),
+            msgs: 0,
+            resident_reported: 0.0,
+            cap_reported: None,
+        }
+    }
+
+    /// Contribute this shard's residency *change* to the global gauge
+    /// (sum-over-shards semantics; see the module docs).
+    fn update_resident_gauge(&mut self, ctx: &mut Ctx<'_>) {
+        let now = self.store.resident_bytes() as f64;
+        if now != self.resident_reported {
+            ctx.metrics().add(keys::STORE_RESIDENT, now - self.resident_reported);
+            self.resident_reported = now;
+        }
+    }
+
+    /// Publish this shard's cap *change* on the `ckio.governor.cap`
+    /// gauge. Like the resident-bytes gauge, the value is an add-delta —
+    /// the gauge reads as the **sum of per-shard caps**, i.e. the
+    /// cluster-wide admission ceiling (and exactly the cap itself when
+    /// one shard is governed), never a last-writing shard's private
+    /// view. `from_aimd` marks changes made by the feedback loop
+    /// ([`Governor::complete`]): only those count as adaptations —
+    /// a `configure()` switching modes is not an AIMD decision.
+    fn publish_cap(&mut self, ctx: &mut Ctx<'_>, from_aimd: bool) {
+        let cap = self.governor.cap();
+        if cap != self.cap_reported {
+            let old = self.cap_reported.unwrap_or(0) as f64;
+            let new = cap.unwrap_or(0) as f64;
+            ctx.metrics().add(keys::GOV_CAP, new - old);
+            if from_aimd && self.cap_reported.is_some() && self.governor.is_adaptive() {
+                ctx.metrics().count(keys::GOV_ADAPTATIONS, 1);
+            }
+            self.cap_reported = cap;
+        }
+    }
+
+    /// Release every element of an evicted/purged buffer-chare array.
+    fn release_evicted(&mut self, ctx: &mut Ctx<'_>, evicted: Vec<Evicted>) {
+        for e in evicted {
+            for b in 0..e.nbuf {
+                ctx.signal(ChareRef::new(e.buffers, b), EP_BUF_DROP);
+            }
+            ctx.metrics().count("ckio.buffer_cache_evictions", 1);
+            ctx.metrics().count(keys::STORE_EVICTED, e.resident_bytes);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // test / driver inspection
+    // ------------------------------------------------------------------
+
+    /// This shard's index in the array.
+    pub fn index(&self) -> u32 {
+        self.index
+    }
+
+    /// The span store slice owned by this shard.
+    pub fn span_store(&self) -> &SpanStore {
+        &self.store
+    }
+
+    /// The admission governor slice owned by this shard.
+    pub fn admission(&self) -> &Governor {
+        &self.governor
+    }
+
+    /// Data-plane messages this shard has processed.
+    pub fn msgs_processed(&self) -> u64 {
+        self.msgs
+    }
+}
+
+impl Chare for DataShard {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        // Count data-plane traffic only (claims, tickets, parked-array
+        // lifecycle): EP_SHARD_CONFIG is coordinator configuration — it
+        // may legitimately reach shards the hash never routes to (the
+        // budget broadcast), and counting it would pollute the
+        // msgs_max/mean imbalance pair with non-hot-path noise.
+        if msg.ep != EP_SHARD_CONFIG {
+            self.msgs += 1;
+        }
+        match msg.ep {
+            EP_SHARD_REGISTER => {
+                let m: RegisterMsg = msg.take();
+                // Resolve before registering: the newcomer can never
+                // match itself, and matches always point at
+                // earlier-registered arrays (acyclic peer graph).
+                let peers: Vec<(u32, ChareRef)> = slot_extents(m.offset, m.len, m.splinter)
+                    .into_iter()
+                    .enumerate()
+                    .filter(|&(_, (_, slen))| slen > 0)
+                    .filter_map(|(i, (slo, slen))| {
+                        self.store.find_cover(m.file, slo, slen).map(|owner| (i as u32, owner))
+                    })
+                    .collect();
+                // Serving peers keeps a parked array hot: refresh its LRU
+                // standing (once per distinct array, not per slot).
+                let owners: HashSet<CollectionId> =
+                    peers.iter().map(|&(_, o)| o.collection).collect();
+                for owner in owners {
+                    self.store.touch(owner);
+                }
+                self.store.add_claim(m.file, m.offset, m.len, m.buffer);
+                ctx.advance(MICROS);
+                ctx.send(m.buffer, EP_BUF_PEERS, PeersMsg { peers });
+            }
+            EP_SHARD_UNCLAIM => {
+                let m: UnclaimMsg = msg.take();
+                self.store.drop_claims_of(m.file, m.owner);
+                ctx.advance(MICROS / 2);
+            }
+            EP_SHARD_TAKE => {
+                let m: TakeMsg = msg.take();
+                let found = self.store.take_exact(&m.key);
+                if found.is_some() {
+                    // The rebound session is served entirely from
+                    // resident data: a full-range store hit.
+                    ctx.metrics().count(keys::STORE_HIT, m.key.bytes);
+                    self.update_resident_gauge(ctx);
+                }
+                ctx.advance(MICROS);
+                ctx.send(self.director, EP_DIR_TAKE_REPLY, TakeReplyMsg { token: m.token, found });
+            }
+            EP_SHARD_PARK => {
+                let m: ParkMsg = msg.take();
+                let evicted = self.store.park(m.key, m.buffers, m.nbuf, m.resident_bytes);
+                self.release_evicted(ctx, evicted);
+                self.update_resident_gauge(ctx);
+                ctx.advance(MICROS);
+            }
+            EP_SHARD_PURGE => {
+                let file: FileId = msg.take();
+                let purged = self.store.purge_file(file);
+                self.release_evicted(ctx, purged);
+                self.update_resident_gauge(ctx);
+                ctx.advance(MICROS);
+            }
+            EP_SHARD_CONFIG => {
+                let m: ShardConfigMsg = msg.take();
+                if let Some(b) = m.budget {
+                    self.store.set_budget(b);
+                }
+                self.governor.configure(m.cap, m.policy, m.adaptive);
+                self.publish_cap(ctx, false);
+                ctx.advance(MICROS / 2);
+            }
+            EP_SHARD_IO_REQ => {
+                let m: IoReqMsg = msg.take();
+                let granted = self.governor.request(m.buffer, m.want, m.sess_bytes);
+                if granted < m.want {
+                    ctx.metrics().count(keys::GOV_THROTTLED, (m.want - granted) as u64);
+                }
+                if granted > 0 {
+                    ctx.send(m.buffer, EP_BUF_GRANT, GrantMsg { n: granted });
+                }
+                ctx.advance(MICROS);
+            }
+            EP_SHARD_IO_DONE => {
+                let m: IoDoneMsg = msg.take();
+                for (buffer, n) in self.governor.complete(m.n, m.service_ns) {
+                    ctx.send(buffer, EP_BUF_GRANT, GrantMsg { n });
+                }
+                self.publish_cap(ctx, true);
+                ctx.advance(MICROS);
+            }
+            other => panic!("DataShard: unknown ep {other}"),
+        }
+    }
+
+    impl_chare_any!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_of_is_stable_and_balanced_for_dense_ids() {
+        // Dense sequential FileIds spread perfectly over the modulus.
+        for active in [1u32, 2, 4, 8] {
+            let mut counts = vec![0u32; active as usize];
+            for f in 0..64u32 {
+                counts[shard_of(FileId(f), active) as usize] += 1;
+            }
+            assert!(counts.iter().all(|&c| c == 64 / active));
+        }
+        // Stability: the same file always lands on the same shard.
+        assert_eq!(shard_of(FileId(5), 4), shard_of(FileId(5), 4));
+        // Degenerate modulus is clamped, never a divide-by-zero.
+        assert_eq!(shard_of(FileId(7), 0), 0);
+    }
+
+    #[test]
+    fn same_file_never_crosses_shards() {
+        // The routing invariant: every piece of a file's data-plane
+        // state uses the same shard_of value, whatever the caller.
+        for f in 0..32u32 {
+            let s = shard_of(FileId(f), 8);
+            assert!(s < 8);
+            assert_eq!(s, shard_of(FileId(f), 8));
+        }
+    }
+}

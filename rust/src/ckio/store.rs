@@ -1,9 +1,11 @@
-//! Span store: the shared resident-data plane (PR 2).
+//! Span store: the shared resident-data plane (PR 2, sharded in PR 3).
 //!
-//! The director owns one [`SpanStore`] with the global view of *which
-//! bytes of which file are resident in which buffer-chare array* — live
-//! arrays serving open sessions and parked arrays kept after a
-//! `reuse_buffers` close alike. It replaces the PR 1 ad-hoc parked-buffer
+//! Each data-plane shard ([`super::shard::DataShard`]) owns one
+//! [`SpanStore`] with the view of *which bytes of which of its files are
+//! resident in which buffer-chare array* — live arrays serving open
+//! sessions and parked arrays kept after a `reuse_buffers` close alike.
+//! (A file's claims always live on exactly one shard, so nothing here
+//! needs a cross-shard view.) It replaces the PR 1 ad-hoc parked-buffer
 //! FIFO and is what turns K independent sessions into one cooperating
 //! data plane:
 //!
@@ -18,14 +20,16 @@
 //!   only covers a prefix of a new session splits the serve: covered
 //!   slots come from the resident array, the remainder goes to the PFS.
 //! * **Byte budget + LRU.** Parked arrays are kept under a configurable
-//!   byte budget ([`crate::ckio::Options::store_budget_bytes`]); eviction
-//!   is least-recently-used. When no budget is set the store falls back
-//!   to the PR 1 behavior of keeping at most
-//!   [`SpanStore::DEFAULT_MAX_ARRAYS`] parked arrays.
+//!   byte budget ([`crate::ckio::Options::store_budget_bytes`], split
+//!   evenly across the active shards); eviction is least-recently-used.
+//!   When no budget is set the store falls back to the PR 1 behavior of
+//!   keeping at most [`SpanStore::DEFAULT_MAX_ARRAYS`] parked arrays
+//!   (per shard).
 //!
-//! The store is a pure data structure (no `Ctx`): the director translates
-//! its eviction decisions into `EP_BUF_DROP` sends and its match results
-//! into per-buffer peer lists, and charges the `ckio.store.*` metrics.
+//! The store is a pure data structure (no `Ctx`): the owning shard
+//! translates its eviction decisions into `EP_BUF_DROP` sends and its
+//! match results into per-buffer peer lists, and charges the
+//! `ckio.store.*` metrics.
 
 use std::collections::HashMap;
 
@@ -120,6 +124,19 @@ impl SpanStore {
     pub fn drop_claims(&mut self, file: FileId, buffers: CollectionId) {
         if let Some(v) = self.claims.get_mut(&file) {
             v.retain(|c| c.owner.collection != buffers);
+            if v.is_empty() {
+                self.claims.remove(&file);
+            }
+        }
+    }
+
+    /// Drop the claim of one buffer chare (PR 3: a dropping buffer
+    /// unclaims *itself* at its shard, so the unclaim is ordered after
+    /// the buffer's own registration — the director never has to race
+    /// it). No-op if the owner never claimed.
+    pub fn drop_claims_of(&mut self, file: FileId, owner: ChareRef) {
+        if let Some(v) = self.claims.get_mut(&file) {
+            v.retain(|c| c.owner != owner);
             if v.is_empty() {
                 self.claims.remove(&file);
             }
@@ -308,6 +325,22 @@ mod tests {
         s.drop_claims(FileId(0), CollectionId(1));
         assert_eq!(s.claims_for(FileId(0)), 1);
         assert_eq!(s.find_cover(FileId(0), 12, 2), Some(owner(2, 0)));
+    }
+
+    #[test]
+    fn drop_claims_of_only_touches_the_named_element() {
+        let mut s = SpanStore::new();
+        s.add_claim(FileId(0), 0, 10, owner(1, 0));
+        s.add_claim(FileId(0), 10, 10, owner(1, 1));
+        s.drop_claims_of(FileId(0), owner(1, 0));
+        assert_eq!(s.claims_for(FileId(0)), 1);
+        assert_eq!(s.find_cover(FileId(0), 12, 2), Some(owner(1, 1)));
+        // Unknown owner / already-dropped claim: no-op.
+        s.drop_claims_of(FileId(0), owner(1, 0));
+        s.drop_claims_of(FileId(9), owner(1, 1));
+        assert_eq!(s.claims_for(FileId(0)), 1);
+        s.drop_claims_of(FileId(0), owner(1, 1));
+        assert_eq!(s.claims_for(FileId(0)), 0);
     }
 
     #[test]

@@ -1062,14 +1062,16 @@ impl Chare for ConcurrentClient {
 }
 
 /// Assert the CkIO service holds no per-session residue: no live or
-/// half-closed sessions in the director, no in-flight assemblies, no
-/// session entries or stuck early reads in any manager. One shared
-/// definition of "teardown left nothing behind" for the harness tests,
-/// the integration suite, and the examples.
+/// half-closed sessions or stuck rebind probes in the director, no
+/// in-flight assemblies, no session entries or stuck early reads in any
+/// manager, no leaked or stranded governor tickets on any data-plane
+/// shard. One shared definition of "teardown left nothing behind" for
+/// the harness tests, the integration suite, and the examples.
 pub fn assert_service_clean(eng: &Engine, io: &CkIo) {
     let director: &crate::ckio::director::Director = eng.chare(io.director);
     assert_eq!(director.active_sessions(), 0, "leaked sessions in director");
     assert_eq!(director.pending_closes(), 0, "stuck closes in director");
+    assert_eq!(director.pending_takes(), 0, "stuck rebind probes in director");
     for pe in 0..eng.core.topo.npes() {
         let asm: &crate::ckio::assembler::ReadAssembler =
             eng.chare(ChareRef::new(io.assemblers, pe));
@@ -1077,6 +1079,11 @@ pub fn assert_service_clean(eng: &Engine, io: &CkIo) {
         let mgr: &crate::ckio::manager::Manager = eng.chare(ChareRef::new(io.managers, pe));
         assert_eq!(mgr.session_count(), 0, "leaked session entries on PE {pe}");
         assert_eq!(mgr.early_count(), 0, "stuck early reads on PE {pe}");
+    }
+    for s in 0..io.nshards {
+        let shard = io.shard(eng, s);
+        assert_eq!(shard.admission().inflight(), 0, "governor tickets leaked on shard {s}");
+        assert_eq!(shard.admission().queued(), 0, "governor demand stranded on shard {s}");
     }
 }
 
@@ -1362,17 +1369,217 @@ pub fn svc_shared(reps: u32) -> Table {
     t
 }
 
-/// Machine-readable perf anchor for this PR (`BENCH_pr2.json`):
+// =====================================================================
+// svc_churn — K distinct-file sessions vs the data-plane shard count
+// =====================================================================
+//
+// PR 3's acceptance scenario: K sessions over K *distinct* files (no
+// dedup possible) on a deliberately control-plane-heavy PFS shape. With
+// one data-plane shard, every claim registration and every admission
+// ticket of every session serializes through one chare on one PE — the
+// PR 2 director bottleneck, reproduced. Sweeping the shard count spreads
+// that coordination across PEs while the I/O work stays bit-for-bit
+// identical, so end-to-end time drops monotonically until every file has
+// its own shard.
+
+/// Results of one `run_svc_churn` run.
+#[derive(Clone, Debug)]
+pub struct ChurnStats {
+    /// Active shard count (after clamping to the PE count).
+    pub shards: u32,
+    pub k: u32,
+    /// Start → last session fully closed.
+    pub makespan_s: f64,
+    /// Most data-plane messages processed by any one active shard.
+    pub shard_msgs_max: u64,
+    /// Mean data-plane messages per active shard.
+    pub shard_msgs_mean: f64,
+}
+
+/// Drive `k` concurrent sessions over `k` *distinct* files of
+/// `file_size` bytes each (`clients` client chares per session), with
+/// the data plane hashed over `shards` shards. Every session closes
+/// itself and its file, so the full lifecycle churns `k` times.
+///
+/// The PFS is configured quiet and cheap (no noise, no seek penalty,
+/// tiny 2 µs RPC overhead, fast OSTs) and sessions are governed with a
+/// cap far above demand: every splinter read still runs the shard
+/// ticket protocol — the hot path under test — but admission never
+/// reorders I/O, so runs across shard counts differ **only** in where
+/// the coordination executes.
+pub fn run_svc_churn(
+    nodes: u32,
+    pes: u32,
+    file_size: u64,
+    k: u32,
+    clients: u32,
+    shards: u32,
+    seed: u64,
+) -> (ChurnStats, CkIo, Engine) {
+    assert!(k > 0 && clients > 0 && file_size >= clients as u64);
+    let pfs = PfsConfig {
+        noise_sigma: 0.0,
+        rpc_overhead: time::from_micros(2.0),
+        seek_penalty: 0,
+        ost_bw: 6.0e9,
+        client_window: 8,
+        ..PfsConfig::default()
+    };
+    let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed)).with_sim_pfs(pfs);
+    let files: Vec<crate::pfs::FileId> =
+        (0..k).map(|_| eng.core.sim_pfs_mut().create_file(file_size)).collect();
+    let io = CkIo::boot(&mut eng);
+    let opts = Options {
+        num_readers: Some(2),
+        // Many tiny splinters: lots of claim/ticket traffic per byte.
+        splinter_bytes: Some(4 << 10),
+        read_window: 8,
+        // Governed far above demand (see the doc comment above).
+        max_inflight_reads: Some(1 << 16),
+        data_plane_shards: Some(shards),
+        ..Default::default()
+    };
+    let done_fut = eng.future(k);
+    let lat_fut = eng.future(k * clients);
+    let per = file_size / clients as u64;
+    let mut leaders = Vec::with_capacity(k as usize);
+    for s in 0..k {
+        let file = files[s as usize];
+        let cid = eng.create_array(clients, &Placement::RoundRobinPes, |i| {
+            let lo = i as u64 * per;
+            let hi = if i == clients - 1 { file_size } else { lo + per };
+            ConcurrentClient::new(
+                io,
+                file,
+                file_size,
+                i,
+                clients,
+                opts.clone(),
+                (lo, hi - lo),
+                Callback::Future(done_fut),
+                Callback::Future(lat_fut),
+            )
+        });
+        for i in 0..clients {
+            eng.chare_mut::<ConcurrentClient>(ChareRef::new(cid, i)).peers = cid;
+        }
+        leaders.push(ChareRef::new(cid, 0));
+    }
+    for leader in leaders {
+        eng.inject_signal(leader, EP_CC_GO);
+    }
+    eng.run();
+    assert!(eng.future_done(done_fut), "svc_churn: not all sessions closed");
+    assert!(eng.future_done(lat_fut), "svc_churn: not all reads completed");
+
+    let makespan = eng.take_future(done_fut).iter().map(|(t, _)| *t).max().unwrap();
+    let active =
+        eng.chare::<crate::ckio::director::Director>(io.director).active_shards();
+    let msgs = io.shard_msgs(&eng);
+    let active_msgs = &msgs[..active as usize];
+    let shard_msgs_max = *active_msgs.iter().max().unwrap();
+    let shard_msgs_mean = active_msgs.iter().sum::<u64>() as f64 / active as f64;
+    debug_assert!(
+        msgs[active as usize..].iter().all(|&m| m == 0),
+        "inactive shards must see no traffic"
+    );
+    eng.core.metrics.set(keys::SHARD_MSGS_MAX, shard_msgs_max as f64);
+    eng.core.metrics.set(keys::SHARD_MSGS_MEAN, shard_msgs_mean);
+    let stats = ChurnStats {
+        shards: active,
+        k,
+        makespan_s: time::to_secs(makespan),
+        shard_msgs_max,
+        shard_msgs_mean,
+    };
+    (stats, io, eng)
+}
+
+/// One row of the canonical churn shard sweep (rep-averaged).
+#[derive(Clone, Debug)]
+pub struct ChurnSweepRow {
+    /// Active shard count (post-clamp).
+    pub shards: u32,
+    pub k: u32,
+    pub makespan_s: f64,
+    pub shard_msgs_max: f64,
+    pub shard_msgs_mean: f64,
+}
+
+/// The canonical churn shard sweep — ONE definition of the shape
+/// (cluster, file size, K, clients, shard list, seeds), shared by the
+/// `svc_churn` figure table and the `BENCH_pr3.json` `churn` section so
+/// the two can never silently report different experiments.
+pub fn churn_sweep(reps: u32) -> Vec<ChurnSweepRow> {
+    let (nodes, pes) = (4u32, 8);
+    let (size, k, clients) = (512u64 << 10, 8u32, 4u32);
+    let n = reps.max(1) as f64;
+    [1u32, 2, 4, 8, 16]
+        .iter()
+        .map(|&shards| {
+            let mut mk = 0.0;
+            let mut mx = 0.0;
+            let mut mean = 0.0;
+            let mut active = 0u32;
+            for r in 0..reps.max(1) {
+                let (st, _, _) =
+                    run_svc_churn(nodes, pes, size, k, clients, shards, 8500 + r as u64);
+                mk += st.makespan_s;
+                mx += st.shard_msgs_max as f64;
+                mean += st.shard_msgs_mean;
+                active = st.shards;
+            }
+            ChurnSweepRow {
+                shards: active,
+                k,
+                makespan_s: mk / n,
+                shard_msgs_max: mx / n,
+                shard_msgs_mean: mean / n,
+            }
+        })
+        .collect()
+}
+
+/// The `svc_churn` experiment table: end-to-end time and per-shard
+/// message counts as the data-plane shard count sweeps 1 → 16.
+pub fn svc_churn(reps: u32) -> Table {
+    let mut t = Table::new(
+        "svc_churn: K=8 sessions over 8 DISTINCT files vs data-plane shard count \
+         (4 nodes x 8 PEs, 512 KiB x 4 clients per session, 4 KiB splinters, governed; \
+         makespan should drop monotonically to shards=8)",
+        &["shards", "k", "makespan_ms", "shard_msgs_max", "shard_msgs_mean", "imbalance"],
+    );
+    for row in churn_sweep(reps) {
+        t.row(vec![
+            row.shards.to_string(),
+            row.k.to_string(),
+            format!("{:.3}", row.makespan_s * 1e3),
+            format!("{:.0}", row.shard_msgs_max),
+            format!("{:.1}", row.shard_msgs_mean),
+            format!("{:.2}x", row.shard_msgs_max / row.shard_msgs_mean.max(1.0)),
+        ]);
+    }
+    t
+}
+
+/// Machine-readable perf anchor for this PR (`BENCH_pr3.json`):
 ///
 /// * `concurrent` — the PR 1 svc_concurrent aggregate-GiB/s anchor
 ///   (continuity: same shape and seeds as `BENCH_pr1.json`),
 /// * `shared` — svc_shared PFS-dedup figures with the `ckio.store.*`
-///   metrics,
+///   metrics (counters land in the engine-global sink, so with many
+///   shards they are the sum over shards, and the resident gauge is
+///   maintained as add-deltas — no silent shard-0-only reporting),
 /// * `governed` — a capped run recording `ckio.governor.throttled` and
 ///   the PFS's observed max concurrent reads,
 /// * `evict` — a reuse run under a tight store budget recording
-///   `ckio.store.evicted_bytes` and the resident-bytes gauge.
-pub fn bench_pr2_json(reps: u32) -> String {
+///   `ckio.store.evicted_bytes` and the resident-bytes gauge,
+/// * `churn` (PR 3) — the svc_churn shard sweep: makespan and the
+///   per-shard message imbalance pair dropping as shards increase, with
+///   shards=1 reproducing the PR 2 single-plane behavior,
+/// * `feedback` (PR 3) — an `adaptive_admission` run recording the
+///   AIMD-derived `ckio.governor.cap` and its adaptation count.
+pub fn bench_pr3_json(reps: u32) -> String {
     use crate::harness::bench::Json;
     let (nodes, pes) = (4u32, 8u32);
     let size = mib(256);
@@ -1457,11 +1664,13 @@ pub fn bench_pr2_json(reps: u32) -> String {
     };
 
     // Eviction run: reuse + a one-array budget, so K parked arrays force
-    // LRU eviction and exercise the byte accounting.
+    // LRU eviction and exercise the byte accounting. Pinned to one shard
+    // so the budget is not split (the PR 2 single-plane semantics).
     let evict = {
         let mut eopts = Options::with_readers(readers);
         eopts.reuse_buffers = true;
         eopts.store_budget_bytes = Some(size);
+        eopts.data_plane_shards = Some(1);
         let (st, _, eng) = run_svc_shared(nodes, pes, size, 4, clients, eopts, 8400);
         Json::obj(vec![
             ("k", Json::num(4.0)),
@@ -1471,9 +1680,48 @@ pub fn bench_pr2_json(reps: u32) -> String {
         ])
     };
 
+    // Churn sweep: K distinct-file sessions vs the shard count (the one
+    // canonical sweep, shared with the `svc_churn` figure). The shards=1
+    // row is the PR 2 single-plane behavior; makespan and the max/mean
+    // message imbalance both drop as shards increase.
+    let churn: Vec<Json> = churn_sweep(reps)
+        .into_iter()
+        .map(|row| {
+            Json::obj(vec![
+                ("shards", Json::num(row.shards as f64)),
+                ("k", Json::num(row.k as f64)),
+                ("makespan_s", Json::num(row.makespan_s)),
+                ("ckio.shard.msgs_max", Json::num(row.shard_msgs_max)),
+                ("ckio.shard.msgs_mean", Json::num(row.shard_msgs_mean)),
+            ])
+        })
+        .collect();
+
+    // Feedback run: no static cap — the per-shard governor derives one
+    // from observed service times (AIMD) and the gauge records where it
+    // settled.
+    let feedback = {
+        let mut fopts = Options::with_readers(readers);
+        fopts.adaptive_admission = true;
+        fopts.splinter_bytes = Some(4 << 20);
+        fopts.data_plane_shards = Some(1);
+        let (st, _, eng) = run_svc_shared(nodes, pes, size, 4, clients, fopts, 8600);
+        Json::obj(vec![
+            ("k", Json::num(4.0)),
+            ("ckio.governor.cap", Json::num(eng.core.metrics.value(keys::GOV_CAP))),
+            (
+                "ckio.governor.adaptations",
+                Json::num(eng.core.metrics.counter(keys::GOV_ADAPTATIONS) as f64),
+            ),
+            ("ckio.governor.throttled", Json::num(st.governor_throttled as f64)),
+            ("pfs_max_concurrent_reads", Json::num(eng.core.metrics.value(keys::PFS_MAX_CONCURRENT))),
+            ("makespan_s", Json::num(st.makespan_s)),
+        ])
+    };
+
     Json::obj(vec![
-        ("bench", Json::str("svc_shared+svc_concurrent")),
-        ("pr", Json::num(2.0)),
+        ("bench", Json::str("svc_churn+svc_shared+svc_concurrent")),
+        ("pr", Json::num(3.0)),
         ("nodes", Json::num(nodes as f64)),
         ("pes_per_node", Json::num(pes as f64)),
         ("file_bytes", Json::num(size as f64)),
@@ -1483,6 +1731,8 @@ pub fn bench_pr2_json(reps: u32) -> String {
         ("shared", Json::arr(shared)),
         ("governed", governed),
         ("evict", evict),
+        ("churn", Json::arr(churn)),
+        ("feedback", feedback),
     ])
     .render()
 }
@@ -1658,22 +1908,95 @@ mod tests {
     }
 
     #[test]
-    fn bench_pr2_json_is_wellformed() {
-        let j = bench_pr2_json(1);
+    fn bench_pr3_json_is_wellformed() {
+        let j = bench_pr3_json(1);
         assert!(j.starts_with('{') && j.ends_with('}'));
-        assert!(j.contains("\"bench\":\"svc_shared+svc_concurrent\""));
+        assert!(j.contains("\"bench\":\"svc_churn+svc_shared+svc_concurrent\""));
         assert!(j.contains("\"aggregate_gibs\""));
         // K = 1, 4, 8 all reported in the concurrent anchor.
         assert!(j.contains("\"k\":1") && j.contains("\"k\":4") && j.contains("\"k\":8"));
-        // The store / governor observability keys the CI smoke greps for.
+        // The store / governor / shard observability keys the CI smoke
+        // greps for (PR 2 set + the PR 3 churn/feedback additions).
         for key in [
             "ckio.store.hit_bytes",
             "ckio.store.miss_bytes",
             "ckio.store.evicted_bytes",
             "ckio.store.resident_bytes",
             "ckio.governor.throttled",
+            "\"churn\"",
+            "\"feedback\"",
+            "\"shards\"",
+            "ckio.shard.msgs_max",
+            "ckio.shard.msgs_mean",
+            "ckio.governor.cap",
+            "ckio.governor.adaptations",
         ] {
-            assert!(j.contains(key), "missing {key} in BENCH_pr2 json");
+            assert!(j.contains(key), "missing {key} in BENCH_pr3 json");
         }
+    }
+
+    /// PR 3 acceptance: K = 8 distinct-file sessions complete strictly
+    /// faster as the data plane spreads from one shard to one per file,
+    /// and the per-shard message load spreads with it. (Deterministic:
+    /// the churn PFS shape runs noise-free, so the comparison is exact,
+    /// not statistical.)
+    #[test]
+    fn svc_churn_scales_with_shards() {
+        let mut mks = Vec::new();
+        for &s in &[1u32, 2, 4, 8] {
+            let (st, io, eng) = run_svc_churn(2, 4, 512 << 10, 8, 4, s, 21);
+            assert_eq!(st.shards, s);
+            assert_eq!(eng.core.metrics.counter("ckio.sessions"), 8);
+            assert_eq!(eng.core.metrics.counter(keys::CKIO_BYTES), 8 * (512 << 10));
+            assert_service_clean(&eng, &io);
+            // Distinct files spread over the modulus: at 8 shards every
+            // file has its own, so the max load is (near) the mean.
+            if s == 8 {
+                assert!(
+                    st.shard_msgs_max as f64 <= 2.0 * st.shard_msgs_mean,
+                    "8 distinct files on 8 shards must spread the load: max {} vs mean {:.0}",
+                    st.shard_msgs_max,
+                    st.shard_msgs_mean
+                );
+            }
+            mks.push(st.makespan_s);
+        }
+        // Non-increasing with a 10% tolerance: once the shard work drops
+        // below the (identical) I/O floor, adjacent configurations are
+        // both floor-bound and may wobble by scheduling micro-shifts.
+        for w in mks.windows(2) {
+            assert!(
+                w[1] <= w[0] * 1.10,
+                "makespan must not grow with shards: {mks:?}"
+            );
+        }
+        assert!(
+            mks[3] < 0.8 * mks[0],
+            "8 shards must clearly beat the single-shard (PR 2) data plane: {mks:?}"
+        );
+    }
+
+    /// PR 3 satellite: with no static cap, `adaptive_admission` derives
+    /// a per-shard cap from observed service times, the AIMD loop
+    /// actually moves it, and admission still caps the PFS.
+    #[test]
+    fn adaptive_governor_derives_and_adapts_a_cap() {
+        let mut opts = Options::with_readers(4);
+        opts.adaptive_admission = true;
+        opts.splinter_bytes = Some(512 << 10);
+        opts.data_plane_shards = Some(1);
+        let (st, io, eng) = run_svc_shared(2, 4, 16 << 20, 2, 4, opts, 17);
+        // The loop ran: at least one cap change beyond the initial value.
+        assert!(
+            eng.core.metrics.counter(keys::GOV_ADAPTATIONS) > 0,
+            "the AIMD loop never adapted the cap"
+        );
+        let cap = eng.core.metrics.value(keys::GOV_CAP);
+        assert!(cap >= 1.0, "published cap must be at least the floor, got {cap}");
+        // Admission was genuinely active from the derived cap's low
+        // start: some demand must have been deferred.
+        assert!(st.governor_throttled > 0, "an adaptive cap of 2 must defer early demand");
+        assert_eq!(eng.core.metrics.counter(keys::CKIO_BYTES), 2 * (16 << 20));
+        assert_service_clean(&eng, &io);
     }
 }

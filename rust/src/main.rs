@@ -2,11 +2,11 @@
 //! cluster/PFS configuration, or exercise the runtime end-to-end.
 //!
 //! ```text
-//! ckio fig <1|2|4|7|8|9|12|13|sec5|splinter|autoreaders|svc_concurrent|svc_shared|all>
+//! ckio fig <1|2|4|7|8|9|12|13|sec5|splinter|autoreaders|svc_concurrent|svc_shared|svc_churn|all>
 //!      [--reps N] [--out bench_out] [--tp 65536]
 //! ckio read   --file-size 4GiB --clients 512 [--scheme naive|ckio] [--readers N]
 //! ckio changa --nodes 4 --tp 4096 --scheme ckio [--nbodies 2097152]
-//! ckio bench-json [--out BENCH_pr2.json] [--reps 3]   # svc perf + store/governor anchor
+//! ckio bench-json [--out BENCH_pr3.json] [--reps 3]   # svc perf + store/governor/shard anchor
 //! ckio artifacts [--dir artifacts]           # list + smoke-run lowered artifacts
 //! ```
 
@@ -30,7 +30,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: ckio fig <id|all> [--reps N] [--out DIR] | read | changa | artifacts | \
-                 bench-json [--out BENCH_pr2.json]\n\
+                 bench-json [--out BENCH_pr3.json]\n\
                  see `rust/src/main.rs` header for full flags"
             );
         }
@@ -53,6 +53,7 @@ pub fn run_figure(id: &str, reps: u32, n_tp: u32) -> Option<(String, Table)> {
         "autoreaders" => exp::ablation_autoreaders(reps),
         "svc_concurrent" => exp::svc_concurrent(reps),
         "svc_shared" => exp::svc_shared(reps),
+        "svc_churn" => exp::svc_churn(reps),
         _ => return None,
     };
     let slug = match id {
@@ -61,6 +62,7 @@ pub fn run_figure(id: &str, reps: u32, n_tp: u32) -> Option<(String, Table)> {
         "autoreaders" => "ablation_autoreaders".to_string(),
         "svc_concurrent" => "svc_concurrent".to_string(),
         "svc_shared" => "svc_shared".to_string(),
+        "svc_churn" => "svc_churn".to_string(),
         n => format!("fig{n}"),
     };
     Some((slug, t))
@@ -74,7 +76,7 @@ fn cmd_fig(args: &Args) {
     let ids: Vec<&str> = if id == "all" {
         vec![
             "1", "2", "4", "7", "8", "9", "12", "13", "sec5", "splinter", "autoreaders",
-            "svc_concurrent", "svc_shared",
+            "svc_concurrent", "svc_shared", "svc_churn",
         ]
     } else {
         vec![id]
@@ -187,12 +189,13 @@ fn cmd_perf(args: &Args) {
 }
 
 /// Emit the PR's machine-readable perf anchor: svc_concurrent
-/// aggregate GiB/s, svc_shared PFS-dedup ratios, and the span-store /
-/// admission-governor observability keys, as JSON.
+/// aggregate GiB/s, svc_shared PFS-dedup ratios, the svc_churn shard
+/// sweep, the adaptive-governor feedback run, and the span-store /
+/// admission-governor / shard observability keys, as JSON.
 fn cmd_bench_json(args: &Args) {
-    let out = args.get("out").unwrap_or("BENCH_pr2.json").to_string();
+    let out = args.get("out").unwrap_or("BENCH_pr3.json").to_string();
     let reps = args.get_or("reps", 3u32);
-    let json = exp::bench_pr2_json(reps);
+    let json = exp::bench_pr3_json(reps);
     std::fs::write(&out, &json).unwrap_or_else(|e| panic!("writing {out}: {e}"));
     println!("[json] {out}");
     println!("{json}");

@@ -148,11 +148,33 @@ pub mod keys {
     /// Span store: resident bytes released by budget eviction or
     /// file-close purge.
     pub const STORE_EVICTED: &str = "ckio.store.evicted_bytes";
-    /// Span store: bytes currently resident in parked arrays (gauge).
+    /// Span store: bytes currently resident in parked arrays (gauge;
+    /// maintained as add-deltas by each data-plane shard so the value is
+    /// the *sum* across shards, never a single shard's view).
     pub const STORE_RESIDENT: &str = "ckio.store.resident_bytes";
-    /// Admission governor: PFS reads deferred because the aggregate
+    /// Admission governor: PFS reads deferred because the per-shard
     /// in-flight cap was reached.
     pub const GOV_THROTTLED: &str = "ckio.governor.throttled";
+    /// Admission governor: the in-flight cap (gauge; maintained as
+    /// add-deltas by each governed shard, so the value is the *sum* of
+    /// per-shard **configured** caps — the admission ceiling across
+    /// every shard a governed file has ever configured, and exactly the
+    /// cap itself when one shard is governed. Governor configuration is
+    /// sticky across file closes, as PR 2's was, so the gauge reflects
+    /// configured capacity, not currently-admitting files. Static caps
+    /// publish once; adaptive caps move as the AIMD loop reacts to
+    /// observed service times).
+    pub const GOV_CAP: &str = "ckio.governor.cap";
+    /// Admission governor: cap changes made by the adaptive (AIMD)
+    /// feedback loop.
+    pub const GOV_ADAPTATIONS: &str = "ckio.governor.adaptations";
+    /// Data-plane shards: most messages processed by any one shard
+    /// (gauge, set by the harness post-run; with `msgs_mean` this is the
+    /// shard-imbalance pair).
+    pub const SHARD_MSGS_MAX: &str = "ckio.shard.msgs_max";
+    /// Data-plane shards: mean messages processed per *active* shard
+    /// (gauge, set by the harness post-run).
+    pub const SHARD_MSGS_MEAN: &str = "ckio.shard.msgs_mean";
     /// Background-work time accumulated by compute chares (Figs. 8–9).
     pub const BG_WORK: &str = "app.bg_work";
 }

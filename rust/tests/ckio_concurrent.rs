@@ -327,10 +327,7 @@ fn repeated_session_with_reuse_reads_the_file_once() {
     assert!(eng.future_done(fut1));
     let bytes_after_first = eng.core.metrics.counter("pfs.bytes_read");
     assert!(bytes_after_first >= size, "first session must actually read the file");
-    {
-        let director: &Director = eng.chare(io.director);
-        assert_eq!(director.cached_buffer_arrays(), 1, "close must park the array");
-    }
+    assert_eq!(io.cached_buffer_arrays(&eng), 1, "close must park the array");
 
     // Session 2, identical shape: the parked array is rebound.
     let fut2 = eng.future(2);
@@ -357,20 +354,22 @@ fn repeated_session_with_reuse_reads_the_file_once() {
     }
     eng.run();
     assert!(eng.future_done(cfut));
-    let director: &Director = eng.chare(io.director);
-    assert_eq!(director.cached_buffer_arrays(), 0, "final file close must purge the cache");
-    assert_eq!(director.open_files(), 0);
+    assert_eq!(io.cached_buffer_arrays(&eng), 0, "final file close must purge the cache");
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
 }
 
 // ---------------------------------------------------------------------
 // 4. Admission governor: cap = 1 fully sequences two sessions' PFS reads
 // ---------------------------------------------------------------------
 
-/// With the aggregate in-flight cap set to 1, two concurrent verified
-/// sessions over *distinct* files (so the span store cannot dedup any
-/// read away) are fully sequenced at the PFS — the model never observes
-/// more than one read in flight — while every read callback still fires
-/// exactly once with verified contents.
+/// With the in-flight cap set to 1 and the data plane pinned to a single
+/// shard (`data_plane_shards: 1` — the PR 2 cluster-wide semantics; the
+/// per-shard behavior with distinct files on distinct shards is covered
+/// in `ckio_shard.rs`), two concurrent verified sessions over *distinct*
+/// files (so the span store cannot dedup any read away) are fully
+/// sequenced at the PFS — the model never observes more than one read in
+/// flight — while every read callback still fires exactly once with
+/// verified contents.
 #[test]
 fn governor_cap_one_sequences_two_sessions_and_loses_no_callback() {
     let mut eng = Engine::new(EngineConfig::sim(2, 2)).with_sim_pfs(PfsConfig {
@@ -386,6 +385,7 @@ fn governor_cap_one_sequences_two_sessions_and_loses_no_callback() {
         num_readers: Some(2),
         splinter_bytes: Some(256 << 10),
         max_inflight_reads: Some(1),
+        data_plane_shards: Some(1),
         ..Default::default()
     };
     let fut = eng.future(2 * 2); // 2 sessions x 2 clients
@@ -409,8 +409,9 @@ fn governor_cap_one_sequences_two_sessions_and_loses_no_callback() {
     assert_service_clean(&eng, &io);
     let director: &Director = eng.chare(io.director);
     assert_eq!(director.open_files(), 0);
-    assert_eq!(director.admission().inflight(), 0, "tickets leaked in the governor");
-    assert_eq!(director.admission().queued(), 0, "demand stranded in the governor");
+    assert_eq!(director.active_shards(), 1, "the shard pin must have applied");
+    assert_eq!(io.governor_inflight(&eng), 0, "tickets leaked in the governor");
+    assert_eq!(io.governor_queued(&eng), 0, "demand stranded in the governor");
 }
 
 // ---------------------------------------------------------------------

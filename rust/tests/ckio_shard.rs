@@ -1,0 +1,360 @@
+//! Data-plane shard integration tests (PR 3): FileId→shard routing
+//! stability, per-shard admission semantics, and teardown with tickets
+//! in flight on a shard whose file is closing.
+//!
+//! * **Routing stability** — a file's data-plane state (claims, parked
+//!   arrays, governor tickets) lives on exactly one shard, the same one
+//!   across close/re-open, and never leaks onto other shards.
+//! * **Per-shard caps** — `max_inflight_reads` is enforced per shard:
+//!   two files on different shards proceed concurrently under cap = 1
+//!   (the PFS observes 2 reads in flight), while two sessions of *one*
+//!   file — same shard by the routing invariant — are still fully
+//!   sequenced.
+//! * **Teardown drain** — closing a governed session (and then its file)
+//!   with admission tickets in flight leaves no ticket leaked and no
+//!   demand stranded on the shard, and every read callback still fires
+//!   exactly once.
+
+use ckio::amt::callback::Callback;
+use ckio::amt::chare::{Chare, ChareRef};
+use ckio::amt::engine::{Ctx, Engine, EngineConfig};
+use ckio::amt::msg::{Ep, Msg, Payload};
+use ckio::amt::topology::Pe;
+use ckio::ckio::director::Director;
+use ckio::ckio::manager::{ReadMsg, EP_M_READ};
+use ckio::ckio::{CkIo, Options, ReadResult, Session, SessionId};
+use ckio::harness::experiments::assert_service_clean;
+use ckio::impl_chare_any;
+use ckio::metrics::keys;
+use ckio::pfs::{FileId, PfsConfig};
+
+const MIB: u64 = 1 << 20;
+
+fn verified_engine(nfiles: u32, file_size: u64) -> (Engine, Vec<FileId>, CkIo) {
+    let mut eng = Engine::new(EngineConfig::sim(2, 2)).with_sim_pfs(PfsConfig {
+        materialize: true,
+        noise_sigma: 0.0,
+        ..PfsConfig::default()
+    });
+    let files = (0..nfiles).map(|_| eng.core.sim_pfs_mut().create_file(file_size)).collect();
+    let io = CkIo::boot(&mut eng);
+    (eng, files, io)
+}
+
+fn open_file(eng: &mut Engine, io: &CkIo, file: FileId, size: u64, opts: Options) {
+    let fut = eng.future(1);
+    io.open_driver(eng, file, size, opts, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "open never completed");
+}
+
+fn start_session(eng: &mut Engine, io: &CkIo, file: FileId, offset: u64, bytes: u64) -> Session {
+    let fut = eng.future(1);
+    io.start_session_driver(eng, file, offset, bytes, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "session never became ready");
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    p.take::<Session>()
+}
+
+fn close_session(eng: &mut Engine, io: &CkIo, sid: SessionId) {
+    let fut = eng.future(1);
+    io.close_session_driver(eng, sid, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "session close never completed");
+}
+
+fn close_file(eng: &mut Engine, io: &CkIo, file: FileId) {
+    let fut = eng.future(1);
+    io.close_file_driver(eng, file, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "file close never completed");
+}
+
+/// Claims for `file` on every shard: the routing invariant says exactly
+/// one shard may ever report a nonzero count.
+fn claims_per_shard(eng: &Engine, io: &CkIo, file: FileId) -> Vec<usize> {
+    (0..io.nshards).map(|s| io.shard(eng, s).span_store().claims_for(file)).collect()
+}
+
+// ---------------------------------------------------------------------
+// 1. FileId→shard routing is stable across re-open and never leaks
+// ---------------------------------------------------------------------
+
+#[test]
+fn file_to_shard_routing_is_stable_across_reopen() {
+    let size = MIB;
+    let (mut eng, files, io) = verified_engine(2, size);
+    let opts = Options::with_readers(2);
+    open_file(&mut eng, &io, files[0], size, opts.clone());
+    open_file(&mut eng, &io, files[1], size, opts.clone());
+
+    let home = eng.chare::<Director>(io.director).shard_of_file(files[0]);
+    let other = eng.chare::<Director>(io.director).shard_of_file(files[1]);
+    assert_ne!(home, other, "dense FileIds must spread over the default shard count");
+
+    // A live session's claims land on the home shard — and only there.
+    let s = start_session(&mut eng, &io, files[0], 0, size);
+    let claims = claims_per_shard(&eng, &io, files[0]);
+    assert_eq!(claims[home as usize], 2, "one claim per (nonempty) buffer span");
+    for (i, &c) in claims.iter().enumerate() {
+        if i != home as usize {
+            assert_eq!(c, 0, "file 0 claims leaked onto shard {i}");
+        }
+    }
+
+    // Dropping the session retracts the claims (buffer-side unclaim).
+    close_session(&mut eng, &io, s.id);
+    assert!(claims_per_shard(&eng, &io, files[0]).iter().all(|&c| c == 0));
+
+    // Full close + re-open (with the other file still open, so the
+    // active shard count cannot be re-applied in between): same shard.
+    close_file(&mut eng, &io, files[0]);
+    open_file(&mut eng, &io, files[0], size, opts);
+    assert_eq!(
+        eng.chare::<Director>(io.director).shard_of_file(files[0]),
+        home,
+        "re-opening a file must not move its data-plane state"
+    );
+    let s2 = start_session(&mut eng, &io, files[0], 0, size);
+    assert_eq!(claims_per_shard(&eng, &io, files[0])[home as usize], 2);
+    close_session(&mut eng, &io, s2.id);
+    close_file(&mut eng, &io, files[0]);
+    close_file(&mut eng, &io, files[1]);
+    assert_service_clean(&eng, &io);
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
+}
+
+// ---------------------------------------------------------------------
+// 2. Per-shard admission: distinct files proceed, same file sequences
+// ---------------------------------------------------------------------
+
+/// Read `[offset, offset+len)` through PE 0's manager and verify every
+/// byte against the deterministic file pattern.
+fn read_verified(eng: &mut Engine, io: &CkIo, s: &Session, file: FileId, offset: u64, len: u64) {
+    let fut = eng.future(1);
+    eng.inject(
+        ChareRef::new(io.managers, 0),
+        EP_M_READ,
+        ReadMsg { session: s.id, offset, len, after: Callback::Future(fut) },
+    );
+    eng.run();
+    assert!(eng.future_done(fut), "read callback never fired");
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    let r = p.take::<ReadResult>();
+    assert_eq!(r.len, len);
+    let bytes = r.chunk.bytes.as_ref().expect("materialized run must deliver bytes");
+    assert_eq!(ckio::pfs::pattern::verify(file, offset, bytes), None, "corrupt read");
+}
+
+#[test]
+fn distinct_files_on_distinct_shards_admit_independently_under_cap_one() {
+    let size = MIB;
+    let (mut eng, files, io) = verified_engine(2, size);
+    let opts = Options {
+        num_readers: Some(2),
+        splinter_bytes: Some(128 << 10),
+        max_inflight_reads: Some(1),
+        ..Default::default()
+    };
+    // Open both files and start both sessions in one scheduling window,
+    // so the two greedy prefetches run concurrently.
+    io.open_driver(&mut eng, files[0], size, opts.clone(), Callback::Ignore);
+    io.open_driver(&mut eng, files[1], size, opts, Callback::Ignore);
+    let ready = eng.future(2);
+    io.start_session_driver(&mut eng, files[0], 0, size, Callback::Future(ready));
+    io.start_session_driver(&mut eng, files[1], 0, size, Callback::Future(ready));
+    eng.run();
+    assert!(eng.future_done(ready), "sessions never became ready");
+
+    // Different shards govern independently: the PFS saw exactly two
+    // concurrent reads — more than a global cap of 1 would ever allow
+    // (the sessions were NOT serialized), and never more than one per
+    // shard (the per-shard caps held).
+    let peak = eng.core.metrics.value(keys::PFS_MAX_CONCURRENT);
+    assert_eq!(
+        peak, 2.0,
+        "per-shard cap 1 over two files on two shards must admit exactly 2 concurrent reads"
+    );
+    let sessions: Vec<Session> = eng
+        .take_future(ready)
+        .into_iter()
+        .map(|(_, mut p)| p.take::<Session>())
+        .collect();
+    for s in &sessions {
+        read_verified(&mut eng, &io, s, s.file, 0, size);
+    }
+    // Both shards actually carried data-plane traffic.
+    let d0 = eng.chare::<Director>(io.director).shard_of_file(files[0]);
+    let d1 = eng.chare::<Director>(io.director).shard_of_file(files[1]);
+    assert!(io.shard(&eng, d0).msgs_processed() > 0);
+    assert!(io.shard(&eng, d1).msgs_processed() > 0);
+    for s in sessions {
+        close_session(&mut eng, &io, s.id);
+    }
+    close_file(&mut eng, &io, files[0]);
+    close_file(&mut eng, &io, files[1]);
+    assert_service_clean(&eng, &io);
+}
+
+#[test]
+fn same_file_sessions_still_fully_sequence_under_per_shard_cap_one() {
+    let size = 2 * MIB;
+    let (mut eng, files, io) = verified_engine(1, size);
+    let file = files[0];
+    let opts = Options {
+        num_readers: Some(2),
+        splinter_bytes: Some(128 << 10),
+        max_inflight_reads: Some(1),
+        ..Default::default()
+    };
+    io.open_driver(&mut eng, file, size, opts, Callback::Ignore);
+    // Two concurrent sessions over non-overlapping halves of ONE file:
+    // same file → same shard → one cap. (Disjoint ranges, so the span
+    // store cannot dedup any read away — every byte takes a ticket.)
+    let ready = eng.future(2);
+    io.start_session_driver(&mut eng, file, 0, size / 2, Callback::Future(ready));
+    io.start_session_driver(&mut eng, file, size / 2, size / 2, Callback::Future(ready));
+    eng.run();
+    assert!(eng.future_done(ready));
+    let peak = eng.core.metrics.value(keys::PFS_MAX_CONCURRENT);
+    assert!(
+        peak <= 1.0,
+        "same-file sessions share one shard and must stay fully sequenced, saw {peak}"
+    );
+    assert!(eng.core.metrics.counter(keys::GOV_THROTTLED) > 0, "cap 1 must defer demand");
+    let sessions: Vec<Session> = eng
+        .take_future(ready)
+        .into_iter()
+        .map(|(_, mut p)| p.take::<Session>())
+        .collect();
+    for s in sessions {
+        close_session(&mut eng, &io, s.id);
+    }
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+}
+
+// ---------------------------------------------------------------------
+// 3. Teardown with tickets in flight on a shard whose file is closing
+// ---------------------------------------------------------------------
+
+const EP_GO: Ep = 1;
+const EP_OPENED: Ep = 2;
+const EP_READY: Ep = 3;
+const EP_DATA: Ep = 4;
+const EP_CLOSED: Ep = 5;
+const EP_FCLOSED: Ep = 6;
+
+/// Opens a governed file, starts a session, then issues `n_reads` reads
+/// and the session close *in the same handler* — so the drop races
+/// fetches, in-flight greedy reads, and governor tickets — and finally
+/// closes the file (purging the shard) while late grants and ticket
+/// returns are still landing.
+struct GovernedRacyCloser {
+    io: CkIo,
+    file: FileId,
+    size: u64,
+    n_reads: u32,
+    reads_seen: u32,
+    closed: bool,
+    file_closed: bool,
+    done: Callback,
+}
+
+impl GovernedRacyCloser {
+    fn maybe_done(&mut self, ctx: &mut Ctx<'_>) {
+        if self.file_closed && self.reads_seen == self.n_reads {
+            let done = self.done.clone();
+            ctx.fire(done, Payload::empty());
+        }
+    }
+}
+
+impl Chare for GovernedRacyCloser {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_GO => {
+                let me = ctx.me();
+                let (io, file, size) = (self.io, self.file, self.size);
+                let opts = Options {
+                    num_readers: Some(4),
+                    splinter_bytes: Some(64 << 10),
+                    max_inflight_reads: Some(1),
+                    ..Default::default()
+                };
+                io.open(ctx, file, size, opts, Callback::to_chare(me, EP_OPENED));
+            }
+            EP_OPENED => {
+                let me = ctx.me();
+                let (io, file, size) = (self.io, self.file, self.size);
+                io.start_read_session(ctx, file, 0, size, Callback::to_chare(me, EP_READY));
+            }
+            EP_READY => {
+                let s: Session = msg.take();
+                let me = ctx.me();
+                let io = self.io;
+                // Reads and the close depart together: with cap 1 and 64
+                // KiB splinters, nearly all greedy demand is still queued
+                // at (or in flight through) the shard's governor when the
+                // drop lands.
+                let per = self.size / self.n_reads as u64;
+                for i in 0..self.n_reads as u64 {
+                    io.read(ctx, &s, i * per, per, Callback::to_chare(me, EP_DATA));
+                }
+                io.close_read_session(ctx, s.id, Callback::to_chare(me, EP_CLOSED));
+            }
+            EP_DATA => {
+                let r: ReadResult = msg.take();
+                assert!(r.len > 0);
+                self.reads_seen += 1;
+                assert!(self.reads_seen <= self.n_reads, "a read callback fired twice");
+                self.maybe_done(ctx);
+            }
+            EP_CLOSED => {
+                assert!(!self.closed, "close callback fired twice");
+                self.closed = true;
+                // Close the file immediately: the shard purge races the
+                // buffers' unclaims and the governor's grant/return
+                // cycle for the tickets still parked there.
+                let me = ctx.me();
+                let (io, file) = (self.io, self.file);
+                io.close(ctx, file, Callback::to_chare(me, EP_FCLOSED));
+            }
+            EP_FCLOSED => {
+                self.file_closed = true;
+                self.maybe_done(ctx);
+            }
+            other => panic!("GovernedRacyCloser: unknown ep {other}"),
+        }
+    }
+    impl_chare_any!();
+}
+
+#[test]
+fn teardown_drains_inflight_tickets_on_a_closing_shard() {
+    let (mut eng, files, io) = verified_engine(1, MIB);
+    let fut = eng.future(1);
+    let c = eng.create_singleton(Pe(1), GovernedRacyCloser {
+        io,
+        file: files[0],
+        size: MIB,
+        n_reads: 8,
+        reads_seen: 0,
+        closed: false,
+        file_closed: false,
+        done: Callback::Future(fut),
+    });
+    eng.inject_signal(c, EP_GO);
+    eng.run(); // must quiesce: every ticket returned, every grant resolved
+    assert!(eng.future_done(fut), "reads or closes never completed");
+    let closer: &GovernedRacyCloser = eng.chare(c);
+    assert_eq!(closer.reads_seen, 8, "every outstanding read completes exactly once");
+    assert!(closer.closed && closer.file_closed);
+    // The shard holds no residue: no leaked tickets, no stranded
+    // demand, no claims or parked arrays for the purged file.
+    assert_service_clean(&eng, &io);
+    assert!(claims_per_shard(&eng, &io, files[0]).iter().all(|&c| c == 0));
+    assert_eq!(io.cached_buffer_arrays(&eng), 0);
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
+}

@@ -98,7 +98,7 @@ fn parked_array_split_serves_partial_overlap() {
     close_session(&mut eng, &io, sa.id);
     let pfs_after_a = eng.core.metrics.counter("pfs.bytes_read");
     assert_eq!(pfs_after_a, size / 2, "session A reads exactly its half");
-    assert_eq!(eng.chare::<Director>(io.director).cached_buffer_arrays(), 1);
+    assert_eq!(io.cached_buffer_arrays(&eng), 1);
 
     // Session B spans the whole file: its first half is served from A's
     // parked array (split serve), only the second half hits the PFS.
@@ -122,9 +122,8 @@ fn parked_array_split_serves_partial_overlap() {
     io.close_file_driver(&mut eng, file, Callback::Future(cfut));
     eng.run();
     assert!(eng.future_done(cfut));
-    let director: &Director = eng.chare(io.director);
-    assert_eq!(director.cached_buffer_arrays(), 0, "file close purges parked arrays");
-    assert_eq!(director.open_files(), 0);
+    assert_eq!(io.cached_buffer_arrays(&eng), 0, "file close purges parked arrays");
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
 }
 
 /// The resident/PFS split lands exactly on a stripe boundary: a parked
@@ -177,6 +176,9 @@ fn eviction_racing_a_pending_close_stays_correct() {
         splinter_bytes: Some(128 << 10),
         reuse_buffers: true,
         store_budget_bytes: Some(MIB), // exactly one parked half-file array
+        // One shard: the budget is split per shard, and this test's
+        // arithmetic is about the single-plane (PR 2) semantics.
+        data_plane_shards: Some(1),
         ..Default::default()
     };
     io.open_driver(&mut eng, file, size, opts, Callback::Ignore);
@@ -210,9 +212,8 @@ fn eviction_racing_a_pending_close_stays_correct() {
         eng.core.metrics.counter("ckio.store.evicted_bytes") >= MIB,
         "parking B over a 1 MiB budget must evict A"
     );
-    let director: &Director = eng.chare(io.director);
     assert!(
-        director.span_store().resident_bytes() <= MIB,
+        io.store_resident_bytes(&eng) <= MIB,
         "resident bytes exceed the configured budget"
     );
 
