@@ -43,7 +43,11 @@ fn main() -> anyhow::Result<()> {
     }
 
     let file_bytes = std::fs::metadata(&path)?.len();
-    println!("\n=== input phase: {} TreePieces reading {} ===", n_tp, ckio::util::human_bytes(file_bytes));
+    println!(
+        "\n=== input phase: {} TreePieces reading {} ===",
+        n_tp,
+        ckio::util::human_bytes(file_bytes)
+    );
     let mut ckio_report = None;
     for scheme in [Scheme::Unopt, Scheme::HandOpt, Scheme::CkIo] {
         let rep = run_changa_e2e(&path, n_tp, scheme, 0, threads, &artifact_dir)?;

@@ -80,7 +80,13 @@ impl Chare for Leader {
             EP_L_GO => {
                 let me = ctx.me();
                 let (io, file, size) = (self.io, self.file, self.file_size);
-                io.open(ctx, file, size, Options::with_readers(8), Callback::to_chare(me, EP_L_OPENED));
+                io.open(
+                    ctx,
+                    file,
+                    size,
+                    Options::with_readers(8),
+                    Callback::to_chare(me, EP_L_OPENED),
+                );
             }
             EP_L_OPENED => self.start_session(ctx),
             EP_L_SESSION_READY => {

@@ -37,9 +37,13 @@ impl Payload {
     /// the wrong entry point is a programming error, as in Charm++.
     pub fn take<T: Any>(&mut self) -> T {
         let boxed = self.0.take().expect("payload already taken / empty");
-        *boxed
-            .downcast::<T>()
-            .unwrap_or_else(|b| panic!("payload type mismatch: wanted {}, got {:?}", std::any::type_name::<T>(), (*b).type_id()))
+        *boxed.downcast::<T>().unwrap_or_else(|b| {
+            panic!(
+                "payload type mismatch: wanted {}, got {:?}",
+                std::any::type_name::<T>(),
+                (*b).type_id()
+            )
+        })
     }
 
     /// Borrow the value without consuming it.

@@ -71,7 +71,8 @@ pub fn run_changa_input(
         compute: None,
         input_done: Callback::Future(fut),
     };
-    let pieces = eng.create_array(n_tp, &Placement::RoundRobinPes, |i| TreePiece::new(cfg.clone(), i));
+    let pieces =
+        eng.create_array(n_tp, &Placement::RoundRobinPes, |i| TreePiece::new(cfg.clone(), i));
     for i in 0..n_tp {
         eng.chare_mut::<TreePiece>(ChareRef::new(pieces, i)).pieces = pieces;
     }
@@ -143,7 +144,8 @@ pub fn run_changa_e2e(
         compute: Some(compute),
         input_done: Callback::Future(fut),
     };
-    let pieces = eng.create_array(n_tp, &Placement::RoundRobinPes, |i| TreePiece::new(cfg.clone(), i));
+    let pieces =
+        eng.create_array(n_tp, &Placement::RoundRobinPes, |i| TreePiece::new(cfg.clone(), i));
     for i in 0..n_tp {
         eng.chare_mut::<TreePiece>(ChareRef::new(pieces, i)).pieces = pieces;
     }
@@ -163,7 +165,11 @@ pub fn run_changa_e2e(
         let sfut = eng.future(n_tp);
         let t = std::time::Instant::now();
         for i in 0..n_tp {
-            eng.inject(ChareRef::new(pieces, i), super::treepiece::EP_TP_STEP, Callback::Future(sfut));
+            eng.inject(
+                ChareRef::new(pieces, i),
+                super::treepiece::EP_TP_STEP,
+                Callback::Future(sfut),
+            );
         }
         eng.run();
         anyhow::ensure!(eng.future_done(sfut), "step incomplete");

@@ -168,7 +168,11 @@ pub fn write_bytes(h: &Header, particles: &[Particle]) -> Vec<u8> {
 }
 
 /// Write a synthetic Tipsy file to disk; returns the header.
-pub fn write_file(path: impl AsRef<std::path::Path>, nbodies: u64, seed: u64) -> std::io::Result<Header> {
+pub fn write_file(
+    path: impl AsRef<std::path::Path>,
+    nbodies: u64,
+    seed: u64,
+) -> std::io::Result<Header> {
     let h = default_header(nbodies);
     let particles = generate(nbodies, seed);
     std::fs::write(path, write_bytes(&h, &particles))?;

@@ -80,7 +80,13 @@ impl ReadAssembler {
         ctx.advance(300 + (a.len as f64 * 0.0125) as Time);
         ctx.fire(
             a.after,
-            Payload::new(ReadResult { session: a.session, offset: a.offset, len: a.len, chunk, tag }),
+            Payload::new(ReadResult {
+                session: a.session,
+                offset: a.offset,
+                len: a.len,
+                chunk,
+                tag,
+            }),
         );
     }
 

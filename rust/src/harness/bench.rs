@@ -68,7 +68,8 @@ impl Table {
             .map(|(i, h)| format!("{:>w$}", h, w = widths[i]))
             .collect();
         let _ = writeln!(out, "{}", hdr.join("  "));
-        let _ = writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        let _ =
+            writeln!(out, "{}", "-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
         for row in &self.rows {
             let cells: Vec<String> = row
                 .iter()
@@ -86,7 +87,11 @@ impl Table {
     }
 
     /// Write as CSV under `dir` (created if needed), named `<slug>.csv`.
-    pub fn write_csv(&self, dir: impl AsRef<Path>, slug: &str) -> std::io::Result<std::path::PathBuf> {
+    pub fn write_csv(
+        &self,
+        dir: impl AsRef<Path>,
+        slug: &str,
+    ) -> std::io::Result<std::path::PathBuf> {
         std::fs::create_dir_all(dir.as_ref())?;
         let path = dir.as_ref().join(format!("{slug}.csv"));
         let mut f = std::fs::File::create(&path)?;

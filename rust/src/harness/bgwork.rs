@@ -99,7 +99,8 @@ mod tests {
     fn quota_mode_runs_exactly_n() {
         let mut eng = Engine::new(EngineConfig::sim(1, 1));
         let fut = eng.future(1);
-        let w = eng.create_singleton(Pe(0), BgWorker::new(10 * MICROS, Some(100), Callback::Future(fut)));
+        let w = eng
+            .create_singleton(Pe(0), BgWorker::new(10 * MICROS, Some(100), Callback::Future(fut)));
         eng.inject_signal(w, EP_BG_START);
         let end = eng.run();
         let mut got = eng.take_future(fut);
@@ -112,7 +113,8 @@ mod tests {
     fn stop_mode_reports_partial() {
         let mut eng = Engine::new(EngineConfig::sim(1, 1));
         let fut = eng.future(1);
-        let w = eng.create_singleton(Pe(0), BgWorker::new(10 * MICROS, None, Callback::Future(fut)));
+        let w =
+            eng.create_singleton(Pe(0), BgWorker::new(10 * MICROS, None, Callback::Future(fut)));
         eng.inject_signal(w, EP_BG_START);
         // Stop after some work: inject the stop at time ~0; since
         // injections are immediate, instead drive a bounded quota worker

@@ -149,7 +149,11 @@ mod tests {
     use super::*;
 
     fn setup() -> (Network, Topology, Metrics) {
-        (Network::new(NetConfig::default(), &Topology::new(2, 4)), Topology::new(2, 4), Metrics::new())
+        (
+            Network::new(NetConfig::default(), &Topology::new(2, 4)),
+            Topology::new(2, 4),
+            Metrics::new(),
+        )
     }
 
     #[test]

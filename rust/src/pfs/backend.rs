@@ -91,7 +91,9 @@ impl LocalDisk {
                             Ok(WorkerMsg::Read(job)) => {
                                 let file = handles
                                     .entry(job.path.clone())
-                                    .or_insert_with(|| File::open(&job.path).expect("open data file"));
+                                    .or_insert_with(|| {
+                                        File::open(&job.path).expect("open data file")
+                                    });
                                 let mut buf = vec![0u8; job.req.len as usize];
                                 file.seek(SeekFrom::Start(job.req.offset)).expect("seek");
                                 file.read_exact(&mut buf).expect("pread");
@@ -195,7 +197,12 @@ mod tests {
             let r = &c.result;
             assert_eq!(r.len, 128 << 10);
             let bytes = r.chunk.bytes.as_ref().unwrap();
-            assert_eq!(pattern::verify(FileId(0), r.offset, bytes), None, "corrupt read at {}", r.offset);
+            assert_eq!(
+                pattern::verify(FileId(0), r.offset, bytes),
+                None,
+                "corrupt read at {}",
+                r.offset
+            );
             seen[r.user as usize] = true;
         }
         assert!(seen.iter().all(|&s| s));

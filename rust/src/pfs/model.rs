@@ -172,7 +172,12 @@ impl SimPfs {
     }
 
     /// Register a file with explicit striping.
-    pub fn create_file_striped(&mut self, size: u64, stripe_count: u32, stripe_size: u64) -> FileId {
+    pub fn create_file_striped(
+        &mut self,
+        size: u64,
+        stripe_count: u32,
+        stripe_size: u64,
+    ) -> FileId {
         assert!(size > 0);
         let id = FileId(self.files.len() as u32);
         let first_ost = self.next_first_ost;
@@ -365,7 +370,10 @@ impl SimPfs {
 mod tests {
     use super::*;
 
-    fn run_to_completion(pfs: &mut SimPfs, submits: Vec<(Time, Pe, u32, ReadRequest)>) -> Vec<(Time, Done)> {
+    fn run_to_completion(
+        pfs: &mut SimPfs,
+        submits: Vec<(Time, Pe, u32, ReadRequest)>,
+    ) -> Vec<(Time, Done)> {
         // Tiny standalone event loop driving just the PFS model.
         let mut metrics = Metrics::new();
         let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(Time, u64, usize)>> =

@@ -97,7 +97,11 @@ mod tests {
             for len in [1u64, 3, 8, 13, 64] {
                 let whole = make(FileId(4), 0, off + len + 8);
                 let part = make(FileId(4), off, len);
-                assert_eq!(&whole[off as usize..(off + len) as usize], &part[..], "off={off} len={len}");
+                assert_eq!(
+                    &whole[off as usize..(off + len) as usize],
+                    &part[..],
+                    "off={off} len={len}"
+                );
             }
         }
     }

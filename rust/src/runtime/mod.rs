@@ -92,7 +92,9 @@ impl ArtifactRuntime {
             .with_context(|| format!("artifact dir {}", dir.as_ref().display()))?;
         let mut paths: Vec<PathBuf> = rd
             .filter_map(|e| e.ok().map(|e| e.path()))
-            .filter(|p| p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.ends_with(".hlo.txt")))
+            .filter(|p| {
+                p.file_name().and_then(|n| n.to_str()).is_some_and(|n| n.ends_with(".hlo.txt"))
+            })
             .collect();
         paths.sort();
         for p in paths {
@@ -139,7 +141,12 @@ impl ArtifactRuntime {
                     let t = inputs
                         .get(idx)
                         .cloned()
-                        .ok_or_else(|| anyhow!("artifact {name:?} wants parameter {idx}, got {} inputs", inputs.len()))?;
+                        .ok_or_else(|| {
+                            anyhow!(
+                                "artifact {name:?} wants parameter {idx}, got {} inputs",
+                                inputs.len()
+                            )
+                        })?;
                     env.insert(&instr.name, t);
                 }
                 "tuple" => {
@@ -152,8 +159,10 @@ impl ArtifactRuntime {
                     }
                 }
                 "add" | "subtract" | "multiply" | "divide" | "maximum" | "minimum" => {
-                    let a = lookup(&env, instr.args.first().map(|s| s.as_str()).unwrap_or(""), name)?;
-                    let b = lookup(&env, instr.args.get(1).map(|s| s.as_str()).unwrap_or(""), name)?;
+                    let a =
+                        lookup(&env, instr.args.first().map(|s| s.as_str()).unwrap_or(""), name)?;
+                    let b =
+                        lookup(&env, instr.args.get(1).map(|s| s.as_str()).unwrap_or(""), name)?;
                     if a.data.len() != b.data.len() {
                         return Err(anyhow!(
                             "shape mismatch in {name:?}: {} vs {} elements for {}",
@@ -170,7 +179,8 @@ impl ArtifactRuntime {
                         "maximum" => f32::max,
                         _ => f32::min,
                     };
-                    let data: Vec<f32> = a.data.iter().zip(b.data.iter()).map(|(&x, &y)| f(x, y)).collect();
+                    let data: Vec<f32> =
+                        a.data.iter().zip(b.data.iter()).map(|(&x, &y)| f(x, y)).collect();
                     let t = TensorF32 { dims: instr.dims.clone(), data };
                     if instr.root {
                         outputs = Some(vec![t.clone()]);
@@ -178,7 +188,8 @@ impl ArtifactRuntime {
                     env.insert(&instr.name, t);
                 }
                 "negate" | "exponential" | "copy" => {
-                    let a = lookup(&env, instr.args.first().map(|s| s.as_str()).unwrap_or(""), name)?;
+                    let a =
+                        lookup(&env, instr.args.first().map(|s| s.as_str()).unwrap_or(""), name)?;
                     let f: fn(f32) -> f32 = match instr.op.as_str() {
                         "negate" => |x| -x,
                         "exponential" => f32::exp,
@@ -204,7 +215,11 @@ impl ArtifactRuntime {
     }
 }
 
-fn lookup<'e>(env: &'e HashMap<&str, TensorF32>, name: &str, artifact: &str) -> Result<&'e TensorF32> {
+fn lookup<'e>(
+    env: &'e HashMap<&str, TensorF32>,
+    name: &str,
+    artifact: &str,
+) -> Result<&'e TensorF32> {
     env.get(name)
         .ok_or_else(|| anyhow!("artifact {artifact:?}: operand {name:?} not defined yet"))
 }

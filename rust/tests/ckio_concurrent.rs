@@ -63,7 +63,13 @@ impl Chare for RacyCloser {
             EP_GO => {
                 let me = ctx.me();
                 let (io, file, size) = (self.io, self.file, self.size);
-                io.open(ctx, file, size, Options::with_readers(4), Callback::to_chare(me, EP_OPENED));
+                io.open(
+                    ctx,
+                    file,
+                    size,
+                    Options::with_readers(4),
+                    Callback::to_chare(me, EP_OPENED),
+                );
             }
             EP_OPENED => {
                 let me = ctx.me();
@@ -278,8 +284,26 @@ fn concurrent_verified_sessions_with_boundary_crossing_splinters() {
     };
     let fut = eng.future(3 * 3); // 3 sessions x 3 clients
     let leaders = [
-        spawn_verified_session(&mut eng, io, file_a, size, 3, opts.clone(), true, Callback::Future(fut)),
-        spawn_verified_session(&mut eng, io, file_b, size, 3, opts.clone(), true, Callback::Future(fut)),
+        spawn_verified_session(
+            &mut eng,
+            io,
+            file_a,
+            size,
+            3,
+            opts.clone(),
+            true,
+            Callback::Future(fut),
+        ),
+        spawn_verified_session(
+            &mut eng,
+            io,
+            file_b,
+            size,
+            3,
+            opts.clone(),
+            true,
+            Callback::Future(fut),
+        ),
         spawn_verified_session(&mut eng, io, file_a, size, 3, opts, true, Callback::Future(fut)),
     ];
     for l in leaders {
@@ -321,7 +345,16 @@ fn repeated_session_with_reuse_reads_the_file_once() {
 
     // Session 1 (does not drop the file ref).
     let fut1 = eng.future(2);
-    let l1 = spawn_verified_session(&mut eng, io, file, size, 2, opts.clone(), false, Callback::Future(fut1));
+    let l1 = spawn_verified_session(
+        &mut eng,
+        io,
+        file,
+        size,
+        2,
+        opts.clone(),
+        false,
+        Callback::Future(fut1),
+    );
     eng.inject_signal(l1, EP_GO);
     eng.run();
     assert!(eng.future_done(fut1));
@@ -331,7 +364,8 @@ fn repeated_session_with_reuse_reads_the_file_once() {
 
     // Session 2, identical shape: the parked array is rebound.
     let fut2 = eng.future(2);
-    let l2 = spawn_verified_session(&mut eng, io, file, size, 2, opts, false, Callback::Future(fut2));
+    let l2 =
+        spawn_verified_session(&mut eng, io, file, size, 2, opts, false, Callback::Future(fut2));
     eng.inject_signal(l2, EP_GO);
     eng.run();
     assert!(eng.future_done(fut2));
@@ -390,7 +424,16 @@ fn governor_cap_one_sequences_two_sessions_and_loses_no_callback() {
     };
     let fut = eng.future(2 * 2); // 2 sessions x 2 clients
     let leaders = [
-        spawn_verified_session(&mut eng, io, file_a, size, 2, opts.clone(), true, Callback::Future(fut)),
+        spawn_verified_session(
+            &mut eng,
+            io,
+            file_a,
+            size,
+            2,
+            opts.clone(),
+            true,
+            Callback::Future(fut),
+        ),
         spawn_verified_session(&mut eng, io, file_b, size, 2, opts, true, Callback::Future(fut)),
     ];
     for l in leaders {
@@ -431,10 +474,20 @@ fn concurrent_same_file_sessions_read_the_file_once() {
     let size: u64 = 3 << 20;
     let file = eng.core.sim_pfs_mut().create_file(size);
     let io = CkIo::boot(&mut eng);
-    let opts = Options { num_readers: Some(4), splinter_bytes: Some(128 << 10), ..Default::default() };
+    let opts =
+        Options { num_readers: Some(4), splinter_bytes: Some(128 << 10), ..Default::default() };
     let fut = eng.future(2 * 3); // 2 sessions x 3 clients
     let leaders = [
-        spawn_verified_session(&mut eng, io, file, size, 3, opts.clone(), true, Callback::Future(fut)),
+        spawn_verified_session(
+            &mut eng,
+            io,
+            file,
+            size,
+            3,
+            opts.clone(),
+            true,
+            Callback::Future(fut),
+        ),
         spawn_verified_session(&mut eng, io, file, size, 3, opts, true, Callback::Future(fut)),
     ];
     for l in leaders {
@@ -476,8 +529,26 @@ fn concurrent_same_file_opens_share_one_open_and_refcount_closes() {
     // Two independent single-client sessions over the same file, started
     // simultaneously: their opens race, their closes race.
     let fut = eng.future(2);
-    let l1 = spawn_verified_session(&mut eng, io, file, size, 1, Options::with_readers(2), true, Callback::Future(fut));
-    let l2 = spawn_verified_session(&mut eng, io, file, size, 1, Options::with_readers(2), true, Callback::Future(fut));
+    let l1 = spawn_verified_session(
+        &mut eng,
+        io,
+        file,
+        size,
+        1,
+        Options::with_readers(2),
+        true,
+        Callback::Future(fut),
+    );
+    let l2 = spawn_verified_session(
+        &mut eng,
+        io,
+        file,
+        size,
+        1,
+        Options::with_readers(2),
+        true,
+        Callback::Future(fut),
+    );
     eng.inject_signal(l1, EP_GO);
     eng.inject_signal(l2, EP_GO);
     eng.run();

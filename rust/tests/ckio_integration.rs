@@ -73,7 +73,13 @@ impl Chare for Client {
             EP_OPENED => {
                 let me = ctx.me();
                 self.io
-                    .start_read_session(ctx, self.file, 0, self.file_size, Callback::to_chare(me, EP_READY));
+                    .start_read_session(
+                        ctx,
+                        self.file,
+                        0,
+                        self.file_size,
+                        Callback::to_chare(me, EP_READY),
+                    );
             }
             EP_READY => {
                 let s: Session = msg.take();
@@ -270,7 +276,13 @@ fn splintered_session_serves_early() {
                     }
                     EP_OPENED => {
                         let me = ctx.me();
-                        self.io.start_read_session(ctx, self.file, 0, self.size, Callback::to_chare(me, EP_READY));
+                        self.io.start_read_session(
+                            ctx,
+                            self.file,
+                            0,
+                            self.size,
+                            Callback::to_chare(me, EP_READY),
+                        );
                     }
                     EP_READY => {
                         let s: Session = msg.take();
@@ -323,12 +335,24 @@ fn session_close_releases_and_acks() {
                 EP_GO => {
                     let me = ctx.me();
                     self.io
-                        .open(ctx, self.file, self.size, Options::with_readers(2), Callback::to_chare(me, EP_OPENED));
+                        .open(
+                            ctx,
+                            self.file,
+                            self.size,
+                            Options::with_readers(2),
+                            Callback::to_chare(me, EP_OPENED),
+                        );
                 }
                 EP_OPENED => {
                     let me = ctx.me();
                     self.io
-                        .start_read_session(ctx, self.file, 0, self.size, Callback::to_chare(me, EP_READY));
+                        .start_read_session(
+                            ctx,
+                            self.file,
+                            0,
+                            self.size,
+                            Callback::to_chare(me, EP_READY),
+                        );
                 }
                 EP_READY => {
                     let s: Session = msg.take();
@@ -355,7 +379,8 @@ fn session_close_releases_and_acks() {
     let file = eng.core.sim_pfs_mut().create_file(16 << 20);
     let io = CkIo::boot(&mut eng);
     let fut = eng.future(1);
-    let c = eng.create_singleton(Pe(2), Closer { io, file, size: 16 << 20, done: Callback::Future(fut) });
+    let c = eng
+        .create_singleton(Pe(2), Closer { io, file, size: 16 << 20, done: Callback::Future(fut) });
     eng.inject_signal(c, EP_GO);
     eng.run();
     assert!(eng.future_done(fut));
@@ -409,7 +434,13 @@ fn buffer_read_starts_before_clients_ask() {
                 EP_GO => {
                     let me = ctx.me();
                     self.io
-                        .open(ctx, self.file, self.size, Options::with_readers(4), Callback::to_chare(me, EP_OPENED));
+                        .open(
+                            ctx,
+                            self.file,
+                            self.size,
+                            Options::with_readers(4),
+                            Callback::to_chare(me, EP_OPENED),
+                        );
                 }
                 EP_OPENED => {
                     self.io.start_read_session(ctx, self.file, 0, self.size, Callback::Ignore);

@@ -36,7 +36,11 @@ fn prop_session_spans_partition_exactly() {
             let probe = g.range(offset, offset + bytes);
             let b = s.buffer_of(probe);
             let (o, l) = s.buffer_span(b);
-            prop_assert!(probe >= o && probe < o + l, "buffer_of({probe})={b} span [{o},{})", o + l);
+            prop_assert!(
+                probe >= o && probe < o + l,
+                "buffer_of({probe})={b} span [{o},{})",
+                o + l
+            );
         }
         Ok(())
     });
@@ -145,7 +149,8 @@ impl Chare for FuzzClient {
         match msg.ep {
             EP_GO => {
                 let me = ctx.me();
-                let (io, file, size, opts) = (self.io, self.file, self.file_size, self.opts.clone());
+                let (io, file, size, opts) =
+                    (self.io, self.file, self.file_size, self.opts.clone());
                 io.open(ctx, file, size, opts, Callback::to_chare(me, EP_OPENED));
             }
             EP_OPENED => {
@@ -199,7 +204,8 @@ impl Chare for FuzzClient {
 /// correct contents, and the run quiesces.
 #[test]
 fn prop_ckio_delivers_every_byte_exactly_once() {
-    forall(PropConfig { cases: 40, max_size: 4 << 20, seed: 0xF00D, ..Default::default() }, "ckio_e2e", |g| {
+    let cfg = PropConfig { cases: 40, max_size: 4 << 20, seed: 0xF00D, ..Default::default() };
+    forall(cfg, "ckio_e2e", |g| {
         let nodes = g.range(1, 4) as u32;
         let pes = g.range(1, 4) as u32;
         let file_size = 4096 + g.sized(); // up to ~4 MiB
@@ -303,7 +309,8 @@ fn prop_messages_chase_migrating_chares() {
         let pes = g.range(1, 4) as u32;
         let npes = nodes * pes;
         let n_msgs = g.range(1, 40) as u32;
-        let hops: Vec<Pe> = (0..g.range(0, 20)).map(|_| Pe(g.range(0, npes as u64) as u32)).collect();
+        let hops: Vec<Pe> =
+            (0..g.range(0, 20)).map(|_| Pe(g.range(0, npes as u64) as u32)).collect();
 
         let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(g.range(0, 1 << 20)));
         let fut = eng.future(1);
@@ -347,7 +354,13 @@ fn close_session_races_inflight_prefetch() {
                 EP_GO => {
                     let me = ctx.me();
                     let (io, file, size) = (self.io, self.file, self.size);
-                    io.open(ctx, file, size, Options::with_readers(4), Callback::to_chare(me, EP_OPENED));
+                    io.open(
+                        ctx,
+                        file,
+                        size,
+                        Options::with_readers(4),
+                        Callback::to_chare(me, EP_OPENED),
+                    );
                 }
                 EP_OPENED => {
                     let me = ctx.me();
@@ -376,7 +389,8 @@ fn close_session_races_inflight_prefetch() {
     let file = eng.core.sim_pfs_mut().create_file(1 << 30);
     let io = CkIo::boot(&mut eng);
     let fut = eng.future(1);
-    let c = eng.create_singleton(Pe(1), Closer { io, file, size: 1 << 30, done: Callback::Future(fut) });
+    let c = eng
+        .create_singleton(Pe(1), Closer { io, file, size: 1 << 30, done: Callback::Future(fut) });
     eng.inject_signal(c, EP_GO);
     eng.run(); // must quiesce without panicking on late completions
     assert!(eng.future_done(fut));
@@ -418,10 +432,12 @@ fn early_reads_are_buffered_by_manager() {
 #[test]
 fn degenerate_shapes() {
     // 1-byte file, 1 client, 1 reader.
-    let (t, eng) = ckio::harness::experiments::run_ckio_read(1, 1, 1, 1, Options::with_readers(1), 3);
+    let (t, eng) =
+        ckio::harness::experiments::run_ckio_read(1, 1, 1, 1, Options::with_readers(1), 3);
     assert!(t > 0);
     assert_eq!(eng.core.metrics.counter("ckio.bytes_delivered"), 1);
     // More readers than bytes: clamped, still correct.
-    let (_, eng) = ckio::harness::experiments::run_ckio_read(1, 2, 7, 3, Options::with_readers(64), 4);
+    let (_, eng) =
+        ckio::harness::experiments::run_ckio_read(1, 2, 7, 3, Options::with_readers(64), 4);
     assert_eq!(eng.core.metrics.counter("ckio.bytes_delivered"), 7);
 }
