@@ -31,6 +31,7 @@ fn main() {
         ("svc_concurrent", Box::new(move || exp::svc_concurrent(reps))),
         ("svc_shared", Box::new(move || exp::svc_shared(reps))),
         ("svc_churn", Box::new(move || exp::svc_churn(reps))),
+        ("svc_locality", Box::new(move || exp::svc_locality(reps))),
     ];
 
     let total = std::time::Instant::now();
@@ -42,24 +43,28 @@ fn main() {
         let table = f();
         table.print();
         match table.write_csv("bench_out", slug) {
-            Ok(p) => println!("[csv] {} ({:.1}s wall)\n", p.display(), started.elapsed().as_secs_f64()),
+            Ok(p) => {
+                println!("[csv] {} ({:.1}s wall)\n", p.display(), started.elapsed().as_secs_f64())
+            }
             Err(e) => eprintln!("csv write failed for {slug}: {e}"),
         }
     }
-    // Machine-readable perf anchor for the sharded data-plane work
-    // (PR 3: svc_concurrent continuity + svc_shared dedup + svc_churn
-    // shard sweep + adaptive-governor feedback + store/governor/shard
-    // keys). Any svc filter triggers it — the JSON has every section.
+    // Machine-readable perf anchor for the service-scaling work (PR 4:
+    // svc_concurrent continuity + svc_shared dedup + svc_churn shard
+    // sweep + adaptive-governor feedback + the svc_locality placement
+    // pair, with the store/governor/shard/placement keys). Any svc
+    // filter triggers it — the JSON has every section.
     if wanted.is_empty()
         || wanted.iter().any(|w| {
             "svc_shared".contains(w.as_str())
                 || "svc_concurrent".contains(w.as_str())
                 || "svc_churn".contains(w.as_str())
+                || "svc_locality".contains(w.as_str())
         })
     {
-        match std::fs::write("BENCH_pr3.json", exp::bench_pr3_json(reps)) {
-            Ok(()) => println!("[json] BENCH_pr3.json"),
-            Err(e) => eprintln!("BENCH_pr3.json write failed: {e}"),
+        match std::fs::write("BENCH_pr4.json", exp::bench_pr4_json(reps)) {
+            Ok(()) => println!("[json] BENCH_pr4.json"),
+            Err(e) => eprintln!("BENCH_pr4.json write failed: {e}"),
         }
     }
     println!("total bench wall time: {:.1}s", total.elapsed().as_secs_f64());

@@ -210,12 +210,22 @@ impl Core {
     fn fire_at(&mut self, t: Time, callback: Callback, payload: Payload, from_pe: Pe) {
         match callback {
             Callback::Chare { to, ep } => {
-                let env = Envelope { to, msg: Msg { ep, payload }, wire_bytes: CONTROL_MSG_BYTES, from_pe };
+                let env = Envelope {
+                    to,
+                    msg: Msg { ep, payload },
+                    wire_bytes: CONTROL_MSG_BYTES,
+                    from_pe,
+                };
                 self.schedule_send(t, env, Transfer::Eager);
             }
             Callback::Group { collection, pe, ep } => {
                 let to = ChareRef::new(collection, pe.0);
-                let env = Envelope { to, msg: Msg { ep, payload }, wire_bytes: CONTROL_MSG_BYTES, from_pe };
+                let env = Envelope {
+                    to,
+                    msg: Msg { ep, payload },
+                    wire_bytes: CONTROL_MSG_BYTES,
+                    from_pe,
+                };
                 self.schedule_send(t, env, Transfer::Eager);
             }
             Callback::Broadcast { collection, ep } => {
@@ -318,6 +328,14 @@ impl Core {
         self.collections[cid.0 as usize].size
     }
 
+    /// Events currently scheduled (deliveries, task runs, PFS events).
+    /// Boot-time wiring uses this to assert nothing is in flight yet —
+    /// i.e. that a pre-run patch of chare state cannot be observed by
+    /// any message.
+    pub fn pending_events(&self) -> usize {
+        self.heap.len()
+    }
+
     /// Dense slot of a chare (collection base + index).
     #[inline]
     fn slot(&self, cref: ChareRef) -> usize {
@@ -415,7 +433,14 @@ impl<'a> Ctx<'a> {
 
     /// Send with an explicit modeled wire size and transfer class —
     /// the data plane (CkIO chunk delivery) uses this.
-    pub fn send_sized(&mut self, to: ChareRef, ep: Ep, payload: Payload, wire_bytes: u64, class: Transfer) {
+    pub fn send_sized(
+        &mut self,
+        to: ChareRef,
+        ep: Ep,
+        payload: Payload,
+        wire_bytes: u64,
+        class: Transfer,
+    ) {
         self.sends.push((
             Envelope { to, msg: Msg { ep, payload }, wire_bytes, from_pe: self.pe },
             class,
@@ -1113,7 +1138,12 @@ mod tests {
                     EP_START => {
                         let me = ctx.me();
                         ctx.submit_read(
-                            ReadRequest { file: crate::pfs::FileId(0), offset: 4096, len: 64 << 10, user: 42 },
+                            ReadRequest {
+                                file: crate::pfs::FileId(0),
+                                offset: 4096,
+                                len: 64 << 10,
+                                user: 42,
+                            },
                             Callback::to_chare(me, EP_DATA),
                         );
                     }
@@ -1157,7 +1187,12 @@ mod tests {
                     EP_START => {
                         let me = ctx.me();
                         ctx.submit_read(
-                            ReadRequest { file: crate::pfs::FileId(0), offset: 0, len: 128 << 10, user: 0 },
+                            ReadRequest {
+                                file: crate::pfs::FileId(0),
+                                offset: 0,
+                                len: 128 << 10,
+                                user: 0,
+                            },
                             Callback::to_chare(me, EP_DATA),
                         );
                     }

@@ -15,7 +15,7 @@
 //! variants inject from outside the chare world (experiment setup).
 
 use crate::amt::callback::Callback;
-use crate::amt::chare::{ChareRef, CollectionId};
+use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::{Ctx, Engine};
 use crate::amt::topology::{Pe, Placement};
 use crate::pfs::layout::FileId;
@@ -46,6 +46,29 @@ pub struct CkIo {
     pub nshards: u32,
 }
 
+/// Patch the freshly created director's `ChareRef` into every element of
+/// a booted collection (managers, data-plane shards). Boot wiring only:
+/// the collections are created with a placeholder ref because the
+/// director does not exist yet, and this helper is the single place that
+/// replaces it — asserting the engine has **no event in flight**, so no
+/// message can ever observe the placeholder.
+fn patch_director<T: Chare>(
+    engine: &mut Engine,
+    cid: CollectionId,
+    n: u32,
+    director: ChareRef,
+    field: impl Fn(&mut T) -> &mut ChareRef,
+) {
+    assert_eq!(
+        engine.core.pending_events(),
+        0,
+        "director patching must complete before any message is in flight"
+    );
+    for i in 0..n {
+        *field(engine.chare_mut::<T>(ChareRef::new(cid, i))) = director;
+    }
+}
+
 impl CkIo {
     /// Install the CkIO service into an engine: the ReadAssembler group,
     /// the Manager group, the data-plane shard array (one element per
@@ -53,8 +76,8 @@ impl CkIo {
     pub fn boot(engine: &mut Engine) -> CkIo {
         let assemblers = engine.create_group(|_| ReadAssembler::default());
         // The director's ChareRef isn't known until created; managers and
-        // shards are patched right after (pre-run, so no message can
-        // observe the placeholder).
+        // shards are patched right after through `patch_director`, which
+        // asserts the placeholder is unobservable.
         let placeholder = ChareRef::new(assemblers, 0);
         let managers = engine.create_group(|pe| Manager::new(placeholder, assemblers, pe.0));
         let npes = engine.core.topo.npes();
@@ -63,12 +86,8 @@ impl CkIo {
             .create_array(nshards, &Placement::RoundRobinPes, |i| DataShard::new(i, placeholder));
         let director = engine
             .create_singleton(Pe(0), Director::new(managers, assemblers, shards, nshards, npes));
-        for pe in 0..npes {
-            engine.chare_mut::<Manager>(ChareRef::new(managers, pe)).director = director;
-        }
-        for s in 0..nshards {
-            engine.chare_mut::<DataShard>(ChareRef::new(shards, s)).director = director;
-        }
+        patch_director::<Manager>(engine, managers, npes, director, |m| &mut m.director);
+        patch_director::<DataShard>(engine, shards, nshards, director, |s| &mut s.director);
         CkIo { director, managers, assemblers, shards, nshards }
     }
 
@@ -124,7 +143,22 @@ impl CkIo {
     /// open's `opts` are not applied while the file is already open. The
     /// handle delivered to `opened` carries the options actually in
     /// effect.
-    pub fn open(&self, ctx: &mut Ctx<'_>, file: FileId, size: u64, opts: Options, opened: Callback) {
+    ///
+    /// Invalid options fail the open (PR 4): if the placement can never
+    /// cover the largest reader count a session of this file could
+    /// resolve to (or a `StoreAware` fallback is itself `StoreAware`),
+    /// `opened` fires with a structured
+    /// [`super::options::OpenError`] instead of a `FileHandle` —
+    /// discriminate with `payload.peek::<OpenError>()`. No file state is
+    /// created anywhere on a rejected open.
+    pub fn open(
+        &self,
+        ctx: &mut Ctx<'_>,
+        file: FileId,
+        size: u64,
+        opts: Options,
+        opened: Callback,
+    ) {
         ctx.send(self.director, EP_DIR_OPEN, OpenMsg { file, size, opts, opened });
     }
 
@@ -139,14 +173,26 @@ impl CkIo {
         bytes: u64,
         ready: Callback,
     ) {
-        ctx.send(self.director, EP_DIR_START_SESSION, StartSessionMsg { file, offset, bytes, ready });
+        ctx.send(self.director, EP_DIR_START_SESSION, StartSessionMsg {
+            file,
+            offset,
+            bytes,
+            ready,
+        });
     }
 
     /// Read `[offset, offset+len)` within a session; `after` receives a
     /// [`super::session::ReadResult`]. Never blocks: the continuation is
     /// enqueued when the data is ready. The call goes through the
     /// *local* manager (same-PE group access).
-    pub fn read(&self, ctx: &mut Ctx<'_>, session: &Session, offset: u64, len: u64, after: Callback) {
+    pub fn read(
+        &self,
+        ctx: &mut Ctx<'_>,
+        session: &Session,
+        offset: u64,
+        len: u64,
+        after: Callback,
+    ) {
         let pe = ctx.pe();
         ctx.send_group(self.managers, pe, EP_M_READ, ReadMsg {
             session: session.id,
@@ -171,7 +217,14 @@ impl CkIo {
     // ------------------------------------------------------------------
 
     /// Driver-side open.
-    pub fn open_driver(&self, engine: &mut Engine, file: FileId, size: u64, opts: Options, opened: Callback) {
+    pub fn open_driver(
+        &self,
+        engine: &mut Engine,
+        file: FileId,
+        size: u64,
+        opts: Options,
+        opened: Callback,
+    ) {
         engine.inject(self.director, EP_DIR_OPEN, OpenMsg { file, size, opts, opened });
     }
 
@@ -184,7 +237,12 @@ impl CkIo {
         bytes: u64,
         ready: Callback,
     ) {
-        engine.inject(self.director, EP_DIR_START_SESSION, StartSessionMsg { file, offset, bytes, ready });
+        engine.inject(self.director, EP_DIR_START_SESSION, StartSessionMsg {
+            file,
+            offset,
+            bytes,
+            ready,
+        });
     }
 
     /// Driver-side session close.

@@ -35,6 +35,20 @@
 //! the returned ticket (`EP_SHARD_IO_DONE`) — the signal the adaptive
 //! cap's AIMD loop feeds on.
 //!
+//! Store-aware placement (PR 4): when the session started under
+//! [`crate::ckio::ReaderPlacement::StoreAware`], this chare was *placed*
+//! by a `PlacementPlan` — the director probed the shard before creating
+//! the array and put the chare on the PE of its dominant peer source, so
+//! the peer fetches above are same-PE copies. The plan is only a
+//! snapshot: registration **confirms-or-corrects** it. The shard's
+//! `EP_BUF_PEERS` reply is authoritative — if it covers fewer bytes than
+//! the plan promised (a claim owner unclaimed in between), the chare
+//! counts `ckio.place.degraded` and the uncovered slots are already in
+//! its PFS queue; nothing asserts and no fetch is ever sent to a peer
+//! the plan imagined but registration did not confirm. Each peer chunk
+//! that lands is charged to `ckio.place.same_pe_fetch` or
+//! `ckio.place.cross_pe_fetch` by comparing the source's PE with ours.
+//!
 //! Lifecycle (PR 1): a buffer chare is `Active` while its session runs.
 //! Teardown *drains* — every queued fetch is answered before the director
 //! is acked (resident extents with real data, the rest with modeled NACK
@@ -152,11 +166,22 @@ pub struct GrantMsg {
     pub n: u32,
 }
 
-/// Shard → buffer: the resolved peer list — `(slot, owning buffer)` for
-/// every splinter slot an existing claim fully covers.
+/// One resolved peer assignment: splinter slot `slot` of the requesting
+/// buffer is served by `owner`, which runs on `owner_pe` — the PE is
+/// what the locality metrics (`ckio.place.same_pe_fetch` /
+/// `cross_pe_fetch`) and store-aware placement planning key on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PeerSlot {
+    pub slot: u32,
+    pub owner: ChareRef,
+    pub owner_pe: u32,
+}
+
+/// Shard → buffer: the resolved peer list — one [`PeerSlot`] for every
+/// splinter slot an existing claim fully covers.
 #[derive(Debug)]
 pub struct PeersMsg {
-    pub peers: Vec<(u32, ChareRef)>,
+    pub peers: Vec<PeerSlot>,
 }
 
 /// Notification to the director that this buffer initiated its reads
@@ -205,8 +230,8 @@ pub struct BufferChare {
     /// Slots to read from the PFS, in issue order (slots assigned to
     /// peers are absent; a peer miss re-queues its slot here).
     pfs_queue: VecDeque<u32>,
-    /// Slots served by peer buffer chares: `(slot, owner)`.
-    peer_slots: Vec<(u32, ChareRef)>,
+    /// Slots served by peer buffer chares.
+    peer_slots: Vec<PeerSlot>,
     /// PFS reads issued and not yet completed.
     pfs_inflight: u32,
     completed: u32,
@@ -225,6 +250,13 @@ pub struct BufferChare {
     /// Whether the shard has answered our registration (PFS issuance
     /// holds until then, so a racing resolve never loses a dedup).
     peers_resolved: bool,
+    /// Store-aware placement plan (PR 4): the peer-covered bytes the
+    /// director's `EP_SHARD_PLAN` probe promised this chare. Registration
+    /// *revalidates* the plan — if the shard's actual peer list covers
+    /// fewer bytes (a claim owner unclaimed between plan and register),
+    /// the shortfall is counted on `ckio.place.degraded` and the
+    /// uncovered slots degrade to ordinary PFS reads.
+    planned_covered: Option<u64>,
     director: ChareRef,
     /// The data-plane shard owning this chare's file.
     shard: ChareRef,
@@ -271,6 +303,7 @@ impl BufferChare {
             asked: 0,
             issued_at: HashMap::new(),
             peers_resolved: false,
+            planned_covered: None,
             director,
             shard,
             assemblers,
@@ -284,7 +317,7 @@ impl BufferChare {
     /// (no claim exists for a chare built this way), so live chares must
     /// always get their peers from the shard after registering.
     #[cfg(test)]
-    fn with_peers(mut self, peers: Vec<(u32, ChareRef)>) -> BufferChare {
+    fn with_peers(mut self, peers: Vec<PeerSlot>) -> BufferChare {
         self.apply_peers(&peers);
         self.peer_slots = peers;
         self.peers_resolved = true;
@@ -292,9 +325,9 @@ impl BufferChare {
     }
 
     /// Remove peer-assigned slots from the PFS queue.
-    fn apply_peers(&mut self, peers: &[(u32, ChareRef)]) {
-        for &(slot, _) in peers {
-            self.pfs_queue.retain(|&s| s != slot);
+    fn apply_peers(&mut self, peers: &[PeerSlot]) {
+        for p in peers {
+            self.pfs_queue.retain(|&s| s != p.slot);
         }
     }
 
@@ -302,6 +335,15 @@ impl BufferChare {
     pub fn governed(mut self, sess_bytes: u64) -> BufferChare {
         self.governed = true;
         self.sess_bytes = sess_bytes;
+        self
+    }
+
+    /// Record the store-aware plan's expectation for this chare: the
+    /// placement plan saw `covered` bytes of its span already claimed by
+    /// peers. Registration confirms-or-corrects this (see
+    /// [`BufferChare::planned_covered`]).
+    pub fn planned(mut self, covered: u64) -> BufferChare {
+        self.planned_covered = Some(covered);
         self
     }
 
@@ -581,6 +623,7 @@ impl Chare for BufferChare {
                         len: self.my_len,
                         splinter: self.splinter,
                         buffer: me,
+                        pe: ctx.pe().0,
                     });
                 }
                 ctx.advance(MICROS);
@@ -598,10 +641,28 @@ impl Chare for BufferChare {
                 // bytes never touch the PFS again.
                 self.peers_resolved = true;
                 self.apply_peers(&m.peers);
+                // Revalidate the store-aware plan (PR 4): the plan was a
+                // snapshot, and a claim owner may have unclaimed between
+                // EP_SHARD_PLAN and this registration. The uncovered
+                // slots are already back in the PFS queue — the
+                // degradation is graceful by construction — but the
+                // shortfall is worth a counter: it measures how often
+                // planned locality evaporated under churn.
+                if let Some(expected) = self.planned_covered {
+                    let actual: u64 =
+                        m.peers.iter().map(|p| self.slot_extent(p.slot).1).sum();
+                    if actual < expected {
+                        ctx.metrics().count(keys::PLACE_DEGRADED, 1);
+                    }
+                }
                 let me = ctx.me();
-                for &(slot, owner) in &m.peers {
-                    let (offset, len) = self.slot_extent(slot);
-                    ctx.send(owner, EP_BUF_PEER_FETCH, PeerFetchMsg { offset, len, slot, reply: me });
+                for p in &m.peers {
+                    let (offset, len) = self.slot_extent(p.slot);
+                    ctx.send(
+                        p.owner,
+                        EP_BUF_PEER_FETCH,
+                        PeerFetchMsg { offset, len, slot: p.slot, reply: me },
+                    );
                 }
                 self.peer_slots = m.peers;
                 // Greedy PFS reads for the unclaimed slots: start now,
@@ -638,6 +699,18 @@ impl Chare for BufferChare {
                             return; // late peer data after teardown
                         }
                         ctx.metrics().count(keys::STORE_HIT, m.len);
+                        // Locality accounting (PR 4): did these bytes
+                        // cross a PE boundary? Store-aware placement
+                        // exists to drive the cross-PE share toward zero.
+                        let my_pe = ctx.pe().0;
+                        let same = self
+                            .peer_slots
+                            .iter()
+                            .find(|p| p.slot == m.slot)
+                            .is_some_and(|p| p.owner_pe == my_pe);
+                        let key =
+                            if same { keys::PLACE_SAME_PE } else { keys::PLACE_CROSS_PE };
+                        ctx.metrics().count(key, m.len);
                         self.slot_arrived(ctx, m.slot as usize, chunk);
                     }
                     None => {
@@ -730,7 +803,10 @@ impl Chare for BufferChare {
                 // eviction/purge (which already dropped the claims).
                 if was_active && self.my_len > 0 {
                     let me = ctx.me();
-                    ctx.send(self.shard, EP_SHARD_UNCLAIM, UnclaimMsg { file: self.file, owner: me });
+                    ctx.send(self.shard, EP_SHARD_UNCLAIM, UnclaimMsg {
+                        file: self.file,
+                        owner: me,
+                    });
                 }
                 ctx.send(self.director, super::director::EP_DIR_DROP_ACK, BufDroppedMsg {
                     session: self.session,
@@ -881,10 +957,20 @@ mod tests {
     #[test]
     fn peer_assignment_removes_slots_from_the_pfs_queue() {
         let src = ChareRef::new(CollectionId(9), 0);
-        let b = mk(Some(30)).with_peers(vec![(0, src), (2, src)]);
+        let b = mk(Some(30)).with_peers(vec![
+            PeerSlot { slot: 0, owner: src, owner_pe: 0 },
+            PeerSlot { slot: 2, owner: src, owner_pe: 0 },
+        ]);
         assert_eq!(b.peer_slot_count(), 2);
         assert_eq!(b.pfs_queue, VecDeque::from(vec![1, 3]));
         assert!(b.peers_resolved);
+    }
+
+    #[test]
+    fn planned_builder_records_the_expectation() {
+        let b = mk(Some(30)).planned(60);
+        assert_eq!(b.planned_covered, Some(60));
+        assert!(!b.peers_resolved, "a plan does not replace registration");
     }
 
     #[test]

@@ -26,7 +26,20 @@
 //!   only passes them the shard's address. For a `reuse_buffers` start
 //!   it first probes the shard for an exactly matching parked array
 //!   (`EP_SHARD_TAKE` → [`EP_DIR_TAKE_REPLY`]) and then either rebinds
-//!   the returned array or creates a fresh one,
+//!   the returned array or creates a fresh one. Since PR 4 a fresh
+//!   start under [`super::options::ReaderPlacement::StoreAware`] is
+//!   **two-phase — plan, then create**: the director probes the owning
+//!   shard (`EP_SHARD_PLAN` → [`EP_DIR_PLAN_REPLY`]) for a
+//!   `PlacementPlan` (per-span dominant peer-source PE + resident-byte
+//!   counts out of the span store) and only then materializes the
+//!   placement, mapping each buffer chare onto the PE of its dominant
+//!   source (`Placement::Explicit` built from the plan; fallback PEs
+//!   where nothing is resident). The plan is a snapshot racing ordinary
+//!   data-plane churn: registration revalidates it at the shard, a
+//!   vanished claim degrades that buffer to plain PFS reads (counted on
+//!   `ckio.place.degraded`), and a plan reply arriving after the file's
+//!   final close resumes exactly as a late take reply does — plans are
+//!   never cached, so a close/re-open cycle cannot see a stale one,
 //! * **session close** — a parking close publishes the fully parked
 //!   array to the shard (`EP_SHARD_PARK`) once every ack is in; a
 //!   dropping close just drops the array (each buffer retracts its own
@@ -65,6 +78,7 @@ use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg, Payload};
 use crate::amt::time::MICROS;
+use crate::amt::topology::Placement;
 use crate::impl_chare_any;
 use crate::pfs::layout::FileId;
 use crate::util::bytes::ceil_div;
@@ -78,13 +92,13 @@ use super::manager::{
     FileOpenedMsg, SessionAnnounceMsg, EP_M_FILE_CLOSE, EP_M_FILE_OPENED, EP_M_SESSION_ANNOUNCE,
     EP_M_SESSION_DROP,
 };
-use super::options::Options;
+use super::options::{OpenError, Options};
 use super::session::{buffer_span_of, FileHandle, Session, SessionId};
 use super::shard::{
-    shard_of, ParkMsg, ShardConfigMsg, TakeMsg, EP_SHARD_CONFIG, EP_SHARD_PARK, EP_SHARD_PURGE,
-    EP_SHARD_TAKE,
+    shard_of, ParkMsg, PlanMsg, ShardConfigMsg, TakeMsg, EP_SHARD_CONFIG, EP_SHARD_PARK,
+    EP_SHARD_PLAN, EP_SHARD_PURGE, EP_SHARD_TAKE,
 };
-use super::store::BufKey;
+use super::store::{BufKey, PlannedSource};
 
 /// User: open a file.
 pub const EP_DIR_OPEN: Ep = 1;
@@ -110,6 +124,8 @@ pub const EP_DIR_CLOSE_FILE: Ep = 10;
 pub const EP_DIR_CLOSE_ACK: Ep = 11;
 /// Shard: answer to a parked-array rebind probe (`EP_SHARD_TAKE`).
 pub const EP_DIR_TAKE_REPLY: Ep = 12;
+/// Shard: answer to a placement-plan probe (`EP_SHARD_PLAN`).
+pub const EP_DIR_PLAN_REPLY: Ep = 13;
 
 #[derive(Debug)]
 pub struct OpenMsg {
@@ -145,6 +161,16 @@ pub struct TakeReplyMsg {
     pub token: u64,
     /// The exactly matching parked array, if one was available.
     pub found: Option<(CollectionId, u32)>,
+}
+
+/// Shard → director: the `PlacementPlan` answering an `EP_SHARD_PLAN`
+/// probe (PR 4) — one entry per prospective buffer, `Some` where the
+/// span store found resident coverage (dominant source PE + covered
+/// bytes), `None` where the fallback placement applies.
+#[derive(Debug)]
+pub struct PlanReplyMsg {
+    pub token: u64,
+    pub slots: Vec<Option<PlannedSource>>,
 }
 
 /// An open in flight through the MDS; later opens of the same file pile
@@ -203,6 +229,17 @@ struct PendingTake {
     opts: Options,
 }
 
+/// A `StoreAware` session start awaiting its shard's placement plan
+/// (PR 4). Same resumption contract as [`PendingTake`]: the options
+/// travel with the probe, so the resume never depends on the file table
+/// — and a plan is *never* cached or keyed by file, so a close/re-open
+/// cycle can never resurrect a stale one.
+struct PendingPlan {
+    msg: StartSessionMsg,
+    key: BufKey,
+    opts: Options,
+}
+
 /// The Director singleton.
 pub struct Director {
     managers: CollectionId,
@@ -229,12 +266,23 @@ pub struct Director {
     files: HashMap<FileId, FileEntry>,
     /// startReadSession calls that raced ahead of their file's open.
     early_sessions: HashMap<FileId, Vec<StartSessionMsg>>,
+    /// Opens rejected by option validation, remembered so a session
+    /// start *pipelined* behind a rejected open (the split-phase
+    /// open-then-start pattern the early_sessions queue exists for)
+    /// degrades to the same structured error on its callback instead of
+    /// tripping the never-opened assert. Entries are configuration
+    /// errors keyed by dense `FileId`s, so the map is naturally
+    /// bounded; a later *valid* open of the file clears its entry.
+    rejected_opens: HashMap<FileId, OpenError>,
     sessions: HashMap<SessionId, SessionState>,
     closes: HashMap<SessionId, CloseState>,
     file_closes: HashMap<FileId, CloseState>,
     /// Reuse session starts whose rebind probe is at the shard.
     pending_takes: HashMap<u64, PendingTake>,
     next_take: u64,
+    /// StoreAware session starts whose placement plan is at the shard.
+    pending_plans: HashMap<u64, PendingPlan>,
+    next_plan: u64,
     next_session: u32,
 }
 
@@ -258,11 +306,14 @@ impl Director {
             opens: HashMap::new(),
             files: HashMap::new(),
             early_sessions: HashMap::new(),
+            rejected_opens: HashMap::new(),
             sessions: HashMap::new(),
             closes: HashMap::new(),
             file_closes: HashMap::new(),
             pending_takes: HashMap::new(),
             next_take: 0,
+            pending_plans: HashMap::new(),
+            next_plan: 0,
             next_session: 0,
         }
     }
@@ -394,15 +445,63 @@ impl Director {
         ctx.advance(MICROS);
     }
 
+    /// Admit a fresh (non-rebind) session start. A `StoreAware`
+    /// placement first runs the plan-then-create round trip: the owning
+    /// shard is probed (`EP_SHARD_PLAN`) for where the prospective
+    /// spans' bytes already live, and creation resumes at
+    /// [`EP_DIR_PLAN_REPLY`]. Every other placement creates immediately
+    /// (the PR 3 register-after-create order, now the no-plan special
+    /// case).
+    ///
+    /// Known cost: a `reuse_buffers` + `StoreAware` start whose rebind
+    /// probe misses pays two serialized round trips to the same shard
+    /// (take, then plan). Folding the plan into the take *miss* reply
+    /// would save one — it rides the same probe the ROADMAP earmarks as
+    /// a QoS-hint carrier — and is left for that follow-up rather than
+    /// widening the take protocol twice.
+    fn begin_fresh(&mut self, ctx: &mut Ctx<'_>, m: StartSessionMsg, key: BufKey, opts: Options) {
+        if opts.placement.is_store_aware() {
+            let token = self.next_plan;
+            self.next_plan += 1;
+            let shard = self.shard_ref(m.file);
+            ctx.send(shard, EP_SHARD_PLAN, PlanMsg {
+                file: m.file,
+                offset: m.offset,
+                bytes: m.bytes,
+                readers: key.readers,
+                splinter: key.splinter,
+                token,
+            });
+            self.pending_plans.insert(token, PendingPlan { msg: m, key, opts });
+            ctx.advance(MICROS);
+            return;
+        }
+        self.start_fresh(ctx, m, key, opts, None);
+    }
+
     /// Start a session over a freshly created buffer-chare array. The
     /// buffers register their claims and resolve peer sources with their
     /// file's shard themselves (`EP_SHARD_REGISTER`) — the director only
     /// hands them the shard's address. `opts` are the file's opening
     /// options, resolved by the caller when the start was admitted (the
-    /// file may legitimately have fully closed since, if a rebind probe
-    /// was in flight — the session proceeds regardless, as it would have
-    /// under PR 2's synchronous start).
-    fn start_fresh(&mut self, ctx: &mut Ctx<'_>, m: StartSessionMsg, key: BufKey, opts: Options) {
+    /// file may legitimately have fully closed since, if a rebind or
+    /// plan probe was in flight — the session proceeds regardless, as it
+    /// would have under PR 2's synchronous start).
+    ///
+    /// `plan` is the shard's `PlacementPlan` for a `StoreAware` start:
+    /// each planned buffer is mapped onto the PE of its dominant peer
+    /// source (`Placement::Explicit` built from the plan), unplanned
+    /// buffers keep the fallback placement's PE, and every planned
+    /// buffer carries its expected coverage so registration can
+    /// revalidate the snapshot.
+    fn start_fresh(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        m: StartSessionMsg,
+        key: BufKey,
+        opts: Options,
+        plan: Option<Vec<Option<PlannedSource>>>,
+    ) {
         let sid = SessionId(self.next_session);
         self.next_session += 1;
         let nreaders = key.readers;
@@ -413,7 +512,30 @@ impl Director {
         let me = ctx.me();
         let assemblers = self.assemblers;
         let shard = self.shard_ref(file);
-        let placement = opts.placement.to_placement(nreaders);
+        // Options are validated at open (EP_DIR_OPEN), and the resolved
+        // reader count only ever clamps *down* from the validated worst
+        // case — so materializing the placement here cannot fail.
+        let base = opts
+            .placement
+            .to_placement(nreaders)
+            .expect("placement validated at open");
+        let placement = match &plan {
+            Some(slots) => {
+                debug_assert_eq!(slots.len(), nreaders as usize, "plan arity mismatch");
+                let mut pes = base.place(&ctx.topo(), nreaders as usize);
+                let planned = slots.iter().flatten().count() as u64;
+                for (b, src) in slots.iter().enumerate() {
+                    if let Some(src) = src {
+                        pes[b] = crate::amt::topology::Pe(src.pe);
+                    }
+                }
+                if planned > 0 {
+                    ctx.metrics().count(crate::metrics::keys::PLACE_PLANNED, planned);
+                }
+                Placement::Explicit(pes)
+            }
+            None => base,
+        };
         // The same span partition Session::buffer_span serves to
         // assemblers — one definition, so chare spans, claims, and
         // routing can never drift.
@@ -425,6 +547,11 @@ impl Director {
             let mut b = BufferChare::new(sid, file, o, l, splinter, window, me, shard, assemblers);
             if governed {
                 b = b.governed(bytes);
+            }
+            if let Some(slots) = &plan {
+                if let Some(src) = slots[i as usize] {
+                    b = b.planned(src.covered);
+                }
             }
             b
         });
@@ -462,6 +589,11 @@ impl Director {
     /// Rebind probes still at their shard.
     pub fn pending_takes(&self) -> usize {
         self.pending_takes.len()
+    }
+
+    /// Placement plans still at their shard.
+    pub fn pending_plans(&self) -> usize {
+        self.pending_plans.len()
     }
 
     /// Files currently open (refcounted).
@@ -503,24 +635,42 @@ impl Chare for Director {
                     ctx.metrics().count("ckio.reopens", 1);
                     return;
                 }
-                // First open: the file's Options configure the data
-                // plane. The shard count is structural — it changes
-                // FileId→shard routing — so it is only applied while the
-                // data plane is fully quiescent (no open files, opens,
-                // sessions, teardowns, or rebind probes anywhere in
-                // flight; sessions can outlive their file's close, so
-                // the file table alone is not enough). The store budget
-                // is a global knob (any file can park on its shard), so
-                // its per-shard share is broadcast to every shard;
-                // governor knobs only matter where this file's traffic
-                // admits, so they go to the owning shard alone (last
-                // writer wins per shard, as PR 2's were globally).
+                // First open: validate the options *before* they can
+                // govern the file. A placement that cannot cover the
+                // largest reader count any session could resolve to is
+                // rejected here with a structured error on the open
+                // callback — instead of panicking at some later session
+                // start (the pre-PR 4 behavior of a short explicit
+                // list).
+                if let Err(e) = m.opts.validate(m.size, &ctx.topo()) {
+                    ctx.metrics().count("ckio.opens_rejected", 1);
+                    self.rejected_opens.insert(m.file, e.clone());
+                    ctx.fire(m.opened, Payload::new(e));
+                    return;
+                }
+                // A valid open supersedes any earlier rejection of this
+                // file (session starts must again wait for it, not
+                // bounce off the stale error).
+                self.rejected_opens.remove(&m.file);
+                // The file's Options configure the data plane. The shard
+                // count is structural — it changes FileId→shard routing
+                // — so it is only applied while the data plane is fully
+                // quiescent (no open files, opens, sessions, teardowns,
+                // rebind probes, or placement plans anywhere in flight;
+                // sessions can outlive their file's close, so the file
+                // table alone is not enough). The store budget is a
+                // global knob (any file can park on its shard), so its
+                // per-shard share is broadcast to every shard; governor
+                // knobs only matter where this file's traffic admits, so
+                // they go to the owning shard alone (last writer wins
+                // per shard, as PR 2's were globally).
                 if self.files.is_empty()
                     && self.opens.is_empty()
                     && self.sessions.is_empty()
                     && self.closes.is_empty()
                     && self.file_closes.is_empty()
                     && self.pending_takes.is_empty()
+                    && self.pending_plans.is_empty()
                 {
                     let want =
                         m.opts.data_plane_shards.unwrap_or(self.nshards).clamp(1, self.nshards);
@@ -596,14 +746,21 @@ impl Chare for Director {
                 let m: StartSessionMsg = msg.take();
                 // Robustness: a session start racing ahead of the file's
                 // open completion is held and replayed (split-phase APIs
-                // make this easy to hit from driver code).
+                // make this easy to hit from driver code). A start
+                // pipelined behind a *rejected* open gets the same
+                // structured error the open callback got — never a
+                // panic for a recoverable configuration mistake.
                 let Some(entry) = self.files.get(&m.file) else {
-                    assert!(
-                        self.opens.contains_key(&m.file),
-                        "startReadSession for a file that was never opened"
-                    );
-                    self.early_sessions.entry(m.file).or_default().push(m);
-                    return;
+                    if self.opens.contains_key(&m.file) {
+                        self.early_sessions.entry(m.file).or_default().push(m);
+                        return;
+                    }
+                    if let Some(e) = self.rejected_opens.get(&m.file) {
+                        ctx.metrics().count("ckio.sessions_rejected", 1);
+                        ctx.fire(m.ready, Payload::new(e.clone()));
+                        return;
+                    }
+                    panic!("startReadSession for a file that was never opened");
                 };
                 let (size, opts) = (entry.size, entry.opts.clone());
                 assert!(m.offset + m.bytes <= size, "session beyond EOF");
@@ -626,8 +783,9 @@ impl Chare for Director {
                 }
 
                 // Fresh path: create the per-session buffer chare array
-                // (dynamic creation, as CkIO does on session start).
-                self.start_fresh(ctx, m, key, opts);
+                // (dynamic creation, as CkIO does on session start),
+                // planning the placement first when it is store-aware.
+                self.begin_fresh(ctx, m, key, opts);
             }
             EP_DIR_TAKE_REPLY => {
                 let r: TakeReplyMsg = msg.take();
@@ -636,8 +794,13 @@ impl Chare for Director {
                     Some((buffers, nbuf)) => {
                         self.start_rebind(ctx, pt.msg, pt.key, buffers, nbuf)
                     }
-                    None => self.start_fresh(ctx, pt.msg, pt.key, pt.opts),
+                    None => self.begin_fresh(ctx, pt.msg, pt.key, pt.opts),
                 }
+            }
+            EP_DIR_PLAN_REPLY => {
+                let r: PlanReplyMsg = msg.take();
+                let pp = self.pending_plans.remove(&r.token).expect("reply for unknown plan");
+                self.start_fresh(ctx, pp.msg, pp.key, pp.opts, Some(r.slots));
             }
             EP_DIR_BUF_STARTED => {
                 let m: BufStartedMsg = msg.take();
@@ -691,10 +854,20 @@ impl Chare for Director {
                     }
                 };
                 for pe in 0..self.npes {
-                    ctx.send_group(self.managers, crate::amt::topology::Pe(pe), EP_M_SESSION_DROP, m.session);
+                    ctx.send_group(
+                        self.managers,
+                        crate::amt::topology::Pe(pe),
+                        EP_M_SESSION_DROP,
+                        m.session,
+                    );
                     // Fire-and-forget: assemblers only need to know the
                     // session is gone so late pieces are tolerated.
-                    ctx.send_group(self.assemblers, crate::amt::topology::Pe(pe), EP_A_SESSION_DROP, m.session);
+                    ctx.send_group(
+                        self.assemblers,
+                        crate::amt::topology::Pe(pe),
+                        EP_A_SESSION_DROP,
+                        m.session,
+                    );
                 }
                 self.closes.insert(m.session, CloseState {
                     afters: vec![m.after],
@@ -730,7 +903,12 @@ impl Chare for Director {
                 let shard = self.shard_ref(m.file);
                 ctx.send(shard, EP_SHARD_PURGE, m.file);
                 for pe in 0..self.npes {
-                    ctx.send_group(self.managers, crate::amt::topology::Pe(pe), EP_M_FILE_CLOSE, m.file);
+                    ctx.send_group(
+                        self.managers,
+                        crate::amt::topology::Pe(pe),
+                        EP_M_FILE_CLOSE,
+                        m.file,
+                    );
                 }
                 self.file_closes.insert(m.file, CloseState {
                     afters: vec![m.after],

@@ -80,12 +80,29 @@
 //!   demand drains by [`governor::AdmissionPolicy`] (FIFO or
 //!   smallest-session-first).
 //!
+//! * **Store-aware reader placement (PR 4).** Session start is
+//!   *plan-then-create*: before materializing a
+//!   [`ReaderPlacement::StoreAware`] session's buffer array, the
+//!   director probes the owning shard (`EP_SHARD_PLAN`) for a
+//!   `PlacementPlan` — per prospective buffer span, the PE whose claims
+//!   cover the most bytes — and creates each buffer chare *on the PE of
+//!   its dominant peer source*, turning the peer fetches above into
+//!   same-PE copies (the Fig. 12 locality win applied at creation time
+//!   instead of by migration). Buffers with no resident coverage use
+//!   the configured fallback placement; registration revalidates the
+//!   plan snapshot, so claims retracted between plan and create degrade
+//!   to ordinary PFS reads (`ckio.place.degraded`), never to an error.
+//!   The `svc_locality` experiment measures the effect: K successive
+//!   overlapping sessions under `StoreAware` collapse
+//!   `ckio.place.cross_pe_fetch` toward zero vs `SpreadNodes`.
+//!
 //! Store traffic is observable via `ckio.store.hit_bytes` /
 //! `miss_bytes` / `evicted_bytes`, the `ckio.store.resident_bytes`
 //! gauge (summed across shards), `ckio.governor.throttled`, the
-//! `ckio.governor.cap` gauge, and the per-shard message-count imbalance
-//! pair `ckio.shard.msgs_max` / `ckio.shard.msgs_mean` (all in
-//! `ckio bench-json`).
+//! `ckio.governor.cap` gauge, the per-shard message-count imbalance
+//! pair `ckio.shard.msgs_max` / `ckio.shard.msgs_mean`, and the
+//! placement-locality set `ckio.place.planned` / `same_pe_fetch` /
+//! `cross_pe_fetch` / `degraded` (all in `ckio bench-json`).
 //!
 //! # Concurrency semantics (PR 1)
 //!
@@ -135,7 +152,7 @@ pub mod store;
 
 pub use api::CkIo;
 pub use governor::AdmissionPolicy;
-pub use options::{Options, ReaderPlacement};
+pub use options::{OpenError, Options, ReaderPlacement};
 pub use session::{FileHandle, ReadResult, Session, SessionId, Tag};
 pub use shard::DataShard;
 pub use store::SpanStore;

@@ -5,7 +5,8 @@ use crate::util::bytes::ceil_div;
 
 pub use super::governor::AdmissionPolicy;
 
-/// Where buffer chares are placed (paper §VI.B).
+/// Where buffer chares are placed (paper §VI.B, extended in PR 4 with
+/// store-aware planning).
 #[derive(Clone, Debug, Default)]
 pub enum ReaderPlacement {
     /// Spread across nodes first (maximize NIC / FS-path parallelism) —
@@ -18,29 +19,96 @@ pub enum ReaderPlacement {
     /// resolved count is *smaller* — e.g. a tiny file clamps the reader
     /// count below the list length — the list is truncated).
     Explicit(Vec<u32>),
+    /// Store-aware placement (PR 4, the paper's Fig. 12 locality idea at
+    /// session start): the director first asks the file's data-plane
+    /// shard *where the session's bytes already live* (`EP_SHARD_PLAN`)
+    /// and places each buffer chare on the PE of its dominant peer
+    /// source, so peer fetches become same-PE copies. Buffers whose span
+    /// has no resident coverage fall back to `fallback` (which must be
+    /// one of the concrete variants above — nesting `StoreAware` is a
+    /// configuration error caught at `open`).
+    StoreAware { fallback: Box<ReaderPlacement> },
+}
+
+/// Structured configuration error, delivered through the `open` callback
+/// (instead of a FileHandle) when a file's opening [`Options`] can never
+/// work. Callers discriminate with `payload.peek::<OpenError>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum OpenError {
+    /// An explicit placement list is shorter than the largest reader
+    /// count any session of this file could resolve to.
+    PlacementTooShort { need: u32, got: u32 },
+    /// `StoreAware` must fall back to a concrete placement, not to
+    /// another `StoreAware`.
+    RecursiveFallback,
+}
+
+impl std::fmt::Display for OpenError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OpenError::PlacementTooShort { need, got } => {
+                write!(f, "explicit reader placement needs >= {need} PEs, got {got}")
+            }
+            OpenError::RecursiveFallback => {
+                write!(f, "StoreAware fallback must be a concrete placement")
+            }
+        }
+    }
 }
 
 impl ReaderPlacement {
+    /// Whether session start must run the plan-then-create round trip
+    /// (`EP_SHARD_PLAN`) before materializing a placement.
+    pub fn is_store_aware(&self) -> bool {
+        matches!(self, ReaderPlacement::StoreAware { .. })
+    }
+
+    /// Validate this policy for a file whose sessions can resolve at
+    /// most `need` readers ([`Options::validate`] computes `need` from
+    /// the file size, the worst case over every admissible session).
+    pub fn validate(&self, need: u32) -> Result<(), OpenError> {
+        match self {
+            ReaderPlacement::SpreadNodes | ReaderPlacement::PackPes => Ok(()),
+            ReaderPlacement::Explicit(pes) => {
+                if (pes.len() as u32) < need {
+                    Err(OpenError::PlacementTooShort { need, got: pes.len() as u32 })
+                } else {
+                    Ok(())
+                }
+            }
+            ReaderPlacement::StoreAware { fallback } => match fallback.as_ref() {
+                ReaderPlacement::StoreAware { .. } => Err(OpenError::RecursiveFallback),
+                concrete => concrete.validate(need),
+            },
+        }
+    }
+
     /// Materialize a [`Placement`] for `n` *resolved* readers.
     ///
     /// `n` comes out of [`Options::resolve_readers`], which may clamp the
     /// requested count down (never more readers than bytes) — so an
     /// explicit list only needs to be *at least* `n` long; extra entries
-    /// are ignored. A list shorter than `n` is a configuration error.
-    pub fn to_placement(&self, n: u32) -> Placement {
+    /// are ignored. A list shorter than `n` is a configuration error,
+    /// reported as a structured [`OpenError`] (the director runs
+    /// [`Options::validate`] at `open`, so a session start over an
+    /// admitted file can never see `Err` here).
+    ///
+    /// For [`ReaderPlacement::StoreAware`] this returns the *fallback*
+    /// placement — the no-residency answer; the director overrides
+    /// per-buffer PEs with the shard's `PlacementPlan` when one exists.
+    pub fn to_placement(&self, n: u32) -> Result<Placement, OpenError> {
         match self {
-            ReaderPlacement::SpreadNodes => Placement::RoundRobinNodes,
-            ReaderPlacement::PackPes => Placement::RoundRobinPes,
+            ReaderPlacement::SpreadNodes => Ok(Placement::RoundRobinNodes),
+            ReaderPlacement::PackPes => Ok(Placement::RoundRobinPes),
             ReaderPlacement::Explicit(pes) => {
-                assert!(
-                    pes.len() as u32 >= n,
-                    "explicit reader placement needs >= {n} PEs, got {}",
-                    pes.len()
-                );
-                Placement::Explicit(
+                if (pes.len() as u32) < n {
+                    return Err(OpenError::PlacementTooShort { need: n, got: pes.len() as u32 });
+                }
+                Ok(Placement::Explicit(
                     pes.iter().take(n as usize).map(|&p| crate::amt::topology::Pe(p)).collect(),
-                )
+                ))
             }
+            ReaderPlacement::StoreAware { fallback } => fallback.to_placement(n),
         }
     }
 }
@@ -102,11 +170,12 @@ pub struct Options {
     /// over (PR 3). `None` = one shard per PE (the full array booted by
     /// [`super::CkIo::boot`]); `Some(n)` clamps the hash to the first
     /// `n` shards. Structural knob: applied only when the data plane is
-    /// fully quiescent (no open files, opens, sessions, teardowns, or
-    /// rebind probes in flight), so FileId→shard routing is stable for
-    /// the whole life of every piece of data-plane state. `Some(1)`
-    /// funnels everything through one shard — bit-for-bit the PR 2
-    /// single-plane semantics (global store budget, global cap).
+    /// fully quiescent (no open files, opens, sessions, teardowns,
+    /// rebind probes, or placement plans in flight), so FileId→shard
+    /// routing is stable for the whole life of every piece of data-plane
+    /// state. `Some(1)` funnels everything through one shard —
+    /// bit-for-bit the PR 2 single-plane semantics (global store budget,
+    /// global cap).
     pub data_plane_shards: Option<u32>,
 }
 
@@ -138,6 +207,18 @@ impl Options {
         let n = self.num_readers.unwrap_or_else(|| auto_readers(bytes, topo));
         // Never more readers than bytes.
         n.clamp(1, bytes.max(1).min(u32::MAX as u64) as u32)
+    }
+
+    /// Validate these options for a file of `file_size` bytes: the check
+    /// the director runs at `open`, before the options can govern the
+    /// file. `resolve_readers` is monotonic in the session byte count,
+    /// so the largest reader count any session `[off, off+b)` with
+    /// `b <= file_size` can resolve to is `resolve_readers(file_size)` —
+    /// an explicit placement list admitted here can never come up short
+    /// at a later session start (it is only ever truncated).
+    pub fn validate(&self, file_size: u64, topo: &Topology) -> Result<(), OpenError> {
+        let need = self.resolve_readers(file_size.max(1), topo);
+        self.placement.validate(need)
     }
 }
 
@@ -189,21 +270,26 @@ mod tests {
 
     #[test]
     fn placement_mapping() {
-        let p = ReaderPlacement::SpreadNodes.to_placement(8);
+        let p = ReaderPlacement::SpreadNodes.to_placement(8).unwrap();
         assert!(matches!(p, Placement::RoundRobinNodes));
-        let p = ReaderPlacement::Explicit(vec![0, 3]).to_placement(2);
+        let p = ReaderPlacement::Explicit(vec![0, 3]).to_placement(2).unwrap();
         assert!(matches!(p, Placement::Explicit(_)));
     }
 
+    /// Regression (PR 4): a too-short explicit list is a structured
+    /// error, not a panic — the director surfaces it through the open
+    /// callback.
     #[test]
-    #[should_panic]
-    fn explicit_placement_wrong_length() {
-        ReaderPlacement::Explicit(vec![0]).to_placement(2);
+    fn explicit_placement_wrong_length_is_an_error() {
+        assert_eq!(
+            ReaderPlacement::Explicit(vec![0]).to_placement(2).unwrap_err(),
+            OpenError::PlacementTooShort { need: 2, got: 1 }
+        );
     }
 
     /// Regression (PR 1): a tiny file clamps the resolved reader count
     /// below the explicit PE-list length; placement must truncate the
-    /// list to the clamped count instead of panicking.
+    /// list to the clamped count instead of erroring.
     #[test]
     fn explicit_placement_truncates_to_clamped_readers() {
         use crate::amt::topology::Pe;
@@ -216,9 +302,48 @@ mod tests {
         // 2-byte file: never more readers than bytes.
         let n = o.resolve_readers(2, &topo);
         assert_eq!(n, 2);
-        match o.placement.to_placement(n) {
+        match o.placement.to_placement(n).unwrap() {
             Placement::Explicit(pes) => assert_eq!(pes, vec![Pe(0), Pe(1)]),
             other => panic!("unexpected placement {other:?}"),
         }
+    }
+
+    #[test]
+    fn store_aware_resolves_and_validates_through_its_fallback() {
+        let sa = ReaderPlacement::StoreAware { fallback: Box::new(ReaderPlacement::SpreadNodes) };
+        assert!(sa.is_store_aware());
+        assert!(matches!(sa.to_placement(4), Ok(Placement::RoundRobinNodes)));
+        assert_eq!(sa.validate(8), Ok(()));
+
+        let short = ReaderPlacement::StoreAware {
+            fallback: Box::new(ReaderPlacement::Explicit(vec![0, 1])),
+        };
+        assert_eq!(short.validate(4), Err(OpenError::PlacementTooShort { need: 4, got: 2 }));
+
+        let nested = ReaderPlacement::StoreAware {
+            fallback: Box::new(ReaderPlacement::StoreAware {
+                fallback: Box::new(ReaderPlacement::SpreadNodes),
+            }),
+        };
+        assert_eq!(nested.validate(4), Err(OpenError::RecursiveFallback));
+    }
+
+    /// `Options::validate` checks the worst case over every admissible
+    /// session: the whole-file reader count.
+    #[test]
+    fn validate_checks_the_largest_resolvable_reader_count() {
+        let topo = Topology::new(2, 4);
+        let o = Options {
+            num_readers: Some(4),
+            placement: ReaderPlacement::Explicit(vec![0, 1]),
+            ..Default::default()
+        };
+        // A large file can resolve all 4 readers: the 2-entry list fails.
+        assert_eq!(
+            o.validate(1 << 20, &topo),
+            Err(OpenError::PlacementTooShort { need: 4, got: 2 })
+        );
+        // A 2-byte file clamps every session to <= 2 readers: it passes.
+        assert_eq!(o.validate(2, &topo), Ok(()));
     }
 }

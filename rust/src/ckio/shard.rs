@@ -48,6 +48,14 @@
 //!   start, publish after a parking close fully acks, purge at final
 //!   file close). Evictions are translated into `EP_BUF_DROP` sends
 //!   here, shard-locally.
+//! * `EP_SHARD_PLAN` — the plan-then-create probe (PR 4): before
+//!   creating a `StoreAware` session's buffer array, the director asks
+//!   this shard where the prospective spans' bytes already live. The
+//!   store answers a `PlacementPlan` (per-span dominant source PE +
+//!   covered bytes from [`SpanStore::plan_spans`]), the director places
+//!   the buffers onto those PEs, and registration revalidates the
+//!   snapshot — an unclaim racing the plan degrades to the fallback
+//!   behavior (PFS reads), never to an assert.
 //!
 //! Observability: the shard maintains the `ckio.store.resident_bytes`
 //! gauge as an *add-delta* (each shard contributes the change in its own
@@ -71,9 +79,9 @@ use crate::metrics::keys;
 use crate::pfs::layout::FileId;
 
 use super::buffer::{
-    GrantMsg, IoDoneMsg, IoReqMsg, PeersMsg, EP_BUF_DROP, EP_BUF_GRANT, EP_BUF_PEERS,
+    GrantMsg, IoDoneMsg, IoReqMsg, PeerSlot, PeersMsg, EP_BUF_DROP, EP_BUF_GRANT, EP_BUF_PEERS,
 };
-use super::director::{TakeReplyMsg, EP_DIR_TAKE_REPLY};
+use super::director::{PlanReplyMsg, TakeReplyMsg, EP_DIR_PLAN_REPLY, EP_DIR_TAKE_REPLY};
 use super::governor::{AdmissionPolicy, Governor};
 use super::store::{slot_extents, BufKey, Evicted, SpanStore};
 
@@ -93,6 +101,9 @@ pub const EP_SHARD_CONFIG: Ep = 6;
 pub const EP_SHARD_IO_REQ: Ep = 7;
 /// Buffer chare: return PFS read tickets (with observed service time).
 pub const EP_SHARD_IO_DONE: Ep = 8;
+/// Director: plan a prospective session's reader placement against the
+/// span store (PR 4's plan-then-create round trip).
+pub const EP_SHARD_PLAN: Ep = 9;
 
 /// The shard a file's data-plane state lives on. `FileId`s are dense
 /// sequential indices, so plain modulo is balanced *and* stable — the
@@ -113,6 +124,9 @@ pub struct RegisterMsg {
     /// shard-side slot extents agree bit-for-bit with the buffer's.
     pub splinter: u64,
     pub buffer: ChareRef,
+    /// The PE the buffer runs on — recorded with its claim so placement
+    /// plans and locality metrics know where the bytes live.
+    pub pe: u32,
 }
 
 /// Buffer → shard: this buffer dropped its data; retract its claim.
@@ -126,6 +140,23 @@ pub struct UnclaimMsg {
 #[derive(Debug)]
 pub struct TakeMsg {
     pub key: BufKey,
+    /// Correlates the reply with the director's stashed session start.
+    pub token: u64,
+}
+
+/// Director → shard: plan a prospective session's reader placement
+/// (PR 4). Carries the exact partition the director would create —
+/// [`super::session::buffer_span_of`] over `readers` spans, splintered
+/// at `splinter` (unclamped; the store clamps per buffer exactly as
+/// [`super::buffer::BufferChare::new`] does) — so the plan's slot
+/// extents agree bit-for-bit with what the buffers will register.
+#[derive(Debug)]
+pub struct PlanMsg {
+    pub file: FileId,
+    pub offset: u64,
+    pub bytes: u64,
+    pub readers: u32,
+    pub splinter: u64,
     /// Correlates the reply with the director's stashed session start.
     pub token: u64,
 }
@@ -262,24 +293,44 @@ impl Chare for DataShard {
                 // Resolve before registering: the newcomer can never
                 // match itself, and matches always point at
                 // earlier-registered arrays (acyclic peer graph).
-                let peers: Vec<(u32, ChareRef)> = slot_extents(m.offset, m.len, m.splinter)
+                let peers: Vec<PeerSlot> = slot_extents(m.offset, m.len, m.splinter)
                     .into_iter()
                     .enumerate()
                     .filter(|&(_, (_, slen))| slen > 0)
                     .filter_map(|(i, (slo, slen))| {
-                        self.store.find_cover(m.file, slo, slen).map(|owner| (i as u32, owner))
+                        self.store.find_cover_claim(m.file, slo, slen).map(|c| PeerSlot {
+                            slot: i as u32,
+                            owner: c.owner,
+                            owner_pe: c.owner_pe,
+                        })
                     })
                     .collect();
                 // Serving peers keeps a parked array hot: refresh its LRU
                 // standing (once per distinct array, not per slot).
                 let owners: HashSet<CollectionId> =
-                    peers.iter().map(|&(_, o)| o.collection).collect();
+                    peers.iter().map(|p| p.owner.collection).collect();
                 for owner in owners {
                     self.store.touch(owner);
                 }
-                self.store.add_claim(m.file, m.offset, m.len, m.buffer);
+                self.store.add_claim(m.file, m.offset, m.len, m.buffer, m.pe);
                 ctx.advance(MICROS);
                 ctx.send(m.buffer, EP_BUF_PEERS, PeersMsg { peers });
+            }
+            EP_SHARD_PLAN => {
+                let m: PlanMsg = msg.take();
+                // One probe answers "who holds these bytes" for the whole
+                // prospective partition: the store aggregates covering
+                // claims per span and names each span's dominant source
+                // PE. The reply is a *snapshot* — the director creates
+                // the buffers from it, and registration revalidates.
+                let slots =
+                    self.store.plan_spans(m.file, m.offset, m.bytes, m.readers, m.splinter);
+                ctx.advance(MICROS);
+                ctx.send(
+                    self.director,
+                    EP_DIR_PLAN_REPLY,
+                    PlanReplyMsg { token: m.token, slots },
+                );
             }
             EP_SHARD_UNCLAIM => {
                 let m: UnclaimMsg = msg.take();

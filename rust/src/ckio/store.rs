@@ -52,12 +52,30 @@ pub struct BufKey {
 }
 
 /// One buffer chare's registered span: `[lo, hi)` of `file` is (or will
-/// shortly be) resident in `owner`.
+/// shortly be) resident in `owner`, which lives on `owner_pe` (buffer
+/// chares are never migrated while holding data, so the PE recorded at
+/// registration stays correct for the claim's whole life — including
+/// across a park and rebind).
 #[derive(Clone, Debug)]
 pub struct Claim {
     pub lo: u64,
     pub hi: u64,
     pub owner: ChareRef,
+    pub owner_pe: u32,
+}
+
+/// Dominant resident source for one prospective buffer span — one entry
+/// of the `PlacementPlan` a data-plane shard answers to the director's
+/// `EP_SHARD_PLAN` probe (PR 4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlannedSource {
+    /// PE of the claim owner covering the most bytes of the span: where
+    /// store-aware placement puts the prospective buffer chare.
+    pub pe: u32,
+    /// Bytes of the span covered by *any* existing claim — the
+    /// expectation the buffer revalidates at register time (an unclaim
+    /// racing the plan shows up as actual coverage below this).
+    pub covered: u64,
 }
 
 /// A parked buffer-chare array available for exact rebind, counted
@@ -110,13 +128,14 @@ impl SpanStore {
     // claims
     // ------------------------------------------------------------------
 
-    /// Register one buffer chare's span. Zero-length spans (clamped
-    /// trailing buffers) are not registered.
-    pub fn add_claim(&mut self, file: FileId, lo: u64, len: u64, owner: ChareRef) {
+    /// Register one buffer chare's span (`owner_pe` = the PE the owner
+    /// runs on, recorded for store-aware placement planning). Zero-length
+    /// spans (clamped trailing buffers) are not registered.
+    pub fn add_claim(&mut self, file: FileId, lo: u64, len: u64, owner: ChareRef, owner_pe: u32) {
         if len == 0 {
             return;
         }
-        self.claims.entry(file).or_default().push(Claim { lo, hi: lo + len, owner });
+        self.claims.entry(file).or_default().push(Claim { lo, hi: lo + len, owner, owner_pe });
     }
 
     /// Drop every claim owned by elements of `buffers` (the array is
@@ -143,23 +162,87 @@ impl SpanStore {
         }
     }
 
-    /// Find a claim fully covering `[lo, lo+len)` of `file`. The oldest
-    /// covering claim wins, which keeps the peer-fetch graph acyclic:
-    /// edges always point at earlier-registered arrays. A session can
-    /// never match itself because the director matches *before*
+    /// Find the claim fully covering `[lo, lo+len)` of `file`. The
+    /// oldest covering claim wins, which keeps the peer-fetch graph
+    /// acyclic: edges always point at earlier-registered arrays. A
+    /// session can never match itself because the shard matches *before*
     /// registering the new session's own claims.
-    pub fn find_cover(&self, file: FileId, lo: u64, len: u64) -> Option<ChareRef> {
+    pub fn find_cover_claim(&self, file: FileId, lo: u64, len: u64) -> Option<&Claim> {
         let hi = lo + len;
-        self.claims
-            .get(&file)?
-            .iter()
-            .find(|c| c.lo <= lo && c.hi >= hi)
-            .map(|c| c.owner)
+        self.claims.get(&file)?.iter().find(|c| c.lo <= lo && c.hi >= hi)
+    }
+
+    /// [`SpanStore::find_cover_claim`], returning just the owner.
+    pub fn find_cover(&self, file: FileId, lo: u64, len: u64) -> Option<ChareRef> {
+        self.find_cover_claim(file, lo, len).map(|c| c.owner)
     }
 
     /// Total claims registered for `file` (inspection).
     pub fn claims_for(&self, file: FileId) -> usize {
         self.claims.get(&file).map_or(0, |v| v.len())
+    }
+
+    /// Residency summary (PR 4): resident claim bytes of `file` per PE,
+    /// sorted by PE. Overlapping claims count each copy (the summary
+    /// answers "how much can each PE serve locally", not "how many
+    /// distinct bytes exist"). Inspection/diagnostics API, like
+    /// [`SpanStore::claims_for`] — the placement path itself uses the
+    /// per-span [`SpanStore::plan_spans`], which this must stay
+    /// consistent with (both walk the same claims).
+    pub fn residency_by_pe(&self, file: FileId) -> Vec<(u32, u64)> {
+        let mut per_pe: HashMap<u32, u64> = HashMap::new();
+        for c in self.claims.get(&file).map_or(&[][..], |v| &v[..]) {
+            *per_pe.entry(c.owner_pe).or_insert(0) += c.hi - c.lo;
+        }
+        let mut out: Vec<(u32, u64)> = per_pe.into_iter().collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// The `PlacementPlan` for a prospective session partition (PR 4):
+    /// for each of the `readers` buffer spans of a session
+    /// `[offset, offset+bytes)` splintered at `splinter` (0 = whole-span
+    /// slots; clamped per buffer exactly as
+    /// [`super::buffer::BufferChare`] clamps it), the dominant resident
+    /// source — the PE whose claims cover the most span bytes — plus the
+    /// total covered bytes the buffer should re-find at register time.
+    /// `None` for spans with no resident coverage (the placement
+    /// fallback applies there).
+    pub fn plan_spans(
+        &self,
+        file: FileId,
+        offset: u64,
+        bytes: u64,
+        readers: u32,
+        splinter: u64,
+    ) -> Vec<Option<PlannedSource>> {
+        (0..readers)
+            .map(|b| {
+                let (blo, blen) =
+                    crate::ckio::session::buffer_span_of(offset, bytes, readers, b);
+                if blen == 0 {
+                    return None;
+                }
+                let mut per_pe: HashMap<u32, u64> = HashMap::new();
+                let mut covered = 0u64;
+                for (slo, slen) in slot_extents(blo, blen, splinter.min(blen)) {
+                    if slen == 0 {
+                        continue;
+                    }
+                    if let Some(c) = self.find_cover_claim(file, slo, slen) {
+                        covered += slen;
+                        *per_pe.entry(c.owner_pe).or_insert(0) += slen;
+                    }
+                }
+                per_pe
+                    .into_iter()
+                    // Deterministic dominant source: most bytes, lowest
+                    // PE on ties (HashMap iteration order must not leak
+                    // into placement).
+                    .max_by_key(|&(pe, b)| (b, std::cmp::Reverse(pe)))
+                    .map(|(pe, _)| PlannedSource { pe, covered })
+            })
+            .collect()
     }
 
     // ------------------------------------------------------------------
@@ -186,7 +269,13 @@ impl SpanStore {
             }
         }
         self.lru_clock += 1;
-        self.parked.push(ParkedEntry { key, buffers, nbuf, resident_bytes, last_use: self.lru_clock });
+        self.parked.push(ParkedEntry {
+            key,
+            buffers,
+            nbuf,
+            resident_bytes,
+            last_use: self.lru_clock,
+        });
         let mut evicted = Vec::new();
         loop {
             let over = match self.budget {
@@ -294,11 +383,15 @@ mod tests {
         ChareRef::new(CollectionId(cid), i)
     }
 
+    /// Test claims place every owner on PE 0 unless the test is about
+    /// the per-PE accounting.
+    const PE: u32 = 0;
+
     #[test]
     fn cover_matching_prefers_oldest_covering_claim() {
         let mut s = SpanStore::new();
-        s.add_claim(FileId(0), 0, 100, owner(1, 0));
-        s.add_claim(FileId(0), 50, 100, owner(2, 0));
+        s.add_claim(FileId(0), 0, 100, owner(1, 0), PE);
+        s.add_claim(FileId(0), 50, 100, owner(2, 0), PE);
         // Fully inside the first claim: oldest wins.
         assert_eq!(s.find_cover(FileId(0), 10, 20), Some(owner(1, 0)));
         // Only the second claim covers [120, 140).
@@ -313,15 +406,15 @@ mod tests {
     #[test]
     fn zero_length_claims_are_not_registered() {
         let mut s = SpanStore::new();
-        s.add_claim(FileId(0), 10, 0, owner(1, 3));
+        s.add_claim(FileId(0), 10, 0, owner(1, 3), PE);
         assert_eq!(s.claims_for(FileId(0)), 0);
     }
 
     #[test]
     fn drop_claims_only_touches_the_named_array() {
         let mut s = SpanStore::new();
-        s.add_claim(FileId(0), 0, 10, owner(1, 0));
-        s.add_claim(FileId(0), 10, 10, owner(2, 0));
+        s.add_claim(FileId(0), 0, 10, owner(1, 0), PE);
+        s.add_claim(FileId(0), 10, 10, owner(2, 0), PE);
         s.drop_claims(FileId(0), CollectionId(1));
         assert_eq!(s.claims_for(FileId(0)), 1);
         assert_eq!(s.find_cover(FileId(0), 12, 2), Some(owner(2, 0)));
@@ -330,8 +423,8 @@ mod tests {
     #[test]
     fn drop_claims_of_only_touches_the_named_element() {
         let mut s = SpanStore::new();
-        s.add_claim(FileId(0), 0, 10, owner(1, 0));
-        s.add_claim(FileId(0), 10, 10, owner(1, 1));
+        s.add_claim(FileId(0), 0, 10, owner(1, 0), PE);
+        s.add_claim(FileId(0), 10, 10, owner(1, 1), PE);
         s.drop_claims_of(FileId(0), owner(1, 0));
         assert_eq!(s.claims_for(FileId(0)), 1);
         assert_eq!(s.find_cover(FileId(0), 12, 2), Some(owner(1, 1)));
@@ -407,7 +500,7 @@ mod tests {
         assert!(s.park(key(0, 0, 100), CollectionId(1), 1, 100).is_empty());
         assert!(s.park(key(0, 100, 100), CollectionId(2), 1, 100).is_empty());
         assert!(s.park(key(0, 200, 100), CollectionId(3), 1, 100).is_empty());
-        s.add_claim(FileId(0), 400, 100, owner(4, 0));
+        s.add_claim(FileId(0), 400, 100, owner(4, 0), PE);
         // An array that can never fit is rejected alone — the resident
         // arrays survive, and the reject drops the newcomer's claims.
         let ev = s.park(key(0, 400, 500), CollectionId(4), 1, 500);
@@ -422,8 +515,8 @@ mod tests {
     fn eviction_and_purge_drop_the_arrays_claims() {
         let mut s = SpanStore::new();
         s.set_budget(100);
-        s.add_claim(FileId(0), 0, 100, owner(1, 0));
-        s.add_claim(FileId(0), 100, 100, owner(2, 0));
+        s.add_claim(FileId(0), 0, 100, owner(1, 0), PE);
+        s.add_claim(FileId(0), 100, 100, owner(2, 0), PE);
         assert!(s.park(key(0, 0, 100), CollectionId(1), 1, 100).is_empty());
         // Parking array 2 evicts array 1 (LRU) and its claims with it.
         let ev = s.park(key(0, 100, 100), CollectionId(2), 1, 100);
@@ -446,6 +539,43 @@ mod tests {
         assert_eq!(s.take_exact(&other), None);
         assert_eq!(s.take_exact(&key(0, 0, 100)), Some((CollectionId(1), 2)));
         assert_eq!(s.take_exact(&key(0, 0, 100)), None, "taken arrays leave the store");
+    }
+
+    #[test]
+    fn residency_by_pe_sums_claim_extents() {
+        let mut s = SpanStore::new();
+        s.add_claim(FileId(0), 0, 100, owner(1, 0), 3);
+        s.add_claim(FileId(0), 100, 50, owner(1, 1), 5);
+        s.add_claim(FileId(0), 150, 50, owner(1, 2), 3);
+        assert_eq!(s.residency_by_pe(FileId(0)), vec![(3, 150), (5, 50)]);
+        assert!(s.residency_by_pe(FileId(1)).is_empty());
+    }
+
+    #[test]
+    fn plan_spans_names_the_dominant_source_per_span() {
+        let mut s = SpanStore::new();
+        // Claims: [0, 100) held on PE 1, [100, 200) held on PE 2.
+        s.add_claim(FileId(0), 0, 100, owner(1, 0), 1);
+        s.add_claim(FileId(0), 100, 100, owner(1, 1), 2);
+        // Prospective session [50, 150), 2 readers, splinter 25: span 0
+        // ([50, 100)) is all PE 1, span 1 ([100, 150)) all PE 2.
+        let plan = s.plan_spans(FileId(0), 50, 100, 2, 25);
+        assert_eq!(plan, vec![
+            Some(PlannedSource { pe: 1, covered: 50 }),
+            Some(PlannedSource { pe: 2, covered: 50 }),
+        ]);
+        // The same range as ONE whole-span slot straddles both claims:
+        // neither covers it alone, so there is no source.
+        assert_eq!(s.plan_spans(FileId(0), 50, 100, 1, 0), vec![None]);
+        // Splintered, that span is covered half-and-half: the dominant
+        // source breaks the byte tie toward the lower PE, and `covered`
+        // still counts every covered slot (the revalidation total).
+        assert_eq!(
+            s.plan_spans(FileId(0), 50, 100, 1, 25),
+            vec![Some(PlannedSource { pe: 1, covered: 100 })]
+        );
+        // No claims at all: every span is fallback-placed.
+        assert!(s.plan_spans(FileId(9), 0, 10, 4, 0).iter().all(|p| p.is_none()));
     }
 
     #[test]

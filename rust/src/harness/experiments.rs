@@ -98,12 +98,14 @@ impl Chare for SliceReader {
         match msg.ep {
             EP_GO => {
                 let me = ctx.me();
-                let (io, file, size, opts) = (self.io, self.file, self.file_size, self.opts.clone());
+                let (io, file, size, opts) =
+                    (self.io, self.file, self.file_size, self.opts.clone());
                 io.open(ctx, file, size, opts, Callback::to_chare(me, EP_OPENED));
             }
             EP_OPENED => {
                 let me = ctx.me();
-                let (io, file, so, sb) = (self.io, self.file, self.session_offset, self.session_bytes);
+                let (io, file, so, sb) =
+                    (self.io, self.file, self.session_offset, self.session_bytes);
                 io.start_read_session(ctx, file, so, sb, Callback::to_chare(me, EP_READY));
             }
             EP_READY | EP_SESSION_FWD => {
@@ -150,8 +152,8 @@ pub fn run_ckio_read(
     opts: Options,
     seed: u64,
 ) -> (Time, Engine) {
-    let mut eng =
-        Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed)).with_sim_pfs(PfsConfig::default());
+    let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed))
+        .with_sim_pfs(PfsConfig::default());
     let file = eng.core.sim_pfs_mut().create_file(file_size);
     let io = CkIo::boot(&mut eng);
     let fut = eng.future(nclients);
@@ -190,8 +192,8 @@ pub fn run_naive_read(
     block_pe: bool,
     seed: u64,
 ) -> (Time, Engine) {
-    let mut eng =
-        Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed)).with_sim_pfs(PfsConfig::default());
+    let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed))
+        .with_sim_pfs(PfsConfig::default());
     let file = eng.core.sim_pfs_mut().create_file(file_size);
     let fut = eng.future(nclients);
     let per = file_size / nclients as u64;
@@ -225,8 +227,14 @@ pub fn fig1_naive_clients(reps: u32) -> Table {
             let clients = 1u32 << exp;
             let samples: Vec<f64> = (0..reps)
                 .map(|r| {
-                    let (tt, _) =
-                        run_naive_read(PAPER_NODES, PAPER_PES, size, clients, false, 100 + r as u64);
+                    let (tt, _) = run_naive_read(
+                        PAPER_NODES,
+                        PAPER_PES,
+                        size,
+                        clients,
+                        false,
+                        100 + r as u64,
+                    );
                     gibs(size, tt)
                 })
                 .collect();
@@ -259,7 +267,13 @@ pub fn fig2_disk_vs_net(reps: u32) -> Table {
                 EP_GO => {
                     let peer = self.peer.unwrap();
                     let bytes = self.bytes;
-                    ctx.send_sized(peer, EP_DATA, Payload::empty(), bytes, crate::net::Transfer::Eager);
+                    ctx.send_sized(
+                        peer,
+                        EP_DATA,
+                        Payload::empty(),
+                        bytes,
+                        crate::net::Transfer::Eager,
+                    );
                 }
                 EP_DATA => {
                     let done = self.done.clone();
@@ -288,8 +302,10 @@ pub fn fig2_disk_vs_net(reps: u32) -> Table {
         // Network time: send the same bytes node 0 → node 1.
         let mut eng = Engine::new(EngineConfig::sim(2, 1));
         let fut = eng.future(1);
-        let b = eng.create_singleton(Pe(1), Sender { peer: None, bytes: 0, done: Callback::Future(fut) });
-        let a = eng.create_singleton(Pe(0), Sender { peer: Some(b), bytes: size, done: Callback::Ignore });
+        let b = eng
+            .create_singleton(Pe(1), Sender { peer: None, bytes: 0, done: Callback::Future(fut) });
+        let a = eng
+            .create_singleton(Pe(0), Sender { peer: Some(b), bytes: size, done: Callback::Ignore });
         eng.inject_signal(a, EP_GO);
         eng.run();
         let net_s = time::to_secs(eng.take_future(fut)[0].0);
@@ -321,7 +337,9 @@ pub fn fig4_ckio_vs_naive(reps: u32) -> Table {
         let clients = 1u32 << exp;
         let naive: Vec<f64> = (0..reps)
             .map(|r| {
-                time::to_secs(run_naive_read(PAPER_NODES, PAPER_PES, size, clients, false, 31 + r as u64).0)
+                time::to_secs(
+                    run_naive_read(PAPER_NODES, PAPER_PES, size, clients, false, 31 + r as u64).0,
+                )
             })
             .collect();
         let ckio: Vec<f64> = (0..reps)
@@ -378,7 +396,13 @@ pub fn fig7_mpiio_vs_ckio(reps: u32) -> Table {
                 let fut = eng.future(nranks);
                 let slices2 = slices.clone();
                 let cid = eng.create_array(nranks, &Placement::RoundRobinPes, |r| {
-                    MpiRank::new(cfg.clone(), r, &slices2, CollectionId(u32::MAX), Callback::Future(fut))
+                    MpiRank::new(
+                        cfg.clone(),
+                        r,
+                        &slices2,
+                        CollectionId(u32::MAX),
+                        Callback::Future(fut),
+                    )
                 });
                 for r in 0..nranks {
                     eng.chare_mut::<MpiRank>(ChareRef::new(cid, r)).ranks = cid;
@@ -436,8 +460,8 @@ pub fn fig8_overlap_runtime(reps: u32) -> Table {
 
     // One run: returns (total_s, bg_s).
     let run_one = |ckio_mode: bool, with_bg: bool, seed: u64| -> (f64, f64) {
-        let mut eng =
-            Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed)).with_sim_pfs(PfsConfig::default());
+        let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed))
+            .with_sim_pfs(PfsConfig::default());
         let file = eng.core.sim_pfs_mut().create_file(size);
         let per = size / nclients as u64;
         let read_fut = eng.future(nclients);
@@ -471,7 +495,8 @@ pub fn fig8_overlap_runtime(reps: u32) -> Table {
         }
         if with_bg {
             let bg_fut = eng.future(npes);
-            let grp = eng.create_group(|_| BgWorker::new(slice, Some(quota), Callback::Future(bg_fut)));
+            let grp =
+                eng.create_group(|_| BgWorker::new(slice, Some(quota), Callback::Future(bg_fut)));
             for pe in 0..npes {
                 eng.inject_signal(ChareRef::new(grp, pe), EP_BG_START);
             }
@@ -556,7 +581,8 @@ pub fn fig9_overlap_fraction(reps: u32) -> Table {
             let per = size / clients as u64;
             let bg_fut = eng.future(npes);
             let done_fut = eng.future(1);
-            let grp = eng.create_group(|_| BgWorker::new(10 * MICROS, None, Callback::Future(bg_fut)));
+            let grp =
+                eng.create_group(|_| BgWorker::new(10 * MICROS, None, Callback::Future(bg_fut)));
             let collector = eng.create_singleton(
                 Pe(0),
                 Collector {
@@ -796,7 +822,8 @@ pub fn fig13_changa(reps: u32, n_tp: u32) -> Table {
             let samples: Vec<f64> = (0..reps)
                 .map(|r| {
                     time::to_secs(
-                        run_changa_input(nodes, 32, n_tp, nbodies, scheme, 2000 + r as u64).input_time,
+                        run_changa_input(nodes, 32, n_tp, nbodies, scheme, 2000 + r as u64)
+                            .input_time,
                     )
                 })
                 .collect();
@@ -890,7 +917,8 @@ pub fn ablation_splinter(reps: u32) -> Table {
             let file = eng.core.sim_pfs_mut().create_file(size);
             let io = CkIo::boot(&mut eng);
             let fut = eng.future(1);
-            let opts = Options { num_readers: Some(1), splinter_bytes: splinter, ..Default::default() };
+            let opts =
+                Options { num_readers: Some(1), splinter_bytes: splinter, ..Default::default() };
             let cid = eng.create_array(1, &Placement::RoundRobinPes, |_| {
                 SliceReader::new(
                     io,
@@ -1007,7 +1035,8 @@ impl Chare for ConcurrentClient {
             EP_CC_GO => {
                 self.go_time = ctx.now();
                 let me = ctx.me();
-                let (io, file, size, opts) = (self.io, self.file, self.file_size, self.opts.clone());
+                let (io, file, size, opts) =
+                    (self.io, self.file, self.file_size, self.opts.clone());
                 io.open(ctx, file, size, opts, Callback::to_chare(me, EP_CC_OPENED));
             }
             EP_CC_OPENED => {
@@ -1062,16 +1091,18 @@ impl Chare for ConcurrentClient {
 }
 
 /// Assert the CkIO service holds no per-session residue: no live or
-/// half-closed sessions or stuck rebind probes in the director, no
-/// in-flight assemblies, no session entries or stuck early reads in any
-/// manager, no leaked or stranded governor tickets on any data-plane
-/// shard. One shared definition of "teardown left nothing behind" for
-/// the harness tests, the integration suite, and the examples.
+/// half-closed sessions, stuck rebind probes, or stuck placement plans
+/// in the director, no in-flight assemblies, no session entries or
+/// stuck early reads in any manager, no leaked or stranded governor
+/// tickets on any data-plane shard. One shared definition of "teardown
+/// left nothing behind" for the harness tests, the integration suite,
+/// and the examples.
 pub fn assert_service_clean(eng: &Engine, io: &CkIo) {
     let director: &crate::ckio::director::Director = eng.chare(io.director);
     assert_eq!(director.active_sessions(), 0, "leaked sessions in director");
     assert_eq!(director.pending_closes(), 0, "stuck closes in director");
     assert_eq!(director.pending_takes(), 0, "stuck rebind probes in director");
+    assert_eq!(director.pending_plans(), 0, "stuck placement plans in director");
     for pe in 0..eng.core.topo.npes() {
         let asm: &crate::ckio::assembler::ReadAssembler =
             eng.chare(ChareRef::new(io.assemblers, pe));
@@ -1116,8 +1147,8 @@ pub fn run_svc_concurrent(
     seed: u64,
 ) -> (ConcurrentStats, CkIo, Engine) {
     assert!(k > 0 && clients > 0 && file_size >= clients as u64);
-    let mut eng =
-        Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed)).with_sim_pfs(PfsConfig::default());
+    let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed))
+        .with_sim_pfs(PfsConfig::default());
     let mut files = Vec::with_capacity(k as usize);
     for s in 0..k {
         let file = if s % 2 == 1 {
@@ -1269,8 +1300,8 @@ pub fn run_svc_shared(
     seed: u64,
 ) -> (SharedStats, CkIo, Engine) {
     assert!(k > 0 && clients > 0 && file_size >= clients as u64);
-    let mut eng =
-        Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed)).with_sim_pfs(PfsConfig::default());
+    let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed))
+        .with_sim_pfs(PfsConfig::default());
     let file = eng.core.sim_pfs_mut().create_file(file_size);
     let io = CkIo::boot(&mut eng);
     let done_fut = eng.future(k);
@@ -1508,7 +1539,7 @@ pub struct ChurnSweepRow {
 
 /// The canonical churn shard sweep — ONE definition of the shape
 /// (cluster, file size, K, clients, shard list, seeds), shared by the
-/// `svc_churn` figure table and the `BENCH_pr3.json` `churn` section so
+/// `svc_churn` figure table and the `BENCH_pr4.json` `churn` section so
 /// the two can never silently report different experiments.
 pub fn churn_sweep(reps: u32) -> Vec<ChurnSweepRow> {
     let (nodes, pes) = (4u32, 8);
@@ -1562,7 +1593,198 @@ pub fn svc_churn(reps: u32) -> Table {
     t
 }
 
-/// Machine-readable perf anchor for this PR (`BENCH_pr3.json`):
+// =====================================================================
+// svc_locality — store-aware reader placement vs spread placement
+// =====================================================================
+//
+// PR 4's acceptance scenario: K successive sessions over ONE file whose
+// ranges overlap the first session's claims at *shifted* offsets, so a
+// later session's buffer index no longer lines up with its data's
+// owner. Under the default SpreadNodes placement the peer fetches that
+// dedup the prefetch (PR 2) mostly cross PEs; under
+// `ReaderPlacement::StoreAware` the director plans each start against
+// the span store and creates every overlapping buffer *on the PE of its
+// dominant peer source* — the same bytes move, but
+// `ckio.place.cross_pe_fetch` collapses toward zero (Fig. 12's locality
+// win applied at creation time instead of by migration).
+
+/// Results of one `run_svc_locality` run.
+#[derive(Clone, Debug)]
+pub struct LocalityStats {
+    pub k: u32,
+    /// Buffer chares placed by a shard `PlacementPlan`.
+    pub planned: u64,
+    /// Buffers whose registration found less coverage than planned.
+    pub degraded: u64,
+    /// Peer-fetched bytes served without crossing a PE.
+    pub same_pe_fetch_bytes: u64,
+    /// Peer-fetched bytes that crossed PEs.
+    pub cross_pe_fetch_bytes: u64,
+    /// Total bytes served out of the resident plane (= same + cross
+    /// here: no rebinds in this workload).
+    pub store_hit_bytes: u64,
+    pub makespan_s: f64,
+}
+
+/// Drive `k` successive sessions over ONE file of `file_size` bytes with
+/// `readers` buffer chares each, all kept open until the end (so every
+/// session's claims stay live). Session 0 covers the whole file;
+/// sessions 1..k cover half-file windows shifted by one buffer span per
+/// session — each later buffer is fully contained in exactly one
+/// session-0 claim, but at a *different* array index, which is what
+/// makes index-based placement lose locality and store-aware placement
+/// win it. Every session's full range is read back (verified against
+/// the deterministic file pattern) before the next session starts.
+pub fn run_svc_locality(
+    nodes: u32,
+    pes: u32,
+    file_size: u64,
+    k: u32,
+    readers: u32,
+    placement: ReaderPlacement,
+    seed: u64,
+) -> (LocalityStats, CkIo, Engine) {
+    use crate::ckio::manager::{ReadMsg, EP_M_READ};
+
+    assert!(k >= 1 && readers >= 2);
+    assert!(k <= readers + 1, "window shifts beyond the file for k > readers + 1");
+    assert_eq!(
+        file_size % (2 * readers as u64),
+        0,
+        "file size must be divisible by 2 x readers for aligned windows"
+    );
+    let span = file_size / (2 * readers as u64); // later sessions' buffer span
+    let splinter = (span / 4).max(1);
+    let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed)).with_sim_pfs(
+        PfsConfig { materialize: true, noise_sigma: 0.0, ..PfsConfig::default() },
+    );
+    let file = eng.core.sim_pfs_mut().create_file(file_size);
+    let io = CkIo::boot(&mut eng);
+
+    let opts = Options {
+        num_readers: Some(readers),
+        splinter_bytes: Some(splinter),
+        placement,
+        ..Default::default()
+    };
+    let open_fut = eng.future(1);
+    io.open_driver(&mut eng, file, file_size, opts, Callback::Future(open_fut));
+    eng.run();
+    assert!(eng.future_done(open_fut), "svc_locality: open never completed");
+
+    let mut sessions = Vec::with_capacity(k as usize);
+    for i in 0..k {
+        let (offset, bytes) =
+            if i == 0 { (0, file_size) } else { (i as u64 * span, file_size / 2) };
+        let ready = eng.future(1);
+        io.start_session_driver(&mut eng, file, offset, bytes, Callback::Future(ready));
+        eng.run();
+        assert!(eng.future_done(ready), "svc_locality: session {i} never became ready");
+        let (_, mut p) = eng.take_future(ready).pop().unwrap();
+        let s = p.take::<Session>();
+        // Read the whole session range back through PE 0's manager and
+        // verify it against the file pattern — whatever mix of local
+        // copies, cross-PE peer fetches, and PFS reads served it.
+        let read_fut = eng.future(1);
+        eng.inject(
+            ChareRef::new(io.managers, 0),
+            EP_M_READ,
+            ReadMsg { session: s.id, offset, len: bytes, after: Callback::Future(read_fut) },
+        );
+        eng.run();
+        assert!(eng.future_done(read_fut), "svc_locality: session {i} read never completed");
+        let (_, mut p) = eng.take_future(read_fut).pop().unwrap();
+        let r = p.take::<ReadResult>();
+        assert_eq!(r.len, bytes);
+        let data = r.chunk.bytes.as_ref().expect("materialized run must deliver bytes");
+        assert_eq!(
+            crate::pfs::pattern::verify(file, offset, data),
+            None,
+            "svc_locality: corrupt read in session {i}"
+        );
+        sessions.push(s);
+    }
+    for s in sessions {
+        let closed = eng.future(1);
+        io.close_session_driver(&mut eng, s.id, Callback::Future(closed));
+        eng.run();
+        assert!(eng.future_done(closed), "svc_locality: close never completed");
+    }
+    let fclosed = eng.future(1);
+    io.close_file_driver(&mut eng, file, Callback::Future(fclosed));
+    eng.run();
+    assert!(eng.future_done(fclosed), "svc_locality: file close never completed");
+
+    let m = &eng.core.metrics;
+    let stats = LocalityStats {
+        k,
+        planned: m.counter(keys::PLACE_PLANNED),
+        degraded: m.counter(keys::PLACE_DEGRADED),
+        same_pe_fetch_bytes: m.counter(keys::PLACE_SAME_PE),
+        cross_pe_fetch_bytes: m.counter(keys::PLACE_CROSS_PE),
+        store_hit_bytes: m.counter(keys::STORE_HIT),
+        makespan_s: time::to_secs(eng.core.now()),
+    };
+    (stats, io, eng)
+}
+
+/// The canonical StoreAware placement (spread fallback) used by the
+/// locality experiment and its example.
+pub fn store_aware_spread() -> ReaderPlacement {
+    ReaderPlacement::StoreAware { fallback: Box::new(ReaderPlacement::SpreadNodes) }
+}
+
+/// The `svc_locality` experiment table: cross-PE peer-fetch bytes under
+/// StoreAware vs SpreadNodes placement as K same-file sessions grow.
+pub fn svc_locality(reps: u32) -> Table {
+    let (nodes, pes) = (2u32, 4u32);
+    let (size, readers) = (mib(4), 8u32);
+    let n = reps.max(1) as f64;
+    let mut t = Table::new(
+        "svc_locality: K successive overlapping sessions over ONE file, StoreAware vs \
+         SpreadNodes placement (2 nodes x 4 PEs, 4 MiB, 8 readers; cross-PE peer-fetch \
+         bytes collapse under StoreAware)",
+        &["placement", "k", "same_pe_mib", "cross_pe_mib", "cross_share", "planned", "degraded"],
+    );
+    for &k in &[2u32, 4, 8] {
+        for (label, placement) in
+            [("store_aware", store_aware_spread()), ("spread", ReaderPlacement::SpreadNodes)]
+        {
+            let mut same = 0.0;
+            let mut cross = 0.0;
+            let mut planned = 0.0;
+            let mut degraded = 0.0;
+            for r in 0..reps.max(1) {
+                let (st, _, _) = run_svc_locality(
+                    nodes,
+                    pes,
+                    size,
+                    k,
+                    readers,
+                    placement.clone(),
+                    8700 + r as u64,
+                );
+                same += st.same_pe_fetch_bytes as f64;
+                cross += st.cross_pe_fetch_bytes as f64;
+                planned += st.planned as f64;
+                degraded += st.degraded as f64;
+            }
+            let total = (same + cross).max(1.0);
+            t.row(vec![
+                label.into(),
+                k.to_string(),
+                format!("{:.2}", same / n / (1u64 << 20) as f64),
+                format!("{:.2}", cross / n / (1u64 << 20) as f64),
+                format!("{:.3}", cross / total),
+                format!("{:.0}", planned / n),
+                format!("{:.0}", degraded / n),
+            ]);
+        }
+    }
+    t
+}
+
+/// Machine-readable perf anchor for this PR (`BENCH_pr4.json`):
 ///
 /// * `concurrent` — the PR 1 svc_concurrent aggregate-GiB/s anchor
 ///   (continuity: same shape and seeds as `BENCH_pr1.json`),
@@ -1578,8 +1800,12 @@ pub fn svc_churn(reps: u32) -> Table {
 ///   per-shard message imbalance pair dropping as shards increase, with
 ///   shards=1 reproducing the PR 2 single-plane behavior,
 /// * `feedback` (PR 3) — an `adaptive_admission` run recording the
-///   AIMD-derived `ckio.governor.cap` and its adaptation count.
-pub fn bench_pr3_json(reps: u32) -> String {
+///   AIMD-derived `ckio.governor.cap` and its adaptation count,
+/// * `locality` (PR 4) — the svc_locality pair: K successive same-file
+///   sessions under StoreAware vs SpreadNodes placement, with the
+///   `ckio.place.*` counters showing cross-PE peer-fetch bytes
+///   collapsing toward zero when placement follows the store.
+pub fn bench_pr4_json(reps: u32) -> String {
     use crate::harness::bench::Json;
     let (nodes, pes) = (4u32, 8u32);
     let size = mib(256);
@@ -1658,7 +1884,10 @@ pub fn bench_pr3_json(reps: u32) -> String {
             ("k", Json::num(4.0)),
             ("max_inflight_reads", Json::num(4.0)),
             ("ckio.governor.throttled", Json::num(st.governor_throttled as f64)),
-            ("pfs_max_concurrent_reads", Json::num(eng.core.metrics.value(keys::PFS_MAX_CONCURRENT))),
+            (
+                "pfs_max_concurrent_reads",
+                Json::num(eng.core.metrics.value(keys::PFS_MAX_CONCURRENT)),
+            ),
             ("makespan_s", Json::num(st.makespan_s)),
         ])
     };
@@ -1714,14 +1943,51 @@ pub fn bench_pr3_json(reps: u32) -> String {
                 Json::num(eng.core.metrics.counter(keys::GOV_ADAPTATIONS) as f64),
             ),
             ("ckio.governor.throttled", Json::num(st.governor_throttled as f64)),
-            ("pfs_max_concurrent_reads", Json::num(eng.core.metrics.value(keys::PFS_MAX_CONCURRENT))),
+            (
+                "pfs_max_concurrent_reads",
+                Json::num(eng.core.metrics.value(keys::PFS_MAX_CONCURRENT)),
+            ),
             ("makespan_s", Json::num(st.makespan_s)),
         ])
     };
 
+    // Locality pair (PR 4): the identical K-session overlapping workload
+    // under store-aware vs spread placement. Deterministic (noise-free
+    // PFS), so single seeded runs suffice, like governed/evict/feedback.
+    let locality = {
+        let (lk, lreaders, lsize) = (4u32, 8u32, mib(4));
+        let side = |placement: ReaderPlacement| {
+            let (st, _, _) = run_svc_locality(2, 4, lsize, lk, lreaders, placement, 8700);
+            (
+                st.cross_pe_fetch_bytes,
+                Json::obj(vec![
+                    ("ckio.place.planned", Json::num(st.planned as f64)),
+                    ("ckio.place.degraded", Json::num(st.degraded as f64)),
+                    ("ckio.place.same_pe_fetch", Json::num(st.same_pe_fetch_bytes as f64)),
+                    ("ckio.place.cross_pe_fetch", Json::num(st.cross_pe_fetch_bytes as f64)),
+                    ("ckio.store.hit_bytes", Json::num(st.store_hit_bytes as f64)),
+                    ("makespan_s", Json::num(st.makespan_s)),
+                ]),
+            )
+        };
+        let (sa_cross, store_aware) = side(store_aware_spread());
+        let (sp_cross, spread) = side(ReaderPlacement::SpreadNodes);
+        Json::obj(vec![
+            ("k", Json::num(lk as f64)),
+            ("readers", Json::num(lreaders as f64)),
+            ("file_bytes", Json::num(lsize as f64)),
+            ("store_aware", store_aware),
+            ("spread", spread),
+            (
+                "cross_pe_reduction",
+                Json::num(sp_cross as f64 / (sa_cross as f64).max(1.0)),
+            ),
+        ])
+    };
+
     Json::obj(vec![
-        ("bench", Json::str("svc_churn+svc_shared+svc_concurrent")),
-        ("pr", Json::num(3.0)),
+        ("bench", Json::str("svc_locality+svc_churn+svc_shared+svc_concurrent")),
+        ("pr", Json::num(4.0)),
         ("nodes", Json::num(nodes as f64)),
         ("pes_per_node", Json::num(pes as f64)),
         ("file_bytes", Json::num(size as f64)),
@@ -1733,6 +1999,7 @@ pub fn bench_pr3_json(reps: u32) -> String {
         ("evict", evict),
         ("churn", Json::arr(churn)),
         ("feedback", feedback),
+        ("locality", locality),
     ])
     .render()
 }
@@ -1776,8 +2043,15 @@ pub fn ablation_autoreaders(reps: u32) -> Table {
         let auto_s: f64 = (0..reps)
             .map(|r| {
                 time::to_secs(
-                    run_ckio_read(PAPER_NODES, PAPER_PES, size, 512, Options::with_readers(auto), 6000 + r as u64)
-                        .0,
+                    run_ckio_read(
+                        PAPER_NODES,
+                        PAPER_PES,
+                        size,
+                        512,
+                        Options::with_readers(auto),
+                        6000 + r as u64,
+                    )
+                    .0,
                 )
             })
             .sum::<f64>()
@@ -1908,15 +2182,16 @@ mod tests {
     }
 
     #[test]
-    fn bench_pr3_json_is_wellformed() {
-        let j = bench_pr3_json(1);
+    fn bench_pr4_json_is_wellformed() {
+        let j = bench_pr4_json(1);
         assert!(j.starts_with('{') && j.ends_with('}'));
-        assert!(j.contains("\"bench\":\"svc_churn+svc_shared+svc_concurrent\""));
+        assert!(j.contains("\"bench\":\"svc_locality+svc_churn+svc_shared+svc_concurrent\""));
         assert!(j.contains("\"aggregate_gibs\""));
         // K = 1, 4, 8 all reported in the concurrent anchor.
         assert!(j.contains("\"k\":1") && j.contains("\"k\":4") && j.contains("\"k\":8"));
-        // The store / governor / shard observability keys the CI smoke
-        // greps for (PR 2 set + the PR 3 churn/feedback additions).
+        // The store / governor / shard / placement observability keys the
+        // CI smoke greps for (PR 2 set + PR 3 churn/feedback + the PR 4
+        // locality additions).
         for key in [
             "ckio.store.hit_bytes",
             "ckio.store.miss_bytes",
@@ -1930,9 +2205,50 @@ mod tests {
             "ckio.shard.msgs_mean",
             "ckio.governor.cap",
             "ckio.governor.adaptations",
+            "\"locality\"",
+            "ckio.place.planned",
+            "ckio.place.same_pe_fetch",
+            "ckio.place.cross_pe_fetch",
+            "ckio.place.degraded",
+            "cross_pe_reduction",
         ] {
-            assert!(j.contains(key), "missing {key} in BENCH_pr3 json");
+            assert!(j.contains(key), "missing {key} in BENCH_pr4 json");
         }
+    }
+
+    /// PR 4 acceptance: under StoreAware placement the K successive
+    /// overlapping sessions' peer fetches stay on-PE — cross-PE
+    /// peer-fetch bytes collapse to zero for this aligned workload —
+    /// while the identical workload under SpreadNodes pays real cross-PE
+    /// traffic. Deterministic: noise-free PFS, aligned windows.
+    #[test]
+    fn svc_locality_store_aware_collapses_cross_pe_fetches() {
+        let size = 4 << 20;
+        let (sa, io_a, eng_a) = run_svc_locality(2, 4, size, 4, 8, store_aware_spread(), 31);
+        let (sp, io_b, eng_b) =
+            run_svc_locality(2, 4, size, 4, 8, ReaderPlacement::SpreadNodes, 31);
+        assert_service_clean(&eng_a, &io_a);
+        assert_service_clean(&eng_b, &io_b);
+        // Both runs dedup the same resident bytes; every peer-fetched
+        // byte is classified as exactly one of same-PE / cross-PE.
+        assert!(sa.store_hit_bytes > 0 && sp.store_hit_bytes > 0);
+        assert_eq!(sa.same_pe_fetch_bytes + sa.cross_pe_fetch_bytes, sa.store_hit_bytes);
+        assert_eq!(sp.same_pe_fetch_bytes + sp.cross_pe_fetch_bytes, sp.store_hit_bytes);
+        // StoreAware planned every overlapping buffer (3 sessions x 8),
+        // nothing raced an unclaim, and every fetch stayed local.
+        assert_eq!(sa.planned, 3 * 8, "every later buffer must be plan-placed");
+        assert_eq!(sa.degraded, 0);
+        assert_eq!(
+            sa.cross_pe_fetch_bytes, 0,
+            "store-aware placement must colocate every peer fetch in this aligned workload"
+        );
+        assert!(sa.same_pe_fetch_bytes > 0);
+        // The spread baseline pays cross-PE for the same bytes.
+        assert_eq!(sp.planned, 0);
+        assert!(
+            sp.cross_pe_fetch_bytes > 0,
+            "the spread baseline must pay cross-PE peer fetches"
+        );
     }
 
     /// PR 3 acceptance: K = 8 distinct-file sessions complete strictly

@@ -2,11 +2,11 @@
 //! cluster/PFS configuration, or exercise the runtime end-to-end.
 //!
 //! ```text
-//! ckio fig <1|2|4|7|8|9|12|13|sec5|splinter|autoreaders|svc_concurrent|svc_shared|svc_churn|all>
+//! ckio fig <1|2|4|7|8|9|12|13|sec5|splinter|autoreaders|svc_concurrent|svc_shared|svc_churn|svc_locality|all>
 //!      [--reps N] [--out bench_out] [--tp 65536]
 //! ckio read   --file-size 4GiB --clients 512 [--scheme naive|ckio] [--readers N]
 //! ckio changa --nodes 4 --tp 4096 --scheme ckio [--nbodies 2097152]
-//! ckio bench-json [--out BENCH_pr3.json] [--reps 3]   # svc perf + store/governor/shard anchor
+//! ckio bench-json [--out BENCH_pr4.json] [--reps 3]   # svc perf + store/governor/shard/placement anchor
 //! ckio artifacts [--dir artifacts]           # list + smoke-run lowered artifacts
 //! ```
 
@@ -30,7 +30,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: ckio fig <id|all> [--reps N] [--out DIR] | read | changa | artifacts | \
-                 bench-json [--out BENCH_pr3.json]\n\
+                 bench-json [--out BENCH_pr4.json]\n\
                  see `rust/src/main.rs` header for full flags"
             );
         }
@@ -54,6 +54,7 @@ pub fn run_figure(id: &str, reps: u32, n_tp: u32) -> Option<(String, Table)> {
         "svc_concurrent" => exp::svc_concurrent(reps),
         "svc_shared" => exp::svc_shared(reps),
         "svc_churn" => exp::svc_churn(reps),
+        "svc_locality" => exp::svc_locality(reps),
         _ => return None,
     };
     let slug = match id {
@@ -63,6 +64,7 @@ pub fn run_figure(id: &str, reps: u32, n_tp: u32) -> Option<(String, Table)> {
         "svc_concurrent" => "svc_concurrent".to_string(),
         "svc_shared" => "svc_shared".to_string(),
         "svc_churn" => "svc_churn".to_string(),
+        "svc_locality" => "svc_locality".to_string(),
         n => format!("fig{n}"),
     };
     Some((slug, t))
@@ -76,7 +78,7 @@ fn cmd_fig(args: &Args) {
     let ids: Vec<&str> = if id == "all" {
         vec![
             "1", "2", "4", "7", "8", "9", "12", "13", "sec5", "splinter", "autoreaders",
-            "svc_concurrent", "svc_shared", "svc_churn",
+            "svc_concurrent", "svc_shared", "svc_churn", "svc_locality",
         ]
     } else {
         vec![id]
@@ -89,7 +91,9 @@ fn cmd_fig(args: &Args) {
         };
         table.print();
         match table.write_csv(&out, &slug) {
-            Ok(p) => println!("[csv] {} ({:.1}s wall)\n", p.display(), started.elapsed().as_secs_f64()),
+            Ok(p) => {
+                println!("[csv] {} ({:.1}s wall)\n", p.display(), started.elapsed().as_secs_f64())
+            }
             Err(e) => eprintln!("csv write failed: {e}"),
         }
     }
@@ -169,7 +173,8 @@ fn cmd_perf(args: &Args) {
     let mut total_msgs = 0u64;
     let t0 = std::time::Instant::now();
     for i in 0..iters {
-        let (_, eng) = exp::run_ckio_read(16, 32, size, clients, Options::with_readers(readers), i as u64);
+        let (_, eng) =
+            exp::run_ckio_read(16, 32, size, clients, Options::with_readers(readers), i as u64);
         total_tasks += eng.core.metrics.counter("amt.tasks");
         total_msgs += eng.core.metrics.counter("amt.msgs_sent");
     }
@@ -190,12 +195,13 @@ fn cmd_perf(args: &Args) {
 
 /// Emit the PR's machine-readable perf anchor: svc_concurrent
 /// aggregate GiB/s, svc_shared PFS-dedup ratios, the svc_churn shard
-/// sweep, the adaptive-governor feedback run, and the span-store /
-/// admission-governor / shard observability keys, as JSON.
+/// sweep, the adaptive-governor feedback run, the svc_locality
+/// placement pair, and the span-store / admission-governor / shard /
+/// placement observability keys, as JSON.
 fn cmd_bench_json(args: &Args) {
-    let out = args.get("out").unwrap_or("BENCH_pr3.json").to_string();
+    let out = args.get("out").unwrap_or("BENCH_pr4.json").to_string();
     let reps = args.get_or("reps", 3u32);
-    let json = exp::bench_pr3_json(reps);
+    let json = exp::bench_pr4_json(reps);
     std::fs::write(&out, &json).unwrap_or_else(|e| panic!("writing {out}: {e}"));
     println!("[json] {out}");
     println!("{json}");

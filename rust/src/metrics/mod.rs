@@ -168,6 +168,21 @@ pub mod keys {
     /// Admission governor: cap changes made by the adaptive (AIMD)
     /// feedback loop.
     pub const GOV_ADAPTATIONS: &str = "ckio.governor.adaptations";
+    /// Store-aware placement (PR 4): buffer chares whose PE was chosen
+    /// by a shard's `PlacementPlan` (dominant peer source) rather than
+    /// the fallback policy.
+    pub const PLACE_PLANNED: &str = "ckio.place.planned";
+    /// Peer-fetched bytes that stayed on one PE (requester and source
+    /// colocated — what store-aware placement maximizes).
+    pub const PLACE_SAME_PE: &str = "ckio.place.same_pe_fetch";
+    /// Peer-fetched bytes that crossed PEs (the Fig. 12 cost store-aware
+    /// placement collapses toward zero).
+    pub const PLACE_CROSS_PE: &str = "ckio.place.cross_pe_fetch";
+    /// Store-aware placement: buffers whose registration found less
+    /// peer coverage than their plan promised (a claim owner unclaimed
+    /// between `EP_SHARD_PLAN` and `EP_SHARD_REGISTER`; the shortfall
+    /// degrades gracefully to PFS reads).
+    pub const PLACE_DEGRADED: &str = "ckio.place.degraded";
     /// Data-plane shards: most messages processed by any one shard
     /// (gauge, set by the harness post-run; with `msgs_mean` this is the
     /// shard-imbalance pair).

@@ -1,0 +1,344 @@
+//! Store-aware placement integration tests (PR 4): the plan-then-create
+//! session start, its revalidation under races, and the structured
+//! open-time rejection of impossible placements.
+//!
+//! * **Plan placement** — a `StoreAware` session started over live
+//!   claims creates each buffer chare on the PE of its dominant peer
+//!   source, so every peer fetch is a same-PE copy.
+//! * **Plan vs unclaim race** — a session close landing between the
+//!   director's `EP_SHARD_PLAN` probe and the new buffers' registration
+//!   retracts the claims the plan saw; the start must degrade to the
+//!   fallback behavior (PFS reads, `ckio.place.degraded`) without
+//!   asserting, and every read still verifies.
+//! * **No stale plans** — plans are per-start snapshots, never cached:
+//!   after a full close + purge + re-open, a new `StoreAware` start
+//!   finds an empty store and lands exactly on the fallback placement.
+//! * **Open-time validation** — a placement that can never cover the
+//!   resolvable reader count fails `open` with a structured
+//!   [`OpenError`] instead of panicking at session start.
+
+use ckio::amt::callback::Callback;
+use ckio::amt::chare::ChareRef;
+use ckio::amt::engine::{Engine, EngineConfig};
+use ckio::amt::topology::Placement;
+use ckio::ckio::director::Director;
+use ckio::ckio::manager::{ReadMsg, EP_M_READ};
+use ckio::ckio::{CkIo, OpenError, Options, ReadResult, ReaderPlacement, Session, SessionId};
+use ckio::harness::experiments::assert_service_clean;
+use ckio::metrics::keys;
+use ckio::pfs::{pattern, FileId, PfsConfig};
+
+const KIB: u64 = 1 << 10;
+const MIB: u64 = 1 << 20;
+
+fn verified_engine(file_size: u64) -> (Engine, FileId, CkIo) {
+    let mut eng = Engine::new(EngineConfig::sim(2, 4)).with_sim_pfs(PfsConfig {
+        materialize: true,
+        noise_sigma: 0.0,
+        ..PfsConfig::default()
+    });
+    let file = eng.core.sim_pfs_mut().create_file(file_size);
+    let io = CkIo::boot(&mut eng);
+    (eng, file, io)
+}
+
+fn store_aware_opts() -> Options {
+    Options {
+        num_readers: Some(8),
+        splinter_bytes: Some(16 * KIB),
+        placement: ReaderPlacement::StoreAware {
+            fallback: Box::new(ReaderPlacement::SpreadNodes),
+        },
+        ..Default::default()
+    }
+}
+
+fn open_file(eng: &mut Engine, io: &CkIo, file: FileId, size: u64, opts: Options) {
+    let fut = eng.future(1);
+    io.open_driver(eng, file, size, opts, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "open never completed");
+}
+
+fn start_session(eng: &mut Engine, io: &CkIo, file: FileId, offset: u64, bytes: u64) -> Session {
+    let fut = eng.future(1);
+    io.start_session_driver(eng, file, offset, bytes, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "session never became ready");
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    p.take::<Session>()
+}
+
+fn close_session(eng: &mut Engine, io: &CkIo, sid: SessionId) {
+    let fut = eng.future(1);
+    io.close_session_driver(eng, sid, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "session close never completed");
+}
+
+fn close_file(eng: &mut Engine, io: &CkIo, file: FileId) {
+    let fut = eng.future(1);
+    io.close_file_driver(eng, file, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "file close never completed");
+}
+
+fn read_verified(eng: &mut Engine, io: &CkIo, s: &Session, file: FileId, offset: u64, len: u64) {
+    let fut = eng.future(1);
+    eng.inject(
+        ChareRef::new(io.managers, 0),
+        EP_M_READ,
+        ReadMsg { session: s.id, offset, len, after: Callback::Future(fut) },
+    );
+    eng.run();
+    assert!(eng.future_done(fut), "read callback never fired");
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    let r = p.take::<ReadResult>();
+    assert_eq!(r.len, len);
+    let bytes = r.chunk.bytes.as_ref().expect("materialized run must deliver bytes");
+    assert_eq!(pattern::verify(file, offset, bytes), None, "corrupt read");
+}
+
+// ---------------------------------------------------------------------
+// 1. Plan placement colocates buffers with their peer sources
+// ---------------------------------------------------------------------
+
+/// Session B's window is shifted by one B-sized span against session
+/// A's partition, so B's buffer j is fully contained in A's buffer
+/// `(1 + j) / 2` — at a *different* index. The plan must place each B
+/// buffer on its source's PE (not at index-based fallback position),
+/// and every peer fetch must then stay on-PE.
+#[test]
+fn store_aware_places_buffers_on_peer_source_pes() {
+    let size = MIB;
+    let (mut eng, file, io) = verified_engine(size);
+    open_file(&mut eng, &io, file, size, store_aware_opts());
+
+    // Session A: the whole file, 8 buffers of 128 KiB.
+    let sa = start_session(&mut eng, &io, file, 0, size);
+    assert_eq!(eng.core.metrics.counter(keys::PLACE_PLANNED), 0, "nothing resident yet");
+
+    // Session B: [64 KiB, 576 KiB), 8 buffers of 64 KiB.
+    let span = size / 16;
+    let sb = start_session(&mut eng, &io, file, span, size / 2);
+    assert_eq!(
+        eng.core.metrics.counter(keys::PLACE_PLANNED),
+        8,
+        "every B buffer has a resident source and must be plan-placed"
+    );
+    for j in 0..8u32 {
+        let source = (1 + j) / 2;
+        assert_eq!(
+            eng.pe_of(ChareRef::new(sb.buffers, j)),
+            eng.pe_of(ChareRef::new(sa.buffers, source)),
+            "B buffer {j} must sit on the PE of its dominant source (A buffer {source})"
+        );
+    }
+    // All of B's bytes came off A's resident data without crossing PEs.
+    assert_eq!(eng.core.metrics.counter(keys::PLACE_CROSS_PE), 0);
+    assert_eq!(eng.core.metrics.counter(keys::PLACE_SAME_PE), size / 2);
+    assert_eq!(eng.core.metrics.counter(keys::PLACE_DEGRADED), 0);
+    read_verified(&mut eng, &io, &sb, file, span, size / 2);
+
+    close_session(&mut eng, &io, sb.id);
+    close_session(&mut eng, &io, sa.id);
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
+}
+
+// ---------------------------------------------------------------------
+// 2. A plan racing a concurrent unclaim degrades to the fallback
+// ---------------------------------------------------------------------
+
+/// Session A closes in the same scheduling window as session B starts:
+/// the director's plan probe races A's buffers' `EP_SHARD_UNCLAIM`s. If
+/// the plan snapshot still saw A's claims, B's registration (which runs
+/// strictly later) finds them gone and must degrade — fallback PFS
+/// reads, `ckio.place.degraded` counted, no assert anywhere — and B's
+/// data must still verify byte-for-byte.
+#[test]
+fn plan_racing_a_session_close_degrades_to_fallback() {
+    let size = MIB;
+    let (mut eng, file, io) = verified_engine(size);
+    open_file(&mut eng, &io, file, size, store_aware_opts());
+
+    let sa = start_session(&mut eng, &io, file, 0, size);
+
+    // Close A and start B back-to-back, no quiescence in between.
+    let close_fut = eng.future(1);
+    io.close_session_driver(&mut eng, sa.id, Callback::Future(close_fut));
+    let ready_fut = eng.future(1);
+    io.start_session_driver(&mut eng, file, 0, size, Callback::Future(ready_fut));
+    eng.run();
+    assert!(eng.future_done(close_fut), "A's close must complete");
+    assert!(eng.future_done(ready_fut), "B must become ready despite the race");
+    let sb = {
+        let (_, mut p) = eng.take_future(ready_fut).pop().unwrap();
+        p.take::<Session>()
+    };
+
+    // Whichever side the snapshot caught: a plan that promised coverage
+    // which registration could not confirm must be counted as degraded
+    // (and one that already saw the unclaim promises nothing). Either
+    // way B serves its whole range, verified, with no stranded state.
+    let planned = eng.core.metrics.counter(keys::PLACE_PLANNED);
+    let degraded = eng.core.metrics.counter(keys::PLACE_DEGRADED);
+    if planned > 0 {
+        assert!(
+            degraded > 0,
+            "a plan over claims that vanished must revalidate as degraded (planned {planned})"
+        );
+    }
+    read_verified(&mut eng, &io, &sb, file, 0, size);
+    // B re-read everything it could not peer-fetch: total delivery is
+    // still exact (the PFS saw the file once for A plus B's fallback).
+    close_session(&mut eng, &io, sb.id);
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
+}
+
+// ---------------------------------------------------------------------
+// 3. Re-open never sees a stale plan
+// ---------------------------------------------------------------------
+
+/// Plans are snapshots correlated by token, never cached by file: after
+/// a full close (purging the shard) and a re-open, a `StoreAware` start
+/// must get an *empty* plan — no buffer plan-placed, the array exactly
+/// at the fallback placement — rather than resurrecting the previous
+/// generation's layout.
+#[test]
+fn reopen_does_not_reuse_a_stale_plan() {
+    let size = MIB;
+    let (mut eng, file, io) = verified_engine(size);
+    open_file(&mut eng, &io, file, size, store_aware_opts());
+
+    // First generation: warm the store, then tear everything down.
+    let sa = start_session(&mut eng, &io, file, 0, size);
+    let sb = start_session(&mut eng, &io, file, size / 16, size / 2);
+    let planned_gen1 = eng.core.metrics.counter(keys::PLACE_PLANNED);
+    assert_eq!(planned_gen1, 8, "generation 1 must be plan-placed");
+    close_session(&mut eng, &io, sb.id);
+    close_session(&mut eng, &io, sa.id);
+    close_file(&mut eng, &io, file);
+
+    // Second generation: same file id, same shapes, empty store.
+    open_file(&mut eng, &io, file, size, store_aware_opts());
+    let sc = start_session(&mut eng, &io, file, size / 16, size / 2);
+    assert_eq!(
+        eng.core.metrics.counter(keys::PLACE_PLANNED),
+        planned_gen1,
+        "a start over a purged store must not be plan-placed"
+    );
+    // The array sits exactly where the fallback (SpreadNodes) puts it.
+    let expected = Placement::RoundRobinNodes.place(&eng.core.topo, 8);
+    for j in 0..8u32 {
+        assert_eq!(
+            eng.pe_of(ChareRef::new(sc.buffers, j)),
+            expected[j as usize],
+            "buffer {j} must sit at its fallback position"
+        );
+    }
+    read_verified(&mut eng, &io, &sc, file, size / 16, size / 2);
+    close_session(&mut eng, &io, sc.id);
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
+}
+
+// ---------------------------------------------------------------------
+// 4. Impossible placements fail open with a structured error
+// ---------------------------------------------------------------------
+
+/// Regression (PR 4 satellite): `ReaderPlacement::Explicit` with fewer
+/// PEs than the resolvable reader count used to panic inside
+/// `to_placement` at session start. It now fails the `open` itself with
+/// a structured [`OpenError`] on the callback, creates no file state
+/// anywhere, and leaves the service fully usable.
+#[test]
+fn short_explicit_placement_fails_open_with_structured_error() {
+    let size = MIB;
+    let (mut eng, file, io) = verified_engine(size);
+    let bad = Options {
+        num_readers: Some(4),
+        placement: ReaderPlacement::Explicit(vec![0, 1]),
+        ..Default::default()
+    };
+    let fut = eng.future(1);
+    io.open_driver(&mut eng, file, size, bad, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "rejected open must still fire its callback");
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    assert_eq!(
+        p.take::<OpenError>(),
+        OpenError::PlacementTooShort { need: 4, got: 2 },
+        "the callback must carry the structured error"
+    );
+    assert_eq!(eng.core.metrics.counter("ckio.opens_rejected"), 1);
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0, "no file state created");
+
+    // A StoreAware fallback nested inside StoreAware is rejected too.
+    let nested = Options {
+        num_readers: Some(2),
+        placement: ReaderPlacement::StoreAware {
+            fallback: Box::new(ReaderPlacement::StoreAware {
+                fallback: Box::new(ReaderPlacement::SpreadNodes),
+            }),
+        },
+        ..Default::default()
+    };
+    let fut = eng.future(1);
+    io.open_driver(&mut eng, file, size, nested, Callback::Future(fut));
+    eng.run();
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    assert_eq!(p.take::<OpenError>(), OpenError::RecursiveFallback);
+
+    // The service is intact: a valid open + session works afterwards.
+    open_file(&mut eng, &io, file, size, Options::with_readers(2));
+    let s = start_session(&mut eng, &io, file, 0, size);
+    read_verified(&mut eng, &io, &s, file, 0, size);
+    close_session(&mut eng, &io, s.id);
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+}
+
+/// The split-phase pattern of sending `open` and `startReadSession`
+/// back-to-back (without waiting for the open callback) must stay safe
+/// when the open is *rejected*: the pipelined start gets the same
+/// structured error on its own callback — never a director panic — and
+/// the file is fully usable after a subsequent valid open.
+#[test]
+fn session_start_pipelined_behind_rejected_open_gets_the_error() {
+    let size = MIB;
+    let (mut eng, file, io) = verified_engine(size);
+    let bad = Options {
+        num_readers: Some(4),
+        placement: ReaderPlacement::Explicit(vec![0]),
+        ..Default::default()
+    };
+    let opened = eng.future(1);
+    let ready = eng.future(1);
+    // Injected together: the start is queued behind the rejected open.
+    io.open_driver(&mut eng, file, size, bad, Callback::Future(opened));
+    io.start_session_driver(&mut eng, file, 0, size, Callback::Future(ready));
+    eng.run();
+    assert!(eng.future_done(opened) && eng.future_done(ready));
+    let (_, mut p) = eng.take_future(ready).pop().unwrap();
+    assert_eq!(
+        p.take::<OpenError>(),
+        OpenError::PlacementTooShort { need: 4, got: 1 },
+        "the pipelined start must surface the open's structured error"
+    );
+    assert_eq!(eng.core.metrics.counter("ckio.sessions_rejected"), 1);
+
+    // A later valid open supersedes the rejection: the same file opens
+    // and serves sessions normally.
+    open_file(&mut eng, &io, file, size, Options::with_readers(2));
+    let s = start_session(&mut eng, &io, file, 0, size);
+    read_verified(&mut eng, &io, &s, file, 0, size);
+    close_session(&mut eng, &io, s.id);
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
+}

@@ -125,6 +125,52 @@ fn file_to_shard_routing_is_stable_across_reopen() {
     assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
 }
 
+/// The PR 4 residency summary answers "who holds these bytes" on the
+/// home shard and only there — the one-probe promise store-aware
+/// placement is built on. The store-level plan (dominant source per
+/// prospective span) agrees with where the live session's buffers
+/// actually sit.
+#[test]
+fn residency_summary_and_plan_live_on_the_home_shard_only() {
+    let size = MIB;
+    let (mut eng, files, io) = verified_engine(1, size);
+    let file = files[0];
+    open_file(&mut eng, &io, file, size, Options::with_readers(2));
+    let s = start_session(&mut eng, &io, file, 0, size);
+
+    let home = eng.chare::<Director>(io.director).shard_of_file(file);
+    for i in 0..io.nshards {
+        let by_pe = io.shard(&eng, i).span_store().residency_by_pe(file);
+        if i == home {
+            // Two live claims of half the file each, on the two PEs the
+            // session's buffers were placed on.
+            assert_eq!(by_pe.iter().map(|&(_, b)| b).sum::<u64>(), size);
+            assert_eq!(by_pe.len(), 2, "one residency entry per buffer PE");
+            for (pe, _) in &by_pe {
+                let owned = (0..2).any(|b| eng.pe_of(ChareRef::new(s.buffers, b)).0 == *pe);
+                assert!(owned, "residency reported on PE {pe} where no buffer sits");
+            }
+        } else {
+            assert!(by_pe.is_empty(), "residency leaked onto shard {i}");
+        }
+    }
+    // A prospective 4-reader plan over the same range: every span is
+    // covered (each quarter sits inside one half-file claim), and each
+    // dominant source is a PE that really holds the bytes.
+    let plan = io.shard(&eng, home).span_store().plan_spans(file, 0, size, 4, 0);
+    assert_eq!(plan.len(), 4);
+    for (b, src) in plan.into_iter().enumerate() {
+        let src = src.expect("every quarter span has a resident source");
+        assert_eq!(src.covered, size / 4, "span {b} must be fully covered");
+        let source_buffer = (b / 2) as u32; // quarters 0,1 → buffer 0; 2,3 → buffer 1
+        assert_eq!(src.pe, eng.pe_of(ChareRef::new(s.buffers, source_buffer)).0);
+    }
+
+    close_session(&mut eng, &io, s.id);
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+}
+
 // ---------------------------------------------------------------------
 // 2. Per-shard admission: distinct files proceed, same file sequences
 // ---------------------------------------------------------------------
