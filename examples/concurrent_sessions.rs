@@ -15,7 +15,7 @@
 //! ```
 
 use ckio::ckio::director::Director;
-use ckio::ckio::Options;
+use ckio::ckio::{FileOptions, ServiceConfig, SessionOptions};
 use ckio::harness::experiments::{assert_service_clean, run_svc_concurrent};
 use ckio::util::cli::Args;
 
@@ -45,7 +45,9 @@ fn main() {
             size,
             k,
             clients,
-            Options::with_readers(readers),
+            ServiceConfig::default(),
+            FileOptions::with_readers(readers),
+            SessionOptions::default(),
             42,
         );
         if k == 1 {

@@ -22,7 +22,7 @@ use ckio::amt::engine::{Ctx, Engine, EngineConfig};
 use ckio::amt::msg::{Ep, Msg, Payload};
 use ckio::amt::time::{self, MILLIS};
 use ckio::amt::topology::{Pe, Placement};
-use ckio::ckio::{CkIo, Options, ReadResult, Session};
+use ckio::ckio::{CkIo, FileOptions, ReadResult, Session, SessionOptions};
 use ckio::impl_chare_any;
 use ckio::pfs::{FileId, PfsConfig};
 
@@ -69,6 +69,7 @@ impl Leader {
             self.file,
             off,
             N_WORKERS as u64 * BLOCK,
+            SessionOptions::default(),
             Callback::to_chare(me, EP_L_SESSION_READY),
         );
     }
@@ -84,7 +85,7 @@ impl Chare for Leader {
                     ctx,
                     file,
                     size,
-                    Options::with_readers(8),
+                    FileOptions::with_readers(8),
                     Callback::to_chare(me, EP_L_OPENED),
                 );
             }

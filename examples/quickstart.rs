@@ -15,7 +15,7 @@ use ckio::amt::engine::{Ctx, Engine, EngineConfig};
 use ckio::amt::msg::{Ep, Msg, Payload};
 use ckio::amt::time;
 use ckio::amt::topology::Placement;
-use ckio::ckio::{CkIo, Options, ReadResult, Session};
+use ckio::ckio::{CkIo, FileOptions, ReadResult, Session, SessionOptions};
 use ckio::impl_chare_any;
 use ckio::pfs::{pattern, FileId, PfsConfig};
 
@@ -40,9 +40,10 @@ impl Chare for Client {
         let me = ctx.me();
         match msg.ep {
             // Client 0 opens the file and starts a session for everyone.
-            EP_GO => self.io.open(ctx, self.file, FILE_SIZE, Options::default(),
+            EP_GO => self.io.open(ctx, self.file, FILE_SIZE, FileOptions::default(),
                                   Callback::to_chare(me, EP_OPENED)),
             EP_OPENED => self.io.start_read_session(ctx, self.file, 0, FILE_SIZE,
+                                                    SessionOptions::default(),
                                                     Callback::to_chare(me, EP_READY)),
             EP_READY => {
                 let s: Session = msg.take();

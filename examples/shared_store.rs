@@ -18,7 +18,7 @@
 //! ```
 
 use ckio::ckio::director::Director;
-use ckio::ckio::Options;
+use ckio::ckio::{FileOptions, ServiceConfig, SessionOptions};
 use ckio::harness::experiments::{assert_service_clean, run_svc_shared};
 use ckio::util::cli::Args;
 
@@ -41,8 +41,17 @@ fn main() {
 
     let mut base = 0.0f64;
     for k in [1u32, 2, 4, 8] {
-        let (st, io, eng) =
-            run_svc_shared(nodes, pes, size, k, clients, Options::with_readers(readers), 42);
+        let (st, io, eng) = run_svc_shared(
+            nodes,
+            pes,
+            size,
+            k,
+            clients,
+            ServiceConfig::default(),
+            FileOptions::with_readers(readers),
+            SessionOptions::default(),
+            42,
+        );
         if k == 1 {
             base = st.pfs_bytes_read as f64;
         }
@@ -68,10 +77,19 @@ fn main() {
 
     // Admission control: cap aggregate in-flight PFS reads and watch the
     // governor sequence K = 4 sessions' prefetch.
-    let mut gov = Options::with_readers(readers);
-    gov.max_inflight_reads = Some(readers);
-    gov.splinter_bytes = Some(4 << 20);
-    let (st, io, eng) = run_svc_shared(nodes, pes, size, 4, clients, gov, 42);
+    let cfg = ServiceConfig { max_inflight_reads: Some(readers), ..Default::default() };
+    let sopts = SessionOptions { splinter_bytes: Some(4 << 20), ..Default::default() };
+    let (st, io, eng) = run_svc_shared(
+        nodes,
+        pes,
+        size,
+        4,
+        clients,
+        cfg,
+        FileOptions::with_readers(readers),
+        sopts,
+        42,
+    );
     assert_service_clean(&eng, &io);
     let peak = eng.core.metrics.value(ckio::metrics::keys::PFS_MAX_CONCURRENT);
     assert!(

@@ -32,6 +32,7 @@ fn main() {
         ("svc_shared", Box::new(move || exp::svc_shared(reps))),
         ("svc_churn", Box::new(move || exp::svc_churn(reps))),
         ("svc_locality", Box::new(move || exp::svc_locality(reps))),
+        ("svc_qos", Box::new(move || exp::svc_qos(reps))),
     ];
 
     let total = std::time::Instant::now();
@@ -49,22 +50,24 @@ fn main() {
             Err(e) => eprintln!("csv write failed for {slug}: {e}"),
         }
     }
-    // Machine-readable perf anchor for the service-scaling work (PR 4:
+    // Machine-readable perf anchor for the service-scaling work (PR 5:
     // svc_concurrent continuity + svc_shared dedup + svc_churn shard
     // sweep + adaptive-governor feedback + the svc_locality placement
-    // pair, with the store/governor/shard/placement keys). Any svc
-    // filter triggers it — the JSON has every section.
+    // pair + the svc_qos class pair, with the
+    // store/governor/shard/placement/qos keys). Any svc filter triggers
+    // it — the JSON has every section.
     if wanted.is_empty()
         || wanted.iter().any(|w| {
             "svc_shared".contains(w.as_str())
                 || "svc_concurrent".contains(w.as_str())
                 || "svc_churn".contains(w.as_str())
                 || "svc_locality".contains(w.as_str())
+                || "svc_qos".contains(w.as_str())
         })
     {
-        match std::fs::write("BENCH_pr4.json", exp::bench_pr4_json(reps)) {
-            Ok(()) => println!("[json] BENCH_pr4.json"),
-            Err(e) => eprintln!("BENCH_pr4.json write failed: {e}"),
+        match std::fs::write("BENCH_pr5.json", exp::bench_pr5_json(reps)) {
+            Ok(()) => println!("[json] BENCH_pr5.json"),
+            Err(e) => eprintln!("BENCH_pr5.json write failed: {e}"),
         }
     }
     println!("total bench wall time: {:.1}s", total.elapsed().as_secs_f64());

@@ -242,7 +242,7 @@ impl Chare for TreePiece {
                 InputScheme::CkIo { io } => {
                     if self.index == 0 {
                         let me = ctx.me();
-                        let opts = crate::ckio::Options::default();
+                        let opts = crate::ckio::FileOptions::default();
                         io.open(
                             ctx,
                             self.cfg.file,
@@ -309,6 +309,7 @@ impl Chare for TreePiece {
                     self.cfg.file,
                     HEADER_BYTES,
                     h.nbodies * RECORD_BYTES,
+                    crate::ckio::SessionOptions::default(),
                     Callback::to_chare(me, EP_TP_SESSION),
                 );
             }

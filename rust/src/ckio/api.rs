@@ -1,4 +1,5 @@
-//! The user-facing CkIO API (paper §III-D).
+//! The user-facing CkIO API (paper §III-D), with scoped configuration
+//! (PR 5).
 //!
 //! All calls are split-phase: they return immediately and deliver their
 //! result through a [`Callback`]. Mapping to the paper:
@@ -11,13 +12,27 @@
 //! | `Ck::IO::closeReadSession`   | [`CkIo::close_read_session`]  |
 //! | `Ck::IO::close`              | [`CkIo::close`]               |
 //!
+//! Configuration is scoped (PR 5) — each call consumes exactly the
+//! scope it owns:
+//!
+//! | scope   | type                                  | consumed by                  |
+//! |---------|---------------------------------------|------------------------------|
+//! | service | [`super::options::ServiceConfig`]     | [`CkIo::boot_with`] (once)   |
+//! | file    | [`super::options::FileOptions`]       | [`CkIo::open`]               |
+//! | session | [`super::options::SessionOptions`]    | [`CkIo::start_read_session`] |
+//!
 //! Client-side calls take the chare's `Ctx`; the driver-side `*_driver`
 //! variants inject from outside the chare world (experiment setup).
+//! Every public call has a driver twin — [`CkIo::open_driver`],
+//! [`CkIo::start_session_driver`], [`CkIo::read_driver`],
+//! [`CkIo::close_session_driver`], [`CkIo::close_file_driver`] — so
+//! harnesses never need to hand-craft internal messages.
 
 use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::{Ctx, Engine};
 use crate::amt::topology::{Pe, Placement};
+use crate::metrics::keys;
 use crate::pfs::layout::FileId;
 
 use super::assembler::ReadAssembler;
@@ -26,7 +41,7 @@ use super::director::{
     EP_DIR_CLOSE_SESSION, EP_DIR_OPEN, EP_DIR_START_SESSION,
 };
 use super::manager::{Manager, ReadMsg, EP_M_READ};
-use super::options::Options;
+use super::options::{ConfigError, FileOptions, ServiceConfig, SessionOptions};
 use super::session::{Session, SessionId};
 use super::shard::DataShard;
 
@@ -41,7 +56,8 @@ pub struct CkIo {
     /// partitioned by `FileId` hash.
     pub shards: CollectionId,
     /// Elements in `shards` (one per PE; how many the hash actually
-    /// routes over is `Options::data_plane_shards`, inspected via
+    /// routes over is fixed at boot by
+    /// `ServiceConfig::data_plane_shards`, inspected via
     /// [`Director::active_shards`]).
     pub nshards: u32,
 }
@@ -70,10 +86,27 @@ fn patch_director<T: Chare>(
 }
 
 impl CkIo {
+    /// [`CkIo::boot_with`] under the default [`ServiceConfig`] (no store
+    /// budget, one shard per PE, no admission control) — always valid.
+    pub fn boot(engine: &mut Engine) -> CkIo {
+        Self::boot_with(engine, ServiceConfig::default())
+            .expect("the default ServiceConfig always validates")
+    }
+
     /// Install the CkIO service into an engine: the ReadAssembler group,
     /// the Manager group, the data-plane shard array (one element per
-    /// PE), and the Director singleton (on PE 0).
-    pub fn boot(engine: &mut Engine) -> CkIo {
+    /// PE), and the Director singleton (on PE 0) — configured by `cfg`,
+    /// the **service scope** (PR 5): store budget, shard count, and
+    /// admission cap/policy are set here, once, synchronously, before
+    /// any message is in flight. There is no runtime reconfiguration:
+    /// the "last writer wins" / "first opener governs" semantics of the
+    /// old per-file knobs are gone by construction.
+    ///
+    /// An invalid configuration (zero cap, zero shards) is rejected
+    /// with a structured [`ConfigError`] before any service state is
+    /// created.
+    pub fn boot_with(engine: &mut Engine, cfg: ServiceConfig) -> Result<CkIo, ConfigError> {
+        cfg.validate()?;
         let assemblers = engine.create_group(|_| ReadAssembler::default());
         // The director's ChareRef isn't known until created; managers and
         // shards are patched right after through `patch_director`, which
@@ -82,13 +115,31 @@ impl CkIo {
         let managers = engine.create_group(|pe| Manager::new(placeholder, assemblers, pe.0));
         let npes = engine.core.topo.npes();
         let nshards = npes;
+        let active = cfg.resolve_shards(npes);
         let shards = engine
             .create_array(nshards, &Placement::RoundRobinPes, |i| DataShard::new(i, placeholder));
-        let director = engine
-            .create_singleton(Pe(0), Director::new(managers, assemblers, shards, nshards, npes));
+        let director = engine.create_singleton(
+            Pe(0),
+            Director::new(managers, assemblers, shards, nshards, active, cfg.governed(), npes),
+        );
         patch_director::<Manager>(engine, managers, npes, director, |m| &mut m.director);
         patch_director::<DataShard>(engine, shards, nshards, director, |s| &mut s.director);
-        CkIo { director, managers, assemblers, shards, nshards }
+        // Configure the *active* shards (inactive ones never see
+        // traffic): store-budget share and governor, applied directly to
+        // the chare structs — boot runs before any message, exactly like
+        // the director patching above. The configured caps are summed
+        // onto the `ckio.governor.cap` gauge here because no `Ctx`
+        // exists at boot; after this, only the AIMD loop can move a cap.
+        let share = cfg.budget_share(active);
+        let mut cap_gauge = 0.0;
+        for s in 0..active {
+            let shard = engine.chare_mut::<DataShard>(ChareRef::new(shards, s));
+            cap_gauge += shard.boot_configure(&cfg, share);
+        }
+        if cap_gauge > 0.0 {
+            engine.core.metrics.add(keys::GOV_CAP, cap_gauge);
+        }
+        Ok(CkIo { director, managers, assemblers, shards, nshards })
     }
 
     // ------------------------------------------------------------------
@@ -138,11 +189,12 @@ impl CkIo {
     /// Open `file`; `opened` receives a [`super::session::FileHandle`].
     ///
     /// Opens are refcounted per file: concurrent or repeated opens share
-    /// one metadata transaction, and **the first opener's `opts` govern
-    /// the file** (like flags on a shared POSIX descriptor) — a later
-    /// open's `opts` are not applied while the file is already open. The
-    /// handle delivered to `opened` carries the options actually in
-    /// effect.
+    /// one metadata transaction, and the file is governed by the
+    /// [`FileOptions`] it was first opened with. A re-open with *equal*
+    /// options is idempotent (the handle carries the options in
+    /// effect); a re-open with **different** options fails with
+    /// [`super::options::OpenError::OptionsConflict`] on `opened` —
+    /// never the pre-PR 5 silent ignore.
     ///
     /// Invalid options fail the open (PR 4): if the placement can never
     /// cover the largest reader count a session of this file could
@@ -156,27 +208,37 @@ impl CkIo {
         ctx: &mut Ctx<'_>,
         file: FileId,
         size: u64,
-        opts: Options,
+        opts: FileOptions,
         opened: Callback,
     ) {
         ctx.send(self.director, EP_DIR_OPEN, OpenMsg { file, size, opts, opened });
     }
 
-    /// Start a read session over `[offset, offset+bytes)` of `file`;
-    /// `ready` receives a [`Session`]. Buffer chares begin their greedy
-    /// reads immediately — computation continues meanwhile.
+    /// Start a read session over `[offset, offset+bytes)` of `file`,
+    /// carrying this session's intent in `opts` (PR 5): the
+    /// [`super::options::QosClass`] (announced to the owning data-plane
+    /// shard before any buffer exists, and attached to every admission
+    /// ticket), splintering, the read window, buffer reuse, and an
+    /// optional placement override. `ready` receives a [`Session`].
+    /// Buffer chares begin their greedy reads immediately — computation
+    /// continues meanwhile. `SessionOptions::default()` reproduces the
+    /// pre-PR 5 behavior exactly. An impossible `placement_override`
+    /// fails `ready` with a structured
+    /// [`super::options::OpenError`].
     pub fn start_read_session(
         &self,
         ctx: &mut Ctx<'_>,
         file: FileId,
         offset: u64,
         bytes: u64,
+        opts: SessionOptions,
         ready: Callback,
     ) {
         ctx.send(self.director, EP_DIR_START_SESSION, StartSessionMsg {
             file,
             offset,
             bytes,
+            opts,
             ready,
         });
     }
@@ -222,7 +284,7 @@ impl CkIo {
         engine: &mut Engine,
         file: FileId,
         size: u64,
-        opts: Options,
+        opts: FileOptions,
         opened: Callback,
     ) {
         engine.inject(self.director, EP_DIR_OPEN, OpenMsg { file, size, opts, opened });
@@ -235,13 +297,36 @@ impl CkIo {
         file: FileId,
         offset: u64,
         bytes: u64,
+        opts: SessionOptions,
         ready: Callback,
     ) {
         engine.inject(self.director, EP_DIR_START_SESSION, StartSessionMsg {
             file,
             offset,
             bytes,
+            opts,
             ready,
+        });
+    }
+
+    /// Driver-side read (PR 5 satellite): route a client read through
+    /// `pe`'s manager — exactly the path [`CkIo::read`] takes from a
+    /// chare on that PE — instead of hand-injecting `EP_M_READ`
+    /// messages. `after` receives the [`super::session::ReadResult`].
+    pub fn read_driver(
+        &self,
+        engine: &mut Engine,
+        pe: u32,
+        session: &Session,
+        offset: u64,
+        len: u64,
+        after: Callback,
+    ) {
+        engine.inject(ChareRef::new(self.managers, pe), EP_M_READ, ReadMsg {
+            session: session.id,
+            offset,
+            len,
+            after,
         });
     }
 

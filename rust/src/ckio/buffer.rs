@@ -9,7 +9,7 @@
 //! ReadAssembler.
 //!
 //! Splintered I/O (paper §VI.C) is supported: with
-//! `Options::splinter_bytes` set, the span is read in sub-chunks and a
+//! `SessionOptions::splinter_bytes` set, the span is read in sub-chunks and a
 //! fetch is served as soon as the splinters covering it have arrived.
 //!
 //! Resident-data plane (PR 2, sharded in PR 3): a buffer chare is a
@@ -27,13 +27,15 @@
 //! queues and is served on arrival, which is what dedups concurrent
 //! same-file prefetch. A peer that was dropped meanwhile answers with a
 //! *miss* and the requester falls back to its own PFS read, so
-//! correctness never depends on the cache. When the file was opened
-//! with `Options::max_inflight_reads` (or `adaptive_admission`), PFS
-//! reads are additionally *governed*: the chare requests tickets from
-//! its shard's admission governor (`EP_SHARD_IO_REQ`), issues exactly
-//! what is granted, and reports each read's observed service time with
-//! the returned ticket (`EP_SHARD_IO_DONE`) — the signal the adaptive
-//! cap's AIMD loop feeds on.
+//! correctness never depends on the cache. When the service was booted
+//! with `ServiceConfig::max_inflight_reads` (or `adaptive_admission`),
+//! PFS reads are additionally *governed*: the chare requests tickets
+//! from its shard's admission governor (`EP_SHARD_IO_REQ`), issues
+//! exactly what is granted, and reports each read's observed service
+//! time with the returned ticket (`EP_SHARD_IO_DONE`) — the signal the
+//! adaptive cap's AIMD loop feeds on. Every ticket request carries the
+//! session's [`crate::ckio::QosClass`] (PR 5), so under a saturated cap
+//! the governor dequeues this chare's demand at its class's weight.
 //!
 //! Store-aware placement (PR 4): when the session started under
 //! [`crate::ckio::ReaderPlacement::StoreAware`], this chare was *placed*
@@ -55,7 +57,7 @@
 //! chunks), so a `closeReadSession` racing outstanding reads can never
 //! strand an assembly. A fetch that arrives *after* the drop (it was in
 //! flight when the drop landed) is flush-served the same way. With
-//! `Options::reuse_buffers`, teardown *parks* instead: resident data is
+//! `SessionOptions::reuse_buffers`, teardown *parks* instead: resident data is
 //! kept and a later identical session rebinds the array without touching
 //! the file system again.
 
@@ -74,6 +76,7 @@ use crate::pfs::backend::{IoResult, ReadRequest};
 use crate::pfs::layout::FileId;
 use crate::util::bytes::{ceil_div, Chunk};
 
+use super::governor::QosClass;
 use super::session::{SessionId, Tag};
 use super::shard::{
     RegisterMsg, UnclaimMsg, EP_SHARD_IO_DONE, EP_SHARD_IO_REQ, EP_SHARD_REGISTER,
@@ -90,7 +93,8 @@ pub const EP_BUF_FETCH: Ep = 3;
 pub const EP_BUF_DROP: Ep = 4;
 /// Session teardown with reuse: drain, keep resident data, ack.
 pub const EP_BUF_PARK: Ep = 5;
-/// Revive a parked buffer under a new session id (payload: `SessionId`).
+/// Revive a parked buffer under a new session (payload: [`RebindMsg`] —
+/// the new session id and its QoS class).
 pub const EP_BUF_REBIND: Ep = 6;
 /// A peer buffer chare requests one of its slots from our resident data.
 pub const EP_BUF_PEER_FETCH: Ep = 7;
@@ -140,13 +144,27 @@ pub struct PeerDataMsg {
     pub chunk: Option<Chunk>,
 }
 
-/// Buffer → shard: request PFS read tickets from the governor.
+/// Buffer → shard: request PFS read tickets from the governor. The
+/// ticket carries the session's QoS class (PR 5): under a saturated cap
+/// the governor dequeues deferred demand by class weight.
 #[derive(Debug)]
 pub struct IoReqMsg {
     pub buffer: ChareRef,
     pub want: u32,
     /// Total bytes of the owning session (admission priority key).
     pub sess_bytes: u64,
+    /// QoS class of the owning session.
+    pub class: QosClass,
+}
+
+/// Director → buffer: revive a parked chare under a new session. The
+/// class travels with the rebind (PR 5): the new session may be a
+/// different tenant than the one that parked the array, and later
+/// tickets must be charged to the *current* session's class.
+#[derive(Debug)]
+pub struct RebindMsg {
+    pub session: SessionId,
+    pub class: QosClass,
 }
 
 /// Buffer → shard: return `n` tickets (reads completed, or a grant
@@ -238,10 +256,13 @@ pub struct BufferChare {
     pending: Vec<FetchMsg>,
     /// Peer fetches for slots whose data has not arrived yet.
     peer_pending: Vec<PeerFetchMsg>,
-    /// Governed issuance (admission governor active for this file).
+    /// Governed issuance (the service booted with admission control).
     governed: bool,
     /// Total session bytes (governor admission priority key).
     sess_bytes: u64,
+    /// QoS class of the owning session: attached to every ticket
+    /// request, updated on rebind (the array may serve a new tenant).
+    class: QosClass,
     /// Tickets requested from the governor and not yet granted.
     asked: u32,
     /// Issue times of in-flight governed PFS reads, keyed by slot — the
@@ -300,6 +321,7 @@ impl BufferChare {
             peer_pending: Vec::new(),
             governed: false,
             sess_bytes: 0,
+            class: QosClass::default(),
             asked: 0,
             issued_at: HashMap::new(),
             peers_resolved: false,
@@ -331,10 +353,12 @@ impl BufferChare {
         }
     }
 
-    /// Route PFS reads through the shard's admission governor.
-    pub fn governed(mut self, sess_bytes: u64) -> BufferChare {
+    /// Route PFS reads through the shard's admission governor, as
+    /// `class` (the owning session's QoS class rides every ticket).
+    pub fn governed(mut self, sess_bytes: u64, class: QosClass) -> BufferChare {
         self.governed = true;
         self.sess_bytes = sess_bytes;
+        self.class = class;
         self
     }
 
@@ -414,7 +438,7 @@ impl BufferChare {
             ctx.send(
                 self.shard,
                 EP_SHARD_IO_REQ,
-                IoReqMsg { buffer: me, want, sess_bytes: self.sess_bytes },
+                IoReqMsg { buffer: me, want, sess_bytes: self.sess_bytes, class: self.class },
             );
         }
     }
@@ -827,20 +851,23 @@ impl Chare for BufferChare {
                 });
             }
             EP_BUF_REBIND => {
-                let sid: SessionId = msg.take();
+                let m: RebindMsg = msg.take();
                 debug_assert!(
                     self.state == BufState::Parked,
                     "rebind of a non-parked buffer ({:?})",
                     self.state
                 );
-                self.session = sid;
+                self.session = m.session;
+                // The rebinding session may be a different tenant: its
+                // class charges any tickets this chare still requests.
+                self.class = m.class;
                 self.state = BufState::Active;
                 ctx.metrics().count("ckio.buffers_rebound", 1);
                 ctx.advance(MICROS / 2);
                 // Resident data makes this chare immediately serviceable;
                 // any still-outstanding prefetch completions keep landing.
                 ctx.send(self.director, super::director::EP_DIR_BUF_STARTED, BufStartedMsg {
-                    session: sid,
+                    session: m.session,
                 });
             }
             other => panic!("BufferChare: unknown ep {other}"),

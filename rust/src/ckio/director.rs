@@ -16,7 +16,7 @@
 //! [`super::shard::DataShard`] chare array: each shard owns the store
 //! and governor state for the `FileId`s that hash to it
 //! ([`super::shard::shard_of`]; the active shard count comes from
-//! [`super::Options::data_plane_shards`], default one per PE). The
+//! [`super::ServiceConfig::data_plane_shards`], fixed at boot). The
 //! director's remaining involvement with the data plane is strictly
 //! lifecycle-shaped, one message per event, always to the single shard
 //! owning the file:
@@ -66,7 +66,7 @@
 //!   modeled NACK) before acking, managers NACK reads that arrive after
 //!   the drop, assemblers are told so late pieces are tolerated — no
 //!   read callback is ever stranded or fired twice,
-//! * **buffer reuse** (`Options::reuse_buffers`): closing parks the
+//! * **buffer reuse** (`SessionOptions::reuse_buffers`): closing parks the
 //!   session's buffer array in its shard's span store keyed by
 //!   `(file, range, shape)`; a later identical session rebinds it and is
 //!   served from resident data with no file-system traffic.
@@ -81,22 +81,21 @@ use crate::amt::time::MICROS;
 use crate::amt::topology::Placement;
 use crate::impl_chare_any;
 use crate::pfs::layout::FileId;
-use crate::util::bytes::ceil_div;
 
 use super::assembler::EP_A_SESSION_DROP;
 use super::buffer::{
-    BufDroppedMsg, BufStartedMsg, BufferChare, EP_BUF_DROP, EP_BUF_INIT, EP_BUF_PARK,
+    BufDroppedMsg, BufStartedMsg, BufferChare, RebindMsg, EP_BUF_DROP, EP_BUF_INIT, EP_BUF_PARK,
     EP_BUF_REBIND,
 };
 use super::manager::{
     FileOpenedMsg, SessionAnnounceMsg, EP_M_FILE_CLOSE, EP_M_FILE_OPENED, EP_M_SESSION_ANNOUNCE,
     EP_M_SESSION_DROP,
 };
-use super::options::{OpenError, Options};
+use super::options::{FileOptions, OpenError, ReaderPlacement, SessionOptions};
 use super::session::{buffer_span_of, FileHandle, Session, SessionId};
 use super::shard::{
-    shard_of, ParkMsg, PlanMsg, ShardConfigMsg, TakeMsg, EP_SHARD_CONFIG, EP_SHARD_PARK,
-    EP_SHARD_PLAN, EP_SHARD_PURGE, EP_SHARD_TAKE,
+    shard_of, ParkMsg, PlanMsg, TakeMsg, EP_SHARD_ADMIT, EP_SHARD_PARK, EP_SHARD_PLAN,
+    EP_SHARD_PURGE, EP_SHARD_TAKE,
 };
 use super::store::{BufKey, PlannedSource};
 
@@ -131,7 +130,7 @@ pub const EP_DIR_PLAN_REPLY: Ep = 13;
 pub struct OpenMsg {
     pub file: FileId,
     pub size: u64,
-    pub opts: Options,
+    pub opts: FileOptions,
     pub opened: Callback,
 }
 
@@ -140,6 +139,9 @@ pub struct StartSessionMsg {
     pub file: FileId,
     pub offset: u64,
     pub bytes: u64,
+    /// Per-session intent (PR 5): QoS class, splintering, window,
+    /// reuse, optional placement override.
+    pub opts: SessionOptions,
     pub ready: Callback,
 }
 
@@ -177,7 +179,7 @@ pub struct PlanReplyMsg {
 /// their callbacks onto `waiters`.
 struct OpenState {
     size: u64,
-    opts: Options,
+    opts: FileOptions,
     waiters: Vec<Callback>,
     acks: u32,
 }
@@ -185,7 +187,7 @@ struct OpenState {
 /// An open file: refcounted so concurrent sessions can share it.
 struct FileEntry {
     size: u64,
-    opts: Options,
+    opts: FileOptions,
     open_count: u32,
 }
 
@@ -222,11 +224,12 @@ struct CloseState {
 /// when the probe was issued (the file was open in the table then), so
 /// the resume must not depend on the file still being open — a final
 /// close racing the probe is tolerated exactly as PR 2's synchronous
-/// path tolerated start-then-close.
+/// path tolerated start-then-close. (The session's own options travel
+/// inside `msg.opts`; only the file scope needs stashing.)
 struct PendingTake {
     msg: StartSessionMsg,
     key: BufKey,
-    opts: Options,
+    fopts: FileOptions,
 }
 
 /// A `StoreAware` session start awaiting its shard's placement plan
@@ -237,7 +240,7 @@ struct PendingTake {
 struct PendingPlan {
     msg: StartSessionMsg,
     key: BufKey,
-    opts: Options,
+    fopts: FileOptions,
 }
 
 /// The Director singleton.
@@ -248,17 +251,15 @@ pub struct Director {
     shards: CollectionId,
     /// Elements in `shards`.
     nshards: u32,
-    /// How many shards the `FileId` hash routes over. Reconfigured only
-    /// while the data plane is fully quiescent (no files, opens,
-    /// sessions, teardowns, or rebind probes in flight), so FileId→shard
-    /// routing is stable for the lifetime of every piece of data-plane
-    /// state.
+    /// How many shards the `FileId` hash routes over. Fixed at boot
+    /// from `ServiceConfig::data_plane_shards` (PR 5) — FileId→shard
+    /// routing can never change for the life of the service, so the
+    /// PR 3/4 idle-barrier reconfiguration no longer exists.
     active_shards: u32,
-    /// The last-configured global store budget (PR 2 semantics: set at
-    /// open, last writer wins, persists across opens). Remembered here
-    /// so a later `active_shards` change re-shares it over the new
-    /// shard count instead of leaving stale per-shard shares behind.
-    store_budget: Option<u64>,
+    /// Whether the service was booted with admission control
+    /// (`ServiceConfig::governed()`): every session's buffers then run
+    /// the shard ticket protocol.
+    governed: bool,
     npes: u32,
     /// Opens awaiting MDS completion, FIFO (the MDS completes in order).
     mds_queue: VecDeque<FileId>,
@@ -292,6 +293,8 @@ impl Director {
         assemblers: CollectionId,
         shards: CollectionId,
         nshards: u32,
+        active_shards: u32,
+        governed: bool,
         npes: u32,
     ) -> Director {
         Director {
@@ -299,9 +302,9 @@ impl Director {
             assemblers,
             shards,
             nshards,
-            active_shards: nshards.max(1),
+            active_shards: active_shards.clamp(1, nshards.max(1)),
+            governed,
             npes,
-            store_budget: None,
             mds_queue: VecDeque::new(),
             opens: HashMap::new(),
             files: HashMap::new(),
@@ -323,22 +326,13 @@ impl Director {
         ChareRef::new(self.shards, shard_of(file, self.active_shards))
     }
 
-    /// Broadcast the remembered global store budget, split over the
-    /// current active shard count, to **every** shard — so a share from
-    /// a previous active-count epoch can never linger (neither on a
-    /// shard that just went inactive nor on one that just gained a
-    /// bigger slice of the pie).
-    fn share_budget(&self, ctx: &mut Ctx<'_>, policy: super::governor::AdmissionPolicy) {
-        let Some(b) = self.store_budget else { return };
-        let share = ceil_div(b, self.active_shards as u64);
-        for s in 0..self.nshards {
-            ctx.send(ChareRef::new(self.shards, s), EP_SHARD_CONFIG, ShardConfigMsg {
-                cap: None,
-                policy,
-                adaptive: false,
-                budget: Some(share),
-            });
-        }
+    /// The placement a session actually starts under: its override when
+    /// set (validated at session start), the file's policy otherwise.
+    fn effective_placement<'a>(
+        fopts: &'a FileOptions,
+        sopts: &'a SessionOptions,
+    ) -> &'a ReaderPlacement {
+        sopts.placement_override.as_ref().unwrap_or(&fopts.placement)
     }
 
     fn maybe_ready(&mut self, ctx: &mut Ctx<'_>, sid: SessionId) {
@@ -402,21 +396,32 @@ impl Director {
         }
     }
 
-    /// The session-shape key used for parked-array rebind matching.
-    fn buf_key(&self, ctx: &Ctx<'_>, opts: &Options, m: &StartSessionMsg) -> BufKey {
+    /// The session-shape key used for parked-array rebind matching: the
+    /// reader count comes from the file scope, splinter/window/effective
+    /// placement from the session scope (PR 5) — two sessions with
+    /// different staging intent never rebind each other's arrays. The
+    /// placement is part of the key because a parked array physically
+    /// sits where its placement put it: without it, a session with a
+    /// `placement_override` could rebind an array at the file-policy
+    /// PEs (or vice versa) and silently end up placed wrong.
+    fn buf_key(&self, ctx: &Ctx<'_>, fopts: &FileOptions, m: &StartSessionMsg) -> BufKey {
         let topo = ctx.topo();
         BufKey {
             file: m.file,
             offset: m.offset,
             bytes: m.bytes,
-            readers: opts.resolve_readers(m.bytes, &topo),
-            splinter: opts.splinter_bytes.unwrap_or(0),
-            window: opts.read_window,
+            readers: fopts.resolve_readers(m.bytes, &topo),
+            splinter: m.opts.splinter_bytes.unwrap_or(0),
+            window: m.opts.read_window,
+            placement: Self::effective_placement(fopts, &m.opts).clone(),
         }
     }
 
     /// Start a session over a rebound parked array (the shard's take
-    /// probe found an exact shape match; claims stayed registered).
+    /// probe found an exact shape match; claims stayed registered). The
+    /// rebind carries the new session's QoS class — the array may serve
+    /// a different tenant now — and the class is registered with the
+    /// owning shard (the rebind path runs no plan probe).
     fn start_rebind(
         &mut self,
         ctx: &mut Ctx<'_>,
@@ -428,6 +433,9 @@ impl Director {
         debug_assert_eq!(nbuf, key.readers);
         let sid = SessionId(self.next_session);
         self.next_session += 1;
+        let class = m.opts.class;
+        let shard = self.shard_ref(m.file);
+        ctx.send(shard, EP_SHARD_ADMIT, class);
         let session = Session::new(sid, m.file, m.offset, m.bytes, buffers, nbuf);
         self.sessions.insert(sid, SessionState {
             session,
@@ -438,7 +446,7 @@ impl Director {
             reuse_key: Some(key),
         });
         for b in 0..nbuf {
-            ctx.send(ChareRef::new(buffers, b), EP_BUF_REBIND, sid);
+            ctx.send(ChareRef::new(buffers, b), EP_BUF_REBIND, RebindMsg { session: sid, class });
         }
         self.announce(ctx, session);
         ctx.metrics().count("ckio.buffer_reuse", 1);
@@ -448,45 +456,55 @@ impl Director {
     /// Admit a fresh (non-rebind) session start. A `StoreAware`
     /// placement first runs the plan-then-create round trip: the owning
     /// shard is probed (`EP_SHARD_PLAN`) for where the prospective
-    /// spans' bytes already live, and creation resumes at
-    /// [`EP_DIR_PLAN_REPLY`]. Every other placement creates immediately
-    /// (the PR 3 register-after-create order, now the no-plan special
-    /// case).
+    /// spans' bytes already live — the probe carries the session's QoS
+    /// class (PR 5), so the admission class is negotiated on the same
+    /// round trip — and creation resumes at [`EP_DIR_PLAN_REPLY`].
+    /// Every other placement registers its class with a lightweight
+    /// `EP_SHARD_ADMIT` on the same path and creates immediately (the
+    /// PR 3 register-after-create order, now the no-plan special case).
     ///
     /// Known cost: a `reuse_buffers` + `StoreAware` start whose rebind
     /// probe misses pays two serialized round trips to the same shard
     /// (take, then plan). Folding the plan into the take *miss* reply
-    /// would save one — it rides the same probe the ROADMAP earmarks as
-    /// a QoS-hint carrier — and is left for that follow-up rather than
-    /// widening the take protocol twice.
-    fn begin_fresh(&mut self, ctx: &mut Ctx<'_>, m: StartSessionMsg, key: BufKey, opts: Options) {
-        if opts.placement.is_store_aware() {
+    /// would save one and is left as a follow-up rather than widening
+    /// the take protocol twice.
+    fn begin_fresh(
+        &mut self,
+        ctx: &mut Ctx<'_>,
+        m: StartSessionMsg,
+        key: BufKey,
+        fopts: FileOptions,
+    ) {
+        let shard = self.shard_ref(m.file);
+        if Self::effective_placement(&fopts, &m.opts).is_store_aware() {
             let token = self.next_plan;
             self.next_plan += 1;
-            let shard = self.shard_ref(m.file);
             ctx.send(shard, EP_SHARD_PLAN, PlanMsg {
                 file: m.file,
                 offset: m.offset,
                 bytes: m.bytes,
                 readers: key.readers,
                 splinter: key.splinter,
+                class: m.opts.class,
                 token,
             });
-            self.pending_plans.insert(token, PendingPlan { msg: m, key, opts });
+            self.pending_plans.insert(token, PendingPlan { msg: m, key, fopts });
             ctx.advance(MICROS);
             return;
         }
-        self.start_fresh(ctx, m, key, opts, None);
+        ctx.send(shard, EP_SHARD_ADMIT, m.opts.class);
+        self.start_fresh(ctx, m, key, fopts, None);
     }
 
     /// Start a session over a freshly created buffer-chare array. The
     /// buffers register their claims and resolve peer sources with their
     /// file's shard themselves (`EP_SHARD_REGISTER`) — the director only
-    /// hands them the shard's address. `opts` are the file's opening
+    /// hands them the shard's address. `fopts` are the file's opening
     /// options, resolved by the caller when the start was admitted (the
     /// file may legitimately have fully closed since, if a rebind or
     /// plan probe was in flight — the session proceeds regardless, as it
-    /// would have under PR 2's synchronous start).
+    /// would have under PR 2's synchronous start); the session's own
+    /// intent travels in `m.opts`.
     ///
     /// `plan` is the shard's `PlacementPlan` for a `StoreAware` start:
     /// each planned buffer is mapped onto the PE of its dominant peer
@@ -499,26 +517,27 @@ impl Director {
         ctx: &mut Ctx<'_>,
         m: StartSessionMsg,
         key: BufKey,
-        opts: Options,
+        fopts: FileOptions,
         plan: Option<Vec<Option<PlannedSource>>>,
     ) {
         let sid = SessionId(self.next_session);
         self.next_session += 1;
         let nreaders = key.readers;
-        let splinter = opts.splinter_bytes;
-        let window = opts.read_window;
+        let splinter = m.opts.splinter_bytes;
+        let window = m.opts.read_window;
+        let class = m.opts.class;
         let file = m.file;
         let (offset, bytes) = (m.offset, m.bytes);
         let me = ctx.me();
         let assemblers = self.assemblers;
         let shard = self.shard_ref(file);
-        // Options are validated at open (EP_DIR_OPEN), and the resolved
-        // reader count only ever clamps *down* from the validated worst
-        // case — so materializing the placement here cannot fail.
-        let base = opts
-            .placement
+        // File placements are validated at open (EP_DIR_OPEN), session
+        // overrides at session start, and the resolved reader count only
+        // ever clamps *down* from the validated worst case — so
+        // materializing the placement here cannot fail.
+        let base = Self::effective_placement(&fopts, &m.opts)
             .to_placement(nreaders)
-            .expect("placement validated at open");
+            .expect("placement validated at open / session start");
         let placement = match &plan {
             Some(slots) => {
                 debug_assert_eq!(slots.len(), nreaders as usize, "plan arity mismatch");
@@ -541,12 +560,12 @@ impl Director {
         // routing can never drift.
         let spans: Vec<(u64, u64)> =
             (0..nreaders).map(|b| buffer_span_of(offset, bytes, nreaders, b)).collect();
-        let governed = opts.max_inflight_reads.is_some() || opts.adaptive_admission;
+        let governed = self.governed;
         let buffers = ctx.create_array_now(nreaders, &placement, |i| {
             let (o, l) = spans[i as usize];
             let mut b = BufferChare::new(sid, file, o, l, splinter, window, me, shard, assemblers);
             if governed {
-                b = b.governed(bytes);
+                b = b.governed(bytes, class);
             }
             if let Some(slots) = &plan {
                 if let Some(src) = slots[i as usize] {
@@ -562,7 +581,7 @@ impl Director {
             buf_started: 0,
             mgr_acks: 0,
             fired: false,
-            reuse_key: opts.reuse_buffers.then_some(key),
+            reuse_key: m.opts.reuse_buffers.then_some(key),
         });
         // Kick the greedy reads (via shard registration) and announce.
         for b in 0..nreaders {
@@ -619,8 +638,15 @@ impl Chare for Director {
             EP_DIR_OPEN => {
                 let m: OpenMsg = msg.take();
                 // Refcounted re-open: the file is already open everywhere,
-                // answer immediately from the file table.
+                // answer immediately from the file table — unless the
+                // re-open asks for *different* FileOptions, which is a
+                // structured conflict (PR 5), never a silent ignore.
                 if let Some(entry) = self.files.get_mut(&m.file) {
+                    if entry.opts != m.opts {
+                        ctx.metrics().count("ckio.opens_rejected", 1);
+                        ctx.fire(m.opened, Payload::new(OpenError::OptionsConflict));
+                        return;
+                    }
                     entry.open_count += 1;
                     ctx.metrics().count("ckio.reopens", 1);
                     let handle =
@@ -629,8 +655,14 @@ impl Chare for Director {
                     return;
                 }
                 // An open of the same file is already in flight: share its
-                // MDS transaction and manager broadcast.
+                // MDS transaction and manager broadcast (same conflict
+                // rule as above).
                 if let Some(st) = self.opens.get_mut(&m.file) {
+                    if st.opts != m.opts {
+                        ctx.metrics().count("ckio.opens_rejected", 1);
+                        ctx.fire(m.opened, Payload::new(OpenError::OptionsConflict));
+                        return;
+                    }
                     st.waiters.push(m.opened);
                     ctx.metrics().count("ckio.reopens", 1);
                     return;
@@ -641,7 +673,8 @@ impl Chare for Director {
                 // rejected here with a structured error on the open
                 // callback — instead of panicking at some later session
                 // start (the pre-PR 4 behavior of a short explicit
-                // list).
+                // list). Service-wide knobs no longer ride the open at
+                // all (PR 5): the data plane was configured at boot.
                 if let Err(e) = m.opts.validate(m.size, &ctx.topo()) {
                     ctx.metrics().count("ckio.opens_rejected", 1);
                     self.rejected_opens.insert(m.file, e.clone());
@@ -652,49 +685,6 @@ impl Chare for Director {
                 // file (session starts must again wait for it, not
                 // bounce off the stale error).
                 self.rejected_opens.remove(&m.file);
-                // The file's Options configure the data plane. The shard
-                // count is structural — it changes FileId→shard routing
-                // — so it is only applied while the data plane is fully
-                // quiescent (no open files, opens, sessions, teardowns,
-                // rebind probes, or placement plans anywhere in flight;
-                // sessions can outlive their file's close, so the file
-                // table alone is not enough). The store budget is a
-                // global knob (any file can park on its shard), so its
-                // per-shard share is broadcast to every shard; governor
-                // knobs only matter where this file's traffic admits, so
-                // they go to the owning shard alone (last writer wins
-                // per shard, as PR 2's were globally).
-                if self.files.is_empty()
-                    && self.opens.is_empty()
-                    && self.sessions.is_empty()
-                    && self.closes.is_empty()
-                    && self.file_closes.is_empty()
-                    && self.pending_takes.is_empty()
-                    && self.pending_plans.is_empty()
-                {
-                    let want =
-                        m.opts.data_plane_shards.unwrap_or(self.nshards).clamp(1, self.nshards);
-                    if want != self.active_shards {
-                        self.active_shards = want;
-                        // Re-share the remembered budget over the new
-                        // shard count (stale epoch shares must not
-                        // survive a routing change).
-                        self.share_budget(ctx, m.opts.admission);
-                    }
-                }
-                if let Some(b) = m.opts.store_budget_bytes {
-                    self.store_budget = Some(b);
-                    self.share_budget(ctx, m.opts.admission);
-                }
-                if m.opts.max_inflight_reads.is_some() || m.opts.adaptive_admission {
-                    let shard = self.shard_ref(m.file);
-                    ctx.send(shard, EP_SHARD_CONFIG, ShardConfigMsg {
-                        cap: m.opts.max_inflight_reads,
-                        policy: m.opts.admission,
-                        adaptive: m.opts.adaptive_admission,
-                        budget: None,
-                    });
-                }
                 self.opens.insert(m.file, OpenState {
                     size: m.size,
                     opts: m.opts,
@@ -762,9 +752,20 @@ impl Chare for Director {
                     }
                     panic!("startReadSession for a file that was never opened");
                 };
-                let (size, opts) = (entry.size, entry.opts.clone());
+                let (size, fopts) = (entry.size, entry.opts.clone());
                 assert!(m.offset + m.bytes <= size, "session beyond EOF");
-                let key = self.buf_key(ctx, &opts, &m);
+                // A placement override is session scope: validate it
+                // here, against this session's resolved reader count,
+                // and fail the ready callback with the same structured
+                // error an impossible open gets (PR 5).
+                let key = self.buf_key(ctx, &fopts, &m);
+                if let Some(p) = &m.opts.placement_override {
+                    if let Err(e) = p.validate(key.readers) {
+                        ctx.metrics().count("ckio.sessions_rejected", 1);
+                        ctx.fire(m.ready, Payload::new(e));
+                        return;
+                    }
+                }
                 ctx.metrics().count("ckio.sessions", 1);
 
                 // Reuse path: probe the file's shard for an identically
@@ -772,12 +773,16 @@ impl Chare for Director {
                 // the start resumes at EP_DIR_TAKE_REPLY. The options
                 // travel with the probe so the resume never depends on
                 // the file table (a final close may race the reply).
-                if opts.reuse_buffers {
+                // The key carries the effective placement, so an
+                // override only ever rebinds an array parked under the
+                // same override — never one sitting at the file-policy
+                // PEs (and vice versa).
+                if m.opts.reuse_buffers {
                     let token = self.next_take;
                     self.next_take += 1;
                     let shard = self.shard_ref(m.file);
                     ctx.send(shard, EP_SHARD_TAKE, TakeMsg { key: key.clone(), token });
-                    self.pending_takes.insert(token, PendingTake { msg: m, key, opts });
+                    self.pending_takes.insert(token, PendingTake { msg: m, key, fopts });
                     ctx.advance(MICROS);
                     return;
                 }
@@ -785,7 +790,7 @@ impl Chare for Director {
                 // Fresh path: create the per-session buffer chare array
                 // (dynamic creation, as CkIO does on session start),
                 // planning the placement first when it is store-aware.
-                self.begin_fresh(ctx, m, key, opts);
+                self.begin_fresh(ctx, m, key, fopts);
             }
             EP_DIR_TAKE_REPLY => {
                 let r: TakeReplyMsg = msg.take();
@@ -794,13 +799,13 @@ impl Chare for Director {
                     Some((buffers, nbuf)) => {
                         self.start_rebind(ctx, pt.msg, pt.key, buffers, nbuf)
                     }
-                    None => self.begin_fresh(ctx, pt.msg, pt.key, pt.opts),
+                    None => self.begin_fresh(ctx, pt.msg, pt.key, pt.fopts),
                 }
             }
             EP_DIR_PLAN_REPLY => {
                 let r: PlanReplyMsg = msg.take();
                 let pp = self.pending_plans.remove(&r.token).expect("reply for unknown plan");
-                self.start_fresh(ctx, pp.msg, pp.key, pp.opts, Some(r.slots));
+                self.start_fresh(ctx, pp.msg, pp.key, pp.fopts, Some(r.slots));
             }
             EP_DIR_BUF_STARTED => {
                 let m: BufStartedMsg = msg.take();

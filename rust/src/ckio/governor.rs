@@ -1,34 +1,60 @@
 //! Admission governor: PFS read-admission control (PR 2, sharded and
-//! made adaptive in PR 3).
+//! made adaptive in PR 3, class-weighted in PR 5).
 //!
 //! Since PR 3 each data-plane shard ([`super::shard::DataShard`]) owns
-//! one [`Governor`] covering the files that hash to it. When a file is
-//! opened with [`crate::ckio::Options::max_inflight_reads`] set (or with
-//! [`crate::ckio::Options::adaptive_admission`]), its sessions' buffer
-//! chares stop issuing PFS reads directly: they request *tickets* from
-//! their file's shard (`EP_SHARD_IO_REQ`), issue exactly the granted
-//! count, and return each ticket on read completion
-//! (`EP_SHARD_IO_DONE`, carrying the observed service time). The
-//! governor caps the number of PFS reads in flight across all sessions
-//! *of its shard's governed files*, so K concurrent sessions can no
-//! longer oversubscribe the OSTs — excess demand queues here instead of
-//! interleaving at the disks (the Fig. 1 collapse). Same-file sessions
-//! always share one shard, hence one cap; files on different shards
-//! admit independently (aggregate worst case `cap × active shards`).
+//! one [`Governor`] covering the files that hash to it. When the
+//! service is booted with
+//! [`crate::ckio::ServiceConfig::max_inflight_reads`] set (or with
+//! [`crate::ckio::ServiceConfig::adaptive_admission`]), buffer chares
+//! stop issuing PFS reads directly: they request *tickets* from their
+//! file's shard (`EP_SHARD_IO_REQ`), issue exactly the granted count,
+//! and return each ticket on read completion (`EP_SHARD_IO_DONE`,
+//! carrying the observed service time). The governor caps the number of
+//! PFS reads in flight across all sessions of its shard's files, so K
+//! concurrent sessions can no longer oversubscribe the OSTs — excess
+//! demand queues here instead of interleaving at the disks (the Fig. 1
+//! collapse). Same-file sessions always share one shard, hence one cap;
+//! files on different shards admit independently (aggregate worst case
+//! `cap × active shards`).
 //!
-//! Scope: admission control is opt-in per file at *first* open. Sessions
-//! of files opened without a cap (and without `adaptive_admission`)
-//! bypass the governor and issue reads directly (the PR 1 path). Like
-//! shared POSIX descriptor flags, a refcounted re-open of an already-open
-//! file does not reconfigure the governor; the first opener's options
-//! hold until the file is fully closed.
+//! Scope (PR 5): admission control is **service configuration** — one
+//! [`crate::ckio::ServiceConfig`] passed to `CkIo::boot_with` configures
+//! every shard once, before any message flows. The PR 2–4 per-file knob
+//! ("first opener's cap governs, last writer wins per shard") is gone;
+//! a service is either governed or it is not.
 //!
-//! Queued demand is released according to an [`AdmissionPolicy`]:
+//! # QoS classes (PR 5)
 //!
-//! * [`AdmissionPolicy::Fifo`] — arrival order (fair, no starvation),
-//! * [`AdmissionPolicy::SmallestFirst`] — sessions with fewer total
-//!   bytes drain first (minimizes mean session latency, the classic
-//!   shortest-job-first trade).
+//! Every session carries a [`QosClass`]
+//! ([`crate::ckio::SessionOptions::class`]):
+//!
+//! * [`QosClass::Interactive`] — latency-sensitive foreground work
+//!   (weight [`QosClass::Interactive`]`.weight()` = 8),
+//! * [`QosClass::Bulk`] — ordinary throughput work, the default
+//!   (weight 2),
+//! * [`QosClass::Scavenger`] — background/best-effort work (weight 1).
+//!
+//! Queued demand lives in one FIFO per class and is released by
+//! **weighted deficit round-robin** (WDRR): the rotation visits each
+//! backlogged class in turn, refilling its deficit with the class
+//! weight and granting up to that many tickets before moving on. Under
+//! a saturated cap the grant rates converge to the weight ratios
+//! (8 : 2 : 1), and the scheme is starvation-free by construction —
+//! every backlogged class is visited once per rotation and a weight is
+//! never zero, so every queued ticket is eventually granted.
+//!
+//! The [`AdmissionPolicy`] picks the intra-/inter-class order:
+//!
+//! * [`AdmissionPolicy::Fifo`] — WDRR across classes, arrival order
+//!   within a class (with a single active class this is exactly the
+//!   PR 2 FIFO),
+//! * [`AdmissionPolicy::SmallestFirst`] — WDRR across classes, sessions
+//!   with fewer total bytes first within a class (the classic
+//!   shortest-job-first trade),
+//! * [`AdmissionPolicy::StrictPriority`] — strict `Interactive` >
+//!   `Bulk` > `Scavenger`, FIFO within a class. **Not** starvation-free:
+//!   a saturating Interactive load parks Scavenger forever; that is the
+//!   explicit opt-in trade this policy exists for.
 //!
 //! # Feedback control (PR 3)
 //!
@@ -46,23 +72,100 @@
 //!   remembered best is relaxed slightly on each decrease so a
 //!   permanently slower PFS (or a stale floor) cannot pin the cap at 1.
 //!
+//! AIMD adapts the *cap*; grants are always dequeued by class weight,
+//! whatever the cap currently is.
+//!
 //! Like the span store, the governor is a pure data structure: the shard
 //! translates grants into `EP_BUF_GRANT` sends, charges
-//! `ckio.governor.throttled` for every deferred read, and publishes the
-//! adapted cap on the `ckio.governor.cap` gauge.
+//! `ckio.governor.throttled` for every deferred read, publishes the
+//! adapted cap on the `ckio.governor.cap` gauge, and counts admitted
+//! tickets per class on `ckio.governor.class_granted.*`.
 
 use std::collections::VecDeque;
 
 use crate::amt::chare::ChareRef;
+use crate::metrics::keys;
+
+/// Number of QoS classes (array dimension for per-class state).
+pub const NUM_CLASSES: usize = 3;
+
+/// Per-session quality-of-service class (PR 5): who a session is and how
+/// urgent its I/O is. Carried by
+/// [`crate::ckio::SessionOptions::class`], announced to the owning
+/// data-plane shard before any buffer exists (the `EP_SHARD_PLAN`
+/// probe, or the lightweight `EP_SHARD_ADMIT` register for
+/// non-store-aware placements), and attached to every admission ticket
+/// the session's buffer chares request.
+#[derive(Copy, Clone, Debug, Default, PartialEq, Eq, Hash)]
+pub enum QosClass {
+    /// Latency-sensitive foreground work: drains first under load.
+    Interactive,
+    /// Ordinary throughput work — the default.
+    #[default]
+    Bulk,
+    /// Background/best-effort work: never starved (under the weighted
+    /// policies), but always the last to drain.
+    Scavenger,
+}
+
+impl QosClass {
+    /// All classes, in strict-priority (and array-index) order.
+    pub const ALL: [QosClass; NUM_CLASSES] =
+        [QosClass::Interactive, QosClass::Bulk, QosClass::Scavenger];
+
+    /// WDRR weight: tickets granted per rotation visit while backlogged.
+    /// Integer, and never zero — the starvation-freedom invariant.
+    pub fn weight(self) -> u32 {
+        match self {
+            QosClass::Interactive => 8,
+            QosClass::Bulk => 2,
+            QosClass::Scavenger => 1,
+        }
+    }
+
+    /// Dense index for per-class state arrays.
+    pub fn index(self) -> usize {
+        match self {
+            QosClass::Interactive => 0,
+            QosClass::Bulk => 1,
+            QosClass::Scavenger => 2,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Bulk => "bulk",
+            QosClass::Scavenger => "scavenger",
+        }
+    }
+
+    /// The `ckio.governor.class_granted.*` metric key for this class.
+    pub fn granted_key(self) -> &'static str {
+        match self {
+            QosClass::Interactive => keys::GOV_GRANTED_INTERACTIVE,
+            QosClass::Bulk => keys::GOV_GRANTED_BULK,
+            QosClass::Scavenger => keys::GOV_GRANTED_SCAVENGER,
+        }
+    }
+}
 
 /// Order in which queued prefetch demand is admitted to the PFS.
 #[derive(Copy, Clone, Debug, Default, PartialEq, Eq)]
 pub enum AdmissionPolicy {
-    /// Grant in arrival order.
+    /// Weighted-fair across classes (WDRR), arrival order within a
+    /// class. Starvation-free.
     #[default]
     Fifo,
-    /// Grant sessions with the fewest total bytes first.
+    /// Weighted-fair across classes (WDRR), sessions with the fewest
+    /// total bytes first within a class. Starvation-free across
+    /// classes (intra-class, a stream of small sessions can still
+    /// outrun a large one — the usual SJF trade).
     SmallestFirst,
+    /// Strict `Interactive` > `Bulk` > `Scavenger`, FIFO within a
+    /// class. Lower classes can starve under saturating higher-class
+    /// load — the explicit opt-in trade.
+    StrictPriority,
 }
 
 /// A buffer chare's queued ticket demand.
@@ -75,6 +178,15 @@ struct Pending {
     seq: u64,
 }
 
+/// One admitted-from-the-queue grant the shard must deliver.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Grant {
+    pub owner: ChareRef,
+    pub n: u32,
+    /// The class the tickets were granted under (per-class metrics).
+    pub class: QosClass,
+}
+
 /// Per-shard PFS read-admission state (owned by a data-plane shard).
 #[derive(Debug)]
 pub struct Governor {
@@ -84,10 +196,20 @@ pub struct Governor {
     /// Whether the cap is AIMD-derived rather than configured.
     adaptive: bool,
     inflight: u32,
-    queue: VecDeque<Pending>,
+    /// Deferred demand, one queue per [`QosClass`] (index =
+    /// [`QosClass::index`]).
+    queues: [VecDeque<Pending>; NUM_CLASSES],
+    /// WDRR deficit per class: tickets the class may still take before
+    /// the rotation moves on.
+    deficit: [u32; NUM_CLASSES],
+    /// WDRR rotation pointer (class index served next).
+    rr: usize,
     seq: u64,
     /// Reads deferred because the cap was reached (monotonic).
     pub throttled: u64,
+    /// Tickets admitted per class, immediate and dequeued (monotonic;
+    /// the `ckio.governor.class_granted.*` numerators).
+    granted: [u64; NUM_CLASSES],
     /// Service times (ns) of the current adaptation window.
     window: Vec<u64>,
     /// Best (lowest) window p50 observed so far; the AIMD baseline.
@@ -101,9 +223,12 @@ impl Default for Governor {
             policy: AdmissionPolicy::default(),
             adaptive: false,
             inflight: 0,
-            queue: VecDeque::new(),
+            queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+            deficit: [0; NUM_CLASSES],
+            rr: 0,
             seq: 0,
             throttled: 0,
+            granted: [0; NUM_CLASSES],
             window: Vec::new(),
             best_p50: f64::MAX,
         }
@@ -126,18 +251,17 @@ impl Governor {
         Governor::default()
     }
 
-    /// (Re)configure from a file's opening `Options` (per-shard knob,
-    /// last writer wins — a static cap of 0 is clamped to 1 so demand
-    /// always drains). A static cap wins over adaptive mode; opens that
-    /// ask for neither leave the governor untouched. Re-asking for
-    /// adaptive mode while it is already running keeps the learned cap
-    /// (re-opens must not reset the feedback loop), but *entering*
-    /// adaptive mode — fresh or after a static interlude — starts a
-    /// clean epoch: a stale sample window or a previous epoch's best-p50
-    /// baseline must not drive the first decision of the new one.
+    /// Configure from the service's [`crate::ckio::ServiceConfig`]
+    /// (PR 5: applied exactly once per shard, at boot, before any
+    /// message flows — there is no runtime reconfiguration left). A
+    /// static cap wins over adaptive mode; asking for neither leaves
+    /// the governor off. A zero static cap is rejected at
+    /// `ServiceConfig::validate` — demand could never drain — so it is
+    /// a hard error to reach this with one, not a silent clamp.
     pub fn configure(&mut self, cap: Option<u32>, policy: AdmissionPolicy, adaptive: bool) {
         if let Some(c) = cap {
-            self.cap = Some(c.max(1));
+            assert!(c >= 1, "zero admission cap must be rejected at ServiceConfig validation");
+            self.cap = Some(c);
             self.policy = policy;
             self.adaptive = false;
         } else if adaptive {
@@ -171,34 +295,47 @@ impl Governor {
         self.inflight
     }
 
-    /// Buffer chares with queued (deferred) demand.
+    /// Buffer chares with queued (deferred) demand, across all classes.
     pub fn queued(&self) -> usize {
-        self.queue.len()
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    /// Queued demand of one class (tests / inspection).
+    pub fn queued_in(&self, class: QosClass) -> usize {
+        self.queues[class.index()].len()
+    }
+
+    /// Tickets admitted under `class` so far (immediate + dequeued).
+    pub fn granted_in(&self, class: QosClass) -> u64 {
+        self.granted[class.index()]
     }
 
     /// Request `want` read tickets for `owner` (a buffer chare of a
-    /// session totalling `sess_bytes`). Returns the count granted now;
-    /// the remainder queues and is granted by later [`Governor::complete`]
-    /// calls. Without a cap the full request is granted trivially.
-    pub fn request(&mut self, owner: ChareRef, want: u32, sess_bytes: u64) -> u32 {
+    /// `class` session totalling `sess_bytes`). Returns the count
+    /// granted now; the remainder queues in the class's FIFO and is
+    /// granted by later [`Governor::complete`] calls according to the
+    /// weighted policy. Without a cap the full request is granted
+    /// trivially.
+    pub fn request(&mut self, owner: ChareRef, want: u32, sess_bytes: u64, class: QosClass) -> u32 {
         let Some(cap) = self.cap else { return want };
         let grant = want.min(cap.saturating_sub(self.inflight));
         self.inflight += grant;
+        self.granted[class.index()] += grant as u64;
         let deferred = want - grant;
         if deferred > 0 {
             self.throttled += deferred as u64;
             self.seq += 1;
             let p = Pending { owner, want: deferred, sess_bytes, seq: self.seq };
+            let q = &mut self.queues[class.index()];
             match self.policy {
-                AdmissionPolicy::Fifo => self.queue.push_back(p),
                 AdmissionPolicy::SmallestFirst => {
-                    let at = self
-                        .queue
+                    let at = q
                         .iter()
-                        .position(|q| (q.sess_bytes, q.seq) > (p.sess_bytes, p.seq))
-                        .unwrap_or(self.queue.len());
-                    self.queue.insert(at, p);
+                        .position(|e| (e.sess_bytes, e.seq) > (p.sess_bytes, p.seq))
+                        .unwrap_or(q.len());
+                    q.insert(at, p);
                 }
+                _ => q.push_back(p),
             }
         }
         grant
@@ -208,10 +345,10 @@ impl Governor {
     /// already-dropped buffer), reporting the observed service time of
     /// the completed read (`service_ns == 0` for returns that completed
     /// no read — those carry no signal and never adapt the cap). Returns
-    /// the grants this frees up: `(buffer, count)` pairs the shard must
-    /// deliver. The caller can watch [`Governor::cap`] across calls to
-    /// observe adaptation.
-    pub fn complete(&mut self, n: u32, service_ns: u64) -> Vec<(ChareRef, u32)> {
+    /// the grants this frees up — dequeued by class weight — which the
+    /// shard must deliver. The caller can watch [`Governor::cap`]
+    /// across calls to observe adaptation.
+    pub fn complete(&mut self, n: u32, service_ns: u64) -> Vec<Grant> {
         if self.cap.is_none() {
             return Vec::new();
         }
@@ -222,18 +359,70 @@ impl Governor {
                 self.adapt();
             }
         }
-        let cap = self.cap.unwrap();
+        self.drain()
+    }
+
+    /// The class the next grant comes from, honoring the policy. `None`
+    /// when every queue is empty. For the weighted policies this
+    /// advances the WDRR rotation, refilling deficits as it passes
+    /// empty or exhausted classes.
+    fn pick_class(&mut self) -> Option<usize> {
+        if self.queues.iter().all(|q| q.is_empty()) {
+            return None;
+        }
+        if self.policy == AdmissionPolicy::StrictPriority {
+            return (0..NUM_CLASSES).find(|&c| !self.queues[c].is_empty());
+        }
+        // WDRR: at least one queue is non-empty, so the rotation finds a
+        // backlogged class within NUM_CLASSES steps.
+        loop {
+            let c = self.rr;
+            if self.queues[c].is_empty() {
+                self.deficit[c] = 0;
+                self.rr = (c + 1) % NUM_CLASSES;
+                continue;
+            }
+            if self.deficit[c] == 0 {
+                self.deficit[c] = QosClass::ALL[c].weight();
+            }
+            return Some(c);
+        }
+    }
+
+    /// Dequeue grants while the cap has room, by class weight.
+    fn drain(&mut self) -> Vec<Grant> {
         let mut grants = Vec::new();
-        while self.inflight < cap {
-            let Some(front) = self.queue.front_mut() else { break };
-            let g = front.want.min(cap - self.inflight);
+        loop {
+            let cap = self.cap.unwrap();
+            if self.inflight >= cap {
+                break;
+            }
+            let Some(c) = self.pick_class() else { break };
+            let budget = if self.policy == AdmissionPolicy::StrictPriority {
+                u32::MAX
+            } else {
+                self.deficit[c]
+            };
+            let front = self.queues[c].front_mut().expect("picked class has demand");
+            let g = front.want.min(cap - self.inflight).min(budget);
+            debug_assert!(g >= 1, "pick_class guarantees credit and room");
             self.inflight += g;
+            self.granted[c] += g as u64;
             front.want -= g;
             let owner = front.owner;
             if front.want == 0 {
-                self.queue.pop_front();
+                self.queues[c].pop_front();
             }
-            grants.push((owner, g));
+            if self.policy != AdmissionPolicy::StrictPriority {
+                self.deficit[c] -= g;
+                if self.deficit[c] == 0 || self.queues[c].is_empty() {
+                    // Quantum spent (or nothing left to spend it on):
+                    // the rotation moves to the next class.
+                    self.deficit[c] = 0;
+                    self.rr = (c + 1) % NUM_CLASSES;
+                }
+            }
+            grants.push(Grant { owner, n: g, class: QosClass::ALL[c] });
         }
         grants
     }
@@ -265,11 +454,17 @@ mod tests {
         ChareRef::new(CollectionId(7), i)
     }
 
+    fn grant(i: u32, n: u32, class: QosClass) -> Grant {
+        Grant { owner: buf(i), n, class }
+    }
+
+    const BULK: QosClass = QosClass::Bulk;
+
     #[test]
     fn ungoverned_grants_everything() {
         let mut g = Governor::new();
         assert!(!g.governed());
-        assert_eq!(g.request(buf(0), 5, 100), 5);
+        assert_eq!(g.request(buf(0), 5, 100, BULK), 5);
         assert_eq!(g.inflight(), 0, "no accounting without a cap");
         assert!(g.complete(5, 0).is_empty());
     }
@@ -278,15 +473,15 @@ mod tests {
     fn cap_defers_and_completion_drains_fifo() {
         let mut g = Governor::new();
         g.configure(Some(2), AdmissionPolicy::Fifo, false);
-        assert_eq!(g.request(buf(0), 2, 100), 2);
-        assert_eq!(g.request(buf(1), 2, 100), 0); // full: all deferred
+        assert_eq!(g.request(buf(0), 2, 100, BULK), 2);
+        assert_eq!(g.request(buf(1), 2, 100, BULK), 0); // full: all deferred
         assert_eq!(g.throttled, 2);
         assert_eq!(g.inflight(), 2);
         // One completion frees one ticket for the queue head.
-        assert_eq!(g.complete(1, 0), vec![(buf(1), 1)]);
+        assert_eq!(g.complete(1, 0), vec![grant(1, 1, BULK)]);
         assert_eq!(g.inflight(), 2);
         // The head still wants 1 more; next completion serves it.
-        assert_eq!(g.complete(1, 0), vec![(buf(1), 1)]);
+        assert_eq!(g.complete(1, 0), vec![grant(1, 1, BULK)]);
         assert!(g.complete(2, 0).is_empty());
         assert_eq!(g.inflight(), 0);
         assert_eq!(g.queued(), 0);
@@ -296,29 +491,135 @@ mod tests {
     fn partial_grant_queues_the_remainder() {
         let mut g = Governor::new();
         g.configure(Some(3), AdmissionPolicy::Fifo, false);
-        assert_eq!(g.request(buf(0), 5, 100), 3);
+        assert_eq!(g.request(buf(0), 5, 100, BULK), 3);
         assert_eq!(g.throttled, 2);
-        assert_eq!(g.complete(3, 0), vec![(buf(0), 2)]);
+        assert_eq!(g.complete(3, 0), vec![grant(0, 2, BULK)]);
     }
 
     #[test]
-    fn smallest_first_reorders_by_session_bytes() {
+    fn smallest_first_reorders_by_session_bytes_within_a_class() {
         let mut g = Governor::new();
         g.configure(Some(1), AdmissionPolicy::SmallestFirst, false);
-        assert_eq!(g.request(buf(0), 1, 1000), 1);
-        assert_eq!(g.request(buf(1), 1, 500), 0); // big-ish
-        assert_eq!(g.request(buf(2), 1, 10), 0); // small: jumps the queue
-        assert_eq!(g.request(buf(3), 1, 10), 0); // ties keep arrival order
-        assert_eq!(g.complete(1, 0), vec![(buf(2), 1)]);
-        assert_eq!(g.complete(1, 0), vec![(buf(3), 1)]);
-        assert_eq!(g.complete(1, 0), vec![(buf(1), 1)]);
+        assert_eq!(g.request(buf(0), 1, 1000, BULK), 1);
+        assert_eq!(g.request(buf(1), 1, 500, BULK), 0); // big-ish
+        assert_eq!(g.request(buf(2), 1, 10, BULK), 0); // small: jumps the queue
+        assert_eq!(g.request(buf(3), 1, 10, BULK), 0); // ties keep arrival order
+        assert_eq!(g.complete(1, 0), vec![grant(2, 1, BULK)]);
+        assert_eq!(g.complete(1, 0), vec![grant(3, 1, BULK)]);
+        assert_eq!(g.complete(1, 0), vec![grant(1, 1, BULK)]);
     }
 
+    /// A zero static cap is a configuration error, rejected at
+    /// `ServiceConfig::validate` — reaching the governor with one is a
+    /// hard bug, not a silent clamp (the PR 5 satellite fix).
     #[test]
-    fn zero_cap_is_clamped_so_demand_drains() {
+    #[should_panic(expected = "zero admission cap")]
+    fn zero_cap_is_rejected_not_clamped() {
         let mut g = Governor::new();
         g.configure(Some(0), AdmissionPolicy::Fifo, false);
-        assert_eq!(g.request(buf(0), 1, 10), 1);
+    }
+
+    /// Under a saturated cap, grant rates converge to the class weight
+    /// ratios: with every class continuously backlogged, one full WDRR
+    /// rotation grants weight(c) tickets to each class.
+    #[test]
+    fn wdrr_grant_ratios_match_class_weights_under_saturation() {
+        let mut g = Governor::new();
+        g.configure(Some(1), AdmissionPolicy::Fifo, false);
+        // Saturate: one admitted read, then deep per-class backlogs of
+        // single-ticket demand (distinct owners, like distinct buffers).
+        assert_eq!(g.request(buf(999), 1, 1, BULK), 1);
+        let rounds = 11u32; // exactly one WDRR rotation per weight sum
+        let per_class = rounds * 10;
+        for i in 0..per_class {
+            assert_eq!(g.request(buf(i), 1, 100, QosClass::Interactive), 0);
+            assert_eq!(g.request(buf(1000 + i), 1, 100, QosClass::Bulk), 0);
+            assert_eq!(g.request(buf(2000 + i), 1, 100, QosClass::Scavenger), 0);
+        }
+        // Drive exactly rounds * (8 + 2 + 1) single-ticket completions:
+        // every class stays backlogged throughout.
+        let mut counts = [0u64; NUM_CLASSES];
+        for _ in 0..rounds * 11 {
+            let gs = g.complete(1, 0);
+            assert_eq!(gs.len(), 1, "cap 1 admits exactly one per completion");
+            counts[gs[0].class.index()] += gs[0].n as u64;
+        }
+        assert_eq!(
+            counts,
+            [8 * rounds as u64, 2 * rounds as u64, rounds as u64],
+            "saturated WDRR must grant in 8:2:1 weight ratio"
+        );
+    }
+
+    /// Starvation-freedom: a single queued Scavenger ticket is granted
+    /// within one rotation even under a continuously replenished
+    /// Interactive backlog.
+    #[test]
+    fn scavenger_is_not_starved_by_interactive_load() {
+        let mut g = Governor::new();
+        g.configure(Some(1), AdmissionPolicy::Fifo, false);
+        assert_eq!(g.request(buf(0), 1, 1, QosClass::Interactive), 1);
+        assert_eq!(g.request(buf(42), 1, 100, QosClass::Scavenger), 0);
+        let mut scavenger_served = false;
+        for i in 0..64u32 {
+            // Interactive demand never dries up.
+            g.request(buf(100 + i), 1, 100, QosClass::Interactive);
+            for gr in g.complete(1, 0) {
+                if gr.class == QosClass::Scavenger {
+                    scavenger_served = true;
+                }
+            }
+            if scavenger_served {
+                break;
+            }
+        }
+        assert!(scavenger_served, "WDRR must eventually grant the scavenger ticket");
+        assert_eq!(g.queued_in(QosClass::Scavenger), 0);
+    }
+
+    /// StrictPriority drains Interactive completely before Bulk before
+    /// Scavenger (and is deliberately not starvation-free).
+    #[test]
+    fn strict_priority_drains_classes_in_order() {
+        let mut g = Governor::new();
+        g.configure(Some(1), AdmissionPolicy::StrictPriority, false);
+        assert_eq!(g.request(buf(0), 1, 1, BULK), 1);
+        assert_eq!(g.request(buf(1), 2, 100, QosClass::Scavenger), 0);
+        assert_eq!(g.request(buf(2), 2, 100, QosClass::Bulk), 0);
+        assert_eq!(g.request(buf(3), 2, 100, QosClass::Interactive), 0);
+        let mut order = Vec::new();
+        for _ in 0..6 {
+            for gr in g.complete(1, 0) {
+                order.push(gr.class);
+            }
+        }
+        assert_eq!(order, vec![
+            QosClass::Interactive,
+            QosClass::Interactive,
+            QosClass::Bulk,
+            QosClass::Bulk,
+            QosClass::Scavenger,
+            QosClass::Scavenger,
+        ]);
+        assert_eq!(g.queued(), 0);
+    }
+
+    /// Per-class grant accounting covers both immediate and dequeued
+    /// grants (the `ckio.governor.class_granted.*` numerators).
+    #[test]
+    fn per_class_grant_counters_track_admissions() {
+        let mut g = Governor::new();
+        g.configure(Some(2), AdmissionPolicy::Fifo, false);
+        assert_eq!(g.request(buf(0), 2, 100, QosClass::Interactive), 2); // immediate
+        assert_eq!(g.request(buf(1), 3, 100, QosClass::Bulk), 0); // all deferred
+        assert_eq!(g.granted_in(QosClass::Interactive), 2);
+        assert_eq!(g.granted_in(QosClass::Bulk), 0);
+        g.complete(2, 0); // frees 2: bulk dequeues 2 of its 3
+        assert_eq!(g.granted_in(QosClass::Bulk), 2);
+        g.complete(2, 0);
+        assert_eq!(g.granted_in(QosClass::Bulk), 3);
+        assert_eq!(g.granted_in(QosClass::Scavenger), 0);
+        assert_eq!(g.queued(), 0);
     }
 
     #[test]
@@ -327,8 +628,8 @@ mod tests {
         g.configure(None, AdmissionPolicy::Fifo, true);
         assert!(g.is_adaptive());
         assert_eq!(g.cap(), Some(Governor::ADAPTIVE_INITIAL_CAP));
-        // Grow the cap one window, then re-open adaptively: learned cap
-        // survives (re-opens must not reset the loop).
+        // Grow the cap one window, then re-configure adaptively: the
+        // learned cap survives (configuration must not reset the loop).
         for _ in 0..Governor::ADAPT_WINDOW {
             g.complete(0, 1000);
         }

@@ -33,7 +33,7 @@ use crate::pfs::layout::FileId;
 use crate::util::bytes::Chunk;
 
 use super::assembler::{AssembleReq, EP_A_REQ};
-use super::options::Options;
+use super::options::FileOptions;
 use super::session::{ClosedSessions, ReadResult, Session, SessionId, Tag};
 
 /// Client read (local API call).
@@ -59,7 +59,7 @@ pub struct ReadMsg {
 #[derive(Debug)]
 pub struct FileOpenedMsg {
     pub file: FileId,
-    pub opts: Options,
+    pub opts: FileOptions,
 }
 
 #[derive(Debug)]
@@ -71,7 +71,7 @@ pub struct SessionAnnounceMsg {
 pub struct Manager {
     pub director: ChareRef,
     pub assemblers: CollectionId,
-    files: HashMap<FileId, Options>,
+    files: HashMap<FileId, FileOptions>,
     sessions: HashMap<SessionId, Session>,
     /// Reads received before the session announcement.
     early: HashMap<SessionId, Vec<ReadMsg>>,

@@ -36,10 +36,31 @@
 //! * [`api`] — the user-facing `open / startReadSession / read /
 //!   closeReadSession / close` calls (asynchronous-callback-centric,
 //!   §III-D),
-//! * [`options`] — reader count/placement/splintering/reuse knobs
-//!   (§III-C.4, §VI.A–C) plus the store budget, governor cap/feedback,
-//!   and data-plane shard count,
+//! * [`options`] — configuration in three explicit scopes (PR 5):
+//!   [`ServiceConfig`] (store budget, shard count, admission —
+//!   consumed once by `CkIo::boot_with`), [`FileOptions`] (reader
+//!   count, placement — consumed by `open`), and [`SessionOptions`]
+//!   ([`QosClass`], splintering, window, reuse, placement override —
+//!   consumed by `start_read_session`),
 //! * [`session`] — session, tag and read-descriptor types.
+//!
+//! # Per-session QoS classes (PR 5)
+//!
+//! Every session declares *who it is*: a [`QosClass`]
+//! (`Interactive` / `Bulk` / `Scavenger`, integer-weighted 8 : 2 : 1)
+//! carried by its [`SessionOptions`]. The class is negotiated with the
+//! file's data-plane shard **before any buffer exists** — it rides the
+//! PR 4 plan-then-create probe (`EP_SHARD_PLAN`) when placement is
+//! store-aware, and a lightweight `EP_SHARD_ADMIT` register on the same
+//! path otherwise — and every admission ticket the session's buffer
+//! chares request carries it. Under a saturated admission cap the
+//! governor dequeues deferred demand by **weighted deficit round-robin**
+//! across the per-class queues (strict priority available via
+//! [`AdmissionPolicy::StrictPriority`]), so Interactive sessions drain
+//! first while Scavenger work is never starved. Admitted tickets are
+//! counted per class on `ckio.governor.class_granted.*`, and the
+//! `svc_qos` experiment shows Interactive p50 session makespan beating
+//! the classless baseline under contention while Bulk still completes.
 //!
 //! # The resident-data plane (PR 2, sharded by `FileId` in PR 3)
 //!
@@ -68,17 +89,17 @@
 //!   dropped peer answers with a *miss* and the requester falls back to
 //!   its own PFS read — correctness never depends on the cache.
 //! * **Byte-budgeted LRU.** Parked arrays are kept under
-//!   [`Options::store_budget_bytes`] — split evenly across the active
+//!   [`ServiceConfig::store_budget_bytes`] — split evenly across the active
 //!   shards — with LRU eviction (default: the PR 1 count cap of 8
 //!   arrays per shard).
-//! * **Admission control.** With [`Options::max_inflight_reads`] (or the
-//!   PR 3 [`Options::adaptive_admission`] feedback mode, which derives
-//!   the cap from observed service times by AIMD), buffer chares route
-//!   PFS issuance through their shard's [`governor::Governor`]: reads in
-//!   flight are capped per shard across all sessions of governed files
-//!   (files opened without either knob bypass the governor), and queued
-//!   demand drains by [`governor::AdmissionPolicy`] (FIFO or
-//!   smallest-session-first).
+//! * **Admission control.** With [`ServiceConfig::max_inflight_reads`]
+//!   (or the PR 3 [`ServiceConfig::adaptive_admission`] feedback mode,
+//!   which derives the cap from observed service times by AIMD), buffer
+//!   chares route PFS issuance through their shard's
+//!   [`governor::Governor`]: reads in flight are capped per shard
+//!   across all sessions (a service booted without either knob is
+//!   ungoverned), and queued demand drains weighted-fair across
+//!   [`QosClass`]es by [`governor::AdmissionPolicy`].
 //!
 //! * **Store-aware reader placement (PR 4).** Session start is
 //!   *plan-then-create*: before materializing a
@@ -116,10 +137,13 @@
 //!   its (possibly closed) session.
 //! * **Refcounted opens.** Concurrent `open`s of one file share a single
 //!   MDS transaction and manager broadcast; later opens are answered from
-//!   the director's file table. The *first* opener's [`Options`] govern
-//!   the file while it stays open (later opens' options are ignored; the
-//!   delivered `FileHandle` carries the options in effect). Each `close`
-//!   decrements; only the last tears the file down everywhere.
+//!   the director's file table. The *first* opener's [`FileOptions`]
+//!   govern the file while it stays open — a re-open with *equal*
+//!   options is idempotent (the delivered `FileHandle` carries the
+//!   options in effect), and a re-open with *different* options fails
+//!   with [`OpenError::OptionsConflict`] (PR 5), never a silent ignore.
+//!   Each `close` decrements; only the last tears the file down
+//!   everywhere.
 //! * **Teardown protocol.** `closeReadSession` *drains*: buffer chares
 //!   answer every queued fetch exactly once (resident extents with data,
 //!   the rest with modeled NACK chunks) before acking; a fetch that was
@@ -131,7 +155,7 @@
 //!   `read` callback fires exactly once, no assembly outlives its
 //!   session, and no buffer chare waits forever on a dead peer. Closing
 //!   an already-closed session acks immediately (idempotent).
-//! * **Reuse policy.** With [`Options::reuse_buffers`], closing *parks*
+//! * **Reuse policy.** With [`SessionOptions::reuse_buffers`], closing *parks*
 //!   the session's buffer array (resident data kept) in the span store
 //!   keyed by `(file, range, reader shape)`; a later identical session
 //!   rebinds the array and is served with no file-system traffic, and
@@ -151,8 +175,10 @@ pub mod shard;
 pub mod store;
 
 pub use api::CkIo;
-pub use governor::AdmissionPolicy;
-pub use options::{OpenError, Options, ReaderPlacement};
+pub use governor::{AdmissionPolicy, QosClass};
+pub use options::{
+    ConfigError, FileOptions, OpenError, ReaderPlacement, ServiceConfig, SessionOptions,
+};
 pub use session::{FileHandle, ReadResult, Session, SessionId, Tag};
 pub use shard::DataShard;
 pub use store::SpanStore;

@@ -1,13 +1,54 @@
-//! CkIO configuration (`Ck::IO::Options` in the paper).
+//! CkIO configuration, in three explicit scopes (PR 5).
+//!
+//! The paper's thesis is that CkIO is "configurable via multiple
+//! parameters … tuned depending on characteristics of the application".
+//! Until PR 5 every knob lived in one `Options` struct passed to `open`,
+//! which conflated three very different scopes — service-wide state was
+//! "last writer wins", per-session intent was frozen at open time, and a
+//! session had no way to say who it is or how urgent it is. The scopes
+//! are now explicit types, each consumed exactly once, at the call that
+//! owns that scope:
+//!
+//! * [`ServiceConfig`] → `CkIo::boot_with` — state shared by every file
+//!   and session of the service instance: the span-store byte budget,
+//!   the data-plane shard count, and the admission cap/policy. Applied
+//!   once, at boot, before any message flows; there is no runtime
+//!   reconfiguration (and therefore no "last writer wins" or idle-
+//!   barrier re-sharding left anywhere).
+//! * [`FileOptions`] → `CkIo::open` — per-file policy: reader count and
+//!   buffer-chare placement. Validated at open with structured
+//!   [`OpenError`]s; re-opening an already-open file with *different*
+//!   options is a structured conflict error, not a silent ignore.
+//! * [`SessionOptions`] → `CkIo::start_read_session` — per-session
+//!   intent: the [`QosClass`] (who this session is / how urgent),
+//!   splintering, the read window, buffer reuse, and an optional
+//!   placement override. `SessionOptions::default()` reproduces the
+//!   pre-redesign behavior exactly.
+//!
+//! # Migration from the old `Options`
+//!
+//! | old `Options` field     | new home                                  |
+//! |-------------------------|-------------------------------------------|
+//! | `num_readers`           | [`FileOptions::num_readers`]              |
+//! | `placement`             | [`FileOptions::placement`] (per-session: [`SessionOptions::placement_override`]) |
+//! | `splinter_bytes`        | [`SessionOptions::splinter_bytes`]        |
+//! | `read_window`           | [`SessionOptions::read_window`]           |
+//! | `reuse_buffers`         | [`SessionOptions::reuse_buffers`]         |
+//! | `store_budget_bytes`    | [`ServiceConfig::store_budget_bytes`]     |
+//! | `max_inflight_reads`    | [`ServiceConfig::max_inflight_reads`]     |
+//! | `admission`             | [`ServiceConfig::admission`]              |
+//! | `adaptive_admission`    | [`ServiceConfig::adaptive_admission`]     |
+//! | `data_plane_shards`     | [`ServiceConfig::data_plane_shards`]      |
+//! | *(new, PR 5)*           | [`SessionOptions::class`]                 |
 
 use crate::amt::topology::{Placement, Topology};
 use crate::util::bytes::ceil_div;
 
-pub use super::governor::AdmissionPolicy;
+pub use super::governor::{AdmissionPolicy, QosClass};
 
 /// Where buffer chares are placed (paper §VI.B, extended in PR 4 with
 /// store-aware planning).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub enum ReaderPlacement {
     /// Spread across nodes first (maximize NIC / FS-path parallelism) —
     /// the default, and what the paper's experiments use.
@@ -31,8 +72,10 @@ pub enum ReaderPlacement {
 }
 
 /// Structured configuration error, delivered through the `open` callback
-/// (instead of a FileHandle) when a file's opening [`Options`] can never
-/// work. Callers discriminate with `payload.peek::<OpenError>()`.
+/// (instead of a FileHandle) when a file's opening [`FileOptions`] can
+/// never work — or through the `start_read_session` callback when a
+/// [`SessionOptions::placement_override`] cannot cover the session's
+/// readers. Callers discriminate with `payload.peek::<OpenError>()`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum OpenError {
     /// An explicit placement list is shorter than the largest reader
@@ -41,6 +84,12 @@ pub enum OpenError {
     /// `StoreAware` must fall back to a concrete placement, not to
     /// another `StoreAware`.
     RecursiveFallback,
+    /// A re-open of an already-open (or opening) file asked for
+    /// *different* [`FileOptions`]. The first opener's options govern
+    /// the file while it stays open — but a divergent re-open is a
+    /// conflict surfaced to the caller, never silently ignored (the
+    /// pre-PR 5 footgun).
+    OptionsConflict,
 }
 
 impl std::fmt::Display for OpenError {
@@ -52,6 +101,32 @@ impl std::fmt::Display for OpenError {
             OpenError::RecursiveFallback => {
                 write!(f, "StoreAware fallback must be a concrete placement")
             }
+            OpenError::OptionsConflict => {
+                write!(f, "file is already open with different FileOptions")
+            }
+        }
+    }
+}
+
+/// Structured error for an invalid [`ServiceConfig`], returned by
+/// `CkIo::boot_with` before any service state is created.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ConfigError {
+    /// `max_inflight_reads: Some(0)` — demand could never drain. The
+    /// pre-PR 5 governor silently clamped this to 1; it is now rejected
+    /// where the configuration is made.
+    ZeroCap,
+    /// `data_plane_shards: Some(0)` — there is no shard to route to.
+    ZeroShards,
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::ZeroCap => {
+                write!(f, "max_inflight_reads must be >= 1 (a zero cap can never drain)")
+            }
+            ConfigError::ZeroShards => write!(f, "data_plane_shards must be >= 1"),
         }
     }
 }
@@ -64,8 +139,10 @@ impl ReaderPlacement {
     }
 
     /// Validate this policy for a file whose sessions can resolve at
-    /// most `need` readers ([`Options::validate`] computes `need` from
-    /// the file size, the worst case over every admissible session).
+    /// most `need` readers ([`FileOptions::validate`] computes `need`
+    /// from the file size, the worst case over every admissible
+    /// session; a [`SessionOptions::placement_override`] is validated
+    /// against the one session's resolved count).
     pub fn validate(&self, need: u32) -> Result<(), OpenError> {
         match self {
             ReaderPlacement::SpreadNodes | ReaderPlacement::PackPes => Ok(()),
@@ -85,13 +162,13 @@ impl ReaderPlacement {
 
     /// Materialize a [`Placement`] for `n` *resolved* readers.
     ///
-    /// `n` comes out of [`Options::resolve_readers`], which may clamp the
-    /// requested count down (never more readers than bytes) — so an
-    /// explicit list only needs to be *at least* `n` long; extra entries
-    /// are ignored. A list shorter than `n` is a configuration error,
-    /// reported as a structured [`OpenError`] (the director runs
-    /// [`Options::validate`] at `open`, so a session start over an
-    /// admitted file can never see `Err` here).
+    /// `n` comes out of [`FileOptions::resolve_readers`], which may
+    /// clamp the requested count down (never more readers than bytes) —
+    /// so an explicit list only needs to be *at least* `n` long; extra
+    /// entries are ignored. A list shorter than `n` is a configuration
+    /// error, reported as a structured [`OpenError`] (the director runs
+    /// [`FileOptions::validate`] at `open` and validates overrides at
+    /// session start, so an admitted start can never see `Err` here).
     ///
     /// For [`ReaderPlacement::StoreAware`] this returns the *fallback*
     /// placement — the no-residency answer; the director overrides
@@ -113,92 +190,97 @@ impl ReaderPlacement {
     }
 }
 
-/// Options passed to `Ck::IO::open` (paper §III-D).
-#[derive(Clone, Debug)]
-pub struct Options {
+/// Service-wide configuration, passed **once** to `CkIo::boot_with`
+/// (`CkIo::boot` uses the default). This is the state every file and
+/// session of the instance shares; configuring it at boot — instead of
+/// smuggling it through whichever file happened to `open` first — kills
+/// the "last writer wins" / "first opener governs" footguns the old
+/// `Options` documented, and lets the shard count be genuinely
+/// structural (no idle-barrier re-sharding).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServiceConfig {
+    /// Byte budget of the span store for *parked* arrays (PR 2), split
+    /// evenly across the active shards. `None` keeps the default of at
+    /// most [`super::store::SpanStore::DEFAULT_MAX_ARRAYS`] parked
+    /// arrays per shard; `Some(bytes)` switches to byte-budgeted LRU
+    /// eviction.
+    pub store_budget_bytes: Option<u64>,
+    /// Number of data-plane shards the `FileId` hash routes over
+    /// (PR 3). `None` = one shard per PE (the full array booted by
+    /// `CkIo::boot_with`); `Some(n)` clamps the hash to the first `n`
+    /// shards (and is itself clamped to the PE count). `Some(1)`
+    /// funnels everything through one shard — bit-for-bit the PR 2
+    /// single-plane semantics (global store budget, global cap).
+    /// `Some(0)` is rejected by [`ServiceConfig::validate`].
+    pub data_plane_shards: Option<u32>,
+    /// Admission governor: static cap on PFS reads in flight **per
+    /// shard**, across all sessions (PR 2). `None` = ungoverned (buffer
+    /// chares issue reads directly) unless
+    /// [`ServiceConfig::adaptive_admission`] derives a cap. `Some(0)`
+    /// is rejected by [`ServiceConfig::validate`] — the pre-PR 5
+    /// governor silently clamped it to 1.
+    pub max_inflight_reads: Option<u32>,
+    /// Order in which the governor admits queued prefetch demand —
+    /// weighted-fair across [`QosClass`]es (or strict priority); see
+    /// [`AdmissionPolicy`].
+    pub admission: AdmissionPolicy,
+    /// Governor feedback control (PR 3): when `max_inflight_reads` is
+    /// `None`, govern anyway and *derive* the per-shard cap from
+    /// observed read service times (AIMD). Ignored when a static cap is
+    /// set. The `ckio.governor.cap` gauge tracks the adapted value.
+    pub adaptive_admission: bool,
+}
+
+impl ServiceConfig {
+    /// Whether admission control (static or adaptive) is on: every
+    /// session's PFS issuance then runs the shard ticket protocol.
+    pub fn governed(&self) -> bool {
+        self.max_inflight_reads.is_some() || self.adaptive_admission
+    }
+
+    /// Validate the configuration before it can boot a service. Run by
+    /// `CkIo::boot_with`; rejecting here (instead of clamping deep in
+    /// the governor) is what makes a nonsense knob a visible error at
+    /// the call that set it.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.max_inflight_reads == Some(0) {
+            return Err(ConfigError::ZeroCap);
+        }
+        if self.data_plane_shards == Some(0) {
+            return Err(ConfigError::ZeroShards);
+        }
+        Ok(())
+    }
+
+    /// The active shard count on a cluster of `npes` PEs.
+    pub fn resolve_shards(&self, npes: u32) -> u32 {
+        self.data_plane_shards.unwrap_or(npes).clamp(1, npes.max(1))
+    }
+
+    /// The per-shard share of the store budget over `active` shards.
+    pub fn budget_share(&self, active: u32) -> Option<u64> {
+        self.store_budget_bytes.map(|b| ceil_div(b, active.max(1) as u64))
+    }
+}
+
+/// Per-file policy, passed to `CkIo::open` (paper §III-D). What remains
+/// of the old `Options` once service state and session intent moved to
+/// their own scopes: how a file's sessions decompose into readers, and
+/// where those readers go.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FileOptions {
     /// Number of buffer chares per session (`Options::numReaders`).
     /// `None` selects automatically from file size and cluster shape
     /// (paper §VI.A).
     pub num_readers: Option<u32>,
-    /// Buffer chare placement policy.
+    /// Buffer chare placement policy (a session may override it via
+    /// [`SessionOptions::placement_override`]).
     pub placement: ReaderPlacement,
-    /// Splintered I/O (paper §VI.C): buffer chares read their span in
-    /// sub-chunks of this size, so early reads can be served before the
-    /// whole span arrives. `None` = one read per span (base design).
-    pub splinter_bytes: Option<u64>,
-    /// Splinters kept in flight per buffer chare when splintering.
-    pub read_window: u32,
-    /// Buffer-chare reuse across sessions (PR 1): when set, closing a
-    /// session *parks* its buffer-chare array (keeping resident data)
-    /// instead of dropping it, and a later `startReadSession` over the
-    /// same `(file, range, shape)` revives it — repeated sessions on the
-    /// same file skip the greedy re-read entirely.
-    pub reuse_buffers: bool,
-    /// Byte budget of the director's span store for *parked* arrays
-    /// (PR 2). `None` keeps the PR 1 default of at most
-    /// [`super::store::SpanStore::DEFAULT_MAX_ARRAYS`] parked arrays;
-    /// `Some(bytes)` switches to byte-budgeted LRU eviction. The store is
-    /// global: the opening `Options` of each file (re)configure it, last
-    /// writer wins.
-    pub store_budget_bytes: Option<u64>,
-    /// Admission governor (PR 2): cap on the number of PFS reads in
-    /// flight across all sessions of governed files. `None` = this
-    /// file's sessions are ungoverned (buffer chares issue reads
-    /// directly, the PR 1 behavior) — unless [`Options::adaptive_admission`]
-    /// turns on the derived cap. The cap value itself is a global knob
-    /// configured at *first* open of a file (last writer wins;
-    /// refcounted re-opens do not reconfigure).
-    ///
-    /// Since PR 3 the cap is enforced **per data-plane shard**: sessions
-    /// of files that hash to the same shard share one cap (so same-file
-    /// sessions are sequenced exactly as before), while files on
-    /// different shards admit independently — the aggregate worst case
-    /// is `cap × active shards`. For the PR 2 cluster-wide semantics,
-    /// set [`Options::data_plane_shards`] to `Some(1)`.
-    pub max_inflight_reads: Option<u32>,
-    /// Order in which the governor admits queued prefetch demand.
-    pub admission: AdmissionPolicy,
-    /// Governor feedback control (PR 3): when `max_inflight_reads` is
-    /// `None`, govern this file's sessions anyway and *derive* the
-    /// per-shard cap from observed read service times (AIMD: the cap
-    /// grows by one while the p50 service time of a completion window
-    /// stays flat, and halves when it inflates — i.e. when the OSTs
-    /// start queueing). Ignored when a static cap is set. The
-    /// `ckio.governor.cap` gauge tracks the adapted value.
-    pub adaptive_admission: bool,
-    /// Number of data-plane shards the director's `FileId` hash routes
-    /// over (PR 3). `None` = one shard per PE (the full array booted by
-    /// [`super::CkIo::boot`]); `Some(n)` clamps the hash to the first
-    /// `n` shards. Structural knob: applied only when the data plane is
-    /// fully quiescent (no open files, opens, sessions, teardowns,
-    /// rebind probes, or placement plans in flight), so FileId→shard
-    /// routing is stable for the whole life of every piece of data-plane
-    /// state. `Some(1)` funnels everything through one shard —
-    /// bit-for-bit the PR 2 single-plane semantics (global store budget,
-    /// global cap).
-    pub data_plane_shards: Option<u32>,
 }
 
-impl Default for Options {
-    fn default() -> Self {
-        Options {
-            num_readers: None,
-            placement: ReaderPlacement::default(),
-            splinter_bytes: None,
-            read_window: 2,
-            reuse_buffers: false,
-            store_budget_bytes: None,
-            max_inflight_reads: None,
-            admission: AdmissionPolicy::default(),
-            adaptive_admission: false,
-            data_plane_shards: None,
-        }
-    }
-}
-
-impl Options {
-    pub fn with_readers(n: u32) -> Options {
-        Options { num_readers: Some(n), ..Default::default() }
+impl FileOptions {
+    pub fn with_readers(n: u32) -> FileOptions {
+        FileOptions { num_readers: Some(n), ..Default::default() }
     }
 
     /// Resolve the reader count for a session of `bytes` on `topo`
@@ -219,6 +301,79 @@ impl Options {
     pub fn validate(&self, file_size: u64, topo: &Topology) -> Result<(), OpenError> {
         let need = self.resolve_readers(file_size.max(1), topo);
         self.placement.validate(need)
+    }
+}
+
+/// Per-session intent, passed to `CkIo::start_read_session` (PR 5).
+/// This is what the old API could not express at all: *who* a session
+/// is ([`QosClass`]) and how it wants its bytes staged. The `Default`
+/// reproduces the pre-redesign behavior byte-for-byte (Bulk class, no
+/// splintering, window 2, no reuse, the file's placement).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SessionOptions {
+    /// QoS class: rides the session-start probe to the owning data-plane
+    /// shard (so the admission class is negotiated before any buffer
+    /// exists) and every admission ticket the session's buffers request.
+    /// Under a saturated cap the governor dequeues by class weight.
+    pub class: QosClass,
+    /// Splintered I/O (paper §VI.C): buffer chares read their span in
+    /// sub-chunks of this size, so early reads can be served before the
+    /// whole span arrives. `None` = one read per span (base design).
+    pub splinter_bytes: Option<u64>,
+    /// Splinters kept in flight per buffer chare when splintering.
+    pub read_window: u32,
+    /// Buffer-chare reuse across sessions (PR 1): when set, closing this
+    /// session *parks* its buffer-chare array (keeping resident data)
+    /// instead of dropping it, and a later `startReadSession` over the
+    /// same `(file, range, shape)` revives it — repeated sessions on the
+    /// same file skip the greedy re-read entirely.
+    pub reuse_buffers: bool,
+    /// Override the file's [`FileOptions::placement`] for this session
+    /// only (e.g. one Interactive session packing its readers next to
+    /// its consumers while the file default spreads). Validated at
+    /// session start against the session's resolved reader count; an
+    /// impossible override fails the `ready` callback with a structured
+    /// [`OpenError`]. The effective placement is part of the
+    /// parked-array rebind key: with
+    /// [`SessionOptions::reuse_buffers`] also set, an override only
+    /// rebinds an array parked under the *same* override — a parked
+    /// array sits wherever its creating session put it, so rebinding
+    /// across placements would silently mis-place the session. A miss
+    /// creates the array fresh (still peer-fetching resident claims).
+    pub placement_override: Option<ReaderPlacement>,
+}
+
+impl SessionOptions {
+    fn with_class(class: QosClass) -> SessionOptions {
+        SessionOptions { class, ..Default::default() }
+    }
+
+    /// Latency-sensitive foreground session (weight 8).
+    pub fn interactive() -> SessionOptions {
+        Self::with_class(QosClass::Interactive)
+    }
+
+    /// Ordinary throughput session (weight 2) — same as `default()`.
+    pub fn bulk() -> SessionOptions {
+        Self::with_class(QosClass::Bulk)
+    }
+
+    /// Background/best-effort session (weight 1, never starved under
+    /// the weighted policies).
+    pub fn scavenger() -> SessionOptions {
+        Self::with_class(QosClass::Scavenger)
+    }
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions {
+            class: QosClass::default(),
+            splinter_bytes: None,
+            read_window: 2,
+            reuse_buffers: false,
+            placement_override: None,
+        }
     }
 }
 
@@ -257,14 +412,14 @@ mod tests {
     #[test]
     fn resolve_respects_explicit_count() {
         let topo = Topology::new(2, 4);
-        let o = Options::with_readers(6);
+        let o = FileOptions::with_readers(6);
         assert_eq!(o.resolve_readers(1 << 30, &topo), 6);
     }
 
     #[test]
     fn resolve_clamps_to_bytes() {
         let topo = Topology::new(2, 4);
-        let o = Options::with_readers(64);
+        let o = FileOptions::with_readers(64);
         assert_eq!(o.resolve_readers(10, &topo), 10);
     }
 
@@ -294,10 +449,9 @@ mod tests {
     fn explicit_placement_truncates_to_clamped_readers() {
         use crate::amt::topology::Pe;
         let topo = Topology::new(2, 4);
-        let o = Options {
+        let o = FileOptions {
             num_readers: Some(4),
             placement: ReaderPlacement::Explicit(vec![0, 1, 2, 3]),
-            ..Default::default()
         };
         // 2-byte file: never more readers than bytes.
         let n = o.resolve_readers(2, &topo);
@@ -328,15 +482,14 @@ mod tests {
         assert_eq!(nested.validate(4), Err(OpenError::RecursiveFallback));
     }
 
-    /// `Options::validate` checks the worst case over every admissible
-    /// session: the whole-file reader count.
+    /// `FileOptions::validate` checks the worst case over every
+    /// admissible session: the whole-file reader count.
     #[test]
     fn validate_checks_the_largest_resolvable_reader_count() {
         let topo = Topology::new(2, 4);
-        let o = Options {
+        let o = FileOptions {
             num_readers: Some(4),
             placement: ReaderPlacement::Explicit(vec![0, 1]),
-            ..Default::default()
         };
         // A large file can resolve all 4 readers: the 2-entry list fails.
         assert_eq!(
@@ -345,5 +498,58 @@ mod tests {
         );
         // A 2-byte file clamps every session to <= 2 readers: it passes.
         assert_eq!(o.validate(2, &topo), Ok(()));
+    }
+
+    /// The PR 5 satellite: a zero static cap is rejected where the
+    /// configuration is made, with a structured error — not silently
+    /// clamped to 1 deep inside the governor.
+    #[test]
+    fn service_config_rejects_zero_cap_and_zero_shards() {
+        let ok = ServiceConfig::default();
+        assert_eq!(ok.validate(), Ok(()));
+        assert!(!ok.governed());
+
+        let zero_cap = ServiceConfig { max_inflight_reads: Some(0), ..Default::default() };
+        assert_eq!(zero_cap.validate(), Err(ConfigError::ZeroCap));
+
+        let zero_shards = ServiceConfig { data_plane_shards: Some(0), ..Default::default() };
+        assert_eq!(zero_shards.validate(), Err(ConfigError::ZeroShards));
+
+        let governed = ServiceConfig { max_inflight_reads: Some(1), ..Default::default() };
+        assert_eq!(governed.validate(), Ok(()));
+        assert!(governed.governed());
+        let adaptive = ServiceConfig { adaptive_admission: true, ..Default::default() };
+        assert!(adaptive.governed());
+    }
+
+    #[test]
+    fn service_config_resolves_shards_and_budget_shares() {
+        let cfg = ServiceConfig::default();
+        assert_eq!(cfg.resolve_shards(8), 8, "default is one shard per PE");
+        let pinned = ServiceConfig { data_plane_shards: Some(1), ..Default::default() };
+        assert_eq!(pinned.resolve_shards(8), 1);
+        let over = ServiceConfig { data_plane_shards: Some(64), ..Default::default() };
+        assert_eq!(over.resolve_shards(8), 8, "shard count clamps to the PE count");
+        let budget =
+            ServiceConfig { store_budget_bytes: Some(100), ..Default::default() };
+        assert_eq!(budget.budget_share(4), Some(25));
+        assert_eq!(budget.budget_share(3), Some(34), "shares round up");
+        assert_eq!(cfg.budget_share(4), None);
+    }
+
+    /// The tentpole's compatibility contract: `SessionOptions::default()`
+    /// is exactly the pre-redesign behavior — Bulk class, no
+    /// splintering, window 2, no reuse, the file's own placement.
+    #[test]
+    fn session_options_default_matches_pre_redesign_behavior() {
+        let d = SessionOptions::default();
+        assert_eq!(d.class, QosClass::Bulk);
+        assert_eq!(d.splinter_bytes, None);
+        assert_eq!(d.read_window, 2);
+        assert!(!d.reuse_buffers);
+        assert_eq!(d.placement_override, None);
+        assert_eq!(d, SessionOptions::bulk());
+        assert_eq!(SessionOptions::interactive().class, QosClass::Interactive);
+        assert_eq!(SessionOptions::scavenger().class, QosClass::Scavenger);
     }
 }

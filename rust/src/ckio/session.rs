@@ -4,7 +4,7 @@ use crate::amt::chare::CollectionId;
 use crate::pfs::layout::FileId;
 use crate::util::bytes::{ceil_div, Chunk};
 
-use super::options::Options;
+use super::options::FileOptions;
 
 /// Identifies a read session.
 #[derive(Copy, Clone, Eq, PartialEq, Ord, PartialOrd, Hash, Debug)]
@@ -61,7 +61,8 @@ impl ClosedSessions {
 pub struct FileHandle {
     pub file: FileId,
     pub size: u64,
-    pub opts: Options,
+    /// The [`FileOptions`] in effect for this file (the first opener's).
+    pub opts: FileOptions,
 }
 
 /// Returned by `Ck::IO::startReadSession`'s callback; everything a client

@@ -7,7 +7,7 @@
 //! on one PE — the exact serialization bottleneck the over-decomposition
 //! model exists to avoid. PR 3 splits that state across a chare array of
 //! [`DataShard`]s, one per PE (of which the first
-//! [`crate::ckio::Options::data_plane_shards`] are *active*), each owning
+//! [`crate::ckio::ServiceConfig::data_plane_shards`] are *active*), each owning
 //! the [`SpanStore`] claims/parked arrays and the [`Governor`] for the
 //! files that hash to it ([`shard_of`]).
 //!
@@ -18,9 +18,10 @@
 //! with the shard count instead of queueing on one coordinator. `FileId`s
 //! are dense indices assigned sequentially by the PFS, so the hash is a
 //! plain modulo: perfectly balanced for the common sequential id
-//! pattern, and trivially stable across close/re-open (the active-shard
-//! count only changes while the data plane is idle — see
-//! [`crate::ckio::Options::data_plane_shards`]).
+//! pattern, and trivially stable across close/re-open (since PR 5 the
+//! active-shard count is fixed at boot —
+//! [`crate::ckio::ServiceConfig::data_plane_shards`] — so routing can
+//! never change for the life of the service).
 //!
 //! Message flow (all *hot-path* traffic is buffer↔shard; the director
 //! keeps only session/file lifecycle):
@@ -55,7 +56,25 @@
 //!   covered bytes from [`SpanStore::plan_spans`]), the director places
 //!   the buffers onto those PEs, and registration revalidates the
 //!   snapshot — an unclaim racing the plan degrades to the fallback
-//!   behavior (PFS reads), never to an assert.
+//!   behavior (PFS reads), never to an assert. Since PR 5 the probe
+//!   also carries the session's [`QosClass`]: the admission class is
+//!   negotiated on the same round trip, before any buffer exists.
+//! * `EP_SHARD_ADMIT` — the lightweight admission-register message
+//!   (PR 5): session starts that run **no** plan probe (non-store-aware
+//!   placements, including rebinds) announce their QoS class to the
+//!   owning shard on the same path the plan would have taken. Exactly
+//!   one of {plan probe, admit} fires per session start, so the
+//!   per-class registration counters
+//!   ([`DataShard::class_registrations`]) count sessions.
+//!
+//! Configuration (PR 5): the shard's store budget, admission cap,
+//! policy, and adaptive mode come from the service-wide
+//! [`crate::ckio::ServiceConfig`], applied **once at boot** via
+//! [`DataShard::boot_configure`] — synchronously, before any message is
+//! in flight (like the director-ref patching). The PR 2–4
+//! `EP_SHARD_CONFIG` message, its "last writer wins per shard"
+//! semantics, and the director's idle-barrier re-sharding no longer
+//! exist.
 //!
 //! Observability: the shard maintains the `ckio.store.resident_bytes`
 //! gauge as an *add-delta* (each shard contributes the change in its own
@@ -82,7 +101,8 @@ use super::buffer::{
     GrantMsg, IoDoneMsg, IoReqMsg, PeerSlot, PeersMsg, EP_BUF_DROP, EP_BUF_GRANT, EP_BUF_PEERS,
 };
 use super::director::{PlanReplyMsg, TakeReplyMsg, EP_DIR_PLAN_REPLY, EP_DIR_TAKE_REPLY};
-use super::governor::{AdmissionPolicy, Governor};
+use super::governor::{Governor, QosClass, NUM_CLASSES};
+use super::options::ServiceConfig;
 use super::store::{slot_extents, BufKey, Evicted, SpanStore};
 
 /// Buffer chare: register a span claim and resolve peer sources.
@@ -95,15 +115,19 @@ pub const EP_SHARD_TAKE: Ep = 3;
 pub const EP_SHARD_PARK: Ep = 4;
 /// Director: a file finally closed — release its claims/parked arrays.
 pub const EP_SHARD_PURGE: Ep = 5;
-/// Director: apply a file's opening store/governor configuration.
-pub const EP_SHARD_CONFIG: Ep = 6;
 /// Buffer chare: request PFS read tickets from the admission governor.
 pub const EP_SHARD_IO_REQ: Ep = 7;
 /// Buffer chare: return PFS read tickets (with observed service time).
 pub const EP_SHARD_IO_DONE: Ep = 8;
 /// Director: plan a prospective session's reader placement against the
-/// span store (PR 4's plan-then-create round trip).
+/// span store (PR 4's plan-then-create round trip; carries the QoS
+/// class since PR 5).
 pub const EP_SHARD_PLAN: Ep = 9;
+/// Director: register a starting session's QoS class (PR 5) — the
+/// lightweight stand-in for the plan probe on non-store-aware starts
+/// and rebinds. Payload: the bare [`QosClass`] (routing already picked
+/// this shard; fire-and-forget).
+pub const EP_SHARD_ADMIT: Ep = 10;
 
 /// The shard a file's data-plane state lives on. `FileId`s are dense
 /// sequential indices, so plain modulo is balanced *and* stable — the
@@ -157,6 +181,9 @@ pub struct PlanMsg {
     pub bytes: u64,
     pub readers: u32,
     pub splinter: u64,
+    /// The starting session's QoS class (PR 5): negotiated on this
+    /// probe, before any buffer exists.
+    pub class: QosClass,
     /// Correlates the reply with the director's stashed session start.
     pub token: u64,
 }
@@ -170,16 +197,6 @@ pub struct ParkMsg {
     pub resident_bytes: u64,
 }
 
-/// Director → shard: store/governor knobs from a file's first open
-/// (the budget arrives pre-divided by the active shard count).
-#[derive(Debug)]
-pub struct ShardConfigMsg {
-    pub cap: Option<u32>,
-    pub policy: AdmissionPolicy,
-    pub adaptive: bool,
-    pub budget: Option<u64>,
-}
-
 /// One data-plane shard.
 pub struct DataShard {
     index: u32,
@@ -188,9 +205,12 @@ pub struct DataShard {
     store: SpanStore,
     governor: Governor,
     /// Data-plane messages processed — claims, tickets, parked-array
-    /// lifecycle; configuration excluded (the imbalance metric's
-    /// numerator).
+    /// lifecycle (the imbalance metric's numerator).
     msgs: u64,
+    /// Sessions registered per QoS class (PR 5): bumped by the plan
+    /// probe or the admit message, exactly once per session start on
+    /// this shard (monotonic).
+    class_registered: [u64; NUM_CLASSES],
     /// Last residency this shard contributed to the global gauge.
     resident_reported: f64,
     /// Last cap published on the `ckio.governor.cap` gauge.
@@ -205,9 +225,25 @@ impl DataShard {
             store: SpanStore::new(),
             governor: Governor::new(),
             msgs: 0,
+            class_registered: [0; NUM_CLASSES],
             resident_reported: 0.0,
             cap_reported: None,
         }
+    }
+
+    /// Apply the service-wide configuration (PR 5). Called exactly once
+    /// per shard by `CkIo::boot_with`, synchronously, before any message
+    /// is in flight — so there is no configuration race and no runtime
+    /// reconfiguration path at all. Returns the configured cap's gauge
+    /// contribution (the caller sums it into `ckio.governor.cap`, since
+    /// no `Ctx` exists at boot).
+    pub fn boot_configure(&mut self, cfg: &ServiceConfig, budget_share: Option<u64>) -> f64 {
+        if let Some(b) = budget_share {
+            self.store.set_budget(b);
+        }
+        self.governor.configure(cfg.max_inflight_reads, cfg.admission, cfg.adaptive_admission);
+        self.cap_reported = self.governor.cap();
+        self.cap_reported.unwrap_or(0) as f64
     }
 
     /// Contribute this shard's residency *change* to the global gauge
@@ -223,18 +259,20 @@ impl DataShard {
     /// Publish this shard's cap *change* on the `ckio.governor.cap`
     /// gauge. Like the resident-bytes gauge, the value is an add-delta —
     /// the gauge reads as the **sum of per-shard caps**, i.e. the
-    /// cluster-wide admission ceiling (and exactly the cap itself when
-    /// one shard is governed), never a last-writing shard's private
-    /// view. `from_aimd` marks changes made by the feedback loop
-    /// ([`Governor::complete`]): only those count as adaptations —
-    /// a `configure()` switching modes is not an AIMD decision.
-    fn publish_cap(&mut self, ctx: &mut Ctx<'_>, from_aimd: bool) {
+    /// cluster-wide admission ceiling over the active shards (and
+    /// exactly the cap itself when one shard is active), never a
+    /// last-writing shard's private view. Boot configuration publishes
+    /// through `CkIo::boot_with` (no `Ctx` exists then); after boot the
+    /// only thing that can move a cap is the AIMD feedback loop
+    /// ([`Governor::complete`]), so every change seen here counts as an
+    /// adaptation.
+    fn publish_cap(&mut self, ctx: &mut Ctx<'_>) {
         let cap = self.governor.cap();
         if cap != self.cap_reported {
             let old = self.cap_reported.unwrap_or(0) as f64;
             let new = cap.unwrap_or(0) as f64;
             ctx.metrics().add(keys::GOV_CAP, new - old);
-            if from_aimd && self.cap_reported.is_some() && self.governor.is_adaptive() {
+            if self.governor.is_adaptive() {
                 ctx.metrics().count(keys::GOV_ADAPTATIONS, 1);
             }
             self.cap_reported = cap;
@@ -275,18 +313,26 @@ impl DataShard {
     pub fn msgs_processed(&self) -> u64 {
         self.msgs
     }
+
+    /// Sessions registered under `class` on this shard (PR 5): the
+    /// class rode either the plan probe or the admit message, so this
+    /// counts session starts per class.
+    pub fn class_registrations(&self, class: QosClass) -> u64 {
+        self.class_registered[class.index()]
+    }
+
+    /// Record a starting session's class (plan probe or admit message).
+    fn register_class(&mut self, class: QosClass) {
+        self.class_registered[class.index()] += 1;
+    }
 }
 
 impl Chare for DataShard {
     fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
-        // Count data-plane traffic only (claims, tickets, parked-array
-        // lifecycle): EP_SHARD_CONFIG is coordinator configuration — it
-        // may legitimately reach shards the hash never routes to (the
-        // budget broadcast), and counting it would pollute the
-        // msgs_max/mean imbalance pair with non-hot-path noise.
-        if msg.ep != EP_SHARD_CONFIG {
-            self.msgs += 1;
-        }
+        // Every message is data-plane traffic now (PR 5 moved shard
+        // configuration to boot time), so all of it counts toward the
+        // msgs_max/mean imbalance pair.
+        self.msgs += 1;
         match msg.ep {
             EP_SHARD_REGISTER => {
                 let m: RegisterMsg = msg.take();
@@ -318,6 +364,10 @@ impl Chare for DataShard {
             }
             EP_SHARD_PLAN => {
                 let m: PlanMsg = msg.take();
+                // The probe doubles as the admission-class negotiation
+                // (PR 5): the shard learns who is coming before any
+                // buffer of the session exists.
+                self.register_class(m.class);
                 // One probe answers "who holds these bytes" for the whole
                 // prospective partition: the store aggregates covering
                 // claims per span and names each span's dominant source
@@ -331,6 +381,11 @@ impl Chare for DataShard {
                     EP_DIR_PLAN_REPLY,
                     PlanReplyMsg { token: m.token, slots },
                 );
+            }
+            EP_SHARD_ADMIT => {
+                let class: QosClass = msg.take();
+                self.register_class(class);
+                ctx.advance(MICROS / 2);
             }
             EP_SHARD_UNCLAIM => {
                 let m: UnclaimMsg = msg.take();
@@ -363,32 +418,25 @@ impl Chare for DataShard {
                 self.update_resident_gauge(ctx);
                 ctx.advance(MICROS);
             }
-            EP_SHARD_CONFIG => {
-                let m: ShardConfigMsg = msg.take();
-                if let Some(b) = m.budget {
-                    self.store.set_budget(b);
-                }
-                self.governor.configure(m.cap, m.policy, m.adaptive);
-                self.publish_cap(ctx, false);
-                ctx.advance(MICROS / 2);
-            }
             EP_SHARD_IO_REQ => {
                 let m: IoReqMsg = msg.take();
-                let granted = self.governor.request(m.buffer, m.want, m.sess_bytes);
+                let granted = self.governor.request(m.buffer, m.want, m.sess_bytes, m.class);
                 if granted < m.want {
                     ctx.metrics().count(keys::GOV_THROTTLED, (m.want - granted) as u64);
                 }
                 if granted > 0 {
+                    ctx.metrics().count(m.class.granted_key(), granted as u64);
                     ctx.send(m.buffer, EP_BUF_GRANT, GrantMsg { n: granted });
                 }
                 ctx.advance(MICROS);
             }
             EP_SHARD_IO_DONE => {
                 let m: IoDoneMsg = msg.take();
-                for (buffer, n) in self.governor.complete(m.n, m.service_ns) {
-                    ctx.send(buffer, EP_BUF_GRANT, GrantMsg { n });
+                for g in self.governor.complete(m.n, m.service_ns) {
+                    ctx.metrics().count(g.class.granted_key(), g.n as u64);
+                    ctx.send(g.owner, EP_BUF_GRANT, GrantMsg { n: g.n });
                 }
-                self.publish_cap(ctx, true);
+                self.publish_cap(ctx);
                 ctx.advance(MICROS);
             }
             other => panic!("DataShard: unknown ep {other}"),

@@ -20,8 +20,9 @@
 //!   only covers a prefix of a new session splits the serve: covered
 //!   slots come from the resident array, the remainder goes to the PFS.
 //! * **Byte budget + LRU.** Parked arrays are kept under a configurable
-//!   byte budget ([`crate::ckio::Options::store_budget_bytes`], split
-//!   evenly across the active shards); eviction is least-recently-used.
+//!   byte budget ([`crate::ckio::ServiceConfig::store_budget_bytes`],
+//!   split evenly across the active shards); eviction is
+//!   least-recently-used.
 //!   When no budget is set the store falls back to the PR 1 behavior of
 //!   keeping at most [`SpanStore::DEFAULT_MAX_ARRAYS`] parked arrays
 //!   (per shard).
@@ -37,8 +38,14 @@ use crate::amt::chare::{ChareRef, CollectionId};
 use crate::pfs::layout::FileId;
 use crate::util::bytes::ceil_div;
 
+use super::options::ReaderPlacement;
+
 /// Shape key for exact-match parked-array rebind: a new session rebinds a
-/// parked array only if every property that shaped the array agrees.
+/// parked array only if every property that shaped the array agrees —
+/// including, since PR 5, the *effective placement* it was created
+/// under (file policy or session override): a parked array physically
+/// sits where its placement put it, so two sessions whose placements
+/// differ must never silently inherit each other's layout.
 /// (Partial-overlap serving does *not* need this — it goes through
 /// claims, which only care about byte ranges.)
 #[derive(Clone, PartialEq, Eq, Debug)]
@@ -49,6 +56,9 @@ pub struct BufKey {
     pub readers: u32,
     pub splinter: u64,
     pub window: u32,
+    /// The effective [`ReaderPlacement`] of the session that shaped
+    /// (or wants to rebind) the array.
+    pub placement: ReaderPlacement,
 }
 
 /// One buffer chare's registered span: `[lo, hi)` of `file` is (or will
@@ -118,8 +128,9 @@ impl SpanStore {
         SpanStore::default()
     }
 
-    /// Configure the parked-array byte budget (global; the director
-    /// applies the opening `Options` of each file, last writer wins).
+    /// Configure the parked-array byte budget: the per-shard share of
+    /// `ServiceConfig::store_budget_bytes`, applied once at boot
+    /// (PR 5 — no runtime reconfiguration, no last-writer-wins).
     pub fn set_budget(&mut self, budget: u64) {
         self.budget = Some(budget);
     }
@@ -376,7 +387,15 @@ mod tests {
     use super::*;
 
     fn key(file: u32, offset: u64, bytes: u64) -> BufKey {
-        BufKey { file: FileId(file), offset, bytes, readers: 2, splinter: 0, window: 2 }
+        BufKey {
+            file: FileId(file),
+            offset,
+            bytes,
+            readers: 2,
+            splinter: 0,
+            window: 2,
+            placement: ReaderPlacement::default(),
+        }
     }
 
     fn owner(cid: u32, i: u32) -> ChareRef {
@@ -537,6 +556,11 @@ mod tests {
         let mut other = key(0, 0, 100);
         other.readers = 4;
         assert_eq!(s.take_exact(&other), None);
+        // The effective placement is part of the shape (PR 5): an array
+        // parked under one placement never rebinds under another.
+        let mut placed = key(0, 0, 100);
+        placed.placement = ReaderPlacement::Explicit(vec![5, 5]);
+        assert_eq!(s.take_exact(&placed), None);
         assert_eq!(s.take_exact(&key(0, 0, 100)), Some((CollectionId(1), 2)));
         assert_eq!(s.take_exact(&key(0, 0, 100)), None, "taken arrays leave the store");
     }

@@ -11,7 +11,10 @@ use crate::amt::time::{self, Time, MICROS};
 use crate::amt::topology::{Pe, Placement};
 use crate::apps::changa::driver::{run_changa_input, Scheme};
 use crate::baselines::naive::{NaiveClient, EP_N_GO};
-use crate::ckio::{CkIo, Options, ReadResult, ReaderPlacement, Session};
+use crate::ckio::{
+    CkIo, FileOptions, QosClass, ReadResult, ReaderPlacement, ServiceConfig, Session,
+    SessionOptions,
+};
 use crate::harness::bench::Table;
 use crate::harness::bgwork::{BgWorker, EP_BG_START, EP_BG_STOP};
 use crate::impl_chare_any;
@@ -53,7 +56,8 @@ pub struct SliceReader {
     pub session_bytes: u64,
     pub my_offset: u64,
     pub my_len: u64,
-    pub opts: Options,
+    pub fopts: FileOptions,
+    pub sopts: SessionOptions,
     pub n_peers: u32,
     pub peers: CollectionId,
     pub done: Callback,
@@ -70,7 +74,8 @@ impl SliceReader {
         file_size: u64,
         session: (u64, u64),
         slice: (u64, u64),
-        opts: Options,
+        fopts: FileOptions,
+        sopts: SessionOptions,
         n_peers: u32,
         done: Callback,
     ) -> SliceReader {
@@ -82,7 +87,8 @@ impl SliceReader {
             session_bytes: session.1,
             my_offset: slice.0,
             my_len: slice.1,
-            opts,
+            fopts,
+            sopts,
             n_peers,
             peers: CollectionId(u32::MAX),
             done,
@@ -98,15 +104,16 @@ impl Chare for SliceReader {
         match msg.ep {
             EP_GO => {
                 let me = ctx.me();
-                let (io, file, size, opts) =
-                    (self.io, self.file, self.file_size, self.opts.clone());
-                io.open(ctx, file, size, opts, Callback::to_chare(me, EP_OPENED));
+                let (io, file, size, fopts) =
+                    (self.io, self.file, self.file_size, self.fopts.clone());
+                io.open(ctx, file, size, fopts, Callback::to_chare(me, EP_OPENED));
             }
             EP_OPENED => {
                 let me = ctx.me();
-                let (io, file, so, sb) =
-                    (self.io, self.file, self.session_offset, self.session_bytes);
-                io.start_read_session(ctx, file, so, sb, Callback::to_chare(me, EP_READY));
+                let (io, file, so, sb, sopts) =
+                    (self.io, self.file, self.session_offset, self.session_bytes,
+                     self.sopts.clone());
+                io.start_read_session(ctx, file, so, sb, sopts, Callback::to_chare(me, EP_READY));
             }
             EP_READY | EP_SESSION_FWD => {
                 let s: Session = msg.take();
@@ -149,7 +156,8 @@ pub fn run_ckio_read(
     pes: u32,
     file_size: u64,
     nclients: u32,
-    opts: Options,
+    fopts: FileOptions,
+    sopts: SessionOptions,
     seed: u64,
 ) -> (Time, Engine) {
     let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed))
@@ -167,7 +175,8 @@ pub fn run_ckio_read(
             file_size,
             (0, file_size),
             (lo, hi - lo),
-            opts.clone(),
+            fopts.clone(),
+            sopts.clone(),
             nclients,
             Callback::Future(fut),
         )
@@ -350,7 +359,8 @@ pub fn fig4_ckio_vs_naive(reps: u32) -> Table {
                         PAPER_PES,
                         size,
                         clients,
-                        Options::with_readers(readers),
+                        FileOptions::with_readers(readers),
+                        SessionOptions::default(),
                         91 + r as u64,
                     )
                     .0,
@@ -426,7 +436,8 @@ pub fn fig7_mpiio_vs_ckio(reps: u32) -> Table {
                             pes,
                             size,
                             nodes * pes,
-                            Options::with_readers(per_node * nodes),
+                            FileOptions::with_readers(per_node * nodes),
+                            SessionOptions::default(),
                             seed + rep as u64,
                         )
                         .0,
@@ -474,7 +485,8 @@ pub fn fig8_overlap_runtime(reps: u32) -> Table {
                     size,
                     (0, size),
                     (i as u64 * per, per),
-                    Options::with_readers(8),
+                    FileOptions::with_readers(8),
+                    SessionOptions::default(),
                     nclients,
                     Callback::Future(read_fut),
                 )
@@ -600,7 +612,8 @@ pub fn fig9_overlap_fraction(reps: u32) -> Table {
                     size,
                     (0, size),
                     (i as u64 * per, per),
-                    Options::with_readers(8),
+                    FileOptions::with_readers(8),
+                    SessionOptions::default(),
                     clients,
                     Callback::to_chare(collector, EP_COLLECT),
                 )
@@ -707,10 +720,9 @@ fn migration_run(size: u64, seed: u64) -> (f64, f64) {
                             ctx,
                             file,
                             size,
-                            Options {
+                            FileOptions {
                                 num_readers: Some(2),
                                 placement: ReaderPlacement::Explicit(vec![0, 1]),
-                                ..Default::default()
                             },
                             Callback::to_chare(me, EP_OPENED),
                         );
@@ -719,7 +731,14 @@ fn migration_run(size: u64, seed: u64) -> (f64, f64) {
                 EP_OPENED => {
                     let me = ctx.me();
                     let (io, file, size) = (self.io, self.file, self.size);
-                    io.start_read_session(ctx, file, 0, size, Callback::to_chare(me, EP_READY));
+                    io.start_read_session(
+                        ctx,
+                        file,
+                        0,
+                        size,
+                        SessionOptions::default(),
+                        Callback::to_chare(me, EP_READY),
+                    );
                 }
                 EP_READY | EP_SESSION_FWD => {
                     let s: Session = msg.take();
@@ -868,7 +887,8 @@ pub fn sec5_breakdown(reps: u32) -> Table {
                 PAPER_PES,
                 size,
                 clients,
-                Options::with_readers(512),
+                FileOptions::with_readers(512),
+                SessionOptions::default(),
                 3000 + rep as u64,
             );
             total += time::to_secs(tt);
@@ -917,8 +937,7 @@ pub fn ablation_splinter(reps: u32) -> Table {
             let file = eng.core.sim_pfs_mut().create_file(size);
             let io = CkIo::boot(&mut eng);
             let fut = eng.future(1);
-            let opts =
-                Options { num_readers: Some(1), splinter_bytes: splinter, ..Default::default() };
+            let sopts = SessionOptions { splinter_bytes: splinter, ..Default::default() };
             let cid = eng.create_array(1, &Placement::RoundRobinPes, |_| {
                 SliceReader::new(
                     io,
@@ -926,7 +945,8 @@ pub fn ablation_splinter(reps: u32) -> Table {
                     size,
                     (0, size),
                     (0, mib(4)),
-                    opts.clone(),
+                    FileOptions::with_readers(1),
+                    sopts.clone(),
                     1,
                     Callback::Future(fut),
                 )
@@ -977,7 +997,8 @@ pub struct ConcurrentClient {
     n_peers: u32,
     /// Set post-creation by the driver.
     pub peers: CollectionId,
-    opts: Options,
+    fopts: FileOptions,
+    sopts: SessionOptions,
     my_offset: u64,
     my_len: u64,
     session: Option<Session>,
@@ -998,7 +1019,8 @@ impl ConcurrentClient {
         file_size: u64,
         index: u32,
         n_peers: u32,
-        opts: Options,
+        fopts: FileOptions,
+        sopts: SessionOptions,
         slice: (u64, u64),
         session_done: Callback,
         read_latency: Callback,
@@ -1010,7 +1032,8 @@ impl ConcurrentClient {
             index,
             n_peers,
             peers: CollectionId(u32::MAX),
-            opts,
+            fopts,
+            sopts,
             my_offset: slice.0,
             my_len: slice.1,
             session: None,
@@ -1035,14 +1058,22 @@ impl Chare for ConcurrentClient {
             EP_CC_GO => {
                 self.go_time = ctx.now();
                 let me = ctx.me();
-                let (io, file, size, opts) =
-                    (self.io, self.file, self.file_size, self.opts.clone());
-                io.open(ctx, file, size, opts, Callback::to_chare(me, EP_CC_OPENED));
+                let (io, file, size, fopts) =
+                    (self.io, self.file, self.file_size, self.fopts.clone());
+                io.open(ctx, file, size, fopts, Callback::to_chare(me, EP_CC_OPENED));
             }
             EP_CC_OPENED => {
                 let me = ctx.me();
-                let (io, file, size) = (self.io, self.file, self.file_size);
-                io.start_read_session(ctx, file, 0, size, Callback::to_chare(me, EP_CC_SESSION));
+                let (io, file, size, sopts) =
+                    (self.io, self.file, self.file_size, self.sopts.clone());
+                io.start_read_session(
+                    ctx,
+                    file,
+                    0,
+                    size,
+                    sopts,
+                    Callback::to_chare(me, EP_CC_SESSION),
+                );
             }
             EP_CC_SESSION => {
                 let s: Session = msg.take();
@@ -1137,13 +1168,16 @@ pub struct ConcurrentStats {
 /// fresh file and sharing the previous session's file (mixed same-file /
 /// distinct-file, as a multi-tenant service sees). Every session closes
 /// itself and its file, so the teardown path runs `k` times per call.
+#[allow(clippy::too_many_arguments)]
 pub fn run_svc_concurrent(
     nodes: u32,
     pes: u32,
     file_size: u64,
     k: u32,
     clients: u32,
-    opts: Options,
+    cfg: ServiceConfig,
+    fopts: FileOptions,
+    sopts: SessionOptions,
     seed: u64,
 ) -> (ConcurrentStats, CkIo, Engine) {
     assert!(k > 0 && clients > 0 && file_size >= clients as u64);
@@ -1158,7 +1192,7 @@ pub fn run_svc_concurrent(
         };
         files.push(file);
     }
-    let io = CkIo::boot(&mut eng);
+    let io = CkIo::boot_with(&mut eng, cfg).expect("svc_concurrent: valid ServiceConfig");
     let done_fut = eng.future(k);
     let lat_fut = eng.future(k * clients);
     let per = file_size / clients as u64;
@@ -1174,7 +1208,8 @@ pub fn run_svc_concurrent(
                 file_size,
                 i,
                 clients,
-                opts.clone(),
+                fopts.clone(),
+                sopts.clone(),
                 (lo, hi - lo),
                 Callback::Future(done_fut),
                 Callback::Future(lat_fut),
@@ -1238,7 +1273,9 @@ pub fn svc_concurrent(reps: u32) -> Table {
                     size,
                     k,
                     clients,
-                    Options::with_readers(readers),
+                    ServiceConfig::default(),
+                    FileOptions::with_readers(readers),
+                    SessionOptions::default(),
                     7000 + r as u64,
                 );
                 agg += st.aggregate_gibs;
@@ -1290,20 +1327,23 @@ pub struct SharedStats {
 /// Drive `k` concurrent read sessions *all over one file* of
 /// `file_size` bytes, `clients` client chares per session. Every session
 /// closes itself and drops its file ref, so the whole lifecycle runs.
+#[allow(clippy::too_many_arguments)]
 pub fn run_svc_shared(
     nodes: u32,
     pes: u32,
     file_size: u64,
     k: u32,
     clients: u32,
-    opts: Options,
+    cfg: ServiceConfig,
+    fopts: FileOptions,
+    sopts: SessionOptions,
     seed: u64,
 ) -> (SharedStats, CkIo, Engine) {
     assert!(k > 0 && clients > 0 && file_size >= clients as u64);
     let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed))
         .with_sim_pfs(PfsConfig::default());
     let file = eng.core.sim_pfs_mut().create_file(file_size);
-    let io = CkIo::boot(&mut eng);
+    let io = CkIo::boot_with(&mut eng, cfg).expect("svc_shared: valid ServiceConfig");
     let done_fut = eng.future(k);
     let lat_fut = eng.future(k * clients);
     let per = file_size / clients as u64;
@@ -1318,7 +1358,8 @@ pub fn run_svc_shared(
                 file_size,
                 i,
                 clients,
-                opts.clone(),
+                fopts.clone(),
+                sopts.clone(),
                 (lo, hi - lo),
                 Callback::Future(done_fut),
                 Callback::Future(lat_fut),
@@ -1376,7 +1417,9 @@ pub fn svc_shared(reps: u32) -> Table {
                 size,
                 k,
                 clients,
-                Options::with_readers(readers),
+                ServiceConfig::default(),
+                FileOptions::with_readers(readers),
+                SessionOptions::default(),
                 7600 + r as u64,
             );
             pfs += st.pfs_bytes_read as f64;
@@ -1459,17 +1502,19 @@ pub fn run_svc_churn(
     let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed)).with_sim_pfs(pfs);
     let files: Vec<crate::pfs::FileId> =
         (0..k).map(|_| eng.core.sim_pfs_mut().create_file(file_size)).collect();
-    let io = CkIo::boot(&mut eng);
-    let opts = Options {
-        num_readers: Some(2),
-        // Many tiny splinters: lots of claim/ticket traffic per byte.
-        splinter_bytes: Some(4 << 10),
-        read_window: 8,
-        // Governed far above demand (see the doc comment above).
+    // Service scope at boot (PR 5): the shard count and the
+    // far-above-demand cap are service configuration, not smuggled
+    // through a file's open.
+    let cfg = ServiceConfig {
         max_inflight_reads: Some(1 << 16),
-        data_plane_shards: Some(shards),
+        data_plane_shards: Some(shards.max(1)),
         ..Default::default()
     };
+    let io = CkIo::boot_with(&mut eng, cfg).expect("svc_churn: valid ServiceConfig");
+    let fopts = FileOptions::with_readers(2);
+    // Many tiny splinters: lots of claim/ticket traffic per byte.
+    let sopts =
+        SessionOptions { splinter_bytes: Some(4 << 10), read_window: 8, ..Default::default() };
     let done_fut = eng.future(k);
     let lat_fut = eng.future(k * clients);
     let per = file_size / clients as u64;
@@ -1485,7 +1530,8 @@ pub fn run_svc_churn(
                 file_size,
                 i,
                 clients,
-                opts.clone(),
+                fopts.clone(),
+                sopts.clone(),
                 (lo, hi - lo),
                 Callback::Future(done_fut),
                 Callback::Future(lat_fut),
@@ -1539,7 +1585,7 @@ pub struct ChurnSweepRow {
 
 /// The canonical churn shard sweep — ONE definition of the shape
 /// (cluster, file size, K, clients, shard list, seeds), shared by the
-/// `svc_churn` figure table and the `BENCH_pr4.json` `churn` section so
+/// `svc_churn` figure table and the `BENCH_pr5.json` `churn` section so
 /// the two can never silently report different experiments.
 pub fn churn_sweep(reps: u32) -> Vec<ChurnSweepRow> {
     let (nodes, pes) = (4u32, 8);
@@ -1644,8 +1690,6 @@ pub fn run_svc_locality(
     placement: ReaderPlacement,
     seed: u64,
 ) -> (LocalityStats, CkIo, Engine) {
-    use crate::ckio::manager::{ReadMsg, EP_M_READ};
-
     assert!(k >= 1 && readers >= 2);
     assert!(k <= readers + 1, "window shifts beyond the file for k > readers + 1");
     assert_eq!(
@@ -1661,14 +1705,10 @@ pub fn run_svc_locality(
     let file = eng.core.sim_pfs_mut().create_file(file_size);
     let io = CkIo::boot(&mut eng);
 
-    let opts = Options {
-        num_readers: Some(readers),
-        splinter_bytes: Some(splinter),
-        placement,
-        ..Default::default()
-    };
+    let fopts = FileOptions { num_readers: Some(readers), placement };
+    let sopts = SessionOptions { splinter_bytes: Some(splinter), ..Default::default() };
     let open_fut = eng.future(1);
-    io.open_driver(&mut eng, file, file_size, opts, Callback::Future(open_fut));
+    io.open_driver(&mut eng, file, file_size, fopts, Callback::Future(open_fut));
     eng.run();
     assert!(eng.future_done(open_fut), "svc_locality: open never completed");
 
@@ -1677,20 +1717,24 @@ pub fn run_svc_locality(
         let (offset, bytes) =
             if i == 0 { (0, file_size) } else { (i as u64 * span, file_size / 2) };
         let ready = eng.future(1);
-        io.start_session_driver(&mut eng, file, offset, bytes, Callback::Future(ready));
+        io.start_session_driver(
+            &mut eng,
+            file,
+            offset,
+            bytes,
+            sopts.clone(),
+            Callback::Future(ready),
+        );
         eng.run();
         assert!(eng.future_done(ready), "svc_locality: session {i} never became ready");
         let (_, mut p) = eng.take_future(ready).pop().unwrap();
         let s = p.take::<Session>();
-        // Read the whole session range back through PE 0's manager and
-        // verify it against the file pattern — whatever mix of local
-        // copies, cross-PE peer fetches, and PFS reads served it.
+        // Read the whole session range back through PE 0's manager
+        // (the public read_driver, PR 5) and verify it against the file
+        // pattern — whatever mix of local copies, cross-PE peer
+        // fetches, and PFS reads served it.
         let read_fut = eng.future(1);
-        eng.inject(
-            ChareRef::new(io.managers, 0),
-            EP_M_READ,
-            ReadMsg { session: s.id, offset, len: bytes, after: Callback::Future(read_fut) },
-        );
+        io.read_driver(&mut eng, 0, &s, offset, bytes, Callback::Future(read_fut));
         eng.run();
         assert!(eng.future_done(read_fut), "svc_locality: session {i} read never completed");
         let (_, mut p) = eng.take_future(read_fut).pop().unwrap();
@@ -1784,7 +1828,242 @@ pub fn svc_locality(reps: u32) -> Table {
     t
 }
 
-/// Machine-readable perf anchor for this PR (`BENCH_pr4.json`):
+// =====================================================================
+// svc_qos — QoS classes under a contended admission cap (PR 5)
+// =====================================================================
+//
+// PR 5's acceptance scenario: Interactive and Bulk sessions contend on
+// ONE governed data-plane shard under a tight admission cap. Classless
+// (every session Bulk), the FIFO governor drains everyone at the same
+// rate and latency-sensitive work waits behind bulk prefetch. With
+// classes, the weighted-deficit-round-robin governor dequeues
+// Interactive tickets at 4x the Bulk rate (weights 8 : 2), so
+// Interactive session makespan p50 drops — while Bulk still completes
+// (WDRR is starvation-free) and the governor holds no residue at
+// quiescence.
+
+/// Results of one `run_svc_qos` run.
+#[derive(Clone, Debug)]
+pub struct QosStats {
+    /// The static per-shard admission cap the run contended on.
+    pub cap: u32,
+    /// Per-session elapsed seconds (open → file close), Interactive
+    /// sessions.
+    pub interactive_s: Vec<f64>,
+    /// Per-session elapsed seconds, Bulk sessions.
+    pub bulk_s: Vec<f64>,
+    pub interactive_p50_s: f64,
+    pub bulk_p50_s: f64,
+    /// Worst Bulk session (the starvation check: must be finite and the
+    /// run must quiesce).
+    pub bulk_max_s: f64,
+    pub makespan_s: f64,
+    /// `ckio.governor.class_granted.*` counters at quiescence.
+    pub granted_interactive: u64,
+    pub granted_bulk: u64,
+    pub granted_scavenger: u64,
+    pub throttled: u64,
+    /// Governor residue at quiescence (acceptance: both must be 0).
+    pub governor_inflight: u32,
+    pub governor_queued: usize,
+}
+
+/// Drive `n_interactive` Interactive-class and `n_bulk` Bulk-class
+/// sessions, each over its *own* file of `file_size` bytes (`clients`
+/// client chares per session), all contending on ONE governed
+/// data-plane shard under a static admission `cap`. With `classed`
+/// false, every session runs as Bulk — the classless baseline the QoS
+/// claim is measured against (identical work, identical arrival
+/// interleaving; only the class labels differ).
+///
+/// The PFS is configured quiet (no noise) so the classed/classless
+/// comparison is deterministic, and sessions splinter finely so the
+/// governor queue — not the disks' raw bandwidth — is the contended
+/// resource.
+#[allow(clippy::too_many_arguments)]
+pub fn run_svc_qos(
+    nodes: u32,
+    pes: u32,
+    file_size: u64,
+    n_interactive: u32,
+    n_bulk: u32,
+    clients: u32,
+    cap: u32,
+    classed: bool,
+    seed: u64,
+) -> (QosStats, CkIo, Engine) {
+    assert!(n_interactive > 0 && n_bulk > 0 && clients > 0 && cap > 0);
+    assert!(file_size >= clients as u64);
+    let pfs = PfsConfig {
+        noise_sigma: 0.0,
+        rpc_overhead: time::from_micros(2.0),
+        seek_penalty: 0,
+        ..PfsConfig::default()
+    };
+    let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed)).with_sim_pfs(pfs);
+    let k = n_interactive + n_bulk;
+    let files: Vec<crate::pfs::FileId> =
+        (0..k).map(|_| eng.core.sim_pfs_mut().create_file(file_size)).collect();
+    let cfg = ServiceConfig {
+        max_inflight_reads: Some(cap),
+        // One shard: every session's tickets meet in one governor —
+        // the contention the classes arbitrate.
+        data_plane_shards: Some(1),
+        ..Default::default()
+    };
+    let io = CkIo::boot_with(&mut eng, cfg).expect("svc_qos: valid ServiceConfig");
+    let fopts = FileOptions::with_readers(2);
+    let sopts_for = |interactive: bool| SessionOptions {
+        class: if classed && interactive { QosClass::Interactive } else { QosClass::Bulk },
+        // Fine splinters + a deep window: sustained ticket demand, so
+        // the governor queue stays saturated while sessions run.
+        splinter_bytes: Some(16 << 10),
+        read_window: 8,
+        ..Default::default()
+    };
+    let done_int = eng.future(n_interactive);
+    let done_bulk = eng.future(n_bulk);
+    let lat_fut = eng.future(k * clients);
+    let per = file_size / clients as u64;
+    let mut leaders = Vec::with_capacity(k as usize);
+    for s in 0..k {
+        // Interleave the classes in arrival order (I, B, I, B, …, then
+        // whatever class remains): the classless baseline then treats
+        // both groups identically, so any p50 gap is the scheduler's
+        // doing, not arrival bias.
+        let interactive =
+            if s % 2 == 0 { s / 2 < n_interactive } else { s / 2 >= n_bulk };
+        let file = files[s as usize];
+        let done = if interactive { done_int } else { done_bulk };
+        let sopts = sopts_for(interactive);
+        let cid = eng.create_array(clients, &Placement::RoundRobinPes, |i| {
+            let lo = i as u64 * per;
+            let hi = if i == clients - 1 { file_size } else { lo + per };
+            ConcurrentClient::new(
+                io,
+                file,
+                file_size,
+                i,
+                clients,
+                fopts.clone(),
+                sopts.clone(),
+                (lo, hi - lo),
+                Callback::Future(done),
+                Callback::Future(lat_fut),
+            )
+        });
+        for i in 0..clients {
+            eng.chare_mut::<ConcurrentClient>(ChareRef::new(cid, i)).peers = cid;
+        }
+        leaders.push(ChareRef::new(cid, 0));
+    }
+    for leader in leaders {
+        eng.inject_signal(leader, EP_CC_GO);
+    }
+    eng.run();
+    assert!(eng.future_done(done_int), "svc_qos: not all interactive sessions closed");
+    assert!(eng.future_done(done_bulk), "svc_qos: not all bulk sessions closed");
+    assert!(eng.future_done(lat_fut), "svc_qos: not all reads completed");
+
+    let collect = |fut_vals: Vec<(Time, Payload)>| -> (Vec<f64>, Time) {
+        let end = fut_vals.iter().map(|(t, _)| *t).max().unwrap_or(0);
+        let mut v: Vec<f64> = fut_vals
+            .into_iter()
+            .map(|(_, mut p)| time::to_secs(p.take::<Time>()))
+            .collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        (v, end)
+    };
+    let (interactive_s, end_i) = collect(eng.take_future(done_int));
+    let (bulk_s, end_b) = collect(eng.take_future(done_bulk));
+    let m = &eng.core.metrics;
+    let stats = QosStats {
+        cap,
+        interactive_p50_s: crate::util::stats::percentile(&interactive_s, 0.5),
+        bulk_p50_s: crate::util::stats::percentile(&bulk_s, 0.5),
+        bulk_max_s: bulk_s.iter().cloned().fold(0.0, f64::max),
+        interactive_s,
+        bulk_s,
+        makespan_s: time::to_secs(end_i.max(end_b)),
+        granted_interactive: m.counter(keys::GOV_GRANTED_INTERACTIVE),
+        granted_bulk: m.counter(keys::GOV_GRANTED_BULK),
+        granted_scavenger: m.counter(keys::GOV_GRANTED_SCAVENGER),
+        throttled: m.counter(keys::GOV_THROTTLED),
+        governor_inflight: io.governor_inflight(&eng),
+        governor_queued: io.governor_queued(&eng),
+    };
+    (stats, io, eng)
+}
+
+/// The canonical svc_qos shape — shared by the figure table, the
+/// `BENCH_pr5.json` `qos` section, and the acceptance test, so they can
+/// never silently measure different experiments:
+/// (nodes, pes, file_size, n_interactive, n_bulk, clients, cap).
+pub const QOS_SHAPE: (u32, u32, u64, u32, u32, u32, u32) = (2, 4, 512 << 10, 3, 3, 4, 2);
+
+/// One classed-vs-classless pair at the canonical shape.
+pub fn qos_pair(seed: u64) -> (QosStats, QosStats) {
+    let (n, p, size, ni, nb, c, cap) = QOS_SHAPE;
+    let (classed, io_a, eng_a) = run_svc_qos(n, p, size, ni, nb, c, cap, true, seed);
+    let (classless, io_b, eng_b) = run_svc_qos(n, p, size, ni, nb, c, cap, false, seed);
+    assert_service_clean(&eng_a, &io_a);
+    assert_service_clean(&eng_b, &io_b);
+    (classed, classless)
+}
+
+/// The `svc_qos` experiment table: Interactive vs Bulk session makespan
+/// under a contended cap, classed vs classless.
+pub fn svc_qos(reps: u32) -> Table {
+    let (n, p, size, ni, nb, c, cap) = QOS_SHAPE;
+    let mut t = Table::new(
+        format!(
+            "svc_qos: {ni} Interactive + {nb} Bulk sessions over distinct {} files, one \
+             governed shard, cap {cap} ({n} nodes x {p} PEs, {c} clients/session; weighted \
+             governor vs classless FIFO baseline)",
+            crate::util::human_bytes(size),
+        ),
+        &[
+            "mode",
+            "int_p50_ms",
+            "bulk_p50_ms",
+            "bulk_max_ms",
+            "granted_int",
+            "granted_bulk",
+            "throttled",
+        ],
+    );
+    for classed in [true, false] {
+        let mut ip50 = 0.0;
+        let mut bp50 = 0.0;
+        let mut bmax = 0.0;
+        let mut gi = 0.0;
+        let mut gb = 0.0;
+        let mut th = 0.0;
+        for r in 0..reps.max(1) {
+            let (st, io, eng) = run_svc_qos(n, p, size, ni, nb, c, cap, classed, 9100 + r as u64);
+            assert_service_clean(&eng, &io);
+            ip50 += st.interactive_p50_s;
+            bp50 += st.bulk_p50_s;
+            bmax += st.bulk_max_s;
+            gi += st.granted_interactive as f64;
+            gb += st.granted_bulk as f64;
+            th += st.throttled as f64;
+        }
+        let nr = reps.max(1) as f64;
+        t.row(vec![
+            if classed { "classed" } else { "classless" }.into(),
+            format!("{:.3}", ip50 / nr * 1e3),
+            format!("{:.3}", bp50 / nr * 1e3),
+            format!("{:.3}", bmax / nr * 1e3),
+            format!("{:.0}", gi / nr),
+            format!("{:.0}", gb / nr),
+            format!("{:.0}", th / nr),
+        ]);
+    }
+    t
+}
+
+/// Machine-readable perf anchor for this PR (`BENCH_pr5.json`):
 ///
 /// * `concurrent` — the PR 1 svc_concurrent aggregate-GiB/s anchor
 ///   (continuity: same shape and seeds as `BENCH_pr1.json`),
@@ -1804,8 +2083,14 @@ pub fn svc_locality(reps: u32) -> Table {
 /// * `locality` (PR 4) — the svc_locality pair: K successive same-file
 ///   sessions under StoreAware vs SpreadNodes placement, with the
 ///   `ckio.place.*` counters showing cross-PE peer-fetch bytes
-///   collapsing toward zero when placement follows the store.
-pub fn bench_pr4_json(reps: u32) -> String {
+///   collapsing toward zero when placement follows the store,
+/// * `qos` (PR 5) — the svc_qos classed-vs-classless pair: Interactive
+///   and Bulk sessions contending on one governed shard under a tight
+///   cap, with the `ckio.governor.class_granted.*` counters, the
+///   Interactive p50 improvement over the classless baseline, and the
+///   no-starvation quiescence checks (`governor_inflight` /
+///   `governor_queued` both 0).
+pub fn bench_pr5_json(reps: u32) -> String {
     use crate::harness::bench::Json;
     let (nodes, pes) = (4u32, 8u32);
     let size = mib(256);
@@ -1824,7 +2109,9 @@ pub fn bench_pr4_json(reps: u32) -> String {
                 size,
                 k,
                 clients,
-                Options::with_readers(readers),
+                ServiceConfig::default(),
+                FileOptions::with_readers(readers),
+                SessionOptions::default(),
                 8100 + r as u64,
             );
             agg += st.aggregate_gibs;
@@ -1853,7 +2140,9 @@ pub fn bench_pr4_json(reps: u32) -> String {
                 size,
                 k,
                 clients,
-                Options::with_readers(readers),
+                ServiceConfig::default(),
+                FileOptions::with_readers(readers),
+                SessionOptions::default(),
                 8200 + r as u64,
             );
             pfs += st.pfs_bytes_read as f64;
@@ -1877,9 +2166,18 @@ pub fn bench_pr4_json(reps: u32) -> String {
     // Governed run: cap aggregate in-flight PFS reads at 4 across K = 4
     // sessions and record how much demand the governor deferred.
     let governed = {
-        let mut gopts = Options::with_readers(readers);
-        gopts.max_inflight_reads = Some(4);
-        let (st, _, eng) = run_svc_shared(nodes, pes, size, 4, clients, gopts, 8300);
+        let cfg = ServiceConfig { max_inflight_reads: Some(4), ..Default::default() };
+        let (st, _, eng) = run_svc_shared(
+            nodes,
+            pes,
+            size,
+            4,
+            clients,
+            cfg,
+            FileOptions::with_readers(readers),
+            SessionOptions::default(),
+            8300,
+        );
         Json::obj(vec![
             ("k", Json::num(4.0)),
             ("max_inflight_reads", Json::num(4.0)),
@@ -1896,11 +2194,23 @@ pub fn bench_pr4_json(reps: u32) -> String {
     // LRU eviction and exercise the byte accounting. Pinned to one shard
     // so the budget is not split (the PR 2 single-plane semantics).
     let evict = {
-        let mut eopts = Options::with_readers(readers);
-        eopts.reuse_buffers = true;
-        eopts.store_budget_bytes = Some(size);
-        eopts.data_plane_shards = Some(1);
-        let (st, _, eng) = run_svc_shared(nodes, pes, size, 4, clients, eopts, 8400);
+        let cfg = ServiceConfig {
+            store_budget_bytes: Some(size),
+            data_plane_shards: Some(1),
+            ..Default::default()
+        };
+        let sopts = SessionOptions { reuse_buffers: true, ..Default::default() };
+        let (st, _, eng) = run_svc_shared(
+            nodes,
+            pes,
+            size,
+            4,
+            clients,
+            cfg,
+            FileOptions::with_readers(readers),
+            sopts,
+            8400,
+        );
         Json::obj(vec![
             ("k", Json::num(4.0)),
             ("store_budget_bytes", Json::num(size as f64)),
@@ -1930,11 +2240,23 @@ pub fn bench_pr4_json(reps: u32) -> String {
     // from observed service times (AIMD) and the gauge records where it
     // settled.
     let feedback = {
-        let mut fopts = Options::with_readers(readers);
-        fopts.adaptive_admission = true;
-        fopts.splinter_bytes = Some(4 << 20);
-        fopts.data_plane_shards = Some(1);
-        let (st, _, eng) = run_svc_shared(nodes, pes, size, 4, clients, fopts, 8600);
+        let cfg = ServiceConfig {
+            adaptive_admission: true,
+            data_plane_shards: Some(1),
+            ..Default::default()
+        };
+        let sopts = SessionOptions { splinter_bytes: Some(4 << 20), ..Default::default() };
+        let (st, _, eng) = run_svc_shared(
+            nodes,
+            pes,
+            size,
+            4,
+            clients,
+            cfg,
+            FileOptions::with_readers(readers),
+            sopts,
+            8600,
+        );
         Json::obj(vec![
             ("k", Json::num(4.0)),
             ("ckio.governor.cap", Json::num(eng.core.metrics.value(keys::GOV_CAP))),
@@ -1985,9 +2307,52 @@ pub fn bench_pr4_json(reps: u32) -> String {
         ])
     };
 
+    // QoS pair (PR 5): the identical Interactive+Bulk contention
+    // workload with and without classes. Deterministic (noise-free
+    // PFS), so a single seeded pair suffices, like governed/evict.
+    let qos = {
+        let (qn, qp, qsize, ni, nb, qc, cap) = QOS_SHAPE;
+        let (classed, classless) = qos_pair(9000);
+        let side = |st: &QosStats| {
+            Json::obj(vec![
+                ("interactive_p50_s", Json::num(st.interactive_p50_s)),
+                ("bulk_p50_s", Json::num(st.bulk_p50_s)),
+                ("bulk_max_s", Json::num(st.bulk_max_s)),
+                ("makespan_s", Json::num(st.makespan_s)),
+                (
+                    "ckio.governor.class_granted.interactive",
+                    Json::num(st.granted_interactive as f64),
+                ),
+                ("ckio.governor.class_granted.bulk", Json::num(st.granted_bulk as f64)),
+                (
+                    "ckio.governor.class_granted.scavenger",
+                    Json::num(st.granted_scavenger as f64),
+                ),
+                ("ckio.governor.throttled", Json::num(st.throttled as f64)),
+                ("governor_inflight", Json::num(st.governor_inflight as f64)),
+                ("governor_queued", Json::num(st.governor_queued as f64)),
+            ])
+        };
+        Json::obj(vec![
+            ("nodes", Json::num(qn as f64)),
+            ("pes_per_node", Json::num(qp as f64)),
+            ("file_bytes", Json::num(qsize as f64)),
+            ("interactive_sessions", Json::num(ni as f64)),
+            ("bulk_sessions", Json::num(nb as f64)),
+            ("clients_per_session", Json::num(qc as f64)),
+            ("max_inflight_reads", Json::num(cap as f64)),
+            ("classed", side(&classed)),
+            ("classless", side(&classless)),
+            (
+                "interactive_p50_improvement",
+                Json::num(classless.interactive_p50_s / classed.interactive_p50_s.max(1e-12)),
+            ),
+        ])
+    };
+
     Json::obj(vec![
-        ("bench", Json::str("svc_locality+svc_churn+svc_shared+svc_concurrent")),
-        ("pr", Json::num(4.0)),
+        ("bench", Json::str("svc_qos+svc_locality+svc_churn+svc_shared+svc_concurrent")),
+        ("pr", Json::num(5.0)),
         ("nodes", Json::num(nodes as f64)),
         ("pes_per_node", Json::num(pes as f64)),
         ("file_bytes", Json::num(size as f64)),
@@ -2000,6 +2365,7 @@ pub fn bench_pr4_json(reps: u32) -> String {
         ("churn", Json::arr(churn)),
         ("feedback", feedback),
         ("locality", locality),
+        ("qos", qos),
     ])
     .render()
 }
@@ -2024,7 +2390,8 @@ pub fn ablation_autoreaders(reps: u32) -> Table {
                             PAPER_PES,
                             size,
                             512,
-                            Options::with_readers(readers),
+                            FileOptions::with_readers(readers),
+                            SessionOptions::default(),
                             5000 + r as u64,
                         )
                         .0,
@@ -2048,7 +2415,8 @@ pub fn ablation_autoreaders(reps: u32) -> Table {
                         PAPER_PES,
                         size,
                         512,
-                        Options::with_readers(auto),
+                        FileOptions::with_readers(auto),
+                        SessionOptions::default(),
                         6000 + r as u64,
                     )
                     .0,
@@ -2076,7 +2444,15 @@ mod tests {
     fn ckio_and_naive_drivers_read_everything() {
         let (tn, eng_n) = run_naive_read(2, 4, 16 << 20, 16, false, 1);
         assert_eq!(eng_n.core.metrics.counter("pfs.bytes_read"), 16 << 20);
-        let (tc, eng_c) = run_ckio_read(2, 4, 16 << 20, 16, Options::with_readers(8), 1);
+        let (tc, eng_c) = run_ckio_read(
+            2,
+            4,
+            16 << 20,
+            16,
+            FileOptions::with_readers(8),
+            SessionOptions::default(),
+            1,
+        );
         assert_eq!(eng_c.core.metrics.counter(keys::CKIO_BYTES), 16 << 20);
         assert!(tn > 0 && tc > 0);
     }
@@ -2117,9 +2493,29 @@ mod tests {
     fn svc_concurrent_scales_and_leaves_no_residue() {
         use crate::ckio::director::Director;
 
-        let opts = Options::with_readers(4);
-        let (s1, _, _) = run_svc_concurrent(2, 4, 32 << 20, 1, 4, opts.clone(), 9);
-        let (s8, io, eng) = run_svc_concurrent(2, 4, 32 << 20, 8, 4, opts, 9);
+        let fopts = FileOptions::with_readers(4);
+        let (s1, _, _) = run_svc_concurrent(
+            2,
+            4,
+            32 << 20,
+            1,
+            4,
+            ServiceConfig::default(),
+            fopts.clone(),
+            SessionOptions::default(),
+            9,
+        );
+        let (s8, io, eng) = run_svc_concurrent(
+            2,
+            4,
+            32 << 20,
+            8,
+            4,
+            ServiceConfig::default(),
+            fopts,
+            SessionOptions::default(),
+            9,
+        );
         assert_eq!(s8.per_session_s.len(), 8);
         assert!(s8.read_p99_s > 0.0);
         assert!(
@@ -2144,9 +2540,29 @@ mod tests {
     #[test]
     fn svc_shared_dedups_same_file_prefetch() {
         let size = 32 << 20;
-        let opts = Options::with_readers(4);
-        let (s1, _, _) = run_svc_shared(2, 4, size, 1, 4, opts.clone(), 11);
-        let (s4, io, eng) = run_svc_shared(2, 4, size, 4, 4, opts, 11);
+        let fopts = FileOptions::with_readers(4);
+        let (s1, _, _) = run_svc_shared(
+            2,
+            4,
+            size,
+            1,
+            4,
+            ServiceConfig::default(),
+            fopts.clone(),
+            SessionOptions::default(),
+            11,
+        );
+        let (s4, io, eng) = run_svc_shared(
+            2,
+            4,
+            size,
+            4,
+            4,
+            ServiceConfig::default(),
+            fopts,
+            SessionOptions::default(),
+            11,
+        );
         assert!(s1.pfs_bytes_read >= size, "single session must read the file");
         assert!(
             s4.pfs_bytes_read as f64 <= 1.25 * s1.pfs_bytes_read as f64,
@@ -2168,10 +2584,14 @@ mod tests {
 
     #[test]
     fn svc_shared_governed_run_caps_pfs_concurrency() {
-        let mut opts = Options::with_readers(4);
-        opts.max_inflight_reads = Some(2);
-        opts.splinter_bytes = Some(1 << 20);
-        let (st, io, eng) = run_svc_shared(2, 4, 16 << 20, 2, 4, opts, 13);
+        let cfg = ServiceConfig {
+            max_inflight_reads: Some(2),
+            data_plane_shards: Some(1),
+            ..Default::default()
+        };
+        let sopts = SessionOptions { splinter_bytes: Some(1 << 20), ..Default::default() };
+        let (st, io, eng) =
+            run_svc_shared(2, 4, 16 << 20, 2, 4, cfg, FileOptions::with_readers(4), sopts, 13);
         assert!(st.governor_throttled > 0, "a 2-read cap must defer some demand");
         assert!(
             eng.core.metrics.value(keys::PFS_MAX_CONCURRENT) <= 2.0,
@@ -2182,16 +2602,18 @@ mod tests {
     }
 
     #[test]
-    fn bench_pr4_json_is_wellformed() {
-        let j = bench_pr4_json(1);
+    fn bench_pr5_json_is_wellformed() {
+        let j = bench_pr5_json(1);
         assert!(j.starts_with('{') && j.ends_with('}'));
-        assert!(j.contains("\"bench\":\"svc_locality+svc_churn+svc_shared+svc_concurrent\""));
+        assert!(
+            j.contains("\"bench\":\"svc_qos+svc_locality+svc_churn+svc_shared+svc_concurrent\"")
+        );
         assert!(j.contains("\"aggregate_gibs\""));
         // K = 1, 4, 8 all reported in the concurrent anchor.
         assert!(j.contains("\"k\":1") && j.contains("\"k\":4") && j.contains("\"k\":8"));
-        // The store / governor / shard / placement observability keys the
-        // CI smoke greps for (PR 2 set + PR 3 churn/feedback + the PR 4
-        // locality additions).
+        // The store / governor / shard / placement / qos observability
+        // keys the CI smoke greps for (PR 2 set + PR 3 churn/feedback +
+        // PR 4 locality + the PR 5 qos additions).
         for key in [
             "ckio.store.hit_bytes",
             "ckio.store.miss_bytes",
@@ -2211,9 +2633,95 @@ mod tests {
             "ckio.place.cross_pe_fetch",
             "ckio.place.degraded",
             "cross_pe_reduction",
+            "\"qos\"",
+            "ckio.governor.class_granted.interactive",
+            "ckio.governor.class_granted.bulk",
+            "ckio.governor.class_granted.scavenger",
+            "interactive_p50_improvement",
+            "governor_inflight",
+            "governor_queued",
         ] {
-            assert!(j.contains(key), "missing {key} in BENCH_pr4 json");
+            assert!(j.contains(key), "missing {key} in BENCH_pr5 json");
         }
+    }
+
+    /// PR 5 acceptance: under a shared shard cap, the Interactive-class
+    /// p50 session makespan beats the classless baseline while Bulk is
+    /// not starved — every session completes and the governor holds no
+    /// tickets or queued demand at quiescence. Deterministic
+    /// (noise-free PFS, same seed and arrival interleaving both sides).
+    #[test]
+    fn svc_qos_interactive_beats_classless_without_starving_bulk() {
+        let (classed, classless) = qos_pair(77);
+        // The contended resource was really the governor queue.
+        assert!(classed.throttled > 0 && classless.throttled > 0);
+        // Grants split by weight only when classes are on.
+        assert!(classed.granted_interactive > 0 && classed.granted_bulk > 0);
+        assert_eq!(classless.granted_interactive, 0, "classless runs are all Bulk");
+        assert_eq!(classed.granted_scavenger, 0);
+        // The QoS claim: Interactive p50 strictly improves…
+        assert!(
+            classed.interactive_p50_s < classless.interactive_p50_s,
+            "classed interactive p50 {:.6}s must beat classless {:.6}s",
+            classed.interactive_p50_s,
+            classless.interactive_p50_s
+        );
+        // …and Bulk is not starved: every Bulk session finished, and
+        // nothing is parked in the governor at quiescence.
+        assert_eq!(classed.bulk_s.len(), QOS_SHAPE.4 as usize);
+        assert!(classed.bulk_max_s.is_finite() && classed.bulk_max_s > 0.0);
+        assert_eq!(classed.governor_inflight, 0, "tickets leaked at quiescence");
+        assert_eq!(classed.governor_queued, 0, "demand stranded at quiescence");
+        assert_eq!(classless.governor_inflight, 0);
+        assert_eq!(classless.governor_queued, 0);
+    }
+
+    /// PR 5 satellite (default-compatibility): `SessionOptions::default()`
+    /// reproduces the explicit pre-redesign parameters byte-for-byte on
+    /// the svc_concurrent workload — identical makespan, latency, and
+    /// delivered bytes for the same seed.
+    #[test]
+    fn session_options_default_is_byte_for_byte_pre_redesign() {
+        let explicit = SessionOptions {
+            class: QosClass::Bulk,
+            splinter_bytes: None,
+            read_window: 2,
+            reuse_buffers: false,
+            placement_override: None,
+        };
+        let (sd, _, eng_d) = run_svc_concurrent(
+            2,
+            4,
+            16 << 20,
+            4,
+            4,
+            ServiceConfig::default(),
+            FileOptions::with_readers(4),
+            SessionOptions::default(),
+            23,
+        );
+        let (se, _, eng_e) = run_svc_concurrent(
+            2,
+            4,
+            16 << 20,
+            4,
+            4,
+            ServiceConfig::default(),
+            FileOptions::with_readers(4),
+            explicit,
+            23,
+        );
+        assert_eq!(sd.makespan_s, se.makespan_s, "default must not change timing");
+        assert_eq!(sd.per_session_s, se.per_session_s);
+        assert_eq!(sd.read_p99_s, se.read_p99_s);
+        assert_eq!(
+            eng_d.core.metrics.counter(keys::CKIO_BYTES),
+            eng_e.core.metrics.counter(keys::CKIO_BYTES)
+        );
+        assert_eq!(
+            eng_d.core.metrics.counter(keys::PFS_BYTES),
+            eng_e.core.metrics.counter(keys::PFS_BYTES)
+        );
     }
 
     /// PR 4 acceptance: under StoreAware placement the K successive
@@ -2297,11 +2805,14 @@ mod tests {
     /// actually moves it, and admission still caps the PFS.
     #[test]
     fn adaptive_governor_derives_and_adapts_a_cap() {
-        let mut opts = Options::with_readers(4);
-        opts.adaptive_admission = true;
-        opts.splinter_bytes = Some(512 << 10);
-        opts.data_plane_shards = Some(1);
-        let (st, io, eng) = run_svc_shared(2, 4, 16 << 20, 2, 4, opts, 17);
+        let cfg = ServiceConfig {
+            adaptive_admission: true,
+            data_plane_shards: Some(1),
+            ..Default::default()
+        };
+        let sopts = SessionOptions { splinter_bytes: Some(512 << 10), ..Default::default() };
+        let (st, io, eng) =
+            run_svc_shared(2, 4, 16 << 20, 2, 4, cfg, FileOptions::with_readers(4), sopts, 17);
         // The loop ran: at least one cap change beyond the initial value.
         assert!(
             eng.core.metrics.counter(keys::GOV_ADAPTATIONS) > 0,

@@ -2,17 +2,17 @@
 //! cluster/PFS configuration, or exercise the runtime end-to-end.
 //!
 //! ```text
-//! ckio fig <1|2|4|7|8|9|12|13|sec5|splinter|autoreaders|svc_concurrent|svc_shared|svc_churn|svc_locality|all>
+//! ckio fig <1|2|4|7|8|9|12|13|sec5|splinter|autoreaders|svc_concurrent|svc_shared|svc_churn|svc_locality|svc_qos|all>
 //!      [--reps N] [--out bench_out] [--tp 65536]
 //! ckio read   --file-size 4GiB --clients 512 [--scheme naive|ckio] [--readers N]
 //! ckio changa --nodes 4 --tp 4096 --scheme ckio [--nbodies 2097152]
-//! ckio bench-json [--out BENCH_pr4.json] [--reps 3]   # svc perf + store/governor/shard/placement anchor
+//! ckio bench-json [--out BENCH_pr5.json] [--reps 3]   # svc perf + store/governor/shard/placement/qos anchor
 //! ckio artifacts [--dir artifacts]           # list + smoke-run lowered artifacts
 //! ```
 
 use ckio::amt::time;
 use ckio::apps::changa::driver::{run_changa_input, Scheme};
-use ckio::ckio::Options;
+use ckio::ckio::{FileOptions, SessionOptions};
 use ckio::harness::bench::Table;
 use ckio::harness::experiments as exp;
 use ckio::util::cli::Args;
@@ -30,7 +30,7 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: ckio fig <id|all> [--reps N] [--out DIR] | read | changa | artifacts | \
-                 bench-json [--out BENCH_pr4.json]\n\
+                 bench-json [--out BENCH_pr5.json]\n\
                  see `rust/src/main.rs` header for full flags"
             );
         }
@@ -55,6 +55,7 @@ pub fn run_figure(id: &str, reps: u32, n_tp: u32) -> Option<(String, Table)> {
         "svc_shared" => exp::svc_shared(reps),
         "svc_churn" => exp::svc_churn(reps),
         "svc_locality" => exp::svc_locality(reps),
+        "svc_qos" => exp::svc_qos(reps),
         _ => return None,
     };
     let slug = match id {
@@ -65,6 +66,7 @@ pub fn run_figure(id: &str, reps: u32, n_tp: u32) -> Option<(String, Table)> {
         "svc_shared" => "svc_shared".to_string(),
         "svc_churn" => "svc_churn".to_string(),
         "svc_locality" => "svc_locality".to_string(),
+        "svc_qos" => "svc_qos".to_string(),
         n => format!("fig{n}"),
     };
     Some((slug, t))
@@ -78,7 +80,7 @@ fn cmd_fig(args: &Args) {
     let ids: Vec<&str> = if id == "all" {
         vec![
             "1", "2", "4", "7", "8", "9", "12", "13", "sec5", "splinter", "autoreaders",
-            "svc_concurrent", "svc_shared", "svc_churn", "svc_locality",
+            "svc_concurrent", "svc_shared", "svc_churn", "svc_locality", "svc_qos",
         ]
     } else {
         vec![id]
@@ -109,11 +111,11 @@ fn cmd_read(args: &Args) {
     let (t, eng) = match scheme.as_str() {
         "naive" => exp::run_naive_read(nodes, pes, size, clients, args.flag("block-pe"), seed),
         "ckio" => {
-            let opts = match args.get("readers") {
-                Some(r) => Options::with_readers(r.parse().expect("--readers")),
-                None => Options::default(),
+            let fopts = match args.get("readers") {
+                Some(r) => FileOptions::with_readers(r.parse().expect("--readers")),
+                None => FileOptions::default(),
             };
-            exp::run_ckio_read(nodes, pes, size, clients, opts, seed)
+            exp::run_ckio_read(nodes, pes, size, clients, fopts, SessionOptions::default(), seed)
         }
         other => {
             eprintln!("unknown scheme {other:?} (naive|ckio)");
@@ -168,13 +170,28 @@ fn cmd_perf(args: &Args) {
     let clients = args.get_or("clients", 8192u32);
     let readers = args.get_or("readers", 512u32);
     // Warmup.
-    exp::run_ckio_read(16, 32, size, clients, Options::with_readers(readers), 1);
+    exp::run_ckio_read(
+        16,
+        32,
+        size,
+        clients,
+        FileOptions::with_readers(readers),
+        SessionOptions::default(),
+        1,
+    );
     let mut total_tasks = 0u64;
     let mut total_msgs = 0u64;
     let t0 = std::time::Instant::now();
     for i in 0..iters {
-        let (_, eng) =
-            exp::run_ckio_read(16, 32, size, clients, Options::with_readers(readers), i as u64);
+        let (_, eng) = exp::run_ckio_read(
+            16,
+            32,
+            size,
+            clients,
+            FileOptions::with_readers(readers),
+            SessionOptions::default(),
+            i as u64,
+        );
         total_tasks += eng.core.metrics.counter("amt.tasks");
         total_msgs += eng.core.metrics.counter("amt.msgs_sent");
     }
@@ -196,12 +213,13 @@ fn cmd_perf(args: &Args) {
 /// Emit the PR's machine-readable perf anchor: svc_concurrent
 /// aggregate GiB/s, svc_shared PFS-dedup ratios, the svc_churn shard
 /// sweep, the adaptive-governor feedback run, the svc_locality
-/// placement pair, and the span-store / admission-governor / shard /
-/// placement observability keys, as JSON.
+/// placement pair, the svc_qos classed-vs-classless pair, and the
+/// span-store / admission-governor / shard / placement / qos
+/// observability keys, as JSON.
 fn cmd_bench_json(args: &Args) {
-    let out = args.get("out").unwrap_or("BENCH_pr4.json").to_string();
+    let out = args.get("out").unwrap_or("BENCH_pr5.json").to_string();
     let reps = args.get_or("reps", 3u32);
-    let json = exp::bench_pr4_json(reps);
+    let json = exp::bench_pr5_json(reps);
     std::fs::write(&out, &json).unwrap_or_else(|e| panic!("writing {out}: {e}"));
     println!("[json] {out}");
     println!("{json}");

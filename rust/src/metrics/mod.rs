@@ -155,19 +155,27 @@ pub mod keys {
     /// Admission governor: PFS reads deferred because the per-shard
     /// in-flight cap was reached.
     pub const GOV_THROTTLED: &str = "ckio.governor.throttled";
-    /// Admission governor: the in-flight cap (gauge; maintained as
-    /// add-deltas by each governed shard, so the value is the *sum* of
-    /// per-shard **configured** caps — the admission ceiling across
-    /// every shard a governed file has ever configured, and exactly the
-    /// cap itself when one shard is governed. Governor configuration is
-    /// sticky across file closes, as PR 2's was, so the gauge reflects
-    /// configured capacity, not currently-admitting files. Static caps
-    /// publish once; adaptive caps move as the AIMD loop reacts to
-    /// observed service times).
+    /// Admission governor: the in-flight cap (gauge; the *sum* of
+    /// per-shard caps over the active shards — the service-wide
+    /// admission ceiling, and exactly the cap itself when one shard is
+    /// active. Since PR 5 configuration happens once at boot
+    /// (`ServiceConfig`), which publishes the initial sum; after that
+    /// only the AIMD feedback loop can move a shard's cap, as
+    /// add-deltas).
     pub const GOV_CAP: &str = "ckio.governor.cap";
     /// Admission governor: cap changes made by the adaptive (AIMD)
     /// feedback loop.
     pub const GOV_ADAPTATIONS: &str = "ckio.governor.adaptations";
+    /// Admission governor (PR 5): tickets admitted under the
+    /// Interactive QoS class (immediate grants and weighted dequeues
+    /// alike; with `GOV_GRANTED_BULK`/`GOV_GRANTED_SCAVENGER` this is
+    /// the observable the weighted-fair dequeue ratios show up on).
+    pub const GOV_GRANTED_INTERACTIVE: &str = "ckio.governor.class_granted.interactive";
+    /// Admission governor (PR 5): tickets admitted under the Bulk class.
+    pub const GOV_GRANTED_BULK: &str = "ckio.governor.class_granted.bulk";
+    /// Admission governor (PR 5): tickets admitted under the Scavenger
+    /// class.
+    pub const GOV_GRANTED_SCAVENGER: &str = "ckio.governor.class_granted.scavenger";
     /// Store-aware placement (PR 4): buffer chares whose PE was chosen
     /// by a shard's `PlacementPlan` (dominant peer source) rather than
     /// the fallback policy.

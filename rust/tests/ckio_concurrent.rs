@@ -16,7 +16,7 @@ use ckio::amt::engine::{Ctx, Engine, EngineConfig};
 use ckio::amt::msg::{Ep, Msg, Payload};
 use ckio::amt::topology::{Pe, Placement};
 use ckio::ckio::director::Director;
-use ckio::ckio::{CkIo, Options, ReadResult, Session};
+use ckio::ckio::{CkIo, FileOptions, ReadResult, ServiceConfig, Session, SessionOptions};
 use ckio::harness::experiments::assert_service_clean;
 use ckio::impl_chare_any;
 use ckio::pfs::{pattern, FileId, PfsConfig};
@@ -67,14 +67,21 @@ impl Chare for RacyCloser {
                     ctx,
                     file,
                     size,
-                    Options::with_readers(4),
+                    FileOptions::with_readers(4),
                     Callback::to_chare(me, EP_OPENED),
                 );
             }
             EP_OPENED => {
                 let me = ctx.me();
                 let (io, file, size) = (self.io, self.file, self.size);
-                io.start_read_session(ctx, file, 0, size, Callback::to_chare(me, EP_READY));
+                io.start_read_session(
+                    ctx,
+                    file,
+                    0,
+                    size,
+                    SessionOptions::default(),
+                    Callback::to_chare(me, EP_READY),
+                );
             }
             EP_READY => {
                 let s: Session = msg.take();
@@ -147,7 +154,8 @@ struct VerifyClient {
     size: u64,
     n_peers: u32,
     peers: CollectionId,
-    opts: Options,
+    fopts: FileOptions,
+    sopts: SessionOptions,
     my_offset: u64,
     my_len: u64,
     session: Option<Session>,
@@ -163,13 +171,22 @@ impl Chare for VerifyClient {
         match msg.ep {
             EP_GO => {
                 let me = ctx.me();
-                let (io, file, size, opts) = (self.io, self.file, self.size, self.opts.clone());
-                io.open(ctx, file, size, opts, Callback::to_chare(me, EP_OPENED));
+                let (io, file, size, fopts) =
+                    (self.io, self.file, self.size, self.fopts.clone());
+                io.open(ctx, file, size, fopts, Callback::to_chare(me, EP_OPENED));
             }
             EP_OPENED => {
                 let me = ctx.me();
-                let (io, file, size) = (self.io, self.file, self.size);
-                io.start_read_session(ctx, file, 0, size, Callback::to_chare(me, EP_READY));
+                let (io, file, size, sopts) =
+                    (self.io, self.file, self.size, self.sopts.clone());
+                io.start_read_session(
+                    ctx,
+                    file,
+                    0,
+                    size,
+                    sopts,
+                    Callback::to_chare(me, EP_READY),
+                );
             }
             EP_READY | EP_SESSION_FWD => {
                 let s: Session = msg.take();
@@ -233,7 +250,8 @@ fn spawn_verified_session(
     file: FileId,
     size: u64,
     nclients: u32,
-    opts: Options,
+    fopts: FileOptions,
+    sopts: SessionOptions,
     close_file: bool,
     done: Callback,
 ) -> ChareRef {
@@ -247,7 +265,8 @@ fn spawn_verified_session(
             size,
             n_peers: nclients,
             peers: CollectionId(u32::MAX),
-            opts: opts.clone(),
+            fopts: fopts.clone(),
+            sopts: sopts.clone(),
             my_offset: lo,
             my_len: hi - lo,
             session: None,
@@ -277,11 +296,8 @@ fn concurrent_verified_sessions_with_boundary_crossing_splinters() {
     let file_a = eng.core.sim_pfs_mut().create_file(size);
     let file_b = eng.core.sim_pfs_mut().create_file(size);
     let io = CkIo::boot(&mut eng);
-    let opts = Options {
-        num_readers: Some(4),
-        splinter_bytes: Some(64 << 10),
-        ..Default::default()
-    };
+    let fopts = FileOptions::with_readers(4);
+    let sopts = SessionOptions { splinter_bytes: Some(64 << 10), ..Default::default() };
     let fut = eng.future(3 * 3); // 3 sessions x 3 clients
     let leaders = [
         spawn_verified_session(
@@ -290,7 +306,8 @@ fn concurrent_verified_sessions_with_boundary_crossing_splinters() {
             file_a,
             size,
             3,
-            opts.clone(),
+            fopts.clone(),
+            sopts.clone(),
             true,
             Callback::Future(fut),
         ),
@@ -300,11 +317,22 @@ fn concurrent_verified_sessions_with_boundary_crossing_splinters() {
             file_b,
             size,
             3,
-            opts.clone(),
+            fopts.clone(),
+            sopts.clone(),
             true,
             Callback::Future(fut),
         ),
-        spawn_verified_session(&mut eng, io, file_a, size, 3, opts, true, Callback::Future(fut)),
+        spawn_verified_session(
+            &mut eng,
+            io,
+            file_a,
+            size,
+            3,
+            fopts,
+            sopts,
+            true,
+            Callback::Future(fut),
+        ),
     ];
     for l in leaders {
         eng.inject_signal(l, EP_GO);
@@ -337,11 +365,12 @@ fn repeated_session_with_reuse_reads_the_file_once() {
     let size: u64 = 2 << 20;
     let file = eng.core.sim_pfs_mut().create_file(size);
     let io = CkIo::boot(&mut eng);
-    let opts = Options { num_readers: Some(4), reuse_buffers: true, ..Default::default() };
+    let fopts = FileOptions::with_readers(4);
+    let sopts = SessionOptions { reuse_buffers: true, ..Default::default() };
 
     // The driver holds the file open across both sessions (a refcount of
     // its own), so the parked array survives the gap between them.
-    io.open_driver(&mut eng, file, size, opts.clone(), Callback::Ignore);
+    io.open_driver(&mut eng, file, size, fopts.clone(), Callback::Ignore);
 
     // Session 1 (does not drop the file ref).
     let fut1 = eng.future(2);
@@ -351,7 +380,8 @@ fn repeated_session_with_reuse_reads_the_file_once() {
         file,
         size,
         2,
-        opts.clone(),
+        fopts.clone(),
+        sopts.clone(),
         false,
         Callback::Future(fut1),
     );
@@ -364,8 +394,17 @@ fn repeated_session_with_reuse_reads_the_file_once() {
 
     // Session 2, identical shape: the parked array is rebound.
     let fut2 = eng.future(2);
-    let l2 =
-        spawn_verified_session(&mut eng, io, file, size, 2, opts, false, Callback::Future(fut2));
+    let l2 = spawn_verified_session(
+        &mut eng,
+        io,
+        file,
+        size,
+        2,
+        fopts,
+        sopts,
+        false,
+        Callback::Future(fut2),
+    );
     eng.inject_signal(l2, EP_GO);
     eng.run();
     assert!(eng.future_done(fut2));
@@ -414,14 +453,16 @@ fn governor_cap_one_sequences_two_sessions_and_loses_no_callback() {
     let size: u64 = 2 << 20;
     let file_a = eng.core.sim_pfs_mut().create_file(size);
     let file_b = eng.core.sim_pfs_mut().create_file(size);
-    let io = CkIo::boot(&mut eng);
-    let opts = Options {
-        num_readers: Some(2),
-        splinter_bytes: Some(256 << 10),
+    // The cap and the single-shard pin are service scope (PR 5): set
+    // once at boot, not smuggled through a file's open.
+    let cfg = ServiceConfig {
         max_inflight_reads: Some(1),
         data_plane_shards: Some(1),
         ..Default::default()
     };
+    let io = CkIo::boot_with(&mut eng, cfg).expect("valid config");
+    let fopts = FileOptions::with_readers(2);
+    let sopts = SessionOptions { splinter_bytes: Some(256 << 10), ..Default::default() };
     let fut = eng.future(2 * 2); // 2 sessions x 2 clients
     let leaders = [
         spawn_verified_session(
@@ -430,11 +471,22 @@ fn governor_cap_one_sequences_two_sessions_and_loses_no_callback() {
             file_a,
             size,
             2,
-            opts.clone(),
+            fopts.clone(),
+            sopts.clone(),
             true,
             Callback::Future(fut),
         ),
-        spawn_verified_session(&mut eng, io, file_b, size, 2, opts, true, Callback::Future(fut)),
+        spawn_verified_session(
+            &mut eng,
+            io,
+            file_b,
+            size,
+            2,
+            fopts,
+            sopts,
+            true,
+            Callback::Future(fut),
+        ),
     ];
     for l in leaders {
         eng.inject_signal(l, EP_GO);
@@ -474,8 +526,8 @@ fn concurrent_same_file_sessions_read_the_file_once() {
     let size: u64 = 3 << 20;
     let file = eng.core.sim_pfs_mut().create_file(size);
     let io = CkIo::boot(&mut eng);
-    let opts =
-        Options { num_readers: Some(4), splinter_bytes: Some(128 << 10), ..Default::default() };
+    let fopts = FileOptions::with_readers(4);
+    let sopts = SessionOptions { splinter_bytes: Some(128 << 10), ..Default::default() };
     let fut = eng.future(2 * 3); // 2 sessions x 3 clients
     let leaders = [
         spawn_verified_session(
@@ -484,11 +536,22 @@ fn concurrent_same_file_sessions_read_the_file_once() {
             file,
             size,
             3,
-            opts.clone(),
+            fopts.clone(),
+            sopts.clone(),
             true,
             Callback::Future(fut),
         ),
-        spawn_verified_session(&mut eng, io, file, size, 3, opts, true, Callback::Future(fut)),
+        spawn_verified_session(
+            &mut eng,
+            io,
+            file,
+            size,
+            3,
+            fopts,
+            sopts,
+            true,
+            Callback::Future(fut),
+        ),
     ];
     for l in leaders {
         eng.inject_signal(l, EP_GO);
@@ -535,7 +598,8 @@ fn concurrent_same_file_opens_share_one_open_and_refcount_closes() {
         file,
         size,
         1,
-        Options::with_readers(2),
+        FileOptions::with_readers(2),
+        SessionOptions::default(),
         true,
         Callback::Future(fut),
     );
@@ -545,7 +609,8 @@ fn concurrent_same_file_opens_share_one_open_and_refcount_closes() {
         file,
         size,
         1,
-        Options::with_readers(2),
+        FileOptions::with_readers(2),
+        SessionOptions::default(),
         true,
         Callback::Future(fut),
     );

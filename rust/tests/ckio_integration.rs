@@ -8,7 +8,7 @@ use ckio::amt::engine::{Ctx, Engine, EngineConfig};
 use ckio::amt::msg::{Ep, Msg, Payload};
 use ckio::amt::time::{Time, MILLIS};
 use ckio::amt::topology::{Pe, Placement};
-use ckio::ckio::{CkIo, Options, ReadResult, Session};
+use ckio::ckio::{CkIo, FileOptions, ReadResult, Session, SessionOptions};
 use ckio::impl_chare_any;
 use ckio::pfs::{pattern, FileId, PfsConfig};
 
@@ -65,7 +65,7 @@ impl Chare for Client {
                         ctx,
                         self.file,
                         self.file_size,
-                        Options::with_readers(4),
+                        FileOptions::with_readers(4),
                         Callback::to_chare(me, EP_OPENED),
                     );
                 }
@@ -78,6 +78,7 @@ impl Chare for Client {
                         self.file,
                         0,
                         self.file_size,
+                        SessionOptions::default(),
                         Callback::to_chare(me, EP_READY),
                     );
             }
@@ -266,11 +267,7 @@ fn splintered_session_serves_early() {
                             ctx,
                             self.file,
                             self.size,
-                            Options {
-                                num_readers: Some(1),
-                                splinter_bytes: self.splinter,
-                                ..Default::default()
-                            },
+                            FileOptions::with_readers(1),
                             Callback::to_chare(me, EP_OPENED),
                         );
                     }
@@ -281,6 +278,7 @@ fn splintered_session_serves_early() {
                             self.file,
                             0,
                             self.size,
+                            SessionOptions { splinter_bytes: self.splinter, ..Default::default() },
                             Callback::to_chare(me, EP_READY),
                         );
                     }
@@ -339,7 +337,7 @@ fn session_close_releases_and_acks() {
                             ctx,
                             self.file,
                             self.size,
-                            Options::with_readers(2),
+                            FileOptions::with_readers(2),
                             Callback::to_chare(me, EP_OPENED),
                         );
                 }
@@ -351,6 +349,7 @@ fn session_close_releases_and_acks() {
                             self.file,
                             0,
                             self.size,
+                            SessionOptions::default(),
                             Callback::to_chare(me, EP_READY),
                         );
                 }
@@ -438,12 +437,19 @@ fn buffer_read_starts_before_clients_ask() {
                             ctx,
                             self.file,
                             self.size,
-                            Options::with_readers(4),
+                            FileOptions::with_readers(4),
                             Callback::to_chare(me, EP_OPENED),
                         );
                 }
                 EP_OPENED => {
-                    self.io.start_read_session(ctx, self.file, 0, self.size, Callback::Ignore);
+                    self.io.start_read_session(
+                        ctx,
+                        self.file,
+                        0,
+                        self.size,
+                        SessionOptions::default(),
+                        Callback::Ignore,
+                    );
                 }
                 other => panic!("unknown ep {other}"),
             }

@@ -22,8 +22,9 @@ use ckio::amt::chare::ChareRef;
 use ckio::amt::engine::{Engine, EngineConfig};
 use ckio::amt::topology::Placement;
 use ckio::ckio::director::Director;
-use ckio::ckio::manager::{ReadMsg, EP_M_READ};
-use ckio::ckio::{CkIo, OpenError, Options, ReadResult, ReaderPlacement, Session, SessionId};
+use ckio::ckio::{
+    CkIo, FileOptions, OpenError, ReadResult, ReaderPlacement, Session, SessionId, SessionOptions,
+};
 use ckio::harness::experiments::assert_service_clean;
 use ckio::metrics::keys;
 use ckio::pfs::{pattern, FileId, PfsConfig};
@@ -42,31 +43,44 @@ fn verified_engine(file_size: u64) -> (Engine, FileId, CkIo) {
     (eng, file, io)
 }
 
-fn store_aware_opts() -> Options {
-    Options {
+fn store_aware_fopts() -> FileOptions {
+    FileOptions {
         num_readers: Some(8),
-        splinter_bytes: Some(16 * KIB),
         placement: ReaderPlacement::StoreAware {
             fallback: Box::new(ReaderPlacement::SpreadNodes),
         },
-        ..Default::default()
     }
 }
 
-fn open_file(eng: &mut Engine, io: &CkIo, file: FileId, size: u64, opts: Options) {
+fn splintered_sopts() -> SessionOptions {
+    SessionOptions { splinter_bytes: Some(16 * KIB), ..Default::default() }
+}
+
+fn open_file(eng: &mut Engine, io: &CkIo, file: FileId, size: u64, opts: FileOptions) {
     let fut = eng.future(1);
     io.open_driver(eng, file, size, opts, Callback::Future(fut));
     eng.run();
     assert!(eng.future_done(fut), "open never completed");
 }
 
-fn start_session(eng: &mut Engine, io: &CkIo, file: FileId, offset: u64, bytes: u64) -> Session {
+fn start_session_with(
+    eng: &mut Engine,
+    io: &CkIo,
+    file: FileId,
+    offset: u64,
+    bytes: u64,
+    sopts: SessionOptions,
+) -> Session {
     let fut = eng.future(1);
-    io.start_session_driver(eng, file, offset, bytes, Callback::Future(fut));
+    io.start_session_driver(eng, file, offset, bytes, sopts, Callback::Future(fut));
     eng.run();
     assert!(eng.future_done(fut), "session never became ready");
     let (_, mut p) = eng.take_future(fut).pop().unwrap();
     p.take::<Session>()
+}
+
+fn start_session(eng: &mut Engine, io: &CkIo, file: FileId, offset: u64, bytes: u64) -> Session {
+    start_session_with(eng, io, file, offset, bytes, splintered_sopts())
 }
 
 fn close_session(eng: &mut Engine, io: &CkIo, sid: SessionId) {
@@ -85,11 +99,7 @@ fn close_file(eng: &mut Engine, io: &CkIo, file: FileId) {
 
 fn read_verified(eng: &mut Engine, io: &CkIo, s: &Session, file: FileId, offset: u64, len: u64) {
     let fut = eng.future(1);
-    eng.inject(
-        ChareRef::new(io.managers, 0),
-        EP_M_READ,
-        ReadMsg { session: s.id, offset, len, after: Callback::Future(fut) },
-    );
+    io.read_driver(eng, 0, s, offset, len, Callback::Future(fut));
     eng.run();
     assert!(eng.future_done(fut), "read callback never fired");
     let (_, mut p) = eng.take_future(fut).pop().unwrap();
@@ -112,7 +122,7 @@ fn read_verified(eng: &mut Engine, io: &CkIo, s: &Session, file: FileId, offset:
 fn store_aware_places_buffers_on_peer_source_pes() {
     let size = MIB;
     let (mut eng, file, io) = verified_engine(size);
-    open_file(&mut eng, &io, file, size, store_aware_opts());
+    open_file(&mut eng, &io, file, size, store_aware_fopts());
 
     // Session A: the whole file, 8 buffers of 128 KiB.
     let sa = start_session(&mut eng, &io, file, 0, size);
@@ -161,7 +171,7 @@ fn store_aware_places_buffers_on_peer_source_pes() {
 fn plan_racing_a_session_close_degrades_to_fallback() {
     let size = MIB;
     let (mut eng, file, io) = verified_engine(size);
-    open_file(&mut eng, &io, file, size, store_aware_opts());
+    open_file(&mut eng, &io, file, size, store_aware_fopts());
 
     let sa = start_session(&mut eng, &io, file, 0, size);
 
@@ -169,7 +179,14 @@ fn plan_racing_a_session_close_degrades_to_fallback() {
     let close_fut = eng.future(1);
     io.close_session_driver(&mut eng, sa.id, Callback::Future(close_fut));
     let ready_fut = eng.future(1);
-    io.start_session_driver(&mut eng, file, 0, size, Callback::Future(ready_fut));
+    io.start_session_driver(
+        &mut eng,
+        file,
+        0,
+        size,
+        splintered_sopts(),
+        Callback::Future(ready_fut),
+    );
     eng.run();
     assert!(eng.future_done(close_fut), "A's close must complete");
     assert!(eng.future_done(ready_fut), "B must become ready despite the race");
@@ -212,7 +229,7 @@ fn plan_racing_a_session_close_degrades_to_fallback() {
 fn reopen_does_not_reuse_a_stale_plan() {
     let size = MIB;
     let (mut eng, file, io) = verified_engine(size);
-    open_file(&mut eng, &io, file, size, store_aware_opts());
+    open_file(&mut eng, &io, file, size, store_aware_fopts());
 
     // First generation: warm the store, then tear everything down.
     let sa = start_session(&mut eng, &io, file, 0, size);
@@ -224,7 +241,7 @@ fn reopen_does_not_reuse_a_stale_plan() {
     close_file(&mut eng, &io, file);
 
     // Second generation: same file id, same shapes, empty store.
-    open_file(&mut eng, &io, file, size, store_aware_opts());
+    open_file(&mut eng, &io, file, size, store_aware_fopts());
     let sc = start_session(&mut eng, &io, file, size / 16, size / 2);
     assert_eq!(
         eng.core.metrics.counter(keys::PLACE_PLANNED),
@@ -260,10 +277,9 @@ fn reopen_does_not_reuse_a_stale_plan() {
 fn short_explicit_placement_fails_open_with_structured_error() {
     let size = MIB;
     let (mut eng, file, io) = verified_engine(size);
-    let bad = Options {
+    let bad = FileOptions {
         num_readers: Some(4),
         placement: ReaderPlacement::Explicit(vec![0, 1]),
-        ..Default::default()
     };
     let fut = eng.future(1);
     io.open_driver(&mut eng, file, size, bad, Callback::Future(fut));
@@ -279,14 +295,13 @@ fn short_explicit_placement_fails_open_with_structured_error() {
     assert_eq!(eng.chare::<Director>(io.director).open_files(), 0, "no file state created");
 
     // A StoreAware fallback nested inside StoreAware is rejected too.
-    let nested = Options {
+    let nested = FileOptions {
         num_readers: Some(2),
         placement: ReaderPlacement::StoreAware {
             fallback: Box::new(ReaderPlacement::StoreAware {
                 fallback: Box::new(ReaderPlacement::SpreadNodes),
             }),
         },
-        ..Default::default()
     };
     let fut = eng.future(1);
     io.open_driver(&mut eng, file, size, nested, Callback::Future(fut));
@@ -295,7 +310,7 @@ fn short_explicit_placement_fails_open_with_structured_error() {
     assert_eq!(p.take::<OpenError>(), OpenError::RecursiveFallback);
 
     // The service is intact: a valid open + session works afterwards.
-    open_file(&mut eng, &io, file, size, Options::with_readers(2));
+    open_file(&mut eng, &io, file, size, FileOptions::with_readers(2));
     let s = start_session(&mut eng, &io, file, 0, size);
     read_verified(&mut eng, &io, &s, file, 0, size);
     close_session(&mut eng, &io, s.id);
@@ -312,16 +327,22 @@ fn short_explicit_placement_fails_open_with_structured_error() {
 fn session_start_pipelined_behind_rejected_open_gets_the_error() {
     let size = MIB;
     let (mut eng, file, io) = verified_engine(size);
-    let bad = Options {
+    let bad = FileOptions {
         num_readers: Some(4),
         placement: ReaderPlacement::Explicit(vec![0]),
-        ..Default::default()
     };
     let opened = eng.future(1);
     let ready = eng.future(1);
     // Injected together: the start is queued behind the rejected open.
     io.open_driver(&mut eng, file, size, bad, Callback::Future(opened));
-    io.start_session_driver(&mut eng, file, 0, size, Callback::Future(ready));
+    io.start_session_driver(
+        &mut eng,
+        file,
+        0,
+        size,
+        SessionOptions::default(),
+        Callback::Future(ready),
+    );
     eng.run();
     assert!(eng.future_done(opened) && eng.future_done(ready));
     let (_, mut p) = eng.take_future(ready).pop().unwrap();
@@ -334,11 +355,122 @@ fn session_start_pipelined_behind_rejected_open_gets_the_error() {
 
     // A later valid open supersedes the rejection: the same file opens
     // and serves sessions normally.
-    open_file(&mut eng, &io, file, size, Options::with_readers(2));
+    open_file(&mut eng, &io, file, size, FileOptions::with_readers(2));
     let s = start_session(&mut eng, &io, file, 0, size);
     read_verified(&mut eng, &io, &s, file, 0, size);
     close_session(&mut eng, &io, s.id);
     close_file(&mut eng, &io, file);
     assert_service_clean(&eng, &io);
     assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
+}
+
+// ---------------------------------------------------------------------
+// 5. Per-session placement overrides (PR 5)
+// ---------------------------------------------------------------------
+
+/// A session may override the file's placement for itself only
+/// (`SessionOptions::placement_override`): the override is validated at
+/// session start against that session's resolved reader count — an
+/// impossible one fails the ready callback with the same structured
+/// error an impossible open gets — and a valid one places exactly this
+/// session's array without touching the file policy.
+#[test]
+fn session_placement_override_is_validated_and_applied_per_session() {
+    let size = MIB;
+    let (mut eng, file, io) = verified_engine(size);
+    // File policy: spread. Session override: pack onto explicit PEs.
+    open_file(&mut eng, &io, file, size, FileOptions::with_readers(2));
+
+    // An override that cannot cover the resolved reader count fails the
+    // ready callback with a structured error (never a panic).
+    let bad = SessionOptions {
+        placement_override: Some(ReaderPlacement::Explicit(vec![3])),
+        ..Default::default()
+    };
+    let ready = eng.future(1);
+    io.start_session_driver(&mut eng, file, 0, size, bad, Callback::Future(ready));
+    eng.run();
+    assert!(eng.future_done(ready), "rejected start must still fire its callback");
+    let (_, mut p) = eng.take_future(ready).pop().unwrap();
+    assert_eq!(p.take::<OpenError>(), OpenError::PlacementTooShort { need: 2, got: 1 });
+    assert_eq!(eng.core.metrics.counter("ckio.sessions_rejected"), 1);
+
+    // A valid override places exactly where it says, for this session
+    // only: the next default session is back at the file's policy.
+    let pinned = SessionOptions {
+        placement_override: Some(ReaderPlacement::Explicit(vec![3, 3])),
+        ..Default::default()
+    };
+    let s1 = start_session_with(&mut eng, &io, file, 0, size, pinned);
+    for b in 0..2u32 {
+        assert_eq!(eng.pe_of(ChareRef::new(s1.buffers, b)).0, 3, "override must pin buffer {b}");
+    }
+    read_verified(&mut eng, &io, &s1, file, 0, size);
+    let s2 = start_session_with(&mut eng, &io, file, 0, size, SessionOptions::default());
+    let expected = Placement::RoundRobinNodes.place(&eng.core.topo, 2);
+    for b in 0..2u32 {
+        assert_eq!(
+            eng.pe_of(ChareRef::new(s2.buffers, b)),
+            expected[b as usize],
+            "a default session must use the file placement, not a leaked override"
+        );
+    }
+    close_session(&mut eng, &io, s1.id);
+    close_session(&mut eng, &io, s2.id);
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+}
+
+/// The effective placement is part of the parked-array rebind key: a
+/// session with a `placement_override` must never rebind an array
+/// parked at the file-policy PEs, and — the mirror — a session without
+/// one must never rebind an array parked at override PEs. Silently
+/// inheriting the other layout is exactly the ignore-the-caller footgun
+/// PR 5 removes.
+#[test]
+fn placement_override_never_rebinds_across_placements() {
+    let size = MIB;
+    let (mut eng, file, io) = verified_engine(size);
+    open_file(&mut eng, &io, file, size, FileOptions::with_readers(2));
+
+    // Session A parks its array at the file's spread placement.
+    let reuse = SessionOptions { reuse_buffers: true, ..Default::default() };
+    let sa = start_session_with(&mut eng, &io, file, 0, size, reuse.clone());
+    close_session(&mut eng, &io, sa.id);
+
+    // Session B: identical shape + reuse, but with an override. It must
+    // NOT rebind A's parked array: fresh buffers, on the override PEs.
+    let pinned = SessionOptions {
+        placement_override: Some(ReaderPlacement::Explicit(vec![5, 5])),
+        ..reuse.clone()
+    };
+    let sb = start_session_with(&mut eng, &io, file, 0, size, pinned);
+    assert_eq!(
+        eng.core.metrics.counter("ckio.buffer_reuse"),
+        0,
+        "an override must miss a parked array at the file-policy placement"
+    );
+    for b in 0..2u32 {
+        assert_eq!(eng.pe_of(ChareRef::new(sb.buffers, b)).0, 5, "buffer {b} must obey override");
+    }
+    // The fresh array still peer-fetches A's resident claims — no
+    // second trip to the PFS for the same bytes.
+    read_verified(&mut eng, &io, &sb, file, 0, size);
+    assert_eq!(eng.core.metrics.counter("pfs.bytes_read"), size, "B must dedup against A");
+    close_session(&mut eng, &io, sb.id); // parks B's array under its override key
+
+    // Mirror: session C (no override) must not inherit B's PE-5 array.
+    // It may legitimately rebind A's (parked under the same spread
+    // placement) — either way its buffers sit off PE 5.
+    let sc = start_session_with(&mut eng, &io, file, 0, size, reuse);
+    for b in 0..2u32 {
+        assert_ne!(
+            eng.pe_of(ChareRef::new(sc.buffers, b)).0,
+            5,
+            "buffer {b} must not inherit the override session's placement"
+        );
+    }
+    close_session(&mut eng, &io, sc.id);
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
 }

@@ -1,0 +1,331 @@
+//! QoS-class integration tests (PR 5): the scoped-configuration API and
+//! the class-weighted admission path, end to end.
+//!
+//! * **Class negotiation** — the session's `QosClass` reaches the owning
+//!   data-plane shard *before any buffer exists*: on the `EP_SHARD_PLAN`
+//!   probe for store-aware starts, and on the lightweight
+//!   `EP_SHARD_ADMIT` register for concrete placements and rebinds —
+//!   exactly one registration per session start, on the home shard only.
+//! * **Classed admission end-to-end** — two governed sessions of
+//!   different classes contend on one shard under cap 1: both classes'
+//!   tickets are granted (`ckio.governor.class_granted.*`), every byte
+//!   verifies, and the governor holds no residue after teardown.
+//! * **Scavenger completion** — a Scavenger session sharing the shard
+//!   with an Interactive one still completes (weighted dequeue is
+//!   starvation-free).
+//! * **Conflicting re-open** — opening an already-open file with
+//!   different `FileOptions` fails with `OpenError::OptionsConflict`
+//!   instead of silently keeping the first opener's options.
+
+use ckio::amt::callback::Callback;
+use ckio::amt::engine::{Engine, EngineConfig};
+use ckio::ckio::director::Director;
+use ckio::ckio::{
+    CkIo, FileHandle, FileOptions, OpenError, QosClass, ReadResult, ReaderPlacement,
+    ServiceConfig, Session, SessionId, SessionOptions,
+};
+use ckio::harness::experiments::assert_service_clean;
+use ckio::metrics::keys;
+use ckio::pfs::{pattern, FileId, PfsConfig};
+
+const MIB: u64 = 1 << 20;
+
+fn verified_engine(nfiles: u32, file_size: u64, cfg: ServiceConfig) -> (Engine, Vec<FileId>, CkIo) {
+    let mut eng = Engine::new(EngineConfig::sim(2, 2)).with_sim_pfs(PfsConfig {
+        materialize: true,
+        noise_sigma: 0.0,
+        ..PfsConfig::default()
+    });
+    let files = (0..nfiles).map(|_| eng.core.sim_pfs_mut().create_file(file_size)).collect();
+    let io = CkIo::boot_with(&mut eng, cfg).expect("valid ServiceConfig");
+    (eng, files, io)
+}
+
+fn open_file(eng: &mut Engine, io: &CkIo, file: FileId, size: u64, opts: FileOptions) {
+    let fut = eng.future(1);
+    io.open_driver(eng, file, size, opts, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "open never completed");
+}
+
+fn start_session(
+    eng: &mut Engine,
+    io: &CkIo,
+    file: FileId,
+    offset: u64,
+    bytes: u64,
+    sopts: SessionOptions,
+) -> Session {
+    let fut = eng.future(1);
+    io.start_session_driver(eng, file, offset, bytes, sopts, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "session never became ready");
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    p.take::<Session>()
+}
+
+fn close_session(eng: &mut Engine, io: &CkIo, sid: SessionId) {
+    let fut = eng.future(1);
+    io.close_session_driver(eng, sid, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "session close never completed");
+}
+
+fn close_file(eng: &mut Engine, io: &CkIo, file: FileId) {
+    let fut = eng.future(1);
+    io.close_file_driver(eng, file, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "file close never completed");
+}
+
+fn read_verified(eng: &mut Engine, io: &CkIo, s: &Session, file: FileId, offset: u64, len: u64) {
+    let fut = eng.future(1);
+    io.read_driver(eng, 0, s, offset, len, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "read callback never fired");
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    let r = p.take::<ReadResult>();
+    assert_eq!(r.len, len);
+    let bytes = r.chunk.bytes.as_ref().expect("materialized run must deliver bytes");
+    assert_eq!(pattern::verify(file, offset, bytes), None, "corrupt read");
+}
+
+/// Registrations per class on every shard; the class must land on the
+/// home shard only.
+fn registrations(eng: &Engine, io: &CkIo, class: QosClass) -> Vec<u64> {
+    (0..io.nshards).map(|s| io.shard(eng, s).class_registrations(class)).collect()
+}
+
+// ---------------------------------------------------------------------
+// 1. The class rides the EP_SHARD_PLAN probe, intact
+// ---------------------------------------------------------------------
+
+#[test]
+fn class_is_carried_intact_through_the_plan_probe() {
+    let size = MIB;
+    let (mut eng, files, io) = verified_engine(1, size, ServiceConfig::default());
+    let file = files[0];
+    let fopts = FileOptions {
+        num_readers: Some(4),
+        placement: ReaderPlacement::StoreAware { fallback: Box::new(ReaderPlacement::SpreadNodes) },
+    };
+    open_file(&mut eng, &io, file, size, fopts);
+    let s = start_session(&mut eng, &io, file, 0, size, SessionOptions::interactive());
+    let home = eng.chare::<Director>(io.director).shard_of_file(file);
+    let by_shard = registrations(&eng, &io, QosClass::Interactive);
+    assert_eq!(by_shard[home as usize], 1, "the plan probe must register the class");
+    for (i, &c) in by_shard.iter().enumerate() {
+        if i != home as usize {
+            assert_eq!(c, 0, "class registration leaked onto shard {i}");
+        }
+    }
+    // No other class was registered anywhere.
+    assert!(registrations(&eng, &io, QosClass::Bulk).iter().all(|&c| c == 0));
+    assert!(registrations(&eng, &io, QosClass::Scavenger).iter().all(|&c| c == 0));
+    close_session(&mut eng, &io, s.id);
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+}
+
+// ---------------------------------------------------------------------
+// 2. Concrete placements and rebinds register via EP_SHARD_ADMIT
+// ---------------------------------------------------------------------
+
+#[test]
+fn concrete_and_rebind_starts_register_their_class_via_admit() {
+    let size = MIB;
+    let (mut eng, files, io) = verified_engine(1, size, ServiceConfig::default());
+    let file = files[0];
+    open_file(&mut eng, &io, file, size, FileOptions::with_readers(2));
+    let home = eng.chare::<Director>(io.director).shard_of_file(file);
+
+    // A concrete-placement (no plan probe) Bulk session registers once.
+    let reuse_bulk = SessionOptions { reuse_buffers: true, ..Default::default() };
+    let s1 = start_session(&mut eng, &io, file, 0, size, reuse_bulk);
+    assert_eq!(registrations(&eng, &io, QosClass::Bulk)[home as usize], 1);
+
+    // Parking and rebinding under a *different* class registers the new
+    // tenant's class (the parked array may serve anyone).
+    close_session(&mut eng, &io, s1.id);
+    let reuse_scavenger = SessionOptions {
+        class: QosClass::Scavenger,
+        reuse_buffers: true,
+        ..Default::default()
+    };
+    let s2 = start_session(&mut eng, &io, file, 0, size, reuse_scavenger);
+    assert_eq!(eng.core.metrics.counter("ckio.buffer_reuse"), 1, "second start must rebind");
+    assert_eq!(registrations(&eng, &io, QosClass::Scavenger)[home as usize], 1);
+    // Exactly one registration per session start: Bulk stayed at 1.
+    assert_eq!(registrations(&eng, &io, QosClass::Bulk)[home as usize], 1);
+    read_verified(&mut eng, &io, &s2, file, 0, size);
+    close_session(&mut eng, &io, s2.id);
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+}
+
+// ---------------------------------------------------------------------
+// 3. Classed admission end-to-end under a contended cap
+// ---------------------------------------------------------------------
+
+#[test]
+fn classed_sessions_share_a_capped_shard_and_both_complete_verified() {
+    let size = MIB;
+    let cfg = ServiceConfig {
+        max_inflight_reads: Some(1),
+        data_plane_shards: Some(1),
+        ..Default::default()
+    };
+    let (mut eng, files, io) = verified_engine(2, size, cfg);
+    let fopts = FileOptions::with_readers(2);
+    open_file(&mut eng, &io, files[0], size, fopts.clone());
+    open_file(&mut eng, &io, files[1], size, fopts);
+
+    // Start both sessions in one scheduling window so their governed
+    // greedy prefetches contend for the single ticket.
+    let splinter = Some(64 << 10);
+    let interactive = SessionOptions {
+        class: QosClass::Interactive,
+        splinter_bytes: splinter,
+        read_window: 8,
+        ..Default::default()
+    };
+    let bulk = SessionOptions {
+        class: QosClass::Bulk,
+        splinter_bytes: splinter,
+        read_window: 8,
+        ..Default::default()
+    };
+    let ready = eng.future(2);
+    io.start_session_driver(&mut eng, files[0], 0, size, interactive, Callback::Future(ready));
+    io.start_session_driver(&mut eng, files[1], 0, size, bulk, Callback::Future(ready));
+    eng.run();
+    assert!(eng.future_done(ready), "sessions never became ready");
+
+    // The cap held, both classes were granted tickets, and demand was
+    // genuinely deferred (the queue — hence the weighted dequeue — ran).
+    assert!(eng.core.metrics.value(keys::PFS_MAX_CONCURRENT) <= 1.0);
+    assert!(eng.core.metrics.counter(keys::GOV_THROTTLED) > 0);
+    assert!(eng.core.metrics.counter(keys::GOV_GRANTED_INTERACTIVE) > 0);
+    assert!(eng.core.metrics.counter(keys::GOV_GRANTED_BULK) > 0);
+    assert_eq!(eng.core.metrics.counter(keys::GOV_GRANTED_SCAVENGER), 0);
+
+    let sessions: Vec<Session> = eng
+        .take_future(ready)
+        .into_iter()
+        .map(|(_, mut p)| p.take::<Session>())
+        .collect();
+    for s in &sessions {
+        read_verified(&mut eng, &io, s, s.file, 0, size);
+    }
+    for s in sessions {
+        close_session(&mut eng, &io, s.id);
+    }
+    close_file(&mut eng, &io, files[0]);
+    close_file(&mut eng, &io, files[1]);
+    assert_service_clean(&eng, &io);
+    assert_eq!(io.governor_inflight(&eng), 0);
+    assert_eq!(io.governor_queued(&eng), 0);
+}
+
+// ---------------------------------------------------------------------
+// 4. Scavenger work is not starved by Interactive load
+// ---------------------------------------------------------------------
+
+#[test]
+fn scavenger_session_completes_under_interactive_contention() {
+    let size = MIB;
+    let cfg = ServiceConfig {
+        max_inflight_reads: Some(1),
+        data_plane_shards: Some(1),
+        ..Default::default()
+    };
+    let (mut eng, files, io) = verified_engine(2, size, cfg);
+    let fopts = FileOptions::with_readers(2);
+    open_file(&mut eng, &io, files[0], size, fopts.clone());
+    open_file(&mut eng, &io, files[1], size, fopts);
+    let splintered = |class: QosClass| SessionOptions {
+        class,
+        splinter_bytes: Some(64 << 10),
+        read_window: 8,
+        ..Default::default()
+    };
+    let ready = eng.future(2);
+    io.start_session_driver(
+        &mut eng,
+        files[0],
+        0,
+        size,
+        splintered(QosClass::Interactive),
+        Callback::Future(ready),
+    );
+    io.start_session_driver(
+        &mut eng,
+        files[1],
+        0,
+        size,
+        splintered(QosClass::Scavenger),
+        Callback::Future(ready),
+    );
+    eng.run();
+    assert!(eng.future_done(ready));
+    // Every queued ticket was eventually granted: the scavenger's whole
+    // prefetch ran (its session's bytes all left the PFS), and nothing
+    // is parked in the governor.
+    assert!(eng.core.metrics.counter(keys::GOV_GRANTED_SCAVENGER) > 0);
+    assert_eq!(eng.core.metrics.counter("pfs.bytes_read"), 2 * size);
+    assert_eq!(io.governor_inflight(&eng), 0, "tickets leaked");
+    assert_eq!(io.governor_queued(&eng), 0, "scavenger demand stranded");
+    let sessions: Vec<Session> = eng
+        .take_future(ready)
+        .into_iter()
+        .map(|(_, mut p)| p.take::<Session>())
+        .collect();
+    for s in &sessions {
+        read_verified(&mut eng, &io, s, s.file, 0, size);
+    }
+    for s in sessions {
+        close_session(&mut eng, &io, s.id);
+    }
+    close_file(&mut eng, &io, files[0]);
+    close_file(&mut eng, &io, files[1]);
+    assert_service_clean(&eng, &io);
+}
+
+// ---------------------------------------------------------------------
+// 5. Conflicting re-opens are structured errors, not silent ignores
+// ---------------------------------------------------------------------
+
+#[test]
+fn reopen_with_different_file_options_is_a_conflict_error() {
+    let size = MIB;
+    let (mut eng, files, io) = verified_engine(1, size, ServiceConfig::default());
+    let file = files[0];
+    open_file(&mut eng, &io, file, size, FileOptions::with_readers(2));
+
+    // Same options: idempotent refcounted re-open, handle delivered.
+    let fut = eng.future(1);
+    io.open_driver(&mut eng, file, size, FileOptions::with_readers(2), Callback::Future(fut));
+    eng.run();
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    let h = p.take::<FileHandle>();
+    assert_eq!(h.opts.num_readers, Some(2));
+    assert_eq!(eng.core.metrics.counter("ckio.reopens"), 1);
+
+    // Different options: a structured conflict on the callback.
+    let fut = eng.future(1);
+    io.open_driver(&mut eng, file, size, FileOptions::with_readers(4), Callback::Future(fut));
+    eng.run();
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    assert_eq!(p.take::<OpenError>(), OpenError::OptionsConflict);
+    assert_eq!(eng.core.metrics.counter("ckio.opens_rejected"), 1);
+
+    // The file is untouched by the rejected re-open: still readable
+    // under the original options, and the refcount is exactly 2.
+    let s = start_session(&mut eng, &io, file, 0, size, SessionOptions::default());
+    read_verified(&mut eng, &io, &s, file, 0, size);
+    close_session(&mut eng, &io, s.id);
+    close_file(&mut eng, &io, file);
+    close_file(&mut eng, &io, file);
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
+    assert_service_clean(&eng, &io);
+}

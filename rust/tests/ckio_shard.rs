@@ -21,8 +21,9 @@ use ckio::amt::engine::{Ctx, Engine, EngineConfig};
 use ckio::amt::msg::{Ep, Msg, Payload};
 use ckio::amt::topology::Pe;
 use ckio::ckio::director::Director;
-use ckio::ckio::manager::{ReadMsg, EP_M_READ};
-use ckio::ckio::{CkIo, Options, ReadResult, Session, SessionId};
+use ckio::ckio::{
+    CkIo, FileOptions, ReadResult, ServiceConfig, Session, SessionId, SessionOptions,
+};
 use ckio::harness::experiments::assert_service_clean;
 use ckio::impl_chare_any;
 use ckio::metrics::keys;
@@ -30,27 +31,38 @@ use ckio::pfs::{FileId, PfsConfig};
 
 const MIB: u64 = 1 << 20;
 
-fn verified_engine(nfiles: u32, file_size: u64) -> (Engine, Vec<FileId>, CkIo) {
+fn verified_engine(
+    nfiles: u32,
+    file_size: u64,
+    cfg: ServiceConfig,
+) -> (Engine, Vec<FileId>, CkIo) {
     let mut eng = Engine::new(EngineConfig::sim(2, 2)).with_sim_pfs(PfsConfig {
         materialize: true,
         noise_sigma: 0.0,
         ..PfsConfig::default()
     });
     let files = (0..nfiles).map(|_| eng.core.sim_pfs_mut().create_file(file_size)).collect();
-    let io = CkIo::boot(&mut eng);
+    let io = CkIo::boot_with(&mut eng, cfg).expect("valid ServiceConfig");
     (eng, files, io)
 }
 
-fn open_file(eng: &mut Engine, io: &CkIo, file: FileId, size: u64, opts: Options) {
+fn open_file(eng: &mut Engine, io: &CkIo, file: FileId, size: u64, opts: FileOptions) {
     let fut = eng.future(1);
     io.open_driver(eng, file, size, opts, Callback::Future(fut));
     eng.run();
     assert!(eng.future_done(fut), "open never completed");
 }
 
-fn start_session(eng: &mut Engine, io: &CkIo, file: FileId, offset: u64, bytes: u64) -> Session {
+fn start_session(
+    eng: &mut Engine,
+    io: &CkIo,
+    file: FileId,
+    offset: u64,
+    bytes: u64,
+    sopts: SessionOptions,
+) -> Session {
     let fut = eng.future(1);
-    io.start_session_driver(eng, file, offset, bytes, Callback::Future(fut));
+    io.start_session_driver(eng, file, offset, bytes, sopts, Callback::Future(fut));
     eng.run();
     assert!(eng.future_done(fut), "session never became ready");
     let (_, mut p) = eng.take_future(fut).pop().unwrap();
@@ -84,8 +96,8 @@ fn claims_per_shard(eng: &Engine, io: &CkIo, file: FileId) -> Vec<usize> {
 #[test]
 fn file_to_shard_routing_is_stable_across_reopen() {
     let size = MIB;
-    let (mut eng, files, io) = verified_engine(2, size);
-    let opts = Options::with_readers(2);
+    let (mut eng, files, io) = verified_engine(2, size, ServiceConfig::default());
+    let opts = FileOptions::with_readers(2);
     open_file(&mut eng, &io, files[0], size, opts.clone());
     open_file(&mut eng, &io, files[1], size, opts.clone());
 
@@ -94,7 +106,7 @@ fn file_to_shard_routing_is_stable_across_reopen() {
     assert_ne!(home, other, "dense FileIds must spread over the default shard count");
 
     // A live session's claims land on the home shard — and only there.
-    let s = start_session(&mut eng, &io, files[0], 0, size);
+    let s = start_session(&mut eng, &io, files[0], 0, size, SessionOptions::default());
     let claims = claims_per_shard(&eng, &io, files[0]);
     assert_eq!(claims[home as usize], 2, "one claim per (nonempty) buffer span");
     for (i, &c) in claims.iter().enumerate() {
@@ -107,8 +119,8 @@ fn file_to_shard_routing_is_stable_across_reopen() {
     close_session(&mut eng, &io, s.id);
     assert!(claims_per_shard(&eng, &io, files[0]).iter().all(|&c| c == 0));
 
-    // Full close + re-open (with the other file still open, so the
-    // active shard count cannot be re-applied in between): same shard.
+    // Full close + re-open: same shard (the active shard count is
+    // fixed at boot since PR 5, so routing can never move).
     close_file(&mut eng, &io, files[0]);
     open_file(&mut eng, &io, files[0], size, opts);
     assert_eq!(
@@ -116,7 +128,7 @@ fn file_to_shard_routing_is_stable_across_reopen() {
         home,
         "re-opening a file must not move its data-plane state"
     );
-    let s2 = start_session(&mut eng, &io, files[0], 0, size);
+    let s2 = start_session(&mut eng, &io, files[0], 0, size, SessionOptions::default());
     assert_eq!(claims_per_shard(&eng, &io, files[0])[home as usize], 2);
     close_session(&mut eng, &io, s2.id);
     close_file(&mut eng, &io, files[0]);
@@ -133,10 +145,10 @@ fn file_to_shard_routing_is_stable_across_reopen() {
 #[test]
 fn residency_summary_and_plan_live_on_the_home_shard_only() {
     let size = MIB;
-    let (mut eng, files, io) = verified_engine(1, size);
+    let (mut eng, files, io) = verified_engine(1, size, ServiceConfig::default());
     let file = files[0];
-    open_file(&mut eng, &io, file, size, Options::with_readers(2));
-    let s = start_session(&mut eng, &io, file, 0, size);
+    open_file(&mut eng, &io, file, size, FileOptions::with_readers(2));
+    let s = start_session(&mut eng, &io, file, 0, size, SessionOptions::default());
 
     let home = eng.chare::<Director>(io.director).shard_of_file(file);
     for i in 0..io.nshards {
@@ -175,15 +187,12 @@ fn residency_summary_and_plan_live_on_the_home_shard_only() {
 // 2. Per-shard admission: distinct files proceed, same file sequences
 // ---------------------------------------------------------------------
 
-/// Read `[offset, offset+len)` through PE 0's manager and verify every
-/// byte against the deterministic file pattern.
+/// Read `[offset, offset+len)` through PE 0's manager (the public
+/// `read_driver`, PR 5) and verify every byte against the deterministic
+/// file pattern.
 fn read_verified(eng: &mut Engine, io: &CkIo, s: &Session, file: FileId, offset: u64, len: u64) {
     let fut = eng.future(1);
-    eng.inject(
-        ChareRef::new(io.managers, 0),
-        EP_M_READ,
-        ReadMsg { session: s.id, offset, len, after: Callback::Future(fut) },
-    );
+    io.read_driver(eng, 0, s, offset, len, Callback::Future(fut));
     eng.run();
     assert!(eng.future_done(fut), "read callback never fired");
     let (_, mut p) = eng.take_future(fut).pop().unwrap();
@@ -196,20 +205,19 @@ fn read_verified(eng: &mut Engine, io: &CkIo, s: &Session, file: FileId, offset:
 #[test]
 fn distinct_files_on_distinct_shards_admit_independently_under_cap_one() {
     let size = MIB;
-    let (mut eng, files, io) = verified_engine(2, size);
-    let opts = Options {
-        num_readers: Some(2),
-        splinter_bytes: Some(128 << 10),
-        max_inflight_reads: Some(1),
-        ..Default::default()
-    };
+    // Per-shard cap of 1 is service scope (PR 5): configured at boot,
+    // enforced by every active shard.
+    let cfg = ServiceConfig { max_inflight_reads: Some(1), ..Default::default() };
+    let (mut eng, files, io) = verified_engine(2, size, cfg);
+    let fopts = FileOptions::with_readers(2);
+    let sopts = SessionOptions { splinter_bytes: Some(128 << 10), ..Default::default() };
     // Open both files and start both sessions in one scheduling window,
     // so the two greedy prefetches run concurrently.
-    io.open_driver(&mut eng, files[0], size, opts.clone(), Callback::Ignore);
-    io.open_driver(&mut eng, files[1], size, opts, Callback::Ignore);
+    io.open_driver(&mut eng, files[0], size, fopts.clone(), Callback::Ignore);
+    io.open_driver(&mut eng, files[1], size, fopts, Callback::Ignore);
     let ready = eng.future(2);
-    io.start_session_driver(&mut eng, files[0], 0, size, Callback::Future(ready));
-    io.start_session_driver(&mut eng, files[1], 0, size, Callback::Future(ready));
+    io.start_session_driver(&mut eng, files[0], 0, size, sopts.clone(), Callback::Future(ready));
+    io.start_session_driver(&mut eng, files[1], 0, size, sopts, Callback::Future(ready));
     eng.run();
     assert!(eng.future_done(ready), "sessions never became ready");
 
@@ -246,21 +254,24 @@ fn distinct_files_on_distinct_shards_admit_independently_under_cap_one() {
 #[test]
 fn same_file_sessions_still_fully_sequence_under_per_shard_cap_one() {
     let size = 2 * MIB;
-    let (mut eng, files, io) = verified_engine(1, size);
+    let cfg = ServiceConfig { max_inflight_reads: Some(1), ..Default::default() };
+    let (mut eng, files, io) = verified_engine(1, size, cfg);
     let file = files[0];
-    let opts = Options {
-        num_readers: Some(2),
-        splinter_bytes: Some(128 << 10),
-        max_inflight_reads: Some(1),
-        ..Default::default()
-    };
-    io.open_driver(&mut eng, file, size, opts, Callback::Ignore);
+    let sopts = SessionOptions { splinter_bytes: Some(128 << 10), ..Default::default() };
+    io.open_driver(&mut eng, file, size, FileOptions::with_readers(2), Callback::Ignore);
     // Two concurrent sessions over non-overlapping halves of ONE file:
     // same file → same shard → one cap. (Disjoint ranges, so the span
     // store cannot dedup any read away — every byte takes a ticket.)
     let ready = eng.future(2);
-    io.start_session_driver(&mut eng, file, 0, size / 2, Callback::Future(ready));
-    io.start_session_driver(&mut eng, file, size / 2, size / 2, Callback::Future(ready));
+    io.start_session_driver(&mut eng, file, 0, size / 2, sopts.clone(), Callback::Future(ready));
+    io.start_session_driver(
+        &mut eng,
+        file,
+        size / 2,
+        size / 2,
+        sopts,
+        Callback::Future(ready),
+    );
     eng.run();
     assert!(eng.future_done(ready));
     let peak = eng.core.metrics.value(keys::PFS_MAX_CONCURRENT);
@@ -323,18 +334,25 @@ impl Chare for GovernedRacyCloser {
             EP_GO => {
                 let me = ctx.me();
                 let (io, file, size) = (self.io, self.file, self.size);
-                let opts = Options {
-                    num_readers: Some(4),
-                    splinter_bytes: Some(64 << 10),
-                    max_inflight_reads: Some(1),
-                    ..Default::default()
-                };
-                io.open(ctx, file, size, opts, Callback::to_chare(me, EP_OPENED));
+                io.open(
+                    ctx,
+                    file,
+                    size,
+                    FileOptions::with_readers(4),
+                    Callback::to_chare(me, EP_OPENED),
+                );
             }
             EP_OPENED => {
                 let me = ctx.me();
                 let (io, file, size) = (self.io, self.file, self.size);
-                io.start_read_session(ctx, file, 0, size, Callback::to_chare(me, EP_READY));
+                io.start_read_session(
+                    ctx,
+                    file,
+                    0,
+                    size,
+                    SessionOptions { splinter_bytes: Some(64 << 10), ..Default::default() },
+                    Callback::to_chare(me, EP_READY),
+                );
             }
             EP_READY => {
                 let s: Session = msg.take();
@@ -379,7 +397,9 @@ impl Chare for GovernedRacyCloser {
 
 #[test]
 fn teardown_drains_inflight_tickets_on_a_closing_shard() {
-    let (mut eng, files, io) = verified_engine(1, MIB);
+    // The governed cap the teardown races against is boot configuration.
+    let cfg = ServiceConfig { max_inflight_reads: Some(1), ..Default::default() };
+    let (mut eng, files, io) = verified_engine(1, MIB, cfg);
     let fut = eng.future(1);
     let c = eng.create_singleton(Pe(1), GovernedRacyCloser {
         io,

@@ -14,32 +14,37 @@
 //!   corruption or a stranded callback).
 
 use ckio::amt::callback::Callback;
-use ckio::amt::chare::ChareRef;
 use ckio::amt::engine::{Engine, EngineConfig};
 use ckio::ckio::director::Director;
-use ckio::ckio::manager::{ReadMsg, EP_M_READ};
-use ckio::ckio::{CkIo, Options, ReadResult, Session, SessionId};
+use ckio::ckio::{CkIo, FileOptions, ReadResult, ServiceConfig, Session, SessionId, SessionOptions};
 use ckio::harness::experiments::assert_service_clean;
 use ckio::pfs::{pattern, FileId, PfsConfig};
 
 const MIB: u64 = 1 << 20;
 
-fn verified_engine(file_size: u64) -> (Engine, FileId, CkIo) {
+fn verified_engine(file_size: u64, cfg: ServiceConfig) -> (Engine, FileId, CkIo) {
     let mut eng = Engine::new(EngineConfig::sim(2, 2)).with_sim_pfs(PfsConfig {
         materialize: true,
         noise_sigma: 0.0,
         ..PfsConfig::default()
     });
     let file = eng.core.sim_pfs_mut().create_file(file_size);
-    let io = CkIo::boot(&mut eng);
+    let io = CkIo::boot_with(&mut eng, cfg).expect("valid ServiceConfig");
     (eng, file, io)
 }
 
 /// Start a session over `[offset, offset+bytes)` and run to quiescence
 /// (the greedy prefetch completes), returning the session handle.
-fn start_session(eng: &mut Engine, io: &CkIo, file: FileId, offset: u64, bytes: u64) -> Session {
+fn start_session(
+    eng: &mut Engine,
+    io: &CkIo,
+    file: FileId,
+    offset: u64,
+    bytes: u64,
+    sopts: SessionOptions,
+) -> Session {
     let fut = eng.future(1);
-    io.start_session_driver(eng, file, offset, bytes, Callback::Future(fut));
+    io.start_session_driver(eng, file, offset, bytes, sopts, Callback::Future(fut));
     eng.run();
     assert!(eng.future_done(fut), "session never became ready");
     let (_, mut p) = eng.take_future(fut).pop().unwrap();
@@ -58,11 +63,7 @@ fn close_session(eng: &mut Engine, io: &CkIo, sid: SessionId) {
 /// byte against the deterministic file pattern.
 fn read_verified(eng: &mut Engine, io: &CkIo, s: &Session, file: FileId, offset: u64, len: u64) {
     let fut = eng.future(1);
-    eng.inject(
-        ChareRef::new(io.managers, 0),
-        EP_M_READ,
-        ReadMsg { session: s.id, offset, len, after: Callback::Future(fut) },
-    );
+    io.read_driver(eng, 0, s, offset, len, Callback::Future(fut));
     eng.run();
     assert!(eng.future_done(fut), "read callback never fired");
     let (_, mut p) = eng.take_future(fut).pop().unwrap();
@@ -82,18 +83,17 @@ fn read_verified(eng: &mut Engine, io: &CkIo, s: &Session, file: FileId, offset:
 #[test]
 fn parked_array_split_serves_partial_overlap() {
     let size = 2 * MIB;
-    let (mut eng, file, io) = verified_engine(size);
-    let opts = Options {
-        num_readers: Some(2),
+    let (mut eng, file, io) = verified_engine(size, ServiceConfig::default());
+    let sopts = SessionOptions {
         splinter_bytes: Some(64 << 10),
         reuse_buffers: true,
         ..Default::default()
     };
     // The driver holds the file open across sessions.
-    io.open_driver(&mut eng, file, size, opts, Callback::Ignore);
+    io.open_driver(&mut eng, file, size, FileOptions::with_readers(2), Callback::Ignore);
 
     // Session A prefetches the first half, then parks.
-    let sa = start_session(&mut eng, &io, file, 0, size / 2);
+    let sa = start_session(&mut eng, &io, file, 0, size / 2, sopts.clone());
     read_verified(&mut eng, &io, &sa, file, 0, size / 2);
     close_session(&mut eng, &io, sa.id);
     let pfs_after_a = eng.core.metrics.counter("pfs.bytes_read");
@@ -102,7 +102,7 @@ fn parked_array_split_serves_partial_overlap() {
 
     // Session B spans the whole file: its first half is served from A's
     // parked array (split serve), only the second half hits the PFS.
-    let sb = start_session(&mut eng, &io, file, 0, size);
+    let sb = start_session(&mut eng, &io, file, 0, size, sopts);
     read_verified(&mut eng, &io, &sb, file, 0, size);
     let pfs_after_b = eng.core.metrics.counter("pfs.bytes_read");
     assert_eq!(
@@ -132,14 +132,14 @@ fn parked_array_split_serves_partial_overlap() {
 #[test]
 fn split_serve_at_stripe_boundary_is_exact() {
     let size = 8 * MIB; // default stripe size is 4 MiB
-    let (mut eng, file, io) = verified_engine(size);
+    let (mut eng, file, io) = verified_engine(size, ServiceConfig::default());
     let stripe = eng.core.sim_pfs().cfg.stripe_size;
     assert_eq!(stripe, 4 * MIB, "test assumes the default stripe size");
-    let opts = Options { num_readers: Some(2), reuse_buffers: true, ..Default::default() };
-    io.open_driver(&mut eng, file, size, opts, Callback::Ignore);
+    let sopts = SessionOptions { reuse_buffers: true, ..Default::default() };
+    io.open_driver(&mut eng, file, size, FileOptions::with_readers(2), Callback::Ignore);
 
     // Session A covers exactly stripe 0 ([0, 4 MiB)), then parks.
-    let sa = start_session(&mut eng, &io, file, 0, stripe);
+    let sa = start_session(&mut eng, &io, file, 0, stripe, sopts.clone());
     close_session(&mut eng, &io, sa.id);
     let pfs_after_a = eng.core.metrics.counter("pfs.bytes_read");
     assert_eq!(pfs_after_a, stripe);
@@ -148,7 +148,7 @@ fn split_serve_at_stripe_boundary_is_exact() {
     // ([2 MiB, 4 MiB)) is fully inside A's claim; its second
     // ([4 MiB, 6 MiB)) starts exactly at the stripe boundary and must be
     // read from the PFS, once.
-    let sb = start_session(&mut eng, &io, file, stripe / 2, stripe);
+    let sb = start_session(&mut eng, &io, file, stripe / 2, stripe, sopts);
     // The read crosses the resident/PFS seam at the stripe boundary.
     read_verified(&mut eng, &io, &sb, file, stripe / 2, stripe);
     let pfs_after_b = eng.core.metrics.counter("pfs.bytes_read");
@@ -170,32 +170,34 @@ fn split_serve_at_stripe_boundary_is_exact() {
 #[test]
 fn eviction_racing_a_pending_close_stays_correct() {
     let size = 2 * MIB;
-    let (mut eng, file, io) = verified_engine(size);
-    let opts = Options {
-        num_readers: Some(2),
-        splinter_bytes: Some(128 << 10),
-        reuse_buffers: true,
-        store_budget_bytes: Some(MIB), // exactly one parked half-file array
-        // One shard: the budget is split per shard, and this test's
-        // arithmetic is about the single-plane (PR 2) semantics.
+    // Budget and shard pin are service scope (PR 5): one shard so the
+    // budget is not split, and exactly one parked half-file array fits.
+    let cfg = ServiceConfig {
+        store_budget_bytes: Some(MIB),
         data_plane_shards: Some(1),
         ..Default::default()
     };
-    io.open_driver(&mut eng, file, size, opts, Callback::Ignore);
+    let (mut eng, file, io) = verified_engine(size, cfg);
+    let sopts = SessionOptions {
+        splinter_bytes: Some(128 << 10),
+        reuse_buffers: true,
+        ..Default::default()
+    };
+    io.open_driver(&mut eng, file, size, FileOptions::with_readers(2), Callback::Ignore);
 
     // A parks [0, 1 MiB); it fits the budget.
-    let sa = start_session(&mut eng, &io, file, 0, MIB);
+    let sa = start_session(&mut eng, &io, file, 0, MIB, sopts.clone());
     close_session(&mut eng, &io, sa.id);
 
     // B covers [1 MiB, 2 MiB). Its close parks a second 1 MiB array,
     // which must evict A. Session C ([512 KiB, 1.5 MiB)) starts in the
     // same scheduling window, overlapping both A (maybe mid-eviction)
     // and B (mid-park) — inject both without quiescing in between.
-    let sb = start_session(&mut eng, &io, file, MIB, MIB);
+    let sb = start_session(&mut eng, &io, file, MIB, MIB, sopts.clone());
     let close_fut = eng.future(1);
     io.close_session_driver(&mut eng, sb.id, Callback::Future(close_fut));
     let ready_fut = eng.future(1);
-    io.start_session_driver(&mut eng, file, MIB / 2, MIB, Callback::Future(ready_fut));
+    io.start_session_driver(&mut eng, file, MIB / 2, MIB, sopts, Callback::Future(ready_fut));
     eng.run();
     assert!(eng.future_done(close_fut), "B's close must complete");
     assert!(eng.future_done(ready_fut), "C must become ready");

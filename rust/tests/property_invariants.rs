@@ -7,7 +7,9 @@ use ckio::amt::chare::{Chare, ChareRef, CollectionId};
 use ckio::amt::engine::{Ctx, Engine, EngineConfig};
 use ckio::amt::msg::{Ep, Msg, Payload};
 use ckio::amt::topology::{Pe, Placement};
-use ckio::ckio::{CkIo, Options, ReadResult, Session, SessionId};
+use ckio::ckio::{
+    CkIo, FileOptions, ReadResult, Session, SessionId, SessionOptions,
+};
 use ckio::impl_chare_any;
 use ckio::pfs::{pattern, FileId, PfsConfig};
 use ckio::prop_assert;
@@ -121,7 +123,8 @@ struct FuzzClient {
     reads_done: u32,
     session: Option<Session>,
     done: Callback,
-    opts: Options,
+    fopts: FileOptions,
+    sopts: SessionOptions,
 }
 
 impl FuzzClient {
@@ -149,14 +152,22 @@ impl Chare for FuzzClient {
         match msg.ep {
             EP_GO => {
                 let me = ctx.me();
-                let (io, file, size, opts) =
-                    (self.io, self.file, self.file_size, self.opts.clone());
-                io.open(ctx, file, size, opts, Callback::to_chare(me, EP_OPENED));
+                let (io, file, size, fopts) =
+                    (self.io, self.file, self.file_size, self.fopts.clone());
+                io.open(ctx, file, size, fopts, Callback::to_chare(me, EP_OPENED));
             }
             EP_OPENED => {
                 let me = ctx.me();
-                let (io, file, size) = (self.io, self.file, self.file_size);
-                io.start_read_session(ctx, file, 0, size, Callback::to_chare(me, EP_READY));
+                let (io, file, size, sopts) =
+                    (self.io, self.file, self.file_size, self.sopts.clone());
+                io.start_read_session(
+                    ctx,
+                    file,
+                    0,
+                    size,
+                    sopts,
+                    Callback::to_chare(me, EP_READY),
+                );
             }
             EP_READY | EP_FWD => {
                 let s: Session = msg.take();
@@ -238,11 +249,8 @@ fn prop_ckio_delivers_every_byte_exactly_once() {
             extents_per_client.push(sub.into_iter().map(|(so, sl)| (o + so, sl)).collect());
         }
 
-        let opts = Options {
-            num_readers: Some(readers),
-            splinter_bytes: splinter,
-            ..Default::default()
-        };
+        let fopts = FileOptions::with_readers(readers);
+        let sopts = SessionOptions { splinter_bytes: splinter, ..Default::default() };
         let cid = eng.create_array(nclients, &Placement::RoundRobinPes, |i| FuzzClient {
             io,
             file,
@@ -256,7 +264,8 @@ fn prop_ckio_delivers_every_byte_exactly_once() {
             reads_done: 0,
             session: None,
             done: Callback::Future(fut),
-            opts: opts.clone(),
+            fopts: fopts.clone(),
+            sopts: sopts.clone(),
         });
         for i in 0..nclients {
             eng.chare_mut::<FuzzClient>(ChareRef::new(cid, i)).peers = cid;
@@ -358,14 +367,21 @@ fn close_session_races_inflight_prefetch() {
                         ctx,
                         file,
                         size,
-                        Options::with_readers(4),
+                        FileOptions::with_readers(4),
                         Callback::to_chare(me, EP_OPENED),
                     );
                 }
                 EP_OPENED => {
                     let me = ctx.me();
                     let (io, file, size) = (self.io, self.file, self.size);
-                    io.start_read_session(ctx, file, 0, size, Callback::to_chare(me, EP_READY));
+                    io.start_read_session(
+                        ctx,
+                        file,
+                        0,
+                        size,
+                        SessionOptions::default(),
+                        Callback::to_chare(me, EP_READY),
+                    );
                 }
                 EP_READY => {
                     // Close immediately: the buffers' greedy reads (256 MiB
@@ -412,7 +428,7 @@ fn early_reads_are_buffered_by_manager() {
 
     // Inject a read for a session id that will be announced by a
     // concurrent open+start driven from the driver.
-    io.open_driver(&mut eng, file, 1 << 20, Options::with_readers(2), Callback::Ignore);
+    io.open_driver(&mut eng, file, 1 << 20, FileOptions::with_readers(2), Callback::Ignore);
     // The director assigns session ids sequentially from 0.
     eng.inject(
         ChareRef::new(io.managers, 0),
@@ -420,7 +436,14 @@ fn early_reads_are_buffered_by_manager() {
         ReadMsg { session: SessionId(0), offset: 0, len: 4096, after: Callback::Future(fut) },
     );
     // Start the session (driver-side) after the early read is in flight.
-    io.start_session_driver(&mut eng, file, 0, 1 << 20, Callback::Ignore);
+    io.start_session_driver(
+        &mut eng,
+        file,
+        0,
+        1 << 20,
+        SessionOptions::default(),
+        Callback::Ignore,
+    );
     eng.run();
     assert!(eng.future_done(fut), "early read was never served");
     // Manager state is clean (no stuck early queue).
@@ -432,12 +455,26 @@ fn early_reads_are_buffered_by_manager() {
 #[test]
 fn degenerate_shapes() {
     // 1-byte file, 1 client, 1 reader.
-    let (t, eng) =
-        ckio::harness::experiments::run_ckio_read(1, 1, 1, 1, Options::with_readers(1), 3);
+    let (t, eng) = ckio::harness::experiments::run_ckio_read(
+        1,
+        1,
+        1,
+        1,
+        FileOptions::with_readers(1),
+        SessionOptions::default(),
+        3,
+    );
     assert!(t > 0);
     assert_eq!(eng.core.metrics.counter("ckio.bytes_delivered"), 1);
     // More readers than bytes: clamped, still correct.
-    let (_, eng) =
-        ckio::harness::experiments::run_ckio_read(1, 2, 7, 3, Options::with_readers(64), 4);
+    let (_, eng) = ckio::harness::experiments::run_ckio_read(
+        1,
+        2,
+        7,
+        3,
+        FileOptions::with_readers(64),
+        SessionOptions::default(),
+        4,
+    );
     assert_eq!(eng.core.metrics.counter("ckio.bytes_delivered"), 7);
 }
