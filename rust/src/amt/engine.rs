@@ -17,7 +17,7 @@
 //! at a time from a FIFO queue; nothing ever blocks a PE — all waiting is
 //! expressed through [`Callback`] continuations.
 
-use std::any::Any;
+use std::any::{Any, TypeId};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::time::Instant;
@@ -32,6 +32,7 @@ use super::callback::{Callback, FutureId};
 use super::chare::{Chare, ChareRef, CollectionId, CollectionKind};
 use super::location::{LocationManager, Route};
 use super::msg::{Envelope, Ep, Msg, Payload, CONTROL_MSG_BYTES};
+use super::protocol::{PayloadKind, ProtocolSpec};
 use super::scheduler::{CostModel, PeState};
 use super::time::Time;
 use super::topology::{NodeId, Pe, Placement, Topology};
@@ -156,6 +157,13 @@ pub struct Core {
     n_msgs: u64,
     flushed_tasks: u64,
     flushed_msgs: u64,
+    /// Declared protocols by collection id (see [`Core::register_protocol`]).
+    /// Debug builds validate every send to a registered collection;
+    /// collections without a spec (test chares, drivers) are exempt.
+    protocols: HashMap<u32, ProtocolSpec>,
+    /// The chare whose completed task is currently flushing its sends,
+    /// named in protocol-violation panics; `None` means driver-injected.
+    debug_sender: Option<ChareRef>,
 }
 
 struct FutureState {
@@ -191,8 +199,77 @@ impl Core {
         }
     }
 
+    /// Declare `cid`'s message protocol. From then on (in debug builds)
+    /// every send addressed to the collection is validated against the
+    /// spec at enqueue time — see [`Core::validate_send`].
+    pub fn register_protocol(&mut self, cid: CollectionId, spec: ProtocolSpec) {
+        self.protocols.insert(cid.0, spec);
+    }
+
+    /// Name the currently-flushing sender for violation messages.
+    fn sender_name(&self) -> String {
+        match self.debug_sender {
+            Some(s) => match self.protocols.get(&s.collection.0) {
+                Some(spec) => format!("{}[{}]", spec.chare, s.index),
+                None => format!("{s:?}"),
+            },
+            None => "driver".to_string(),
+        }
+    }
+
+    /// Debug-build check of one enqueued send against the registered
+    /// protocol of its destination (compiled out of release builds).
+    /// Turns the receiver-side downcast panic into a structured error
+    /// naming the sending chare, the EP constant, and both type names.
+    fn validate_send(&self, env: &Envelope) {
+        if !cfg!(debug_assertions) {
+            return;
+        }
+        if env.msg.ep == EP_ON_MIGRATED {
+            return; // engine-internal arrival hook, never declared
+        }
+        let Some(spec) = self.protocols.get(&env.to.collection.0) else {
+            return;
+        };
+        let Some(h) = spec.handler(env.msg.ep) else {
+            panic!(
+                "protocol violation: {} sends undeclared ep {} to {}[{}]",
+                self.sender_name(),
+                env.msg.ep,
+                spec.chare,
+                env.to.index
+            );
+        };
+        let sent_id = match env.msg.payload.value_type_id() {
+            // Pure signals pass everywhere: broadcasts and completion
+            // callbacks legitimately deliver no payload, and an empty
+            // payload where one was expected still panics in `Msg::take`
+            // with full EP/target context.
+            None => return,
+            Some(id) if id == TypeId::of::<()>() => return, // signal-equivalent
+            Some(id) => id,
+        };
+        let ok = match h.payload {
+            PayloadKind::Any => true,
+            PayloadKind::Signal => false,
+            PayloadKind::Type { id, .. } => id == sent_id,
+        };
+        if !ok {
+            panic!(
+                "protocol violation: {} -> {}[{}].{}: sent {}, handler decodes {}",
+                self.sender_name(),
+                spec.chare,
+                env.to.index,
+                h.name,
+                env.msg.payload.type_name(),
+                h.payload.name()
+            );
+        }
+    }
+
     /// Schedule a send departing at `t` from `from`.
     fn schedule_send(&mut self, t: Time, env: Envelope, class: Transfer) {
+        self.validate_send(&env);
         self.n_msgs += 1;
         let dest = self.first_hop(env.from_pe, env.to);
         let delay = match self.clock {
@@ -212,7 +289,7 @@ impl Core {
             Callback::Chare { to, ep } => {
                 let env = Envelope {
                     to,
-                    msg: Msg { ep, payload },
+                    msg: Msg::from_payload(ep, payload),
                     wire_bytes: CONTROL_MSG_BYTES,
                     from_pe,
                 };
@@ -222,7 +299,7 @@ impl Core {
                 let to = ChareRef::new(collection, pe.0);
                 let env = Envelope {
                     to,
-                    msg: Msg { ep, payload },
+                    msg: Msg::from_payload(ep, payload),
                     wire_bytes: CONTROL_MSG_BYTES,
                     from_pe,
                 };
@@ -234,7 +311,7 @@ impl Core {
                     let to = ChareRef::new(collection, i);
                     let env = Envelope {
                         to,
-                        msg: Msg { ep, payload: Payload::empty() },
+                        msg: Msg::signal(ep),
                         wire_bytes: CONTROL_MSG_BYTES,
                         from_pe,
                     };
@@ -442,7 +519,7 @@ impl<'a> Ctx<'a> {
         class: Transfer,
     ) {
         self.sends.push((
-            Envelope { to, msg: Msg { ep, payload }, wire_bytes, from_pe: self.pe },
+            Envelope { to, msg: Msg::from_payload(ep, payload), wire_bytes, from_pe: self.pe },
             class,
         ));
     }
@@ -502,6 +579,12 @@ impl<'a> Ctx<'a> {
         cid
     }
 
+    /// Declare a dynamically created collection's message protocol; see
+    /// [`Core::register_protocol`].
+    pub fn register_protocol(&mut self, cid: CollectionId, spec: ProtocolSpec) {
+        self.core.register_protocol(cid, spec);
+    }
+
     /// Deterministic per-run RNG.
     pub fn rng(&mut self) -> &mut Pcg32 {
         &mut self.core.rng
@@ -554,6 +637,8 @@ impl Engine {
                 n_msgs: 0,
                 flushed_tasks: 0,
                 flushed_msgs: 0,
+                protocols: HashMap::new(),
+                debug_sender: None,
             },
         }
     }
@@ -639,6 +724,12 @@ impl Engine {
     /// Take a future's deliveries (time, payload).
     pub fn take_future(&mut self, id: FutureId) -> Vec<(Time, Payload)> {
         std::mem::take(&mut self.core.futures[id.0 as usize].arrived)
+    }
+
+    /// Declare a collection's message protocol (driver-side); see
+    /// [`Core::register_protocol`].
+    pub fn register_protocol(&mut self, cid: CollectionId, spec: ProtocolSpec) {
+        self.core.register_protocol(cid, spec);
     }
 
     /// Inject a message from "outside" (driver code) at the current time.
@@ -881,10 +972,12 @@ impl Engine {
         if ctx.core.clock == ClockMode::Wall {
             ctx.wall_start = Some(Instant::now());
         }
-        if env.msg.ep == EP_ON_MIGRATED {
+        let mut msg = env.msg;
+        msg.target = Some(to); // diagnostic context for `Msg::take` panics
+        if msg.ep == EP_ON_MIGRATED {
             chare.on_migrated(&mut ctx);
         } else {
-            chare.receive(&mut ctx, env.msg);
+            chare.receive(&mut ctx, msg);
         }
 
         let advanced = match ctx.wall_start {
@@ -910,13 +1003,16 @@ impl Engine {
             self.put(cref, boxed);
         }
 
-        // Communications depart at task completion.
+        // Communications depart at task completion. The flushing chare is
+        // recorded so a protocol-violation panic can name its sender.
+        self.core.debug_sender = Some(to);
         for (env, class) in sends {
             self.core.schedule_send(done_t, env, class);
         }
         for (cb, payload) in fires {
             self.core.fire_at(done_t, cb, payload, pe);
         }
+        self.core.debug_sender = None;
 
         // Migration or reinsertion.
         match migrate_to {

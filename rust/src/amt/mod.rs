@@ -15,6 +15,8 @@
 //!   migrating chares (extra forwarding hops are charged to the network
 //!   model, as in Charm++),
 //! * [`callback`] — `CkCallback`-style continuations,
+//! * [`protocol`] — declared per-chare message protocols, verified
+//!   sound at boot and enforced per-send in debug builds,
 //! * [`topology`] — node/PE shapes and placement policies.
 
 pub mod callback;
@@ -22,6 +24,7 @@ pub mod chare;
 pub mod engine;
 pub mod location;
 pub mod msg;
+pub mod protocol;
 pub mod scheduler;
 pub mod time;
 pub mod topology;

@@ -1,6 +1,6 @@
 //! Messages: asynchronous method invocations between chares.
 
-use std::any::Any;
+use std::any::{Any, TypeId};
 
 use super::chare::ChareRef;
 use super::topology::Pe;
@@ -14,47 +14,76 @@ pub type Ep = u32;
 /// Everything runs in one address space, so payloads move as boxed values
 /// (the cost of serialization/wire transfer is *modeled* by the network
 /// layer using the envelope's `wire_bytes`, matching how Charm++ charges
-/// for marshalling without us actually re-encoding).
-pub struct Payload(Option<Box<dyn Any + Send>>);
+/// for marshalling without us actually re-encoding). The wrapped value's
+/// type name rides along so a mismatched downcast can name what was
+/// actually sent, not just what the receiver wanted.
+pub struct Payload {
+    value: Option<Box<dyn Any + Send>>,
+    type_name: &'static str,
+}
 
 impl Payload {
     /// Wrap a value.
     pub fn new<T: Any + Send>(v: T) -> Payload {
-        Payload(Some(Box::new(v)))
+        Payload { value: Some(Box::new(v)), type_name: std::any::type_name::<T>() }
     }
 
     /// An empty payload (pure signal).
     pub fn empty() -> Payload {
-        Payload(None)
+        Payload { value: None, type_name: "(none)" }
     }
 
     /// Whether a value is present.
     pub fn is_empty(&self) -> bool {
-        self.0.is_none()
+        self.value.is_none()
+    }
+
+    /// The wrapped value's type name (`"(none)"` when empty).
+    pub fn type_name(&self) -> &'static str {
+        self.type_name
+    }
+
+    /// The wrapped value's `TypeId`, if a value is present.
+    pub fn value_type_id(&self) -> Option<TypeId> {
+        self.value.as_ref().map(|b| (**b).type_id())
     }
 
     /// Take the value out, panicking on type mismatch — a message sent to
     /// the wrong entry point is a programming error, as in Charm++.
     pub fn take<T: Any>(&mut self) -> T {
-        let boxed = self.0.take().expect("payload already taken / empty");
-        *boxed.downcast::<T>().unwrap_or_else(|b| {
-            panic!(
-                "payload type mismatch: wanted {}, got {:?}",
-                std::any::type_name::<T>(),
-                (*b).type_id()
-            )
-        })
+        self.try_take().unwrap_or_else(|e| panic!("{e}"))
+    }
+
+    /// Take the value out, reporting mismatch / absence as an error that
+    /// names both the wanted and the actually-sent type.
+    pub fn try_take<T: Any>(&mut self) -> Result<T, String> {
+        let sent = self.type_name;
+        let boxed = match self.value.take() {
+            Some(b) => b,
+            None => return Err("payload already taken / empty".to_string()),
+        };
+        match boxed.downcast::<T>() {
+            Ok(v) => Ok(*v),
+            Err(_) => Err(format!(
+                "payload type mismatch: wanted {}, got {sent}",
+                std::any::type_name::<T>()
+            )),
+        }
     }
 
     /// Borrow the value without consuming it.
     pub fn peek<T: Any>(&self) -> Option<&T> {
-        self.0.as_ref()?.downcast_ref::<T>()
+        self.value.as_ref()?.downcast_ref::<T>()
     }
 }
 
 impl std::fmt::Debug for Payload {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "Payload({})", if self.0.is_some() { "some" } else { "empty" })
+        if self.value.is_some() {
+            write!(f, "Payload({})", self.type_name)
+        } else {
+            write!(f, "Payload(empty)")
+        }
     }
 }
 
@@ -63,20 +92,33 @@ impl std::fmt::Debug for Payload {
 pub struct Msg {
     pub ep: Ep,
     pub payload: Payload,
+    /// The chare this message was delivered to, stamped by the scheduler
+    /// just before `receive`. Diagnostic only: a mismatched `take` in a
+    /// receive arm can then name the exact endpoint, not just the types.
+    pub target: Option<ChareRef>,
 }
 
 impl Msg {
     pub fn new<T: Any + Send>(ep: Ep, v: T) -> Msg {
-        Msg { ep, payload: Payload::new(v) }
+        Msg { ep, payload: Payload::new(v), target: None }
     }
 
     pub fn signal(ep: Ep) -> Msg {
-        Msg { ep, payload: Payload::empty() }
+        Msg { ep, payload: Payload::empty(), target: None }
     }
 
-    /// Shorthand for `self.payload.take()`.
+    pub fn from_payload(ep: Ep, payload: Payload) -> Msg {
+        Msg { ep, payload, target: None }
+    }
+
+    /// Shorthand for `self.payload.take()`, with the message's EP and
+    /// delivery target appended to any failure so a protocol violation
+    /// that slips past the registry is diagnosable from the panic alone.
     pub fn take<T: Any>(&mut self) -> T {
-        self.payload.take()
+        self.payload.try_take().unwrap_or_else(|e| match self.target {
+            Some(to) => panic!("{e} (ep {} -> {to:?})", self.ep),
+            None => panic!("{e} (ep {})", self.ep),
+        })
     }
 }
 
@@ -123,9 +165,28 @@ mod tests {
     }
 
     #[test]
+    fn mismatch_names_both_types() {
+        let mut p = Payload::new(1u32);
+        let err = p.try_take::<String>().unwrap_err();
+        assert!(err.contains("wanted") && err.contains("u32"), "{err}");
+    }
+
+    #[test]
+    fn msg_take_appends_ep_context() {
+        let mut m = Msg::new(9, 1u32);
+        m.target = Some(ChareRef::new(super::super::chare::CollectionId(3), 4));
+        let got = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _: String = m.take();
+        }));
+        let err = *got.unwrap_err().downcast::<String>().unwrap();
+        assert!(err.contains("type mismatch") && err.contains("ep 9"), "{err}");
+    }
+
+    #[test]
     fn signal_is_empty() {
         let m = Msg::signal(7);
         assert_eq!(m.ep, 7);
         assert!(m.payload.is_empty());
+        assert_eq!(m.payload.type_name(), "(none)");
     }
 }

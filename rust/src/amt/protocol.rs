@@ -1,0 +1,444 @@
+//! Declared message protocols: which entry points each chare type
+//! handles, what payload type each entry point decodes, and which entry
+//! points each chare type sends.
+//!
+//! The AMT message fabric is untyped — [`Ep`](super::msg::Ep) is a bare
+//! `u32` and [`Payload`](super::msg::Payload) erases the value behind
+//! `dyn Any` — so a mis-wired endpoint is normally caught only when a
+//! test happens to deliver that exact message and the receiver's
+//! downcast panics. This module turns the protocol into data:
+//!
+//! * Each chare-bearing module exports a `protocol_spec()` returning a
+//!   [`ProtocolSpec`]: the chare's handled entry points (with payload
+//!   types, via [`PayloadKind::of`]) and its declared send sites. Use
+//!   the [`ep_spec!`](crate::ep_spec) / [`send_spec!`](crate::send_spec)
+//!   macros so the EP constant's *name* travels with its value — both
+//!   the boot-time verifier and `ckio-lint` report by name.
+//! * [`builtin_table`] collects every in-tree spec into a
+//!   [`ProtocolTable`]; [`verify`] proves the table sound: no duplicate
+//!   EP value within a chare, every declared send names a chare that
+//!   exists, handles that EP, and decodes the same payload type.
+//!   `CkIo::boot` runs it on every boot.
+//! * In debug builds the engine additionally validates each enqueued
+//!   send against the registered specs (see `Core::validate_send`),
+//!   turning the receiver-side downcast panic into a structured error
+//!   naming the sending chare, the EP constant, and both type names.
+//!
+//! The `sends` list declares a module's *direct* `ctx.send*` sites.
+//! Callback fires (`ctx.fire`) are wired at runtime by whoever built the
+//! [`Callback`](super::callback::Callback), so they are covered by the
+//! engine's enqueue-time validation rather than by static declaration.
+//!
+//! Maintenance rule (see ROADMAP.md): any change to a chare's message
+//! protocol — a new EP, a changed payload type, a new send site — must
+//! update that module's `protocol_spec()` in the same commit. The
+//! boot-time verifier and the `ckio-lint` source pass (tier-1 tests and
+//! CI) both fail otherwise.
+
+use std::any::TypeId;
+use std::collections::HashMap;
+use std::fmt;
+
+use super::msg::Ep;
+
+/// What a declared entry point carries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PayloadKind {
+    /// No payload (or the unit payload `()`, which the engine treats as
+    /// signal-equivalent).
+    Signal,
+    /// Exactly one concrete payload type.
+    Type {
+        id: TypeId,
+        name: &'static str,
+    },
+    /// Deliberately polymorphic: more than one concrete type arrives on
+    /// this EP (e.g. open-completion callbacks deliver a handle on
+    /// success and an error value on failure). The handler is expected
+    /// to probe before downcasting; neither the verifier nor the engine
+    /// constrains the payload.
+    Any,
+}
+
+impl PayloadKind {
+    /// The kind for one concrete payload type.
+    pub fn of<T: 'static>() -> PayloadKind {
+        PayloadKind::Type { id: TypeId::of::<T>(), name: std::any::type_name::<T>() }
+    }
+
+    /// Full payload type name (or a `(signal)` / `(any)` marker).
+    pub fn name(&self) -> &'static str {
+        match self {
+            PayloadKind::Signal => "(signal)",
+            PayloadKind::Type { name, .. } => name,
+            PayloadKind::Any => "(any)",
+        }
+    }
+
+    /// Last path segment of the payload type name — what source code
+    /// (and the protocol table in `docs/PROTOCOL.md`) calls the type.
+    pub fn short_name(&self) -> &'static str {
+        short_type_name(self.name())
+    }
+}
+
+/// Last `::` segment of a type path; tuples and markers pass through.
+pub fn short_type_name(name: &'static str) -> &'static str {
+    if name.starts_with('(') || name.ends_with('>') {
+        return name;
+    }
+    name.rsplit("::").next().unwrap_or(name)
+}
+
+/// One entry point a chare handles. Build with [`ep_spec!`](crate::ep_spec).
+#[derive(Clone, Debug)]
+pub struct EpSpec {
+    pub ep: Ep,
+    /// The `EP_*` constant's name.
+    pub name: &'static str,
+    pub payload: PayloadKind,
+}
+
+/// One entry point a chare sends. Build with [`send_spec!`](crate::send_spec).
+#[derive(Clone, Debug)]
+pub struct SendSpec {
+    /// The *chare name* of the receiver (EP values are only unique
+    /// within a chare type, so the target cannot be inferred from the
+    /// EP alone).
+    pub target: &'static str,
+    pub ep: Ep,
+    pub name: &'static str,
+    pub payload: PayloadKind,
+}
+
+/// One chare type's declared protocol.
+#[derive(Clone, Debug)]
+pub struct ProtocolSpec {
+    /// Chare type name (`"Director"`, `"BufferChare"`, …).
+    pub chare: &'static str,
+    /// Defining source file, relative to `rust/src`
+    /// (`"ckio/director.rs"`). `ckio-lint` cross-checks the spec
+    /// against this file.
+    pub module: &'static str,
+    pub handles: Vec<EpSpec>,
+    pub sends: Vec<SendSpec>,
+}
+
+impl ProtocolSpec {
+    /// The handled-EP entry for `ep`, if declared.
+    pub fn handler(&self, ep: Ep) -> Option<&EpSpec> {
+        self.handles.iter().find(|h| h.ep == ep)
+    }
+}
+
+/// All declared protocols of one build.
+#[derive(Clone, Debug, Default)]
+pub struct ProtocolTable {
+    pub specs: Vec<ProtocolSpec>,
+}
+
+impl ProtocolTable {
+    pub fn push(&mut self, spec: ProtocolSpec) {
+        self.specs.push(spec);
+    }
+
+    pub fn get(&self, chare: &str) -> Option<&ProtocolSpec> {
+        self.specs.iter().find(|s| s.chare == chare)
+    }
+}
+
+/// A soundness violation found by [`verify`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ProtocolError {
+    /// Two specs claim the same chare name.
+    DuplicateChare { chare: &'static str },
+    /// Two handled entry points of one chare share an EP value.
+    DuplicateEp { chare: &'static str, ep: Ep, first: &'static str, second: &'static str },
+    /// A declared send names a chare no spec declares.
+    UnknownTarget { chare: &'static str, ep_name: &'static str, target: &'static str },
+    /// A declared send's target does not handle that EP value.
+    UnhandledSend { chare: &'static str, ep_name: &'static str, ep: Ep, target: &'static str },
+    /// A declared send's payload type differs from the target handler's.
+    PayloadMismatch {
+        chare: &'static str,
+        ep_name: &'static str,
+        target: &'static str,
+        sent: &'static str,
+        handled: &'static str,
+    },
+}
+
+impl fmt::Display for ProtocolError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtocolError::DuplicateChare { chare } => {
+                write!(f, "duplicate protocol spec for chare {chare}")
+            }
+            ProtocolError::DuplicateEp { chare, ep, first, second } => {
+                write!(f, "{chare}: {first} and {second} share EP value {ep}")
+            }
+            ProtocolError::UnknownTarget { chare, ep_name, target } => {
+                write!(f, "{chare}: send {ep_name} targets unknown chare {target}")
+            }
+            ProtocolError::UnhandledSend { chare, ep_name, ep, target } => {
+                write!(f, "{chare}: send {ep_name} (ep {ep}) is not handled by {target}")
+            }
+            ProtocolError::PayloadMismatch { chare, ep_name, target, sent, handled } => {
+                write!(
+                    f,
+                    "{chare}: send {ep_name} carries {sent} but {target} decodes {handled}"
+                )
+            }
+        }
+    }
+}
+
+/// Render a verification failure as one line per error.
+pub fn format_errors(errs: &[ProtocolError]) -> String {
+    let lines: Vec<String> = errs.iter().map(|e| format!("  - {e}")).collect();
+    format!("protocol table unsound ({} errors):\n{}", errs.len(), lines.join("\n"))
+}
+
+/// Is a declared send payload compatible with the target's handler?
+fn compatible(sent: &PayloadKind, handled: &PayloadKind) -> bool {
+    match (sent, handled) {
+        (PayloadKind::Any, _) | (_, PayloadKind::Any) => true,
+        (PayloadKind::Signal, PayloadKind::Signal) => true,
+        (PayloadKind::Type { id: a, .. }, PayloadKind::Type { id: b, .. }) => a == b,
+        _ => false,
+    }
+}
+
+/// Prove a protocol table sound. Returns every violation, not just the
+/// first, so one boot failure reports the whole protocol drift.
+pub fn verify(table: &ProtocolTable) -> Result<(), Vec<ProtocolError>> {
+    let mut errs = Vec::new();
+    let mut by_name: HashMap<&'static str, &ProtocolSpec> = HashMap::new();
+    for spec in &table.specs {
+        if by_name.insert(spec.chare, spec).is_some() {
+            errs.push(ProtocolError::DuplicateChare { chare: spec.chare });
+        }
+    }
+    for spec in &table.specs {
+        let mut seen: HashMap<Ep, &'static str> = HashMap::new();
+        for h in &spec.handles {
+            if let Some(first) = seen.insert(h.ep, h.name) {
+                errs.push(ProtocolError::DuplicateEp {
+                    chare: spec.chare,
+                    ep: h.ep,
+                    first,
+                    second: h.name,
+                });
+            }
+        }
+        for s in &spec.sends {
+            let Some(target) = by_name.get(s.target) else {
+                errs.push(ProtocolError::UnknownTarget {
+                    chare: spec.chare,
+                    ep_name: s.name,
+                    target: s.target,
+                });
+                continue;
+            };
+            let Some(handler) = target.handler(s.ep) else {
+                errs.push(ProtocolError::UnhandledSend {
+                    chare: spec.chare,
+                    ep_name: s.name,
+                    ep: s.ep,
+                    target: s.target,
+                });
+                continue;
+            };
+            if !compatible(&s.payload, &handler.payload) {
+                errs.push(ProtocolError::PayloadMismatch {
+                    chare: spec.chare,
+                    ep_name: s.name,
+                    target: s.target,
+                    sent: s.payload.short_name(),
+                    handled: handler.payload.short_name(),
+                });
+            }
+        }
+    }
+    if errs.is_empty() {
+        Ok(())
+    } else {
+        Err(errs)
+    }
+}
+
+/// Every in-tree chare's declared protocol. New chare modules must add
+/// their `protocol_spec()` here (and `ckio-lint` will refuse specs whose
+/// declared module file disagrees with the code).
+pub fn builtin_table() -> ProtocolTable {
+    let mut t = ProtocolTable::default();
+    for spec in [
+        crate::ckio::director::protocol_spec(),
+        crate::ckio::manager::protocol_spec(),
+        crate::ckio::assembler::protocol_spec(),
+        crate::ckio::buffer::protocol_spec(),
+        crate::ckio::shard::protocol_spec(),
+        crate::harness::bgwork::protocol_spec(),
+        crate::harness::experiments::slice_reader_protocol_spec(),
+        crate::harness::experiments::collector_protocol_spec(),
+        crate::harness::experiments::mig_client_protocol_spec(),
+        crate::harness::experiments::concurrent_client_protocol_spec(),
+        crate::baselines::naive::protocol_spec(),
+        crate::baselines::collective::protocol_spec(),
+        crate::apps::changa::treepiece::protocol_spec(),
+    ] {
+        t.push(spec);
+    }
+    t
+}
+
+/// Build an [`EpSpec`] whose `name` is the spelled-out constant.
+///
+/// ```ignore
+/// ep_spec!(EP_BUF_DATA, PayloadKind::of::<IoResult>())
+/// ```
+#[macro_export]
+macro_rules! ep_spec {
+    ($ep:expr, $kind:expr) => {
+        $crate::amt::protocol::EpSpec { ep: $ep, name: stringify!($ep), payload: $kind }
+    };
+}
+
+/// Build a [`SendSpec`] whose `name` is the spelled-out constant.
+///
+/// ```ignore
+/// send_spec!("ReadAssembler", EP_A_PIECE, PayloadKind::of::<PieceMsg>())
+/// ```
+#[macro_export]
+macro_rules! send_spec {
+    ($target:expr, $ep:expr, $kind:expr) => {
+        $crate::amt::protocol::SendSpec {
+            target: $target,
+            ep: $ep,
+            name: stringify!($ep),
+            payload: $kind,
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::{ep_spec, send_spec};
+
+    struct FooMsg;
+    struct BarMsg;
+
+    const EP_A: Ep = 1;
+    const EP_B: Ep = 2;
+
+    fn receiver() -> ProtocolSpec {
+        ProtocolSpec {
+            chare: "Receiver",
+            module: "tests/receiver.rs",
+            handles: vec![
+                ep_spec!(EP_A, PayloadKind::of::<FooMsg>()),
+                ep_spec!(EP_B, PayloadKind::Signal),
+            ],
+            sends: vec![],
+        }
+    }
+
+    fn table_of(specs: Vec<ProtocolSpec>) -> ProtocolTable {
+        let mut t = ProtocolTable::default();
+        for s in specs {
+            t.push(s);
+        }
+        t
+    }
+
+    #[test]
+    fn sound_table_verifies() {
+        let sender = ProtocolSpec {
+            chare: "Sender",
+            module: "tests/sender.rs",
+            handles: vec![ep_spec!(EP_B, PayloadKind::Signal)],
+            sends: vec![
+                send_spec!("Receiver", EP_A, PayloadKind::of::<FooMsg>()),
+                send_spec!("Receiver", EP_B, PayloadKind::Signal),
+            ],
+        };
+        assert!(verify(&table_of(vec![receiver(), sender])).is_ok());
+    }
+
+    #[test]
+    fn duplicate_ep_rejected() {
+        let mut r = receiver();
+        r.handles.push(ep_spec!(EP_A, PayloadKind::Signal));
+        let errs = verify(&table_of(vec![r])).unwrap_err();
+        assert!(
+            matches!(errs[0], ProtocolError::DuplicateEp { ep: 1, .. }),
+            "wrong error: {errs:?}"
+        );
+    }
+
+    #[test]
+    fn undeclared_send_rejected() {
+        let sender = ProtocolSpec {
+            chare: "Sender",
+            module: "tests/sender.rs",
+            handles: vec![],
+            sends: vec![
+                send_spec!("Nobody", EP_A, PayloadKind::Signal),
+                send_spec!("Receiver", 99, PayloadKind::Signal),
+            ],
+        };
+        let errs = verify(&table_of(vec![receiver(), sender])).unwrap_err();
+        assert_eq!(errs.len(), 2, "{errs:?}");
+        assert!(matches!(errs[0], ProtocolError::UnknownTarget { target: "Nobody", .. }));
+        assert!(matches!(errs[1], ProtocolError::UnhandledSend { ep: 99, .. }));
+    }
+
+    #[test]
+    fn payload_mismatch_rejected() {
+        let sender = ProtocolSpec {
+            chare: "Sender",
+            module: "tests/sender.rs",
+            handles: vec![],
+            sends: vec![send_spec!("Receiver", EP_A, PayloadKind::of::<BarMsg>())],
+        };
+        let errs = verify(&table_of(vec![receiver(), sender])).unwrap_err();
+        assert!(
+            matches!(errs[0], ProtocolError::PayloadMismatch { handled: "FooMsg", .. }),
+            "wrong error: {errs:?}"
+        );
+        let line = format!("{}", errs[0]);
+        assert!(line.contains("BarMsg") && line.contains("FooMsg"), "{line}");
+    }
+
+    #[test]
+    fn any_is_compatible_with_everything() {
+        let sender = ProtocolSpec {
+            chare: "Sender",
+            module: "tests/sender.rs",
+            handles: vec![],
+            sends: vec![
+                send_spec!("Receiver", EP_A, PayloadKind::Any),
+                send_spec!("Receiver", EP_B, PayloadKind::Any),
+            ],
+        };
+        assert!(verify(&table_of(vec![receiver(), sender])).is_ok());
+    }
+
+    #[test]
+    fn builtin_table_is_sound() {
+        let table = builtin_table();
+        assert!(table.specs.len() >= 13, "missing specs: {}", table.specs.len());
+        if let Err(errs) = verify(&table) {
+            panic!("{}", format_errors(&errs));
+        }
+    }
+
+    #[test]
+    fn short_names() {
+        assert_eq!(PayloadKind::of::<FooMsg>().short_name(), "FooMsg");
+        assert_eq!(PayloadKind::of::<u64>().short_name(), "u64");
+        assert_eq!(PayloadKind::of::<(u32, u8)>().short_name(), "(u32, u8)");
+        assert_eq!(PayloadKind::Signal.short_name(), "(signal)");
+    }
+}

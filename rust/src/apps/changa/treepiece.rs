@@ -18,6 +18,7 @@ use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg, Payload};
+use crate::amt::protocol::{PayloadKind, ProtocolSpec};
 use crate::amt::time::Time;
 use crate::ckio::{CkIo, ReadResult, Session};
 use crate::impl_chare_any;
@@ -25,6 +26,7 @@ use crate::net::Transfer;
 use crate::pfs::backend::{IoResult, ReadRequest};
 use crate::pfs::layout::FileId;
 use crate::util::bytes::Chunk;
+use crate::{ep_spec, send_spec};
 
 use super::gravity::{GravityCompute, PieceState};
 use super::tipsy::{Header, HEADER_BYTES, RECORD_BYTES};
@@ -204,6 +206,32 @@ impl TreePiece {
             out.extend_from_slice(c.bytes.as_ref().expect("materialized input"));
         }
         out
+    }
+}
+
+/// The piece's declared message protocol (see [`crate::amt::protocol`]).
+/// `EP_TP_CKOPENED` is `Any`: the open callback delivers the library's
+/// handle-or-error payload, which this module deliberately ignores.
+pub fn protocol_spec() -> ProtocolSpec {
+    ProtocolSpec {
+        chare: "TreePiece",
+        module: "apps/changa/treepiece.rs",
+        handles: vec![
+            ep_spec!(EP_TP_GO, PayloadKind::Signal),
+            ep_spec!(EP_TP_OPENED, PayloadKind::Signal),
+            ep_spec!(EP_TP_RAW, PayloadKind::of::<IoResult>()),
+            ep_spec!(EP_TP_PARTICLES, PayloadKind::of::<Chunk>()),
+            ep_spec!(EP_TP_SESSION, PayloadKind::of::<Session>()),
+            ep_spec!(EP_TP_CKDATA, PayloadKind::of::<ReadResult>()),
+            ep_spec!(EP_TP_CKOPENED, PayloadKind::Any),
+            ep_spec!(EP_TP_STEP, PayloadKind::of::<Callback>()),
+            ep_spec!(EP_TP_MOMENTS, PayloadKind::of::<MomentsMsg>()),
+        ],
+        sends: vec![
+            send_spec!("TreePiece", EP_TP_PARTICLES, PayloadKind::of::<Chunk>()),
+            send_spec!("TreePiece", EP_TP_SESSION, PayloadKind::of::<Session>()),
+            send_spec!("TreePiece", EP_TP_MOMENTS, PayloadKind::of::<MomentsMsg>()),
+        ],
     }
 }
 

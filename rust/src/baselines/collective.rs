@@ -21,11 +21,13 @@ use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg, Payload};
+use crate::amt::protocol::{PayloadKind, ProtocolSpec};
 use crate::impl_chare_any;
 use crate::net::Transfer;
 use crate::pfs::backend::{IoResult, ReadRequest};
 use crate::pfs::layout::FileId;
 use crate::util::bytes::Chunk;
+use crate::{ep_spec, send_spec};
 
 /// Driver: begin the collective read (sent to every rank).
 pub const EP_C_GO: Ep = 1;
@@ -174,6 +176,26 @@ impl MpiRank {
                 Transfer::Eager,
             );
         }
+    }
+}
+
+/// The rank's declared message protocol (see [`crate::amt::protocol`]).
+/// Any change to its EPs, payload types, or send sites must update this
+/// spec in the same commit.
+pub fn protocol_spec() -> ProtocolSpec {
+    ProtocolSpec {
+        chare: "MpiRank",
+        module: "baselines/collective.rs",
+        handles: vec![
+            ep_spec!(EP_C_GO, PayloadKind::Signal),
+            ep_spec!(EP_C_NEED, PayloadKind::of::<NeedMsg>()),
+            ep_spec!(EP_C_DATA, PayloadKind::of::<IoResult>()),
+            ep_spec!(EP_C_PIECE, PayloadKind::of::<PieceMsg>()),
+        ],
+        sends: vec![
+            send_spec!("MpiRank", EP_C_NEED, PayloadKind::of::<NeedMsg>()),
+            send_spec!("MpiRank", EP_C_PIECE, PayloadKind::of::<PieceMsg>()),
+        ],
     }
 }
 

@@ -15,6 +15,8 @@ use crate::amt::callback::Callback;
 use crate::amt::chare::Chare;
 use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg, Payload};
+use crate::amt::protocol::{PayloadKind, ProtocolSpec};
+use crate::ep_spec;
 use crate::impl_chare_any;
 use crate::pfs::backend::{IoResult, ReadRequest};
 use crate::pfs::layout::FileId;
@@ -43,6 +45,21 @@ pub struct NaiveClient {
 impl NaiveClient {
     pub fn new(file: FileId, offset: u64, len: u64, done: Callback) -> NaiveClient {
         NaiveClient { file, offset, len, block_pe: false, verify: false, done, io_issued_at: 0 }
+    }
+}
+
+/// The client's declared message protocol (see [`crate::amt::protocol`]).
+/// All of its inbound traffic arrives via callbacks (no direct sends).
+pub fn protocol_spec() -> ProtocolSpec {
+    ProtocolSpec {
+        chare: "NaiveClient",
+        module: "baselines/naive.rs",
+        handles: vec![
+            ep_spec!(EP_N_GO, PayloadKind::Signal),
+            ep_spec!(EP_N_OPENED, PayloadKind::Signal),
+            ep_spec!(EP_N_DATA, PayloadKind::of::<IoResult>()),
+        ],
+        sends: vec![],
     }
 }
 

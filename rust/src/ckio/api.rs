@@ -124,6 +124,17 @@ impl CkIo {
         );
         patch_director::<Manager>(engine, managers, npes, director, |m| &mut m.director);
         patch_director::<DataShard>(engine, shards, nshards, director, |s| &mut s.director);
+        // Prove the declared EP graph sound before any message can flow,
+        // and arm the engine's per-send validation (debug builds) for
+        // every service collection. Buffer arrays are registered by the
+        // director when it creates them, per session.
+        if let Err(errs) = crate::amt::protocol::verify(&crate::amt::protocol::builtin_table()) {
+            panic!("{}", crate::amt::protocol::format_errors(&errs));
+        }
+        engine.register_protocol(director.collection, super::director::protocol_spec());
+        engine.register_protocol(managers, super::manager::protocol_spec());
+        engine.register_protocol(assemblers, super::assembler::protocol_spec());
+        engine.register_protocol(shards, super::shard::protocol_spec());
         // Configure the *active* shards (inactive ones never see
         // traffic): store-budget share and governor, applied directly to
         // the chare structs — boot runs before any message, exactly like

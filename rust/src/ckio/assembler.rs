@@ -20,10 +20,12 @@ use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef};
 use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg, Payload};
+use crate::amt::protocol::{PayloadKind, ProtocolSpec};
 use crate::amt::time::Time;
 use crate::impl_chare_any;
 use crate::metrics::keys;
 use crate::util::bytes::Chunk;
+use crate::{ep_spec, send_spec};
 
 use super::buffer::{FetchMsg, PieceMsg, EP_BUF_FETCH};
 use super::session::{ClosedSessions, ReadResult, Session, SessionId, Tag};
@@ -75,7 +77,7 @@ impl ReadAssembler {
         ctx.metrics().count(keys::CKIO_READS, 1);
         ctx.metrics().count(keys::CKIO_BYTES, a.len);
         let latency = ctx.now().saturating_sub(a.started_at);
-        ctx.metrics().charge("ckio.assembly_latency", latency);
+        ctx.metrics().charge(keys::ASSEMBLY_LATENCY, latency);
         // One memcpy into the client's buffer (~80 GB/s), plus bookkeeping.
         ctx.advance(300 + (a.len as f64 * 0.0125) as Time);
         ctx.fire(
@@ -94,6 +96,22 @@ impl ReadAssembler {
     /// all sessions close).
     pub fn outstanding(&self) -> usize {
         self.assemblies.len()
+    }
+}
+
+/// The assembler's declared message protocol (see [`crate::amt::protocol`]).
+/// Any change to its EPs, payload types, or send sites must update this
+/// spec in the same commit.
+pub fn protocol_spec() -> ProtocolSpec {
+    ProtocolSpec {
+        chare: "ReadAssembler",
+        module: "ckio/assembler.rs",
+        handles: vec![
+            ep_spec!(EP_A_REQ, PayloadKind::of::<AssembleReq>()),
+            ep_spec!(EP_A_PIECE, PayloadKind::of::<PieceMsg>()),
+            ep_spec!(EP_A_SESSION_DROP, PayloadKind::of::<SessionId>()),
+        ],
+        sends: vec![send_spec!("BufferChare", EP_BUF_FETCH, PayloadKind::of::<FetchMsg>())],
     }
 }
 
@@ -153,7 +171,7 @@ impl Chare for ReadAssembler {
                         // Teardown race: this read already completed via
                         // the drain path and a duplicate/late piece
                         // arrived afterwards. Tolerated, never delivered.
-                        ctx.metrics().count("ckio.pieces_after_close", 1);
+                        ctx.metrics().count(keys::PIECES_AFTER_CLOSE, 1);
                         return;
                     }
                     panic!("piece for unknown assembly (tag reuse or drop race): {:?}", piece.tag);

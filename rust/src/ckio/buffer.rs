@@ -67,10 +67,12 @@ use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg, Payload};
+use crate::amt::protocol::{PayloadKind, ProtocolSpec};
 use crate::amt::time::{Time, MICROS};
 use crate::amt::topology::Pe;
 use crate::impl_chare_any;
 use crate::metrics::keys;
+use crate::{ep_spec, send_spec};
 use crate::net::Transfer;
 use crate::pfs::backend::{IoResult, ReadRequest};
 use crate::pfs::layout::FileId;
@@ -466,7 +468,7 @@ impl BufferChare {
         let chunk = self.extract(f.offset, f.len);
         let to = ChareRef::new(self.assemblers, f.reply_pe.0);
         let wire = chunk.len;
-        ctx.metrics().count("ckio.pieces_served", 1);
+        ctx.metrics().count(keys::PIECES_SERVED, 1);
         // Zero-copy: the runtime RDMA-gets the resident buffer; the chare
         // itself only touches descriptors.
         ctx.advance(MICROS / 2);
@@ -482,7 +484,7 @@ impl BufferChare {
     /// Answer a fetch that can no longer be served with data (teardown):
     /// a modeled NACK chunk so the assembly still completes exactly once.
     fn serve_nack(&self, ctx: &mut Ctx<'_>, f: &FetchMsg) {
-        ctx.metrics().count("ckio.pieces_nacked", 1);
+        ctx.metrics().count(keys::PIECES_NACKED, 1);
         let to = ChareRef::new(self.assemblers, f.reply_pe.0);
         ctx.send(
             to,
@@ -495,7 +497,7 @@ impl BufferChare {
     fn serve_peer(&self, ctx: &mut Ctx<'_>, f: &PeerFetchMsg) {
         let chunk = self.extract(f.offset, f.len);
         let wire = chunk.len;
-        ctx.metrics().count("ckio.store.peer_served", 1);
+        ctx.metrics().count(keys::STORE_PEER_SERVED, 1);
         ctx.advance(MICROS / 2);
         ctx.send_sized(
             f.reply,
@@ -509,7 +511,7 @@ impl BufferChare {
     /// Answer a peer fetch this chare can never serve (dropped / out of
     /// span): the requester falls back to its own PFS read.
     fn peer_miss(&self, ctx: &mut Ctx<'_>, f: &PeerFetchMsg) {
-        ctx.metrics().count("ckio.store.peer_miss", 1);
+        ctx.metrics().count(keys::STORE_PEER_MISS, 1);
         ctx.send(f.reply, EP_BUF_PEER_DATA, PeerDataMsg { slot: f.slot, len: f.len, chunk: None });
     }
 
@@ -543,7 +545,7 @@ impl BufferChare {
         self.completed += 1;
         if self.completed as usize == self.chunks.len() {
             let t = ctx.now() as f64;
-            ctx.metrics().set_max("ckio.last_io_ns", t);
+            ctx.metrics().set_max(keys::LAST_IO_NS, t);
         }
         self.serve_ready(ctx);
     }
@@ -622,6 +624,41 @@ impl BufferChare {
     /// Slots assigned to peer sources (tests).
     pub fn peer_slot_count(&self) -> usize {
         self.peer_slots.len()
+    }
+}
+
+/// The buffer chare's declared message protocol (see
+/// [`crate::amt::protocol`]). Any change to its EPs, payload types, or
+/// send sites must update this spec in the same commit.
+pub fn protocol_spec() -> ProtocolSpec {
+    use super::assembler::EP_A_PIECE;
+    use super::director::{EP_DIR_BUF_STARTED, EP_DIR_DROP_ACK};
+    ProtocolSpec {
+        chare: "BufferChare",
+        module: "ckio/buffer.rs",
+        handles: vec![
+            ep_spec!(EP_BUF_INIT, PayloadKind::Signal),
+            ep_spec!(EP_BUF_DATA, PayloadKind::of::<IoResult>()),
+            ep_spec!(EP_BUF_FETCH, PayloadKind::of::<FetchMsg>()),
+            ep_spec!(EP_BUF_DROP, PayloadKind::Signal),
+            ep_spec!(EP_BUF_PARK, PayloadKind::Signal),
+            ep_spec!(EP_BUF_REBIND, PayloadKind::of::<RebindMsg>()),
+            ep_spec!(EP_BUF_PEER_FETCH, PayloadKind::of::<PeerFetchMsg>()),
+            ep_spec!(EP_BUF_PEER_DATA, PayloadKind::of::<PeerDataMsg>()),
+            ep_spec!(EP_BUF_GRANT, PayloadKind::of::<GrantMsg>()),
+            ep_spec!(EP_BUF_PEERS, PayloadKind::of::<PeersMsg>()),
+        ],
+        sends: vec![
+            send_spec!("DataShard", EP_SHARD_REGISTER, PayloadKind::of::<RegisterMsg>()),
+            send_spec!("DataShard", EP_SHARD_UNCLAIM, PayloadKind::of::<UnclaimMsg>()),
+            send_spec!("DataShard", EP_SHARD_IO_REQ, PayloadKind::of::<IoReqMsg>()),
+            send_spec!("DataShard", EP_SHARD_IO_DONE, PayloadKind::of::<IoDoneMsg>()),
+            send_spec!("ReadAssembler", EP_A_PIECE, PayloadKind::of::<PieceMsg>()),
+            send_spec!("BufferChare", EP_BUF_PEER_FETCH, PayloadKind::of::<PeerFetchMsg>()),
+            send_spec!("BufferChare", EP_BUF_PEER_DATA, PayloadKind::of::<PeerDataMsg>()),
+            send_spec!("Director", EP_DIR_BUF_STARTED, PayloadKind::of::<BufStartedMsg>()),
+            send_spec!("Director", EP_DIR_DROP_ACK, PayloadKind::of::<BufDroppedMsg>()),
+        ],
     }
 }
 
@@ -782,11 +819,11 @@ impl Chare for BufferChare {
                     self.my_offset,
                     self.my_offset + self.my_len
                 );
-                ctx.metrics().count("ckio.fetches", 1);
+                ctx.metrics().count(keys::FETCHES, 1);
                 if self.state == BufState::Dropped {
                     // The fetch was in flight when the drop landed:
                     // flush-serve so its assembly still completes.
-                    ctx.metrics().count("ckio.fetch_after_drop", 1);
+                    ctx.metrics().count(keys::FETCH_AFTER_DROP, 1);
                     if self.have(f.offset, f.len) {
                         self.serve(ctx, &f);
                     } else {
@@ -862,7 +899,7 @@ impl Chare for BufferChare {
                 // class charges any tickets this chare still requests.
                 self.class = m.class;
                 self.state = BufState::Active;
-                ctx.metrics().count("ckio.buffers_rebound", 1);
+                ctx.metrics().count(keys::BUFFERS_REBOUND, 1);
                 ctx.advance(MICROS / 2);
                 // Resident data makes this chare immediately serviceable;
                 // any still-outstanding prefetch completions keep landing.

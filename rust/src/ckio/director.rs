@@ -47,9 +47,9 @@
 //! * **file close** — the owning shard purges the file's claims and
 //!   parked arrays (`EP_SHARD_PURGE`).
 //!
-//! The governor ticket protocol (`EP_DIR_IO_REQ`/`EP_DIR_IO_DONE` in
-//! PR 2) no longer exists here at all: buffers talk straight to their
-//! shard (`EP_SHARD_IO_REQ`/`EP_SHARD_IO_DONE`). Net effect: same-file
+//! The director-side governor ticket protocol of PR 2 no longer exists
+//! here at all: buffers talk straight to their shard
+//! (`EP_SHARD_IO_REQ`/`EP_SHARD_IO_DONE`). Net effect: same-file
 //! cooperation never crosses shards, and session churn over distinct
 //! files scales with the shard count instead of queueing on one chare.
 //!
@@ -77,10 +77,13 @@ use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg, Payload};
+use crate::amt::protocol::{PayloadKind, ProtocolSpec};
 use crate::amt::time::MICROS;
 use crate::amt::topology::Placement;
 use crate::impl_chare_any;
+use crate::metrics::keys;
 use crate::pfs::layout::FileId;
+use crate::{ep_spec, send_spec};
 
 use super::assembler::EP_A_SESSION_DROP;
 use super::buffer::{
@@ -449,7 +452,7 @@ impl Director {
             ctx.send(ChareRef::new(buffers, b), EP_BUF_REBIND, RebindMsg { session: sid, class });
         }
         self.announce(ctx, session);
-        ctx.metrics().count("ckio.buffer_reuse", 1);
+        ctx.metrics().count(keys::BUFFER_REUSE, 1);
         ctx.advance(MICROS);
     }
 
@@ -574,6 +577,9 @@ impl Director {
             }
             b
         });
+        // The buffers are a dynamically created collection: declare their
+        // protocol so debug builds validate sends addressed to them too.
+        ctx.register_protocol(buffers, super::buffer::protocol_spec());
         let session = Session::new(sid, file, offset, bytes, buffers, nreaders);
         self.sessions.insert(sid, SessionState {
             session,
@@ -632,6 +638,49 @@ impl Director {
     }
 }
 
+/// The director's declared message protocol (see [`crate::amt::protocol`]).
+/// Any change to its EPs, payload types, or send sites must update this
+/// spec in the same commit.
+pub fn protocol_spec() -> ProtocolSpec {
+    use super::governor::QosClass;
+    ProtocolSpec {
+        chare: "Director",
+        module: "ckio/director.rs",
+        handles: vec![
+            ep_spec!(EP_DIR_OPEN, PayloadKind::of::<OpenMsg>()),
+            ep_spec!(EP_DIR_MDS_DONE, PayloadKind::Signal),
+            ep_spec!(EP_DIR_OPEN_ACK, PayloadKind::of::<FileId>()),
+            ep_spec!(EP_DIR_START_SESSION, PayloadKind::of::<StartSessionMsg>()),
+            ep_spec!(EP_DIR_BUF_STARTED, PayloadKind::of::<BufStartedMsg>()),
+            ep_spec!(EP_DIR_ANNOUNCE_ACK, PayloadKind::of::<SessionId>()),
+            ep_spec!(EP_DIR_CLOSE_SESSION, PayloadKind::of::<CloseSessionMsg>()),
+            ep_spec!(EP_DIR_DROP_ACK, PayloadKind::of::<BufDroppedMsg>()),
+            ep_spec!(EP_DIR_DROP_ACK_MGR, PayloadKind::of::<SessionId>()),
+            ep_spec!(EP_DIR_CLOSE_FILE, PayloadKind::of::<CloseFileMsg>()),
+            ep_spec!(EP_DIR_CLOSE_ACK, PayloadKind::of::<FileId>()),
+            ep_spec!(EP_DIR_TAKE_REPLY, PayloadKind::of::<TakeReplyMsg>()),
+            ep_spec!(EP_DIR_PLAN_REPLY, PayloadKind::of::<PlanReplyMsg>()),
+        ],
+        sends: vec![
+            send_spec!("Director", EP_DIR_START_SESSION, PayloadKind::of::<StartSessionMsg>()),
+            send_spec!("Manager", EP_M_FILE_OPENED, PayloadKind::of::<FileOpenedMsg>()),
+            send_spec!("Manager", EP_M_SESSION_ANNOUNCE, PayloadKind::of::<SessionAnnounceMsg>()),
+            send_spec!("Manager", EP_M_SESSION_DROP, PayloadKind::of::<SessionId>()),
+            send_spec!("Manager", EP_M_FILE_CLOSE, PayloadKind::of::<FileId>()),
+            send_spec!("ReadAssembler", EP_A_SESSION_DROP, PayloadKind::of::<SessionId>()),
+            send_spec!("BufferChare", EP_BUF_INIT, PayloadKind::Signal),
+            send_spec!("BufferChare", EP_BUF_DROP, PayloadKind::Signal),
+            send_spec!("BufferChare", EP_BUF_PARK, PayloadKind::Signal),
+            send_spec!("BufferChare", EP_BUF_REBIND, PayloadKind::of::<RebindMsg>()),
+            send_spec!("DataShard", EP_SHARD_TAKE, PayloadKind::of::<TakeMsg>()),
+            send_spec!("DataShard", EP_SHARD_PARK, PayloadKind::of::<ParkMsg>()),
+            send_spec!("DataShard", EP_SHARD_PURGE, PayloadKind::of::<FileId>()),
+            send_spec!("DataShard", EP_SHARD_PLAN, PayloadKind::of::<PlanMsg>()),
+            send_spec!("DataShard", EP_SHARD_ADMIT, PayloadKind::of::<QosClass>()),
+        ],
+    }
+}
+
 impl Chare for Director {
     fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
         match msg.ep {
@@ -643,12 +692,12 @@ impl Chare for Director {
                 // structured conflict (PR 5), never a silent ignore.
                 if let Some(entry) = self.files.get_mut(&m.file) {
                     if entry.opts != m.opts {
-                        ctx.metrics().count("ckio.opens_rejected", 1);
+                        ctx.metrics().count(keys::OPENS_REJECTED, 1);
                         ctx.fire(m.opened, Payload::new(OpenError::OptionsConflict));
                         return;
                     }
                     entry.open_count += 1;
-                    ctx.metrics().count("ckio.reopens", 1);
+                    ctx.metrics().count(keys::REOPENS, 1);
                     let handle =
                         FileHandle { file: m.file, size: entry.size, opts: entry.opts.clone() };
                     ctx.fire(m.opened, Payload::new(handle));
@@ -659,12 +708,12 @@ impl Chare for Director {
                 // rule as above).
                 if let Some(st) = self.opens.get_mut(&m.file) {
                     if st.opts != m.opts {
-                        ctx.metrics().count("ckio.opens_rejected", 1);
+                        ctx.metrics().count(keys::OPENS_REJECTED, 1);
                         ctx.fire(m.opened, Payload::new(OpenError::OptionsConflict));
                         return;
                     }
                     st.waiters.push(m.opened);
-                    ctx.metrics().count("ckio.reopens", 1);
+                    ctx.metrics().count(keys::REOPENS, 1);
                     return;
                 }
                 // First open: validate the options *before* they can
@@ -676,7 +725,7 @@ impl Chare for Director {
                 // list). Service-wide knobs no longer ride the open at
                 // all (PR 5): the data plane was configured at boot.
                 if let Err(e) = m.opts.validate(m.size, &ctx.topo()) {
-                    ctx.metrics().count("ckio.opens_rejected", 1);
+                    ctx.metrics().count(keys::OPENS_REJECTED, 1);
                     self.rejected_opens.insert(m.file, e.clone());
                     ctx.fire(m.opened, Payload::new(e));
                     return;
@@ -746,7 +795,7 @@ impl Chare for Director {
                         return;
                     }
                     if let Some(e) = self.rejected_opens.get(&m.file) {
-                        ctx.metrics().count("ckio.sessions_rejected", 1);
+                        ctx.metrics().count(keys::SESSIONS_REJECTED, 1);
                         ctx.fire(m.ready, Payload::new(e.clone()));
                         return;
                     }
@@ -761,12 +810,12 @@ impl Chare for Director {
                 let key = self.buf_key(ctx, &fopts, &m);
                 if let Some(p) = &m.opts.placement_override {
                     if let Err(e) = p.validate(key.readers) {
-                        ctx.metrics().count("ckio.sessions_rejected", 1);
+                        ctx.metrics().count(keys::SESSIONS_REJECTED, 1);
                         ctx.fire(m.ready, Payload::new(e));
                         return;
                     }
                 }
-                ctx.metrics().count("ckio.sessions", 1);
+                ctx.metrics().count(keys::SESSIONS, 1);
 
                 // Reuse path: probe the file's shard for an identically
                 // shaped parked array (it owns the parked inventory);
@@ -826,12 +875,12 @@ impl Chare for Director {
                 // A close already in flight for this session: attach.
                 if let Some(cs) = self.closes.get_mut(&m.session) {
                     cs.afters.push(m.after);
-                    ctx.metrics().count("ckio.double_close", 1);
+                    ctx.metrics().count(keys::DOUBLE_CLOSE, 1);
                     return;
                 }
                 let Some(st) = self.sessions.get(&m.session) else {
                     // Already fully closed (idempotent close): ack now.
-                    ctx.metrics().count("ckio.double_close", 1);
+                    ctx.metrics().count(keys::DOUBLE_CLOSE, 1);
                     ctx.fire(m.after, Payload::empty());
                     return;
                 };

@@ -28,9 +28,12 @@ use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg, Payload};
+use crate::amt::protocol::{PayloadKind, ProtocolSpec};
 use crate::impl_chare_any;
+use crate::metrics::keys;
 use crate::pfs::layout::FileId;
 use crate::util::bytes::Chunk;
+use crate::{ep_spec, send_spec};
 
 use super::assembler::{AssembleReq, EP_A_REQ};
 use super::options::FileOptions;
@@ -120,7 +123,7 @@ impl Manager {
     /// longer serve it, so complete the callback exactly once with a
     /// modeled (payload-free) chunk rather than stranding the client.
     fn nack(&mut self, ctx: &mut Ctx<'_>, r: ReadMsg) {
-        ctx.metrics().count("ckio.reads_after_close", 1);
+        ctx.metrics().count(keys::READS_AFTER_CLOSE, 1);
         let tag = Tag { session: r.session, local: self.my_pe_salt };
         ctx.fire(
             r.after,
@@ -151,6 +154,33 @@ impl Manager {
     /// Held early reads across all sessions (leak checks in tests).
     pub fn early_count(&self) -> usize {
         self.early.values().map(|v| v.len()).sum()
+    }
+}
+
+/// The manager's declared message protocol (see [`crate::amt::protocol`]).
+/// Any change to its EPs, payload types, or send sites must update this
+/// spec in the same commit.
+pub fn protocol_spec() -> ProtocolSpec {
+    use super::director::{
+        EP_DIR_ANNOUNCE_ACK, EP_DIR_CLOSE_ACK, EP_DIR_DROP_ACK_MGR, EP_DIR_OPEN_ACK,
+    };
+    ProtocolSpec {
+        chare: "Manager",
+        module: "ckio/manager.rs",
+        handles: vec![
+            ep_spec!(EP_M_READ, PayloadKind::of::<ReadMsg>()),
+            ep_spec!(EP_M_FILE_OPENED, PayloadKind::of::<FileOpenedMsg>()),
+            ep_spec!(EP_M_SESSION_ANNOUNCE, PayloadKind::of::<SessionAnnounceMsg>()),
+            ep_spec!(EP_M_SESSION_DROP, PayloadKind::of::<SessionId>()),
+            ep_spec!(EP_M_FILE_CLOSE, PayloadKind::of::<FileId>()),
+        ],
+        sends: vec![
+            send_spec!("ReadAssembler", EP_A_REQ, PayloadKind::of::<AssembleReq>()),
+            send_spec!("Director", EP_DIR_OPEN_ACK, PayloadKind::of::<FileId>()),
+            send_spec!("Director", EP_DIR_ANNOUNCE_ACK, PayloadKind::of::<SessionId>()),
+            send_spec!("Director", EP_DIR_DROP_ACK_MGR, PayloadKind::of::<SessionId>()),
+            send_spec!("Director", EP_DIR_CLOSE_ACK, PayloadKind::of::<FileId>()),
+        ],
     }
 }
 

@@ -40,7 +40,7 @@
 //!   a dying buffer, which answers with a peer *miss* and the requester
 //!   falls back to the PFS (correctness never depends on the cache).
 //! * `EP_SHARD_IO_REQ` / `EP_SHARD_IO_DONE` — the admission-governor
-//!   ticket protocol (PR 2's `EP_DIR_IO_REQ`/`EP_DIR_IO_DONE`, re-homed).
+//!   ticket protocol (PR 2 ran it on the director; PR 3 re-homed it).
 //!   Completions carry the observed service time, which feeds the AIMD
 //!   feedback loop when the cap is adaptive; grants go straight back to
 //!   the requesting buffer (`EP_BUF_GRANT`).
@@ -71,8 +71,8 @@
 //! policy, and adaptive mode come from the service-wide
 //! [`crate::ckio::ServiceConfig`], applied **once at boot** via
 //! [`DataShard::boot_configure`] — synchronously, before any message is
-//! in flight (like the director-ref patching). The PR 2–4
-//! `EP_SHARD_CONFIG` message, its "last writer wins per shard"
+//! in flight (like the director-ref patching). The PR 2–4 runtime
+//! shard-configuration message, its "last writer wins per shard"
 //! semantics, and the director's idle-barrier re-sharding no longer
 //! exist.
 //!
@@ -92,10 +92,12 @@ use std::collections::HashSet;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg};
+use crate::amt::protocol::{PayloadKind, ProtocolSpec};
 use crate::amt::time::MICROS;
 use crate::impl_chare_any;
 use crate::metrics::keys;
 use crate::pfs::layout::FileId;
+use crate::{ep_spec, send_spec};
 
 use super::buffer::{
     GrantMsg, IoDoneMsg, IoReqMsg, PeerSlot, PeersMsg, EP_BUF_DROP, EP_BUF_GRANT, EP_BUF_PEERS,
@@ -285,7 +287,7 @@ impl DataShard {
             for b in 0..e.nbuf {
                 ctx.signal(ChareRef::new(e.buffers, b), EP_BUF_DROP);
             }
-            ctx.metrics().count("ckio.buffer_cache_evictions", 1);
+            ctx.metrics().count(keys::BUFFER_CACHE_EVICTIONS, 1);
             ctx.metrics().count(keys::STORE_EVICTED, e.resident_bytes);
         }
     }
@@ -324,6 +326,34 @@ impl DataShard {
     /// Record a starting session's class (plan probe or admit message).
     fn register_class(&mut self, class: QosClass) {
         self.class_registered[class.index()] += 1;
+    }
+}
+
+/// The shard's declared message protocol (see [`crate::amt::protocol`]).
+/// Any change to its EPs, payload types, or send sites must update this
+/// spec in the same commit.
+pub fn protocol_spec() -> ProtocolSpec {
+    ProtocolSpec {
+        chare: "DataShard",
+        module: "ckio/shard.rs",
+        handles: vec![
+            ep_spec!(EP_SHARD_REGISTER, PayloadKind::of::<RegisterMsg>()),
+            ep_spec!(EP_SHARD_UNCLAIM, PayloadKind::of::<UnclaimMsg>()),
+            ep_spec!(EP_SHARD_TAKE, PayloadKind::of::<TakeMsg>()),
+            ep_spec!(EP_SHARD_PARK, PayloadKind::of::<ParkMsg>()),
+            ep_spec!(EP_SHARD_PURGE, PayloadKind::of::<FileId>()),
+            ep_spec!(EP_SHARD_IO_REQ, PayloadKind::of::<IoReqMsg>()),
+            ep_spec!(EP_SHARD_IO_DONE, PayloadKind::of::<IoDoneMsg>()),
+            ep_spec!(EP_SHARD_PLAN, PayloadKind::of::<PlanMsg>()),
+            ep_spec!(EP_SHARD_ADMIT, PayloadKind::of::<QosClass>()),
+        ],
+        sends: vec![
+            send_spec!("BufferChare", EP_BUF_PEERS, PayloadKind::of::<PeersMsg>()),
+            send_spec!("BufferChare", EP_BUF_GRANT, PayloadKind::of::<GrantMsg>()),
+            send_spec!("BufferChare", EP_BUF_DROP, PayloadKind::Signal),
+            send_spec!("Director", EP_DIR_TAKE_REPLY, PayloadKind::of::<TakeReplyMsg>()),
+            send_spec!("Director", EP_DIR_PLAN_REPLY, PayloadKind::of::<PlanReplyMsg>()),
+        ],
     }
 }
 

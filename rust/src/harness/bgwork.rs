@@ -16,9 +16,11 @@ use crate::amt::callback::Callback;
 use crate::amt::chare::Chare;
 use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg, Payload};
+use crate::amt::protocol::{PayloadKind, ProtocolSpec};
 use crate::amt::time::Time;
 use crate::impl_chare_any;
 use crate::metrics::keys;
+use crate::{ep_spec, send_spec};
 
 /// Begin iterating.
 pub const EP_BG_START: Ep = 1;
@@ -62,6 +64,22 @@ impl BgWorker {
         // interleave between iterations.
         let me = ctx.me();
         ctx.signal(me, EP_BG_TICK);
+    }
+}
+
+/// The worker's declared message protocol (see [`crate::amt::protocol`]).
+/// Any change to its EPs, payload types, or send sites must update this
+/// spec in the same commit.
+pub fn protocol_spec() -> ProtocolSpec {
+    ProtocolSpec {
+        chare: "BgWorker",
+        module: "harness/bgwork.rs",
+        handles: vec![
+            ep_spec!(EP_BG_START, PayloadKind::Signal),
+            ep_spec!(EP_BG_TICK, PayloadKind::Signal),
+            ep_spec!(EP_BG_STOP, PayloadKind::Signal),
+        ],
+        sends: vec![send_spec!("BgWorker", EP_BG_TICK, PayloadKind::Signal)],
     }
 }
 

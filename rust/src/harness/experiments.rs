@@ -7,6 +7,7 @@ use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::{Ctx, Engine, EngineConfig};
 use crate::amt::msg::{Ep, Msg, Payload};
+use crate::amt::protocol::{PayloadKind, ProtocolSpec};
 use crate::amt::time::{self, Time, MICROS};
 use crate::amt::topology::{Pe, Placement};
 use crate::apps::changa::driver::{run_changa_input, Scheme};
@@ -21,6 +22,7 @@ use crate::impl_chare_any;
 use crate::metrics::keys;
 use crate::pfs::PfsConfig;
 use crate::util::stats::Summary;
+use crate::{ep_spec, send_spec};
 
 /// Standard paper cluster: 16 nodes × 32 PEs (Bridges2 RM).
 pub const PAPER_NODES: u32 = 16;
@@ -147,6 +149,24 @@ impl Chare for SliceReader {
         }
     }
     impl_chare_any!();
+}
+
+/// [`SliceReader`]'s declared message protocol (see
+/// [`crate::amt::protocol`]). `EP_OPENED` is `Any`: the open callback
+/// delivers the library's handle-or-error payload, which is ignored.
+pub fn slice_reader_protocol_spec() -> ProtocolSpec {
+    ProtocolSpec {
+        chare: "SliceReader",
+        module: "harness/experiments.rs",
+        handles: vec![
+            ep_spec!(EP_GO, PayloadKind::Signal),
+            ep_spec!(EP_OPENED, PayloadKind::Any),
+            ep_spec!(EP_READY, PayloadKind::of::<Session>()),
+            ep_spec!(EP_DATA, PayloadKind::of::<ReadResult>()),
+            ep_spec!(EP_SESSION_FWD, PayloadKind::of::<Session>()),
+        ],
+        sends: vec![send_spec!("SliceReader", EP_SESSION_FWD, PayloadKind::of::<Session>())],
+    }
 }
 
 /// Drive `nclients` CkIO clients reading a whole file; returns
@@ -559,18 +579,35 @@ struct Collector {
 }
 pub const EP_COLLECT: Ep = 21;
 impl Chare for Collector {
-    fn receive(&mut self, ctx: &mut Ctx<'_>, _msg: Msg) {
-        self.got += 1;
-        if self.got == self.expected {
-            for pe in 0..self.npes {
-                ctx.send_group(self.bg_group, Pe(pe), EP_BG_STOP, ());
+    fn receive(&mut self, ctx: &mut Ctx<'_>, msg: Msg) {
+        match msg.ep {
+            EP_COLLECT => {
+                self.got += 1;
+                if self.got == self.expected {
+                    for pe in 0..self.npes {
+                        ctx.send_group(self.bg_group, Pe(pe), EP_BG_STOP, ());
+                    }
+                    let now = ctx.now();
+                    let done = self.done.clone();
+                    ctx.fire(done, Payload::new(now));
+                }
             }
-            let now = ctx.now();
-            let done = self.done.clone();
-            ctx.fire(done, Payload::new(now));
+            other => panic!("Collector: unknown ep {other}"),
         }
     }
     impl_chare_any!();
+}
+
+/// [`Collector`]'s declared message protocol (see
+/// [`crate::amt::protocol`]). Each completion carries the reader's
+/// delivered byte count.
+pub fn collector_protocol_spec() -> ProtocolSpec {
+    ProtocolSpec {
+        chare: "Collector",
+        module: "harness/experiments.rs",
+        handles: vec![ep_spec!(EP_COLLECT, PayloadKind::of::<u64>())],
+        sends: vec![send_spec!("BgWorker", EP_BG_STOP, PayloadKind::Signal)],
+    }
 }
 
 pub fn fig9_overlap_fraction(reps: u32) -> Table {
@@ -680,6 +717,31 @@ pub fn fig12_migration_single(size: u64, seed: u64) -> (f64, f64) {
     migration_run(size, seed)
 }
 
+/// MigClient's post-migration re-read trigger (self-signal).
+const EP_MIG_READ2: Ep = 30;
+
+/// MigClient's declared message protocol (see [`crate::amt::protocol`]).
+/// The chare type itself is local to [`migration_run`]; only its EP
+/// surface is public, via this spec.
+pub fn mig_client_protocol_spec() -> ProtocolSpec {
+    ProtocolSpec {
+        chare: "MigClient",
+        module: "harness/experiments.rs",
+        handles: vec![
+            ep_spec!(EP_GO, PayloadKind::Signal),
+            ep_spec!(EP_OPENED, PayloadKind::Any),
+            ep_spec!(EP_READY, PayloadKind::of::<Session>()),
+            ep_spec!(EP_DATA, PayloadKind::of::<ReadResult>()),
+            ep_spec!(EP_SESSION_FWD, PayloadKind::of::<Session>()),
+            ep_spec!(EP_MIG_READ2, PayloadKind::Signal),
+        ],
+        sends: vec![
+            send_spec!("MigClient", EP_SESSION_FWD, PayloadKind::of::<Session>()),
+            send_spec!("MigClient", EP_MIG_READ2, PayloadKind::Signal),
+        ],
+    }
+}
+
 /// The paper's migration experiment: clients read remote buffers' data,
 /// migrate to the data, read again. Returns (pre_s, post_s) — the max of
 /// the two clients' read times per phase.
@@ -699,7 +761,6 @@ fn migration_run(size: u64, seed: u64) -> (f64, f64) {
         read_started: Time,
         report: Callback,
     }
-    const EP_MIG_READ2: Ep = 30;
     impl MigClient {
         fn issue(&mut self, ctx: &mut Ctx<'_>) {
             let s = *self.session.as_ref().unwrap();
@@ -892,7 +953,7 @@ pub fn sec5_breakdown(reps: u32) -> Table {
                 3000 + rep as u64,
             );
             total += time::to_secs(tt);
-            io += eng.core.metrics.value("ckio.last_io_ns") / 1e9;
+            io += eng.core.metrics.value(keys::LAST_IO_NS) / 1e9;
             naive += time::to_secs(
                 run_naive_read(PAPER_NODES, PAPER_PES, size, clients, false, 3000 + rep as u64).0,
             );
@@ -1119,6 +1180,29 @@ impl Chare for ConcurrentClient {
         }
     }
     impl_chare_any!();
+}
+
+/// [`ConcurrentClient`]'s declared message protocol (see
+/// [`crate::amt::protocol`]). The open/close acknowledgements are `Any`:
+/// their payloads come from the library and are ignored here.
+pub fn concurrent_client_protocol_spec() -> ProtocolSpec {
+    ProtocolSpec {
+        chare: "ConcurrentClient",
+        module: "harness/experiments.rs",
+        handles: vec![
+            ep_spec!(EP_CC_GO, PayloadKind::Signal),
+            ep_spec!(EP_CC_OPENED, PayloadKind::Any),
+            ep_spec!(EP_CC_SESSION, PayloadKind::of::<Session>()),
+            ep_spec!(EP_CC_DATA, PayloadKind::of::<ReadResult>()),
+            ep_spec!(EP_CC_SLICE_DONE, PayloadKind::Signal),
+            ep_spec!(EP_CC_CLOSED, PayloadKind::Any),
+            ep_spec!(EP_CC_FCLOSED, PayloadKind::Any),
+        ],
+        sends: vec![
+            send_spec!("ConcurrentClient", EP_CC_SESSION, PayloadKind::of::<Session>()),
+            send_spec!("ConcurrentClient", EP_CC_SLICE_DONE, PayloadKind::Signal),
+        ],
+    }
 }
 
 /// Assert the CkIO service holds no per-session residue: no live or
@@ -2157,8 +2241,8 @@ pub fn bench_pr5_json(reps: u32) -> String {
             ("k", Json::num(k as f64)),
             ("pfs_bytes_read", Json::num(pfs / n)),
             ("pfs_bytes_ratio", Json::num((pfs / n) / base_bytes)),
-            ("ckio.store.hit_bytes", Json::num(hit / n)),
-            ("ckio.store.miss_bytes", Json::num(miss / n)),
+            (keys::STORE_HIT, Json::num(hit / n)),
+            (keys::STORE_MISS, Json::num(miss / n)),
             ("aggregate_gibs", Json::num(agg / n)),
         ]));
     }
@@ -2181,7 +2265,7 @@ pub fn bench_pr5_json(reps: u32) -> String {
         Json::obj(vec![
             ("k", Json::num(4.0)),
             ("max_inflight_reads", Json::num(4.0)),
-            ("ckio.governor.throttled", Json::num(st.governor_throttled as f64)),
+            (keys::GOV_THROTTLED, Json::num(st.governor_throttled as f64)),
             (
                 "pfs_max_concurrent_reads",
                 Json::num(eng.core.metrics.value(keys::PFS_MAX_CONCURRENT)),
@@ -2214,8 +2298,8 @@ pub fn bench_pr5_json(reps: u32) -> String {
         Json::obj(vec![
             ("k", Json::num(4.0)),
             ("store_budget_bytes", Json::num(size as f64)),
-            ("ckio.store.evicted_bytes", Json::num(st.store_evicted_bytes as f64)),
-            ("ckio.store.resident_bytes", Json::num(eng.core.metrics.value(keys::STORE_RESIDENT))),
+            (keys::STORE_EVICTED, Json::num(st.store_evicted_bytes as f64)),
+            (keys::STORE_RESIDENT, Json::num(eng.core.metrics.value(keys::STORE_RESIDENT))),
         ])
     };
 
@@ -2230,8 +2314,8 @@ pub fn bench_pr5_json(reps: u32) -> String {
                 ("shards", Json::num(row.shards as f64)),
                 ("k", Json::num(row.k as f64)),
                 ("makespan_s", Json::num(row.makespan_s)),
-                ("ckio.shard.msgs_max", Json::num(row.shard_msgs_max)),
-                ("ckio.shard.msgs_mean", Json::num(row.shard_msgs_mean)),
+                (keys::SHARD_MSGS_MAX, Json::num(row.shard_msgs_max)),
+                (keys::SHARD_MSGS_MEAN, Json::num(row.shard_msgs_mean)),
             ])
         })
         .collect();
@@ -2259,12 +2343,12 @@ pub fn bench_pr5_json(reps: u32) -> String {
         );
         Json::obj(vec![
             ("k", Json::num(4.0)),
-            ("ckio.governor.cap", Json::num(eng.core.metrics.value(keys::GOV_CAP))),
+            (keys::GOV_CAP, Json::num(eng.core.metrics.value(keys::GOV_CAP))),
             (
-                "ckio.governor.adaptations",
+                keys::GOV_ADAPTATIONS,
                 Json::num(eng.core.metrics.counter(keys::GOV_ADAPTATIONS) as f64),
             ),
-            ("ckio.governor.throttled", Json::num(st.governor_throttled as f64)),
+            (keys::GOV_THROTTLED, Json::num(st.governor_throttled as f64)),
             (
                 "pfs_max_concurrent_reads",
                 Json::num(eng.core.metrics.value(keys::PFS_MAX_CONCURRENT)),
@@ -2283,11 +2367,11 @@ pub fn bench_pr5_json(reps: u32) -> String {
             (
                 st.cross_pe_fetch_bytes,
                 Json::obj(vec![
-                    ("ckio.place.planned", Json::num(st.planned as f64)),
-                    ("ckio.place.degraded", Json::num(st.degraded as f64)),
-                    ("ckio.place.same_pe_fetch", Json::num(st.same_pe_fetch_bytes as f64)),
-                    ("ckio.place.cross_pe_fetch", Json::num(st.cross_pe_fetch_bytes as f64)),
-                    ("ckio.store.hit_bytes", Json::num(st.store_hit_bytes as f64)),
+                    (keys::PLACE_PLANNED, Json::num(st.planned as f64)),
+                    (keys::PLACE_DEGRADED, Json::num(st.degraded as f64)),
+                    (keys::PLACE_SAME_PE, Json::num(st.same_pe_fetch_bytes as f64)),
+                    (keys::PLACE_CROSS_PE, Json::num(st.cross_pe_fetch_bytes as f64)),
+                    (keys::STORE_HIT, Json::num(st.store_hit_bytes as f64)),
                     ("makespan_s", Json::num(st.makespan_s)),
                 ]),
             )
@@ -2319,16 +2403,10 @@ pub fn bench_pr5_json(reps: u32) -> String {
                 ("bulk_p50_s", Json::num(st.bulk_p50_s)),
                 ("bulk_max_s", Json::num(st.bulk_max_s)),
                 ("makespan_s", Json::num(st.makespan_s)),
-                (
-                    "ckio.governor.class_granted.interactive",
-                    Json::num(st.granted_interactive as f64),
-                ),
-                ("ckio.governor.class_granted.bulk", Json::num(st.granted_bulk as f64)),
-                (
-                    "ckio.governor.class_granted.scavenger",
-                    Json::num(st.granted_scavenger as f64),
-                ),
-                ("ckio.governor.throttled", Json::num(st.throttled as f64)),
+                (keys::GOV_GRANTED_INTERACTIVE, Json::num(st.granted_interactive as f64)),
+                (keys::GOV_GRANTED_BULK, Json::num(st.granted_bulk as f64)),
+                (keys::GOV_GRANTED_SCAVENGER, Json::num(st.granted_scavenger as f64)),
+                (keys::GOV_THROTTLED, Json::num(st.throttled as f64)),
                 ("governor_inflight", Json::num(st.governor_inflight as f64)),
                 ("governor_queued", Json::num(st.governor_queued as f64)),
             ])

@@ -22,6 +22,7 @@ pub mod apps;
 pub mod baselines;
 pub mod ckio;
 pub mod harness;
+pub mod lint;
 pub mod metrics;
 pub mod net;
 pub mod pfs;

@@ -1,0 +1,1191 @@
+//! `ckio-lint`: a std-only source pass that cross-checks the code under
+//! `rust/src` against the declared protocol registry
+//! ([`crate::amt::protocol`]) and a handful of repo hygiene rules.
+//!
+//! The boot-time verifier proves the *declared* EP graph sound; this
+//! pass proves the declarations match the *source*. Six checks:
+//!
+//! * **dead-ep** — every non-test `const` whose name starts with `EP_`
+//!   must have a non-test send-ish use (a `ctx.send*`, `signal`,
+//!   `inject`, or `Callback::to_chare` site — any occurrence that is
+//!   not the definition, an import, a spec declaration, or a match
+//!   arm) and a non-test receive arm (left of `=>`). The engine's
+//!   migration hook EP ([`crate::amt::engine::EP_ON_MIGRATED`]) is
+//!   allowlisted: the engine fires it internally.
+//! * **stale-ep-ref** — any `EP_…` token in code *or comments* (not
+//!   strings) must name a constant defined somewhere in the tree.
+//!   Catches docs that outlive a removed protocol message.
+//! * **spec-coverage** — for each declared protocol spec: its module file
+//!   exists in the scanned tree, every declared handle is defined and
+//!   matched in that file, and every EP constant defined in a spec'd
+//!   file appears in that file's declared handles.
+//! * **payload-mismatch** — inside each handle's match arm, a
+//!   `msg.take…` site must decode the spec's payload type; a take in
+//!   a declared-signal arm is an error. `PayloadKind::Any` skips the
+//!   check, and an arm with no take (handler ignores the payload) is
+//!   tolerated.
+//! * **metrics-literal** — string literals starting `"ckio."` or
+//!   `"amt."` in non-test code must live in `metrics::keys`, not be
+//!   scattered as raw literals (files under `metrics/` and `lint/`
+//!   are exempt).
+//! * **stash-hygiene** — collection-typed struct fields under `ckio/`
+//!   named `pending*`/`parked*`/`early*` must have an in-file drain
+//!   site, and `pending_`-prefixed fields must be covered by
+//!   `assert_service_clean` (sub-check skipped when the tree has no
+//!   such fn, e.g. lint fixtures).
+//!
+//! The scanner is a deliberately small hand-rolled lexer — no regex,
+//! no syn — that strips strings and comments per line while carrying
+//! raw-string and block-comment state across lines, then masks
+//! `#[cfg(test)]` regions by brace counting. It is conservative:
+//! heuristics only ever *suppress* findings (an occurrence we cannot
+//! classify counts as a use), so a clean run is trustworthy and a
+//! finding is actionable.
+//!
+//! Entry points: [`scan_sources`] (pure, in-memory — what the tests
+//! drive), [`scan_tree`] (walks a directory), [`cli`] (shared by the
+//! `ckio lint` subcommand and the `tools/ckio-lint` binary), and
+//! [`dump_protocol_markdown`] (the `--dump-protocol` mode behind
+//! `docs/PROTOCOL.md`).
+
+use std::collections::{HashMap, HashSet};
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+use crate::amt::protocol::{self, PayloadKind, ProtocolTable};
+
+/// Which lint produced a [`Finding`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Check {
+    DeadEp,
+    StaleEpRef,
+    SpecCoverage,
+    PayloadMismatch,
+    MetricsLiteral,
+    StashHygiene,
+}
+
+impl Check {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Check::DeadEp => "dead-ep",
+            Check::StaleEpRef => "stale-ep-ref",
+            Check::SpecCoverage => "spec-coverage",
+            Check::PayloadMismatch => "payload-mismatch",
+            Check::MetricsLiteral => "metrics-literal",
+            Check::StashHygiene => "stash-hygiene",
+        }
+    }
+}
+
+/// One violation, formatted as `file:line: [check] message`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub file: String,
+    /// 1-based; 0 when the finding is not anchored to a line.
+    pub line: usize,
+    pub check: Check,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.check.as_str(), self.message)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lexer: per-line (code, comment, string-literal) split.
+// ---------------------------------------------------------------------------
+
+/// One source line with string literals stripped out of `code` (each
+/// replaced by a single space) and comment text separated.
+#[derive(Debug, Default)]
+struct CleanLine {
+    code: String,
+    comment: String,
+    strings: Vec<String>,
+}
+
+enum LexState {
+    Code,
+    /// Nested block-comment depth.
+    Block(u32),
+    /// Raw string with this many `#`s.
+    Raw(usize),
+    /// Normal string left open at end-of-line (multi-line literals,
+    /// including `\`-continued ones).
+    Str,
+}
+
+fn clean_source(text: &str) -> Vec<CleanLine> {
+    let mut state = LexState::Code;
+    let mut raw_buf = String::new();
+    let mut str_buf = String::new();
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let chars: Vec<char> = line.chars().collect();
+        let mut cl = CleanLine::default();
+        let mut i = 0;
+        while i < chars.len() {
+            match state {
+                LexState::Block(d) => {
+                    if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = LexState::Block(d + 1);
+                        i += 2;
+                    } else if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        state = if d == 1 {
+                            LexState::Code
+                        } else {
+                            LexState::Block(d - 1)
+                        };
+                        i += 2;
+                    } else {
+                        cl.comment.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                LexState::Raw(h) => {
+                    if chars[i] == '"' && (0..h).all(|k| chars.get(i + 1 + k) == Some(&'#')) {
+                        cl.strings.push(std::mem::take(&mut raw_buf));
+                        state = LexState::Code;
+                        i += 1 + h;
+                    } else {
+                        raw_buf.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                LexState::Str => {
+                    if chars[i] == '"' {
+                        cl.strings.push(std::mem::take(&mut str_buf));
+                        state = LexState::Code;
+                        i += 1;
+                    } else if chars[i] == '\\' && i + 1 < chars.len() {
+                        str_buf.push(chars[i + 1]);
+                        i += 2;
+                    } else {
+                        str_buf.push(chars[i]);
+                        i += 1;
+                    }
+                }
+                LexState::Code => {
+                    let c = chars[i];
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        cl.comment.extend(&chars[i + 2..]);
+                        break;
+                    }
+                    if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        state = LexState::Block(1);
+                        i += 2;
+                        continue;
+                    }
+                    if c == 'r' && !cl.code.ends_with(is_ident_char) {
+                        let mut h = 0;
+                        while chars.get(i + 1 + h) == Some(&'#') {
+                            h += 1;
+                        }
+                        if chars.get(i + 1 + h) == Some(&'"') {
+                            state = LexState::Raw(h);
+                            cl.code.push(' ');
+                            i += 2 + h;
+                            continue;
+                        }
+                    }
+                    if c == '"' {
+                        let mut j = i + 1;
+                        let mut s = String::new();
+                        let mut closed = false;
+                        while j < chars.len() {
+                            if chars[j] == '"' {
+                                closed = true;
+                                break;
+                            }
+                            if chars[j] == '\\' && j + 1 < chars.len() {
+                                s.push(chars[j + 1]);
+                                j += 2;
+                            } else {
+                                s.push(chars[j]);
+                                j += 1;
+                            }
+                        }
+                        cl.code.push(' ');
+                        if closed {
+                            cl.strings.push(s);
+                            i = j + 1;
+                        } else {
+                            str_buf = s;
+                            state = LexState::Str;
+                            i = j;
+                        }
+                        continue;
+                    }
+                    if c == '\'' {
+                        if chars.get(i + 1) == Some(&'\\') {
+                            let mut j = i + 2;
+                            while j < chars.len() && chars[j] != '\'' {
+                                j += 1;
+                            }
+                            cl.code.push(' ');
+                            i = j + 1;
+                        } else if chars.get(i + 2) == Some(&'\'') {
+                            cl.code.push(' ');
+                            i += 3;
+                        } else {
+                            cl.code.push('\'');
+                            i += 1;
+                        }
+                        continue;
+                    }
+                    cl.code.push(c);
+                    i += 1;
+                }
+            }
+        }
+        match state {
+            LexState::Raw(_) => raw_buf.push('\n'),
+            LexState::Str => str_buf.push('\n'),
+            _ => {}
+        }
+        out.push(cl);
+    }
+    out
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item (attribute line
+/// through the item's closing brace, or its `;` for brace-less items).
+fn test_mask(lines: &[CleanLine]) -> Vec<bool> {
+    let mut mask = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth = 0i64;
+        let mut seen = false;
+        let mut j = i;
+        loop {
+            mask[j] = true;
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        seen = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if (seen && depth <= 0) || (!seen && j > i && lines[j].code.contains(';')) {
+                break;
+            }
+            j += 1;
+            if j >= lines.len() {
+                break;
+            }
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+struct CleanFile {
+    path: String,
+    lines: Vec<CleanLine>,
+    test: Vec<bool>,
+}
+
+// ---------------------------------------------------------------------------
+// Token scanning.
+// ---------------------------------------------------------------------------
+
+/// `EP_…` tokens in `s` as (char position, token). A token is `EP_`
+/// plus at least one of `[A-Z0-9_]`; a lowercase tail (a mixed-case
+/// identifier that merely starts with those letters) disqualifies it.
+fn ep_tokens(s: &str) -> Vec<(usize, String)> {
+    let b: Vec<char> = s.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        let start = b[i] == 'E'
+            && (i == 0 || !is_ident_char(b[i - 1]))
+            && b.get(i + 1) == Some(&'P')
+            && b.get(i + 2) == Some(&'_');
+        if !start {
+            i += 1;
+            continue;
+        }
+        let mut j = i + 3;
+        while j < b.len() && (b[j].is_ascii_uppercase() || b[j].is_ascii_digit() || b[j] == '_') {
+            j += 1;
+        }
+        if j > i + 3 && !(j < b.len() && b[j].is_ascii_lowercase()) {
+            out.push((i, b[i..j].iter().collect()));
+        }
+        i = j.max(i + 1);
+    }
+    out
+}
+
+/// Char position of the first `=>` in `code`.
+fn arrow_pos(code: &str) -> Option<usize> {
+    let b: Vec<char> = code.chars().collect();
+    (0..b.len().saturating_sub(1)).find(|&i| b[i] == '=' && b[i + 1] == '>')
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum OccClass {
+    Def,
+    Import,
+    Spec,
+    Arm,
+    Send,
+}
+
+struct EpOcc {
+    file: usize,
+    line: usize,
+    test: bool,
+    class: OccClass,
+}
+
+fn classify(code: &str, tok: &str, pos: usize) -> OccClass {
+    let t = code.trim_start();
+    if t.starts_with("use ") || t.starts_with("pub use ") {
+        return OccClass::Import;
+    }
+    if code.contains("ep_spec!") || code.contains("send_spec!") {
+        return OccClass::Spec;
+    }
+    if code.contains(&format!("const {tok}")) {
+        return OccClass::Def;
+    }
+    if let Some(a) = arrow_pos(code) {
+        if pos < a {
+            return OccClass::Arm;
+        }
+    }
+    OccClass::Send
+}
+
+// ---------------------------------------------------------------------------
+// The scan.
+// ---------------------------------------------------------------------------
+
+const ALLOWED_EPS: [&str; 1] = ["EP_ON_MIGRATED"];
+const METRIC_PREFIXES: [&str; 2] = ["ckio.", "amt."];
+const DRAIN_MARKERS: [&str; 5] = [".remove(", ".drain(", ".clear(", ".pop", "mem::take"];
+const STASH_PREFIXES: [&str; 3] = ["pending", "parked", "early"];
+const EXEMPT_DIRS: [&str; 2] = ["metrics", "lint"];
+
+fn in_dir(path: &str, dir: &str) -> bool {
+    path.starts_with(&format!("{dir}/")) || path.contains(&format!("/{dir}/"))
+}
+
+/// Scan in-memory sources against a protocol table. `files` pairs a
+/// display path (matched against each spec's `module` by suffix) with
+/// the file's text. Pure — the test surface for every check.
+pub fn scan_sources(files: &[(String, String)], table: &ProtocolTable) -> Vec<Finding> {
+    let cleaned: Vec<CleanFile> = files
+        .iter()
+        .map(|(path, text)| {
+            let lines = clean_source(text);
+            let test = test_mask(&lines);
+            CleanFile { path: path.clone(), lines, test }
+        })
+        .collect();
+
+    let mut occs: HashMap<String, Vec<EpOcc>> = HashMap::new();
+    for (fi, f) in cleaned.iter().enumerate() {
+        for (li, line) in f.lines.iter().enumerate() {
+            for (pos, tok) in ep_tokens(&line.code) {
+                let class = classify(&line.code, &tok, pos);
+                occs.entry(tok).or_default().push(EpOcc {
+                    file: fi,
+                    line: li + 1,
+                    test: f.test[li],
+                    class,
+                });
+            }
+        }
+    }
+
+    let mut findings = Vec::new();
+    check_dead_eps(&cleaned, &occs, &mut findings);
+    check_stale_refs(&cleaned, &occs, &mut findings);
+    check_spec_coverage(&cleaned, &occs, table, &mut findings);
+    check_payloads(&cleaned, table, &mut findings);
+    check_metric_literals(&cleaned, &mut findings);
+    check_stash_hygiene(&cleaned, &mut findings);
+    findings
+}
+
+fn check_dead_eps(
+    files: &[CleanFile],
+    occs: &HashMap<String, Vec<EpOcc>>,
+    out: &mut Vec<Finding>,
+) {
+    let mut toks: Vec<&String> = occs.keys().collect();
+    toks.sort();
+    for tok in toks {
+        if ALLOWED_EPS.contains(&tok.as_str()) {
+            continue;
+        }
+        let os = &occs[tok];
+        let Some(def) = os.iter().find(|o| o.class == OccClass::Def && !o.test) else {
+            continue;
+        };
+        let sent = os.iter().any(|o| o.class == OccClass::Send && !o.test);
+        let armed = os.iter().any(|o| o.class == OccClass::Arm && !o.test);
+        let at = &files[def.file].path;
+        if !sent {
+            out.push(Finding {
+                file: at.clone(),
+                line: def.line,
+                check: Check::DeadEp,
+                message: format!("{tok} is defined but has no non-test send site"),
+            });
+        }
+        if !armed {
+            out.push(Finding {
+                file: at.clone(),
+                line: def.line,
+                check: Check::DeadEp,
+                message: format!("{tok} is defined but never matched in a receive arm"),
+            });
+        }
+    }
+}
+
+fn check_stale_refs(
+    files: &[CleanFile],
+    occs: &HashMap<String, Vec<EpOcc>>,
+    out: &mut Vec<Finding>,
+) {
+    let defined: HashSet<&String> = occs
+        .iter()
+        .filter(|(_, os)| os.iter().any(|o| o.class == OccClass::Def))
+        .map(|(tok, _)| tok)
+        .collect();
+    // Code references to an undefined constant (would not compile in
+    // checked-in code, but fixtures and comments drift silently).
+    for (tok, os) in occs {
+        if defined.contains(tok) {
+            continue;
+        }
+        for o in os {
+            out.push(Finding {
+                file: files[o.file].path.clone(),
+                line: o.line,
+                check: Check::StaleEpRef,
+                message: format!("{tok} is referenced but no `const {tok}` exists in the tree"),
+            });
+        }
+    }
+    // Comment references.
+    for f in files {
+        for (li, line) in f.lines.iter().enumerate() {
+            for (_, tok) in ep_tokens(&line.comment) {
+                if !defined.contains(&tok) {
+                    out.push(Finding {
+                        file: f.path.clone(),
+                        line: li + 1,
+                        check: Check::StaleEpRef,
+                        message: format!(
+                            "comment mentions {tok} but no `const {tok}` exists in the tree"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+}
+
+/// Non-test `const EP_…` definitions in one file, with lines.
+fn file_defs(f: &CleanFile) -> Vec<(String, usize)> {
+    let mut defs = Vec::new();
+    for (li, line) in f.lines.iter().enumerate() {
+        if f.test[li] {
+            continue;
+        }
+        for (pos, tok) in ep_tokens(&line.code) {
+            if classify(&line.code, &tok, pos) == OccClass::Def {
+                defs.push((tok, li + 1));
+            }
+        }
+    }
+    defs
+}
+
+/// Does `code` start a match arm for `tok` (the token left of `=>`)?
+fn arm_start(code: &str, tok: &str) -> bool {
+    let Some(a) = arrow_pos(code) else {
+        return false;
+    };
+    ep_tokens(code).iter().any(|(p, t)| t == tok && *p < a)
+}
+
+/// Does a non-test line of `f` start a match arm for `tok`?
+fn has_arm(f: &CleanFile, tok: &str) -> bool {
+    for (li, line) in f.lines.iter().enumerate() {
+        if !f.test[li] && arm_start(&line.code, tok) {
+            return true;
+        }
+    }
+    false
+}
+
+fn check_spec_coverage(
+    files: &[CleanFile],
+    occs: &HashMap<String, Vec<EpOcc>>,
+    table: &ProtocolTable,
+    out: &mut Vec<Finding>,
+) {
+    // Specs sharing one module file (the experiment chares all live in
+    // harness/experiments.rs) pool their handles for the
+    // defined-but-undeclared direction.
+    let mut declared_by_file: HashMap<usize, HashSet<&str>> = HashMap::new();
+    for spec in &table.specs {
+        let Some(fi) = files.iter().position(|f| f.path.ends_with(spec.module)) else {
+            out.push(Finding {
+                file: spec.module.to_string(),
+                line: 0,
+                check: Check::SpecCoverage,
+                message: format!("{}: declared module file was not scanned", spec.chare),
+            });
+            continue;
+        };
+        let entry = declared_by_file.entry(fi).or_default();
+        for h in &spec.handles {
+            entry.insert(h.name);
+        }
+        let defs = file_defs(&files[fi]);
+        for h in &spec.handles {
+            let defined_here = defs.iter().any(|(t, _)| t == h.name);
+            let defined_anywhere = occs
+                .get(h.name)
+                .is_some_and(|os| os.iter().any(|o| o.class == OccClass::Def));
+            if !defined_here && !defined_anywhere {
+                out.push(Finding {
+                    file: files[fi].path.clone(),
+                    line: 0,
+                    check: Check::SpecCoverage,
+                    message: format!("{}: {} declared in spec but not defined", spec.chare, h.name),
+                });
+                continue;
+            }
+            if defined_here && !has_arm(&files[fi], h.name) {
+                out.push(Finding {
+                    file: files[fi].path.clone(),
+                    line: 0,
+                    check: Check::SpecCoverage,
+                    message: format!("{}: {} has no receive arm", spec.chare, h.name),
+                });
+            }
+        }
+    }
+    for (fi, declared) in declared_by_file {
+        for (tok, line) in file_defs(&files[fi]) {
+            if !declared.contains(tok.as_str()) {
+                out.push(Finding {
+                    file: files[fi].path.clone(),
+                    line,
+                    check: Check::SpecCoverage,
+                    message: format!("{tok} is defined here but missing from the protocol spec"),
+                });
+            }
+        }
+    }
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+}
+
+/// Payload type of a `msg.take` site on one cleaned line: turbofish
+/// (`msg.take::<T>()`) or let-binding (`let x: T = msg.take()`), as
+/// the type's last path segment. `None` when the line has no take or
+/// the form is unrecognized (conservative: unrecognized is tolerated).
+fn take_type(code: &str) -> Option<String> {
+    let pos = code.find("msg.take")?;
+    let after = &code[pos + "msg.take".len()..];
+    if let Some(rest) = after.strip_prefix("::<") {
+        let mut depth = 1u32;
+        let mut ty = String::new();
+        for c in rest.chars() {
+            match c {
+                '<' => depth += 1,
+                '>' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            ty.push(c);
+        }
+        return Some(short_segment(&ty));
+    }
+    let before = &code[..pos];
+    let eq = before.rfind('=')?;
+    let lhs = &before[..eq];
+    let b: Vec<char> = lhs.chars().collect();
+    let mut colon = None;
+    for i in (0..b.len()).rev() {
+        if b[i] == ':' && b.get(i + 1) != Some(&':') && (i == 0 || b[i - 1] != ':') {
+            colon = Some(i);
+            break;
+        }
+    }
+    let ty: String = b[colon? + 1..].iter().collect();
+    Some(short_segment(&ty))
+}
+
+fn short_segment(ty: &str) -> String {
+    ty.trim().rsplit("::").next().unwrap_or(ty).trim().to_string()
+}
+
+/// Line ranges (0-based, inclusive start / exclusive end) of the match
+/// arms for `tok` in `f`: from each arm line to the next arm-looking
+/// line or catch-all.
+fn arm_regions(f: &CleanFile, tok: &str) -> Vec<(usize, usize)> {
+    let mut regions = Vec::new();
+    for (li, line) in f.lines.iter().enumerate() {
+        if f.test[li] || !arm_start(&line.code, tok) {
+            continue;
+        }
+        let mut end = li + 1;
+        while end < f.lines.len() && !arm_boundary(&f.lines[end].code) {
+            end += 1;
+        }
+        regions.push((li, end));
+    }
+    regions
+}
+
+/// Does `code` end the current arm region: the next arm (any token
+/// left of `=>`) or a catch-all?
+fn arm_boundary(code: &str) -> bool {
+    let trimmed = code.trim_start();
+    if trimmed.starts_with("_ =>") || trimmed.starts_with("other =>") {
+        return true;
+    }
+    let Some(a) = arrow_pos(code) else {
+        return false;
+    };
+    ep_tokens(code).iter().any(|(p, _)| *p < a)
+}
+
+fn check_payloads(files: &[CleanFile], table: &ProtocolTable, out: &mut Vec<Finding>) {
+    for spec in &table.specs {
+        let Some(f) = files.iter().find(|f| f.path.ends_with(spec.module)) else {
+            continue;
+        };
+        for h in &spec.handles {
+            if matches!(h.payload, PayloadKind::Any) {
+                continue;
+            }
+            let want = h.payload.short_name();
+            for (start, end) in arm_regions(f, h.name) {
+                for li in start..end {
+                    let Some(got) = take_type(&f.lines[li].code) else {
+                        continue;
+                    };
+                    match h.payload {
+                        PayloadKind::Signal => out.push(Finding {
+                            file: f.path.clone(),
+                            line: li + 1,
+                            check: Check::PayloadMismatch,
+                            message: format!(
+                                "{}: {} is declared as a signal but its handler takes {got}",
+                                spec.chare, h.name
+                            ),
+                        }),
+                        _ if got != want => out.push(Finding {
+                            file: f.path.clone(),
+                            line: li + 1,
+                            check: Check::PayloadMismatch,
+                            message: format!(
+                                "{}: {} handler takes {got} but the spec declares {want}",
+                                spec.chare, h.name
+                            ),
+                        }),
+                        _ => {}
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn check_metric_literals(files: &[CleanFile], out: &mut Vec<Finding>) {
+    for f in files {
+        if EXEMPT_DIRS.iter().any(|d| in_dir(&f.path, d)) {
+            continue;
+        }
+        for (li, line) in f.lines.iter().enumerate() {
+            if f.test[li] {
+                continue;
+            }
+            for s in &line.strings {
+                if METRIC_PREFIXES.iter().any(|p| s.starts_with(p)) {
+                    out.push(Finding {
+                        file: f.path.clone(),
+                        line: li + 1,
+                        check: Check::MetricsLiteral,
+                        message: format!(
+                            "metric key \"{s}\" as a raw literal — use a metrics::keys constant"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
+/// A struct-field line declaring a stash collection: an identifier
+/// with one of the stash prefixes, a `:`, and an owned collection
+/// type. `let` bindings and fn signatures are excluded.
+fn stash_field(code: &str) -> Option<String> {
+    let mut t = code.trim();
+    for vis in ["pub(crate) ", "pub(super) ", "pub "] {
+        if let Some(rest) = t.strip_prefix(vis) {
+            t = rest;
+            break;
+        }
+    }
+    if t.starts_with("let ") || t.starts_with("fn ") {
+        return None;
+    }
+    let (name, rest) = t.split_once(':')?;
+    let name = name.trim();
+    if name.is_empty()
+        || !name.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == '_')
+        || !STASH_PREFIXES.iter().any(|p| name.starts_with(p))
+    {
+        return None;
+    }
+    const COLLECTIONS: [&str; 5] = ["HashMap<", "Vec<", "BTreeMap<", "VecDeque<", "HashSet<"];
+    if !COLLECTIONS.iter().any(|c| rest.contains(c)) {
+        return None;
+    }
+    Some(name.to_string())
+}
+
+fn check_stash_hygiene(files: &[CleanFile], out: &mut Vec<Finding>) {
+    // Body of `fn assert_service_clean`, wherever it lives.
+    let mut clean_body: Option<String> = None;
+    for f in files {
+        let start = f.lines.iter().position(|l| l.code.contains("fn assert_service_clean"));
+        let Some(start) = start else {
+            continue;
+        };
+        let mut body = String::new();
+        let mut depth = 0i64;
+        let mut seen = false;
+        for line in &f.lines[start..] {
+            body.push_str(&line.code);
+            body.push('\n');
+            for c in line.code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        seen = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if seen && depth <= 0 {
+                break;
+            }
+        }
+        clean_body = Some(body);
+        break;
+    }
+    for f in files {
+        if !in_dir(&f.path, "ckio") && !f.path.starts_with("ckio/") {
+            continue;
+        }
+        for (li, line) in f.lines.iter().enumerate() {
+            if f.test[li] {
+                continue;
+            }
+            let Some(field) = stash_field(&line.code) else {
+                continue;
+            };
+            let mut drained = false;
+            for (dl, l) in f.lines.iter().enumerate() {
+                if dl != li
+                    && l.code.contains(&field)
+                    && DRAIN_MARKERS.iter().any(|m| l.code.contains(m))
+                {
+                    drained = true;
+                    break;
+                }
+            }
+            if !drained {
+                out.push(Finding {
+                    file: f.path.clone(),
+                    line: li + 1,
+                    check: Check::StashHygiene,
+                    message: format!(
+                        "stash field {field} has no in-file drain site \
+                         (.remove/.drain/.clear/.pop/mem::take)"
+                    ),
+                });
+            }
+            if field.starts_with("pending_") {
+                if let Some(body) = &clean_body {
+                    if !body.contains(&field) {
+                        out.push(Finding {
+                            file: f.path.clone(),
+                            line: li + 1,
+                            check: Check::StashHygiene,
+                            message: format!(
+                                "stash field {field} is not checked by assert_service_clean"
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tree walking, protocol dump, CLI.
+// ---------------------------------------------------------------------------
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.map(|e| e.map(|e| e.path())).collect::<io::Result<_>>()?;
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            collect_rs(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+/// Scan every `.rs` file under `root`. Returns the findings and the
+/// number of files scanned. Paths in findings are relative to `root`.
+pub fn scan_tree(root: &Path, table: &ProtocolTable) -> io::Result<(Vec<Finding>, usize)> {
+    let mut paths = Vec::new();
+    collect_rs(root, &mut paths)?;
+    let mut files = Vec::new();
+    for p in &paths {
+        let rel = p.strip_prefix(root).unwrap_or(p).to_string_lossy().into_owned();
+        files.push((rel, fs::read_to_string(p)?));
+    }
+    Ok((scan_sources(&files, table), files.len()))
+}
+
+/// Render the protocol table as Markdown — the `--dump-protocol` mode,
+/// checked in as `docs/PROTOCOL.md`. Deterministic: specs, handles,
+/// and sends appear in declaration order.
+pub fn dump_protocol_markdown(table: &ProtocolTable) -> String {
+    let mut md = String::new();
+    md.push_str("# CkIO declared message protocol\n\n");
+    md.push_str(
+        "Generated from the in-tree protocol registry (`rust/src/amt/protocol.rs`)\n\
+         by `ckio lint --dump-protocol`. Regenerate after any protocol change —\n\
+         the maintenance rule in ROADMAP.md requires a chare's `protocol_spec()`\n\
+         to move in the same commit as its EPs, payload types, or send sites.\n",
+    );
+    for spec in &table.specs {
+        md.push_str(&format!("\n## {} — `{}`\n\nHandles:\n\n", spec.chare, spec.module));
+        md.push_str("| EP | Constant | Payload |\n|---:|----------|---------|\n");
+        for h in &spec.handles {
+            let p = h.payload.short_name();
+            md.push_str(&format!("| {} | `{}` | `{}` |\n", h.ep, h.name, p));
+        }
+        if spec.sends.is_empty() {
+            md.push_str("\nSends: none (all inbound traffic arrives via callbacks).\n");
+        } else {
+            md.push_str("\nSends:\n\n| Target | EP | Constant | Payload |\n");
+            md.push_str("|--------|---:|----------|---------|\n");
+            for s in &spec.sends {
+                let p = s.payload.short_name();
+                md.push_str(&format!("| {} | {} | `{}` | `{}` |\n", s.target, s.ep, s.name, p));
+            }
+        }
+    }
+    md
+}
+
+/// Shared entry point for `ckio lint` and the `ckio-lint` binary.
+/// Args: an optional tree root (default `rust/src`, falling back to
+/// `src` when invoked from inside `rust/`) and `--dump-protocol`.
+/// Exit codes: 0 clean, 1 findings, 2 usage/protocol/IO error.
+pub fn cli(args: &[String]) -> i32 {
+    let mut dump = false;
+    let mut root: Option<String> = None;
+    for a in args {
+        match a.as_str() {
+            "--dump-protocol" => dump = true,
+            other if !other.starts_with('-') && root.is_none() => root = Some(other.to_string()),
+            other => {
+                eprintln!("ckio-lint: unknown argument {other:?}");
+                eprintln!("usage: ckio-lint [--dump-protocol] [tree-root]");
+                return 2;
+            }
+        }
+    }
+    let table = protocol::builtin_table();
+    if let Err(errs) = protocol::verify(&table) {
+        eprintln!("{}", protocol::format_errors(&errs));
+        return 2;
+    }
+    if dump {
+        print!("{}", dump_protocol_markdown(&table));
+        return 0;
+    }
+    let root = root.unwrap_or_else(|| {
+        if Path::new("rust/src").is_dir() {
+            "rust/src".into()
+        } else {
+            "src".into()
+        }
+    });
+    match scan_tree(Path::new(&root), &table) {
+        Ok((findings, scanned)) if findings.is_empty() => {
+            println!("ckio-lint: {scanned} files clean under {root}");
+            0
+        }
+        Ok((findings, scanned)) => {
+            for f in &findings {
+                eprintln!("{f}");
+            }
+            eprintln!("ckio-lint: {} findings in {scanned} files under {root}", findings.len());
+            1
+        }
+        Err(e) => {
+            eprintln!("ckio-lint: cannot scan {root}: {e}");
+            2
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amt::protocol::{EpSpec, ProtocolSpec};
+
+    struct FooMsg;
+
+    fn one(path: &str, text: &str) -> Vec<(String, String)> {
+        vec![(path.to_string(), text.to_string())]
+    }
+
+    fn spec(module: &'static str, handles: Vec<EpSpec>) -> ProtocolTable {
+        let mut t = ProtocolTable::default();
+        t.push(ProtocolSpec { chare: "Fixture", module, handles, sends: vec![] });
+        t
+    }
+
+    fn of(findings: &[Finding], check: Check) -> Vec<&Finding> {
+        findings.iter().filter(|f| f.check == check).collect()
+    }
+
+    #[test]
+    fn lexer_strips_strings_and_comments() {
+        let src = "let a = \"EP_IN_STRING\"; // EP_IN_COMMENT\nlet b = 'x';";
+        let lines = clean_source(src);
+        assert!(!lines[0].code.contains("EP_IN_STRING"));
+        assert_eq!(lines[0].strings, vec!["EP_IN_STRING".to_string()]);
+        assert!(lines[0].comment.contains("EP_IN_COMMENT"));
+        assert!(!lines[1].code.contains('x'));
+    }
+
+    #[test]
+    fn lexer_carries_raw_strings_across_lines() {
+        let src = "let s = r#\"first \"quoted\"\nsecond EP_RAW\"#;\nlet t = EP_AFTER;";
+        let lines = clean_source(src);
+        assert!(lines[1].code.trim().is_empty() || !lines[1].code.contains("EP_RAW"));
+        assert!(lines[1].strings.iter().any(|s| s.contains("EP_RAW")));
+        assert!(lines[2].code.contains("EP_AFTER"));
+    }
+
+    #[test]
+    fn lexer_carries_plain_strings_across_lines() {
+        // A normal string left open at end-of-line (as in `\`-continued
+        // literals) must not leak its content — or its braces — into code.
+        let src = "let s = \"a { EP_INSIDE\nb } c\";\nlet t = EP_AFTER;";
+        let lines = clean_source(src);
+        assert!(!lines[0].code.contains('{'));
+        assert!(!lines[0].code.contains("EP_INSIDE"));
+        assert!(!lines[1].code.contains('}'));
+        assert_eq!(lines[1].strings, vec!["a { EP_INSIDE\nb } c"]);
+        assert!(lines[2].code.contains("EP_AFTER"));
+    }
+
+    #[test]
+    fn lexer_keeps_lifetimes_but_drops_char_literals() {
+        let lines = clean_source("fn f<'a>(x: &'a str) { let c = '\"'; let d = \"ok\"; }");
+        assert!(lines[0].code.contains("'a"));
+        assert_eq!(lines[0].strings, vec!["ok".to_string()]);
+    }
+
+    #[test]
+    fn test_regions_are_masked() {
+        let src = "const A: u32 = 1;\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   const B: u32 = 2;\n\
+                   }\n\
+                   const C: u32 = 3;";
+        let lines = clean_source(src);
+        let mask = test_mask(&lines);
+        assert_eq!(mask, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn dead_ep_detected_and_cleared_by_use() {
+        let dead = "pub const EP_DEADX: Ep = 1;\n\
+                    fn recv(ep: u32) { match ep { EP_DEADX => {} _ => {} } }";
+        let fs = one("app.rs", dead);
+        let findings = scan_sources(&fs, &ProtocolTable::default());
+        let dead_eps = of(&findings, Check::DeadEp);
+        assert_eq!(dead_eps.len(), 1, "{findings:?}");
+        assert!(dead_eps[0].message.contains("no non-test send site"));
+
+        let live = "pub const EP_DEADX: Ep = 1;\n\
+                    fn go(ctx: &C) { ctx.send(t, EP_DEADX, p); }\n\
+                    fn recv(ep: u32) { match ep { EP_DEADX => {} _ => {} } }";
+        let findings = scan_sources(&one("app.rs", live), &ProtocolTable::default());
+        assert!(of(&findings, Check::DeadEp).is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn stale_comment_ref_detected() {
+        let src = "pub const EP_REAL: Ep = 1;\n\
+                   // replaced by EP_GONE long ago\n\
+                   fn f() { g(EP_REAL); h(EP_REAL); }\n\
+                   fn recv(ep: u32) { match ep { EP_REAL => {} _ => {} } }";
+        let findings = scan_sources(&one("app.rs", src), &ProtocolTable::default());
+        let stale = of(&findings, Check::StaleEpRef);
+        assert_eq!(stale.len(), 1, "{findings:?}");
+        assert!(stale[0].message.contains("EP_GONE"));
+        assert_eq!(stale[0].line, 2);
+    }
+
+    #[test]
+    fn spec_coverage_both_directions() {
+        let src = "pub const EP_ONE: Ep = 1;\n\
+                   pub const EP_TWO: Ep = 2;\n\
+                   fn s(ctx: &C) { ctx.send(t, EP_ONE, p); ctx.send(t, EP_TWO, p); }\n\
+                   fn recv(ep: u32) { match ep { EP_ONE => {} EP_TWO => {} _ => {} } }";
+        const EP_ONE: u32 = 1;
+        let table = spec("app.rs", vec![crate::ep_spec!(EP_ONE, PayloadKind::Signal)]);
+        let findings = scan_sources(&one("app.rs", src), &table);
+        let cov = of(&findings, Check::SpecCoverage);
+        assert_eq!(cov.len(), 1, "{findings:?}");
+        assert!(cov[0].message.contains("EP_TWO"), "{:?}", cov[0]);
+    }
+
+    #[test]
+    fn payload_mismatch_detected() {
+        let src = "pub const EP_ONE: Ep = 1;\n\
+                   fn s(ctx: &C) { ctx.send(t, EP_ONE, p); }\n\
+                   fn recv(msg: &mut Msg) { match msg.ep {\n\
+                   EP_ONE => {\n\
+                   let m: BarMsg = msg.take();\n\
+                   }\n\
+                   _ => {}\n\
+                   } }";
+        const EP_ONE: u32 = 1;
+        let table = spec("app.rs", vec![crate::ep_spec!(EP_ONE, PayloadKind::of::<FooMsg>())]);
+        let findings = scan_sources(&one("app.rs", src), &table);
+        let pm = of(&findings, Check::PayloadMismatch);
+        assert_eq!(pm.len(), 1, "{findings:?}");
+        assert!(pm[0].message.contains("BarMsg") && pm[0].message.contains("FooMsg"));
+        assert_eq!(pm[0].line, 5);
+    }
+
+    #[test]
+    fn signal_with_take_detected_and_matching_take_clean() {
+        let src = "pub const EP_ONE: Ep = 1;\n\
+                   pub const EP_TWO: Ep = 2;\n\
+                   fn s(ctx: &C) { ctx.send(t, EP_ONE, p); ctx.send(t, EP_TWO, p); }\n\
+                   fn recv(msg: &mut Msg) { match msg.ep {\n\
+                   EP_ONE => {\n\
+                   let m: FooMsg = msg.take();\n\
+                   }\n\
+                   EP_TWO => {\n\
+                   let m = msg.take::<FooMsg>();\n\
+                   }\n\
+                   _ => {}\n\
+                   } }";
+        const EP_ONE: u32 = 1;
+        const EP_TWO: u32 = 2;
+        let table = spec(
+            "app.rs",
+            vec![
+                crate::ep_spec!(EP_ONE, PayloadKind::of::<FooMsg>()),
+                crate::ep_spec!(EP_TWO, PayloadKind::Signal),
+            ],
+        );
+        let findings = scan_sources(&one("app.rs", src), &table);
+        let pm = of(&findings, Check::PayloadMismatch);
+        assert_eq!(pm.len(), 1, "{findings:?}");
+        assert!(pm[0].message.contains("declared as a signal"), "{:?}", pm[0]);
+    }
+
+    #[test]
+    fn metric_literal_detected_and_exempt_dirs_skipped() {
+        let src = "fn f(m: &M) { m.counter(\"ckio.rogue\", 1); }";
+        let findings = scan_sources(&one("app.rs", src), &ProtocolTable::default());
+        assert_eq!(of(&findings, Check::MetricsLiteral).len(), 1, "{findings:?}");
+        let findings = scan_sources(&one("metrics/mod.rs", src), &ProtocolTable::default());
+        assert!(of(&findings, Check::MetricsLiteral).is_empty());
+    }
+
+    #[test]
+    fn stash_without_drain_detected() {
+        let src = "struct S {\n\
+                   pending_work: HashMap<u32, u64>,\n\
+                   parked: Vec<u8>,\n\
+                   }\n\
+                   impl S { fn d(&mut self) { self.parked.clear(); } }";
+        let findings = scan_sources(&one("ckio/stash.rs", src), &ProtocolTable::default());
+        let sh = of(&findings, Check::StashHygiene);
+        assert_eq!(sh.len(), 1, "{findings:?}");
+        assert!(sh[0].message.contains("pending_work"));
+    }
+
+    #[test]
+    fn pending_fields_must_reach_assert_service_clean() {
+        let src = "struct S {\n\
+                   pending_work: HashMap<u32, u64>,\n\
+                   }\n\
+                   impl S { fn d(&mut self) { self.pending_work.clear(); } }\n\
+                   pub fn assert_service_clean(s: &S) {\n\
+                   assert!(s.ok);\n\
+                   }";
+        let findings = scan_sources(&one("ckio/stash.rs", src), &ProtocolTable::default());
+        let sh = of(&findings, Check::StashHygiene);
+        assert_eq!(sh.len(), 1, "{findings:?}");
+        assert!(sh[0].message.contains("assert_service_clean"), "{:?}", sh[0]);
+    }
+
+    #[test]
+    fn builtin_dump_is_deterministic_and_complete() {
+        let table = protocol::builtin_table();
+        let a = dump_protocol_markdown(&table);
+        let b = dump_protocol_markdown(&table);
+        assert_eq!(a, b);
+        for spec in &table.specs {
+            assert!(a.contains(spec.chare), "missing {}", spec.chare);
+        }
+        assert!(a.contains("| `EP_BUF_DATA` |") || a.contains("`EP_BUF_DATA`"));
+    }
+}

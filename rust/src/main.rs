@@ -8,6 +8,7 @@
 //! ckio changa --nodes 4 --tp 4096 --scheme ckio [--nbodies 2097152]
 //! ckio bench-json [--out BENCH_pr5.json] [--reps 3]   # svc perf + store/governor/shard/placement/qos anchor
 //! ckio artifacts [--dir artifacts]           # list + smoke-run lowered artifacts
+//! ckio lint [--dump-protocol] [tree-root]    # protocol verifier + source lint
 //! ```
 
 use ckio::amt::time;
@@ -15,6 +16,7 @@ use ckio::apps::changa::driver::{run_changa_input, Scheme};
 use ckio::ckio::{FileOptions, SessionOptions};
 use ckio::harness::bench::Table;
 use ckio::harness::experiments as exp;
+use ckio::metrics::keys;
 use ckio::util::cli::Args;
 
 fn main() {
@@ -27,10 +29,16 @@ fn main() {
         "artifacts" => cmd_artifacts(&args),
         "perf" => cmd_perf(&args),
         "bench-json" => cmd_bench_json(&args),
+        "lint" => {
+            // Re-read raw argv: the lint CLI takes flag-style args
+            // (`--dump-protocol`) that `Args` would swallow.
+            let rest: Vec<String> = std::env::args().skip(2).collect();
+            std::process::exit(ckio::lint::cli(&rest));
+        }
         _ => {
             eprintln!(
                 "usage: ckio fig <id|all> [--reps N] [--out DIR] | read | changa | artifacts | \
-                 bench-json [--out BENCH_pr5.json]\n\
+                 bench-json [--out BENCH_pr5.json] | lint [--dump-protocol] [tree-root]\n\
                  see `rust/src/main.rs` header for full flags"
             );
         }
@@ -192,8 +200,8 @@ fn cmd_perf(args: &Args) {
             SessionOptions::default(),
             i as u64,
         );
-        total_tasks += eng.core.metrics.counter("amt.tasks");
-        total_msgs += eng.core.metrics.counter("amt.msgs_sent");
+        total_tasks += eng.core.metrics.counter(keys::TASKS);
+        total_msgs += eng.core.metrics.counter(keys::MSGS);
     }
     let wall = t0.elapsed().as_secs_f64();
     // Every task + message involves at least one heap event; PFS adds

@@ -140,6 +140,45 @@ pub mod keys {
     pub const CKIO_READS: &str = "ckio.reads_served";
     /// CkIO: bytes delivered to clients.
     pub const CKIO_BYTES: &str = "ckio.bytes_delivered";
+    /// CkIO: read sessions started.
+    pub const SESSIONS: &str = "ckio.sessions";
+    /// CkIO: session starts rejected with a structured error.
+    pub const SESSIONS_REJECTED: &str = "ckio.sessions_rejected";
+    /// CkIO: opens rejected with a structured error (invalid or
+    /// conflicting options).
+    pub const OPENS_REJECTED: &str = "ckio.opens_rejected";
+    /// CkIO: re-opens of an already-open file (refcount sharing).
+    pub const REOPENS: &str = "ckio.reopens";
+    /// CkIO: duplicate session/file closes observed (idempotent).
+    pub const DOUBLE_CLOSE: &str = "ckio.double_close";
+    /// Manager: reads answered with a modeled NACK because their session
+    /// was already torn down.
+    pub const READS_AFTER_CLOSE: &str = "ckio.reads_after_close";
+    /// Assembler: accumulated client-read assembly latency.
+    pub const ASSEMBLY_LATENCY: &str = "ckio.assembly_latency";
+    /// Assembler: late pieces of a closed session, tolerated and dropped.
+    pub const PIECES_AFTER_CLOSE: &str = "ckio.pieces_after_close";
+    /// Buffer chares: pieces served to assemblers from resident data.
+    pub const PIECES_SERVED: &str = "ckio.pieces_served";
+    /// Buffer chares: fetches answered with a modeled NACK chunk
+    /// (teardown drain).
+    pub const PIECES_NACKED: &str = "ckio.pieces_nacked";
+    /// Buffer chares: fetch requests received.
+    pub const FETCHES: &str = "ckio.fetches";
+    /// Buffer chares: fetches arriving after the buffer dropped.
+    pub const FETCH_AFTER_DROP: &str = "ckio.fetch_after_drop";
+    /// Completion time of the last prefetch I/O (gauge, ns; §V's io_s).
+    pub const LAST_IO_NS: &str = "ckio.last_io_ns";
+    /// Buffer chares rebound to a parked array instead of reading.
+    pub const BUFFERS_REBOUND: &str = "ckio.buffers_rebound";
+    /// Sessions that reused a parked buffer array wholesale.
+    pub const BUFFER_REUSE: &str = "ckio.buffer_reuse";
+    /// Parked arrays evicted to stay under the store budget.
+    pub const BUFFER_CACHE_EVICTIONS: &str = "ckio.buffer_cache_evictions";
+    /// Span store: peer-fetch bytes served from a resident slot.
+    pub const STORE_PEER_SERVED: &str = "ckio.store.peer_served";
+    /// Span store: peer fetches that missed (source gone meanwhile).
+    pub const STORE_PEER_MISS: &str = "ckio.store.peer_miss";
     /// Span store: bytes served from resident data (peer-fetched slots
     /// and exact-match rebinds) instead of new PFS reads.
     pub const STORE_HIT: &str = "ckio.store.hit_bytes";

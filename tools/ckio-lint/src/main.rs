@@ -1,0 +1,9 @@
+//! `ckio-lint`: thin CLI wrapper over [`ckio::lint`] so CI can run the
+//! source pass without building the full experiment launcher. Same
+//! behavior as `ckio lint`; see `ckio::lint::cli` for args and exit
+//! codes (0 clean, 1 findings, 2 usage/protocol error).
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(ckio::lint::cli(&args));
+}

@@ -1,0 +1,36 @@
+//! Lint fixture: a mock chare module with seeded protocol violations.
+//! Scanned by `tests/fixtures.rs` as data — never compiled.
+
+pub type Ep = u32;
+
+/// Declared and matched, but nothing ever sends it.
+pub const EP_DEAD: Ep = 1;
+/// Sent and matched, but the handler decodes the wrong type.
+pub const EP_TAKES_FOO: Ep = 2;
+
+pub struct FooMsg {
+    pub n: u64,
+}
+
+pub struct BarMsg {
+    pub n: u64,
+}
+
+// The EP_GHOST ticket protocol was removed long ago; this comment
+// still references it.
+
+pub fn drive(ctx: &mut Ctx, peer: ChareRef) {
+    ctx.send(peer, EP_TAKES_FOO, Payload::new(FooMsg { n: 7 }));
+    ctx.metrics.incr("ckio.rogue", 1);
+}
+
+pub fn receive(msg: &mut Msg) {
+    match msg.ep {
+        EP_DEAD => {}
+        EP_TAKES_FOO => {
+            let m: BarMsg = msg.take();
+            let _ = m.n;
+        }
+        other => panic!("unknown ep {other}"),
+    }
+}

@@ -1,0 +1,15 @@
+//! Lint fixture: a stash map with an insert site but no drain.
+
+use std::collections::HashMap;
+
+pub struct Stash {
+    pending_things: HashMap<u32, Vec<u8>>,
+    done: u64,
+}
+
+impl Stash {
+    pub fn park(&mut self, id: u32, bytes: Vec<u8>) {
+        self.pending_things.insert(id, bytes);
+        self.done += 1;
+    }
+}
