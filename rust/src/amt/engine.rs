@@ -26,6 +26,7 @@ use crate::metrics::{keys, Metrics};
 use crate::net::{NetConfig, Network, Transfer};
 use crate::pfs::backend::{LocalDisk, ReadRequest};
 use crate::pfs::model::{PfsConfig, PfsEvent, SimPfs};
+use crate::trace::{names as trace_names, Lane as TraceLane, TraceCategory, TraceSink};
 use crate::util::rng::Pcg32;
 
 use super::callback::{Callback, FutureId};
@@ -142,6 +143,10 @@ pub struct Core {
     pub net: Network,
     pub loc: LocationManager,
     pub metrics: Metrics,
+    /// Flight recorder (disabled and storage-free by default; installed
+    /// by `CkIo::boot_with` when `ServiceConfig::trace` enables it, or
+    /// by the armed `crate::trace` station for CLI-traced runs).
+    pub trace: TraceSink,
     pub rng: Pcg32,
     pub io: Io,
     futures: Vec<FutureState>,
@@ -272,6 +277,17 @@ impl Core {
         self.validate_send(&env);
         self.n_msgs += 1;
         let dest = self.first_hop(env.from_pe, env.to);
+        if self.trace.on(TraceCategory::Sched) {
+            self.trace.instant(
+                t,
+                TraceCategory::Sched,
+                trace_names::SCHED_SEND,
+                TraceLane::Pe(env.from_pe.0),
+                u64::from(env.msg.ep),
+                env.wire_bytes,
+                "",
+            );
+        }
         let delay = match self.clock {
             ClockMode::Virtual => {
                 let (topo, from) = (self.topo, env.from_pe);
@@ -356,7 +372,7 @@ impl Core {
         match &mut self.io {
             Io::Sim(pfs) => {
                 let mut out = std::mem::take(&mut self.pfs_scratch);
-                pfs.submit(now, pe, node, req, cb, &mut self.metrics, &mut out);
+                pfs.submit(now, pe, node, req, cb, &mut self.metrics, &mut self.trace, &mut out);
                 for s in out.drain(..) {
                     self.push(s.at, Event::Pfs(s.ev));
                 }
@@ -434,6 +450,13 @@ impl Core {
         self.metrics.count(keys::MSGS, self.n_msgs - self.flushed_msgs);
         self.flushed_tasks = self.n_tasks;
         self.flushed_msgs = self.n_msgs;
+        if self.trace.is_enabled() {
+            // Ring truncation is never silent: surface the drop count.
+            let d = self.trace.take_unflushed_dropped();
+            if d > 0 {
+                self.metrics.count(keys::TRACE_DROPPED, d);
+            }
+        }
         self.metrics.set("net.bytes_total", self.net.total_bytes as f64);
         let busy = self.net.total_busy;
         self.metrics.set("net.busy_secs", busy as f64 / 1e9);
@@ -594,6 +617,11 @@ impl<'a> Ctx<'a> {
         &mut self.core.metrics
     }
 
+    /// The flight recorder (a no-op sink unless tracing was enabled).
+    pub fn trace(&mut self) -> &mut TraceSink {
+        &mut self.core.trace
+    }
+
     /// True in wall-clock (real I/O / real compute) runs.
     pub fn is_wall(&self) -> bool {
         self.core.is_wall()
@@ -626,6 +654,13 @@ impl Engine {
                 net: Network::new(cfg.net, &cfg.topo),
                 loc: LocationManager::new(npes),
                 metrics: Metrics::new(),
+                // The CLI's armed trace station traces every engine built
+                // on this thread; otherwise the sink is a storage-free
+                // no-op until `CkIo::boot_with` installs one.
+                trace: match crate::trace::armed() {
+                    Some(tc) => TraceSink::new(&tc),
+                    None => TraceSink::disabled(),
+                },
                 rng: Pcg32::seeded(cfg.seed),
                 io: Io::None,
                 futures: Vec::new(),
@@ -849,7 +884,9 @@ impl Engine {
                 let now = self.core.now;
                 let mut out = std::mem::take(&mut self.core.pfs_scratch);
                 let done = match &mut self.core.io {
-                    Io::Sim(pfs) => pfs.on_event(now, pev, &mut self.core.metrics, &mut out),
+                    Io::Sim(pfs) => {
+                        pfs.on_event(now, pev, &mut self.core.metrics, &mut self.core.trace, &mut out)
+                    }
                     _ => None,
                 };
                 for s in out.drain(..) {
@@ -939,6 +976,7 @@ impl Engine {
         };
         let to = env.to;
         let wire_bytes = env.wire_bytes;
+        let task_ep = env.msg.ep;
         let slot = self.core.slot(to);
         let Some(mut chare) = self.chares[slot].take() else {
             // The chare migrated away after this message was queued here
@@ -996,6 +1034,19 @@ impl Engine {
         st.busy_until = done_t;
         st.account(cost);
         self.core.n_tasks += 1;
+        if self.core.trace.on(TraceCategory::Sched) {
+            self.core.trace.complete(
+                start,
+                cost,
+                TraceCategory::Sched,
+                trace_names::SCHED_TASK,
+                TraceLane::Pe(pe.0),
+                0,
+                u64::from(task_ep),
+                u64::from(to.index),
+                "",
+            );
+        }
 
         // Dynamically created chares exist before any message can reach
         // them (sends depart at `done_t`, delivery events come later).
@@ -1041,6 +1092,17 @@ impl Engine {
         } else {
             let when = st.busy_until;
             self.core.push(when, Event::RunNext { pe });
+        }
+    }
+}
+
+impl Drop for Engine {
+    /// Hand the sink to the armed trace station (a no-op for untraced
+    /// engines and unarmed threads) so CLI-traced experiment drivers
+    /// need no signature changes to surface their timelines.
+    fn drop(&mut self) {
+        if self.core.trace.is_enabled() {
+            crate::trace::deposit(std::mem::take(&mut self.core.trace));
         }
     }
 }

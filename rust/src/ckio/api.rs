@@ -107,6 +107,14 @@ impl CkIo {
     /// created.
     pub fn boot_with(engine: &mut Engine, cfg: ServiceConfig) -> Result<CkIo, ConfigError> {
         cfg.validate()?;
+        // Flight recorder (PR 7): install the sink before any service
+        // state exists, so even boot-time sends are recorded. Leaving
+        // the field alone when tracing is off preserves a sink armed via
+        // `trace::station` (the CLI path) — the config and the station
+        // compose, last writer wins.
+        if cfg.trace.enabled {
+            engine.core.trace = crate::trace::TraceSink::new(&cfg.trace);
+        }
         let assemblers = engine.create_group(|_| ReadAssembler::default());
         // The director's ChareRef isn't known until created; managers and
         // shards are patched right after through `patch_director`, which

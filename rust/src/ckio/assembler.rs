@@ -14,7 +14,7 @@
 //! is counted and discarded, while an unknown tag of a live session still
 //! panics — that would be a real protocol bug.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef};
@@ -24,6 +24,7 @@ use crate::amt::protocol::{PayloadKind, ProtocolSpec};
 use crate::amt::time::Time;
 use crate::impl_chare_any;
 use crate::metrics::keys;
+use crate::trace::{names as trace_names, Lane as TraceLane, TraceCategory};
 use crate::util::bytes::Chunk;
 use crate::{ep_spec, send_spec};
 
@@ -65,6 +66,9 @@ pub struct ReadAssembler {
     /// Sessions known to be torn down (late-piece tolerance; bounded —
     /// see [`ClosedSessions`]).
     closed: ClosedSessions,
+    /// Sessions whose first assembled byte this PE has already traced
+    /// (populated only while tracing — the `session/first_byte` marker).
+    first_served: HashSet<SessionId>,
     /// Total reads assembled (inspection).
     pub completed: u64,
 }
@@ -78,6 +82,35 @@ impl ReadAssembler {
         ctx.metrics().count(keys::CKIO_BYTES, a.len);
         let latency = ctx.now().saturating_sub(a.started_at);
         ctx.metrics().charge(keys::ASSEMBLY_LATENCY, latency);
+        ctx.metrics().record(keys::LATENCY_ASSEMBLY, latency);
+        if ctx.trace().on(TraceCategory::Session) {
+            let pe = ctx.pe().0;
+            ctx.trace().complete(
+                a.started_at,
+                latency,
+                TraceCategory::Session,
+                trace_names::SESSION_ASSEMBLY,
+                TraceLane::Pe(pe),
+                u64::from(a.session.0),
+                a.len,
+                0,
+                "",
+            );
+            if self.first_served.insert(a.session) {
+                // First byte delivered to a client of this session on
+                // this PE: the paper's time-to-first-data marker.
+                let now = ctx.now();
+                ctx.trace().instant(
+                    now,
+                    TraceCategory::Session,
+                    trace_names::SESSION_FIRST_BYTE,
+                    TraceLane::Pe(pe),
+                    u64::from(a.session.0),
+                    latency,
+                    "",
+                );
+            }
+        }
         // One memcpy into the client's buffer (~80 GB/s), plus bookkeeping.
         ctx.advance(300 + (a.len as f64 * 0.0125) as Time);
         ctx.fire(
@@ -185,6 +218,7 @@ impl Chare for ReadAssembler {
             EP_A_SESSION_DROP => {
                 let sid: SessionId = msg.take();
                 self.closed.insert(sid);
+                self.first_served.remove(&sid);
                 // Note: assemblies of `sid` still in flight are NOT
                 // purged — the teardown drain guarantees each of their
                 // pending fetches is answered (resident data or a modeled

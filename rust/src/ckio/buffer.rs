@@ -76,6 +76,7 @@ use crate::{ep_spec, send_spec};
 use crate::net::Transfer;
 use crate::pfs::backend::{IoResult, ReadRequest};
 use crate::pfs::layout::FileId;
+use crate::trace::{names as trace_names, Lane as TraceLane, TraceCategory};
 use crate::util::bytes::{ceil_div, Chunk};
 
 use super::governor::QosClass;
@@ -270,6 +271,9 @@ pub struct BufferChare {
     /// Issue times of in-flight governed PFS reads, keyed by slot — the
     /// observed service time reported with each returned ticket.
     issued_at: HashMap<u32, Time>,
+    /// Send times of outstanding peer fetches, keyed by slot — the
+    /// `ckio.latency.peer_fetch` histogram's request→data interval.
+    peer_sent_at: HashMap<u32, Time>,
     /// Whether the shard has answered our registration (PFS issuance
     /// holds until then, so a racing resolve never loses a dedup).
     peers_resolved: bool,
@@ -326,6 +330,7 @@ impl BufferChare {
             class: QosClass::default(),
             asked: 0,
             issued_at: HashMap::new(),
+            peer_sent_at: HashMap::new(),
             peers_resolved: false,
             planned_covered: None,
             director,
@@ -719,6 +724,7 @@ impl Chare for BufferChare {
                 let me = ctx.me();
                 for p in &m.peers {
                     let (offset, len) = self.slot_extent(p.slot);
+                    self.peer_sent_at.insert(p.slot, ctx.now());
                     ctx.send(
                         p.owner,
                         EP_BUF_PEER_FETCH,
@@ -754,6 +760,7 @@ impl Chare for BufferChare {
             }
             EP_BUF_PEER_DATA => {
                 let m: PeerDataMsg = msg.take();
+                let sent = self.peer_sent_at.remove(&m.slot);
                 match m.chunk {
                     Some(chunk) => {
                         if self.state == BufState::Dropped {
@@ -772,6 +779,23 @@ impl Chare for BufferChare {
                         let key =
                             if same { keys::PLACE_SAME_PE } else { keys::PLACE_CROSS_PE };
                         ctx.metrics().count(key, m.len);
+                        if let Some(t) = sent {
+                            let waited = ctx.now().saturating_sub(t);
+                            ctx.metrics().record(keys::LATENCY_PEER_FETCH, waited);
+                            if ctx.trace().on(TraceCategory::Store) {
+                                ctx.trace().complete(
+                                    t,
+                                    waited,
+                                    TraceCategory::Store,
+                                    trace_names::STORE_PEER_FETCH,
+                                    TraceLane::Pe(my_pe),
+                                    0,
+                                    u64::from(m.slot),
+                                    m.len,
+                                    if same { "same_pe" } else { "cross_pe" },
+                                );
+                            }
+                        }
                         self.slot_arrived(ctx, m.slot as usize, chunk);
                     }
                     None => {
@@ -854,6 +878,7 @@ impl Chare for BufferChare {
             EP_BUF_DROP => {
                 self.drain_pending(ctx);
                 self.chunks.iter_mut().for_each(|c| *c = None);
+                self.peer_sent_at.clear();
                 let was_active = self.state != BufState::Dropped;
                 self.state = BufState::Dropped;
                 ctx.advance(MICROS / 2);

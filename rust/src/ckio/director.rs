@@ -80,9 +80,11 @@ use crate::amt::msg::{Ep, Msg, Payload};
 use crate::amt::protocol::{PayloadKind, ProtocolSpec};
 use crate::amt::time::MICROS;
 use crate::amt::topology::Placement;
+use crate::amt::time::Time;
 use crate::impl_chare_any;
 use crate::metrics::keys;
 use crate::pfs::layout::FileId;
+use crate::trace::{names as trace_names, Lane as TraceLane, TraceCategory};
 use crate::{ep_spec, send_spec};
 
 use super::assembler::EP_A_SESSION_DROP;
@@ -203,6 +205,9 @@ struct SessionState {
     /// `Some` iff the session opted into buffer reuse: the span-store key
     /// its array is parked under on close.
     reuse_key: Option<BufKey>,
+    /// Virtual time the session was inserted — the origin of the
+    /// `ckio.latency.session_makespan` sample and `session/active` span.
+    started_at: Time,
 }
 
 /// A teardown in progress (session or file); extra close calls for the
@@ -344,7 +349,21 @@ impl Director {
         let Some(st) = self.sessions.get_mut(&sid) else { return };
         if !st.fired && st.buf_started == st.session.num_buffers && st.mgr_acks == self.npes {
             st.fired = true;
+            let nbuf = st.session.num_buffers;
             ctx.fire(st.ready.clone(), Payload::new(st.session));
+            if ctx.trace().on(TraceCategory::Session) {
+                let now = ctx.now();
+                let pe = ctx.pe().0;
+                ctx.trace().instant(
+                    now,
+                    TraceCategory::Session,
+                    trace_names::SESSION_READY,
+                    TraceLane::Pe(pe),
+                    u64::from(sid.0),
+                    u64::from(nbuf),
+                    "",
+                );
+            }
         }
     }
 
@@ -356,7 +375,34 @@ impl Director {
         st.parked_bytes += resident;
         if st.acks == st.need {
             let st = self.closes.remove(&sid).unwrap();
-            self.sessions.remove(&sid);
+            if let Some(ss) = self.sessions.remove(&sid) {
+                // The session is fully gone: every buffer and manager
+                // acked. This close edge is the makespan's far end.
+                let now = ctx.now();
+                let makespan = now.saturating_sub(ss.started_at);
+                ctx.metrics().record(keys::LATENCY_SESSION_MAKESPAN, makespan);
+                if ctx.trace().on(TraceCategory::Session) {
+                    let pe = ctx.pe().0;
+                    ctx.trace().end(
+                        now,
+                        TraceCategory::Session,
+                        trace_names::SESSION_ACTIVE,
+                        TraceLane::Pe(pe),
+                        u64::from(sid.0),
+                        makespan,
+                        0,
+                    );
+                    ctx.trace().instant(
+                        now,
+                        TraceCategory::Session,
+                        trace_names::SESSION_CLOSE,
+                        TraceLane::Pe(pe),
+                        u64::from(sid.0),
+                        makespan,
+                        "",
+                    );
+                }
+            }
             // Publish the fully parked array for reuse — unless its file
             // was closed in the meantime (nothing can rebind it then;
             // the shard's purge already dropped its claims).
@@ -440,6 +486,7 @@ impl Director {
         let shard = self.shard_ref(m.file);
         ctx.send(shard, EP_SHARD_ADMIT, class);
         let session = Session::new(sid, m.file, m.offset, m.bytes, buffers, nbuf);
+        let started_at = ctx.now();
         self.sessions.insert(sid, SessionState {
             session,
             ready: m.ready,
@@ -447,7 +494,29 @@ impl Director {
             mgr_acks: 0,
             fired: false,
             reuse_key: Some(key),
+            started_at,
         });
+        if ctx.trace().on(TraceCategory::Session) {
+            let pe = ctx.pe().0;
+            ctx.trace().begin(
+                started_at,
+                TraceCategory::Session,
+                trace_names::SESSION_ACTIVE,
+                TraceLane::Pe(pe),
+                u64::from(sid.0),
+                m.bytes,
+                u64::from(nbuf),
+            );
+            ctx.trace().instant(
+                started_at,
+                TraceCategory::Session,
+                trace_names::SESSION_CREATE,
+                TraceLane::Pe(pe),
+                u64::from(sid.0),
+                u64::from(nbuf),
+                "rebind",
+            );
+        }
         for b in 0..nbuf {
             ctx.send(ChareRef::new(buffers, b), EP_BUF_REBIND, RebindMsg { session: sid, class });
         }
@@ -492,6 +561,19 @@ impl Director {
                 token,
             });
             self.pending_plans.insert(token, PendingPlan { msg: m, key, fopts });
+            if ctx.trace().on(TraceCategory::Session) {
+                let now = ctx.now();
+                let pe = ctx.pe().0;
+                ctx.trace().instant(
+                    now,
+                    TraceCategory::Session,
+                    trace_names::SESSION_PLAN,
+                    TraceLane::Pe(pe),
+                    token,
+                    0,
+                    "",
+                );
+            }
             ctx.advance(MICROS);
             return;
         }
@@ -581,6 +663,7 @@ impl Director {
         // protocol so debug builds validate sends addressed to them too.
         ctx.register_protocol(buffers, super::buffer::protocol_spec());
         let session = Session::new(sid, file, offset, bytes, buffers, nreaders);
+        let started_at = ctx.now();
         self.sessions.insert(sid, SessionState {
             session,
             ready: m.ready,
@@ -588,7 +671,29 @@ impl Director {
             mgr_acks: 0,
             fired: false,
             reuse_key: m.opts.reuse_buffers.then_some(key),
+            started_at,
         });
+        if ctx.trace().on(TraceCategory::Session) {
+            let pe = ctx.pe().0;
+            ctx.trace().begin(
+                started_at,
+                TraceCategory::Session,
+                trace_names::SESSION_ACTIVE,
+                TraceLane::Pe(pe),
+                u64::from(sid.0),
+                bytes,
+                u64::from(nreaders),
+            );
+            ctx.trace().instant(
+                started_at,
+                TraceCategory::Session,
+                trace_names::SESSION_CREATE,
+                TraceLane::Pe(pe),
+                u64::from(sid.0),
+                u64::from(nreaders),
+                if plan.is_some() { "planned" } else { "fresh" },
+            );
+        }
         // Kick the greedy reads (via shard registration) and announce.
         for b in 0..nreaders {
             ctx.signal(ChareRef::new(buffers, b), EP_BUF_INIT);
@@ -686,6 +791,19 @@ impl Chare for Director {
         match msg.ep {
             EP_DIR_OPEN => {
                 let m: OpenMsg = msg.take();
+                if ctx.trace().on(TraceCategory::Session) {
+                    let now = ctx.now();
+                    let pe = ctx.pe().0;
+                    ctx.trace().instant(
+                        now,
+                        TraceCategory::Session,
+                        trace_names::SESSION_OPEN,
+                        TraceLane::Pe(pe),
+                        u64::from(m.file.0),
+                        m.size,
+                        "",
+                    );
+                }
                 // Refcounted re-open: the file is already open everywhere,
                 // answer immediately from the file table — unless the
                 // re-open asks for *different* FileOptions, which is a
@@ -930,6 +1048,19 @@ impl Chare for Director {
                     park,
                     parked_bytes: 0,
                 });
+                if ctx.trace().on(TraceCategory::Session) {
+                    let now = ctx.now();
+                    let pe = ctx.pe().0;
+                    ctx.trace().instant(
+                        now,
+                        TraceCategory::Session,
+                        trace_names::SESSION_DRAIN,
+                        TraceLane::Pe(pe),
+                        u64::from(m.session.0),
+                        u64::from(nbuf),
+                        "",
+                    );
+                }
                 ctx.advance(MICROS);
             }
             EP_DIR_DROP_ACK => {

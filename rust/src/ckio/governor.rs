@@ -84,6 +84,7 @@
 use std::collections::VecDeque;
 
 use crate::amt::chare::ChareRef;
+use crate::amt::time::Time;
 use crate::metrics::keys;
 
 /// Number of QoS classes (array dimension for per-class state).
@@ -148,6 +149,35 @@ impl QosClass {
             QosClass::Scavenger => keys::GOV_GRANTED_SCAVENGER,
         }
     }
+
+    /// The `ckio.latency.admission_wait.*` histogram key for this class.
+    pub fn wait_key(self) -> &'static str {
+        match self {
+            QosClass::Interactive => keys::LATENCY_ADMISSION_WAIT_INTERACTIVE,
+            QosClass::Bulk => keys::LATENCY_ADMISSION_WAIT_BULK,
+            QosClass::Scavenger => keys::LATENCY_ADMISSION_WAIT_SCAVENGER,
+        }
+    }
+}
+
+/// Why the adaptive cap last changed — the flight-recorder annotation
+/// for `governor/cap` trace events.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum AdaptCause {
+    /// The window's p50 stayed flat: additive-increase probe.
+    GrowthProbe,
+    /// The window's p50 inflated past the tolerated baseline:
+    /// multiplicative decrease.
+    P50Inflation,
+}
+
+impl AdaptCause {
+    pub fn label(self) -> &'static str {
+        match self {
+            AdaptCause::GrowthProbe => "growth_probe",
+            AdaptCause::P50Inflation => "p50_inflation",
+        }
+    }
 }
 
 /// Order in which queued prefetch demand is admitted to the PFS.
@@ -176,6 +206,8 @@ struct Pending {
     /// Total bytes of the owning session (the SmallestFirst sort key).
     sess_bytes: u64,
     seq: u64,
+    /// Virtual time the demand was deferred (admission-wait origin).
+    enqueued_at: Time,
 }
 
 /// One admitted-from-the-queue grant the shard must deliver.
@@ -185,6 +217,9 @@ pub struct Grant {
     pub n: u32,
     /// The class the tickets were granted under (per-class metrics).
     pub class: QosClass,
+    /// How long the head of this demand queued before admission
+    /// (`ckio.latency.admission_wait.*` sample, `ticket/wait` span).
+    pub waited_ns: u64,
 }
 
 /// Per-shard PFS read-admission state (owned by a data-plane shard).
@@ -214,6 +249,8 @@ pub struct Governor {
     window: Vec<u64>,
     /// Best (lowest) window p50 observed so far; the AIMD baseline.
     best_p50: f64,
+    /// Why [`Governor::adapt`] last moved the cap (trace annotation).
+    last_adapt_cause: Option<AdaptCause>,
 }
 
 impl Default for Governor {
@@ -231,6 +268,7 @@ impl Default for Governor {
             granted: [0; NUM_CLASSES],
             window: Vec::new(),
             best_p50: f64::MAX,
+            last_adapt_cause: None,
         }
     }
 }
@@ -270,6 +308,7 @@ impl Governor {
                 self.adaptive = true;
                 self.window.clear();
                 self.best_p50 = f64::MAX;
+                self.last_adapt_cause = None;
             }
             self.policy = policy;
         }
@@ -288,6 +327,12 @@ impl Governor {
     /// Whether the cap is AIMD-derived.
     pub fn is_adaptive(&self) -> bool {
         self.adaptive
+    }
+
+    /// Why the adaptive cap last changed; `None` before the first
+    /// adaptation (or under a static cap).
+    pub fn last_adapt_cause(&self) -> Option<AdaptCause> {
+        self.last_adapt_cause
     }
 
     /// Reads currently admitted and not yet completed.
@@ -315,8 +360,16 @@ impl Governor {
     /// granted now; the remainder queues in the class's FIFO and is
     /// granted by later [`Governor::complete`] calls according to the
     /// weighted policy. Without a cap the full request is granted
-    /// trivially.
-    pub fn request(&mut self, owner: ChareRef, want: u32, sess_bytes: u64, class: QosClass) -> u32 {
+    /// trivially. `now` is the virtual time of the request — the origin
+    /// of the admission-wait clock for whatever queues.
+    pub fn request(
+        &mut self,
+        owner: ChareRef,
+        want: u32,
+        sess_bytes: u64,
+        class: QosClass,
+        now: Time,
+    ) -> u32 {
         let Some(cap) = self.cap else { return want };
         let grant = want.min(cap.saturating_sub(self.inflight));
         self.inflight += grant;
@@ -325,7 +378,7 @@ impl Governor {
         if deferred > 0 {
             self.throttled += deferred as u64;
             self.seq += 1;
-            let p = Pending { owner, want: deferred, sess_bytes, seq: self.seq };
+            let p = Pending { owner, want: deferred, sess_bytes, seq: self.seq, enqueued_at: now };
             let q = &mut self.queues[class.index()];
             match self.policy {
                 AdmissionPolicy::SmallestFirst => {
@@ -346,9 +399,10 @@ impl Governor {
     /// the completed read (`service_ns == 0` for returns that completed
     /// no read — those carry no signal and never adapt the cap). Returns
     /// the grants this frees up — dequeued by class weight — which the
-    /// shard must deliver. The caller can watch [`Governor::cap`]
-    /// across calls to observe adaptation.
-    pub fn complete(&mut self, n: u32, service_ns: u64) -> Vec<Grant> {
+    /// shard must deliver (each stamped with how long its demand
+    /// queued, relative to `now`). The caller can watch
+    /// [`Governor::cap`] across calls to observe adaptation.
+    pub fn complete(&mut self, n: u32, service_ns: u64, now: Time) -> Vec<Grant> {
         if self.cap.is_none() {
             return Vec::new();
         }
@@ -359,7 +413,7 @@ impl Governor {
                 self.adapt();
             }
         }
-        self.drain()
+        self.drain(now)
     }
 
     /// The class the next grant comes from, honoring the policy. `None`
@@ -390,7 +444,7 @@ impl Governor {
     }
 
     /// Dequeue grants while the cap has room, by class weight.
-    fn drain(&mut self) -> Vec<Grant> {
+    fn drain(&mut self, now: Time) -> Vec<Grant> {
         let mut grants = Vec::new();
         loop {
             let cap = self.cap.unwrap();
@@ -410,6 +464,7 @@ impl Governor {
             self.granted[c] += g as u64;
             front.want -= g;
             let owner = front.owner;
+            let waited_ns = now.saturating_sub(front.enqueued_at);
             if front.want == 0 {
                 self.queues[c].pop_front();
             }
@@ -422,7 +477,7 @@ impl Governor {
                     self.rr = (c + 1) % NUM_CLASSES;
                 }
             }
-            grants.push(Grant { owner, n: g, class: QosClass::ALL[c] });
+            grants.push(Grant { owner, n: g, class: QosClass::ALL[c], waited_ns });
         }
         grants
     }
@@ -436,11 +491,13 @@ impl Governor {
         if p50 <= self.best_p50 * Self::INFLATE_TOLERANCE {
             self.cap = Some((cap + 1).min(Self::ADAPTIVE_MAX_CAP));
             self.best_p50 = self.best_p50.min(p50);
+            self.last_adapt_cause = Some(AdaptCause::GrowthProbe);
         } else {
             self.cap = Some((cap / 2).max(1));
             // Relax the remembered floor so a PFS that is now genuinely
             // slower (not just momentarily congested) can grow again.
             self.best_p50 *= Self::INFLATE_TOLERANCE;
+            self.last_adapt_cause = Some(AdaptCause::P50Inflation);
         }
     }
 }
@@ -455,7 +512,7 @@ mod tests {
     }
 
     fn grant(i: u32, n: u32, class: QosClass) -> Grant {
-        Grant { owner: buf(i), n, class }
+        Grant { owner: buf(i), n, class, waited_ns: 0 }
     }
 
     const BULK: QosClass = QosClass::Bulk;
@@ -464,25 +521,25 @@ mod tests {
     fn ungoverned_grants_everything() {
         let mut g = Governor::new();
         assert!(!g.governed());
-        assert_eq!(g.request(buf(0), 5, 100, BULK), 5);
+        assert_eq!(g.request(buf(0), 5, 100, BULK, 0), 5);
         assert_eq!(g.inflight(), 0, "no accounting without a cap");
-        assert!(g.complete(5, 0).is_empty());
+        assert!(g.complete(5, 0, 0).is_empty());
     }
 
     #[test]
     fn cap_defers_and_completion_drains_fifo() {
         let mut g = Governor::new();
         g.configure(Some(2), AdmissionPolicy::Fifo, false);
-        assert_eq!(g.request(buf(0), 2, 100, BULK), 2);
-        assert_eq!(g.request(buf(1), 2, 100, BULK), 0); // full: all deferred
+        assert_eq!(g.request(buf(0), 2, 100, BULK, 0), 2);
+        assert_eq!(g.request(buf(1), 2, 100, BULK, 0), 0); // full: all deferred
         assert_eq!(g.throttled, 2);
         assert_eq!(g.inflight(), 2);
         // One completion frees one ticket for the queue head.
-        assert_eq!(g.complete(1, 0), vec![grant(1, 1, BULK)]);
+        assert_eq!(g.complete(1, 0, 0), vec![grant(1, 1, BULK)]);
         assert_eq!(g.inflight(), 2);
         // The head still wants 1 more; next completion serves it.
-        assert_eq!(g.complete(1, 0), vec![grant(1, 1, BULK)]);
-        assert!(g.complete(2, 0).is_empty());
+        assert_eq!(g.complete(1, 0, 0), vec![grant(1, 1, BULK)]);
+        assert!(g.complete(2, 0, 0).is_empty());
         assert_eq!(g.inflight(), 0);
         assert_eq!(g.queued(), 0);
     }
@@ -491,22 +548,22 @@ mod tests {
     fn partial_grant_queues_the_remainder() {
         let mut g = Governor::new();
         g.configure(Some(3), AdmissionPolicy::Fifo, false);
-        assert_eq!(g.request(buf(0), 5, 100, BULK), 3);
+        assert_eq!(g.request(buf(0), 5, 100, BULK, 0), 3);
         assert_eq!(g.throttled, 2);
-        assert_eq!(g.complete(3, 0), vec![grant(0, 2, BULK)]);
+        assert_eq!(g.complete(3, 0, 0), vec![grant(0, 2, BULK)]);
     }
 
     #[test]
     fn smallest_first_reorders_by_session_bytes_within_a_class() {
         let mut g = Governor::new();
         g.configure(Some(1), AdmissionPolicy::SmallestFirst, false);
-        assert_eq!(g.request(buf(0), 1, 1000, BULK), 1);
-        assert_eq!(g.request(buf(1), 1, 500, BULK), 0); // big-ish
-        assert_eq!(g.request(buf(2), 1, 10, BULK), 0); // small: jumps the queue
-        assert_eq!(g.request(buf(3), 1, 10, BULK), 0); // ties keep arrival order
-        assert_eq!(g.complete(1, 0), vec![grant(2, 1, BULK)]);
-        assert_eq!(g.complete(1, 0), vec![grant(3, 1, BULK)]);
-        assert_eq!(g.complete(1, 0), vec![grant(1, 1, BULK)]);
+        assert_eq!(g.request(buf(0), 1, 1000, BULK, 0), 1);
+        assert_eq!(g.request(buf(1), 1, 500, BULK, 0), 0); // big-ish
+        assert_eq!(g.request(buf(2), 1, 10, BULK, 0), 0); // small: jumps the queue
+        assert_eq!(g.request(buf(3), 1, 10, BULK, 0), 0); // ties keep arrival order
+        assert_eq!(g.complete(1, 0, 0), vec![grant(2, 1, BULK)]);
+        assert_eq!(g.complete(1, 0, 0), vec![grant(3, 1, BULK)]);
+        assert_eq!(g.complete(1, 0, 0), vec![grant(1, 1, BULK)]);
     }
 
     /// A zero static cap is a configuration error, rejected at
@@ -528,19 +585,19 @@ mod tests {
         g.configure(Some(1), AdmissionPolicy::Fifo, false);
         // Saturate: one admitted read, then deep per-class backlogs of
         // single-ticket demand (distinct owners, like distinct buffers).
-        assert_eq!(g.request(buf(999), 1, 1, BULK), 1);
+        assert_eq!(g.request(buf(999), 1, 1, BULK, 0), 1);
         let rounds = 11u32; // exactly one WDRR rotation per weight sum
         let per_class = rounds * 10;
         for i in 0..per_class {
-            assert_eq!(g.request(buf(i), 1, 100, QosClass::Interactive), 0);
-            assert_eq!(g.request(buf(1000 + i), 1, 100, QosClass::Bulk), 0);
-            assert_eq!(g.request(buf(2000 + i), 1, 100, QosClass::Scavenger), 0);
+            assert_eq!(g.request(buf(i), 1, 100, QosClass::Interactive, 0), 0);
+            assert_eq!(g.request(buf(1000 + i), 1, 100, QosClass::Bulk, 0), 0);
+            assert_eq!(g.request(buf(2000 + i), 1, 100, QosClass::Scavenger, 0), 0);
         }
         // Drive exactly rounds * (8 + 2 + 1) single-ticket completions:
         // every class stays backlogged throughout.
         let mut counts = [0u64; NUM_CLASSES];
         for _ in 0..rounds * 11 {
-            let gs = g.complete(1, 0);
+            let gs = g.complete(1, 0, 0);
             assert_eq!(gs.len(), 1, "cap 1 admits exactly one per completion");
             counts[gs[0].class.index()] += gs[0].n as u64;
         }
@@ -558,13 +615,13 @@ mod tests {
     fn scavenger_is_not_starved_by_interactive_load() {
         let mut g = Governor::new();
         g.configure(Some(1), AdmissionPolicy::Fifo, false);
-        assert_eq!(g.request(buf(0), 1, 1, QosClass::Interactive), 1);
-        assert_eq!(g.request(buf(42), 1, 100, QosClass::Scavenger), 0);
+        assert_eq!(g.request(buf(0), 1, 1, QosClass::Interactive, 0), 1);
+        assert_eq!(g.request(buf(42), 1, 100, QosClass::Scavenger, 0), 0);
         let mut scavenger_served = false;
         for i in 0..64u32 {
             // Interactive demand never dries up.
-            g.request(buf(100 + i), 1, 100, QosClass::Interactive);
-            for gr in g.complete(1, 0) {
+            g.request(buf(100 + i), 1, 100, QosClass::Interactive, 0);
+            for gr in g.complete(1, 0, 0) {
                 if gr.class == QosClass::Scavenger {
                     scavenger_served = true;
                 }
@@ -583,13 +640,13 @@ mod tests {
     fn strict_priority_drains_classes_in_order() {
         let mut g = Governor::new();
         g.configure(Some(1), AdmissionPolicy::StrictPriority, false);
-        assert_eq!(g.request(buf(0), 1, 1, BULK), 1);
-        assert_eq!(g.request(buf(1), 2, 100, QosClass::Scavenger), 0);
-        assert_eq!(g.request(buf(2), 2, 100, QosClass::Bulk), 0);
-        assert_eq!(g.request(buf(3), 2, 100, QosClass::Interactive), 0);
+        assert_eq!(g.request(buf(0), 1, 1, BULK, 0), 1);
+        assert_eq!(g.request(buf(1), 2, 100, QosClass::Scavenger, 0), 0);
+        assert_eq!(g.request(buf(2), 2, 100, QosClass::Bulk, 0), 0);
+        assert_eq!(g.request(buf(3), 2, 100, QosClass::Interactive, 0), 0);
         let mut order = Vec::new();
         for _ in 0..6 {
-            for gr in g.complete(1, 0) {
+            for gr in g.complete(1, 0, 0) {
                 order.push(gr.class);
             }
         }
@@ -610,13 +667,13 @@ mod tests {
     fn per_class_grant_counters_track_admissions() {
         let mut g = Governor::new();
         g.configure(Some(2), AdmissionPolicy::Fifo, false);
-        assert_eq!(g.request(buf(0), 2, 100, QosClass::Interactive), 2); // immediate
-        assert_eq!(g.request(buf(1), 3, 100, QosClass::Bulk), 0); // all deferred
+        assert_eq!(g.request(buf(0), 2, 100, QosClass::Interactive, 0), 2); // immediate
+        assert_eq!(g.request(buf(1), 3, 100, QosClass::Bulk, 0), 0); // all deferred
         assert_eq!(g.granted_in(QosClass::Interactive), 2);
         assert_eq!(g.granted_in(QosClass::Bulk), 0);
-        g.complete(2, 0); // frees 2: bulk dequeues 2 of its 3
+        g.complete(2, 0, 0); // frees 2: bulk dequeues 2 of its 3
         assert_eq!(g.granted_in(QosClass::Bulk), 2);
-        g.complete(2, 0);
+        g.complete(2, 0, 0);
         assert_eq!(g.granted_in(QosClass::Bulk), 3);
         assert_eq!(g.granted_in(QosClass::Scavenger), 0);
         assert_eq!(g.queued(), 0);
@@ -631,7 +688,7 @@ mod tests {
         // Grow the cap one window, then re-configure adaptively: the
         // learned cap survives (configuration must not reset the loop).
         for _ in 0..Governor::ADAPT_WINDOW {
-            g.complete(0, 1000);
+            g.complete(0, 1000, 0);
         }
         let learned = g.cap().unwrap();
         assert_eq!(learned, Governor::ADAPTIVE_INITIAL_CAP + 1);
@@ -645,13 +702,13 @@ mod tests {
         // epoch: initial cap, no inherited window or best-p50 baseline —
         // a much slower service must not be judged against the old one.
         for _ in 0..Governor::ADAPT_WINDOW - 1 {
-            g.complete(0, 1_000); // partial window under the static cap: ignored
+            g.complete(0, 1_000, 0); // partial window under the static cap: ignored
         }
         g.configure(None, AdmissionPolicy::Fifo, true);
         assert!(g.is_adaptive());
         assert_eq!(g.cap(), Some(Governor::ADAPTIVE_INITIAL_CAP));
         for _ in 0..Governor::ADAPT_WINDOW {
-            g.complete(0, 50_000_000); // 50ms service, flat within the new epoch
+            g.complete(0, 50_000_000, 0); // 50ms service, flat within the new epoch
         }
         assert_eq!(
             g.cap(),
@@ -667,20 +724,51 @@ mod tests {
         g.configure(None, AdmissionPolicy::Fifo, true);
         // Three flat windows: additive increase each time.
         for _ in 0..3 * Governor::ADAPT_WINDOW {
-            g.complete(0, 1_000_000);
+            g.complete(0, 1_000_000, 0);
         }
         assert_eq!(g.cap(), Some(Governor::ADAPTIVE_INITIAL_CAP + 3));
         // An inflated window (4x the baseline p50): multiplicative cut.
         for _ in 0..Governor::ADAPT_WINDOW {
-            g.complete(0, 4_000_000);
+            g.complete(0, 4_000_000, 0);
         }
         assert_eq!(g.cap(), Some((Governor::ADAPTIVE_INITIAL_CAP + 3) / 2));
         // Zero service times (ticket returns without a read) carry no
         // signal: the window must not fill from them.
         for _ in 0..10 * Governor::ADAPT_WINDOW {
-            g.complete(0, 0);
+            g.complete(0, 0, 0);
         }
         assert_eq!(g.cap(), Some((Governor::ADAPTIVE_INITIAL_CAP + 3) / 2));
+    }
+
+    /// Dequeued grants carry the head's queueing time (now − enqueue),
+    /// and the AIMD loop reports why it last moved the cap — the two
+    /// facts the flight recorder annotates tickets and cap changes with.
+    #[test]
+    fn grants_report_wait_and_adaptation_reports_cause() {
+        let mut g = Governor::new();
+        g.configure(Some(1), AdmissionPolicy::Fifo, false);
+        assert_eq!(g.request(buf(0), 1, 100, BULK, 500), 1);
+        assert_eq!(g.request(buf(1), 1, 100, BULK, 1_000), 0); // queues at t=1000
+        assert_eq!(
+            g.complete(1, 0, 4_500),
+            vec![Grant { owner: buf(1), n: 1, class: BULK, waited_ns: 3_500 }]
+        );
+        // Static caps never adapt, so no cause is ever recorded.
+        assert_eq!(g.last_adapt_cause(), None);
+
+        let mut a = Governor::new();
+        a.configure(None, AdmissionPolicy::Fifo, true);
+        assert_eq!(a.last_adapt_cause(), None);
+        for _ in 0..Governor::ADAPT_WINDOW {
+            a.complete(0, 1_000_000, 0); // flat window: additive increase
+        }
+        assert_eq!(a.last_adapt_cause(), Some(AdaptCause::GrowthProbe));
+        for _ in 0..Governor::ADAPT_WINDOW {
+            a.complete(0, 4_000_000, 0); // inflated window: cut
+        }
+        assert_eq!(a.last_adapt_cause(), Some(AdaptCause::P50Inflation));
+        assert_eq!(AdaptCause::GrowthProbe.label(), "growth_probe");
+        assert_eq!(AdaptCause::P50Inflation.label(), "p50_inflation");
     }
 
     #[test]
@@ -689,17 +777,17 @@ mod tests {
         g.configure(None, AdmissionPolicy::Fifo, true);
         // Establish a fast baseline, then inflate forever.
         for _ in 0..Governor::ADAPT_WINDOW {
-            g.complete(0, 1_000);
+            g.complete(0, 1_000, 0);
         }
         for _ in 0..20 * Governor::ADAPT_WINDOW {
-            g.complete(0, 1_000_000_000);
+            g.complete(0, 1_000_000_000, 0);
         }
         assert_eq!(g.cap(), Some(1), "floor must hold so demand drains");
         // The relaxed baseline eventually accepts the new normal and the
         // cap can grow again.
         let mut grew = false;
         for _ in 0..64 * Governor::ADAPT_WINDOW {
-            g.complete(0, 1_000_000_000);
+            g.complete(0, 1_000_000_000, 0);
             if g.cap().unwrap() > 1 {
                 grew = true;
                 break;

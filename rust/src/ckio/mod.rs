@@ -123,7 +123,13 @@
 //! `ckio.governor.cap` gauge, the per-shard message-count imbalance
 //! pair `ckio.shard.msgs_max` / `ckio.shard.msgs_mean`, and the
 //! placement-locality set `ckio.place.planned` / `same_pe_fetch` /
-//! `cross_pe_fetch` / `degraded` (all in `ckio bench-json`).
+//! `cross_pe_fetch` / `degraded` (all in `ckio bench-json`). Since PR 7
+//! latency *distributions* (session makespan, per-class admission wait,
+//! PFS service, assembly, peer fetch) are recorded in mergeable
+//! histograms, and [`ServiceConfig::trace`] turns on the flight
+//! recorder ([`crate::trace`]) — structured spans over the same
+//! lifecycle, exportable as a Perfetto-loadable timeline via
+//! `ckio trace <fig>`. See `docs/OBSERVABILITY.md` for the catalog.
 //!
 //! # Concurrency semantics (PR 1)
 //!
@@ -178,6 +184,7 @@ pub use api::CkIo;
 pub use governor::{AdmissionPolicy, QosClass};
 pub use options::{
     ConfigError, FileOptions, OpenError, ReaderPlacement, ServiceConfig, SessionOptions,
+    TraceConfig,
 };
 pub use session::{FileHandle, ReadResult, Session, SessionId, Tag};
 pub use shard::DataShard;

@@ -40,11 +40,13 @@
 //! | `adaptive_admission`    | [`ServiceConfig::adaptive_admission`]     |
 //! | `data_plane_shards`     | [`ServiceConfig::data_plane_shards`]      |
 //! | *(new, PR 5)*           | [`SessionOptions::class`]                 |
+//! | *(new, PR 7)*           | [`ServiceConfig::trace`]                  |
 
 use crate::amt::topology::{Placement, Topology};
 use crate::util::bytes::ceil_div;
 
 pub use super::governor::{AdmissionPolicy, QosClass};
+pub use crate::trace::TraceConfig;
 
 /// Where buffer chares are placed (paper §VI.B, extended in PR 4 with
 /// store-aware planning).
@@ -229,6 +231,12 @@ pub struct ServiceConfig {
     /// observed read service times (AIMD). Ignored when a static cap is
     /// set. The `ckio.governor.cap` gauge tracks the adapted value.
     pub adaptive_admission: bool,
+    /// Flight recorder (PR 7): structured event tracing into a bounded,
+    /// virtual-clock-stamped per-PE ring, exportable as a Chrome
+    /// trace-event timeline (`ckio trace <fig>`). Off by default; when
+    /// disabled the hot path is a single branch and no event is ever
+    /// allocated. See [`TraceConfig`].
+    pub trace: TraceConfig,
 }
 
 impl ServiceConfig {

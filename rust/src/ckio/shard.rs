@@ -97,6 +97,7 @@ use crate::amt::time::MICROS;
 use crate::impl_chare_any;
 use crate::metrics::keys;
 use crate::pfs::layout::FileId;
+use crate::trace::{names as trace_names, Lane as TraceLane, TraceCategory};
 use crate::{ep_spec, send_spec};
 
 use super::buffer::{
@@ -271,11 +272,26 @@ impl DataShard {
     fn publish_cap(&mut self, ctx: &mut Ctx<'_>) {
         let cap = self.governor.cap();
         if cap != self.cap_reported {
-            let old = self.cap_reported.unwrap_or(0) as f64;
-            let new = cap.unwrap_or(0) as f64;
-            ctx.metrics().add(keys::GOV_CAP, new - old);
+            let old = self.cap_reported.unwrap_or(0);
+            let new = cap.unwrap_or(0);
+            ctx.metrics().add(keys::GOV_CAP, new as f64 - old as f64);
             if self.governor.is_adaptive() {
                 ctx.metrics().count(keys::GOV_ADAPTATIONS, 1);
+            }
+            if ctx.trace().on(TraceCategory::Governor) {
+                // Annotate the cap move with *why* AIMD moved it.
+                let note =
+                    self.governor.last_adapt_cause().map(|c| c.label()).unwrap_or("configured");
+                let now = ctx.now();
+                ctx.trace().instant(
+                    now,
+                    TraceCategory::Governor,
+                    trace_names::GOVERNOR_CAP,
+                    TraceLane::Shard(self.index),
+                    u64::from(new),
+                    u64::from(old),
+                    note,
+                );
             }
             self.cap_reported = cap;
         }
@@ -405,6 +421,18 @@ impl Chare for DataShard {
                 // the buffers from it, and registration revalidates.
                 let slots =
                     self.store.plan_spans(m.file, m.offset, m.bytes, m.readers, m.splinter);
+                if ctx.trace().on(TraceCategory::Place) {
+                    let now = ctx.now();
+                    ctx.trace().instant(
+                        now,
+                        TraceCategory::Place,
+                        trace_names::PLACE_PLAN,
+                        TraceLane::Shard(self.index),
+                        m.bytes,
+                        u64::from(m.readers),
+                        m.class.label(),
+                    );
+                }
                 ctx.advance(MICROS);
                 ctx.send(
                     self.director,
@@ -431,6 +459,18 @@ impl Chare for DataShard {
                     ctx.metrics().count(keys::STORE_HIT, m.key.bytes);
                     self.update_resident_gauge(ctx);
                 }
+                if ctx.trace().on(TraceCategory::Store) {
+                    let now = ctx.now();
+                    ctx.trace().instant(
+                        now,
+                        TraceCategory::Store,
+                        trace_names::STORE_TAKE,
+                        TraceLane::Shard(self.index),
+                        u64::from(found.is_some()),
+                        m.key.bytes,
+                        if found.is_some() { "hit" } else { "miss" },
+                    );
+                }
                 ctx.advance(MICROS);
                 ctx.send(self.director, EP_DIR_TAKE_REPLY, TakeReplyMsg { token: m.token, found });
             }
@@ -439,6 +479,18 @@ impl Chare for DataShard {
                 let evicted = self.store.park(m.key, m.buffers, m.nbuf, m.resident_bytes);
                 self.release_evicted(ctx, evicted);
                 self.update_resident_gauge(ctx);
+                if ctx.trace().on(TraceCategory::Store) {
+                    let now = ctx.now();
+                    ctx.trace().instant(
+                        now,
+                        TraceCategory::Store,
+                        trace_names::STORE_PARK,
+                        TraceLane::Shard(self.index),
+                        m.resident_bytes,
+                        u64::from(m.nbuf),
+                        "",
+                    );
+                }
                 ctx.advance(MICROS);
             }
             EP_SHARD_PURGE => {
@@ -446,24 +498,93 @@ impl Chare for DataShard {
                 let purged = self.store.purge_file(file);
                 self.release_evicted(ctx, purged);
                 self.update_resident_gauge(ctx);
+                if ctx.trace().on(TraceCategory::Store) {
+                    let now = ctx.now();
+                    ctx.trace().instant(
+                        now,
+                        TraceCategory::Store,
+                        trace_names::STORE_PURGE,
+                        TraceLane::Shard(self.index),
+                        u64::from(file.0),
+                        0,
+                        "",
+                    );
+                }
                 ctx.advance(MICROS);
             }
             EP_SHARD_IO_REQ => {
                 let m: IoReqMsg = msg.take();
-                let granted = self.governor.request(m.buffer, m.want, m.sess_bytes, m.class);
+                let now = ctx.now();
+                let granted = self.governor.request(m.buffer, m.want, m.sess_bytes, m.class, now);
                 if granted < m.want {
                     ctx.metrics().count(keys::GOV_THROTTLED, (m.want - granted) as u64);
+                    if ctx.trace().on(TraceCategory::Ticket) {
+                        ctx.trace().instant(
+                            now,
+                            TraceCategory::Ticket,
+                            trace_names::TICKET_ENQUEUE,
+                            TraceLane::Shard(self.index),
+                            u64::from(m.want - granted),
+                            m.sess_bytes,
+                            m.class.label(),
+                        );
+                    }
                 }
                 if granted > 0 {
                     ctx.metrics().count(m.class.granted_key(), granted as u64);
+                    // Immediately admitted tickets waited zero ns; record
+                    // them so the per-class wait quantiles cover *all*
+                    // admissions, not just the deferred ones.
+                    ctx.metrics().record(m.class.wait_key(), 0);
+                    if ctx.trace().on(TraceCategory::Ticket) {
+                        ctx.trace().complete(
+                            now,
+                            0,
+                            TraceCategory::Ticket,
+                            trace_names::TICKET_WAIT,
+                            TraceLane::Shard(self.index),
+                            0,
+                            u64::from(granted),
+                            0,
+                            m.class.label(),
+                        );
+                    }
                     ctx.send(m.buffer, EP_BUF_GRANT, GrantMsg { n: granted });
                 }
                 ctx.advance(MICROS);
             }
             EP_SHARD_IO_DONE => {
                 let m: IoDoneMsg = msg.take();
-                for g in self.governor.complete(m.n, m.service_ns) {
+                let now = ctx.now();
+                if ctx.trace().on(TraceCategory::Ticket) {
+                    ctx.trace().instant(
+                        now,
+                        TraceCategory::Ticket,
+                        trace_names::TICKET_DONE,
+                        TraceLane::Shard(self.index),
+                        u64::from(m.n),
+                        m.service_ns,
+                        "",
+                    );
+                }
+                for g in self.governor.complete(m.n, m.service_ns, now) {
                     ctx.metrics().count(g.class.granted_key(), g.n as u64);
+                    ctx.metrics().record(g.class.wait_key(), g.waited_ns);
+                    if ctx.trace().on(TraceCategory::Ticket) {
+                        // The whole wait is one backdated complete-event:
+                        // begin/end pairing would break on partial grants.
+                        ctx.trace().complete(
+                            now.saturating_sub(g.waited_ns),
+                            g.waited_ns,
+                            TraceCategory::Ticket,
+                            trace_names::TICKET_WAIT,
+                            TraceLane::Shard(self.index),
+                            0,
+                            u64::from(g.n),
+                            0,
+                            g.class.label(),
+                        );
+                    }
                     ctx.send(g.owner, EP_BUF_GRANT, GrantMsg { n: g.n });
                 }
                 self.publish_cap(ctx);

@@ -1231,6 +1231,13 @@ pub fn assert_service_clean(eng: &Engine, io: &CkIo) {
         assert_eq!(shard.admission().inflight(), 0, "governor tickets leaked on shard {s}");
         assert_eq!(shard.admission().queued(), 0, "governor demand stranded on shard {s}");
     }
+    if eng.core.trace.is_enabled() {
+        assert_eq!(
+            eng.core.trace.open_spans(),
+            0,
+            "unbalanced trace spans: every begin must have an end at quiescence"
+        );
+    }
 }
 
 /// Results of one `run_svc_concurrent` run.
@@ -1317,13 +1324,11 @@ pub fn run_svc_concurrent(
         .into_iter()
         .map(|(_, mut p)| time::to_secs(p.take::<Time>()))
         .collect();
-    let mut lats: Vec<f64> = eng
-        .take_future(lat_fut)
-        .into_iter()
-        .map(|(_, mut p)| time::to_secs(p.take::<Time>()))
-        .collect();
-    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let read_p99_s = crate::util::stats::percentile(&lats, 0.99);
+    let mut lats = crate::metrics::Histogram::new();
+    for (_, mut p) in eng.take_future(lat_fut) {
+        lats.record(p.take::<Time>());
+    }
+    let read_p99_s = time::to_secs(lats.quantile(0.99));
     let makespan_s = time::to_secs(makespan);
     let stats = ConcurrentStats {
         k,
@@ -1958,7 +1963,10 @@ pub struct QosStats {
 /// data-plane shard under a static admission `cap`. With `classed`
 /// false, every session runs as Bulk — the classless baseline the QoS
 /// claim is measured against (identical work, identical arrival
-/// interleaving; only the class labels differ).
+/// interleaving; only the class labels differ). With `adaptive` true the
+/// static `cap` is replaced by AIMD feedback admission
+/// ([`ServiceConfig::adaptive_admission`]) — the mode that exercises
+/// annotated `governor/cap` trace events under class contention.
 ///
 /// The PFS is configured quiet (no noise) so the classed/classless
 /// comparison is deterministic, and sessions splinter finely so the
@@ -1974,9 +1982,10 @@ pub fn run_svc_qos(
     clients: u32,
     cap: u32,
     classed: bool,
+    adaptive: bool,
     seed: u64,
 ) -> (QosStats, CkIo, Engine) {
-    assert!(n_interactive > 0 && n_bulk > 0 && clients > 0 && cap > 0);
+    assert!(n_interactive > 0 && n_bulk > 0 && clients > 0 && (adaptive || cap > 0));
     assert!(file_size >= clients as u64);
     let pfs = PfsConfig {
         noise_sigma: 0.0,
@@ -1989,7 +1998,8 @@ pub fn run_svc_qos(
     let files: Vec<crate::pfs::FileId> =
         (0..k).map(|_| eng.core.sim_pfs_mut().create_file(file_size)).collect();
     let cfg = ServiceConfig {
-        max_inflight_reads: Some(cap),
+        max_inflight_reads: if adaptive { None } else { Some(cap) },
+        adaptive_admission: adaptive,
         // One shard: every session's tickets meet in one governor —
         // the contention the classes arbitrate.
         data_plane_shards: Some(1),
@@ -2049,22 +2059,27 @@ pub fn run_svc_qos(
     assert!(eng.future_done(done_bulk), "svc_qos: not all bulk sessions closed");
     assert!(eng.future_done(lat_fut), "svc_qos: not all reads completed");
 
-    let collect = |fut_vals: Vec<(Time, Payload)>| -> (Vec<f64>, Time) {
+    let collect = |fut_vals: Vec<(Time, Payload)>| -> (Vec<f64>, crate::metrics::Histogram, Time) {
         let end = fut_vals.iter().map(|(t, _)| *t).max().unwrap_or(0);
+        let mut h = crate::metrics::Histogram::new();
         let mut v: Vec<f64> = fut_vals
             .into_iter()
-            .map(|(_, mut p)| time::to_secs(p.take::<Time>()))
+            .map(|(_, mut p)| {
+                let t = p.take::<Time>();
+                h.record(t);
+                time::to_secs(t)
+            })
             .collect();
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        (v, end)
+        (v, h, end)
     };
-    let (interactive_s, end_i) = collect(eng.take_future(done_int));
-    let (bulk_s, end_b) = collect(eng.take_future(done_bulk));
+    let (interactive_s, hist_i, end_i) = collect(eng.take_future(done_int));
+    let (bulk_s, hist_b, end_b) = collect(eng.take_future(done_bulk));
     let m = &eng.core.metrics;
     let stats = QosStats {
         cap,
-        interactive_p50_s: crate::util::stats::percentile(&interactive_s, 0.5),
-        bulk_p50_s: crate::util::stats::percentile(&bulk_s, 0.5),
+        interactive_p50_s: time::to_secs(hist_i.quantile(0.5)),
+        bulk_p50_s: time::to_secs(hist_b.quantile(0.5)),
         bulk_max_s: bulk_s.iter().cloned().fold(0.0, f64::max),
         interactive_s,
         bulk_s,
@@ -2088,8 +2103,8 @@ pub const QOS_SHAPE: (u32, u32, u64, u32, u32, u32, u32) = (2, 4, 512 << 10, 3, 
 /// One classed-vs-classless pair at the canonical shape.
 pub fn qos_pair(seed: u64) -> (QosStats, QosStats) {
     let (n, p, size, ni, nb, c, cap) = QOS_SHAPE;
-    let (classed, io_a, eng_a) = run_svc_qos(n, p, size, ni, nb, c, cap, true, seed);
-    let (classless, io_b, eng_b) = run_svc_qos(n, p, size, ni, nb, c, cap, false, seed);
+    let (classed, io_a, eng_a) = run_svc_qos(n, p, size, ni, nb, c, cap, true, false, seed);
+    let (classless, io_b, eng_b) = run_svc_qos(n, p, size, ni, nb, c, cap, false, false, seed);
     assert_service_clean(&eng_a, &io_a);
     assert_service_clean(&eng_b, &io_b);
     (classed, classless)
@@ -2116,7 +2131,12 @@ pub fn svc_qos(reps: u32) -> Table {
             "throttled",
         ],
     );
-    for classed in [true, false] {
+    // Third mode (PR 7): classed admission under AIMD feedback instead
+    // of the static cap — the run whose trace carries annotated
+    // `governor/cap` adaptation events (`ckio trace svc_qos`).
+    for (mode, classed, adaptive) in
+        [("classed", true, false), ("classless", false, false), ("classed-adaptive", true, true)]
+    {
         let mut ip50 = 0.0;
         let mut bp50 = 0.0;
         let mut bmax = 0.0;
@@ -2124,7 +2144,8 @@ pub fn svc_qos(reps: u32) -> Table {
         let mut gb = 0.0;
         let mut th = 0.0;
         for r in 0..reps.max(1) {
-            let (st, io, eng) = run_svc_qos(n, p, size, ni, nb, c, cap, classed, 9100 + r as u64);
+            let (st, io, eng) =
+                run_svc_qos(n, p, size, ni, nb, c, cap, classed, adaptive, 9100 + r as u64);
             assert_service_clean(&eng, &io);
             ip50 += st.interactive_p50_s;
             bp50 += st.bulk_p50_s;
@@ -2135,7 +2156,7 @@ pub fn svc_qos(reps: u32) -> Table {
         }
         let nr = reps.max(1) as f64;
         t.row(vec![
-            if classed { "classed" } else { "classless" }.into(),
+            mode.into(),
             format!("{:.3}", ip50 / nr * 1e3),
             format!("{:.3}", bp50 / nr * 1e3),
             format!("{:.3}", bmax / nr * 1e3),
@@ -2173,7 +2194,10 @@ pub fn svc_qos(reps: u32) -> Table {
 ///   cap, with the `ckio.governor.class_granted.*` counters, the
 ///   Interactive p50 improvement over the classless baseline, and the
 ///   no-starvation quiescence checks (`governor_inflight` /
-///   `governor_queued` both 0).
+///   `governor_queued` both 0),
+/// * `latency` (PR 7) — p50/p99/p99.9 (milliseconds) over the classed
+///   qos run from the engine-global histograms: session makespan,
+///   per-class admission wait, PFS read service, assembly, peer fetch.
 pub fn bench_pr5_json(reps: u32) -> String {
     use crate::harness::bench::Json;
     let (nodes, pes) = (4u32, 8u32);
@@ -2428,6 +2452,42 @@ pub fn bench_pr5_json(reps: u32) -> String {
         ])
     };
 
+    // Latency distributions (PR 7): p50/p99/p99.9 in milliseconds from
+    // the engine-global mergeable histograms, measured over the classed
+    // qos run — the same shape and seed as `qos.classed` above, so the
+    // two sections can never silently measure different experiments.
+    // Under the saturated cap the weighted governor should show
+    // Interactive admission-wait p99 below Bulk's.
+    let latency = {
+        let (qn, qp, qsize, ni, nb, qc, cap) = QOS_SHAPE;
+        let (_, io, eng) = run_svc_qos(qn, qp, qsize, ni, nb, qc, cap, true, false, 9000);
+        assert_service_clean(&eng, &io);
+        let m = &eng.core.metrics;
+        let dist = |key: &'static str| {
+            Json::obj(vec![
+                ("p50", Json::num(m.quantile(key, 0.50) as f64 / 1e6)),
+                ("p99", Json::num(m.quantile(key, 0.99) as f64 / 1e6)),
+                ("p99.9", Json::num(m.quantile(key, 0.999) as f64 / 1e6)),
+            ])
+        };
+        Json::obj(vec![
+            ("unit", Json::str("ms")),
+            (keys::LATENCY_SESSION_MAKESPAN, dist(keys::LATENCY_SESSION_MAKESPAN)),
+            (
+                keys::LATENCY_ADMISSION_WAIT_INTERACTIVE,
+                dist(keys::LATENCY_ADMISSION_WAIT_INTERACTIVE),
+            ),
+            (keys::LATENCY_ADMISSION_WAIT_BULK, dist(keys::LATENCY_ADMISSION_WAIT_BULK)),
+            (
+                keys::LATENCY_ADMISSION_WAIT_SCAVENGER,
+                dist(keys::LATENCY_ADMISSION_WAIT_SCAVENGER),
+            ),
+            (keys::LATENCY_PFS_READ, dist(keys::LATENCY_PFS_READ)),
+            (keys::LATENCY_ASSEMBLY, dist(keys::LATENCY_ASSEMBLY)),
+            (keys::LATENCY_PEER_FETCH, dist(keys::LATENCY_PEER_FETCH)),
+        ])
+    };
+
     Json::obj(vec![
         ("bench", Json::str("svc_qos+svc_locality+svc_churn+svc_shared+svc_concurrent")),
         ("pr", Json::num(5.0)),
@@ -2444,6 +2504,7 @@ pub fn bench_pr5_json(reps: u32) -> String {
         ("feedback", feedback),
         ("locality", locality),
         ("qos", qos),
+        ("latency", latency),
     ])
     .render()
 }
@@ -2718,6 +2779,18 @@ mod tests {
             "interactive_p50_improvement",
             "governor_inflight",
             "governor_queued",
+            // PR 7 latency distributions.
+            "\"latency\"",
+            "ckio.latency.session_makespan",
+            "ckio.latency.admission_wait.interactive",
+            "ckio.latency.admission_wait.bulk",
+            "ckio.latency.admission_wait.scavenger",
+            "ckio.latency.pfs_read_service",
+            "ckio.latency.assembly",
+            "ckio.latency.peer_fetch",
+            "\"p50\"",
+            "\"p99\"",
+            "\"p99.9\"",
         ] {
             assert!(j.contains(key), "missing {key} in BENCH_pr5 json");
         }
@@ -2752,6 +2825,80 @@ mod tests {
         assert_eq!(classed.governor_queued, 0, "demand stranded at quiescence");
         assert_eq!(classless.governor_inflight, 0);
         assert_eq!(classless.governor_queued, 0);
+    }
+
+    /// PR 7 acceptance: under the saturated classed cap, the weighted
+    /// governor holds the Interactive admission-wait p99 below Bulk's,
+    /// and the engine-global latency histograms carry the session
+    /// makespans (same shape and seed as the `latency` bench section).
+    #[test]
+    fn svc_qos_interactive_admission_wait_p99_beats_bulk() {
+        let (qn, qp, qsize, ni, nb, qc, cap) = QOS_SHAPE;
+        let (st, io, eng) = run_svc_qos(qn, qp, qsize, ni, nb, qc, cap, true, false, 9000);
+        assert_service_clean(&eng, &io);
+        assert!(st.throttled > 0, "the cap must saturate for admission waits to differ");
+        let m = &eng.core.metrics;
+        assert!(
+            m.histogram(keys::LATENCY_ADMISSION_WAIT_INTERACTIVE).is_some()
+                && m.histogram(keys::LATENCY_ADMISSION_WAIT_BULK).is_some(),
+            "both classes must have recorded admission waits"
+        );
+        let pi = m.quantile(keys::LATENCY_ADMISSION_WAIT_INTERACTIVE, 0.99);
+        let pb = m.quantile(keys::LATENCY_ADMISSION_WAIT_BULK, 0.99);
+        assert!(
+            pi < pb,
+            "Interactive admission-wait p99 ({pi} ns) must be below Bulk's ({pb} ns)"
+        );
+        assert_eq!(
+            m.histogram(keys::LATENCY_SESSION_MAKESPAN).map(|h| h.count()),
+            Some((ni + nb) as u64),
+            "every session's makespan must be recorded exactly once"
+        );
+    }
+
+    /// PR 7 acceptance: a tiny traced run (the CLI `ckio trace` path:
+    /// station-armed, engine deposits its sink on drop) exports Chrome
+    /// trace-event JSON carrying session spans, per-class ticket spans,
+    /// PFS RPC spans, and at least one cause-annotated AIMD cap change —
+    /// and teardown leaves every begin paired with an end.
+    #[test]
+    fn traced_run_exports_chrome_trace_with_expected_spans() {
+        use crate::trace::{self, names, TraceConfig};
+        trace::arm(TraceConfig::on());
+        let (qn, qp, qsize, ni, nb, qc, cap) = QOS_SHAPE;
+        let (_, io, eng) = run_svc_qos(qn, qp, qsize, ni, nb, qc, cap, true, true, 9000);
+        assert!(eng.core.trace.is_enabled(), "armed station must install a sink at boot");
+        assert_service_clean(&eng, &io); // includes the open-span pairing check
+        drop(eng); // deposits the sink back to this thread's station
+        let sinks = trace::collect();
+        trace::disarm();
+        assert_eq!(sinks.len(), 1, "exactly one engine ran while armed");
+        let json = trace::export_chrome(&sinks);
+        assert!(json.starts_with('{') && json.trim_end().ends_with('}'));
+        for needle in [
+            "\"traceEvents\"",
+            "\"displayTimeUnit\"",
+            names::SESSION_ACTIVE,
+            names::SESSION_OPEN,
+            names::SESSION_CLOSE,
+            names::TICKET_WAIT,
+            names::PFS_READ,
+            names::GOVERNOR_CAP,
+            "interactive", // class-labelled ticket annotations
+            "bulk",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in exported trace");
+        }
+        // At least one AIMD cap change carries its cause annotation.
+        assert!(
+            json.contains("growth_probe") || json.contains("p50_inflation"),
+            "adaptive run must export a cause-annotated governor/cap event"
+        );
+        // The category summary sees the same families.
+        let counts = trace::category_counts(&sinks);
+        assert!(counts.get("session").copied().unwrap_or(0) > 0);
+        assert!(counts.get("ticket").copied().unwrap_or(0) > 0);
+        assert!(counts.get("pfs").copied().unwrap_or(0) > 0);
     }
 
     /// PR 5 satellite (default-compatibility): `SessionOptions::default()`

@@ -27,6 +27,7 @@ pub mod metrics;
 pub mod net;
 pub mod pfs;
 pub mod runtime;
+pub mod trace;
 pub mod util;
 
 pub use amt::{

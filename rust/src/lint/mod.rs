@@ -3,7 +3,7 @@
 //! ([`crate::amt::protocol`]) and a handful of repo hygiene rules.
 //!
 //! The boot-time verifier proves the *declared* EP graph sound; this
-//! pass proves the declarations match the *source*. Six checks:
+//! pass proves the declarations match the *source*. Seven checks:
 //!
 //! * **dead-ep** — every non-test `const` whose name starts with `EP_`
 //!   must have a non-test send-ish use (a `ctx.send*`, `signal`,
@@ -28,6 +28,12 @@
 //!   `"amt."` in non-test code must live in `metrics::keys`, not be
 //!   scattered as raw literals (files under `metrics/` and `lint/`
 //!   are exempt).
+//! * **trace-literal** — string literals starting with a trace-event
+//!   category prefix (`"session/"`, `"ticket/"`, `"pfs/"`, `"store/"`,
+//!   `"place/"`, `"governor/"`, `"sched/"`) in non-test code must live
+//!   in `trace::names`, not be scattered as raw literals (files under
+//!   `trace/`, `metrics/` and `lint/` are exempt) — the
+//!   flight-recorder analogue of **metrics-literal**.
 //! * **stash-hygiene** — collection-typed struct fields under `ckio/`
 //!   named `pending*`/`parked*`/`early*` must have an in-file drain
 //!   site, and `pending_`-prefixed fields must be covered by
@@ -44,9 +50,10 @@
 //!
 //! Entry points: [`scan_sources`] (pure, in-memory — what the tests
 //! drive), [`scan_tree`] (walks a directory), [`cli`] (shared by the
-//! `ckio lint` subcommand and the `tools/ckio-lint` binary), and
+//! `ckio lint` subcommand and the `tools/ckio-lint` binary),
 //! [`dump_protocol_markdown`] (the `--dump-protocol` mode behind
-//! `docs/PROTOCOL.md`).
+//! `docs/PROTOCOL.md`), and [`dump_metrics_markdown`] (the
+//! `--dump-metrics` mode behind `docs/OBSERVABILITY.md`).
 
 use std::collections::{HashMap, HashSet};
 use std::fmt;
@@ -64,6 +71,7 @@ pub enum Check {
     SpecCoverage,
     PayloadMismatch,
     MetricsLiteral,
+    TraceLiteral,
     StashHygiene,
 }
 
@@ -75,6 +83,7 @@ impl Check {
             Check::SpecCoverage => "spec-coverage",
             Check::PayloadMismatch => "payload-mismatch",
             Check::MetricsLiteral => "metrics-literal",
+            Check::TraceLiteral => "trace-literal",
             Check::StashHygiene => "stash-hygiene",
         }
     }
@@ -380,6 +389,13 @@ fn classify(code: &str, tok: &str, pos: usize) -> OccClass {
 
 const ALLOWED_EPS: [&str; 1] = ["EP_ON_MIGRATED"];
 const METRIC_PREFIXES: [&str; 2] = ["ckio.", "amt."];
+// Trace-event names are `category/event`; the slash keeps plain prose
+// ("pfs.reads", "store budget") from matching.
+const TRACE_PREFIXES: [&str; 7] =
+    ["session/", "ticket/", "pfs/", "store/", "place/", "governor/", "sched/"];
+// `metrics/` is exempt because its key catalog names emitter *files*
+// ("pfs/model.rs") that collide with the prefixes.
+const TRACE_EXEMPT_DIRS: [&str; 3] = ["trace", "metrics", "lint"];
 const DRAIN_MARKERS: [&str; 5] = [".remove(", ".drain(", ".clear(", ".pop", "mem::take"];
 const STASH_PREFIXES: [&str; 3] = ["pending", "parked", "early"];
 const EXEMPT_DIRS: [&str; 2] = ["metrics", "lint"];
@@ -422,6 +438,7 @@ pub fn scan_sources(files: &[(String, String)], table: &ProtocolTable) -> Vec<Fi
     check_spec_coverage(&cleaned, &occs, table, &mut findings);
     check_payloads(&cleaned, table, &mut findings);
     check_metric_literals(&cleaned, &mut findings);
+    check_trace_literals(&cleaned, &mut findings);
     check_stash_hygiene(&cleaned, &mut findings);
     findings
 }
@@ -748,6 +765,31 @@ fn check_metric_literals(files: &[CleanFile], out: &mut Vec<Finding>) {
     }
 }
 
+fn check_trace_literals(files: &[CleanFile], out: &mut Vec<Finding>) {
+    for f in files {
+        if TRACE_EXEMPT_DIRS.iter().any(|d| in_dir(&f.path, d)) {
+            continue;
+        }
+        for (li, line) in f.lines.iter().enumerate() {
+            if f.test[li] {
+                continue;
+            }
+            for s in &line.strings {
+                if TRACE_PREFIXES.iter().any(|p| s.starts_with(p)) {
+                    out.push(Finding {
+                        file: f.path.clone(),
+                        line: li + 1,
+                        check: Check::TraceLiteral,
+                        message: format!(
+                            "trace event \"{s}\" as a raw literal — use a trace::names constant"
+                        ),
+                    });
+                }
+            }
+        }
+    }
+}
+
 /// A struct-field line declaring a stash collection: an identifier
 /// with one of the stash prefixes, a `:`, and an owned collection
 /// type. `let` bindings and fn signatures are excluded.
@@ -922,20 +964,64 @@ pub fn dump_protocol_markdown(table: &ProtocolTable) -> String {
     md
 }
 
+/// Render the observability catalog as Markdown — the `--dump-metrics`
+/// mode, checked in as `docs/OBSERVABILITY.md`. Deterministic: metrics
+/// keys and trace events appear in declaration order
+/// ([`crate::metrics::keys::catalog`] / [`crate::trace::names::catalog`]).
+pub fn dump_metrics_markdown() -> String {
+    let mut md = String::new();
+    md.push_str("# CkIO observability catalog\n\n");
+    md.push_str(
+        "Generated from the in-tree registries (`rust/src/metrics/mod.rs` and\n\
+         `rust/src/trace/mod.rs`) by `ckio lint --dump-metrics`. Regenerate after\n\
+         any metrics-key or trace-name change — the maintenance rule in\n\
+         ROADMAP.md requires this file to move in the same commit.\n",
+    );
+    md.push_str("\n## Metrics keys\n\n");
+    md.push_str(
+        "Kinds: **counter** — monotonic sum over the run; **duration** —\n\
+         accumulated virtual nanoseconds; **gauge** — last-written value\n\
+         (high-water marks via max-merge); **histogram** — log-bucketed\n\
+         distribution, quantiles surfaced as `p50`/`p99`/`p99.9` in the\n\
+         `latency` section of `ckio bench-json`.\n\n",
+    );
+    md.push_str("| Key | Kind | Emitted by | Meaning |\n|-----|------|------------|---------|\n");
+    for (key, kind, module, desc) in crate::metrics::keys::catalog() {
+        md.push_str(&format!("| `{key}` | {kind} | `{module}` | {desc} |\n"));
+    }
+    md.push_str("\n## Trace events\n\n");
+    md.push_str(
+        "One row per `trace::names` constant. The category is the prefix\n\
+         before the `/` (also the Chrome trace `cat` field); categories can\n\
+         be enabled selectively via `TraceConfig::categories`. Turn the\n\
+         flight recorder on with `ServiceConfig::trace` or `ckio trace\n\
+         <fig-id>`; see `rust/src/trace/mod.rs` for the event model.\n\n",
+    );
+    md.push_str("| Event | Category | Emitted by | Marks |\n|-------|----------|------------|-------|\n");
+    for (name, module, desc) in crate::trace::names::catalog() {
+        let cat = name.split('/').next().unwrap_or(name);
+        md.push_str(&format!("| `{name}` | {cat} | `{module}` | {desc} |\n"));
+    }
+    md
+}
+
 /// Shared entry point for `ckio lint` and the `ckio-lint` binary.
 /// Args: an optional tree root (default `rust/src`, falling back to
-/// `src` when invoked from inside `rust/`) and `--dump-protocol`.
-/// Exit codes: 0 clean, 1 findings, 2 usage/protocol/IO error.
+/// `src` when invoked from inside `rust/`), `--dump-protocol`, and
+/// `--dump-metrics`. Exit codes: 0 clean, 1 findings, 2
+/// usage/protocol/IO error.
 pub fn cli(args: &[String]) -> i32 {
     let mut dump = false;
+    let mut dump_metrics = false;
     let mut root: Option<String> = None;
     for a in args {
         match a.as_str() {
             "--dump-protocol" => dump = true,
+            "--dump-metrics" => dump_metrics = true,
             other if !other.starts_with('-') && root.is_none() => root = Some(other.to_string()),
             other => {
                 eprintln!("ckio-lint: unknown argument {other:?}");
-                eprintln!("usage: ckio-lint [--dump-protocol] [tree-root]");
+                eprintln!("usage: ckio-lint [--dump-protocol] [--dump-metrics] [tree-root]");
                 return 2;
             }
         }
@@ -947,6 +1033,10 @@ pub fn cli(args: &[String]) -> i32 {
     }
     if dump {
         print!("{}", dump_protocol_markdown(&table));
+        return 0;
+    }
+    if dump_metrics {
+        print!("{}", dump_metrics_markdown());
         return 0;
     }
     let root = root.unwrap_or_else(|| {
@@ -1147,6 +1237,39 @@ mod tests {
         assert_eq!(of(&findings, Check::MetricsLiteral).len(), 1, "{findings:?}");
         let findings = scan_sources(&one("metrics/mod.rs", src), &ProtocolTable::default());
         assert!(of(&findings, Check::MetricsLiteral).is_empty());
+    }
+
+    #[test]
+    fn trace_literal_detected_and_exempt_dirs_skipped() {
+        let src = "fn f(t: &mut T) { t.instant(0, \"ticket/rogue\"); }";
+        let findings = scan_sources(&one("ckio/app.rs", src), &ProtocolTable::default());
+        let tl = of(&findings, Check::TraceLiteral);
+        assert_eq!(tl.len(), 1, "{findings:?}");
+        assert!(tl[0].message.contains("ticket/rogue"), "{:?}", tl[0]);
+        // The registry itself and the lint fixtures are exempt.
+        let findings = scan_sources(&one("trace/mod.rs", src), &ProtocolTable::default());
+        assert!(of(&findings, Check::TraceLiteral).is_empty());
+        // Prose with a bare category word (no slash) is not a finding,
+        // and neither is a prefixed literal on a test-masked line.
+        let clean = "fn f() { let _ = \"store budget\"; }\n\
+                     #[cfg(test)]\n\
+                     mod tests {\n\
+                     fn g(t: &mut T) { t.instant(0, \"pfs/read\"); }\n\
+                     }";
+        let findings = scan_sources(&one("ckio/app.rs", clean), &ProtocolTable::default());
+        assert!(of(&findings, Check::TraceLiteral).is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn dump_metrics_markdown_covers_both_registries() {
+        let md = dump_metrics_markdown();
+        assert!(md.starts_with("# CkIO observability catalog"));
+        for (key, _, _, _) in crate::metrics::keys::catalog() {
+            assert!(md.contains(&format!("`{key}`")), "missing metrics row for {key}");
+        }
+        for (name, _, _) in crate::trace::names::catalog() {
+            assert!(md.contains(&format!("`{name}`")), "missing trace row for {name}");
+        }
     }
 
     #[test]

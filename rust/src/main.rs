@@ -3,12 +3,14 @@
 //!
 //! ```text
 //! ckio fig <1|2|4|7|8|9|12|13|sec5|splinter|autoreaders|svc_concurrent|svc_shared|svc_churn|svc_locality|svc_qos|all>
-//!      [--reps N] [--out bench_out] [--tp 65536]
+//!      [--reps N] [--out bench_out] [--tp 65536] [--trace]
 //! ckio read   --file-size 4GiB --clients 512 [--scheme naive|ckio] [--readers N]
 //! ckio changa --nodes 4 --tp 4096 --scheme ckio [--nbodies 2097152]
-//! ckio bench-json [--out BENCH_pr5.json] [--reps 3]   # svc perf + store/governor/shard/placement/qos anchor
+//! ckio perf   [--iters 5] [--file-size 4GiB] [--clients 8192] [--readers 512]
+//! ckio trace <fig-id> [--out trace.json] [--reps 1]   # flight-recorded run -> Perfetto timeline
+//! ckio bench-json [--out BENCH_pr5.json] [--reps 3]   # svc perf + store/governor/shard/placement/qos/latency anchor
 //! ckio artifacts [--dir artifacts]           # list + smoke-run lowered artifacts
-//! ckio lint [--dump-protocol] [tree-root]    # protocol verifier + source lint
+//! ckio lint [--dump-protocol] [--dump-metrics] [tree-root]   # protocol verifier + source lint
 //! ```
 
 use ckio::amt::time;
@@ -28,6 +30,7 @@ fn main() {
         "changa" => cmd_changa(&args),
         "artifacts" => cmd_artifacts(&args),
         "perf" => cmd_perf(&args),
+        "trace" => cmd_trace(&args),
         "bench-json" => cmd_bench_json(&args),
         "lint" => {
             // Re-read raw argv: the lint CLI takes flag-style args
@@ -37,8 +40,10 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: ckio fig <id|all> [--reps N] [--out DIR] | read | changa | artifacts | \
-                 bench-json [--out BENCH_pr5.json] | lint [--dump-protocol] [tree-root]\n\
+                "usage: ckio fig <id|all> [--reps N] [--out DIR] [--trace] | read | changa | \
+                 perf [--iters N] | trace <fig-id> [--out trace.json] | artifacts | \
+                 bench-json [--out BENCH_pr5.json] | \
+                 lint [--dump-protocol] [--dump-metrics] [tree-root]\n\
                  see `rust/src/main.rs` header for full flags"
             );
         }
@@ -85,6 +90,7 @@ fn cmd_fig(args: &Args) {
     let reps = args.get_or("reps", 3u32);
     let out = args.get("out").unwrap_or("bench_out").to_string();
     let n_tp = args.get_or("tp", 1u32 << 16);
+    let traced = args.flag("trace");
     let ids: Vec<&str> = if id == "all" {
         vec![
             "1", "2", "4", "7", "8", "9", "12", "13", "sec5", "splinter", "autoreaders",
@@ -95,6 +101,9 @@ fn cmd_fig(args: &Args) {
     };
     for id in ids {
         let started = std::time::Instant::now();
+        if traced {
+            ckio::trace::arm(ckio::trace::TraceConfig::on());
+        }
         let Some((slug, table)) = run_figure(id, reps, n_tp) else {
             eprintln!("unknown figure {id:?}");
             std::process::exit(2);
@@ -106,7 +115,57 @@ fn cmd_fig(args: &Args) {
             }
             Err(e) => eprintln!("csv write failed: {e}"),
         }
+        if traced {
+            // One timeline per figure, next to its CSV.
+            let sinks = ckio::trace::collect();
+            ckio::trace::disarm();
+            write_trace(&sinks, std::path::Path::new(&out).join(format!("{slug}_trace.json")));
+        }
     }
+}
+
+/// Export deposited sinks as Chrome trace-event JSON and print the
+/// per-category summary (shared by `fig --trace` and `trace`).
+fn write_trace(sinks: &[ckio::trace::TraceSink], path: std::path::PathBuf) {
+    if let Some(dir) = path.parent() {
+        let _ = std::fs::create_dir_all(dir);
+    }
+    let json = ckio::trace::export_chrome(sinks);
+    std::fs::write(&path, &json).unwrap_or_else(|e| panic!("writing {}: {e}", path.display()));
+    let events: u64 = ckio::trace::category_counts(sinks).values().sum();
+    let dropped: u64 = sinks.iter().map(|s| s.dropped()).sum();
+    println!(
+        "[trace] {}: {} engine run(s), {events} events, {dropped} dropped",
+        path.display(),
+        sinks.len()
+    );
+    for (cat, n) in ckio::trace::category_counts(sinks) {
+        println!("  {cat:10} {n}");
+    }
+}
+
+/// Run one figure with the flight recorder armed and export its
+/// timeline as Chrome trace-event JSON — load the file in Perfetto
+/// (ui.perfetto.dev) or chrome://tracing. Lanes: one per PE (sessions,
+/// reads, tasks) plus one per data-plane shard (store, governor,
+/// placement).
+fn cmd_trace(args: &Args) {
+    let Some(id) = args.positional.get(1).map(|s| s.as_str()) else {
+        eprintln!("usage: ckio trace <fig-id> [--out trace.json] [--reps 1] [--tp 65536]");
+        std::process::exit(2);
+    };
+    let reps = args.get_or("reps", 1u32);
+    let n_tp = args.get_or("tp", 1u32 << 16);
+    let out = args.get("out").unwrap_or("trace.json").to_string();
+    ckio::trace::arm(ckio::trace::TraceConfig::on());
+    let Some((_slug, table)) = run_figure(id, reps, n_tp) else {
+        eprintln!("unknown figure {id:?}");
+        std::process::exit(2);
+    };
+    table.print();
+    let sinks = ckio::trace::collect();
+    ckio::trace::disarm();
+    write_trace(&sinks, std::path::PathBuf::from(out));
 }
 
 fn cmd_read(args: &Args) {

@@ -11,12 +11,17 @@ use std::fmt::Write as _;
 
 use crate::amt::time::{self, Time};
 
-/// A metrics sink: named counters and named duration accumulators.
+pub mod histogram;
+pub use histogram::Histogram;
+
+/// A metrics sink: named counters, named duration accumulators, raw
+/// values, and latency histograms.
 #[derive(Debug, Default, Clone)]
 pub struct Metrics {
     counters: BTreeMap<&'static str, u64>,
     durations: BTreeMap<&'static str, Time>,
     values: BTreeMap<&'static str, f64>,
+    histograms: BTreeMap<&'static str, Histogram>,
 }
 
 impl Metrics {
@@ -68,6 +73,22 @@ impl Metrics {
         self.values.get(name).copied().unwrap_or(0.0)
     }
 
+    /// Record one latency sample (nanoseconds) into a named histogram.
+    pub fn record(&mut self, name: &'static str, v: u64) {
+        self.histograms.entry(name).or_default().record(v);
+    }
+
+    /// The named histogram, if any samples were recorded.
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    /// A quantile of the named histogram in nanoseconds (0 when no
+    /// samples were recorded).
+    pub fn quantile(&self, name: &str, q: f64) -> u64 {
+        self.histograms.get(name).map_or(0, |h| h.quantile(q))
+    }
+
     /// Merge another sink into this one (e.g. per-run → aggregate).
     pub fn merge(&mut self, other: &Metrics) {
         for (k, v) in &other.counters {
@@ -79,6 +100,9 @@ impl Metrics {
         for (k, v) in &other.values {
             *self.values.entry(k).or_insert(0.0) += v;
         }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k).or_default().merge(h);
+        }
     }
 
     /// Reset everything.
@@ -86,6 +110,7 @@ impl Metrics {
         self.counters.clear();
         self.durations.clear();
         self.values.clear();
+        self.histograms.clear();
     }
 
     /// Render a human-readable report.
@@ -107,6 +132,20 @@ impl Metrics {
             let _ = writeln!(out, "values:");
             for (k, v) in &self.values {
                 let _ = writeln!(out, "  {k:40} {v:.6}");
+            }
+        }
+        if !self.histograms.is_empty() {
+            let _ = writeln!(out, "latency histograms:");
+            for (k, h) in &self.histograms {
+                let _ = writeln!(
+                    out,
+                    "  {k:40} n={} p50={} p99={} p99.9={} max={}",
+                    h.count(),
+                    time::human(h.quantile(0.5)),
+                    time::human(h.quantile(0.99)),
+                    time::human(h.quantile(0.999)),
+                    time::human(h.max()),
+                );
             }
         }
         out
@@ -239,6 +278,94 @@ pub mod keys {
     pub const SHARD_MSGS_MEAN: &str = "ckio.shard.msgs_mean";
     /// Background-work time accumulated by compute chares (Figs. 8–9).
     pub const BG_WORK: &str = "app.bg_work";
+    /// Flight recorder: events evicted from the bounded trace ring by
+    /// the drop-oldest policy (only emitted while tracing is enabled —
+    /// truncation is never silent).
+    pub const TRACE_DROPPED: &str = "ckio.trace.dropped";
+    /// Histogram: session makespan, start accepted → close
+    /// acknowledged at the director (ns).
+    pub const LATENCY_SESSION_MAKESPAN: &str = "ckio.latency.session_makespan";
+    /// Histogram: admission wait of Interactive-class tickets,
+    /// governor enqueue → grant (ns; immediate grants record 0).
+    pub const LATENCY_ADMISSION_WAIT_INTERACTIVE: &str = "ckio.latency.admission_wait.interactive";
+    /// Histogram: admission wait of Bulk-class tickets (ns).
+    pub const LATENCY_ADMISSION_WAIT_BULK: &str = "ckio.latency.admission_wait.bulk";
+    /// Histogram: admission wait of Scavenger-class tickets (ns).
+    pub const LATENCY_ADMISSION_WAIT_SCAVENGER: &str = "ckio.latency.admission_wait.scavenger";
+    /// Histogram: PFS read RPC service time, issue → complete (ns).
+    pub const LATENCY_PFS_READ: &str = "ckio.latency.pfs_read_service";
+    /// Histogram: client-read assembly latency, request → last piece
+    /// (ns; the per-sample distribution behind `ASSEMBLY_LATENCY`).
+    pub const LATENCY_ASSEMBLY: &str = "ckio.latency.assembly";
+    /// Histogram: peer-fetch round trip, request sent → chunk received
+    /// at the requesting buffer (ns; successful fetches only).
+    pub const LATENCY_PEER_FETCH: &str = "ckio.latency.peer_fetch";
+
+    /// The observability catalog: `(key, kind, emitting module, what it
+    /// measures)` for every constant above — the registry behind
+    /// `ckio lint --dump-metrics` and `docs/OBSERVABILITY.md`. Rows
+    /// reference the constants (a renamed key cannot strand a stale
+    /// row), and `catalog_covers_every_key` below fails the build the
+    /// moment a new key is declared without a catalog entry.
+    pub fn catalog() -> Vec<(&'static str, &'static str, &'static str, &'static str)> {
+        vec![
+            (TASKS, "counter", "amt/engine.rs", "tasks executed by all PE schedulers"),
+            (MSGS, "counter", "amt/engine.rs", "messages sent (all kinds)"),
+            (FWD_HOPS, "counter", "amt/engine.rs", "location-manager forwarding hops"),
+            (MIGRATIONS, "counter", "amt/engine.rs", "chare migrations completed"),
+            (NET_BYTES, "counter", "amt/engine.rs (reserved)", "bytes moved over the modeled interconnect"),
+            (NET_BUSY, "duration", "amt/engine.rs (reserved)", "modeled interconnect serialization time"),
+            (PFS_RPCS, "counter", "pfs/model.rs", "PFS read RPCs issued"),
+            (PFS_BYTES, "counter", "pfs/model.rs", "bytes read from the PFS"),
+            (OST_BUSY, "duration", "pfs/model.rs", "aggregate OST service time"),
+            (PFS_MAX_CONCURRENT, "gauge", "pfs/model.rs", "high-water mark of in-flight PFS reads"),
+            (CKIO_READS, "counter", "ckio/assembler.rs", "client read requests served"),
+            (CKIO_BYTES, "counter", "ckio/assembler.rs", "bytes delivered to clients"),
+            (SESSIONS, "counter", "ckio/director.rs", "read sessions started"),
+            (SESSIONS_REJECTED, "counter", "ckio/director.rs", "session starts rejected with a structured error"),
+            (OPENS_REJECTED, "counter", "ckio/director.rs", "opens rejected (invalid or conflicting options)"),
+            (REOPENS, "counter", "ckio/director.rs", "re-opens of an already-open file"),
+            (DOUBLE_CLOSE, "counter", "ckio/director.rs", "duplicate session/file closes (idempotent)"),
+            (READS_AFTER_CLOSE, "counter", "ckio/manager.rs", "reads NACKed because their session was torn down"),
+            (ASSEMBLY_LATENCY, "duration", "ckio/assembler.rs", "accumulated client-read assembly latency"),
+            (PIECES_AFTER_CLOSE, "counter", "ckio/assembler.rs", "late pieces of a closed session, tolerated"),
+            (PIECES_SERVED, "counter", "ckio/buffer.rs", "pieces served to assemblers from resident data"),
+            (PIECES_NACKED, "counter", "ckio/buffer.rs", "fetches answered with a modeled NACK (teardown drain)"),
+            (FETCHES, "counter", "ckio/buffer.rs", "fetch requests received by buffer chares"),
+            (FETCH_AFTER_DROP, "counter", "ckio/buffer.rs", "fetches arriving after the buffer dropped"),
+            (LAST_IO_NS, "gauge", "ckio/buffer.rs", "completion time of the last prefetch I/O (ns)"),
+            (BUFFERS_REBOUND, "counter", "ckio/buffer.rs", "buffer chares rebound to a parked array"),
+            (BUFFER_REUSE, "counter", "ckio/director.rs", "sessions that reused a parked array wholesale"),
+            (BUFFER_CACHE_EVICTIONS, "counter", "ckio/shard.rs", "parked arrays evicted under the store budget"),
+            (STORE_PEER_SERVED, "counter", "ckio/buffer.rs", "peer-fetch bytes served from a resident slot"),
+            (STORE_PEER_MISS, "counter", "ckio/buffer.rs", "peer fetches that missed (source gone)"),
+            (STORE_HIT, "counter", "ckio/buffer.rs", "bytes served from resident data instead of the PFS"),
+            (STORE_MISS, "counter", "ckio/buffer.rs", "bytes for which a PFS read was actually issued"),
+            (STORE_EVICTED, "counter", "ckio/shard.rs", "resident bytes released by eviction or purge"),
+            (STORE_RESIDENT, "gauge", "ckio/shard.rs", "bytes resident in parked arrays (summed over shards)"),
+            (GOV_THROTTLED, "counter", "ckio/shard.rs", "PFS reads deferred at the per-shard cap"),
+            (GOV_CAP, "gauge", "ckio/shard.rs", "admission cap (sum of per-shard caps)"),
+            (GOV_ADAPTATIONS, "counter", "ckio/shard.rs", "cap changes made by the AIMD feedback loop"),
+            (GOV_GRANTED_INTERACTIVE, "counter", "ckio/governor.rs", "tickets admitted under the Interactive class"),
+            (GOV_GRANTED_BULK, "counter", "ckio/governor.rs", "tickets admitted under the Bulk class"),
+            (GOV_GRANTED_SCAVENGER, "counter", "ckio/governor.rs", "tickets admitted under the Scavenger class"),
+            (PLACE_PLANNED, "counter", "ckio/director.rs", "buffers placed by a shard's PlacementPlan"),
+            (PLACE_SAME_PE, "counter", "ckio/buffer.rs", "peer-fetched bytes that stayed on one PE"),
+            (PLACE_CROSS_PE, "counter", "ckio/buffer.rs", "peer-fetched bytes that crossed PEs"),
+            (PLACE_DEGRADED, "counter", "ckio/buffer.rs", "planned buffers that found less coverage than promised"),
+            (SHARD_MSGS_MAX, "gauge", "harness/experiments.rs", "most messages processed by any one shard"),
+            (SHARD_MSGS_MEAN, "gauge", "harness/experiments.rs", "mean messages per active shard"),
+            (BG_WORK, "duration", "harness/bgwork.rs", "background-work time of compute chares"),
+            (TRACE_DROPPED, "counter", "amt/engine.rs", "events evicted from the bounded trace ring"),
+            (LATENCY_SESSION_MAKESPAN, "histogram", "ckio/director.rs", "session makespan, start accepted -> close acked (ns)"),
+            (LATENCY_ADMISSION_WAIT_INTERACTIVE, "histogram", "ckio/shard.rs", "Interactive admission wait, enqueue -> grant (ns)"),
+            (LATENCY_ADMISSION_WAIT_BULK, "histogram", "ckio/shard.rs", "Bulk admission wait, enqueue -> grant (ns)"),
+            (LATENCY_ADMISSION_WAIT_SCAVENGER, "histogram", "ckio/shard.rs", "Scavenger admission wait, enqueue -> grant (ns)"),
+            (LATENCY_PFS_READ, "histogram", "pfs/model.rs", "PFS read RPC service time, issue -> complete (ns)"),
+            (LATENCY_ASSEMBLY, "histogram", "ckio/assembler.rs", "client-read assembly latency, request -> last piece (ns)"),
+            (LATENCY_PEER_FETCH, "histogram", "ckio/buffer.rs", "peer-fetch round trip, sent -> chunk received (ns)"),
+        ]
+    }
 }
 
 #[cfg(test)]
@@ -273,6 +400,28 @@ mod tests {
     }
 
     #[test]
+    fn histograms_record_merge_and_report() {
+        let mut a = Metrics::new();
+        for v in [10u64, 20, 30] {
+            a.record(keys::LATENCY_PFS_READ, v);
+        }
+        let mut b = Metrics::new();
+        b.record(keys::LATENCY_PFS_READ, 40);
+        a.merge(&b);
+        let h = a.histogram(keys::LATENCY_PFS_READ).unwrap();
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.max(), 40);
+        assert_eq!(a.quantile(keys::LATENCY_PFS_READ, 0.5), 20);
+        assert_eq!(a.quantile("missing", 0.5), 0);
+        assert!(a.histogram("missing").is_none());
+        let r = a.report();
+        assert!(r.contains("latency histograms:"));
+        assert!(r.contains(keys::LATENCY_PFS_READ));
+        a.clear();
+        assert!(a.histogram(keys::LATENCY_PFS_READ).is_none());
+    }
+
+    #[test]
     fn report_contains_entries() {
         let mut m = Metrics::new();
         m.count(keys::TASKS, 7);
@@ -281,5 +430,37 @@ mod tests {
         assert!(r.contains("amt.tasks"));
         assert!(r.contains("7"));
         assert!(r.contains("1.50 ms"));
+    }
+
+    /// Every `pub const` key declared in `keys` has exactly one catalog
+    /// row with a kind from the fixed vocabulary — so `--dump-metrics`
+    /// (and `docs/OBSERVABILITY.md`) can never silently lag the keys.
+    #[test]
+    fn catalog_covers_every_key() {
+        let src = include_str!("mod.rs");
+        let keys_mod = src.split("pub mod keys {").nth(1).expect("keys module present");
+        let keys_mod = &keys_mod[..keys_mod.find("\n}").expect("keys module closes")];
+        let declared: Vec<&str> = keys_mod
+            .lines()
+            .filter(|l| l.trim().starts_with("pub const "))
+            .filter_map(|l| l.split('"').nth(1))
+            .collect();
+        assert!(declared.len() > 40, "key extraction broke: found {}", declared.len());
+        let cat = keys::catalog();
+        assert_eq!(cat.len(), declared.len(), "catalog rows != declared keys");
+        for d in &declared {
+            assert_eq!(
+                cat.iter().filter(|(k, ..)| k == d).count(),
+                1,
+                "key {d} must have exactly one catalog row"
+            );
+        }
+        for (k, kind, emitter, desc) in &cat {
+            assert!(
+                matches!(*kind, "counter" | "duration" | "gauge" | "histogram"),
+                "{k}: unknown kind {kind}"
+            );
+            assert!(!emitter.is_empty() && !desc.is_empty());
+        }
     }
 }

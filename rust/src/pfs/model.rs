@@ -17,6 +17,7 @@ use crate::amt::callback::Callback;
 use crate::amt::time::{from_micros, from_secs, Time};
 use crate::amt::topology::Pe;
 use crate::metrics::{keys, Metrics};
+use crate::trace::{names as trace_names, Lane as TraceLane, TraceCategory, TraceSink};
 use crate::util::bytes::Chunk;
 use crate::util::rng::Pcg32;
 
@@ -113,6 +114,8 @@ struct Req {
     /// RPCs issued but not yet arrived.
     in_flight: u32,
     done: bool,
+    /// Issue time, for the service-time histogram and trace span.
+    submitted_at: Time,
 }
 
 #[derive(Debug)]
@@ -205,6 +208,7 @@ impl SimPfs {
     }
 
     /// Submit a read. Events to schedule are appended to `out`.
+    #[allow(clippy::too_many_arguments)]
     pub fn submit(
         &mut self,
         now: Time,
@@ -213,6 +217,7 @@ impl SimPfs {
         req: ReadRequest,
         callback: Callback,
         metrics: &mut Metrics,
+        trace: &mut TraceSink,
         out: &mut Vec<Scheduled>,
     ) {
         let meta = self.file(req.file);
@@ -222,6 +227,17 @@ impl SimPfs {
         self.active_reads += 1;
         metrics.set_max(keys::PFS_MAX_CONCURRENT, self.active_reads as f64);
         let rid = self.reqs.len() as u32;
+        if trace.on(TraceCategory::Pfs) {
+            trace.begin(
+                now,
+                TraceCategory::Pfs,
+                trace_names::PFS_READ,
+                TraceLane::Pe(pe.0),
+                u64::from(rid),
+                req.len,
+                req.offset,
+            );
+        }
         self.reqs.push(Req {
             callback,
             pe,
@@ -233,6 +249,7 @@ impl SimPfs {
             pending: extents.into_iter().collect(),
             in_flight: 0,
             done: false,
+            submitted_at: now,
         });
         // Open the client window.
         for _ in 0..self.cfg.client_window {
@@ -293,6 +310,7 @@ impl SimPfs {
         now: Time,
         ev: PfsEvent,
         metrics: &mut Metrics,
+        trace: &mut TraceSink,
         out: &mut Vec<Scheduled>,
     ) -> Option<Done> {
         match ev {
@@ -323,6 +341,19 @@ impl SimPfs {
                 if r.in_flight == 0 && r.pending.is_empty() && !r.done {
                     r.done = true;
                     self.active_reads = self.active_reads.saturating_sub(1);
+                    let service = now.saturating_sub(r.submitted_at);
+                    metrics.record(keys::LATENCY_PFS_READ, service);
+                    if trace.on(TraceCategory::Pfs) {
+                        trace.end(
+                            now,
+                            TraceCategory::Pfs,
+                            trace_names::PFS_READ,
+                            TraceLane::Pe(r.pe.0),
+                            u64::from(rid),
+                            r.len,
+                            service,
+                        );
+                    }
                     let chunk = if self.cfg.materialize {
                         Chunk::materialized(r.offset, pattern::make(r.file, r.offset, r.len))
                     } else {
@@ -376,6 +407,7 @@ mod tests {
     ) -> Vec<(Time, Done)> {
         // Tiny standalone event loop driving just the PFS model.
         let mut metrics = Metrics::new();
+        let mut trace = TraceSink::disabled();
         let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(Time, u64, usize)>> =
             Default::default();
         let mut evs: Vec<PfsEvent> = Vec::new();
@@ -383,7 +415,7 @@ mod tests {
         let mut out = Vec::new();
         let mut dones = Vec::new();
         for (t, pe, node, req) in submits {
-            pfs.submit(t, pe, node, req, Callback::Ignore, &mut metrics, &mut out);
+            pfs.submit(t, pe, node, req, Callback::Ignore, &mut metrics, &mut trace, &mut out);
             for s in out.drain(..) {
                 evs.push(s.ev);
                 heap.push(std::cmp::Reverse((s.at, seq, evs.len() - 1)));
@@ -391,7 +423,7 @@ mod tests {
             }
         }
         while let Some(std::cmp::Reverse((t, _, idx))) = heap.pop() {
-            if let Some(d) = pfs.on_event(t, evs[idx], &mut metrics, &mut out) {
+            if let Some(d) = pfs.on_event(t, evs[idx], &mut metrics, &mut trace, &mut out) {
                 dones.push((t, d));
             }
             for s in out.drain(..) {
@@ -478,9 +510,10 @@ mod tests {
         let f = pfs.create_file(64 << 20);
         let mut out = Vec::new();
         let mut metrics = Metrics::new();
+        let mut trace = TraceSink::disabled();
         pfs.submit(0, Pe(0), 0,
             ReadRequest { file: f, offset: 0, len: 32 << 20, user: 0 },
-            Callback::Ignore, &mut metrics, &mut out);
+            Callback::Ignore, &mut metrics, &mut trace, &mut out);
         // 8 extents of 4 MiB, but only `client_window` service starts.
         assert_eq!(out.len(), 2);
         assert_eq!(pfs.reqs[0].in_flight, 2);

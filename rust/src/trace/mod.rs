@@ -1,0 +1,1025 @@
+//! Flight recorder: structured event tracing for the simulated service.
+//!
+//! A bounded, virtual-clock-stamped event ring ([`TraceSink`], one per
+//! engine `Core`) records span begin/end, complete (begin+duration) and
+//! instant events at the existing choke points of the stack — task
+//! dispatch and message sends ([`TraceCategory::Sched`]), governor
+//! enqueue→grant→done ([`TraceCategory::Ticket`], tagged with the QoS
+//! class), PFS RPC issue→complete ([`TraceCategory::Pfs`]), session
+//! open→plan→create→first-byte→drain→close
+//! ([`TraceCategory::Session`]), span-store traffic
+//! ([`TraceCategory::Store`]), placement planning
+//! ([`TraceCategory::Place`]) and AIMD cap changes annotated with their
+//! cause ([`TraceCategory::Governor`]).
+//!
+//! Design rules:
+//!
+//! * **Off by default, zero-allocation when off.** Every recording
+//!   method first consults [`TraceSink::on`] — a branch on two plain
+//!   fields — and returns immediately for a disabled sink. The default
+//!   sink owns no ring storage at all.
+//! * **Bounded, never silently truncated.** The ring holds at most
+//!   `capacity` events; when full the *oldest* event is dropped and the
+//!   `dropped` counter advances. The engine flushes that counter into
+//!   `metrics::keys::TRACE_DROPPED` so truncation is always visible.
+//! * **Deterministic.** Events are stamped with the engine's virtual
+//!   clock, never wall time, and recording never perturbs the
+//!   simulation (no `advance`, no RNG draws).
+//! * **Name hygiene.** Span/instant names are category-prefixed
+//!   (`"session/…"`, `"ticket/…"`, …) and the literals live *only* in
+//!   [`names`]; everywhere else refers to the constants. `ckio-lint`'s
+//!   trace-literal check enforces this, mirroring the metrics-literal
+//!   check.
+//!
+//! Two ways to enable tracing:
+//!
+//! * `ServiceConfig::trace` ([`TraceConfig`]) installs a sink at
+//!   `CkIo::boot_with` time — per-service opt-in from code.
+//! * The thread-local *station* ([`arm`]/[`collect`]) lets the CLI
+//!   (`ckio trace <fig-id>`, `ckio fig --trace`) trace unmodified
+//!   experiment drivers: while armed, every `Engine::new` on this
+//!   thread installs a sink, and every engine drop [`deposit`]s its
+//!   sink back for export.
+//!
+//! [`export_chrome`] renders deposited sinks as Chrome trace-event JSON
+//! (loadable in Perfetto / `chrome://tracing`): one process per run per
+//! plane (even pids = PE lanes, odd pids = data-plane shard lanes), one
+//! thread per PE or shard — a Projections-style timeline of the
+//! simulated service.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::fmt::Write as _;
+
+use crate::amt::time::Time;
+
+/// Event categories; each can be masked independently via
+/// [`TraceConfig::categories`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum TraceCategory {
+    /// Session lifecycle: open → plan → create → ready → first byte →
+    /// drain → close (director, assembler).
+    Session,
+    /// Admission tickets: enqueue → grant (with waited time) → done
+    /// (data-plane shards, tagged with the QoS class).
+    Ticket,
+    /// PFS read RPCs: issue → complete (simulated PFS model).
+    Pfs,
+    /// Span-store traffic: take/park/purge and peer fetches.
+    Store,
+    /// Store-aware placement planning.
+    Place,
+    /// Admission-governor cap changes, annotated with the AIMD cause.
+    Governor,
+    /// Engine scheduler: message sends and task dispatch.
+    Sched,
+}
+
+impl TraceCategory {
+    /// Every category, in declaration order.
+    pub const ALL: [TraceCategory; 7] = [
+        TraceCategory::Session,
+        TraceCategory::Ticket,
+        TraceCategory::Pfs,
+        TraceCategory::Store,
+        TraceCategory::Place,
+        TraceCategory::Governor,
+        TraceCategory::Sched,
+    ];
+
+    fn bit(self) -> u8 {
+        1 << (self as u8)
+    }
+
+    /// Stable lowercase label (also the Chrome `cat` field).
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceCategory::Session => "session",
+            TraceCategory::Ticket => "ticket",
+            TraceCategory::Pfs => "pfs",
+            TraceCategory::Store => "store",
+            TraceCategory::Place => "place",
+            TraceCategory::Governor => "governor",
+            TraceCategory::Sched => "sched",
+        }
+    }
+
+    /// Inverse of [`TraceCategory::label`] (CLI category filters).
+    pub fn parse(s: &str) -> Option<TraceCategory> {
+        TraceCategory::ALL.iter().copied().find(|c| c.label() == s)
+    }
+}
+
+/// A set of [`TraceCategory`], stored as a bitmask.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CategoryMask(u8);
+
+impl CategoryMask {
+    pub const fn none() -> CategoryMask {
+        CategoryMask(0)
+    }
+
+    pub const fn all() -> CategoryMask {
+        CategoryMask(0x7f)
+    }
+
+    #[must_use]
+    pub fn with(self, c: TraceCategory) -> CategoryMask {
+        CategoryMask(self.0 | c.bit())
+    }
+
+    pub fn contains(self, c: TraceCategory) -> bool {
+        self.0 & c.bit() != 0
+    }
+}
+
+impl Default for CategoryMask {
+    fn default() -> CategoryMask {
+        CategoryMask::all()
+    }
+}
+
+/// Default ring capacity (events) when tracing is enabled.
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// Flight-recorder configuration (`ServiceConfig::trace`). The default
+/// is **disabled**; `TraceConfig::on()` is the enabled-everything
+/// convenience the CLI uses.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TraceConfig {
+    /// Master switch; when false the sink is a no-op and owns no
+    /// storage.
+    pub enabled: bool,
+    /// Ring capacity in events; oldest events are dropped (and counted)
+    /// beyond this.
+    pub capacity: usize,
+    /// Which categories to record.
+    pub categories: CategoryMask,
+}
+
+impl Default for TraceConfig {
+    fn default() -> TraceConfig {
+        TraceConfig {
+            enabled: false,
+            capacity: DEFAULT_CAPACITY,
+            categories: CategoryMask::all(),
+        }
+    }
+}
+
+impl TraceConfig {
+    /// Enabled, default capacity, all categories.
+    pub fn on() -> TraceConfig {
+        TraceConfig {
+            enabled: true,
+            ..TraceConfig::default()
+        }
+    }
+}
+
+/// Which timeline lane an event belongs to: a PE (control/compute
+/// plane) or a data-plane shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lane {
+    Pe(u32),
+    Shard(u32),
+}
+
+/// Event shape: async span begin/end (matched by category + id),
+/// self-contained complete spans (begin timestamp + duration), and
+/// point-in-time instants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Begin,
+    End,
+    Instant,
+    Complete { dur: Time },
+}
+
+/// One recorded event. `a0`/`a1` are free-form integer arguments
+/// (bytes, counts, EPs); `note` is a static annotation such as the
+/// AIMD cause.
+#[derive(Clone, Copy, Debug)]
+pub struct TraceEvent {
+    pub ts: Time,
+    pub cat: TraceCategory,
+    pub kind: EventKind,
+    pub name: &'static str,
+    pub lane: Lane,
+    pub id: u64,
+    pub a0: u64,
+    pub a1: u64,
+    pub note: &'static str,
+}
+
+/// The bounded event ring. One per engine `Core`; disabled (and
+/// storage-free) unless installed by `CkIo::boot_with` or the armed
+/// station.
+#[derive(Debug, Default)]
+pub struct TraceSink {
+    enabled: bool,
+    mask: CategoryMask,
+    cap: usize,
+    ring: VecDeque<TraceEvent>,
+    dropped: u64,
+    flushed_dropped: u64,
+    open_spans: i64,
+}
+
+impl TraceSink {
+    /// Build a sink from config; a disabled config yields the no-op
+    /// sink.
+    pub fn new(cfg: &TraceConfig) -> TraceSink {
+        if !cfg.enabled {
+            return TraceSink::default();
+        }
+        let cap = cfg.capacity.max(16);
+        TraceSink {
+            enabled: true,
+            mask: cfg.categories,
+            cap,
+            ring: VecDeque::with_capacity(cap),
+            dropped: 0,
+            flushed_dropped: 0,
+            open_spans: 0,
+        }
+    }
+
+    /// The no-op sink (what `Core` carries by default).
+    pub fn disabled() -> TraceSink {
+        TraceSink::default()
+    }
+
+    /// Cheap hot-path guard: is this category being recorded?
+    #[inline]
+    pub fn on(&self, cat: TraceCategory) -> bool {
+        self.enabled && self.mask.contains(cat)
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        if self.ring.len() == self.cap {
+            // Drop-oldest, never silently: the counter is flushed into
+            // metrics::keys::TRACE_DROPPED by the engine.
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(ev);
+    }
+
+    /// Open an async span; pair with [`TraceSink::end`] using the same
+    /// category, name and id.
+    pub fn begin(
+        &mut self,
+        ts: Time,
+        cat: TraceCategory,
+        name: &'static str,
+        lane: Lane,
+        id: u64,
+        a0: u64,
+        a1: u64,
+    ) {
+        if !self.on(cat) {
+            return;
+        }
+        self.open_spans += 1;
+        self.push(TraceEvent {
+            ts,
+            cat,
+            kind: EventKind::Begin,
+            name,
+            lane,
+            id,
+            a0,
+            a1,
+            note: "",
+        });
+    }
+
+    /// Close an async span opened by [`TraceSink::begin`].
+    pub fn end(
+        &mut self,
+        ts: Time,
+        cat: TraceCategory,
+        name: &'static str,
+        lane: Lane,
+        id: u64,
+        a0: u64,
+        a1: u64,
+    ) {
+        if !self.on(cat) {
+            return;
+        }
+        self.open_spans -= 1;
+        self.push(TraceEvent {
+            ts,
+            cat,
+            kind: EventKind::End,
+            name,
+            lane,
+            id,
+            a0,
+            a1,
+            note: "",
+        });
+    }
+
+    /// Record a point-in-time event.
+    pub fn instant(
+        &mut self,
+        ts: Time,
+        cat: TraceCategory,
+        name: &'static str,
+        lane: Lane,
+        a0: u64,
+        a1: u64,
+        note: &'static str,
+    ) {
+        if !self.on(cat) {
+            return;
+        }
+        self.push(TraceEvent {
+            ts,
+            cat,
+            kind: EventKind::Instant,
+            name,
+            lane,
+            id: 0,
+            a0,
+            a1,
+            note,
+        });
+    }
+
+    /// Record a self-contained span (`ts` may lie in the past — e.g. a
+    /// ticket's enqueue time — since the exporter orders by timestamp).
+    #[allow(clippy::too_many_arguments)]
+    pub fn complete(
+        &mut self,
+        ts: Time,
+        dur: Time,
+        cat: TraceCategory,
+        name: &'static str,
+        lane: Lane,
+        id: u64,
+        a0: u64,
+        a1: u64,
+        note: &'static str,
+    ) {
+        if !self.on(cat) {
+            return;
+        }
+        self.push(TraceEvent {
+            ts,
+            cat,
+            kind: EventKind::Complete { dur },
+            name,
+            lane,
+            id,
+            a0,
+            a1,
+            note,
+        });
+    }
+
+    /// Events currently resident in the ring (oldest first).
+    pub fn events(&self) -> impl Iterator<Item = &TraceEvent> {
+        self.ring.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// Total events evicted by the drop-oldest policy.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Begin events minus end events — zero at quiescence when every
+    /// span was closed (asserted by `assert_service_clean`). Tracked by
+    /// counter, independent of ring eviction: a span whose Begin was
+    /// evicted still balances.
+    pub fn open_spans(&self) -> i64 {
+        self.open_spans
+    }
+
+    /// Drop-count delta since the last flush (for the engine's
+    /// hot-counter flush into metrics).
+    pub fn take_unflushed_dropped(&mut self) -> u64 {
+        let d = self.dropped - self.flushed_dropped;
+        self.flushed_dropped = self.dropped;
+        d
+    }
+}
+
+/// Span/instant name constants — the **only** place trace-name
+/// literals may appear (`ckio-lint`'s trace-literal check flags the
+/// category-prefixed literals anywhere else outside `trace/`).
+pub mod names {
+    /// Session active span: start accepted → close acknowledged
+    /// (director; id = session id).
+    pub const SESSION_ACTIVE: &str = "session/active";
+    /// File opened (or re-opened) at the director.
+    pub const SESSION_OPEN: &str = "session/open";
+    /// Placement plan probe sent to the owning shard.
+    pub const SESSION_PLAN: &str = "session/plan";
+    /// Buffer array created for a fresh session.
+    pub const SESSION_CREATE: &str = "session/create";
+    /// Session became ready (all buffers registered and client
+    /// notified).
+    pub const SESSION_READY: &str = "session/ready";
+    /// First assembled read completed on a PE for this session
+    /// (assembler).
+    pub const SESSION_FIRST_BYTE: &str = "session/first_byte";
+    /// One client read assembled: request → last piece (assembler;
+    /// complete span).
+    pub const SESSION_ASSEMBLY: &str = "session/assembly";
+    /// Session close requested; teardown drain begins.
+    pub const SESSION_DRAIN: &str = "session/drain";
+    /// Session close acknowledged; a1 is the makespan in ns.
+    pub const SESSION_CLOSE: &str = "session/close";
+    /// Admission ticket deferred by the governor (a0 = tickets still
+    /// wanted).
+    pub const TICKET_ENQUEUE: &str = "ticket/enqueue";
+    /// Admission wait span: enqueue → grant (complete span; dur is the
+    /// admission wait, note is the QoS class).
+    pub const TICKET_WAIT: &str = "ticket/wait";
+    /// Governed PFS read completed and returned its tickets (a0 = n,
+    /// a1 = observed service ns).
+    pub const TICKET_DONE: &str = "ticket/done";
+    /// PFS read RPC span: issue → complete (id = request id).
+    pub const PFS_READ: &str = "pfs/read";
+    /// Store claim take (a0 = 1 hit / 0 miss).
+    pub const STORE_TAKE: &str = "store/take";
+    /// Buffer array parked into the store.
+    pub const STORE_PARK: &str = "store/park";
+    /// File claims purged from the store.
+    pub const STORE_PURGE: &str = "store/purge";
+    /// Peer fetch span: request sent → data received (complete span on
+    /// the requesting buffer's PE).
+    pub const STORE_PEER_FETCH: &str = "store/peer_fetch";
+    /// Placement plan computed by a shard (a0 = planned slots).
+    pub const PLACE_PLAN: &str = "place/plan";
+    /// Admission cap change (a0 = new cap, a1 = old cap; note is the
+    /// AIMD cause: growth probe vs p50 inflation).
+    pub const GOVERNOR_CAP: &str = "governor/cap";
+    /// Message scheduled for delivery (a0 = EP, a1 = wire bytes).
+    pub const SCHED_SEND: &str = "sched/send";
+    /// Task executed on a PE (complete span; a0 = EP).
+    pub const SCHED_TASK: &str = "sched/task";
+
+    /// The trace catalog: `(event name, emitting module, what it
+    /// marks)` for every constant above — rendered into
+    /// `docs/OBSERVABILITY.md` by `ckio lint --dump-metrics`. The
+    /// category is the prefix before the `/` (also the Chrome `cat`
+    /// field); `catalog_covers_every_name` keeps the list complete.
+    pub fn catalog() -> Vec<(&'static str, &'static str, &'static str)> {
+        vec![
+            (SESSION_ACTIVE, "ckio/director.rs", "session active span, start accepted -> close acked"),
+            (SESSION_OPEN, "ckio/director.rs", "file opened (or re-opened)"),
+            (SESSION_PLAN, "ckio/director.rs", "placement plan probe sent to the owning shard"),
+            (SESSION_CREATE, "ckio/director.rs", "buffer array created (note: fresh/planned/rebind)"),
+            (SESSION_READY, "ckio/director.rs", "session ready, client notified"),
+            (SESSION_FIRST_BYTE, "ckio/assembler.rs", "first assembled read on a PE for this session"),
+            (SESSION_ASSEMBLY, "ckio/assembler.rs", "one client read assembled (complete span)"),
+            (SESSION_DRAIN, "ckio/director.rs", "session close requested, teardown drain begins"),
+            (SESSION_CLOSE, "ckio/director.rs", "session close acknowledged (a0 = makespan ns)"),
+            (TICKET_ENQUEUE, "ckio/shard.rs", "admission ticket deferred by the governor"),
+            (TICKET_WAIT, "ckio/shard.rs", "admission wait span, enqueue -> grant (note: QoS class)"),
+            (TICKET_DONE, "ckio/shard.rs", "governed PFS read returned its tickets"),
+            (PFS_READ, "pfs/model.rs", "PFS read RPC span, issue -> complete"),
+            (STORE_TAKE, "ckio/shard.rs", "store claim take (note: hit/miss)"),
+            (STORE_PARK, "ckio/shard.rs", "buffer array parked into the store"),
+            (STORE_PURGE, "ckio/shard.rs", "file claims purged from the store"),
+            (STORE_PEER_FETCH, "ckio/buffer.rs", "peer fetch span, request -> data (note: same_pe/cross_pe)"),
+            (PLACE_PLAN, "ckio/shard.rs", "placement plan computed by a shard"),
+            (GOVERNOR_CAP, "ckio/shard.rs", "admission cap change (note: AIMD cause)"),
+            (SCHED_SEND, "amt/engine.rs", "message scheduled for delivery"),
+            (SCHED_TASK, "amt/engine.rs", "task executed on a PE (complete span)"),
+        ]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The station: thread-local arming + sink collection for the CLI.
+// ---------------------------------------------------------------------------
+
+struct Station {
+    armed: Option<TraceConfig>,
+    sinks: Vec<TraceSink>,
+}
+
+thread_local! {
+    static STATION: RefCell<Station> = RefCell::new(Station {
+        armed: None,
+        sinks: Vec::new(),
+    });
+}
+
+/// Arm the station: subsequent `Engine::new` calls on this thread
+/// install a [`TraceSink`] built from `cfg`, and dropped engines
+/// deposit their sinks for [`collect`].
+pub fn arm(cfg: TraceConfig) {
+    STATION.with(|s| {
+        let mut s = s.borrow_mut();
+        s.armed = Some(cfg);
+        s.sinks.clear();
+    });
+}
+
+/// The armed config, if any (consulted by `Engine::new`).
+pub fn armed() -> Option<TraceConfig> {
+    STATION.with(|s| s.borrow().armed.clone())
+}
+
+/// Disarm and discard any undeposited sinks.
+pub fn disarm() {
+    STATION.with(|s| {
+        let mut s = s.borrow_mut();
+        s.armed = None;
+        s.sinks.clear();
+    });
+}
+
+/// Hand a finished engine's sink to the station. No-op when the
+/// station is unarmed or the sink is disabled, so ordinary runs never
+/// accumulate state.
+pub fn deposit(sink: TraceSink) {
+    STATION.with(|s| {
+        let mut s = s.borrow_mut();
+        if s.armed.is_some() && sink.is_enabled() {
+            s.sinks.push(sink);
+        }
+    });
+}
+
+/// Drain the deposited sinks (in engine-completion order).
+pub fn collect() -> Vec<TraceSink> {
+    STATION.with(|s| std::mem::take(&mut s.borrow_mut().sinks))
+}
+
+// ---------------------------------------------------------------------------
+// Chrome trace-event export (Perfetto / chrome://tracing).
+// ---------------------------------------------------------------------------
+
+fn push_event_prefix(out: &mut String, ev: &TraceEvent, pid: u64, tid: u32) {
+    let ts_us = ev.ts as f64 / 1000.0;
+    let _ = write!(
+        out,
+        "{{\"name\":\"{}\",\"cat\":\"{}\",\"ts\":{:.3},\"pid\":{},\"tid\":{}",
+        ev.name,
+        ev.cat.label(),
+        ts_us,
+        pid,
+        tid
+    );
+}
+
+fn push_args(out: &mut String, ev: &TraceEvent) {
+    let _ = write!(out, ",\"args\":{{\"a0\":{},\"a1\":{}", ev.a0, ev.a1);
+    if !ev.note.is_empty() {
+        let _ = write!(out, ",\"note\":\"{}\"", ev.note);
+    }
+    out.push_str("}}");
+}
+
+/// Render deposited sinks as Chrome trace-event JSON. Each sink (one
+/// per traced engine run) gets two processes: pid `2r` for its PE
+/// lanes and pid `2r + 1` for its data-plane shard lanes, with one
+/// named thread per PE / shard. Async spans use `b`/`e` phases matched
+/// by category + id, so overlapping spans on one lane render
+/// correctly; a span whose Begin was evicted from the ring shows as an
+/// unmatched end, which Perfetto tolerates (and `TRACE_DROPPED`
+/// reports).
+pub fn export_chrome(sinks: &[TraceSink]) -> String {
+    let mut events: Vec<String> = Vec::new();
+    for (run, sink) in sinks.iter().enumerate() {
+        let pid_pe = (run as u64) * 2;
+        let pid_shard = pid_pe + 1;
+        // Lane discovery for thread-name metadata.
+        let mut pe_lanes: BTreeSet<u32> = BTreeSet::new();
+        let mut shard_lanes: BTreeSet<u32> = BTreeSet::new();
+        for ev in sink.events() {
+            match ev.lane {
+                Lane::Pe(p) => {
+                    pe_lanes.insert(p);
+                }
+                Lane::Shard(s) => {
+                    shard_lanes.insert(s);
+                }
+            }
+        }
+        let mut meta = |pid: u64, tid: u32, kind: &str, name: String| {
+            events.push(format!(
+                "{{\"ph\":\"M\",\"name\":\"{kind}\",\"pid\":{pid},\"tid\":{tid},\"args\":{{\"name\":\"{name}\"}}}}"
+            ));
+        };
+        if !pe_lanes.is_empty() {
+            meta(pid_pe, 0, "process_name", format!("run {run} PEs"));
+            for &p in &pe_lanes {
+                meta(pid_pe, p, "thread_name", format!("PE {p}"));
+            }
+        }
+        if !shard_lanes.is_empty() {
+            meta(pid_shard, 0, "process_name", format!("run {run} shards"));
+            for &s in &shard_lanes {
+                meta(pid_shard, s, "thread_name", format!("shard {s}"));
+            }
+        }
+        for ev in sink.events() {
+            let (pid, tid) = match ev.lane {
+                Lane::Pe(p) => (pid_pe, p),
+                Lane::Shard(s) => (pid_shard, s),
+            };
+            let mut e = String::new();
+            push_event_prefix(&mut e, ev, pid, tid);
+            match ev.kind {
+                EventKind::Begin => {
+                    let _ = write!(e, ",\"ph\":\"b\",\"id\":\"0x{:x}\"", ev.id);
+                }
+                EventKind::End => {
+                    let _ = write!(e, ",\"ph\":\"e\",\"id\":\"0x{:x}\"", ev.id);
+                }
+                EventKind::Instant => {
+                    e.push_str(",\"ph\":\"i\",\"s\":\"t\"");
+                }
+                EventKind::Complete { dur } => {
+                    let _ = write!(e, ",\"ph\":\"X\",\"dur\":{:.3}", dur as f64 / 1000.0);
+                }
+            }
+            push_args(&mut e, ev);
+            events.push(e);
+        }
+    }
+    let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+    out.push_str(&events.join(",\n"));
+    out.push_str("\n]}\n");
+    out
+}
+
+/// Per-category event counts across sinks (CLI summary line).
+pub fn category_counts(sinks: &[TraceSink]) -> BTreeMap<&'static str, u64> {
+    let mut m: BTreeMap<&'static str, u64> = BTreeMap::new();
+    for sink in sinks {
+        for ev in sink.events() {
+            *m.entry(ev.cat.label()).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(cap: usize) -> TraceConfig {
+        TraceConfig {
+            enabled: true,
+            capacity: cap,
+            categories: CategoryMask::all(),
+        }
+    }
+
+    #[test]
+    fn catalog_covers_every_name() {
+        // Self-parse the `names` module out of this file and require one
+        // catalog row per declared constant — adding an event name without
+        // cataloguing it (and regenerating docs/OBSERVABILITY.md) fails here.
+        let src = include_str!("mod.rs");
+        let module = src
+            .split("pub mod names {")
+            .nth(1)
+            .expect("names module present");
+        let mut declared = Vec::new();
+        for line in module.lines() {
+            if line.trim_start().starts_with("pub fn catalog") {
+                break;
+            }
+            if line.trim_start().starts_with("pub const ") {
+                let lit = line.split('"').nth(1).expect("string literal");
+                declared.push(lit.to_string());
+            }
+        }
+        assert!(declared.len() >= 20, "expected the full name set, found {declared:?}");
+        let cat = names::catalog();
+        assert_eq!(cat.len(), declared.len(), "catalog rows != declared constants");
+        for name in &declared {
+            assert_eq!(
+                cat.iter().filter(|(n, _, _)| *n == name.as_str()).count(),
+                1,
+                "{name} must appear exactly once in names::catalog()"
+            );
+        }
+        let labels: Vec<&str> = TraceCategory::ALL.iter().map(|c| c.label()).collect();
+        for (name, module, desc) in &cat {
+            let prefix = name.split('/').next().unwrap();
+            assert!(labels.contains(&prefix), "{name}: unknown category prefix");
+            assert!(!module.is_empty() && !desc.is_empty());
+        }
+    }
+
+    #[test]
+    fn disabled_sink_records_nothing_and_owns_nothing() {
+        let mut t = TraceSink::disabled();
+        assert!(!t.is_enabled());
+        assert!(!t.on(TraceCategory::Session));
+        t.instant(5, TraceCategory::Session, names::SESSION_OPEN, Lane::Pe(0), 0, 0, "");
+        t.begin(5, TraceCategory::Pfs, names::PFS_READ, Lane::Pe(0), 1, 0, 0);
+        assert!(t.is_empty());
+        assert_eq!(t.dropped(), 0);
+        assert_eq!(t.open_spans(), 0);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let mut t = TraceSink::new(&cfg(16));
+        for i in 0..20u64 {
+            t.instant(i, TraceCategory::Sched, names::SCHED_SEND, Lane::Pe(0), i, 0, "");
+        }
+        assert_eq!(t.len(), 16);
+        assert_eq!(t.dropped(), 4);
+        // Oldest four were evicted: the ring starts at ts = 4.
+        assert_eq!(t.events().next().unwrap().ts, 4);
+        assert_eq!(t.take_unflushed_dropped(), 4);
+        assert_eq!(t.take_unflushed_dropped(), 0);
+        t.instant(99, TraceCategory::Sched, names::SCHED_SEND, Lane::Pe(0), 0, 0, "");
+        assert_eq!(t.take_unflushed_dropped(), 1);
+    }
+
+    #[test]
+    fn category_mask_filters() {
+        let mut c = cfg(64);
+        c.categories = CategoryMask::none().with(TraceCategory::Pfs);
+        let mut t = TraceSink::new(&c);
+        assert!(t.on(TraceCategory::Pfs));
+        assert!(!t.on(TraceCategory::Sched));
+        t.instant(1, TraceCategory::Sched, names::SCHED_SEND, Lane::Pe(0), 0, 0, "");
+        assert!(t.is_empty());
+        t.begin(1, TraceCategory::Pfs, names::PFS_READ, Lane::Pe(0), 7, 0, 0);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn span_pairing_counter_balances() {
+        let mut t = TraceSink::new(&cfg(64));
+        t.begin(1, TraceCategory::Session, names::SESSION_ACTIVE, Lane::Pe(0), 1, 0, 0);
+        t.begin(2, TraceCategory::Pfs, names::PFS_READ, Lane::Pe(1), 2, 0, 0);
+        assert_eq!(t.open_spans(), 2);
+        t.end(3, TraceCategory::Pfs, names::PFS_READ, Lane::Pe(1), 2, 0, 0);
+        t.end(4, TraceCategory::Session, names::SESSION_ACTIVE, Lane::Pe(0), 1, 0, 0);
+        assert_eq!(t.open_spans(), 0);
+    }
+
+    #[test]
+    fn pairing_counter_survives_ring_eviction() {
+        // Capacity floor is 16; flood with instants so Begin events are
+        // evicted, then close the spans: the counter must still balance.
+        let mut t = TraceSink::new(&cfg(16));
+        t.begin(0, TraceCategory::Session, names::SESSION_ACTIVE, Lane::Pe(0), 1, 0, 0);
+        for i in 0..40u64 {
+            t.instant(i, TraceCategory::Sched, names::SCHED_SEND, Lane::Pe(0), 0, 0, "");
+        }
+        t.end(99, TraceCategory::Session, names::SESSION_ACTIVE, Lane::Pe(0), 1, 0, 0);
+        assert_eq!(t.open_spans(), 0);
+        assert!(t.dropped() > 0);
+    }
+
+    #[test]
+    fn station_roundtrip() {
+        arm(TraceConfig::on());
+        assert!(armed().is_some());
+        let mut t = TraceSink::new(&armed().unwrap());
+        t.instant(1, TraceCategory::Session, names::SESSION_OPEN, Lane::Pe(0), 0, 0, "");
+        deposit(t);
+        deposit(TraceSink::disabled()); // filtered out
+        let sinks = collect();
+        assert_eq!(sinks.len(), 1);
+        assert_eq!(sinks[0].len(), 1);
+        assert!(collect().is_empty());
+        disarm();
+        assert!(armed().is_none());
+        // Unarmed deposits are discarded.
+        deposit(TraceSink::new(&TraceConfig::on()));
+        assert!(collect().is_empty());
+    }
+
+    // -- minimal JSON validator (objects/arrays/strings/numbers/bools) --
+
+    fn ws(b: &[u8], i: &mut usize) {
+        while *i < b.len() && matches!(b[*i], b' ' | b'\n' | b'\r' | b'\t') {
+            *i += 1;
+        }
+    }
+
+    fn value(b: &[u8], i: &mut usize) -> bool {
+        ws(b, i);
+        if *i >= b.len() {
+            return false;
+        }
+        match b[*i] {
+            b'{' => {
+                *i += 1;
+                ws(b, i);
+                if *i < b.len() && b[*i] == b'}' {
+                    *i += 1;
+                    return true;
+                }
+                loop {
+                    ws(b, i);
+                    if *i >= b.len() || b[*i] != b'"' || !string(b, i) {
+                        return false;
+                    }
+                    ws(b, i);
+                    if *i >= b.len() || b[*i] != b':' {
+                        return false;
+                    }
+                    *i += 1;
+                    if !value(b, i) {
+                        return false;
+                    }
+                    ws(b, i);
+                    if *i >= b.len() {
+                        return false;
+                    }
+                    match b[*i] {
+                        b',' => *i += 1,
+                        b'}' => {
+                            *i += 1;
+                            return true;
+                        }
+                        _ => return false,
+                    }
+                }
+            }
+            b'[' => {
+                *i += 1;
+                ws(b, i);
+                if *i < b.len() && b[*i] == b']' {
+                    *i += 1;
+                    return true;
+                }
+                loop {
+                    if !value(b, i) {
+                        return false;
+                    }
+                    ws(b, i);
+                    if *i >= b.len() {
+                        return false;
+                    }
+                    match b[*i] {
+                        b',' => *i += 1,
+                        b']' => {
+                            *i += 1;
+                            return true;
+                        }
+                        _ => return false,
+                    }
+                }
+            }
+            b'"' => string(b, i),
+            b't' => lit(b, i, b"true"),
+            b'f' => lit(b, i, b"false"),
+            b'n' => lit(b, i, b"null"),
+            _ => number(b, i),
+        }
+    }
+
+    fn string(b: &[u8], i: &mut usize) -> bool {
+        // b[*i] == b'"'
+        *i += 1;
+        while *i < b.len() {
+            match b[*i] {
+                b'\\' => *i += 2,
+                b'"' => {
+                    *i += 1;
+                    return true;
+                }
+                _ => *i += 1,
+            }
+        }
+        false
+    }
+
+    fn lit(b: &[u8], i: &mut usize, want: &[u8]) -> bool {
+        if b.len() - *i >= want.len() && &b[*i..*i + want.len()] == want {
+            *i += want.len();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn number(b: &[u8], i: &mut usize) -> bool {
+        let start = *i;
+        if *i < b.len() && b[*i] == b'-' {
+            *i += 1;
+        }
+        let mut digits = 0;
+        while *i < b.len() && (b[*i].is_ascii_digit() || b[*i] == b'.' || b[*i] == b'e' || b[*i] == b'E' || b[*i] == b'+' || b[*i] == b'-') {
+            if b[*i].is_ascii_digit() {
+                digits += 1;
+            }
+            *i += 1;
+        }
+        digits > 0 && *i > start
+    }
+
+    fn json_ok(s: &str) -> bool {
+        let b = s.as_bytes();
+        let mut i = 0;
+        if !value(b, &mut i) {
+            return false;
+        }
+        ws(b, &mut i);
+        i == b.len()
+    }
+
+    #[test]
+    fn json_validator_sanity() {
+        assert!(json_ok("{\"a\":[1,2.5,\"x\"],\"b\":{\"c\":true}}"));
+        assert!(!json_ok("{\"a\":[1,]}"));
+        assert!(!json_ok("{\"a\":1,}"));
+        assert!(!json_ok("{\"a\":1} trailing"));
+    }
+
+    #[test]
+    fn chrome_export_golden() {
+        let mut t = TraceSink::new(&cfg(64));
+        t.begin(1_000, TraceCategory::Session, names::SESSION_ACTIVE, Lane::Pe(0), 3, 0, 0);
+        t.begin(2_000, TraceCategory::Pfs, names::PFS_READ, Lane::Pe(1), 42, 4096, 0);
+        t.end(5_000, TraceCategory::Pfs, names::PFS_READ, Lane::Pe(1), 42, 0, 0);
+        t.complete(
+            2_500,
+            1_500,
+            TraceCategory::Ticket,
+            names::TICKET_WAIT,
+            Lane::Shard(0),
+            7,
+            1,
+            0,
+            "bulk",
+        );
+        t.instant(
+            6_000,
+            TraceCategory::Governor,
+            names::GOVERNOR_CAP,
+            Lane::Shard(0),
+            4,
+            2,
+            "growth_probe",
+        );
+        t.end(9_000, TraceCategory::Session, names::SESSION_ACTIVE, Lane::Pe(0), 3, 0, 0);
+        let json = export_chrome(&[t]);
+        assert!(json_ok(&json), "export must be valid JSON:\n{json}");
+        for needle in [
+            "\"traceEvents\"",
+            names::SESSION_ACTIVE,
+            names::PFS_READ,
+            names::TICKET_WAIT,
+            names::GOVERNOR_CAP,
+            "\"ph\":\"b\"",
+            "\"ph\":\"e\"",
+            "\"ph\":\"X\"",
+            "\"ph\":\"i\"",
+            "\"note\":\"growth_probe\"",
+            "\"note\":\"bulk\"",
+            "\"process_name\"",
+            "\"thread_name\"",
+            // ns → µs: ticket wait of 1500 ns is 1.5 µs.
+            "\"dur\":1.500",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in:\n{json}");
+        }
+        // PE lanes on even pid 0; shard lanes on odd pid 1.
+        assert!(json.contains("\"pid\":0"));
+        assert!(json.contains("\"pid\":1"));
+    }
+
+    #[test]
+    fn chrome_export_second_run_gets_offset_pids() {
+        let mut a = TraceSink::new(&cfg(16));
+        a.instant(1, TraceCategory::Session, names::SESSION_OPEN, Lane::Pe(0), 0, 0, "");
+        let mut b = TraceSink::new(&cfg(16));
+        b.instant(1, TraceCategory::Store, names::STORE_PARK, Lane::Shard(2), 0, 0, "");
+        let json = export_chrome(&[a, b]);
+        assert!(json_ok(&json));
+        assert!(json.contains("\"pid\":3")); // run 1 shard plane = 2*1 + 1
+        assert!(json.contains("run 1 shards"));
+    }
+
+    #[test]
+    fn category_labels_roundtrip() {
+        for c in TraceCategory::ALL {
+            assert_eq!(TraceCategory::parse(c.label()), Some(c));
+        }
+        assert_eq!(TraceCategory::parse("nope"), None);
+    }
+}

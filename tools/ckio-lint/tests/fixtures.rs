@@ -38,12 +38,14 @@ fn fixture_tree_yields_planted_findings() {
     assert_eq!(count(Check::StaleEpRef), 1, "{findings:?}");
     assert_eq!(count(Check::PayloadMismatch), 1, "{findings:?}");
     assert_eq!(count(Check::MetricsLiteral), 1, "{findings:?}");
+    assert_eq!(count(Check::TraceLiteral), 1, "{findings:?}");
     assert_eq!(count(Check::StashHygiene), 1, "{findings:?}");
     assert_eq!(count(Check::SpecCoverage), 0, "{findings:?}");
     assert!(findings.iter().any(|f| f.message.contains("EP_DEAD")));
     assert!(findings.iter().any(|f| f.message.contains("EP_GHOST")));
     assert!(findings.iter().any(|f| f.message.contains("BarMsg")));
     assert!(findings.iter().any(|f| f.message.contains("ckio.rogue")));
+    assert!(findings.iter().any(|f| f.message.contains("ticket/rogue")));
     assert!(findings.iter().any(|f| f.message.contains("pending_things")));
 }
 
@@ -55,6 +57,17 @@ fn real_tree_scans_clean() {
     let (findings, scanned) = lint::scan_tree(&root, &table).unwrap();
     assert!(scanned > 30, "suspiciously few files: {scanned}");
     assert!(findings.is_empty(), "tree not lint-clean:\n{findings:#?}");
+}
+
+#[test]
+fn metrics_dump_covers_both_registries() {
+    let md = lint::dump_metrics_markdown();
+    for (key, _, _, _) in ckio::metrics::keys::catalog() {
+        assert!(md.contains(key), "missing metrics key {key}");
+    }
+    for (name, _, _) in ckio::trace::names::catalog() {
+        assert!(md.contains(name), "missing trace event {name}");
+    }
 }
 
 #[test]
