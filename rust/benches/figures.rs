@@ -65,9 +65,9 @@ fn main() {
                 || "svc_qos".contains(w.as_str())
         })
     {
-        match std::fs::write("BENCH_pr5.json", exp::bench_pr5_json(reps)) {
-            Ok(()) => println!("[json] BENCH_pr5.json"),
-            Err(e) => eprintln!("BENCH_pr5.json write failed: {e}"),
+        match std::fs::write("BENCH_pr8.json", exp::bench_pr8_json(reps)) {
+            Ok(()) => println!("[json] BENCH_pr8.json"),
+            Err(e) => eprintln!("BENCH_pr8.json write failed: {e}"),
         }
     }
     println!("total bench wall time: {:.1}s", total.elapsed().as_secs_f64());

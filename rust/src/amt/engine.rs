@@ -478,6 +478,7 @@ pub struct Ctx<'a> {
     pe: Pe,
     advanced: Time,
     sends: Vec<(Envelope, Transfer)>,
+    delayed: Vec<(Time, Envelope, Transfer)>,
     fires: Vec<(Callback, Payload)>,
     migrate_to: Option<Pe>,
     wall_start: Option<Instant>,
@@ -529,6 +530,23 @@ impl<'a> Ctx<'a> {
     /// Send a pure signal (no payload).
     pub fn signal(&mut self, to: ChareRef, ep: Ep) {
         self.send_sized(to, ep, Payload::empty(), CONTROL_MSG_BYTES, Transfer::Eager);
+    }
+
+    /// Send a control message departing `delay` ns after this task
+    /// completes (a virtual-clock timer: deadlines, retry backoff).
+    /// Delivery is best-effort by design — the receiver must tolerate the
+    /// timer firing after the state it guards has moved on.
+    pub fn send_after<T: Any + Send>(&mut self, delay: Time, to: ChareRef, ep: Ep, value: T) {
+        self.delayed.push((
+            delay,
+            Envelope {
+                to,
+                msg: Msg::new(ep, value),
+                wire_bytes: CONTROL_MSG_BYTES,
+                from_pe: self.pe,
+            },
+            Transfer::Eager,
+        ));
     }
 
     /// Send with an explicit modeled wire size and transfer class —
@@ -1002,6 +1020,7 @@ impl Engine {
             pe,
             advanced: 0,
             sends: Vec::new(),
+            delayed: Vec::new(),
             fires: Vec::new(),
             migrate_to: None,
             wall_start: None,
@@ -1023,6 +1042,7 @@ impl Engine {
             None => ctx.advanced,
         };
         let sends = std::mem::take(&mut ctx.sends);
+        let delayed = std::mem::take(&mut ctx.delayed);
         let fires = std::mem::take(&mut ctx.fires);
         let creations = std::mem::take(&mut ctx.creations);
         let migrate_to = ctx.migrate_to;
@@ -1059,6 +1079,9 @@ impl Engine {
         self.core.debug_sender = Some(to);
         for (env, class) in sends {
             self.core.schedule_send(done_t, env, class);
+        }
+        for (delay, env, class) in delayed {
+            self.core.schedule_send(done_t + delay, env, class);
         }
         for (cb, payload) in fires {
             self.core.fire_at(done_t, cb, payload, pe);
@@ -1212,6 +1235,43 @@ mod tests {
         assert!(end < 11 * MILLIS, "end={end}");
         assert_eq!(eng.core.metrics.duration("test.work"), 10 * MILLIS);
         assert_eq!(eng.pe_state(Pe(0)).tasks_run, 11); // 10 work + 1 no-op
+    }
+
+    #[test]
+    fn send_after_delivers_at_the_delayed_time() {
+        struct Timer {
+            cb: Callback,
+            armed: bool,
+        }
+        const EP_ARM: Ep = 1;
+        const EP_FIRE: Ep = 2;
+        impl Chare for Timer {
+            fn receive(&mut self, ctx: &mut Ctx, msg: Msg) {
+                match msg.ep {
+                    EP_ARM => {
+                        self.armed = true;
+                        let me = ctx.me();
+                        ctx.send_after(5 * MILLIS, me, EP_FIRE, 7u32);
+                    }
+                    EP_FIRE => {
+                        assert!(self.armed);
+                        let now = ctx.now();
+                        ctx.fire(self.cb.clone(), Payload::new(now));
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            impl_chare_any!();
+        }
+        let mut eng = Engine::new(EngineConfig::sim(1, 1));
+        let fut = eng.future(1);
+        let t = eng.create_singleton(Pe(0), Timer { cb: Callback::Future(fut), armed: false });
+        eng.inject_signal(t, EP_ARM);
+        eng.run();
+        assert!(eng.future_done(fut));
+        let (at, _) = eng.take_future(fut).pop().unwrap();
+        assert!(at >= 5 * MILLIS, "timer fired early: {at}");
+        assert!(at < 6 * MILLIS, "timer fired far late: {at}");
     }
 
     #[test]

@@ -128,7 +128,16 @@ impl CkIo {
             .create_array(nshards, &Placement::RoundRobinPes, |i| DataShard::new(i, placeholder));
         let director = engine.create_singleton(
             Pe(0),
-            Director::new(managers, assemblers, shards, nshards, active, cfg.governed(), npes),
+            Director::new(
+                managers,
+                assemblers,
+                shards,
+                nshards,
+                active,
+                cfg.governed(),
+                cfg.retry,
+                npes,
+            ),
         );
         patch_director::<Manager>(engine, managers, npes, director, |m| &mut m.director);
         patch_director::<DataShard>(engine, shards, nshards, director, |s| &mut s.director);

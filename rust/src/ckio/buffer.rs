@@ -61,7 +61,7 @@
 //! kept and a later identical session rebinds the array without touching
 //! the file system again.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
 use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
@@ -80,10 +80,11 @@ use crate::trace::{names as trace_names, Lane as TraceLane, TraceCategory};
 use crate::util::bytes::{ceil_div, Chunk};
 
 use super::governor::QosClass;
+use super::options::RetryPolicy;
 use super::session::{SessionId, Tag};
 use super::shard::{
-    RegisterMsg, UnclaimMsg, EP_SHARD_IO_DONE, EP_SHARD_IO_REQ, EP_SHARD_REGISTER,
-    EP_SHARD_UNCLAIM,
+    RegisterMsg, UnclaimMsg, EP_SHARD_IO_DONE, EP_SHARD_IO_RECLAIM, EP_SHARD_IO_REQ,
+    EP_SHARD_REGISTER, EP_SHARD_UNCLAIM,
 };
 
 /// Kick a freshly created buffer chare: issue its greedy reads.
@@ -108,6 +109,14 @@ pub const EP_BUF_GRANT: Ep = 9;
 /// The shard's answer to `EP_SHARD_REGISTER`: which of this chare's
 /// splinter slots are served by peer buffers instead of the PFS.
 pub const EP_BUF_PEERS: Ep = 10;
+/// Self-timer (PR 8): a governed read attempt's deadline expired. With
+/// hedging enabled the attempt stays live and a duplicate races it;
+/// otherwise the attempt is abandoned — its ticket returns to the
+/// governor and the slot re-enters admission after a backoff.
+pub const EP_BUF_TIMEOUT: Ep = 11;
+/// Self-timer (PR 8): a failed/abandoned attempt's backoff expired —
+/// re-queue the slot and re-enter admission.
+pub const EP_BUF_RETRY: Ep = 12;
 
 /// Fetch request from an assembler.
 #[derive(Debug)]
@@ -181,10 +190,37 @@ pub struct IoDoneMsg {
     pub service_ns: u64,
 }
 
-/// Grant from the governor (via the shard).
+/// Grant from the governor (via the shard). Since PR 8 the grant is
+/// *deadlined*: `deadline_ns` is how long the governor expects each of
+/// these reads to take (its observed service-time window scaled by the
+/// retry policy's multiplier), and the buffer arms a timeout at that
+/// horizon for every read it issues on the grant. 0 = no retry policy,
+/// no timer (the pre-PR 8 behavior, bit for bit).
 #[derive(Debug)]
 pub struct GrantMsg {
     pub n: u32,
+    pub deadline_ns: u64,
+}
+
+/// Buffer → shard (PR 8): this (dropping) buffer's admission state is
+/// dead — return the `held` tickets backing its still-in-flight reads
+/// and purge its queued demand from the governor. Without this, a
+/// buffer torn down mid-read leaks cap: the governor's inflight count
+/// would wait forever for completions this chare will now ignore.
+#[derive(Debug)]
+pub struct ReclaimMsg {
+    pub owner: ChareRef,
+    pub held: u32,
+}
+
+/// Self-timer payload (PR 8): both the read deadline (`EP_BUF_TIMEOUT`)
+/// and the backoff expiry (`EP_BUF_RETRY`) name the exact attempt they
+/// guard, so a timer that fires after its attempt completed (or was
+/// superseded) is a no-op — timers are best-effort by design.
+#[derive(Debug)]
+pub struct RetryTimerMsg {
+    pub slot: u32,
+    pub attempt: u32,
 }
 
 /// One resolved peer assignment: splinter slot `slot` of the requesting
@@ -212,13 +248,27 @@ pub struct BufStartedMsg {
     pub session: SessionId,
 }
 
-/// Ack to the director after dropping/parking session state.
+/// Ack to the director after dropping/parking session state. Since
+/// PR 8 the ack carries this chare's contribution to the session's
+/// [`super::session::SessionOutcome`] — the director sums the counters
+/// across the array and delivers the aggregate through the close
+/// callback.
 #[derive(Debug)]
 pub struct BufDroppedMsg {
     pub session: SessionId,
     /// Bytes this chare keeps resident (its span length when parking,
     /// 0 when dropping) — the span store's budget accounting.
     pub resident: u64,
+    /// Bytes of client fetches answered with data-bearing pieces.
+    pub served_bytes: u64,
+    /// Bytes of client fetches answered degraded (NACK or gave-up).
+    pub degraded_bytes: u64,
+    /// PFS read re-issues beyond each slot's first attempt.
+    pub retries: u64,
+    /// Hedged duplicate reads issued past their deadline.
+    pub hedges: u64,
+    /// Slots abandoned after the retry budget was exhausted.
+    pub gave_up: u64,
 }
 
 /// Lifecycle state of a buffer chare.
@@ -271,6 +321,29 @@ pub struct BufferChare {
     /// Issue times of in-flight governed PFS reads, keyed by slot — the
     /// observed service time reported with each returned ticket.
     issued_at: HashMap<u32, Time>,
+    /// Retry policy (PR 8): `Some` arms deadlines and the whole retry
+    /// machine below; `None` keeps the pre-PR 8 behavior bit for bit.
+    retry: Option<RetryPolicy>,
+    /// In-flight read *attempts* keyed by their wire `user` id
+    /// (`slot | attempt << 32`) → issue time. The ticket-accounting
+    /// invariant: an attempt's completion returns its ticket iff its
+    /// key is still here; a timeout-abandon removes the key and returns
+    /// the ticket itself. A ticket can therefore never return twice and
+    /// never leak, whatever order completions and timers land in.
+    live: HashMap<u64, Time>,
+    /// Highest attempt number issued per slot (1 = first read).
+    attempt: HashMap<u32, u32>,
+    /// Slots abandoned after the retry budget: resident as modeled
+    /// chunks, and every byte served from them counts as degraded.
+    degraded_slots: HashSet<u32>,
+    /// Deadline from the most recent grant (0 = arm no timer).
+    current_deadline: u64,
+    /// Session-outcome counters (PR 8), reported on the teardown ack.
+    n_served_bytes: u64,
+    n_degraded_bytes: u64,
+    n_retries: u64,
+    n_hedges: u64,
+    n_gave_up: u64,
     /// Send times of outstanding peer fetches, keyed by slot — the
     /// `ckio.latency.peer_fetch` histogram's request→data interval.
     peer_sent_at: HashMap<u32, Time>,
@@ -330,6 +403,16 @@ impl BufferChare {
             class: QosClass::default(),
             asked: 0,
             issued_at: HashMap::new(),
+            retry: None,
+            live: HashMap::new(),
+            attempt: HashMap::new(),
+            degraded_slots: HashSet::new(),
+            current_deadline: 0,
+            n_served_bytes: 0,
+            n_degraded_bytes: 0,
+            n_retries: 0,
+            n_hedges: 0,
+            n_gave_up: 0,
             peer_sent_at: HashMap::new(),
             peers_resolved: false,
             planned_covered: None,
@@ -366,6 +449,14 @@ impl BufferChare {
         self.governed = true;
         self.sess_bytes = sess_bytes;
         self.class = class;
+        self
+    }
+
+    /// Arm the retry machine (PR 8): reads issued by this chare carry
+    /// deadlines, time out, back off, retry, and eventually degrade
+    /// gracefully. Requires governed issuance (validated at boot).
+    pub fn with_retry(mut self, policy: RetryPolicy) -> BufferChare {
+        self.retry = Some(policy);
         self
     }
 
@@ -412,20 +503,195 @@ impl BufferChare {
         }
     }
 
+    /// The wire `user` id of one read attempt: slot in the low half,
+    /// attempt number in the high half. Attempt 0 is the retry-less
+    /// encoding (`user == slot`), kept so runs without a policy stay
+    /// bit-for-bit identical to PR 7.
+    fn attempt_key(slot: u32, attempt: u32) -> u64 {
+        u64::from(slot) | (u64::from(attempt) << 32)
+    }
+
+    /// Exponential backoff before re-entering admission: doubling from
+    /// the policy base, capped, plus a deterministic per-slot jitter so
+    /// a burst of same-deadline failures does not re-converge into a
+    /// synchronized retry storm. No RNG: replays stay exact.
+    fn backoff_ns(&self, slot: u32, attempt: u32) -> u64 {
+        let r = self.retry.as_ref().expect("backoff without a retry policy");
+        let exp = r.base_backoff_ns.checked_shl(attempt.saturating_sub(1)).unwrap_or(u64::MAX);
+        let spread = (r.base_backoff_ns / 2).max(1);
+        let jitter = (u64::from(slot).wrapping_mul(2_654_435_761) + u64::from(attempt)) % spread;
+        exp.min(r.max_backoff_ns) + jitter
+    }
+
+    /// Byte overlap of `[offset, offset+len)` with gave-up slots — the
+    /// degraded share of a served fetch.
+    fn degraded_overlap(&self, offset: u64, len: u64) -> u64 {
+        if self.degraded_slots.is_empty() {
+            return 0;
+        }
+        let mut d = 0;
+        for s in self.slots_for(offset, len) {
+            if self.degraded_slots.contains(&s) {
+                let (slo, slen) = self.slot_extent(s);
+                d += (offset + len).min(slo + slen) - offset.max(slo);
+            }
+        }
+        d
+    }
+
+    /// Retry budget exhausted: degrade the slot gracefully. A modeled
+    /// chunk takes the data's place so every queued and future fetch
+    /// still completes exactly once — just without verified bytes.
+    fn give_up(&mut self, ctx: &mut Ctx<'_>, slot: u32) {
+        if self.chunks[slot as usize].is_some() {
+            return; // a racing attempt delivered after all
+        }
+        let (offset, len) = self.slot_extent(slot);
+        self.degraded_slots.insert(slot);
+        self.n_gave_up += 1;
+        ctx.metrics().count(keys::RETRY_GAVE_UP, 1);
+        if ctx.trace().on(TraceCategory::Pfs) {
+            let now = ctx.now();
+            ctx.trace().instant(
+                now,
+                TraceCategory::Pfs,
+                trace_names::PFS_RETRY,
+                TraceLane::Pe(ctx.pe().0),
+                u64::from(slot),
+                len,
+                "gave_up",
+            );
+        }
+        self.slot_arrived(ctx, slot as usize, Chunk::modeled(offset, len));
+    }
+
+    /// Completion handling when a retry policy is armed (PR 8): decode
+    /// the attempt, settle its ticket exactly once, then route the
+    /// outcome — data lands, failures back off and re-enter admission,
+    /// exhausted budgets degrade gracefully.
+    fn read_done_with_retry(&mut self, ctx: &mut Ctx<'_>, r: IoResult) {
+        let slot = r.user as u32;
+        let Some(issued) = self.live.remove(&r.user) else {
+            // The attempt was abandoned (timeout) or bulk-reclaimed
+            // (teardown): its ticket already went back. Drop the data —
+            // a replacement attempt owns the slot now.
+            ctx.metrics().count(keys::RETRY_LATE, 1);
+            return;
+        };
+        self.pfs_inflight = self.pfs_inflight.saturating_sub(1);
+        let service_ns = ctx.now().saturating_sub(issued);
+        ctx.send(self.shard, EP_SHARD_IO_DONE, IoDoneMsg { n: 1, service_ns });
+        if self.state == BufState::Dropped {
+            return; // unreachable once teardown clears `live`; belt and braces
+        }
+        if r.outcome.is_ok() {
+            if self.chunks[slot as usize].is_none() {
+                self.slot_arrived(ctx, slot as usize, r.chunk);
+            }
+            // else: hedge loser — the winner already filled the slot.
+            self.pump(ctx);
+            return;
+        }
+        // Failed read (transient, persistent, or short): the modeled
+        // service time was still paid — an error is only discovered at
+        // completion, as on a real client. Decide whether to retry.
+        if self.chunks[slot as usize].is_some() || self.pfs_queue.contains(&slot) {
+            self.pump(ctx);
+            return; // a hedge won, or a re-issue is already queued
+        }
+        let attempt = (r.user >> 32) as u32;
+        let newest = self.attempt.get(&slot).copied().unwrap_or(attempt);
+        if attempt < newest {
+            self.pump(ctx);
+            return; // a newer attempt is in flight: it decides
+        }
+        let policy = self.retry.expect("retry completion without a policy");
+        if attempt >= policy.max_attempts {
+            self.give_up(ctx, slot);
+        } else {
+            let me = ctx.me();
+            ctx.send_after(
+                self.backoff_ns(slot, attempt),
+                me,
+                EP_BUF_RETRY,
+                RetryTimerMsg { slot, attempt },
+            );
+        }
+        self.pump(ctx);
+    }
+
+    /// Hand this session's outcome counters to a teardown ack (and zero
+    /// them: a parked chare's next session starts a fresh report).
+    fn take_outcome(&mut self) -> (u64, u64, u64, u64, u64) {
+        let out = (
+            self.n_served_bytes,
+            self.n_degraded_bytes,
+            self.n_retries,
+            self.n_hedges,
+            self.n_gave_up,
+        );
+        self.n_served_bytes = 0;
+        self.n_degraded_bytes = 0;
+        self.n_retries = 0;
+        self.n_hedges = 0;
+        self.n_gave_up = 0;
+        out
+    }
+
     /// Issue the next queued PFS slot read, if any.
     fn issue_next(&mut self, ctx: &mut Ctx<'_>) {
         let Some(slot) = self.pfs_queue.pop_front() else { return };
         let (offset, len) = self.slot_extent(slot);
         self.pfs_inflight += 1;
-        if self.governed {
+        let user = if self.retry.is_some() {
+            // A sibling attempt still live for this slot means this
+            // issue is the hedge; otherwise attempts beyond the first
+            // are retries. (Hedges were counted when enqueued.)
+            let is_hedge = self.live.keys().any(|&u| u as u32 == slot);
+            let attempt = self.attempt.entry(slot).and_modify(|a| *a += 1).or_insert(1);
+            let attempt = *attempt;
+            let user = Self::attempt_key(slot, attempt);
+            self.live.insert(user, ctx.now());
+            if attempt > 1 && !is_hedge {
+                self.n_retries += 1;
+                ctx.metrics().count(keys::RETRY_ATTEMPTS, 1);
+                if ctx.trace().on(TraceCategory::Pfs) {
+                    let now = ctx.now();
+                    ctx.trace().instant(
+                        now,
+                        TraceCategory::Pfs,
+                        trace_names::PFS_RETRY,
+                        TraceLane::Pe(ctx.pe().0),
+                        u64::from(slot),
+                        u64::from(attempt),
+                        "reissue",
+                    );
+                }
+            }
+            // Arm the deadline the grant promised for this read.
+            if self.current_deadline > 0 {
+                let me = ctx.me();
+                ctx.send_after(
+                    self.current_deadline,
+                    me,
+                    EP_BUF_TIMEOUT,
+                    RetryTimerMsg { slot, attempt },
+                );
+            }
+            user
+        } else {
+            u64::from(slot)
+        };
+        if self.governed && self.retry.is_none() {
             // Remember the issue time: the ticket return reports the
-            // observed service time to the adaptive governor.
+            // observed service time to the adaptive governor. (With a
+            // retry policy the `live` map plays this role per attempt.)
             self.issued_at.insert(slot, ctx.now());
         }
         ctx.metrics().count(keys::STORE_MISS, len);
         let me = ctx.me();
         ctx.submit_read(
-            ReadRequest { file: self.file, offset, len, user: slot as u64 },
+            ReadRequest { file: self.file, offset, len, user },
             Callback::to_chare(me, EP_BUF_DATA),
         );
     }
@@ -469,11 +735,19 @@ impl BufferChare {
 
     /// Answer a fetch from resident data: zero-copy send to the
     /// requesting PE's assembler.
-    fn serve(&self, ctx: &mut Ctx<'_>, f: &FetchMsg) {
+    fn serve(&mut self, ctx: &mut Ctx<'_>, f: &FetchMsg) {
         let chunk = self.extract(f.offset, f.len);
         let to = ChareRef::new(self.assemblers, f.reply_pe.0);
         let wire = chunk.len;
         ctx.metrics().count(keys::PIECES_SERVED, 1);
+        // Outcome accounting (PR 8): bytes overlapping gave-up slots
+        // ride a modeled chunk — degraded service, not a clean serve.
+        let degraded = self.degraded_overlap(f.offset, f.len);
+        self.n_served_bytes += f.len - degraded;
+        if degraded > 0 {
+            self.n_degraded_bytes += degraded;
+            ctx.metrics().count(keys::SESSION_DEGRADED, degraded);
+        }
         // Zero-copy: the runtime RDMA-gets the resident buffer; the chare
         // itself only touches descriptors.
         ctx.advance(MICROS / 2);
@@ -488,8 +762,12 @@ impl BufferChare {
 
     /// Answer a fetch that can no longer be served with data (teardown):
     /// a modeled NACK chunk so the assembly still completes exactly once.
-    fn serve_nack(&self, ctx: &mut Ctx<'_>, f: &FetchMsg) {
+    fn serve_nack(&mut self, ctx: &mut Ctx<'_>, f: &FetchMsg) {
         ctx.metrics().count(keys::PIECES_NACKED, 1);
+        // NACKed bytes are degraded service (PR 8): the assembly
+        // completes, but without verified data.
+        self.n_degraded_bytes += f.len;
+        ctx.metrics().count(keys::SESSION_DEGRADED, f.len);
         let to = ChareRef::new(self.assemblers, f.reply_pe.0);
         ctx.send(
             to,
@@ -652,12 +930,17 @@ pub fn protocol_spec() -> ProtocolSpec {
             ep_spec!(EP_BUF_PEER_DATA, PayloadKind::of::<PeerDataMsg>()),
             ep_spec!(EP_BUF_GRANT, PayloadKind::of::<GrantMsg>()),
             ep_spec!(EP_BUF_PEERS, PayloadKind::of::<PeersMsg>()),
+            ep_spec!(EP_BUF_TIMEOUT, PayloadKind::of::<RetryTimerMsg>()),
+            ep_spec!(EP_BUF_RETRY, PayloadKind::of::<RetryTimerMsg>()),
         ],
         sends: vec![
             send_spec!("DataShard", EP_SHARD_REGISTER, PayloadKind::of::<RegisterMsg>()),
             send_spec!("DataShard", EP_SHARD_UNCLAIM, PayloadKind::of::<UnclaimMsg>()),
             send_spec!("DataShard", EP_SHARD_IO_REQ, PayloadKind::of::<IoReqMsg>()),
             send_spec!("DataShard", EP_SHARD_IO_DONE, PayloadKind::of::<IoDoneMsg>()),
+            send_spec!("DataShard", EP_SHARD_IO_RECLAIM, PayloadKind::of::<ReclaimMsg>()),
+            send_spec!("BufferChare", EP_BUF_TIMEOUT, PayloadKind::of::<RetryTimerMsg>()),
+            send_spec!("BufferChare", EP_BUF_RETRY, PayloadKind::of::<RetryTimerMsg>()),
             send_spec!("ReadAssembler", EP_A_PIECE, PayloadKind::of::<PieceMsg>()),
             send_spec!("BufferChare", EP_BUF_PEER_FETCH, PayloadKind::of::<PeerFetchMsg>()),
             send_spec!("BufferChare", EP_BUF_PEER_DATA, PayloadKind::of::<PeerDataMsg>()),
@@ -739,23 +1022,54 @@ impl Chare for BufferChare {
             }
             EP_BUF_DATA => {
                 let r: IoResult = msg.take();
+                if self.retry.is_some() {
+                    self.read_done_with_retry(ctx, r);
+                    return;
+                }
                 // Governor bookkeeping happens even for late completions
-                // of dropped chares — tickets must always return (with
-                // the observed service time: the AIMD signal).
+                // of dropped chares — tickets must return (with the
+                // observed service time: the AIMD signal). A *dropped*
+                // chare's in-flight tickets were already bulk-reclaimed
+                // at teardown (EP_SHARD_IO_RECLAIM), so only completions
+                // still tracked in `issued_at` return one here.
                 self.pfs_inflight = self.pfs_inflight.saturating_sub(1);
                 if self.governed {
-                    let service_ns = self
-                        .issued_at
-                        .remove(&(r.user as u32))
-                        .map_or(0, |t| ctx.now().saturating_sub(t));
-                    ctx.send(self.shard, EP_SHARD_IO_DONE, IoDoneMsg { n: 1, service_ns });
+                    match self.issued_at.remove(&(r.user as u32)) {
+                        Some(t) => {
+                            let service_ns = ctx.now().saturating_sub(t);
+                            ctx.send(self.shard, EP_SHARD_IO_DONE, IoDoneMsg {
+                                n: 1,
+                                service_ns,
+                            });
+                        }
+                        None if self.state == BufState::Dropped => {} // reclaimed at drop
+                        None => {
+                            ctx.send(self.shard, EP_SHARD_IO_DONE, IoDoneMsg {
+                                n: 1,
+                                service_ns: 0,
+                            });
+                        }
+                    }
                 }
                 if self.state == BufState::Dropped {
                     return; // late completion after teardown
                 }
+                let slot = r.user as u32;
+                let chunk = if r.outcome.is_ok() {
+                    r.chunk
+                } else {
+                    // A fault with no retry policy degrades immediately:
+                    // a modeled chunk takes the extent's place so every
+                    // fetch still completes exactly once.
+                    let (o, l) = self.slot_extent(slot);
+                    self.degraded_slots.insert(slot);
+                    self.n_gave_up += 1;
+                    ctx.metrics().count(keys::RETRY_GAVE_UP, 1);
+                    Chunk::modeled(o, l)
+                };
                 // Active or Parked: keep filling (a parked buffer keeps
                 // warming its cache for the next rebind or peer fetch).
-                self.slot_arrived(ctx, r.user as usize, r.chunk);
+                self.slot_arrived(ctx, slot as usize, chunk);
                 self.pump(ctx);
             }
             EP_BUF_PEER_DATA => {
@@ -812,6 +1126,10 @@ impl Chare for BufferChare {
             EP_BUF_GRANT => {
                 let g: GrantMsg = msg.take();
                 self.asked = self.asked.saturating_sub(g.n);
+                // The grant's deadline governs the reads it admits (and
+                // stays current for any direct re-issues): the governor's
+                // live view of how long a healthy read should take.
+                self.current_deadline = g.deadline_ns;
                 if self.state == BufState::Dropped {
                     // Too late to read: return the tickets untouched.
                     ctx.send(self.shard, EP_SHARD_IO_DONE, IoDoneMsg { n: g.n, service_ns: 0 });
@@ -875,10 +1193,83 @@ impl Chare for BufferChare {
                     self.peer_pending.push(f);
                 }
             }
+            EP_BUF_TIMEOUT => {
+                let m: RetryTimerMsg = msg.take();
+                if self.state == BufState::Dropped {
+                    return;
+                }
+                let Some(policy) = self.retry else { return };
+                let user = Self::attempt_key(m.slot, m.attempt);
+                if !self.live.contains_key(&user) {
+                    return; // the attempt completed or was abandoned already
+                }
+                ctx.metrics().count(keys::RETRY_TIMEOUTS, 1);
+                if policy.hedge {
+                    // Hedged read: keep the overdue attempt live (its
+                    // data may still win) and race a duplicate against
+                    // it, charged against the same admission cap.
+                    let newest = self.attempt.get(&m.slot).copied().unwrap_or(1);
+                    if newest >= policy.max_attempts
+                        || self.chunks[m.slot as usize].is_some()
+                        || self.pfs_queue.contains(&m.slot)
+                    {
+                        return;
+                    }
+                    self.n_hedges += 1;
+                    ctx.metrics().count(keys::RETRY_HEDGES, 1);
+                    if ctx.trace().on(TraceCategory::Pfs) {
+                        let now = ctx.now();
+                        ctx.trace().instant(
+                            now,
+                            TraceCategory::Pfs,
+                            trace_names::PFS_HEDGE,
+                            TraceLane::Pe(ctx.pe().0),
+                            u64::from(m.slot),
+                            u64::from(m.attempt),
+                            "hedge",
+                        );
+                    }
+                    self.pfs_queue.push_back(m.slot);
+                    self.pump(ctx);
+                } else {
+                    // Abandon: the ticket returns *now* (service 0 — an
+                    // abandoned read must not feed the AIMD window), the
+                    // slot re-enters admission after a backoff, and the
+                    // eventual late completion finds its key gone.
+                    self.live.remove(&user);
+                    self.pfs_inflight = self.pfs_inflight.saturating_sub(1);
+                    ctx.send(self.shard, EP_SHARD_IO_DONE, IoDoneMsg { n: 1, service_ns: 0 });
+                    if m.attempt >= policy.max_attempts {
+                        self.give_up(ctx, m.slot);
+                    } else {
+                        let me = ctx.me();
+                        ctx.send_after(
+                            self.backoff_ns(m.slot, m.attempt),
+                            me,
+                            EP_BUF_RETRY,
+                            RetryTimerMsg { slot: m.slot, attempt: m.attempt },
+                        );
+                    }
+                    self.pump(ctx);
+                }
+            }
+            EP_BUF_RETRY => {
+                let m: RetryTimerMsg = msg.take();
+                if self.state == BufState::Dropped {
+                    return;
+                }
+                if self.chunks[m.slot as usize].is_some() || self.pfs_queue.contains(&m.slot) {
+                    return; // data landed (or a re-issue queued) meanwhile
+                }
+                self.pfs_queue.push_back(m.slot);
+                self.pump(ctx);
+            }
             EP_BUF_DROP => {
                 self.drain_pending(ctx);
                 self.chunks.iter_mut().for_each(|c| *c = None);
                 self.peer_sent_at.clear();
+                self.degraded_slots.clear();
+                self.attempt.clear();
                 let was_active = self.state != BufState::Dropped;
                 self.state = BufState::Dropped;
                 ctx.advance(MICROS / 2);
@@ -894,9 +1285,33 @@ impl Chare for BufferChare {
                         owner: me,
                     });
                 }
+                // Owner-death reclaim (PR 8): tickets backing reads this
+                // chare will now ignore, plus any demand still queued in
+                // the governor, go back in one message — the AIMD cap
+                // can never leak to a torn-down owner. Late completions
+                // find their keys cleared and return nothing.
+                if was_active && self.governed {
+                    let held = if self.retry.is_some() {
+                        self.live.len()
+                    } else {
+                        self.issued_at.len()
+                    } as u32;
+                    let me = ctx.me();
+                    ctx.send(self.shard, EP_SHARD_IO_RECLAIM, ReclaimMsg { owner: me, held });
+                    self.live.clear();
+                    self.issued_at.clear();
+                    self.asked = 0;
+                }
+                let (served_bytes, degraded_bytes, retries, hedges, gave_up) =
+                    self.take_outcome();
                 ctx.send(self.director, super::director::EP_DIR_DROP_ACK, BufDroppedMsg {
                     session: self.session,
                     resident: 0,
+                    served_bytes,
+                    degraded_bytes,
+                    retries,
+                    hedges,
+                    gave_up,
                 });
             }
             EP_BUF_PARK => {
@@ -905,11 +1320,18 @@ impl Chare for BufferChare {
                 self.drain_client_fetches(ctx);
                 self.state = BufState::Parked;
                 ctx.advance(MICROS / 2);
+                let (served_bytes, degraded_bytes, retries, hedges, gave_up) =
+                    self.take_outcome();
                 ctx.send(self.director, super::director::EP_DIR_DROP_ACK, BufDroppedMsg {
                     session: self.session,
                     // The span store accounts the *eventual* residency:
                     // in-flight greedy reads keep landing while parked.
                     resident: self.my_len,
+                    served_bytes,
+                    degraded_bytes,
+                    retries,
+                    hedges,
+                    gave_up,
                 });
             }
             EP_BUF_REBIND => {
@@ -1060,6 +1482,52 @@ mod tests {
         let b = mk(Some(30)).planned(60);
         assert_eq!(b.planned_covered, Some(60));
         assert!(!b.peers_resolved, "a plan does not replace registration");
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_caps_and_is_deterministic() {
+        let b = mk(Some(30)).with_retry(RetryPolicy::default());
+        let p = RetryPolicy::default();
+        let spread = p.base_backoff_ns / 2;
+        for attempt in 1..=6u32 {
+            let got = b.backoff_ns(7, attempt);
+            let exp = (p.base_backoff_ns << (attempt - 1)).min(p.max_backoff_ns);
+            let jitter = (7u64.wrapping_mul(2_654_435_761) + u64::from(attempt)) % spread;
+            assert_eq!(got, exp + jitter, "attempt {attempt}");
+            assert_eq!(got, b.backoff_ns(7, attempt), "no RNG: replays must agree");
+        }
+    }
+
+    #[test]
+    fn degraded_overlap_counts_only_gave_up_slots() {
+        let mut b = mk(Some(30));
+        assert_eq!(b.degraded_overlap(1000, 100), 0);
+        b.degraded_slots.insert(1); // slot 1 = [1030, 1060)
+        assert_eq!(b.degraded_overlap(1000, 100), 30);
+        assert_eq!(b.degraded_overlap(1040, 10), 10);
+        assert_eq!(b.degraded_overlap(1000, 30), 0);
+        assert_eq!(b.degraded_overlap(1025, 10), 5);
+    }
+
+    #[test]
+    fn attempt_keys_never_collide_across_slots_or_attempts() {
+        assert_eq!(BufferChare::attempt_key(3, 1), 3 | (1 << 32));
+        assert_ne!(BufferChare::attempt_key(3, 1), BufferChare::attempt_key(3, 2));
+        assert_ne!(BufferChare::attempt_key(3, 1), BufferChare::attempt_key(4, 1));
+        // The retry-less encoding (attempt 0) is the bare slot.
+        assert_eq!(BufferChare::attempt_key(5, 0), 5);
+    }
+
+    #[test]
+    fn take_outcome_hands_off_and_resets() {
+        let mut b = mk(None);
+        b.n_served_bytes = 10;
+        b.n_degraded_bytes = 5;
+        b.n_retries = 2;
+        b.n_hedges = 1;
+        b.n_gave_up = 3;
+        assert_eq!(b.take_outcome(), (10, 5, 2, 1, 3));
+        assert_eq!(b.take_outcome(), (0, 0, 0, 0, 0), "a fresh session starts clean");
     }
 
     #[test]

@@ -96,8 +96,8 @@ use super::manager::{
     FileOpenedMsg, SessionAnnounceMsg, EP_M_FILE_CLOSE, EP_M_FILE_OPENED, EP_M_SESSION_ANNOUNCE,
     EP_M_SESSION_DROP,
 };
-use super::options::{FileOptions, OpenError, ReaderPlacement, SessionOptions};
-use super::session::{buffer_span_of, FileHandle, Session, SessionId};
+use super::options::{FileOptions, OpenError, ReaderPlacement, RetryPolicy, SessionOptions};
+use super::session::{buffer_span_of, FileHandle, Session, SessionId, SessionOutcome};
 use super::shard::{
     shard_of, ParkMsg, PlanMsg, TakeMsg, EP_SHARD_ADMIT, EP_SHARD_PARK, EP_SHARD_PLAN,
     EP_SHARD_PURGE, EP_SHARD_TAKE,
@@ -225,6 +225,10 @@ struct CloseState {
     /// Resident bytes reported by the parking buffers' acks (the span
     /// store's budget accounting for the published array).
     parked_bytes: u64,
+    /// Aggregated session outcome (PR 8): each buffer's teardown ack
+    /// contributes its served/degraded/retry counters; the sum rides
+    /// the close callback. Manager acks contribute zeros.
+    outcome: SessionOutcome,
 }
 
 /// A `reuse_buffers` session start awaiting its shard's rebind probe.
@@ -268,6 +272,9 @@ pub struct Director {
     /// (`ServiceConfig::governed()`): every session's buffers then run
     /// the shard ticket protocol.
     governed: bool,
+    /// Service-wide retry policy (PR 8): every fresh buffer array is
+    /// armed with it at creation. `None` = no deadlines, no retries.
+    retry: Option<RetryPolicy>,
     npes: u32,
     /// Opens awaiting MDS completion, FIFO (the MDS completes in order).
     mds_queue: VecDeque<FileId>,
@@ -296,6 +303,7 @@ pub struct Director {
 }
 
 impl Director {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         managers: CollectionId,
         assemblers: CollectionId,
@@ -303,6 +311,7 @@ impl Director {
         nshards: u32,
         active_shards: u32,
         governed: bool,
+        retry: Option<RetryPolicy>,
         npes: u32,
     ) -> Director {
         Director {
@@ -312,6 +321,7 @@ impl Director {
             nshards,
             active_shards: active_shards.clamp(1, nshards.max(1)),
             governed,
+            retry,
             npes,
             mds_queue: VecDeque::new(),
             opens: HashMap::new(),
@@ -367,12 +377,17 @@ impl Director {
         }
     }
 
-    fn ack_close(&mut self, ctx: &mut Ctx<'_>, sid: SessionId, resident: u64) {
+    fn ack_close(&mut self, ctx: &mut Ctx<'_>, sid: SessionId, resident: u64, d: SessionOutcome) {
         // Acks may also come from cache-evicted parked buffers whose
         // original close completed long ago: ignore those.
         let Some(st) = self.closes.get_mut(&sid) else { return };
         st.acks += 1;
         st.parked_bytes += resident;
+        st.outcome.served_bytes += d.served_bytes;
+        st.outcome.degraded_bytes += d.degraded_bytes;
+        st.outcome.retries += d.retries;
+        st.outcome.hedges += d.hedges;
+        st.outcome.gave_up_spans += d.gave_up_spans;
         if st.acks == st.need {
             let st = self.closes.remove(&sid).unwrap();
             if let Some(ss) = self.sessions.remove(&sid) {
@@ -419,8 +434,12 @@ impl Director {
                     self.drop_array(ctx, buffers, nbuf);
                 }
             }
+            // Every close callback receives the aggregated outcome
+            // (PR 8): who got served, who degraded, and what the retry
+            // plane spent getting there.
+            let outcome = SessionOutcome { session: sid, ..st.outcome };
             for after in st.afters {
-                ctx.fire(after, Payload::empty());
+                ctx.fire(after, Payload::new(outcome));
             }
         }
     }
@@ -646,11 +665,15 @@ impl Director {
         let spans: Vec<(u64, u64)> =
             (0..nreaders).map(|b| buffer_span_of(offset, bytes, nreaders, b)).collect();
         let governed = self.governed;
+        let retry = self.retry;
         let buffers = ctx.create_array_now(nreaders, &placement, |i| {
             let (o, l) = spans[i as usize];
             let mut b = BufferChare::new(sid, file, o, l, splinter, window, me, shard, assemblers);
             if governed {
                 b = b.governed(bytes, class);
+            }
+            if let Some(r) = retry {
+                b = b.with_retry(r);
             }
             if let Some(slots) = &plan {
                 if let Some(src) = slots[i as usize] {
@@ -997,9 +1020,14 @@ impl Chare for Director {
                     return;
                 }
                 let Some(st) = self.sessions.get(&m.session) else {
-                    // Already fully closed (idempotent close): ack now.
+                    // Already fully closed (idempotent close): ack now,
+                    // with an all-zero outcome — the first close carried
+                    // the real one.
                     ctx.metrics().count(keys::DOUBLE_CLOSE, 1);
-                    ctx.fire(m.after, Payload::empty());
+                    ctx.fire(
+                        m.after,
+                        Payload::new(SessionOutcome { session: m.session, ..Default::default() }),
+                    );
                     return;
                 };
                 let nbuf = st.session.num_buffers;
@@ -1047,6 +1075,7 @@ impl Chare for Director {
                     need: nbuf + self.npes,
                     park,
                     parked_bytes: 0,
+                    outcome: SessionOutcome::default(),
                 });
                 if ctx.trace().on(TraceCategory::Session) {
                     let now = ctx.now();
@@ -1065,11 +1094,19 @@ impl Chare for Director {
             }
             EP_DIR_DROP_ACK => {
                 let m: BufDroppedMsg = msg.take();
-                self.ack_close(ctx, m.session, m.resident);
+                let delta = SessionOutcome {
+                    session: m.session,
+                    served_bytes: m.served_bytes,
+                    degraded_bytes: m.degraded_bytes,
+                    retries: m.retries,
+                    hedges: m.hedges,
+                    gave_up_spans: m.gave_up,
+                };
+                self.ack_close(ctx, m.session, m.resident, delta);
             }
             EP_DIR_DROP_ACK_MGR => {
                 let sid: SessionId = msg.take();
-                self.ack_close(ctx, sid, 0);
+                self.ack_close(ctx, sid, 0, SessionOutcome::default());
             }
             EP_DIR_CLOSE_FILE => {
                 let m: CloseFileMsg = msg.take();
@@ -1101,6 +1138,7 @@ impl Chare for Director {
                     need: self.npes,
                     park: None,
                     parked_bytes: 0,
+                    outcome: SessionOutcome::default(),
                 });
                 ctx.advance(MICROS);
             }

@@ -416,6 +416,47 @@ impl Governor {
         self.drain(now)
     }
 
+    /// Deadline for an admitted read, from the AIMD loop's observed
+    /// service baseline: `mult ×` the best window p50 seen so far, or
+    /// `default_ns` before any observation (and always at least
+    /// `default_ns / 8` so a very fast baseline cannot produce a
+    /// deadline that fires on healthy reads). The shard stamps this on
+    /// every grant it delivers (PR 8).
+    pub fn deadline_ns(&self, mult: u32, default_ns: u64) -> u64 {
+        if self.best_p50 == f64::MAX {
+            return default_ns;
+        }
+        let d = (self.best_p50 * mult as f64) as u64;
+        d.max(default_ns / 8)
+    }
+
+    /// Reclaim every ticket and queue entry owned by a torn-down buffer
+    /// chare (PR 8 satellite: the owner-death path). `held` is the count
+    /// of tickets the owner held against in-flight reads whose
+    /// completions will never return them — without this, a buffer
+    /// dropped mid-flight would inflate `inflight` forever (and under
+    /// AIMD the cap would starve against phantom occupancy). Queued
+    /// demand from the owner is removed outright. Returns the number of
+    /// queue entries removed plus the grants the freed tickets unblock
+    /// (which the shard must still deliver to live owners).
+    pub fn reclaim(&mut self, owner: ChareRef, held: u32, now: Time) -> (u32, Vec<Grant>) {
+        if self.cap.is_none() {
+            return (0, Vec::new());
+        }
+        let mut removed = 0u32;
+        for q in &mut self.queues {
+            let before = q.len();
+            q.retain(|p| p.owner != owner);
+            removed += (before - q.len()) as u32;
+        }
+        self.inflight = self.inflight.saturating_sub(held);
+        // Freed capacity admits queued demand from surviving owners;
+        // reclaimed reads carry no service signal (the window never
+        // sees them), so the AIMD baseline stays clean.
+        let grants = self.drain(now);
+        (removed, grants)
+    }
+
     /// The class the next grant comes from, honoring the policy. `None`
     /// when every queue is empty. For the weighted policies this
     /// advances the WDRR rotation, refilling deficits as it passes
@@ -769,6 +810,69 @@ mod tests {
         assert_eq!(a.last_adapt_cause(), Some(AdaptCause::P50Inflation));
         assert_eq!(AdaptCause::GrowthProbe.label(), "growth_probe");
         assert_eq!(AdaptCause::P50Inflation.label(), "p50_inflation");
+    }
+
+    /// PR 8 satellite regression: a buffer torn down mid-flight must
+    /// have its tickets reclaimed — before the owner-death path existed,
+    /// the leaked `inflight` occupancy throttled every later session
+    /// (and under AIMD the cap starved against phantom reads forever).
+    #[test]
+    fn reclaim_returns_held_tickets_and_removes_queued_demand() {
+        let mut g = Governor::new();
+        g.configure(Some(2), AdmissionPolicy::Fifo, false);
+        assert_eq!(g.request(buf(0), 2, 100, BULK, 0), 2); // holds both tickets
+        assert_eq!(g.request(buf(1), 1, 100, BULK, 0), 0); // queues
+        assert_eq!(g.request(buf(0), 3, 100, BULK, 0), 0); // dead owner's queued demand
+        assert_eq!(g.queued(), 2);
+
+        // buf(0) dies holding 2 in-flight tickets and 3 queued wants.
+        let (removed, grants) = g.reclaim(buf(0), 2, 1_000);
+        assert_eq!(removed, 1, "one queue entry belonged to the dead owner");
+        // Freed capacity immediately admits the survivor's demand.
+        assert_eq!(grants.len(), 1);
+        assert_eq!(grants[0].owner, buf(1));
+        assert_eq!(grants[0].n, 1);
+        assert_eq!(g.inflight(), 1, "only the survivor's read remains");
+        assert_eq!(g.queued(), 0);
+        // The survivor completes: everything drains to zero.
+        assert!(g.complete(1, 0, 2_000).is_empty());
+        assert_eq!(g.inflight(), 0);
+    }
+
+    /// Reclaimed reads never feed the AIMD window: the cap must not
+    /// adapt on phantom service times.
+    #[test]
+    fn reclaim_does_not_pollute_the_aimd_window() {
+        let mut g = Governor::new();
+        g.configure(None, AdmissionPolicy::Fifo, true);
+        let cap0 = g.cap().unwrap();
+        assert_eq!(g.request(buf(0), cap0, 100, BULK, 0), cap0);
+        for _ in 0..10 * Governor::ADAPT_WINDOW {
+            g.reclaim(buf(0), 0, 0);
+        }
+        assert_eq!(g.cap(), Some(cap0), "reclaims carry no service signal");
+        let (_, _) = g.reclaim(buf(0), cap0, 0);
+        assert_eq!(g.inflight(), 0);
+    }
+
+    /// The deadline tracks the observed service baseline: default before
+    /// any window, `mult × best_p50` after, floored against collapse.
+    #[test]
+    fn deadline_follows_observed_service_times() {
+        let mut g = Governor::new();
+        g.configure(None, AdmissionPolicy::Fifo, true);
+        assert_eq!(g.deadline_ns(8, 200_000_000), 200_000_000, "no observation yet");
+        for _ in 0..Governor::ADAPT_WINDOW {
+            g.complete(0, 2_000_000, 0); // 2ms p50 window
+        }
+        assert_eq!(g.deadline_ns(8, 8_000_000), 16_000_000);
+        // A sub-microsecond baseline still yields a usable deadline.
+        let mut fast = Governor::new();
+        fast.configure(None, AdmissionPolicy::Fifo, true);
+        for _ in 0..Governor::ADAPT_WINDOW {
+            fast.complete(0, 10, 0);
+        }
+        assert_eq!(fast.deadline_ns(8, 8_000_000), 1_000_000, "default/8 floor holds");
     }
 
     #[test]

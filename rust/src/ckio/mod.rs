@@ -183,9 +183,9 @@ pub mod store;
 pub use api::CkIo;
 pub use governor::{AdmissionPolicy, QosClass};
 pub use options::{
-    ConfigError, FileOptions, OpenError, ReaderPlacement, ServiceConfig, SessionOptions,
-    TraceConfig,
+    ConfigError, FileOptions, OpenError, ReaderPlacement, RetryPolicy, ServiceConfig,
+    SessionOptions, TraceConfig,
 };
-pub use session::{FileHandle, ReadResult, Session, SessionId, Tag};
+pub use session::{FileHandle, ReadResult, Session, SessionId, SessionOutcome, Tag};
 pub use shard::DataShard;
 pub use store::SpanStore;

@@ -120,6 +120,13 @@ pub enum ConfigError {
     ZeroCap,
     /// `data_plane_shards: Some(0)` — there is no shard to route to.
     ZeroShards,
+    /// A [`RetryPolicy`] with `max_attempts: 0` — no read could ever be
+    /// issued, so no session could ever complete.
+    ZeroAttempts,
+    /// A [`RetryPolicy`] on an ungoverned service: deadlines and retry
+    /// tickets ride the shard admission path, which only exists when a
+    /// static or adaptive cap is configured.
+    RetryWithoutAdmission,
 }
 
 impl std::fmt::Display for ConfigError {
@@ -129,7 +136,65 @@ impl std::fmt::Display for ConfigError {
                 write!(f, "max_inflight_reads must be >= 1 (a zero cap can never drain)")
             }
             ConfigError::ZeroShards => write!(f, "data_plane_shards must be >= 1"),
+            ConfigError::ZeroAttempts => {
+                write!(f, "retry.max_attempts must be >= 1 (the first attempt counts)")
+            }
+            ConfigError::RetryWithoutAdmission => write!(
+                f,
+                "retry requires admission control (set max_inflight_reads or adaptive_admission)"
+            ),
         }
+    }
+}
+
+/// Reliability policy for admitted PFS reads (PR 8). When set on
+/// [`ServiceConfig::retry`], every governed read carries a deadline; a
+/// read that misses it (or completes with a transient error / short
+/// read) releases its admission ticket, backs off exponentially with
+/// deterministic jitter, and re-enters admission — up to `max_attempts`
+/// total attempts, after which the span degrades gracefully (served as
+/// a NACK, counted in `ckio.session.degraded_bytes`, reported through
+/// the session's [`super::session::SessionOutcome`]). All fields are
+/// plain integers so the policy is `Eq` and participates in config
+/// comparison like every other scope.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts per splinter, counting the first (>= 1).
+    pub max_attempts: u32,
+    /// Backoff before attempt n+1 is `base_backoff_ns << (n-1)`, clamped
+    /// to `max_backoff_ns`, plus deterministic jitter in
+    /// `[0, base_backoff_ns / 2)`.
+    pub base_backoff_ns: u64,
+    pub max_backoff_ns: u64,
+    /// Deadline = `deadline_mult ×` the governor's best observed p50
+    /// read service time (its AIMD window); before any observation the
+    /// deadline is `default_deadline_ns`.
+    pub deadline_mult: u32,
+    pub default_deadline_ns: u64,
+    /// Hedge instead of abandoning on the *first* timeout: keep the slow
+    /// read running and race a duplicate through admission (charged
+    /// against the same cap); first completion wins, the loser's ticket
+    /// is returned on arrival.
+    pub hedge: bool,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff_ns: 500_000,      // 0.5 ms
+            max_backoff_ns: 8_000_000,     // 8 ms
+            deadline_mult: 8,
+            default_deadline_ns: 200_000_000, // 200 ms before any observation
+            hedge: false,
+        }
+    }
+}
+
+impl RetryPolicy {
+    pub fn with_hedging(mut self) -> Self {
+        self.hedge = true;
+        self
     }
 }
 
@@ -237,6 +302,12 @@ pub struct ServiceConfig {
     /// disabled the hot path is a single branch and no event is ever
     /// allocated. See [`TraceConfig`].
     pub trace: TraceConfig,
+    /// Reliability policy (PR 8): deadlines, retry with backoff, and
+    /// optional hedging for admitted PFS reads. `None` (the default)
+    /// keeps the pre-PR 8 behavior bit-for-bit: no timers are armed and
+    /// a faulted read degrades immediately instead of retrying.
+    /// Requires admission control ([`ServiceConfig::governed`]).
+    pub retry: Option<RetryPolicy>,
 }
 
 impl ServiceConfig {
@@ -256,6 +327,14 @@ impl ServiceConfig {
         }
         if self.data_plane_shards == Some(0) {
             return Err(ConfigError::ZeroShards);
+        }
+        if let Some(r) = &self.retry {
+            if r.max_attempts == 0 {
+                return Err(ConfigError::ZeroAttempts);
+            }
+            if !self.governed() {
+                return Err(ConfigError::RetryWithoutAdmission);
+            }
         }
         Ok(())
     }
@@ -528,6 +607,38 @@ mod tests {
         assert!(governed.governed());
         let adaptive = ServiceConfig { adaptive_admission: true, ..Default::default() };
         assert!(adaptive.governed());
+    }
+
+    /// PR 8: retry policies are validated where the configuration is
+    /// made — zero attempts and retry-without-admission are structured
+    /// errors, not latent hangs.
+    #[test]
+    fn service_config_validates_retry_policy() {
+        let ok = ServiceConfig {
+            max_inflight_reads: Some(4),
+            retry: Some(RetryPolicy::default()),
+            ..Default::default()
+        };
+        assert_eq!(ok.validate(), Ok(()));
+
+        let zero = ServiceConfig {
+            max_inflight_reads: Some(4),
+            retry: Some(RetryPolicy { max_attempts: 0, ..Default::default() }),
+            ..Default::default()
+        };
+        assert_eq!(zero.validate(), Err(ConfigError::ZeroAttempts));
+
+        let ungoverned =
+            ServiceConfig { retry: Some(RetryPolicy::default()), ..Default::default() };
+        assert_eq!(ungoverned.validate(), Err(ConfigError::RetryWithoutAdmission));
+
+        let adaptive = ServiceConfig {
+            adaptive_admission: true,
+            retry: Some(RetryPolicy::default().with_hedging()),
+            ..Default::default()
+        };
+        assert_eq!(adaptive.validate(), Ok(()));
+        assert!(adaptive.retry.unwrap().hedge);
     }
 
     #[test]

@@ -7,7 +7,7 @@ use crate::util::bytes::{ceil_div, Chunk};
 use super::options::FileOptions;
 
 /// Identifies a read session.
-#[derive(Copy, Clone, Eq, PartialEq, Ord, PartialOrd, Hash, Debug)]
+#[derive(Copy, Clone, Default, Eq, PartialEq, Ord, PartialOrd, Hash, Debug)]
 pub struct SessionId(pub u32);
 
 /// Zero-copy transfer tag: the wire identity of one client read.
@@ -145,6 +145,42 @@ pub fn buffer_span_of(offset: u64, bytes: u64, num_buffers: u32, b: u32) -> (u64
     let lo = (offset + b as u64 * span).min(end);
     let hi = (lo + span).min(end);
     (lo, hi - lo)
+}
+
+/// Delivered to the client's `closeReadSession` callback (PR 8): the
+/// session's structured service report. PR 1–7 completed a close with an
+/// empty signal, which made a session served entirely from NACK-degraded
+/// assemblies indistinguishable from a clean one. Under fault injection
+/// that distinction is the whole point: the outcome says how many bytes
+/// were served with real data, how many degraded to modeled chunks
+/// (NACKs and gave-up retry spans), and how hard the reliability plane
+/// had to work (retries, hedges, give-ups) to get there.
+///
+/// Aggregated by the director from the per-buffer counters riding each
+/// teardown ack ([`super::buffer::BufDroppedMsg`]); idempotent re-closes
+/// deliver an all-zero outcome (the first close carried the real one).
+#[derive(Copy, Clone, Debug, Default)]
+pub struct SessionOutcome {
+    pub session: SessionId,
+    /// Bytes of client reads answered with data-bearing pieces.
+    pub served_bytes: u64,
+    /// Bytes of client reads answered with modeled (NACK / gave-up)
+    /// pieces — the assembly completed, but carried no verified data.
+    pub degraded_bytes: u64,
+    /// PFS read re-issues (attempts beyond each extent's first).
+    pub retries: u64,
+    /// Hedged duplicate reads issued past their deadline.
+    pub hedges: u64,
+    /// Splinter slots abandoned after the retry budget was exhausted.
+    pub gave_up_spans: u64,
+}
+
+impl SessionOutcome {
+    /// Fully served, nothing degraded, no give-ups (retries/hedges may
+    /// have happened along the way — they are effort, not failure).
+    pub fn is_clean(&self) -> bool {
+        self.degraded_bytes == 0 && self.gave_up_spans == 0
+    }
 }
 
 /// Delivered to the client's `after_read` callback.

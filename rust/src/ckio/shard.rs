@@ -101,11 +101,12 @@ use crate::trace::{names as trace_names, Lane as TraceLane, TraceCategory};
 use crate::{ep_spec, send_spec};
 
 use super::buffer::{
-    GrantMsg, IoDoneMsg, IoReqMsg, PeerSlot, PeersMsg, EP_BUF_DROP, EP_BUF_GRANT, EP_BUF_PEERS,
+    GrantMsg, IoDoneMsg, IoReqMsg, PeerSlot, PeersMsg, ReclaimMsg, EP_BUF_DROP, EP_BUF_GRANT,
+    EP_BUF_PEERS,
 };
 use super::director::{PlanReplyMsg, TakeReplyMsg, EP_DIR_PLAN_REPLY, EP_DIR_TAKE_REPLY};
 use super::governor::{Governor, QosClass, NUM_CLASSES};
-use super::options::ServiceConfig;
+use super::options::{RetryPolicy, ServiceConfig};
 use super::store::{slot_extents, BufKey, Evicted, SpanStore};
 
 /// Buffer chare: register a span claim and resolve peer sources.
@@ -118,6 +119,12 @@ pub const EP_SHARD_TAKE: Ep = 3;
 pub const EP_SHARD_PARK: Ep = 4;
 /// Director: a file finally closed — release its claims/parked arrays.
 pub const EP_SHARD_PURGE: Ep = 5;
+/// Buffer chare: an owner died/dropped — reclaim its held tickets and
+/// queued demand (PR 8). Without this, a buffer torn down while holding
+/// tickets (or with requests still queued in the governor) leaks cap
+/// forever: the governor's inflight count never decrements and queued
+/// entries for the dead owner occupy WDRR slots.
+pub const EP_SHARD_IO_RECLAIM: Ep = 6;
 /// Buffer chare: request PFS read tickets from the admission governor.
 pub const EP_SHARD_IO_REQ: Ep = 7;
 /// Buffer chare: return PFS read tickets (with observed service time).
@@ -218,6 +225,11 @@ pub struct DataShard {
     resident_reported: f64,
     /// Last cap published on the `ckio.governor.cap` gauge.
     cap_reported: Option<u32>,
+    /// The service-wide retry policy (PR 8), stashed at boot. `Some`
+    /// turns grants into *deadlined* grants: each one carries the
+    /// deadline the requesting buffer should arm its timeout at, derived
+    /// from the governor's observed service-time window.
+    retry: Option<RetryPolicy>,
 }
 
 impl DataShard {
@@ -231,6 +243,7 @@ impl DataShard {
             class_registered: [0; NUM_CLASSES],
             resident_reported: 0.0,
             cap_reported: None,
+            retry: None,
         }
     }
 
@@ -245,8 +258,19 @@ impl DataShard {
             self.store.set_budget(b);
         }
         self.governor.configure(cfg.max_inflight_reads, cfg.admission, cfg.adaptive_admission);
+        self.retry = cfg.retry;
         self.cap_reported = self.governor.cap();
         self.cap_reported.unwrap_or(0) as f64
+    }
+
+    /// The deadline to stamp on a grant: the governor's observed
+    /// service-time window scaled by the policy's multiplier (0 when the
+    /// service runs without a retry policy — the buffer arms no timer).
+    fn grant_deadline(&self) -> u64 {
+        match &self.retry {
+            Some(r) => self.governor.deadline_ns(r.deadline_mult, r.default_deadline_ns),
+            None => 0,
+        }
     }
 
     /// Contribute this shard's residency *change* to the global gauge
@@ -358,6 +382,7 @@ pub fn protocol_spec() -> ProtocolSpec {
             ep_spec!(EP_SHARD_TAKE, PayloadKind::of::<TakeMsg>()),
             ep_spec!(EP_SHARD_PARK, PayloadKind::of::<ParkMsg>()),
             ep_spec!(EP_SHARD_PURGE, PayloadKind::of::<FileId>()),
+            ep_spec!(EP_SHARD_IO_RECLAIM, PayloadKind::of::<ReclaimMsg>()),
             ep_spec!(EP_SHARD_IO_REQ, PayloadKind::of::<IoReqMsg>()),
             ep_spec!(EP_SHARD_IO_DONE, PayloadKind::of::<IoDoneMsg>()),
             ep_spec!(EP_SHARD_PLAN, PayloadKind::of::<PlanMsg>()),
@@ -549,9 +574,26 @@ impl Chare for DataShard {
                             m.class.label(),
                         );
                     }
-                    ctx.send(m.buffer, EP_BUF_GRANT, GrantMsg { n: granted });
+                    let deadline_ns = self.grant_deadline();
+                    ctx.send(m.buffer, EP_BUF_GRANT, GrantMsg { n: granted, deadline_ns });
                 }
                 ctx.advance(MICROS);
+            }
+            EP_SHARD_IO_RECLAIM => {
+                let m: ReclaimMsg = msg.take();
+                let now = ctx.now();
+                let (removed, grants) = self.governor.reclaim(m.owner, m.held, now);
+                ctx.metrics().count(keys::GOV_RECLAIMED, u64::from(m.held) + u64::from(removed));
+                // Reclaimed capacity goes straight back to waiting
+                // sessions: deliver whatever the drain freed.
+                let deadline_ns = self.grant_deadline();
+                for g in grants {
+                    ctx.metrics().count(g.class.granted_key(), g.n as u64);
+                    ctx.metrics().record(g.class.wait_key(), g.waited_ns);
+                    ctx.send(g.owner, EP_BUF_GRANT, GrantMsg { n: g.n, deadline_ns });
+                }
+                self.publish_cap(ctx);
+                ctx.advance(MICROS / 2);
             }
             EP_SHARD_IO_DONE => {
                 let m: IoDoneMsg = msg.take();
@@ -585,7 +627,8 @@ impl Chare for DataShard {
                             g.class.label(),
                         );
                     }
-                    ctx.send(g.owner, EP_BUF_GRANT, GrantMsg { n: g.n });
+                    let deadline_ns = self.grant_deadline();
+                    ctx.send(g.owner, EP_BUF_GRANT, GrantMsg { n: g.n, deadline_ns });
                 }
                 self.publish_cap(ctx);
                 ctx.advance(MICROS);

@@ -13,14 +13,14 @@ use crate::amt::topology::{Pe, Placement};
 use crate::apps::changa::driver::{run_changa_input, Scheme};
 use crate::baselines::naive::{NaiveClient, EP_N_GO};
 use crate::ckio::{
-    CkIo, FileOptions, QosClass, ReadResult, ReaderPlacement, ServiceConfig, Session,
-    SessionOptions,
+    CkIo, FileOptions, QosClass, ReadResult, ReaderPlacement, RetryPolicy, ServiceConfig,
+    Session, SessionOptions, SessionOutcome,
 };
 use crate::harness::bench::Table;
 use crate::harness::bgwork::{BgWorker, EP_BG_START, EP_BG_STOP};
 use crate::impl_chare_any;
 use crate::metrics::keys;
-use crate::pfs::PfsConfig;
+use crate::pfs::{FaultPlan, PfsConfig, StragglerSpec};
 use crate::util::stats::Summary;
 use crate::{ep_spec, send_spec};
 
@@ -1070,6 +1070,10 @@ pub struct ConcurrentClient {
     session_done: Callback,
     /// Fired once per client read with its latency (`Time`).
     read_latency: Callback,
+    /// Leader, optional (set post-creation like `peers`): fired with the
+    /// close ack's [`SessionOutcome`] — the chaos experiments' window
+    /// into served/degraded bytes and retry effort per session.
+    pub outcome: Option<Callback>,
 }
 
 impl ConcurrentClient {
@@ -1103,6 +1107,7 @@ impl ConcurrentClient {
             slices_done: 0,
             session_done,
             read_latency,
+            outcome: None,
         }
     }
 
@@ -1171,6 +1176,12 @@ impl Chare for ConcurrentClient {
                 }
             }
             EP_CC_CLOSED => {
+                // Session-close acks carry the structured SessionOutcome
+                // (PR 8); forward it when a collector asked for it.
+                let o: SessionOutcome = msg.take();
+                if let Some(cb) = self.outcome.clone() {
+                    ctx.fire(cb, Payload::new(o));
+                }
                 let me = ctx.me();
                 let (io, file) = (self.io, self.file);
                 io.close(ctx, file, Callback::to_chare(me, EP_CC_FCLOSED));
@@ -1183,8 +1194,9 @@ impl Chare for ConcurrentClient {
 }
 
 /// [`ConcurrentClient`]'s declared message protocol (see
-/// [`crate::amt::protocol`]). The open/close acknowledgements are `Any`:
-/// their payloads come from the library and are ignored here.
+/// [`crate::amt::protocol`]). The open/file-close acknowledgements are
+/// `Any`: their payloads come from the library and are ignored here.
+/// The session-close ack decodes the structured [`SessionOutcome`].
 pub fn concurrent_client_protocol_spec() -> ProtocolSpec {
     ProtocolSpec {
         chare: "ConcurrentClient",
@@ -1195,7 +1207,7 @@ pub fn concurrent_client_protocol_spec() -> ProtocolSpec {
             ep_spec!(EP_CC_SESSION, PayloadKind::of::<Session>()),
             ep_spec!(EP_CC_DATA, PayloadKind::of::<ReadResult>()),
             ep_spec!(EP_CC_SLICE_DONE, PayloadKind::Signal),
-            ep_spec!(EP_CC_CLOSED, PayloadKind::Any),
+            ep_spec!(EP_CC_CLOSED, PayloadKind::of::<SessionOutcome>()),
             ep_spec!(EP_CC_FCLOSED, PayloadKind::Any),
         ],
         sends: vec![
@@ -1674,7 +1686,7 @@ pub struct ChurnSweepRow {
 
 /// The canonical churn shard sweep — ONE definition of the shape
 /// (cluster, file size, K, clients, shard list, seeds), shared by the
-/// `svc_churn` figure table and the `BENCH_pr5.json` `churn` section so
+/// `svc_churn` figure table and the `BENCH_pr8.json` `churn` section so
 /// the two can never silently report different experiments.
 pub fn churn_sweep(reps: u32) -> Vec<ChurnSweepRow> {
     let (nodes, pes) = (4u32, 8);
@@ -2095,7 +2107,7 @@ pub fn run_svc_qos(
 }
 
 /// The canonical svc_qos shape — shared by the figure table, the
-/// `BENCH_pr5.json` `qos` section, and the acceptance test, so they can
+/// `BENCH_pr8.json` `qos` section, and the acceptance test, so they can
 /// never silently measure different experiments:
 /// (nodes, pes, file_size, n_interactive, n_bulk, clients, cap).
 pub const QOS_SHAPE: (u32, u32, u64, u32, u32, u32, u32) = (2, 4, 512 << 10, 3, 3, 4, 2);
@@ -2168,7 +2180,244 @@ pub fn svc_qos(reps: u32) -> Table {
     t
 }
 
-/// Machine-readable perf anchor for this PR (`BENCH_pr5.json`):
+// =====================================================================
+// svc_chaos — fault-injected PFS under the retry/deadline plane (PR 8)
+// =====================================================================
+//
+// PR 8's acceptance scenario: concurrent sessions read through a PFS
+// that injects transient read errors and runs two straggler OSTs, with
+// the reliability plane (deadlines, backoff re-admission, optional
+// hedging) turned on. Every session's close callback must fire exactly
+// once and carry a SessionOutcome whose served/degraded split accounts
+// for every byte; the governor must hold no residue at quiescence no
+// matter which attempts failed, timed out, or raced teardown.
+
+/// Results of one `run_svc_chaos` run.
+#[derive(Clone, Debug)]
+pub struct ChaosStats {
+    /// The transient-fault probability the run injected.
+    pub fault_p: f64,
+    pub makespan_s: f64,
+    /// Bytes served with real data, summed over the session outcomes.
+    pub served_bytes: u64,
+    /// Bytes degraded to modeled chunks, summed over session outcomes.
+    pub degraded_bytes: u64,
+    /// served / (served + degraded) — the goodput fraction.
+    pub goodput: f64,
+    /// Session-close callbacks observed (acceptance: == sessions).
+    pub closes: u32,
+    /// Reliability-plane effort, from the engine counters.
+    pub retries: u64,
+    pub timeouts: u64,
+    pub hedges: u64,
+    pub gave_up: u64,
+    pub late: u64,
+    /// Injected-fault counts, from the PFS model counters.
+    pub faults_transient: u64,
+    pub faults_persistent: u64,
+    pub faults_short: u64,
+    pub straggler_rpcs: u64,
+    /// Governor tickets/demand reclaimed from torn-down buffers.
+    pub reclaimed: u64,
+}
+
+/// Two OSTs served at `multiplier`× normal speed for the whole run —
+/// the straggler schedule every chaos run shares.
+fn chaos_stragglers(multiplier: f64) -> Vec<StragglerSpec> {
+    [0u32, 1]
+        .iter()
+        .map(|&ost| StragglerSpec { ost, multiplier, from: 0, until: Time::MAX })
+        .collect()
+}
+
+/// Drive `k` distinct-file sessions of `file_size` bytes (`clients`
+/// client chares each) against a PFS injecting `transient_p` read
+/// errors plus two straggler OSTs, with the retry plane configured via
+/// `policy`. One governed shard and a tight admission cap keep the
+/// ticket path — timeout-release, backoff re-admission, drop-time
+/// reclaim — under real contention. Transient faults clear on retry by
+/// definition, so with a sane attempt budget every byte is eventually
+/// served and the outcomes' degraded side stays zero; persistent-fault
+/// degradation is exercised by the chaos test suite instead.
+#[allow(clippy::too_many_arguments)]
+pub fn run_svc_chaos(
+    nodes: u32,
+    pes: u32,
+    file_size: u64,
+    k: u32,
+    clients: u32,
+    transient_p: f64,
+    policy: RetryPolicy,
+    seed: u64,
+) -> (ChaosStats, CkIo, Engine) {
+    assert!(k > 0 && clients > 0 && file_size >= clients as u64);
+    let pfs = PfsConfig {
+        noise_sigma: 0.0,
+        rpc_overhead: time::from_micros(2.0),
+        seek_penalty: 0,
+        faults: FaultPlan {
+            transient_p,
+            stragglers: chaos_stragglers(8.0),
+            ..Default::default()
+        },
+        ..PfsConfig::default()
+    };
+    let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed)).with_sim_pfs(pfs);
+    let files: Vec<crate::pfs::FileId> =
+        (0..k).map(|_| eng.core.sim_pfs_mut().create_file(file_size)).collect();
+    let cfg = ServiceConfig {
+        max_inflight_reads: Some(4),
+        data_plane_shards: Some(1),
+        retry: Some(policy),
+        ..Default::default()
+    };
+    let io = CkIo::boot_with(&mut eng, cfg).expect("svc_chaos: valid ServiceConfig");
+    let fopts = FileOptions::with_readers(2);
+    let sopts = SessionOptions {
+        splinter_bytes: Some(16 << 10),
+        read_window: 8,
+        ..Default::default()
+    };
+    let done_fut = eng.future(k);
+    let outcome_fut = eng.future(k);
+    let lat_fut = eng.future(k * clients);
+    let per = file_size / clients as u64;
+    let mut leaders = Vec::with_capacity(k as usize);
+    for s in 0..k {
+        let file = files[s as usize];
+        let cid = eng.create_array(clients, &Placement::RoundRobinPes, |i| {
+            let lo = i as u64 * per;
+            let hi = if i == clients - 1 { file_size } else { lo + per };
+            ConcurrentClient::new(
+                io,
+                file,
+                file_size,
+                i,
+                clients,
+                fopts.clone(),
+                sopts.clone(),
+                (lo, hi - lo),
+                Callback::Future(done_fut),
+                Callback::Future(lat_fut),
+            )
+        });
+        for i in 0..clients {
+            eng.chare_mut::<ConcurrentClient>(ChareRef::new(cid, i)).peers = cid;
+        }
+        eng.chare_mut::<ConcurrentClient>(ChareRef::new(cid, 0)).outcome =
+            Some(Callback::Future(outcome_fut));
+        leaders.push(ChareRef::new(cid, 0));
+    }
+    for leader in leaders {
+        eng.inject_signal(leader, EP_CC_GO);
+    }
+    eng.run();
+    assert!(eng.future_done(done_fut), "svc_chaos: not all sessions closed");
+    assert!(eng.future_done(outcome_fut), "svc_chaos: a close ack lost its outcome");
+    assert!(eng.future_done(lat_fut), "svc_chaos: not all reads completed");
+
+    let done = eng.take_future(done_fut);
+    let makespan = done.iter().map(|(t, _)| *t).max().unwrap();
+    let outcomes: Vec<SessionOutcome> = eng
+        .take_future(outcome_fut)
+        .into_iter()
+        .map(|(_, mut p)| p.take::<SessionOutcome>())
+        .collect();
+    let served: u64 = outcomes.iter().map(|o| o.served_bytes).sum();
+    let degraded: u64 = outcomes.iter().map(|o| o.degraded_bytes).sum();
+    let m = &eng.core.metrics;
+    let stats = ChaosStats {
+        fault_p: transient_p,
+        makespan_s: time::to_secs(makespan),
+        served_bytes: served,
+        degraded_bytes: degraded,
+        goodput: served as f64 / ((served + degraded) as f64).max(1.0),
+        closes: outcomes.len() as u32,
+        retries: m.counter(keys::RETRY_ATTEMPTS),
+        timeouts: m.counter(keys::RETRY_TIMEOUTS),
+        hedges: m.counter(keys::RETRY_HEDGES),
+        gave_up: m.counter(keys::RETRY_GAVE_UP),
+        late: m.counter(keys::RETRY_LATE),
+        faults_transient: m.counter(keys::FAULT_TRANSIENT),
+        faults_persistent: m.counter(keys::FAULT_PERSISTENT),
+        faults_short: m.counter(keys::FAULT_SHORT),
+        straggler_rpcs: m.counter(keys::FAULT_STRAGGLER),
+        reclaimed: m.counter(keys::GOV_RECLAIMED),
+    };
+    (stats, io, eng)
+}
+
+/// The canonical svc_chaos shape — shared by the figure table, the
+/// `BENCH_pr8.json` `reliability` section, and the acceptance test:
+/// (nodes, pes, file_size, sessions, clients).
+pub const CHAOS_SHAPE: (u32, u32, u64, u32, u32) = (2, 4, 256 << 10, 3, 4);
+
+/// The transient-fault sweep every reporting surface shares.
+pub const CHAOS_FAULT_SWEEP: [f64; 3] = [0.0, 0.05, 0.2];
+
+/// The `svc_chaos` experiment table: goodput and retry effort vs the
+/// injected transient-fault rate, plus a hedged row at the acceptance
+/// rate (5%).
+pub fn svc_chaos(reps: u32) -> Table {
+    let (n, p, size, k, c) = CHAOS_SHAPE;
+    let mut t = Table::new(
+        format!(
+            "svc_chaos: {k} sessions over distinct {} files, transient-fault sweep with two \
+             8x straggler OSTs, one governed shard, cap 4 ({n} nodes x {p} PEs, {c} \
+             clients/session; deadline+backoff retry, plus a hedged row at 5%)",
+            crate::util::human_bytes(size),
+        ),
+        &[
+            "mode",
+            "fault_p",
+            "makespan_ms",
+            "goodput",
+            "retries",
+            "timeouts",
+            "hedges",
+            "gave_up",
+        ],
+    );
+    let mut modes: Vec<(String, f64, RetryPolicy)> = CHAOS_FAULT_SWEEP
+        .iter()
+        .map(|&fp| ("retry".to_string(), fp, RetryPolicy::default()))
+        .collect();
+    modes.push(("hedged".to_string(), 0.05, RetryPolicy::default().with_hedging()));
+    for (mode, fp, policy) in modes {
+        let mut mk = 0.0;
+        let mut gp = 0.0;
+        let mut re = 0.0;
+        let mut to = 0.0;
+        let mut he = 0.0;
+        let mut gu = 0.0;
+        for r in 0..reps.max(1) {
+            let (st, io, eng) =
+                run_svc_chaos(n, p, size, k, c, fp, policy, 9800 + r as u64);
+            assert_service_clean(&eng, &io);
+            assert_eq!(st.closes, k, "svc_chaos: close callbacks != sessions");
+            mk += st.makespan_s;
+            gp += st.goodput;
+            re += st.retries as f64;
+            to += st.timeouts as f64;
+            he += st.hedges as f64;
+            gu += st.gave_up as f64;
+        }
+        let nr = reps.max(1) as f64;
+        t.row(vec![
+            mode,
+            format!("{fp:.2}"),
+            format!("{:.3}", mk / nr * 1e3),
+            format!("{:.4}", gp / nr),
+            format!("{:.0}", re / nr),
+            format!("{:.0}", to / nr),
+            format!("{:.0}", he / nr),
+            format!("{:.0}", gu / nr),
+        ]);
+    }
+    t
+}
+
+/// Machine-readable perf anchor for this PR (`BENCH_pr8.json`):
 ///
 /// * `concurrent` — the PR 1 svc_concurrent aggregate-GiB/s anchor
 ///   (continuity: same shape and seeds as `BENCH_pr1.json`),
@@ -2197,8 +2446,12 @@ pub fn svc_qos(reps: u32) -> Table {
 ///   `governor_queued` both 0),
 /// * `latency` (PR 7) — p50/p99/p99.9 (milliseconds) over the classed
 ///   qos run from the engine-global histograms: session makespan,
-///   per-class admission wait, PFS read service, assembly, peer fetch.
-pub fn bench_pr5_json(reps: u32) -> String {
+///   per-class admission wait, PFS read service, assembly, peer fetch,
+/// * `reliability` (PR 8) — the svc_chaos transient-fault sweep under
+///   two straggler OSTs: goodput and makespan vs fault rate with the
+///   `ckio.retry.*` effort counters and `ckio.fault.*` injection
+///   counts, plus a hedged run at the 5% acceptance rate.
+pub fn bench_pr8_json(reps: u32) -> String {
     use crate::harness::bench::Json;
     let (nodes, pes) = (4u32, 8u32);
     let size = mib(256);
@@ -2488,9 +2741,69 @@ pub fn bench_pr5_json(reps: u32) -> String {
         ])
     };
 
+    // Reliability sweep (PR 8): goodput vs injected transient-fault
+    // rate under two straggler OSTs, with the retry/hedge effort
+    // counters. Deterministic (seeded faults, noise-free PFS), so
+    // single seeded runs suffice, like governed/evict/feedback.
+    let reliability = {
+        let (cn, cp, csize, ck, cc) = CHAOS_SHAPE;
+        let side = |st: &ChaosStats| {
+            Json::obj(vec![
+                ("fault_p", Json::num(st.fault_p)),
+                ("makespan_s", Json::num(st.makespan_s)),
+                ("goodput", Json::num(st.goodput)),
+                ("served_bytes", Json::num(st.served_bytes as f64)),
+                (keys::SESSION_DEGRADED, Json::num(st.degraded_bytes as f64)),
+                (keys::RETRY_ATTEMPTS, Json::num(st.retries as f64)),
+                (keys::RETRY_TIMEOUTS, Json::num(st.timeouts as f64)),
+                (keys::RETRY_HEDGES, Json::num(st.hedges as f64)),
+                (keys::RETRY_GAVE_UP, Json::num(st.gave_up as f64)),
+                (keys::RETRY_LATE, Json::num(st.late as f64)),
+                (keys::FAULT_TRANSIENT, Json::num(st.faults_transient as f64)),
+                (keys::FAULT_STRAGGLER, Json::num(st.straggler_rpcs as f64)),
+                (keys::GOV_RECLAIMED, Json::num(st.reclaimed as f64)),
+            ])
+        };
+        let sweep: Vec<Json> = CHAOS_FAULT_SWEEP
+            .iter()
+            .map(|&fp| {
+                let (st, io, eng) =
+                    run_svc_chaos(cn, cp, csize, ck, cc, fp, RetryPolicy::default(), 9900);
+                assert_service_clean(&eng, &io);
+                assert_eq!(st.closes, ck, "reliability: close callbacks != sessions");
+                side(&st)
+            })
+            .collect();
+        let hedged = {
+            let (st, io, eng) = run_svc_chaos(
+                cn,
+                cp,
+                csize,
+                ck,
+                cc,
+                0.05,
+                RetryPolicy::default().with_hedging(),
+                9900,
+            );
+            assert_service_clean(&eng, &io);
+            side(&st)
+        };
+        Json::obj(vec![
+            ("sessions", Json::num(ck as f64)),
+            ("clients_per_session", Json::num(cc as f64)),
+            ("file_bytes", Json::num(csize as f64)),
+            ("straggler_osts", Json::num(2.0)),
+            ("sweep", Json::arr(sweep)),
+            ("hedged", hedged),
+        ])
+    };
+
     Json::obj(vec![
-        ("bench", Json::str("svc_qos+svc_locality+svc_churn+svc_shared+svc_concurrent")),
-        ("pr", Json::num(5.0)),
+        (
+            "bench",
+            Json::str("svc_chaos+svc_qos+svc_locality+svc_churn+svc_shared+svc_concurrent"),
+        ),
+        ("pr", Json::num(8.0)),
         ("nodes", Json::num(nodes as f64)),
         ("pes_per_node", Json::num(pes as f64)),
         ("file_bytes", Json::num(size as f64)),
@@ -2505,6 +2818,7 @@ pub fn bench_pr5_json(reps: u32) -> String {
         ("locality", locality),
         ("qos", qos),
         ("latency", latency),
+        ("reliability", reliability),
     ])
     .render()
 }
@@ -2741,12 +3055,12 @@ mod tests {
     }
 
     #[test]
-    fn bench_pr5_json_is_wellformed() {
-        let j = bench_pr5_json(1);
+    fn bench_pr8_json_is_wellformed() {
+        let j = bench_pr8_json(1);
         assert!(j.starts_with('{') && j.ends_with('}'));
-        assert!(
-            j.contains("\"bench\":\"svc_qos+svc_locality+svc_churn+svc_shared+svc_concurrent\"")
-        );
+        assert!(j.contains(
+            "\"bench\":\"svc_chaos+svc_qos+svc_locality+svc_churn+svc_shared+svc_concurrent\""
+        ));
         assert!(j.contains("\"aggregate_gibs\""));
         // K = 1, 4, 8 all reported in the concurrent anchor.
         assert!(j.contains("\"k\":1") && j.contains("\"k\":4") && j.contains("\"k\":8"));
@@ -2791,8 +3105,23 @@ mod tests {
             "\"p50\"",
             "\"p99\"",
             "\"p99.9\"",
+            // PR 8 reliability sweep.
+            "\"reliability\"",
+            "\"sweep\"",
+            "\"hedged\"",
+            "\"goodput\"",
+            "\"fault_p\"",
+            "ckio.retry.attempts",
+            "ckio.retry.timeouts",
+            "ckio.retry.hedges",
+            "ckio.retry.gave_up",
+            "ckio.retry.late_completions",
+            "ckio.fault.transient",
+            "ckio.fault.straggler_rpcs",
+            "ckio.session.degraded_bytes",
+            "ckio.governor.reclaimed",
         ] {
-            assert!(j.contains(key), "missing {key} in BENCH_pr5 json");
+            assert!(j.contains(key), "missing {key} in BENCH_pr8 json");
         }
     }
 

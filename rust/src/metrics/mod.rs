@@ -300,6 +300,42 @@ pub mod keys {
     /// Histogram: peer-fetch round trip, request sent → chunk received
     /// at the requesting buffer (ns; successful fetches only).
     pub const LATENCY_PEER_FETCH: &str = "ckio.latency.peer_fetch";
+    /// Fault injection (PR 8): PFS reads that completed with a
+    /// transient error (retryable; the same extent may succeed next
+    /// attempt).
+    pub const FAULT_TRANSIENT: &str = "ckio.fault.transient";
+    /// Fault injection: PFS reads that completed with a persistent
+    /// error (the extent deterministically re-fails every attempt).
+    pub const FAULT_PERSISTENT: &str = "ckio.fault.persistent";
+    /// Fault injection: PFS reads that returned fewer valid bytes than
+    /// requested (short reads; treated as failures by the retry plane).
+    pub const FAULT_SHORT: &str = "ckio.fault.short_reads";
+    /// Fault injection: PFS reads whose service time was stretched by a
+    /// straggler OST's multiplier.
+    pub const FAULT_STRAGGLER: &str = "ckio.fault.straggler_rpcs";
+    /// Reliability plane (PR 8): PFS read re-issues — every attempt
+    /// beyond an extent's first (hedges counted separately).
+    pub const RETRY_ATTEMPTS: &str = "ckio.retry.attempts";
+    /// Reliability plane: read deadlines that expired at the buffer
+    /// (each either abandons the attempt or arms a hedge).
+    pub const RETRY_TIMEOUTS: &str = "ckio.retry.timeouts";
+    /// Reliability plane: hedged duplicate reads issued past their
+    /// deadline while the original stayed in flight.
+    pub const RETRY_HEDGES: &str = "ckio.retry.hedges";
+    /// Reliability plane: completions of attempts already abandoned by
+    /// their deadline (dropped; the ticket was returned at abandonment).
+    pub const RETRY_LATE: &str = "ckio.retry.late_completions";
+    /// Reliability plane: extents abandoned after the retry budget was
+    /// exhausted (each degrades its slot to a modeled chunk).
+    pub const RETRY_GAVE_UP: &str = "ckio.retry.gave_up";
+    /// Bytes of client reads answered from degraded (NACK / gave-up)
+    /// slots — the per-session split rides the close callback's
+    /// `SessionOutcome`.
+    pub const SESSION_DEGRADED: &str = "ckio.session.degraded_bytes";
+    /// Admission governor: tickets and queued demand reclaimed from
+    /// torn-down owners (drop-time bulk return; without it a dead
+    /// buffer's in-flight reads would leak cap forever).
+    pub const GOV_RECLAIMED: &str = "ckio.governor.reclaimed";
 
     /// The observability catalog: `(key, kind, emitting module, what it
     /// measures)` for every constant above — the registry behind
@@ -364,6 +400,17 @@ pub mod keys {
             (LATENCY_PFS_READ, "histogram", "pfs/model.rs", "PFS read RPC service time, issue -> complete (ns)"),
             (LATENCY_ASSEMBLY, "histogram", "ckio/assembler.rs", "client-read assembly latency, request -> last piece (ns)"),
             (LATENCY_PEER_FETCH, "histogram", "ckio/buffer.rs", "peer-fetch round trip, sent -> chunk received (ns)"),
+            (FAULT_TRANSIENT, "counter", "pfs/model.rs", "PFS reads completed with a transient error"),
+            (FAULT_PERSISTENT, "counter", "pfs/model.rs", "PFS reads completed with a persistent error"),
+            (FAULT_SHORT, "counter", "pfs/model.rs", "PFS reads returning fewer valid bytes than asked"),
+            (FAULT_STRAGGLER, "counter", "pfs/model.rs", "PFS reads stretched by a straggler OST"),
+            (RETRY_ATTEMPTS, "counter", "ckio/buffer.rs", "PFS read re-issues (attempts beyond the first)"),
+            (RETRY_TIMEOUTS, "counter", "ckio/buffer.rs", "read deadlines expired at the buffer"),
+            (RETRY_HEDGES, "counter", "ckio/buffer.rs", "hedged duplicate reads issued past deadline"),
+            (RETRY_LATE, "counter", "ckio/buffer.rs", "completions of already-abandoned attempts, dropped"),
+            (RETRY_GAVE_UP, "counter", "ckio/buffer.rs", "extents abandoned after the retry budget"),
+            (SESSION_DEGRADED, "counter", "ckio/buffer.rs", "client-read bytes answered from degraded slots"),
+            (GOV_RECLAIMED, "counter", "ckio/shard.rs", "tickets and queued demand reclaimed from dead owners"),
         ]
     }
 }

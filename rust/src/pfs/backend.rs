@@ -27,6 +27,29 @@ pub struct ReadRequest {
     pub user: u64,
 }
 
+/// How a read completed. Real parallel file systems fail in more ways
+/// than "never": an OST can return EIO once (transient), every time
+/// (persistent media fault), or deliver fewer bytes than asked. The
+/// submitter decides policy (retry, hedge, degrade) — the backend only
+/// reports what happened.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum IoOutcome {
+    /// Full extent delivered.
+    Ok,
+    /// Failed this attempt; a retry may succeed (EIO, timeout at the OST).
+    TransientError,
+    /// Failed and will keep failing (bad block, lost object).
+    PersistentError,
+    /// Delivered only the first `valid` bytes of the extent.
+    Short { valid: u64 },
+}
+
+impl IoOutcome {
+    pub fn is_ok(self) -> bool {
+        self == IoOutcome::Ok
+    }
+}
+
 /// A completed read, delivered as the payload of the completion callback.
 #[derive(Debug)]
 pub struct IoResult {
@@ -35,6 +58,7 @@ pub struct IoResult {
     pub len: u64,
     pub user: u64,
     pub chunk: Chunk,
+    pub outcome: IoOutcome,
 }
 
 /// Completion record posted by real reader threads.
@@ -103,6 +127,7 @@ impl LocalDisk {
                                     len: job.req.len,
                                     user: job.req.user,
                                     chunk: Chunk::materialized(job.req.offset, buf.into()),
+                                    outcome: IoOutcome::Ok,
                                 };
                                 let _ = done_tx.send(RealCompletion {
                                     callback: job.callback,

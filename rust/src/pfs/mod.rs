@@ -21,6 +21,6 @@ pub mod layout;
 pub mod model;
 pub mod pattern;
 
-pub use backend::{IoResult, ReadRequest};
+pub use backend::{IoOutcome, IoResult, ReadRequest};
 pub use layout::{FileId, FileMeta};
-pub use model::{PfsConfig, SimPfs};
+pub use model::{FaultPlan, PfsConfig, SimPfs, StragglerSpec};

@@ -21,9 +21,65 @@ use crate::trace::{names as trace_names, Lane as TraceLane, TraceCategory, Trace
 use crate::util::bytes::Chunk;
 use crate::util::rng::Pcg32;
 
-use super::backend::{IoResult, ReadRequest};
+use super::backend::{IoOutcome, IoResult, ReadRequest};
 use super::layout::{FileId, FileMeta};
 use super::pattern;
+
+/// One OST made slow over an interval: every RPC it services with
+/// `from <= now < until` takes `multiplier`× its normal service time.
+/// Models a degraded disk, a rebuilding RAID set, or a noisy neighbor.
+#[derive(Clone, Debug)]
+pub struct StragglerSpec {
+    pub ost: u32,
+    pub multiplier: f64,
+    pub from: Time,
+    pub until: Time,
+}
+
+/// Deterministic fault schedule for the simulated PFS. All probabilities
+/// are per-read; draws come from the model's seeded RNG, so a given
+/// (seed, submission order) always produces the same faults. The default
+/// plan injects nothing and touches no RNG state, so fault-free runs
+/// replay bit-for-bit against pre-fault seeds.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Probability a read fails with an error a retry may clear.
+    pub transient_p: f64,
+    /// Probability an *extent* is permanently bad: decided by hashing
+    /// (file, offset, len), so every retry of the same extent re-fails.
+    pub persistent_p: f64,
+    /// Probability a read returns only a prefix of the requested bytes.
+    pub short_p: f64,
+    /// OSTs with degraded service over an interval.
+    pub stragglers: Vec<StragglerSpec>,
+}
+
+impl FaultPlan {
+    /// Any per-read fault configured (stragglers act on OST service,
+    /// not on read outcomes, and are checked separately).
+    fn read_faults(&self) -> bool {
+        self.transient_p > 0.0 || self.persistent_p > 0.0 || self.short_p > 0.0
+    }
+
+    /// Anything at all configured.
+    pub fn any(&self) -> bool {
+        self.read_faults() || !self.stragglers.is_empty()
+    }
+}
+
+/// SplitMix64-style extent hash mapped to [0, 1): the persistence oracle.
+fn extent_hash(salt: u64, file: FileId, offset: u64, len: u64) -> f64 {
+    let mut x = salt
+        ^ (u64::from(file.0) << 32)
+        ^ offset.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+        ^ len.rotate_left(17);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^= x >> 31;
+    (x >> 11) as f64 / (1u64 << 53) as f64
+}
 
 /// Model parameters. Defaults are calibrated in DESIGN.md §8 to match the
 /// paper's *ratios* (single-stream disk ≈ 6–9× slower than the wire;
@@ -55,6 +111,8 @@ pub struct PfsConfig {
     pub noise_sigma: f64,
     /// Materialize pattern bytes in completions (verified runs).
     pub materialize: bool,
+    /// Injected fault schedule (default: none).
+    pub faults: FaultPlan,
 }
 
 impl Default for PfsConfig {
@@ -72,6 +130,7 @@ impl Default for PfsConfig {
             mds_open: from_micros(40.0),
             noise_sigma: 0.05,
             materialize: false,
+            faults: FaultPlan::default(),
         }
     }
 }
@@ -116,6 +175,9 @@ struct Req {
     done: bool,
     /// Issue time, for the service-time histogram and trace span.
     submitted_at: Time,
+    /// Outcome decided at submission, surfaced when the read completes
+    /// (errors are discovered at completion time, as on a real client).
+    fault: IoOutcome,
 }
 
 #[derive(Debug)]
@@ -150,6 +212,12 @@ pub struct SimPfs {
     /// Reads submitted and not yet completed (the admission governor's
     /// cap is asserted against the high-water mark of this).
     active_reads: u32,
+    /// Salt for the persistent-fault extent hash (the raw engine seed).
+    fault_salt: u64,
+    /// RPCs that hit a straggler interval (flushed to metrics as deltas
+    /// at read completions — OST service has no metrics sink in scope).
+    straggler_rpcs: u64,
+    straggler_flushed: u64,
 }
 
 impl SimPfs {
@@ -166,6 +234,9 @@ impl SimPfs {
             rng: Pcg32::seeded(seed ^ 0x9df5),
             next_first_ost: 0,
             active_reads: 0,
+            fault_salt: seed,
+            straggler_rpcs: 0,
+            straggler_flushed: 0,
         }
     }
 
@@ -207,6 +278,39 @@ impl SimPfs {
         self.mds_free
     }
 
+    /// Decide a submission's outcome up front. Persistent faults hash the
+    /// extent (every retry of the same bytes re-fails); transient and
+    /// short faults draw per-attempt from the seeded RNG. No RNG state is
+    /// touched unless a read-fault probability is configured.
+    fn decide_fault(&mut self, req: &ReadRequest) -> IoOutcome {
+        if !self.cfg.faults.read_faults() {
+            return IoOutcome::Ok;
+        }
+        let (transient_p, persistent_p, short_p) = (
+            self.cfg.faults.transient_p,
+            self.cfg.faults.persistent_p,
+            self.cfg.faults.short_p,
+        );
+        if persistent_p > 0.0
+            && extent_hash(self.fault_salt, req.file, req.offset, req.len) < persistent_p
+        {
+            return IoOutcome::PersistentError;
+        }
+        if transient_p > 0.0 && self.rng.gen_f64() < transient_p {
+            return IoOutcome::TransientError;
+        }
+        if short_p > 0.0 && self.rng.gen_f64() < short_p {
+            let valid = req.len / 2;
+            if valid > 0 {
+                return IoOutcome::Short { valid };
+            }
+            // A 1-byte short read has no useful prefix: surface it as a
+            // plain transient failure.
+            return IoOutcome::TransientError;
+        }
+        IoOutcome::Ok
+    }
+
     /// Submit a read. Events to schedule are appended to `out`.
     #[allow(clippy::too_many_arguments)]
     pub fn submit(
@@ -238,6 +342,7 @@ impl SimPfs {
                 req.offset,
             );
         }
+        let fault = self.decide_fault(&req);
         self.reqs.push(Req {
             callback,
             pe,
@@ -250,6 +355,7 @@ impl SimPfs {
             in_flight: 0,
             done: false,
             submitted_at: now,
+            fault,
         });
         // Open the client window.
         for _ in 0..self.cfg.client_window {
@@ -295,6 +401,17 @@ impl SimPfs {
         }
         if self.cfg.noise_sigma > 0.0 {
             service = (service as f64 * self.rng.noise(self.cfg.noise_sigma)) as Time;
+        }
+        let mut straggle = None;
+        for s in &self.cfg.faults.stragglers {
+            if s.ost as usize == ost && now >= s.from && now < s.until {
+                straggle = Some(s.multiplier);
+                break;
+            }
+        }
+        if let Some(mult) = straggle {
+            service = (service as f64 * mult) as Time;
+            self.straggler_rpcs += 1;
         }
         let o = &mut self.osts[ost];
         o.current = Some(rpc_id);
@@ -354,10 +471,22 @@ impl SimPfs {
                             service,
                         );
                     }
-                    let chunk = if self.cfg.materialize {
-                        Chunk::materialized(r.offset, pattern::make(r.file, r.offset, r.len))
-                    } else {
-                        Chunk::modeled(r.offset, r.len)
+                    let outcome = r.fault;
+                    // Errors deliver no bytes; short reads deliver the
+                    // valid prefix; both still paid full modeled service
+                    // time (the failure is discovered at completion).
+                    let chunk = match outcome {
+                        IoOutcome::Ok if self.cfg.materialize => {
+                            Chunk::materialized(r.offset, pattern::make(r.file, r.offset, r.len))
+                        }
+                        IoOutcome::Ok => Chunk::modeled(r.offset, r.len),
+                        IoOutcome::Short { valid } if self.cfg.materialize => {
+                            Chunk::materialized(r.offset, pattern::make(r.file, r.offset, valid))
+                        }
+                        IoOutcome::Short { valid } => Chunk::modeled(r.offset, valid),
+                        IoOutcome::TransientError | IoOutcome::PersistentError => {
+                            Chunk::modeled(r.offset, 0)
+                        }
                     };
                     let done = Done {
                         callback: r.callback.clone(),
@@ -368,8 +497,37 @@ impl SimPfs {
                             len: r.len,
                             user: r.user,
                             chunk,
+                            outcome,
                         },
                     };
+                    match outcome {
+                        IoOutcome::Ok => {}
+                        IoOutcome::TransientError => metrics.count(keys::FAULT_TRANSIENT, 1),
+                        IoOutcome::PersistentError => metrics.count(keys::FAULT_PERSISTENT, 1),
+                        IoOutcome::Short { .. } => metrics.count(keys::FAULT_SHORT, 1),
+                    }
+                    if !outcome.is_ok() && trace.on(TraceCategory::Pfs) {
+                        let kind = match outcome {
+                            IoOutcome::TransientError => "transient",
+                            IoOutcome::PersistentError => "persistent",
+                            IoOutcome::Short { .. } => "short",
+                            IoOutcome::Ok => "",
+                        };
+                        trace.instant(
+                            now,
+                            TraceCategory::Pfs,
+                            trace_names::PFS_FAULT,
+                            TraceLane::Pe(done.pe.0),
+                            u64::from(rid),
+                            done.result.len,
+                            kind,
+                        );
+                    }
+                    if self.straggler_rpcs > self.straggler_flushed {
+                        metrics
+                            .count(keys::FAULT_STRAGGLER, self.straggler_rpcs - self.straggler_flushed);
+                        self.straggler_flushed = self.straggler_rpcs;
+                    }
                     metrics.count("pfs.reads_done", 1);
                     return Some(done);
                 }
@@ -394,6 +552,9 @@ impl SimPfs {
         self.rpcs.clear();
         self.rng = Pcg32::seeded(seed ^ 0x9df5);
         self.active_reads = 0;
+        self.fault_salt = seed;
+        self.straggler_rpcs = 0;
+        self.straggler_flushed = 0;
     }
 }
 
@@ -485,6 +646,126 @@ mod tests {
         let t4096 = time_for(4096);
         assert!(t32 < t1, "32 clients ({t32}s) should beat 1 client ({t1}s)");
         assert!(t32 < t4096, "32 clients ({t32}s) should beat 4096 clients ({t4096}s)");
+    }
+
+    #[test]
+    fn transient_faults_hit_at_roughly_the_configured_rate() {
+        let mut cfg = PfsConfig::default();
+        quiet(&mut cfg);
+        cfg.faults.transient_p = 0.2;
+        let mut pfs = SimPfs::new(cfg, 16, 3);
+        let f = pfs.create_file(1 << 30);
+        let n = 500u64;
+        let per = (1u64 << 30) / n;
+        let submits = (0..n)
+            .map(|i| {
+                (0, Pe((i % 16) as u32), (i % 16) as u32,
+                 ReadRequest { file: f, offset: i * per, len: per, user: i })
+            })
+            .collect();
+        let dones = run_to_completion(&mut pfs, submits);
+        assert_eq!(dones.len(), n as usize, "faulted reads still complete");
+        let failed = dones
+            .iter()
+            .filter(|(_, d)| d.result.outcome == IoOutcome::TransientError)
+            .count();
+        let rate = failed as f64 / n as f64;
+        assert!((0.1..0.3).contains(&rate), "rate={rate}");
+    }
+
+    #[test]
+    fn persistent_faults_refail_the_same_extent() {
+        let mut cfg = PfsConfig::default();
+        quiet(&mut cfg);
+        cfg.faults.persistent_p = 0.3;
+        let mut pfs = SimPfs::new(cfg, 1, 9);
+        let f = pfs.create_file(1 << 30);
+        let n = 64u64;
+        let per = (1u64 << 30) / n;
+        let reqs: Vec<ReadRequest> = (0..n)
+            .map(|i| ReadRequest { file: f, offset: i * per, len: per, user: i })
+            .collect();
+        let first: Vec<IoOutcome> = run_to_completion(
+            &mut pfs,
+            reqs.iter().map(|r| (0, Pe(0), 0, *r)).collect(),
+        )
+        .iter()
+        .map(|(_, d)| d.result.outcome)
+        .collect();
+        assert!(first.contains(&IoOutcome::PersistentError));
+        assert!(first.contains(&IoOutcome::Ok));
+        // "Retry" every extent: persistent verdicts must be identical.
+        let mut pfs2 = SimPfs::new(
+            { let mut c = PfsConfig::default(); quiet(&mut c); c.faults.persistent_p = 0.3; c },
+            1,
+            9,
+        );
+        pfs2.create_file(1 << 30);
+        let again: Vec<IoOutcome> = run_to_completion(
+            &mut pfs2,
+            reqs.iter().map(|r| (0, Pe(0), 0, *r)).collect(),
+        )
+        .iter()
+        .map(|(_, d)| d.result.outcome)
+        .collect();
+        assert_eq!(first, again);
+    }
+
+    #[test]
+    fn short_reads_deliver_a_verified_prefix() {
+        let mut cfg = PfsConfig::default();
+        quiet(&mut cfg);
+        cfg.materialize = true;
+        cfg.faults.short_p = 1.0;
+        let mut pfs = SimPfs::new(cfg, 1, 5);
+        let f = pfs.create_file(64 << 20);
+        let dones = run_to_completion(
+            &mut pfs,
+            vec![(0, Pe(0), 0, ReadRequest { file: f, offset: 0, len: 8 << 20, user: 0 })],
+        );
+        assert_eq!(dones.len(), 1);
+        let d = &dones[0].1;
+        let IoOutcome::Short { valid } = d.result.outcome else {
+            panic!("expected short read, got {:?}", d.result.outcome);
+        };
+        assert_eq!(valid, 4 << 20);
+        let bytes = d.result.chunk.bytes.as_ref().unwrap();
+        assert_eq!(bytes.len() as u64, valid);
+        assert_eq!(pattern::verify(f, 0, bytes), None);
+    }
+
+    #[test]
+    fn straggler_ost_inflates_service_time() {
+        let read = ReadRequest { file: FileId(0), offset: 0, len: 16 << 20, user: 0 };
+        let makespan = |stragglers: Vec<StragglerSpec>| -> Time {
+            let mut cfg = PfsConfig::default();
+            quiet(&mut cfg);
+            cfg.stripe_count = 1; // everything lands on OST 0
+            cfg.faults.stragglers = stragglers;
+            let mut pfs = SimPfs::new(cfg, 1, 1);
+            pfs.create_file_striped(16 << 20, 1, 4 << 20);
+            let dones = run_to_completion(&mut pfs, vec![(0, Pe(0), 0, read)]);
+            dones[0].0
+        };
+        let clean = makespan(vec![]);
+        let slowed = makespan(vec![StragglerSpec {
+            ost: 0,
+            multiplier: 8.0,
+            from: 0,
+            until: Time::MAX,
+        }]);
+        assert!(
+            slowed as f64 > clean as f64 * 4.0,
+            "straggler should dominate: clean={clean} slowed={slowed}"
+        );
+        // An interval that never overlaps the run changes nothing.
+        let missed = makespan(vec![StragglerSpec {
+            ost: 0,
+            multiplier: 8.0,
+            from: Time::MAX - 1,
+            until: Time::MAX,
+        }]);
+        assert_eq!(missed, clean);
     }
 
     #[test]

@@ -475,6 +475,15 @@ pub mod names {
     pub const SCHED_SEND: &str = "sched/send";
     /// Task executed on a PE (complete span; a0 = EP).
     pub const SCHED_TASK: &str = "sched/task";
+    /// Injected PFS fault surfaced at completion (a0 = request id;
+    /// note: transient/persistent/short).
+    pub const PFS_FAULT: &str = "pfs/fault";
+    /// Retry-plane decision at a buffer (a0 = slot, a1 = attempt;
+    /// note: reissue/gave_up).
+    pub const PFS_RETRY: &str = "pfs/retry";
+    /// Hedged duplicate read enqueued for an overdue attempt (a0 =
+    /// slot, a1 = overdue attempt number).
+    pub const PFS_HEDGE: &str = "pfs/hedge";
 
     /// The trace catalog: `(event name, emitting module, what it
     /// marks)` for every constant above — rendered into
@@ -504,6 +513,9 @@ pub mod names {
             (GOVERNOR_CAP, "ckio/shard.rs", "admission cap change (note: AIMD cause)"),
             (SCHED_SEND, "amt/engine.rs", "message scheduled for delivery"),
             (SCHED_TASK, "amt/engine.rs", "task executed on a PE (complete span)"),
+            (PFS_FAULT, "pfs/model.rs", "injected fault surfaced at completion (note: kind)"),
+            (PFS_RETRY, "ckio/buffer.rs", "retry-plane decision (note: reissue/gave_up)"),
+            (PFS_HEDGE, "ckio/buffer.rs", "hedged duplicate read enqueued past deadline"),
         ]
     }
 }

@@ -1,0 +1,567 @@
+//! Deterministic chaos suite (PR 8): the fault-injected PFS against the
+//! retry plane, schedule by schedule.
+//!
+//! * **Straggler-only** — slow OSTs stretch service but nothing fails:
+//!   every byte arrives verified, with zero retries, timeouts, or
+//!   degraded spans (the generous default deadline must not fire on
+//!   healthy-but-slow reads).
+//! * **Transient EIO** — errors clear on retry: with a sane attempt
+//!   budget the session still serves every byte verified, and the
+//!   outcome's retry counters match the engine-wide metrics exactly.
+//! * **Persistent EIO** — every extent re-fails deterministically: the
+//!   budget exhausts with *exact* counts (`(max_attempts - 1) × slots`
+//!   retries, one give-up per slot) and every byte degrades to a
+//!   modeled chunk, delivered exactly once.
+//! * **Short reads** — routed through the same retry machine as errors,
+//!   with the same exact accounting.
+//! * **Mixed persistence** — the extent hash picks survivors: surviving
+//!   spans are byte-verified, degraded spans are modeled, and the
+//!   outcome equations hold whatever the split.
+//! * **Deadline timeouts** — a deadline below the service floor forces
+//!   every attempt through the abandon→ticket-return→backoff path, with
+//!   exact timeout/retry/late accounting and no governor leak.
+//! * **Hedged reads** — duplicates race slow originals; every slot
+//!   settles exactly once, clean, with zero retries charged.
+//! * **Owner-death reclaim** (satellite regression) — a session closed
+//!   with governed reads in flight returns its tickets in bulk
+//!   (`ckio.governor.reclaimed`), leaving no inflight count or queued
+//!   demand behind.
+//!
+//! Every run is virtual-clock and seeded: the same schedule replays the
+//! same faults, so the exact-count assertions are stable.
+
+use ckio::amt::callback::Callback;
+use ckio::amt::chare::{Chare, ChareRef};
+use ckio::amt::engine::{Ctx, Engine, EngineConfig};
+use ckio::amt::msg::{Ep, Msg, Payload};
+use ckio::amt::time::Time;
+use ckio::amt::topology::Pe;
+use ckio::ckio::{
+    CkIo, FileOptions, ReadResult, RetryPolicy, ServiceConfig, Session, SessionId,
+    SessionOptions, SessionOutcome,
+};
+use ckio::harness::experiments::assert_service_clean;
+use ckio::impl_chare_any;
+use ckio::metrics::keys;
+use ckio::pfs::{pattern, FaultPlan, FileId, PfsConfig, StragglerSpec};
+
+const KIB: u64 = 1 << 10;
+/// Splinter size every schedule uses: reads issued in splinter-aligned
+/// pieces map 1:1 onto slots, so per-piece byte presence mirrors
+/// per-slot give-up decisions exactly.
+const SPLINTER: u64 = 16 * KIB;
+const SEED: u64 = 0xC4A05;
+
+/// A verified-data PFS carrying `faults`, quiet (no service noise) so
+/// the exact-count assertions replay bit for bit.
+fn chaos_pfs(faults: FaultPlan) -> PfsConfig {
+    PfsConfig { materialize: true, noise_sigma: 0.0, faults, ..PfsConfig::default() }
+}
+
+/// Boot a governed service with the retry plane armed: fixed cap 4 on a
+/// single data-plane shard (one governor owns every ticket, so the
+/// leak checks see the whole admission state).
+fn chaos_engine(pfs: PfsConfig, file_size: u64, policy: RetryPolicy) -> (Engine, FileId, CkIo) {
+    let mut eng = Engine::new(EngineConfig::sim(2, 2).with_seed(SEED)).with_sim_pfs(pfs);
+    let file = eng.core.sim_pfs_mut().create_file(file_size);
+    let cfg = ServiceConfig {
+        max_inflight_reads: Some(4),
+        data_plane_shards: Some(1),
+        retry: Some(policy),
+        ..Default::default()
+    };
+    let io = CkIo::boot_with(&mut eng, cfg).expect("valid ServiceConfig");
+    (eng, file, io)
+}
+
+fn open_file(eng: &mut Engine, io: &CkIo, file: FileId, size: u64) {
+    let fut = eng.future(1);
+    io.open_driver(eng, file, size, FileOptions::with_readers(2), Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "open never completed");
+}
+
+fn start_session(eng: &mut Engine, io: &CkIo, file: FileId, bytes: u64) -> Session {
+    let fut = eng.future(1);
+    let sopts = SessionOptions { splinter_bytes: Some(SPLINTER), ..Default::default() };
+    io.start_session_driver(eng, file, 0, bytes, sopts, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "session never became ready");
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    p.take::<Session>()
+}
+
+/// Close the session and return the structured [`SessionOutcome`] the
+/// close callback now carries (PR 8) — delivered exactly once.
+fn close_session(eng: &mut Engine, io: &CkIo, sid: SessionId) -> SessionOutcome {
+    let fut = eng.future(1);
+    io.close_session_driver(eng, sid, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "session close never completed");
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    let o: SessionOutcome = p.take();
+    assert_eq!(o.session, sid, "outcome must name the closed session");
+    o
+}
+
+fn close_file(eng: &mut Engine, io: &CkIo, file: FileId) {
+    let fut = eng.future(1);
+    io.close_file_driver(eng, file, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "file close never completed");
+}
+
+/// Read `[0, total)` in splinter-aligned pieces through PE 0's manager;
+/// every read callback must fire exactly once.
+fn read_all(eng: &mut Engine, io: &CkIo, s: &Session, total: u64) -> Vec<ReadResult> {
+    assert_eq!(total % SPLINTER, 0, "chaos reads must stay slot-aligned");
+    let n = (total / SPLINTER) as u32;
+    let fut = eng.future(n);
+    for i in 0..n as u64 {
+        io.read_driver(eng, 0, s, i * SPLINTER, SPLINTER, Callback::Future(fut));
+    }
+    eng.run();
+    assert!(eng.future_done(fut), "a read callback never fired");
+    let results: Vec<ReadResult> =
+        eng.take_future(fut).into_iter().map(|(_, mut p)| p.take::<ReadResult>()).collect();
+    assert_eq!(results.len(), n as usize, "every read completes exactly once");
+    results
+}
+
+/// Partition delivered reads into (served, degraded) byte counts,
+/// byte-verifying every surviving span against the file pattern. A
+/// materialized run answers clean reads with real bytes and gave-up
+/// spans with modeled chunks, so presence-of-bytes *is* the split.
+fn split_and_verify(file: FileId, results: &[ReadResult]) -> (u64, u64) {
+    let (mut served, mut degraded) = (0u64, 0u64);
+    for r in results {
+        match r.chunk.bytes.as_ref() {
+            Some(b) => {
+                assert_eq!(b.len() as u64, r.len, "truncated piece at {}", r.offset);
+                assert_eq!(
+                    pattern::verify(file, r.offset, b),
+                    None,
+                    "data corruption at offset {}",
+                    r.offset
+                );
+                served += r.len;
+            }
+            None => degraded += r.len,
+        }
+    }
+    (served, degraded)
+}
+
+// ---------------------------------------------------------------------
+// 1. Straggler-only: slow is not failed
+// ---------------------------------------------------------------------
+
+#[test]
+fn straggler_only_schedule_serves_every_byte_with_zero_retries() {
+    let size = 256 * KIB;
+    // Two OSTs, both straggling 8× for the whole run, striped so every
+    // RPC lands on a straggler. The default 200 ms deadline is far above
+    // the stretched service time: nothing may time out or retry.
+    let pfs = PfsConfig {
+        ost_count: 2,
+        stripe_count: 2,
+        stripe_size: 32 * KIB,
+        faults: FaultPlan {
+            stragglers: vec![
+                StragglerSpec { ost: 0, multiplier: 8.0, from: 0, until: Time::MAX },
+                StragglerSpec { ost: 1, multiplier: 8.0, from: 0, until: Time::MAX },
+            ],
+            ..Default::default()
+        },
+        ..chaos_pfs(FaultPlan::default())
+    };
+    let (mut eng, file, io) = chaos_engine(pfs, size, RetryPolicy::default());
+    open_file(&mut eng, &io, file, size);
+    let s = start_session(&mut eng, &io, file, size);
+    let results = read_all(&mut eng, &io, &s, size);
+    let (served, degraded) = split_and_verify(file, &results);
+    assert_eq!((served, degraded), (size, 0), "slow reads must still deliver data");
+
+    let o = close_session(&mut eng, &io, s.id);
+    assert!(o.is_clean(), "straggler-only outcome must be clean: {o:?}");
+    assert_eq!(o.served_bytes, size);
+    assert_eq!((o.retries, o.hedges, o.gave_up_spans), (0, 0, 0));
+
+    let m = &eng.core.metrics;
+    assert!(m.counter(keys::FAULT_STRAGGLER) > 0, "the stragglers must have been hit");
+    assert_eq!(m.counter(keys::RETRY_ATTEMPTS), 0, "no retry on a healthy-but-slow read");
+    assert_eq!(m.counter(keys::RETRY_TIMEOUTS), 0, "the deadline must not fire");
+    assert_eq!(m.counter(keys::SESSION_DEGRADED), 0);
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+}
+
+// ---------------------------------------------------------------------
+// 2. Transient EIO: retries clear it, bytes stay verified
+// ---------------------------------------------------------------------
+
+#[test]
+fn transient_faults_clear_on_retry_and_bytes_stay_verified() {
+    let size = 512 * KIB; // 32 slots: plenty of fault draws at p = 0.3
+    let pfs = chaos_pfs(FaultPlan { transient_p: 0.3, ..Default::default() });
+    // A deep attempt budget: at p = 0.3 a slot exhausting 12 attempts
+    // has probability ~5e-7 — the seeded schedule serves everything.
+    let policy = RetryPolicy { max_attempts: 12, ..RetryPolicy::default() };
+    let (mut eng, file, io) = chaos_engine(pfs, size, policy);
+    open_file(&mut eng, &io, file, size);
+    let s = start_session(&mut eng, &io, file, size);
+    let results = read_all(&mut eng, &io, &s, size);
+    let (served, degraded) = split_and_verify(file, &results);
+    assert_eq!(served + degraded, size, "exactly-once byte accounting");
+    assert_eq!(degraded, 0, "transient faults must clear within the budget");
+
+    let o = close_session(&mut eng, &io, s.id);
+    assert!(o.is_clean(), "transient outcome must be clean: {o:?}");
+    assert_eq!(o.served_bytes, size);
+    assert!(o.retries > 0, "p = 0.3 over 32 first attempts must fault somewhere");
+
+    // The session outcome and the engine-wide metrics are two views of
+    // the same counters: they must agree exactly.
+    let m = &eng.core.metrics;
+    assert!(m.counter(keys::FAULT_TRANSIENT) > 0);
+    assert_eq!(m.counter(keys::RETRY_ATTEMPTS), o.retries);
+    assert_eq!(m.counter(keys::RETRY_GAVE_UP), 0);
+    assert_eq!(m.counter(keys::SESSION_DEGRADED), 0);
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+}
+
+// ---------------------------------------------------------------------
+// 3. Persistent EIO at p = 1.0: exact exhaustion accounting
+// ---------------------------------------------------------------------
+
+#[test]
+fn persistent_faults_exhaust_the_budget_with_exact_counts() {
+    let size = 128 * KIB; // 8 slots over 2 buffer chares
+    let slots = size / SPLINTER;
+    let pfs = chaos_pfs(FaultPlan { persistent_p: 1.0, ..Default::default() });
+    let policy = RetryPolicy::default(); // max_attempts = 4
+    let (mut eng, file, io) = chaos_engine(pfs, size, policy);
+    open_file(&mut eng, &io, file, size);
+    let s = start_session(&mut eng, &io, file, size);
+    let results = read_all(&mut eng, &io, &s, size);
+    let (served, degraded) = split_and_verify(file, &results);
+    assert_eq!((served, degraded), (0, size), "every extent is permanently bad");
+
+    let o = close_session(&mut eng, &io, s.id);
+    assert!(!o.is_clean());
+    assert_eq!(o.served_bytes, 0);
+    assert_eq!(o.degraded_bytes, size, "every byte degrades, delivered exactly once");
+    assert_eq!(o.gave_up_spans, slots, "one give-up per slot");
+    assert_eq!(
+        o.retries,
+        (policy.max_attempts as u64 - 1) * slots,
+        "each slot re-issues exactly max_attempts - 1 times"
+    );
+    assert_eq!(o.hedges, 0);
+
+    let m = &eng.core.metrics;
+    assert_eq!(m.counter(keys::RETRY_ATTEMPTS), o.retries);
+    assert_eq!(m.counter(keys::RETRY_GAVE_UP), slots);
+    assert_eq!(
+        m.counter(keys::FAULT_PERSISTENT),
+        policy.max_attempts as u64 * slots,
+        "every attempt of every slot surfaces the persistent fault"
+    );
+    assert_eq!(m.counter(keys::RETRY_TIMEOUTS), 0, "failures completed, nothing timed out");
+    assert_eq!(m.counter(keys::SESSION_DEGRADED), size);
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+}
+
+// ---------------------------------------------------------------------
+// 4. Short reads ride the same retry machine as errors
+// ---------------------------------------------------------------------
+
+#[test]
+fn short_reads_retry_and_exhaust_exactly_like_errors() {
+    let size = 128 * KIB;
+    let slots = size / SPLINTER;
+    let pfs = chaos_pfs(FaultPlan { short_p: 1.0, ..Default::default() });
+    let policy = RetryPolicy::default();
+    let (mut eng, file, io) = chaos_engine(pfs, size, policy);
+    open_file(&mut eng, &io, file, size);
+    let s = start_session(&mut eng, &io, file, size);
+    let results = read_all(&mut eng, &io, &s, size);
+    let (served, degraded) = split_and_verify(file, &results);
+    assert_eq!((served, degraded), (0, size), "a permanent short never fills its slot");
+
+    let o = close_session(&mut eng, &io, s.id);
+    assert_eq!(o.degraded_bytes, size);
+    assert_eq!(o.gave_up_spans, slots);
+    assert_eq!(o.retries, (policy.max_attempts as u64 - 1) * slots);
+
+    // A short with a useless (< 1 byte) prefix is surfaced as a plain
+    // transient error; together the two must cover every attempt.
+    let m = &eng.core.metrics;
+    assert!(m.counter(keys::FAULT_SHORT) > 0, "p = 1.0 must produce short completions");
+    assert_eq!(
+        m.counter(keys::FAULT_SHORT) + m.counter(keys::FAULT_TRANSIENT),
+        policy.max_attempts as u64 * slots
+    );
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+}
+
+// ---------------------------------------------------------------------
+// 5. Mixed persistence: survivors verified, equations hold either way
+// ---------------------------------------------------------------------
+
+#[test]
+fn mixed_persistence_verifies_surviving_spans() {
+    let size = 256 * KIB; // 16 slots; the extent hash picks the victims
+    let pfs = chaos_pfs(FaultPlan { persistent_p: 0.35, ..Default::default() });
+    let policy = RetryPolicy::default();
+    let (mut eng, file, io) = chaos_engine(pfs, size, policy);
+    open_file(&mut eng, &io, file, size);
+    let s = start_session(&mut eng, &io, file, size);
+    let results = read_all(&mut eng, &io, &s, size);
+    // Surviving spans carry verified bytes; bad extents degrade. The
+    // split itself is seed-determined, but the accounting identities
+    // hold for any split.
+    let (served, degraded) = split_and_verify(file, &results);
+    assert_eq!(served + degraded, size, "exactly-once byte accounting");
+
+    let o = close_session(&mut eng, &io, s.id);
+    assert_eq!(o.served_bytes, served, "outcome and delivered chunks must agree");
+    assert_eq!(o.degraded_bytes, degraded);
+    assert_eq!(o.degraded_bytes, o.gave_up_spans * SPLINTER, "degradation is whole slots");
+    assert_eq!(
+        o.retries,
+        (policy.max_attempts as u64 - 1) * o.gave_up_spans,
+        "persistent faults retry to exhaustion; healthy extents never retry"
+    );
+    let m = &eng.core.metrics;
+    assert_eq!(m.counter(keys::FAULT_PERSISTENT), policy.max_attempts as u64 * o.gave_up_spans);
+    assert_eq!(m.counter(keys::SESSION_DEGRADED), degraded);
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+}
+
+// ---------------------------------------------------------------------
+// 6. Deadline timeouts: abandon, return the ticket, back off, re-issue
+// ---------------------------------------------------------------------
+
+#[test]
+fn deadline_timeouts_abandon_and_reissue_with_exact_accounting() {
+    let size = 128 * KIB;
+    let slots = size / SPLINTER;
+    // No PFS faults at all — the deadline is the only adversary. 1 µs is
+    // far below the 300 µs RPC overhead, so *every* attempt times out
+    // before its (healthy) completion lands.
+    let pfs = chaos_pfs(FaultPlan::default());
+    let policy = RetryPolicy {
+        max_attempts: 3,
+        default_deadline_ns: 1_000,
+        ..RetryPolicy::default()
+    };
+    let (mut eng, file, io) = chaos_engine(pfs, size, policy);
+    open_file(&mut eng, &io, file, size);
+    let s = start_session(&mut eng, &io, file, size);
+    let results = read_all(&mut eng, &io, &s, size);
+    let (served, degraded) = split_and_verify(file, &results);
+    assert_eq!((served, degraded), (0, size), "abandoned attempts never deliver");
+
+    let o = close_session(&mut eng, &io, s.id);
+    assert_eq!(o.gave_up_spans, slots);
+    assert_eq!(o.degraded_bytes, size);
+    assert_eq!(o.retries, (policy.max_attempts as u64 - 1) * slots);
+
+    let m = &eng.core.metrics;
+    assert_eq!(
+        m.counter(keys::RETRY_TIMEOUTS),
+        policy.max_attempts as u64 * slots,
+        "every attempt's deadline expires"
+    );
+    assert_eq!(
+        m.counter(keys::RETRY_LATE),
+        policy.max_attempts as u64 * slots,
+        "every abandoned attempt's completion arrives late and is dropped"
+    );
+    assert_eq!(m.counter(keys::FAULT_TRANSIENT), 0, "the PFS itself was healthy");
+    close_file(&mut eng, &io, file);
+    // The decisive leak check: every abandoned attempt returned its
+    // ticket at timeout, every late completion returned nothing.
+    assert_service_clean(&eng, &io);
+}
+
+// ---------------------------------------------------------------------
+// 7. Hedged reads: duplicates race, slots settle exactly once
+// ---------------------------------------------------------------------
+
+#[test]
+fn hedged_reads_settle_every_slot_exactly_once() {
+    let size = 128 * KIB;
+    let slots = size / SPLINTER;
+    let pfs = chaos_pfs(FaultPlan::default());
+    // 50 µs deadline under a ~300 µs service floor: every first attempt
+    // goes overdue, stays live, and races a hedged duplicate.
+    let policy =
+        RetryPolicy { default_deadline_ns: 50_000, ..RetryPolicy::default() }.with_hedging();
+    let (mut eng, file, io) = chaos_engine(pfs, size, policy);
+    open_file(&mut eng, &io, file, size);
+    let s = start_session(&mut eng, &io, file, size);
+    let results = read_all(&mut eng, &io, &s, size);
+    let (served, degraded) = split_and_verify(file, &results);
+    assert_eq!((served, degraded), (size, 0), "hedging must not degrade a healthy read");
+
+    let o = close_session(&mut eng, &io, s.id);
+    assert!(o.is_clean(), "hedged outcome must be clean: {o:?}");
+    assert_eq!(o.served_bytes, size);
+    assert!(o.hedges >= slots, "every slot's first attempt goes overdue and hedges");
+    assert_eq!(o.retries, 0, "hedges are duplicates, never charged as retries");
+    assert_eq!(o.gave_up_spans, 0);
+
+    let m = &eng.core.metrics;
+    assert_eq!(m.counter(keys::RETRY_HEDGES), o.hedges);
+    assert!(
+        m.counter(keys::RETRY_TIMEOUTS) >= o.hedges,
+        "every hedge was armed by an expired deadline"
+    );
+    assert_eq!(m.counter(keys::RETRY_LATE), 0, "hedge losers complete live, not late");
+    close_file(&mut eng, &io, file);
+    assert_service_clean(&eng, &io);
+}
+
+// ---------------------------------------------------------------------
+// 8. Owner-death reclaim (satellite regression): tickets return in bulk
+// ---------------------------------------------------------------------
+
+const EP_GO: Ep = 1;
+const EP_OPENED: Ep = 2;
+const EP_READY: Ep = 3;
+const EP_DATA: Ep = 4;
+const EP_CLOSED: Ep = 5;
+const EP_FCLOSED: Ep = 6;
+
+/// Issues reads and the session close in the same handler, so the drop
+/// lands while the buffers' governed greedy reads (and their retry
+/// deadlines) are still in flight — the owner-death path.
+struct RetryRacyCloser {
+    io: CkIo,
+    file: FileId,
+    size: u64,
+    n_reads: u32,
+    reads_seen: u32,
+    outcome: Option<SessionOutcome>,
+    file_closed: bool,
+    done: Callback,
+}
+
+impl RetryRacyCloser {
+    fn maybe_done(&mut self, ctx: &mut Ctx<'_>) {
+        if self.file_closed && self.reads_seen == self.n_reads {
+            let done = self.done.clone();
+            ctx.fire(done, Payload::empty());
+        }
+    }
+}
+
+impl Chare for RetryRacyCloser {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_GO => {
+                let me = ctx.me();
+                let (io, file, size) = (self.io, self.file, self.size);
+                io.open(
+                    ctx,
+                    file,
+                    size,
+                    FileOptions::with_readers(2),
+                    Callback::to_chare(me, EP_OPENED),
+                );
+            }
+            EP_OPENED => {
+                let me = ctx.me();
+                let (io, file, size) = (self.io, self.file, self.size);
+                io.start_read_session(
+                    ctx,
+                    file,
+                    0,
+                    size,
+                    SessionOptions { splinter_bytes: Some(SPLINTER), ..Default::default() },
+                    Callback::to_chare(me, EP_READY),
+                );
+            }
+            EP_READY => {
+                let s: Session = msg.take();
+                let me = ctx.me();
+                let io = self.io;
+                // Reads and the close depart together: the drop reaches
+                // the buffers while their governed greedy reads are
+                // mid-service, deadlines armed.
+                let per = self.size / self.n_reads as u64;
+                for i in 0..self.n_reads as u64 {
+                    io.read(ctx, &s, i * per, per, Callback::to_chare(me, EP_DATA));
+                }
+                io.close_read_session(ctx, s.id, Callback::to_chare(me, EP_CLOSED));
+            }
+            EP_DATA => {
+                let r: ReadResult = msg.take();
+                assert!(r.len > 0);
+                self.reads_seen += 1;
+                assert!(self.reads_seen <= self.n_reads, "a read callback fired twice");
+                self.maybe_done(ctx);
+            }
+            EP_CLOSED => {
+                let o: SessionOutcome = msg.take();
+                assert!(self.outcome.is_none(), "close callback fired twice");
+                self.outcome = Some(o);
+                let me = ctx.me();
+                let (io, file) = (self.io, self.file);
+                io.close(ctx, file, Callback::to_chare(me, EP_FCLOSED));
+            }
+            EP_FCLOSED => {
+                self.file_closed = true;
+                self.maybe_done(ctx);
+            }
+            other => panic!("RetryRacyCloser: unknown ep {other}"),
+        }
+    }
+    impl_chare_any!();
+}
+
+#[test]
+fn closing_mid_flight_reclaims_tickets_from_the_dead_owner() {
+    let size = 1024 * KIB;
+    let n_reads = 8u32;
+    let pfs = chaos_pfs(FaultPlan::default());
+    let (mut eng, file, io) = chaos_engine(pfs, size, RetryPolicy::default());
+    let fut = eng.future(1);
+    let c = eng.create_singleton(Pe(1), RetryRacyCloser {
+        io,
+        file,
+        size,
+        n_reads,
+        reads_seen: 0,
+        outcome: None,
+        file_closed: false,
+        done: Callback::Future(fut),
+    });
+    eng.inject_signal(c, EP_GO);
+    eng.run(); // must quiesce: late timers and completions all no-op
+    assert!(eng.future_done(fut), "reads or closes never completed");
+
+    let closer: &RetryRacyCloser = eng.chare(c);
+    assert_eq!(closer.reads_seen, n_reads, "every racing read completes exactly once");
+    let o = closer.outcome.expect("the racing close must deliver its outcome");
+    assert!(
+        o.served_bytes + o.degraded_bytes <= size,
+        "the outcome never reports more bytes than the session owned"
+    );
+
+    // The regression itself: the drop found governed reads in flight and
+    // reclaimed their tickets in bulk — and afterwards the governor
+    // holds no inflight count, no queued demand, nothing.
+    assert!(
+        eng.core.metrics.counter(keys::GOV_RECLAIMED) > 0,
+        "teardown mid-flight must take the bulk-reclaim path"
+    );
+    assert_service_clean(&eng, &io);
+    assert_eq!(io.cached_buffer_arrays(&eng), 0);
+}

@@ -37,7 +37,7 @@ fn fixture_tree_yields_planted_findings() {
     assert_eq!(count(Check::DeadEp), 1, "{findings:?}");
     assert_eq!(count(Check::StaleEpRef), 1, "{findings:?}");
     assert_eq!(count(Check::PayloadMismatch), 1, "{findings:?}");
-    assert_eq!(count(Check::MetricsLiteral), 1, "{findings:?}");
+    assert_eq!(count(Check::MetricsLiteral), 2, "{findings:?}");
     assert_eq!(count(Check::TraceLiteral), 1, "{findings:?}");
     assert_eq!(count(Check::StashHygiene), 1, "{findings:?}");
     assert_eq!(count(Check::SpecCoverage), 0, "{findings:?}");
@@ -45,6 +45,7 @@ fn fixture_tree_yields_planted_findings() {
     assert!(findings.iter().any(|f| f.message.contains("EP_GHOST")));
     assert!(findings.iter().any(|f| f.message.contains("BarMsg")));
     assert!(findings.iter().any(|f| f.message.contains("ckio.rogue")));
+    assert!(findings.iter().any(|f| f.message.contains("ckio.fault.rogue")));
     assert!(findings.iter().any(|f| f.message.contains("ticket/rogue")));
     assert!(findings.iter().any(|f| f.message.contains("pending_things")));
 }
