@@ -1,0 +1,64 @@
+//! Consumer-side locality (flow-matrix-driven consumer migration), narrated.
+//!
+//! Two sessions over one shared file; each session's consumers start on
+//! PEs that hold none of their data, while the session's buffers are
+//! pinned elsewhere — the static worst case, where every delivered piece
+//! byte crosses PEs. The assembler charges each piece delivery to its
+//! (consumer, source-PE) flow account; at the piece threshold the
+//! director advises each consumer to migrate to its dominant source PE
+//! (AMT location-managed, with hysteresis and a hard per-session
+//! migration budget), and the remaining reads become PE-local.
+//!
+//! ```sh
+//! cargo run --release --example consumer_locality
+//! ```
+
+use ckio::ckio::{ConsumerPlacement, ServiceConfig};
+use ckio::harness::experiments::{assert_service_clean, run_svc_overlap, OVERLAP_SHAPE};
+
+fn main() {
+    let (nodes, pes, file_bytes, consumers, rounds) = OVERLAP_SHAPE;
+    println!(
+        "{nodes}x{pes} PEs, {} shared file, 2 sessions x {consumers} consumers x {rounds} rounds;",
+        ckio::util::human_bytes(file_bytes)
+    );
+    println!("consumers on the low PEs, each session's buffers pinned to the high PEs.\n");
+
+    let (st, io_s, eng_s) =
+        run_svc_overlap(ConsumerPlacement::Static, ServiceConfig::default(), false, 42);
+    assert_service_clean(&eng_s, &io_s);
+    let flow = ConsumerPlacement::FlowAware { piece_threshold: 2, migration_budget: 4 };
+    let (fa, io_f, eng_f) = run_svc_overlap(flow, ServiceConfig::default(), false, 42);
+    assert_service_clean(&eng_f, &io_f);
+
+    let mib = |b: u64| b as f64 / (1u64 << 20) as f64;
+    println!(
+        "{:>12}  {:>13}  {:>13}  {:>7}  {:>10}",
+        "placement", "same_pe", "cross_pe", "advised", "migrations"
+    );
+    println!(
+        "{:>12}  {:>9.2} MiB  {:>9.2} MiB  {:>7}  {:>10}",
+        "static",
+        mib(st.same_pe_piece_bytes),
+        mib(st.cross_pe_piece_bytes),
+        st.advised,
+        st.migrations
+    );
+    println!(
+        "{:>12}  {:>9.2} MiB  {:>9.2} MiB  {:>7}  {:>10}",
+        "flow-aware",
+        mib(fa.same_pe_piece_bytes),
+        mib(fa.cross_pe_piece_bytes),
+        fa.advised,
+        fa.migrations
+    );
+    let reduction = 1.0 - fa.cross_pe_piece_bytes as f64 / st.cross_pe_piece_bytes.max(1) as f64;
+    println!(
+        "\ncross-PE piece bytes cut by {:.0}% ({} flow reports; hysteresis kept every",
+        reduction * 100.0,
+        fa.flow_reports
+    );
+    println!("consumer at its dominant source after one move — no ping-pong), and both");
+    println!("runs tore down clean: no flow matrices, accounts, or windows left behind.");
+    assert!(reduction >= 0.5, "flow-aware placement must at least halve cross-PE piece bytes");
+}

@@ -52,6 +52,16 @@ pub trait Chare: Any {
     /// Hook invoked on the destination PE right after a migration.
     fn on_migrated(&mut self, _ctx: &mut Ctx<'_>) {}
 
+    /// Whether this chare is background/best-effort work (e.g. the
+    /// overlap harness's `BgWorker`). The engine charges tasks of
+    /// background chares that execute while their PE has an open
+    /// I/O-wait window to the TASIO-style overlap counters
+    /// (`ckio.overlap.bg_iters` / `ckio.overlap.bg_time`) — the
+    /// "iterations fit inside input time" measurement of Figs. 8–9.
+    fn is_background(&self) -> bool {
+        false
+    }
+
     /// Downcasts for driver-side inspection in tests/experiments.
     fn as_any(&self) -> &dyn Any;
     fn as_any_mut(&mut self) -> &mut dyn Any;

@@ -162,6 +162,19 @@ pub struct Core {
     n_msgs: u64,
     flushed_tasks: u64,
     flushed_msgs: u64,
+    /// I/O-wait overlap accounting (TASIO, arXiv 2011.13823): closed
+    /// admission-wait windows and the background-chare work that fit
+    /// inside them. Per-window state lives in [`PeState`]; these are the
+    /// run-wide totals behind the `ckio.overlap.*` keys (flushed with
+    /// the other hot counters).
+    n_overlap_windows: u64,
+    n_overlap_bg_iters: u64,
+    overlap_bg_ns: Time,
+    overlap_window_ns: Time,
+    flushed_overlap_windows: u64,
+    flushed_overlap_bg_iters: u64,
+    flushed_overlap_bg_ns: Time,
+    flushed_overlap_window_ns: Time,
     /// Declared protocols by collection id (see [`Core::register_protocol`]).
     /// Debug builds validate every send to a registered collection;
     /// collections without a spec (test chares, drivers) are exempt.
@@ -444,12 +457,87 @@ impl Core {
         cid
     }
 
+    /// Raise the I/O-wait overlap hint on `pe` (TASIO): the admission
+    /// governor queued a ticket for a chare on that PE, so the PE is
+    /// logically blocked on input. Waits refcount — the window opens at
+    /// the first queued wait and stays open until every wait drains.
+    /// While open, [`Engine::run_task`] charges background-chare tasks
+    /// on the PE to the overlap counters.
+    pub fn io_wait_begin(&mut self, pe: Pe, now: Time) {
+        let st = &mut self.pes[pe.0 as usize];
+        if st.io_wait_open == 0 {
+            st.io_wait_since = now;
+            st.io_wait_bg_iters = 0;
+            st.io_wait_bg_ns = 0;
+        }
+        st.io_wait_open += 1;
+    }
+
+    /// Drop one I/O wait on `pe`. Closing the last wait folds the window
+    /// into the run-wide overlap totals and (when tracing) emits a
+    /// `sched/overlap` instant carrying the background iterations that
+    /// fit inside it.
+    pub fn io_wait_end(&mut self, pe: Pe, now: Time) {
+        let st = &mut self.pes[pe.0 as usize];
+        debug_assert!(st.io_wait_open > 0, "io_wait_end without a matching begin");
+        st.io_wait_open = st.io_wait_open.saturating_sub(1);
+        if st.io_wait_open > 0 {
+            return;
+        }
+        let span = now.saturating_sub(st.io_wait_since);
+        let (iters, bg_ns) = (st.io_wait_bg_iters, st.io_wait_bg_ns);
+        self.n_overlap_windows += 1;
+        self.n_overlap_bg_iters += iters;
+        self.overlap_bg_ns += bg_ns;
+        self.overlap_window_ns += span;
+        if self.trace.on(TraceCategory::Sched) {
+            self.trace.instant(
+                now,
+                TraceCategory::Sched,
+                trace_names::SCHED_OVERLAP,
+                TraceLane::Pe(pe.0),
+                iters,
+                span,
+                "",
+            );
+        }
+    }
+
+    /// Run-wide overlap totals: (closed windows, background iterations
+    /// fit inside them, background ns inside them, total window ns).
+    pub fn overlap_totals(&self) -> (u64, u64, Time, Time) {
+        (self.n_overlap_windows, self.n_overlap_bg_iters, self.overlap_bg_ns, self.overlap_window_ns)
+    }
+
     /// Flush hot counters into the metrics sink (idempotent deltas).
     fn flush_hot_counters(&mut self) {
         self.metrics.count(keys::TASKS, self.n_tasks - self.flushed_tasks);
         self.metrics.count(keys::MSGS, self.n_msgs - self.flushed_msgs);
         self.flushed_tasks = self.n_tasks;
         self.flushed_msgs = self.n_msgs;
+        if self.n_overlap_windows > self.flushed_overlap_windows {
+            self.metrics
+                .count(keys::OVERLAP_WINDOWS, self.n_overlap_windows - self.flushed_overlap_windows);
+            self.flushed_overlap_windows = self.n_overlap_windows;
+        }
+        if self.n_overlap_bg_iters > self.flushed_overlap_bg_iters {
+            self.metrics.count(
+                keys::OVERLAP_BG_ITERS,
+                self.n_overlap_bg_iters - self.flushed_overlap_bg_iters,
+            );
+            self.flushed_overlap_bg_iters = self.n_overlap_bg_iters;
+        }
+        if self.overlap_bg_ns > self.flushed_overlap_bg_ns {
+            self.metrics.charge(keys::OVERLAP_BG_TIME, self.overlap_bg_ns - self.flushed_overlap_bg_ns);
+            self.flushed_overlap_bg_ns = self.overlap_bg_ns;
+        }
+        if self.overlap_window_ns > self.flushed_overlap_window_ns {
+            self.metrics.charge(
+                keys::OVERLAP_WINDOW_TIME,
+                self.overlap_window_ns - self.flushed_overlap_window_ns,
+            );
+            self.flushed_overlap_window_ns = self.overlap_window_ns;
+        }
         if self.trace.is_enabled() {
             // Ring truncation is never silent: surface the drop count.
             let d = self.trace.take_unflushed_dropped();
@@ -592,6 +680,22 @@ impl<'a> Ctx<'a> {
         self.core.open_file(self.pe, cb);
     }
 
+    /// Raise the I/O-wait overlap hint for `pe` (see
+    /// [`Core::io_wait_begin`]): the data plane calls this when the
+    /// governor queues a ticket for a chare on that PE, so background
+    /// work drained there during the wait is charged to the
+    /// `ckio.overlap.*` counters.
+    pub fn io_wait_begin(&mut self, pe: Pe) {
+        let now = self.core.now();
+        self.core.io_wait_begin(pe, now);
+    }
+
+    /// Drop one I/O wait on `pe` (see [`Core::io_wait_end`]).
+    pub fn io_wait_end(&mut self, pe: Pe) {
+        let now = self.core.now();
+        self.core.io_wait_end(pe, now);
+    }
+
     /// Request migration of this chare to `pe` after this task completes.
     pub fn migrate_me(&mut self, pe: Pe) {
         assert!(
@@ -690,6 +794,14 @@ impl Engine {
                 n_msgs: 0,
                 flushed_tasks: 0,
                 flushed_msgs: 0,
+                n_overlap_windows: 0,
+                n_overlap_bg_iters: 0,
+                overlap_bg_ns: 0,
+                overlap_window_ns: 0,
+                flushed_overlap_windows: 0,
+                flushed_overlap_bg_iters: 0,
+                flushed_overlap_bg_ns: 0,
+                flushed_overlap_window_ns: 0,
                 protocols: HashMap::new(),
                 debug_sender: None,
             },
@@ -1053,6 +1165,13 @@ impl Engine {
         let st = &mut self.core.pes[pe.0 as usize];
         st.busy_until = done_t;
         st.account(cost);
+        // TASIO overlap accounting: a background-chare task that ran
+        // while this PE had an open I/O-wait window is an iteration
+        // that fit inside input time.
+        if st.io_wait_open > 0 && chare.is_background() {
+            st.io_wait_bg_iters += 1;
+            st.io_wait_bg_ns += cost;
+        }
         self.core.n_tasks += 1;
         if self.core.trace.on(TraceCategory::Sched) {
             self.core.trace.complete(
@@ -1312,6 +1431,135 @@ mod tests {
         assert_eq!(got.len(), 1);
         assert_eq!(got[0].1.take::<Pe>(), Pe(1));
         assert!(eng.core.metrics.counter(keys::MIGRATIONS) >= 1);
+    }
+
+    /// PR 9 satellite (AMT): repeated migrations are each counted
+    /// exactly once, and a probe injected between hops always finds the
+    /// element at its newest PE — stale routes are corrected, never
+    /// trusted.
+    #[test]
+    fn chained_migrations_count_once_each_and_routing_follows() {
+        let mut eng = Engine::new(EngineConfig::sim(2, 2));
+        let fut = eng.future(3);
+        let cid = eng.create_array(1, &Placement::Explicit(vec![Pe(0)]), |_| Roamer {
+            report: Callback::Future(fut),
+            migrated_hook_ran: false,
+        });
+        let roamer = ChareRef::new(cid, 0);
+        for dest in [1u32, 2, 3] {
+            eng.inject(roamer, EP_GO, Pe(dest));
+            eng.inject_signal(roamer, EP_WHERE);
+            eng.run();
+            assert_eq!(eng.pe_of(roamer), Pe(dest));
+        }
+        assert_eq!(eng.core.metrics.counter(keys::MIGRATIONS), 3, "one count per hop");
+        let got = eng.take_future(fut);
+        let pes: Vec<Pe> = got.into_iter().map(|(_, mut p)| p.take::<Pe>()).collect();
+        assert_eq!(pes, vec![Pe(1), Pe(2), Pe(3)], "each probe chased its hop");
+        assert_eq!(eng.core.loc.buffered_count(), 0, "no stranded forwarded envelopes");
+    }
+
+    /// PR 9 satellite (AMT): a burst of messages already in flight when
+    /// the element migrates is forwarded in full — none lost, none
+    /// delivered at the old PE — and the location manager buffers
+    /// nothing once the migration completes.
+    #[test]
+    fn in_flight_burst_is_forwarded_across_migration() {
+        let mut eng = Engine::new(EngineConfig::sim(2, 1));
+        let fut = eng.future(8);
+        let cid = eng.create_array(1, &Placement::Explicit(vec![Pe(0)]), |_| Roamer {
+            report: Callback::Future(fut),
+            migrated_hook_ran: false,
+        });
+        let roamer = ChareRef::new(cid, 0);
+        eng.inject(roamer, EP_GO, Pe(1));
+        for _ in 0..8 {
+            eng.inject_signal(roamer, EP_WHERE);
+        }
+        eng.run();
+        assert_eq!(eng.pe_of(roamer), Pe(1));
+        let got = eng.take_future(fut);
+        assert_eq!(got.len(), 8, "every in-flight probe must be delivered");
+        for (_, mut p) in got {
+            assert_eq!(p.take::<Pe>(), Pe(1), "probes must not land on the old PE");
+        }
+        assert_eq!(eng.core.metrics.counter(keys::MIGRATIONS), 1);
+        assert_eq!(eng.core.loc.buffered_count(), 0);
+    }
+
+    /// PR 9 satellite (AMT): `on_migrated` runs on the new PE before any
+    /// forwarded message is delivered — arrival-side state is ready
+    /// before traffic resumes.
+    #[test]
+    fn on_migrated_runs_before_forwarded_messages() {
+        struct Arrival {
+            probes_after_hook: u32,
+            hook_ran: bool,
+        }
+        const EP_AGO: Ep = 1;
+        const EP_APROBE: Ep = 2;
+        impl Chare for Arrival {
+            fn receive(&mut self, ctx: &mut Ctx, mut msg: Msg) {
+                match msg.ep {
+                    EP_AGO => {
+                        let dest: Pe = msg.take();
+                        ctx.migrate_me(dest);
+                    }
+                    EP_APROBE => {
+                        assert!(self.hook_ran, "forwarded message delivered before on_migrated");
+                        self.probes_after_hook += 1;
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            fn on_migrated(&mut self, _ctx: &mut Ctx) {
+                self.hook_ran = true;
+            }
+            impl_chare_any!();
+        }
+        let mut eng = Engine::new(EngineConfig::sim(2, 1));
+        let cid = eng.create_array(1, &Placement::Explicit(vec![Pe(0)]), |_| Arrival {
+            probes_after_hook: 0,
+            hook_ran: false,
+        });
+        let a = ChareRef::new(cid, 0);
+        eng.inject(a, EP_AGO, Pe(1));
+        for _ in 0..3 {
+            eng.inject_signal(a, EP_APROBE);
+        }
+        eng.run();
+        let arrived = eng.chare::<Arrival>(a);
+        assert!(arrived.hook_ran);
+        assert_eq!(arrived.probes_after_hook, 3, "all probes delivered after the hook");
+    }
+
+    /// PR 9 satellite (AMT): after a migration settles, fresh sends
+    /// route on the updated location, and the element can migrate back —
+    /// the old home PE's entry was corrected, not merely bypassed.
+    #[test]
+    fn post_migration_sends_route_fresh_and_element_can_return() {
+        let mut eng = Engine::new(EngineConfig::sim(2, 1));
+        let fut = eng.future(2);
+        let cid = eng.create_array(1, &Placement::Explicit(vec![Pe(0)]), |_| Roamer {
+            report: Callback::Future(fut),
+            migrated_hook_ran: false,
+        });
+        let roamer = ChareRef::new(cid, 0);
+        eng.inject(roamer, EP_GO, Pe(1));
+        eng.run();
+        assert_eq!(eng.pe_of(roamer), Pe(1));
+        eng.inject_signal(roamer, EP_WHERE);
+        eng.run();
+        // Return trip: the corrected route must work in both directions.
+        eng.inject(roamer, EP_GO, Pe(0));
+        eng.inject_signal(roamer, EP_WHERE);
+        eng.run();
+        assert_eq!(eng.pe_of(roamer), Pe(0));
+        let got = eng.take_future(fut);
+        let pes: Vec<Pe> = got.into_iter().map(|(_, mut p)| p.take::<Pe>()).collect();
+        assert_eq!(pes, vec![Pe(1), Pe(0)]);
+        assert_eq!(eng.core.metrics.counter(keys::MIGRATIONS), 2);
+        assert_eq!(eng.core.loc.buffered_count(), 0);
     }
 
     #[test]

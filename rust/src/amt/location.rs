@@ -201,6 +201,18 @@ impl LocationManager {
             Residence::InFlight { .. } => panic!("pe_of: element in flight"),
         }
     }
+
+    /// Messages currently buffered at homes for in-flight elements,
+    /// across every registered array (leak checks: must be 0 at
+    /// quiescence — a stranded forward means a migration never
+    /// completed).
+    pub fn buffered_count(&self) -> usize {
+        self.arrays
+            .iter()
+            .flatten()
+            .map(|a| a.buffered.values().map(Vec::len).sum::<usize>())
+            .sum()
+    }
 }
 
 #[cfg(test)]

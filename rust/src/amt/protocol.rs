@@ -283,6 +283,7 @@ pub fn builtin_table() -> ProtocolTable {
         crate::harness::experiments::collector_protocol_spec(),
         crate::harness::experiments::mig_client_protocol_spec(),
         crate::harness::experiments::concurrent_client_protocol_spec(),
+        crate::harness::experiments::overlap_client_protocol_spec(),
         crate::baselines::naive::protocol_spec(),
         crate::baselines::collective::protocol_spec(),
         crate::apps::changa::treepiece::protocol_spec(),

@@ -25,6 +25,19 @@ pub struct PeState {
     pub tasks_run: u64,
     /// Peak queue depth observed (backpressure signal).
     pub max_queue_depth: usize,
+    /// I/O-wait overlap hint (TASIO, arXiv 2011.13823): number of
+    /// admission waits currently open on this PE. Raised by the data
+    /// plane when the governor queues a ticket for a chare on this PE
+    /// and lowered when the wait drains; while > 0 the engine charges
+    /// background-chare tasks to the overlap counters.
+    pub io_wait_open: u32,
+    /// When the current overlap window opened (first queued wait).
+    pub io_wait_since: Time,
+    /// Background-chare tasks run inside the current window.
+    pub io_wait_bg_iters: u64,
+    /// Logical ns of background-chare execution inside the current
+    /// window.
+    pub io_wait_bg_ns: Time,
 }
 
 impl PeState {

@@ -141,6 +141,7 @@ impl CkIo {
         );
         patch_director::<Manager>(engine, managers, npes, director, |m| &mut m.director);
         patch_director::<DataShard>(engine, shards, nshards, director, |s| &mut s.director);
+        patch_director::<ReadAssembler>(engine, assemblers, npes, director, |a| &mut a.director);
         // Prove the declared EP graph sound before any message can flow,
         // and arm the engine's per-send validation (debug builds) for
         // every service collection. Buffer arrays are registered by the

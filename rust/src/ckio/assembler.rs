@@ -17,7 +17,7 @@
 use std::collections::{HashMap, HashSet};
 
 use crate::amt::callback::Callback;
-use crate::amt::chare::{Chare, ChareRef};
+use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg, Payload};
 use crate::amt::protocol::{PayloadKind, ProtocolSpec};
@@ -29,7 +29,8 @@ use crate::util::bytes::Chunk;
 use crate::{ep_spec, send_spec};
 
 use super::buffer::{FetchMsg, PieceMsg, EP_BUF_FETCH};
-use super::session::{ClosedSessions, ReadResult, Session, SessionId, Tag};
+use super::director::EP_DIR_FLOW_REPORT;
+use super::session::{ClosedSessions, FlowReportMsg, ReadResult, Session, SessionId, Tag};
 
 /// A read request forwarded from the local manager.
 pub const EP_A_REQ: Ep = 1;
@@ -57,10 +58,28 @@ struct Assembly {
     pieces: Vec<Chunk>,
     after: Callback,
     started_at: Time,
+    /// The consumer chare this read is delivered to (PR 9): the
+    /// `after` callback's target, when it is a chare callback. Flow
+    /// accounts are charged per consumer, so advice can name who to
+    /// move; future/broadcast callbacks have no migratable consumer.
+    consumer: Option<ChareRef>,
+    /// The owning session's [`Session::flow_threshold`], copied at
+    /// request time (0 = Static session, keep no accounts).
+    flow_threshold: u32,
+}
+
+/// Per-(consumer, source-PE) delivery account since the last flow
+/// report (PR 9): deltas, flushed to the director every
+/// `flow_threshold` pieces.
+#[derive(Debug, Default)]
+struct ConsumerFlow {
+    /// source buffer PE → bytes delivered from it.
+    by_pe: HashMap<u32, u64>,
+    /// Pieces delivered since the last report.
+    pieces: u32,
 }
 
 /// Per-PE read assembler.
-#[derive(Default)]
 pub struct ReadAssembler {
     assemblies: HashMap<Tag, Assembly>,
     /// Sessions known to be torn down (late-piece tolerance; bounded —
@@ -69,8 +88,31 @@ pub struct ReadAssembler {
     /// Sessions whose first assembled byte this PE has already traced
     /// (populated only while tracing — the `session/first_byte` marker).
     first_served: HashSet<SessionId>,
+    /// Consumer-flow accounts for FlowAware sessions (PR 9), keyed by
+    /// session so a drop removes exactly that session's accounts.
+    /// Bounded: each account resets when its delta is reported, and the
+    /// whole entry dies with `EP_A_SESSION_DROP`. Leak-checked via
+    /// [`ReadAssembler::flow_accounts`] in `assert_service_clean`.
+    flows: HashMap<SessionId, HashMap<ChareRef, ConsumerFlow>>,
+    /// Patched right after boot (pre-run, like the managers' director).
+    pub director: ChareRef,
     /// Total reads assembled (inspection).
     pub completed: u64,
+}
+
+impl Default for ReadAssembler {
+    fn default() -> ReadAssembler {
+        ReadAssembler {
+            assemblies: HashMap::new(),
+            closed: ClosedSessions::default(),
+            first_served: HashSet::new(),
+            flows: HashMap::new(),
+            // Placeholder — replaced by `patch_director` before any
+            // message is in flight (boot wiring, as for managers/shards).
+            director: ChareRef::new(CollectionId(0), 0),
+            completed: 0,
+        }
+    }
 }
 
 impl ReadAssembler {
@@ -130,6 +172,19 @@ impl ReadAssembler {
     pub fn outstanding(&self) -> usize {
         self.assemblies.len()
     }
+
+    /// Sessions with a live first-byte trace mark on this PE. A dropped
+    /// session must not linger here (the PR 9 regression guard for the
+    /// `EP_A_SESSION_DROP` cleanup of `first_served`).
+    pub fn first_served_count(&self) -> usize {
+        self.first_served.len()
+    }
+
+    /// Sessions with live consumer-flow accounts (leak checks: must be
+    /// 0 after all sessions close — accounts die with the drop).
+    pub fn flow_accounts(&self) -> usize {
+        self.flows.len()
+    }
 }
 
 /// The assembler's declared message protocol (see [`crate::amt::protocol`]).
@@ -144,7 +199,10 @@ pub fn protocol_spec() -> ProtocolSpec {
             ep_spec!(EP_A_PIECE, PayloadKind::of::<PieceMsg>()),
             ep_spec!(EP_A_SESSION_DROP, PayloadKind::of::<SessionId>()),
         ],
-        sends: vec![send_spec!("BufferChare", EP_BUF_FETCH, PayloadKind::of::<FetchMsg>())],
+        sends: vec![
+            send_spec!("BufferChare", EP_BUF_FETCH, PayloadKind::of::<FetchMsg>()),
+            send_spec!("Director", EP_DIR_FLOW_REPORT, PayloadKind::of::<FlowReportMsg>()),
+        ],
     }
 }
 
@@ -187,6 +245,10 @@ impl Chare for ReadAssembler {
                     );
                 }
                 ctx.advance(400);
+                let consumer = match &req.after {
+                    Callback::Chare { to, .. } => Some(*to),
+                    _ => None,
+                };
                 self.assemblies.insert(req.tag, Assembly {
                     session: req.session.id,
                     offset: req.offset,
@@ -195,6 +257,8 @@ impl Chare for ReadAssembler {
                     pieces: Vec::with_capacity(nbuf as usize),
                     after: req.after,
                     started_at: ctx.now(),
+                    consumer,
+                    flow_threshold: req.session.flow_threshold,
                 });
             }
             EP_A_PIECE => {
@@ -209,6 +273,44 @@ impl Chare for ReadAssembler {
                     }
                     panic!("piece for unknown assembly (tag reuse or drop race): {:?}", piece.tag);
                 };
+                // Piece-leg locality (PR 9): the buffer→assembler hop,
+                // the delivery counterpart of the buffer↔buffer
+                // `ckio.place.same_pe_fetch`/`cross_pe_fetch` pair.
+                // Always on — observable without FlowAware.
+                if piece.src_pe == ctx.pe().0 {
+                    ctx.metrics().count(keys::PLACE_PIECE_SAME_PE, piece.chunk.len);
+                } else {
+                    ctx.metrics().count(keys::PLACE_PIECE_CROSS_PE, piece.chunk.len);
+                }
+                // Flow accounts (FlowAware sessions only): charge the
+                // delivery to this read's consumer, per source PE, and
+                // flush the delta to the director every
+                // `flow_threshold` pieces.
+                if a.flow_threshold > 0 {
+                    if let Some(consumer) = a.consumer {
+                        let f = self
+                            .flows
+                            .entry(a.session)
+                            .or_default()
+                            .entry(consumer)
+                            .or_default();
+                        *f.by_pe.entry(piece.src_pe).or_default() += piece.chunk.len;
+                        f.pieces += 1;
+                        if f.pieces >= a.flow_threshold {
+                            // Sorted for determinism: HashMap iteration
+                            // order must never leak into message bytes.
+                            let mut by_pe: Vec<(u32, u64)> = f.by_pe.drain().collect();
+                            by_pe.sort_unstable();
+                            f.pieces = 0;
+                            ctx.send(self.director, EP_DIR_FLOW_REPORT, FlowReportMsg {
+                                session: a.session,
+                                consumer,
+                                consumer_pe: ctx.pe().0,
+                                by_pe,
+                            });
+                        }
+                    }
+                }
                 a.pieces.push(piece.chunk);
                 a.remaining -= 1;
                 if a.remaining == 0 {
@@ -219,6 +321,11 @@ impl Chare for ReadAssembler {
                 let sid: SessionId = msg.take();
                 self.closed.insert(sid);
                 self.first_served.remove(&sid);
+                // Flow accounts die with the session (PR 9): unreported
+                // residuals are deliberately discarded — advice for a
+                // closing session is useless, and the director's matrix
+                // is torn down when the close fully acks anyway.
+                self.flows.remove(&sid);
                 // Note: assemblies of `sid` still in flight are NOT
                 // purged — the teardown drain guarantees each of their
                 // pending fetches is answered (resident data or a modeled

@@ -134,6 +134,11 @@ pub struct FetchMsg {
 pub struct PieceMsg {
     pub tag: Tag,
     pub chunk: Chunk,
+    /// PE of the buffer chare that served this piece (PR 9): the
+    /// assembler compares it against its own PE for the
+    /// `ckio.place.piece_same_pe`/`piece_cross_pe` split and charges it
+    /// to the consumer's flow account under FlowAware sessions.
+    pub src_pe: u32,
 }
 
 /// Buffer → buffer: serve `[offset, offset+len)` (the requester's slot
@@ -167,6 +172,10 @@ pub struct IoReqMsg {
     pub sess_bytes: u64,
     /// QoS class of the owning session.
     pub class: QosClass,
+    /// PE the requesting buffer runs on (PR 9): if the governor queues
+    /// this request, the shard raises the I/O-wait overlap hint on that
+    /// PE so background work run there during the wait is measured.
+    pub pe: u32,
 }
 
 /// Director → buffer: revive a parked chare under a new session. The
@@ -711,7 +720,13 @@ impl BufferChare {
             ctx.send(
                 self.shard,
                 EP_SHARD_IO_REQ,
-                IoReqMsg { buffer: me, want, sess_bytes: self.sess_bytes, class: self.class },
+                IoReqMsg {
+                    buffer: me,
+                    want,
+                    sess_bytes: self.sess_bytes,
+                    class: self.class,
+                    pe: ctx.pe().0,
+                },
             );
         }
     }
@@ -754,7 +769,7 @@ impl BufferChare {
         ctx.send_sized(
             to,
             super::assembler::EP_A_PIECE,
-            Payload::new(PieceMsg { tag: f.tag, chunk }),
+            Payload::new(PieceMsg { tag: f.tag, chunk, src_pe: ctx.pe().0 }),
             wire,
             Transfer::ZeroCopy,
         );
@@ -772,7 +787,7 @@ impl BufferChare {
         ctx.send(
             to,
             super::assembler::EP_A_PIECE,
-            PieceMsg { tag: f.tag, chunk: Chunk::modeled(f.offset, f.len) },
+            PieceMsg { tag: f.tag, chunk: Chunk::modeled(f.offset, f.len), src_pe: ctx.pe().0 },
         );
     }
 

@@ -71,7 +71,7 @@
 //!   `(file, range, shape)`; a later identical session rebinds it and is
 //!   served from resident data with no file-system traffic.
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{HashMap, HashSet, VecDeque};
 
 use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
@@ -96,8 +96,13 @@ use super::manager::{
     FileOpenedMsg, SessionAnnounceMsg, EP_M_FILE_CLOSE, EP_M_FILE_OPENED, EP_M_SESSION_ANNOUNCE,
     EP_M_SESSION_DROP,
 };
-use super::options::{FileOptions, OpenError, ReaderPlacement, RetryPolicy, SessionOptions};
-use super::session::{buffer_span_of, FileHandle, Session, SessionId, SessionOutcome};
+use super::options::{
+    ConsumerPlacement, FileOptions, OpenError, ReaderPlacement, RetryPolicy, SessionOptions,
+};
+use super::session::{
+    buffer_span_of, ConsumerAdviceMsg, FileHandle, FlowReportMsg, Session, SessionId,
+    SessionOutcome, EP_CONSUMER_ADVICE,
+};
 use super::shard::{
     shard_of, ParkMsg, PlanMsg, TakeMsg, EP_SHARD_ADMIT, EP_SHARD_PARK, EP_SHARD_PLAN,
     EP_SHARD_PURGE, EP_SHARD_TAKE,
@@ -130,6 +135,12 @@ pub const EP_DIR_CLOSE_ACK: Ep = 11;
 pub const EP_DIR_TAKE_REPLY: Ep = 12;
 /// Shard: answer to a placement-plan probe (`EP_SHARD_PLAN`).
 pub const EP_DIR_PLAN_REPLY: Ep = 13;
+/// Assembler: a consumer-flow delta for a FlowAware session (PR 9).
+/// The director accumulates the per-(consumer, source-PE) matrix and,
+/// when a consumer's dominant source PE is not where it runs, advises
+/// it to migrate there (`EP_CONSUMER_ADVICE`, within the session's
+/// budget and hysteresis).
+pub const EP_DIR_FLOW_REPORT: Ep = 14;
 
 #[derive(Debug)]
 pub struct OpenMsg {
@@ -244,6 +255,20 @@ struct PendingTake {
     fopts: FileOptions,
 }
 
+/// The consumer-flow matrix of one FlowAware session (PR 9): who each
+/// consumer's pieces actually came from, accumulated from assembler
+/// flow-report deltas, plus the advisor's hysteresis and budget state.
+struct FlowState {
+    /// consumer → (source buffer PE → total bytes delivered from it).
+    matrix: HashMap<ChareRef, HashMap<u32, u64>>,
+    /// consumer → PEs it has run on or been advised toward. Advice never
+    /// targets a PE already in this set, so a consumer can never be
+    /// ping-ponged between two sources however the flow shifts.
+    advised: HashMap<ChareRef, HashSet<u32>>,
+    /// Migrations this session may still advise (hard per-session cap).
+    budget_left: u32,
+}
+
 /// A `StoreAware` session start awaiting its shard's placement plan
 /// (PR 4). Same resumption contract as [`PendingTake`]: the options
 /// travel with the probe, so the resume never depends on the file table
@@ -299,6 +324,10 @@ pub struct Director {
     /// StoreAware session starts whose placement plan is at the shard.
     pending_plans: HashMap<u64, PendingPlan>,
     next_plan: u64,
+    /// Consumer-flow matrices of live FlowAware sessions (PR 9), keyed
+    /// by session; armed at session start, torn down when the close
+    /// fully acks. Late flow reports after teardown are tolerated.
+    flows: HashMap<SessionId, FlowState>,
     next_session: u32,
 }
 
@@ -335,7 +364,26 @@ impl Director {
             next_take: 0,
             pending_plans: HashMap::new(),
             next_plan: 0,
+            flows: HashMap::new(),
             next_session: 0,
+        }
+    }
+
+    /// Arm a starting session's consumer-flow matrix when it opted into
+    /// [`ConsumerPlacement::FlowAware`]; returns the flow threshold to
+    /// stamp on the [`Session`] (0 for `Static`: assemblers then keep no
+    /// accounts at all).
+    fn arm_flow(&mut self, sid: SessionId, opts: &SessionOptions) -> u32 {
+        match opts.consumer_placement {
+            ConsumerPlacement::Static => 0,
+            ConsumerPlacement::FlowAware { migration_budget, .. } => {
+                self.flows.insert(sid, FlowState {
+                    matrix: HashMap::new(),
+                    advised: HashMap::new(),
+                    budget_left: migration_budget,
+                });
+                opts.consumer_placement.piece_threshold()
+            }
         }
     }
 
@@ -390,6 +438,10 @@ impl Director {
         st.outcome.gave_up_spans += d.gave_up_spans;
         if st.acks == st.need {
             let st = self.closes.remove(&sid).unwrap();
+            // The consumer-flow matrix dies with the session (PR 9);
+            // flow reports still in flight find no entry and are
+            // tolerated (never revive advice for a dead session).
+            self.flows.remove(&sid);
             if let Some(ss) = self.sessions.remove(&sid) {
                 // The session is fully gone: every buffer and manager
                 // acked. This close edge is the makespan's far end.
@@ -504,7 +556,8 @@ impl Director {
         let class = m.opts.class;
         let shard = self.shard_ref(m.file);
         ctx.send(shard, EP_SHARD_ADMIT, class);
-        let session = Session::new(sid, m.file, m.offset, m.bytes, buffers, nbuf);
+        let flow = self.arm_flow(sid, &m.opts);
+        let session = Session::new(sid, m.file, m.offset, m.bytes, buffers, nbuf).with_flow(flow);
         let started_at = ctx.now();
         self.sessions.insert(sid, SessionState {
             session,
@@ -685,7 +738,8 @@ impl Director {
         // The buffers are a dynamically created collection: declare their
         // protocol so debug builds validate sends addressed to them too.
         ctx.register_protocol(buffers, super::buffer::protocol_spec());
-        let session = Session::new(sid, file, offset, bytes, buffers, nreaders);
+        let flow = self.arm_flow(sid, &m.opts);
+        let session = Session::new(sid, file, offset, bytes, buffers, nreaders).with_flow(flow);
         let started_at = ctx.now();
         self.sessions.insert(sid, SessionState {
             session,
@@ -754,6 +808,12 @@ impl Director {
         self.files.len()
     }
 
+    /// Sessions with a live consumer-flow matrix (leak checks: must be
+    /// 0 after all closes — the matrix dies with the session).
+    pub fn flow_sessions(&self) -> usize {
+        self.flows.len()
+    }
+
     /// Shards the `FileId` hash currently routes over.
     pub fn active_shards(&self) -> u32 {
         self.active_shards
@@ -788,6 +848,7 @@ pub fn protocol_spec() -> ProtocolSpec {
             ep_spec!(EP_DIR_CLOSE_ACK, PayloadKind::of::<FileId>()),
             ep_spec!(EP_DIR_TAKE_REPLY, PayloadKind::of::<TakeReplyMsg>()),
             ep_spec!(EP_DIR_PLAN_REPLY, PayloadKind::of::<PlanReplyMsg>()),
+            ep_spec!(EP_DIR_FLOW_REPORT, PayloadKind::of::<FlowReportMsg>()),
         ],
         sends: vec![
             send_spec!("Director", EP_DIR_START_SESSION, PayloadKind::of::<StartSessionMsg>()),
@@ -1141,6 +1202,68 @@ impl Chare for Director {
                     outcome: SessionOutcome::default(),
                 });
                 ctx.advance(MICROS);
+            }
+            EP_DIR_FLOW_REPORT => {
+                let m: FlowReportMsg = msg.take();
+                // A report racing the session's teardown finds no matrix:
+                // tolerated, exactly like a late take/plan reply.
+                let Some(fs) = self.flows.get_mut(&m.session) else { return };
+                ctx.metrics().count(keys::CONSUMER_FLOW_REPORTS, 1);
+                // Hysteresis seed: wherever the consumer *currently*
+                // runs is never an advisable destination — this is what
+                // makes ping-pong impossible (a move back would target a
+                // PE already in the set).
+                fs.advised.entry(m.consumer).or_default().insert(m.consumer_pe);
+                let row = fs.matrix.entry(m.consumer).or_default();
+                for (pe, bytes) in m.by_pe {
+                    *row.entry(pe).or_default() += bytes;
+                }
+                let here = row.get(&m.consumer_pe).copied().unwrap_or(0);
+                // Dominant source PE: most bytes, ties broken toward the
+                // lowest PE so the decision is deterministic whatever
+                // the map's iteration order.
+                let Some((&dom, &dom_bytes)) =
+                    row.iter().max_by_key(|&(&pe, &b)| (b, std::cmp::Reverse(pe)))
+                else {
+                    return;
+                };
+                // Advice rule: the dominant source must be elsewhere AND
+                // clearly dominant (≥ 2× the consumer's local bytes) —
+                // migration is not free, so a marginal edge never moves
+                // anyone.
+                let wants_move =
+                    dom != m.consumer_pe && dom_bytes >= here.saturating_mul(2).max(1);
+                if wants_move {
+                    let blocked = fs.budget_left == 0
+                        || fs.advised.get(&m.consumer).is_some_and(|s| s.contains(&dom));
+                    if blocked {
+                        ctx.metrics().count(keys::CONSUMER_ADVICE_SUPPRESSED, 1);
+                    } else {
+                        fs.budget_left -= 1;
+                        fs.advised.entry(m.consumer).or_default().insert(dom);
+                        ctx.metrics().count(keys::CONSUMER_MIGRATIONS_ADVISED, 1);
+                        if ctx.trace().on(TraceCategory::Place) {
+                            let now = ctx.now();
+                            let pe = ctx.pe().0;
+                            ctx.trace().instant(
+                                now,
+                                TraceCategory::Place,
+                                trace_names::PLACE_CONSUMER_ADVICE,
+                                TraceLane::Pe(pe),
+                                u64::from(dom),
+                                dom_bytes,
+                                "",
+                            );
+                        }
+                        // Location-managed delivery: the advice follows
+                        // the consumer even if it is already migrating.
+                        ctx.fire(
+                            Callback::to_chare(m.consumer, EP_CONSUMER_ADVICE),
+                            Payload::new(ConsumerAdviceMsg { session: m.session, to_pe: dom }),
+                        );
+                    }
+                }
+                ctx.advance(MICROS / 2);
             }
             EP_DIR_CLOSE_ACK => {
                 let file: FileId = msg.take();

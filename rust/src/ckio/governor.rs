@@ -350,6 +350,13 @@ impl Governor {
         self.queues[class.index()].len()
     }
 
+    /// Deferred tickets still owed to one owner, across all classes —
+    /// the shard's I/O-wait window close condition: the owner's PE
+    /// stops being input-blocked when this reaches 0.
+    pub fn queued_for(&self, owner: ChareRef) -> u32 {
+        self.queues.iter().flatten().filter(|p| p.owner == owner).map(|p| p.want).sum()
+    }
+
     /// Tickets admitted under `class` so far (immediate + dequeued).
     pub fn granted_in(&self, class: QosClass) -> u64 {
         self.granted[class.index()]
@@ -592,6 +599,28 @@ mod tests {
         assert_eq!(g.request(buf(0), 5, 100, BULK, 0), 3);
         assert_eq!(g.throttled, 2);
         assert_eq!(g.complete(3, 0, 0), vec![grant(0, 2, BULK)]);
+    }
+
+    /// `queued_for` sums one owner's deferred tickets across classes —
+    /// the shard's window-close condition (PR 9): 0 means the owner's
+    /// PE is no longer input-blocked.
+    #[test]
+    fn queued_for_tracks_one_owner_across_classes() {
+        let mut g = Governor::new();
+        g.configure(Some(1), AdmissionPolicy::Fifo, false);
+        assert_eq!(g.request(buf(0), 1, 100, BULK, 0), 1);
+        assert_eq!(g.request(buf(1), 3, 100, BULK, 0), 0);
+        assert_eq!(g.request(buf(1), 2, 100, QosClass::Interactive, 0), 0);
+        assert_eq!(g.queued_for(buf(1)), 5);
+        assert_eq!(g.queued_for(buf(0)), 0, "fully granted demand never queues");
+        // Draining grants shrinks the owed count until it reaches 0.
+        let freed = g.complete(1, 0, 0);
+        assert_eq!(freed.iter().map(|f| f.n).sum::<u32>(), 1);
+        assert_eq!(g.queued_for(buf(1)), 4);
+        while g.queued_for(buf(1)) > 0 {
+            assert!(!g.complete(1, 0, 0).is_empty());
+        }
+        assert_eq!(g.queued(), 0);
     }
 
     #[test]

@@ -183,8 +183,8 @@ pub mod store;
 pub use api::CkIo;
 pub use governor::{AdmissionPolicy, QosClass};
 pub use options::{
-    ConfigError, FileOptions, OpenError, ReaderPlacement, RetryPolicy, ServiceConfig,
-    SessionOptions, TraceConfig,
+    ConfigError, ConsumerPlacement, FileOptions, OpenError, ReaderPlacement, RetryPolicy,
+    ServiceConfig, SessionOptions, TraceConfig,
 };
 pub use session::{FileHandle, ReadResult, Session, SessionId, SessionOutcome, Tag};
 pub use shard::DataShard;

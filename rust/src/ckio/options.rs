@@ -73,6 +73,49 @@ pub enum ReaderPlacement {
     StoreAware { fallback: Box<ReaderPlacement> },
 }
 
+/// Consumer-side locality policy (PR 9, the dual of
+/// [`ReaderPlacement::StoreAware`]): instead of moving *readers* to the
+/// data, move data *consumers* to the buffer chares that feed them —
+/// the half of the paper's Fig. 12 story only an over-decomposed,
+/// migratable programming model can do at all.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ConsumerPlacement {
+    /// Consumers stay where the application put them (the default, and
+    /// the pre-PR 9 behavior bit for bit: no flow accounts are kept and
+    /// no advice is ever sent).
+    #[default]
+    Static,
+    /// Flow-matrix-driven migration advice: assemblers charge every
+    /// piece delivery to a per-(consumer, source-PE) flow account and
+    /// report to the director every `piece_threshold` pieces; when a
+    /// consumer's dominant source PE differs from where it runs (by at
+    /// least 2× the bytes it receives locally), the director advises
+    /// the consumer to migrate there (`EP_CONSUMER_ADVICE`, delivered
+    /// through the AMT location manager so it follows prior moves).
+    /// Hysteresis: a consumer is never advised toward a PE it already
+    /// ran on or was already sent to, so it can never ping-pong; and at
+    /// most `migration_budget` migrations are advised per session.
+    FlowAware {
+        /// Pieces delivered per consumer between flow reports (>= 1;
+        /// also stamped on the session as its flow-account granularity).
+        piece_threshold: u32,
+        /// Hard cap on migrations advised for this session, across all
+        /// of its consumers.
+        migration_budget: u32,
+    },
+}
+
+impl ConsumerPlacement {
+    /// The assembler-side flow-report granularity: 0 = keep no flow
+    /// accounts at all (`Static`).
+    pub fn piece_threshold(&self) -> u32 {
+        match self {
+            ConsumerPlacement::Static => 0,
+            ConsumerPlacement::FlowAware { piece_threshold, .. } => (*piece_threshold).max(1),
+        }
+    }
+}
+
 /// Structured configuration error, delivered through the `open` callback
 /// (instead of a FileHandle) when a file's opening [`FileOptions`] can
 /// never work — or through the `start_read_session` callback when a
@@ -428,6 +471,11 @@ pub struct SessionOptions {
     /// across placements would silently mis-place the session. A miss
     /// creates the array fresh (still peer-fetching resident claims).
     pub placement_override: Option<ReaderPlacement>,
+    /// Consumer-side locality (PR 9): when [`ConsumerPlacement::FlowAware`],
+    /// assemblers keep per-(consumer, source-PE) flow accounts for this
+    /// session and the director advises consumers to migrate toward their
+    /// dominant source PE (within the option's budget and hysteresis).
+    pub consumer_placement: ConsumerPlacement,
 }
 
 impl SessionOptions {
@@ -460,6 +508,7 @@ impl Default for SessionOptions {
             read_window: 2,
             reuse_buffers: false,
             placement_override: None,
+            consumer_placement: ConsumerPlacement::Static,
         }
     }
 }
@@ -667,6 +716,13 @@ mod tests {
         assert_eq!(d.read_window, 2);
         assert!(!d.reuse_buffers);
         assert_eq!(d.placement_override, None);
+        assert_eq!(d.consumer_placement, ConsumerPlacement::Static);
+        assert_eq!(d.consumer_placement.piece_threshold(), 0);
+        assert_eq!(
+            ConsumerPlacement::FlowAware { piece_threshold: 0, migration_budget: 1 }
+                .piece_threshold(),
+            1
+        );
         assert_eq!(d, SessionOptions::bulk());
         assert_eq!(SessionOptions::interactive().class, QosClass::Interactive);
         assert_eq!(SessionOptions::scavenger().class, QosClass::Scavenger);

@@ -80,6 +80,13 @@ pub struct Session {
     pub num_buffers: u32,
     /// Bytes per buffer chare (last one may be shorter).
     pub span: u64,
+    /// Consumer-flow accounting granularity (PR 9): pieces delivered per
+    /// consumer between assembler flow reports to the director. 0 (the
+    /// default) means the session runs [`ConsumerPlacement::Static`] and
+    /// assemblers keep no flow accounts at all.
+    ///
+    /// [`ConsumerPlacement::Static`]: super::options::ConsumerPlacement::Static
+    pub flow_threshold: u32,
 }
 
 impl Session {
@@ -93,7 +100,17 @@ impl Session {
     ) -> Session {
         assert!(bytes > 0 && num_buffers > 0);
         let span = ceil_div(bytes, num_buffers as u64);
-        Session { id, file, offset, bytes, buffers, num_buffers, span }
+        Session { id, file, offset, bytes, buffers, num_buffers, span, flow_threshold: 0 }
+    }
+
+    /// Stamp the consumer-flow granularity (director, at session start,
+    /// from [`ConsumerPlacement::piece_threshold`]).
+    ///
+    /// [`ConsumerPlacement::piece_threshold`]:
+    ///     super::options::ConsumerPlacement::piece_threshold
+    pub fn with_flow(mut self, piece_threshold: u32) -> Session {
+        self.flow_threshold = piece_threshold;
+        self
     }
 
     /// End byte (exclusive) of the session.
@@ -183,6 +200,45 @@ impl SessionOutcome {
     }
 }
 
+/// Well-known consumer EP for director migration advice (PR 9): a
+/// session opting into [`ConsumerPlacement::FlowAware`] agrees that its
+/// consumer chares handle this EP (payload [`ConsumerAdviceMsg`]) —
+/// normally by calling `Ctx::migrate_me` toward the advised PE. Numbered
+/// in the harness client range so it can never collide with the CkIO
+/// service EPs consumers already receive callbacks on.
+///
+/// [`ConsumerPlacement::FlowAware`]: super::options::ConsumerPlacement::FlowAware
+pub const EP_CONSUMER_ADVICE: crate::amt::msg::Ep = 39;
+
+/// Assembler → director consumer-flow delta (PR 9, FlowAware sessions
+/// only): bytes delivered to one consumer, charged per *source buffer
+/// PE*, since the last report. Deltas, not totals — the director owns
+/// the accumulated matrix, so assembler state stays bounded and dies
+/// with the session drop.
+#[derive(Clone, Debug)]
+pub struct FlowReportMsg {
+    pub session: SessionId,
+    /// The consumer chare these bytes were assembled for.
+    pub consumer: crate::amt::chare::ChareRef,
+    /// PE the consumer's reads were assembled on (= the PE it ran on:
+    /// managers route reads to their own PE's assembler).
+    pub consumer_pe: u32,
+    /// (source buffer PE, bytes delivered from it) since the last report.
+    pub by_pe: Vec<(u32, u64)>,
+}
+
+/// Director → consumer migration advice (PR 9): the flow matrix says
+/// `to_pe` is this consumer's dominant piece source. Advice, not an
+/// order — a consumer that cannot migrate (or already moved) may ignore
+/// it; hysteresis on the director guarantees it is never re-advised to
+/// a PE it already ran on.
+#[derive(Copy, Clone, Debug)]
+pub struct ConsumerAdviceMsg {
+    pub session: SessionId,
+    /// Dominant source PE to move toward.
+    pub to_pe: u32,
+}
+
 /// Delivered to the client's `after_read` callback.
 #[derive(Debug)]
 pub struct ReadResult {
@@ -245,6 +301,17 @@ mod tests {
     #[should_panic(expected = "outside session")]
     fn read_outside_session_panics() {
         sess().buffers_for(900, 10);
+    }
+
+    #[test]
+    fn flow_threshold_defaults_off_and_stamps() {
+        let s = sess();
+        assert_eq!(s.flow_threshold, 0, "Session::new must default to Static (no accounts)");
+        let s = s.with_flow(8);
+        assert_eq!(s.flow_threshold, 8);
+        // Copy semantics: the stamped session travels whole.
+        let t = s;
+        assert_eq!(t.flow_threshold, 8);
     }
 
     #[test]

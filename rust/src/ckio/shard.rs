@@ -87,13 +87,14 @@
 //! the harness turns those into the `ckio.shard.msgs_max`/`_mean`
 //! imbalance pair.
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
 use crate::amt::engine::Ctx;
 use crate::amt::msg::{Ep, Msg};
 use crate::amt::protocol::{PayloadKind, ProtocolSpec};
 use crate::amt::time::MICROS;
+use crate::amt::topology::Pe;
 use crate::impl_chare_any;
 use crate::metrics::keys;
 use crate::pfs::layout::FileId;
@@ -230,6 +231,14 @@ pub struct DataShard {
     /// deadline the requesting buffer should arm its timeout at, derived
     /// from the governor's observed service-time window.
     retry: Option<RetryPolicy>,
+    /// Buffers with an open I/O-wait overlap window (PR 9): owner → the
+    /// PE whose scheduler hint was raised when the governor first queued
+    /// a ticket for that owner. Closed (and the hint lowered) when the
+    /// owner's queued demand drains to zero — by grant delivery or by
+    /// reclaim — so every `Ctx::io_wait_begin` is balanced by exactly
+    /// one `Ctx::io_wait_end`. Drained on reclaim; leak-checked via
+    /// [`DataShard::io_waiting`] in `assert_service_clean`.
+    waiting: HashMap<ChareRef, u32>,
 }
 
 impl DataShard {
@@ -244,6 +253,7 @@ impl DataShard {
             resident_reported: 0.0,
             cap_reported: None,
             retry: None,
+            waiting: HashMap::new(),
         }
     }
 
@@ -366,6 +376,23 @@ impl DataShard {
     /// Record a starting session's class (plan probe or admit message).
     fn register_class(&mut self, class: QosClass) {
         self.class_registered[class.index()] += 1;
+    }
+
+    /// Owners with an I/O-wait overlap window currently open on this
+    /// shard (PR 9). Leak check: must be 0 at quiescence — a non-empty
+    /// map means a PE's scheduler hint was raised and never lowered.
+    pub fn io_waiting(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// Close `owner`'s overlap window if its queued governor demand has
+    /// fully drained (a partial grant leaves the window open: the owner
+    /// is still waiting for the rest).
+    fn maybe_close_wait(&mut self, ctx: &mut Ctx<'_>, owner: ChareRef) {
+        if self.waiting.contains_key(&owner) && self.governor.queued_for(owner) == 0 {
+            let pe = self.waiting.remove(&owner).expect("checked above");
+            ctx.io_wait_end(Pe(pe));
+        }
     }
 }
 
@@ -542,6 +569,14 @@ impl Chare for DataShard {
                 let now = ctx.now();
                 let granted = self.governor.request(m.buffer, m.want, m.sess_bytes, m.class, now);
                 if granted < m.want {
+                    // I/O-aware overlap hint (PR 9, after TASIO,
+                    // arXiv 2011.13823): the requesting buffer's PE now
+                    // has an admission wait open — raise the scheduler
+                    // hint so background-chare work run there is charged
+                    // to the overlap counters until the demand drains.
+                    if self.waiting.insert(m.buffer, m.pe).is_none() {
+                        ctx.io_wait_begin(Pe(m.pe));
+                    }
                     ctx.metrics().count(keys::GOV_THROTTLED, (m.want - granted) as u64);
                     if ctx.trace().on(TraceCategory::Ticket) {
                         ctx.trace().instant(
@@ -583,6 +618,11 @@ impl Chare for DataShard {
                 let m: ReclaimMsg = msg.take();
                 let now = ctx.now();
                 let (removed, grants) = self.governor.reclaim(m.owner, m.held, now);
+                // The reclaimed owner is gone: its overlap window (if
+                // any) closes now, grantless.
+                if let Some(pe) = self.waiting.remove(&m.owner) {
+                    ctx.io_wait_end(Pe(pe));
+                }
                 ctx.metrics().count(keys::GOV_RECLAIMED, u64::from(m.held) + u64::from(removed));
                 // Reclaimed capacity goes straight back to waiting
                 // sessions: deliver whatever the drain freed.
@@ -591,6 +631,7 @@ impl Chare for DataShard {
                     ctx.metrics().count(g.class.granted_key(), g.n as u64);
                     ctx.metrics().record(g.class.wait_key(), g.waited_ns);
                     ctx.send(g.owner, EP_BUF_GRANT, GrantMsg { n: g.n, deadline_ns });
+                    self.maybe_close_wait(ctx, g.owner);
                 }
                 self.publish_cap(ctx);
                 ctx.advance(MICROS / 2);
@@ -629,6 +670,7 @@ impl Chare for DataShard {
                     }
                     let deadline_ns = self.grant_deadline();
                     ctx.send(g.owner, EP_BUF_GRANT, GrantMsg { n: g.n, deadline_ns });
+                    self.maybe_close_wait(ctx, g.owner);
                 }
                 self.publish_cap(ctx);
                 ctx.advance(MICROS);

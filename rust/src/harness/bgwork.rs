@@ -84,6 +84,14 @@ pub fn protocol_spec() -> ProtocolSpec {
 }
 
 impl Chare for BgWorker {
+    /// Background class (PR 9): iterations run while a PE has an
+    /// admission wait open are charged to the overlap counters
+    /// (`ckio.overlap.bg_iters`/`bg_time`) — the TASIO measurement of
+    /// how much compute fits inside input time.
+    fn is_background(&self) -> bool {
+        true
+    }
+
     fn receive(&mut self, ctx: &mut Ctx<'_>, msg: Msg) {
         match msg.ep {
             EP_BG_START => {

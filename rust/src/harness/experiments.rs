@@ -12,9 +12,10 @@ use crate::amt::time::{self, Time, MICROS};
 use crate::amt::topology::{Pe, Placement};
 use crate::apps::changa::driver::{run_changa_input, Scheme};
 use crate::baselines::naive::{NaiveClient, EP_N_GO};
+use crate::ckio::session::{ConsumerAdviceMsg, EP_CONSUMER_ADVICE};
 use crate::ckio::{
-    CkIo, FileOptions, QosClass, ReadResult, ReaderPlacement, RetryPolicy, ServiceConfig,
-    Session, SessionOptions, SessionOutcome,
+    CkIo, ConsumerPlacement, FileOptions, QosClass, ReadResult, ReaderPlacement, RetryPolicy,
+    ServiceConfig, Session, SessionOptions, SessionOutcome,
 };
 use crate::harness::bench::Table;
 use crate::harness::bgwork::{BgWorker, EP_BG_START, EP_BG_STOP};
@@ -1230,10 +1231,13 @@ pub fn assert_service_clean(eng: &Engine, io: &CkIo) {
     assert_eq!(director.pending_closes(), 0, "stuck closes in director");
     assert_eq!(director.pending_takes(), 0, "stuck rebind probes in director");
     assert_eq!(director.pending_plans(), 0, "stuck placement plans in director");
+    assert_eq!(director.flow_sessions(), 0, "leaked consumer-flow matrices in director");
     for pe in 0..eng.core.topo.npes() {
         let asm: &crate::ckio::assembler::ReadAssembler =
             eng.chare(ChareRef::new(io.assemblers, pe));
         assert_eq!(asm.outstanding(), 0, "leaked assemblies on PE {pe}");
+        assert_eq!(asm.flow_accounts(), 0, "leaked flow accounts on PE {pe}");
+        assert_eq!(asm.first_served_count(), 0, "leaked first-served marks on PE {pe}");
         let mgr: &crate::ckio::manager::Manager = eng.chare(ChareRef::new(io.managers, pe));
         assert_eq!(mgr.session_count(), 0, "leaked session entries on PE {pe}");
         assert_eq!(mgr.early_count(), 0, "stuck early reads on PE {pe}");
@@ -1242,7 +1246,13 @@ pub fn assert_service_clean(eng: &Engine, io: &CkIo) {
         let shard = io.shard(eng, s);
         assert_eq!(shard.admission().inflight(), 0, "governor tickets leaked on shard {s}");
         assert_eq!(shard.admission().queued(), 0, "governor demand stranded on shard {s}");
+        assert_eq!(shard.io_waiting(), 0, "io-wait windows left open on shard {s}");
     }
+    assert_eq!(
+        eng.core.loc.buffered_count(),
+        0,
+        "stranded in-flight envelopes in the location manager"
+    );
     if eng.core.trace.is_enabled() {
         assert_eq!(
             eng.core.trace.open_spans(),
@@ -2824,6 +2834,492 @@ pub fn bench_pr8_json(reps: u32) -> String {
 }
 
 // =====================================================================
+// svc_overlap — consumer-side locality (flow-matrix-driven migration)
+// and I/O-aware overlap of admission waits (PR 9)
+// =====================================================================
+
+const EP_OC_GO: Ep = 40;
+const EP_OC_OPENED: Ep = 41;
+const EP_OC_SESSION: Ep = 42;
+const EP_OC_DATA: Ep = 43;
+const EP_OC_SLICE_DONE: Ep = 44;
+const EP_OC_CLOSED: Ep = 45;
+const EP_OC_FCLOSED: Ep = 46;
+
+/// A migratable CkIO consumer for the locality/overlap experiments.
+/// Element 0 opens the file, starts the session over the given range,
+/// broadcasts the handle, and (once every peer reports) closes session
+/// and file. Every element re-reads its fixed subrange `rounds` times —
+/// the steady-state delivery pattern the flow matrix observes — and,
+/// when the session runs [`ConsumerPlacement::FlowAware`], heeds the
+/// director's `EP_CONSUMER_ADVICE` by migrating to the advised PE, after
+/// which its piece deliveries become PE-local.
+pub struct OverlapClient {
+    io: CkIo,
+    file: crate::pfs::FileId,
+    file_size: u64,
+    index: u32,
+    n_peers: u32,
+    /// Set post-creation by the driver.
+    pub peers: CollectionId,
+    fopts: FileOptions,
+    sopts: SessionOptions,
+    session_offset: u64,
+    session_bytes: u64,
+    my_offset: u64,
+    my_len: u64,
+    rounds: u32,
+    rounds_done: u32,
+    session: Option<Session>,
+    go_time: Time,
+    slices_done: u32,
+    /// Advice messages acted on (the consumer was elsewhere and moved).
+    pub advices_heeded: u32,
+    /// Leader: fired with the session's elapsed `Time` after file close.
+    session_done: Callback,
+}
+
+impl OverlapClient {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        io: CkIo,
+        file: crate::pfs::FileId,
+        file_size: u64,
+        index: u32,
+        n_peers: u32,
+        fopts: FileOptions,
+        sopts: SessionOptions,
+        session_range: (u64, u64),
+        slice: (u64, u64),
+        rounds: u32,
+        session_done: Callback,
+    ) -> OverlapClient {
+        OverlapClient {
+            io,
+            file,
+            file_size,
+            index,
+            n_peers,
+            peers: CollectionId(u32::MAX),
+            fopts,
+            sopts,
+            session_offset: session_range.0,
+            session_bytes: session_range.1,
+            my_offset: slice.0,
+            my_len: slice.1,
+            rounds,
+            rounds_done: 0,
+            session: None,
+            go_time: 0,
+            slices_done: 0,
+            advices_heeded: 0,
+            session_done,
+        }
+    }
+
+    fn issue_round(&mut self, ctx: &mut Ctx<'_>) {
+        let s = self.session.expect("round issued before session arrived");
+        let me = ctx.me();
+        let (io, off, len) = (self.io, self.my_offset, self.my_len);
+        io.read(ctx, &s, off, len, Callback::to_chare(me, EP_OC_DATA));
+    }
+}
+
+impl Chare for OverlapClient {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_OC_GO => {
+                self.go_time = ctx.now();
+                let me = ctx.me();
+                let (io, file, size, fopts) =
+                    (self.io, self.file, self.file_size, self.fopts.clone());
+                io.open(ctx, file, size, fopts, Callback::to_chare(me, EP_OC_OPENED));
+            }
+            EP_OC_OPENED => {
+                let me = ctx.me();
+                let (io, file, off, bytes, sopts) = (
+                    self.io,
+                    self.file,
+                    self.session_offset,
+                    self.session_bytes,
+                    self.sopts.clone(),
+                );
+                io.start_read_session(
+                    ctx,
+                    file,
+                    off,
+                    bytes,
+                    sopts,
+                    Callback::to_chare(me, EP_OC_SESSION),
+                );
+            }
+            EP_OC_SESSION => {
+                let s: Session = msg.take();
+                if self.index == 0 && self.session.is_none() {
+                    for j in 1..self.n_peers {
+                        ctx.send(ChareRef::new(self.peers, j), EP_OC_SESSION, s);
+                    }
+                }
+                self.session = Some(s);
+                self.issue_round(ctx);
+            }
+            EP_OC_DATA => {
+                let r: ReadResult = msg.take();
+                debug_assert_eq!(r.len, self.my_len);
+                self.rounds_done += 1;
+                if self.rounds_done < self.rounds {
+                    self.issue_round(ctx);
+                } else {
+                    ctx.send(ChareRef::new(self.peers, 0), EP_OC_SLICE_DONE, ());
+                }
+            }
+            EP_OC_SLICE_DONE => {
+                self.slices_done += 1;
+                if self.slices_done == self.n_peers {
+                    let sid = self.session.as_ref().expect("leader has session").id;
+                    let me = ctx.me();
+                    let io = self.io;
+                    io.close_read_session(ctx, sid, Callback::to_chare(me, EP_OC_CLOSED));
+                }
+            }
+            EP_OC_CLOSED => {
+                let _o: SessionOutcome = msg.take();
+                let me = ctx.me();
+                let (io, file) = (self.io, self.file);
+                io.close(ctx, file, Callback::to_chare(me, EP_OC_FCLOSED));
+            }
+            EP_OC_FCLOSED => {
+                let elapsed = ctx.now() - self.go_time;
+                let done = self.session_done.clone();
+                ctx.fire(done, Payload::new(elapsed));
+            }
+            EP_CONSUMER_ADVICE => {
+                let m: ConsumerAdviceMsg = msg.take();
+                if m.to_pe != ctx.pe().0 {
+                    self.advices_heeded += 1;
+                    ctx.migrate_me(Pe(m.to_pe));
+                }
+            }
+            other => panic!("OverlapClient: unknown ep {other}"),
+        }
+    }
+    impl_chare_any!();
+}
+
+/// [`OverlapClient`]'s declared message protocol (see
+/// [`crate::amt::protocol`]). Open/file-close acks are `Any` (library
+/// payloads, ignored here); the session-close ack decodes the structured
+/// [`SessionOutcome`]; `EP_CONSUMER_ADVICE` is the director's flow-aware
+/// migration advice (declared in `ckio/session.rs`).
+pub fn overlap_client_protocol_spec() -> ProtocolSpec {
+    ProtocolSpec {
+        chare: "OverlapClient",
+        module: "harness/experiments.rs",
+        handles: vec![
+            ep_spec!(EP_OC_GO, PayloadKind::Signal),
+            ep_spec!(EP_OC_OPENED, PayloadKind::Any),
+            ep_spec!(EP_OC_SESSION, PayloadKind::of::<Session>()),
+            ep_spec!(EP_OC_DATA, PayloadKind::of::<ReadResult>()),
+            ep_spec!(EP_OC_SLICE_DONE, PayloadKind::Signal),
+            ep_spec!(EP_OC_CLOSED, PayloadKind::of::<SessionOutcome>()),
+            ep_spec!(EP_OC_FCLOSED, PayloadKind::Any),
+            ep_spec!(EP_CONSUMER_ADVICE, PayloadKind::of::<ConsumerAdviceMsg>()),
+        ],
+        sends: vec![
+            send_spec!("OverlapClient", EP_OC_SESSION, PayloadKind::of::<Session>()),
+            send_spec!("OverlapClient", EP_OC_SLICE_DONE, PayloadKind::Signal),
+        ],
+    }
+}
+
+/// The fixed `svc_overlap` workload shape:
+/// (nodes, pes/node, file bytes, consumers per session, rounds).
+///
+/// Two sessions over one shared 4 MiB file on 2×4 PEs. Each session's
+/// consumers sit on the low PEs while its buffers are pinned to the high
+/// PEs, so under [`ConsumerPlacement::Static`] every delivered piece
+/// byte crosses PEs — the worst case the flow matrix is built to fix.
+pub const OVERLAP_SHAPE: (u32, u32, u64, u32, u32) = (2, 4, 4 << 20, 2, 16);
+
+/// Results of one [`run_svc_overlap`] run.
+#[derive(Clone, Debug)]
+pub struct OverlapStats {
+    pub same_pe_piece_bytes: u64,
+    pub cross_pe_piece_bytes: u64,
+    pub flow_reports: u64,
+    pub advised: u64,
+    pub suppressed: u64,
+    /// Engine-wide chare migrations (`amt.migrations`).
+    pub migrations: u64,
+    pub overlap_windows: u64,
+    pub overlap_bg_iters: u64,
+    pub overlap_bg_s: f64,
+    pub overlap_window_s: f64,
+    /// Total background iterations (inside waits or not); 0 without bg.
+    pub bg_total_iters: u64,
+    pub makespan_s: f64,
+}
+
+/// Drive the [`OVERLAP_SHAPE`] workload: 2 sessions × 2 consumers over
+/// one shared file, consumers re-reading fixed buffer-local subranges so
+/// every read delivers exactly one piece from one (pinned) buffer PE.
+/// `placement` selects static vs flow-aware consumer placement; `cfg`
+/// selects the governor (a tight cap opens admission-wait windows on the
+/// buffer PEs); `with_bg` adds one quota-mode [`BgWorker`] per PE whose
+/// iterations inside open windows land in the `ckio.overlap.*` counters.
+pub fn run_svc_overlap(
+    placement: ConsumerPlacement,
+    cfg: ServiceConfig,
+    with_bg: bool,
+    seed: u64,
+) -> (OverlapStats, CkIo, Engine) {
+    let (nodes, pes, file_size, consumers, rounds) = OVERLAP_SHAPE;
+    let npes = nodes * pes;
+    let sessions = 2u32;
+    let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed))
+        .with_sim_pfs(PfsConfig::default());
+    let file = eng.core.sim_pfs_mut().create_file(file_size);
+    let io = CkIo::boot_with(&mut eng, cfg).expect("svc_overlap: valid ServiceConfig");
+
+    let bg_fut = if with_bg {
+        let fut = eng.future(npes);
+        let grp =
+            eng.create_group(|_| BgWorker::new(10 * MICROS, Some(5_000), Callback::Future(fut)));
+        for pe in 0..npes {
+            eng.inject_signal(ChareRef::new(grp, pe), EP_BG_START);
+        }
+        Some(fut)
+    } else {
+        None
+    };
+
+    let done_fut = eng.future(sessions);
+    let fopts = FileOptions::with_readers(consumers);
+    let sess_bytes = file_size / sessions as u64;
+    let span = sess_bytes / consumers as u64;
+    let read_len = span / 4;
+    let mut leaders = Vec::with_capacity(sessions as usize);
+    for s in 0..sessions {
+        let sess_off = s as u64 * sess_bytes;
+        // Consumers on the low PEs, their session's buffers pinned to
+        // the high PEs: under Static placement every piece crosses.
+        let consumer_pes: Vec<Pe> = (0..consumers).map(|i| Pe(s * consumers + i)).collect();
+        let buffer_pes: Vec<u32> =
+            (0..consumers).map(|i| sessions * consumers + s * consumers + i).collect();
+        let sopts = SessionOptions {
+            splinter_bytes: Some(128 << 10),
+            placement_override: Some(ReaderPlacement::Explicit(buffer_pes)),
+            consumer_placement: placement,
+            ..Default::default()
+        };
+        let fo = fopts.clone();
+        let cid = eng.create_array(consumers, &Placement::Explicit(consumer_pes), |i| {
+            OverlapClient::new(
+                io,
+                file,
+                file_size,
+                i,
+                consumers,
+                fo.clone(),
+                sopts.clone(),
+                (sess_off, sess_bytes),
+                (sess_off + i as u64 * span, read_len),
+                rounds,
+                Callback::Future(done_fut),
+            )
+        });
+        eng.register_protocol(cid, overlap_client_protocol_spec());
+        for i in 0..consumers {
+            eng.chare_mut::<OverlapClient>(ChareRef::new(cid, i)).peers = cid;
+        }
+        leaders.push(ChareRef::new(cid, 0));
+    }
+    for leader in leaders {
+        eng.inject_signal(leader, EP_OC_GO);
+    }
+    eng.run();
+    assert!(eng.future_done(done_fut), "svc_overlap: not all sessions closed");
+
+    let done = eng.take_future(done_fut);
+    let makespan = done.iter().map(|(t, _)| *t).max().unwrap();
+    let bg_total_iters = match bg_fut {
+        Some(fut) => {
+            assert!(eng.future_done(fut), "svc_overlap: background quota unfinished");
+            eng.take_future(fut).into_iter().map(|(_, mut p)| p.take::<u64>()).sum::<u64>()
+        }
+        None => 0,
+    };
+    let (windows, bg_iters, bg_ns, window_ns) = eng.core.overlap_totals();
+    let m = &eng.core.metrics;
+    let stats = OverlapStats {
+        same_pe_piece_bytes: m.counter(keys::PLACE_PIECE_SAME_PE),
+        cross_pe_piece_bytes: m.counter(keys::PLACE_PIECE_CROSS_PE),
+        flow_reports: m.counter(keys::CONSUMER_FLOW_REPORTS),
+        advised: m.counter(keys::CONSUMER_MIGRATIONS_ADVISED),
+        suppressed: m.counter(keys::CONSUMER_ADVICE_SUPPRESSED),
+        migrations: m.counter(keys::MIGRATIONS),
+        overlap_windows: windows,
+        overlap_bg_iters: bg_iters,
+        overlap_bg_s: time::to_secs(bg_ns),
+        overlap_window_s: time::to_secs(window_ns),
+        bg_total_iters,
+        makespan_s: time::to_secs(makespan),
+    };
+    (stats, io, eng)
+}
+
+/// The `svc_overlap` experiment table: the four legs of the PR 9 story —
+/// static vs flow-aware consumer placement (ungoverned), then a tightly
+/// governed run with and without background work to show admission
+/// waits being overlapped. Deterministic (noise-free PFS), so `reps`
+/// would only repeat identical numbers; kept for CLI uniformity.
+pub fn svc_overlap(reps: u32) -> Table {
+    let _ = reps;
+    let (nodes, pes, file_size, consumers, rounds) = OVERLAP_SHAPE;
+    let mut t = Table::new(
+        &format!(
+            "svc_overlap: consumer locality + I/O-aware overlap ({nodes}x{pes} PEs, {} shared \
+             file, 2 sessions x {consumers} consumers x {rounds} rounds)",
+            crate::util::human_bytes(file_size)
+        ),
+        &[
+            "leg",
+            "same_pe_mib",
+            "cross_pe_mib",
+            "reports",
+            "advised",
+            "suppressed",
+            "migrations",
+            "windows",
+            "bg_iters_in_wait",
+            "bg_in_wait_ms",
+            "makespan_ms",
+        ],
+    );
+    let governed = ServiceConfig {
+        max_inflight_reads: Some(1),
+        data_plane_shards: Some(1),
+        ..Default::default()
+    };
+    let flow = ConsumerPlacement::FlowAware { piece_threshold: 2, migration_budget: 4 };
+    let legs: Vec<(&str, ConsumerPlacement, ServiceConfig, bool, u64)> = vec![
+        ("static", ConsumerPlacement::Static, ServiceConfig::default(), false, 9100),
+        ("flow_aware", flow, ServiceConfig::default(), false, 9100),
+        ("governed+bg", ConsumerPlacement::Static, governed.clone(), true, 9200),
+        ("governed", ConsumerPlacement::Static, governed, false, 9200),
+    ];
+    for (leg, placement, cfg, with_bg, seed) in legs {
+        let (st, io, eng) = run_svc_overlap(placement, cfg, with_bg, seed);
+        assert_service_clean(&eng, &io);
+        t.row(vec![
+            leg.to_string(),
+            format!("{:.2}", st.same_pe_piece_bytes as f64 / (1u64 << 20) as f64),
+            format!("{:.2}", st.cross_pe_piece_bytes as f64 / (1u64 << 20) as f64),
+            st.flow_reports.to_string(),
+            st.advised.to_string(),
+            st.suppressed.to_string(),
+            st.migrations.to_string(),
+            st.overlap_windows.to_string(),
+            st.overlap_bg_iters.to_string(),
+            format!("{:.3}", st.overlap_bg_s * 1e3),
+            format!("{:.3}", st.makespan_s * 1e3),
+        ]);
+    }
+    t
+}
+
+/// Emit the PR 9 machine-readable perf anchor (`BENCH_pr9.json`): the
+/// consumer-locality pair (static vs flow-aware placement, with the
+/// flow-matrix counters and the cross-PE piece-byte reduction) and the
+/// admission-wait overlap pair (the tightly governed run with and
+/// without background work, with the `ckio.overlap.*` counters). Both
+/// acceptance claims are asserted here as well as in the test suite, so
+/// a regressed build fails the CI bench smoke too.
+pub fn bench_pr9_json(reps: u32) -> String {
+    use crate::harness::bench::Json;
+    let _ = reps; // deterministic seeded runs — repetition adds nothing
+    let (nodes, pes, file_size, consumers, rounds) = OVERLAP_SHAPE;
+
+    let side = |st: &OverlapStats| {
+        Json::obj(vec![
+            (keys::PLACE_PIECE_SAME_PE, Json::num(st.same_pe_piece_bytes as f64)),
+            (keys::PLACE_PIECE_CROSS_PE, Json::num(st.cross_pe_piece_bytes as f64)),
+            (keys::CONSUMER_FLOW_REPORTS, Json::num(st.flow_reports as f64)),
+            (keys::CONSUMER_MIGRATIONS_ADVISED, Json::num(st.advised as f64)),
+            (keys::CONSUMER_ADVICE_SUPPRESSED, Json::num(st.suppressed as f64)),
+            (keys::MIGRATIONS, Json::num(st.migrations as f64)),
+            ("makespan_s", Json::num(st.makespan_s)),
+        ])
+    };
+    let consumer_locality = {
+        let flow = ConsumerPlacement::FlowAware { piece_threshold: 2, migration_budget: 4 };
+        let (st, io_s, eng_s) =
+            run_svc_overlap(ConsumerPlacement::Static, ServiceConfig::default(), false, 9100);
+        assert_service_clean(&eng_s, &io_s);
+        let (fa, io_f, eng_f) = run_svc_overlap(flow, ServiceConfig::default(), false, 9100);
+        assert_service_clean(&eng_f, &io_f);
+        let reduction =
+            1.0 - fa.cross_pe_piece_bytes as f64 / st.cross_pe_piece_bytes.max(1) as f64;
+        assert!(
+            reduction >= 0.5,
+            "flow-aware placement must cut cross-PE piece bytes by >= 50%, got {reduction:.3}"
+        );
+        Json::obj(vec![
+            ("static", side(&st)),
+            ("flow_aware", side(&fa)),
+            ("cross_pe_reduction", Json::num(reduction)),
+        ])
+    };
+
+    let oside = |st: &OverlapStats| {
+        Json::obj(vec![
+            (keys::OVERLAP_WINDOWS, Json::num(st.overlap_windows as f64)),
+            (keys::OVERLAP_BG_ITERS, Json::num(st.overlap_bg_iters as f64)),
+            (keys::OVERLAP_BG_TIME, Json::num(st.overlap_bg_s)),
+            (keys::OVERLAP_WINDOW_TIME, Json::num(st.overlap_window_s)),
+            ("bg_total_iters", Json::num(st.bg_total_iters as f64)),
+            ("makespan_s", Json::num(st.makespan_s)),
+        ])
+    };
+    let overlap = {
+        let governed = ServiceConfig {
+            max_inflight_reads: Some(1),
+            data_plane_shards: Some(1),
+            ..Default::default()
+        };
+        let (bg, io_a, eng_a) =
+            run_svc_overlap(ConsumerPlacement::Static, governed.clone(), true, 9200);
+        assert_service_clean(&eng_a, &io_a);
+        let (nobg, io_b, eng_b) =
+            run_svc_overlap(ConsumerPlacement::Static, governed, false, 9200);
+        assert_service_clean(&eng_b, &io_b);
+        assert!(
+            bg.overlap_windows > 0 && bg.overlap_bg_iters > 0,
+            "governed run must measure background iterations inside admission waits"
+        );
+        Json::obj(vec![
+            ("max_inflight_reads", Json::num(1.0)),
+            ("with_bg", oside(&bg)),
+            ("without_bg", oside(&nobg)),
+        ])
+    };
+
+    Json::obj(vec![
+        ("bench", Json::str("svc_overlap")),
+        ("pr", Json::num(9.0)),
+        ("nodes", Json::num(nodes as f64)),
+        ("pes_per_node", Json::num(pes as f64)),
+        ("file_bytes", Json::num(file_size as f64)),
+        ("sessions", Json::num(2.0)),
+        ("consumers_per_session", Json::num(consumers as f64)),
+        ("rounds", Json::num(rounds as f64)),
+        ("consumer_locality", consumer_locality),
+        ("overlap", overlap),
+    ])
+    .render()
+}
+
+// =====================================================================
 // §VI.A ablation — automatic reader-count policy vs manual sweep
 // =====================================================================
 
@@ -3242,6 +3738,7 @@ mod tests {
             read_window: 2,
             reuse_buffers: false,
             placement_override: None,
+            consumer_placement: ConsumerPlacement::Static,
         };
         let (sd, _, eng_d) = run_svc_concurrent(
             2,
@@ -3379,5 +3876,175 @@ mod tests {
         assert!(st.governor_throttled > 0, "an adaptive cap of 2 must defer early demand");
         assert_eq!(eng.core.metrics.counter(keys::CKIO_BYTES), 2 * (16 << 20));
         assert_service_clean(&eng, &io);
+    }
+
+    /// PR 9 acceptance (tentpole, consumer side): on the svc_overlap
+    /// shape — consumers and pinned buffers on disjoint PEs — flow-aware
+    /// placement advises every consumer toward its dominant source PE
+    /// exactly once (hysteresis: no ping-pong), each migrates exactly
+    /// once, and cross-PE piece bytes drop by at least 50% against the
+    /// identical static run. The static side doubles as the satellite
+    /// check that the `ckio.place.piece_*` metrics are always on: it
+    /// counts every delivered byte as cross-PE with flow accounting
+    /// never armed.
+    #[test]
+    fn svc_overlap_flow_aware_halves_cross_pe_piece_bytes() {
+        let flow = ConsumerPlacement::FlowAware { piece_threshold: 2, migration_budget: 4 };
+        let (st, io_s, eng_s) =
+            run_svc_overlap(ConsumerPlacement::Static, ServiceConfig::default(), false, 29);
+        let (fa, io_f, eng_f) = run_svc_overlap(flow, ServiceConfig::default(), false, 29);
+        assert_service_clean(&eng_s, &io_s);
+        assert_service_clean(&eng_f, &io_f);
+        // Identical delivered work both sides; every piece byte is
+        // classified as exactly one of same-PE / cross-PE.
+        assert_eq!(
+            st.same_pe_piece_bytes + st.cross_pe_piece_bytes,
+            fa.same_pe_piece_bytes + fa.cross_pe_piece_bytes
+        );
+        assert_eq!(st.same_pe_piece_bytes, 0, "static: disjoint PEs, everything crosses");
+        assert!(st.cross_pe_piece_bytes > 0);
+        assert_eq!(st.flow_reports, 0, "static sessions must not arm flow accounting");
+        assert_eq!(st.advised, 0);
+        assert_eq!(st.migrations, 0);
+        assert!(fa.flow_reports > 0);
+        assert_eq!(fa.advised, 4, "each of the 4 consumers advised exactly once");
+        assert_eq!(fa.migrations, 4, "each migration counted exactly once, no ping-pong");
+        assert_eq!(fa.suppressed, 0, "budget 4 per session never binds here");
+        assert!(fa.same_pe_piece_bytes > 0);
+        assert!(
+            fa.cross_pe_piece_bytes * 2 <= st.cross_pe_piece_bytes,
+            "flow-aware must cut cross-PE piece bytes by >= 50%: {} vs {}",
+            fa.cross_pe_piece_bytes,
+            st.cross_pe_piece_bytes
+        );
+        // Ungoverned runs never queue demand: no admission-wait windows.
+        assert_eq!(fa.overlap_windows, 0);
+        assert_eq!(fa.overlap_bg_iters, 0);
+    }
+
+    /// PR 9 tentpole: the hard per-session migration budget. With a
+    /// budget of 1, only one consumer per session is advised; the other
+    /// keeps wanting to move and is counted as suppressed, never
+    /// advised, and never migrates.
+    #[test]
+    fn migration_budget_and_hysteresis_bound_advice() {
+        let flow = ConsumerPlacement::FlowAware { piece_threshold: 2, migration_budget: 1 };
+        let (fa, io, eng) = run_svc_overlap(flow, ServiceConfig::default(), false, 33);
+        assert_service_clean(&eng, &io);
+        assert_eq!(fa.advised, 2, "budget 1 per session, 2 sessions");
+        assert_eq!(fa.migrations, 2);
+        assert!(fa.suppressed > 0, "over-budget wants-move must be counted, not advised");
+        // The advised consumers still cut some cross-PE traffic.
+        assert!(fa.same_pe_piece_bytes > 0);
+    }
+
+    /// PR 9 acceptance (tentpole, overlap side): a cap of 1 in-flight
+    /// PFS read on one data-plane shard queues the pinned buffers'
+    /// demand, opening admission-wait windows on their PEs; with
+    /// background workers running, their iterations inside those windows
+    /// land in the `ckio.overlap.*` counters (the TASIO measurement).
+    /// Without background work the windows still open but measure zero.
+    #[test]
+    fn governed_waits_overlap_background_work() {
+        let governed = ServiceConfig {
+            max_inflight_reads: Some(1),
+            data_plane_shards: Some(1),
+            ..Default::default()
+        };
+        let (bg, io_a, eng_a) =
+            run_svc_overlap(ConsumerPlacement::Static, governed.clone(), true, 37);
+        let (nobg, io_b, eng_b) =
+            run_svc_overlap(ConsumerPlacement::Static, governed, false, 37);
+        assert_service_clean(&eng_a, &io_a);
+        assert_service_clean(&eng_b, &io_b);
+        assert!(bg.overlap_windows > 0 && nobg.overlap_windows > 0, "cap 1 must queue demand");
+        assert!(bg.overlap_bg_iters > 0, "background work must be measured inside waits");
+        assert!(bg.overlap_bg_s > 0.0 && bg.overlap_window_s > 0.0);
+        assert!(bg.bg_total_iters >= bg.overlap_bg_iters);
+        assert_eq!(nobg.overlap_bg_iters, 0);
+        assert_eq!(nobg.bg_total_iters, 0);
+        // The flushed metrics agree with the engine-core totals.
+        let m = &eng_a.core.metrics;
+        assert_eq!(m.counter(keys::OVERLAP_WINDOWS), bg.overlap_windows);
+        assert_eq!(m.counter(keys::OVERLAP_BG_ITERS), bg.overlap_bg_iters);
+    }
+
+    /// PR 9 acceptance: deterministic mid-migration session close. With
+    /// the flow threshold equal to the round count, each consumer's
+    /// single flow report fires off its *final* piece, so the advice —
+    /// and the migration it triggers — races the leader's session close
+    /// inside one run. Whether each advice lands before or after
+    /// teardown, nothing leaks: flow matrices, flow accounts,
+    /// first-served marks, wait windows, and forwarded envelopes are
+    /// all gone at quiescence.
+    #[test]
+    fn mid_migration_session_close_tears_down_clean() {
+        let rounds = OVERLAP_SHAPE.4;
+        let flow = ConsumerPlacement::FlowAware { piece_threshold: rounds, migration_budget: 4 };
+        let (fa, io, eng) = run_svc_overlap(flow, ServiceConfig::default(), false, 47);
+        assert!(fa.flow_reports > 0, "the final pieces must still report");
+        assert!(fa.advised <= 4);
+        assert_service_clean(&eng, &io);
+    }
+
+    /// PR 9 satellite (regression, first_served drop cleanup): a traced
+    /// run populates the assembler's per-session first-served marks (the
+    /// `session/first_byte` instants prove it), and closing every
+    /// session clears them on every PE.
+    #[test]
+    fn session_drop_clears_first_served_marks() {
+        use crate::trace::{self, names, TraceConfig};
+        trace::arm(TraceConfig::on());
+        let (st, io, eng) =
+            run_svc_overlap(ConsumerPlacement::Static, ServiceConfig::default(), false, 61);
+        assert!(eng.core.trace.is_enabled(), "armed station must install a sink at boot");
+        assert!(st.cross_pe_piece_bytes > 0);
+        for pe in 0..eng.core.topo.npes() {
+            let asm: &crate::ckio::assembler::ReadAssembler =
+                eng.chare(ChareRef::new(io.assemblers, pe));
+            assert_eq!(asm.first_served_count(), 0, "first-served marks leaked on PE {pe}");
+        }
+        assert_service_clean(&eng, &io);
+        drop(eng);
+        let sinks = trace::collect();
+        trace::disarm();
+        let json = trace::export_chrome(&sinks);
+        assert!(
+            json.contains(names::SESSION_FIRST_BYTE),
+            "marks were really set while the sessions ran"
+        );
+    }
+
+    /// PR 9 anchor: `BENCH_pr9.json` is valid JSON and carries the
+    /// consumer-locality and overlap sections with the observability
+    /// keys the CI bench smoke greps for.
+    #[test]
+    fn bench_pr9_json_is_wellformed() {
+        let j = bench_pr9_json(1);
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"bench\":\"svc_overlap\""));
+        assert!(j.contains("\"pr\":9"));
+        for key in [
+            "\"consumer_locality\"",
+            "\"overlap\"",
+            "\"static\"",
+            "\"flow_aware\"",
+            "\"with_bg\"",
+            "\"without_bg\"",
+            "cross_pe_reduction",
+            "ckio.place.piece_same_pe",
+            "ckio.place.piece_cross_pe",
+            "ckio.consumer.flow_reports",
+            "ckio.consumer.migrations_advised",
+            "ckio.consumer.advice_suppressed",
+            "amt.migrations",
+            "ckio.overlap.windows",
+            "ckio.overlap.bg_iters",
+            "ckio.overlap.bg_time",
+            "ckio.overlap.window_time",
+            "bg_total_iters",
+        ] {
+            assert!(j.contains(key), "missing {key} in BENCH_pr9 json");
+        }
     }
 }

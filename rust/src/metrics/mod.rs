@@ -336,6 +336,37 @@ pub mod keys {
     /// torn-down owners (drop-time bulk return; without it a dead
     /// buffer's in-flight reads would leak cap forever).
     pub const GOV_RECLAIMED: &str = "ckio.governor.reclaimed";
+    /// Consumer locality (PR 9): piece bytes delivered by an assembler
+    /// from a buffer on its *own* PE — the buffer→assembler delivery
+    /// leg, the counterpart of `ckio.place.same_pe_fetch` (which only
+    /// covers the buffer↔buffer peer-fetch leg).
+    pub const PLACE_PIECE_SAME_PE: &str = "ckio.place.piece_same_pe";
+    /// Consumer locality (PR 9): piece bytes delivered from a buffer on
+    /// a *different* PE — what FlowAware consumer migration shrinks.
+    pub const PLACE_PIECE_CROSS_PE: &str = "ckio.place.piece_cross_pe";
+    /// Consumer locality (PR 9): assembler flow-report deltas received
+    /// by the director (FlowAware sessions only).
+    pub const CONSUMER_FLOW_REPORTS: &str = "ckio.consumer.flow_reports";
+    /// Consumer locality (PR 9): migrations the director advised (each
+    /// decrements the session's budget; hysteresis and budget caps are
+    /// counted on `ckio.consumer.advice_suppressed`).
+    pub const CONSUMER_MIGRATIONS_ADVISED: &str = "ckio.consumer.migrations_advised";
+    /// Consumer locality (PR 9): advice the flow matrix justified but
+    /// the advisor withheld — budget exhausted, or the destination was
+    /// already in the consumer's hysteresis set.
+    pub const CONSUMER_ADVICE_SUPPRESSED: &str = "ckio.consumer.advice_suppressed";
+    /// I/O-aware overlap (PR 9): admission-wait overlap windows closed
+    /// (a window spans first queued ticket → demand drained on a PE).
+    pub const OVERLAP_WINDOWS: &str = "ckio.overlap.windows";
+    /// I/O-aware overlap (PR 9): background-chare tasks run inside open
+    /// overlap windows — iterations that fit inside input time (TASIO).
+    pub const OVERLAP_BG_ITERS: &str = "ckio.overlap.bg_iters";
+    /// I/O-aware overlap (PR 9): background-chare execution time inside
+    /// overlap windows.
+    pub const OVERLAP_BG_TIME: &str = "ckio.overlap.bg_time";
+    /// I/O-aware overlap (PR 9): total wall span of closed overlap
+    /// windows (the denominator of the overlap-efficiency ratio).
+    pub const OVERLAP_WINDOW_TIME: &str = "ckio.overlap.window_time";
 
     /// The observability catalog: `(key, kind, emitting module, what it
     /// measures)` for every constant above — the registry behind
@@ -411,6 +442,15 @@ pub mod keys {
             (RETRY_GAVE_UP, "counter", "ckio/buffer.rs", "extents abandoned after the retry budget"),
             (SESSION_DEGRADED, "counter", "ckio/buffer.rs", "client-read bytes answered from degraded slots"),
             (GOV_RECLAIMED, "counter", "ckio/shard.rs", "tickets and queued demand reclaimed from dead owners"),
+            (PLACE_PIECE_SAME_PE, "counter", "ckio/assembler.rs", "piece bytes delivered from a buffer on the assembler's PE"),
+            (PLACE_PIECE_CROSS_PE, "counter", "ckio/assembler.rs", "piece bytes delivered from a buffer on another PE"),
+            (CONSUMER_FLOW_REPORTS, "counter", "ckio/director.rs", "assembler consumer-flow deltas received (FlowAware)"),
+            (CONSUMER_MIGRATIONS_ADVISED, "counter", "ckio/director.rs", "consumer migrations advised by the flow matrix"),
+            (CONSUMER_ADVICE_SUPPRESSED, "counter", "ckio/director.rs", "advice withheld by hysteresis or the migration budget"),
+            (OVERLAP_WINDOWS, "counter", "amt/engine.rs", "admission-wait overlap windows closed"),
+            (OVERLAP_BG_ITERS, "counter", "amt/engine.rs", "background-chare tasks run inside overlap windows"),
+            (OVERLAP_BG_TIME, "duration", "amt/engine.rs", "background-chare execution time inside overlap windows"),
+            (OVERLAP_WINDOW_TIME, "duration", "amt/engine.rs", "total wall span of closed overlap windows"),
         ]
     }
 }

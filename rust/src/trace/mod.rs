@@ -484,6 +484,12 @@ pub mod names {
     /// Hedged duplicate read enqueued for an overdue attempt (a0 =
     /// slot, a1 = overdue attempt number).
     pub const PFS_HEDGE: &str = "pfs/hedge";
+    /// I/O-wait overlap window closed on a PE (PR 9; a0 = background
+    /// tasks run inside it, a1 = window span ns).
+    pub const SCHED_OVERLAP: &str = "sched/overlap";
+    /// Consumer migration advised by the flow matrix (PR 9; a0 =
+    /// destination PE, a1 = dominant-source bytes).
+    pub const PLACE_CONSUMER_ADVICE: &str = "place/consumer_advice";
 
     /// The trace catalog: `(event name, emitting module, what it
     /// marks)` for every constant above — rendered into
@@ -516,6 +522,8 @@ pub mod names {
             (PFS_FAULT, "pfs/model.rs", "injected fault surfaced at completion (note: kind)"),
             (PFS_RETRY, "ckio/buffer.rs", "retry-plane decision (note: reissue/gave_up)"),
             (PFS_HEDGE, "ckio/buffer.rs", "hedged duplicate read enqueued past deadline"),
+            (SCHED_OVERLAP, "amt/engine.rs", "I/O-wait overlap window closed on a PE"),
+            (PLACE_CONSUMER_ADVICE, "ckio/director.rs", "consumer migration advised by the flow matrix"),
         ]
     }
 }

@@ -23,6 +23,7 @@ pub fn drive(ctx: &mut Ctx, peer: ChareRef) {
     ctx.send(peer, EP_TAKES_FOO, Payload::new(FooMsg { n: 7 }));
     ctx.metrics.incr("ckio.rogue", 1);
     ctx.metrics.incr("ckio.fault.rogue", 1);
+    ctx.metrics.incr("ckio.consumer.rogue", 1);
     ctx.trace.instant(0, "ticket/rogue");
 }
 
