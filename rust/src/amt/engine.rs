@@ -24,7 +24,7 @@ use std::time::Instant;
 
 use crate::metrics::{keys, Metrics};
 use crate::net::{NetConfig, Network, Transfer};
-use crate::pfs::backend::{LocalDisk, ReadRequest};
+use crate::pfs::backend::{LocalDisk, ReadRequest, WriteRequest};
 use crate::pfs::model::{PfsConfig, PfsEvent, SimPfs};
 use crate::trace::{names as trace_names, Lane as TraceLane, TraceCategory, TraceSink};
 use crate::util::rng::Pcg32;
@@ -396,6 +396,36 @@ impl Core {
         }
     }
 
+    /// Submit a write to the attached I/O backend (PR 10); `cb`
+    /// receives an [`crate::pfs::IoResult`] payload (no data chunk) when
+    /// the write commits. Only the modeled backend writes — the
+    /// real-disk pool is a read-only verification harness.
+    pub fn submit_write(&mut self, pe: Pe, req: WriteRequest, cb: Callback) {
+        let now = self.now;
+        let node = self.topo.node_of(pe).0;
+        match &mut self.io {
+            Io::Sim(pfs) => {
+                let mut out = std::mem::take(&mut self.pfs_scratch);
+                pfs.submit_write(
+                    now,
+                    pe,
+                    node,
+                    req,
+                    cb,
+                    &mut self.metrics,
+                    &mut self.trace,
+                    &mut out,
+                );
+                for s in out.drain(..) {
+                    self.push(s.at, Event::Pfs(s.ev));
+                }
+                self.pfs_scratch = out;
+            }
+            Io::Real(_) => panic!("submit_write on the read-only real-disk backend"),
+            Io::None => panic!("submit_write with no I/O backend attached"),
+        }
+    }
+
     /// Open the file system's metadata path (MDS); fires `cb` when done.
     /// On the real backend opens are immediate (the pool opens lazily).
     pub fn open_file(&mut self, pe: Pe, cb: Callback) {
@@ -673,6 +703,12 @@ impl<'a> Ctx<'a> {
     /// Submit a split-phase read; `cb` gets an `IoResult` payload.
     pub fn submit_read(&mut self, req: ReadRequest, cb: Callback) {
         self.core.submit_read(self.pe, req, cb);
+    }
+
+    /// Submit a split-phase write (PR 10); `cb` gets an `IoResult`
+    /// payload (outcome only, no data) when the write commits.
+    pub fn submit_write(&mut self, req: WriteRequest, cb: Callback) {
+        self.core.submit_write(self.pe, req, cb);
     }
 
     /// Split-phase file open (MDS transaction).
@@ -1676,7 +1712,7 @@ mod tests {
         let dir = std::env::temp_dir().join("ckio_engine_test");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("wall.bin");
-        std::fs::write(&path, pattern::make(crate::pfs::FileId(0), 0, 256 << 10)).unwrap();
+        pattern::write_file(&path, crate::pfs::FileId(0), 256 << 10).unwrap();
 
         let mut eng = Engine::new(EngineConfig::real(1, 1)).with_local_disk(2);
         eng.core.local_disk_mut().register_file(&path);

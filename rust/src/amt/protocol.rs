@@ -278,14 +278,18 @@ pub fn builtin_table() -> ProtocolTable {
         crate::ckio::assembler::protocol_spec(),
         crate::ckio::buffer::protocol_spec(),
         crate::ckio::shard::protocol_spec(),
+        crate::ckio::write::assembler_protocol_spec(),
+        crate::ckio::write::buffer_protocol_spec(),
         crate::harness::bgwork::protocol_spec(),
         crate::harness::experiments::slice_reader_protocol_spec(),
         crate::harness::experiments::collector_protocol_spec(),
         crate::harness::experiments::mig_client_protocol_spec(),
         crate::harness::experiments::concurrent_client_protocol_spec(),
         crate::harness::experiments::overlap_client_protocol_spec(),
+        crate::harness::experiments::rw_client_protocol_spec(),
         crate::baselines::naive::protocol_spec(),
         crate::baselines::collective::protocol_spec(),
+        crate::baselines::collective::naive_writer_protocol_spec(),
         crate::apps::changa::treepiece::protocol_spec(),
     ] {
         t.push(spec);

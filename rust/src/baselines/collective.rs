@@ -16,6 +16,12 @@
 //! Structurally this is CkIO's aggregation *without* the session
 //! abstraction, prefetch overlap, tunable reader count or migratability —
 //! which is exactly the comparison the paper draws.
+//!
+//! Since PR 10 the module also carries the **write-side baseline**:
+//! [`NaiveWriter`], the output mirror of the naive per-task read — every
+//! producer writes each of its pieces straight to the PFS with its own
+//! RPC, no aggregation. `run_svc_rw` runs it against the `ckio::write`
+//! plane's stripe-coalesced stream to report the PFS write-op reduction.
 
 use crate::amt::callback::Callback;
 use crate::amt::chare::{Chare, ChareRef, CollectionId};
@@ -24,7 +30,7 @@ use crate::amt::msg::{Ep, Msg, Payload};
 use crate::amt::protocol::{PayloadKind, ProtocolSpec};
 use crate::impl_chare_any;
 use crate::net::Transfer;
-use crate::pfs::backend::{IoResult, ReadRequest};
+use crate::pfs::backend::{IoResult, ReadRequest, WriteRequest};
 use crate::pfs::layout::FileId;
 use crate::util::bytes::Chunk;
 use crate::{ep_spec, send_spec};
@@ -250,6 +256,84 @@ impl Chare for MpiRank {
     impl_chare_any!();
 }
 
+/// Driver: begin the naive collective write (sent to every writer).
+pub const EP_W_GO: Ep = 5;
+/// Naive writer I/O completion (one per piece).
+pub const EP_W_DATA: Ep = 6;
+
+/// The naive every-producer-writes baseline (PR 10): each producer
+/// issues one PFS write RPC **per piece** of its slice — the output
+/// analogue of the Fig. 1 per-task reads, and what two-phase collective
+/// output papers aggregate away. No coalescing, no stripe alignment,
+/// no admission: the PFS sees one small RPC per producer piece.
+pub struct NaiveWriter {
+    pub file: FileId,
+    /// This producer's slice of the output range.
+    pub offset: u64,
+    pub len: u64,
+    /// Producer piece granularity: every piece is its own write RPC.
+    pub piece_bytes: u64,
+    outstanding: u32,
+    pub done: Callback,
+}
+
+impl NaiveWriter {
+    pub fn new(file: FileId, offset: u64, len: u64, piece_bytes: u64, done: Callback) -> Self {
+        assert!(piece_bytes > 0, "piece granularity must be positive");
+        NaiveWriter { file, offset, len, piece_bytes, outstanding: 0, done }
+    }
+}
+
+/// [`NaiveWriter`]'s declared message protocol (see
+/// [`crate::amt::protocol`]). Its only inbound traffic besides the go
+/// signal is the engine's write-completion callback (no direct sends).
+pub fn naive_writer_protocol_spec() -> ProtocolSpec {
+    ProtocolSpec {
+        chare: "NaiveWriter",
+        module: "baselines/collective.rs",
+        handles: vec![
+            ep_spec!(EP_W_GO, PayloadKind::Signal),
+            ep_spec!(EP_W_DATA, PayloadKind::of::<IoResult>()),
+        ],
+        sends: vec![],
+    }
+}
+
+impl Chare for NaiveWriter {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_W_GO => {
+                if self.len == 0 {
+                    ctx.fire(self.done.clone(), Payload::new(0u64));
+                    return;
+                }
+                let me = ctx.me();
+                let end = self.offset + self.len;
+                let mut o = self.offset;
+                while o < end {
+                    let l = self.piece_bytes.min(end - o);
+                    ctx.submit_write(
+                        WriteRequest { file: self.file, offset: o, len: l, user: 0 },
+                        Callback::to_chare(me, EP_W_DATA),
+                    );
+                    self.outstanding += 1;
+                    o += l;
+                }
+            }
+            EP_W_DATA => {
+                let r: IoResult = msg.take();
+                debug_assert!(r.outcome.is_ok(), "naive baseline runs against a clean PFS");
+                self.outstanding -= 1;
+                if self.outstanding == 0 {
+                    ctx.fire(self.done.clone(), Payload::new(self.len));
+                }
+            }
+            other => panic!("NaiveWriter: unknown ep {other}"),
+        }
+    }
+    impl_chare_any!();
+}
+
 /// Build the canonical equal split of `(lo, total)` across `n` ranks.
 pub fn equal_slices(lo: u64, total: u64, n: u32) -> Vec<(u64, u64)> {
     let per = crate::util::bytes::ceil_div(total, n as u64);
@@ -339,6 +423,35 @@ mod tests {
         assert_eq!(cfg.aggs_for(0, 300), vec![0]);
         assert_eq!(cfg.aggs_for(250, 100), vec![0, 1]);
         assert_eq!(cfg.aggs_for(0, 900), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn naive_writers_pay_one_rpc_per_piece() {
+        let mut eng = Engine::new(EngineConfig::sim(2, 4)).with_sim_pfs(PfsConfig {
+            noise_sigma: 0.0,
+            ..PfsConfig::default()
+        });
+        let size: u64 = 4 << 20;
+        let piece: u64 = 64 << 10;
+        let file = eng.core.sim_pfs_mut().create_file(size);
+        let n = 8u32;
+        let per = size / n as u64;
+        let fut = eng.future(n);
+        let cid = eng.create_array(n, &Placement::RoundRobinPes, |i| {
+            NaiveWriter::new(file, i as u64 * per, per, piece, Callback::Future(fut))
+        });
+        eng.register_protocol(cid, naive_writer_protocol_spec());
+        for i in 0..n {
+            eng.inject_signal(ChareRef::new(cid, i), EP_W_GO);
+        }
+        eng.run();
+        assert!(eng.future_done(fut), "naive write did not complete");
+        let total: u64 =
+            eng.take_future(fut).into_iter().map(|(_, mut p)| p.take::<u64>()).sum();
+        assert_eq!(total, size);
+        // The defining property of the baseline: one RPC per piece.
+        assert_eq!(eng.core.metrics.counter("pfs.write_rpcs"), size / piece);
+        assert_eq!(eng.core.metrics.counter("pfs.bytes_written"), size);
     }
 
     #[test]

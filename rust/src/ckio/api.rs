@@ -37,13 +37,15 @@ use crate::pfs::layout::FileId;
 
 use super::assembler::ReadAssembler;
 use super::director::{
-    CloseFileMsg, CloseSessionMsg, Director, OpenMsg, StartSessionMsg, EP_DIR_CLOSE_FILE,
-    EP_DIR_CLOSE_SESSION, EP_DIR_OPEN, EP_DIR_START_SESSION,
+    CloseFileMsg, CloseSessionMsg, CloseWriteMsg, Director, FlushMsg, OpenMsg, StartSessionMsg,
+    StartWriteMsg, EP_DIR_CLOSE_FILE, EP_DIR_CLOSE_SESSION, EP_DIR_CLOSE_WRITE, EP_DIR_FLUSH,
+    EP_DIR_OPEN, EP_DIR_START_SESSION, EP_DIR_START_WRITE,
 };
 use super::manager::{Manager, ReadMsg, EP_M_READ};
-use super::options::{ConfigError, FileOptions, ServiceConfig, SessionOptions};
+use super::options::{ConfigError, FileOptions, ServiceConfig, SessionOptions, WriteOptions};
 use super::session::{Session, SessionId};
 use super::shard::DataShard;
+use super::write::{PutMsg, WriteAssembler, EP_WA_PUT};
 
 /// Handle bundle for the CkIO service instance; cheap to copy into every
 /// client chare.
@@ -52,6 +54,9 @@ pub struct CkIo {
     pub director: ChareRef,
     pub managers: CollectionId,
     pub assemblers: CollectionId,
+    /// The per-PE write-scatter router group (PR 10): producers' `write`
+    /// calls enter the output plane through their local element.
+    pub wassemblers: CollectionId,
     /// The data-plane shard array (PR 3): span-store + governor state,
     /// partitioned by `FileId` hash.
     pub shards: CollectionId,
@@ -116,6 +121,7 @@ impl CkIo {
             engine.core.trace = crate::trace::TraceSink::new(&cfg.trace);
         }
         let assemblers = engine.create_group(|_| ReadAssembler::default());
+        let wassemblers = engine.create_group(|_| WriteAssembler::default());
         // The director's ChareRef isn't known until created; managers and
         // shards are patched right after through `patch_director`, which
         // asserts the placeholder is unobservable.
@@ -131,6 +137,7 @@ impl CkIo {
             Director::new(
                 managers,
                 assemblers,
+                wassemblers,
                 shards,
                 nshards,
                 active,
@@ -142,6 +149,7 @@ impl CkIo {
         patch_director::<Manager>(engine, managers, npes, director, |m| &mut m.director);
         patch_director::<DataShard>(engine, shards, nshards, director, |s| &mut s.director);
         patch_director::<ReadAssembler>(engine, assemblers, npes, director, |a| &mut a.director);
+        patch_director::<WriteAssembler>(engine, wassemblers, npes, director, |a| &mut a.director);
         // Prove the declared EP graph sound before any message can flow,
         // and arm the engine's per-send validation (debug builds) for
         // every service collection. Buffer arrays are registered by the
@@ -152,6 +160,7 @@ impl CkIo {
         engine.register_protocol(director.collection, super::director::protocol_spec());
         engine.register_protocol(managers, super::manager::protocol_spec());
         engine.register_protocol(assemblers, super::assembler::protocol_spec());
+        engine.register_protocol(wassemblers, super::write::assembler_protocol_spec());
         engine.register_protocol(shards, super::shard::protocol_spec());
         // Configure the *active* shards (inactive ones never see
         // traffic): store-budget share and governor, applied directly to
@@ -168,7 +177,7 @@ impl CkIo {
         if cap_gauge > 0.0 {
             engine.core.metrics.add(keys::GOV_CAP, cap_gauge);
         }
-        Ok(CkIo { director, managers, assemblers, shards, nshards })
+        Ok(CkIo { director, managers, assemblers, wassemblers, shards, nshards })
     }
 
     // ------------------------------------------------------------------
@@ -304,6 +313,81 @@ impl CkIo {
     }
 
     // ------------------------------------------------------------------
+    // write plane (PR 10)
+    // ------------------------------------------------------------------
+
+    /// Start a write session over `[offset, offset+bytes)` of `file`
+    /// (PR 10). `ready` receives the same [`Session`] scatter handle
+    /// reads use; producers then [`CkIo::write`] pieces into it. The
+    /// writer count resolves from the file's [`FileOptions`] exactly as
+    /// the reader count does; `opts` carries the QoS class (PFS writes
+    /// are admitted through the same per-shard governor as reads) and
+    /// the write window; `wopts` the stripe grid, write-behind, and
+    /// lazy-parking policy. A zero `stripe_bytes` fails `ready` with a
+    /// structured [`super::options::OpenError`].
+    pub fn start_write_session(
+        &self,
+        ctx: &mut Ctx<'_>,
+        file: FileId,
+        offset: u64,
+        bytes: u64,
+        opts: SessionOptions,
+        wopts: WriteOptions,
+        ready: Callback,
+    ) {
+        ctx.send(self.director, EP_DIR_START_WRITE, StartWriteMsg {
+            file,
+            offset,
+            bytes,
+            opts,
+            wopts,
+            ready,
+        });
+    }
+
+    /// Scatter `[offset, offset+len)` into a write session; `after`
+    /// receives a [`super::write::WriteResult`] once every routed piece
+    /// was accepted by its buffer (acceptance is buffering — durability
+    /// is [`CkIo::flush_write_session`] / close). The call goes through
+    /// the *local* write assembler (same-PE group access); in this
+    /// reproduction the payload is the deterministic verification
+    /// pattern, so the call carries geometry, not bytes.
+    pub fn write(
+        &self,
+        ctx: &mut Ctx<'_>,
+        session: &Session,
+        offset: u64,
+        len: u64,
+        after: Callback,
+    ) {
+        let pe = ctx.pe();
+        ctx.send_group(self.wassemblers, pe, EP_WA_PUT, PutMsg {
+            session: session.id,
+            offset,
+            len,
+            after,
+        });
+    }
+
+    /// Flush barrier: `after` fires once every byte producers have
+    /// scattered so far is durably on the PFS or degraded into the
+    /// session outcome — no dirty extent, queued write, or write ticket
+    /// survives the barrier.
+    pub fn flush_write_session(&self, ctx: &mut Ctx<'_>, session: SessionId, after: Callback) {
+        ctx.send(self.director, EP_DIR_FLUSH, FlushMsg { session, after });
+    }
+
+    /// Close a write session: drain like a flush (unless the session
+    /// opted into [`WriteOptions::park_dirty`]), then *park* the buffers
+    /// — their residency is what serves a following read session with
+    /// zero PFS reads. `after` receives the aggregated
+    /// [`super::session::SessionOutcome`] (written / degraded / dirty
+    /// byte accounting), exactly once per close call.
+    pub fn close_write_session(&self, ctx: &mut Ctx<'_>, session: SessionId, after: Callback) {
+        ctx.send(self.director, EP_DIR_CLOSE_WRITE, CloseWriteMsg { session, after });
+    }
+
+    // ------------------------------------------------------------------
     // driver-side (experiment setup, outside any chare)
     // ------------------------------------------------------------------
 
@@ -369,5 +453,57 @@ impl CkIo {
     /// across several sessions).
     pub fn close_file_driver(&self, engine: &mut Engine, file: FileId, after: Callback) {
         engine.inject(self.director, EP_DIR_CLOSE_FILE, CloseFileMsg { file, after });
+    }
+
+    /// Driver-side write-session start (PR 10).
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_write_driver(
+        &self,
+        engine: &mut Engine,
+        file: FileId,
+        offset: u64,
+        bytes: u64,
+        opts: SessionOptions,
+        wopts: WriteOptions,
+        ready: Callback,
+    ) {
+        engine.inject(self.director, EP_DIR_START_WRITE, StartWriteMsg {
+            file,
+            offset,
+            bytes,
+            opts,
+            wopts,
+            ready,
+        });
+    }
+
+    /// Driver-side write: scatter a producer put through `pe`'s write
+    /// assembler — exactly the path [`CkIo::write`] takes from a chare
+    /// on that PE.
+    pub fn write_driver(
+        &self,
+        engine: &mut Engine,
+        pe: u32,
+        session: &Session,
+        offset: u64,
+        len: u64,
+        after: Callback,
+    ) {
+        engine.inject(ChareRef::new(self.wassemblers, pe), EP_WA_PUT, PutMsg {
+            session: session.id,
+            offset,
+            len,
+            after,
+        });
+    }
+
+    /// Driver-side flush barrier.
+    pub fn flush_write_driver(&self, engine: &mut Engine, session: SessionId, after: Callback) {
+        engine.inject(self.director, EP_DIR_FLUSH, FlushMsg { session, after });
+    }
+
+    /// Driver-side write-session close.
+    pub fn close_write_driver(&self, engine: &mut Engine, session: SessionId, after: Callback) {
+        engine.inject(self.director, EP_DIR_CLOSE_WRITE, CloseWriteMsg { session, after });
     }
 }

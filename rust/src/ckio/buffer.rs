@@ -988,6 +988,7 @@ impl Chare for BufferChare {
                         splinter: self.splinter,
                         buffer: me,
                         pe: ctx.pe().0,
+                        dirty: false,
                     });
                 }
                 ctx.advance(MICROS);

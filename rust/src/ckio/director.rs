@@ -98,6 +98,7 @@ use super::manager::{
 };
 use super::options::{
     ConsumerPlacement, FileOptions, OpenError, ReaderPlacement, RetryPolicy, SessionOptions,
+    WriteOptions,
 };
 use super::session::{
     buffer_span_of, ConsumerAdviceMsg, FileHandle, FlowReportMsg, Session, SessionId,
@@ -108,6 +109,10 @@ use super::shard::{
     EP_SHARD_PURGE, EP_SHARD_TAKE,
 };
 use super::store::{BufKey, PlannedSource};
+use super::write::{
+    FlushDoneMsg, WbDroppedMsg, WriteBuffer, WriteSessionMsg, EP_WA_SESSION, EP_WA_SESSION_DROP,
+    EP_WB_CLOSE, EP_WB_FLUSH, EP_WB_INIT,
+};
 
 /// User: open a file.
 pub const EP_DIR_OPEN: Ep = 1;
@@ -141,6 +146,17 @@ pub const EP_DIR_PLAN_REPLY: Ep = 13;
 /// it to migrate there (`EP_CONSUMER_ADVICE`, within the session's
 /// budget and hysteresis).
 pub const EP_DIR_FLOW_REPORT: Ep = 14;
+/// User: start a write session (PR 10).
+pub const EP_DIR_START_WRITE: Ep = 15;
+/// User: flush a write session — a drain barrier over every dirty
+/// extent; the callback fires once all of them are durable or degraded.
+pub const EP_DIR_FLUSH: Ep = 16;
+/// User: close a write session (drain unless lazy, then park).
+pub const EP_DIR_CLOSE_WRITE: Ep = 17;
+/// Write buffer: its share of a flush barrier drained.
+pub const EP_DIR_FLUSH_DONE: Ep = 18;
+/// Write buffer close ack: span parked, outcome counters attached.
+pub const EP_DIR_WB_DROPPED: Ep = 19;
 
 #[derive(Debug)]
 pub struct OpenMsg {
@@ -163,6 +179,37 @@ pub struct StartSessionMsg {
 
 #[derive(Debug)]
 pub struct CloseSessionMsg {
+    pub session: SessionId,
+    pub after: Callback,
+}
+
+/// User → director: start a write session over `[offset, offset+bytes)`
+/// of `file` (PR 10). `ready` fires with the [`Session`] scatter handle
+/// once every write buffer claimed its span and every PE's assembler
+/// routes for the session.
+#[derive(Debug)]
+pub struct StartWriteMsg {
+    pub file: FileId,
+    pub offset: u64,
+    pub bytes: u64,
+    /// Session scope (QoS class, window, reader-count resolution rides
+    /// the file options exactly as for reads).
+    pub opts: SessionOptions,
+    /// Write scope: stripe width, write-behind, lazy parking.
+    pub wopts: WriteOptions,
+    pub ready: Callback,
+}
+
+/// User → director: flush barrier over a write session.
+#[derive(Debug)]
+pub struct FlushMsg {
+    pub session: SessionId,
+    pub after: Callback,
+}
+
+/// User → director: close a write session.
+#[derive(Debug)]
+pub struct CloseWriteMsg {
     pub session: SessionId,
     pub after: Callback,
 }
@@ -242,6 +289,35 @@ struct CloseState {
     outcome: SessionOutcome,
 }
 
+/// Write-session scope the director keeps beyond the shared
+/// [`SessionState`] (PR 10): the close path needs the write options (a
+/// lazy close skips the drain) and the sentinel park key.
+struct WriteState {
+    wopts: WriteOptions,
+    /// The span-store key the array parks under at close. Write parks
+    /// use a *sentinel* key — `placement: ReaderPlacement::Explicit(vec![])`,
+    /// unreachable from any read session since placement validation
+    /// requires covering at least one reader — so a read-side rebind
+    /// probe can never take a write array (whose chares do not speak
+    /// `EP_BUF_REBIND`). Read-after-write is served via peer *claims*,
+    /// not rebinds.
+    key: BufKey,
+}
+
+/// A flush barrier in progress over one write session; overlapping
+/// flush calls pile onto `afters` and complete together.
+struct FlushState {
+    afters: Vec<Callback>,
+    acks: u32,
+    need: u32,
+    /// Bytes the buffers wrote / degraded settling *this* barrier
+    /// (per-flush deltas, summed across the array).
+    written: u64,
+    degraded: u64,
+    /// Barrier origin: the `session/flush` trace span's start edge.
+    started_at: Time,
+}
+
 /// A `reuse_buffers` session start awaiting its shard's rebind probe.
 /// Carries everything needed to resume: the start logically happened
 /// when the probe was issued (the file was open in the table then), so
@@ -284,6 +360,8 @@ struct PendingPlan {
 pub struct Director {
     managers: CollectionId,
     assemblers: CollectionId,
+    /// The per-PE write-scatter router group (PR 10).
+    wassemblers: CollectionId,
     /// The data-plane shard array (structurally one chare per PE).
     shards: CollectionId,
     /// Elements in `shards`.
@@ -307,6 +385,9 @@ pub struct Director {
     files: HashMap<FileId, FileEntry>,
     /// startReadSession calls that raced ahead of their file's open.
     early_sessions: HashMap<FileId, Vec<StartSessionMsg>>,
+    /// startWriteSession calls that raced ahead of their file's open
+    /// (PR 10) — replayed alongside `early_sessions` on the open ack.
+    early_writes: HashMap<FileId, Vec<StartWriteMsg>>,
     /// Opens rejected by option validation, remembered so a session
     /// start *pipelined* behind a rejected open (the split-phase
     /// open-then-start pattern the early_sessions queue exists for)
@@ -316,6 +397,12 @@ pub struct Director {
     /// bounded; a later *valid* open of the file clears its entry.
     rejected_opens: HashMap<FileId, OpenError>,
     sessions: HashMap<SessionId, SessionState>,
+    /// Write-session scope, keyed alongside `sessions` (PR 10); removed
+    /// when the close begins (the CloseState carries the park from
+    /// there).
+    writes: HashMap<SessionId, WriteState>,
+    /// Flush barriers in progress (PR 10).
+    flushes: HashMap<SessionId, FlushState>,
     closes: HashMap<SessionId, CloseState>,
     file_closes: HashMap<FileId, CloseState>,
     /// Reuse session starts whose rebind probe is at the shard.
@@ -336,6 +423,7 @@ impl Director {
     pub fn new(
         managers: CollectionId,
         assemblers: CollectionId,
+        wassemblers: CollectionId,
         shards: CollectionId,
         nshards: u32,
         active_shards: u32,
@@ -346,6 +434,7 @@ impl Director {
         Director {
             managers,
             assemblers,
+            wassemblers,
             shards,
             nshards,
             active_shards: active_shards.clamp(1, nshards.max(1)),
@@ -356,8 +445,11 @@ impl Director {
             opens: HashMap::new(),
             files: HashMap::new(),
             early_sessions: HashMap::new(),
+            early_writes: HashMap::new(),
             rejected_opens: HashMap::new(),
             sessions: HashMap::new(),
+            writes: HashMap::new(),
+            flushes: HashMap::new(),
             closes: HashMap::new(),
             file_closes: HashMap::new(),
             pending_takes: HashMap::new(),
@@ -436,6 +528,8 @@ impl Director {
         st.outcome.retries += d.retries;
         st.outcome.hedges += d.hedges;
         st.outcome.gave_up_spans += d.gave_up_spans;
+        st.outcome.written_bytes += d.written_bytes;
+        st.outcome.dirty_bytes += d.dirty_bytes;
         if st.acks == st.need {
             let st = self.closes.remove(&sid).unwrap();
             // The consumer-flow matrix dies with the session (PR 9);
@@ -779,6 +873,110 @@ impl Director {
         ctx.advance(2 * MICROS);
     }
 
+    /// Start a write session over a freshly created [`WriteBuffer`]
+    /// array (PR 10). The mirror of [`Director::start_fresh`], minus the
+    /// read-only machinery: no rebind/plan probe (write arrays park
+    /// under a sentinel key no read session can take — a `StoreAware`
+    /// placement simply materializes its fallback), no consumer-flow
+    /// matrix, no splinters (the coalescing grid is the stripe). The
+    /// buffers claim their spans *dirty* at the shard, which is what
+    /// makes a following read session resolve against them
+    /// (read-after-write residency).
+    fn start_write(&mut self, ctx: &mut Ctx<'_>, m: StartWriteMsg, fopts: FileOptions) {
+        let sid = SessionId(self.next_session);
+        self.next_session += 1;
+        let nwriters = fopts.resolve_readers(m.bytes, &ctx.topo());
+        let window = m.opts.read_window;
+        let class = m.opts.class;
+        let wopts = m.wopts;
+        let file = m.file;
+        let (offset, bytes) = (m.offset, m.bytes);
+        let me = ctx.me();
+        let shard = self.shard_ref(file);
+        ctx.send(shard, EP_SHARD_ADMIT, class);
+        let placement = Self::effective_placement(&fopts, &m.opts)
+            .to_placement(nwriters)
+            .expect("placement validated at open / session start");
+        // Same span partition as the read side: put routing, claims,
+        // and a later read session's slots all agree bit for bit.
+        let spans: Vec<(u64, u64)> =
+            (0..nwriters).map(|b| buffer_span_of(offset, bytes, nwriters, b)).collect();
+        let governed = self.governed;
+        let retry = self.retry;
+        let buffers = ctx.create_array_now(nwriters, &placement, |i| {
+            let (o, l) = spans[i as usize];
+            let mut b = WriteBuffer::new(sid, file, o, l, wopts, window, me, shard);
+            if governed {
+                b = b.governed(bytes, class);
+            }
+            if let Some(r) = retry {
+                b = b.with_retry(r);
+            }
+            b
+        });
+        ctx.register_protocol(buffers, super::write::buffer_protocol_spec());
+        let session = Session::new(sid, file, offset, bytes, buffers, nwriters);
+        let started_at = ctx.now();
+        self.sessions.insert(sid, SessionState {
+            session,
+            ready: m.ready,
+            buf_started: 0,
+            mgr_acks: 0,
+            fired: false,
+            reuse_key: None,
+            started_at,
+        });
+        self.writes.insert(sid, WriteState {
+            wopts,
+            key: BufKey {
+                file,
+                offset,
+                bytes,
+                readers: nwriters,
+                splinter: wopts.stripe_bytes,
+                window: 0,
+                placement: ReaderPlacement::Explicit(Vec::new()),
+            },
+        });
+        ctx.metrics().count(keys::WRITE_SESSIONS, 1);
+        if ctx.trace().on(TraceCategory::Session) {
+            let pe = ctx.pe().0;
+            ctx.trace().begin(
+                started_at,
+                TraceCategory::Session,
+                trace_names::SESSION_ACTIVE,
+                TraceLane::Pe(pe),
+                u64::from(sid.0),
+                bytes,
+                u64::from(nwriters),
+            );
+            ctx.trace().instant(
+                started_at,
+                TraceCategory::Session,
+                trace_names::SESSION_CREATE,
+                TraceLane::Pe(pe),
+                u64::from(sid.0),
+                u64::from(nwriters),
+                "write",
+            );
+        }
+        for b in 0..nwriters {
+            ctx.signal(ChareRef::new(buffers, b), EP_WB_INIT);
+        }
+        // The write assemblers are the session's managers: each PE's
+        // router learns the scatter handle and acks like a manager does
+        // (maybe_ready counts them on the same mgr_acks tally).
+        for pe in 0..self.npes {
+            ctx.send_group(
+                self.wassemblers,
+                crate::amt::topology::Pe(pe),
+                EP_WA_SESSION,
+                WriteSessionMsg { session },
+            );
+        }
+        ctx.advance(2 * MICROS);
+    }
+
     // ------------------------------------------------------------------
     // test / driver inspection
     // ------------------------------------------------------------------
@@ -806,6 +1004,17 @@ impl Director {
     /// Files currently open (refcounted).
     pub fn open_files(&self) -> usize {
         self.files.len()
+    }
+
+    /// Write sessions currently live (leak checks: must be 0 after all
+    /// write closes).
+    pub fn active_writes(&self) -> usize {
+        self.writes.len()
+    }
+
+    /// Flush barriers still collecting buffer acks (leak checks).
+    pub fn pending_flushes(&self) -> usize {
+        self.flushes.len()
     }
 
     /// Sessions with a live consumer-flow matrix (leak checks: must be
@@ -849,9 +1058,15 @@ pub fn protocol_spec() -> ProtocolSpec {
             ep_spec!(EP_DIR_TAKE_REPLY, PayloadKind::of::<TakeReplyMsg>()),
             ep_spec!(EP_DIR_PLAN_REPLY, PayloadKind::of::<PlanReplyMsg>()),
             ep_spec!(EP_DIR_FLOW_REPORT, PayloadKind::of::<FlowReportMsg>()),
+            ep_spec!(EP_DIR_START_WRITE, PayloadKind::of::<StartWriteMsg>()),
+            ep_spec!(EP_DIR_FLUSH, PayloadKind::of::<FlushMsg>()),
+            ep_spec!(EP_DIR_CLOSE_WRITE, PayloadKind::of::<CloseWriteMsg>()),
+            ep_spec!(EP_DIR_FLUSH_DONE, PayloadKind::of::<FlushDoneMsg>()),
+            ep_spec!(EP_DIR_WB_DROPPED, PayloadKind::of::<WbDroppedMsg>()),
         ],
         sends: vec![
             send_spec!("Director", EP_DIR_START_SESSION, PayloadKind::of::<StartSessionMsg>()),
+            send_spec!("Director", EP_DIR_START_WRITE, PayloadKind::of::<StartWriteMsg>()),
             send_spec!("Manager", EP_M_FILE_OPENED, PayloadKind::of::<FileOpenedMsg>()),
             send_spec!("Manager", EP_M_SESSION_ANNOUNCE, PayloadKind::of::<SessionAnnounceMsg>()),
             send_spec!("Manager", EP_M_SESSION_DROP, PayloadKind::of::<SessionId>()),
@@ -866,6 +1081,12 @@ pub fn protocol_spec() -> ProtocolSpec {
             send_spec!("DataShard", EP_SHARD_PURGE, PayloadKind::of::<FileId>()),
             send_spec!("DataShard", EP_SHARD_PLAN, PayloadKind::of::<PlanMsg>()),
             send_spec!("DataShard", EP_SHARD_ADMIT, PayloadKind::of::<QosClass>()),
+            send_spec!("WriteAssembler", EP_WA_SESSION, PayloadKind::of::<WriteSessionMsg>()),
+            send_spec!("WriteAssembler", EP_WA_SESSION_DROP, PayloadKind::of::<SessionId>()),
+            send_spec!("WriteBuffer", EP_WB_INIT, PayloadKind::Signal),
+            send_spec!("WriteBuffer", EP_WB_FLUSH, PayloadKind::Signal),
+            send_spec!("WriteBuffer", EP_WB_CLOSE, PayloadKind::Signal),
+            send_spec!("WriteBuffer", EP_BUF_DROP, PayloadKind::Signal),
         ],
     }
 }
@@ -980,6 +1201,9 @@ impl Chare for Director {
                     let me = ctx.me();
                     for m in self.early_sessions.remove(&file).unwrap_or_default() {
                         ctx.send(me, EP_DIR_START_SESSION, m);
+                    }
+                    for m in self.early_writes.remove(&file).unwrap_or_default() {
+                        ctx.send(me, EP_DIR_START_WRITE, m);
                     }
                 }
             }
@@ -1162,6 +1386,7 @@ impl Chare for Director {
                     retries: m.retries,
                     hedges: m.hedges,
                     gave_up_spans: m.gave_up,
+                    ..Default::default()
                 };
                 self.ack_close(ctx, m.session, m.resident, delta);
             }
@@ -1264,6 +1489,165 @@ impl Chare for Director {
                     }
                 }
                 ctx.advance(MICROS / 2);
+            }
+            EP_DIR_START_WRITE => {
+                let m: StartWriteMsg = msg.take();
+                // Same early/rejected robustness as read session starts:
+                // a write pipelined behind its open is held and replayed;
+                // one behind a rejected open degrades to the structured
+                // error.
+                let Some(entry) = self.files.get(&m.file) else {
+                    if self.opens.contains_key(&m.file) {
+                        self.early_writes.entry(m.file).or_default().push(m);
+                        return;
+                    }
+                    if let Some(e) = self.rejected_opens.get(&m.file) {
+                        ctx.metrics().count(keys::SESSIONS_REJECTED, 1);
+                        ctx.fire(m.ready, Payload::new(e.clone()));
+                        return;
+                    }
+                    panic!("startWriteSession for a file that was never opened");
+                };
+                let (size, fopts) = (entry.size, entry.opts.clone());
+                assert!(m.offset + m.bytes <= size, "write session beyond EOF");
+                if let Err(e) = m.wopts.validate() {
+                    ctx.metrics().count(keys::SESSIONS_REJECTED, 1);
+                    ctx.fire(m.ready, Payload::new(e));
+                    return;
+                }
+                self.start_write(ctx, m, fopts);
+            }
+            EP_DIR_FLUSH => {
+                let m: FlushMsg = msg.take();
+                // Flushing a fully closed session is a completed barrier
+                // by definition (idempotent, like a double close).
+                if !self.sessions.contains_key(&m.session) {
+                    ctx.fire(m.after, Payload::empty());
+                    return;
+                }
+                assert!(
+                    self.writes.contains_key(&m.session),
+                    "flush of a read session (flush is write-plane only)"
+                );
+                // A barrier already in flight: attach — the buffers
+                // re-queue any bytes covered since, so one drain answers
+                // both calls.
+                if let Some(fs) = self.flushes.get_mut(&m.session) {
+                    fs.afters.push(m.after);
+                    return;
+                }
+                let st = &self.sessions[&m.session];
+                let nbuf = st.session.num_buffers;
+                let buffers = st.session.buffers;
+                for b in 0..nbuf {
+                    ctx.signal(ChareRef::new(buffers, b), EP_WB_FLUSH);
+                }
+                self.flushes.insert(m.session, FlushState {
+                    afters: vec![m.after],
+                    acks: 0,
+                    need: nbuf,
+                    written: 0,
+                    degraded: 0,
+                    started_at: ctx.now(),
+                });
+                ctx.advance(MICROS);
+            }
+            EP_DIR_FLUSH_DONE => {
+                let m: FlushDoneMsg = msg.take();
+                let Some(fs) = self.flushes.get_mut(&m.session) else { return };
+                fs.acks += 1;
+                fs.written += m.written;
+                fs.degraded += m.degraded;
+                if fs.acks == fs.need {
+                    let fs = self.flushes.remove(&m.session).unwrap();
+                    ctx.metrics().count(keys::WRITE_FLUSHES, 1);
+                    if ctx.trace().on(TraceCategory::Session) {
+                        let now = ctx.now();
+                        let pe = ctx.pe().0;
+                        ctx.trace().complete(
+                            fs.started_at,
+                            now.saturating_sub(fs.started_at),
+                            TraceCategory::Session,
+                            trace_names::SESSION_FLUSH,
+                            TraceLane::Pe(pe),
+                            u64::from(m.session.0),
+                            fs.written,
+                            fs.degraded,
+                            "",
+                        );
+                    }
+                    for after in fs.afters {
+                        ctx.fire(after, Payload::empty());
+                    }
+                }
+            }
+            EP_DIR_CLOSE_WRITE => {
+                let m: CloseWriteMsg = msg.take();
+                if let Some(cs) = self.closes.get_mut(&m.session) {
+                    cs.afters.push(m.after);
+                    ctx.metrics().count(keys::DOUBLE_CLOSE, 1);
+                    return;
+                }
+                let Some(st) = self.sessions.get(&m.session) else {
+                    ctx.metrics().count(keys::DOUBLE_CLOSE, 1);
+                    ctx.fire(
+                        m.after,
+                        Payload::new(SessionOutcome { session: m.session, ..Default::default() }),
+                    );
+                    return;
+                };
+                let ws = self.writes.remove(&m.session).expect("closeWrite of a read session");
+                let nbuf = st.session.num_buffers;
+                let buffers = st.session.buffers;
+                // A write close *always* parks: the resident (possibly
+                // still dirty) spans are the read-after-write cache. The
+                // drain-or-not decision lives in the buffers' close
+                // handler (`park_dirty` skips it).
+                for b in 0..nbuf {
+                    ctx.signal(ChareRef::new(buffers, b), EP_WB_CLOSE);
+                }
+                for pe in 0..self.npes {
+                    ctx.send_group(
+                        self.wassemblers,
+                        crate::amt::topology::Pe(pe),
+                        EP_WA_SESSION_DROP,
+                        m.session,
+                    );
+                }
+                self.closes.insert(m.session, CloseState {
+                    afters: vec![m.after],
+                    acks: 0,
+                    need: nbuf + self.npes,
+                    park: Some((ws.key, buffers, nbuf)),
+                    parked_bytes: 0,
+                    outcome: SessionOutcome::default(),
+                });
+                if ctx.trace().on(TraceCategory::Session) {
+                    let now = ctx.now();
+                    let pe = ctx.pe().0;
+                    ctx.trace().instant(
+                        now,
+                        TraceCategory::Session,
+                        trace_names::SESSION_DRAIN,
+                        TraceLane::Pe(pe),
+                        u64::from(m.session.0),
+                        u64::from(nbuf),
+                        "write",
+                    );
+                }
+                ctx.advance(MICROS);
+            }
+            EP_DIR_WB_DROPPED => {
+                let m: WbDroppedMsg = msg.take();
+                let delta = SessionOutcome {
+                    session: m.session,
+                    written_bytes: m.written,
+                    degraded_bytes: m.degraded,
+                    dirty_bytes: m.dirty,
+                    retries: m.retries,
+                    ..Default::default()
+                };
+                self.ack_close(ctx, m.session, m.resident, delta);
             }
             EP_DIR_CLOSE_ACK => {
                 let file: FileId = msg.take();

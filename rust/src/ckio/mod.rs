@@ -33,6 +33,12 @@
 //!   PFS reads in flight, sequencing sessions' prefetch so they stop
 //!   oversubscribing the OSTs; since PR 3 the cap can also be *derived*
 //!   adaptively from observed service times (AIMD),
+//! * [`write`] — the collective output plane (PR 10): write sessions
+//!   (`startWriteSession / write / flush / closeWriteSession`), per-PE
+//!   [`write::WriteAssembler`] routing, stripe-aligned write-behind
+//!   [`write::WriteBuffer`] chares, and read-after-write residency via
+//!   *dirty* store claims (a following read session over freshly
+//!   written bytes is served from residency with zero PFS reads),
 //! * [`api`] — the user-facing `open / startReadSession / read /
 //!   closeReadSession / close` calls (asynchronous-callback-centric,
 //!   §III-D),
@@ -179,13 +185,15 @@ pub mod options;
 pub mod session;
 pub mod shard;
 pub mod store;
+pub mod write;
 
 pub use api::CkIo;
 pub use governor::{AdmissionPolicy, QosClass};
 pub use options::{
     ConfigError, ConsumerPlacement, FileOptions, OpenError, ReaderPlacement, RetryPolicy,
-    ServiceConfig, SessionOptions, TraceConfig,
+    ServiceConfig, SessionOptions, TraceConfig, WriteOptions,
 };
 pub use session::{FileHandle, ReadResult, Session, SessionId, SessionOutcome, Tag};
 pub use shard::DataShard;
 pub use store::SpanStore;
+pub use write::{WriteAssembler, WriteBuffer, WriteResult};

@@ -135,6 +135,9 @@ pub enum OpenError {
     /// conflict surfaced to the caller, never silently ignored (the
     /// pre-PR 5 footgun).
     OptionsConflict,
+    /// [`WriteOptions::stripe_bytes`] of 0 — there is no coalescing
+    /// grid, so no extent could ever form (PR 10).
+    ZeroStripe,
 }
 
 impl std::fmt::Display for OpenError {
@@ -148,6 +151,9 @@ impl std::fmt::Display for OpenError {
             }
             OpenError::OptionsConflict => {
                 write!(f, "file is already open with different FileOptions")
+            }
+            OpenError::ZeroStripe => {
+                write!(f, "WriteOptions::stripe_bytes must be >= 1")
             }
         }
     }
@@ -513,6 +519,56 @@ impl Default for SessionOptions {
     }
 }
 
+/// Per-write-session intent, passed to `CkIo::start_write_session`
+/// (PR 10) alongside the shared [`SessionOptions`]. The output plane's
+/// own knobs: the coalescing grid and the durability mode of close.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WriteOptions {
+    /// Stripe size of the coalescing grid: a write buffer accumulates
+    /// producer pieces and flushes stripe-aligned extents of this size
+    /// (clamped at its span edges), so one PFS write RPC carries one
+    /// full stripe instead of one splinter. Should match the file's PFS
+    /// stripe size; must be >= 1.
+    pub stripe_bytes: u64,
+    /// Write-behind: flush an extent as soon as producer pieces fully
+    /// cover it, overlapping PFS writes with ongoing production. When
+    /// off, dirty extents accumulate until an explicit `flush` or close.
+    pub write_behind: bool,
+    /// Lazy durability (PR 10's dirty-residency mode): close parks the
+    /// write buffers with their claims still *dirty* instead of
+    /// draining them — read-after-write is served from residency at
+    /// once, the [`super::session::SessionOutcome`] reports the parked
+    /// bytes as `dirty_bytes`, and the PFS write happens only when the
+    /// store evicts or purges the array (a forced writeback). Off by
+    /// default: close is a full drain barrier.
+    pub park_dirty: bool,
+}
+
+impl Default for WriteOptions {
+    fn default() -> Self {
+        WriteOptions { stripe_bytes: 1 << 20, write_behind: true, park_dirty: false }
+    }
+}
+
+impl WriteOptions {
+    /// The lazy-durability preset: no write-behind, park dirty at close.
+    /// Data reaches the PFS only under store pressure (or purge) — the
+    /// mode that makes dirty evictions and forced writebacks reachable.
+    pub fn lazy() -> WriteOptions {
+        WriteOptions { write_behind: false, park_dirty: true, ..Default::default() }
+    }
+
+    /// Validate before a write session can start (the director runs
+    /// this on `start_write_session`, failing the ready callback with a
+    /// structured [`OpenError`] instead of panicking mid-plane).
+    pub fn validate(&self) -> Result<(), OpenError> {
+        if self.stripe_bytes == 0 {
+            return Err(OpenError::ZeroStripe);
+        }
+        Ok(())
+    }
+}
+
 /// Automatic reader-count policy (paper §VI.A, future work — implemented
 /// here as a tunable heuristic and evaluated in `ablation_autoreaders`):
 ///
@@ -726,5 +782,24 @@ mod tests {
         assert_eq!(d, SessionOptions::bulk());
         assert_eq!(SessionOptions::interactive().class, QosClass::Interactive);
         assert_eq!(SessionOptions::scavenger().class, QosClass::Scavenger);
+    }
+
+    /// PR 10: write options validate their coalescing grid, and the
+    /// lazy preset is the (no write-behind, park-dirty) corner.
+    #[test]
+    fn write_options_validate_and_preset() {
+        let d = WriteOptions::default();
+        assert_eq!(d.stripe_bytes, 1 << 20);
+        assert!(d.write_behind);
+        assert!(!d.park_dirty);
+        assert_eq!(d.validate(), Ok(()));
+
+        let lazy = WriteOptions::lazy();
+        assert!(!lazy.write_behind);
+        assert!(lazy.park_dirty);
+        assert_eq!(lazy.stripe_bytes, d.stripe_bytes);
+
+        let zero = WriteOptions { stripe_bytes: 0, ..Default::default() };
+        assert_eq!(zero.validate(), Err(OpenError::ZeroStripe));
     }
 }

@@ -190,13 +190,22 @@ pub struct SessionOutcome {
     pub hedges: u64,
     /// Splinter slots abandoned after the retry budget was exhausted.
     pub gave_up_spans: u64,
+    /// Bytes durably written to the PFS by this session (PR 10, write
+    /// sessions only — always 0 for read sessions).
+    pub written_bytes: u64,
+    /// Bytes accepted but *not yet* durable when close completed (PR 10):
+    /// nonzero only for `park_dirty` write sessions, whose data stays
+    /// dirty-resident until a forced writeback. Every other close is a
+    /// drain barrier, so this is 0.
+    pub dirty_bytes: u64,
 }
 
 impl SessionOutcome {
     /// Fully served, nothing degraded, no give-ups (retries/hedges may
-    /// have happened along the way — they are effort, not failure).
+    /// have happened along the way — they are effort, not failure), and
+    /// nothing left dirty (PR 10: a clean write session drained fully).
     pub fn is_clean(&self) -> bool {
-        self.degraded_bytes == 0 && self.gave_up_spans == 0
+        self.degraded_bytes == 0 && self.gave_up_spans == 0 && self.dirty_bytes == 0
     }
 }
 

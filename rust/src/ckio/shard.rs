@@ -109,6 +109,7 @@ use super::director::{PlanReplyMsg, TakeReplyMsg, EP_DIR_PLAN_REPLY, EP_DIR_TAKE
 use super::governor::{Governor, QosClass, NUM_CLASSES};
 use super::options::{RetryPolicy, ServiceConfig};
 use super::store::{slot_extents, BufKey, Evicted, SpanStore};
+use super::write::EP_WB_WRITEBACK;
 
 /// Buffer chare: register a span claim and resolve peer sources.
 pub const EP_SHARD_REGISTER: Ep = 1;
@@ -139,6 +140,13 @@ pub const EP_SHARD_PLAN: Ep = 9;
 /// and rebinds. Payload: the bare [`QosClass`] (routing already picked
 /// this shard; fire-and-forget).
 pub const EP_SHARD_ADMIT: Ep = 10;
+/// Write buffer: its dirty span reached the PFS durably (PR 10) — flip
+/// the claim clean. The claim itself stays: it keeps serving
+/// read-after-write peer fetches.
+pub const EP_SHARD_MARK_CLEAN: Ep = 11;
+/// Write buffer: a forced writeback (dirty eviction/purge) finished —
+/// one outstanding writeback drains from the shard's pending count.
+pub const EP_SHARD_WB_DONE: Ep = 12;
 
 /// The shard a file's data-plane state lives on. `FileId`s are dense
 /// sequential indices, so plain modulo is balanced *and* stable — the
@@ -162,6 +170,23 @@ pub struct RegisterMsg {
     /// The PE the buffer runs on — recorded with its claim so placement
     /// plans and locality metrics know where the bytes live.
     pub pe: u32,
+    /// The span holds unwritten data (PR 10 write plane): read-side
+    /// buffers always register clean; write buffers register dirty and
+    /// flip clean via [`EP_SHARD_MARK_CLEAN`] once durable.
+    pub dirty: bool,
+}
+
+/// Write buffer → shard: `owner`'s dirty span of `file` is durable now.
+#[derive(Debug)]
+pub struct MarkCleanMsg {
+    pub file: FileId,
+    pub owner: ChareRef,
+}
+
+/// Write buffer → shard: a forced writeback finished, `bytes` written.
+#[derive(Debug)]
+pub struct WbDoneMsg {
+    pub bytes: u64,
 }
 
 /// Buffer → shard: this buffer dropped its data; retract its claim.
@@ -224,6 +249,15 @@ pub struct DataShard {
     class_registered: [u64; NUM_CLASSES],
     /// Last residency this shard contributed to the global gauge.
     resident_reported: f64,
+    /// Last dirty-byte total this shard contributed to the global
+    /// `ckio.store.dirty_bytes` gauge (add-delta, like residency).
+    dirty_reported: f64,
+    /// Forced writebacks signalled to evicted dirty write buffers and
+    /// not yet acknowledged via [`EP_SHARD_WB_DONE`] (PR 10). Drained
+    /// in this file; leak-checked in `assert_service_clean` — a nonzero
+    /// count at quiescence means a dirty array was released and its
+    /// writeback never finished.
+    pending_writebacks: u64,
     /// Last cap published on the `ckio.governor.cap` gauge.
     cap_reported: Option<u32>,
     /// The service-wide retry policy (PR 8), stashed at boot. `Some`
@@ -251,6 +285,8 @@ impl DataShard {
             msgs: 0,
             class_registered: [0; NUM_CLASSES],
             resident_reported: 0.0,
+            dirty_reported: 0.0,
+            pending_writebacks: 0,
             cap_reported: None,
             retry: None,
             waiting: HashMap::new(),
@@ -331,11 +367,46 @@ impl DataShard {
         }
     }
 
-    /// Release every element of an evicted/purged buffer-chare array.
+    /// Contribute this shard's dirty-byte *change* to the global gauge
+    /// (add-delta, same sum-over-shards semantics as residency).
+    fn update_dirty_gauge(&mut self, ctx: &mut Ctx<'_>) {
+        let now = self.store.dirty_bytes() as f64;
+        if now != self.dirty_reported {
+            ctx.metrics().add(keys::STORE_DIRTY, now - self.dirty_reported);
+            self.dirty_reported = now;
+        }
+    }
+
+    /// Release every element of an evicted/purged buffer-chare array. A
+    /// clean array is dropped outright (`EP_BUF_DROP`); an array that
+    /// still held dirty claims (PR 10: a lazily closed write session's
+    /// parked data) must not lose those bytes — its elements are told to
+    /// write back first (`EP_WB_WRITEBACK`), each acknowledging with
+    /// [`EP_SHARD_WB_DONE`] before freeing itself.
     fn release_evicted(&mut self, ctx: &mut Ctx<'_>, evicted: Vec<Evicted>) {
         for e in evicted {
-            for b in 0..e.nbuf {
-                ctx.signal(ChareRef::new(e.buffers, b), EP_BUF_DROP);
+            if e.dirty_bytes > 0 {
+                for b in 0..e.nbuf {
+                    ctx.signal(ChareRef::new(e.buffers, b), EP_WB_WRITEBACK);
+                }
+                self.pending_writebacks += u64::from(e.nbuf);
+                ctx.metrics().count(keys::STORE_DIRTY_WRITEBACKS, 1);
+                if ctx.trace().on(TraceCategory::Store) {
+                    let now = ctx.now();
+                    ctx.trace().instant(
+                        now,
+                        TraceCategory::Store,
+                        trace_names::STORE_WRITEBACK,
+                        TraceLane::Shard(self.index),
+                        e.dirty_bytes,
+                        u64::from(e.nbuf),
+                        "",
+                    );
+                }
+            } else {
+                for b in 0..e.nbuf {
+                    ctx.signal(ChareRef::new(e.buffers, b), EP_BUF_DROP);
+                }
             }
             ctx.metrics().count(keys::BUFFER_CACHE_EVICTIONS, 1);
             ctx.metrics().count(keys::STORE_EVICTED, e.resident_bytes);
@@ -385,6 +456,13 @@ impl DataShard {
         self.waiting.len()
     }
 
+    /// Forced writebacks still outstanding on this shard (PR 10). Leak
+    /// check: must be 0 at quiescence — a nonzero count means a dirty
+    /// array was evicted and its data never reached the PFS.
+    pub fn pending_writebacks(&self) -> u64 {
+        self.pending_writebacks
+    }
+
     /// Close `owner`'s overlap window if its queued governor demand has
     /// fully drained (a partial grant leaves the window open: the owner
     /// is still waiting for the rest).
@@ -414,11 +492,16 @@ pub fn protocol_spec() -> ProtocolSpec {
             ep_spec!(EP_SHARD_IO_DONE, PayloadKind::of::<IoDoneMsg>()),
             ep_spec!(EP_SHARD_PLAN, PayloadKind::of::<PlanMsg>()),
             ep_spec!(EP_SHARD_ADMIT, PayloadKind::of::<QosClass>()),
+            ep_spec!(EP_SHARD_MARK_CLEAN, PayloadKind::of::<MarkCleanMsg>()),
+            ep_spec!(EP_SHARD_WB_DONE, PayloadKind::of::<WbDoneMsg>()),
         ],
         sends: vec![
             send_spec!("BufferChare", EP_BUF_PEERS, PayloadKind::of::<PeersMsg>()),
             send_spec!("BufferChare", EP_BUF_GRANT, PayloadKind::of::<GrantMsg>()),
             send_spec!("BufferChare", EP_BUF_DROP, PayloadKind::Signal),
+            send_spec!("WriteBuffer", EP_BUF_PEERS, PayloadKind::of::<PeersMsg>()),
+            send_spec!("WriteBuffer", EP_BUF_GRANT, PayloadKind::of::<GrantMsg>()),
+            send_spec!("WriteBuffer", EP_WB_WRITEBACK, PayloadKind::Signal),
             send_spec!("Director", EP_DIR_TAKE_REPLY, PayloadKind::of::<TakeReplyMsg>()),
             send_spec!("Director", EP_DIR_PLAN_REPLY, PayloadKind::of::<PlanReplyMsg>()),
         ],
@@ -456,9 +539,28 @@ impl Chare for DataShard {
                 for owner in owners {
                     self.store.touch(owner);
                 }
-                self.store.add_claim(m.file, m.offset, m.len, m.buffer, m.pe);
+                self.store.add_claim(m.file, m.offset, m.len, m.buffer, m.pe, m.dirty);
+                if m.dirty {
+                    self.update_dirty_gauge(ctx);
+                }
                 ctx.advance(MICROS);
                 ctx.send(m.buffer, EP_BUF_PEERS, PeersMsg { peers });
+            }
+            EP_SHARD_MARK_CLEAN => {
+                let m: MarkCleanMsg = msg.take();
+                self.store.mark_clean(m.file, m.owner);
+                self.update_dirty_gauge(ctx);
+                ctx.advance(MICROS / 2);
+            }
+            EP_SHARD_WB_DONE => {
+                let m: WbDoneMsg = msg.take();
+                assert!(
+                    self.pending_writebacks > 0,
+                    "DataShard: writeback ack without an outstanding writeback"
+                );
+                self.pending_writebacks -= 1;
+                ctx.metrics().count(keys::STORE_DIRTY_WRITEBACK_BYTES, m.bytes);
+                ctx.advance(MICROS / 2);
             }
             EP_SHARD_PLAN => {
                 let m: PlanMsg = msg.take();
@@ -500,6 +602,7 @@ impl Chare for DataShard {
             EP_SHARD_UNCLAIM => {
                 let m: UnclaimMsg = msg.take();
                 self.store.drop_claims_of(m.file, m.owner);
+                self.update_dirty_gauge(ctx);
                 ctx.advance(MICROS / 2);
             }
             EP_SHARD_TAKE => {
@@ -531,6 +634,7 @@ impl Chare for DataShard {
                 let evicted = self.store.park(m.key, m.buffers, m.nbuf, m.resident_bytes);
                 self.release_evicted(ctx, evicted);
                 self.update_resident_gauge(ctx);
+                self.update_dirty_gauge(ctx);
                 if ctx.trace().on(TraceCategory::Store) {
                     let now = ctx.now();
                     ctx.trace().instant(
@@ -550,6 +654,7 @@ impl Chare for DataShard {
                 let purged = self.store.purge_file(file);
                 self.release_evicted(ctx, purged);
                 self.update_resident_gauge(ctx);
+                self.update_dirty_gauge(ctx);
                 if ctx.trace().on(TraceCategory::Store) {
                     let now = ctx.now();
                     ctx.trace().instant(

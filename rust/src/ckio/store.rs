@@ -72,6 +72,10 @@ pub struct Claim {
     pub hi: u64,
     pub owner: ChareRef,
     pub owner_pe: u32,
+    /// The resident bytes are newer than the PFS copy (PR 10 write
+    /// plane): the claim still serves peer fetches like any other, but
+    /// the store must not let it drop without a writeback.
+    pub dirty: bool,
 }
 
 /// Dominant resident source for one prospective buffer span — one entry
@@ -99,6 +103,18 @@ struct ParkedEntry {
     last_use: u64,
 }
 
+impl ParkedEntry {
+    fn evicted(&self, dirty_bytes: u64) -> Evicted {
+        Evicted {
+            buffers: self.buffers,
+            nbuf: self.nbuf,
+            resident_bytes: self.resident_bytes,
+            file: self.key.file,
+            dirty_bytes,
+        }
+    }
+}
+
 /// An array the store decided to release (budget eviction or file purge);
 /// the director must `EP_BUF_DROP` every element.
 #[derive(Clone, Debug)]
@@ -107,6 +123,9 @@ pub struct Evicted {
     pub nbuf: u32,
     pub resident_bytes: u64,
     pub file: FileId,
+    /// Dirty claim bytes the array held at release time (PR 10): `> 0`
+    /// means the release must force a writeback before the array drops.
+    pub dirty_bytes: u64,
 }
 
 /// The resident-data plane bookkeeping (owned by the director).
@@ -140,13 +159,64 @@ impl SpanStore {
     // ------------------------------------------------------------------
 
     /// Register one buffer chare's span (`owner_pe` = the PE the owner
-    /// runs on, recorded for store-aware placement planning). Zero-length
-    /// spans (clamped trailing buffers) are not registered.
-    pub fn add_claim(&mut self, file: FileId, lo: u64, len: u64, owner: ChareRef, owner_pe: u32) {
+    /// runs on, recorded for store-aware placement planning; `dirty` =
+    /// the span holds unwritten data, PR 10). Zero-length spans (clamped
+    /// trailing buffers) are not registered.
+    pub fn add_claim(
+        &mut self,
+        file: FileId,
+        lo: u64,
+        len: u64,
+        owner: ChareRef,
+        owner_pe: u32,
+        dirty: bool,
+    ) {
         if len == 0 {
             return;
         }
-        self.claims.entry(file).or_default().push(Claim { lo, hi: lo + len, owner, owner_pe });
+        self.claims
+            .entry(file)
+            .or_default()
+            .push(Claim { lo, hi: lo + len, owner, owner_pe, dirty });
+    }
+
+    /// Mark one buffer chare's claims durable (its dirty bytes reached
+    /// the PFS): the claims keep serving read-after-write peer fetches,
+    /// but no longer owe a writeback. Returns the bytes cleaned.
+    pub fn mark_clean(&mut self, file: FileId, owner: ChareRef) -> u64 {
+        let mut cleaned = 0;
+        if let Some(v) = self.claims.get_mut(&file) {
+            for c in v.iter_mut().filter(|c| c.owner == owner && c.dirty) {
+                c.dirty = false;
+                cleaned += c.hi - c.lo;
+            }
+        }
+        cleaned
+    }
+
+    /// Total dirty claim bytes across every file (the
+    /// `ckio.store.dirty_bytes` gauge numerator and the quiescence
+    /// check: a clean service has none).
+    pub fn dirty_bytes(&self) -> u64 {
+        self.claims
+            .values()
+            .flat_map(|v| v.iter())
+            .filter(|c| c.dirty)
+            .map(|c| c.hi - c.lo)
+            .sum()
+    }
+
+    /// Dirty claim bytes owned by elements of `buffers` — computed
+    /// before an eviction drops the claims, so the shard knows whether
+    /// the release must detour through a writeback.
+    fn dirty_bytes_of(&self, file: FileId, buffers: CollectionId) -> u64 {
+        self.claims
+            .get(&file)
+            .map_or(&[][..], |v| &v[..])
+            .iter()
+            .filter(|c| c.dirty && c.owner.collection == buffers)
+            .map(|c| c.hi - c.lo)
+            .sum()
     }
 
     /// Drop every claim owned by elements of `buffers` (the array is
@@ -275,8 +345,15 @@ impl SpanStore {
     ) -> Vec<Evicted> {
         if let Some(b) = self.budget {
             if resident_bytes > b {
+                let dirty_bytes = self.dirty_bytes_of(key.file, buffers);
                 self.drop_claims(key.file, buffers);
-                return vec![Evicted { buffers, nbuf, resident_bytes, file: key.file }];
+                return vec![Evicted {
+                    buffers,
+                    nbuf,
+                    resident_bytes,
+                    file: key.file,
+                    dirty_bytes,
+                }];
             }
         }
         self.lru_clock += 1;
@@ -304,13 +381,9 @@ impl SpanStore {
                 .map(|(i, _)| i)
                 .unwrap();
             let e = self.parked.remove(lru);
+            let dirty_bytes = self.dirty_bytes_of(e.key.file, e.buffers);
             self.drop_claims(e.key.file, e.buffers);
-            evicted.push(Evicted {
-                buffers: e.buffers,
-                nbuf: e.nbuf,
-                resident_bytes: e.resident_bytes,
-                file: e.key.file,
-            });
+            evicted.push(e.evicted(dirty_bytes));
         }
         evicted
     }
@@ -338,18 +411,18 @@ impl SpanStore {
     /// Release every parked array of a closed file (they can never be
     /// rebound or peer-fetched again) along with the file's claims.
     pub fn purge_file(&mut self, file: FileId) -> Vec<Evicted> {
-        self.claims.remove(&file);
         let (gone, kept): (Vec<_>, Vec<_>) =
             std::mem::take(&mut self.parked).into_iter().partition(|e| e.key.file == file);
         self.parked = kept;
-        gone.into_iter()
-            .map(|e| Evicted {
-                buffers: e.buffers,
-                nbuf: e.nbuf,
-                resident_bytes: e.resident_bytes,
-                file,
+        let out = gone
+            .into_iter()
+            .map(|e| {
+                let dirty_bytes = self.dirty_bytes_of(file, e.buffers);
+                e.evicted(dirty_bytes)
             })
-            .collect()
+            .collect();
+        self.claims.remove(&file);
+        out
     }
 
     /// Bytes resident across parked arrays (the budget numerator and the
@@ -409,8 +482,8 @@ mod tests {
     #[test]
     fn cover_matching_prefers_oldest_covering_claim() {
         let mut s = SpanStore::new();
-        s.add_claim(FileId(0), 0, 100, owner(1, 0), PE);
-        s.add_claim(FileId(0), 50, 100, owner(2, 0), PE);
+        s.add_claim(FileId(0), 0, 100, owner(1, 0), PE, false);
+        s.add_claim(FileId(0), 50, 100, owner(2, 0), PE, false);
         // Fully inside the first claim: oldest wins.
         assert_eq!(s.find_cover(FileId(0), 10, 20), Some(owner(1, 0)));
         // Only the second claim covers [120, 140).
@@ -425,15 +498,15 @@ mod tests {
     #[test]
     fn zero_length_claims_are_not_registered() {
         let mut s = SpanStore::new();
-        s.add_claim(FileId(0), 10, 0, owner(1, 3), PE);
+        s.add_claim(FileId(0), 10, 0, owner(1, 3), PE, false);
         assert_eq!(s.claims_for(FileId(0)), 0);
     }
 
     #[test]
     fn drop_claims_only_touches_the_named_array() {
         let mut s = SpanStore::new();
-        s.add_claim(FileId(0), 0, 10, owner(1, 0), PE);
-        s.add_claim(FileId(0), 10, 10, owner(2, 0), PE);
+        s.add_claim(FileId(0), 0, 10, owner(1, 0), PE, false);
+        s.add_claim(FileId(0), 10, 10, owner(2, 0), PE, false);
         s.drop_claims(FileId(0), CollectionId(1));
         assert_eq!(s.claims_for(FileId(0)), 1);
         assert_eq!(s.find_cover(FileId(0), 12, 2), Some(owner(2, 0)));
@@ -442,8 +515,8 @@ mod tests {
     #[test]
     fn drop_claims_of_only_touches_the_named_element() {
         let mut s = SpanStore::new();
-        s.add_claim(FileId(0), 0, 10, owner(1, 0), PE);
-        s.add_claim(FileId(0), 10, 10, owner(1, 1), PE);
+        s.add_claim(FileId(0), 0, 10, owner(1, 0), PE, false);
+        s.add_claim(FileId(0), 10, 10, owner(1, 1), PE, false);
         s.drop_claims_of(FileId(0), owner(1, 0));
         assert_eq!(s.claims_for(FileId(0)), 1);
         assert_eq!(s.find_cover(FileId(0), 12, 2), Some(owner(1, 1)));
@@ -519,7 +592,7 @@ mod tests {
         assert!(s.park(key(0, 0, 100), CollectionId(1), 1, 100).is_empty());
         assert!(s.park(key(0, 100, 100), CollectionId(2), 1, 100).is_empty());
         assert!(s.park(key(0, 200, 100), CollectionId(3), 1, 100).is_empty());
-        s.add_claim(FileId(0), 400, 100, owner(4, 0), PE);
+        s.add_claim(FileId(0), 400, 100, owner(4, 0), PE, false);
         // An array that can never fit is rejected alone — the resident
         // arrays survive, and the reject drops the newcomer's claims.
         let ev = s.park(key(0, 400, 500), CollectionId(4), 1, 500);
@@ -534,8 +607,8 @@ mod tests {
     fn eviction_and_purge_drop_the_arrays_claims() {
         let mut s = SpanStore::new();
         s.set_budget(100);
-        s.add_claim(FileId(0), 0, 100, owner(1, 0), PE);
-        s.add_claim(FileId(0), 100, 100, owner(2, 0), PE);
+        s.add_claim(FileId(0), 0, 100, owner(1, 0), PE, false);
+        s.add_claim(FileId(0), 100, 100, owner(2, 0), PE, false);
         assert!(s.park(key(0, 0, 100), CollectionId(1), 1, 100).is_empty());
         // Parking array 2 evicts array 1 (LRU) and its claims with it.
         let ev = s.park(key(0, 100, 100), CollectionId(2), 1, 100);
@@ -547,6 +620,48 @@ mod tests {
         assert_eq!(purged.len(), 1);
         assert_eq!(s.claims_for(FileId(0)), 0);
         assert_eq!(s.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn mark_clean_clears_only_the_named_owners_dirty_bytes() {
+        let mut s = SpanStore::new();
+        s.add_claim(FileId(0), 0, 100, owner(1, 0), PE, true);
+        s.add_claim(FileId(0), 100, 50, owner(1, 1), PE, true);
+        s.add_claim(FileId(0), 150, 50, owner(2, 0), PE, false);
+        assert_eq!(s.dirty_bytes(), 150);
+        assert_eq!(s.mark_clean(FileId(0), owner(1, 0)), 100);
+        assert_eq!(s.dirty_bytes(), 50);
+        // The cleaned claim still serves cover matching.
+        assert_eq!(s.find_cover(FileId(0), 10, 20), Some(owner(1, 0)));
+        // Re-cleaning (or cleaning a never-dirty owner) is a no-op.
+        assert_eq!(s.mark_clean(FileId(0), owner(1, 0)), 0);
+        assert_eq!(s.mark_clean(FileId(0), owner(2, 0)), 0);
+        assert_eq!(s.mark_clean(FileId(9), owner(1, 1)), 0);
+        assert_eq!(s.dirty_bytes(), 50);
+    }
+
+    #[test]
+    fn eviction_reports_dirty_bytes_of_the_released_array() {
+        let mut s = SpanStore::new();
+        s.set_budget(100);
+        s.add_claim(FileId(0), 0, 60, owner(1, 0), PE, true);
+        s.add_claim(FileId(0), 60, 40, owner(1, 1), PE, false);
+        s.add_claim(FileId(0), 100, 100, owner(2, 0), PE, false);
+        assert!(s.park(key(0, 0, 100), CollectionId(1), 2, 100).is_empty());
+        // Parking the clean array 2 evicts the dirty array 1 (LRU): the
+        // eviction carries the dirty byte count so the shard can force
+        // the writeback before the drop.
+        let ev = s.park(key(0, 100, 100), CollectionId(2), 1, 100);
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].buffers, CollectionId(1));
+        assert_eq!(ev[0].dirty_bytes, 60);
+        assert_eq!(s.dirty_bytes(), 0, "evicted claims leave the dirty total");
+        // Purging a file with a dirty parked array reports it too.
+        s.add_claim(FileId(0), 100, 100, owner(2, 0), PE, true);
+        let purged = s.purge_file(FileId(0));
+        assert_eq!(purged.len(), 1);
+        assert_eq!(purged[0].dirty_bytes, 100);
+        assert_eq!(s.dirty_bytes(), 0);
     }
 
     #[test]
@@ -568,9 +683,9 @@ mod tests {
     #[test]
     fn residency_by_pe_sums_claim_extents() {
         let mut s = SpanStore::new();
-        s.add_claim(FileId(0), 0, 100, owner(1, 0), 3);
-        s.add_claim(FileId(0), 100, 50, owner(1, 1), 5);
-        s.add_claim(FileId(0), 150, 50, owner(1, 2), 3);
+        s.add_claim(FileId(0), 0, 100, owner(1, 0), 3, false);
+        s.add_claim(FileId(0), 100, 50, owner(1, 1), 5, false);
+        s.add_claim(FileId(0), 150, 50, owner(1, 2), 3, false);
         assert_eq!(s.residency_by_pe(FileId(0)), vec![(3, 150), (5, 50)]);
         assert!(s.residency_by_pe(FileId(1)).is_empty());
     }
@@ -579,8 +694,8 @@ mod tests {
     fn plan_spans_names_the_dominant_source_per_span() {
         let mut s = SpanStore::new();
         // Claims: [0, 100) held on PE 1, [100, 200) held on PE 2.
-        s.add_claim(FileId(0), 0, 100, owner(1, 0), 1);
-        s.add_claim(FileId(0), 100, 100, owner(1, 1), 2);
+        s.add_claim(FileId(0), 0, 100, owner(1, 0), 1, false);
+        s.add_claim(FileId(0), 100, 100, owner(1, 1), 2, false);
         // Prospective session [50, 150), 2 readers, splinter 25: span 0
         // ([50, 100)) is all PE 1, span 1 ([100, 150)) all PE 2.
         let plan = s.plan_spans(FileId(0), 50, 100, 2, 25);

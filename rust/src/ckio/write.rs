@@ -1,0 +1,1242 @@
+//! Collective output plane (PR 10): write sessions, stripe-aligned
+//! write-behind, and read-after-write residency.
+//!
+//! The mirror of the read plane. `CkIo::start_write_session` hands
+//! producers a scatter handle (the same [`Session`] value the read path
+//! uses); producers emit pieces with `CkIo::write`, which their PE's
+//! [`WriteAssembler`] routes to the session's [`WriteBuffer`] chares by
+//! span overlap — the exact partition [`buffer_span_of`] serves to
+//! readers, so write routing and read routing can never drift. Each
+//! buffer coalesces pieces into **stripe-aligned extents**
+//! ([`crate::pfs::layout::stripe_extents`]): with
+//! [`WriteOptions::write_behind`] an extent is queued for the PFS the
+//! moment its last covering piece lands, so the aggregated write stream
+//! is a handful of stripe-sized RPCs instead of one RPC per producer
+//! piece (the naive baseline `run_svc_rw` compares against).
+//!
+//! **Read-after-write residency**: on `EP_WB_INIT` each buffer claims
+//! its span at the file's data-plane shard (`EP_SHARD_REGISTER` with
+//! `dirty: true`). The claim makes the write buffer a *peer source* —
+//! a following read session's buffers resolve their slots against it
+//! and fetch with `EP_BUF_PEER_FETCH` instead of touching the PFS
+//! (the headline `svc_rw` measurement: zero PFS read bytes). Closing a
+//! write session *parks* the array in the shard's span store, so the
+//! residency outlives the session until evicted or the file closes.
+//! In this reproduction the producer payload is the deterministic
+//! verification pattern ([`crate::pfs::pattern`], PR 10 satellite), so
+//! a buffer regenerates bytes on demand when serving a peer rather
+//! than holding a copy resident — residency accounting still charges
+//! the full span.
+//!
+//! **Drain barriers**: `EP_WB_FLUSH` and `EP_WB_CLOSE` queue every
+//! covered-but-unwritten byte (clipped to stripe extents) and answer
+//! the director only when no queued op, in-flight write, or armed
+//! backoff timer remains — every dirty extent is then durably written
+//! or degraded into the session's [`super::session::SessionOutcome`].
+//! With [`WriteOptions::park_dirty`] (lazy mode) the close skips the
+//! drain: the span parks *dirty*, and a later LRU eviction of the
+//! parked span forces a writeback (`EP_WB_WRITEBACK` from the shard)
+//! before the data may drop.
+//!
+//! PFS writes are admitted through the same per-shard governor as
+//! reads (`EP_SHARD_IO_REQ` / `EP_BUF_GRANT` / `EP_SHARD_IO_DONE`),
+//! under the session's [`QosClass`] — a saturated AIMD cap arbitrates
+//! readers against writers by class weight. Failed writes (PR 8 fault
+//! plane) back off and retry up to the service retry policy's budget,
+//! then degrade: the bytes are accounted on `ckio.write.degraded_bytes`
+//! and the span still settles, so a flush barrier can never hang on a
+//! faulty OST.
+//!
+//! EP-number sharing: a parked `WriteBuffer` lives in the same span
+//! store as read arrays, so the shard and director address it with the
+//! read-plane EPs `EP_BUF_DROP` (4), `EP_BUF_PEER_FETCH` (7),
+//! `EP_BUF_GRANT` (9), and `EP_BUF_PEERS` (10). The write-plane's own
+//! EPs are chosen around those numbers.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::amt::callback::Callback;
+use crate::amt::chare::{Chare, ChareRef, CollectionId};
+use crate::amt::engine::Ctx;
+use crate::amt::msg::{Ep, Msg, Payload};
+use crate::amt::protocol::{PayloadKind, ProtocolSpec};
+use crate::amt::time::{Time, MICROS};
+use crate::impl_chare_any;
+use crate::metrics::keys;
+use crate::net::Transfer;
+use crate::pfs::backend::{IoResult, WriteRequest};
+use crate::pfs::layout::{stripe_extents, FileId};
+use crate::pfs::pattern;
+use crate::util::bytes::Chunk;
+use crate::{ep_spec, send_spec};
+
+use super::buffer::{
+    BufStartedMsg, GrantMsg, IoDoneMsg, IoReqMsg, PeerDataMsg, PeerFetchMsg, PeersMsg, ReclaimMsg,
+    RetryTimerMsg, EP_BUF_DROP, EP_BUF_GRANT, EP_BUF_PEER_DATA, EP_BUF_PEER_FETCH, EP_BUF_PEERS,
+};
+use super::governor::QosClass;
+use super::options::{RetryPolicy, WriteOptions};
+use super::session::{buffer_span_of, Session, SessionId};
+use super::shard::{
+    MarkCleanMsg, RegisterMsg, UnclaimMsg, WbDoneMsg, EP_SHARD_IO_DONE, EP_SHARD_IO_RECLAIM,
+    EP_SHARD_IO_REQ, EP_SHARD_MARK_CLEAN, EP_SHARD_REGISTER, EP_SHARD_UNCLAIM, EP_SHARD_WB_DONE,
+};
+
+// ---------------------------------------------------------------------
+// WriteAssembler (per-PE group)
+// ---------------------------------------------------------------------
+
+/// Director broadcast: a write session started ([`WriteSessionMsg`]).
+pub const EP_WA_SESSION: Ep = 1;
+/// A producer on this PE scatters a piece ([`PutMsg`]).
+pub const EP_WA_PUT: Ep = 2;
+/// A write buffer accepted one routed piece ([`WPieceAckMsg`]).
+pub const EP_WA_PIECE_ACK: Ep = 3;
+/// Director broadcast: the write session closed (payload: [`SessionId`]).
+pub const EP_WA_SESSION_DROP: Ep = 4;
+
+// ---------------------------------------------------------------------
+// WriteBuffer (per-session chare array)
+// ---------------------------------------------------------------------
+
+/// Kick a freshly created write buffer: claim the span (dirty), ack the
+/// director.
+pub const EP_WB_INIT: Ep = 1;
+/// A routed producer piece ([`WPieceMsg`]).
+pub const EP_WB_PIECE: Ep = 2;
+/// Flush barrier: queue every covered-but-unwritten byte, ack the
+/// director when drained.
+pub const EP_WB_FLUSH: Ep = 3;
+// 4 = EP_BUF_DROP (read-plane shared: release after clean eviction /
+// file close).
+/// Close barrier: drain like a flush (unless `park_dirty`), then park.
+pub const EP_WB_CLOSE: Ep = 5;
+/// Split-phase PFS write completion (engine callback).
+pub const EP_WB_WRITE_DONE: Ep = 6;
+// 7 = EP_BUF_PEER_FETCH (read-plane shared: read-after-write serving).
+// 9 = EP_BUF_GRANT, 10 = EP_BUF_PEERS (read-plane shared).
+/// Self-timer: a failed write's backoff expired — re-enter admission.
+pub const EP_WB_RETRY: Ep = 11;
+/// Shard: this parked span's *dirty* claims were evicted — write every
+/// dirty byte back before the data may drop, then ack
+/// `EP_SHARD_WB_DONE`.
+pub const EP_WB_WRITEBACK: Ep = 12;
+
+/// Director → write assemblers: a write session is live; route puts for
+/// it. The [`Session`] is the same `Copy` scatter handle producers got.
+#[derive(Debug)]
+pub struct WriteSessionMsg {
+    pub session: Session,
+}
+
+/// Producer → its PE's write assembler: scatter `[offset, offset+len)`.
+#[derive(Debug)]
+pub struct PutMsg {
+    pub session: SessionId,
+    pub offset: u64,
+    pub len: u64,
+    /// Fires with a [`WriteResult`] once every routed piece is accepted.
+    pub after: Callback,
+}
+
+/// Assembler → write buffer: one span-clipped piece of a put.
+#[derive(Debug)]
+pub struct WPieceMsg {
+    /// The originating assembler's put id (acked back verbatim).
+    pub put: u64,
+    pub offset: u64,
+    pub len: u64,
+    /// The assembler awaiting the ack.
+    pub reply: ChareRef,
+}
+
+/// Write buffer → assembler: the piece was accepted into the buffer.
+#[derive(Debug)]
+pub struct WPieceAckMsg {
+    pub put: u64,
+    pub bytes: u64,
+}
+
+/// The completion value of one `CkIo::write` put: every piece of
+/// `[offset, offset+len)` was accepted by its write buffer. Acceptance
+/// is *buffering*, not durability — durability is the flush barrier.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WriteResult {
+    pub session: SessionId,
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// Write buffer → director: this chare's share of a flush barrier is
+/// durable (or degraded). `written`/`degraded` are deltas since the
+/// previous flush report, so the director's per-flush sums stay
+/// meaningful across repeated flushes.
+#[derive(Debug)]
+pub struct FlushDoneMsg {
+    pub session: SessionId,
+    pub written: u64,
+    pub degraded: u64,
+}
+
+/// Write buffer → director: close ack, carrying this chare's
+/// contribution to the session's outcome (the write-plane analogue of
+/// [`super::buffer::BufDroppedMsg`]).
+#[derive(Debug)]
+pub struct WbDroppedMsg {
+    pub session: SessionId,
+    /// Bytes kept resident by the parked span (covered bytes).
+    pub resident: u64,
+    /// Bytes durably written over the session's lifetime.
+    pub written: u64,
+    /// Bytes abandoned after the write retry budget.
+    pub degraded: u64,
+    /// Bytes still dirty at close (non-zero only under `park_dirty`).
+    pub dirty: u64,
+    /// PFS write re-issues beyond each extent's first attempt.
+    pub retries: u64,
+}
+
+/// One write assembler put awaiting its routed pieces' acks.
+struct PendingPut {
+    session: SessionId,
+    offset: u64,
+    len: u64,
+    outstanding: u32,
+    after: Callback,
+}
+
+/// Per-PE scatter router (the write-side mirror of
+/// [`super::assembler::ReadAssembler`]): holds the [`Session`] of every
+/// live write session and clips producer puts onto the owning buffers'
+/// spans. Exists so producers never need to know the buffer partition —
+/// and so put completion (all pieces accepted) is a single callback.
+pub struct WriteAssembler {
+    /// Patched at boot (`patch_director`), like every service group.
+    pub director: ChareRef,
+    sessions: HashMap<SessionId, Session>,
+    /// Puts whose routed pieces are not all acked yet; drained by
+    /// `EP_WA_PIECE_ACK` (leak-checked via [`WriteAssembler::pending_puts`]).
+    pending_puts: HashMap<u64, PendingPut>,
+    next_put: u64,
+}
+
+impl Default for WriteAssembler {
+    fn default() -> WriteAssembler {
+        WriteAssembler {
+            // Placeholder — replaced by `patch_director` before any
+            // message is in flight (boot wiring, as for managers).
+            director: ChareRef::new(CollectionId(0), 0),
+            sessions: HashMap::new(),
+            pending_puts: HashMap::new(),
+            next_put: 0,
+        }
+    }
+}
+
+impl WriteAssembler {
+    /// Puts still awaiting piece acks (leak checks: must be 0 at
+    /// quiescence).
+    pub fn pending_puts(&self) -> usize {
+        self.pending_puts.len()
+    }
+
+    /// Write sessions this PE currently routes for (leak checks).
+    pub fn live_sessions(&self) -> usize {
+        self.sessions.len()
+    }
+}
+
+/// The write assembler's declared message protocol (see
+/// [`crate::amt::protocol`]). Any change to its EPs, payload types, or
+/// send sites must update this spec in the same commit.
+pub fn assembler_protocol_spec() -> ProtocolSpec {
+    use super::director::{EP_DIR_ANNOUNCE_ACK, EP_DIR_DROP_ACK_MGR};
+    ProtocolSpec {
+        chare: "WriteAssembler",
+        module: "ckio/write.rs",
+        handles: vec![
+            ep_spec!(EP_WA_SESSION, PayloadKind::of::<WriteSessionMsg>()),
+            ep_spec!(EP_WA_PUT, PayloadKind::of::<PutMsg>()),
+            ep_spec!(EP_WA_PIECE_ACK, PayloadKind::of::<WPieceAckMsg>()),
+            ep_spec!(EP_WA_SESSION_DROP, PayloadKind::of::<SessionId>()),
+        ],
+        sends: vec![
+            send_spec!("WriteBuffer", EP_WB_PIECE, PayloadKind::of::<WPieceMsg>()),
+            send_spec!("Director", EP_DIR_ANNOUNCE_ACK, PayloadKind::of::<SessionId>()),
+            send_spec!("Director", EP_DIR_DROP_ACK_MGR, PayloadKind::of::<SessionId>()),
+        ],
+    }
+}
+
+impl Chare for WriteAssembler {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_WA_SESSION => {
+                let m: WriteSessionMsg = msg.take();
+                self.sessions.insert(m.session.id, m.session);
+                ctx.advance(MICROS / 2);
+                ctx.send(self.director, super::director::EP_DIR_ANNOUNCE_ACK, m.session.id);
+            }
+            EP_WA_PUT => {
+                let m: PutMsg = msg.take();
+                let s = *self
+                    .sessions
+                    .get(&m.session)
+                    .expect("write put for a session this PE was never announced");
+                assert!(
+                    m.offset >= s.offset && m.offset + m.len <= s.offset + s.bytes,
+                    "write [{}, {}) outside session [{}, {})",
+                    m.offset,
+                    m.offset + m.len,
+                    s.offset,
+                    s.offset + s.bytes
+                );
+                ctx.metrics().count(keys::WRITE_PUTS, 1);
+                ctx.metrics().count(keys::WRITE_BYTES, m.len);
+                if m.len == 0 {
+                    ctx.fire(
+                        m.after,
+                        Payload::new(WriteResult { session: m.session, offset: m.offset, len: 0 }),
+                    );
+                    return;
+                }
+                let put = self.next_put;
+                self.next_put += 1;
+                let me = ctx.me();
+                let mut outstanding = 0;
+                for b in s.buffers_for(m.offset, m.len) {
+                    let (blo, blen) = buffer_span_of(s.offset, s.bytes, s.num_buffers, b);
+                    let lo = m.offset.max(blo);
+                    let hi = (m.offset + m.len).min(blo + blen);
+                    if hi <= lo {
+                        continue;
+                    }
+                    outstanding += 1;
+                    ctx.send(ChareRef::new(s.buffers, b), EP_WB_PIECE, WPieceMsg {
+                        put,
+                        offset: lo,
+                        len: hi - lo,
+                        reply: me,
+                    });
+                }
+                debug_assert!(outstanding > 0, "a non-empty put routes to at least one buffer");
+                self.pending_puts.insert(put, PendingPut {
+                    session: m.session,
+                    offset: m.offset,
+                    len: m.len,
+                    outstanding,
+                    after: m.after,
+                });
+                ctx.advance(MICROS / 2);
+            }
+            EP_WA_PIECE_ACK => {
+                let m: WPieceAckMsg = msg.take();
+                let p = self.pending_puts.get_mut(&m.put).expect("piece ack for an unknown put");
+                p.outstanding -= 1;
+                if p.outstanding == 0 {
+                    let p = self.pending_puts.remove(&m.put).unwrap();
+                    ctx.fire(
+                        p.after,
+                        Payload::new(WriteResult {
+                            session: p.session,
+                            offset: p.offset,
+                            len: p.len,
+                        }),
+                    );
+                }
+            }
+            EP_WA_SESSION_DROP => {
+                let sid: SessionId = msg.take();
+                self.sessions.remove(&sid);
+                ctx.advance(MICROS / 2);
+                ctx.send(self.director, super::director::EP_DIR_DROP_ACK_MGR, sid);
+            }
+            other => panic!("WriteAssembler: unknown ep {other}"),
+        }
+    }
+
+    impl_chare_any!();
+}
+
+// ---------------------------------------------------------------------
+// interval arithmetic (half-open [lo, hi) byte ranges)
+// ---------------------------------------------------------------------
+
+/// Merge `[lo, hi)` into a sorted, disjoint interval list.
+fn merge_into(v: &mut Vec<(u64, u64)>, lo: u64, hi: u64) {
+    if hi <= lo {
+        return;
+    }
+    let (mut lo, mut hi) = (lo, hi);
+    let mut out = Vec::with_capacity(v.len() + 1);
+    for &(a, b) in v.iter() {
+        if b < lo || a > hi {
+            out.push((a, b));
+        } else {
+            lo = lo.min(a);
+            hi = hi.max(b);
+        }
+    }
+    out.push((lo, hi));
+    out.sort_unstable();
+    *v = out;
+}
+
+/// Total bytes covered by a disjoint interval list.
+fn intervals_bytes(v: &[(u64, u64)]) -> u64 {
+    v.iter().map(|&(a, b)| b - a).sum()
+}
+
+/// Whether `[lo, hi)` is fully inside the interval list.
+fn contains_range(v: &[(u64, u64)], lo: u64, hi: u64) -> bool {
+    hi <= lo || v.iter().any(|&(a, b)| a <= lo && hi <= b)
+}
+
+/// The parts of `[lo, hi)` *not* covered by the (sorted, disjoint)
+/// interval list.
+fn subtract_range(v: &[(u64, u64)], lo: u64, hi: u64) -> Vec<(u64, u64)> {
+    let mut out = Vec::new();
+    let mut cur = lo;
+    for &(a, b) in v {
+        if b <= cur || a >= hi {
+            continue;
+        }
+        if a > cur {
+            out.push((cur, a));
+        }
+        cur = cur.max(b);
+        if cur >= hi {
+            break;
+        }
+    }
+    if cur < hi {
+        out.push((cur, hi));
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// WriteBuffer
+// ---------------------------------------------------------------------
+
+/// Lifecycle of a write buffer chare.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+enum WPhase {
+    /// Accepting pieces; session live.
+    Filling,
+    /// Session closed; span parked in the shard's store, serving peer
+    /// fetches (read-after-write) until evicted or purged.
+    Parked,
+    /// Released: data gone, late peer fetches answered with a miss.
+    Dead,
+}
+
+/// One queued or retrying PFS write op — always clipped to a single
+/// stripe extent.
+#[derive(Copy, Clone, Debug)]
+struct WriteOp {
+    lo: u64,
+    len: u64,
+    /// Completed (failed) attempts so far.
+    attempts: u32,
+}
+
+/// An in-flight PFS write attempt.
+struct LiveWrite {
+    op: WriteOp,
+    issued: Time,
+}
+
+/// One write-plane buffer chare: owns a disjoint span of the write
+/// session, coalesces producer pieces into stripe-aligned extents, and
+/// drives governed, retried PFS writes over them. See the module docs
+/// for the full lifecycle.
+pub struct WriteBuffer {
+    session: SessionId,
+    file: FileId,
+    /// Span owned by this chare, file coordinates.
+    my_lo: u64,
+    my_len: u64,
+    wopts: WriteOptions,
+    /// Max PFS writes in flight (the session's window option, reused).
+    window: u32,
+    /// Stripe-aligned extents of the span, fixed at creation
+    /// ([`stripe_extents`]): the write-op granularity.
+    extents: Vec<(u64, u64)>,
+    /// Producer-covered bytes (merged, absolute file coordinates).
+    covered: Vec<(u64, u64)>,
+    /// Bytes ever handed to the op queue — the no-double-write guard.
+    issued: Vec<(u64, u64)>,
+    /// Bytes durably written *or* degraded: the drain barrier's target
+    /// is `settled == issued == covered`.
+    settled: Vec<(u64, u64)>,
+    /// Ops awaiting admission (governed) or a window slot.
+    ops: VecDeque<WriteOp>,
+    /// In-flight write attempts keyed by wire `user` id. A completion
+    /// settles iff its key is still here (teardown bulk-reclaims).
+    live: HashMap<u64, LiveWrite>,
+    next_user: u64,
+    /// Ops waiting out a failure backoff, keyed by timer id.
+    backoffs: HashMap<u32, WriteOp>,
+    next_backoff: u32,
+    /// Armed backoff timers (drain: a barrier never completes under one).
+    retry_timers: u32,
+    /// Route writes through the shard's admission governor.
+    governed: bool,
+    sess_bytes: u64,
+    class: QosClass,
+    /// Tickets requested and not yet granted.
+    asked: u32,
+    /// Service retry policy; `None` = one attempt, fail-to-degraded.
+    retry: Option<RetryPolicy>,
+    /// Peer fetches for bytes whose pieces have not arrived yet
+    /// (drained on coverage, or with a miss at release).
+    peer_pending: Vec<PeerFetchMsg>,
+    /// Session-outcome counters, reported on the close ack.
+    n_written: u64,
+    n_degraded: u64,
+    n_retries: u64,
+    /// Deltas since the last flush report (per-flush sums).
+    flush_written: u64,
+    flush_degraded: u64,
+    /// `n_written` at writeback start: the `EP_SHARD_WB_DONE` delta.
+    wb_baseline: u64,
+    flush_waiting: bool,
+    close_waiting: bool,
+    wb_waiting: bool,
+    phase: WPhase,
+    director: ChareRef,
+    shard: ChareRef,
+}
+
+impl WriteBuffer {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        session: SessionId,
+        file: FileId,
+        my_lo: u64,
+        my_len: u64,
+        wopts: WriteOptions,
+        window: u32,
+        director: ChareRef,
+        shard: ChareRef,
+    ) -> WriteBuffer {
+        let extents =
+            if my_len == 0 { Vec::new() } else { stripe_extents(my_lo, my_len, wopts.stripe_bytes) };
+        WriteBuffer {
+            session,
+            file,
+            my_lo,
+            my_len,
+            wopts,
+            window: window.max(1),
+            extents,
+            covered: Vec::new(),
+            issued: Vec::new(),
+            settled: Vec::new(),
+            ops: VecDeque::new(),
+            live: HashMap::new(),
+            next_user: 0,
+            backoffs: HashMap::new(),
+            next_backoff: 0,
+            retry_timers: 0,
+            governed: false,
+            sess_bytes: 0,
+            class: QosClass::default(),
+            asked: 0,
+            retry: None,
+            peer_pending: Vec::new(),
+            n_written: 0,
+            n_degraded: 0,
+            n_retries: 0,
+            flush_written: 0,
+            flush_degraded: 0,
+            wb_baseline: 0,
+            flush_waiting: false,
+            close_waiting: false,
+            wb_waiting: false,
+            phase: WPhase::Filling,
+            director,
+            shard,
+        }
+    }
+
+    /// Route PFS writes through the shard's admission governor, as
+    /// `class` (the write session's QoS class rides every ticket).
+    pub fn governed(mut self, sess_bytes: u64, class: QosClass) -> WriteBuffer {
+        self.governed = true;
+        self.sess_bytes = sess_bytes;
+        self.class = class;
+        self
+    }
+
+    /// Arm write retries (PR 8 fault plane): failed writes back off and
+    /// re-enter admission up to the policy budget, then degrade.
+    pub fn with_retry(mut self, policy: RetryPolicy) -> WriteBuffer {
+        self.retry = Some(policy);
+        self
+    }
+
+    /// Producer-covered bytes (tests / inspection).
+    pub fn covered_bytes(&self) -> u64 {
+        intervals_bytes(&self.covered)
+    }
+
+    /// Covered bytes not yet durably written or degraded.
+    pub fn dirty_bytes(&self) -> u64 {
+        intervals_bytes(&self.covered) - intervals_bytes(&self.settled)
+    }
+
+    /// Queued + in-flight + backing-off write work (leak checks: must
+    /// be 0 at quiescence).
+    pub fn pending_ops(&self) -> usize {
+        self.ops.len() + self.live.len() + self.backoffs.len()
+    }
+
+    /// Queued peer fetches (leak checks).
+    pub fn pending_len(&self) -> usize {
+        self.peer_pending.len()
+    }
+
+    /// Whether the close parked this chare's span.
+    pub fn is_parked(&self) -> bool {
+        self.phase == WPhase::Parked
+    }
+
+    /// Whether the chare was released.
+    pub fn is_dead(&self) -> bool {
+        self.phase == WPhase::Dead
+    }
+
+    /// Exponential backoff before a failed write re-enters admission —
+    /// the read plane's curve ([`super::buffer`]), keyed by timer id so
+    /// a burst of same-extent failures never re-converges into a
+    /// synchronized retry storm. No RNG: replays stay exact.
+    fn backoff_ns(&self, key: u32, attempt: u32) -> u64 {
+        let r = self.retry.as_ref().expect("backoff without a retry policy");
+        let exp = r.base_backoff_ns.checked_shl(attempt.saturating_sub(1)).unwrap_or(u64::MAX);
+        let spread = (r.base_backoff_ns / 2).max(1);
+        let jitter = (u64::from(key).wrapping_mul(2_654_435_761) + u64::from(attempt)) % spread;
+        exp.min(r.max_backoff_ns) + jitter
+    }
+
+    /// Queue stripe-clipped write ops for every covered-but-unissued
+    /// byte of `[lo, hi)`. The `issued` list guards double-writes, so
+    /// the call is idempotent — flush, close, and writeback can overlap
+    /// freely.
+    fn enqueue_range(&mut self, lo: u64, hi: u64) {
+        let mut fresh: Vec<(u64, u64)> = Vec::new();
+        for &(clo, chi) in &self.covered {
+            let (a, b) = (clo.max(lo), chi.min(hi));
+            if b <= a {
+                continue;
+            }
+            fresh.extend(subtract_range(&self.issued, a, b));
+        }
+        for (a, b) in fresh {
+            // Clip to stripe extents: each op is one (partial) stripe,
+            // never straddling an extent boundary.
+            for &(elo, elen) in &self.extents {
+                let s = a.max(elo);
+                let e = b.min(elo + elen);
+                if e > s {
+                    self.ops.push_back(WriteOp { lo: s, len: e - s, attempts: 0 });
+                }
+            }
+            merge_into(&mut self.issued, a, b);
+        }
+    }
+
+    /// Write-behind trigger: queue any stripe extent the piece
+    /// `[lo, hi)` just completed (fully covered, nothing issued yet).
+    fn enqueue_completed_extents(&mut self, lo: u64, hi: u64) {
+        let candidates: Vec<(u64, u64)> = self
+            .extents
+            .iter()
+            .copied()
+            .filter(|&(elo, elen)| elo < hi && elo + elen > lo)
+            .filter(|&(elo, elen)| contains_range(&self.covered, elo, elo + elen))
+            .collect();
+        for (elo, elen) in candidates {
+            self.enqueue_range(elo, elo + elen);
+        }
+    }
+
+    /// Issue the next queued write op.
+    fn issue_next(&mut self, ctx: &mut Ctx<'_>) {
+        let Some(op) = self.ops.pop_front() else { return };
+        let user = self.next_user;
+        self.next_user += 1;
+        self.live.insert(user, LiveWrite { op, issued: ctx.now() });
+        let me = ctx.me();
+        ctx.submit_write(
+            WriteRequest { file: self.file, offset: op.lo, len: op.len, user },
+            Callback::to_chare(me, EP_WB_WRITE_DONE),
+        );
+    }
+
+    /// Governed issuance: ask the shard's governor for tickets covering
+    /// the queued ops, up to the window.
+    fn maybe_request(&mut self, ctx: &mut Ctx<'_>) {
+        let queued = self.ops.len() as u32;
+        let room = self.window.saturating_sub(self.live.len() as u32 + self.asked);
+        let want = queued.saturating_sub(self.asked).min(room);
+        if want > 0 {
+            self.asked += want;
+            let me = ctx.me();
+            ctx.send(self.shard, EP_SHARD_IO_REQ, IoReqMsg {
+                buffer: me,
+                want,
+                sess_bytes: self.sess_bytes,
+                class: self.class,
+                pe: ctx.pe().0,
+            });
+        }
+    }
+
+    /// Kick issuance: governed chares ask the governor, ungoverned ones
+    /// write directly up to the window.
+    fn pump(&mut self, ctx: &mut Ctx<'_>) {
+        if self.governed {
+            self.maybe_request(ctx);
+        } else {
+            while (self.live.len() as u32) < self.window && !self.ops.is_empty() {
+                self.issue_next(ctx);
+            }
+        }
+    }
+
+    /// No queued op, in-flight write, or armed backoff remains.
+    fn drained(&self) -> bool {
+        self.ops.is_empty() && self.live.is_empty() && self.retry_timers == 0
+    }
+
+    /// Satisfy whichever drain barriers are met, each exactly once.
+    fn maybe_drained(&mut self, ctx: &mut Ctx<'_>) {
+        if !self.drained() {
+            return;
+        }
+        if self.flush_waiting {
+            self.flush_waiting = false;
+            let (written, degraded) = (self.flush_written, self.flush_degraded);
+            self.flush_written = 0;
+            self.flush_degraded = 0;
+            ctx.send(self.director, super::director::EP_DIR_FLUSH_DONE, FlushDoneMsg {
+                session: self.session,
+                written,
+                degraded,
+            });
+        }
+        if self.close_waiting {
+            self.close_waiting = false;
+            let resident = intervals_bytes(&self.covered);
+            let dirty = self.dirty_bytes();
+            if dirty == 0 && self.my_len > 0 {
+                // Fully durable: downgrade the shard claim so a later
+                // eviction releases the span without a writeback.
+                let me = ctx.me();
+                ctx.send(self.shard, EP_SHARD_MARK_CLEAN, MarkCleanMsg {
+                    file: self.file,
+                    owner: me,
+                });
+            }
+            self.phase = WPhase::Parked;
+            ctx.send(self.director, super::director::EP_DIR_WB_DROPPED, WbDroppedMsg {
+                session: self.session,
+                resident,
+                written: self.n_written,
+                degraded: self.n_degraded,
+                dirty,
+                retries: self.n_retries,
+            });
+        }
+        if self.wb_waiting {
+            self.wb_waiting = false;
+            let bytes = self.n_written - self.wb_baseline;
+            ctx.send(self.shard, EP_SHARD_WB_DONE, WbDoneMsg { bytes });
+            self.release(ctx);
+        }
+    }
+
+    /// Answer a read buffer's peer fetch from covered data. The payload
+    /// is regenerated from the verification pattern (module docs): in
+    /// this reproduction the producers wrote exactly those bytes.
+    fn serve_peer(&self, ctx: &mut Ctx<'_>, f: &PeerFetchMsg) {
+        let chunk = Chunk::materialized(f.offset, pattern::make(self.file, f.offset, f.len));
+        let wire = chunk.len;
+        ctx.metrics().count(keys::STORE_PEER_SERVED, 1);
+        ctx.advance(MICROS / 2);
+        ctx.send_sized(
+            f.reply,
+            EP_BUF_PEER_DATA,
+            Payload::new(PeerDataMsg { slot: f.slot, len: f.len, chunk: Some(chunk) }),
+            wire,
+            Transfer::ZeroCopy,
+        );
+    }
+
+    /// Answer a peer fetch this chare can never serve.
+    fn peer_miss(&self, ctx: &mut Ctx<'_>, f: &PeerFetchMsg) {
+        ctx.metrics().count(keys::STORE_PEER_MISS, 1);
+        ctx.send(f.reply, EP_BUF_PEER_DATA, PeerDataMsg { slot: f.slot, len: f.len, chunk: None });
+    }
+
+    /// Serve queued peer fetches whose bytes arrived.
+    fn serve_ready_peers(&mut self, ctx: &mut Ctx<'_>) {
+        let mut still = Vec::new();
+        for f in std::mem::take(&mut self.peer_pending) {
+            if contains_range(&self.covered, f.offset, f.offset + f.len) {
+                self.serve_peer(ctx, &f);
+            } else {
+                still.push(f);
+            }
+        }
+        self.peer_pending = still;
+    }
+
+    /// Final release: miss-drain queued peer fetches, drop all state.
+    fn release(&mut self, ctx: &mut Ctx<'_>) {
+        for f in std::mem::take(&mut self.peer_pending) {
+            self.peer_miss(ctx, &f);
+        }
+        self.covered.clear();
+        self.issued.clear();
+        self.settled.clear();
+        self.ops.clear();
+        self.backoffs.clear();
+        self.phase = WPhase::Dead;
+    }
+
+    /// A PFS write attempt completed: settle its ticket and route the
+    /// outcome — success settles the range, failures back off and
+    /// re-enter admission, exhausted budgets degrade (the range settles
+    /// without durability, accounted on `ckio.write.degraded_bytes`).
+    fn write_done(&mut self, ctx: &mut Ctx<'_>, r: IoResult) {
+        let Some(lw) = self.live.remove(&r.user) else {
+            // Bulk-reclaimed at teardown: the ticket already went back.
+            return;
+        };
+        if self.governed {
+            // A failed attempt must not feed the AIMD window.
+            let service_ns =
+                if r.outcome.is_ok() { ctx.now().saturating_sub(lw.issued) } else { 0 };
+            ctx.send(self.shard, EP_SHARD_IO_DONE, IoDoneMsg { n: 1, service_ns });
+        }
+        if self.phase == WPhase::Dead {
+            return; // late completion after release
+        }
+        let op = lw.op;
+        if r.outcome.is_ok() {
+            merge_into(&mut self.settled, op.lo, op.lo + op.len);
+            self.n_written += op.len;
+            self.flush_written += op.len;
+            ctx.metrics().count(keys::WRITE_EXTENTS, 1);
+        } else {
+            let attempts = op.attempts + 1;
+            let budget = self.retry.map_or(1, |p| p.max_attempts);
+            if attempts >= budget {
+                // Degrade: the range settles so no barrier can hang on
+                // a faulty OST; the bytes ride the outcome as degraded.
+                merge_into(&mut self.settled, op.lo, op.lo + op.len);
+                self.n_degraded += op.len;
+                self.flush_degraded += op.len;
+                ctx.metrics().count(keys::WRITE_DEGRADED, op.len);
+            } else {
+                self.n_retries += 1;
+                ctx.metrics().count(keys::RETRY_ATTEMPTS, 1);
+                let key = self.next_backoff;
+                self.next_backoff += 1;
+                self.backoffs.insert(key, WriteOp { lo: op.lo, len: op.len, attempts });
+                self.retry_timers += 1;
+                let delay = self.backoff_ns(key, attempts);
+                let me = ctx.me();
+                ctx.send_after(delay, me, EP_WB_RETRY, RetryTimerMsg {
+                    slot: key,
+                    attempt: attempts,
+                });
+            }
+        }
+        self.pump(ctx);
+        self.maybe_drained(ctx);
+    }
+}
+
+/// The write buffer's declared message protocol (see
+/// [`crate::amt::protocol`]). Any change to its EPs, payload types, or
+/// send sites must update this spec in the same commit.
+pub fn buffer_protocol_spec() -> ProtocolSpec {
+    use super::director::{EP_DIR_BUF_STARTED, EP_DIR_FLUSH_DONE, EP_DIR_WB_DROPPED};
+    ProtocolSpec {
+        chare: "WriteBuffer",
+        module: "ckio/write.rs",
+        handles: vec![
+            ep_spec!(EP_WB_INIT, PayloadKind::Signal),
+            ep_spec!(EP_WB_PIECE, PayloadKind::of::<WPieceMsg>()),
+            ep_spec!(EP_WB_FLUSH, PayloadKind::Signal),
+            ep_spec!(EP_BUF_DROP, PayloadKind::Signal),
+            ep_spec!(EP_WB_CLOSE, PayloadKind::Signal),
+            ep_spec!(EP_WB_WRITE_DONE, PayloadKind::of::<IoResult>()),
+            ep_spec!(EP_BUF_PEER_FETCH, PayloadKind::of::<PeerFetchMsg>()),
+            ep_spec!(EP_BUF_GRANT, PayloadKind::of::<GrantMsg>()),
+            ep_spec!(EP_BUF_PEERS, PayloadKind::of::<PeersMsg>()),
+            ep_spec!(EP_WB_RETRY, PayloadKind::of::<RetryTimerMsg>()),
+            ep_spec!(EP_WB_WRITEBACK, PayloadKind::Signal),
+        ],
+        sends: vec![
+            send_spec!("DataShard", EP_SHARD_REGISTER, PayloadKind::of::<RegisterMsg>()),
+            send_spec!("DataShard", EP_SHARD_UNCLAIM, PayloadKind::of::<UnclaimMsg>()),
+            send_spec!("DataShard", EP_SHARD_IO_REQ, PayloadKind::of::<IoReqMsg>()),
+            send_spec!("DataShard", EP_SHARD_IO_DONE, PayloadKind::of::<IoDoneMsg>()),
+            send_spec!("DataShard", EP_SHARD_IO_RECLAIM, PayloadKind::of::<ReclaimMsg>()),
+            send_spec!("DataShard", EP_SHARD_MARK_CLEAN, PayloadKind::of::<MarkCleanMsg>()),
+            send_spec!("DataShard", EP_SHARD_WB_DONE, PayloadKind::of::<WbDoneMsg>()),
+            send_spec!("WriteBuffer", EP_WB_RETRY, PayloadKind::of::<RetryTimerMsg>()),
+            send_spec!("WriteAssembler", EP_WA_PIECE_ACK, PayloadKind::of::<WPieceAckMsg>()),
+            send_spec!("BufferChare", EP_BUF_PEER_DATA, PayloadKind::of::<PeerDataMsg>()),
+            send_spec!("Director", EP_DIR_BUF_STARTED, PayloadKind::of::<BufStartedMsg>()),
+            send_spec!("Director", EP_DIR_FLUSH_DONE, PayloadKind::of::<FlushDoneMsg>()),
+            send_spec!("Director", EP_DIR_WB_DROPPED, PayloadKind::of::<WbDroppedMsg>()),
+        ],
+    }
+}
+
+impl Chare for WriteBuffer {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_WB_INIT => {
+                // Claim the span *dirty* at the file's shard: from this
+                // moment the chare is a peer source for read sessions
+                // (read-after-write), and the store knows these bytes
+                // must not drop without a writeback. The PeersMsg reply
+                // is ignored — a write buffer consumes no peers.
+                let me = ctx.me();
+                if self.my_len > 0 {
+                    ctx.send(self.shard, EP_SHARD_REGISTER, RegisterMsg {
+                        file: self.file,
+                        offset: self.my_lo,
+                        len: self.my_len,
+                        splinter: 0,
+                        buffer: me,
+                        pe: ctx.pe().0,
+                        dirty: true,
+                    });
+                }
+                ctx.advance(MICROS);
+                ctx.send(self.director, super::director::EP_DIR_BUF_STARTED, BufStartedMsg {
+                    session: self.session,
+                });
+            }
+            EP_BUF_PEERS => {
+                // The shard's answer to our registration: write buffers
+                // produce data, they never consume peer slots.
+                let _m: PeersMsg = msg.take();
+            }
+            EP_WB_PIECE => {
+                let m: WPieceMsg = msg.take();
+                debug_assert!(
+                    m.offset >= self.my_lo && m.offset + m.len <= self.my_lo + self.my_len,
+                    "piece [{}, {}) outside buffer span [{}, {})",
+                    m.offset,
+                    m.offset + m.len,
+                    self.my_lo,
+                    self.my_lo + self.my_len
+                );
+                if self.phase == WPhase::Filling {
+                    merge_into(&mut self.covered, m.offset, m.offset + m.len);
+                    if self.wopts.write_behind {
+                        self.enqueue_completed_extents(m.offset, m.offset + m.len);
+                    }
+                    // A barrier already in progress extends over newly
+                    // covered bytes (a put racing a flush/close joins
+                    // the drain instead of leaking dirty).
+                    if self.flush_waiting || (self.close_waiting && !self.wopts.park_dirty) {
+                        self.enqueue_range(self.my_lo, self.my_lo + self.my_len);
+                    }
+                    self.pump(ctx);
+                    self.serve_ready_peers(ctx);
+                }
+                // else: a piece racing past the session's close — ack it
+                // (put completion stays exactly-once) but drop the data;
+                // the session outcome was already delivered.
+                ctx.advance(MICROS / 2);
+                ctx.send(m.reply, EP_WA_PIECE_ACK, WPieceAckMsg { put: m.put, bytes: m.len });
+            }
+            EP_WB_WRITE_DONE => {
+                let r: IoResult = msg.take();
+                self.write_done(ctx, r);
+            }
+            EP_BUF_GRANT => {
+                let g: GrantMsg = msg.take();
+                // Writes arm no deadline timers (failures are discovered
+                // at completion): the grant's deadline_ns is unused.
+                self.asked = self.asked.saturating_sub(g.n);
+                if self.phase == WPhase::Dead {
+                    ctx.send(self.shard, EP_SHARD_IO_DONE, IoDoneMsg { n: g.n, service_ns: 0 });
+                    return;
+                }
+                let mut issued = 0;
+                for _ in 0..g.n {
+                    if self.ops.is_empty() {
+                        break;
+                    }
+                    self.issue_next(ctx);
+                    issued += 1;
+                }
+                if issued < g.n {
+                    ctx.send(self.shard, EP_SHARD_IO_DONE, IoDoneMsg {
+                        n: g.n - issued,
+                        service_ns: 0,
+                    });
+                }
+            }
+            EP_WB_RETRY => {
+                let m: RetryTimerMsg = msg.take();
+                self.retry_timers = self.retry_timers.saturating_sub(1);
+                if let Some(op) = self.backoffs.remove(&m.slot) {
+                    if self.phase != WPhase::Dead {
+                        self.ops.push_back(op);
+                        self.pump(ctx);
+                    }
+                }
+                self.maybe_drained(ctx);
+            }
+            EP_WB_FLUSH => {
+                // Drain barrier: every covered byte becomes a queued op
+                // (idempotent against already-issued ranges), and the
+                // director is acked only once nothing is outstanding.
+                self.enqueue_range(self.my_lo, self.my_lo + self.my_len);
+                self.flush_waiting = true;
+                self.pump(ctx);
+                ctx.advance(MICROS / 2);
+                self.maybe_drained(ctx);
+            }
+            EP_WB_CLOSE => {
+                // Close barrier: like a flush, then park. Lazy mode
+                // (`park_dirty`) skips the drain — the span parks dirty
+                // and eviction forces the writeback later.
+                self.close_waiting = true;
+                if !self.wopts.park_dirty {
+                    self.enqueue_range(self.my_lo, self.my_lo + self.my_len);
+                }
+                self.pump(ctx);
+                ctx.advance(MICROS / 2);
+                self.maybe_drained(ctx);
+            }
+            EP_WB_WRITEBACK => {
+                // The store evicted this parked span's dirty claims: the
+                // data must reach the PFS before it may drop. The shard
+                // holds an outstanding-writeback count until our
+                // EP_SHARD_WB_DONE.
+                if self.phase == WPhase::Dead {
+                    ctx.send(self.shard, EP_SHARD_WB_DONE, WbDoneMsg { bytes: 0 });
+                    return;
+                }
+                self.wb_waiting = true;
+                self.wb_baseline = self.n_written;
+                self.enqueue_range(self.my_lo, self.my_lo + self.my_len);
+                self.pump(ctx);
+                ctx.advance(MICROS / 2);
+                self.maybe_drained(ctx);
+            }
+            EP_BUF_PEER_FETCH => {
+                let f: PeerFetchMsg = msg.take();
+                let in_span =
+                    f.offset >= self.my_lo && f.offset + f.len <= self.my_lo + self.my_len;
+                if self.phase == WPhase::Dead || !in_span || f.len == 0 {
+                    self.peer_miss(ctx, &f);
+                } else if contains_range(&self.covered, f.offset, f.offset + f.len) {
+                    self.serve_peer(ctx, &f);
+                } else {
+                    // The covering piece is still in flight from its
+                    // producer: serve on arrival — the wait *is* the
+                    // read-after-write dedup.
+                    self.peer_pending.push(f);
+                }
+            }
+            EP_BUF_DROP => {
+                // Clean eviction, purge, or a park whose file closed
+                // underneath it. Dirty spans never take this path — the
+                // store routes those through EP_WB_WRITEBACK.
+                let was_live = self.phase != WPhase::Dead;
+                if was_live && self.governed && (!self.live.is_empty() || self.asked > 0) {
+                    let me = ctx.me();
+                    ctx.send(self.shard, EP_SHARD_IO_RECLAIM, ReclaimMsg {
+                        owner: me,
+                        held: self.live.len() as u32,
+                    });
+                    self.asked = 0;
+                }
+                self.live.clear();
+                if was_live && self.my_len > 0 {
+                    // Idempotent after a shard-driven eviction (which
+                    // already dropped the claims); FIFO-ordered after
+                    // our own registration.
+                    let me = ctx.me();
+                    ctx.send(self.shard, EP_SHARD_UNCLAIM, UnclaimMsg {
+                        file: self.file,
+                        owner: me,
+                    });
+                }
+                ctx.advance(MICROS / 2);
+                self.release(ctx);
+            }
+            other => panic!("WriteBuffer: unknown ep {other}"),
+        }
+    }
+
+    fn pack_size(&self) -> u64 {
+        // Write buffers track intervals, not payload bytes (module
+        // docs): descriptor-only size.
+        256
+    }
+
+    impl_chare_any!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(stripe: u64, write_behind: bool) -> WriteBuffer {
+        WriteBuffer::new(
+            SessionId(0),
+            FileId(0),
+            1000,
+            100,
+            WriteOptions { stripe_bytes: stripe, write_behind, park_dirty: false },
+            2,
+            ChareRef::new(CollectionId(0), 0),
+            ChareRef::new(CollectionId(2), 0),
+        )
+    }
+
+    #[test]
+    fn merge_into_coalesces_and_sorts() {
+        let mut v = Vec::new();
+        merge_into(&mut v, 10, 20);
+        merge_into(&mut v, 30, 40);
+        assert_eq!(v, vec![(10, 20), (30, 40)]);
+        merge_into(&mut v, 20, 30); // bridges both
+        assert_eq!(v, vec![(10, 40)]);
+        merge_into(&mut v, 5, 5); // empty: no-op
+        assert_eq!(v, vec![(10, 40)]);
+        assert_eq!(intervals_bytes(&v), 30);
+    }
+
+    #[test]
+    fn contains_and_subtract_agree() {
+        let v = vec![(10, 20), (30, 40)];
+        assert!(contains_range(&v, 12, 18));
+        assert!(!contains_range(&v, 15, 35));
+        assert!(contains_range(&v, 15, 15), "empty range is always covered");
+        assert_eq!(subtract_range(&v, 0, 50), vec![(0, 10), (20, 30), (40, 50)]);
+        assert_eq!(subtract_range(&v, 12, 18), Vec::<(u64, u64)>::new());
+        assert_eq!(subtract_range(&v, 15, 35), vec![(20, 30)]);
+    }
+
+    #[test]
+    fn extents_are_stripe_aligned_relative_to_file_offset() {
+        let b = mk(64, true);
+        // Span [1000, 1100) against 64-byte stripes: boundaries at
+        // 1024 and 1088 (absolute stripe grid).
+        assert_eq!(b.extents, vec![(1000, 24), (1024, 64), (1088, 12)]);
+        let whole = mk(1 << 20, true);
+        assert_eq!(whole.extents, vec![(1000, 100)], "one stripe covers the span");
+    }
+
+    #[test]
+    fn enqueue_range_clips_to_extents_and_never_double_issues() {
+        let mut b = mk(64, false);
+        merge_into(&mut b.covered, 1000, 1100);
+        b.enqueue_range(1000, 1100);
+        let got: Vec<(u64, u64)> = b.ops.iter().map(|o| (o.lo, o.len)).collect();
+        assert_eq!(got, vec![(1000, 24), (1024, 64), (1088, 12)]);
+        assert_eq!(intervals_bytes(&b.issued), 100);
+        // Idempotent: a second barrier queues nothing new.
+        b.enqueue_range(1000, 1100);
+        assert_eq!(b.ops.len(), 3);
+    }
+
+    #[test]
+    fn write_behind_waits_for_a_complete_stripe() {
+        let mut b = mk(64, true);
+        merge_into(&mut b.covered, 1024, 1060);
+        b.enqueue_completed_extents(1024, 1060);
+        assert!(b.ops.is_empty(), "half a stripe is not writable yet");
+        merge_into(&mut b.covered, 1060, 1088);
+        b.enqueue_completed_extents(1060, 1088);
+        let got: Vec<(u64, u64)> = b.ops.iter().map(|o| (o.lo, o.len)).collect();
+        assert_eq!(got, vec![(1024, 64)], "the completed stripe queues whole");
+        assert_eq!(b.dirty_bytes(), 92, "queued but not yet settled stays dirty");
+    }
+
+    #[test]
+    fn partial_coverage_flush_settles_only_covered_bytes() {
+        let mut b = mk(1 << 20, false);
+        merge_into(&mut b.covered, 1000, 1030);
+        merge_into(&mut b.covered, 1050, 1100);
+        b.enqueue_range(1000, 1100); // what EP_WB_FLUSH does
+        let got: Vec<(u64, u64)> = b.ops.iter().map(|o| (o.lo, o.len)).collect();
+        assert_eq!(got, vec![(1000, 30), (1050, 50)], "the gap is never written");
+        assert_eq!(b.covered_bytes(), 80);
+        // Settle both ops as the completion path would.
+        for (lo, len) in got {
+            merge_into(&mut b.settled, lo, lo + len);
+        }
+        assert_eq!(b.dirty_bytes(), 0);
+    }
+
+    #[test]
+    fn drained_accounts_queue_inflight_and_backoffs() {
+        let mut b = mk(1 << 20, false);
+        assert!(b.drained());
+        b.ops.push_back(WriteOp { lo: 1000, len: 10, attempts: 0 });
+        assert!(!b.drained());
+        b.ops.clear();
+        b.retry_timers = 1;
+        assert!(!b.drained());
+        b.retry_timers = 0;
+        assert!(b.drained());
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_caps_and_is_deterministic() {
+        let b = mk(1 << 20, true).with_retry(RetryPolicy::default());
+        let p = RetryPolicy::default();
+        let spread = p.base_backoff_ns / 2;
+        for attempt in 1..=6u32 {
+            let got = b.backoff_ns(7, attempt);
+            let exp = (p.base_backoff_ns << (attempt - 1)).min(p.max_backoff_ns);
+            let jitter = (7u64.wrapping_mul(2_654_435_761) + u64::from(attempt)) % spread;
+            assert_eq!(got, exp + jitter, "attempt {attempt}");
+            assert_eq!(got, b.backoff_ns(7, attempt), "no RNG: replays must agree");
+        }
+    }
+
+    #[test]
+    fn fresh_buffer_is_filling_and_empty() {
+        let b = mk(64, true);
+        assert!(!b.is_parked());
+        assert!(!b.is_dead());
+        assert_eq!(b.covered_bytes(), 0);
+        assert_eq!(b.dirty_bytes(), 0);
+        assert_eq!(b.pending_ops(), 0);
+        assert_eq!(b.pending_len(), 0);
+    }
+
+    #[test]
+    fn zero_length_span_has_no_extents() {
+        let b = WriteBuffer::new(
+            SessionId(0),
+            FileId(0),
+            1000,
+            0,
+            WriteOptions::default(),
+            2,
+            ChareRef::new(CollectionId(0), 0),
+            ChareRef::new(CollectionId(2), 0),
+        );
+        assert!(b.extents.is_empty());
+        assert!(b.drained());
+    }
+}

@@ -11,11 +11,13 @@ use crate::amt::protocol::{PayloadKind, ProtocolSpec};
 use crate::amt::time::{self, Time, MICROS};
 use crate::amt::topology::{Pe, Placement};
 use crate::apps::changa::driver::{run_changa_input, Scheme};
+use crate::baselines::collective::{naive_writer_protocol_spec, NaiveWriter, EP_W_GO};
 use crate::baselines::naive::{NaiveClient, EP_N_GO};
 use crate::ckio::session::{ConsumerAdviceMsg, EP_CONSUMER_ADVICE};
+use crate::ckio::write::WriteResult;
 use crate::ckio::{
     CkIo, ConsumerPlacement, FileOptions, QosClass, ReadResult, ReaderPlacement, RetryPolicy,
-    ServiceConfig, Session, SessionOptions, SessionOutcome,
+    ServiceConfig, Session, SessionOptions, SessionOutcome, WriteOptions,
 };
 use crate::harness::bench::Table;
 use crate::harness::bgwork::{BgWorker, EP_BG_START, EP_BG_STOP};
@@ -1222,9 +1224,12 @@ pub fn concurrent_client_protocol_spec() -> ProtocolSpec {
 /// half-closed sessions, stuck rebind probes, or stuck placement plans
 /// in the director, no in-flight assemblies, no session entries or
 /// stuck early reads in any manager, no leaked or stranded governor
-/// tickets on any data-plane shard. One shared definition of "teardown
-/// left nothing behind" for the harness tests, the integration suite,
-/// and the examples.
+/// tickets on any data-plane shard — and, since PR 10, no live write
+/// sessions or stuck flush barriers in the director, no unacked
+/// producer puts in any write assembler, and no dirty span or
+/// in-flight forced writeback on any shard. One shared definition of
+/// "teardown left nothing behind" for the harness tests, the
+/// integration suite, and the examples.
 pub fn assert_service_clean(eng: &Engine, io: &CkIo) {
     let director: &crate::ckio::director::Director = eng.chare(io.director);
     assert_eq!(director.active_sessions(), 0, "leaked sessions in director");
@@ -1232,6 +1237,8 @@ pub fn assert_service_clean(eng: &Engine, io: &CkIo) {
     assert_eq!(director.pending_takes(), 0, "stuck rebind probes in director");
     assert_eq!(director.pending_plans(), 0, "stuck placement plans in director");
     assert_eq!(director.flow_sessions(), 0, "leaked consumer-flow matrices in director");
+    assert_eq!(director.active_writes(), 0, "leaked write sessions in director");
+    assert_eq!(director.pending_flushes(), 0, "stuck flush barriers in director");
     for pe in 0..eng.core.topo.npes() {
         let asm: &crate::ckio::assembler::ReadAssembler =
             eng.chare(ChareRef::new(io.assemblers, pe));
@@ -1241,12 +1248,26 @@ pub fn assert_service_clean(eng: &Engine, io: &CkIo) {
         let mgr: &crate::ckio::manager::Manager = eng.chare(ChareRef::new(io.managers, pe));
         assert_eq!(mgr.session_count(), 0, "leaked session entries on PE {pe}");
         assert_eq!(mgr.early_count(), 0, "stuck early reads on PE {pe}");
+        let wasm: &crate::ckio::write::WriteAssembler =
+            eng.chare(ChareRef::new(io.wassemblers, pe));
+        assert_eq!(wasm.pending_puts(), 0, "unacked producer puts on PE {pe}");
+        assert_eq!(wasm.live_sessions(), 0, "leaked write-session routes on PE {pe}");
     }
     for s in 0..io.nshards {
         let shard = io.shard(eng, s);
         assert_eq!(shard.admission().inflight(), 0, "governor tickets leaked on shard {s}");
         assert_eq!(shard.admission().queued(), 0, "governor demand stranded on shard {s}");
         assert_eq!(shard.io_waiting(), 0, "io-wait windows left open on shard {s}");
+        assert_eq!(
+            shard.span_store().dirty_bytes(),
+            0,
+            "dirty spans survived quiescence on shard {s}"
+        );
+        assert_eq!(
+            shard.pending_writebacks(),
+            0,
+            "eviction-forced writebacks still in flight on shard {s}"
+        );
     }
     assert_eq!(
         eng.core.loc.buffered_count(),
@@ -3320,6 +3341,713 @@ pub fn bench_pr9_json(reps: u32) -> String {
 }
 
 // =====================================================================
+// svc_rw — collective output plane: write, flush, close, then read the
+// same bytes back from residency (PR 10)
+// =====================================================================
+
+const EP_RW_GO: Ep = 50;
+const EP_RW_OPENED: Ep = 51;
+const EP_RW_WSESSION: Ep = 52;
+const EP_RW_WROTE: Ep = 53;
+const EP_RW_WDONE: Ep = 54;
+const EP_RW_FLUSHED: Ep = 55;
+const EP_RW_WCLOSED: Ep = 56;
+const EP_RW_RSESSION: Ep = 57;
+const EP_RW_RDATA: Ep = 58;
+const EP_RW_RDONE: Ep = 59;
+const EP_RW_RCLOSED: Ep = 60;
+const EP_RW_FCLOSED: Ep = 61;
+
+/// One producer/consumer of the read-after-write workload. Element 0
+/// leads: open → `startWriteSession` → broadcast; every element
+/// scatters its slice as `piece_bytes`-sized puts; the leader then
+/// runs the flush barrier (skipped when the session parks dirty),
+/// closes the write session and — with `read_back` — starts a read
+/// session over the same range, which the parked write residency must
+/// serve without a single PFS read. Readers verify the delivered
+/// bytes against the file pattern, so "served from residency" is also
+/// "byte-identical with what was written".
+pub struct RwClient {
+    io: CkIo,
+    file: crate::pfs::FileId,
+    file_size: u64,
+    index: u32,
+    n_peers: u32,
+    /// Set post-creation by the driver.
+    pub peers: CollectionId,
+    fopts: FileOptions,
+    sopts: SessionOptions,
+    wopts: WriteOptions,
+    piece_bytes: u64,
+    my_offset: u64,
+    my_len: u64,
+    /// Leader: run the flush barrier before closing the write session.
+    flush: bool,
+    /// Leader: follow the write with a read session over the range.
+    read_back: bool,
+    wsession: Option<Session>,
+    rsession: Option<Session>,
+    written: u64,
+    received: u64,
+    wdone: u32,
+    rdone: u32,
+    go_time: Time,
+    read_start: Time,
+    /// Leader: fired with the write phase's elapsed `Time` once the
+    /// write session is closed.
+    write_done: Callback,
+    /// Leader: fired with the write close's [`SessionOutcome`].
+    outcome: Callback,
+    /// Leader: fired at file close with the read phase's elapsed
+    /// `Time` (0 when `read_back` is off).
+    done: Callback,
+}
+
+impl RwClient {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        io: CkIo,
+        file: crate::pfs::FileId,
+        file_size: u64,
+        index: u32,
+        n_peers: u32,
+        fopts: FileOptions,
+        sopts: SessionOptions,
+        wopts: WriteOptions,
+        piece_bytes: u64,
+        slice: (u64, u64),
+        flush: bool,
+        read_back: bool,
+        write_done: Callback,
+        outcome: Callback,
+        done: Callback,
+    ) -> RwClient {
+        assert!(piece_bytes > 0, "piece granularity must be positive");
+        RwClient {
+            io,
+            file,
+            file_size,
+            index,
+            n_peers,
+            peers: CollectionId(u32::MAX),
+            fopts,
+            sopts,
+            wopts,
+            piece_bytes,
+            my_offset: slice.0,
+            my_len: slice.1,
+            flush,
+            read_back,
+            wsession: None,
+            rsession: None,
+            written: 0,
+            received: 0,
+            wdone: 0,
+            rdone: 0,
+            go_time: 0,
+            read_start: 0,
+            write_done,
+            outcome,
+            done,
+        }
+    }
+
+    /// Scatter this producer's slice as piece-sized puts.
+    fn scatter(&mut self, ctx: &mut Ctx<'_>) {
+        let s = self.wsession.expect("scatter before the write session arrived");
+        let me = ctx.me();
+        let io = self.io;
+        let end = self.my_offset + self.my_len;
+        let mut o = self.my_offset;
+        while o < end {
+            let l = self.piece_bytes.min(end - o);
+            io.write(ctx, &s, o, l, Callback::to_chare(me, EP_RW_WROTE));
+            o += l;
+        }
+    }
+}
+
+impl Chare for RwClient {
+    fn receive(&mut self, ctx: &mut Ctx<'_>, mut msg: Msg) {
+        match msg.ep {
+            EP_RW_GO => {
+                self.go_time = ctx.now();
+                let me = ctx.me();
+                let (io, file, size, fopts) =
+                    (self.io, self.file, self.file_size, self.fopts.clone());
+                io.open(ctx, file, size, fopts, Callback::to_chare(me, EP_RW_OPENED));
+            }
+            EP_RW_OPENED => {
+                let me = ctx.me();
+                let (io, file, size, sopts, wopts) =
+                    (self.io, self.file, self.file_size, self.sopts.clone(), self.wopts);
+                io.start_write_session(
+                    ctx,
+                    file,
+                    0,
+                    size,
+                    sopts,
+                    wopts,
+                    Callback::to_chare(me, EP_RW_WSESSION),
+                );
+            }
+            EP_RW_WSESSION => {
+                let s: Session = msg.take();
+                if self.index == 0 && self.wsession.is_none() {
+                    for j in 1..self.n_peers {
+                        ctx.send(ChareRef::new(self.peers, j), EP_RW_WSESSION, s);
+                    }
+                }
+                self.wsession = Some(s);
+                if self.my_len == 0 {
+                    ctx.send(ChareRef::new(self.peers, 0), EP_RW_WDONE, ());
+                    return;
+                }
+                self.scatter(ctx);
+            }
+            EP_RW_WROTE => {
+                let r: WriteResult = msg.take();
+                self.written += r.len;
+                if self.written == self.my_len {
+                    ctx.send(ChareRef::new(self.peers, 0), EP_RW_WDONE, ());
+                }
+            }
+            EP_RW_WDONE => {
+                self.wdone += 1;
+                if self.wdone == self.n_peers {
+                    let sid = self.wsession.as_ref().expect("leader has write session").id;
+                    let me = ctx.me();
+                    let io = self.io;
+                    if self.flush {
+                        io.flush_write_session(ctx, sid, Callback::to_chare(me, EP_RW_FLUSHED));
+                    } else {
+                        io.close_write_session(ctx, sid, Callback::to_chare(me, EP_RW_WCLOSED));
+                    }
+                }
+            }
+            EP_RW_FLUSHED => {
+                let sid = self.wsession.as_ref().expect("leader has write session").id;
+                let me = ctx.me();
+                let io = self.io;
+                io.close_write_session(ctx, sid, Callback::to_chare(me, EP_RW_WCLOSED));
+            }
+            EP_RW_WCLOSED => {
+                let o: SessionOutcome = msg.take();
+                let elapsed = ctx.now() - self.go_time;
+                let wcb = self.write_done.clone();
+                ctx.fire(wcb, Payload::new(elapsed));
+                let ocb = self.outcome.clone();
+                ctx.fire(ocb, Payload::new(o));
+                let me = ctx.me();
+                let (io, file, size, sopts) =
+                    (self.io, self.file, self.file_size, self.sopts.clone());
+                if self.read_back {
+                    self.read_start = ctx.now();
+                    io.start_read_session(
+                        ctx,
+                        file,
+                        0,
+                        size,
+                        sopts,
+                        Callback::to_chare(me, EP_RW_RSESSION),
+                    );
+                } else {
+                    io.close(ctx, file, Callback::to_chare(me, EP_RW_FCLOSED));
+                }
+            }
+            EP_RW_RSESSION => {
+                let s: Session = msg.take();
+                if self.index == 0 && self.rsession.is_none() {
+                    for j in 1..self.n_peers {
+                        ctx.send(ChareRef::new(self.peers, j), EP_RW_RSESSION, s);
+                    }
+                }
+                self.rsession = Some(s);
+                if self.my_len == 0 {
+                    ctx.send(ChareRef::new(self.peers, 0), EP_RW_RDONE, ());
+                    return;
+                }
+                let me = ctx.me();
+                let (io, off, len) = (self.io, self.my_offset, self.my_len);
+                io.read(ctx, &s, off, len, Callback::to_chare(me, EP_RW_RDATA));
+            }
+            EP_RW_RDATA => {
+                let r: ReadResult = msg.take();
+                debug_assert_eq!(r.len, self.my_len);
+                // The byte-identity half of the acceptance claim: the
+                // residency-served chunk regenerates exactly the
+                // pattern the producers wrote.
+                let bytes =
+                    r.chunk.bytes.as_ref().expect("read-after-write must deliver materialized bytes");
+                assert_eq!(
+                    crate::pfs::pattern::verify(self.file, r.offset, bytes),
+                    None,
+                    "read-after-write bytes differ from what was written"
+                );
+                self.received += r.len;
+                if self.received == self.my_len {
+                    ctx.send(ChareRef::new(self.peers, 0), EP_RW_RDONE, ());
+                }
+            }
+            EP_RW_RDONE => {
+                self.rdone += 1;
+                if self.rdone == self.n_peers {
+                    let sid = self.rsession.as_ref().expect("leader has read session").id;
+                    let me = ctx.me();
+                    let io = self.io;
+                    io.close_read_session(ctx, sid, Callback::to_chare(me, EP_RW_RCLOSED));
+                }
+            }
+            EP_RW_RCLOSED => {
+                let _o: SessionOutcome = msg.take();
+                let me = ctx.me();
+                let (io, file) = (self.io, self.file);
+                io.close(ctx, file, Callback::to_chare(me, EP_RW_FCLOSED));
+            }
+            EP_RW_FCLOSED => {
+                let read_elapsed =
+                    if self.read_back { ctx.now() - self.read_start } else { 0 };
+                let done = self.done.clone();
+                ctx.fire(done, Payload::new(read_elapsed));
+            }
+            other => panic!("RwClient: unknown ep {other}"),
+        }
+    }
+    impl_chare_any!();
+}
+
+/// [`RwClient`]'s declared message protocol (see
+/// [`crate::amt::protocol`]). Open / flush / file-close acks are `Any`
+/// (library payloads, ignored or empty); both session-close acks decode
+/// the structured [`SessionOutcome`].
+pub fn rw_client_protocol_spec() -> ProtocolSpec {
+    ProtocolSpec {
+        chare: "RwClient",
+        module: "harness/experiments.rs",
+        handles: vec![
+            ep_spec!(EP_RW_GO, PayloadKind::Signal),
+            ep_spec!(EP_RW_OPENED, PayloadKind::Any),
+            ep_spec!(EP_RW_WSESSION, PayloadKind::of::<Session>()),
+            ep_spec!(EP_RW_WROTE, PayloadKind::of::<WriteResult>()),
+            ep_spec!(EP_RW_WDONE, PayloadKind::Signal),
+            ep_spec!(EP_RW_FLUSHED, PayloadKind::Any),
+            ep_spec!(EP_RW_WCLOSED, PayloadKind::of::<SessionOutcome>()),
+            ep_spec!(EP_RW_RSESSION, PayloadKind::of::<Session>()),
+            ep_spec!(EP_RW_RDATA, PayloadKind::of::<ReadResult>()),
+            ep_spec!(EP_RW_RDONE, PayloadKind::Signal),
+            ep_spec!(EP_RW_RCLOSED, PayloadKind::of::<SessionOutcome>()),
+            ep_spec!(EP_RW_FCLOSED, PayloadKind::Any),
+        ],
+        sends: vec![
+            send_spec!("RwClient", EP_RW_WSESSION, PayloadKind::of::<Session>()),
+            send_spec!("RwClient", EP_RW_WDONE, PayloadKind::Signal),
+            send_spec!("RwClient", EP_RW_RSESSION, PayloadKind::of::<Session>()),
+            send_spec!("RwClient", EP_RW_RDONE, PayloadKind::Signal),
+        ],
+    }
+}
+
+/// Results of one [`run_svc_rw`] run.
+#[derive(Clone, Debug)]
+pub struct RwStats {
+    /// Open → write session closed.
+    pub write_makespan_s: f64,
+    /// Read session start → file closed (0 without `read_back`).
+    pub read_makespan_s: f64,
+    /// PFS write RPCs over the whole run (the aggregation numerator).
+    pub pfs_write_rpcs: u64,
+    pub pfs_bytes_written: u64,
+    /// PFS read bytes over the WHOLE run — the headline: 0 means the
+    /// read-back session never touched the PFS.
+    pub rw_pfs_read_bytes: u64,
+    /// Bytes the read session resolved against resident claims.
+    pub store_hit_bytes: u64,
+    pub puts: u64,
+    pub extents: u64,
+    pub flushes: u64,
+    /// Dirty-span evictions/purges that forced a writeback (lazy mode).
+    pub dirty_writebacks: u64,
+    pub dirty_writeback_bytes: u64,
+    pub retries: u64,
+    pub degraded_bytes: u64,
+    /// The write session's close outcome (exactly one close callback).
+    pub outcome: SessionOutcome,
+}
+
+/// Drive one write session of `file_size` bytes scattered by `clients`
+/// producers in `piece_bytes` puts, then (with `read_back`) one read
+/// session over the same range, served from the parked write
+/// residency. `flush` runs the barrier before close; `transient_p`
+/// injects PR 8 transient faults (they apply to write RPCs too).
+#[allow(clippy::too_many_arguments)]
+pub fn run_svc_rw(
+    nodes: u32,
+    pes: u32,
+    file_size: u64,
+    clients: u32,
+    piece_bytes: u64,
+    cfg: ServiceConfig,
+    fopts: FileOptions,
+    wopts: WriteOptions,
+    flush: bool,
+    read_back: bool,
+    transient_p: f64,
+    seed: u64,
+) -> (RwStats, CkIo, Engine) {
+    assert!(clients > 0 && file_size >= clients as u64);
+    let pfs = PfsConfig {
+        noise_sigma: 0.0,
+        materialize: true,
+        faults: FaultPlan { transient_p, ..Default::default() },
+        ..PfsConfig::default()
+    };
+    let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed)).with_sim_pfs(pfs);
+    let file = eng.core.sim_pfs_mut().create_file(file_size);
+    let io = CkIo::boot_with(&mut eng, cfg).expect("svc_rw: valid ServiceConfig");
+    let wdone_fut = eng.future(1);
+    let outcome_fut = eng.future(1);
+    let done_fut = eng.future(1);
+    let per = file_size / clients as u64;
+    let sopts = SessionOptions::default();
+    let cid = eng.create_array(clients, &Placement::RoundRobinPes, |i| {
+        let lo = i as u64 * per;
+        let hi = if i == clients - 1 { file_size } else { lo + per };
+        RwClient::new(
+            io,
+            file,
+            file_size,
+            i,
+            clients,
+            fopts.clone(),
+            sopts.clone(),
+            wopts,
+            piece_bytes,
+            (lo, hi - lo),
+            flush,
+            read_back,
+            Callback::Future(wdone_fut),
+            Callback::Future(outcome_fut),
+            Callback::Future(done_fut),
+        )
+    });
+    eng.register_protocol(cid, rw_client_protocol_spec());
+    for i in 0..clients {
+        eng.chare_mut::<RwClient>(ChareRef::new(cid, i)).peers = cid;
+    }
+    eng.inject_signal(ChareRef::new(cid, 0), EP_RW_GO);
+    eng.run();
+    assert!(eng.future_done(wdone_fut), "svc_rw: write session did not close");
+    assert!(eng.future_done(outcome_fut), "svc_rw: write close lost its outcome");
+    assert!(eng.future_done(done_fut), "svc_rw: the file was never closed");
+
+    let write_makespan: Time =
+        eng.take_future(wdone_fut).into_iter().map(|(_, mut p)| p.take::<Time>()).sum();
+    let outcome: SessionOutcome = eng
+        .take_future(outcome_fut)
+        .into_iter()
+        .map(|(_, mut p)| p.take::<SessionOutcome>())
+        .next()
+        .expect("exactly one write close outcome");
+    let read_makespan: Time =
+        eng.take_future(done_fut).into_iter().map(|(_, mut p)| p.take::<Time>()).sum();
+    let m = &eng.core.metrics;
+    let stats = RwStats {
+        write_makespan_s: time::to_secs(write_makespan),
+        read_makespan_s: time::to_secs(read_makespan),
+        pfs_write_rpcs: m.counter(keys::PFS_WRITE_RPCS),
+        pfs_bytes_written: m.counter(keys::PFS_BYTES_WRITTEN),
+        rw_pfs_read_bytes: m.counter(keys::PFS_BYTES),
+        store_hit_bytes: m.counter(keys::STORE_HIT),
+        puts: m.counter(keys::WRITE_PUTS),
+        extents: m.counter(keys::WRITE_EXTENTS),
+        flushes: m.counter(keys::WRITE_FLUSHES),
+        dirty_writebacks: m.counter(keys::STORE_DIRTY_WRITEBACKS),
+        dirty_writeback_bytes: m.counter(keys::STORE_DIRTY_WRITEBACK_BYTES),
+        retries: m.counter(keys::RETRY_ATTEMPTS),
+        degraded_bytes: m.counter(keys::WRITE_DEGRADED),
+        outcome,
+    };
+    (stats, io, eng)
+}
+
+/// The naive write baseline: `writers` producers, each writing its
+/// slice of `file_size` bytes straight to the PFS one `piece_bytes`
+/// RPC at a time (no aggregation, no striping, no admission). Returns
+/// (PFS write RPCs, PFS bytes written, makespan seconds, engine).
+pub fn run_naive_write(
+    nodes: u32,
+    pes: u32,
+    file_size: u64,
+    writers: u32,
+    piece_bytes: u64,
+    seed: u64,
+) -> (u64, u64, f64, Engine) {
+    assert!(writers > 0 && file_size >= writers as u64);
+    let mut eng = Engine::new(EngineConfig::sim(nodes, pes).with_seed(seed))
+        .with_sim_pfs(PfsConfig { noise_sigma: 0.0, ..PfsConfig::default() });
+    let file = eng.core.sim_pfs_mut().create_file(file_size);
+    let per = file_size / writers as u64;
+    let fut = eng.future(writers);
+    let cid = eng.create_array(writers, &Placement::RoundRobinPes, |i| {
+        let lo = i as u64 * per;
+        let hi = if i == writers - 1 { file_size } else { lo + per };
+        NaiveWriter::new(file, lo, hi - lo, piece_bytes, Callback::Future(fut))
+    });
+    eng.register_protocol(cid, naive_writer_protocol_spec());
+    for i in 0..writers {
+        eng.inject_signal(ChareRef::new(cid, i), EP_W_GO);
+    }
+    eng.run();
+    assert!(eng.future_done(fut), "naive write did not complete");
+    let makespan = eng.take_future(fut).iter().map(|(t, _)| *t).max().unwrap();
+    let m = &eng.core.metrics;
+    (
+        m.counter(keys::PFS_WRITE_RPCS),
+        m.counter(keys::PFS_BYTES_WRITTEN),
+        time::to_secs(makespan),
+        eng,
+    )
+}
+
+/// The canonical svc_rw shape — shared by the figure table, the
+/// `BENCH_pr10.json` `write` section, and the acceptance test:
+/// (nodes, pes, file_size, producers, piece_bytes).
+pub const RW_SHAPE: (u32, u32, u64, u32, u64) = (2, 4, 8 << 20, 8, 64 << 10);
+
+/// The `svc_rw` experiment table: the naive per-producer write baseline
+/// against the aggregated write plane (eager write-behind + flush, and
+/// the lazy park-dirty mode whose PFS writes happen only at the
+/// purge-forced writeback), with the read-after-write residency
+/// columns. Deterministic (noise-free PFS), so `reps` only repeats
+/// identical numbers; kept for CLI uniformity.
+pub fn svc_rw(reps: u32) -> Table {
+    let _ = reps;
+    let (nodes, pes, size, clients, piece) = RW_SHAPE;
+    let mut t = Table::new(
+        format!(
+            "svc_rw: collective write + read-after-write from residency ({nodes}x{pes} PEs, \
+             {} x {clients} producers, {} pieces, 1 MiB stripes; reduction = naive write RPCs \
+             / leg write RPCs, rw_pfs_read_bytes must be 0 on read-back legs)",
+            crate::util::human_bytes(size),
+            crate::util::human_bytes(piece),
+        ),
+        &[
+            "leg",
+            "write_rpcs",
+            "reduction",
+            "mib_written",
+            "rw_pfs_read_bytes",
+            "hit_mib",
+            "write_ms",
+            "read_ms",
+        ],
+    );
+    let (naive_rpcs, naive_bytes, naive_s, _) =
+        run_naive_write(nodes, pes, size, clients, piece, 10_100);
+    t.row(vec![
+        "naive".into(),
+        naive_rpcs.to_string(),
+        "1.00".into(),
+        format!("{:.1}", naive_bytes as f64 / (1u64 << 20) as f64),
+        "-".into(),
+        "-".into(),
+        format!("{:.3}", naive_s * 1e3),
+        "-".into(),
+    ]);
+    let legs: Vec<(&str, WriteOptions, bool)> = vec![
+        ("ckio", WriteOptions::default(), true),
+        ("ckio_lazy", WriteOptions::lazy(), false),
+    ];
+    for (leg, wopts, flush) in legs {
+        let (st, io, eng) = run_svc_rw(
+            nodes,
+            pes,
+            size,
+            clients,
+            piece,
+            ServiceConfig::default(),
+            FileOptions::with_readers(4),
+            wopts,
+            flush,
+            true,
+            0.0,
+            10_100,
+        );
+        assert_service_clean(&eng, &io);
+        assert_eq!(st.rw_pfs_read_bytes, 0, "svc_rw {leg}: read-back touched the PFS");
+        t.row(vec![
+            leg.to_string(),
+            st.pfs_write_rpcs.to_string(),
+            format!("{:.2}", naive_rpcs as f64 / st.pfs_write_rpcs.max(1) as f64),
+            format!("{:.1}", st.pfs_bytes_written as f64 / (1u64 << 20) as f64),
+            st.rw_pfs_read_bytes.to_string(),
+            format!("{:.1}", st.store_hit_bytes as f64 / (1u64 << 20) as f64),
+            format!("{:.3}", st.write_makespan_s * 1e3),
+            format!("{:.3}", st.read_makespan_s * 1e3),
+        ]);
+    }
+    t
+}
+
+/// Emit the PR 10 machine-readable perf anchor (`BENCH_pr10.json`):
+/// the `write` section (naive per-producer baseline vs the aggregated
+/// stripe-coalesced plane, with the write-op reduction), the
+/// `read_after_write` section (the headline `rw_pfs_read_bytes: 0`
+/// residency claim, byte-verified), the `lazy_writeback` section
+/// (park-dirty close, purge-forced writeback accounting) and the
+/// `write_chaos` section (flush barrier + exactly-once close under
+/// injected write faults). The acceptance claims are asserted here as
+/// well as in the test suite, so a regressed build fails the CI bench
+/// smoke too.
+pub fn bench_pr10_json(reps: u32) -> String {
+    use crate::harness::bench::Json;
+    let _ = reps; // deterministic seeded runs — repetition adds nothing
+    let (nodes, pes, size, clients, piece) = RW_SHAPE;
+
+    let (naive_rpcs, naive_bytes, naive_s, _) =
+        run_naive_write(nodes, pes, size, clients, piece, 10_100);
+
+    let (agg, io_a, eng_a) = run_svc_rw(
+        nodes,
+        pes,
+        size,
+        clients,
+        piece,
+        ServiceConfig::default(),
+        FileOptions::with_readers(4),
+        WriteOptions::default(),
+        true,
+        true,
+        0.0,
+        10_100,
+    );
+    assert_service_clean(&eng_a, &io_a);
+    let reduction = naive_rpcs as f64 / agg.pfs_write_rpcs.max(1) as f64;
+    assert!(
+        reduction >= 4.0,
+        "aggregated writes must issue >= 4x fewer PFS write RPCs than naive, got {reduction:.2}"
+    );
+    assert_eq!(agg.rw_pfs_read_bytes, 0, "read-after-write must not touch the PFS");
+    let write = Json::obj(vec![
+        ("piece_bytes", Json::num(piece as f64)),
+        ("stripe_bytes", Json::num(WriteOptions::default().stripe_bytes as f64)),
+        (
+            "naive",
+            Json::obj(vec![
+                (keys::PFS_WRITE_RPCS, Json::num(naive_rpcs as f64)),
+                (keys::PFS_BYTES_WRITTEN, Json::num(naive_bytes as f64)),
+                ("makespan_s", Json::num(naive_s)),
+            ]),
+        ),
+        (
+            "aggregated",
+            Json::obj(vec![
+                (keys::PFS_WRITE_RPCS, Json::num(agg.pfs_write_rpcs as f64)),
+                (keys::PFS_BYTES_WRITTEN, Json::num(agg.pfs_bytes_written as f64)),
+                (keys::WRITE_PUTS, Json::num(agg.puts as f64)),
+                (keys::WRITE_EXTENTS, Json::num(agg.extents as f64)),
+                (keys::WRITE_FLUSHES, Json::num(agg.flushes as f64)),
+                ("written_bytes", Json::num(agg.outcome.written_bytes as f64)),
+                ("makespan_s", Json::num(agg.write_makespan_s)),
+            ]),
+        ),
+        ("write_op_reduction", Json::num(reduction)),
+    ]);
+
+    let read_after_write = Json::obj(vec![
+        ("rw_pfs_read_bytes", Json::num(agg.rw_pfs_read_bytes as f64)),
+        (keys::STORE_HIT, Json::num(agg.store_hit_bytes as f64)),
+        ("read_makespan_s", Json::num(agg.read_makespan_s)),
+        ("byte_verified", Json::num(1.0)),
+    ]);
+
+    // Lazy mode: close parks dirty, the read is still served from
+    // residency, and the PFS writes happen only when the file close
+    // purges the parked span (the forced-writeback path).
+    let lazy_writeback = {
+        let (st, io, eng) = run_svc_rw(
+            nodes,
+            pes,
+            size,
+            clients,
+            piece,
+            ServiceConfig::default(),
+            FileOptions::with_readers(4),
+            WriteOptions::lazy(),
+            false,
+            true,
+            0.0,
+            10_200,
+        );
+        assert_service_clean(&eng, &io);
+        assert_eq!(st.rw_pfs_read_bytes, 0, "lazy read-back must not touch the PFS");
+        assert!(st.dirty_writebacks > 0, "purging a dirty park must force a writeback");
+        Json::obj(vec![
+            ("dirty_bytes_at_close", Json::num(st.outcome.dirty_bytes as f64)),
+            (keys::STORE_DIRTY_WRITEBACKS, Json::num(st.dirty_writebacks as f64)),
+            (keys::STORE_DIRTY_WRITEBACK_BYTES, Json::num(st.dirty_writeback_bytes as f64)),
+            (keys::PFS_WRITE_RPCS, Json::num(st.pfs_write_rpcs as f64)),
+            ("rw_pfs_read_bytes", Json::num(st.rw_pfs_read_bytes as f64)),
+        ])
+    };
+
+    // Write chaos: transient faults apply to write RPCs; the flush
+    // barrier and the exactly-once close still hold, and with a sane
+    // retry budget every byte is durably written (degraded stays 0).
+    let write_chaos = {
+        let wopts = WriteOptions { stripe_bytes: 64 << 10, ..Default::default() };
+        let cfg = ServiceConfig {
+            max_inflight_reads: Some(4),
+            data_plane_shards: Some(1),
+            retry: Some(RetryPolicy::default()),
+            ..Default::default()
+        };
+        let (st, io, eng) = run_svc_rw(
+            nodes,
+            pes,
+            size,
+            clients,
+            piece,
+            cfg,
+            FileOptions::with_readers(4),
+            wopts,
+            true,
+            false,
+            0.2,
+            10_300,
+        );
+        assert_service_clean(&eng, &io);
+        assert_eq!(
+            st.outcome.written_bytes,
+            size,
+            "transient write faults must clear on retry"
+        );
+        Json::obj(vec![
+            ("fault_p", Json::num(0.2)),
+            (keys::RETRY_ATTEMPTS, Json::num(st.retries as f64)),
+            (keys::WRITE_DEGRADED, Json::num(st.degraded_bytes as f64)),
+            ("written_bytes", Json::num(st.outcome.written_bytes as f64)),
+            ("closes", Json::num(1.0)),
+            ("makespan_s", Json::num(st.write_makespan_s)),
+        ])
+    };
+
+    Json::obj(vec![
+        ("bench", Json::str("svc_rw")),
+        ("pr", Json::num(10.0)),
+        ("nodes", Json::num(nodes as f64)),
+        ("pes_per_node", Json::num(pes as f64)),
+        ("file_bytes", Json::num(size as f64)),
+        ("producers", Json::num(clients as f64)),
+        ("write", write),
+        ("read_after_write", read_after_write),
+        ("lazy_writeback", lazy_writeback),
+        ("write_chaos", write_chaos),
+    ])
+    .render()
+}
+
+// =====================================================================
 // §VI.A ablation — automatic reader-count policy vs manual sweep
 // =====================================================================
 
@@ -4045,6 +4773,153 @@ mod tests {
             "bg_total_iters",
         ] {
             assert!(j.contains(key), "missing {key} in BENCH_pr9 json");
+        }
+    }
+
+    // ---- svc_rw (PR 10): collective output plane ----
+
+    #[test]
+    fn svc_rw_read_after_write_is_resident_and_verified() {
+        let (nodes, pes, size, clients, piece) = RW_SHAPE;
+        let (st, io, eng) = run_svc_rw(
+            nodes,
+            pes,
+            size,
+            clients,
+            piece,
+            ServiceConfig::default(),
+            FileOptions::with_readers(4),
+            WriteOptions::default(),
+            true,
+            true,
+            0.0,
+            7,
+        );
+        assert_service_clean(&eng, &io);
+        // The headline: the read session over the just-written range
+        // never touches the PFS (byte identity is asserted inside the
+        // RwClient read path against the file pattern).
+        assert_eq!(st.rw_pfs_read_bytes, 0);
+        assert!(st.store_hit_bytes > 0, "read-back must be charged as store hits");
+        // Eager mode: the flush barrier drained everything durably.
+        assert_eq!(st.outcome.written_bytes, size);
+        assert_eq!(st.outcome.dirty_bytes, 0);
+        assert_eq!(st.pfs_bytes_written, size);
+        assert_eq!(st.degraded_bytes, 0);
+        // Aggregation: stripe-coalesced extents, not per-piece RPCs.
+        let (naive_rpcs, naive_bytes, _, _) =
+            run_naive_write(nodes, pes, size, clients, piece, 7);
+        assert_eq!(naive_bytes, size);
+        assert!(
+            st.pfs_write_rpcs as f64 * 4.0 <= naive_rpcs as f64,
+            "want >= 4x write-op reduction: ckio {} vs naive {}",
+            st.pfs_write_rpcs,
+            naive_rpcs
+        );
+    }
+
+    #[test]
+    fn svc_rw_lazy_close_parks_dirty_and_purge_forces_writeback() {
+        let (nodes, pes, size, clients, piece) = RW_SHAPE;
+        let (st, io, eng) = run_svc_rw(
+            nodes,
+            pes,
+            size,
+            clients,
+            piece,
+            ServiceConfig::default(),
+            FileOptions::with_readers(4),
+            WriteOptions::lazy(),
+            false,
+            true,
+            0.0,
+            8,
+        );
+        assert_service_clean(&eng, &io);
+        // Lazy close parked every byte dirty — nothing durable yet at
+        // close, read-back still fully resident.
+        assert_eq!(st.outcome.dirty_bytes, size);
+        assert_eq!(st.outcome.written_bytes, 0);
+        assert_eq!(st.rw_pfs_read_bytes, 0);
+        // The file close purged the parked array: the store forced a
+        // writeback of every dirty span before dropping it, so the data
+        // still reached the PFS exactly once.
+        assert!(st.dirty_writebacks > 0);
+        assert_eq!(st.dirty_writeback_bytes, size);
+        assert_eq!(st.pfs_bytes_written, size);
+    }
+
+    #[test]
+    fn svc_rw_chaos_flush_barrier_and_exactly_once_close() {
+        let (nodes, pes, size, clients, piece) = RW_SHAPE;
+        // Small stripes → many write RPCs → transient faults at p=0.2
+        // are certain to hit; the retry plane must clear all of them.
+        let cfg = ServiceConfig {
+            max_inflight_reads: Some(4),
+            data_plane_shards: Some(1),
+            retry: Some(RetryPolicy::default()),
+            ..Default::default()
+        };
+        let wopts = WriteOptions { stripe_bytes: 64 << 10, ..Default::default() };
+        let (st, io, eng) = run_svc_rw(
+            nodes,
+            pes,
+            size,
+            clients,
+            piece,
+            cfg,
+            FileOptions::with_readers(4),
+            wopts,
+            true,
+            false,
+            0.2,
+            9,
+        );
+        // run_svc_rw already asserts the outcome future fired exactly
+        // once (the exactly-once close callback); the barrier means
+        // every byte is durable despite the injected faults.
+        assert_service_clean(&eng, &io);
+        assert_eq!(st.outcome.written_bytes, size);
+        assert_eq!(st.degraded_bytes, 0);
+        assert!(st.retries > 0, "p=0.2 over ~128 write RPCs must retry at least once");
+        assert_eq!(st.pfs_bytes_written, size, "retries must not double-count durable bytes");
+    }
+
+    #[test]
+    fn svc_rw_table_renders() {
+        let t = svc_rw(1);
+        let s = t.render();
+        assert!(s.contains("naive") && s.contains("ckio_lazy"));
+    }
+
+    #[test]
+    fn bench_pr10_json_is_wellformed() {
+        let j = bench_pr10_json(1);
+        assert!(j.starts_with('{') && j.ends_with('}'));
+        assert!(j.contains("\"bench\":\"svc_rw\""));
+        assert!(j.contains("\"pr\":10"));
+        // The residency headline must be an exact zero in the JSON.
+        assert!(j.contains("\"rw_pfs_read_bytes\":0"));
+        for key in [
+            "\"write\"",
+            "\"naive\"",
+            "\"aggregated\"",
+            "write_op_reduction",
+            "\"read_after_write\"",
+            "\"lazy_writeback\"",
+            "\"write_chaos\"",
+            "pfs.write_rpcs",
+            "pfs.bytes_written",
+            "ckio.write.puts",
+            "ckio.write.extents_flushed",
+            "ckio.write.flushes",
+            "ckio.write.degraded_bytes",
+            "ckio.store.dirty_writebacks",
+            "ckio.store.dirty_writeback_bytes",
+            "ckio.store.hit_bytes",
+            "ckio.retry.attempts",
+        ] {
+            assert!(j.contains(key), "missing {key} in BENCH_pr10 json");
         }
     }
 }

@@ -2,13 +2,13 @@
 //! cluster/PFS configuration, or exercise the runtime end-to-end.
 //!
 //! ```text
-//! ckio fig <1|2|4|7|8|9|12|13|sec5|splinter|autoreaders|svc_concurrent|svc_shared|svc_churn|svc_locality|svc_qos|svc_chaos|svc_overlap|all>
+//! ckio fig <1|2|4|7|8|9|12|13|sec5|splinter|autoreaders|svc_concurrent|svc_shared|svc_churn|svc_locality|svc_qos|svc_chaos|svc_overlap|svc_rw|all>
 //!      [--reps N] [--out bench_out] [--tp 65536] [--trace]
 //! ckio read   --file-size 4GiB --clients 512 [--scheme naive|ckio] [--readers N]
 //! ckio changa --nodes 4 --tp 4096 --scheme ckio [--nbodies 2097152]
 //! ckio perf   [--iters 5] [--file-size 4GiB] [--clients 8192] [--readers 512]
 //! ckio trace <fig-id> [--out trace.json] [--reps 1]   # flight-recorded run -> Perfetto timeline
-//! ckio bench-json [--pr 8|9] [--out BENCH_pr8.json] [--reps 3]   # svc perf + observability anchors
+//! ckio bench-json [--pr 8|9|10] [--out BENCH_pr8.json] [--reps 3]   # svc perf + observability anchors
 //! ckio artifacts [--dir artifacts]           # list + smoke-run lowered artifacts
 //! ckio lint [--dump-protocol] [--dump-metrics] [tree-root]   # protocol verifier + source lint
 //! ```
@@ -42,7 +42,7 @@ fn main() {
             eprintln!(
                 "usage: ckio fig <id|all> [--reps N] [--out DIR] [--trace] | read | changa | \
                  perf [--iters N] | trace <fig-id> [--out trace.json] | artifacts | \
-                 bench-json [--pr 8|9] [--out BENCH_pr8.json] | \
+                 bench-json [--pr 8|9|10] [--out BENCH_pr8.json] | \
                  lint [--dump-protocol] [--dump-metrics] [tree-root]\n\
                  see `rust/src/main.rs` header for full flags"
             );
@@ -71,6 +71,7 @@ pub fn run_figure(id: &str, reps: u32, n_tp: u32) -> Option<(String, Table)> {
         "svc_qos" => exp::svc_qos(reps),
         "svc_chaos" => exp::svc_chaos(reps),
         "svc_overlap" => exp::svc_overlap(reps),
+        "svc_rw" => exp::svc_rw(reps),
         _ => return None,
     };
     let slug = match id {
@@ -84,6 +85,7 @@ pub fn run_figure(id: &str, reps: u32, n_tp: u32) -> Option<(String, Table)> {
         "svc_qos" => "svc_qos".to_string(),
         "svc_chaos" => "svc_chaos".to_string(),
         "svc_overlap" => "svc_overlap".to_string(),
+        "svc_rw" => "svc_rw".to_string(),
         n => format!("fig{n}"),
     };
     Some((slug, t))
@@ -99,7 +101,7 @@ fn cmd_fig(args: &Args) {
         vec![
             "1", "2", "4", "7", "8", "9", "12", "13", "sec5", "splinter", "autoreaders",
             "svc_concurrent", "svc_shared", "svc_churn", "svc_locality", "svc_qos", "svc_chaos",
-            "svc_overlap",
+            "svc_overlap", "svc_rw",
         ]
     } else {
         vec![id]
@@ -292,14 +294,18 @@ fn cmd_perf(args: &Args) {
 /// consumer-locality + admission-wait-overlap anchor (`BENCH_pr9.json`):
 /// static vs flow-aware consumer placement with the flow-matrix
 /// counters, and the governed with/without-background pair with the
-/// `ckio.overlap.*` counters.
+/// `ckio.overlap.*` counters. `--pr 10` is the collective-output-plane
+/// anchor (`BENCH_pr10.json`): naive vs aggregated PFS write ops, the
+/// zero-PFS-read read-after-write residency claim, lazy-close forced
+/// writebacks, and the write-fault flush/close accounting.
 fn cmd_bench_json(args: &Args) {
     let pr = args.get_or("pr", 8u32);
     let (json, default_out) = match pr {
         8 => (exp::bench_pr8_json(args.get_or("reps", 3u32)), "BENCH_pr8.json"),
         9 => (exp::bench_pr9_json(args.get_or("reps", 1u32)), "BENCH_pr9.json"),
+        10 => (exp::bench_pr10_json(args.get_or("reps", 1u32)), "BENCH_pr10.json"),
         other => {
-            eprintln!("unknown --pr {other} (8|9)");
+            eprintln!("unknown --pr {other} (8|9|10)");
             std::process::exit(2);
         }
     };

@@ -367,6 +367,42 @@ pub mod keys {
     /// I/O-aware overlap (PR 9): total wall span of closed overlap
     /// windows (the denominator of the overlap-efficiency ratio).
     pub const OVERLAP_WINDOW_TIME: &str = "ckio.overlap.window_time";
+    /// PFS write RPCs issued (PR 10) — the aggregated-vs-naive write
+    /// reduction's numerator/denominator pair with the producer piece
+    /// count.
+    pub const PFS_WRITE_RPCS: &str = "pfs.write_rpcs";
+    /// Bytes written to the PFS (PR 10).
+    pub const PFS_BYTES_WRITTEN: &str = "pfs.bytes_written";
+    /// Histogram: PFS write RPC service time, issue -> commit (ns;
+    /// PR 10 — feeds the same per-shard AIMD loop as reads).
+    pub const LATENCY_PFS_WRITE: &str = "ckio.latency.pfs_write_service";
+    /// Write plane (PR 10): producer put calls completed (every piece
+    /// accepted by a write buffer and acknowledged back).
+    pub const WRITE_PUTS: &str = "ckio.write.puts";
+    /// Write plane: bytes accepted from producers into write buffers.
+    pub const WRITE_BYTES: &str = "ckio.write.bytes_accepted";
+    /// Write plane: write sessions started.
+    pub const WRITE_SESSIONS: &str = "ckio.write.sessions";
+    /// Write plane: flush barriers completed (every dirty extent durable
+    /// or degraded before the flush callback fired).
+    pub const WRITE_FLUSHES: &str = "ckio.write.flushes";
+    /// Write plane: stripe-aligned extents flushed to the PFS (each one
+    /// governed write op — compare against producer pieces for the
+    /// collective-buffering reduction).
+    pub const WRITE_EXTENTS: &str = "ckio.write.extents_flushed";
+    /// Write plane: dirty bytes abandoned after the write retry budget
+    /// (degraded into the session outcome, never silently dropped).
+    pub const WRITE_DEGRADED: &str = "ckio.write.degraded_bytes";
+    /// Span store (PR 10): dirty bytes — produced but not yet durable —
+    /// held under store claims (gauge; add-deltas per shard like
+    /// `STORE_RESIDENT`; quiescence requires 0).
+    pub const STORE_DIRTY: &str = "ckio.store.dirty_bytes";
+    /// Span store: LRU evictions of a dirty parked span, each forcing a
+    /// writeback before the bytes may be dropped.
+    pub const STORE_DIRTY_WRITEBACKS: &str = "ckio.store.dirty_writebacks";
+    /// Span store: bytes flushed to the PFS by eviction-forced
+    /// writebacks (durable or degraded; never silently discarded).
+    pub const STORE_DIRTY_WRITEBACK_BYTES: &str = "ckio.store.dirty_writeback_bytes";
 
     /// The observability catalog: `(key, kind, emitting module, what it
     /// measures)` for every constant above — the registry behind
@@ -451,6 +487,18 @@ pub mod keys {
             (OVERLAP_BG_ITERS, "counter", "amt/engine.rs", "background-chare tasks run inside overlap windows"),
             (OVERLAP_BG_TIME, "duration", "amt/engine.rs", "background-chare execution time inside overlap windows"),
             (OVERLAP_WINDOW_TIME, "duration", "amt/engine.rs", "total wall span of closed overlap windows"),
+            (PFS_WRITE_RPCS, "counter", "pfs/model.rs", "PFS write RPCs issued"),
+            (PFS_BYTES_WRITTEN, "counter", "pfs/model.rs", "bytes written to the PFS"),
+            (LATENCY_PFS_WRITE, "histogram", "pfs/model.rs", "PFS write RPC service time, issue -> commit (ns)"),
+            (WRITE_PUTS, "counter", "ckio/write.rs", "producer put calls completed"),
+            (WRITE_BYTES, "counter", "ckio/write.rs", "bytes accepted from producers into write buffers"),
+            (WRITE_SESSIONS, "counter", "ckio/director.rs", "write sessions started"),
+            (WRITE_FLUSHES, "counter", "ckio/director.rs", "flush barriers completed"),
+            (WRITE_EXTENTS, "counter", "ckio/write.rs", "stripe-aligned extents flushed to the PFS"),
+            (WRITE_DEGRADED, "counter", "ckio/write.rs", "dirty bytes abandoned after the write retry budget"),
+            (STORE_DIRTY, "gauge", "ckio/shard.rs", "dirty bytes held under store claims (summed over shards)"),
+            (STORE_DIRTY_WRITEBACKS, "counter", "ckio/shard.rs", "dirty-span evictions that forced a writeback"),
+            (STORE_DIRTY_WRITEBACK_BYTES, "counter", "ckio/shard.rs", "bytes flushed by eviction-forced writebacks"),
         ]
     }
 }

@@ -27,6 +27,21 @@ pub struct ReadRequest {
     pub user: u64,
 }
 
+/// A write submitted by a chare (via `Ctx::submit_write`, PR 10). The
+/// output mirror of [`ReadRequest`]: the submitter owns the bytes (the
+/// write plane's buffer chares keep them resident until durable), so
+/// the request carries only the extent — the modeled backend accounts
+/// for stripes and service time, never the payload.
+#[derive(Copy, Clone, Debug)]
+pub struct WriteRequest {
+    pub file: FileId,
+    pub offset: u64,
+    pub len: u64,
+    /// Opaque tag echoed back in the result so the submitter can match
+    /// completions to requests.
+    pub user: u64,
+}
+
 /// How a read completed. Real parallel file systems fail in more ways
 /// than "never": an OST can return EIO once (transient), every time
 /// (persistent media fault), or deliver fewer bytes than asked. The
@@ -196,8 +211,7 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join(name);
         // Write the deterministic pattern so reads are verifiable.
-        let data = pattern::make(FileId(0), 0, len);
-        std::fs::write(&path, &data).unwrap();
+        pattern::write_file(&path, FileId(0), len).unwrap();
         (path, FileId(0))
     }
 

@@ -58,6 +58,31 @@ impl FileMeta {
     }
 }
 
+/// Split `[offset, offset+len)` at stripe boundaries of width
+/// `stripe_size` (PR 10). This is the write plane's coalescing grid:
+/// a write buffer accumulates producer pieces per stripe-aligned extent
+/// and flushes each extent as one contiguous PFS write, so the op count
+/// scales with stripes covered rather than pieces produced (the MPI-IO
+/// collective-buffering argument). Pure layout arithmetic — no
+/// [`FileMeta`] needed, because alignment depends only on the stripe
+/// width, not on which OST a stripe lands on.
+pub fn stripe_extents(offset: u64, len: u64, stripe_size: u64) -> Vec<(u64, u64)> {
+    assert!(stripe_size > 0, "stripe_extents needs a positive stripe width");
+    if len == 0 {
+        return Vec::new();
+    }
+    let mut out = Vec::new();
+    let mut pos = offset;
+    let end = offset + len;
+    while pos < end {
+        let stripe_end = (pos / stripe_size + 1) * stripe_size;
+        let ext_end = end.min(stripe_end);
+        out.push((pos, ext_end - pos));
+        pos = ext_end;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -125,5 +150,28 @@ mod tests {
         let m = meta();
         let exts = m.rpc_extents(0, 1, 1 << 20);
         assert_eq!(exts, vec![(0, 1)]);
+    }
+
+    #[test]
+    fn stripe_extents_align_to_the_grid() {
+        // 10 MiB starting 1 MiB in, 4 MiB stripes: the first extent runs
+        // to the next boundary, interior extents are whole stripes, the
+        // tail is the remainder.
+        let exts = stripe_extents(1 << 20, 10 << 20, 4 << 20);
+        assert_eq!(exts, vec![
+            (1 << 20, 3 << 20),
+            (4 << 20, 4 << 20),
+            (8 << 20, 3 << 20),
+        ]);
+        let total: u64 = exts.iter().map(|&(_, l)| l).sum();
+        assert_eq!(total, 10 << 20);
+        // Already-aligned spans partition into whole stripes.
+        assert_eq!(stripe_extents(8 << 20, 8 << 20, 4 << 20), vec![
+            (8 << 20, 4 << 20),
+            (12 << 20, 4 << 20),
+        ]);
+        // Sub-stripe spans stay a single extent; empty spans vanish.
+        assert_eq!(stripe_extents(100, 50, 4 << 20), vec![(100, 50)]);
+        assert!(stripe_extents(100, 0, 4 << 20).is_empty());
     }
 }

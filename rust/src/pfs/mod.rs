@@ -21,6 +21,6 @@ pub mod layout;
 pub mod model;
 pub mod pattern;
 
-pub use backend::{IoOutcome, IoResult, ReadRequest};
+pub use backend::{IoOutcome, IoResult, ReadRequest, WriteRequest};
 pub use layout::{FileId, FileMeta};
 pub use model::{FaultPlan, PfsConfig, SimPfs, StragglerSpec};

@@ -21,7 +21,7 @@ use crate::trace::{names as trace_names, Lane as TraceLane, TraceCategory, Trace
 use crate::util::bytes::Chunk;
 use crate::util::rng::Pcg32;
 
-use super::backend::{IoOutcome, IoResult, ReadRequest};
+use super::backend::{IoOutcome, IoResult, ReadRequest, WriteRequest};
 use super::layout::{FileId, FileMeta};
 use super::pattern;
 
@@ -178,6 +178,9 @@ struct Req {
     /// Outcome decided at submission, surfaced when the read completes
     /// (errors are discovered at completion time, as on a real client).
     fault: IoOutcome,
+    /// Direction (PR 10): writes ride the same OST/LNET machinery but
+    /// account under `pfs.write_*` and deliver no payload.
+    write: bool,
 }
 
 #[derive(Debug)]
@@ -212,6 +215,8 @@ pub struct SimPfs {
     /// Reads submitted and not yet completed (the admission governor's
     /// cap is asserted against the high-water mark of this).
     active_reads: u32,
+    /// Writes submitted and not yet committed (PR 10).
+    active_writes: u32,
     /// Salt for the persistent-fault extent hash (the raw engine seed).
     fault_salt: u64,
     /// RPCs that hit a straggler interval (flushed to metrics as deltas
@@ -234,6 +239,7 @@ impl SimPfs {
             rng: Pcg32::seeded(seed ^ 0x9df5),
             next_first_ost: 0,
             active_reads: 0,
+            active_writes: 0,
             fault_salt: seed,
             straggler_rpcs: 0,
             straggler_flushed: 0,
@@ -282,7 +288,7 @@ impl SimPfs {
     /// extent (every retry of the same bytes re-fails); transient and
     /// short faults draw per-attempt from the seeded RNG. No RNG state is
     /// touched unless a read-fault probability is configured.
-    fn decide_fault(&mut self, req: &ReadRequest) -> IoOutcome {
+    fn decide_fault(&mut self, file: FileId, offset: u64, len: u64) -> IoOutcome {
         if !self.cfg.faults.read_faults() {
             return IoOutcome::Ok;
         }
@@ -291,21 +297,19 @@ impl SimPfs {
             self.cfg.faults.persistent_p,
             self.cfg.faults.short_p,
         );
-        if persistent_p > 0.0
-            && extent_hash(self.fault_salt, req.file, req.offset, req.len) < persistent_p
-        {
+        if persistent_p > 0.0 && extent_hash(self.fault_salt, file, offset, len) < persistent_p {
             return IoOutcome::PersistentError;
         }
         if transient_p > 0.0 && self.rng.gen_f64() < transient_p {
             return IoOutcome::TransientError;
         }
         if short_p > 0.0 && self.rng.gen_f64() < short_p {
-            let valid = req.len / 2;
+            let valid = len / 2;
             if valid > 0 {
                 return IoOutcome::Short { valid };
             }
-            // A 1-byte short read has no useful prefix: surface it as a
-            // plain transient failure.
+            // A 1-byte short transfer has no useful prefix: surface it as
+            // a plain transient failure.
             return IoOutcome::TransientError;
         }
         IoOutcome::Ok
@@ -342,7 +346,7 @@ impl SimPfs {
                 req.offset,
             );
         }
-        let fault = self.decide_fault(&req);
+        let fault = self.decide_fault(req.file, req.offset, req.len);
         self.reqs.push(Req {
             callback,
             pe,
@@ -356,8 +360,71 @@ impl SimPfs {
             done: false,
             submitted_at: now,
             fault,
+            write: false,
         });
         // Open the client window.
+        for _ in 0..self.cfg.client_window {
+            if !self.issue_next(rid, now, out) {
+                break;
+            }
+        }
+    }
+
+    /// Submit a write (PR 10). Writes take the same path as reads — per
+    /// RPC-extent OST queueing, seek penalties on stream switches, LNET
+    /// serialization at the node — because the modeled costs (disk
+    /// service, interleaving, wire time) are symmetric; only the
+    /// accounting differs (`pfs.write_rpcs` / `pfs.bytes_written`, the
+    /// `pfs/write` trace span, the write-service histogram) and the
+    /// completion carries no payload. The [`FaultPlan`] applies to write
+    /// RPCs too: the same probabilities decide transient, persistent and
+    /// short (partial-commit) outcomes, so the PR 8 retry plane covers
+    /// output as well as input.
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_write(
+        &mut self,
+        now: Time,
+        pe: Pe,
+        node: u32,
+        req: WriteRequest,
+        callback: Callback,
+        metrics: &mut Metrics,
+        trace: &mut TraceSink,
+        out: &mut Vec<Scheduled>,
+    ) {
+        let meta = self.file(req.file);
+        let extents = meta.rpc_extents(req.offset, req.len, self.cfg.rpc_max_bytes);
+        metrics.count(keys::PFS_WRITE_RPCS, extents.len() as u64);
+        metrics.count(keys::PFS_BYTES_WRITTEN, req.len);
+        self.active_writes += 1;
+        let rid = self.reqs.len() as u32;
+        if trace.on(TraceCategory::Pfs) {
+            trace.begin(
+                now,
+                TraceCategory::Pfs,
+                trace_names::PFS_WRITE,
+                TraceLane::Pe(pe.0),
+                u64::from(rid),
+                req.len,
+                req.offset,
+            );
+        }
+        let fault = self.decide_fault(req.file, req.offset, req.len);
+        self.reqs.push(Req {
+            callback,
+            pe,
+            node,
+            file: req.file,
+            offset: req.offset,
+            len: req.len,
+            user: req.user,
+            pending: extents.into_iter().collect(),
+            in_flight: 0,
+            done: false,
+            submitted_at: now,
+            fault,
+            write: true,
+        });
         for _ in 0..self.cfg.client_window {
             if !self.issue_next(rid, now, out) {
                 break;
@@ -457,14 +524,21 @@ impl SimPfs {
                 r.in_flight -= 1;
                 if r.in_flight == 0 && r.pending.is_empty() && !r.done {
                     r.done = true;
-                    self.active_reads = self.active_reads.saturating_sub(1);
+                    if r.write {
+                        self.active_writes = self.active_writes.saturating_sub(1);
+                    } else {
+                        self.active_reads = self.active_reads.saturating_sub(1);
+                    }
                     let service = now.saturating_sub(r.submitted_at);
-                    metrics.record(keys::LATENCY_PFS_READ, service);
+                    metrics.record(
+                        if r.write { keys::LATENCY_PFS_WRITE } else { keys::LATENCY_PFS_READ },
+                        service,
+                    );
                     if trace.on(TraceCategory::Pfs) {
                         trace.end(
                             now,
                             TraceCategory::Pfs,
-                            trace_names::PFS_READ,
+                            if r.write { trace_names::PFS_WRITE } else { trace_names::PFS_READ },
                             TraceLane::Pe(r.pe.0),
                             u64::from(rid),
                             r.len,
@@ -472,20 +546,31 @@ impl SimPfs {
                         );
                     }
                     let outcome = r.fault;
+                    let done_is_write = r.write;
                     // Errors deliver no bytes; short reads deliver the
                     // valid prefix; both still paid full modeled service
                     // time (the failure is discovered at completion).
-                    let chunk = match outcome {
-                        IoOutcome::Ok if self.cfg.materialize => {
-                            Chunk::materialized(r.offset, pattern::make(r.file, r.offset, r.len))
-                        }
-                        IoOutcome::Ok => Chunk::modeled(r.offset, r.len),
-                        IoOutcome::Short { valid } if self.cfg.materialize => {
-                            Chunk::materialized(r.offset, pattern::make(r.file, r.offset, valid))
-                        }
-                        IoOutcome::Short { valid } => Chunk::modeled(r.offset, valid),
-                        IoOutcome::TransientError | IoOutcome::PersistentError => {
-                            Chunk::modeled(r.offset, 0)
+                    // Write completions never carry a payload — the
+                    // submitter owns the bytes until they are durable.
+                    let chunk = if r.write {
+                        Chunk::modeled(r.offset, 0)
+                    } else {
+                        match outcome {
+                            IoOutcome::Ok if self.cfg.materialize => Chunk::materialized(
+                                r.offset,
+                                pattern::make(r.file, r.offset, r.len),
+                            ),
+                            IoOutcome::Ok => Chunk::modeled(r.offset, r.len),
+                            IoOutcome::Short { valid } if self.cfg.materialize => {
+                                Chunk::materialized(
+                                    r.offset,
+                                    pattern::make(r.file, r.offset, valid),
+                                )
+                            }
+                            IoOutcome::Short { valid } => Chunk::modeled(r.offset, valid),
+                            IoOutcome::TransientError | IoOutcome::PersistentError => {
+                                Chunk::modeled(r.offset, 0)
+                            }
                         }
                     };
                     let done = Done {
@@ -528,7 +613,8 @@ impl SimPfs {
                             .count(keys::FAULT_STRAGGLER, self.straggler_rpcs - self.straggler_flushed);
                         self.straggler_flushed = self.straggler_rpcs;
                     }
-                    metrics.count("pfs.reads_done", 1);
+                    metrics
+                        .count(if done_is_write { "pfs.writes_done" } else { "pfs.reads_done" }, 1);
                     return Some(done);
                 }
                 None
@@ -539,6 +625,11 @@ impl SimPfs {
     /// Aggregate OST busy time (utilization numerator).
     pub fn total_ost_busy(&self) -> u64 {
         self.osts.iter().map(|o| o.busy_ns).sum()
+    }
+
+    /// Writes submitted and not yet committed (tests / inspection).
+    pub fn active_writes(&self) -> u32 {
+        self.active_writes
     }
 
     /// Reset all queueing state but keep files (between repetitions).
@@ -552,6 +643,7 @@ impl SimPfs {
         self.rpcs.clear();
         self.rng = Pcg32::seeded(seed ^ 0x9df5);
         self.active_reads = 0;
+        self.active_writes = 0;
         self.fault_salt = seed;
         self.straggler_rpcs = 0;
         self.straggler_flushed = 0;
@@ -619,6 +711,115 @@ mod tests {
         assert_eq!(d.result.user, 7);
         let bytes = d.result.chunk.bytes.as_ref().unwrap();
         assert_eq!(pattern::verify(f, 1 << 20, bytes), None);
+    }
+
+    #[test]
+    fn writes_complete_and_account_under_write_keys() {
+        let mut cfg = PfsConfig::default();
+        quiet(&mut cfg);
+        let mut pfs = SimPfs::new(cfg, 2, 1);
+        let f = pfs.create_file(64 << 20);
+        let mut metrics = Metrics::new();
+        let mut trace = TraceSink::disabled();
+        let mut out = Vec::new();
+        pfs.submit_write(
+            0,
+            Pe(0),
+            0,
+            WriteRequest { file: f, offset: 4 << 20, len: 8 << 20, user: 3 },
+            Callback::Ignore,
+            &mut metrics,
+            &mut trace,
+            &mut out,
+        );
+        assert_eq!(pfs.active_writes(), 1);
+        // Drive the standalone loop by hand (submit already queued events).
+        let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(Time, u64, usize)>> =
+            Default::default();
+        let mut evs: Vec<PfsEvent> = Vec::new();
+        let mut seq = 0u64;
+        for s in out.drain(..) {
+            evs.push(s.ev);
+            heap.push(std::cmp::Reverse((s.at, seq, evs.len() - 1)));
+            seq += 1;
+        }
+        let mut dones = Vec::new();
+        while let Some(std::cmp::Reverse((t, _, idx))) = heap.pop() {
+            if let Some(d) = pfs.on_event(t, evs[idx], &mut metrics, &mut trace, &mut out) {
+                dones.push((t, d));
+            }
+            for s in out.drain(..) {
+                evs.push(s.ev);
+                heap.push(std::cmp::Reverse((s.at, seq, evs.len() - 1)));
+                seq += 1;
+            }
+        }
+        assert_eq!(dones.len(), 1);
+        let (t, d) = &dones[0];
+        assert!(*t > 0, "writes pay modeled service time");
+        assert_eq!(d.result.user, 3);
+        assert_eq!(d.result.outcome, IoOutcome::Ok);
+        assert!(d.result.chunk.bytes.is_none(), "write completions carry no payload");
+        assert_eq!(pfs.active_writes(), 0);
+        // 8 MiB in 4 MiB stripes = 2 write RPCs, zero read RPCs.
+        assert_eq!(metrics.counter(keys::PFS_WRITE_RPCS), 2);
+        assert_eq!(metrics.counter(keys::PFS_BYTES_WRITTEN), 8 << 20);
+        assert_eq!(metrics.counter(keys::PFS_RPCS), 0);
+        assert_eq!(metrics.counter("pfs.writes_done"), 1);
+    }
+
+    #[test]
+    fn write_faults_draw_from_the_same_plan() {
+        let mut cfg = PfsConfig::default();
+        quiet(&mut cfg);
+        cfg.faults.transient_p = 0.3;
+        let mut pfs = SimPfs::new(cfg, 16, 11);
+        let f = pfs.create_file(1 << 30);
+        let n = 200u64;
+        let per = (1u64 << 30) / n;
+        let mut metrics = Metrics::new();
+        let mut trace = TraceSink::disabled();
+        let mut heap: std::collections::BinaryHeap<std::cmp::Reverse<(Time, u64, usize)>> =
+            Default::default();
+        let mut evs: Vec<PfsEvent> = Vec::new();
+        let mut seq = 0u64;
+        let mut out = Vec::new();
+        for i in 0..n {
+            pfs.submit_write(
+                0,
+                Pe((i % 16) as u32),
+                (i % 16) as u32,
+                WriteRequest { file: f, offset: i * per, len: per, user: i },
+                Callback::Ignore,
+                &mut metrics,
+                &mut trace,
+                &mut out,
+            );
+            for s in out.drain(..) {
+                evs.push(s.ev);
+                heap.push(std::cmp::Reverse((s.at, seq, evs.len() - 1)));
+                seq += 1;
+            }
+        }
+        let mut failed = 0usize;
+        let mut completed = 0usize;
+        while let Some(std::cmp::Reverse((t, _, idx))) = heap.pop() {
+            if let Some(d) = pfs.on_event(t, evs[idx], &mut metrics, &mut trace, &mut out) {
+                completed += 1;
+                if d.result.outcome == IoOutcome::TransientError {
+                    failed += 1;
+                }
+            }
+            for s in out.drain(..) {
+                evs.push(s.ev);
+                heap.push(std::cmp::Reverse((s.at, seq, evs.len() - 1)));
+                seq += 1;
+            }
+        }
+        assert_eq!(completed, n as usize, "faulted writes still complete");
+        let rate = failed as f64 / n as f64;
+        assert!((0.15..0.45).contains(&rate), "rate={rate}");
+        assert_eq!(metrics.counter(keys::FAULT_TRANSIENT), failed as u64);
     }
 
     #[test]

@@ -65,6 +65,15 @@ pub fn verify(file: FileId, offset: u64, buf: &[u8]) -> Option<usize> {
     buf.iter().zip(expect.iter()).position(|(a, b)| a != b)
 }
 
+/// Write the first `len` pattern bytes of `file` to `path` — the one
+/// real-disk pattern writer. Every test or harness that needs a
+/// verifiable on-disk file goes through here, so the bytes the writer
+/// produces and the bytes [`verify`] expects can never diverge (they
+/// are the same [`fill`]).
+pub fn write_file(path: &std::path::Path, file: FileId, len: u64) -> std::io::Result<()> {
+    std::fs::write(path, &make(file, 0, len))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -490,6 +490,15 @@ pub mod names {
     /// Consumer migration advised by the flow matrix (PR 9; a0 =
     /// destination PE, a1 = dominant-source bytes).
     pub const PLACE_CONSUMER_ADVICE: &str = "place/consumer_advice";
+    /// Write-session flush barrier (PR 10): flush requested → every
+    /// dirty extent durable or degraded (complete span at the director;
+    /// a0 = bytes written, a1 = bytes degraded).
+    pub const SESSION_FLUSH: &str = "session/flush";
+    /// PFS write RPC span: issue → commit (PR 10; id = request id).
+    pub const PFS_WRITE: &str = "pfs/write";
+    /// Dirty parked span evicted under the store budget: writeback
+    /// forced before the bytes may drop (PR 10; a0 = dirty bytes).
+    pub const STORE_WRITEBACK: &str = "store/writeback";
 
     /// The trace catalog: `(event name, emitting module, what it
     /// marks)` for every constant above — rendered into
@@ -524,6 +533,9 @@ pub mod names {
             (PFS_HEDGE, "ckio/buffer.rs", "hedged duplicate read enqueued past deadline"),
             (SCHED_OVERLAP, "amt/engine.rs", "I/O-wait overlap window closed on a PE"),
             (PLACE_CONSUMER_ADVICE, "ckio/director.rs", "consumer migration advised by the flow matrix"),
+            (SESSION_FLUSH, "ckio/director.rs", "write-session flush barrier (complete span)"),
+            (PFS_WRITE, "pfs/model.rs", "PFS write RPC span, issue -> commit"),
+            (STORE_WRITEBACK, "ckio/shard.rs", "dirty-span eviction forced a writeback"),
         ]
     }
 }

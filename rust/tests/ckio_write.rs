@@ -1,0 +1,384 @@
+//! Collective output plane integration tests (PR 10), driven from the
+//! driver-side API for precise sequencing.
+//!
+//! * **Read-after-write residency** — a closed write session leaves its
+//!   bytes parked as store claims; a following read session over the
+//!   same range is served 100% from residency (zero PFS read bytes) and
+//!   byte-verified against the file pattern.
+//! * **Dirty eviction** — a lazily-parked (dirty) array pushed out by
+//!   the store budget is written back before it is dropped; nothing is
+//!   lost and the bytes reach the PFS exactly once.
+//! * **Fault plane** — with transient write faults injected, the flush
+//!   barrier still drains every byte durably, the close callback fires
+//!   exactly once, and the retry plane (not degradation) absorbs the
+//!   faults.
+//! * **Mixed QoS** — a writer and a reader contend on one governed
+//!   shard: both classes register, the cap throttles, both finish, and
+//!   quiescence is clean.
+
+use ckio::amt::callback::Callback;
+use ckio::amt::engine::{Engine, EngineConfig};
+use ckio::ckio::director::Director;
+use ckio::ckio::{
+    CkIo, FileOptions, QosClass, ReadResult, RetryPolicy, ServiceConfig, Session, SessionId,
+    SessionOptions, SessionOutcome, WriteOptions,
+};
+use ckio::harness::experiments::assert_service_clean;
+use ckio::pfs::{pattern, FaultPlan, FileId, PfsConfig};
+
+const MIB: u64 = 1 << 20;
+const PIECE: u64 = 64 << 10;
+
+fn write_engine(file_size: u64, cfg: ServiceConfig, pfs: PfsConfig) -> (Engine, FileId, CkIo) {
+    let mut eng = Engine::new(EngineConfig::sim(2, 2).with_seed(42)).with_sim_pfs(pfs);
+    let file = eng.core.sim_pfs_mut().create_file(file_size);
+    let io = CkIo::boot_with(&mut eng, cfg).expect("valid ServiceConfig");
+    (eng, file, io)
+}
+
+fn clean_pfs() -> PfsConfig {
+    PfsConfig { materialize: true, noise_sigma: 0.0, ..PfsConfig::default() }
+}
+
+/// Start a write session over `[offset, offset+bytes)` and run to
+/// quiescence, returning the session handle.
+fn start_write(
+    eng: &mut Engine,
+    io: &CkIo,
+    file: FileId,
+    offset: u64,
+    bytes: u64,
+    sopts: SessionOptions,
+    wopts: WriteOptions,
+) -> Session {
+    let fut = eng.future(1);
+    io.start_write_driver(eng, file, offset, bytes, sopts, wopts, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "write session never became ready");
+    let (_, mut p) = eng.take_future(fut).pop().unwrap();
+    p.take::<Session>()
+}
+
+/// Scatter `[offset, offset+len)` as `PIECE`-sized puts round-robined
+/// across all PEs, run to quiescence, and assert every put was acked.
+fn put_all(eng: &mut Engine, io: &CkIo, s: &Session, offset: u64, len: u64) {
+    let npes = eng.core.topo.npes();
+    let npieces = len.div_ceil(PIECE) as u32;
+    let fut = eng.future(npieces);
+    let mut o = offset;
+    let mut i = 0u32;
+    while o < offset + len {
+        let l = PIECE.min(offset + len - o);
+        io.write_driver(eng, i % npes, s, o, l, Callback::Future(fut));
+        o += l;
+        i += 1;
+    }
+    eng.run();
+    assert!(eng.future_done(fut), "not every put was acked");
+    let acked: u64 = eng
+        .take_future(fut)
+        .into_iter()
+        .map(|(_, mut p)| p.take::<ckio::ckio::write::WriteResult>().len)
+        .sum();
+    assert_eq!(acked, len, "acked bytes must cover the scatter");
+}
+
+/// Close a write session and return its (exactly-once) outcome.
+fn close_write(eng: &mut Engine, io: &CkIo, sid: SessionId) -> SessionOutcome {
+    let fut = eng.future(1);
+    io.close_write_driver(eng, sid, Callback::Future(fut));
+    eng.run();
+    assert!(eng.future_done(fut), "write close never completed");
+    let mut fired = eng.take_future(fut);
+    assert_eq!(fired.len(), 1, "close callback must fire exactly once");
+    let (_, mut p) = fired.pop().unwrap();
+    p.take::<SessionOutcome>()
+}
+
+/// A write session that flushed and closed leaves every byte resident:
+/// the next read session over the range never touches the PFS, and the
+/// delivered bytes are identical to what was written.
+#[test]
+fn read_after_write_is_served_entirely_from_residency() {
+    let size = 2 * MIB;
+    let (mut eng, file, io) = write_engine(size, ServiceConfig::default(), clean_pfs());
+    io.open_driver(&mut eng, file, size, FileOptions::with_readers(2), Callback::Ignore);
+
+    let ws = start_write(
+        &mut eng,
+        &io,
+        file,
+        0,
+        size,
+        SessionOptions::default(),
+        WriteOptions::default(),
+    );
+    put_all(&mut eng, &io, &ws, 0, size);
+    let ffut = eng.future(1);
+    io.flush_write_driver(&mut eng, ws.id, Callback::Future(ffut));
+    eng.run();
+    assert!(eng.future_done(ffut), "flush barrier never completed");
+    let o = close_write(&mut eng, &io, ws.id);
+    assert_eq!(o.written_bytes, size, "the barrier drains every byte durably");
+    assert_eq!(o.dirty_bytes, 0);
+    assert_eq!(eng.core.metrics.counter("pfs.bytes_written"), size);
+    // Stripe coalescing: 1 MiB extents, not 64 KiB pieces.
+    assert_eq!(eng.core.metrics.counter("pfs.write_rpcs"), size / MIB);
+
+    // Read the whole range back: 100% from residency.
+    let rfut = eng.future(1);
+    io.start_session_driver(
+        &mut eng,
+        file,
+        0,
+        size,
+        SessionOptions::default(),
+        Callback::Future(rfut),
+    );
+    eng.run();
+    assert!(eng.future_done(rfut));
+    let rs = {
+        let (_, mut p) = eng.take_future(rfut).pop().unwrap();
+        p.take::<Session>()
+    };
+    let dfut = eng.future(1);
+    io.read_driver(&mut eng, 0, &rs, 0, size, Callback::Future(dfut));
+    eng.run();
+    assert!(eng.future_done(dfut), "read callback never fired");
+    let (_, mut p) = eng.take_future(dfut).pop().unwrap();
+    let r = p.take::<ReadResult>();
+    assert_eq!(r.len, size);
+    let bytes = r.chunk.bytes.as_ref().expect("materialized run must deliver bytes");
+    assert_eq!(pattern::verify(file, 0, bytes), None, "read-after-write bytes differ");
+    assert_eq!(
+        eng.core.metrics.counter("pfs.bytes_read"),
+        0,
+        "read-after-write must be served without a single PFS read"
+    );
+    assert_eq!(eng.core.metrics.counter("ckio.store.hit_bytes"), size);
+
+    let cfut = eng.future(1);
+    io.close_session_driver(&mut eng, rs.id, Callback::Future(cfut));
+    eng.run();
+    assert!(eng.future_done(cfut));
+    assert_service_clean(&eng, &io);
+    let ffut = eng.future(1);
+    io.close_file_driver(&mut eng, file, Callback::Future(ffut));
+    eng.run();
+    assert!(eng.future_done(ffut));
+    // The parked residency was clean (flushed), so the purge drops it
+    // without any further writeback.
+    assert_eq!(eng.core.metrics.counter("ckio.store.dirty_writebacks"), 0);
+    assert_eq!(io.cached_buffer_arrays(&eng), 0, "file close purges parked arrays");
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
+}
+
+/// A lazily-parked dirty array evicted under store pressure is written
+/// back before it is dropped — lazy durability loses nothing, it only
+/// defers the PFS write to eviction (or purge) time.
+#[test]
+fn dirty_eviction_forces_writeback_before_drop() {
+    let size = 2 * MIB;
+    // One shard so the byte budget is not split; exactly one parked
+    // 1 MiB array fits.
+    let cfg = ServiceConfig {
+        store_budget_bytes: Some(MIB),
+        data_plane_shards: Some(1),
+        ..Default::default()
+    };
+    let (mut eng, file, io) = write_engine(size, cfg, clean_pfs());
+    io.open_driver(&mut eng, file, size, FileOptions::with_readers(1), Callback::Ignore);
+
+    // Session A writes [0, 1 MiB) lazily: close parks it dirty — not a
+    // byte has reached the PFS.
+    let wa = start_write(
+        &mut eng,
+        &io,
+        file,
+        0,
+        MIB,
+        SessionOptions::default(),
+        WriteOptions::lazy(),
+    );
+    put_all(&mut eng, &io, &wa, 0, MIB);
+    let oa = close_write(&mut eng, &io, wa.id);
+    assert_eq!(oa.dirty_bytes, MIB, "lazy close parks every byte dirty");
+    assert_eq!(oa.written_bytes, 0);
+    assert_eq!(eng.core.metrics.counter("pfs.bytes_written"), 0);
+
+    // Session B writes [1 MiB, 2 MiB) lazily. Its claims push the store
+    // over the 1 MiB budget, evicting A's parked dirty array — which
+    // must force a writeback of A's megabyte before the drop.
+    let wb = start_write(
+        &mut eng,
+        &io,
+        file,
+        MIB,
+        MIB,
+        SessionOptions::default(),
+        WriteOptions::lazy(),
+    );
+    put_all(&mut eng, &io, &wb, MIB, MIB);
+    let ob = close_write(&mut eng, &io, wb.id);
+    assert_eq!(ob.dirty_bytes, MIB);
+    assert!(
+        eng.core.metrics.counter("ckio.store.dirty_writebacks") >= 1,
+        "evicting a dirty park must force a writeback"
+    );
+    assert_eq!(
+        eng.core.metrics.counter("ckio.store.dirty_writeback_bytes"),
+        MIB,
+        "exactly A's megabyte is written back at eviction"
+    );
+    assert_eq!(eng.core.metrics.counter("pfs.bytes_written"), MIB);
+
+    // Closing the file purges B's parked dirty array the same way.
+    let cfut = eng.future(1);
+    io.close_file_driver(&mut eng, file, Callback::Future(cfut));
+    eng.run();
+    assert!(eng.future_done(cfut));
+    assert_eq!(eng.core.metrics.counter("ckio.store.dirty_writeback_bytes"), 2 * MIB);
+    assert_eq!(eng.core.metrics.counter("pfs.bytes_written"), 2 * MIB);
+    assert_service_clean(&eng, &io);
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
+}
+
+/// Transient PFS write faults: the flush barrier still drains every
+/// byte durably (retries absorb the faults, nothing degrades) and the
+/// close callback fires exactly once.
+#[test]
+fn flush_barrier_and_exactly_once_close_under_write_faults() {
+    let size = 2 * MIB;
+    let cfg = ServiceConfig {
+        max_inflight_reads: Some(4),
+        data_plane_shards: Some(1),
+        retry: Some(RetryPolicy::default()),
+        ..Default::default()
+    };
+    let pfs = PfsConfig {
+        materialize: true,
+        noise_sigma: 0.0,
+        faults: FaultPlan { transient_p: 0.3, ..Default::default() },
+        ..PfsConfig::default()
+    };
+    let (mut eng, file, io) = write_engine(size, cfg, pfs);
+    io.open_driver(&mut eng, file, size, FileOptions::with_readers(2), Callback::Ignore);
+
+    // Small stripes -> 32 write RPCs -> transient faults at p=0.3 are
+    // statistically certain to hit at least one of them.
+    let wopts = WriteOptions { stripe_bytes: 64 << 10, ..Default::default() };
+    let ws = start_write(&mut eng, &io, file, 0, size, SessionOptions::default(), wopts);
+    put_all(&mut eng, &io, &ws, 0, size);
+    let ffut = eng.future(1);
+    io.flush_write_driver(&mut eng, ws.id, Callback::Future(ffut));
+    eng.run();
+    assert!(eng.future_done(ffut), "flush barrier never completed under faults");
+    let o = close_write(&mut eng, &io, ws.id);
+    assert_eq!(o.written_bytes, size, "transient faults must clear on retry");
+    assert_eq!(eng.core.metrics.counter("ckio.write.degraded_bytes"), 0);
+    assert!(
+        eng.core.metrics.counter("ckio.retry.attempts") > 0,
+        "p=0.3 over 32 write RPCs must retry at least once"
+    );
+    assert_eq!(
+        eng.core.metrics.counter("pfs.bytes_written"),
+        size,
+        "retries must not double-count durable bytes"
+    );
+
+    assert_service_clean(&eng, &io);
+    let cfut = eng.future(1);
+    io.close_file_driver(&mut eng, file, Callback::Future(cfut));
+    eng.run();
+    assert!(eng.future_done(cfut));
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
+}
+
+/// An Interactive writer and a Bulk reader contend on the same governed
+/// shard: both classes register with the admission governor, the tight
+/// cap throttles, and both sides finish verified with clean quiescence.
+#[test]
+fn mixed_reader_writer_qos_contention_on_one_shard() {
+    let size = 2 * MIB;
+    let cfg = ServiceConfig {
+        max_inflight_reads: Some(2),
+        data_plane_shards: Some(1),
+        ..Default::default()
+    };
+    let (mut eng, file, io) = write_engine(size, cfg, clean_pfs());
+    io.open_driver(&mut eng, file, size, FileOptions::with_readers(2), Callback::Ignore);
+
+    // Interactive writer over the second half, small stripes so the
+    // write side alone outnumbers the cap.
+    let wopts = WriteOptions { stripe_bytes: 64 << 10, ..Default::default() };
+    let ws = start_write(&mut eng, &io, file, MIB, MIB, SessionOptions::interactive(), wopts);
+
+    // Start the Bulk reader's session and scatter the writes WITHOUT
+    // quiescing in between: the reader's greedy staging reads and the
+    // writer's extent flushes race through the one governed shard in
+    // the same scheduling window.
+    let rfut = eng.future(1);
+    io.start_session_driver(
+        &mut eng,
+        file,
+        0,
+        MIB,
+        SessionOptions::default(),
+        Callback::Future(rfut),
+    );
+    let npes = eng.core.topo.npes();
+    let wfut = eng.future((MIB / PIECE) as u32);
+    let mut o = MIB;
+    let mut i = 0u32;
+    while o < 2 * MIB {
+        io.write_driver(&mut eng, i % npes, &ws, o, PIECE, Callback::Future(wfut));
+        o += PIECE;
+        i += 1;
+    }
+    eng.run();
+    assert!(eng.future_done(rfut) && eng.future_done(wfut));
+    let rs = {
+        let (_, mut p) = eng.take_future(rfut).pop().unwrap();
+        p.take::<Session>()
+    };
+    let dfut = eng.future(1);
+    io.read_driver(&mut eng, 0, &rs, 0, MIB, Callback::Future(dfut));
+    eng.run();
+    assert!(eng.future_done(dfut));
+    let (_, mut p) = eng.take_future(dfut).pop().unwrap();
+    let r = p.take::<ReadResult>();
+    let bytes = r.chunk.bytes.as_ref().expect("materialized run must deliver bytes");
+    assert_eq!(pattern::verify(file, 0, bytes), None, "reader corrupted under contention");
+
+    let shard = io.shard(&eng, 0);
+    assert!(
+        shard.class_registrations(QosClass::Interactive) > 0,
+        "the writer must register its class with the shard"
+    );
+    assert!(
+        shard.class_registrations(QosClass::Bulk) > 0,
+        "the reader must register its class with the shard"
+    );
+    assert!(
+        eng.core.metrics.counter("ckio.governor.throttled") > 0,
+        "a cap of 2 under mixed demand must throttle"
+    );
+
+    let ffut = eng.future(1);
+    io.flush_write_driver(&mut eng, ws.id, Callback::Future(ffut));
+    eng.run();
+    assert!(eng.future_done(ffut));
+    let o = close_write(&mut eng, &io, ws.id);
+    assert_eq!(o.written_bytes, MIB);
+    let cfut = eng.future(1);
+    io.close_session_driver(&mut eng, rs.id, Callback::Future(cfut));
+    eng.run();
+    assert!(eng.future_done(cfut));
+
+    assert_service_clean(&eng, &io);
+    let xfut = eng.future(1);
+    io.close_file_driver(&mut eng, file, Callback::Future(xfut));
+    eng.run();
+    assert!(eng.future_done(xfut));
+    assert_eq!(eng.chare::<Director>(io.director).open_files(), 0);
+}

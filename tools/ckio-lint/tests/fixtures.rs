@@ -37,7 +37,7 @@ fn fixture_tree_yields_planted_findings() {
     assert_eq!(count(Check::DeadEp), 1, "{findings:?}");
     assert_eq!(count(Check::StaleEpRef), 1, "{findings:?}");
     assert_eq!(count(Check::PayloadMismatch), 1, "{findings:?}");
-    assert_eq!(count(Check::MetricsLiteral), 3, "{findings:?}");
+    assert_eq!(count(Check::MetricsLiteral), 4, "{findings:?}");
     assert_eq!(count(Check::TraceLiteral), 1, "{findings:?}");
     assert_eq!(count(Check::StashHygiene), 1, "{findings:?}");
     assert_eq!(count(Check::SpecCoverage), 0, "{findings:?}");
@@ -47,6 +47,7 @@ fn fixture_tree_yields_planted_findings() {
     assert!(findings.iter().any(|f| f.message.contains("ckio.rogue")));
     assert!(findings.iter().any(|f| f.message.contains("ckio.fault.rogue")));
     assert!(findings.iter().any(|f| f.message.contains("ckio.consumer.rogue")));
+    assert!(findings.iter().any(|f| f.message.contains("ckio.write.rogue")));
     assert!(findings.iter().any(|f| f.message.contains("ticket/rogue")));
     assert!(findings.iter().any(|f| f.message.contains("pending_things")));
 }

@@ -24,6 +24,7 @@ pub fn drive(ctx: &mut Ctx, peer: ChareRef) {
     ctx.metrics.incr("ckio.rogue", 1);
     ctx.metrics.incr("ckio.fault.rogue", 1);
     ctx.metrics.incr("ckio.consumer.rogue", 1);
+    ctx.metrics.incr("ckio.write.rogue", 1);
     ctx.trace.instant(0, "ticket/rogue");
 }
 
